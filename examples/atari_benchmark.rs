@@ -1,0 +1,114 @@
+//! End-to-end validation driver (DESIGN.md §6).
+//!
+//! Exercises the FULL three-layer stack on a real small workload:
+//! loads the AOT artifacts (L1 Pallas kernel fused into the L2 network,
+//! compiled HLO-text via PJRT), starts the dynamic-batching inference
+//! server, and runs WU-UCT with 16 simulation workers + 1 expansion
+//! worker against LeafP / TreeP / RootP / sequential UCT on a slice of
+//! the synthetic Atari suite — printing Table-1-shaped rows with episode
+//! reward and time/step. Recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example atari_benchmark
+//! # env knobs: GAMES=Breakout,Boxing TRIALS=3 SIMS=32 WORKERS=16
+//! ```
+
+use std::time::Duration;
+
+use wu_uct::env::{atari, Env};
+use wu_uct::gameplay::play_episodes;
+use wu_uct::mcts::{LeafP, RootP, Search, SequentialUct, TreeP, WuUct};
+use wu_uct::mcts::SearchSpec;
+use wu_uct::runtime::{artifacts_dir, EvalServer, NetworkPolicy};
+use wu_uct::util::stats::{mean, std_dev};
+use wu_uct::util::table::{mean_pm_std, Table};
+
+fn env_list() -> Vec<String> {
+    std::env::var("GAMES")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|_| {
+            vec!["Breakout".into(), "Boxing".into(), "Freeway".into(), "SpaceInvaders".into()]
+        })
+}
+
+fn num(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let games = env_list();
+    let trials = num("TRIALS", 3);
+    let sims = num("SIMS", 32) as u32;
+    let workers = num("WORKERS", 16);
+    let max_steps = num("MAX_STEPS", 50) as u32;
+
+    // The real L1/L2 network, via the batched PJRT inference server.
+    let dir = artifacts_dir();
+    anyhow::ensure!(
+        dir.join("meta.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let server = EvalServer::start(&dir, Duration::from_micros(150))?;
+    println!(
+        "inference server up on {:?} (batched PJRT, AOT Pallas-fused policy net)",
+        dir
+    );
+    let factory = NetworkPolicy::factory(server.handle());
+
+    let mut table = Table::new(
+        format!("E2E atari benchmark — {sims} sims, {workers} sim workers, {trials} trials"),
+        &["Game", "Algo", "reward", "time/step"],
+    );
+
+    for game in &games {
+        let algos: Vec<Box<dyn Search>> = vec![
+            Box::new(WuUct::with_policy(
+                SearchSpec { max_simulations: sims, rollout_limit: 25, seed: 1, ..SearchSpec::atari() },
+                1,
+                workers,
+                factory.clone(),
+            )),
+            Box::new(TreeP::new(
+                SearchSpec { max_simulations: sims, rollout_limit: 25, seed: 2, ..SearchSpec::atari() },
+                workers,
+                1.0,
+            ).with_policy(factory.clone())),
+            Box::new(LeafP::with_policy(
+                SearchSpec { max_simulations: sims, rollout_limit: 25, seed: 3, ..SearchSpec::atari() },
+                workers,
+                factory.clone(),
+            )),
+            Box::new(RootP::new(
+                SearchSpec { max_simulations: sims, rollout_limit: 25, seed: 4, ..SearchSpec::atari() },
+                workers,
+            ).with_policy(factory.clone())),
+            Box::new(SequentialUct::with_policy(
+                SearchSpec { max_simulations: sims, rollout_limit: 25, seed: 5, ..SearchSpec::atari() },
+                factory.clone(),
+            )),
+        ];
+        for mut algo in algos {
+            let mut env = atari::make(game, 1);
+            let results = play_episodes(algo.as_mut(), env.as_mut(), 11, trials, max_steps);
+            let rewards: Vec<f64> = results.iter().map(|r| r.total_reward).collect();
+            let tps: Duration =
+                results.iter().map(|r| r.time_per_step).sum::<Duration>() / trials.max(1) as u32;
+            table.row(&[
+                game.clone(),
+                algo.name(),
+                mean_pm_std(mean(&rewards), std_dev(&rewards)),
+                format!("{tps:.2?}"),
+            ]);
+            println!("{} / {} done", game, algo.name());
+        }
+    }
+    print!("{}", table.render());
+    let stats = server.stats();
+    println!(
+        "inference server: {} requests in {} batches (avg batch {:.1})",
+        stats.requests,
+        stats.batches,
+        stats.avg_batch()
+    );
+    Ok(())
+}

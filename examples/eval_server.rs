@@ -1,0 +1,70 @@
+//! Inference-server demo: load the AOT artifacts, run the dynamic-batching
+//! PJRT server, fire concurrent requests from fake simulation workers and
+//! report the batching efficiency (the Fig.-2 communication story for the
+//! network-policy configuration).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example eval_server
+//! ```
+
+use std::time::{Duration, Instant};
+
+use wu_uct::env::{atari, Env, FEATURE_DIM};
+use wu_uct::runtime::{artifacts_dir, Engine, EvalServer};
+
+fn features(game: &str, seed: u64) -> Vec<f32> {
+    let env = atari::make(game, seed);
+    let mut f = vec![0f32; FEATURE_DIM];
+    env.features(&mut f);
+    f
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    anyhow::ensure!(
+        dir.join("meta.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // Direct engine: single-row latency baseline.
+    let mut engine = Engine::load(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let row = features("Alien", 1);
+    let t = Instant::now();
+    let n_single = 200;
+    for _ in 0..n_single {
+        engine.infer(&[row.clone()])?;
+    }
+    let single = t.elapsed() / n_single;
+    println!("direct single-row inference: {single:?}/eval");
+
+    // Batched server under concurrent load.
+    for window_us in [0u64, 100, 500] {
+        let server = EvalServer::start(&dir, Duration::from_micros(window_us))?;
+        let clients = 16;
+        let per_client = 50;
+        let t = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let handle = server.handle();
+                scope.spawn(move || {
+                    for i in 0..per_client {
+                        let f = features("Alien", (c * per_client + i) as u64);
+                        let out = handle.eval(f);
+                        assert!(out.value.is_finite());
+                    }
+                });
+            }
+        });
+        let elapsed = t.elapsed();
+        let stats = server.stats();
+        println!(
+            "server window {window_us:>4}µs: {} reqs in {:?} ({:?}/eval), avg batch {:.1}",
+            stats.requests,
+            elapsed,
+            elapsed / stats.requests as u32,
+            stats.avg_batch()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! The pass-rate prediction system (Appendix C) end-to-end: generate
+//! levels, simulate the player population, extract WU-UCT bot features,
+//! fit the regressor and print Table 2 + the Fig. 8 histogram.
+//!
+//! ```bash
+//! cargo run --release --example passrate_system            # quick scale
+//! SCALE=paper cargo run --release --example passrate_system # 300/130 levels
+//! ```
+
+use wu_uct::experiments::table2_fig8;
+use wu_uct::passrate::SystemConfig;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = match std::env::var("SCALE").as_deref() {
+        Ok("paper") => SystemConfig::default(),
+        _ => {
+            // A mid-size run: big enough for a meaningful regressor,
+            // small enough for minutes on one core.
+            let mut c = SystemConfig::quick();
+            c.train_levels = 40;
+            c.eval_levels = 20;
+            c
+        }
+    };
+    println!(
+        "pass-rate system: {} train / {} eval levels, {} plays per bot",
+        cfg.train_levels, cfg.eval_levels, cfg.features.plays
+    );
+    let (t2, f8, report) = table2_fig8::run(&cfg)?;
+    print!("{}", t2.render());
+    print!("{}", f8.render());
+    println!(
+        "headline: MAE {:.1}% (paper: 8.6%), {:.0}% of levels under 20% error (paper: 93%)",
+        report.mae * 100.0,
+        report.frac_under_20 * 100.0
+    );
+    println!("fitted weights: {:?}", report.model.weights);
+    Ok(())
+}

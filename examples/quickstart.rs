@@ -1,0 +1,46 @@
+//! Quickstart: one WU-UCT search and one full planned episode.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use wu_uct::env::tapgame::{Level, TapGame};
+use wu_uct::env::{atari, Env};
+use wu_uct::gameplay::play_episode;
+use wu_uct::mcts::{Search, SearchSpec, WuUct};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A single search on the tap game ("Joy City" analogue).
+    let level = Level::level35();
+    let game = TapGame::new(level, 42);
+    let spec = SearchSpec {
+        max_simulations: 100,
+        ..SearchSpec::tap_game()
+    };
+    // 2 expansion workers + 8 simulation workers, as in Fig. 2(a).
+    let mut search = WuUct::new(spec, 2, 8);
+    let result = search.search(&game);
+    println!(
+        "tap game: best tap = action {} (root value {:.3}), {} simulations, tree {} nodes, {:?}",
+        result.best_action, result.root_value, result.simulations, result.tree_size, result.elapsed
+    );
+    println!("legal taps and their one-step heuristics:");
+    for a in game.legal_actions().iter().take(5) {
+        println!("  action {a}: heuristic {:.2}", game.action_heuristic(*a));
+    }
+
+    // 2. A full planned episode on a synthetic Atari game.
+    let mut env = atari::make("Breakout", 7);
+    let spec = SearchSpec {
+        max_simulations: 32,
+        rollout_limit: 30,
+        ..SearchSpec::atari()
+    };
+    let mut search = WuUct::new(spec, 1, 8);
+    let ep = play_episode(&mut search, env.as_mut(), 7, 120);
+    println!(
+        "Breakout: episode reward {:.0} in {} steps ({:?}/step)",
+        ep.total_reward, ep.steps, ep.time_per_step
+    );
+    Ok(())
+}

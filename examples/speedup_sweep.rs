@@ -1,0 +1,33 @@
+//! Fig. 4 / Table 3 speedup sweep on the latency-simulated emulator.
+//!
+//! ```bash
+//! cargo run --release --example speedup_sweep              # Fig 4 curves
+//! GRID=1 cargo run --release --example speedup_sweep       # Table 3 grid
+//! ```
+
+use wu_uct::env::tapgame::Level;
+use wu_uct::experiments::{fig4, table3, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_env();
+    let repeats = std::env::var("REPEATS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    if std::env::var("GRID").is_ok() {
+        let (table, grids) = table3::run(&scale, repeats);
+        print!("{}", table.render());
+        for (grid, level) in grids.iter().zip(["level-35", "level-58"]) {
+            let diag = (0..grid.len()).map(|i| grid[i][i]).collect::<Vec<_>>();
+            println!("{level} diagonal speedups: {diag:?}");
+        }
+    } else {
+        for level in [Level::level35(), Level::level58()] {
+            let table = fig4::speedup_curves(&level, &[1, 4, 16], &scale, repeats);
+            print!("{}", table.render());
+        }
+        let perf = fig4::performance_retention(&scale);
+        print!("{}", perf.render());
+    }
+    Ok(())
+}

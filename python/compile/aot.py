@@ -1,0 +1,166 @@
+"""AOT compile path: distill the policy-value net, lower everything to HLO
+*text*, write ``artifacts/``.
+
+Run once via ``make artifacts`` (``cd python && python -m compile.aot
+--out-dir ../artifacts``). Python never runs on the Rust request path: the
+trained weights are constant-folded into the exported HLO modules.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced:
+  policy_value_b{1,8,32}.hlo.txt  fused-MLP forward at fixed batch sizes
+                                  (the Rust inference server pads requests
+                                  up to the smallest exported batch)
+  policy_value.hlo.txt            alias of the largest batch (Makefile stamp)
+  uct_select.hlo.txt              batched Eq.-(4) scorer (ablation target)
+  meta.txt                        key=value contract consumed by
+                                  rust/src/runtime/meta.rs
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.policy_mlp import FEATURE_DIM, NUM_ACTIONS, OUT_DIM, VALUE_INDEX
+
+POLICY_BATCHES = (1, 8, 32)  # exported forward-pass batch sizes
+SELECT_BATCH = 64            # exported Eq.-(4) scorer batch (nodes)
+TRAIN_STEPS = 800
+TRAIN_BATCH = 256
+LEARNING_RATE = 1e-3
+SEED = 20200417  # WU-UCT ICLR 2020 camera-ready vintage
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    NOTE: the default HLO printer elides large constants as
+    ``constant({...})``, which the Rust-side text parser silently reads as
+    zeros — the constant-folded network weights would vanish. We therefore
+    print with ``print_large_constants=True``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def adam_train(key: jax.Array, steps: int = TRAIN_STEPS, batch: int = TRAIN_BATCH,
+               lr: float = LEARNING_RATE):
+    """Hand-rolled Adam distillation loop (optax is not on this image).
+
+    Returns (params, loss_history).
+    """
+    pkey, dkey = jax.random.split(key)
+    params = model.init_params(pkey)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    loss_grad = jax.jit(jax.value_and_grad(model.distill_loss))
+
+    @jax.jit
+    def update(params, m, v, x, t):
+        loss, g = jax.value_and_grad(model.distill_loss)(params, x)
+        m = jax.tree.map(lambda a, b_: b1 * a + (1 - b1) * b_, m, g)
+        v = jax.tree.map(lambda a, b_: b2 * a + (1 - b2) * b_ * b_, v, g)
+        mhat = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+        )
+        return params, m, v, loss
+
+    del loss_grad
+    losses = []
+    for step in range(1, steps + 1):
+        dkey, bkey = jax.random.split(dkey)
+        x = model.sample_features(bkey, batch)
+        params, m, v, loss = update(params, m, v, x, jnp.float32(step))
+        if step == 1 or step % 100 == 0:
+            losses.append((step, float(loss)))
+    return params, losses
+
+
+def lower_policy(params, batch: int) -> str:
+    block = 1 if batch == 1 else 8
+
+    def fwd(x):
+        return (model.forward(params, x, block_b=block),)
+
+    spec = jax.ShapeDtypeStruct((batch, FEATURE_DIM), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_select(batch: int, beta: float = 1.0) -> str:
+    def sel(v, n, o, mask, parent_total):
+        scores, idx = model.batched_select(v, n, o, mask, parent_total, beta)
+        return (scores, idx)
+
+    ba = jax.ShapeDtypeStruct((batch, NUM_ACTIONS), jnp.float32)
+    pt = jax.ShapeDtypeStruct((batch, 1), jnp.float32)
+    return to_hlo_text(jax.jit(sel).lower(ba, ba, ba, ba, pt))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=TRAIN_STEPS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print(f"[aot] distilling policy-value net ({args.steps} steps)...")
+    params, losses = adam_train(jax.random.PRNGKey(SEED), steps=args.steps)
+    for step, loss in losses:
+        print(f"[aot]   step {step:4d}  loss {loss:.5f}")
+    final_loss = losses[-1][1]
+
+    for b in POLICY_BATCHES:
+        text = lower_policy(params, b)
+        path = os.path.join(args.out_dir, f"policy_value_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    # Alias the largest batch for the Makefile stamp file.
+    biggest = os.path.join(args.out_dir, f"policy_value_b{POLICY_BATCHES[-1]}.hlo.txt")
+    alias = os.path.join(args.out_dir, "policy_value.hlo.txt")
+    with open(biggest) as src, open(alias, "w") as dst:
+        dst.write(src.read())
+
+    sel_text = lower_select(SELECT_BATCH)
+    sel_path = os.path.join(args.out_dir, "uct_select.hlo.txt")
+    with open(sel_path, "w") as f:
+        f.write(sel_text)
+    print(f"[aot] wrote {sel_path} ({len(sel_text)} chars)")
+
+    meta_path = os.path.join(args.out_dir, "meta.txt")
+    with open(meta_path, "w") as f:
+        f.write(f"feature_dim={FEATURE_DIM}\n")
+        f.write(f"num_actions={NUM_ACTIONS}\n")
+        f.write(f"out_dim={OUT_DIM}\n")
+        f.write(f"value_index={VALUE_INDEX}\n")
+        f.write(f"policy_batches={','.join(str(b) for b in POLICY_BATCHES)}\n")
+        f.write(f"select_batch={SELECT_BATCH}\n")
+        f.write(f"teacher_scale={model.TEACHER_SCALE}\n")
+        f.write(f"illegal_logit={model.ILLEGAL_LOGIT}\n")
+        f.write(f"distill_final_loss={final_loss}\n")
+    print(f"[aot] wrote {meta_path}; final distill loss {final_loss:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused policy-value MLP forward pass.
+
+The paper's simulation hot spot is evaluating the distilled default-policy
+network once per rollout step. On GPU the reference implementation ran a
+small CNN per call; here the hot spot is re-thought for TPU execution:
+
+* the whole two-layer MLP (matmul + bias + ReLU + matmul + bias) is fused
+  into ONE Pallas kernel so intermediate activations never round-trip to
+  HBM;
+* feature / hidden / output dims are 128-aligned so every matmul tile maps
+  onto the 128x128 MXU systolic array;
+* the grid iterates over batch blocks of ``BLOCK_B`` rows; ``BlockSpec``
+  expresses the HBM->VMEM schedule (weights resident, activations streamed)
+  that a CUDA kernel would express with threadblocks + shared memory.
+
+VMEM footprint per grid step (f32):
+    x block   BLOCK_B x F  =  8*128*4   =   4 KiB
+    w1        F x H        = 128*128*4  =  64 KiB
+    w2        H x O        = 128*32*4   =  16 KiB
+    h scratch BLOCK_B x H  =  8*128*4   =   4 KiB
+  total << 16 MiB VMEM -> weights stay resident across the whole grid.
+
+``interpret=True`` is mandatory on this image (CPU PJRT cannot execute
+Mosaic custom-calls); numerics are validated against ``ref.policy_mlp_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Model dimensions (shared contract with the Rust runtime; see
+# rust/src/runtime/meta.rs and python/compile/model.py).
+FEATURE_DIM = 128  # F: env feature vector length
+HIDDEN_DIM = 128   # H: hidden width (MXU-aligned)
+OUT_DIM = 32       # O: [0..16) action logits, [16] value, rest padding
+NUM_ACTIONS = 16   # A: max action-space size across all environments
+VALUE_INDEX = 16   # index of the value head inside the output vector
+
+BLOCK_B = 8        # batch rows per grid step
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """One grid step: (BLOCK_B, F) @ (F, H) -> ReLU -> @ (H, O) + biases."""
+    x = x_ref[...]
+    # First layer. ``preferred_element_type`` keeps the accumulation in f32,
+    # mirroring MXU accumulate-in-f32 behaviour for bf16 inputs.
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...], 0.0)
+    # Second layer, fused in the same kernel: `h` lives in VMEM only.
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = o + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def policy_mlp(x, w1, b1, w2, b2, *, block_b: int = BLOCK_B):
+    """Fused MLP forward: ``relu(x @ w1 + b1) @ w2 + b2``.
+
+    Args:
+      x:  (B, F) float32 features; B must be a multiple of ``block_b``
+          (the Rust inference server pads batches to the exported size).
+      w1: (F, H); b1: (H,); w2: (H, O); b2: (O,).
+      block_b: batch rows per grid step.
+
+    Returns:
+      (B, O) float32 outputs (action logits + value head, see OUT_DIM).
+    """
+    batch, feat = x.shape
+    hidden = w1.shape[1]
+    out = w2.shape[1]
+    if batch % block_b != 0:
+        raise ValueError(f"batch {batch} not a multiple of block_b {block_b}")
+    if feat != w1.shape[0] or hidden != w2.shape[0] or b1.shape != (hidden,) or b2.shape != (out,):
+        raise ValueError("inconsistent weight shapes")
+
+    grid = (batch // block_b,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, feat), lambda i: (i, 0)),  # stream x
+            pl.BlockSpec((feat, hidden), lambda i: (0, 0)),   # w1 resident
+            pl.BlockSpec((hidden,), lambda i: (0,)),          # b1 resident
+            pl.BlockSpec((hidden, out), lambda i: (0, 0)),    # w2 resident
+            pl.BlockSpec((out,), lambda i: (0,)),             # b2 resident
+        ],
+        out_specs=pl.BlockSpec((block_b, out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, out), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w1, b1, w2, b2)

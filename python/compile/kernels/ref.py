@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle here to float32
+tolerance; ``python/tests/test_kernels.py`` sweeps shapes and value ranges
+with hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 1.0e9
+
+
+def policy_mlp_ref(x, w1, b1, w2, b2):
+    """Reference two-layer MLP: relu(x @ w1 + b1) @ w2 + b2."""
+    h = jnp.maximum(jnp.dot(x, w1) + b1, 0.0)
+    return jnp.dot(h, w2) + b2
+
+
+def wu_uct_score_ref(v, n, o, mask, parent_total, beta):
+    """Reference Eq.-(4) scores (see kernels/wu_uct_score.py)."""
+    total = n + o
+    log_term = jnp.log(jnp.maximum(parent_total, 1.0))
+    radius = beta * jnp.sqrt(2.0 * log_term / jnp.maximum(total, 1.0))
+    scored = v + radius
+    scored = jnp.where(total <= 0.0, BIG, scored)
+    return jnp.where(mask > 0.0, scored, -BIG)

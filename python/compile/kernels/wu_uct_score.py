@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: batched WU-UCT selection scores (paper Eq. 4).
+
+For a batch of B tree nodes, each with (up to) A children, compute
+
+    score[b, a] = V[b, a] + beta * sqrt( 2 * log(N_b + O_b)
+                                         / (N[b, a] + O[b, a]) )
+
+with the paper's conventions:
+
+* children with ``N + O == 0`` (never visited, no in-flight simulation)
+  have an infinite confidence radius -> score ``+BIG`` so they are always
+  preferred (first-expand semantics);
+* illegal / not-yet-expanded slots (``mask == 0``) score ``-BIG``.
+
+This vectorizes the selection step across a whole frontier of nodes in one
+VPU pass instead of a per-child scalar loop — the ablation benchmark
+``micro_hotpath`` compares it against the Rust-native scalar selection.
+The parent totals ``N_b + O_b`` are passed pre-summed as ``parent_total``
+(shape (B, 1)) because the Rust tree already maintains them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1.0e9  # stand-in for +inf that survives masking arithmetic
+
+
+def _score_kernel(v_ref, n_ref, o_ref, mask_ref, parent_ref, beta_ref, out_ref):
+    v = v_ref[...]
+    n = n_ref[...]
+    o = o_ref[...]
+    mask = mask_ref[...]
+    parent = parent_ref[...]          # (block_b, 1), broadcasts over A
+    beta = beta_ref[0, 0]
+
+    total = n + o                     # N_{s'} + O_{s'}
+    # log argument: N_s + O_s, clamped >= 1 so log >= 0 (paper starts the
+    # root with N=0; the radius is meaningless until a child exists anyway).
+    log_term = jnp.log(jnp.maximum(parent, 1.0))
+    radius = beta * jnp.sqrt(2.0 * log_term / jnp.maximum(total, 1.0))
+    scored = v + radius
+    # Unvisited children: infinite confidence radius.
+    scored = jnp.where(total <= 0.0, BIG, scored)
+    # Illegal / unexpanded slots never win.
+    out_ref[...] = jnp.where(mask > 0.0, scored, -BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def wu_uct_score(v, n, o, mask, parent_total, beta, *, block_b: int = 8):
+    """Batched Eq.-(4) scores.
+
+    Args:
+      v, n, o, mask: (B, A) float32 child statistics (V, N, O, legality).
+      parent_total: (B, 1) float32 ``N_s + O_s`` per node.
+      beta: scalar exploration coefficient (traced; pass a python float or
+        0-d array).
+      block_b: batch rows per grid step.
+
+    Returns:
+      (B, A) float32 scores; take argmax over axis 1 to select.
+    """
+    batch, acts = v.shape
+    if batch % block_b != 0:
+        raise ValueError(f"batch {batch} not a multiple of block_b {block_b}")
+    beta_arr = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+
+    grid = (batch // block_b,)
+    row = pl.BlockSpec((block_b, acts), lambda i: (i, 0))
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            row, row, row, row,
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((batch, acts), jnp.float32),
+        interpret=True,
+    )(v, n, o, mask, parent_total, beta_arr)
+
+
+def wu_uct_select(v, n, o, mask, parent_total, beta):
+    """Scores + argmax (int32 action index per node)."""
+    scores = wu_uct_score(v, n, o, mask, parent_total, beta)
+    return scores, jnp.argmax(scores, axis=1).astype(jnp.int32)

@@ -1,0 +1,125 @@
+"""L2: the JAX model — distilled policy-value network + batched selection.
+
+The network plays the role of the paper's distilled PPO network (Appendix
+D): it is the *default policy* used by simulation workers (action sampling)
+and the value bootstrap ``V(s)`` for truncated rollouts. The forward pass
+calls the L1 Pallas kernel :func:`kernels.policy_mlp.policy_mlp`.
+
+Feature contract (shared with ``rust/src/env/mod.rs`` — keep in sync):
+
+    f[0 .. A)      per-action one-step heuristic scores, roughly in [0, 1];
+                   0 for illegal actions
+    f[A .. 2A)     legality mask (1.0 legal / 0.0 illegal)
+    f[2A]          remaining-step fraction (steps_left / horizon)
+    f[2A + 1]      heuristic state value estimate in [-1, 1]
+    f[2A+2 .. F)   free-form state summary (env-specific densities etc.)
+
+The build-time teacher (see :func:`teacher_logits_value`) is a direct
+read-out of this contract; distillation trains the MLP to reproduce it from
+the raw feature vector, giving the Rust runtime an informed prior exactly
+when it fills features according to the contract.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import policy_mlp as pk
+from .kernels.policy_mlp import (
+    FEATURE_DIM,
+    HIDDEN_DIM,
+    NUM_ACTIONS,
+    OUT_DIM,
+    VALUE_INDEX,
+)
+from .kernels.wu_uct_score import wu_uct_select
+
+ILLEGAL_LOGIT = -8.0  # teacher logit for illegal actions (softmax-negligible
+                      # vs legal logits in [0, TEACHER_SCALE], yet learnable)
+TEACHER_SCALE = 4.0    # sharpness of the teacher's heuristic read-out
+
+
+class Params(NamedTuple):
+    """MLP parameters; a NamedTuple so jax pytrees handle it natively."""
+
+    w1: jax.Array  # (F, H)
+    b1: jax.Array  # (H,)
+    w2: jax.Array  # (H, O)
+    b2: jax.Array  # (O,)
+
+
+def init_params(key: jax.Array) -> Params:
+    """He-initialized parameters."""
+    k1, k2 = jax.random.split(key)
+    w1 = jax.random.normal(k1, (FEATURE_DIM, HIDDEN_DIM), jnp.float32)
+    w1 = w1 * jnp.sqrt(2.0 / FEATURE_DIM)
+    w2 = jax.random.normal(k2, (HIDDEN_DIM, OUT_DIM), jnp.float32)
+    w2 = w2 * jnp.sqrt(2.0 / HIDDEN_DIM)
+    return Params(w1, jnp.zeros((HIDDEN_DIM,)), w2, jnp.zeros((OUT_DIM,)))
+
+
+def forward(params: Params, x: jax.Array, *, block_b: int = 8) -> jax.Array:
+    """Raw network output (B, OUT_DIM) via the fused Pallas kernel."""
+    return pk.policy_mlp(x, params.w1, params.b1, params.w2, params.b2, block_b=block_b)
+
+
+def forward_ref(params: Params, x: jax.Array) -> jax.Array:
+    """Pure-jnp forward, numerically identical to the Pallas kernel (the
+    kernel tests assert allclose). Pallas interpret-mode kernels do not
+    support reverse-mode autodiff, so *training* differentiates through this
+    path while *export* (aot.py) lowers the fused Pallas path."""
+    h = jnp.maximum(jnp.dot(x, params.w1) + params.b1, 0.0)
+    return jnp.dot(h, params.w2) + params.b2
+
+
+def policy_value(params: Params, x: jax.Array, *, block_b: int = 8):
+    """Split the fused output into (logits (B, A), value (B,))."""
+    out = forward(params, x, block_b=block_b)
+    return out[:, :NUM_ACTIONS], out[:, VALUE_INDEX]
+
+
+def teacher_logits_value(x: jax.Array):
+    """Build-time teacher: reads the feature contract directly.
+
+    logits_a = TEACHER_SCALE * heuristic_a  (ILLEGAL_LOGIT when masked out)
+    value    = heuristic state value feature
+    """
+    heur = x[:, :NUM_ACTIONS]
+    mask = x[:, NUM_ACTIONS : 2 * NUM_ACTIONS]
+    logits = jnp.where(mask > 0.0, TEACHER_SCALE * heur, ILLEGAL_LOGIT)
+    value = x[:, 2 * NUM_ACTIONS + 1]
+    return logits, value
+
+
+def distill_loss(params: Params, x: jax.Array) -> jax.Array:
+    """MSE on logits + value against the teacher (the paper's Appendix-D
+    distillation minimizes the same logit+value MSE). Differentiates through
+    :func:`forward_ref` (see its docstring)."""
+    out = forward_ref(params, x)
+    logits, value = out[:, :NUM_ACTIONS], out[:, VALUE_INDEX]
+    t_logits, t_value = teacher_logits_value(x)
+    return jnp.mean((logits - t_logits) ** 2) + jnp.mean((value - t_value) ** 2)
+
+
+def batched_select(v, n, o, mask, parent_total, beta):
+    """Batched WU-UCT selection (Eq. 4) via the L1 scorer kernel."""
+    return wu_uct_select(v, n, o, mask, parent_total, beta)
+
+
+def sample_features(key: jax.Array, batch: int) -> jax.Array:
+    """Synthetic feature batches obeying the feature contract, used as the
+    distillation dataset (the Rust envs generate contract-conforming
+    features at run time)."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    heur = jax.random.uniform(k1, (batch, NUM_ACTIONS))
+    # Random legality patterns, always >= 1 legal action (slot 0 forced).
+    mask = (jax.random.uniform(k2, (batch, NUM_ACTIONS)) < 0.7).astype(jnp.float32)
+    mask = mask.at[:, 0].set(1.0)
+    heur = heur * mask
+    frac = jax.random.uniform(k3, (batch, 1))
+    val = jax.random.uniform(k4, (batch, 1), minval=-1.0, maxval=1.0)
+    rest = jax.random.normal(k5, (batch, FEATURE_DIM - 2 * NUM_ACTIONS - 2)) * 0.5
+    return jnp.concatenate([heur, mask, frac, val, rest], axis=1)

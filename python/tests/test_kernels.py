@@ -1,0 +1,201 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; fixed-seed cases pin the exact
+semantics the Rust side depends on (unvisited-child priority, masking).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.policy_mlp import (
+    FEATURE_DIM,
+    HIDDEN_DIM,
+    NUM_ACTIONS,
+    OUT_DIM,
+    policy_mlp,
+)
+from compile.kernels.wu_uct_score import BIG, wu_uct_score, wu_uct_select
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, *shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# policy_mlp
+# ---------------------------------------------------------------------------
+
+
+class TestPolicyMlp:
+    @hypothesis.given(
+        batch_blocks=st.integers(1, 6),
+        block_b=st.sampled_from([1, 2, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, batch_blocks, block_b, seed):
+        batch = batch_blocks * block_b
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = jax.random.normal(ks[0], (batch, FEATURE_DIM), jnp.float32)
+        w1 = jax.random.normal(ks[1], (FEATURE_DIM, HIDDEN_DIM), jnp.float32) * 0.1
+        b1 = jax.random.normal(ks[2], (HIDDEN_DIM,), jnp.float32) * 0.1
+        w2 = jax.random.normal(ks[3], (HIDDEN_DIM, OUT_DIM), jnp.float32) * 0.1
+        b2 = jax.random.normal(ks[4], (OUT_DIM,), jnp.float32) * 0.1
+        got = policy_mlp(x, w1, b1, w2, b2, block_b=block_b)
+        want = ref.policy_mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_output_shape(self):
+        x = rand(0, 16, FEATURE_DIM)
+        out = policy_mlp(
+            x,
+            rand(1, FEATURE_DIM, HIDDEN_DIM),
+            rand(2, HIDDEN_DIM),
+            rand(3, HIDDEN_DIM, OUT_DIM),
+            rand(4, OUT_DIM),
+        )
+        assert out.shape == (16, OUT_DIM)
+        assert out.dtype == jnp.float32
+
+    def test_relu_nonlinearity_active(self):
+        """With a large negative b1 the hidden layer saturates at 0 and the
+        output must equal b2 exactly — catches a kernel that skips the ReLU."""
+        x = rand(5, 8, FEATURE_DIM)
+        w1 = rand(6, FEATURE_DIM, HIDDEN_DIM)
+        b1 = jnp.full((HIDDEN_DIM,), -1e6, jnp.float32)
+        w2 = rand(7, HIDDEN_DIM, OUT_DIM)
+        b2 = rand(8, OUT_DIM)
+        out = policy_mlp(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, jnp.broadcast_to(b2, (8, OUT_DIM)), atol=1e-6)
+
+    def test_batch_not_multiple_of_block_raises(self):
+        x = rand(9, 5, FEATURE_DIM)
+        with pytest.raises(ValueError, match="multiple"):
+            policy_mlp(
+                x,
+                rand(1, FEATURE_DIM, HIDDEN_DIM),
+                rand(2, HIDDEN_DIM),
+                rand(3, HIDDEN_DIM, OUT_DIM),
+                rand(4, OUT_DIM),
+                block_b=8,
+            )
+
+    def test_inconsistent_weights_raise(self):
+        x = rand(9, 8, FEATURE_DIM)
+        with pytest.raises(ValueError, match="inconsistent"):
+            policy_mlp(
+                x,
+                rand(1, FEATURE_DIM, HIDDEN_DIM),
+                rand(2, HIDDEN_DIM + 1),
+                rand(3, HIDDEN_DIM, OUT_DIM),
+                rand(4, OUT_DIM),
+            )
+
+    def test_rows_independent(self):
+        """Each batch row must be computed independently of its neighbours."""
+        ks = jax.random.split(jax.random.PRNGKey(42), 5)
+        x = jax.random.normal(ks[0], (16, FEATURE_DIM), jnp.float32)
+        w = [
+            jax.random.normal(ks[1], (FEATURE_DIM, HIDDEN_DIM), jnp.float32) * 0.1,
+            jax.random.normal(ks[2], (HIDDEN_DIM,), jnp.float32) * 0.1,
+            jax.random.normal(ks[3], (HIDDEN_DIM, OUT_DIM), jnp.float32) * 0.1,
+            jax.random.normal(ks[4], (OUT_DIM,), jnp.float32) * 0.1,
+        ]
+        full = policy_mlp(x, *w)
+        head = policy_mlp(x[:8], *w)
+        np.testing.assert_allclose(full[:8], head, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wu_uct_score
+# ---------------------------------------------------------------------------
+
+
+def score_inputs(seed, batch):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    v = jax.random.uniform(ks[0], (batch, NUM_ACTIONS), jnp.float32, -2.0, 2.0)
+    n = jnp.floor(jax.random.uniform(ks[1], (batch, NUM_ACTIONS), jnp.float32, 0.0, 50.0))
+    o = jnp.floor(jax.random.uniform(ks[2], (batch, NUM_ACTIONS), jnp.float32, 0.0, 8.0))
+    mask = (jax.random.uniform(ks[3], (batch, NUM_ACTIONS)) < 0.8).astype(jnp.float32)
+    mask = mask.at[:, 0].set(1.0)
+    parent = jnp.sum(n + o, axis=1, keepdims=True) + 1.0
+    return v, n, o, mask, parent
+
+
+class TestWuUctScore:
+    @hypothesis.given(
+        batch_blocks=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+        beta=st.floats(0.1, 5.0),
+    )
+    def test_matches_ref(self, batch_blocks, seed, beta):
+        batch = batch_blocks * 8
+        v, n, o, mask, parent = score_inputs(seed, batch)
+        got = wu_uct_score(v, n, o, mask, parent, beta)
+        want = ref.wu_uct_score_ref(v, n, o, mask, parent, beta)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_unvisited_child_always_preferred(self):
+        """A legal child with N+O == 0 must dominate all visited children."""
+        v, n, o, mask, parent = score_inputs(7, 8)
+        n = n.at[:, 3].set(0.0)
+        o = o.at[:, 3].set(0.0)
+        mask = mask.at[:, 3].set(1.0)
+        n = n.at[:, jnp.arange(NUM_ACTIONS) != 3].add(1.0)  # others visited
+        scores, idx = wu_uct_select(v, n, o, mask, parent, 1.0)
+        assert (scores[:, 3] == BIG).all()
+        np.testing.assert_array_equal(idx, np.full(8, 3, np.int32))
+
+    def test_illegal_children_never_selected(self):
+        v, n, o, mask, parent = score_inputs(11, 16)
+        scores = np.asarray(wu_uct_score(v, n, o, mask, parent, 1.0))
+        assert (scores[np.asarray(mask) == 0.0] == -BIG).all()
+
+    def test_inflight_simulation_lowers_score(self):
+        """Eq. (4): adding O to a child shrinks its exploration bonus, so a
+        node with in-flight simulations scores strictly lower (visited)."""
+        v, n, o, mask, parent = score_inputs(13, 8)
+        n = n + 1.0  # everything visited
+        o0 = jnp.zeros_like(o)
+        base = np.asarray(wu_uct_score(v, n, o0, mask, parent, 1.0))
+        bumped = np.asarray(
+            wu_uct_score(v, n, o0.at[:, 2].set(4.0), mask, parent + 4.0, 1.0)
+        )
+        legal2 = np.asarray(mask[:, 2]) > 0
+        assert (bumped[legal2, 2] < base[legal2, 2]).all()
+
+    def test_penalty_vanishes_when_n_large(self):
+        """Exploitation is preserved: for N >> O the O-correction is tiny
+        (the paper's argument for why WU-UCT avoids exploitation failure)."""
+        batch = 8
+        v = jnp.zeros((batch, NUM_ACTIONS), jnp.float32)
+        n = jnp.full((batch, NUM_ACTIONS), 1e6, jnp.float32)
+        mask = jnp.ones_like(v)
+        parent = jnp.sum(n, axis=1, keepdims=True)
+        o = jnp.zeros_like(v)
+        base = np.asarray(wu_uct_score(v, n, o, mask, parent, 1.0))
+        bumped = np.asarray(wu_uct_score(v, n, o + 8.0, mask, parent + 128.0, 1.0))
+        np.testing.assert_allclose(bumped, base, atol=1e-4)
+
+    def test_beta_zero_is_pure_exploitation(self):
+        v, n, o, mask, parent = score_inputs(17, 8)
+        n = n + 1.0
+        scores = np.asarray(wu_uct_score(v, n, o, mask, parent, 0.0))
+        legal = np.asarray(mask) > 0
+        visited = np.asarray(n + o) > 0
+        pick = legal & visited
+        np.testing.assert_allclose(scores[pick], np.asarray(v)[pick], atol=1e-6)
+
+    def test_batch_not_multiple_raises(self):
+        v, n, o, mask, parent = score_inputs(19, 8)
+        with pytest.raises(ValueError, match="multiple"):
+            wu_uct_score(v[:5], n[:5], o[:5], mask[:5], parent[:5], 1.0)

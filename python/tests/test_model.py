@@ -1,0 +1,100 @@
+"""L2 correctness: model shapes, teacher semantics, distillation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.policy_mlp import FEATURE_DIM, NUM_ACTIONS, OUT_DIM
+
+
+class TestParams:
+    def test_init_shapes(self):
+        p = model.init_params(jax.random.PRNGKey(0))
+        assert p.w1.shape == (FEATURE_DIM, model.HIDDEN_DIM if hasattr(model, "HIDDEN_DIM") else 128)
+        assert p.b1.shape == (p.w1.shape[1],)
+        assert p.w2.shape == (p.w1.shape[1], OUT_DIM)
+        assert p.b2.shape == (OUT_DIM,)
+
+    def test_init_deterministic(self):
+        a = model.init_params(jax.random.PRNGKey(7))
+        b = model.init_params(jax.random.PRNGKey(7))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+
+class TestForward:
+    def test_policy_value_shapes(self):
+        p = model.init_params(jax.random.PRNGKey(1))
+        x = model.sample_features(jax.random.PRNGKey(2), 16)
+        logits, value = model.policy_value(p, x)
+        assert logits.shape == (16, NUM_ACTIONS)
+        assert value.shape == (16,)
+
+    def test_forward_consistent_with_policy_value(self):
+        p = model.init_params(jax.random.PRNGKey(3))
+        x = model.sample_features(jax.random.PRNGKey(4), 8)
+        out = model.forward(p, x)
+        logits, value = model.policy_value(p, x)
+        np.testing.assert_array_equal(out[:, :NUM_ACTIONS], logits)
+        np.testing.assert_array_equal(out[:, model.VALUE_INDEX], value)
+
+
+class TestTeacher:
+    def test_teacher_reads_contract(self):
+        x = model.sample_features(jax.random.PRNGKey(5), 32)
+        logits, value = model.teacher_logits_value(x)
+        mask = np.asarray(x[:, NUM_ACTIONS : 2 * NUM_ACTIONS])
+        lg = np.asarray(logits)
+        assert (lg[mask == 0.0] == model.ILLEGAL_LOGIT).all()
+        np.testing.assert_allclose(
+            lg[mask > 0.0],
+            model.TEACHER_SCALE * np.asarray(x[:, :NUM_ACTIONS])[mask > 0.0],
+        )
+        np.testing.assert_array_equal(value, x[:, 2 * NUM_ACTIONS + 1])
+
+    def test_teacher_value_in_range(self):
+        x = model.sample_features(jax.random.PRNGKey(6), 64)
+        _, value = model.teacher_logits_value(x)
+        assert (np.abs(np.asarray(value)) <= 1.0).all()
+
+
+class TestSampleFeatures:
+    def test_contract_fields(self):
+        x = np.asarray(model.sample_features(jax.random.PRNGKey(8), 40))
+        assert x.shape == (40, FEATURE_DIM)
+        mask = x[:, NUM_ACTIONS : 2 * NUM_ACTIONS]
+        assert set(np.unique(mask)) <= {0.0, 1.0}
+        assert (mask[:, 0] == 1.0).all()  # action 0 always legal
+        heur = x[:, :NUM_ACTIONS]
+        assert (heur[mask == 0.0] == 0.0).all()  # illegal => zero heuristic
+        assert ((x[:, 2 * NUM_ACTIONS] >= 0) & (x[:, 2 * NUM_ACTIONS] <= 1)).all()
+
+    def test_distinct_keys_give_distinct_batches(self):
+        a = model.sample_features(jax.random.PRNGKey(9), 8)
+        b = model.sample_features(jax.random.PRNGKey(10), 8)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+class TestDistillation:
+    def test_loss_decreases(self):
+        from compile.aot import adam_train
+
+        _, losses = adam_train(jax.random.PRNGKey(0), steps=300, batch=128)
+        first, last = losses[0][1], losses[-1][1]
+        assert last < first * 0.5, f"distill loss did not drop: {first} -> {last}"
+
+    def test_trained_policy_ranks_like_teacher(self):
+        """After distillation the argmax action of the student matches the
+        teacher on most contract-conforming states."""
+        from compile.aot import adam_train
+
+        params, _ = adam_train(jax.random.PRNGKey(1), steps=300, batch=256)
+        x = model.sample_features(jax.random.PRNGKey(99), 64)
+        s_logits, s_val = model.policy_value(params, x)
+        t_logits, t_val = model.teacher_logits_value(x)
+        agree = np.mean(
+            np.argmax(np.asarray(s_logits), 1) == np.argmax(np.asarray(t_logits), 1)
+        )
+        assert agree >= 0.7, f"student/teacher argmax agreement only {agree}"
+        assert np.mean((np.asarray(s_val) - np.asarray(t_val)) ** 2) < 0.05

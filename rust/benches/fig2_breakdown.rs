@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 2(b–c) — master/worker time breakdown and
+//! simulation-worker occupancy under WU-UCT.
+
+use wu_uct::bench::bench_once;
+use wu_uct::experiments::{fig2, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let ((table, reports), _) = bench_once("fig2_breakdown", || fig2::run(&scale, 2));
+    print!("{}", table.render());
+    for r in &reports {
+        println!(
+            "{}: simulation-worker occupancy {:.1}% (paper: close to 100%)",
+            r.workload,
+            r.sim_occupancy * 100.0
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate Fig. 4 — WU-UCT speedup curves (a–b) on the
+//! latency-simulated emulator and performance retention (c–d).
+
+use wu_uct::bench::bench_once;
+use wu_uct::env::tapgame::Level;
+use wu_uct::experiments::{fig4, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    for level in [Level::level35(), Level::level58()] {
+        let (table, _) = bench_once(&format!("fig4_speedup_{}", level.id), || {
+            fig4::speedup_curves(&level, &[1, 4, 16], &scale, 2)
+        });
+        print!("{}", table.render());
+    }
+    let (perf, _) = bench_once("fig4_performance_retention", || {
+        fig4::performance_retention(&scale)
+    });
+    print!("{}", perf.render());
+}

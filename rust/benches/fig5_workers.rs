@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 5 — reward + time/step vs simulation workers
+//! (4/8/16) for WU-UCT and the three baselines on four games.
+
+use wu_uct::bench::{bench_once, paper_scale};
+use wu_uct::env::atari::FIG5_GAMES;
+use wu_uct::experiments::{fig5, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let games: Vec<&str> = if paper_scale() {
+        FIG5_GAMES.to_vec()
+    } else {
+        vec!["Boxing", "Freeway"]
+    };
+    let (table, _) = bench_once("fig5_workers", || fig5::run(&games, &scale));
+    print!("{}", table.render());
+}

@@ -1,0 +1,148 @@
+//! Micro-benchmarks of the hot paths (the §Perf working set):
+//!
+//! * Eq.-(4) selection scoring + tree traversal (master hot loop);
+//! * sequential backprop / complete-update walks;
+//! * environment step + snapshot/restore costs;
+//! * PJRT inference: single-row vs batched server (when artifacts exist);
+//! * task round-trip overhead through the worker pool.
+
+use std::time::Duration;
+
+use wu_uct::bench::bench;
+use wu_uct::env::garnet::Garnet;
+use wu_uct::env::tapgame::{Level, TapGame};
+use wu_uct::env::Env;
+use wu_uct::eval::HeuristicPolicy;
+use wu_uct::mcts::common::{backprop, init_node, traverse, SearchSpec};
+use wu_uct::mcts::wu_uct::workers::{Pool, Task, TaskResult};
+use wu_uct::tree::{select_child, ScoreMode, Tree};
+use wu_uct::util::rng::Pcg32;
+
+fn build_tree(depth: u32, branching: usize) -> Tree {
+    let mut tree = Tree::new();
+    let mut frontier = vec![Tree::ROOT];
+    let mut rng = Pcg32::new(1);
+    for _ in 0..depth {
+        let mut next = Vec::new();
+        for &node in &frontier {
+            for a in 0..branching {
+                let c = tree.add_child(node, a);
+                let n = tree.node_mut(c);
+                n.n = rng.below(50) + 1;
+                n.o = rng.below(3);
+                n.v = rng.next_f64();
+                next.push(c);
+            }
+        }
+        frontier = next;
+    }
+    // Fix parent counts so invariants hold.
+    let ids: Vec<usize> = tree.iter().map(|(id, _)| id).collect();
+    for id in ids.into_iter().rev() {
+        let sum: u32 = tree.node(id).children.iter().map(|&(_, c)| tree.node(c).n).sum();
+        if sum > 0 {
+            tree.node_mut(id).n = sum;
+        }
+    }
+    tree
+}
+
+fn main() {
+    // --- selection scoring ---
+    let tree = build_tree(4, 5);
+    bench("select_child Eq4 (5-way node)", 100, 2000, || {
+        select_child(&tree, Tree::ROOT, ScoreMode::WuUct, 1.0)
+    });
+
+    let spec = SearchSpec::default();
+    let mut rng = Pcg32::new(7);
+    bench("traverse full tree (depth 4, b=5)", 100, 2000, || {
+        traverse(&tree, ScoreMode::WuUct, &spec, &mut rng)
+    });
+
+    // --- backprop ---
+    let mut bp_tree = Tree::new();
+    let mut node = Tree::ROOT;
+    for _ in 0..50 {
+        node = bp_tree.add_child(node, 0);
+        bp_tree.node_mut(node).reward = 0.1;
+    }
+    bench("backprop depth-50 path", 100, 2000, || {
+        backprop(&mut bp_tree, node, 1.0, 0.99)
+    });
+
+    // --- env costs ---
+    let tap = TapGame::new(Level::level35(), 3);
+    bench("tapgame snapshot", 100, 2000, || tap.snapshot());
+    let snap = tap.snapshot();
+    let mut tap2 = TapGame::new(Level::level35(), 4);
+    bench("tapgame restore+regions", 100, 2000, || tap2.restore(&snap));
+    let mut garnet = Garnet::new(50, 4, u32::MAX, 0.0, 5);
+    bench("garnet 100 steps", 100, 500, || {
+        for i in 0..100u32 {
+            garnet.step((i % 4) as usize);
+        }
+    });
+    let mut tree2 = Tree::new();
+    let genv = Garnet::new(50, 4, 100, 0.0, 5);
+    bench("init_node (4 actions)", 100, 2000, || {
+        let mut t = std::mem::take(&mut tree2);
+        t = Tree::new();
+        init_node(&mut t, Tree::ROOT, &genv, &spec);
+        tree2 = t;
+    });
+
+    // --- worker pool round trip ---
+    let pool = Pool::new(2, HeuristicPolicy::factory(), 9);
+    bench("pool round-trip (1-step sim)", 20, 300, || {
+        pool.submit(Task::Simulate {
+            task_id: 0,
+            env: Box::new(Garnet::new(10, 3, 2, 0.0, 1)),
+            gamma: 0.99,
+            limit: 1,
+        });
+        match pool.recv() {
+            TaskResult::Simulated(r) => r.ret,
+            _ => unreachable!(),
+        }
+    });
+
+    // --- PJRT inference (needs artifacts) ---
+    let dir = wu_uct::runtime::artifacts_dir();
+    if dir.join("meta.txt").exists() {
+        let mut engine = wu_uct::runtime::Engine::load(&dir).expect("engine");
+        let env = wu_uct::env::atari::make("Alien", 1);
+        let mut feats = vec![0f32; wu_uct::env::FEATURE_DIM];
+        env.features(&mut feats);
+        let row = feats.clone();
+        bench("pjrt infer batch=1", 20, 200, || {
+            engine.infer(std::slice::from_ref(&row)).unwrap()
+        });
+        let rows8: Vec<Vec<f32>> = (0..8).map(|_| row.clone()).collect();
+        bench("pjrt infer batch=8", 20, 200, || engine.infer(&rows8).unwrap());
+        let rows32: Vec<Vec<f32>> = (0..32).map(|_| row.clone()).collect();
+        bench("pjrt infer batch=32", 20, 200, || engine.infer(&rows32).unwrap());
+
+        // Batched server vs direct: 16 concurrent clients.
+        let server =
+            wu_uct::runtime::EvalServer::start(&dir, Duration::from_micros(100)).unwrap();
+        bench("eval server 16 concurrent evals", 5, 50, || {
+            std::thread::scope(|scope| {
+                for _ in 0..16 {
+                    let h = server.handle();
+                    let f = row.clone();
+                    scope.spawn(move || h.eval(f));
+                }
+            });
+        });
+        let stats = server.stats();
+        println!(
+            "server avg batch under load: {:.1} rows/exec ({} reqs, {} batches)",
+            stats.avg_batch(),
+            stats.requests,
+            stats.batches
+        );
+    } else {
+        println!("artifacts missing — PJRT benches skipped (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Table 1 (episode returns, WU-UCT vs baselines over
+//! the Atari suite) + the derived Fig. 10 relative-performance rows.
+//!
+//! Default scale is `quick` (a 5-game slice, minutes); set
+//! `WU_UCT_BENCH_SCALE=paper` for the full 15-game, 10-trial run.
+
+use wu_uct::bench::{bench_once, paper_scale};
+use wu_uct::env::atari::GAMES;
+use wu_uct::experiments::{fig10, table1, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let games: Vec<&str> = if paper_scale() {
+        GAMES.to_vec()
+    } else {
+        vec!["Alien", "Boxing", "Breakout", "Freeway", "Tennis"]
+    };
+    let ((table, data), _) = bench_once("table1_atari", || table1::run(&games, &scale));
+    print!("{}", table.render());
+    let (rel, avgs) = fig10::relative_performance(&data);
+    print!("{}", rel.render());
+    println!(
+        "avg improvement of WU-UCT: vs TreeP {:+.0}%, vs LeafP {:+.0}%, vs RootP {:+.0}%",
+        avgs[0] * 100.0,
+        avgs[1] * 100.0,
+        avgs[2] * 100.0
+    );
+}

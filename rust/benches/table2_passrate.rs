@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 2 + Fig. 8 — the pass-rate prediction system
+//! (bot-vs-player t-tests, MAE histogram).
+
+use wu_uct::bench::{bench_once, paper_scale};
+use wu_uct::experiments::table2_fig8;
+use wu_uct::passrate::SystemConfig;
+
+fn main() {
+    let cfg = if paper_scale() {
+        SystemConfig::default()
+    } else {
+        SystemConfig::quick()
+    };
+    let (result, _) = bench_once("table2_passrate", || table2_fig8::run(&cfg).unwrap());
+    let (t2, f8, report) = result;
+    print!("{}", t2.render());
+    print!("{}", f8.render());
+    println!(
+        "MAE {:.1}% (paper 8.6%), {:.0}% under 20% (paper 93%)",
+        report.mae * 100.0,
+        report.frac_under_20 * 100.0
+    );
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Table 3 — the full (Me × Ms) speedup grid on both
+//! tap-game levels (latency-simulated emulator).
+
+use wu_uct::bench::bench_once;
+use wu_uct::experiments::{table3, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let ((table, grids), _) = bench_once("table3_grid", || table3::run(&scale, 2));
+    print!("{}", table.render());
+    // The paper's headline: the diagonal is near-linear.
+    for (grid, level) in grids.iter().zip(["level-35", "level-58"]) {
+        let diag: Vec<String> = (0..grid.len()).map(|i| format!("{:.1}", grid[i][i])).collect();
+        println!("{level} diagonal (1,2,4,8,16 workers): {}", diag.join(" "));
+    }
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate Table 5 (Appendix E) — WU-UCT vs TreeP with
+//! virtual loss + virtual pseudo-count (Eq. 7) at r=n ∈ {1,2,3}.
+
+use wu_uct::bench::{bench_once, paper_scale};
+use wu_uct::env::atari::TABLE5_GAMES;
+use wu_uct::experiments::{table5, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let games: Vec<&str> = if paper_scale() {
+        TABLE5_GAMES.to_vec()
+    } else {
+        vec!["Alien", "Boxing", "Freeway", "Tennis"]
+    };
+    let ((table, winners), _) = bench_once("table5_treep", || table5::run(&games, &scale));
+    print!("{}", table.render());
+    let wu_wins = winners.iter().filter(|w| w.as_str() == "WU-UCT").count();
+    println!("WU-UCT wins {wu_wins}/{} games (paper: 9/12)", winners.len());
+}

@@ -1,0 +1,108 @@
+//! Micro-benchmark harness (criterion is not in the offline crate cache).
+//!
+//! Used by every `cargo bench` target (`harness = false` in Cargo.toml):
+//! warmup, timed iterations, mean/σ/min, and a one-line report compatible
+//! with quick eyeballing and CSV capture. Kept deliberately simple — the
+//! paper-reproduction benches measure *seconds-scale* end-to-end runs
+//! where criterion's statistical machinery would add nothing.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{mean, std_dev};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} {:>10.3?} ± {:>9.3?} (min {:>10.3?}, n={})",
+            self.name, self.mean, self.std, self.min, self.iters
+        )
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean(&samples)),
+        std: Duration::from_secs_f64(std_dev(&samples)),
+        min: Duration::from_secs_f64(samples.iter().cloned().fold(f64::MAX, f64::min)),
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Time a single run of `f` (for seconds-scale end-to-end benches where
+/// one measurement is the honest thing to report).
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    let d = t.elapsed();
+    println!("bench {name:<44} {d:>10.3?} (single run)");
+    (out, d)
+}
+
+/// Scale knob shared by the bench binaries: `WU_UCT_BENCH_SCALE=paper`
+/// runs paper-scale workloads; anything else (default) runs laptop scale.
+pub fn paper_scale() -> bool {
+    std::env::var("WU_UCT_BENCH_SCALE").map(|v| v == "paper").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0;
+        let r = bench("counter", 2, 5, || count += 1);
+        assert_eq!(count, 7); // 2 warmup + 5 measured
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, d) = bench_once("forty-two", || 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let r = bench("named-thing", 0, 1, || ());
+        assert!(r.report().contains("named-thing"));
+    }
+
+    #[test]
+    fn default_scale_is_laptop() {
+        // Unless explicitly set in the environment.
+        if std::env::var("WU_UCT_BENCH_SCALE").is_err() {
+            assert!(!paper_scale());
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! Chase mechanic: a player collects pellets on a grid while ghosts pursue
+//! (MsPacman / Alien / Qbert analogue).
+//!
+//! Actions: 0=up 1=down 2=left 3=right 4=stay. Reward: `pellet_reward` per
+//! pellet, `capture_penalty` on being caught (ends the episode). Ghosts
+//! move every `ghost_period` steps; with probability `ghost_smart` a ghost
+//! steps toward the player, otherwise randomly — the knob that separates
+//! "Alien" (aggressive) from "MsPacman" (wanderers).
+
+use crate::env::codec::{Reader, Writer};
+use crate::env::{Env, EnvState, StepResult};
+use crate::util::rng::Pcg32;
+
+/// Parameterization of the chase mechanic.
+#[derive(Debug, Clone)]
+pub struct ChaseConfig {
+    pub name: &'static str,
+    pub width: i64,
+    pub height: i64,
+    pub num_ghosts: usize,
+    /// Probability a ghost moves toward the player (else random).
+    pub ghost_smart: f64,
+    /// Ghosts move once every this many player steps.
+    pub ghost_period: u32,
+    /// Fraction of cells holding a pellet at reset.
+    pub pellet_density: f64,
+    pub pellet_reward: f64,
+    pub capture_penalty: f64,
+    pub horizon: u32,
+}
+
+impl ChaseConfig {
+    pub fn alien() -> Self {
+        ChaseConfig {
+            name: "Alien",
+            width: 11,
+            height: 11,
+            num_ghosts: 3,
+            ghost_smart: 0.75,
+            ghost_period: 1,
+            pellet_density: 0.35,
+            pellet_reward: 10.0,
+            capture_penalty: -50.0,
+            horizon: 300,
+        }
+    }
+
+    pub fn mspacman() -> Self {
+        ChaseConfig {
+            name: "MsPacman",
+            width: 13,
+            height: 13,
+            num_ghosts: 4,
+            ghost_smart: 0.5,
+            ghost_period: 1,
+            pellet_density: 0.45,
+            pellet_reward: 10.0,
+            capture_penalty: -100.0,
+            horizon: 400,
+        }
+    }
+
+    pub fn qbert() -> Self {
+        ChaseConfig {
+            name: "Qbert",
+            width: 9,
+            height: 9,
+            num_ghosts: 2,
+            ghost_smart: 0.6,
+            ghost_period: 2,
+            pellet_density: 1.0, // paint every cell
+            pellet_reward: 25.0,
+            capture_penalty: -25.0,
+            horizon: 250,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ChaseGame {
+    cfg: ChaseConfig,
+    rng: Pcg32,
+    player: (i64, i64),
+    ghosts: Vec<(i64, i64)>,
+    pellets: Vec<bool>, // width*height
+    step: u32,
+    caught: bool,
+    score: f64,
+}
+
+const DIRS: [(i64, i64); 5] = [(0, -1), (0, 1), (-1, 0), (1, 0), (0, 0)];
+
+impl ChaseGame {
+    pub fn new(cfg: ChaseConfig, seed: u64) -> Self {
+        let mut g = ChaseGame {
+            cfg,
+            rng: Pcg32::new(seed),
+            player: (0, 0),
+            ghosts: Vec::new(),
+            pellets: Vec::new(),
+            step: 0,
+            caught: false,
+            score: 0.0,
+        };
+        g.reset(seed);
+        g
+    }
+
+    fn cell(&self, x: i64, y: i64) -> usize {
+        (y * self.cfg.width + x) as usize
+    }
+
+    fn pellets_left(&self) -> usize {
+        self.pellets.iter().filter(|&&p| p).count()
+    }
+
+    fn nearest_ghost_dist(&self) -> i64 {
+        self.ghosts
+            .iter()
+            .map(|&(gx, gy)| (gx - self.player.0).abs() + (gy - self.player.1).abs())
+            .min()
+            .unwrap_or(i64::MAX)
+    }
+
+    fn nearest_pellet_dist_from(&self, x: i64, y: i64) -> i64 {
+        let mut best = i64::MAX;
+        for py in 0..self.cfg.height {
+            for px in 0..self.cfg.width {
+                if self.pellets[self.cell(px, py)] {
+                    best = best.min((px - x).abs() + (py - y).abs());
+                }
+            }
+        }
+        best
+    }
+
+    fn clamp_pos(&self, x: i64, y: i64) -> (i64, i64) {
+        (x.clamp(0, self.cfg.width - 1), y.clamp(0, self.cfg.height - 1))
+    }
+}
+
+impl Env for ChaseGame {
+    fn snapshot(&self) -> EnvState {
+        let mut w = Writer::new();
+        let (s, inc) = self.rng.state_and_inc();
+        w.u64(s);
+        w.u64(inc);
+        w.i64(self.player.0);
+        w.i64(self.player.1);
+        w.u32(self.ghosts.len() as u32);
+        for &(x, y) in &self.ghosts {
+            w.i64(x);
+            w.i64(y);
+        }
+        let bytes: Vec<u8> = self.pellets.iter().map(|&b| b as u8).collect();
+        w.bytes(&bytes);
+        w.u32(self.step);
+        w.u8(self.caught as u8);
+        w.f64(self.score);
+        EnvState(w.finish())
+    }
+
+    fn restore(&mut self, state: &EnvState) {
+        let mut r = Reader::new(&state.0);
+        self.rng = Pcg32::from_state_and_inc(r.u64(), r.u64());
+        self.player = (r.i64(), r.i64());
+        let n = r.u32() as usize;
+        self.ghosts = (0..n).map(|_| (r.i64(), r.i64())).collect();
+        self.pellets = r.bytes().iter().map(|&b| b != 0).collect();
+        self.step = r.u32();
+        self.caught = r.u8() != 0;
+        self.score = r.f64();
+        debug_assert!(r.exhausted());
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed ^ 0xc4a5e);
+        self.player = (self.cfg.width / 2, self.cfg.height / 2);
+        self.ghosts = (0..self.cfg.num_ghosts)
+            .map(|i| {
+                // Corners, spread deterministically.
+                let corner = i % 4;
+                (
+                    if corner % 2 == 0 { 0 } else { self.cfg.width - 1 },
+                    if corner < 2 { 0 } else { self.cfg.height - 1 },
+                )
+            })
+            .collect();
+        let cells = (self.cfg.width * self.cfg.height) as usize;
+        self.pellets = (0..cells)
+            .map(|i| {
+                let pos = (i as i64 % self.cfg.width, i as i64 / self.cfg.width);
+                pos != self.player && self.rng.chance(self.cfg.pellet_density)
+            })
+            .collect();
+        self.step = 0;
+        self.caught = false;
+        self.score = 0.0;
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.is_terminal(), "step on terminal chase state");
+        assert!(action < 5, "chase action {action} out of range");
+        let (dx, dy) = DIRS[action];
+        self.player = self.clamp_pos(self.player.0 + dx, self.player.1 + dy);
+        let mut reward = 0.0;
+        let cell = self.cell(self.player.0, self.player.1);
+        if self.pellets[cell] {
+            self.pellets[cell] = false;
+            reward += self.cfg.pellet_reward;
+        }
+        // Ghost moves.
+        if self.cfg.ghost_period > 0 && self.step % self.cfg.ghost_period == 0 {
+            let player = self.player;
+            let smart = self.cfg.ghost_smart;
+            for gi in 0..self.ghosts.len() {
+                let (gx, gy) = self.ghosts[gi];
+                let (nx, ny) = if self.rng.chance(smart) {
+                    // Step along the larger axis toward the player.
+                    let ddx = (player.0 - gx).signum();
+                    let ddy = (player.1 - gy).signum();
+                    if (player.0 - gx).abs() >= (player.1 - gy).abs() {
+                        (gx + ddx, gy)
+                    } else {
+                        (gx, gy + ddy)
+                    }
+                } else {
+                    let (rx, ry) = DIRS[self.rng.below_usize(4)];
+                    (gx + rx, gy + ry)
+                };
+                self.ghosts[gi] = self.clamp_pos(nx, ny);
+            }
+        }
+        if self.ghosts.iter().any(|&g| g == self.player) {
+            self.caught = true;
+            reward += self.cfg.capture_penalty;
+        }
+        self.step += 1;
+        self.score += reward;
+        let done = self.is_terminal();
+        StepResult { reward, done }
+    }
+
+    fn legal_actions(&self) -> Vec<usize> {
+        (0..5).collect()
+    }
+
+    fn num_actions(&self) -> usize {
+        5
+    }
+
+    fn is_terminal(&self) -> bool {
+        self.caught || self.step >= self.cfg.horizon || self.pellets_left() == 0
+    }
+
+    fn action_heuristic(&self, action: usize) -> f64 {
+        if action >= 5 {
+            return 0.0;
+        }
+        let (dx, dy) = DIRS[action];
+        let (nx, ny) = self.clamp_pos(self.player.0 + dx, self.player.1 + dy);
+        // Prefer moves onto pellets / toward the nearest pellet, away from
+        // ghosts when close.
+        let mut score: f64 = 0.3;
+        if self.pellets[self.cell(nx, ny)] {
+            score += 0.5;
+        } else {
+            let here = self.nearest_pellet_dist_from(self.player.0, self.player.1);
+            let there = self.nearest_pellet_dist_from(nx, ny);
+            if there < here {
+                score += 0.25;
+            }
+        }
+        let ghost_d = self
+            .ghosts
+            .iter()
+            .map(|&(gx, gy)| (gx - nx).abs() + (gy - ny).abs())
+            .min()
+            .unwrap_or(i64::MAX);
+        if ghost_d <= 1 {
+            score -= 0.6;
+        } else if ghost_d == 2 {
+            score -= 0.2;
+        }
+        score.clamp(0.0, 1.0)
+    }
+
+    fn remaining_fraction(&self) -> f64 {
+        1.0 - self.step as f64 / self.cfg.horizon as f64
+    }
+
+    fn heuristic_value(&self) -> f64 {
+        if self.caught {
+            return -1.0;
+        }
+        let total = self.pellets.len() as f64 * self.cfg.pellet_density;
+        let eaten = total - self.pellets_left() as f64;
+        let danger = if self.nearest_ghost_dist() <= 2 { 0.4 } else { 0.0 };
+        ((eaten / total.max(1.0)) - danger).clamp(-1.0, 1.0)
+    }
+
+    fn summary_features(&self, out: &mut [f32]) {
+        if out.len() < 8 {
+            return;
+        }
+        out[0] = self.player.0 as f32 / self.cfg.width as f32;
+        out[1] = self.player.1 as f32 / self.cfg.height as f32;
+        out[2] = self.pellets_left() as f32 / self.pellets.len() as f32;
+        out[3] = (self.nearest_ghost_dist().min(20) as f32) / 20.0;
+        for (i, &(gx, gy)) in self.ghosts.iter().take(2).enumerate() {
+            out[4 + 2 * i] = gx as f32 / self.cfg.width as f32;
+            out[5 + 2 * i] = gy as f32 / self.cfg.height as f32;
+        }
+    }
+
+    fn clone_boxed(&self) -> Box<dyn Env> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &str {
+        self.cfg.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_player_center_no_pellet_under_player() {
+        let g = ChaseGame::new(ChaseConfig::alien(), 3);
+        let cell = g.cell(g.player.0, g.player.1);
+        assert!(!g.pellets[cell]);
+        assert!(!g.is_terminal());
+    }
+
+    #[test]
+    fn eating_pellet_rewards() {
+        let mut g = ChaseGame::new(ChaseConfig::mspacman(), 5);
+        // Find an adjacent pellet and step onto it.
+        let mut got = false;
+        for a in 0..4 {
+            let (dx, dy) = DIRS[a];
+            let (nx, ny) = g.clamp_pos(g.player.0 + dx, g.player.1 + dy);
+            if g.pellets[g.cell(nx, ny)] {
+                let r = g.step(a);
+                assert!(r.reward >= g.cfg.pellet_reward);
+                got = true;
+                break;
+            }
+        }
+        if !got {
+            // No adjacent pellet on this seed — at minimum stepping works.
+            g.step(4);
+        }
+    }
+
+    #[test]
+    fn capture_is_penalized_and_terminal() {
+        let mut g = ChaseGame::new(ChaseConfig::alien(), 1);
+        // Teleport a ghost next to the player via restore surgery:
+        g.ghosts[0] = (g.player.0, g.player.1 + 1);
+        g.cfg.ghost_smart = 1.0;
+        let r = g.step(4); // stay; smart ghost steps onto us
+        if g.caught {
+            assert!(r.reward <= g.cfg.capture_penalty + g.cfg.pellet_reward);
+            assert!(g.is_terminal());
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_replays_identically() {
+        let mut g = ChaseGame::new(ChaseConfig::qbert(), 9);
+        for _ in 0..5 {
+            g.step(g.legal_actions()[1]);
+        }
+        let snap = g.snapshot();
+        let mut h = ChaseGame::new(ChaseConfig::qbert(), 0);
+        h.restore(&snap);
+        for _ in 0..10 {
+            if g.is_terminal() {
+                break;
+            }
+            assert_eq!(g.step(2), h.step(2));
+        }
+    }
+
+    #[test]
+    fn horizon_bounds_episode() {
+        let mut cfg = ChaseConfig::alien();
+        cfg.horizon = 10;
+        cfg.num_ghosts = 0;
+        cfg.pellet_density = 1.0;
+        let mut g = ChaseGame::new(cfg, 2);
+        let mut n = 0;
+        while !g.is_terminal() {
+            g.step(4);
+            n += 1;
+            assert!(n <= 10);
+        }
+    }
+
+    #[test]
+    fn heuristic_avoids_ghost() {
+        let mut g = ChaseGame::new(ChaseConfig::alien(), 4);
+        g.ghosts = vec![(g.player.0 + 1, g.player.1)]; // right of player
+        let right = g.action_heuristic(3);
+        let left = g.action_heuristic(2);
+        assert!(left > right, "moving into a ghost must score lower");
+    }
+
+    #[test]
+    fn all_pellets_eaten_terminates() {
+        let mut cfg = ChaseConfig::alien();
+        cfg.num_ghosts = 0;
+        cfg.pellet_density = 0.02;
+        let mut g = ChaseGame::new(cfg, 8);
+        while !g.is_terminal() {
+            // Greedy walk toward the nearest pellet.
+            let acts = g.legal_actions();
+            let best = acts
+                .into_iter()
+                .max_by(|&a, &b| {
+                    g.action_heuristic(a)
+                        .partial_cmp(&g.action_heuristic(b))
+                        .unwrap()
+                })
+                .unwrap();
+            g.step(best);
+        }
+        assert!(g.pellets_left() == 0 || g.step >= g.cfg.horizon);
+    }
+}

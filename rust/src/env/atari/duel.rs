@@ -1,0 +1,355 @@
+//! Duel mechanic: trade blows with a scripted opponent (Boxing / Tennis /
+//! Robotank analogue).
+//!
+//! Both fighters stand at integer positions on a line. Actions: 0=advance
+//! 1=retreat 2=strike 3=guard. A strike lands iff in range and the
+//! opponent is not guarding; the scripted opponent mixes advancing,
+//! guarding and striking with config-dependent skill. Score is the hit
+//! differential — Boxing saturates near the cap, Tennis stays low and
+//! sparse, exactly the profiles in Table 1.
+
+use crate::env::codec::{Reader, Writer};
+use crate::env::{Env, EnvState, StepResult};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct DuelConfig {
+    pub name: &'static str,
+    pub arena: i64,
+    pub range: i64,
+    pub hit_reward: f64,
+    pub take_penalty: f64,
+    /// Probability the opponent guards when we are in range.
+    pub opp_guard: f64,
+    /// Probability the opponent strikes when in range (after guard roll).
+    pub opp_strike: f64,
+    /// Score cap: the episode ends when |differential| reaches it.
+    pub cap: f64,
+    pub horizon: u32,
+}
+
+impl DuelConfig {
+    pub fn boxing() -> Self {
+        DuelConfig {
+            name: "Boxing",
+            arena: 12,
+            range: 2,
+            hit_reward: 1.0,
+            take_penalty: -1.0,
+            opp_guard: 0.25,
+            opp_strike: 0.3,
+            cap: 100.0,
+            horizon: 400,
+        }
+    }
+
+    pub fn tennis() -> Self {
+        DuelConfig {
+            name: "Tennis",
+            arena: 16,
+            range: 1,
+            hit_reward: 1.0,
+            take_penalty: -1.0,
+            opp_guard: 0.55,
+            opp_strike: 0.5,
+            cap: 6.0,
+            horizon: 300,
+        }
+    }
+
+    pub fn robotank() -> Self {
+        DuelConfig {
+            name: "Robotank",
+            arena: 14,
+            range: 3,
+            hit_reward: 4.0,
+            take_penalty: -2.0,
+            opp_guard: 0.35,
+            opp_strike: 0.35,
+            cap: 120.0,
+            horizon: 450,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DuelGame {
+    cfg: DuelConfig,
+    rng: Pcg32,
+    me: i64,
+    opp: i64,
+    /// Whether each side guarded last tick (guards block incoming strikes
+    /// resolved this tick).
+    my_guard: bool,
+    opp_guard_up: bool,
+    step: u32,
+    score: f64,
+}
+
+impl DuelGame {
+    pub fn new(cfg: DuelConfig, seed: u64) -> Self {
+        let mut g = DuelGame {
+            cfg,
+            rng: Pcg32::new(seed),
+            me: 0,
+            opp: 0,
+            my_guard: false,
+            opp_guard_up: false,
+            step: 0,
+            score: 0.0,
+        };
+        g.reset(seed);
+        g
+    }
+
+    fn in_range(&self) -> bool {
+        (self.me - self.opp).abs() <= self.cfg.range
+    }
+}
+
+impl Env for DuelGame {
+    fn snapshot(&self) -> EnvState {
+        let mut w = Writer::new();
+        let (s, inc) = self.rng.state_and_inc();
+        w.u64(s);
+        w.u64(inc);
+        w.i64(self.me);
+        w.i64(self.opp);
+        w.u8(self.my_guard as u8);
+        w.u8(self.opp_guard_up as u8);
+        w.u32(self.step);
+        w.f64(self.score);
+        EnvState(w.finish())
+    }
+
+    fn restore(&mut self, state: &EnvState) {
+        let mut r = Reader::new(&state.0);
+        self.rng = Pcg32::from_state_and_inc(r.u64(), r.u64());
+        self.me = r.i64();
+        self.opp = r.i64();
+        self.my_guard = r.u8() != 0;
+        self.opp_guard_up = r.u8() != 0;
+        self.step = r.u32();
+        self.score = r.f64();
+        debug_assert!(r.exhausted());
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed ^ 0xd0e1);
+        self.me = 1;
+        self.opp = self.cfg.arena - 2;
+        self.my_guard = false;
+        self.opp_guard_up = false;
+        self.step = 0;
+        self.score = 0.0;
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.is_terminal(), "step on terminal duel state");
+        assert!(action < 4, "duel action {action} out of range");
+        let mut reward = 0.0;
+        // Opponent decides first (simultaneous resolution, scripted AI).
+        let opp_in_range = self.in_range();
+        let (opp_strikes, opp_guards, opp_move): (bool, bool, i64) = if opp_in_range {
+            if self.rng.chance(self.cfg.opp_guard) {
+                (false, true, 0)
+            } else if self.rng.chance(self.cfg.opp_strike) {
+                (true, false, 0)
+            } else {
+                (false, false, (self.me - self.opp).signum())
+            }
+        } else {
+            (false, false, (self.me - self.opp).signum())
+        };
+        // Apply my action.
+        let toward = (self.opp - self.me).signum();
+        let mut i_strike = false;
+        match action {
+            0 => self.me = (self.me + toward).clamp(0, self.cfg.arena - 1),
+            1 => self.me = (self.me - toward).clamp(0, self.cfg.arena - 1),
+            2 => i_strike = true,
+            _ => {}
+        }
+        self.my_guard = action == 3;
+        // Opponent move.
+        self.opp = (self.opp + opp_move).clamp(0, self.cfg.arena - 1);
+        if self.me == self.opp {
+            // Never share a cell: opponent steps back.
+            self.opp = (self.opp - toward).clamp(0, self.cfg.arena - 1);
+        }
+        let in_range = self.in_range();
+        // Resolve strikes.
+        if i_strike && in_range && !opp_guards {
+            reward += self.cfg.hit_reward;
+        }
+        if opp_strikes && in_range && !self.my_guard {
+            reward += self.cfg.take_penalty;
+        }
+        self.opp_guard_up = opp_guards;
+        self.step += 1;
+        self.score += reward;
+        StepResult { reward, done: self.is_terminal() }
+    }
+
+    fn legal_actions(&self) -> Vec<usize> {
+        vec![0, 1, 2, 3]
+    }
+
+    fn num_actions(&self) -> usize {
+        4
+    }
+
+    fn is_terminal(&self) -> bool {
+        self.step >= self.cfg.horizon || self.score.abs() >= self.cfg.cap
+    }
+
+    fn action_heuristic(&self, action: usize) -> f64 {
+        let in_range = self.in_range();
+        match action {
+            2 if in_range && !self.opp_guard_up => 0.9,
+            2 => 0.15,
+            0 if !in_range => 0.8,
+            0 => 0.3,
+            3 if in_range => 0.5,
+            3 => 0.15,
+            1 => 0.1,
+            _ => 0.0,
+        }
+    }
+
+    fn remaining_fraction(&self) -> f64 {
+        1.0 - self.step as f64 / self.cfg.horizon as f64
+    }
+
+    fn heuristic_value(&self) -> f64 {
+        (self.score / self.cfg.cap).clamp(-1.0, 1.0)
+    }
+
+    fn summary_features(&self, out: &mut [f32]) {
+        if out.len() < 5 {
+            return;
+        }
+        out[0] = self.me as f32 / self.cfg.arena as f32;
+        out[1] = self.opp as f32 / self.cfg.arena as f32;
+        out[2] = ((self.me - self.opp).abs() as f32) / self.cfg.arena as f32;
+        out[3] = self.opp_guard_up as u8 as f32;
+        out[4] = (self.score / self.cfg.cap) as f32;
+    }
+
+    fn clone_boxed(&self) -> Box<dyn Env> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &str {
+        self.cfg.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn greedy(g: &DuelGame) -> usize {
+        (0..4)
+            .max_by(|&a, &b| {
+                g.action_heuristic(a)
+                    .partial_cmp(&g.action_heuristic(b))
+                    .unwrap()
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn fighters_start_apart() {
+        let g = DuelGame::new(DuelConfig::boxing(), 1);
+        assert!(!g.in_range());
+        assert!(!g.is_terminal());
+    }
+
+    #[test]
+    fn advance_closes_distance() {
+        let mut g = DuelGame::new(DuelConfig::boxing(), 2);
+        let d0 = (g.me - g.opp).abs();
+        g.step(0);
+        let d1 = (g.me - g.opp).abs();
+        assert!(d1 <= d0, "advance + opp advance must not widen the gap");
+    }
+
+    #[test]
+    fn strike_out_of_range_misses() {
+        let mut g = DuelGame::new(DuelConfig::tennis(), 3);
+        assert!(!g.in_range());
+        let r = g.step(2);
+        assert!(r.reward <= 0.0, "out-of-range strike cannot score");
+    }
+
+    #[test]
+    fn greedy_play_outpoints_opponent() {
+        let mut wins = 0;
+        for seed in 0..10 {
+            let mut g = DuelGame::new(DuelConfig::boxing(), seed);
+            while !g.is_terminal() {
+                let a = greedy(&g);
+                g.step(a);
+            }
+            if g.score > 0.0 {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 7, "greedy should usually win Boxing: {wins}/10");
+    }
+
+    #[test]
+    fn tennis_is_hard_and_low_scoring() {
+        let mut total = 0.0;
+        for seed in 0..10 {
+            let mut g = DuelGame::new(DuelConfig::tennis(), seed);
+            while !g.is_terminal() {
+                g.step(greedy(&g));
+            }
+            total += g.score;
+            assert!(g.score.abs() <= g.cfg.cap);
+        }
+        // Tennis scores stay in single digits per episode by construction.
+        assert!(total.abs() <= 60.0);
+    }
+
+    #[test]
+    fn score_cap_terminates() {
+        let mut g = DuelGame::new(DuelConfig::boxing(), 4);
+        g.score = g.cfg.cap;
+        assert!(g.is_terminal());
+    }
+
+    #[test]
+    fn snapshot_restore_replay() {
+        let mut g = DuelGame::new(DuelConfig::robotank(), 5);
+        for _ in 0..9 {
+            g.step(0);
+        }
+        let snap = g.snapshot();
+        let mut h = DuelGame::new(DuelConfig::robotank(), 42);
+        h.restore(&snap);
+        for i in 0..30 {
+            if g.is_terminal() {
+                break;
+            }
+            assert_eq!(g.step(i % 4), h.step(i % 4));
+        }
+    }
+
+    #[test]
+    fn guard_blocks_damage() {
+        // With permanent guard, we can never lose points from strikes.
+        let mut g = DuelGame::new(DuelConfig::boxing(), 6);
+        let mut worst = 0.0f64;
+        for _ in 0..100 {
+            if g.is_terminal() {
+                break;
+            }
+            let r = g.step(3);
+            worst = worst.min(r.reward);
+        }
+        assert!(worst >= 0.0, "guarded player must not take hits");
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic Atari-like environment suite (Section 5.2 substitute).
+//!
+//! Six hand-written game mechanics parameterized into the paper's 15 named
+//! tasks — see DESIGN.md §3 for the substitution argument. All games honor
+//! the [`crate::env::Env`] contract: seeded determinism, bit-exact
+//! snapshot/restore, bounded horizons, contract-conforming features.
+
+pub mod chase;
+pub mod crossing;
+pub mod duel;
+pub mod paddle;
+pub mod racer;
+pub mod shooter;
+pub mod suite;
+
+pub use suite::{all, make, FIG5_GAMES, GAMES, TABLE5_GAMES};

@@ -1,0 +1,378 @@
+//! Paddle mechanic: ball, paddle, brick wall (Breakout / NameThisGame
+//! analogue).
+//!
+//! Integer physics on a W×H field: the ball moves one cell diagonally per
+//! step, reflecting off walls, bricks and the paddle. Actions: 0=left
+//! 1=right 2=stay. Reward per brick; losing all lives ends the episode.
+
+use crate::env::codec::{Reader, Writer};
+use crate::env::{Env, EnvState, StepResult};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct PaddleConfig {
+    pub name: &'static str,
+    pub width: i64,
+    pub height: i64,
+    pub brick_rows: i64,
+    pub paddle_half: i64,
+    pub brick_reward: f64,
+    pub lives: u32,
+    pub horizon: u32,
+}
+
+impl PaddleConfig {
+    pub fn breakout() -> Self {
+        PaddleConfig {
+            name: "Breakout",
+            width: 12,
+            height: 14,
+            brick_rows: 4,
+            paddle_half: 1,
+            brick_reward: 7.0,
+            lives: 3,
+            horizon: 400,
+        }
+    }
+
+    pub fn namethisgame() -> Self {
+        PaddleConfig {
+            name: "NameThisGame",
+            width: 16,
+            height: 12,
+            brick_rows: 3,
+            paddle_half: 2,
+            brick_reward: 12.0,
+            lives: 4,
+            horizon: 500,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PaddleGame {
+    cfg: PaddleConfig,
+    rng: Pcg32,
+    bricks: Vec<bool>, // brick_rows * width (row 0 = top)
+    ball: (i64, i64),
+    vel: (i64, i64),
+    paddle_x: i64, // center
+    lives: u32,
+    step: u32,
+    score: f64,
+}
+
+impl PaddleGame {
+    pub fn new(cfg: PaddleConfig, seed: u64) -> Self {
+        let mut g = PaddleGame {
+            cfg,
+            rng: Pcg32::new(seed),
+            bricks: Vec::new(),
+            ball: (0, 0),
+            vel: (1, 1),
+            paddle_x: 0,
+            lives: 0,
+            step: 0,
+            score: 0.0,
+        };
+        g.reset(seed);
+        g
+    }
+
+    fn bricks_left(&self) -> usize {
+        self.bricks.iter().filter(|&&b| b).count()
+    }
+
+    fn serve(&mut self) {
+        self.ball = (self.rng.below(self.cfg.width as u32) as i64, self.cfg.height / 2);
+        self.vel = (if self.rng.chance(0.5) { 1 } else { -1 }, 1);
+    }
+
+    /// Advance the ball one cell with reflections; returns bricks broken
+    /// and whether the ball dropped past the paddle.
+    fn advance_ball(&mut self) -> (u32, bool) {
+        let mut broken = 0;
+        let (mut x, mut y) = self.ball;
+        let (mut vx, mut vy) = self.vel;
+        // Horizontal walls.
+        if x + vx < 0 || x + vx >= self.cfg.width {
+            vx = -vx;
+        }
+        // Ceiling.
+        if y + vy < 0 {
+            vy = -vy;
+        }
+        let nx = x + vx;
+        let mut ny = y + vy;
+        // Brick collision (bricks occupy rows 0..brick_rows).
+        if ny < self.cfg.brick_rows && ny >= 0 {
+            let bi = (ny * self.cfg.width + nx) as usize;
+            if self.bricks[bi] {
+                self.bricks[bi] = false;
+                broken += 1;
+                vy = -vy;
+                ny = y + vy;
+            }
+        }
+        // Paddle plane is the bottom row.
+        let mut dropped = false;
+        if ny >= self.cfg.height - 1 {
+            if (nx - self.paddle_x).abs() <= self.cfg.paddle_half {
+                vy = -1;
+                // English: hitting with the paddle edge deflects.
+                if nx < self.paddle_x {
+                    vx = -1;
+                } else if nx > self.paddle_x {
+                    vx = 1;
+                }
+                ny = self.cfg.height - 2;
+            } else {
+                dropped = true;
+            }
+        }
+        x = nx.clamp(0, self.cfg.width - 1);
+        y = ny.clamp(0, self.cfg.height - 1);
+        self.ball = (x, y);
+        self.vel = (vx, vy);
+        (broken, dropped)
+    }
+}
+
+impl Env for PaddleGame {
+    fn snapshot(&self) -> EnvState {
+        let mut w = Writer::new();
+        let (s, inc) = self.rng.state_and_inc();
+        w.u64(s);
+        w.u64(inc);
+        let bytes: Vec<u8> = self.bricks.iter().map(|&b| b as u8).collect();
+        w.bytes(&bytes);
+        w.i64(self.ball.0);
+        w.i64(self.ball.1);
+        w.i64(self.vel.0);
+        w.i64(self.vel.1);
+        w.i64(self.paddle_x);
+        w.u32(self.lives);
+        w.u32(self.step);
+        w.f64(self.score);
+        EnvState(w.finish())
+    }
+
+    fn restore(&mut self, state: &EnvState) {
+        let mut r = Reader::new(&state.0);
+        self.rng = Pcg32::from_state_and_inc(r.u64(), r.u64());
+        self.bricks = r.bytes().iter().map(|&b| b != 0).collect();
+        self.ball = (r.i64(), r.i64());
+        self.vel = (r.i64(), r.i64());
+        self.paddle_x = r.i64();
+        self.lives = r.u32();
+        self.step = r.u32();
+        self.score = r.f64();
+        debug_assert!(r.exhausted());
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.rng = Pcg32::new(seed ^ 0xba11);
+        self.bricks = vec![true; (self.cfg.brick_rows * self.cfg.width) as usize];
+        self.paddle_x = self.cfg.width / 2;
+        self.lives = self.cfg.lives;
+        self.step = 0;
+        self.score = 0.0;
+        self.serve();
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.is_terminal(), "step on terminal paddle state");
+        assert!(action < 3, "paddle action {action} out of range");
+        match action {
+            0 => self.paddle_x = (self.paddle_x - 1).max(self.cfg.paddle_half),
+            1 => self.paddle_x = (self.paddle_x + 1).min(self.cfg.width - 1 - self.cfg.paddle_half),
+            _ => {}
+        }
+        let (broken, dropped) = self.advance_ball();
+        let mut reward = broken as f64 * self.cfg.brick_reward;
+        if dropped {
+            self.lives -= 1;
+            reward -= 5.0;
+            if self.lives > 0 {
+                self.serve();
+            }
+        }
+        self.step += 1;
+        self.score += reward;
+        StepResult { reward, done: self.is_terminal() }
+    }
+
+    fn legal_actions(&self) -> Vec<usize> {
+        vec![0, 1, 2]
+    }
+
+    fn num_actions(&self) -> usize {
+        3
+    }
+
+    fn is_terminal(&self) -> bool {
+        self.lives == 0 || self.step >= self.cfg.horizon || self.bricks_left() == 0
+    }
+
+    fn action_heuristic(&self, action: usize) -> f64 {
+        if action >= 3 {
+            return 0.0;
+        }
+        // Track the ball's x: prefer the move that closes the gap by the
+        // time the ball reaches the paddle plane.
+        let target = self.ball.0 + self.vel.0 * (self.cfg.height - 1 - self.ball.1).max(0);
+        let target = target.clamp(0, self.cfg.width - 1);
+        let next_x = match action {
+            0 => self.paddle_x - 1,
+            1 => self.paddle_x + 1,
+            _ => self.paddle_x,
+        };
+        let gap_now = (self.paddle_x - target).abs();
+        let gap_next = (next_x - target).abs();
+        if gap_next < gap_now {
+            0.9
+        } else if gap_next == gap_now {
+            0.5
+        } else {
+            0.1
+        }
+    }
+
+    fn remaining_fraction(&self) -> f64 {
+        1.0 - self.step as f64 / self.cfg.horizon as f64
+    }
+
+    fn heuristic_value(&self) -> f64 {
+        let total = (self.cfg.brick_rows * self.cfg.width) as f64;
+        let cleared = total - self.bricks_left() as f64;
+        let lives_frac = self.lives as f64 / self.cfg.lives as f64;
+        (cleared / total * 0.7 + lives_frac * 0.3 - 0.3).clamp(-1.0, 1.0)
+    }
+
+    fn summary_features(&self, out: &mut [f32]) {
+        if out.len() < 7 {
+            return;
+        }
+        out[0] = self.ball.0 as f32 / self.cfg.width as f32;
+        out[1] = self.ball.1 as f32 / self.cfg.height as f32;
+        out[2] = (self.vel.0 as f32 + 1.0) / 2.0;
+        out[3] = (self.vel.1 as f32 + 1.0) / 2.0;
+        out[4] = self.paddle_x as f32 / self.cfg.width as f32;
+        out[5] = self.lives as f32 / self.cfg.lives as f32;
+        out[6] = self.bricks_left() as f32 / (self.cfg.brick_rows * self.cfg.width) as f32;
+    }
+
+    fn clone_boxed(&self) -> Box<dyn Env> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &str {
+        self.cfg.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_full_wall_and_lives() {
+        let g = PaddleGame::new(PaddleConfig::breakout(), 1);
+        assert_eq!(g.bricks_left() as i64, g.cfg.brick_rows * g.cfg.width);
+        assert_eq!(g.lives, g.cfg.lives);
+        assert!(!g.is_terminal());
+    }
+
+    #[test]
+    fn paddle_stays_in_bounds() {
+        let mut g = PaddleGame::new(PaddleConfig::breakout(), 2);
+        for _ in 0..30 {
+            if g.is_terminal() {
+                break;
+            }
+            g.step(0);
+            assert!(g.paddle_x - g.cfg.paddle_half >= 0);
+        }
+        let mut g = PaddleGame::new(PaddleConfig::breakout(), 2);
+        for _ in 0..30 {
+            if g.is_terminal() {
+                break;
+            }
+            g.step(1);
+            assert!(g.paddle_x + g.cfg.paddle_half < g.cfg.width);
+        }
+    }
+
+    #[test]
+    fn episode_terminates() {
+        let mut g = PaddleGame::new(PaddleConfig::breakout(), 3);
+        let mut n = 0;
+        while !g.is_terminal() {
+            g.step(2); // never move: will eventually drop all lives
+            n += 1;
+            assert!(n <= g.cfg.horizon);
+        }
+    }
+
+    #[test]
+    fn ball_stays_in_field() {
+        let mut g = PaddleGame::new(PaddleConfig::namethisgame(), 4);
+        for i in 0..200 {
+            if g.is_terminal() {
+                break;
+            }
+            g.step(i % 3);
+            assert!((0..g.cfg.width).contains(&g.ball.0), "x {:?}", g.ball);
+            assert!((0..g.cfg.height).contains(&g.ball.1), "y {:?}", g.ball);
+        }
+    }
+
+    #[test]
+    fn tracking_heuristic_beats_static_play() {
+        let run = |track: bool, seed| {
+            let mut g = PaddleGame::new(PaddleConfig::breakout(), seed);
+            while !g.is_terminal() {
+                let a = if track {
+                    (0..3)
+                        .max_by(|&a, &b| {
+                            g.action_heuristic(a)
+                                .partial_cmp(&g.action_heuristic(b))
+                                .unwrap()
+                        })
+                        .unwrap()
+                } else {
+                    2
+                };
+                g.step(a);
+            }
+            g.score
+        };
+        let tracked: f64 = (0..8).map(|s| run(true, s)).sum();
+        let stay: f64 = (0..8).map(|s| run(false, s)).sum();
+        assert!(tracked > stay, "tracking {tracked} vs static {stay}");
+    }
+
+    #[test]
+    fn snapshot_restore_replay() {
+        let mut g = PaddleGame::new(PaddleConfig::breakout(), 5);
+        for _ in 0..7 {
+            g.step(1);
+        }
+        let snap = g.snapshot();
+        let mut h = PaddleGame::new(PaddleConfig::breakout(), 99);
+        h.restore(&snap);
+        for i in 0..20 {
+            if g.is_terminal() {
+                break;
+            }
+            assert_eq!(g.step(i % 3), h.step(i % 3));
+        }
+    }
+
+    #[test]
+    fn breaking_all_bricks_ends_episode() {
+        let mut g = PaddleGame::new(PaddleConfig::breakout(), 6);
+        g.bricks.iter_mut().for_each(|b| *b = false);
+        assert!(g.is_terminal());
+    }
+}

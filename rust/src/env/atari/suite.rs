@@ -1,0 +1,189 @@
+//! The 15-game synthetic Atari suite (Table 1's environment column).
+//!
+//! Each named game instantiates one of the six mechanics with parameters
+//! chosen to echo the corresponding Atari title's character: horizon,
+//! reward scale/sparsity, difficulty and variance. The *names* match the
+//! paper's tables so every experiment harness prints directly comparable
+//! rows.
+
+use crate::env::atari::chase::{ChaseConfig, ChaseGame};
+use crate::env::atari::crossing::{CrossingConfig, CrossingGame};
+use crate::env::atari::duel::{DuelConfig, DuelGame};
+use crate::env::atari::paddle::{PaddleConfig, PaddleGame};
+use crate::env::atari::racer::{RacerConfig, RacerGame};
+use crate::env::atari::shooter::{ShooterConfig, ShooterGame};
+use crate::env::Env;
+
+/// The 15 game names, in the paper's Table-1 order.
+pub const GAMES: [&str; 15] = [
+    "Alien",
+    "Boxing",
+    "Breakout",
+    "Centipede",
+    "Freeway",
+    "Gravitar",
+    "MsPacman",
+    "NameThisGame",
+    "RoadRunner",
+    "Robotank",
+    "Qbert",
+    "SpaceInvaders",
+    "Tennis",
+    "TimePilot",
+    "Zaxxon",
+];
+
+/// The 4 games used in Fig. 5's worker sweep.
+pub const FIG5_GAMES: [&str; 4] = ["Alien", "Boxing", "Breakout", "Freeway"];
+
+/// The 12 games used in Table 5's TreeP-variant comparison.
+pub const TABLE5_GAMES: [&str; 12] = [
+    "Alien",
+    "Boxing",
+    "Breakout",
+    "Freeway",
+    "Gravitar",
+    "MsPacman",
+    "RoadRunner",
+    "Qbert",
+    "SpaceInvaders",
+    "Tennis",
+    "TimePilot",
+    "Zaxxon",
+];
+
+/// Construct a game by its Table-1 name.
+pub fn make(name: &str, seed: u64) -> Box<dyn Env> {
+    match name {
+        "Alien" => Box::new(ChaseGame::new(ChaseConfig::alien(), seed)),
+        "MsPacman" => Box::new(ChaseGame::new(ChaseConfig::mspacman(), seed)),
+        "Qbert" => Box::new(ChaseGame::new(ChaseConfig::qbert(), seed)),
+        "Breakout" => Box::new(PaddleGame::new(PaddleConfig::breakout(), seed)),
+        "NameThisGame" => Box::new(PaddleGame::new(PaddleConfig::namethisgame(), seed)),
+        "SpaceInvaders" => Box::new(ShooterGame::new(ShooterConfig::space_invaders(), seed)),
+        "Centipede" => Box::new(ShooterGame::new(ShooterConfig::centipede(), seed)),
+        "TimePilot" => Box::new(ShooterGame::new(ShooterConfig::time_pilot(), seed)),
+        "Zaxxon" => Box::new(ShooterGame::new(ShooterConfig::zaxxon(), seed)),
+        "Freeway" => Box::new(CrossingGame::new(CrossingConfig::freeway(), seed)),
+        "Gravitar" => Box::new(CrossingGame::new(CrossingConfig::gravitar(), seed)),
+        "RoadRunner" => Box::new(RacerGame::new(RacerConfig::road_runner(), seed)),
+        "Boxing" => Box::new(DuelGame::new(DuelConfig::boxing(), seed)),
+        "Tennis" => Box::new(DuelGame::new(DuelConfig::tennis(), seed)),
+        "Robotank" => Box::new(DuelGame::new(DuelConfig::robotank(), seed)),
+        other => panic!("unknown game {other:?}; see suite::GAMES"),
+    }
+}
+
+/// All 15 games, freshly constructed with `seed`.
+pub fn all(seed: u64) -> Vec<Box<dyn Env>> {
+    GAMES.iter().map(|name| make(name, seed)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{FEATURE_DIM, MAX_ACTIONS};
+
+    #[test]
+    fn all_fifteen_construct_and_are_playable() {
+        for name in GAMES {
+            let mut env = make(name, 1);
+            assert_eq!(env.name(), name);
+            assert!(!env.is_terminal(), "{name} starts terminal");
+            let acts = env.legal_actions();
+            assert!(!acts.is_empty(), "{name} has no legal actions");
+            assert!(env.num_actions() <= MAX_ACTIONS);
+            let r = env.step(acts[0]);
+            assert!(r.reward.is_finite());
+        }
+    }
+
+    #[test]
+    fn features_conform_to_contract_for_every_game() {
+        use crate::env::{FEAT_FRAC_INDEX, FEAT_MASK_OFFSET, FEAT_VALUE_INDEX};
+        for name in GAMES {
+            let env = make(name, 3);
+            let mut f = vec![0f32; FEATURE_DIM];
+            env.features(&mut f);
+            let legal = env.legal_actions();
+            for a in 0..MAX_ACTIONS {
+                let is_legal = legal.contains(&a);
+                assert_eq!(
+                    f[FEAT_MASK_OFFSET + a] > 0.5,
+                    is_legal,
+                    "{name}: mask mismatch at {a}"
+                );
+            }
+            assert!((0.0..=1.0).contains(&f[FEAT_FRAC_INDEX]), "{name}");
+            assert!((-1.0..=1.0).contains(&f[FEAT_VALUE_INDEX]), "{name}");
+        }
+    }
+
+    #[test]
+    fn snapshots_replay_for_every_game() {
+        for name in GAMES {
+            let mut env = make(name, 7);
+            // Advance a few steps.
+            for _ in 0..4 {
+                if env.is_terminal() {
+                    break;
+                }
+                let a = env.legal_actions()[0];
+                env.step(a);
+            }
+            let snap = env.snapshot();
+            let mut copy = make(name, 999);
+            copy.restore(&snap);
+            for _ in 0..6 {
+                if env.is_terminal() {
+                    break;
+                }
+                let a = env.legal_actions()[0];
+                assert_eq!(env.step(a), copy.step(a), "{name} snapshot replay");
+            }
+        }
+    }
+
+    #[test]
+    fn episodes_terminate_within_bounded_steps() {
+        for name in GAMES {
+            let mut env = make(name, 11);
+            let mut n = 0u32;
+            while !env.is_terminal() {
+                let acts = env.legal_actions();
+                env.step(acts[n as usize % acts.len()]);
+                n += 1;
+                assert!(n < 3000, "{name} failed to terminate");
+            }
+        }
+    }
+
+    #[test]
+    fn clone_boxed_is_independent() {
+        for name in GAMES {
+            let env = make(name, 13);
+            let mut a = env.clone_boxed();
+            let mut b = env.clone_boxed();
+            let act = a.legal_actions()[0];
+            let ra = a.step(act);
+            let rb = b.step(act);
+            assert_eq!(ra, rb, "{name}: clones must evolve identically");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown game")]
+    fn unknown_name_panics() {
+        make("Pong", 0);
+    }
+
+    #[test]
+    fn subsets_are_subsets() {
+        for g in FIG5_GAMES {
+            assert!(GAMES.contains(&g));
+        }
+        for g in TABLE5_GAMES {
+            assert!(GAMES.contains(&g));
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! GARNET-style random MDPs: tiny, fully-specified environments used by
+//! property tests to exercise search-algorithm invariants on arbitrary
+//! transition structures (Generated Average Reward Non-stationary
+//! Environment Testbench; Archibald et al., 1995).
+//!
+//! The MDP is drawn once from a seed: `n_states` states, `n_actions`
+//! actions, each (s, a) pair transitioning deterministically to a random
+//! state with a random reward in [0, 1]; a configurable fraction of states
+//! is terminal. Small enough that exact value iteration is feasible, which
+//! the tests use as ground truth for search quality.
+
+use crate::env::codec::{Reader, Writer};
+use crate::env::{Env, EnvState, StepResult};
+use crate::util::rng::Pcg32;
+
+/// A randomly generated deterministic MDP.
+#[derive(Debug, Clone)]
+pub struct Garnet {
+    pub n_states: usize,
+    n_actions: usize,
+    /// next[s * n_actions + a]
+    next: Vec<usize>,
+    /// reward[s * n_actions + a]
+    reward: Vec<f64>,
+    terminal: Vec<bool>,
+    horizon: u32,
+    state: usize,
+    step: u32,
+}
+
+impl Garnet {
+    /// Draw an MDP from `seed`. `p_terminal` states are absorbing.
+    pub fn new(n_states: usize, n_actions: usize, horizon: u32, p_terminal: f64, seed: u64) -> Self {
+        assert!(n_states >= 2 && n_actions >= 1);
+        let mut rng = Pcg32::new(seed ^ 0x6a27);
+        let next: Vec<usize> = (0..n_states * n_actions)
+            .map(|_| rng.below_usize(n_states))
+            .collect();
+        let reward: Vec<f64> = (0..n_states * n_actions).map(|_| rng.next_f64()).collect();
+        let mut terminal: Vec<bool> = (0..n_states).map(|_| rng.chance(p_terminal)).collect();
+        terminal[0] = false; // the start state is never terminal
+        Garnet {
+            n_states,
+            n_actions,
+            next,
+            reward,
+            terminal,
+            horizon,
+            state: 0,
+            step: 0,
+        }
+    }
+
+    pub fn current_state(&self) -> usize {
+        self.state
+    }
+
+    /// Exact Q*(current state, action) with `depth` steps to go —
+    /// ground truth for "did the search pick a near-best arm" tests.
+    pub fn q_star(&self, action: usize, depth: u32) -> f64 {
+        let i = self.state * self.n_actions + action;
+        self.reward[i] + self.optimal_value(self.next[i], depth.saturating_sub(1))
+    }
+
+    /// Exact optimal value of `state` with `depth` steps to go (finite-
+    /// horizon value iteration) — ground truth for search-quality tests.
+    pub fn optimal_value(&self, state: usize, depth: u32) -> f64 {
+        if depth == 0 || self.terminal[state] {
+            return 0.0;
+        }
+        (0..self.n_actions)
+            .map(|a| {
+                let i = state * self.n_actions + a;
+                self.reward[i] + self.optimal_value(self.next[i], depth - 1)
+            })
+            .fold(f64::MIN, f64::max)
+    }
+}
+
+impl Env for Garnet {
+    fn snapshot(&self) -> EnvState {
+        let mut w = Writer::new();
+        w.u32(self.state as u32);
+        w.u32(self.step);
+        EnvState(w.finish())
+    }
+
+    fn restore(&mut self, state: &EnvState) {
+        let mut r = Reader::new(&state.0);
+        self.state = r.u32() as usize;
+        self.step = r.u32();
+        debug_assert!(r.exhausted());
+    }
+
+    fn reset(&mut self, _seed: u64) {
+        // The MDP itself is fixed at construction; reset returns to s0.
+        self.state = 0;
+        self.step = 0;
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        assert!(!self.is_terminal(), "step on terminal garnet state");
+        assert!(action < self.n_actions, "garnet action out of range");
+        let i = self.state * self.n_actions + action;
+        let reward = self.reward[i];
+        self.state = self.next[i];
+        self.step += 1;
+        StepResult { reward, done: self.is_terminal() }
+    }
+
+    fn legal_actions(&self) -> Vec<usize> {
+        (0..self.n_actions).collect()
+    }
+
+    fn num_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    fn is_terminal(&self) -> bool {
+        self.terminal[self.state] || self.step >= self.horizon
+    }
+
+    fn action_heuristic(&self, action: usize) -> f64 {
+        // One-step greedy signal: the immediate reward.
+        if action < self.n_actions {
+            self.reward[self.state * self.n_actions + action]
+        } else {
+            0.0
+        }
+    }
+
+    fn remaining_fraction(&self) -> f64 {
+        1.0 - self.step as f64 / self.horizon as f64
+    }
+
+    fn heuristic_value(&self) -> f64 {
+        // Average available reward, roughly centered.
+        let base = self.state * self.n_actions;
+        let avg: f64 = (0..self.n_actions)
+            .map(|a| self.reward[base + a])
+            .sum::<f64>()
+            / self.n_actions as f64;
+        (avg * 2.0 - 1.0).clamp(-1.0, 1.0)
+    }
+
+    fn clone_boxed(&self) -> Box<dyn Env> {
+        Box::new(self.clone())
+    }
+
+    fn name(&self) -> &str {
+        "garnet"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_deterministic() {
+        let a = Garnet::new(10, 3, 20, 0.1, 5);
+        let b = Garnet::new(10, 3, 20, 0.1, 5);
+        assert_eq!(a.next, b.next);
+        assert_eq!(a.reward, b.reward);
+    }
+
+    #[test]
+    fn start_state_playable() {
+        let g = Garnet::new(8, 2, 10, 0.5, 1);
+        assert!(!g.is_terminal());
+        assert_eq!(g.legal_actions(), vec![0, 1]);
+    }
+
+    #[test]
+    fn optimal_value_monotone_in_depth() {
+        let g = Garnet::new(12, 3, 20, 0.0, 7);
+        // Rewards are >= 0, so deeper horizons cannot decrease the optimum.
+        let v1 = g.optimal_value(0, 1);
+        let v3 = g.optimal_value(0, 3);
+        let v6 = g.optimal_value(0, 6);
+        assert!(v3 >= v1 - 1e-12);
+        assert!(v6 >= v3 - 1e-12);
+    }
+
+    #[test]
+    fn greedy_play_bounded_by_optimal() {
+        let mut g = Garnet::new(10, 3, 8, 0.0, 3);
+        let opt = g.optimal_value(0, 8);
+        let mut total = 0.0;
+        while !g.is_terminal() {
+            // one-step greedy
+            let a = (0..3)
+                .max_by(|&x, &y| {
+                    g.action_heuristic(x)
+                        .partial_cmp(&g.action_heuristic(y))
+                        .unwrap()
+                })
+                .unwrap();
+            total += g.step(a).reward;
+        }
+        assert!(total <= opt + 1e-9, "greedy {total} cannot beat optimal {opt}");
+    }
+
+    #[test]
+    fn snapshot_restore() {
+        let mut g = Garnet::new(10, 3, 20, 0.2, 9);
+        g.step(1);
+        g.step(2);
+        let snap = g.snapshot();
+        let mut h = g.clone();
+        h.step(0);
+        h.restore(&snap);
+        assert_eq!(h.current_state(), g.current_state());
+    }
+
+    #[test]
+    fn horizon_terminates() {
+        let mut g = Garnet::new(5, 2, 6, 0.0, 11);
+        let mut n = 0;
+        while !g.is_terminal() {
+            g.step(0);
+            n += 1;
+        }
+        assert!(n <= 6);
+    }
+}

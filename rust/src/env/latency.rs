@@ -1,0 +1,164 @@
+//! Latency-simulated emulator wrapper (see DESIGN.md §3).
+//!
+//! The paper's expansion/simulation steps are slow because every rollout
+//! step runs the game emulator; its testbed parallelized that across 16+
+//! cores. This container exposes one core, so [`SlowEnv`] reintroduces the
+//! emulator cost as *wall-clock latency* (`thread::sleep` per step), which
+//! overlaps across worker threads exactly the way per-core emulator work
+//! overlapped in the paper. All speedup experiments (Fig. 4, Table 3,
+//! Fig. 5's time axis, Fig. 2) run on `SlowEnv`-wrapped environments;
+//! quality experiments use the raw fast envs.
+
+use std::time::Duration;
+
+use crate::env::{Env, EnvState, StepResult};
+
+/// Wraps an environment, adding fixed per-`step` latency.
+pub struct SlowEnv {
+    inner: Box<dyn Env>,
+    delay: Duration,
+}
+
+impl SlowEnv {
+    pub fn new(inner: Box<dyn Env>, delay: Duration) -> SlowEnv {
+        SlowEnv { inner, delay }
+    }
+
+    /// The paper's per-step emulator cost, scaled for bench runtimes.
+    pub fn default_delay() -> Duration {
+        Duration::from_micros(150)
+    }
+}
+
+impl Env for SlowEnv {
+    fn snapshot(&self) -> EnvState {
+        self.inner.snapshot()
+    }
+
+    fn restore(&mut self, state: &EnvState) {
+        self.inner.restore(state)
+    }
+
+    fn reset(&mut self, seed: u64) {
+        self.inner.reset(seed)
+    }
+
+    fn step(&mut self, action: usize) -> StepResult {
+        // The emulator latency: dominated by wall time, not CPU, exactly
+        // like a reserved-core emulator from the master's point of view.
+        std::thread::sleep(self.delay);
+        self.inner.step(action)
+    }
+
+    fn legal_actions(&self) -> Vec<usize> {
+        self.inner.legal_actions()
+    }
+
+    fn num_actions(&self) -> usize {
+        self.inner.num_actions()
+    }
+
+    fn is_terminal(&self) -> bool {
+        self.inner.is_terminal()
+    }
+
+    fn features(&self, out: &mut [f32]) {
+        self.inner.features(out)
+    }
+
+    fn action_heuristic(&self, action: usize) -> f64 {
+        self.inner.action_heuristic(action)
+    }
+
+    fn remaining_fraction(&self) -> f64 {
+        self.inner.remaining_fraction()
+    }
+
+    fn heuristic_value(&self) -> f64 {
+        self.inner.heuristic_value()
+    }
+
+    fn summary_features(&self, out: &mut [f32]) {
+        self.inner.summary_features(out)
+    }
+
+    fn clone_boxed(&self) -> Box<dyn Env> {
+        Box::new(SlowEnv { inner: self.inner.clone_boxed(), delay: self.delay })
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use std::time::Instant;
+
+    fn slow(delay_us: u64) -> SlowEnv {
+        SlowEnv::new(
+            Box::new(Garnet::new(10, 3, 100, 0.0, 1)),
+            Duration::from_micros(delay_us),
+        )
+    }
+
+    #[test]
+    fn behaves_identically_to_inner() {
+        let mut fast = Garnet::new(10, 3, 100, 0.0, 1);
+        let mut s = slow(0);
+        for i in 0..20 {
+            let a = i % 3;
+            assert_eq!(fast.step(a), s.step(a));
+            assert_eq!(fast.is_terminal(), s.is_terminal());
+        }
+        assert_eq!(fast.snapshot(), s.snapshot());
+    }
+
+    #[test]
+    fn step_incurs_latency() {
+        let mut s = slow(2000);
+        let t = Instant::now();
+        for _ in 0..5 {
+            s.step(0);
+        }
+        assert!(t.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn sleeping_steps_overlap_across_threads() {
+        // The core property the speedup experiments rely on: two threads
+        // sleeping concurrently take ~1x, not 2x, wall time — even on a
+        // single CPU core.
+        let run = |threads: usize| {
+            let t = Instant::now();
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| {
+                        let mut e = slow(1500);
+                        for _ in 0..10 {
+                            e.step(0);
+                        }
+                    });
+                }
+            });
+            t.elapsed()
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(
+            four < one * 2,
+            "4 threads {four:?} should overlap (1 thread {one:?})"
+        );
+    }
+
+    #[test]
+    fn clone_preserves_delay() {
+        let s = slow(2000);
+        let mut c = s.clone_boxed();
+        let t = Instant::now();
+        c.step(0);
+        assert!(t.elapsed() >= Duration::from_micros(1800));
+    }
+}

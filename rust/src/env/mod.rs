@@ -1,0 +1,239 @@
+//! Environment substrate: the MDP interface every search algorithm runs on.
+//!
+//! The paper's MCTS interacts with an *environment emulator* whose states
+//! can be cloned, stored in the master's centralized game-state buffer and
+//! shipped to expansion / simulation workers. [`Env`] captures exactly that
+//! contract: deterministic-given-state transitions (footnote 2 of the
+//! paper), clone-able snapshots, and a fixed-width feature encoding shared
+//! with the L1/L2 network (see `python/compile/model.py`).
+//!
+//! Concrete environments:
+//! * [`tapgame`] — the "Joy City" tap-elimination game (Appendix C.1);
+//! * [`atari`] — 15 synthetic Atari-like tasks (Section 5.2 substitute);
+//! * [`garnet`] — random MDPs for property tests.
+
+pub mod atari;
+pub mod garnet;
+pub mod latency;
+pub mod tapgame;
+
+pub use latency::SlowEnv;
+
+/// Feature-vector contract (keep in sync with python/compile/model.py).
+pub const FEATURE_DIM: usize = 128;
+/// Maximum action-space size across environments.
+pub const MAX_ACTIONS: usize = 16;
+/// f[0..A): per-action heuristic scores; f[A..2A): legality mask.
+pub const FEAT_MASK_OFFSET: usize = MAX_ACTIONS;
+/// f[2A]: remaining-step fraction.
+pub const FEAT_FRAC_INDEX: usize = 2 * MAX_ACTIONS;
+/// f[2A+1]: heuristic state-value estimate in [-1, 1].
+pub const FEAT_VALUE_INDEX: usize = 2 * MAX_ACTIONS + 1;
+/// f[2A+2..): env-specific summary features.
+pub const FEAT_SUMMARY_OFFSET: usize = 2 * MAX_ACTIONS + 2;
+
+/// Result of one environment step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepResult {
+    pub reward: f64,
+    pub done: bool,
+}
+
+/// A clonable, seedable MDP emulator.
+///
+/// Implementations must be `Send + Sync` (boxed emulators travel to
+/// worker threads; shared references cross scoped-thread boundaries) and
+/// deterministic as a function of (snapshot, action, internal rng state):
+/// restoring a snapshot and replaying the same actions must reproduce the
+/// same trajectory bit-for-bit.
+pub trait Env: Send + Sync {
+    /// Opaque snapshot of the full state (including rng state).
+    fn snapshot(&self) -> EnvState;
+
+    /// Restore a snapshot previously produced by `snapshot`.
+    fn restore(&mut self, state: &EnvState);
+
+    /// Reset to the initial state for `seed`.
+    fn reset(&mut self, seed: u64);
+
+    /// Apply `action`; panics if called on a terminal state or with an
+    /// illegal action (callers must consult [`Env::legal_actions`]).
+    fn step(&mut self, action: usize) -> StepResult;
+
+    /// Legal actions at the current state (indices < [`Env::num_actions`]).
+    fn legal_actions(&self) -> Vec<usize>;
+
+    /// Size of this environment's action space (≤ [`MAX_ACTIONS`]).
+    fn num_actions(&self) -> usize;
+
+    /// Whether the current state is terminal.
+    fn is_terminal(&self) -> bool;
+
+    /// Fill `out` (len [`FEATURE_DIM`]) according to the feature contract.
+    /// The default implementation composes the per-action heuristics,
+    /// legality mask, step fraction, heuristic value and summary features.
+    fn features(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), FEATURE_DIM);
+        out.fill(0.0);
+        let legal = self.legal_actions();
+        for &a in &legal {
+            out[a] = self.action_heuristic(a) as f32;
+            out[FEAT_MASK_OFFSET + a] = 1.0;
+        }
+        out[FEAT_FRAC_INDEX] = self.remaining_fraction() as f32;
+        out[FEAT_VALUE_INDEX] = self.heuristic_value().clamp(-1.0, 1.0) as f32;
+        self.summary_features(&mut out[FEAT_SUMMARY_OFFSET..]);
+    }
+
+    /// One-step heuristic desirability of `action`, roughly in [0, 1].
+    fn action_heuristic(&self, action: usize) -> f64;
+
+    /// Fraction of the step budget remaining in [0, 1].
+    fn remaining_fraction(&self) -> f64;
+
+    /// Cheap heuristic estimate of the state value in [-1, 1].
+    fn heuristic_value(&self) -> f64;
+
+    /// Env-specific summary features (may leave zeros).
+    fn summary_features(&self, _out: &mut [f32]) {}
+
+    /// Clone the emulator into a boxed instance (worker fan-out).
+    fn clone_boxed(&self) -> Box<dyn Env>;
+
+    /// Short environment name for tables.
+    fn name(&self) -> &str;
+}
+
+/// Serialized environment snapshot.
+///
+/// Stored in the WU-UCT master's centralized game-state buffer; the paper's
+/// Appendix A argues each state is used at most |A| + 1 times, making the
+/// centralized store the efficient choice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnvState(pub Vec<u8>);
+
+impl EnvState {
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+/// Byte-level state (de)serialization helpers shared by env impls.
+pub mod codec {
+    /// Growable little-endian writer.
+    #[derive(Default)]
+    pub struct Writer(Vec<u8>);
+
+    impl Writer {
+        pub fn new() -> Self {
+            Self::default()
+        }
+        pub fn u8(&mut self, v: u8) {
+            self.0.push(v);
+        }
+        pub fn u16(&mut self, v: u16) {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn u32(&mut self, v: u32) {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn u64(&mut self, v: u64) {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn i64(&mut self, v: i64) {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn f64(&mut self, v: f64) {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn bytes(&mut self, v: &[u8]) {
+            self.u32(v.len() as u32);
+            self.0.extend_from_slice(v);
+        }
+        pub fn finish(self) -> Vec<u8> {
+            self.0
+        }
+    }
+
+    /// Cursor-based reader; panics on underrun (snapshots are trusted,
+    /// produced by the paired Writer).
+    pub struct Reader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Reader<'a> {
+        pub fn new(buf: &'a [u8]) -> Self {
+            Self { buf, pos: 0 }
+        }
+        fn take(&mut self, n: usize) -> &'a [u8] {
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            s
+        }
+        pub fn u8(&mut self) -> u8 {
+            self.take(1)[0]
+        }
+        pub fn u16(&mut self) -> u16 {
+            u16::from_le_bytes(self.take(2).try_into().unwrap())
+        }
+        pub fn u32(&mut self) -> u32 {
+            u32::from_le_bytes(self.take(4).try_into().unwrap())
+        }
+        pub fn u64(&mut self) -> u64 {
+            u64::from_le_bytes(self.take(8).try_into().unwrap())
+        }
+        pub fn i64(&mut self) -> i64 {
+            i64::from_le_bytes(self.take(8).try_into().unwrap())
+        }
+        pub fn f64(&mut self) -> f64 {
+            f64::from_le_bytes(self.take(8).try_into().unwrap())
+        }
+        pub fn bytes(&mut self) -> &'a [u8] {
+            let n = self.u32() as usize;
+            self.take(n)
+        }
+        pub fn exhausted(&self) -> bool {
+            self.pos == self.buf.len()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::codec::{Reader, Writer};
+
+    #[test]
+    fn codec_roundtrip() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u16(65535);
+        w.u32(123456);
+        w.u64(u64::MAX);
+        w.i64(-42);
+        w.f64(3.5);
+        w.bytes(b"hello");
+        let buf = w.finish();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8(), 7);
+        assert_eq!(r.u16(), 65535);
+        assert_eq!(r.u32(), 123456);
+        assert_eq!(r.u64(), u64::MAX);
+        assert_eq!(r.i64(), -42);
+        assert_eq!(r.f64(), 3.5);
+        assert_eq!(r.bytes(), b"hello");
+        assert!(r.exhausted());
+    }
+
+    #[test]
+    fn feature_layout_constants_consistent() {
+        use super::*;
+        assert!(FEAT_SUMMARY_OFFSET < FEATURE_DIM);
+        assert_eq!(FEAT_FRAC_INDEX, 32);
+        assert_eq!(FEAT_VALUE_INDEX, 33);
+    }
+}

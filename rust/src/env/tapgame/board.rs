@@ -1,0 +1,542 @@
+//! The 9×9 tap-elimination board: flood-fill regions, elimination, props,
+//! gravity, stochastic refill.
+//!
+//! Mechanics reproduce Appendix C.1's description: tapping a same-color
+//! connected region (size ≥ 2) eliminates it; balloons adjacent to an
+//! eliminated cell pop; cats fall with gravity and are collected at the
+//! bottom row; big taps (≥ prop threshold) award a rocket that clears the
+//! tapped row; eliminated cells collapse downward and columns refill from
+//! the top with random colors (and occasional balloons).
+
+use crate::util::rng::Pcg32;
+
+pub const SIZE: usize = 9;
+pub const CELLS: usize = SIZE * SIZE;
+
+/// Cell encoding inside the raw grid.
+pub const EMPTY: u8 = 255;
+pub const BALLOON: u8 = 200;
+pub const CAT: u8 = 201;
+
+/// Outcome of one tap.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TapOutcome {
+    pub eliminated: u32,
+    pub balloons_popped: u32,
+    pub cats_collected: u32,
+    pub prop_triggered: bool,
+}
+
+/// A same-color connected region, the unit of tapping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    /// Cell indices (row-major), sorted ascending.
+    pub cells: Vec<usize>,
+    /// Color of every cell in the region.
+    pub color: u8,
+}
+
+impl Region {
+    pub fn size(&self) -> usize {
+        self.cells.len()
+    }
+    /// Deterministic anchor: smallest cell index.
+    pub fn anchor(&self) -> usize {
+        self.cells[0]
+    }
+}
+
+/// The mutable board grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Board {
+    grid: [u8; CELLS],
+}
+
+#[inline]
+fn rc(idx: usize) -> (usize, usize) {
+    (idx / SIZE, idx % SIZE)
+}
+
+#[inline]
+fn idx(row: usize, col: usize) -> usize {
+    row * SIZE + col
+}
+
+impl Board {
+    /// Fresh board: random colors everywhere, then `cats` cats placed in
+    /// the top rows (they must fall to be collected).
+    pub fn random(rng: &mut Pcg32, colors: u8, cats: u32, p_balloon: f64) -> Board {
+        let mut grid = [EMPTY; CELLS];
+        for cell in grid.iter_mut() {
+            *cell = if rng.chance(p_balloon) {
+                BALLOON
+            } else {
+                rng.below(colors as u32) as u8
+            };
+        }
+        let mut board = Board { grid };
+        // Place cats in the top two rows at distinct random columns.
+        let mut cols: Vec<usize> = (0..SIZE).collect();
+        rng.shuffle(&mut cols);
+        for (i, &col) in cols.iter().take(cats as usize).enumerate() {
+            board.grid[idx(i / SIZE, col)] = CAT;
+        }
+        board
+    }
+
+    pub fn get(&self, row: usize, col: usize) -> u8 {
+        self.grid[idx(row, col)]
+    }
+
+    pub fn raw(&self) -> &[u8; CELLS] {
+        &self.grid
+    }
+
+    pub fn from_raw(grid: [u8; CELLS]) -> Board {
+        Board { grid }
+    }
+
+    fn is_color(v: u8) -> bool {
+        v < BALLOON
+    }
+
+    /// All tappable regions (same-color, orthogonally connected, size ≥ 2),
+    /// sorted by size descending then anchor ascending — the deterministic
+    /// ordering that defines the action space.
+    pub fn regions(&self) -> Vec<Region> {
+        let mut seen = [false; CELLS];
+        let mut regions = Vec::new();
+        for start in 0..CELLS {
+            if seen[start] || !Self::is_color(self.grid[start]) {
+                continue;
+            }
+            let color = self.grid[start];
+            // Iterative flood fill.
+            let mut stack = vec![start];
+            let mut cells = Vec::new();
+            seen[start] = true;
+            while let Some(cur) = stack.pop() {
+                cells.push(cur);
+                let (r, c) = rc(cur);
+                let push = |nr: usize, nc: usize, stack: &mut Vec<usize>, seen: &mut [bool; CELLS]| {
+                    let ni = idx(nr, nc);
+                    if !seen[ni] && self.grid[ni] == color {
+                        seen[ni] = true;
+                        stack.push(ni);
+                    }
+                };
+                if r > 0 {
+                    push(r - 1, c, &mut stack, &mut seen);
+                }
+                if r + 1 < SIZE {
+                    push(r + 1, c, &mut stack, &mut seen);
+                }
+                if c > 0 {
+                    push(r, c - 1, &mut stack, &mut seen);
+                }
+                if c + 1 < SIZE {
+                    push(r, c + 1, &mut stack, &mut seen);
+                }
+            }
+            if cells.len() >= 2 {
+                cells.sort_unstable();
+                regions.push(Region { cells, color });
+            }
+        }
+        regions.sort_by(|a, b| b.size().cmp(&a.size()).then(a.anchor().cmp(&b.anchor())));
+        regions
+    }
+
+    /// Count of balloons orthogonally adjacent to the region (a cheap
+    /// heuristic signal; popping them is what `tap` actually does).
+    pub fn adjacent_balloons(&self, region: &Region) -> u32 {
+        let mut marked = [false; CELLS];
+        for &cell in &region.cells {
+            let (r, c) = rc(cell);
+            let mark = |nr: usize, nc: usize, marked: &mut [bool; CELLS]| {
+                let ni = idx(nr, nc);
+                if self.grid[ni] == BALLOON {
+                    marked[ni] = true;
+                }
+            };
+            if r > 0 {
+                mark(r - 1, c, &mut marked);
+            }
+            if r + 1 < SIZE {
+                mark(r + 1, c, &mut marked);
+            }
+            if c > 0 {
+                mark(r, c - 1, &mut marked);
+            }
+            if c + 1 < SIZE {
+                mark(r, c + 1, &mut marked);
+            }
+        }
+        marked.iter().filter(|&&m| m).count() as u32
+    }
+
+    /// Count of cats orthogonally adjacent to the region (rescue targets).
+    pub fn adjacent_cats(&self, region: &Region) -> u32 {
+        let mut marked = [false; CELLS];
+        for &cell in &region.cells {
+            let (r, c) = rc(cell);
+            let mark = |nr: usize, nc: usize, marked: &mut [bool; CELLS]| {
+                let ni = idx(nr, nc);
+                if self.grid[ni] == CAT {
+                    marked[ni] = true;
+                }
+            };
+            if r > 0 {
+                mark(r - 1, c, &mut marked);
+            }
+            if r + 1 < SIZE {
+                mark(r + 1, c, &mut marked);
+            }
+            if c > 0 {
+                mark(r, c - 1, &mut marked);
+            }
+            if c + 1 < SIZE {
+                mark(r, c + 1, &mut marked);
+            }
+        }
+        marked.iter().filter(|&&m| m).count() as u32
+    }
+
+    /// Execute a tap on `region`: eliminate it (plus the anchor row when the
+    /// rocket prop triggers), pop adjacent balloons, apply gravity, refill,
+    /// and collect bottom-row cats. Deterministic given `rng` state.
+    pub fn tap(
+        &mut self,
+        region: &Region,
+        colors: u8,
+        p_balloon: f64,
+        prop_threshold: usize,
+        rng: &mut Pcg32,
+    ) -> TapOutcome {
+        let mut out = TapOutcome::default();
+        let mut kill = [false; CELLS];
+        for &cell in &region.cells {
+            kill[cell] = true;
+        }
+        // Rocket prop: clear the anchor's whole row.
+        if region.size() >= prop_threshold {
+            out.prop_triggered = true;
+            let (row, _) = rc(region.anchor());
+            for col in 0..SIZE {
+                let i = idx(row, col);
+                if self.grid[i] != EMPTY && self.grid[i] != CAT {
+                    kill[i] = true;
+                }
+            }
+        }
+        // Pop balloons — and rescue cats — adjacent to anything killed
+        // (Appendix C.1: "when some cell is exploded beside a balloon, it
+        // will also explode"; cats react the same way or are collected by
+        // falling to the bottom row).
+        let mut pop = [false; CELLS];
+        for cell in 0..CELLS {
+            if !kill[cell] {
+                continue;
+            }
+            let (r, c) = rc(cell);
+            let mark = |nr: usize, nc: usize, pop: &mut [bool; CELLS]| {
+                let ni = idx(nr, nc);
+                if self.grid[ni] == BALLOON || self.grid[ni] == CAT {
+                    pop[ni] = true;
+                }
+            };
+            if r > 0 {
+                mark(r - 1, c, &mut pop);
+            }
+            if r + 1 < SIZE {
+                mark(r + 1, c, &mut pop);
+            }
+            if c > 0 {
+                mark(r, c - 1, &mut pop);
+            }
+            if c + 1 < SIZE {
+                mark(r, c + 1, &mut pop);
+            }
+        }
+        for cell in 0..CELLS {
+            if kill[cell] && self.grid[cell] == BALLOON {
+                // A balloon caught in a rocket row also pops.
+                pop[cell] = true;
+            }
+            if pop[cell] {
+                if self.grid[cell] == CAT {
+                    out.cats_collected += 1;
+                } else {
+                    out.balloons_popped += 1;
+                }
+                self.grid[cell] = EMPTY;
+            } else if kill[cell] {
+                out.eliminated += 1;
+                self.grid[cell] = EMPTY;
+            }
+        }
+        // Gravity + refill, column by column.
+        for col in 0..SIZE {
+            let mut write = SIZE; // next row to fill, from the bottom
+            for row in (0..SIZE).rev() {
+                let i = idx(row, col);
+                if self.grid[i] != EMPTY {
+                    write -= 1;
+                    let j = idx(write, col);
+                    if j != i {
+                        self.grid[j] = self.grid[i];
+                        self.grid[i] = EMPTY;
+                    }
+                }
+            }
+            for row in 0..write {
+                let i = idx(row, col);
+                self.grid[i] = if rng.chance(p_balloon) {
+                    BALLOON
+                } else {
+                    rng.below(colors as u32) as u8
+                };
+            }
+        }
+        // Collect cats that reached the bottom row.
+        for col in 0..SIZE {
+            let i = idx(SIZE - 1, col);
+            if self.grid[i] == CAT {
+                out.cats_collected += 1;
+                self.grid[i] = EMPTY;
+            }
+        }
+        // Cats removed from the bottom leave holes; settle once more
+        // (no refill needed at top for these single holes — next refill
+        // pass will handle them; we refill immediately for invariant:
+        // the grid never contains EMPTY between taps).
+        if out.cats_collected > 0 {
+            for col in 0..SIZE {
+                let mut write = SIZE;
+                for row in (0..SIZE).rev() {
+                    let i = idx(row, col);
+                    if self.grid[i] != EMPTY {
+                        write -= 1;
+                        let j = idx(write, col);
+                        if j != i {
+                            self.grid[j] = self.grid[i];
+                            self.grid[i] = EMPTY;
+                        }
+                    }
+                }
+                for row in 0..write {
+                    self.grid[idx(row, col)] = if rng.chance(p_balloon) {
+                        BALLOON
+                    } else {
+                        rng.below(colors as u32) as u8
+                    };
+                }
+            }
+        }
+        out
+    }
+
+    /// Boss disturbance: recolor one random color-cell.
+    pub fn boss_throw(&mut self, colors: u8, rng: &mut Pcg32) {
+        for _ in 0..8 {
+            let i = rng.below_usize(CELLS);
+            if Self::is_color(self.grid[i]) {
+                self.grid[i] = rng.below(colors as u32) as u8;
+                return;
+            }
+        }
+    }
+
+    /// Number of cats still on the board.
+    pub fn cats_on_board(&self) -> u32 {
+        self.grid.iter().filter(|&&v| v == CAT).count() as u32
+    }
+
+    /// Number of balloons on the board.
+    pub fn balloons_on_board(&self) -> u32 {
+        self.grid.iter().filter(|&&v| v == BALLOON).count() as u32
+    }
+
+    /// Histogram of color frequencies (length = colors), normalized.
+    pub fn color_histogram(&self, colors: u8) -> Vec<f32> {
+        let mut h = vec![0f32; colors as usize];
+        for &v in &self.grid {
+            if (v as usize) < h.len() {
+                h[v as usize] += 1.0;
+            }
+        }
+        for v in h.iter_mut() {
+            *v /= CELLS as f32;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Pcg32 {
+        Pcg32::new(12345)
+    }
+
+    #[test]
+    fn random_board_has_no_empty_cells() {
+        let b = Board::random(&mut rng(), 4, 2, 0.1);
+        assert!(b.raw().iter().all(|&v| v != EMPTY));
+        assert_eq!(b.cats_on_board(), 2);
+    }
+
+    #[test]
+    fn regions_are_disjoint_and_sorted() {
+        let b = Board::random(&mut rng(), 3, 0, 0.0);
+        let regions = b.regions();
+        assert!(!regions.is_empty(), "3 colors on 81 cells must connect");
+        let mut seen = [false; CELLS];
+        for r in &regions {
+            assert!(r.size() >= 2);
+            for w in r.cells.windows(2) {
+                assert!(w[0] < w[1], "cells sorted");
+            }
+            for &c in &r.cells {
+                assert!(!seen[c], "regions must not overlap");
+                seen[c] = true;
+                assert_eq!(b.raw()[c], r.color);
+            }
+        }
+        for w in regions.windows(2) {
+            assert!(w[0].size() >= w[1].size(), "sorted by size desc");
+        }
+    }
+
+    #[test]
+    fn uniform_board_is_one_region() {
+        let b = Board::from_raw([1u8; CELLS]);
+        let regions = b.regions();
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].size(), CELLS);
+    }
+
+    #[test]
+    fn checkerboard_has_no_regions() {
+        let mut grid = [0u8; CELLS];
+        for (i, cell) in grid.iter_mut().enumerate() {
+            let (r, c) = super::rc(i);
+            *cell = ((r + c) % 2) as u8;
+        }
+        let b = Board::from_raw(grid);
+        assert!(b.regions().is_empty(), "isolated cells are not tappable");
+    }
+
+    #[test]
+    fn tap_eliminates_and_refills() {
+        let mut b = Board::from_raw([2u8; CELLS]);
+        let regions = b.regions();
+        let mut r = rng();
+        let out = b.tap(&regions[0], 4, 0.0, 100, &mut r);
+        assert_eq!(out.eliminated, CELLS as u32);
+        assert!(!out.prop_triggered, "threshold 100 never triggers");
+        // Board fully refilled, no empties.
+        assert!(b.raw().iter().all(|&v| v != EMPTY));
+    }
+
+    #[test]
+    fn tap_pops_adjacent_balloons() {
+        // Column 0 all color 1 (a tappable region); a balloon at (0, 1).
+        let mut grid = [0u8; CELLS];
+        for (i, cell) in grid.iter_mut().enumerate() {
+            let (_r, c) = super::rc(i);
+            *cell = if c == 0 { 1 } else { (c % 2 + 2) as u8 };
+        }
+        grid[idx(0, 1)] = BALLOON;
+        let mut b = Board::from_raw(grid);
+        let regions = b.regions();
+        let col0 = regions.iter().find(|r| r.color == 1).expect("column region");
+        assert_eq!(b.adjacent_balloons(col0), 1);
+        let out = b.tap(col0, 4, 0.0, 100, &mut rng());
+        assert_eq!(out.balloons_popped, 1);
+    }
+
+    #[test]
+    fn prop_rocket_clears_anchor_row() {
+        // Two-cell region at the anchor row; threshold 2 triggers the prop.
+        let mut grid = [EMPTY; CELLS];
+        // Fill deterministic colors, no adjacency except our pair.
+        for (i, cell) in grid.iter_mut().enumerate() {
+            let (r, c) = super::rc(i);
+            *cell = ((r * 3 + c * 5) % 7 % 4) as u8; // pseudo-random-ish
+        }
+        grid[idx(4, 0)] = 9 % 4; // ensure pair
+        grid[idx(4, 1)] = grid[idx(4, 0)];
+        // Make sure they're actually equal-color adjacent pair:
+        let mut b = Board::from_raw(grid);
+        let regions = b.regions();
+        let target = regions
+            .iter()
+            .find(|r| r.cells.contains(&idx(4, 0)) && r.cells.contains(&idx(4, 1)));
+        if let Some(region) = target {
+            let out = b.tap(region, 4, 0.0, 2, &mut rng());
+            assert!(out.prop_triggered);
+            assert!(out.eliminated as usize >= SIZE.min(region.size() + 3));
+        }
+    }
+
+    #[test]
+    fn gravity_moves_cat_down() {
+        let mut grid = [0u8; CELLS];
+        // Alternate colors so the cat column is tappable below it.
+        for (i, cell) in grid.iter_mut().enumerate() {
+            let (r, _c) = super::rc(i);
+            *cell = (r % 2) as u8;
+        }
+        grid[idx(0, 3)] = CAT;
+        // Make the whole column below the cat one region:
+        for row in 1..SIZE {
+            grid[idx(row, 3)] = 2;
+        }
+        let mut b = Board::from_raw(grid);
+        let regions = b.regions();
+        let col = regions.iter().find(|r| r.color == 2).expect("cat column");
+        let out = b.tap(col, 4, 0.0, 100, &mut rng());
+        // The column below the cat vanished; the cat fell to the bottom row
+        // and was collected.
+        assert_eq!(out.cats_collected, 1);
+        assert_eq!(b.cats_on_board(), 0);
+    }
+
+    #[test]
+    fn tap_is_deterministic_given_rng_state() {
+        let mut b1 = Board::random(&mut Pcg32::new(7), 4, 1, 0.1);
+        let mut b2 = b1.clone();
+        let r1 = b1.regions();
+        let r2 = b2.regions();
+        assert_eq!(r1, r2);
+        let mut g1 = Pcg32::new(99);
+        let mut g2 = Pcg32::new(99);
+        let o1 = b1.tap(&r1[0], 4, 0.1, 6, &mut g1);
+        let o2 = b2.tap(&r2[0], 4, 0.1, 6, &mut g2);
+        assert_eq!(o1, o2);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn boss_throw_changes_at_most_one_cell() {
+        let mut b = Board::from_raw([1u8; CELLS]);
+        let before = *b.raw();
+        b.boss_throw(4, &mut rng());
+        let diff = before
+            .iter()
+            .zip(b.raw().iter())
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(diff <= 1);
+    }
+
+    #[test]
+    fn color_histogram_sums_to_color_fraction() {
+        let b = Board::random(&mut rng(), 4, 0, 0.0);
+        let h = b.color_histogram(4);
+        let total: f32 = h.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "no balloons/cats => mass 1");
+    }
+}

@@ -1,0 +1,194 @@
+//! Level definitions for the tap-elimination game.
+//!
+//! A [`Level`] bundles the rule parameters Appendix C.1 describes: board
+//! colors, step budget, goal items, prop threshold and the "boss level"
+//! randomness. Named constructors provide the two levels the paper analyses
+//! (Level-35-like: easy; Level-58-like: hard), and [`LevelGen`] produces the
+//! 300-train / 130-eval level sets for the pass-rate prediction system.
+
+use crate::util::rng::Pcg32;
+
+/// Parameter set for one game level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Level {
+    /// Identifier shown in tables ("level-35", "gen-0042", ...).
+    pub id: String,
+    /// Number of distinct cell colors (more colors => smaller regions =>
+    /// harder; real levels range ~3-6).
+    pub colors: u8,
+    /// Tap budget: the level fails when it is exhausted.
+    pub steps: u32,
+    /// Balloons to collect (pop by eliminating an adjacent region).
+    pub goal_balloons: u32,
+    /// Cats to collect (fall with gravity; collected at the bottom row).
+    pub goal_cats: u32,
+    /// Probability that a refilled cell is a balloon.
+    pub p_balloon: f64,
+    /// Region size that awards a row-clearing rocket prop.
+    pub prop_threshold: usize,
+    /// Per-step probability the "boss" recolors a random cell
+    /// (Appendix C.1's boss-level randomness; 0 for normal levels).
+    pub p_boss: f64,
+}
+
+impl Level {
+    /// Level-35 analogue: "relatively simple, requiring 18 steps for an
+    /// average player to pass" (Section 5.1, footnote 6).
+    pub fn level35() -> Level {
+        Level {
+            id: "level-35".into(),
+            colors: 4,
+            steps: 18,
+            goal_balloons: 16,
+            goal_cats: 0,
+            p_balloon: 0.14,
+            prop_threshold: 6,
+            p_boss: 0.0,
+        }
+    }
+
+    /// Level-58 analogue: "relatively difficult and needs more than 50
+    /// steps to solve". Goals calibrated so a strong search agent passes
+    /// in roughly 30–50 taps while weak players usually fail.
+    pub fn level58() -> Level {
+        Level {
+            id: "level-58".into(),
+            colors: 5,
+            steps: 55,
+            goal_balloons: 30,
+            goal_cats: 3,
+            p_balloon: 0.12,
+            prop_threshold: 7,
+            p_boss: 0.05,
+        }
+    }
+
+    /// Total goal units (balloons weigh 1, cats weigh 3) — the reward
+    /// normalizer used by the environment.
+    pub fn goal_units(&self) -> f64 {
+        self.goal_balloons as f64 + 3.0 * self.goal_cats as f64
+    }
+}
+
+/// Seeded generator of parameterized levels across a difficulty spread,
+/// used for the pass-rate system's 300-train / 130-eval sets.
+#[derive(Debug)]
+pub struct LevelGen {
+    rng: Pcg32,
+    counter: u32,
+}
+
+impl LevelGen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed), counter: 0 }
+    }
+
+    /// Draw the next level. `difficulty` in [0, 1] biases every knob from
+    /// easy (0) to hard (1); the generator adds per-level jitter so levels
+    /// at equal difficulty still differ.
+    pub fn generate(&mut self, difficulty: f64) -> Level {
+        assert!((0.0..=1.0).contains(&difficulty));
+        let d = difficulty;
+        let jitter = |rng: &mut Pcg32, spread: f64| rng.range_f64(-spread, spread);
+        let colors = (3.0 + 3.0 * d + jitter(&mut self.rng, 0.8)).round().clamp(3.0, 6.0) as u8;
+        let steps = (14.0 + 40.0 * d + jitter(&mut self.rng, 4.0)).round().clamp(8.0, 60.0) as u32;
+        let goal_balloons =
+            (10.0 + 30.0 * d + jitter(&mut self.rng, 5.0)).round().clamp(5.0, 48.0) as u32;
+        let goal_cats = if self.rng.chance(0.25 + 0.35 * d) {
+            1 + self.rng.below(3)
+        } else {
+            0
+        };
+        let p_balloon = (0.16 - 0.07 * d + jitter(&mut self.rng, 0.02)).clamp(0.05, 0.2);
+        let prop_threshold = if d > 0.6 { 7 } else { 6 };
+        let p_boss = if self.rng.chance(0.15) { 0.05 } else { 0.0 };
+        let id = format!("gen-{:04}", self.counter);
+        self.counter += 1;
+        Level {
+            id,
+            colors,
+            steps,
+            goal_balloons,
+            goal_cats,
+            p_balloon,
+            prop_threshold,
+            p_boss,
+        }
+    }
+
+    /// Generate `n` levels with difficulties evenly spread over [0, 1].
+    pub fn batch(&mut self, n: usize) -> Vec<Level> {
+        (0..n)
+            .map(|i| {
+                let d = if n <= 1 { 0.5 } else { i as f64 / (n - 1) as f64 };
+                self.generate(d)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_levels_match_paper_shape() {
+        let l35 = Level::level35();
+        let l58 = Level::level58();
+        assert_eq!(l35.steps, 18); // "18 steps for an average player"
+        assert!(l58.steps > 50); // "more than 50 steps"
+        assert!(l58.colors > l35.colors);
+        assert!(l58.goal_units() > l35.goal_units());
+    }
+
+    #[test]
+    fn goal_units_weighting() {
+        let mut l = Level::level35();
+        l.goal_balloons = 10;
+        l.goal_cats = 2;
+        assert_eq!(l.goal_units(), 16.0);
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let a: Vec<Level> = LevelGen::new(9).batch(20);
+        let b: Vec<Level> = LevelGen::new(9).batch(20);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn difficulty_monotone_in_expectation() {
+        let mut g = LevelGen::new(1);
+        let easy: Vec<Level> = (0..50).map(|_| g.generate(0.0)).collect();
+        let hard: Vec<Level> = (0..50).map(|_| g.generate(1.0)).collect();
+        let avg = |ls: &[Level], f: &dyn Fn(&Level) -> f64| {
+            ls.iter().map(f).sum::<f64>() / ls.len() as f64
+        };
+        assert!(avg(&hard, &|l| l.colors as f64) > avg(&easy, &|l| l.colors as f64));
+        assert!(avg(&hard, &|l| l.steps as f64) > avg(&easy, &|l| l.steps as f64));
+        assert!(avg(&hard, &|l| l.goal_balloons as f64) > avg(&easy, &|l| l.goal_balloons as f64));
+    }
+
+    #[test]
+    fn batch_ids_unique() {
+        let mut g = LevelGen::new(2);
+        let ls = g.batch(30);
+        let mut ids: Vec<&str> = ls.iter().map(|l| l.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 30);
+    }
+
+    #[test]
+    fn parameters_stay_in_bounds() {
+        let mut g = LevelGen::new(3);
+        for i in 0..200 {
+            let l = g.generate((i % 101) as f64 / 100.0);
+            assert!((3..=6).contains(&l.colors));
+            assert!((8..=60).contains(&l.steps));
+            assert!((5..=48).contains(&l.goal_balloons));
+            assert!(l.goal_cats <= 3);
+            assert!((0.05..=0.2).contains(&l.p_balloon));
+        }
+    }
+}

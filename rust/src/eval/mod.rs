@@ -1,0 +1,8 @@
+//! Simulation-step machinery: rollout policies and the bounded-rollout +
+//! value-bootstrap return estimator (Appendix D).
+
+pub mod policy;
+pub mod simulate;
+
+pub use policy::{GreedyPolicy, HeuristicPolicy, PolicyFactory, RandomPolicy, RolloutPolicy};
+pub use simulate::simulation_return;

@@ -1,0 +1,211 @@
+//! Rollout (default) policies for the simulation step.
+//!
+//! The paper's simulation workers roll out a distilled PPO network
+//! (Appendix D). Here the same role is filled by one of:
+//!
+//! * [`RandomPolicy`] — uniform over legal actions (the classic MCTS
+//!   default, used as an ablation floor);
+//! * [`HeuristicPolicy`] — softmax over the env's one-step heuristic
+//!   (the teacher the network distills from);
+//! * `NetworkPolicy` (in [`crate::runtime::policy`]) — the AOT-compiled
+//!   policy-value network served through the PJRT inference server.
+//!
+//! Each simulation worker owns its own boxed policy, produced by a
+//! [`PolicyFactory`] so every worker gets an independent rng stream.
+
+use std::sync::Arc;
+
+use crate::env::Env;
+use crate::util::rng::Pcg32;
+
+/// A default policy + value bootstrap used during simulation.
+pub trait RolloutPolicy: Send {
+    /// Pick an action among `env.legal_actions()` (must be non-empty).
+    fn choose(&mut self, env: &dyn Env) -> usize;
+
+    /// Bootstrap estimate of V(s) for truncated rollouts.
+    fn value(&mut self, env: &dyn Env) -> f64;
+
+    /// Human-readable name for experiment tables.
+    fn name(&self) -> &'static str;
+}
+
+/// Constructor handed to worker pools; the argument seeds the worker's rng.
+pub type PolicyFactory = Arc<dyn Fn(u64) -> Box<dyn RolloutPolicy> + Send + Sync>;
+
+/// Uniform-random rollout policy.
+pub struct RandomPolicy {
+    rng: Pcg32,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed) }
+    }
+
+    pub fn factory() -> PolicyFactory {
+        Arc::new(|seed| Box::new(RandomPolicy::new(seed)))
+    }
+}
+
+impl RolloutPolicy for RandomPolicy {
+    fn choose(&mut self, env: &dyn Env) -> usize {
+        let legal = env.legal_actions();
+        assert!(!legal.is_empty(), "choose() on state with no legal actions");
+        *self.rng.choose(&legal)
+    }
+
+    fn value(&mut self, _env: &dyn Env) -> f64 {
+        0.0
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Softmax-over-heuristic rollout policy — the build-time teacher
+/// (python/compile/model.py `teacher_logits_value`) evaluated directly.
+pub struct HeuristicPolicy {
+    rng: Pcg32,
+    /// Softmax sharpness; matches the teacher's TEACHER_SCALE.
+    pub scale: f64,
+}
+
+impl HeuristicPolicy {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed), scale: 4.0 }
+    }
+
+    pub fn factory() -> PolicyFactory {
+        Arc::new(|seed| Box::new(HeuristicPolicy::new(seed)))
+    }
+}
+
+impl RolloutPolicy for HeuristicPolicy {
+    fn choose(&mut self, env: &dyn Env) -> usize {
+        let legal = env.legal_actions();
+        assert!(!legal.is_empty(), "choose() on state with no legal actions");
+        // Softmax over scaled heuristics (numerically-stable exp).
+        let logits: Vec<f64> = legal
+            .iter()
+            .map(|&a| self.scale * env.action_heuristic(a))
+            .collect();
+        let max = logits.iter().cloned().fold(f64::MIN, f64::max);
+        let weights: Vec<f64> = logits.iter().map(|l| (l - max).exp()).collect();
+        legal[self.rng.weighted(&weights)]
+    }
+
+    fn value(&mut self, env: &dyn Env) -> f64 {
+        env.heuristic_value()
+    }
+
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+}
+
+/// Greedy argmax over the heuristic (used by the pass-rate system's
+/// synthetic skilled players; noise is injected by its caller).
+pub struct GreedyPolicy;
+
+impl GreedyPolicy {
+    pub fn factory() -> PolicyFactory {
+        Arc::new(|_| Box::new(GreedyPolicy))
+    }
+}
+
+impl RolloutPolicy for GreedyPolicy {
+    fn choose(&mut self, env: &dyn Env) -> usize {
+        let legal = env.legal_actions();
+        assert!(!legal.is_empty());
+        legal
+            .into_iter()
+            .max_by(|&a, &b| {
+                env.action_heuristic(a)
+                    .partial_cmp(&env.action_heuristic(b))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap()
+    }
+
+    fn value(&mut self, env: &dyn Env) -> f64 {
+        env.heuristic_value()
+    }
+
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+
+    fn env() -> Garnet {
+        Garnet::new(10, 4, 30, 0.0, 5)
+    }
+
+    #[test]
+    fn random_policy_only_picks_legal() {
+        let e = env();
+        let mut p = RandomPolicy::new(1);
+        for _ in 0..100 {
+            let a = p.choose(&e);
+            assert!(e.legal_actions().contains(&a));
+        }
+        assert_eq!(p.value(&e), 0.0);
+    }
+
+    #[test]
+    fn heuristic_policy_prefers_high_reward_actions() {
+        let e = env();
+        let mut p = HeuristicPolicy::new(2);
+        let best = (0..4)
+            .max_by(|&a, &b| {
+                e.action_heuristic(a)
+                    .partial_cmp(&e.action_heuristic(b))
+                    .unwrap()
+            })
+            .unwrap();
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[p.choose(&e)] += 1;
+        }
+        let argmax = counts.iter().enumerate().max_by_key(|&(_, c)| c).unwrap().0;
+        assert_eq!(argmax, best, "softmax mode should match heuristic argmax");
+    }
+
+    #[test]
+    fn greedy_policy_is_deterministic_argmax() {
+        let e = env();
+        let mut p = GreedyPolicy;
+        let a1 = p.choose(&e);
+        let a2 = p.choose(&e);
+        assert_eq!(a1, a2);
+        for other in 0..4 {
+            assert!(e.action_heuristic(other) <= e.action_heuristic(a1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn factories_produce_independent_streams() {
+        let f = HeuristicPolicy::factory();
+        let e = env();
+        let mut p1 = f(1);
+        let mut p2 = f(2);
+        // Distinct seeds should (almost surely) diverge over many draws.
+        let same = (0..200)
+            .filter(|_| p1.choose(&e) == p2.choose(&e))
+            .count();
+        assert!(same < 200, "streams should not be identical");
+    }
+
+    #[test]
+    fn heuristic_value_passthrough() {
+        let e = env();
+        let mut p = HeuristicPolicy::new(3);
+        assert_eq!(p.value(&e), e.heuristic_value());
+    }
+}

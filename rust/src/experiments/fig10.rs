@@ -1,0 +1,89 @@
+//! Fig. 10 (Appendix D): relative performance of WU-UCT over each
+//! baseline, per game, plus the average percentile improvement.
+//!
+//! Derived from Table-1 data: for each game and baseline B,
+//! `rel = (mean(WU-UCT) − mean(B)) / |mean(B)|` (the paper excludes games
+//! where the baseline's mean is 0 from the average, as footnote 10 does
+//! for Tennis/RootP).
+
+use crate::experiments::table1::{Table1Data, ALGOS};
+use crate::util::stats::mean;
+use crate::util::table::Table;
+
+/// Relative improvements: per game, vs TreeP / LeafP / RootP.
+pub fn relative_performance(data: &Table1Data) -> (Table, Vec<f64>) {
+    assert_eq!(ALGOS[0], "WU-UCT");
+    let baselines = [(1usize, "TreeP"), (2, "LeafP"), (3, "RootP")];
+    let mut table = Table::new(
+        "Fig 10 — relative performance of WU-UCT vs baselines",
+        &["Environment", "vs TreeP", "vs LeafP", "vs RootP"],
+    );
+    let mut sums = vec![0.0f64; baselines.len()];
+    let mut counts = vec![0usize; baselines.len()];
+    for (g, game) in data.games.iter().enumerate() {
+        let wu = mean(&data.rewards[g][0]);
+        let mut cells = vec![game.clone()];
+        for (bi, &(ai, _)) in baselines.iter().enumerate() {
+            let b = mean(&data.rewards[g][ai]);
+            if b.abs() < 1e-9 {
+                cells.push("n/a".into()); // footnote-10 exclusion
+                continue;
+            }
+            let rel = (wu - b) / b.abs();
+            sums[bi] += rel;
+            counts[bi] += 1;
+            cells.push(format!("{:+.0}%", rel * 100.0));
+        }
+        table.row(&cells);
+    }
+    let avgs: Vec<f64> = sums
+        .iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect();
+    table.row(&[
+        "average".into(),
+        format!("{:+.0}%", avgs[0] * 100.0),
+        format!("{:+.0}%", avgs[1] * 100.0),
+        format!("{:+.0}%", avgs[2] * 100.0),
+    ]);
+    (table, avgs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_data() -> Table1Data {
+        // WU-UCT = 200, TreeP = 100, LeafP = 50, RootP = 0 (excluded),
+        // Policy = 10, UCT = 250.
+        Table1Data {
+            games: vec!["G1".into()],
+            rewards: vec![vec![
+                vec![200.0, 200.0],
+                vec![100.0, 100.0],
+                vec![50.0, 50.0],
+                vec![0.0, 0.0],
+                vec![10.0, 10.0],
+                vec![250.0, 250.0],
+            ]],
+        }
+    }
+
+    #[test]
+    fn relative_improvements_computed() {
+        let (table, avgs) = relative_performance(&fake_data());
+        assert_eq!(table.num_rows(), 2); // one game + average row
+        assert!((avgs[0] - 1.0).abs() < 1e-9); // +100% vs TreeP
+        assert!((avgs[1] - 3.0).abs() < 1e-9); // +300% vs LeafP
+        assert_eq!(avgs[2], 0.0); // RootP excluded (zero mean)
+    }
+
+    #[test]
+    fn negative_improvement_renders() {
+        let mut d = fake_data();
+        d.rewards[0][1] = vec![400.0, 400.0]; // TreeP beats WU-UCT
+        let (_, avgs) = relative_performance(&d);
+        assert!(avgs[0] < 0.0);
+    }
+}

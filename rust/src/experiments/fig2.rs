@@ -1,0 +1,142 @@
+//! Fig. 2(b–c): time-consumption breakdown of WU-UCT's master process and
+//! worker pools on the tap game and an Atari-like game.
+//!
+//! The paper's observations, which this harness verifies on our system:
+//! simulation + expansion dominate even when parallelized; communication
+//! overhead is negligible next to them; simulation workers run at
+//! near-100% occupancy.
+
+use crate::env::tapgame::{Level, TapGame};
+use crate::env::{atari, Env, SlowEnv};
+use crate::experiments::Scale;
+use crate::mcts::{Search, WuUct};
+use crate::util::table::Table;
+use crate::util::timer::Breakdown;
+
+/// Measured breakdown for one workload.
+#[derive(Debug, Clone)]
+pub struct BreakdownReport {
+    pub workload: String,
+    pub master: Breakdown,
+    pub workers: Breakdown,
+    pub sim_occupancy: f64,
+}
+
+/// Run `searches` consecutive WU-UCT searches and accumulate breakdowns.
+pub fn measure(env: &dyn Env, scale: &Scale, searches: usize) -> BreakdownReport {
+    let mut search = WuUct::new(
+        scale.tap_spec(scale.seed ^ 0xf2),
+        scale.workers,
+        scale.workers,
+    );
+    let mut master = Breakdown::new();
+    let mut workers = Breakdown::new();
+    for _ in 0..searches {
+        let r = search.search(env);
+        master.merge(&r.master);
+        workers.merge(&r.workers);
+    }
+    let sim_occupancy = workers.occupancy();
+    BreakdownReport {
+        workload: env.name().to_string(),
+        master,
+        workers,
+        sim_occupancy,
+    }
+}
+
+/// The two Fig. 2 workloads: tap Level-35 analogue + one Atari game.
+pub fn run(scale: &Scale, searches: usize) -> (Table, Vec<BreakdownReport>) {
+    let mut table = Table::new(
+        format!(
+            "Fig 2(b-c) — time breakdown, {} workers each pool",
+            scale.workers
+        ),
+        &["Workload", "Side", "Phase", "seconds", "fraction"],
+    );
+    let mut reports = Vec::new();
+    let envs: Vec<Box<dyn Env>> = vec![
+        Box::new(SlowEnv::new(
+            Box::new(TapGame::new(Level::level35(), scale.seed)),
+            scale.delay,
+        )),
+        Box::new(SlowEnv::new(atari::make("SpaceInvaders", scale.seed), scale.delay)),
+    ];
+    for env in envs {
+        let report = measure(env.as_ref(), scale, searches);
+        for (side, b) in [("master", &report.master), ("workers", &report.workers)] {
+            for (phase, secs, frac) in b.rows() {
+                if secs == 0.0 {
+                    continue;
+                }
+                table.row(&[
+                    report.workload.clone(),
+                    side.to_string(),
+                    phase.to_string(),
+                    format!("{secs:.4}"),
+                    format!("{frac:.3}"),
+                ]);
+            }
+        }
+        table.row(&[
+            report.workload.clone(),
+            "workers".into(),
+            "occupancy".into(),
+            format!("{:.3}", report.sim_occupancy),
+            "-".into(),
+        ]);
+        reports.push(report);
+    }
+    (table, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timer::Phase;
+    use std::time::Duration;
+
+    #[test]
+    fn breakdown_shows_simulation_dominates_workers() {
+        let scale = Scale {
+            max_simulations: 16,
+            rollout_limit: 8,
+            workers: 4,
+            delay: Duration::from_micros(150),
+            ..Scale::quick()
+        };
+        let env = SlowEnv::new(
+            Box::new(TapGame::new(Level::level35(), 1)),
+            scale.delay,
+        );
+        let r = measure(&env, &scale, 2);
+        let sim = r.workers.total(Phase::Simulation);
+        let master_sel = r.master.total(Phase::Selection);
+        assert!(
+            sim > master_sel,
+            "worker simulation time {sim:?} should dominate master selection {master_sel:?}"
+        );
+    }
+
+    #[test]
+    fn communication_negligible_vs_simulation() {
+        let scale = Scale {
+            max_simulations: 16,
+            rollout_limit: 8,
+            workers: 4,
+            delay: Duration::from_micros(150),
+            ..Scale::quick()
+        };
+        let env = SlowEnv::new(
+            Box::new(TapGame::new(Level::level35(), 2)),
+            scale.delay,
+        );
+        let r = measure(&env, &scale, 2);
+        let comm = r.master.total(Phase::Communication);
+        let sim = r.workers.total(Phase::Simulation);
+        assert!(
+            comm < sim,
+            "communication {comm:?} should be far below simulation {sim:?}"
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Fig. 4: WU-UCT speedup curves (a–b) and performance retention (c–d)
+//! on the two tap-game levels.
+//!
+//! (a–b): wall-clock speedup as simulation workers scale 1→16 (several
+//! expansion-worker settings), on the latency-simulated emulator.
+//! (c–d): average game steps to pass the level as workers scale — the
+//! paper's "negligible performance loss" claim (σ = 0.67 / 1.22 steps).
+
+use crate::env::tapgame::{Level, TapGame};
+use crate::env::Env;
+use crate::experiments::table3::{search_time, WORKER_AXIS};
+use crate::experiments::Scale;
+use crate::mcts::{Search, WuUct};
+use crate::util::stats::{mean, std_dev};
+use crate::util::table::Table;
+
+/// Speedup curves: rows = expansion workers, cols = simulation workers.
+pub fn speedup_curves(level: &Level, exp_axis: &[usize], scale: &Scale, repeats: usize) -> Table {
+    let mut table = Table::new(
+        format!("Fig 4(a-b) — speedup vs workers, {}", level.id),
+        &["Me", "Ms=1", "Ms=2", "Ms=4", "Ms=8", "Ms=16"],
+    );
+    let base = search_time(level, 1, 1, scale, repeats).as_secs_f64();
+    for &me in exp_axis {
+        let mut cells = vec![me.to_string()];
+        for &ms in &WORKER_AXIS {
+            let t = search_time(level, me, ms, scale, repeats).as_secs_f64();
+            cells.push(format!("{:.1}", base / t));
+        }
+        table.row(&cells);
+    }
+    table
+}
+
+/// Game-step statistics for one (level, workers) cell: the performance-
+/// retention axis. Returns (mean steps, std, pass rate).
+pub fn game_steps(level: &Level, n_exp: usize, n_sim: usize, scale: &Scale) -> (f64, f64, f64) {
+    let mut search = WuUct::new(scale.tap_spec(scale.seed ^ 0xf4), n_exp, n_sim);
+    let mut steps = Vec::with_capacity(scale.trials);
+    let mut passes = 0usize;
+    for t in 0..scale.trials {
+        let mut game = TapGame::new(level.clone(), scale.seed.wrapping_add(t as u64 * 101));
+        while !game.is_terminal() {
+            let r = search.search(&game);
+            let legal = game.legal_actions();
+            let a = if legal.contains(&r.best_action) { r.best_action } else { legal[0] };
+            game.step(a);
+        }
+        steps.push(game.steps_used() as f64);
+        passes += game.passed() as usize;
+    }
+    (mean(&steps), std_dev(&steps), passes as f64 / scale.trials as f64)
+}
+
+/// Fig. 4(c–d): game steps vs worker count for both levels.
+pub fn performance_retention(scale: &Scale) -> Table {
+    let mut table = Table::new(
+        "Fig 4(c-d) — game steps (performance) vs workers",
+        &["Level", "workers", "mean steps", "std", "pass rate"],
+    );
+    for level in [Level::level35(), Level::level58()] {
+        let mut means = Vec::new();
+        for &w in &WORKER_AXIS {
+            let (m, s, p) = game_steps(&level, w.min(scale.workers.max(1)), w, scale);
+            table.row(&[
+                level.id.clone(),
+                w.to_string(),
+                format!("{m:.2}"),
+                format!("{s:.2}"),
+                format!("{p:.2}"),
+            ]);
+            means.push(m);
+        }
+        // Cross-worker variation: the paper reports σ 0.67 / 1.22.
+        let sigma = std_dev(&means);
+        table.row(&[
+            level.id.clone(),
+            "σ over workers".into(),
+            format!("{sigma:.2}"),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn game_steps_bounded_by_budget() {
+        let scale = Scale {
+            trials: 2,
+            max_simulations: 10,
+            rollout_limit: 5,
+            ..Scale::quick()
+        };
+        let (m, s, p) = game_steps(&Level::level35(), 1, 2, &scale);
+        assert!(m <= Level::level35().steps as f64);
+        assert!(s >= 0.0);
+        assert!((0.0..=1.0).contains(&p));
+    }
+
+    #[test]
+    fn performance_table_has_rows_for_both_levels() {
+        let scale = Scale {
+            trials: 1,
+            max_simulations: 6,
+            rollout_limit: 4,
+            ..Scale::quick()
+        };
+        // Restrict axis cost by running the full harness at minimal scale.
+        let t = performance_retention(&scale);
+        // 5 worker rows + 1 sigma row per level.
+        assert_eq!(t.num_rows(), 12);
+    }
+}

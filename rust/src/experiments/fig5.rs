@@ -1,0 +1,105 @@
+//! Fig. 5: episode reward and per-step planning time as the number of
+//! simulation workers grows (4 / 8 / 16), for WU-UCT and the three
+//! baselines on four games.
+//!
+//! The paper's claim: WU-UCT keeps its reward flat while getting faster;
+//! baselines degrade in reward as parallelism rises.
+
+use std::time::Duration;
+
+use crate::env::{atari, Env, SlowEnv};
+use crate::experiments::{eval_algo, rewards, Scale};
+use crate::gameplay::EpisodeResult;
+use crate::mcts::{LeafP, RootP, Search, TreeP, WuUct};
+use crate::util::stats::{mean, std_dev};
+use crate::util::table::{mean_pm_std, Table};
+
+pub const WORKER_AXIS: [usize; 3] = [4, 8, 16];
+pub const ALGOS: [&str; 4] = ["WU-UCT", "TreeP", "LeafP", "RootP"];
+
+fn build(algo: &str, workers: usize, scale: &Scale, seed: u64) -> Box<dyn Search> {
+    let spec = scale.atari_spec(seed);
+    match algo {
+        "WU-UCT" => Box::new(WuUct::new(spec, 1, workers)),
+        "TreeP" => Box::new(TreeP::new(spec, workers, 1.0)),
+        "LeafP" => Box::new(LeafP::new(spec, workers)),
+        "RootP" => Box::new(RootP::new(spec, workers)),
+        other => panic!("unknown fig-5 algorithm {other}"),
+    }
+}
+
+/// One (game, algo, workers) cell: mean reward ± std and time/step.
+pub fn cell(game: &str, algo: &str, workers: usize, scale: &Scale) -> (f64, f64, Duration) {
+    let mut search = build(algo, workers, scale, scale.seed ^ workers as u64);
+    let inner = atari::make(game, 1);
+    let mut env: Box<dyn Env> = Box::new(SlowEnv::new(inner, scale.delay));
+    let results: Vec<EpisodeResult> = eval_algo(search.as_mut(), env.as_mut(), scale);
+    let rs = rewards(&results);
+    let tps = results
+        .iter()
+        .map(|r| r.time_per_step)
+        .sum::<Duration>()
+        / results.len().max(1) as u32;
+    (mean(&rs), std_dev(&rs), tps)
+}
+
+/// Full Fig. 5 harness over `games`.
+pub fn run(games: &[&str], scale: &Scale) -> Table {
+    let mut table = Table::new(
+        format!(
+            "Fig 5 — reward and time/step vs simulation workers ({} trials)",
+            scale.trials
+        ),
+        &["Game", "Algo", "workers", "reward", "time/step"],
+    );
+    for &game in games {
+        for &algo in &ALGOS {
+            for &w in &WORKER_AXIS {
+                let (m, s, tps) = cell(game, algo, w, scale);
+                table.row(&[
+                    game.to_string(),
+                    algo.to_string(),
+                    w.to_string(),
+                    mean_pm_std(m, s),
+                    format!("{tps:.2?}"),
+                ]);
+            }
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_produces_finite_metrics() {
+        let scale = Scale {
+            trials: 1,
+            max_simulations: 6,
+            rollout_limit: 4,
+            max_episode_steps: 6,
+            delay: Duration::from_micros(20),
+            ..Scale::quick()
+        };
+        let (m, s, tps) = cell("Boxing", "WU-UCT", 2, &scale);
+        assert!(m.is_finite());
+        assert!(s >= 0.0);
+        assert!(tps > Duration::ZERO);
+    }
+
+    #[test]
+    fn table_covers_all_cells() {
+        let scale = Scale {
+            trials: 1,
+            max_simulations: 4,
+            rollout_limit: 3,
+            max_episode_steps: 4,
+            delay: Duration::from_micros(10),
+            ..Scale::quick()
+        };
+        let t = run(&["Freeway"], &scale);
+        assert_eq!(t.num_rows(), ALGOS.len() * WORKER_AXIS.len());
+    }
+}

@@ -1,0 +1,132 @@
+//! Experiment harnesses — one per table/figure of the paper's evaluation.
+//!
+//! Every harness works at two scales: `Scale::quick()` (laptop, minutes)
+//! and `Scale::paper()` (the paper's parameters). EXPERIMENTS.md records
+//! which scale each archived run used. All harnesses return a
+//! [`crate::util::table::Table`] whose rows mirror the paper's.
+
+pub mod fig10;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2_fig8;
+pub mod table3;
+pub mod table5;
+
+use std::time::Duration;
+
+use crate::env::Env;
+use crate::gameplay::{play_episodes, EpisodeResult};
+use crate::mcts::{Search, SearchSpec};
+
+/// Workload scale for an experiment run.
+#[derive(Debug, Clone)]
+pub struct Scale {
+    /// Episodes per (game, algorithm) cell.
+    pub trials: usize,
+    /// Simulations per search (paper: 128 Atari / 500 tap).
+    pub max_simulations: u32,
+    /// Rollout step bound (paper: 100).
+    pub rollout_limit: u32,
+    /// Cap on environment steps per episode.
+    pub max_episode_steps: u32,
+    /// Worker count for parallel algorithms (paper: 16).
+    pub workers: usize,
+    /// Per-step emulator latency for speedup experiments.
+    pub delay: Duration,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Scale {
+    /// Laptop scale: minutes, preserves orderings and curve shapes.
+    pub fn quick() -> Scale {
+        Scale {
+            trials: 3,
+            max_simulations: 24,
+            rollout_limit: 15,
+            max_episode_steps: 40,
+            workers: 8,
+            delay: Duration::from_micros(120),
+            seed: 0,
+        }
+    }
+
+    /// The paper's parameters (hours on this container).
+    pub fn paper() -> Scale {
+        Scale {
+            trials: 10,
+            max_simulations: 128,
+            rollout_limit: 100,
+            max_episode_steps: 100_000,
+            workers: 16,
+            delay: Duration::from_micros(300),
+            seed: 0,
+        }
+    }
+
+    /// From the bench-scale environment knob.
+    pub fn from_env() -> Scale {
+        if crate::bench::paper_scale() {
+            Scale::paper()
+        } else {
+            Scale::quick()
+        }
+    }
+
+    /// Search spec for Atari-style experiments at this scale.
+    pub fn atari_spec(&self, seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: self.max_simulations,
+            rollout_limit: self.rollout_limit,
+            seed,
+            ..SearchSpec::atari()
+        }
+    }
+
+    /// Search spec for tap-game experiments at this scale.
+    pub fn tap_spec(&self, seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: self.max_simulations,
+            rollout_limit: self.rollout_limit,
+            seed,
+            ..SearchSpec::tap_game()
+        }
+    }
+}
+
+/// Evaluate one algorithm on one environment: `trials` episodes.
+pub fn eval_algo(
+    search: &mut dyn Search,
+    env: &mut dyn Env,
+    scale: &Scale,
+) -> Vec<EpisodeResult> {
+    play_episodes(search, env, scale.seed, scale.trials, scale.max_episode_steps)
+}
+
+/// Rewards vector from episode results.
+pub fn rewards(results: &[EpisodeResult]) -> Vec<f64> {
+    results.iter().map(|r| r.total_reward).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_are_ordered() {
+        let q = Scale::quick();
+        let p = Scale::paper();
+        assert!(q.trials < p.trials);
+        assert!(q.max_simulations < p.max_simulations);
+        assert!(p.workers >= 16);
+    }
+
+    #[test]
+    fn specs_inherit_paper_shapes() {
+        let s = Scale::quick();
+        assert_eq!(s.tap_spec(0).max_width, 5);
+        assert_eq!(s.atari_spec(0).max_width, 20);
+    }
+}

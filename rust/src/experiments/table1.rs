@@ -1,0 +1,148 @@
+//! Table 1: episode returns of WU-UCT vs TreeP / LeafP / RootP on the
+//! 15-game suite, plus the sequential-UCT ceiling and the rollout-policy
+//! floor ("PPO" column analogue), with Bonferroni-corrected paired t-tests.
+
+use crate::env::atari;
+use crate::eval::{HeuristicPolicy, RolloutPolicy};
+use crate::experiments::{eval_algo, rewards, Scale};
+use crate::mcts::{LeafP, RootP, Search, SequentialUct, TreeP, WuUct};
+use crate::util::stats::{bonferroni_threshold, mean, paired_t_test, std_dev};
+use crate::util::table::{mean_pm_std, Table};
+
+/// Raw per-cell data, kept for Fig. 10's relative-performance bars.
+#[derive(Debug, Clone)]
+pub struct Table1Data {
+    pub games: Vec<String>,
+    /// rewards[game][algo] -> per-trial rewards; algo order = ALGOS.
+    pub rewards: Vec<Vec<Vec<f64>>>,
+}
+
+/// Algorithm columns, in the paper's order.
+pub const ALGOS: [&str; 6] = ["WU-UCT", "TreeP", "LeafP", "RootP", "Policy", "UCT"];
+
+fn build_algo(name: &str, scale: &Scale, seed: u64) -> Option<Box<dyn Search>> {
+    let spec = scale.atari_spec(seed);
+    match name {
+        // Paper: 16 simulation workers, 1 expansion worker for fairness.
+        "WU-UCT" => Some(Box::new(WuUct::new(spec, 1, scale.workers))),
+        "TreeP" => Some(Box::new(TreeP::new(spec, scale.workers, 1.0))),
+        "LeafP" => Some(Box::new(LeafP::new(spec, scale.workers))),
+        "RootP" => Some(Box::new(RootP::new(spec, scale.workers))),
+        "UCT" => Some(Box::new(SequentialUct::new(spec))),
+        "Policy" => None, // handled separately: no search at all
+        other => panic!("unknown table-1 algorithm {other}"),
+    }
+}
+
+/// Play episodes with the raw rollout policy (the "PPO" floor analogue).
+fn policy_only_rewards(game: &str, scale: &Scale) -> Vec<f64> {
+    (0..scale.trials)
+        .map(|t| {
+            let mut env = atari::make(game, 1);
+            env.reset(scale.seed.wrapping_add(t as u64 * 7919));
+            let mut policy = HeuristicPolicy::new(scale.seed ^ (t as u64));
+            let mut total = 0.0;
+            let mut steps = 0;
+            while !env.is_terminal() && steps < scale.max_episode_steps {
+                let a = policy.choose(env.as_ref());
+                let r = env.step(a);
+                total += r.reward;
+                steps += 1;
+                if r.done {
+                    break;
+                }
+            }
+            total
+        })
+        .collect()
+}
+
+/// Run the experiment over `games`.
+pub fn run(games: &[&str], scale: &Scale) -> (Table, Table1Data) {
+    let mut table = Table::new(
+        format!(
+            "Table 1 — episode return, {} workers, {} sims/step ({} trials)",
+            scale.workers, scale.max_simulations, scale.trials
+        ),
+        &["Environment", "WU-UCT", "TreeP", "LeafP", "RootP", "Policy", "UCT", "sig"],
+    );
+    let threshold = bonferroni_threshold(0.05, games.len() * 3);
+    let mut data = Table1Data { games: Vec::new(), rewards: Vec::new() };
+
+    for &game in games {
+        let mut per_algo: Vec<Vec<f64>> = Vec::with_capacity(ALGOS.len());
+        for &algo in &ALGOS {
+            let rs = match build_algo(algo, scale, scale.seed ^ fxhash(game) ^ fxhash(algo)) {
+                Some(mut search) => {
+                    let mut env = atari::make(game, 1);
+                    rewards(&eval_algo(search.as_mut(), env.as_mut(), scale))
+                }
+                None => policy_only_rewards(game, scale),
+            };
+            per_algo.push(rs);
+        }
+        // Significance marks: WU-UCT vs TreeP (*), LeafP (†), RootP (‡).
+        let wu = &per_algo[0];
+        let mut marks = String::new();
+        for (i, mark) in [(1usize, '*'), (2, '†'), (3, '‡')] {
+            let t = paired_t_test(wu, &per_algo[i]);
+            if t.p < threshold && mean(wu) > mean(&per_algo[i]) {
+                marks.push(mark);
+            }
+        }
+        let cells: Vec<String> = std::iter::once(game.to_string())
+            .chain(per_algo.iter().map(|rs| mean_pm_std(mean(rs), std_dev(rs))))
+            .chain(std::iter::once(if marks.is_empty() { "-".into() } else { marks }))
+            .collect();
+        table.row(&cells);
+        data.games.push(game.to_string());
+        data.rewards.push(per_algo);
+    }
+    (table, data)
+}
+
+/// Tiny deterministic string hash for per-cell seeds.
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_scale() -> Scale {
+        Scale {
+            trials: 2,
+            max_simulations: 8,
+            rollout_limit: 6,
+            max_episode_steps: 10,
+            workers: 2,
+            ..Scale::quick()
+        }
+    }
+
+    #[test]
+    fn runs_on_two_games_with_full_columns() {
+        let (table, data) = run(&["Boxing", "Freeway"], &tiny_scale());
+        assert_eq!(table.num_rows(), 2);
+        assert_eq!(data.games, vec!["Boxing", "Freeway"]);
+        assert_eq!(data.rewards[0].len(), ALGOS.len());
+        assert_eq!(data.rewards[0][0].len(), 2); // trials
+    }
+
+    #[test]
+    fn policy_floor_is_deterministic_per_seed() {
+        let s = tiny_scale();
+        assert_eq!(policy_only_rewards("Boxing", &s), policy_only_rewards("Boxing", &s));
+    }
+
+    #[test]
+    fn csv_export_works() {
+        let (table, _) = run(&["Tennis"], &tiny_scale());
+        let csv = table.to_csv();
+        assert!(csv.contains("Tennis"));
+        assert!(csv.lines().count() >= 2);
+    }
+}

@@ -1,0 +1,110 @@
+//! Table 3: WU-UCT speedup grid over (expansion workers × simulation
+//! workers) ∈ {1,2,4,8,16}² on two tap-game levels, measured on the
+//! latency-simulated emulator (see DESIGN.md §3).
+
+use std::time::{Duration, Instant};
+
+use crate::env::tapgame::{Level, TapGame};
+use crate::env::SlowEnv;
+use crate::experiments::Scale;
+use crate::mcts::{Search, WuUct};
+use crate::util::table::Table;
+
+/// The paper's worker axis.
+pub const WORKER_AXIS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Measured search time for a (level, Me, Ms) cell, averaged over repeats.
+pub fn search_time(
+    level: &Level,
+    n_exp: usize,
+    n_sim: usize,
+    scale: &Scale,
+    repeats: usize,
+) -> Duration {
+    let inner = TapGame::new(level.clone(), scale.seed ^ 0x9);
+    let env = SlowEnv::new(Box::new(inner), scale.delay);
+    let mut search = WuUct::new(scale.tap_spec(scale.seed), n_exp, n_sim);
+    // One warmup search to populate thread pools / caches.
+    search.search(&env);
+    let t = Instant::now();
+    for _ in 0..repeats {
+        search.search(&env);
+    }
+    t.elapsed() / repeats as u32
+}
+
+/// Full speedup grid for one level: `grid[i][j]` = speedup of
+/// (Me = AXIS[i], Ms = AXIS[j]) relative to (1, 1).
+pub fn speedup_grid(level: &Level, scale: &Scale, repeats: usize) -> Vec<Vec<f64>> {
+    let base = search_time(level, 1, 1, scale, repeats).as_secs_f64();
+    WORKER_AXIS
+        .iter()
+        .map(|&me| {
+            WORKER_AXIS
+                .iter()
+                .map(|&ms| base / search_time(level, me, ms, scale, repeats).as_secs_f64())
+                .collect()
+        })
+        .collect()
+}
+
+/// Render the Table-3 shaped output for both levels.
+pub fn run(scale: &Scale, repeats: usize) -> (Table, Vec<Vec<Vec<f64>>>) {
+    let mut table = Table::new(
+        format!(
+            "Table 3 — WU-UCT speedup grid (Me x Ms), {} sims, {:?} emulator step",
+            scale.max_simulations, scale.delay
+        ),
+        &["Level", "Me", "Ms=1", "Ms=2", "Ms=4", "Ms=8", "Ms=16"],
+    );
+    let mut grids = Vec::new();
+    for level in [Level::level35(), Level::level58()] {
+        let grid = speedup_grid(&level, scale, repeats);
+        for (i, row) in grid.iter().enumerate() {
+            let mut cells = vec![level.id.clone(), WORKER_AXIS[i].to_string()];
+            cells.extend(row.iter().map(|s| format!("{s:.1}")));
+            table.row(&cells);
+        }
+        grids.push(grid);
+    }
+    (table, grids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_grid_shape_and_baseline() {
+        // 2x2 sub-grid at tiny scale: check shape + the (1,1) cell ≈ 1.
+        let scale = Scale {
+            max_simulations: 8,
+            rollout_limit: 4,
+            delay: Duration::from_micros(200),
+            ..Scale::quick()
+        };
+        let level = Level::level35();
+        let base = search_time(&level, 1, 1, &scale, 1).as_secs_f64();
+        assert!(base > 0.0);
+        let s22 = search_time(&level, 2, 2, &scale, 1).as_secs_f64();
+        assert!(s22 > 0.0);
+    }
+
+    #[test]
+    fn more_sim_workers_speed_up_search() {
+        let _serial = crate::util::timer::TIMING_TEST_LOCK.lock().unwrap();
+        let scale = Scale {
+            max_simulations: 16,
+            rollout_limit: 8,
+            delay: Duration::from_micros(400),
+            ..Scale::quick()
+        };
+        let level = Level::level35();
+        let t1 = search_time(&level, 1, 1, &scale, 2);
+        let t8 = search_time(&level, 4, 8, &scale, 2);
+        assert!(
+            t8 < t1,
+            "4x8 workers ({t8:?}) should beat 1x1 ({t1:?})"
+        );
+    }
+}

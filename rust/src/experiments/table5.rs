@@ -1,0 +1,83 @@
+//! Table 5 (Appendix E): WU-UCT vs the TreeP variant that combines
+//! virtual loss with virtual pseudo-count (Eq. 7), at r_VL = n_VL ∈
+//! {1, 2, 3}, over 12 games.
+//!
+//! The paper's takeaway, which this harness lets you verify: no single
+//! (r_VL, n_VL) works across tasks, while WU-UCT has no such knob at all.
+
+use crate::env::atari;
+use crate::experiments::{eval_algo, rewards, Scale};
+use crate::mcts::{TreeP, WuUct};
+use crate::util::stats::{mean, std_dev};
+use crate::util::table::{mean_pm_std, Table};
+
+/// The TreeP hyper-parameter settings of Table 5.
+pub const TREEP_SETTINGS: [(f64, u32); 3] = [(1.0, 1), (2.0, 2), (3.0, 3)];
+
+/// Run on `games`; returns the table plus per-game winner labels.
+pub fn run(games: &[&str], scale: &Scale) -> (Table, Vec<String>) {
+    let mut table = Table::new(
+        format!(
+            "Table 5 — WU-UCT vs TreeP(r_VL=n_VL) variants ({} trials)",
+            scale.trials
+        ),
+        &["Environment", "WU-UCT", "TreeP r=n=1", "TreeP r=n=2", "TreeP r=n=3", "winner"],
+    );
+    let mut winners = Vec::new();
+    for &game in games {
+        let mut means = Vec::new();
+        let mut cells = vec![game.to_string()];
+        // WU-UCT column.
+        {
+            let mut s = WuUct::new(scale.atari_spec(scale.seed ^ 1), 1, scale.workers);
+            let mut env = atari::make(game, 1);
+            let rs = rewards(&eval_algo(&mut s, env.as_mut(), scale));
+            means.push(mean(&rs));
+            cells.push(mean_pm_std(mean(&rs), std_dev(&rs)));
+        }
+        for (i, &(r_vl, n_vl)) in TREEP_SETTINGS.iter().enumerate() {
+            let mut s = TreeP::with_counts(
+                scale.atari_spec(scale.seed ^ (i as u64 + 2)),
+                scale.workers,
+                r_vl,
+                n_vl,
+            );
+            let mut env = atari::make(game, 1);
+            let rs = rewards(&eval_algo(&mut s, env.as_mut(), scale));
+            means.push(mean(&rs));
+            cells.push(mean_pm_std(mean(&rs), std_dev(&rs)));
+        }
+        let labels = ["WU-UCT", "TreeP(1)", "TreeP(2)", "TreeP(3)"];
+        let winner = labels[means
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()]
+        .to_string();
+        cells.push(winner.clone());
+        table.row(&cells);
+        winners.push(winner);
+    }
+    (table, winners)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_variants_on_one_game() {
+        let scale = Scale {
+            trials: 1,
+            max_simulations: 6,
+            rollout_limit: 4,
+            max_episode_steps: 5,
+            workers: 2,
+            ..Scale::quick()
+        };
+        let (t, winners) = run(&["Boxing"], &scale);
+        assert_eq!(t.num_rows(), 1);
+        assert_eq!(winners.len(), 1);
+    }
+}

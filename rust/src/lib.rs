@@ -1,0 +1,29 @@
+//! # WU-UCT: Watch the Unobserved in UCT
+//!
+//! A Rust + JAX + Pallas reproduction of *"Watch the Unobserved: A Simple
+//! Approach to Parallelizing Monte Carlo Tree Search"* (Liu et al., ICLR
+//! 2020).
+//!
+//! The library is organized as the paper's three-layer system:
+//!
+//! * **L3 (this crate)** — the WU-UCT master–worker coordinator
+//!   ([`mcts::wu_uct`]), its baselines ([`mcts::sequential`],
+//!   [`mcts::leafp`], [`mcts::treep`], [`mcts::rootp`]), the environment
+//!   substrates ([`env`]) and every experiment harness ([`experiments`]).
+//! * **L2/L1 (build-time Python)** — the distilled policy-value network
+//!   (JAX) whose forward pass is a fused Pallas kernel, AOT-lowered to HLO
+//!   text in `artifacts/` and executed from Rust via [`runtime`].
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod bench;
+pub mod env;
+pub mod eval;
+pub mod experiments;
+pub mod gameplay;
+pub mod mcts;
+pub mod passrate;
+pub mod runtime;
+pub mod tree;
+pub mod util;

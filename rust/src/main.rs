@@ -1,0 +1,228 @@
+//! `wu-uct` — the leader CLI: run searches, gameplays and every paper
+//! experiment from one binary.
+//!
+//! ```text
+//! wu-uct search        one search on a named environment
+//! wu-uct play          full episode with search-per-step
+//! wu-uct atari-table1  Table 1 (+ Fig. 10 with --relative)
+//! wu-uct atari-fig5    Fig. 5 worker sweep
+//! wu-uct treep-ablation  Table 5 TreeP-variant comparison
+//! wu-uct sweep-speedup Fig. 4 curves (+ Table 3 grid with --grid)
+//! wu-uct breakdown     Fig. 2 time breakdown
+//! wu-uct passrate      Table 2 + Fig. 8 pass-rate system
+//! wu-uct policy-eval   Table 4 policy-only floor
+//! ```
+
+use anyhow::{bail, Result};
+use wu_uct::env::{atari, tapgame::Level, tapgame::TapGame, Env};
+use wu_uct::experiments::{self, Scale};
+use wu_uct::gameplay::play_episode;
+use wu_uct::mcts::{by_name, SearchSpec};
+use wu_uct::passrate::SystemConfig;
+use wu_uct::util::cli::{usage, Args, OptSpec};
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "scale", help: "quick | paper", default: Some("quick") },
+        OptSpec { name: "env", help: "game name or level-35 / level-58", default: Some("Breakout") },
+        OptSpec { name: "algo", help: "WU-UCT | UCT | LeafP | TreeP | RootP", default: Some("WU-UCT") },
+        OptSpec { name: "workers", help: "simulation workers", default: Some("8") },
+        OptSpec { name: "exp-workers", help: "expansion workers", default: Some("1") },
+        OptSpec { name: "sims", help: "simulations per search (0 = scale default)", default: Some("0") },
+        OptSpec { name: "trials", help: "episodes per cell (0 = scale default)", default: Some("0") },
+        OptSpec { name: "games", help: "comma list of games (empty = paper set)", default: Some("") },
+        OptSpec { name: "seed", help: "base rng seed", default: Some("0") },
+        OptSpec { name: "out", help: "CSV output path (empty = none)", default: Some("") },
+        OptSpec { name: "repeats", help: "timing repeats for speedup cells", default: Some("2") },
+        OptSpec { name: "relative", help: "also print Fig 10 relative bars", default: None },
+        OptSpec { name: "grid", help: "full Table 3 grid (else Fig 4 curves)", default: None },
+        OptSpec { name: "help", help: "show usage", default: None },
+    ]
+}
+
+fn scale_from(args: &Args) -> Result<Scale> {
+    let mut scale = match args.str("scale")? {
+        "paper" => Scale::paper(),
+        _ => Scale::quick(),
+    };
+    scale.seed = args.u64("seed")?;
+    let trials = args.usize("trials")?;
+    if trials > 0 {
+        scale.trials = trials;
+    }
+    let sims = args.usize("sims")?;
+    if sims > 0 {
+        scale.max_simulations = sims as u32;
+    }
+    scale.workers = args.usize("workers")?;
+    Ok(scale)
+}
+
+fn games_from(args: &Args, default: &[&str]) -> Vec<String> {
+    let listed = args.get("games").unwrap_or("");
+    if listed.is_empty() {
+        default.iter().map(|s| s.to_string()).collect()
+    } else {
+        listed.split(',').map(|s| s.trim().to_string()).collect()
+    }
+}
+
+fn make_env(name: &str, seed: u64) -> Box<dyn Env> {
+    match name {
+        "level-35" => Box::new(TapGame::new(Level::level35(), seed)),
+        "level-58" => Box::new(TapGame::new(Level::level58(), seed)),
+        other => atari::make(other, seed),
+    }
+}
+
+fn emit(table: &wu_uct::util::table::Table, out: &str) -> Result<()> {
+    print!("{}", table.render());
+    if !out.is_empty() {
+        table.write_csv(out)?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv.iter().map(|s| s.as_str()), &specs())?;
+    let command = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    if args.flag("help") || command == "help" {
+        println!(
+            "{}",
+            usage("wu-uct", "WU-UCT parallel MCTS (ICLR 2020) reproduction", &specs())
+        );
+        println!("commands: search, play, atari-table1, atari-fig5, treep-ablation,");
+        println!("          sweep-speedup, breakdown, passrate, policy-eval");
+        return Ok(());
+    }
+    let scale = scale_from(&args)?;
+    let out = args.str("out")?.to_string();
+
+    match command {
+        "search" => {
+            let env = make_env(args.str("env")?, scale.seed);
+            let spec = SearchSpec {
+                max_simulations: scale.max_simulations,
+                rollout_limit: scale.rollout_limit,
+                seed: scale.seed,
+                ..SearchSpec::default()
+            };
+            let mut search = by_name(args.str("algo")?, spec, scale.workers);
+            let r = search.search(env.as_ref());
+            println!(
+                "{}: best action {} (value {:.3}) after {} sims in {:?}; tree {} nodes",
+                search.name(),
+                r.best_action,
+                r.root_value,
+                r.simulations,
+                r.elapsed,
+                r.tree_size
+            );
+        }
+        "play" => {
+            let mut env = make_env(args.str("env")?, scale.seed);
+            let spec = SearchSpec {
+                max_simulations: scale.max_simulations,
+                rollout_limit: scale.rollout_limit,
+                seed: scale.seed,
+                ..SearchSpec::default()
+            };
+            let mut search = by_name(args.str("algo")?, spec, scale.workers);
+            let r = play_episode(search.as_mut(), env.as_mut(), scale.seed, scale.max_episode_steps);
+            println!(
+                "{} on {}: reward {:.1} in {} steps ({:?}/step)",
+                search.name(),
+                env.name(),
+                r.total_reward,
+                r.steps,
+                r.time_per_step
+            );
+        }
+        "atari-table1" => {
+            let games = games_from(&args, &atari::GAMES);
+            let refs: Vec<&str> = games.iter().map(|s| s.as_str()).collect();
+            let (table, data) = experiments::table1::run(&refs, &scale);
+            emit(&table, &out)?;
+            if args.flag("relative") {
+                let (rel, _) = experiments::fig10::relative_performance(&data);
+                print!("{}", rel.render());
+            }
+        }
+        "atari-fig5" => {
+            let games = games_from(&args, &atari::FIG5_GAMES);
+            let refs: Vec<&str> = games.iter().map(|s| s.as_str()).collect();
+            let table = experiments::fig5::run(&refs, &scale);
+            emit(&table, &out)?;
+        }
+        "treep-ablation" => {
+            let games = games_from(&args, &atari::TABLE5_GAMES);
+            let refs: Vec<&str> = games.iter().map(|s| s.as_str()).collect();
+            let (table, _) = experiments::table5::run(&refs, &scale);
+            emit(&table, &out)?;
+        }
+        "sweep-speedup" => {
+            let repeats = args.usize("repeats")?.max(1);
+            if args.flag("grid") {
+                let (table, _) = experiments::table3::run(&scale, repeats);
+                emit(&table, &out)?;
+            } else {
+                for level in [Level::level35(), Level::level58()] {
+                    let table =
+                        experiments::fig4::speedup_curves(&level, &[1, 4, 16], &scale, repeats);
+                    emit(&table, &out)?;
+                }
+                let perf = experiments::fig4::performance_retention(&scale);
+                emit(&perf, &out)?;
+            }
+        }
+        "breakdown" => {
+            let (table, reports) = experiments::fig2::run(&scale, 2);
+            emit(&table, &out)?;
+            for r in &reports {
+                println!(
+                    "{}: simulation-worker occupancy {:.1}%",
+                    r.workload,
+                    r.sim_occupancy * 100.0
+                );
+            }
+        }
+        "passrate" => {
+            let cfg = if args.str("scale")? == "paper" {
+                SystemConfig::default()
+            } else {
+                SystemConfig::quick()
+            };
+            let (t2, f8, report) = experiments::table2_fig8::run(&cfg)?;
+            emit(&t2, "")?;
+            emit(&f8, &out)?;
+            println!(
+                "MAE {:.1}% over {} levels; {:.0}% under 20% error",
+                report.mae * 100.0,
+                report.errors.len(),
+                report.frac_under_20 * 100.0
+            );
+        }
+        "policy-eval" => {
+            // Table 4 analogue: the rollout-policy floor vs the UCT ceiling.
+            let games = games_from(&args, &atari::GAMES);
+            let refs: Vec<&str> = games.iter().map(|s| s.as_str()).collect();
+            let (_, data) = experiments::table1::run(&refs, &scale);
+            let mut t4 = wu_uct::util::table::Table::new(
+                "Table 4 — rollout-policy floor vs sequential UCT ceiling",
+                &["Environment", "Policy only", "UCT"],
+            );
+            for (g, game) in data.games.iter().enumerate() {
+                t4.row(&[
+                    game.clone(),
+                    format!("{:.1}", wu_uct::util::stats::mean(&data.rewards[g][4])),
+                    format!("{:.1}", wu_uct::util::stats::mean(&data.rewards[g][5])),
+                ]);
+            }
+            emit(&t4, &out)?;
+        }
+        other => bail!("unknown command {other:?}; try `wu-uct help`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,293 @@
+//! Shared search plumbing: specs, results, node initialization, traversal
+//! and sequential backpropagation (Algorithms 7–8).
+
+use std::time::Duration;
+
+use crate::env::Env;
+use crate::tree::{select_child, NodeId, ScoreMode, Tree};
+use crate::util::rng::Pcg32;
+use crate::util::timer::Breakdown;
+
+/// Search hyper-parameters (paper Section 5 / Appendix D defaults).
+#[derive(Debug, Clone)]
+pub struct SearchSpec {
+    /// T_max: total simulations per search (paper: 128 Atari, 500 tap).
+    pub max_simulations: u32,
+    /// d_max: maximum tree depth (paper: 100 Atari, 10 tap).
+    pub max_depth: u32,
+    /// Search width: cap on children per node (paper: 20 Atari, 5 tap).
+    pub max_width: usize,
+    /// β exploration coefficient in Eqs. 2/4.
+    pub beta: f64,
+    /// Discount γ (paper: 0.99).
+    pub gamma: f64,
+    /// Rollout step bound L (paper: 100).
+    pub rollout_limit: u32,
+    /// Probability of stopping traversal at a not-fully-expanded node
+    /// (the `random() < 0.5` rule in Algorithm 1).
+    pub expand_prob: f64,
+    /// Base seed for all search randomness.
+    pub seed: u64,
+}
+
+impl Default for SearchSpec {
+    fn default() -> Self {
+        SearchSpec {
+            max_simulations: 128,
+            max_depth: 100,
+            max_width: 20,
+            beta: 1.0,
+            gamma: 0.99,
+            rollout_limit: 100,
+            expand_prob: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+impl SearchSpec {
+    /// The paper's tap-game configuration (Appendix C.2).
+    pub fn tap_game() -> Self {
+        SearchSpec {
+            max_simulations: 500,
+            max_depth: 10,
+            max_width: 5,
+            ..Default::default()
+        }
+    }
+
+    /// The paper's Atari configuration (Appendix D).
+    pub fn atari() -> Self {
+        SearchSpec::default()
+    }
+}
+
+/// Outcome of one tree search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// Recommended root action (most-visited child).
+    pub best_action: usize,
+    /// Completed simulations.
+    pub simulations: u32,
+    /// Wall-clock time of the search.
+    pub elapsed: Duration,
+    /// Final tree size (node count).
+    pub tree_size: usize,
+    /// Root's value estimate after search.
+    pub root_value: f64,
+    /// Master-side time breakdown (Fig. 2 instrumentation).
+    pub master: Breakdown,
+    /// Aggregated worker-side breakdown.
+    pub workers: Breakdown,
+}
+
+/// A tree-search algorithm (one per paper algorithm / baseline).
+pub trait Search {
+    /// Run a full search from `env`'s current state.
+    fn search(&mut self, env: &dyn Env) -> SearchResult;
+
+    /// Algorithm label for tables ("WU-UCT", "TreeP", ...).
+    fn name(&self) -> String;
+}
+
+/// Initialize a freshly-expanded node from the environment positioned at
+/// it: snapshot the state, record terminality and set the width-capped
+/// untried-action list, ordered by the env's heuristic (the "prior
+/// policy" role from Algorithm 7).
+pub fn init_node(tree: &mut Tree, id: NodeId, env: &dyn Env, spec: &SearchSpec) {
+    let terminal = env.is_terminal();
+    let mut untried: Vec<usize> = if terminal { Vec::new() } else { env.legal_actions() };
+    // Highest-heuristic actions first; truncate to the width cap.
+    untried.sort_by(|&a, &b| {
+        env.action_heuristic(b)
+            .partial_cmp(&env.action_heuristic(a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    untried.truncate(spec.max_width);
+    let node = tree.node_mut(id);
+    node.terminal = terminal;
+    node.untried = untried;
+    node.state = Some(env.snapshot());
+}
+
+/// Why traversal stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Node has untried actions and the expand-coin came up heads (or it
+    /// is an unexpanded leaf) — expansion required.
+    Expand,
+    /// Terminal node reached.
+    Terminal,
+    /// Depth cap reached (simulate from here without expanding).
+    DepthCap,
+    /// Fully-expanded leaf with no children to descend into (width 0).
+    DeadEnd,
+}
+
+/// Traverse from the root following `mode`'s tree policy until one of
+/// Algorithm 1's stop conditions fires. Returns the stop node + reason.
+pub fn traverse(
+    tree: &Tree,
+    mode: ScoreMode,
+    spec: &SearchSpec,
+    rng: &mut Pcg32,
+) -> (NodeId, StopReason) {
+    let mut cur = Tree::ROOT;
+    loop {
+        let node = tree.node(cur);
+        if node.terminal {
+            return (cur, StopReason::Terminal);
+        }
+        if node.depth >= spec.max_depth {
+            return (cur, StopReason::DepthCap);
+        }
+        if !node.fully_expanded() {
+            // Unexpanded leaf must expand; interior nodes flip the coin.
+            if node.is_leaf() || rng.next_f64() < spec.expand_prob {
+                return (cur, StopReason::Expand);
+            }
+        }
+        match select_child(tree, cur, mode, spec.beta) {
+            Some(child) => cur = child,
+            None => return (cur, StopReason::DeadEnd),
+        }
+    }
+}
+
+/// Sequential backpropagation (Algorithm 8 / Eq. 3): walk from `leaf` to
+/// the root, incrementing `N` and folding edge rewards into the return.
+pub fn backprop(tree: &mut Tree, leaf: NodeId, sim_return: f64, gamma: f64) {
+    let mut ret = sim_return;
+    let mut cur = leaf;
+    tree.node_mut(cur).observe(ret);
+    while let Some(parent) = tree.node(cur).parent {
+        ret = tree.node(cur).reward + gamma * ret;
+        tree.node_mut(parent).observe(ret);
+        cur = parent;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+
+    #[test]
+    fn spec_defaults_match_paper() {
+        let s = SearchSpec::default();
+        assert_eq!(s.max_simulations, 128);
+        assert_eq!(s.max_depth, 100);
+        assert_eq!(s.max_width, 20);
+        assert_eq!(s.gamma, 0.99);
+        assert_eq!(s.rollout_limit, 100);
+        let t = SearchSpec::tap_game();
+        assert_eq!(t.max_simulations, 500);
+        assert_eq!(t.max_depth, 10);
+        assert_eq!(t.max_width, 5);
+    }
+
+    #[test]
+    fn init_node_orders_untried_by_heuristic() {
+        let env = Garnet::new(10, 4, 20, 0.0, 3);
+        let mut tree = Tree::new();
+        let spec = SearchSpec::default();
+        init_node(&mut tree, Tree::ROOT, &env, &spec);
+        let untried = &tree.node(Tree::ROOT).untried;
+        assert_eq!(untried.len(), 4);
+        for w in untried.windows(2) {
+            assert!(env.action_heuristic(w[0]) >= env.action_heuristic(w[1]));
+        }
+        assert!(tree.node(Tree::ROOT).state.is_some());
+    }
+
+    #[test]
+    fn init_node_respects_width_cap() {
+        let env = Garnet::new(10, 4, 20, 0.0, 3);
+        let mut tree = Tree::new();
+        let spec = SearchSpec { max_width: 2, ..Default::default() };
+        init_node(&mut tree, Tree::ROOT, &env, &spec);
+        assert_eq!(tree.node(Tree::ROOT).untried.len(), 2);
+    }
+
+    #[test]
+    fn init_terminal_node_has_no_untried() {
+        let mut env = Garnet::new(6, 2, 1, 0.0, 5);
+        env.step(0);
+        assert!(env.is_terminal());
+        let mut tree = Tree::new();
+        init_node(&mut tree, Tree::ROOT, &env, &SearchSpec::default());
+        assert!(tree.node(Tree::ROOT).untried.is_empty());
+        assert!(tree.node(Tree::ROOT).terminal);
+    }
+
+    #[test]
+    fn traverse_stops_at_unexpanded_root() {
+        let env = Garnet::new(10, 3, 20, 0.0, 1);
+        let mut tree = Tree::new();
+        init_node(&mut tree, Tree::ROOT, &env, &SearchSpec::default());
+        let mut rng = Pcg32::new(0);
+        let (node, reason) = traverse(&tree, ScoreMode::WuUct, &SearchSpec::default(), &mut rng);
+        assert_eq!(node, Tree::ROOT);
+        assert_eq!(reason, StopReason::Expand);
+    }
+
+    #[test]
+    fn traverse_descends_into_fully_expanded() {
+        let env = Garnet::new(10, 2, 20, 0.0, 2);
+        let mut tree = Tree::new();
+        let spec = SearchSpec { expand_prob: 0.0, ..Default::default() };
+        init_node(&mut tree, Tree::ROOT, &env, &spec);
+        // Expand both actions manually.
+        let untried = tree.node(Tree::ROOT).untried.clone();
+        for a in untried {
+            let c = tree.add_child(Tree::ROOT, a);
+            tree.node_mut(c).n = 1;
+            tree.node_mut(Tree::ROOT).n += 1;
+        }
+        tree.node_mut(Tree::ROOT).untried.clear();
+        let mut rng = Pcg32::new(0);
+        let (node, reason) = traverse(&tree, ScoreMode::WuUct, &spec, &mut rng);
+        assert_ne!(node, Tree::ROOT, "must descend past a fully-expanded root");
+        // Children are unexpanded leaves -> Expand... but they have empty
+        // untried (never init_node'd) and no children -> DeadEnd.
+        assert_eq!(reason, StopReason::DeadEnd);
+    }
+
+    #[test]
+    fn traverse_respects_depth_cap() {
+        let env = Garnet::new(10, 1, 50, 0.0, 4);
+        let mut tree = Tree::new();
+        let spec = SearchSpec { max_depth: 0, ..Default::default() };
+        init_node(&mut tree, Tree::ROOT, &env, &spec);
+        let mut rng = Pcg32::new(0);
+        let (node, reason) = traverse(&tree, ScoreMode::Uct, &spec, &mut rng);
+        assert_eq!(node, Tree::ROOT);
+        assert_eq!(reason, StopReason::DepthCap);
+    }
+
+    #[test]
+    fn backprop_folds_edge_rewards() {
+        let mut tree = Tree::new();
+        let a = tree.add_child(Tree::ROOT, 0);
+        let b = tree.add_child(a, 0);
+        tree.node_mut(a).reward = 1.0; // R(root, a0)
+        tree.node_mut(b).reward = 2.0; // R(a, a0)
+        backprop(&mut tree, b, 10.0, 0.5);
+        // leaf b observes 10; a observes 2 + 0.5*10 = 7; root observes 1 + 0.5*7 = 4.5
+        assert!((tree.node(b).v - 10.0).abs() < 1e-12);
+        assert!((tree.node(a).v - 7.0).abs() < 1e-12);
+        assert!((tree.node(Tree::ROOT).v - 4.5).abs() < 1e-12);
+        assert_eq!(tree.node(Tree::ROOT).n, 1);
+        tree.check_invariants();
+    }
+
+    #[test]
+    fn backprop_running_mean_over_two_rollouts() {
+        let mut tree = Tree::new();
+        let a = tree.add_child(Tree::ROOT, 0);
+        backprop(&mut tree, a, 1.0, 1.0);
+        backprop(&mut tree, a, 3.0, 1.0);
+        assert_eq!(tree.node(a).n, 2);
+        assert!((tree.node(a).v - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,191 @@
+//! Leaf Parallelization (Algorithm 4; Cazenave & Jouandeau 2007).
+//!
+//! The master runs selection + expansion sequentially with plain UCT
+//! (Eq. 2); at the simulation step it fans the *same* leaf out to all
+//! `N_sim` workers, waits for every return, and backs each up separately.
+//! Good per-leaf statistics, but all workers query one node — the
+//! *collapse of exploration* the paper demonstrates (Section 4).
+
+use std::time::Instant;
+
+use crate::env::Env;
+use crate::eval::{HeuristicPolicy, PolicyFactory};
+use crate::mcts::common::{backprop, init_node, traverse, Search, SearchResult, SearchSpec, StopReason};
+use crate::mcts::wu_uct::workers::{run_expand, Pool, Task, TaskResult};
+use crate::tree::{NodeId, ScoreMode, Tree};
+use crate::util::rng::Pcg32;
+use crate::util::timer::{Breakdown, Phase};
+
+/// Leaf-parallel UCT.
+pub struct LeafP {
+    spec: SearchSpec,
+    rng: Pcg32,
+    pool: Pool,
+}
+
+impl LeafP {
+    pub fn new(spec: SearchSpec, n_workers: usize) -> Self {
+        Self::with_policy(spec, n_workers, HeuristicPolicy::factory())
+    }
+
+    pub fn with_policy(spec: SearchSpec, n_workers: usize, factory: PolicyFactory) -> Self {
+        LeafP {
+            rng: Pcg32::new(spec.seed ^ 0x1ea_f),
+            pool: Pool::new(n_workers, factory, spec.seed ^ 0x1eaf),
+            spec,
+        }
+    }
+
+    fn expand(&mut self, tree: &mut Tree, node: NodeId, template: &dyn Env) -> NodeId {
+        let state = tree.node(node).state.clone().expect("no state at node");
+        let untried = &mut tree.node_mut(node).untried;
+        let pick = if untried.len() > 1 && self.rng.chance(0.25) {
+            self.rng.below_usize(untried.len())
+        } else {
+            0
+        };
+        let action = untried.remove(pick);
+        let mut env = template.clone_boxed();
+        env.restore(&state);
+        let (reward, terminal, snap, child_untried) =
+            run_expand(env.as_mut(), action, self.spec.max_width);
+        let child = tree.add_child(node, action);
+        let n = tree.node_mut(child);
+        n.reward = reward;
+        n.terminal = terminal;
+        n.untried = child_untried;
+        n.state = Some(snap);
+        child
+    }
+}
+
+impl Search for LeafP {
+    fn search(&mut self, root_env: &dyn Env) -> SearchResult {
+        let start = Instant::now();
+        let mut master = Breakdown::new();
+        let mut tree = Tree::new();
+        init_node(&mut tree, Tree::ROOT, root_env, &self.spec);
+
+        let n_sim = self.pool.capacity();
+        let mut t_complete = 0u32;
+        while t_complete < self.spec.max_simulations {
+            let sel = Instant::now();
+            let (node, reason) = traverse(&tree, ScoreMode::Uct, &self.spec, &mut self.rng);
+            master.add(Phase::Selection, sel.elapsed());
+
+            let sim_node = match reason {
+                StopReason::Expand => {
+                    let e = Instant::now();
+                    let child = self.expand(&mut tree, node, root_env);
+                    master.add(Phase::Expansion, e.elapsed());
+                    child
+                }
+                _ => node,
+            };
+
+            if tree.node(sim_node).terminal {
+                let bp = Instant::now();
+                backprop(&mut tree, sim_node, 0.0, self.spec.gamma);
+                master.add(Phase::Backpropagation, bp.elapsed());
+                t_complete += 1;
+                continue;
+            }
+
+            // Fan the same leaf out to every worker.
+            let state = tree.node(sim_node).state.clone().unwrap();
+            let comm = Instant::now();
+            for i in 0..n_sim {
+                let mut env = root_env.clone_boxed();
+                env.restore(&state);
+                self.pool.submit(Task::Simulate {
+                    task_id: i as u64,
+                    env,
+                    gamma: self.spec.gamma,
+                    limit: self.spec.rollout_limit,
+                });
+            }
+            master.add(Phase::Communication, comm.elapsed());
+            // Wait for ALL workers (the defining synchronization barrier).
+            let idle = Instant::now();
+            let mut returns = Vec::with_capacity(n_sim);
+            for _ in 0..n_sim {
+                match self.pool.recv() {
+                    TaskResult::Simulated(r) => returns.push(r.ret),
+                    _ => panic!("unexpected expansion result in LeafP"),
+                }
+            }
+            master.add(Phase::Idle, idle.elapsed());
+            let bp = Instant::now();
+            for ret in returns {
+                backprop(&mut tree, sim_node, ret, self.spec.gamma);
+                t_complete += 1;
+            }
+            master.add(Phase::Backpropagation, bp.elapsed());
+        }
+
+        SearchResult {
+            best_action: tree.best_root_action().unwrap_or(0),
+            simulations: t_complete,
+            elapsed: start.elapsed(),
+            tree_size: tree.len(),
+            root_value: tree.node(Tree::ROOT).v,
+            master,
+            workers: self.pool.breakdown(),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("LeafP[{}]", self.pool.capacity())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+
+    #[test]
+    fn budget_met_in_worker_multiples() {
+        let env = Garnet::new(15, 3, 30, 0.0, 1);
+        let mut s = LeafP::new(
+            SearchSpec { max_simulations: 64, rollout_limit: 20, ..Default::default() },
+            4,
+        );
+        let r = s.search(&env);
+        assert!(r.simulations >= 64);
+        assert!(env.legal_actions().contains(&r.best_action));
+    }
+
+    #[test]
+    fn tree_grows_slower_than_wu_uct() {
+        // LeafP spends its whole budget on few leaves: tree size per
+        // simulation is ~1/n_workers of sequential.
+        let env = Garnet::new(15, 3, 30, 0.0, 2);
+        let spec = SearchSpec {
+            max_simulations: 64,
+            rollout_limit: 20,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut s = LeafP::new(spec, 8);
+        let r = s.search(&env);
+        assert!(
+            r.tree_size <= 1 + (r.simulations as usize / 8) + 1,
+            "LeafP tree {} too large for {} sims on 8 workers",
+            r.tree_size,
+            r.simulations
+        );
+    }
+
+    #[test]
+    fn terminal_root_handled() {
+        let mut env = Garnet::new(6, 2, 1, 0.0, 9);
+        env.step(0);
+        let mut s = LeafP::new(
+            SearchSpec { max_simulations: 8, ..Default::default() },
+            2,
+        );
+        let r = s.search(&env);
+        assert!(r.simulations >= 8);
+    }
+}

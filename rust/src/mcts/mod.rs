@@ -1,0 +1,64 @@
+//! Search algorithms: the paper's WU-UCT plus every baseline it compares
+//! against (Section 4 / Appendix B).
+//!
+//! | Algorithm | Module | Paper reference |
+//! |---|---|---|
+//! | WU-UCT (master–worker, Eq. 4–6) | [`wu_uct`] | Algorithm 1 |
+//! | Sequential UCT | [`sequential`] | Eq. 2–3 ("UCT" column) |
+//! | Leaf parallelization | [`leafp`] | Algorithm 4 |
+//! | Tree parallelization ± virtual pseudo-count | [`treep`] | Algorithm 5, Eq. 7 |
+//! | Root parallelization | [`rootp`] | Algorithm 6 |
+
+pub mod common;
+pub mod leafp;
+pub mod rootp;
+pub mod sequential;
+pub mod treep;
+pub mod wu_uct;
+
+pub use common::{Search, SearchResult, SearchSpec};
+pub use leafp::LeafP;
+pub use rootp::RootP;
+pub use sequential::SequentialUct;
+pub use treep::TreeP;
+pub use wu_uct::WuUct;
+
+/// Construct a named algorithm with uniform worker budget — the factory
+/// the experiment harnesses use (Table 1, Fig. 5, ...).
+pub fn by_name(name: &str, spec: SearchSpec, workers: usize) -> Box<dyn Search> {
+    match name {
+        "WU-UCT" => Box::new(WuUct::new(spec, 1, workers)),
+        "UCT" => Box::new(SequentialUct::new(spec)),
+        "LeafP" => Box::new(LeafP::new(spec, workers)),
+        "TreeP" => Box::new(TreeP::new(spec, workers, 1.0)),
+        "RootP" => Box::new(RootP::new(spec, workers)),
+        other => panic!("unknown algorithm {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+
+    #[test]
+    fn factory_builds_all_algorithms() {
+        let env = Garnet::new(12, 3, 20, 0.0, 1);
+        for name in ["WU-UCT", "UCT", "LeafP", "TreeP", "RootP"] {
+            let spec = SearchSpec {
+                max_simulations: 12,
+                rollout_limit: 10,
+                ..Default::default()
+            };
+            let mut s = by_name(name, spec, 2);
+            let r = s.search(&env);
+            assert!(r.simulations > 0, "{name} did no work");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown algorithm")]
+    fn factory_rejects_unknown() {
+        by_name("AlphaZero", SearchSpec::default(), 2);
+    }
+}

@@ -1,0 +1,229 @@
+//! Sequential UCT (Kocsis et al., 2006) — the paper's "UCT" reference
+//! column and the performance ceiling for every parallel variant.
+//!
+//! One rollout = selection (Eq. 2) → expansion (Algorithm 7) → simulation
+//! (Appendix D estimator) → backpropagation (Algorithm 8), strictly in
+//! sequence.
+
+use std::time::Instant;
+
+use crate::env::Env;
+use crate::eval::{simulation_return, HeuristicPolicy, PolicyFactory, RolloutPolicy};
+use crate::mcts::common::{backprop, init_node, traverse, Search, SearchResult, SearchSpec, StopReason};
+use crate::tree::{NodeId, ScoreMode, Tree};
+use crate::util::rng::Pcg32;
+use crate::util::timer::{Breakdown, Phase};
+
+/// Sequential UCT search.
+pub struct SequentialUct {
+    spec: SearchSpec,
+    policy_factory: PolicyFactory,
+    rng: Pcg32,
+}
+
+impl SequentialUct {
+    pub fn new(spec: SearchSpec) -> Self {
+        Self::with_policy(spec, HeuristicPolicy::factory())
+    }
+
+    pub fn with_policy(spec: SearchSpec, policy_factory: PolicyFactory) -> Self {
+        let rng = Pcg32::new(spec.seed ^ 0x5e9);
+        Self { spec, policy_factory, rng }
+    }
+
+    /// Expand one untried action of `node` (env must be restorable from
+    /// the node's stored state). Returns the new child.
+    fn expand(&mut self, tree: &mut Tree, node: NodeId, env: &mut dyn Env) -> NodeId {
+        let state = tree
+            .node(node)
+            .state
+            .clone()
+            .expect("expanding node without stored state");
+        // Prior policy = heuristic ordering (init_node sorted best-first);
+        // draw among the top untried actions with mild randomization.
+        let untried = &mut tree.node_mut(node).untried;
+        let pick = if untried.len() > 1 && self.rng.chance(0.25) {
+            self.rng.below_usize(untried.len())
+        } else {
+            0
+        };
+        let action = untried.remove(pick);
+        env.restore(&state);
+        let step = env.step(action);
+        let child = tree.add_child(node, action);
+        tree.node_mut(child).reward = step.reward;
+        init_node(tree, child, env, &self.spec);
+        tree.node_mut(child).terminal = step.done || env.is_terminal();
+        child
+    }
+}
+
+impl Search for SequentialUct {
+    fn search(&mut self, root_env: &dyn Env) -> SearchResult {
+        let start = Instant::now();
+        let mut master = Breakdown::new();
+        let mut tree = Tree::new();
+        init_node(&mut tree, Tree::ROOT, root_env, &self.spec);
+        let mut env = root_env.clone_boxed();
+        let mut policy: Box<dyn RolloutPolicy> =
+            (self.policy_factory)(self.spec.seed ^ 0x51b);
+
+        let mut sims = 0;
+        while sims < self.spec.max_simulations {
+            // Selection.
+            let sel_start = Instant::now();
+            let (node, reason) =
+                traverse(&tree, ScoreMode::Uct, &self.spec, &mut self.rng);
+            master.add(Phase::Selection, sel_start.elapsed());
+
+            // Expansion (when required).
+            let sim_node = match reason {
+                StopReason::Expand => {
+                    let exp_start = Instant::now();
+                    let child = self.expand(&mut tree, node, env.as_mut());
+                    master.add(Phase::Expansion, exp_start.elapsed());
+                    child
+                }
+                _ => node,
+            };
+
+            // Simulation.
+            let ret = if tree.node(sim_node).terminal {
+                0.0
+            } else {
+                let sim_start = Instant::now();
+                let state = tree
+                    .node(sim_node)
+                    .state
+                    .clone()
+                    .expect("simulating node without state");
+                env.restore(&state);
+                let r = simulation_return(
+                    env.as_mut(),
+                    policy.as_mut(),
+                    self.spec.gamma,
+                    self.spec.rollout_limit,
+                );
+                master.add(Phase::Simulation, sim_start.elapsed());
+                r
+            };
+
+            // Backpropagation.
+            let bp_start = Instant::now();
+            backprop(&mut tree, sim_node, ret, self.spec.gamma);
+            master.add(Phase::Backpropagation, bp_start.elapsed());
+            sims += 1;
+        }
+
+        SearchResult {
+            best_action: tree.best_root_action().unwrap_or(0),
+            simulations: sims,
+            elapsed: start.elapsed(),
+            tree_size: tree.len(),
+            root_value: tree.node(Tree::ROOT).v,
+            master,
+            workers: Breakdown::new(),
+        }
+    }
+
+    fn name(&self) -> String {
+        "UCT".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::env::tapgame::{Level, TapGame};
+
+    #[test]
+    fn search_completes_budget_and_builds_tree() {
+        let env = Garnet::new(15, 3, 30, 0.0, 1);
+        let mut s = SequentialUct::new(SearchSpec {
+            max_simulations: 64,
+            ..Default::default()
+        });
+        let r = s.search(&env);
+        assert_eq!(r.simulations, 64);
+        assert!(r.tree_size > 1, "tree must grow");
+        assert!(r.tree_size <= 65, "at most one expansion per rollout");
+        assert!(env.legal_actions().contains(&r.best_action));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let env = Garnet::new(15, 3, 30, 0.0, 2);
+        let run = |seed| {
+            let mut s = SequentialUct::new(SearchSpec {
+                max_simulations: 40,
+                seed,
+                ..Default::default()
+            });
+            let r = s.search(&env);
+            (r.best_action, r.tree_size, r.root_value.to_bits())
+        };
+        assert_eq!(run(7), run(7));
+    }
+
+    #[test]
+    fn uct_finds_near_best_arm() {
+        // Ground truth from exact value iteration: the chosen arm's Q*
+        // must be close to the best arm's Q* (exact-argmax equality is too
+        // brittle when arms are near-tied).
+        let env = Garnet::new(20, 4, 10, 0.0, 42);
+        let best_q = (0..4).map(|a| env.q_star(a, 10)).fold(f64::MIN, f64::max);
+        let mut s = SequentialUct::new(SearchSpec {
+            max_simulations: 400,
+            max_depth: 10,
+            gamma: 1.0,
+            rollout_limit: 10,
+            seed: 3,
+            ..Default::default()
+        });
+        let r = s.search(&env);
+        let got_q = env.q_star(r.best_action, 10);
+        assert!(
+            got_q >= best_q - 0.6,
+            "UCT picked a weak arm: Q*={got_q:.3} vs best {best_q:.3}"
+        );
+    }
+
+    #[test]
+    fn works_on_tap_game() {
+        let env = TapGame::new(Level::level35(), 5);
+        let mut s = SequentialUct::new(SearchSpec {
+            max_simulations: 50,
+            ..SearchSpec::tap_game()
+        });
+        let r = s.search(&env);
+        assert!(env.legal_actions().contains(&r.best_action));
+        assert!(r.elapsed.as_secs() < 30);
+    }
+
+    #[test]
+    fn terminal_root_returns_gracefully() {
+        let mut env = Garnet::new(6, 2, 1, 0.0, 9);
+        env.step(0);
+        assert!(env.is_terminal());
+        let mut s = SequentialUct::new(SearchSpec {
+            max_simulations: 8,
+            ..Default::default()
+        });
+        let r = s.search(&env);
+        assert_eq!(r.best_action, 0); // no children: fallback action
+    }
+
+    #[test]
+    fn breakdown_attributes_time() {
+        let env = Garnet::new(15, 3, 30, 0.0, 4);
+        let mut s = SequentialUct::new(SearchSpec {
+            max_simulations: 32,
+            ..Default::default()
+        });
+        let r = s.search(&env);
+        assert!(r.master.count(Phase::Selection) == 32);
+        assert!(r.master.count(Phase::Backpropagation) == 32);
+        assert!(r.master.count(Phase::Simulation) > 0);
+    }
+}

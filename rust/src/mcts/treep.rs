@@ -1,0 +1,278 @@
+//! Tree Parallelization with virtual loss (Algorithm 5; Chaslot et al.
+//! 2008), plus the Appendix-E variant with virtual pseudo-counts (Eq. 7).
+//!
+//! `N_sim` workers share one search tree. During selection each worker
+//! stamps a virtual loss `r_VL` (and optionally a pseudo-count `n_VL`)
+//! onto every traversed node, discouraging other workers from following;
+//! both are removed during backpropagation. The paper's Section-4 analysis
+//! (and our Table-5 bench) shows the hard additive penalty causes
+//! *exploitation failure* — no single (r_VL, n_VL) works across tasks.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::env::Env;
+use crate::eval::{simulation_return, HeuristicPolicy, PolicyFactory};
+use crate::mcts::common::{backprop, init_node, traverse, Search, SearchResult, SearchSpec, StopReason};
+use crate::mcts::wu_uct::workers::run_expand;
+use crate::tree::{NodeId, ScoreMode, Tree};
+use crate::util::rng::Pcg32;
+use crate::util::timer::{Breakdown, Phase};
+
+/// Tree-parallel UCT with virtual loss.
+pub struct TreeP {
+    spec: SearchSpec,
+    n_workers: usize,
+    /// Virtual loss subtracted from traversed values (Algorithm 5).
+    pub r_vl: f64,
+    /// Virtual pseudo-count (Appendix E's Eq. 7 variant; 0 = classic).
+    pub n_vl: u32,
+    policy_factory: PolicyFactory,
+}
+
+impl TreeP {
+    /// Classic TreeP (virtual loss only).
+    pub fn new(spec: SearchSpec, n_workers: usize, r_vl: f64) -> Self {
+        Self::with_counts(spec, n_workers, r_vl, 0)
+    }
+
+    /// Appendix-E variant: virtual loss + virtual pseudo-count (Eq. 7).
+    pub fn with_counts(spec: SearchSpec, n_workers: usize, r_vl: f64, n_vl: u32) -> Self {
+        Self {
+            spec,
+            n_workers,
+            r_vl,
+            n_vl,
+            policy_factory: HeuristicPolicy::factory(),
+        }
+    }
+
+    pub fn with_policy(mut self, factory: PolicyFactory) -> Self {
+        self.policy_factory = factory;
+        self
+    }
+}
+
+impl Search for TreeP {
+    fn search(&mut self, root_env: &dyn Env) -> SearchResult {
+        let start = Instant::now();
+        let tree = Mutex::new({
+            let mut t = Tree::new();
+            init_node(&mut t, Tree::ROOT, root_env, &self.spec);
+            t
+        });
+        let issued = AtomicU32::new(0);
+        let completed = AtomicU32::new(0);
+        let worker_breakdown = Mutex::new(Breakdown::new());
+        let spec = &self.spec;
+        let (r_vl, n_vl) = (self.r_vl, self.n_vl);
+        let factory = &self.policy_factory;
+
+        std::thread::scope(|scope| {
+            for w in 0..self.n_workers {
+                let tree = &tree;
+                let issued = &issued;
+                let completed = &completed;
+                let worker_breakdown = &worker_breakdown;
+                let root_env = &*root_env;
+                scope.spawn(move || {
+                    let mut rng = Pcg32::new(spec.seed ^ (0x7ee * (w as u64 + 1)));
+                    let mut policy = factory(spec.seed ^ (0x901c * (w as u64 + 3)));
+                    let mut local = Breakdown::new();
+                    loop {
+                        if issued.fetch_add(1, Ordering::SeqCst) >= spec.max_simulations {
+                            break;
+                        }
+                        // ---- selection (+ virtual loss) under the lock ----
+                        let sel = Instant::now();
+                        let mut guard = tree.lock().unwrap();
+                        let (node, reason) =
+                            traverse(&guard, ScoreMode::VirtualLoss, spec, &mut rng);
+                        let path = guard.path_to_root(node);
+                        for &id in &path {
+                            let n = guard.node_mut(id);
+                            n.vloss += r_vl;
+                            n.vcount += n_vl;
+                        }
+                        // Claim an expansion action if needed.
+                        let expand: Option<(usize, crate::env::EnvState)> = match reason {
+                            StopReason::Expand => {
+                                let state = guard.node(node).state.clone().unwrap();
+                                let untried = &mut guard.node_mut(node).untried;
+                                if untried.is_empty() {
+                                    None
+                                } else {
+                                    let pick = if untried.len() > 1 && rng.chance(0.25) {
+                                        rng.below_usize(untried.len())
+                                    } else {
+                                        0
+                                    };
+                                    Some((untried.remove(pick), state))
+                                }
+                            }
+                            _ => None,
+                        };
+                        let node_state = guard.node(node).state.clone();
+                        let node_terminal = guard.node(node).terminal;
+                        drop(guard);
+                        local.add(Phase::Selection, sel.elapsed());
+
+                        // ---- expansion + simulation, lock-free ----
+                        let mut child_payload = None;
+                        let sim_ret;
+                        if let Some((action, state)) = expand {
+                            let e = Instant::now();
+                            let mut env = root_env.clone_boxed();
+                            env.restore(&state);
+                            let payload = run_expand(env.as_mut(), action, spec.max_width);
+                            local.add(Phase::Expansion, e.elapsed());
+                            let s = Instant::now();
+                            sim_ret = if payload.1 {
+                                0.0
+                            } else {
+                                simulation_return(
+                                    env.as_mut(),
+                                    policy.as_mut(),
+                                    spec.gamma,
+                                    spec.rollout_limit,
+                                )
+                            };
+                            local.add(Phase::Simulation, s.elapsed());
+                            child_payload = Some((action, payload));
+                        } else if node_terminal || node_state.is_none() {
+                            sim_ret = 0.0;
+                        } else {
+                            let s = Instant::now();
+                            let mut env = root_env.clone_boxed();
+                            env.restore(node_state.as_ref().unwrap());
+                            sim_ret = simulation_return(
+                                env.as_mut(),
+                                policy.as_mut(),
+                                spec.gamma,
+                                spec.rollout_limit,
+                            );
+                            local.add(Phase::Simulation, s.elapsed());
+                        }
+
+                        // ---- backprop + virtual-loss removal ----
+                        let bp = Instant::now();
+                        let mut guard = tree.lock().unwrap();
+                        let sim_node: NodeId = match child_payload {
+                            Some((action, (reward, terminal, snap, untried))) => {
+                                let child = guard.add_child(node, action);
+                                let nn = guard.node_mut(child);
+                                nn.reward = reward;
+                                nn.terminal = terminal;
+                                nn.untried = untried;
+                                nn.state = Some(snap);
+                                child
+                            }
+                            None => node,
+                        };
+                        backprop(&mut guard, sim_node, sim_ret, spec.gamma);
+                        for &id in &path {
+                            let n = guard.node_mut(id);
+                            n.vloss -= r_vl;
+                            n.vcount -= n_vl;
+                        }
+                        drop(guard);
+                        local.add(Phase::Backpropagation, bp.elapsed());
+                        completed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    worker_breakdown.lock().unwrap().merge(&local);
+                });
+            }
+        });
+
+        let tree = tree.into_inner().unwrap();
+        debug_assert!(
+            tree.iter().all(|(_, n)| n.vloss.abs() < 1e-9 && n.vcount == 0),
+            "virtual losses must be fully removed at quiescence"
+        );
+        SearchResult {
+            best_action: tree.best_root_action().unwrap_or(0),
+            simulations: completed.load(Ordering::SeqCst),
+            elapsed: start.elapsed(),
+            tree_size: tree.len(),
+            root_value: tree.node(Tree::ROOT).v,
+            master: Breakdown::new(),
+            workers: worker_breakdown.into_inner().unwrap(),
+        }
+    }
+
+    fn name(&self) -> String {
+        if self.n_vl > 0 {
+            format!("TreeP[{}w,r={},n={}]", self.n_workers, self.r_vl, self.n_vl)
+        } else {
+            format!("TreeP[{}w,r={}]", self.n_workers, self.r_vl)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+
+    fn spec(sims: u32, seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: sims,
+            rollout_limit: 20,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn completes_budget() {
+        let env = Garnet::new(15, 3, 30, 0.0, 1);
+        let mut s = TreeP::new(spec(64, 0), 4, 1.0);
+        let r = s.search(&env);
+        assert_eq!(r.simulations, 64);
+        assert!(r.tree_size > 1);
+    }
+
+    #[test]
+    fn virtual_losses_cleaned_up() {
+        // The debug assertion in search() checks quiescence; run it.
+        let env = Garnet::new(15, 3, 30, 0.0, 2);
+        let mut s = TreeP::new(spec(48, 1), 8, 2.0);
+        let r = s.search(&env);
+        assert!(env.legal_actions().contains(&r.best_action));
+    }
+
+    #[test]
+    fn pseudo_count_variant_runs() {
+        let env = Garnet::new(15, 3, 30, 0.0, 3);
+        let mut s = TreeP::with_counts(spec(32, 2), 4, 2.0, 2);
+        let r = s.search(&env);
+        assert_eq!(r.simulations, 32);
+        assert!(s.name().contains("n=2"));
+    }
+
+    #[test]
+    fn single_worker_matches_sequential_quality() {
+        // With 1 worker there is no contention: TreeP degenerates to
+        // sequential UCT and must pick a near-best arm (exact Q* oracle).
+        let env = Garnet::new(20, 4, 10, 0.0, 42);
+        let best_q = (0..4).map(|a| env.q_star(a, 10)).fold(f64::MIN, f64::max);
+        let mut s = TreeP::new(
+            SearchSpec {
+                max_simulations: 300,
+                max_depth: 10,
+                gamma: 1.0,
+                rollout_limit: 10,
+                seed: 3,
+                ..Default::default()
+            },
+            1,
+            1.0,
+        );
+        let got_q = env.q_star(s.search(&env).best_action, 10);
+        assert!(
+            got_q >= best_q - 0.6,
+            "TreeP picked a weak arm: Q*={got_q:.3} vs best {best_q:.3}"
+        );
+    }
+}

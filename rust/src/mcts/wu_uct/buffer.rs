@@ -1,0 +1,104 @@
+//! Task-index bookkeeping (Appendix A's task buffers + centralized
+//! game-state storage).
+//!
+//! The master tags every outstanding expansion / simulation task with an
+//! id `τ` so returning results can be routed back to their tree node; node
+//! snapshots themselves live *on the nodes* (`Node::state`), which is the
+//! centralized storage Appendix A argues for (each state is used at most
+//! |A|+1 times, so decentralized copies would be wasted).
+
+use std::collections::HashMap;
+
+use crate::tree::NodeId;
+
+/// Kind of outstanding task, for accounting and assertions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Expansion of `node` via the recorded action.
+    Expand { action: usize },
+    /// Simulation query rooted at `node`.
+    Simulate,
+}
+
+/// Maps in-flight task ids to their tree nodes.
+#[derive(Debug, Default)]
+pub struct TaskTable {
+    next_id: u64,
+    pending: HashMap<u64, (NodeId, TaskKind)>,
+}
+
+impl TaskTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new task; returns its id `τ`.
+    pub fn register(&mut self, node: NodeId, kind: TaskKind) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.insert(id, (node, kind));
+        id
+    }
+
+    /// Resolve and remove a completed task. Panics on unknown ids — a
+    /// worker returning a result the master never issued is a bug.
+    pub fn resolve(&mut self, id: u64) -> (NodeId, TaskKind) {
+        self.pending
+            .remove(&id)
+            .unwrap_or_else(|| panic!("unknown task id {id}"))
+    }
+
+    /// Peek without removing.
+    pub fn get(&self, id: u64) -> Option<(NodeId, TaskKind)> {
+        self.pending.get(&id).copied()
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_resolve_roundtrip() {
+        let mut t = TaskTable::new();
+        let a = t.register(5, TaskKind::Simulate);
+        let b = t.register(9, TaskKind::Expand { action: 3 });
+        assert_ne!(a, b);
+        assert_eq!(t.outstanding(), 2);
+        assert_eq!(t.resolve(a), (5, TaskKind::Simulate));
+        assert_eq!(t.resolve(b), (9, TaskKind::Expand { action: 3 }));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn ids_are_unique_across_many() {
+        let mut t = TaskTable::new();
+        let ids: Vec<u64> = (0..100).map(|i| t.register(i, TaskKind::Simulate)).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown task id")]
+    fn resolving_unknown_id_panics() {
+        TaskTable::new().resolve(42);
+    }
+
+    #[test]
+    fn get_peeks_without_removing() {
+        let mut t = TaskTable::new();
+        let id = t.register(1, TaskKind::Simulate);
+        assert_eq!(t.get(id), Some((1, TaskKind::Simulate)));
+        assert_eq!(t.outstanding(), 1);
+    }
+}

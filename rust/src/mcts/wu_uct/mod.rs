@@ -1,0 +1,442 @@
+//! WU-UCT: the paper's algorithm (Section 3, Algorithm 1).
+//!
+//! A centralized **master** owns the tree and performs selection (Eq. 4)
+//! and both backpropagation sub-routines — *incomplete update* (Eq. 5,
+//! `O += 1` along the path as soon as a simulation is queued) and
+//! *complete update* (Eq. 6, `O -= 1; N += 1; V ← running mean` when the
+//! result returns). The expensive expansion and simulation steps run on
+//! two worker [`Pool`]s. The master keeps issuing rollouts until all
+//! workers are occupied, waits on whichever pool is full (Algorithm 1's
+//! control flow), and drains at the end of the budget, guaranteeing
+//! `ΣO = 0` at quiescence (a tested invariant).
+
+pub mod buffer;
+pub mod workers;
+
+use std::time::Instant;
+
+use crate::env::Env;
+use crate::eval::{HeuristicPolicy, PolicyFactory};
+use crate::mcts::common::{init_node, traverse, Search, SearchResult, SearchSpec, StopReason};
+use crate::tree::{NodeId, ScoreMode, Tree};
+use crate::util::rng::Pcg32;
+use crate::util::timer::{Breakdown, Phase};
+
+use buffer::{TaskKind, TaskTable};
+use workers::{Pool, Task, TaskResult};
+
+/// The WU-UCT parallel search.
+pub struct WuUct {
+    spec: SearchSpec,
+    rng: Pcg32,
+    expansion: Pool,
+    simulation: Pool,
+    /// Breakdown snapshot taken at the previous search's end, so each
+    /// search reports only its own worker time.
+    workers_baseline: Breakdown,
+}
+
+impl WuUct {
+    /// Create a WU-UCT search with `n_exp` expansion and `n_sim`
+    /// simulation workers (the paper's two pool sizes).
+    pub fn new(spec: SearchSpec, n_exp: usize, n_sim: usize) -> Self {
+        Self::with_policy(spec, n_exp, n_sim, HeuristicPolicy::factory())
+    }
+
+    pub fn with_policy(
+        spec: SearchSpec,
+        n_exp: usize,
+        n_sim: usize,
+        policy_factory: PolicyFactory,
+    ) -> Self {
+        let expansion = Pool::new(n_exp, policy_factory.clone(), spec.seed ^ 0xe);
+        let simulation = Pool::new(n_sim, policy_factory, spec.seed ^ 0x5);
+        WuUct {
+            rng: Pcg32::new(spec.seed ^ 0x10_0c7),
+            spec,
+            expansion,
+            simulation,
+            workers_baseline: Breakdown::new(),
+        }
+    }
+
+    pub fn n_expansion_workers(&self) -> usize {
+        self.expansion.capacity()
+    }
+
+    pub fn n_simulation_workers(&self) -> usize {
+        self.simulation.capacity()
+    }
+
+    /// Eq. 5: `O_s += 1` along the path to the root.
+    fn incomplete_update(tree: &mut Tree, node: NodeId) {
+        tree.for_path_to_root(node, |n| n.o += 1);
+    }
+
+    /// Eq. 6 + Eq. 3: `O -= 1; N += 1; V ← mean` along the path, folding
+    /// edge rewards into the return exactly like sequential backprop.
+    fn complete_update(tree: &mut Tree, node: NodeId, sim_return: f64, gamma: f64) {
+        let mut ret = sim_return;
+        let mut cur = node;
+        {
+            let n = tree.node_mut(cur);
+            debug_assert!(n.o > 0, "complete update without matching incomplete");
+            n.o -= 1;
+            n.observe(ret);
+        }
+        while let Some(parent) = tree.node(cur).parent {
+            ret = tree.node(cur).reward + gamma * ret;
+            let p = tree.node_mut(parent);
+            debug_assert!(p.o > 0, "complete update without matching incomplete");
+            p.o -= 1;
+            p.observe(ret);
+            cur = parent;
+        }
+    }
+
+    /// Restore a fresh emulator clone to `node`'s snapshot.
+    fn env_at(template: &dyn Env, tree: &Tree, node: NodeId) -> Box<dyn Env> {
+        let state = tree
+            .node(node)
+            .state
+            .as_ref()
+            .expect("node without stored game-state");
+        let mut env = template.clone_boxed();
+        env.restore(state);
+        env
+    }
+
+    /// Queue a simulation for `node` and apply the incomplete update.
+    /// Terminal nodes short-circuit with a zero-return complete update
+    /// (Algorithm 1's "if episode terminated" branch).
+    fn queue_simulation(
+        &mut self,
+        tree: &mut Tree,
+        tasks: &mut TaskTable,
+        template: &dyn Env,
+        node: NodeId,
+        pending_sim: &mut usize,
+        t_complete: &mut u32,
+        master: &mut Breakdown,
+    ) {
+        Self::incomplete_update(tree, node);
+        if tree.node(node).terminal {
+            Self::complete_update(tree, node, 0.0, self.spec.gamma);
+            *t_complete += 1;
+            return;
+        }
+        let id = tasks.register(node, TaskKind::Simulate);
+        let comm = Instant::now();
+        let env = Self::env_at(template, tree, node);
+        self.simulation.submit(Task::Simulate {
+            task_id: id,
+            env,
+            gamma: self.spec.gamma,
+            limit: self.spec.rollout_limit,
+        });
+        master.add(Phase::Communication, comm.elapsed());
+        *pending_sim += 1;
+    }
+
+    /// Install an expansion result as a new child and return its id.
+    fn install_child(
+        tree: &mut Tree,
+        parent: NodeId,
+        action: usize,
+        res: workers::ExpandResult,
+    ) -> NodeId {
+        let child = tree.add_child(parent, action);
+        let node = tree.node_mut(child);
+        node.reward = res.reward;
+        node.terminal = res.terminal;
+        node.untried = res.untried;
+        node.state = Some(res.state);
+        child
+    }
+}
+
+impl Search for WuUct {
+    fn search(&mut self, root_env: &dyn Env) -> SearchResult {
+        let start = Instant::now();
+        let mut master = Breakdown::new();
+        let mut tree = Tree::new();
+        init_node(&mut tree, Tree::ROOT, root_env, &self.spec);
+
+        let mut tasks = TaskTable::new();
+        let mut pending_exp = 0usize;
+        let mut pending_sim = 0usize;
+        let mut issued = 0u32; // rollouts started (each ends in 1 complete update)
+        let mut t_complete = 0u32;
+        let t_max = self.spec.max_simulations;
+
+        while t_complete < t_max {
+            // Issue new rollouts while budget remains and pools have room.
+            if issued < t_max && pending_exp < self.expansion.capacity() && pending_sim < self.simulation.capacity()
+            {
+                let sel = Instant::now();
+                let (node, reason) =
+                    traverse(&tree, ScoreMode::WuUct, &self.spec, &mut self.rng);
+                master.add(Phase::Selection, sel.elapsed());
+                issued += 1;
+                match reason {
+                    StopReason::Expand => {
+                        // Pop the prior-policy action (heuristic-best with
+                        // mild randomization, as in SequentialUct).
+                        let untried = &mut tree.node_mut(node).untried;
+                        let pick = if untried.len() > 1 && self.rng.chance(0.25) {
+                            self.rng.below_usize(untried.len())
+                        } else {
+                            0
+                        };
+                        let action = untried.remove(pick);
+                        let id = tasks.register(node, TaskKind::Expand { action });
+                        let comm = Instant::now();
+                        let env = Self::env_at(root_env, &tree, node);
+                        self.expansion.submit(Task::Expand {
+                            task_id: id,
+                            env,
+                            action,
+                            max_width: self.spec.max_width,
+                        });
+                        master.add(Phase::Communication, comm.elapsed());
+                        pending_exp += 1;
+                    }
+                    StopReason::Terminal | StopReason::DepthCap | StopReason::DeadEnd => {
+                        self.queue_simulation(
+                            &mut tree,
+                            &mut tasks,
+                            root_env,
+                            node,
+                            &mut pending_sim,
+                            &mut t_complete,
+                            &mut master,
+                        );
+                    }
+                }
+                continue;
+            }
+
+            // Pools saturated or budget issued: wait for results.
+            // Prefer draining expansions first (they feed simulations).
+            if pending_exp > 0
+                && (pending_exp >= self.expansion.capacity() || issued >= t_max)
+            {
+                let idle = Instant::now();
+                let result = self.expansion.recv();
+                master.add(Phase::Idle, idle.elapsed());
+                match result {
+                    TaskResult::Expanded(res) => {
+                        pending_exp -= 1;
+                        let bp = Instant::now();
+                        let (parent, kind) = tasks.resolve(res.task_id);
+                        let TaskKind::Expand { action } = kind else {
+                            panic!("expansion pool returned a non-expansion task");
+                        };
+                        let child = Self::install_child(&mut tree, parent, action, res);
+                        master.add(Phase::Backpropagation, bp.elapsed());
+                        self.queue_simulation(
+                            &mut tree,
+                            &mut tasks,
+                            root_env,
+                            child,
+                            &mut pending_sim,
+                            &mut t_complete,
+                            &mut master,
+                        );
+                    }
+                    TaskResult::Simulated(_) => {
+                        panic!("simulation result on the expansion channel")
+                    }
+                }
+                continue;
+            }
+
+            if pending_sim > 0 {
+                let idle = Instant::now();
+                let result = self.simulation.recv();
+                master.add(Phase::Idle, idle.elapsed());
+                match result {
+                    TaskResult::Simulated(res) => {
+                        pending_sim -= 1;
+                        let bp = Instant::now();
+                        let (node, kind) = tasks.resolve(res.task_id);
+                        debug_assert_eq!(kind, TaskKind::Simulate);
+                        Self::complete_update(&mut tree, node, res.ret, self.spec.gamma);
+                        master.add(Phase::Backpropagation, bp.elapsed());
+                        t_complete += 1;
+                    }
+                    TaskResult::Expanded(_) => {
+                        panic!("expansion result on the simulation channel")
+                    }
+                }
+                continue;
+            }
+
+            // Nothing pending and budget issued but t_complete < t_max can
+            // only happen via terminal short-circuits, handled inline.
+            debug_assert!(issued >= t_max);
+            break;
+        }
+
+        debug_assert_eq!(tree.total_unobserved(), 0, "O must drain to zero");
+        debug_assert!(tasks.is_empty(), "all tasks resolved");
+
+        let workers_now = {
+            let mut b = self.expansion.breakdown();
+            b.merge(&self.simulation.breakdown());
+            b
+        };
+        let mut workers = workers_now.clone();
+        workers.subtract(&self.workers_baseline);
+        self.workers_baseline = workers_now;
+
+        SearchResult {
+            best_action: tree.best_root_action().unwrap_or(0),
+            simulations: t_complete,
+            elapsed: start.elapsed(),
+            tree_size: tree.len(),
+            root_value: tree.node(Tree::ROOT).v,
+            master,
+            workers,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "WU-UCT[{}e/{}s]",
+            self.expansion.capacity(),
+            self.simulation.capacity()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::env::tapgame::{Level, TapGame};
+    use crate::mcts::sequential::SequentialUct;
+
+    fn spec(sims: u32, seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: sims,
+            rollout_limit: 30,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn completes_budget_exactly() {
+        let env = Garnet::new(15, 3, 30, 0.0, 1);
+        let mut s = WuUct::new(spec(64, 0), 2, 4);
+        let r = s.search(&env);
+        assert_eq!(r.simulations, 64);
+        assert!(r.tree_size > 1);
+    }
+
+    #[test]
+    fn search_is_reusable_across_calls() {
+        let env = Garnet::new(15, 3, 30, 0.0, 2);
+        let mut s = WuUct::new(spec(32, 1), 2, 2);
+        let r1 = s.search(&env);
+        let r2 = s.search(&env);
+        assert_eq!(r1.simulations, 32);
+        assert_eq!(r2.simulations, 32);
+    }
+
+    #[test]
+    fn finds_near_best_arm_like_sequential() {
+        let env = Garnet::new(20, 4, 10, 0.0, 42);
+        let best_q = (0..4).map(|a| env.q_star(a, 10)).fold(f64::MIN, f64::max);
+        let mut wu = WuUct::new(
+            SearchSpec {
+                max_simulations: 300,
+                max_depth: 10,
+                gamma: 1.0,
+                rollout_limit: 10,
+                seed: 3,
+                ..Default::default()
+            },
+            2,
+            8,
+        );
+        let got_q = env.q_star(wu.search(&env).best_action, 10);
+        assert!(
+            got_q >= best_q - 0.6,
+            "WU-UCT picked a weak arm: Q*={got_q:.3} vs best {best_q:.3}"
+        );
+        let _ = SequentialUct::new(SearchSpec::default()); // keep import used
+    }
+
+    #[test]
+    fn works_on_tap_game_with_16_workers() {
+        let env = TapGame::new(Level::level35(), 5);
+        let mut s = WuUct::new(
+            SearchSpec {
+                max_simulations: 100,
+                seed: 7,
+                ..SearchSpec::tap_game()
+            },
+            4,
+            16,
+        );
+        let r = s.search(&env);
+        assert_eq!(r.simulations, 100);
+        assert!(env.legal_actions().contains(&r.best_action));
+    }
+
+    #[test]
+    fn terminal_root_short_circuits() {
+        let mut env = Garnet::new(6, 2, 1, 0.0, 9);
+        env.step(0);
+        assert!(env.is_terminal());
+        let mut s = WuUct::new(spec(16, 2), 2, 2);
+        let r = s.search(&env);
+        assert_eq!(r.simulations, 16, "terminal rollouts still count");
+        assert_eq!(r.tree_size, 1, "no expansion from a terminal root");
+    }
+
+    #[test]
+    fn worker_breakdown_isolated_per_search() {
+        let env = Garnet::new(15, 3, 30, 0.0, 3);
+        let mut s = WuUct::new(spec(32, 4), 2, 4);
+        let r1 = s.search(&env);
+        let r2 = s.search(&env);
+        // Each search's worker sim count reflects only its own tasks
+        // (<= budget; terminal short-circuits don't reach workers).
+        assert!(r1.workers.count(Phase::Simulation) <= 32);
+        assert!(r2.workers.count(Phase::Simulation) <= 32);
+        assert!(r2.workers.count(Phase::Simulation) > 0);
+    }
+
+    #[test]
+    fn more_workers_is_faster_on_slow_simulations() {
+        // Speedup smoke test on the latency-simulated emulator (the full
+        // curve is Fig. 4 / bench; see DESIGN.md on the 1-core testbed).
+        let _serial = crate::util::timer::TIMING_TEST_LOCK.lock().unwrap();
+        let env = crate::env::SlowEnv::new(
+            Box::new(Garnet::new(60, 4, 4000, 0.0, 11)),
+            std::time::Duration::from_micros(300),
+        );
+        let slow_spec = SearchSpec {
+            max_simulations: 24,
+            rollout_limit: 10,
+            gamma: 0.999,
+            seed: 5,
+            ..Default::default()
+        };
+        let time = |n_sim: usize| {
+            let mut s = WuUct::new(slow_spec.clone(), 1, n_sim);
+            let t = Instant::now();
+            s.search(&env);
+            t.elapsed()
+        };
+        let t1 = time(1);
+        let t8 = time(8);
+        assert!(
+            t8 * 2 < t1 * 3, // ≥1.5x speedup with 8 workers, conservatively
+            "8 sim workers ({t8:?}) should beat 1 ({t1:?})"
+        );
+    }
+}

@@ -1,0 +1,355 @@
+//! Expansion + simulation worker pools (the blue blocks of Fig. 2a).
+//!
+//! Each pool owns `n` OS threads pulling [`Task`]s from a shared queue.
+//! Tasks carry a ready-to-run boxed environment (cloned from the template
+//! and restored from the node snapshot by the master), so workers are
+//! completely stateless with respect to the tree. Every worker records a
+//! [`Breakdown`] of busy vs idle time, which the master aggregates to
+//! reproduce the paper's occupancy analysis (Fig. 2b–c).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::env::{Env, EnvState};
+use crate::eval::{simulation_return, PolicyFactory};
+use crate::util::timer::{Breakdown, Phase};
+
+/// Work shipped to a pool.
+pub enum Task {
+    /// Step `env` (already restored to the parent state) by `action`;
+    /// return the initialized-child payload.
+    Expand {
+        task_id: u64,
+        env: Box<dyn Env>,
+        action: usize,
+        /// Width cap for the child's untried-action list.
+        max_width: usize,
+    },
+    /// Roll out from `env`'s current state.
+    Simulate {
+        task_id: u64,
+        env: Box<dyn Env>,
+        gamma: f64,
+        limit: u32,
+    },
+    /// Terminate the worker thread.
+    Shutdown,
+}
+
+/// Everything the master needs to install a new child node.
+#[derive(Debug)]
+pub struct ExpandResult {
+    pub task_id: u64,
+    pub reward: f64,
+    pub terminal: bool,
+    pub state: EnvState,
+    /// Width-capped, heuristic-ordered untried actions of the child.
+    pub untried: Vec<usize>,
+}
+
+/// A completed simulation query.
+#[derive(Debug)]
+pub struct SimResult {
+    pub task_id: u64,
+    pub ret: f64,
+}
+
+/// Results funneled back to the master.
+pub enum TaskResult {
+    Expanded(ExpandResult),
+    Simulated(SimResult),
+}
+
+/// Blocking MPMC task queue (std has no MPMC channel; a mutexed deque +
+/// condvar is plenty at our task granularity — see §Perf).
+struct TaskQueue {
+    queue: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+}
+
+impl TaskQueue {
+    fn new() -> Self {
+        Self { queue: Mutex::new(VecDeque::new()), ready: Condvar::new() }
+    }
+
+    fn push(&self, task: Task) {
+        self.queue.lock().unwrap().push_back(task);
+        self.ready.notify_one();
+    }
+
+    fn pop(&self) -> Task {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return t;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+}
+
+/// Compute the child payload for an expansion task (Algorithm 7's body,
+/// run worker-side so the master never touches the emulator).
+pub fn run_expand(env: &mut dyn Env, action: usize, max_width: usize) -> (f64, bool, EnvState, Vec<usize>) {
+    let step = env.step(action);
+    let terminal = step.done || env.is_terminal();
+    let mut untried: Vec<usize> = if terminal { Vec::new() } else { env.legal_actions() };
+    untried.sort_by(|&a, &b| {
+        env.action_heuristic(b)
+            .partial_cmp(&env.action_heuristic(a))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    untried.truncate(max_width);
+    (step.reward, terminal, env.snapshot(), untried)
+}
+
+/// A pool of worker threads.
+pub struct Pool {
+    queue: Arc<TaskQueue>,
+    results: Receiver<TaskResult>,
+    result_tx: Sender<TaskResult>,
+    handles: Vec<JoinHandle<()>>,
+    breakdowns: Vec<Arc<Mutex<Breakdown>>>,
+    capacity: usize,
+}
+
+impl Pool {
+    /// Spawn `n` workers. Simulation tasks use a policy built from
+    /// `policy_factory` seeded per worker.
+    pub fn new(n: usize, policy_factory: PolicyFactory, seed: u64) -> Pool {
+        assert!(n > 0, "pool needs at least one worker");
+        let queue = Arc::new(TaskQueue::new());
+        let (result_tx, results) = channel();
+        let mut handles = Vec::with_capacity(n);
+        let mut breakdowns = Vec::with_capacity(n);
+        for w in 0..n {
+            let queue = Arc::clone(&queue);
+            let tx = result_tx.clone();
+            let breakdown = Arc::new(Mutex::new(Breakdown::new()));
+            breakdowns.push(Arc::clone(&breakdown));
+            let factory = Arc::clone(&policy_factory);
+            let worker_seed = seed ^ (0x9e3779b97f4a7c15u64.wrapping_mul(w as u64 + 1));
+            handles.push(std::thread::spawn(move || {
+                let mut policy = factory(worker_seed);
+                loop {
+                    let idle_start = Instant::now();
+                    let task = queue.pop();
+                    let idle = idle_start.elapsed();
+                    match task {
+                        Task::Shutdown => {
+                            breakdown.lock().unwrap().add(Phase::Idle, idle);
+                            return;
+                        }
+                        Task::Expand { task_id, mut env, action, max_width } => {
+                            let busy = Instant::now();
+                            let (reward, terminal, state, untried) =
+                                run_expand(env.as_mut(), action, max_width);
+                            let d = busy.elapsed();
+                            {
+                                let mut b = breakdown.lock().unwrap();
+                                b.add(Phase::Idle, idle);
+                                b.add(Phase::Expansion, d);
+                            }
+                            // Master may have shut down mid-drain; ignore.
+                            let _ = tx.send(TaskResult::Expanded(ExpandResult {
+                                task_id,
+                                reward,
+                                terminal,
+                                state,
+                                untried,
+                            }));
+                        }
+                        Task::Simulate { task_id, mut env, gamma, limit } => {
+                            let busy = Instant::now();
+                            let ret = simulation_return(
+                                env.as_mut(),
+                                policy.as_mut(),
+                                gamma,
+                                limit,
+                            );
+                            let d = busy.elapsed();
+                            {
+                                let mut b = breakdown.lock().unwrap();
+                                b.add(Phase::Idle, idle);
+                                b.add(Phase::Simulation, d);
+                            }
+                            let _ = tx.send(TaskResult::Simulated(SimResult { task_id, ret }));
+                        }
+                    }
+                }
+            }));
+        }
+        Pool { queue, results, result_tx, handles, breakdowns, capacity: n }
+    }
+
+    /// Number of worker threads.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn submit(&self, task: Task) {
+        self.queue.push(task);
+    }
+
+    /// Block until the next result arrives.
+    pub fn recv(&self) -> TaskResult {
+        self.results.recv().expect("worker pool hung up")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_recv(&self) -> Option<TaskResult> {
+        self.results.try_recv().ok()
+    }
+
+    /// Sum of all workers' breakdowns so far.
+    pub fn breakdown(&self) -> Breakdown {
+        let mut total = Breakdown::new();
+        for b in &self.breakdowns {
+            total.merge(&b.lock().unwrap());
+        }
+        total
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            self.queue.push(Task::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // Close our copy of the sender so pending recv()s error out
+        // rather than hang (we've already joined, so this is moot, but
+        // keeps the field used and explicit).
+        drop(std::mem::replace(&mut self.result_tx, channel().0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::eval::HeuristicPolicy;
+
+    fn env() -> Box<dyn Env> {
+        Box::new(Garnet::new(12, 3, 30, 0.0, 5))
+    }
+
+    #[test]
+    fn simulate_tasks_round_trip() {
+        let pool = Pool::new(4, HeuristicPolicy::factory(), 1);
+        for id in 0..8 {
+            pool.submit(Task::Simulate { task_id: id, env: env(), gamma: 0.99, limit: 30 });
+        }
+        let mut seen = Vec::new();
+        for _ in 0..8 {
+            match pool.recv() {
+                TaskResult::Simulated(r) => {
+                    assert!(r.ret.is_finite());
+                    seen.push(r.task_id);
+                }
+                _ => panic!("expected simulation result"),
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn expand_tasks_return_child_payload() {
+        let pool = Pool::new(2, HeuristicPolicy::factory(), 2);
+        pool.submit(Task::Expand { task_id: 7, env: env(), action: 1, max_width: 2 });
+        match pool.recv() {
+            TaskResult::Expanded(r) => {
+                assert_eq!(r.task_id, 7);
+                assert!(r.reward.is_finite());
+                assert!(!r.terminal);
+                assert!(r.untried.len() <= 2);
+                assert!(!r.state.is_empty());
+            }
+            _ => panic!("expected expansion result"),
+        }
+    }
+
+    #[test]
+    fn run_expand_orders_untried_by_heuristic() {
+        let mut e = env();
+        let (_r, _t, state, untried) = run_expand(e.as_mut(), 0, 10);
+        let mut check = env();
+        check.restore(&state);
+        for w in untried.windows(2) {
+            assert!(
+                check.action_heuristic(w[0]) >= check.action_heuristic(w[1]) - 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn breakdown_accumulates_busy_time() {
+        let pool = Pool::new(2, HeuristicPolicy::factory(), 3);
+        for id in 0..6 {
+            pool.submit(Task::Simulate { task_id: id, env: env(), gamma: 0.99, limit: 30 });
+        }
+        for _ in 0..6 {
+            pool.recv();
+        }
+        let b = pool.breakdown();
+        assert_eq!(b.count(Phase::Simulation), 6);
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = Pool::new(3, HeuristicPolicy::factory(), 4);
+        pool.submit(Task::Simulate { task_id: 0, env: env(), gamma: 0.99, limit: 5 });
+        pool.recv();
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn parallel_workers_actually_overlap() {
+        // 4 heavy tasks on 4 workers must beat running them back-to-back
+        // on one thread (smoke test for real concurrency). Tasks are made
+        // heavy enough (~10ms each) that thread overhead is negligible.
+        let _serial = crate::util::timer::TIMING_TEST_LOCK.lock().unwrap();
+        // Latency-simulated emulator: sleeps overlap across workers even
+        // on a single CPU core (see env::latency and DESIGN.md §3).
+        const STEPS: u32 = 25;
+        let make_env = || -> Box<dyn Env> {
+            Box::new(crate::env::SlowEnv::new(
+                Box::new(Garnet::new(40, 4, 10_000, 0.0, 6)),
+                std::time::Duration::from_micros(400),
+            ))
+        };
+        // Sequential reference: 4 identical simulations inline.
+        let t = std::time::Instant::now();
+        for seed in 0..4 {
+            let mut e = make_env();
+            let mut p = HeuristicPolicy::new(seed);
+            simulation_return(e.as_mut(), &mut p, 0.9999, STEPS);
+        }
+        let sequential = t.elapsed();
+
+        let pool = Pool::new(4, HeuristicPolicy::factory(), 5);
+        let t0 = std::time::Instant::now();
+        for id in 0..4 {
+            pool.submit(Task::Simulate {
+                task_id: id,
+                env: make_env(),
+                gamma: 0.9999,
+                limit: STEPS,
+            });
+        }
+        for _ in 0..4 {
+            pool.recv();
+        }
+        let wall = t0.elapsed();
+        assert!(
+            wall * 2 < sequential * 3,
+            "4 tasks on 4 workers took {wall:?} vs sequential {sequential:?}"
+        );
+    }
+}

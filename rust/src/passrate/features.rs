@@ -1,0 +1,135 @@
+//! Feature extraction for the pass-rate prediction system (Appendix C.2).
+//!
+//! Two WU-UCT agents with different skill levels (10 rollouts ≈ average
+//! player, 100 rollouts ≈ skilled player) each play a level several times;
+//! from their gameplays we extract the paper's six features: per-agent
+//! pass-rate, mean used-step ratio and median used-step ratio.
+
+use crate::env::tapgame::{Level, TapGame};
+use crate::env::Env;
+use crate::mcts::{Search, SearchSpec, WuUct};
+use crate::util::stats::{mean, median};
+
+/// Rollout budgets of the two bot skill levels (paper: 10 and 100).
+pub const BOT_BUDGETS: [u32; 2] = [10, 100];
+
+/// Gameplay outcomes of one bot on one level.
+#[derive(Debug, Clone)]
+pub struct BotPlays {
+    pub budget: u32,
+    pub passes: Vec<bool>,
+    /// used steps / provided steps per play, in [0, 1].
+    pub step_ratios: Vec<f64>,
+}
+
+impl BotPlays {
+    pub fn pass_rate(&self) -> f64 {
+        if self.passes.is_empty() {
+            return 0.0;
+        }
+        self.passes.iter().filter(|&&p| p).count() as f64 / self.passes.len() as f64
+    }
+}
+
+/// Extractor configuration.
+#[derive(Debug, Clone)]
+pub struct FeatureConfig {
+    /// Gameplays per bot per level.
+    pub plays: usize,
+    /// Expansion / simulation workers of the WU-UCT agents.
+    pub n_exp: usize,
+    pub n_sim: usize,
+    pub seed: u64,
+}
+
+impl Default for FeatureConfig {
+    fn default() -> Self {
+        FeatureConfig { plays: 8, n_exp: 2, n_sim: 4, seed: 0 }
+    }
+}
+
+/// Play `level` with a WU-UCT bot of the given rollout `budget`.
+pub fn bot_plays(level: &Level, budget: u32, cfg: &FeatureConfig) -> BotPlays {
+    let spec = SearchSpec {
+        max_simulations: budget,
+        seed: cfg.seed ^ (budget as u64).wrapping_mul(0x9e37),
+        ..SearchSpec::tap_game()
+    };
+    let mut search = WuUct::new(spec, cfg.n_exp, cfg.n_sim);
+    let mut passes = Vec::with_capacity(cfg.plays);
+    let mut ratios = Vec::with_capacity(cfg.plays);
+    for play in 0..cfg.plays {
+        let seed = cfg.seed
+            .wrapping_add(play as u64 * 6151)
+            .wrapping_add(budget as u64);
+        let mut game = TapGame::new(level.clone(), seed);
+        while !game.is_terminal() {
+            let r = search.search(&game);
+            let legal = game.legal_actions();
+            let action = if legal.contains(&r.best_action) {
+                r.best_action
+            } else {
+                legal[0]
+            };
+            game.step(action);
+        }
+        passes.push(game.passed());
+        ratios.push(game.steps_used() as f64 / level.steps as f64);
+    }
+    BotPlays { budget, passes, step_ratios: ratios }
+}
+
+/// The paper's six-feature vector for one level:
+/// `[pass_rate, mean_ratio, median_ratio]` for each of the two bots.
+pub fn level_features(level: &Level, cfg: &FeatureConfig) -> Vec<f64> {
+    let mut features = Vec::with_capacity(6);
+    for &budget in &BOT_BUDGETS {
+        let plays = bot_plays(level, budget, cfg);
+        features.push(plays.pass_rate());
+        features.push(mean(&plays.step_ratios));
+        features.push(median(&plays.step_ratios));
+    }
+    features
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> FeatureConfig {
+        FeatureConfig { plays: 3, n_exp: 1, n_sim: 2, seed: 1 }
+    }
+
+    #[test]
+    fn features_have_expected_shape_and_range() {
+        let level = Level::level35();
+        let f = level_features(&level, &quick_cfg());
+        assert_eq!(f.len(), 6);
+        for (i, v) in f.iter().enumerate() {
+            assert!((0.0..=1.0).contains(v), "feature {i} = {v} out of range");
+        }
+    }
+
+    #[test]
+    fn bot_plays_consistent_counts() {
+        let level = Level::level35();
+        let plays = bot_plays(&level, 10, &quick_cfg());
+        assert_eq!(plays.passes.len(), 3);
+        assert_eq!(plays.step_ratios.len(), 3);
+        assert!((0.0..=1.0).contains(&plays.pass_rate()));
+    }
+
+    #[test]
+    fn bigger_budget_not_worse_on_easy_level() {
+        // 100-rollout bot should pass the easy level at least as often as
+        // the 10-rollout bot (Table 2's direction), modulo small samples.
+        let level = Level::level35();
+        let cfg = FeatureConfig { plays: 6, n_exp: 1, n_sim: 2, seed: 2 };
+        let low = bot_plays(&level, 10, &cfg).pass_rate();
+        let high = bot_plays(&level, 100, &cfg).pass_rate();
+        assert!(
+            high + 0.34 >= low,
+            "100-rollout bot much worse than 10-rollout: {high} vs {low}"
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! The user pass-rate prediction system (Appendix C) — the paper's
+//! deployed production application of WU-UCT.
+//!
+//! Pipeline (Fig. 7): levels → WU-UCT bot gameplays (10- and 100-rollout
+//! agents) → six features per level → linear regressor → predicted
+//! pass-rate. Reproduces Fig. 8's MAE histogram and Table 2's bot-vs-
+//! player t-tests against a synthetic player population.
+
+pub mod features;
+pub mod population;
+pub mod regress;
+pub mod system;
+
+pub use features::{bot_plays, level_features, FeatureConfig, BOT_BUDGETS};
+pub use population::{Player, Population};
+pub use regress::{fit, mae, LinearModel};
+pub use system::{run, Report, SystemConfig};

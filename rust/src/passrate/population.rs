@@ -1,0 +1,148 @@
+//! Synthetic player population — the stand-in for the paper's human
+//! testers (Appendix C.2 substitution, see DESIGN.md §3).
+//!
+//! A player is a noisy heuristic agent with a skill parameter in [0, 1]:
+//! with probability `skill` it takes the heuristic-best tap, otherwise a
+//! random one. The *population* draws skills from a Beta-ish distribution
+//! around a median player; a level's **ground-truth pass-rate** is the
+//! Monte-Carlo pass frequency of the population, which is what the
+//! prediction system must recover from WU-UCT features.
+
+use crate::env::tapgame::{Level, TapGame};
+use crate::env::Env;
+use crate::util::rng::Pcg32;
+
+/// One simulated player.
+#[derive(Debug, Clone, Copy)]
+pub struct Player {
+    /// Probability of taking the heuristic-best action per step.
+    pub skill: f64,
+}
+
+impl Player {
+    /// Play `level` once; returns (passed, steps_used).
+    pub fn play(&self, level: &Level, seed: u64, rng: &mut Pcg32) -> (bool, u32) {
+        let mut game = TapGame::new(level.clone(), seed);
+        while !game.is_terminal() {
+            let legal = game.legal_actions();
+            let action = if rng.chance(self.skill) {
+                legal
+                    .iter()
+                    .copied()
+                    .max_by(|&a, &b| {
+                        game.action_heuristic(a)
+                            .partial_cmp(&game.action_heuristic(b))
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .unwrap()
+            } else {
+                *rng.choose(&legal)
+            };
+            game.step(action);
+        }
+        (game.passed(), game.steps_used())
+    }
+}
+
+/// The population model.
+#[derive(Debug, Clone)]
+pub struct Population {
+    /// Mean skill of the population.
+    pub mean_skill: f64,
+    /// Skill spread (uniform half-width, clamped to [0, 1]).
+    pub spread: f64,
+    /// Players sampled per pass-rate estimate.
+    pub samples: usize,
+}
+
+impl Default for Population {
+    fn default() -> Self {
+        // An "average player" mixes heuristic and exploratory taps.
+        Population { mean_skill: 0.55, spread: 0.3, samples: 40 }
+    }
+}
+
+impl Population {
+    /// Monte-Carlo ground-truth pass-rate of `level` (in [0, 1]).
+    pub fn pass_rate(&self, level: &Level, seed: u64) -> f64 {
+        let mut rng = Pcg32::new(seed ^ 0x9a55);
+        let mut passes = 0usize;
+        for i in 0..self.samples {
+            let skill = (self.mean_skill + rng.range_f64(-self.spread, self.spread))
+                .clamp(0.05, 0.98);
+            let player = Player { skill };
+            let (passed, _) = player.play(level, seed.wrapping_add(i as u64 * 131), &mut rng);
+            passes += passed as usize;
+        }
+        passes as f64 / self.samples as f64
+    }
+
+    /// Per-player pass outcomes (for the paired t-test of Table 2).
+    pub fn pass_outcomes(&self, level: &Level, seed: u64) -> Vec<bool> {
+        let mut rng = Pcg32::new(seed ^ 0x9a55);
+        (0..self.samples)
+            .map(|i| {
+                let skill = (self.mean_skill + rng.range_f64(-self.spread, self.spread))
+                    .clamp(0.05, 0.98);
+                Player { skill }
+                    .play(level, seed.wrapping_add(i as u64 * 131), &mut rng)
+                    .0
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::tapgame::LevelGen;
+
+    #[test]
+    fn skilled_players_pass_more() {
+        let level = Level::level35();
+        let mut rate = |skill: f64| {
+            let mut rng = Pcg32::new(1);
+            let p = Player { skill };
+            (0..30).filter(|&i| p.play(&level, i, &mut rng).0).count()
+        };
+        let low = rate(0.05);
+        let high = rate(0.95);
+        assert!(
+            high >= low,
+            "skill must not hurt pass-rate: high {high} vs low {low}"
+        );
+    }
+
+    #[test]
+    fn pass_rate_in_unit_interval_and_deterministic() {
+        let pop = Population::default();
+        let level = Level::level35();
+        let a = pop.pass_rate(&level, 7);
+        let b = pop.pass_rate(&level, 7);
+        assert_eq!(a, b);
+        assert!((0.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn harder_levels_have_lower_pass_rates_on_average() {
+        let pop = Population { samples: 20, ..Default::default() };
+        let mut gen = LevelGen::new(3);
+        let easy: f64 = (0..6).map(|i| pop.pass_rate(&gen.generate(0.05), i)).sum();
+        let mut gen2 = LevelGen::new(4);
+        let hard: f64 = (0..6).map(|i| pop.pass_rate(&gen2.generate(0.95), i)).sum();
+        assert!(
+            easy > hard,
+            "easy levels should pass more: easy {easy} vs hard {hard}"
+        );
+    }
+
+    #[test]
+    fn outcomes_match_rate() {
+        let pop = Population { samples: 30, ..Default::default() };
+        let level = Level::level35();
+        let outcomes = pop.pass_outcomes(&level, 5);
+        assert_eq!(outcomes.len(), 30);
+        let rate = outcomes.iter().filter(|&&p| p).count() as f64 / 30.0;
+        assert!((rate - pop.pass_rate(&level, 5)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,171 @@
+//! Linear regression by normal equations (ridge-stabilized) — the
+//! prediction model of the pass-rate system (Appendix C.2: "the features,
+//! as well as the players' pass-rate, is used to learn a linear
+//! regressor").
+
+use anyhow::{ensure, Result};
+
+/// A fitted linear model `y ≈ w · x + b`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearModel {
+    pub weights: Vec<f64>,
+    pub bias: f64,
+}
+
+impl LinearModel {
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.weights.len(), "feature width mismatch");
+        self.bias + self.weights.iter().zip(x).map(|(w, v)| w * v).sum::<f64>()
+    }
+
+    /// Predict, clamped to the valid pass-rate range.
+    pub fn predict_rate(&self, x: &[f64]) -> f64 {
+        self.predict(x).clamp(0.0, 1.0)
+    }
+}
+
+/// Fit `y ≈ Xw + b` by solving the ridge normal equations
+/// `(XᵀX + λI) w = Xᵀy` over the bias-augmented design matrix.
+pub fn fit(xs: &[Vec<f64>], ys: &[f64], ridge: f64) -> Result<LinearModel> {
+    ensure!(!xs.is_empty(), "no training rows");
+    ensure!(xs.len() == ys.len(), "row/label count mismatch");
+    let d = xs[0].len();
+    ensure!(xs.iter().all(|x| x.len() == d), "ragged feature rows");
+    let da = d + 1; // augmented with the bias column
+
+    // Build A = XᵀX + λI and b = Xᵀy.
+    let mut a = vec![0f64; da * da];
+    let mut b = vec![0f64; da];
+    let mut row = vec![0f64; da];
+    for (x, &y) in xs.iter().zip(ys) {
+        row[..d].copy_from_slice(x);
+        row[d] = 1.0;
+        for i in 0..da {
+            b[i] += row[i] * y;
+            for j in 0..da {
+                a[i * da + j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..da {
+        a[i * da + i] += ridge;
+    }
+
+    // Gaussian elimination with partial pivoting.
+    let mut aug = a;
+    let mut rhs = b;
+    for col in 0..da {
+        // Pivot.
+        let mut pivot = col;
+        for r in col + 1..da {
+            if aug[r * da + col].abs() > aug[pivot * da + col].abs() {
+                pivot = r;
+            }
+        }
+        ensure!(aug[pivot * da + col].abs() > 1e-12, "singular design matrix");
+        if pivot != col {
+            for j in 0..da {
+                aug.swap(col * da + j, pivot * da + j);
+            }
+            rhs.swap(col, pivot);
+        }
+        // Eliminate below.
+        for r in col + 1..da {
+            let f = aug[r * da + col] / aug[col * da + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..da {
+                aug[r * da + j] -= f * aug[col * da + j];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    // Back substitution.
+    let mut w = vec![0f64; da];
+    for col in (0..da).rev() {
+        let mut acc = rhs[col];
+        for j in col + 1..da {
+            acc -= aug[col * da + j] * w[j];
+        }
+        w[col] = acc / aug[col * da + col];
+    }
+    Ok(LinearModel { weights: w[..d].to_vec(), bias: w[d] })
+}
+
+/// Mean absolute error of `model` on a labeled set (the paper's headline
+/// pass-rate metric: 8.6% MAE).
+pub fn mae(model: &LinearModel, xs: &[Vec<f64>], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter()
+        .zip(ys)
+        .map(|(x, &y)| (model.predict_rate(x) - y).abs())
+        .sum::<f64>()
+        / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn recovers_exact_linear_function() {
+        // y = 2x0 - 3x1 + 0.5
+        let mut rng = Pcg32::new(1);
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|_| vec![rng.next_f64(), rng.next_f64()])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] - 3.0 * x[1] + 0.5).collect();
+        let m = fit(&xs, &ys, 1e-9).unwrap();
+        assert!((m.weights[0] - 2.0).abs() < 1e-6);
+        assert!((m.weights[1] + 3.0).abs() < 1e-6);
+        assert!((m.bias - 0.5).abs() < 1e-6);
+        assert!(mae(&m, &xs, &ys) < 0.51, "clamping caps error only");
+    }
+
+    #[test]
+    fn noisy_fit_has_small_mae() {
+        let mut rng = Pcg32::new(2);
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.next_f64(), rng.next_f64(), rng.next_f64()])
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| (0.3 * x[0] + 0.4 * x[1] + 0.05 * rng.next_gaussian()).clamp(0.0, 1.0))
+            .collect();
+        let m = fit(&xs, &ys, 1e-6).unwrap();
+        assert!(mae(&m, &xs, &ys) < 0.08, "mae {}", mae(&m, &xs, &ys));
+    }
+
+    #[test]
+    fn ridge_handles_collinear_features() {
+        // x1 == x0: the unregularized normal equations are singular.
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|i| {
+                let v = i as f64 / 19.0;
+                vec![v, v]
+            })
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0]).collect();
+        let m = fit(&xs, &ys, 1e-6).unwrap();
+        assert!(mae(&m, &xs, &ys) < 1e-3);
+    }
+
+    #[test]
+    fn predict_rate_clamps() {
+        let m = LinearModel { weights: vec![10.0], bias: 0.0 };
+        assert_eq!(m.predict_rate(&[1.0]), 1.0);
+        assert_eq!(m.predict_rate(&[-1.0]), 0.0);
+    }
+
+    #[test]
+    fn errors_on_bad_input() {
+        assert!(fit(&[], &[], 0.1).is_err());
+        assert!(fit(&[vec![1.0]], &[1.0, 2.0], 0.1).is_err());
+        assert!(fit(&[vec![1.0], vec![1.0, 2.0]], &[1.0, 2.0], 0.1).is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! The deployed user pass-rate prediction system (Appendix C.2, Fig. 7).
+//!
+//! Training phase: generate levels with known (synthetic-population)
+//! pass-rates, extract the six WU-UCT bot features per level, fit the
+//! linear regressor. Inference phase: features → predicted pass-rate.
+//! Evaluation reproduces the paper's headline numbers: MAE over the eval
+//! set (paper: 8.6% over 130 levels, 93% under 20% error — Fig. 8) and
+//! the bot-vs-player paired t-tests (Table 2).
+
+use crate::env::tapgame::LevelGen;
+use crate::passrate::features::{bot_plays, level_features, FeatureConfig};
+use crate::passrate::population::Population;
+use crate::passrate::regress::{fit, mae, LinearModel};
+use crate::util::stats::{mean, paired_t_test, TTest};
+
+/// System configuration (paper scale: 300 train / 130 eval levels).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub train_levels: usize,
+    pub eval_levels: usize,
+    pub population: Population,
+    pub features: FeatureConfig,
+    pub seed: u64,
+    pub ridge: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            train_levels: 300,
+            eval_levels: 130,
+            population: Population::default(),
+            features: FeatureConfig::default(),
+            seed: 2020,
+            ridge: 1e-4,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// A laptop-scale configuration used by tests and quick benches.
+    pub fn quick() -> Self {
+        SystemConfig {
+            train_levels: 14,
+            eval_levels: 8,
+            population: Population { samples: 10, ..Default::default() },
+            features: FeatureConfig { plays: 3, n_exp: 1, n_sim: 2, seed: 0 },
+            ..Default::default()
+        }
+    }
+}
+
+/// Evaluation report (the paper's Fig. 8 + Table 2 numbers).
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Mean absolute error on the eval levels.
+    pub mae: f64,
+    /// Fraction of eval levels with error < 20%.
+    pub frac_under_20: f64,
+    /// Per-level absolute errors (for the Fig. 8 histogram).
+    pub errors: Vec<f64>,
+    /// Table 2 rows: (budget, avg_diff, t-test vs population).
+    pub bot_vs_players: Vec<(u32, f64, TTest)>,
+    /// The fitted model.
+    pub model: LinearModel,
+}
+
+impl Report {
+    /// Fig. 8's histogram: error counts in 5%-wide bins up to 50%.
+    pub fn error_histogram(&self) -> Vec<(f64, usize)> {
+        let mut bins = vec![0usize; 10];
+        for &e in &self.errors {
+            let idx = ((e / 0.05) as usize).min(9);
+            bins[idx] += 1;
+        }
+        bins.into_iter()
+            .enumerate()
+            .map(|(i, c)| (i as f64 * 0.05, c))
+            .collect()
+    }
+}
+
+/// Run the full train → eval pipeline.
+pub fn run(cfg: &SystemConfig) -> anyhow::Result<Report> {
+    // Level sets: train and eval from independent generator streams.
+    let mut train_gen = LevelGen::new(cfg.seed ^ 0x7a11);
+    let train_levels = train_gen.batch(cfg.train_levels);
+    let mut eval_gen = LevelGen::new(cfg.seed ^ 0xe7a1);
+    let eval_levels = eval_gen.batch(cfg.eval_levels);
+
+    // Ground-truth pass-rates + features.
+    let featurize = |levels: &[crate::env::tapgame::Level], salt: u64| {
+        let mut xs = Vec::with_capacity(levels.len());
+        let mut ys = Vec::with_capacity(levels.len());
+        for (i, level) in levels.iter().enumerate() {
+            let fcfg = FeatureConfig {
+                seed: cfg.features.seed ^ salt.wrapping_add(i as u64 * 97),
+                ..cfg.features.clone()
+            };
+            xs.push(level_features(level, &fcfg));
+            ys.push(cfg.population.pass_rate(level, cfg.seed ^ salt ^ (i as u64 * 13)));
+        }
+        (xs, ys)
+    };
+    let (train_x, train_y) = featurize(&train_levels, 0x7777);
+    let (eval_x, eval_y) = featurize(&eval_levels, 0x3333);
+
+    let model = fit(&train_x, &train_y, cfg.ridge)?;
+    let errors: Vec<f64> = eval_x
+        .iter()
+        .zip(&eval_y)
+        .map(|(x, &y)| (model.predict_rate(x) - y).abs())
+        .collect();
+    let report_mae = mae(&model, &eval_x, &eval_y);
+    let frac_under_20 =
+        errors.iter().filter(|&&e| e < 0.2).count() as f64 / errors.len().max(1) as f64;
+
+    // Table 2: paired t-test of bot pass-rate vs player pass-rate across
+    // eval levels, for each bot budget.
+    let mut bot_vs_players = Vec::new();
+    for &budget in &crate::passrate::features::BOT_BUDGETS {
+        let mut bot_rates = Vec::with_capacity(eval_levels.len());
+        let mut player_rates = Vec::with_capacity(eval_levels.len());
+        for (i, level) in eval_levels.iter().enumerate() {
+            let fcfg = FeatureConfig {
+                seed: cfg.features.seed ^ 0x3333u64.wrapping_add(i as u64 * 97),
+                ..cfg.features.clone()
+            };
+            bot_rates.push(bot_plays(level, budget, &fcfg).pass_rate());
+            player_rates.push(eval_y[i]);
+        }
+        let t = paired_t_test(&bot_rates, &player_rates);
+        let avg_diff = mean(&bot_rates) - mean(&player_rates);
+        bot_vs_players.push((budget, avg_diff, t));
+    }
+
+    Ok(Report {
+        mae: report_mae,
+        frac_under_20,
+        errors,
+        bot_vs_players,
+        model,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_pipeline_produces_sane_report() {
+        let cfg = SystemConfig::quick();
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.errors.len(), cfg.eval_levels);
+        assert!((0.0..=1.0).contains(&r.mae), "mae {}", r.mae);
+        assert!((0.0..=1.0).contains(&r.frac_under_20));
+        assert_eq!(r.bot_vs_players.len(), 2);
+        // The regressor must beat the trivial predict-0.5 baseline.
+        assert!(r.mae < 0.5);
+    }
+
+    #[test]
+    fn histogram_covers_all_errors() {
+        let cfg = SystemConfig::quick();
+        let r = run(&cfg).unwrap();
+        let hist = r.error_histogram();
+        assert_eq!(hist.len(), 10);
+        let total: usize = hist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, r.errors.len());
+    }
+
+    #[test]
+    fn stronger_bot_shifts_diff_upward() {
+        // Table 2's direction: the 100-rollout bot's avg pass-rate diff vs
+        // players should exceed the 10-rollout bot's.
+        let cfg = SystemConfig::quick();
+        let r = run(&cfg).unwrap();
+        let d10 = r.bot_vs_players[0].1;
+        let d100 = r.bot_vs_players[1].1;
+        assert!(
+            d100 >= d10 - 0.15,
+            "100-rollout diff {d100} should not trail 10-rollout {d10}"
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! PJRT execution engine: load the AOT-compiled HLO-text artifacts and run
+//! the policy-value network from Rust.
+//!
+//! This is the runtime half of the three-layer architecture: python/jax
+//! lowered the fused-Pallas forward pass to HLO **text** once (`make
+//! artifacts`); here we parse it (`HloModuleProto::from_text_file` — the
+//! id-safe interchange, see DESIGN.md), compile it on the PJRT CPU client
+//! and execute it with concrete feature batches. One executable is
+//! compiled per exported batch size; requests are padded to the smallest
+//! fitting batch and chunked above the largest.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::meta::ArtifactMeta;
+
+/// One (logits, value) pair per request row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyOutput {
+    pub logits: Vec<f32>,
+    pub value: f32,
+}
+
+/// The PJRT engine: compiled executables keyed by batch size.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+    /// Cumulative executed batches / rows (perf accounting).
+    pub batches_run: u64,
+    pub rows_run: u64,
+}
+
+impl Engine {
+    /// Load every `policy_value_b{B}.hlo.txt` listed in `meta.txt`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = BTreeMap::new();
+        for &b in &meta.policy_batches {
+            let path = dir.join(format!("policy_value_b{b}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            exes.insert(b, exe);
+        }
+        Ok(Engine { client, exes, meta, batches_run: 0, rows_run: 0 })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run the network on `rows.len()` feature vectors (each of length
+    /// `feature_dim`). Pads to the smallest exported batch; chunks when
+    /// the request exceeds the largest.
+    pub fn infer(&mut self, rows: &[Vec<f32>]) -> Result<Vec<PolicyOutput>> {
+        let f = self.meta.feature_dim;
+        for (i, r) in rows.iter().enumerate() {
+            anyhow::ensure!(r.len() == f, "row {i}: {} features, want {f}", r.len());
+        }
+        let max_b = *self.meta.policy_batches.last().unwrap();
+        let mut out = Vec::with_capacity(rows.len());
+        let mut start = 0;
+        while start < rows.len() {
+            let n = (rows.len() - start).min(max_b);
+            let chunk = &rows[start..start + n];
+            out.extend(self.infer_chunk(chunk)?);
+            start += n;
+        }
+        Ok(out)
+    }
+
+    fn infer_chunk(&mut self, rows: &[Vec<f32>]) -> Result<Vec<PolicyOutput>> {
+        let n = rows.len();
+        let b = self.meta.batch_for(n);
+        let f = self.meta.feature_dim;
+        let mut flat = vec![0f32; b * f];
+        for (i, row) in rows.iter().enumerate() {
+            flat[i * f..(i + 1) * f].copy_from_slice(row);
+        }
+        let input = xla::Literal::vec1(&flat)
+            .reshape(&[b as i64, f as i64])
+            .context("reshaping input literal")?;
+        let exe = self.exes.get(&b).expect("batch_for returned unexported size");
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .context("executing policy network")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping result tuple")?;
+        let values = out.to_vec::<f32>().context("reading result values")?;
+        anyhow::ensure!(
+            values.len() == b * self.meta.out_dim,
+            "unexpected output length {} for batch {b}",
+            values.len()
+        );
+        self.batches_run += 1;
+        self.rows_run += n as u64;
+        let o = self.meta.out_dim;
+        let a = self.meta.num_actions;
+        let vi = self.meta.value_index;
+        Ok((0..n)
+            .map(|i| PolicyOutput {
+                logits: values[i * o..i * o + a].to_vec(),
+                value: values[i * o + vi],
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{FEATURE_DIM, MAX_ACTIONS};
+    use crate::runtime::meta::artifacts_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if !dir.join("meta.txt").exists() {
+            eprintln!("artifacts missing — run `make artifacts` (test skipped)");
+            return None;
+        }
+        Some(Engine::load(&dir).expect("engine load"))
+    }
+
+    fn env_features(seed: u64) -> Vec<f32> {
+        let env = crate::env::atari::make("Breakout", seed);
+        let mut f = vec![0f32; FEATURE_DIM];
+        env.features(&mut f);
+        f
+    }
+
+    #[test]
+    fn loads_and_runs_single_row() {
+        let Some(mut e) = engine() else { return };
+        let out = e.infer(&[env_features(1)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].logits.len(), MAX_ACTIONS);
+        assert!(out[0].value.is_finite());
+        assert!(out[0].logits.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn batch_sizes_pad_and_chunk() {
+        let Some(mut e) = engine() else { return };
+        for n in [1usize, 2, 7, 8, 9, 33, 70] {
+            let rows: Vec<Vec<f32>> = (0..n).map(|i| env_features(i as u64)).collect();
+            let out = e.infer(&rows).unwrap();
+            assert_eq!(out.len(), n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn padding_does_not_change_results() {
+        let Some(mut e) = engine() else { return };
+        let row = env_features(5);
+        let single = e.infer(&[row.clone()]).unwrap();
+        let padded = e.infer(&[row.clone(), env_features(6)]).unwrap();
+        for (a, b) in single[0].logits.iter().zip(&padded[0].logits) {
+            assert!((a - b).abs() < 1e-4, "padding changed logits: {a} vs {b}");
+        }
+        assert!((single[0].value - padded[0].value).abs() < 1e-4);
+    }
+
+    #[test]
+    fn network_matches_teacher_ranking() {
+        // The distilled net should rank actions like the heuristic teacher
+        // on real env features — the end-to-end L1/L2/runtime contract.
+        let Some(mut e) = engine() else { return };
+        let mut agree = 0;
+        let total: u32 = 20;
+        for seed in 0..total as u64 {
+            let env = crate::env::atari::make("Breakout", seed);
+            let mut f = vec![0f32; FEATURE_DIM];
+            env.features(&mut f);
+            let out = &e.infer(&[f.clone()]).unwrap()[0];
+            let legal = env.legal_actions();
+            let net_best = legal
+                .iter()
+                .copied()
+                .max_by(|&a, &b| out.logits[a].partial_cmp(&out.logits[b]).unwrap())
+                .unwrap();
+            let teacher_best = legal
+                .iter()
+                .copied()
+                .max_by(|&a, &b| {
+                    env.action_heuristic(a)
+                        .partial_cmp(&env.action_heuristic(b))
+                        .unwrap()
+                })
+                .unwrap();
+            agree += (net_best == teacher_best) as u32;
+        }
+        assert!(agree * 2 > total, "net/teacher agreement {agree}/{total}");
+    }
+
+    #[test]
+    fn wrong_feature_dim_rejected() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.infer(&[vec![0f32; 7]]).is_err());
+    }
+
+    #[test]
+    fn row_counters_accumulate() {
+        let Some(mut e) = engine() else { return };
+        e.infer(&[env_features(0)]).unwrap();
+        e.infer(&[env_features(1), env_features(2)]).unwrap();
+        assert_eq!(e.rows_run, 3);
+        assert!(e.batches_run >= 2);
+    }
+}

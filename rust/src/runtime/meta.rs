@@ -1,0 +1,148 @@
+//! Artifact metadata: the contract file `artifacts/meta.txt` written by
+//! `python/compile/aot.py`, describing the exported HLO modules' shapes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed `meta.txt`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub feature_dim: usize,
+    pub num_actions: usize,
+    pub out_dim: usize,
+    pub value_index: usize,
+    /// Exported forward-pass batch sizes, ascending.
+    pub policy_batches: Vec<usize>,
+    pub select_batch: usize,
+    pub teacher_scale: f64,
+    pub illegal_logit: f64,
+    pub distill_final_loss: f64,
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let get = |key: &str| -> Result<&str> {
+            text.lines()
+                .filter_map(|l| l.split_once('='))
+                .find(|(k, _)| k.trim() == key)
+                .map(|(_, v)| v.trim())
+                .ok_or_else(|| anyhow!("meta.txt missing key {key}"))
+        };
+        let num = |key: &str| -> Result<usize> {
+            get(key)?.parse().with_context(|| format!("meta.txt: bad {key}"))
+        };
+        let fnum = |key: &str| -> Result<f64> {
+            get(key)?.parse().with_context(|| format!("meta.txt: bad {key}"))
+        };
+        let mut policy_batches: Vec<usize> = get("policy_batches")?
+            .split(',')
+            .map(|t| t.trim().parse().context("bad batch size"))
+            .collect::<Result<_>>()?;
+        policy_batches.sort_unstable();
+        let meta = ArtifactMeta {
+            feature_dim: num("feature_dim")?,
+            num_actions: num("num_actions")?,
+            out_dim: num("out_dim")?,
+            value_index: num("value_index")?,
+            policy_batches,
+            select_batch: num("select_batch")?,
+            teacher_scale: fnum("teacher_scale")?,
+            illegal_logit: fnum("illegal_logit")?,
+            distill_final_loss: fnum("distill_final_loss")?,
+        };
+        // Must agree with the Rust-side feature contract.
+        anyhow::ensure!(
+            meta.feature_dim == crate::env::FEATURE_DIM,
+            "feature_dim mismatch: artifacts {} vs crate {}",
+            meta.feature_dim,
+            crate::env::FEATURE_DIM
+        );
+        anyhow::ensure!(
+            meta.num_actions == crate::env::MAX_ACTIONS,
+            "num_actions mismatch: artifacts {} vs crate {}",
+            meta.num_actions,
+            crate::env::MAX_ACTIONS
+        );
+        Ok(meta)
+    }
+
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Smallest exported batch that fits `n` rows (largest if none fits —
+    /// the engine then chunks).
+    pub fn batch_for(&self, n: usize) -> usize {
+        self.policy_batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.policy_batches.last().expect("no batches"))
+    }
+}
+
+/// Locate the artifacts directory: `$WU_UCT_ARTIFACTS`, else
+/// `<manifest>/artifacts`, else `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("WU_UCT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.exists() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "feature_dim=128\nnum_actions=16\nout_dim=32\nvalue_index=16\n\
+                          policy_batches=32,1,8\nselect_batch=64\nteacher_scale=4.0\n\
+                          illegal_logit=-8.0\ndistill_final_loss=0.25\n";
+
+    #[test]
+    fn parses_and_sorts_batches() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.feature_dim, 128);
+        assert_eq!(m.policy_batches, vec![1, 8, 32]);
+        assert_eq!(m.value_index, 16);
+        assert!((m.teacher_scale - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_for_picks_smallest_fitting() {
+        let m = ArtifactMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch_for(1), 1);
+        assert_eq!(m.batch_for(2), 8);
+        assert_eq!(m.batch_for(8), 8);
+        assert_eq!(m.batch_for(9), 32);
+        assert_eq!(m.batch_for(100), 32); // chunked by the engine
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(ArtifactMeta::parse("feature_dim=128").is_err());
+    }
+
+    #[test]
+    fn contract_mismatch_errors() {
+        let bad = SAMPLE.replace("feature_dim=128", "feature_dim=64");
+        let err = ArtifactMeta::parse(&bad).unwrap_err();
+        assert!(err.to_string().contains("mismatch"));
+    }
+
+    #[test]
+    fn real_artifacts_parse_if_present() {
+        let dir = artifacts_dir();
+        if dir.join("meta.txt").exists() {
+            let m = ArtifactMeta::load(&dir).unwrap();
+            assert_eq!(m.feature_dim, crate::env::FEATURE_DIM);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime layer: PJRT loading/execution of the AOT artifacts, the
+//! dynamic-batching inference server, and the network rollout policy.
+//!
+//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! (`artifacts/*.hlo.txt`) → `client.compile` → `execute`. Python never
+//! runs here — the weights were constant-folded at `make artifacts` time.
+
+pub mod engine;
+pub mod meta;
+pub mod policy;
+pub mod server;
+
+pub use engine::{Engine, PolicyOutput};
+pub use meta::{artifacts_dir, ArtifactMeta};
+pub use policy::NetworkPolicy;
+pub use server::{EvalHandle, EvalServer, ServerStats};

@@ -1,0 +1,130 @@
+//! The network rollout policy: the distilled policy-value net served by
+//! the PJRT inference server, used as the simulation default policy —
+//! the role the distilled PPO network plays in the paper (Appendix D).
+
+use std::sync::Arc;
+
+use crate::env::{Env, FEATURE_DIM};
+use crate::eval::{PolicyFactory, RolloutPolicy};
+use crate::runtime::server::EvalHandle;
+use crate::util::rng::Pcg32;
+
+/// Rollout policy backed by the AOT-compiled network.
+pub struct NetworkPolicy {
+    handle: EvalHandle,
+    rng: Pcg32,
+    features: Vec<f32>,
+}
+
+impl NetworkPolicy {
+    pub fn new(handle: EvalHandle, seed: u64) -> Self {
+        Self {
+            handle,
+            rng: Pcg32::new(seed ^ 0x4e7),
+            features: vec![0f32; FEATURE_DIM],
+        }
+    }
+
+    /// Factory for worker pools: each worker gets its own rng stream but
+    /// shares the inference server through the cloned handle.
+    pub fn factory(handle: EvalHandle) -> PolicyFactory {
+        Arc::new(move |seed| Box::new(NetworkPolicy::new(handle.clone(), seed)))
+    }
+
+    fn eval_env(&mut self, env: &dyn Env) -> crate::runtime::engine::PolicyOutput {
+        env.features(&mut self.features);
+        self.handle.eval(self.features.clone())
+    }
+}
+
+impl RolloutPolicy for NetworkPolicy {
+    fn choose(&mut self, env: &dyn Env) -> usize {
+        let legal = env.legal_actions();
+        assert!(!legal.is_empty(), "choose() with no legal actions");
+        let out = self.eval_env(env);
+        // Softmax sample over legal logits (stable exp).
+        let logits: Vec<f64> = legal.iter().map(|&a| out.logits[a] as f64).collect();
+        let max = logits.iter().cloned().fold(f64::MIN, f64::max);
+        let weights: Vec<f64> = logits.iter().map(|l| (l - max).exp()).collect();
+        legal[self.rng.weighted(&weights)]
+    }
+
+    fn value(&mut self, env: &dyn Env) -> f64 {
+        self.eval_env(env).value as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "network"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::meta::artifacts_dir;
+    use crate::runtime::server::EvalServer;
+    use std::time::Duration;
+
+    fn server() -> Option<EvalServer> {
+        let dir = artifacts_dir();
+        if !dir.join("meta.txt").exists() {
+            eprintln!("artifacts missing — run `make artifacts` (test skipped)");
+            return None;
+        }
+        Some(EvalServer::start(&dir, Duration::from_micros(100)).unwrap())
+    }
+
+    #[test]
+    fn network_policy_picks_legal_actions() {
+        let Some(s) = server() else { return };
+        let env = crate::env::atari::make("SpaceInvaders", 3);
+        let mut p = NetworkPolicy::new(s.handle(), 1);
+        for _ in 0..10 {
+            let a = p.choose(env.as_ref());
+            assert!(env.legal_actions().contains(&a));
+        }
+        assert!(p.value(env.as_ref()).is_finite());
+    }
+
+    #[test]
+    fn factory_clones_share_server() {
+        let Some(s) = server() else { return };
+        let f = NetworkPolicy::factory(s.handle());
+        let env = crate::env::atari::make("Alien", 5);
+        let mut p1 = f(1);
+        let mut p2 = f(2);
+        let _ = p1.choose(env.as_ref());
+        let _ = p2.choose(env.as_ref());
+        assert!(s.stats().requests >= 2);
+    }
+
+    #[test]
+    fn network_mode_tracks_heuristic_mode() {
+        // Distillation quality end-to-end: the network's modal action
+        // should usually agree with the teacher's argmax.
+        let Some(s) = server() else { return };
+        let mut agree = 0;
+        let total: u32 = 15;
+        for seed in 0..total as u64 {
+            let env = crate::env::atari::make("RoadRunner", seed);
+            let mut p = NetworkPolicy::new(s.handle(), seed);
+            let mut counts = std::collections::HashMap::new();
+            for _ in 0..30 {
+                *counts.entry(p.choose(env.as_ref())).or_insert(0) += 1;
+            }
+            let modal = *counts.iter().max_by_key(|(_, &c)| c).unwrap().0;
+            let legal = env.legal_actions();
+            let teacher = legal
+                .iter()
+                .copied()
+                .max_by(|&a, &b| {
+                    env.action_heuristic(a)
+                        .partial_cmp(&env.action_heuristic(b))
+                        .unwrap()
+                })
+                .unwrap();
+            agree += (modal == teacher) as u32;
+        }
+        assert!(agree * 2 >= total, "agreement {agree}/{total}");
+    }
+}

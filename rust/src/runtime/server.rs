@@ -1,0 +1,231 @@
+//! Dynamic-batching inference server.
+//!
+//! The PJRT executable is owned by one server thread; simulation workers
+//! talk to it through cloneable [`EvalHandle`]s. The server greedily
+//! coalesces concurrent requests into one padded batch (up to the largest
+//! exported batch size, with a short gather window), which is what makes
+//! a 16-worker WU-UCT run amortize the network cost — the same dynamic
+//! batching trick serving systems (vLLM-style routers) use.
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::runtime::engine::{Engine, PolicyOutput};
+
+/// A single inference request: features in, (logits, value) out.
+struct EvalRequest {
+    features: Vec<f32>,
+    reply: Sender<PolicyOutput>,
+}
+
+/// Server statistics (for the batching-efficiency bench).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+}
+
+impl ServerStats {
+    /// Mean rows per PJRT execution — the batching win.
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Clonable client handle to the inference server.
+#[derive(Clone)]
+pub struct EvalHandle {
+    tx: Sender<EvalRequest>,
+}
+
+impl EvalHandle {
+    /// Blocking evaluation of one feature vector.
+    pub fn eval(&self, features: Vec<f32>) -> PolicyOutput {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(EvalRequest { features, reply: reply_tx })
+            .expect("eval server hung up");
+        reply_rx.recv().expect("eval server dropped the reply")
+    }
+}
+
+/// The server: owns the engine thread.
+pub struct EvalServer {
+    tx: Option<Sender<EvalRequest>>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<ServerStats>>,
+}
+
+impl EvalServer {
+    /// Start the server on the artifacts in `dir`.
+    ///
+    /// `gather_window`: how long to wait for additional requests after the
+    /// first one before running the batch (the batching/latency knob the
+    /// `micro_hotpath` bench sweeps).
+    pub fn start(dir: &Path, gather_window: Duration) -> Result<EvalServer> {
+        let (tx, rx): (Sender<EvalRequest>, Receiver<EvalRequest>) = channel();
+        let stats = Arc::new(Mutex::new(ServerStats::default()));
+        let stats_thread = Arc::clone(&stats);
+        // PJRT handles are not Send: the engine must be constructed on the
+        // server thread itself; startup errors come back over a channel.
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let dir = dir.to_path_buf();
+        let handle = std::thread::spawn(move || {
+            let mut engine = match Engine::load(&dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let max_batch = *engine.meta().policy_batches.last().unwrap();
+            loop {
+                // Block for the first request of the batch.
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => return, // all handles dropped: shut down
+                };
+                let mut pending = vec![first];
+                // Gather more within the window, up to the batch cap.
+                while pending.len() < max_batch {
+                    match rx.recv_timeout(gather_window) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let rows: Vec<Vec<f32>> =
+                    pending.iter().map(|r| r.features.clone()).collect();
+                match engine.infer(&rows) {
+                    Ok(outputs) => {
+                        {
+                            let mut s = stats_thread.lock().unwrap();
+                            s.requests += pending.len() as u64;
+                            s.batches += 1;
+                        }
+                        for (req, out) in pending.into_iter().zip(outputs) {
+                            let _ = req.reply.send(out);
+                        }
+                    }
+                    Err(e) => {
+                        // Drop the replies; clients will panic with a clear
+                        // message. An inference error is unrecoverable.
+                        eprintln!("eval server: inference failed: {e:#}");
+                        return;
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .expect("eval server thread died before reporting readiness")?;
+        Ok(EvalServer { tx: Some(tx), handle: Some(handle), stats })
+    }
+
+    pub fn handle(&self) -> EvalHandle {
+        EvalHandle { tx: self.tx.as_ref().expect("server running").clone() }
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl Drop for EvalServer {
+    fn drop(&mut self) {
+        // Close the channel; the thread exits once in-flight work drains.
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{FEATURE_DIM};
+    use crate::runtime::meta::artifacts_dir;
+
+    fn server() -> Option<EvalServer> {
+        let dir = artifacts_dir();
+        if !dir.join("meta.txt").exists() {
+            eprintln!("artifacts missing — run `make artifacts` (test skipped)");
+            return None;
+        }
+        Some(EvalServer::start(&dir, Duration::from_micros(200)).unwrap())
+    }
+
+    fn features(seed: u64) -> Vec<f32> {
+        let env = crate::env::atari::make("Alien", seed);
+        let mut f = vec![0f32; FEATURE_DIM];
+        env.features(&mut f);
+        f
+    }
+
+    #[test]
+    fn single_request_round_trip() {
+        let Some(s) = server() else { return };
+        let out = s.handle().eval(features(1));
+        assert_eq!(out.logits.len(), crate::env::MAX_ACTIONS);
+        assert!(out.value.is_finite());
+        assert_eq!(s.stats().requests, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let Some(s) = server() else { return };
+        let n = 24;
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let h = s.handle();
+                std::thread::spawn(move || h.eval(features(i as u64)))
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert!(out.value.is_finite());
+        }
+        let stats = s.stats();
+        assert_eq!(stats.requests, n as u64);
+        assert!(
+            stats.batches < n as u64,
+            "no batching happened: {stats:?}"
+        );
+        assert!(stats.avg_batch() > 1.0);
+    }
+
+    #[test]
+    fn server_results_match_engine_directly() {
+        let Some(s) = server() else { return };
+        let f = features(9);
+        let via_server = s.handle().eval(f.clone());
+        let mut engine = Engine::load(&artifacts_dir()).unwrap();
+        let direct = engine.infer(&[f]).unwrap().remove(0);
+        for (a, b) in via_server.logits.iter().zip(&direct.logits) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert!((via_server.value - direct.value).abs() < 1e-5);
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let Some(s) = server() else { return };
+        let h = s.handle();
+        let _ = h.eval(features(0));
+        drop(h);
+        drop(s); // must join without hanging
+    }
+}

@@ -1,0 +1,249 @@
+//! Index-arena search tree.
+//!
+//! Nodes live in a flat `Vec` and refer to each other by [`NodeId`]; this
+//! keeps the selection hot loop allocation-free and cache-friendly (see
+//! EXPERIMENTS.md §Perf) and sidesteps ownership cycles entirely.
+
+use crate::tree::node::{Node, NodeId};
+
+/// The search tree. Root is always node 0.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// New tree containing only a root node.
+    pub fn new() -> Tree {
+        Tree { nodes: vec![Node::new(None, 0, 0)] }
+    }
+
+    pub const ROOT: NodeId = 0;
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // a tree always has its root
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    /// Add a child of `parent` reached via `action`; returns the new id.
+    /// Panics if `action` is already expanded under `parent`.
+    pub fn add_child(&mut self, parent: NodeId, action: usize) -> NodeId {
+        assert!(
+            self.nodes[parent].child_for(action).is_none(),
+            "action {action} already expanded under node {parent}"
+        );
+        let depth = self.nodes[parent].depth + 1;
+        let id = self.nodes.len();
+        self.nodes.push(Node::new(Some(parent), action, depth));
+        self.nodes[parent].children.push((action, id));
+        id
+    }
+
+    /// Path from `id` up to and including the root, starting at `id`.
+    pub fn path_to_root(&self, id: NodeId) -> Vec<NodeId> {
+        let mut path = vec![id];
+        let mut cur = id;
+        while let Some(p) = self.nodes[cur].parent {
+            path.push(p);
+            cur = p;
+        }
+        path
+    }
+
+    /// Walk ancestors (including `id`) applying `f`.
+    pub fn for_path_to_root(&mut self, id: NodeId, mut f: impl FnMut(&mut Node)) {
+        let mut cur = Some(id);
+        while let Some(c) = cur {
+            f(&mut self.nodes[c]);
+            cur = self.nodes[c].parent;
+        }
+    }
+
+    /// Child of the root with the highest observed visit count (ties
+    /// broken by value) — the action the search recommends.
+    pub fn best_root_action(&self) -> Option<usize> {
+        self.nodes[Self::ROOT]
+            .children
+            .iter()
+            .max_by(|&&(_, a), &&(_, b)| {
+                let na = &self.nodes[a];
+                let nb = &self.nodes[b];
+                na.n.cmp(&nb.n)
+                    .then(na.v.partial_cmp(&nb.v).unwrap_or(std::cmp::Ordering::Equal))
+            })
+            .map(|&(action, _)| action)
+    }
+
+    /// (action, N, V) rows for the root's children, for diagnostics.
+    pub fn root_child_stats(&self) -> Vec<(usize, u32, f64)> {
+        self.nodes[Self::ROOT]
+            .children
+            .iter()
+            .map(|&(a, id)| (a, self.nodes[id].n, self.nodes[id].v))
+            .collect()
+    }
+
+    /// Depth of the deepest node.
+    pub fn max_depth(&self) -> u32 {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+    }
+
+    /// Structural invariants, asserted by tests and property checks:
+    /// 1. every non-root node's parent lists it as a child exactly once;
+    /// 2. `N` of an internal node ≥ sum of children's `N` (each rollout
+    ///    backing up through a child also backs up through the parent);
+    /// 3. all `O` are zero when no simulations are in flight (checked by
+    ///    callers at quiescence via [`Tree::total_unobserved`]).
+    pub fn check_invariants(&self) {
+        for (id, node) in self.nodes.iter().enumerate() {
+            if let Some(p) = node.parent {
+                let count = self.nodes[p]
+                    .children
+                    .iter()
+                    .filter(|&&(_, c)| c == id)
+                    .count();
+                assert_eq!(count, 1, "node {id} not exactly once under parent {p}");
+            }
+            let child_n: u32 = node.children.iter().map(|&(_, c)| self.nodes[c].n).sum();
+            assert!(
+                node.n >= child_n,
+                "node {id}: N={} < sum of children N={child_n}",
+                node.n
+            );
+        }
+    }
+
+    /// Sum of `O` over all nodes (must be 0 at quiescence).
+    pub fn total_unobserved(&self) -> u64 {
+        self.nodes.iter().map(|n| n.o as u64).sum()
+    }
+
+    /// Iterate over all nodes with ids.
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, &Node)> {
+        self.nodes.iter().enumerate()
+    }
+}
+
+impl Default for Tree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_tree_has_root_only() {
+        let t = Tree::new();
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_empty());
+        assert_eq!(t.node(Tree::ROOT).depth, 0);
+    }
+
+    #[test]
+    fn add_child_links_both_ways() {
+        let mut t = Tree::new();
+        let c = t.add_child(Tree::ROOT, 3);
+        assert_eq!(t.node(c).parent, Some(Tree::ROOT));
+        assert_eq!(t.node(c).action, 3);
+        assert_eq!(t.node(c).depth, 1);
+        assert_eq!(t.node(Tree::ROOT).child_for(3), Some(c));
+    }
+
+    #[test]
+    #[should_panic(expected = "already expanded")]
+    fn duplicate_action_panics() {
+        let mut t = Tree::new();
+        t.add_child(Tree::ROOT, 1);
+        t.add_child(Tree::ROOT, 1);
+    }
+
+    #[test]
+    fn path_to_root_orders_leaf_first() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(a, 1);
+        let c = t.add_child(b, 2);
+        assert_eq!(t.path_to_root(c), vec![c, b, a, Tree::ROOT]);
+    }
+
+    #[test]
+    fn for_path_applies_to_all_ancestors() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(a, 1);
+        t.for_path_to_root(b, |n| n.o += 1);
+        assert_eq!(t.node(b).o, 1);
+        assert_eq!(t.node(a).o, 1);
+        assert_eq!(t.node(Tree::ROOT).o, 1);
+        assert_eq!(t.total_unobserved(), 3);
+    }
+
+    #[test]
+    fn best_root_action_prefers_visits_then_value() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(Tree::ROOT, 1);
+        t.node_mut(a).n = 5;
+        t.node_mut(a).v = 0.1;
+        t.node_mut(b).n = 9;
+        t.node_mut(b).v = 0.0;
+        assert_eq!(t.best_root_action(), Some(1));
+        // Tie on N: value breaks it.
+        t.node_mut(a).n = 9;
+        assert_eq!(t.best_root_action(), Some(0));
+    }
+
+    #[test]
+    fn best_root_action_none_without_children() {
+        assert_eq!(Tree::new().best_root_action(), None);
+    }
+
+    #[test]
+    fn invariants_hold_after_simulated_backups() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(a, 0);
+        // Back up two rollouts through b, one through a only.
+        for id in [b, a, Tree::ROOT] {
+            t.node_mut(id).observe(1.0);
+        }
+        for id in [b, a, Tree::ROOT] {
+            t.node_mut(id).observe(0.5);
+        }
+        t.node_mut(a).observe(0.0);
+        t.node_mut(Tree::ROOT).observe(0.0);
+        t.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "N=")]
+    fn invariant_catches_undercounted_parent() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        t.node_mut(a).n = 5; // parent root still has N=0
+        t.check_invariants();
+    }
+
+    #[test]
+    fn max_depth_tracks_deepest() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(a, 0);
+        t.add_child(b, 0);
+        assert_eq!(t.max_depth(), 3);
+    }
+}

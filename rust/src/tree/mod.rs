@@ -1,0 +1,10 @@
+//! Search-tree substrate: arena storage, node statistics {V, N, O},
+//! and the UCT / WU-UCT / virtual-loss tree policies.
+
+pub mod arena;
+pub mod node;
+pub mod policy;
+
+pub use arena::Tree;
+pub use node::{Node, NodeId};
+pub use policy::{score_child, select_child, ucb_score, ScoreMode};

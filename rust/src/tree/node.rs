@@ -1,0 +1,173 @@
+//! Search-tree node: the statistics triple {V, N, O} plus bookkeeping.
+//!
+//! `N` counts *observed* samples (completed simulations backed up through
+//! the node, Eq. 3); `O` counts *unobserved* samples — rollouts that were
+//! initiated through this node but whose simulation has not returned yet
+//! (the paper's central quantity, Eqs. 5–6). `vloss`/`vcount` hold the
+//! virtual-loss accumulators used only by the TreeP baselines (Algorithm 5
+//! and Eq. 7).
+
+use crate::env::EnvState;
+
+/// Index of a node inside its [`super::arena::Tree`].
+pub type NodeId = usize;
+
+/// One search-tree node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Parent node; `None` for the root.
+    pub parent: Option<NodeId>,
+    /// Action on the edge parent -> this node (0 for the root).
+    pub action: usize,
+    /// Expanded children as (action, child id) pairs.
+    pub children: Vec<(usize, NodeId)>,
+    /// Observed visit count `N_s`.
+    pub n: u32,
+    /// Unobserved (in-flight) sample count `O_s`.
+    pub o: u32,
+    /// Running mean value estimate `V_s` (Eq. 3).
+    pub v: f64,
+    /// Immediate reward `R(parent, action)` collected when expanding.
+    pub reward: f64,
+    /// Whether the environment reported `done` on the edge into this node.
+    pub terminal: bool,
+    /// Depth (root = 0).
+    pub depth: u32,
+    /// Legal actions not yet expanded into children.
+    pub untried: Vec<usize>,
+    /// Snapshot of the environment at this node (the centralized
+    /// game-state storage of Appendix A). Dropped for exhausted nodes by
+    /// the master to bound memory.
+    pub state: Option<EnvState>,
+    /// TreeP virtual-loss accumulator (sum of subtracted r_VL).
+    pub vloss: f64,
+    /// TreeP virtual pseudo-count accumulator (Eq. 7's n_VL sum).
+    pub vcount: u32,
+}
+
+impl Node {
+    /// Fresh node under `parent` via `action`.
+    pub fn new(parent: Option<NodeId>, action: usize, depth: u32) -> Node {
+        Node {
+            parent,
+            action,
+            children: Vec::new(),
+            n: 0,
+            o: 0,
+            v: 0.0,
+            reward: 0.0,
+            terminal: false,
+            depth,
+            untried: Vec::new(),
+            state: None,
+            vloss: 0.0,
+            vcount: 0,
+        }
+    }
+
+    /// `N_s + O_s`, the corrected visit total of Eq. 4.
+    pub fn total_visits(&self) -> u32 {
+        self.n + self.o
+    }
+
+    /// Child id reached by `action`, if expanded.
+    pub fn child_for(&self, action: usize) -> Option<NodeId> {
+        self.children
+            .iter()
+            .find(|&&(a, _)| a == action)
+            .map(|&(_, id)| id)
+    }
+
+    /// Is every legal action expanded?
+    pub fn fully_expanded(&self) -> bool {
+        self.untried.is_empty()
+    }
+
+    /// Leaf = no children yet.
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Incorporate one observed return `r̄` into the running mean (Eq. 3's
+    /// value update; the caller increments `n` via complete-update logic).
+    pub fn observe(&mut self, ret: f64) {
+        self.n += 1;
+        self.v += (ret - self.v) / self.n as f64;
+    }
+
+    /// Effective value under TreeP's virtual loss / pseudo-count (Eq. 7):
+    /// `V' = (N·V − vloss) / (N + vcount)`; plain `V` when no virtual
+    /// adjustments are outstanding.
+    pub fn effective_v(&self) -> f64 {
+        if self.vloss == 0.0 && self.vcount == 0 {
+            return self.v;
+        }
+        let denom = self.n as f64 + self.vcount as f64;
+        if denom == 0.0 {
+            return -self.vloss; // unvisited but virtually-lossed
+        }
+        (self.n as f64 * self.v - self.vloss) / denom
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_node_is_pristine_leaf() {
+        let n = Node::new(None, 0, 0);
+        assert!(n.is_leaf());
+        assert!(n.fully_expanded()); // no untried set yet
+        assert_eq!(n.total_visits(), 0);
+        assert_eq!(n.effective_v(), 0.0);
+    }
+
+    #[test]
+    fn observe_computes_running_mean() {
+        let mut n = Node::new(None, 0, 0);
+        n.observe(2.0);
+        n.observe(4.0);
+        n.observe(6.0);
+        assert_eq!(n.n, 3);
+        assert!((n.v - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_visits_adds_unobserved() {
+        let mut n = Node::new(None, 0, 0);
+        n.observe(1.0);
+        n.o = 3;
+        assert_eq!(n.total_visits(), 4);
+    }
+
+    #[test]
+    fn child_lookup() {
+        let mut n = Node::new(None, 0, 0);
+        n.children.push((2, 7));
+        n.children.push((5, 9));
+        assert_eq!(n.child_for(5), Some(9));
+        assert_eq!(n.child_for(3), None);
+    }
+
+    #[test]
+    fn effective_v_matches_eq7() {
+        let mut n = Node::new(None, 0, 0);
+        n.observe(1.0);
+        n.observe(1.0); // N=2, V=1
+        n.vloss = 1.0;
+        n.vcount = 1;
+        // (2*1 - 1) / (2 + 1) = 1/3
+        assert!((n.effective_v() - 1.0 / 3.0).abs() < 1e-12);
+        n.vloss = 0.0;
+        n.vcount = 0;
+        assert_eq!(n.effective_v(), 1.0);
+    }
+
+    #[test]
+    fn effective_v_unvisited_with_vloss() {
+        let mut n = Node::new(None, 0, 0);
+        n.vloss = 2.5;
+        assert_eq!(n.effective_v(), -2.5);
+    }
+}

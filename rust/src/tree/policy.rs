@@ -1,0 +1,215 @@
+//! Tree policies: UCT (Eq. 2), WU-UCT (Eq. 4) and the virtual-loss
+//! variants used by the TreeP baselines.
+//!
+//! All selection ultimately funnels through [`select_child`], which scores
+//! the expanded children of a node and returns the argmax; unvisited
+//! children (total 0) score `+inf` (first-visit priority), matching the
+//! semantics of the L1 Pallas scorer (`python/compile/kernels/
+//! wu_uct_score.py`) that the `micro_hotpath` bench cross-checks.
+
+use crate::tree::arena::Tree;
+use crate::tree::node::NodeId;
+
+/// Which statistics the score uses — i.e. which paper algorithm.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScoreMode {
+    /// Plain UCT (Eq. 2): V + β√(2 ln N_s / N_s').
+    Uct,
+    /// WU-UCT (Eq. 4): V + β√(2 ln (N_s+O_s) / (N_s'+O_s')).
+    WuUct,
+    /// TreeP: UCT over virtual-loss-adjusted values (Algorithm 5 / Eq. 7;
+    /// the accumulators live in the nodes).
+    VirtualLoss,
+}
+
+/// Exploration score of a child given parent totals.
+///
+/// `parent_total` is `N_s` (+ `O_s` under WU-UCT); `child_total` likewise.
+/// `value` is the child's (possibly virtual-loss-adjusted) mean value.
+#[inline]
+pub fn ucb_score(value: f64, parent_total: u32, child_total: u32, beta: f64) -> f64 {
+    if child_total == 0 {
+        return f64::INFINITY;
+    }
+    let log_term = (parent_total.max(1) as f64).ln();
+    value + beta * (2.0 * log_term / child_total as f64).sqrt()
+}
+
+/// Score `child` under `mode`.
+#[inline]
+pub fn score_child(tree: &Tree, parent: NodeId, child: NodeId, mode: ScoreMode, beta: f64) -> f64 {
+    let p = tree.node(parent);
+    let c = tree.node(child);
+    match mode {
+        ScoreMode::Uct => ucb_score(c.v, p.n, c.n, beta),
+        ScoreMode::WuUct => ucb_score(c.v, p.total_visits(), c.total_visits(), beta),
+        ScoreMode::VirtualLoss => {
+            // Virtual pseudo-counts also inflate the visit totals (Eq. 7).
+            let pt = p.n + p.vcount;
+            let ct = c.n + c.vcount;
+            ucb_score(c.effective_v(), pt, ct, beta)
+        }
+    }
+}
+
+/// Argmax child of `parent` under `mode`; `None` if no children.
+/// Deterministic tie-break: first (lowest-index) child wins, matching the
+/// L1 kernel's `argmax` semantics — this determinism is precisely what
+/// causes the *collapse of exploration* under naive parallelization
+/// (Fig. 1c), which WU-UCT's `O` statistics then counteract.
+pub fn select_child(tree: &Tree, parent: NodeId, mode: ScoreMode, beta: f64) -> Option<NodeId> {
+    let node = tree.node(parent);
+    let mut best: Option<(NodeId, f64)> = None;
+    for &(_, child) in &node.children {
+        let s = score_child(tree, parent, child, mode, beta);
+        match best {
+            Some((_, bs)) if s <= bs => {}
+            _ => best = Some((child, s)),
+        }
+    }
+    best.map(|(id, _)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree_with_two_children() -> (Tree, NodeId, NodeId) {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(Tree::ROOT, 1);
+        (t, a, b)
+    }
+
+    #[test]
+    fn unvisited_child_scores_infinity() {
+        let (t, a, _) = tree_with_two_children();
+        let s = score_child(&t, Tree::ROOT, a, ScoreMode::Uct, 1.0);
+        assert!(s.is_infinite());
+    }
+
+    #[test]
+    fn higher_value_wins_when_counts_equal() {
+        let (mut t, a, b) = tree_with_two_children();
+        for id in [a, b] {
+            t.node_mut(id).n = 10;
+        }
+        t.node_mut(Tree::ROOT).n = 20;
+        t.node_mut(a).v = 0.9;
+        t.node_mut(b).v = 0.1;
+        assert_eq!(select_child(&t, Tree::ROOT, ScoreMode::Uct, 1.0), Some(a));
+    }
+
+    #[test]
+    fn exploration_term_prefers_less_visited() {
+        let (mut t, a, b) = tree_with_two_children();
+        t.node_mut(Tree::ROOT).n = 100;
+        t.node_mut(a).n = 90;
+        t.node_mut(b).n = 10;
+        // Equal values: exploration should pick the rarely-visited child.
+        assert_eq!(select_child(&t, Tree::ROOT, ScoreMode::Uct, 1.0), Some(b));
+    }
+
+    #[test]
+    fn wu_uct_counts_inflight_simulations() {
+        let (mut t, a, b) = tree_with_two_children();
+        t.node_mut(Tree::ROOT).n = 100;
+        t.node_mut(a).n = 10;
+        t.node_mut(b).n = 10;
+        // Under plain UCT the tie goes to `a` (first child).
+        assert_eq!(select_child(&t, Tree::ROOT, ScoreMode::Uct, 1.0), Some(a));
+        // 5 simulations in flight on `a`: WU-UCT diverts to `b` —
+        // the fix for the collapse of exploration.
+        t.node_mut(a).o = 5;
+        t.node_mut(Tree::ROOT).o = 5;
+        assert_eq!(select_child(&t, Tree::ROOT, ScoreMode::WuUct, 1.0), Some(b));
+        // Plain UCT is blind to O and still picks `a`.
+        assert_eq!(select_child(&t, Tree::ROOT, ScoreMode::Uct, 1.0), Some(a));
+    }
+
+    #[test]
+    fn wu_uct_penalty_vanishes_for_large_n() {
+        // Exploitation preserved: with N huge, O barely moves the score
+        // (the paper's argument that WU-UCT avoids exploitation failure).
+        let (mut t, a, b) = tree_with_two_children();
+        t.node_mut(Tree::ROOT).n = 2_000_000;
+        t.node_mut(a).n = 1_000_000;
+        t.node_mut(a).v = 0.51; // clearly best
+        t.node_mut(b).n = 1_000_000;
+        t.node_mut(b).v = 0.5;
+        t.node_mut(a).o = 16;
+        t.node_mut(Tree::ROOT).o = 16;
+        assert_eq!(
+            select_child(&t, Tree::ROOT, ScoreMode::WuUct, 1.0),
+            Some(a),
+            "all 16 workers may exploit the best child"
+        );
+    }
+
+    #[test]
+    fn virtual_loss_diverts_like_treep() {
+        let (mut t, a, b) = tree_with_two_children();
+        t.node_mut(Tree::ROOT).n = 100;
+        for id in [a, b] {
+            t.node_mut(id).n = 50;
+            t.node_mut(id).v = 0.5;
+        }
+        // virtual loss on `a` pushes its effective value down hard.
+        t.node_mut(a).vloss = 5.0;
+        t.node_mut(a).vcount = 1;
+        assert_eq!(
+            select_child(&t, Tree::ROOT, ScoreMode::VirtualLoss, 1.0),
+            Some(b)
+        );
+    }
+
+    #[test]
+    fn treep_hard_penalty_causes_exploitation_failure() {
+        // The contrast case from Section 4: even when `a` is *clearly*
+        // optimal, a large-enough virtual loss diverts workers off it —
+        // exploitation failure. WU-UCT (above) does not have this failure.
+        let (mut t, a, b) = tree_with_two_children();
+        t.node_mut(Tree::ROOT).n = 10_000;
+        t.node_mut(a).n = 9_000;
+        t.node_mut(a).v = 0.9;
+        t.node_mut(b).n = 1_000;
+        t.node_mut(b).v = 0.1;
+        t.node_mut(a).vloss = 9_000.0; // r_VL = 1.0 x 9000... no: one 9000-strong loss
+        assert_eq!(
+            select_child(&t, Tree::ROOT, ScoreMode::VirtualLoss, 1.0),
+            Some(b)
+        );
+    }
+
+    #[test]
+    fn beta_zero_is_greedy() {
+        let (mut t, a, b) = tree_with_two_children();
+        t.node_mut(Tree::ROOT).n = 100;
+        t.node_mut(a).n = 1;
+        t.node_mut(a).v = 0.2;
+        t.node_mut(b).n = 99;
+        t.node_mut(b).v = 0.8;
+        assert_eq!(select_child(&t, Tree::ROOT, ScoreMode::Uct, 0.0), Some(b));
+    }
+
+    #[test]
+    fn no_children_gives_none() {
+        let t = Tree::new();
+        assert_eq!(select_child(&t, Tree::ROOT, ScoreMode::Uct, 1.0), None);
+    }
+
+    #[test]
+    fn scores_match_l1_kernel_convention() {
+        // Mirror of python/tests/test_kernels.py::test_matches_ref for a
+        // hand-computed case: V=0.3, parent total 50, child total 5, β=1.
+        let (mut t, a, _) = tree_with_two_children();
+        t.node_mut(Tree::ROOT).n = 45;
+        t.node_mut(Tree::ROOT).o = 5;
+        t.node_mut(a).n = 4;
+        t.node_mut(a).o = 1;
+        t.node_mut(a).v = 0.3;
+        let s = score_child(&t, Tree::ROOT, a, ScoreMode::WuUct, 1.0);
+        let want = 0.3 + (2.0 * (50f64).ln() / 5.0).sqrt();
+        assert!((s - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,206 @@
+//! Minimal command-line parser (clap is not in the offline crate cache).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters, defaults and an auto-generated usage
+//! string. Used by `rust/src/main.rs` and every example binary.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Declarative specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(d) => takes a value with default `d`.
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` against `specs`. Unknown `--options` are rejected.
+    pub fn parse<I, S>(argv: I, specs: &[OptSpec]) -> Result<Self>
+    where
+        I: IntoIterator<Item = S>,
+        S: AsRef<str>,
+    {
+        let mut args = Args::default();
+        // Seed defaults.
+        for spec in specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let spec_of = |name: &str| specs.iter().find(|s| s.name == name);
+
+        let argv: Vec<String> = argv.into_iter().map(|s| s.as_ref().to_string()).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = spec_of(&name)
+                    .ok_or_else(|| anyhow!("unknown option --{name}"))?;
+                match (spec.default, inline) {
+                    (None, Some(_)) => bail!("--{name} is a flag, it takes no value"),
+                    (None, None) => args.flags.push(name),
+                    (Some(_), Some(v)) => {
+                        args.values.insert(name, v);
+                    }
+                    (Some(_), None) => {
+                        i += 1;
+                        let v = argv
+                            .get(i)
+                            .ok_or_else(|| anyhow!("--{name} requires a value"))?;
+                        args.values.insert(name, v.clone());
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)?
+            .parse()
+            .with_context(|| format!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        self.str(name)?
+            .parse()
+            .with_context(|| format!("--{name} must be a u64"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)?
+            .parse()
+            .with_context(|| format!("--{name} must be a float"))
+    }
+
+    /// Comma-separated list of usize (e.g. `--workers 1,2,4,8,16`).
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>> {
+        self.str(name)?
+            .split(',')
+            .map(|tok| {
+                tok.trim()
+                    .parse()
+                    .with_context(|| format!("--{name}: bad integer {tok:?}"))
+            })
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage/help block for `specs`.
+pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{program} — {about}\n\noptions:\n");
+    for s in specs {
+        let kind = match s.default {
+            None => "(flag)".to_string(),
+            Some(d) => format!("(default: {d})"),
+        };
+        out.push_str(&format!("  --{:<22} {} {}\n", s.name, s.help, kind));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "workers", help: "worker count", default: Some("16") },
+            OptSpec { name: "seed", help: "rng seed", default: Some("0") },
+            OptSpec { name: "verbose", help: "chatty", default: None },
+            OptSpec { name: "list", help: "csv of ints", default: Some("1,2") },
+        ]
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(Vec::<&str>::new(), &specs()).unwrap();
+        assert_eq!(a.usize("workers").unwrap(), 16);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = Args::parse(["--workers", "4", "--seed=9"], &specs()).unwrap();
+        assert_eq!(a.usize("workers").unwrap(), 4);
+        assert_eq!(a.u64("seed").unwrap(), 9);
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = Args::parse(["run", "--verbose", "extra"], &specs()).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(["--nope"], &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(["--verbose=1"], &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(["--workers"], &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = Args::parse(["--workers", "ten"], &specs()).unwrap();
+        assert!(a.usize("workers").is_err());
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = Args::parse(["--list", "1, 2,8"], &specs()).unwrap();
+        assert_eq!(a.usize_list("list").unwrap(), vec![1, 2, 8]);
+    }
+
+    #[test]
+    fn usage_mentions_every_option() {
+        let u = usage("prog", "about", &specs());
+        for s in specs() {
+            assert!(u.contains(s.name));
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Key=value configuration files with sections, comments and typed access.
+//!
+//! The experiment harnesses read run configurations (worker counts,
+//! simulation budgets, env parameters) from simple INI-style files so paper
+//! scale vs laptop scale is a config swap, not a code change:
+//!
+//! ```text
+//! # experiment scale
+//! [search]
+//! max_simulations = 128
+//! sim_workers = 16
+//!
+//! [env]
+//! name = breakout
+//! ```
+//!
+//! CLI `--key value` pairs override file values via [`Config::set`].
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Layered configuration: `section.key -> value` strings.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse INI-ish text: `[section]` headers, `key = value` lines,
+    /// `#`/`;` comments, blank lines ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(&Self::qualify(&section, k.trim()), v.trim());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    fn qualify(section: &str, key: &str) -> String {
+        if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        }
+    }
+
+    /// Set / override a value (`section.key` form).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key} must be usize, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key} must be float, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow!("{key} must be a bool, got {v:?}")),
+        }
+    }
+
+    /// Merge `other` on top of `self` (other wins).
+    pub fn overlay(&mut self, other: &Config) {
+        for (k, v) in &other.entries {
+            self.entries.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+top = 1
+[search]
+max_simulations = 128
+beta = 1.5
+parallel = yes
+; another comment
+[env]
+name = breakout
+"#;
+
+    #[test]
+    fn parses_sections_and_keys() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("search.max_simulations"), Some("128"));
+        assert_eq!(c.get("env.name"), Some("breakout"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.usize_or("search.max_simulations", 0).unwrap(), 128);
+        assert!((c.f64_or("search.beta", 0.0).unwrap() - 1.5).abs() < 1e-12);
+        assert!(c.bool_or("search.parallel", false).unwrap());
+        assert_eq!(c.usize_or("search.missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let c = Config::parse("x = nope").unwrap();
+        assert!(c.usize_or("x", 0).is_err());
+        assert!(c.f64_or("x", 0.0).is_err());
+        assert!(c.bool_or("x", false).is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("no equals sign").is_err());
+    }
+
+    #[test]
+    fn overlay_wins() {
+        let mut base = Config::parse("a = 1\nb = 2").unwrap();
+        let over = Config::parse("b = 3\nc = 4").unwrap();
+        base.overlay(&over);
+        assert_eq!(base.get("a"), Some("1"));
+        assert_eq!(base.get("b"), Some("3"));
+        assert_eq!(base.get("c"), Some("4"));
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse("k = old").unwrap();
+        c.set("k", "new");
+        assert_eq!(c.get("k"), Some("new"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = Config::parse("\n# c\n; c2\n\nk = v\n").unwrap();
+        assert_eq!(c.keys().count(), 1);
+    }
+}

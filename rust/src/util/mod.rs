@@ -1,0 +1,11 @@
+//! Shared substrates: RNG, statistics, CLI, config, timing, tables,
+//! property testing. See DESIGN.md §3 for why these live in-repo (the
+//! offline crate cache only resolves `xla` + `anyhow`).
+
+pub mod cli;
+pub mod config;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;

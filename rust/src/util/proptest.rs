@@ -1,0 +1,237 @@
+//! Mini property-based testing framework (the `proptest` crate is not in
+//! the offline cache).
+//!
+//! A property runs against many seeded-random inputs; on failure the runner
+//! *shrinks* the failing input toward a minimal counterexample using the
+//! value's [`Shrink`] implementation, then panics with the seed + minimal
+//! case so the failure replays deterministically.
+//!
+//! ```no_run
+//! use wu_uct::util::proptest::{check, Gen};
+//! check("reverse twice is identity", 100, |g| {
+//!     let v: Vec<u32> = (0..g.usize(0, 20)).map(|_| g.u32(0, 1000)).collect();
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     v == w
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed) }
+    }
+
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        debug_assert!(lo <= hi);
+        if lo == hi {
+            return lo;
+        }
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u32(lo as u32, hi as u32) as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.chance(p_true)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    pub fn vec_u32(&mut self, len: (usize, usize), range: (u32, u32)) -> Vec<u32> {
+        let n = self.usize(len.0, len.1);
+        (0..n).map(|_| self.u32(range.0, range.1)).collect()
+    }
+
+    /// Access the raw rng (for seeding domain objects).
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. Panics on the first failing
+/// seed with replay instructions. The property returns `true` on success.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> bool) {
+    let base = base_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut g = Gen::new(seed);
+        if !prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}); \
+                 replay with Gen::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property may panic; the runner catches it and
+/// reports the seed (useful for properties built around `assert!`).
+pub fn check_panics(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = base_seed(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} panicked at case {case} (seed {seed:#x}): {msg}; \
+                 replay with Gen::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Shrink a failing `u64` input toward 0 while `fails` keeps failing;
+/// returns the smallest failing value found (simple halving strategy).
+pub fn shrink_u64(mut failing: u64, fails: impl Fn(u64) -> bool) -> u64 {
+    debug_assert!(fails(failing), "shrink_u64 needs a failing input");
+    loop {
+        let mut improved = false;
+        for candidate in [failing / 2, failing.saturating_sub(1)] {
+            if candidate < failing && fails(candidate) {
+                failing = candidate;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return failing;
+        }
+    }
+}
+
+/// Shrink a failing vector by removing chunks then individual elements.
+pub fn shrink_vec<T: Clone>(mut failing: Vec<T>, fails: impl Fn(&[T]) -> bool) -> Vec<T> {
+    debug_assert!(fails(&failing), "shrink_vec needs a failing input");
+    loop {
+        let mut improved = false;
+        // Try dropping halves, then single elements.
+        let n = failing.len();
+        let mut candidates: Vec<Vec<T>> = Vec::new();
+        if n >= 2 {
+            candidates.push(failing[..n / 2].to_vec());
+            candidates.push(failing[n / 2..].to_vec());
+        }
+        for i in 0..n {
+            let mut v = failing.clone();
+            v.remove(i);
+            candidates.push(v);
+        }
+        for cand in candidates {
+            if cand.len() < failing.len() && fails(&cand) {
+                failing = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return failing;
+        }
+    }
+}
+
+/// Deterministic per-property base seed (FNV-1a over the name).
+fn base_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0u64);
+        check("always true", 50, |_g| {
+            count.set(count.get() + 1);
+            true
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 10, |_g| false);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.u32(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn gen_deterministic_for_seed() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn shrink_u64_finds_boundary() {
+        // Fails iff >= 1000; minimal failing value is 1000.
+        let min = shrink_u64(123_456, |v| v >= 1000);
+        assert_eq!(min, 1000);
+    }
+
+    #[test]
+    fn shrink_vec_minimizes() {
+        // Fails iff the vector contains a 7; minimal case is [7].
+        let min = shrink_vec(vec![1, 2, 7, 3, 7, 4], |v| v.contains(&7));
+        assert_eq!(min, vec![7]);
+    }
+
+    #[test]
+    fn base_seed_distinct_per_name() {
+        assert_ne!(base_seed("a"), base_seed("b"));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked at case")]
+    fn check_panics_reports_seed() {
+        check_panics("panicky", 5, |g| {
+            let v = g.u32(0, 10);
+            assert!(v > 100, "v was {v}");
+        });
+    }
+}

@@ -1,0 +1,324 @@
+//! Statistics substrate: descriptive stats, Student-t distribution, paired
+//! t-tests, effect sizes, Bonferroni correction.
+//!
+//! The paper's evaluation (Table 1, Table 2) hinges on paired t-tests with
+//! Bonferroni-adjusted thresholds (p < 0.0011) and on Cohen's-d effect
+//! sizes; no stats crate resolves offline, so the machinery is implemented
+//! here (regularized incomplete beta via Lentz's continued fraction).
+
+/// Sample mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased (n-1) sample standard deviation; 0.0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let ss: f64 = xs.iter().map(|x| (x - m) * (x - m)).sum();
+    (ss / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (interpolated for even n); 0.0 for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEFFS: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEFFS[0];
+    let t = x + 7.5;
+    for (i, &c) in COEFFS.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized incomplete beta function I_x(a, b) via Lentz's continued
+/// fraction (Numerical Recipes 6.4). Note `front(a,b,x) = front(b,a,1-x)`,
+/// so one prefactor serves both symmetry branches.
+pub fn betai(a: f64, b: f64, x: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&x), "betai domain: x={x}");
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x == 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * betacf(a, b, x) / a
+    } else {
+        1.0 - front * betacf(b, a, 1.0 - x) / b
+    }
+}
+
+/// Continued-fraction kernel for `betai` (modified Lentz).
+fn betacf(a: f64, b: f64, x: f64) -> f64 {
+    const MAX_IT: usize = 300;
+    const EPS: f64 = 3e-14;
+    const FPMIN: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < FPMIN {
+        d = FPMIN;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_IT {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Two-sided p-value for a t statistic with `df` degrees of freedom.
+pub fn t_two_sided_p(t: f64, df: f64) -> f64 {
+    if !t.is_finite() {
+        return 0.0;
+    }
+    betai(df / 2.0, 0.5, df / (df + t * t)).clamp(0.0, 1.0)
+}
+
+/// Result of a t-test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TTest {
+    /// t statistic.
+    pub t: f64,
+    /// degrees of freedom.
+    pub df: f64,
+    /// two-sided p-value.
+    pub p: f64,
+    /// Cohen's d effect size.
+    pub effect_size: f64,
+}
+
+/// Paired Student t-test over two equal-length samples (the paper's Table 1
+/// and Table 2 methodology). Returns p = 1 for degenerate inputs.
+pub fn paired_t_test(a: &[f64], b: &[f64]) -> TTest {
+    assert_eq!(a.len(), b.len(), "paired test needs equal lengths");
+    let diffs: Vec<f64> = a.iter().zip(b).map(|(x, y)| x - y).collect();
+    let n = diffs.len() as f64;
+    let md = mean(&diffs);
+    let sd = std_dev(&diffs);
+    if diffs.len() < 2 || sd == 0.0 {
+        let degenerate_sig = md != 0.0 && sd == 0.0 && diffs.len() >= 2;
+        return TTest {
+            t: if degenerate_sig { f64::INFINITY } else { 0.0 },
+            df: (n - 1.0).max(0.0),
+            p: if degenerate_sig { 0.0 } else { 1.0 },
+            effect_size: 0.0,
+        };
+    }
+    let t = md / (sd / n.sqrt());
+    TTest {
+        t,
+        df: n - 1.0,
+        p: t_two_sided_p(t, n - 1.0),
+        effect_size: md / sd,
+    }
+}
+
+/// Welch's two-sample t-test (unequal variances).
+pub fn welch_t_test(a: &[f64], b: &[f64]) -> TTest {
+    let (na, nb) = (a.len() as f64, b.len() as f64);
+    let (ma, mb) = (mean(a), mean(b));
+    let (va, vb) = (std_dev(a).powi(2), std_dev(b).powi(2));
+    if a.len() < 2 || b.len() < 2 || (va == 0.0 && vb == 0.0) {
+        return TTest { t: 0.0, df: 1.0, p: 1.0, effect_size: 0.0 };
+    }
+    let se = (va / na + vb / nb).sqrt();
+    let t = (ma - mb) / se;
+    let df = (va / na + vb / nb).powi(2)
+        / ((va / na).powi(2) / (na - 1.0) + (vb / nb).powi(2) / (nb - 1.0));
+    let pooled = (((na - 1.0) * va + (nb - 1.0) * vb) / (na + nb - 2.0)).sqrt();
+    TTest {
+        t,
+        df,
+        p: t_two_sided_p(t, df),
+        effect_size: if pooled > 0.0 { (ma - mb) / pooled } else { 0.0 },
+    }
+}
+
+/// Bonferroni-adjusted significance threshold: `alpha / m` for `m`
+/// simultaneous comparisons (the paper uses 0.05 / 45 ≈ 0.0011).
+pub fn bonferroni_threshold(alpha: f64, comparisons: usize) -> f64 {
+    alpha / comparisons.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() < tol
+    }
+
+    #[test]
+    fn mean_median_std_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!(close(mean(&xs), 2.5, 1e-12));
+        assert!(close(median(&xs), 2.5, 1e-12));
+        assert!(close(median(&[3.0, 1.0, 2.0]), 2.0, 1e-12));
+        assert!(close(std_dev(&xs), (5.0f64 / 3.0).sqrt(), 1e-12));
+    }
+
+    #[test]
+    fn empty_and_singleton_are_defined() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!(close(ln_gamma(1.0), 0.0, 1e-10));
+        assert!(close(ln_gamma(2.0), 0.0, 1e-10));
+        assert!(close(ln_gamma(5.0), 24f64.ln(), 1e-10));
+        assert!(close(ln_gamma(0.5), std::f64::consts::PI.sqrt().ln(), 1e-10));
+    }
+
+    #[test]
+    fn t_distribution_p_values_match_tables() {
+        // Standard t-table: df=10, t=2.228 -> two-sided p ≈ 0.05
+        assert!(close(t_two_sided_p(2.228, 10.0), 0.05, 1.5e-3));
+        // df=1 (Cauchy): t=1 -> p = 0.5
+        assert!(close(t_two_sided_p(1.0, 1.0), 0.5, 1e-6));
+        // huge t -> p -> 0
+        assert!(t_two_sided_p(50.0, 20.0) < 1e-10);
+        // t=0 -> p = 1
+        assert!(close(t_two_sided_p(0.0, 7.0), 1.0, 1e-12));
+    }
+
+    #[test]
+    fn t_p_symmetric_in_sign() {
+        assert!(close(
+            t_two_sided_p(2.5, 12.0),
+            t_two_sided_p(-2.5, 12.0),
+            1e-12
+        ));
+    }
+
+    #[test]
+    fn paired_t_detects_clear_shift() {
+        let a: Vec<f64> = (0..20).map(|i| 10.0 + 0.1 * i as f64).collect();
+        let b: Vec<f64> = a.iter().map(|x| x - 2.0).collect();
+        // b = a - 2 exactly -> sd of diffs is 0 -> degenerate but significant
+        let r = paired_t_test(&a, &b);
+        assert!(r.p < 1e-9);
+    }
+
+    #[test]
+    fn paired_t_with_noise() {
+        // diffs ~ 1.0 ± small noise -> strongly significant
+        let a: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin() * 0.1 + 1.0).collect();
+        let b = vec![0.0; 16];
+        let r = paired_t_test(&a, &b);
+        assert!(r.p < 1e-6, "p = {}", r.p);
+        assert!(r.effect_size > 2.0);
+        assert_eq!(r.df, 15.0);
+    }
+
+    #[test]
+    fn paired_t_identical_samples_not_significant() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let r = paired_t_test(&a, &a);
+        assert_eq!(r.p, 1.0);
+        assert_eq!(r.t, 0.0);
+    }
+
+    #[test]
+    fn welch_t_separated_groups() {
+        let a = [5.0, 5.1, 4.9, 5.2, 4.8, 5.05];
+        let b = [3.0, 3.1, 2.9, 3.2, 2.8, 3.05];
+        let r = welch_t_test(&a, &b);
+        assert!(r.p < 1e-6);
+        assert!(r.t > 0.0);
+    }
+
+    #[test]
+    fn welch_t_same_distribution_not_significant() {
+        let a = [1.0, 2.0, 3.0, 2.0, 1.5, 2.5];
+        let b = [1.1, 1.9, 3.1, 2.1, 1.4, 2.4];
+        let r = welch_t_test(&a, &b);
+        assert!(r.p > 0.5, "p = {}", r.p);
+    }
+
+    #[test]
+    fn bonferroni_matches_paper() {
+        // 15 games × 3 baselines = 45 comparisons at α=0.05 -> ~0.0011
+        let thr = bonferroni_threshold(0.05, 45);
+        assert!(close(thr, 0.0011, 1.2e-4));
+    }
+
+    #[test]
+    fn betai_boundaries_and_symmetry() {
+        assert_eq!(betai(2.0, 3.0, 0.0), 0.0);
+        assert_eq!(betai(2.0, 3.0, 1.0), 1.0);
+        // I_x(a,a) at x=0.5 is 0.5 by symmetry
+        assert!(close(betai(4.0, 4.0, 0.5), 0.5, 1e-9));
+    }
+}

@@ -1,0 +1,244 @@
+//! Time-breakdown instrumentation (the Fig. 2(b–c) measurement substrate).
+//!
+//! The WU-UCT master and the worker pools label every span of work with a
+//! [`Phase`] and accumulate wall-clock time into a [`Breakdown`]. The
+//! `fig2_breakdown` bench and the `wu-uct breakdown` subcommand print the
+//! same master/worker time split the paper reports.
+
+use std::time::{Duration, Instant};
+
+/// Global lock serializing wall-clock-sensitive tests: `cargo test` runs
+/// tests concurrently, and two timing tests measuring parallel speedup
+/// would otherwise corrupt each other's measurements.
+pub static TIMING_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// The phases the paper's Fig. 2 distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Selection,
+    Expansion,
+    Simulation,
+    Backpropagation,
+    Communication,
+    Idle,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Selection,
+        Phase::Expansion,
+        Phase::Simulation,
+        Phase::Backpropagation,
+        Phase::Communication,
+        Phase::Idle,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Selection => "selection",
+            Phase::Expansion => "expansion",
+            Phase::Simulation => "simulation",
+            Phase::Backpropagation => "backprop",
+            Phase::Communication => "communication",
+            Phase::Idle => "idle",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Selection => 0,
+            Phase::Expansion => 1,
+            Phase::Simulation => 2,
+            Phase::Backpropagation => 3,
+            Phase::Communication => 4,
+            Phase::Idle => 5,
+        }
+    }
+}
+
+/// Accumulated per-phase wall-clock time.
+#[derive(Debug, Clone, Default)]
+pub struct Breakdown {
+    totals: [Duration; 6],
+    counts: [u64; 6],
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an explicit duration to a phase.
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        self.totals[phase.index()] += d;
+        self.counts[phase.index()] += 1;
+    }
+
+    /// Time a closure and attribute it to `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add(phase, start.elapsed());
+        out
+    }
+
+    pub fn total(&self, phase: Phase) -> Duration {
+        self.totals[phase.index()]
+    }
+
+    pub fn count(&self, phase: Phase) -> u64 {
+        self.counts[phase.index()]
+    }
+
+    /// Grand total across phases.
+    pub fn grand_total(&self) -> Duration {
+        self.totals.iter().sum()
+    }
+
+    /// Fraction of total time in `phase` (0 if nothing recorded).
+    pub fn fraction(&self, phase: Phase) -> f64 {
+        let g = self.grand_total().as_secs_f64();
+        if g == 0.0 {
+            return 0.0;
+        }
+        self.total(phase).as_secs_f64() / g
+    }
+
+    /// Busy / (busy + idle): the paper's worker "occupancy rate".
+    pub fn occupancy(&self) -> f64 {
+        let idle = self.total(Phase::Idle).as_secs_f64();
+        let g = self.grand_total().as_secs_f64();
+        if g == 0.0 {
+            return 0.0;
+        }
+        (g - idle) / g
+    }
+
+    /// Merge another breakdown into this one (for summing worker threads).
+    pub fn merge(&mut self, other: &Breakdown) {
+        for i in 0..6 {
+            self.totals[i] += other.totals[i];
+            self.counts[i] += other.counts[i];
+        }
+    }
+
+    /// Subtract a baseline snapshot (saturating), used to report per-search
+    /// deltas from cumulative per-worker counters.
+    pub fn subtract(&mut self, baseline: &Breakdown) {
+        for i in 0..6 {
+            self.totals[i] = self.totals[i].saturating_sub(baseline.totals[i]);
+            self.counts[i] = self.counts[i].saturating_sub(baseline.counts[i]);
+        }
+    }
+
+    /// Render rows `(phase, seconds, fraction)` for table output.
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        Phase::ALL
+            .iter()
+            .map(|&p| (p.name(), self.total(p).as_secs_f64(), self.fraction(p)))
+            .collect()
+    }
+}
+
+/// RAII guard timing one span; attributes on drop.
+pub struct Span<'a> {
+    breakdown: &'a mut Breakdown,
+    phase: Phase,
+    start: Instant,
+}
+
+impl<'a> Span<'a> {
+    pub fn new(breakdown: &'a mut Breakdown, phase: Phase) -> Self {
+        Self { breakdown, phase, start: Instant::now() }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.breakdown.add(self.phase, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_totals() {
+        let mut b = Breakdown::new();
+        b.add(Phase::Selection, Duration::from_millis(10));
+        b.add(Phase::Selection, Duration::from_millis(5));
+        b.add(Phase::Simulation, Duration::from_millis(85));
+        assert_eq!(b.total(Phase::Selection), Duration::from_millis(15));
+        assert_eq!(b.count(Phase::Selection), 2);
+        assert_eq!(b.grand_total(), Duration::from_millis(100));
+        assert!((b.fraction(Phase::Simulation) - 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_excludes_idle() {
+        let mut b = Breakdown::new();
+        b.add(Phase::Simulation, Duration::from_millis(75));
+        b.add(Phase::Idle, Duration::from_millis(25));
+        assert!((b.occupancy() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_breakdown_is_zero() {
+        let b = Breakdown::new();
+        assert_eq!(b.grand_total(), Duration::ZERO);
+        assert_eq!(b.fraction(Phase::Selection), 0.0);
+        assert_eq!(b.occupancy(), 0.0);
+    }
+
+    #[test]
+    fn time_closure_attributes_roughly() {
+        let mut b = Breakdown::new();
+        let v = b.time(Phase::Expansion, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(b.total(Phase::Expansion) >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn merge_sums_phases() {
+        let mut a = Breakdown::new();
+        a.add(Phase::Simulation, Duration::from_millis(10));
+        let mut b = Breakdown::new();
+        b.add(Phase::Simulation, Duration::from_millis(20));
+        b.add(Phase::Idle, Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.total(Phase::Simulation), Duration::from_millis(30));
+        assert_eq!(a.count(Phase::Simulation), 2);
+        assert_eq!(a.total(Phase::Idle), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn subtract_reports_delta() {
+        let mut cum = Breakdown::new();
+        cum.add(Phase::Simulation, Duration::from_millis(30));
+        cum.add(Phase::Simulation, Duration::from_millis(20));
+        let mut baseline = Breakdown::new();
+        baseline.add(Phase::Simulation, Duration::from_millis(30));
+        cum.subtract(&baseline);
+        assert_eq!(cum.total(Phase::Simulation), Duration::from_millis(20));
+        assert_eq!(cum.count(Phase::Simulation), 1);
+    }
+
+    #[test]
+    fn span_guard_records_on_drop() {
+        let mut b = Breakdown::new();
+        {
+            let _s = Span::new(&mut b, Phase::Backpropagation);
+        }
+        assert_eq!(b.count(Phase::Backpropagation), 1);
+    }
+
+    #[test]
+    fn rows_cover_all_phases() {
+        let b = Breakdown::new();
+        assert_eq!(b.rows().len(), 6);
+    }
+}

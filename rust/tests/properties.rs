@@ -1,0 +1,224 @@
+//! Property-based tests over the core invariants, using the in-repo
+//! mini-proptest framework (`wu_uct::util::proptest`).
+
+use wu_uct::env::garnet::Garnet;
+use wu_uct::env::{atari, Env};
+use wu_uct::mcts::common::{backprop, SearchSpec};
+use wu_uct::mcts::{Search, SearchSpec as Spec, SequentialUct, WuUct};
+use wu_uct::tree::{select_child, ScoreMode, Tree};
+use wu_uct::util::proptest::{check, Gen};
+use wu_uct::util::stats::{paired_t_test, t_two_sided_p};
+
+/// Random tree built by `gen`: returns (tree, leaf ids).
+fn random_tree(g: &mut Gen) -> Tree {
+    let mut tree = Tree::new();
+    let n_ops = g.usize(1, 40);
+    let mut nodes = vec![Tree::ROOT];
+    for _ in 0..n_ops {
+        let parent = *g.pick(&nodes);
+        let action = g.usize(0, 15);
+        if tree.node(parent).child_for(action).is_none() {
+            let c = tree.add_child(parent, action);
+            nodes.push(c);
+        }
+    }
+    tree
+}
+
+#[test]
+fn prop_backprop_preserves_tree_invariants() {
+    check("backprop invariants", 60, |g| {
+        let mut tree = random_tree(g);
+        let ids: Vec<usize> = tree.iter().map(|(id, _)| id).collect();
+        for _ in 0..g.usize(1, 30) {
+            let node = *g.pick(&ids);
+            backprop(&mut tree, node, g.f64(-5.0, 5.0), g.f64(0.1, 1.0));
+        }
+        tree.check_invariants();
+        true
+    });
+}
+
+#[test]
+fn prop_incomplete_complete_updates_cancel() {
+    // Any interleaving of incomplete updates followed by their matching
+    // complete updates leaves ΣO = 0 (Eqs. 5–6 are inverses).
+    check("O drains to zero", 60, |g| {
+        let mut tree = random_tree(g);
+        let ids: Vec<usize> = tree.iter().map(|(id, _)| id).collect();
+        let mut pending = Vec::new();
+        for _ in 0..g.usize(1, 25) {
+            let node = *g.pick(&ids);
+            tree.for_path_to_root(node, |n| n.o += 1);
+            pending.push(node);
+        }
+        // Complete in a random order.
+        while !pending.is_empty() {
+            let i = g.usize(0, pending.len() - 1);
+            let node = pending.swap_remove(i);
+            let mut cur = Some(node);
+            let mut ret = g.f64(-1.0, 1.0);
+            while let Some(c) = cur {
+                let n = tree.node_mut(c);
+                assert!(n.o > 0);
+                n.o -= 1;
+                n.observe(ret);
+                ret = n.reward + 0.99 * ret;
+                cur = tree.node(c).parent;
+            }
+        }
+        tree.total_unobserved() == 0
+    });
+}
+
+#[test]
+fn prop_selection_only_returns_children() {
+    check("selection returns a child", 80, |g| {
+        let mut tree = random_tree(g);
+        let ids: Vec<usize> = tree.iter().map(|(id, _)| id).collect();
+        for &id in &ids {
+            let n = tree.node_mut(id);
+            n.n = g.u32(0, 100);
+            n.o = g.u32(0, 8);
+            n.v = g.f64(-2.0, 2.0);
+        }
+        for &id in &ids {
+            let mode = *g.pick(&[ScoreMode::Uct, ScoreMode::WuUct, ScoreMode::VirtualLoss]);
+            match select_child(&tree, id, mode, g.f64(0.0, 3.0)) {
+                Some(child) => {
+                    if !tree.node(id).children.iter().any(|&(_, c)| c == child) {
+                        return false;
+                    }
+                }
+                None => {
+                    if !tree.node(id).children.is_empty() {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_env_snapshot_restore_is_identity() {
+    // For every suite game: snapshot → random walk → restore → identical
+    // replay against an untouched clone.
+    check("snapshot/restore identity", 30, |g| {
+        let name = *g.pick(&atari::GAMES);
+        let mut env = atari::make(name, g.u64());
+        // Random warmup walk.
+        for _ in 0..g.usize(0, 10) {
+            if env.is_terminal() {
+                break;
+            }
+            let acts = env.legal_actions();
+            let a = *g.pick(&acts);
+            env.step(a);
+        }
+        if env.is_terminal() {
+            return true;
+        }
+        let snap = env.snapshot();
+        let mut copy = atari::make(name, 0);
+        copy.restore(&snap);
+        for _ in 0..g.usize(1, 15) {
+            if env.is_terminal() {
+                break;
+            }
+            let acts = env.legal_actions();
+            let a = *g.pick(&acts);
+            if env.step(a) != copy.step(a) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_env_determinism_same_seed_same_trajectory() {
+    check("env determinism", 30, |g| {
+        let name = *g.pick(&atari::GAMES);
+        let seed = g.u64();
+        let script: Vec<u64> = (0..20).map(|_| g.u64()).collect();
+        let run = |script: &[u64]| {
+            let mut env = atari::make(name, seed);
+            let mut total = 0.0;
+            for &s in script {
+                if env.is_terminal() {
+                    break;
+                }
+                let acts = env.legal_actions();
+                let a = acts[(s % acts.len() as u64) as usize];
+                total += env.step(a).reward;
+            }
+            total
+        };
+        run(&script) == run(&script)
+    });
+}
+
+#[test]
+fn prop_search_returns_legal_action() {
+    check("search yields legal action", 15, |g| {
+        let env = Garnet::new(g.usize(4, 20), g.usize(2, 6), g.u32(3, 20), 0.0, g.u64());
+        let spec = Spec {
+            max_simulations: g.u32(4, 24),
+            rollout_limit: g.u32(1, 10),
+            max_depth: g.u32(1, 10),
+            seed: g.u64(),
+            ..Spec::default()
+        };
+        let action = if g.bool(0.5) {
+            SequentialUct::new(spec).search(&env).best_action
+        } else {
+            WuUct::new(spec, 1, g.usize(1, 4)).search(&env).best_action
+        };
+        env.legal_actions().contains(&action)
+    });
+}
+
+#[test]
+fn prop_t_test_properties() {
+    check("t-test sanity", 100, |g| {
+        let n = g.usize(3, 20);
+        let a: Vec<f64> = (0..n).map(|_| g.f64(-10.0, 10.0)).collect();
+        let b: Vec<f64> = (0..n).map(|_| g.f64(-10.0, 10.0)).collect();
+        let ab = paired_t_test(&a, &b);
+        let ba = paired_t_test(&b, &a);
+        // Antisymmetric t, symmetric p.
+        let ok_sym = (ab.t + ba.t).abs() < 1e-9 && (ab.p - ba.p).abs() < 1e-9;
+        let ok_range = (0.0..=1.0).contains(&ab.p);
+        // Identical samples: never significant.
+        let aa = paired_t_test(&a, &a);
+        ok_sym && ok_range && aa.p == 1.0
+    });
+}
+
+#[test]
+fn prop_t_distribution_p_monotone_in_t() {
+    check("p decreases in |t|", 100, |g| {
+        let df = g.f64(1.0, 50.0);
+        let t1 = g.f64(0.0, 5.0);
+        let t2 = t1 + g.f64(0.01, 5.0);
+        t_two_sided_p(t2, df) <= t_two_sided_p(t1, df) + 1e-12
+    });
+}
+
+#[test]
+fn prop_wu_uct_budget_always_exact() {
+    check("WU-UCT completes exactly T_max", 10, |g| {
+        let env = Garnet::new(12, 3, 15, g.f64(0.0, 0.3), g.u64());
+        let t_max = g.u32(4, 40);
+        let spec = SearchSpec {
+            max_simulations: t_max,
+            rollout_limit: 5,
+            seed: g.u64(),
+            ..SearchSpec::default()
+        };
+        let mut s = WuUct::new(spec, g.usize(1, 3), g.usize(1, 6));
+        s.search(&env).simulations == t_max
+    });
+}
