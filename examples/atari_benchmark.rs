@@ -6,7 +6,7 @@
 //! server, and runs WU-UCT with 16 simulation workers + 1 expansion
 //! worker against LeafP / TreeP / RootP / sequential UCT on a slice of
 //! the synthetic Atari suite — printing Table-1-shaped rows with episode
-//! reward and time/step. Recorded in EXPERIMENTS.md.
+//! reward and time/step. Run records follow DESIGN.md §5.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example atari_benchmark

@@ -1,0 +1,184 @@
+//! Load generator: dozens of concurrent planned episodes against the
+//! multi-session search service, over the real TCP + JSON-lines protocol.
+//!
+//! By default it spins the service up in-process on an ephemeral port (so
+//! the example is self-contained); point `--addr` at a running
+//! `wu-uct serve` to drive an external server instead.
+//!
+//! ```bash
+//! cargo run --release --example load_generator -- --clients 32 --sims 32
+//! cargo run --release --example load_generator -- --addr 127.0.0.1:3771
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use wu_uct::service::json::Json;
+use wu_uct::service::{SearchService, ServiceConfig, TcpServer};
+use wu_uct::util::cli::{usage, Args, OptSpec};
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "addr", help: "external server (empty = in-process)", default: Some("") },
+        OptSpec { name: "clients", help: "concurrent episode clients", default: Some("32") },
+        OptSpec { name: "env", help: "environment name (see proto::make_env)", default: Some("garnet") },
+        OptSpec { name: "sims", help: "simulations per think", default: Some("32") },
+        OptSpec { name: "steps", help: "max env steps per episode", default: Some("30") },
+        OptSpec { name: "exp-workers", help: "in-process: expansion workers", default: Some("2") },
+        OptSpec { name: "workers", help: "in-process: simulation workers", default: Some("8") },
+        OptSpec { name: "seed", help: "base seed", default: Some("0") },
+        OptSpec { name: "help", help: "show usage", default: None },
+    ]
+}
+
+/// One line-delimited JSON round trip.
+fn request(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, line: &str) -> Result<Json> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    let v = Json::parse(reply.trim()).context("parsing server reply")?;
+    if v.get("ok").and_then(|o| o.as_bool()) != Some(true) {
+        let msg = v.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error");
+        return Err(anyhow!("server error: {msg}"));
+    }
+    Ok(v)
+}
+
+struct EpisodeStats {
+    reward: f64,
+    steps: u64,
+    thinks: u64,
+    reused: u64,
+}
+
+/// Drive one full episode over its own connection.
+fn run_episode(addr: &str, env: &str, seed: u64, sims: u64, max_steps: u64) -> Result<EpisodeStats> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let open = request(
+        &mut reader,
+        &mut writer,
+        &format!(r#"{{"op":"open","env":"{env}","seed":{seed},"sims":{sims}}}"#),
+    )?;
+    let sid = open
+        .get("session")
+        .and_then(|s| s.as_u64())
+        .ok_or_else(|| anyhow!("open reply missing session id"))?;
+
+    let mut stats = EpisodeStats { reward: 0.0, steps: 0, thinks: 0, reused: 0 };
+    for _ in 0..max_steps {
+        let think =
+            request(&mut reader, &mut writer, &format!(r#"{{"op":"think","session":{sid}}}"#))?;
+        stats.thinks += 1;
+        let action = think
+            .get("action")
+            .and_then(|a| a.as_u64())
+            .ok_or_else(|| anyhow!("think reply missing action"))?;
+        let adv = request(
+            &mut reader,
+            &mut writer,
+            &format!(r#"{{"op":"advance","session":{sid},"action":{action}}}"#),
+        )?;
+        stats.steps += 1;
+        stats.reward += adv.get("reward").and_then(|r| r.as_f64()).unwrap_or(0.0);
+        if adv.get("reused").and_then(|r| r.as_bool()) == Some(true) {
+            stats.reused += 1;
+        }
+        if adv.get("done").and_then(|d| d.as_bool()) == Some(true) {
+            break;
+        }
+    }
+    request(&mut reader, &mut writer, &format!(r#"{{"op":"close","session":{sid}}}"#))?;
+    Ok(stats)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv.iter().map(|s| s.as_str()), &specs())?;
+    if args.flag("help") {
+        println!("{}", usage("load_generator", "concurrent-episode load generator", &specs()));
+        return Ok(());
+    }
+    let clients = args.usize("clients")?.max(1);
+    let env = args.str("env")?.to_string();
+    let sims = args.u64("sims")?.max(1);
+    let steps = args.u64("steps")?.max(1);
+    let seed = args.u64("seed")?;
+
+    // In-process service unless an external address was given. Keep the
+    // guards alive for the whole run.
+    let mut in_process: Option<(SearchService, TcpServer)> = None;
+    let addr = if args.str("addr")?.is_empty() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: args.usize("exp-workers")?.max(1),
+            simulation_workers: args.usize("workers")?.max(1),
+            seed,
+            ..ServiceConfig::default()
+        });
+        let server = TcpServer::bind(service.handle(), "127.0.0.1:0")?;
+        let addr = server.local_addr().to_string();
+        in_process = Some((service, server));
+        addr
+    } else {
+        args.str("addr")?.to_string()
+    };
+
+    println!("driving {clients} concurrent episodes of {env} against {addr} ...");
+    let start = Instant::now();
+    let results: Vec<Result<EpisodeStats>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.clone();
+                let env = env.clone();
+                scope.spawn(move || {
+                    run_episode(&addr, &env, seed.wrapping_add(c as u64 * 7919), sims, steps)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    let elapsed = start.elapsed();
+
+    let mut ok = 0usize;
+    let (mut reward, mut steps_total, mut thinks, mut reused) = (0.0, 0u64, 0u64, 0u64);
+    for r in &results {
+        match r {
+            Ok(s) => {
+                ok += 1;
+                reward += s.reward;
+                steps_total += s.steps;
+                thinks += s.thinks;
+                reused += s.reused;
+            }
+            Err(e) => eprintln!("episode failed: {e:#}"),
+        }
+    }
+    println!(
+        "{ok}/{clients} episodes in {elapsed:.2?}: {:.1} episodes/s, {:.0} thinks/s, mean reward {:.2}, subtree reuse {:.0}%",
+        ok as f64 / elapsed.as_secs_f64(),
+        thinks as f64 / elapsed.as_secs_f64(),
+        if ok > 0 { reward / ok as f64 } else { 0.0 },
+        if steps_total > 0 { 100.0 * reused as f64 / steps_total as f64 } else { 0.0 },
+    );
+
+    // Server-side view of the same run.
+    let stream = TcpStream::connect(&addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let m = request(&mut reader, &mut writer, r#"{"op":"metrics"}"#)?;
+    println!(
+        "server: {} thinks, {} sims, think p50 {:.1} ms / p99 {:.1} ms, sim-pool occupancy {:.0}%",
+        m.get("thinks").and_then(|v| v.as_u64()).unwrap_or(0),
+        m.get("sims").and_then(|v| v.as_u64()).unwrap_or(0),
+        m.get("think_ms_p50").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        m.get("think_ms_p99").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        100.0 * m.get("sim_occupancy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    );
+    drop(in_process);
+    Ok(())
+}

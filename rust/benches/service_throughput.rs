@@ -1,0 +1,102 @@
+//! Service throughput bench: episodes/sec and think latency as the number
+//! of concurrent sessions grows over a fixed shared worker fleet.
+//!
+//! Emits one machine-readable JSON perf record per concurrency level (the
+//! BENCH trajectory format), plus a human summary line:
+//!
+//! ```text
+//! {"bench":"service_throughput","sessions":8,"sessions_per_sec":...,...}
+//! ```
+
+use std::time::Instant;
+
+use wu_uct::bench::paper_scale;
+use wu_uct::env::garnet::Garnet;
+use wu_uct::mcts::SearchSpec;
+use wu_uct::service::json::{obj, Json};
+use wu_uct::service::{SearchService, ServiceConfig, SessionOptions};
+
+struct Cell {
+    sessions: usize,
+    episodes_per_sec: f64,
+    thinks_per_sec: f64,
+    sims_per_sec: f64,
+    mean_think_ms: f64,
+    p99_think_ms: f64,
+    sim_occupancy: f64,
+}
+
+fn run_cell(sessions: usize, thinks_per_episode: u32, sims_per_think: u32) -> Cell {
+    let service = SearchService::start(ServiceConfig {
+        expansion_workers: 2,
+        simulation_workers: 8,
+        ..ServiceConfig::default()
+    });
+    let spec = SearchSpec {
+        max_simulations: sims_per_think,
+        rollout_limit: 10,
+        max_depth: 12,
+        ..SearchSpec::default()
+    };
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..sessions {
+            let h = service.handle();
+            let spec = SearchSpec { seed: s as u64, ..spec.clone() };
+            scope.spawn(move || {
+                let env = Box::new(Garnet::new(15, 3, 60, 0.0, s as u64));
+                let sid = h.open(env, spec, SessionOptions::default()).expect("open");
+                for _ in 0..thinks_per_episode {
+                    let t = h.think(sid, 0).expect("think");
+                    let adv = h.advance(sid, t.action).expect("advance");
+                    if adv.done {
+                        break;
+                    }
+                }
+                h.close(sid).expect("close");
+            });
+        }
+    });
+    let elapsed = start.elapsed().as_secs_f64();
+    let m = service.handle().metrics().expect("metrics");
+    Cell {
+        sessions,
+        episodes_per_sec: sessions as f64 / elapsed,
+        thinks_per_sec: m.thinks as f64 / elapsed,
+        sims_per_sec: m.sims as f64 / elapsed,
+        mean_think_ms: m.think_ms_mean,
+        p99_think_ms: m.think_ms_p99,
+        sim_occupancy: m.sim_occupancy,
+    }
+}
+
+fn main() {
+    let (thinks, sims) = if paper_scale() { (25, 128) } else { (10, 32) };
+    println!(
+        "service_throughput: 2 expansion + 8 simulation workers shared; \
+         {thinks} thinks/episode x {sims} sims/think"
+    );
+    for sessions in [1usize, 8, 32] {
+        let cell = run_cell(sessions, thinks, sims);
+        let record = obj([
+            ("bench", Json::Str("service_throughput".into())),
+            ("sessions", Json::Num(cell.sessions as f64)),
+            ("sessions_per_sec", Json::Num(cell.episodes_per_sec)),
+            ("thinks_per_sec", Json::Num(cell.thinks_per_sec)),
+            ("sims_per_sec", Json::Num(cell.sims_per_sec)),
+            ("mean_think_ms", Json::Num(cell.mean_think_ms)),
+            ("p99_think_ms", Json::Num(cell.p99_think_ms)),
+            ("sim_occupancy", Json::Num(cell.sim_occupancy)),
+        ]);
+        println!("{}", record.render());
+        println!(
+            "  {} sessions: {:.2} episodes/s, {:.1} thinks/s, think mean {:.2} ms (p99 {:.2} ms), occupancy {:.0}%",
+            cell.sessions,
+            cell.episodes_per_sec,
+            cell.thinks_per_sec,
+            cell.mean_think_ms,
+            cell.p99_think_ms,
+            100.0 * cell.sim_occupancy,
+        );
+    }
+}

@@ -1,9 +1,10 @@
 //! Experiment harnesses — one per table/figure of the paper's evaluation.
 //!
 //! Every harness works at two scales: `Scale::quick()` (laptop, minutes)
-//! and `Scale::paper()` (the paper's parameters). EXPERIMENTS.md records
-//! which scale each archived run used. All harnesses return a
-//! [`crate::util::table::Table`] whose rows mirror the paper's.
+//! and `Scale::paper()` (the paper's parameters). DESIGN.md §5 describes
+//! the run-record conventions (which scale an archived run used). All
+//! harnesses return a [`crate::util::table::Table`] whose rows mirror the
+//! paper's.
 
 pub mod fig10;
 pub mod fig2;

@@ -13,9 +13,12 @@
 //! * **L2/L1 (build-time Python)** — the distilled policy-value network
 //!   (JAX) whose forward pass is a fused Pallas kernel, AOT-lowered to HLO
 //!   text in `artifacts/` and executed from Rust via [`runtime`].
+//! * **Service** — the multi-session search service ([`service`]): many
+//!   concurrent WU-UCT sessions multiplexed over shared worker pools,
+//!   behind a line-delimited JSON TCP protocol (`wu-uct serve`).
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record of every table and figure.
+//! See DESIGN.md for the system inventory, the experiment-record
+//! conventions and the paper-vs-measured methodology.
 
 pub mod bench;
 pub mod env;
@@ -25,5 +28,6 @@ pub mod gameplay;
 pub mod mcts;
 pub mod passrate;
 pub mod runtime;
+pub mod service;
 pub mod tree;
 pub mod util;

@@ -4,6 +4,7 @@
 //! ```text
 //! wu-uct search        one search on a named environment
 //! wu-uct play          full episode with search-per-step
+//! wu-uct serve         multi-session search service over TCP (JSON lines)
 //! wu-uct atari-table1  Table 1 (+ Fig. 10 with --relative)
 //! wu-uct atari-fig5    Fig. 5 worker sweep
 //! wu-uct treep-ablation  Table 5 TreeP-variant comparison
@@ -19,6 +20,7 @@ use wu_uct::experiments::{self, Scale};
 use wu_uct::gameplay::play_episode;
 use wu_uct::mcts::{by_name, SearchSpec};
 use wu_uct::passrate::SystemConfig;
+use wu_uct::service::{SearchService, ServiceConfig, TcpServer};
 use wu_uct::util::cli::{usage, Args, OptSpec};
 
 fn specs() -> Vec<OptSpec> {
@@ -36,6 +38,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "repeats", help: "timing repeats for speedup cells", default: Some("2") },
         OptSpec { name: "relative", help: "also print Fig 10 relative bars", default: None },
         OptSpec { name: "grid", help: "full Table 3 grid (else Fig 4 curves)", default: None },
+        OptSpec { name: "addr", help: "serve: TCP listen address", default: Some("127.0.0.1:3771") },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
 }
@@ -50,9 +53,9 @@ fn scale_from(args: &Args) -> Result<Scale> {
     if trials > 0 {
         scale.trials = trials;
     }
-    let sims = args.usize("sims")?;
+    let sims = args.u32("sims")?;
     if sims > 0 {
-        scale.max_simulations = sims as u32;
+        scale.max_simulations = sims;
     }
     scale.workers = args.usize("workers")?;
     Ok(scale)
@@ -93,7 +96,7 @@ fn main() -> Result<()> {
             "{}",
             usage("wu-uct", "WU-UCT parallel MCTS (ICLR 2020) reproduction", &specs())
         );
-        println!("commands: search, play, atari-table1, atari-fig5, treep-ablation,");
+        println!("commands: search, play, serve, atari-table1, atari-fig5, treep-ablation,");
         println!("          sweep-speedup, breakdown, passrate, policy-eval");
         return Ok(());
     }
@@ -109,7 +112,7 @@ fn main() -> Result<()> {
                 seed: scale.seed,
                 ..SearchSpec::default()
             };
-            let mut search = by_name(args.str("algo")?, spec, scale.workers);
+            let mut search = by_name(args.str("algo")?, spec, scale.workers)?;
             let r = search.search(env.as_ref());
             println!(
                 "{}: best action {} (value {:.3}) after {} sims in {:?}; tree {} nodes",
@@ -129,7 +132,7 @@ fn main() -> Result<()> {
                 seed: scale.seed,
                 ..SearchSpec::default()
             };
-            let mut search = by_name(args.str("algo")?, spec, scale.workers);
+            let mut search = by_name(args.str("algo")?, spec, scale.workers)?;
             let r = play_episode(search.as_mut(), env.as_mut(), scale.seed, scale.max_episode_steps);
             println!(
                 "{} on {}: reward {:.1} in {} steps ({:?}/step)",
@@ -139,6 +142,23 @@ fn main() -> Result<()> {
                 r.steps,
                 r.time_per_step
             );
+        }
+        "serve" => {
+            let exp_workers = args.usize("exp-workers")?.max(1);
+            let sim_workers = args.usize("workers")?.max(1);
+            let service = SearchService::start(ServiceConfig {
+                expansion_workers: exp_workers,
+                simulation_workers: sim_workers,
+                seed: scale.seed,
+                ..ServiceConfig::default()
+            });
+            let server = TcpServer::bind(service.handle(), args.str("addr")?)?;
+            println!(
+                "wu-uct serve: listening on {} ({exp_workers} expansion / {sim_workers} simulation workers)",
+                server.local_addr(),
+            );
+            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, metrics, ping");
+            server.join(); // foreground until killed
         }
         "atari-table1" => {
             let games = games_from(&args, &atari::GAMES);

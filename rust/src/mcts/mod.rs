@@ -16,6 +16,8 @@ pub mod sequential;
 pub mod treep;
 pub mod wu_uct;
 
+use anyhow::{bail, Result};
+
 pub use common::{Search, SearchResult, SearchSpec};
 pub use leafp::LeafP;
 pub use rootp::RootP;
@@ -23,17 +25,22 @@ pub use sequential::SequentialUct;
 pub use treep::TreeP;
 pub use wu_uct::WuUct;
 
+/// Every name [`by_name`] accepts, for help strings and error messages.
+pub const ALGORITHMS: [&str; 5] = ["WU-UCT", "UCT", "LeafP", "TreeP", "RootP"];
+
 /// Construct a named algorithm with uniform worker budget — the factory
-/// the experiment harnesses use (Table 1, Fig. 5, ...).
-pub fn by_name(name: &str, spec: SearchSpec, workers: usize) -> Box<dyn Search> {
-    match name {
+/// the experiment harnesses use (Table 1, Fig. 5, ...). Unknown names are
+/// an `Err`, not a panic: callers (the CLI, the service) surface them as
+/// user errors.
+pub fn by_name(name: &str, spec: SearchSpec, workers: usize) -> Result<Box<dyn Search>> {
+    Ok(match name {
         "WU-UCT" => Box::new(WuUct::new(spec, 1, workers)),
         "UCT" => Box::new(SequentialUct::new(spec)),
         "LeafP" => Box::new(LeafP::new(spec, workers)),
         "TreeP" => Box::new(TreeP::new(spec, workers, 1.0)),
         "RootP" => Box::new(RootP::new(spec, workers)),
-        other => panic!("unknown algorithm {other:?}"),
-    }
+        other => bail!("unknown algorithm {other:?}; expected one of {ALGORITHMS:?}"),
+    })
 }
 
 #[cfg(test)]
@@ -44,21 +51,22 @@ mod tests {
     #[test]
     fn factory_builds_all_algorithms() {
         let env = Garnet::new(12, 3, 20, 0.0, 1);
-        for name in ["WU-UCT", "UCT", "LeafP", "TreeP", "RootP"] {
+        for name in ALGORITHMS {
             let spec = SearchSpec {
                 max_simulations: 12,
                 rollout_limit: 10,
                 ..Default::default()
             };
-            let mut s = by_name(name, spec, 2);
+            let mut s = by_name(name, spec, 2).unwrap();
             let r = s.search(&env);
             assert!(r.simulations > 0, "{name} did no work");
         }
     }
 
     #[test]
-    #[should_panic(expected = "unknown algorithm")]
-    fn factory_rejects_unknown() {
-        by_name("AlphaZero", SearchSpec::default(), 2);
+    fn factory_rejects_unknown_with_error() {
+        let err = by_name("AlphaZero", SearchSpec::default(), 2).unwrap_err();
+        assert!(err.to_string().contains("unknown algorithm"));
+        assert!(err.to_string().contains("WU-UCT"), "error names the valid options");
     }
 }

@@ -6,6 +6,11 @@
 //! snapshots themselves live *on the nodes* (`Node::state`), which is the
 //! centralized storage Appendix A argues for (each state is used at most
 //! |A|+1 times, so decentralized copies would be wasted).
+//!
+//! Ids are allocated by the caller's task sink — locally counted for a
+//! dedicated search, globally unique for the multi-session service (which
+//! routes ids back to sessions) — and recorded here via
+//! [`TaskTable::insert`].
 
 use std::collections::HashMap;
 
@@ -23,7 +28,6 @@ pub enum TaskKind {
 /// Maps in-flight task ids to their tree nodes.
 #[derive(Debug, Default)]
 pub struct TaskTable {
-    next_id: u64,
     pending: HashMap<u64, (NodeId, TaskKind)>,
 }
 
@@ -32,12 +36,12 @@ impl TaskTable {
         Self::default()
     }
 
-    /// Register a new task; returns its id `τ`.
-    pub fn register(&mut self, node: NodeId, kind: TaskKind) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        self.pending.insert(id, (node, kind));
-        id
+    /// Record a task under its sink-allocated id. Panics on reuse of a
+    /// live id — two in-flight tasks sharing an id would mis-route
+    /// results.
+    pub fn insert(&mut self, id: u64, node: NodeId, kind: TaskKind) {
+        let prev = self.pending.insert(id, (node, kind));
+        assert!(prev.is_none(), "task id {id} already in flight");
     }
 
     /// Resolve and remove a completed task. Panics on unknown ids — a
@@ -67,25 +71,23 @@ mod tests {
     use super::*;
 
     #[test]
-    fn register_resolve_roundtrip() {
+    fn insert_resolve_roundtrip() {
         let mut t = TaskTable::new();
-        let a = t.register(5, TaskKind::Simulate);
-        let b = t.register(9, TaskKind::Expand { action: 3 });
-        assert_ne!(a, b);
+        t.insert(0, 5, TaskKind::Simulate);
+        t.insert(1, 9, TaskKind::Expand { action: 3 });
         assert_eq!(t.outstanding(), 2);
-        assert_eq!(t.resolve(a), (5, TaskKind::Simulate));
-        assert_eq!(t.resolve(b), (9, TaskKind::Expand { action: 3 }));
+        assert_eq!(t.resolve(0), (5, TaskKind::Simulate));
+        assert_eq!(t.resolve(1), (9, TaskKind::Expand { action: 3 }));
         assert!(t.is_empty());
     }
 
     #[test]
-    fn ids_are_unique_across_many() {
+    fn ids_are_reusable_after_resolution() {
         let mut t = TaskTable::new();
-        let ids: Vec<u64> = (0..100).map(|i| t.register(i, TaskKind::Simulate)).collect();
-        let mut sorted = ids.clone();
-        sorted.sort_unstable();
-        sorted.dedup();
-        assert_eq!(sorted.len(), 100);
+        t.insert(7, 1, TaskKind::Simulate);
+        assert_eq!(t.resolve(7), (1, TaskKind::Simulate));
+        t.insert(7, 2, TaskKind::Simulate); // resolved ids may recur
+        assert_eq!(t.get(7), Some((2, TaskKind::Simulate)));
     }
 
     #[test]
@@ -95,10 +97,18 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "already in flight")]
+    fn inserting_live_id_twice_panics() {
+        let mut t = TaskTable::new();
+        t.insert(7, 1, TaskKind::Simulate);
+        t.insert(7, 2, TaskKind::Simulate);
+    }
+
+    #[test]
     fn get_peeks_without_removing() {
         let mut t = TaskTable::new();
-        let id = t.register(1, TaskKind::Simulate);
-        assert_eq!(t.get(id), Some((1, TaskKind::Simulate)));
+        t.insert(3, 1, TaskKind::Simulate);
+        assert_eq!(t.get(3), Some((1, TaskKind::Simulate)));
         assert_eq!(t.outstanding(), 1);
     }
 }

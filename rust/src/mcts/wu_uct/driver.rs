@@ -1,0 +1,495 @@
+//! The WU-UCT master loop as a resumable, tick-driven state machine.
+//!
+//! [`SearchDriver`] owns one search tree plus the paper's master-side
+//! bookkeeping (selection Eq. 4, incomplete update Eq. 5, complete update
+//! Eq. 6) but **no worker pools and no control flow**: callers decide when
+//! to [`SearchDriver::issue`] a rollout and feed results back through
+//! [`SearchDriver::absorb`]. That inversion is what lets one scheduler
+//! thread interleave many live sessions over shared pools
+//! ([`crate::service::scheduler`], which re-exports this module) while
+//! [`crate::mcts::wu_uct::WuUct`] drives the very same machine with
+//! dedicated pools and a blocking loop.
+//!
+//! Tasks travel through a [`TaskSink`], which allocates the task id —
+//! locally for a dedicated search, globally for the multi-session service
+//! so returning results can be routed back to their session.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::env::{Env, StepResult};
+use crate::mcts::common::{init_node, traverse, SearchSpec, StopReason};
+use crate::mcts::wu_uct::buffer::{TaskKind, TaskTable};
+use crate::mcts::wu_uct::workers::{ExpandResult, TaskResult};
+use crate::tree::{NodeId, ScoreMode, Tree};
+use crate::util::rng::Pcg32;
+use crate::util::timer::{Breakdown, Phase};
+
+/// Where the driver ships work. Implementations submit the task to a pool
+/// and return the id the eventual result will carry.
+pub trait TaskSink {
+    /// Queue an expansion (step `env` by `action`, report the child).
+    fn submit_expand(&mut self, env: Box<dyn Env>, action: usize, max_width: usize) -> u64;
+
+    /// Queue a rollout from `env`'s current state.
+    fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64;
+}
+
+/// What one [`SearchDriver::issue`] tick did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IssueOutcome {
+    /// A task went to a pool (one expansion or one simulation).
+    Queued,
+    /// Terminal rollout completed inline — no pool involved.
+    ShortCircuit,
+    /// The think budget is fully issued; nothing was done.
+    Exhausted,
+}
+
+/// Result of advancing the driver's environment by one real move.
+#[derive(Debug, Clone, Copy)]
+pub struct AdvanceOutcome {
+    /// The environment's reward/done for the executed action.
+    pub step: StepResult,
+    /// Whether the on-path subtree (and its {N, V, O} statistics) was
+    /// carried over via [`Tree::advance_root`].
+    pub reused: bool,
+    /// Nodes retained by the reuse (1 when the tree was rebuilt fresh).
+    pub retained: usize,
+}
+
+/// Resumable WU-UCT master: select → queue → absorb → repeat.
+pub struct SearchDriver {
+    spec: SearchSpec,
+    rng: Pcg32,
+    tree: Tree,
+    /// The session's live environment, positioned at the tree root.
+    template: Box<dyn Env>,
+    tasks: TaskTable,
+    /// Rollouts started this think (each ends in one complete update).
+    issued: u32,
+    /// Rollouts finished this think.
+    completed: u32,
+    /// T_max for the current think.
+    budget: u32,
+    master: Breakdown,
+    began: Instant,
+}
+
+impl SearchDriver {
+    /// New driver rooted at `root_env`'s current state.
+    pub fn new(spec: SearchSpec, root_env: &dyn Env) -> SearchDriver {
+        let mut tree = Tree::new();
+        init_node(&mut tree, Tree::ROOT, root_env, &spec);
+        SearchDriver {
+            rng: Pcg32::new(spec.seed ^ 0x10_0c7),
+            spec,
+            tree,
+            template: root_env.clone_boxed(),
+            tasks: TaskTable::new(),
+            issued: 0,
+            completed: 0,
+            budget: 0,
+            master: Breakdown::new(),
+            began: Instant::now(),
+        }
+    }
+
+    /// Start a think with `budget` simulations on the current tree.
+    /// Requires quiescence (no in-flight tasks from a previous think).
+    pub fn begin(&mut self, budget: u32) {
+        assert!(self.tasks.is_empty(), "begin() with tasks in flight");
+        self.issued = 0;
+        self.completed = 0;
+        self.budget = budget;
+        self.master = Breakdown::new();
+        self.began = Instant::now();
+    }
+
+    /// Whether another rollout may be issued this think.
+    pub fn can_issue(&self) -> bool {
+        self.issued < self.budget
+    }
+
+    /// Whether the think is complete: every budgeted rollout has finished
+    /// (which implies no outstanding tasks — each in-flight task belongs
+    /// to an unfinished rollout).
+    pub fn done(&self) -> bool {
+        self.completed >= self.budget
+    }
+
+    /// In-flight task count.
+    pub fn outstanding(&self) -> usize {
+        self.tasks.outstanding()
+    }
+
+    pub fn completed(&self) -> u32 {
+        self.completed
+    }
+
+    pub fn tree(&self) -> &Tree {
+        &self.tree
+    }
+
+    pub fn env(&self) -> &dyn Env {
+        self.template.as_ref()
+    }
+
+    pub fn master(&self) -> &Breakdown {
+        &self.master
+    }
+
+    /// Wall-clock since [`SearchDriver::begin`].
+    pub fn elapsed(&self) -> Duration {
+        self.began.elapsed()
+    }
+
+    /// Attribute caller-side wait time to the master breakdown (the
+    /// dedicated-pool wrapper blocks on its own pools; the service
+    /// scheduler never blocks per-session).
+    pub fn note_idle(&mut self, d: Duration) {
+        self.master.add(Phase::Idle, d);
+    }
+
+    /// Recommended action at the root (most visits, ties by value).
+    pub fn best_action(&self) -> usize {
+        self.tree.best_root_action().unwrap_or(0)
+    }
+
+    pub fn root_value(&self) -> f64 {
+        self.tree.node(Tree::ROOT).v
+    }
+
+    /// One master tick: traverse (Eq. 4), then either queue an expansion,
+    /// queue a simulation with the incomplete update applied (Eq. 5), or
+    /// short-circuit a terminal rollout (Algorithm 1's terminal branch).
+    pub fn issue(&mut self, sink: &mut dyn TaskSink) -> IssueOutcome {
+        if !self.can_issue() {
+            return IssueOutcome::Exhausted;
+        }
+        let sel = Instant::now();
+        let (node, reason) = traverse(&self.tree, ScoreMode::WuUct, &self.spec, &mut self.rng);
+        self.master.add(Phase::Selection, sel.elapsed());
+        self.issued += 1;
+        match reason {
+            StopReason::Expand => {
+                // Pop the prior-policy action (heuristic-best with mild
+                // randomization, as in SequentialUct).
+                let untried = &mut self.tree.node_mut(node).untried;
+                let pick = if untried.len() > 1 && self.rng.chance(0.25) {
+                    self.rng.below_usize(untried.len())
+                } else {
+                    0
+                };
+                let action = untried.remove(pick);
+                let comm = Instant::now();
+                let env = Self::env_at(self.template.as_ref(), &self.tree, node);
+                let id = sink.submit_expand(env, action, self.spec.max_width);
+                self.master.add(Phase::Communication, comm.elapsed());
+                self.tasks.insert(id, node, TaskKind::Expand { action });
+                IssueOutcome::Queued
+            }
+            StopReason::Terminal | StopReason::DepthCap | StopReason::DeadEnd => {
+                if self.queue_simulation(node, sink) {
+                    IssueOutcome::Queued
+                } else {
+                    IssueOutcome::ShortCircuit
+                }
+            }
+        }
+    }
+
+    /// Feed a pool result back into the tree. Expansion results install
+    /// the child and immediately queue its simulation (through `sink`);
+    /// simulation results run the complete update (Eq. 6).
+    pub fn absorb(&mut self, result: TaskResult, sink: &mut dyn TaskSink) {
+        match result {
+            TaskResult::Expanded(res) => {
+                let bp = Instant::now();
+                let (parent, kind) = self.tasks.resolve(res.task_id);
+                let TaskKind::Expand { action } = kind else {
+                    panic!("expansion result for a non-expansion task");
+                };
+                let child = Self::install_child(&mut self.tree, parent, action, res);
+                self.master.add(Phase::Backpropagation, bp.elapsed());
+                self.queue_simulation(child, sink);
+            }
+            TaskResult::Simulated(res) => {
+                let bp = Instant::now();
+                let (node, kind) = self.tasks.resolve(res.task_id);
+                debug_assert_eq!(kind, TaskKind::Simulate);
+                Self::complete_update(&mut self.tree, node, res.ret, self.spec.gamma);
+                self.master.add(Phase::Backpropagation, bp.elapsed());
+                self.completed += 1;
+            }
+        }
+    }
+
+    /// Assert the paper's quiescence invariant: with nothing in flight,
+    /// every incomplete update has been cancelled (`ΣO = 0`).
+    pub fn assert_quiescent(&self) {
+        debug_assert!(self.tasks.is_empty(), "tasks outstanding at quiescence");
+        debug_assert_eq!(self.tree.total_unobserved(), 0, "O must drain to zero");
+    }
+
+    /// Execute `action` on the live environment and carry the on-path
+    /// subtree over as the new root ([`Tree::advance_root`]), preserving
+    /// its statistics; off-path subtrees are discarded. Falls back to a
+    /// fresh tree when the action was never expanded. Requires quiescence.
+    pub fn advance(&mut self, action: usize) -> Result<AdvanceOutcome> {
+        ensure!(
+            self.tasks.is_empty(),
+            "cannot advance with {} tasks in flight",
+            self.tasks.outstanding()
+        );
+        ensure!(!self.template.is_terminal(), "cannot advance a terminal episode");
+        ensure!(
+            self.template.legal_actions().contains(&action),
+            "illegal action {action}"
+        );
+        let step = self.template.step(action);
+        let (reused, retained) = match self.tree.advance_root(action) {
+            Some(retained) => (true, retained),
+            None => {
+                self.tree = Tree::new();
+                init_node(&mut self.tree, Tree::ROOT, self.template.as_ref(), &self.spec);
+                (false, 1)
+            }
+        };
+        Ok(AdvanceOutcome { step, reused, retained })
+    }
+
+    /// Eq. 5: `O_s += 1` along the path to the root.
+    fn incomplete_update(tree: &mut Tree, node: NodeId) {
+        tree.for_path_to_root(node, |n| n.o += 1);
+    }
+
+    /// Eq. 6 + Eq. 3: `O -= 1; N += 1; V ← mean` along the path, folding
+    /// edge rewards into the return exactly like sequential backprop.
+    fn complete_update(tree: &mut Tree, node: NodeId, sim_return: f64, gamma: f64) {
+        let mut ret = sim_return;
+        let mut cur = node;
+        {
+            let n = tree.node_mut(cur);
+            debug_assert!(n.o > 0, "complete update without matching incomplete");
+            n.o -= 1;
+            n.observe(ret);
+        }
+        while let Some(parent) = tree.node(cur).parent {
+            ret = tree.node(cur).reward + gamma * ret;
+            let p = tree.node_mut(parent);
+            debug_assert!(p.o > 0, "complete update without matching incomplete");
+            p.o -= 1;
+            p.observe(ret);
+            cur = parent;
+        }
+    }
+
+    /// Restore a fresh emulator clone to `node`'s snapshot.
+    fn env_at(template: &dyn Env, tree: &Tree, node: NodeId) -> Box<dyn Env> {
+        let state = tree
+            .node(node)
+            .state
+            .as_ref()
+            .expect("node without stored game-state");
+        let mut env = template.clone_boxed();
+        env.restore(state);
+        env
+    }
+
+    /// Queue a simulation for `node` with the incomplete update applied.
+    /// Terminal nodes short-circuit with a zero-return complete update;
+    /// returns whether a pool task was actually queued.
+    fn queue_simulation(&mut self, node: NodeId, sink: &mut dyn TaskSink) -> bool {
+        Self::incomplete_update(&mut self.tree, node);
+        if self.tree.node(node).terminal {
+            Self::complete_update(&mut self.tree, node, 0.0, self.spec.gamma);
+            self.completed += 1;
+            return false;
+        }
+        let comm = Instant::now();
+        let env = Self::env_at(self.template.as_ref(), &self.tree, node);
+        let id = sink.submit_simulate(env, self.spec.gamma, self.spec.rollout_limit);
+        self.master.add(Phase::Communication, comm.elapsed());
+        self.tasks.insert(id, node, TaskKind::Simulate);
+        true
+    }
+
+    /// Install an expansion result as a new child and return its id.
+    fn install_child(
+        tree: &mut Tree,
+        parent: NodeId,
+        action: usize,
+        res: ExpandResult,
+    ) -> NodeId {
+        let child = tree.add_child(parent, action);
+        let node = tree.node_mut(child);
+        node.reward = res.reward;
+        node.terminal = res.terminal;
+        node.untried = res.untried;
+        node.state = Some(res.state);
+        child
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::eval::{simulation_return, HeuristicPolicy};
+    use crate::mcts::wu_uct::workers::{run_expand, SimResult, Task};
+    use std::collections::VecDeque;
+
+    /// Sink that records tasks; the test loop executes them inline with
+    /// the same worker-side routines the pools run.
+    #[derive(Default)]
+    struct InlineSink {
+        next_id: u64,
+        queue: VecDeque<Task>,
+    }
+
+    impl TaskSink for InlineSink {
+        fn submit_expand(&mut self, env: Box<dyn Env>, action: usize, max_width: usize) -> u64 {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.queue.push_back(Task::Expand { task_id: id, env, action, max_width });
+            id
+        }
+
+        fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64 {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.queue.push_back(Task::Simulate { task_id: id, env, gamma, limit });
+            id
+        }
+    }
+
+    fn execute(task: Task) -> TaskResult {
+        match task {
+            Task::Expand { task_id, mut env, action, max_width } => {
+                let (reward, terminal, state, untried) =
+                    run_expand(env.as_mut(), action, max_width);
+                TaskResult::Expanded(ExpandResult { task_id, reward, terminal, state, untried })
+            }
+            Task::Simulate { task_id, mut env, gamma, limit } => {
+                let mut policy = HeuristicPolicy::new(task_id ^ 0xabc);
+                let ret = simulation_return(env.as_mut(), &mut policy, gamma, limit);
+                TaskResult::Simulated(SimResult { task_id, ret })
+            }
+            Task::Shutdown => unreachable!("inline executor never shuts down"),
+        }
+    }
+
+    fn run_to_completion(driver: &mut SearchDriver, sink: &mut InlineSink) {
+        while !driver.done() {
+            while driver.can_issue() {
+                driver.issue(sink);
+            }
+            let task = sink.queue.pop_front().expect("stalled: no tasks, not done");
+            let result = execute(task);
+            // Re-queue follow-ups (expansion → simulation) via the sink.
+            driver.absorb(result, sink);
+        }
+        driver.assert_quiescent();
+    }
+
+    fn spec(sims: u32, seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: sims,
+            rollout_limit: 10,
+            max_depth: 12,
+            seed,
+            ..SearchSpec::default()
+        }
+    }
+
+    #[test]
+    fn driver_completes_budget_exactly() {
+        let env = Garnet::new(15, 3, 30, 0.0, 1);
+        let mut d = SearchDriver::new(spec(40, 0), &env);
+        let mut sink = InlineSink::default();
+        d.begin(40);
+        run_to_completion(&mut d, &mut sink);
+        assert_eq!(d.completed(), 40);
+        assert!(d.tree().len() > 1);
+        assert!(env.legal_actions().contains(&d.best_action()));
+    }
+
+    #[test]
+    fn driver_thinks_are_resumable_across_begins() {
+        let env = Garnet::new(15, 3, 30, 0.0, 2);
+        let mut d = SearchDriver::new(spec(16, 1), &env);
+        let mut sink = InlineSink::default();
+        d.begin(16);
+        run_to_completion(&mut d, &mut sink);
+        let size_after_first = d.tree().len();
+        d.begin(16);
+        run_to_completion(&mut d, &mut sink);
+        assert!(d.tree().len() >= size_after_first, "second think keeps growing the tree");
+        assert_eq!(d.completed(), 16, "completion counter is per-think");
+    }
+
+    #[test]
+    fn advance_reuses_subtree_statistics() {
+        let env = Garnet::new(15, 3, 30, 0.0, 3);
+        let mut d = SearchDriver::new(spec(60, 2), &env);
+        let mut sink = InlineSink::default();
+        d.begin(60);
+        run_to_completion(&mut d, &mut sink);
+        let best = d.best_action();
+        let child = d.tree().node(Tree::ROOT).child_for(best).expect("best child exists");
+        let (n, v) = (d.tree().node(child).n, d.tree().node(child).v);
+        let out = d.advance(best).unwrap();
+        assert!(out.reused, "searched action must have an expanded child");
+        assert!(out.retained >= 1);
+        assert_eq!(d.tree().node(Tree::ROOT).n, n, "visits carried over");
+        assert_eq!(d.tree().node(Tree::ROOT).v, v, "value carried over");
+        assert_eq!(d.tree().node(Tree::ROOT).depth, 0, "depth rebased");
+    }
+
+    #[test]
+    fn advance_unexpanded_action_rebuilds_fresh_tree() {
+        let env = Garnet::new(15, 3, 30, 0.0, 4);
+        let mut d = SearchDriver::new(spec(4, 3), &env);
+        // No search at all: nothing expanded, any action misses the tree.
+        let action = env.legal_actions()[0];
+        let out = d.advance(action).unwrap();
+        assert!(!out.reused);
+        assert_eq!(d.tree().len(), 1);
+        assert!(d.tree().node(Tree::ROOT).state.is_some(), "fresh root re-initialized");
+    }
+
+    #[test]
+    fn advance_rejects_illegal_and_midflight() {
+        let env = Garnet::new(15, 3, 30, 0.0, 5);
+        let mut d = SearchDriver::new(spec(8, 4), &env);
+        assert!(d.advance(usize::MAX).is_err(), "illegal action refused");
+        let mut sink = InlineSink::default();
+        d.begin(8);
+        // Issue without absorbing: tasks in flight.
+        while d.can_issue() {
+            d.issue(&mut sink);
+        }
+        if d.outstanding() > 0 {
+            assert!(d.advance(0).is_err(), "advance must require quiescence");
+        }
+    }
+
+    #[test]
+    fn terminal_root_short_circuits_every_rollout() {
+        let mut env = Garnet::new(6, 2, 1, 0.0, 9);
+        env.step(0);
+        assert!(env.is_terminal());
+        let mut d = SearchDriver::new(spec(12, 5), &env);
+        let mut sink = InlineSink::default();
+        d.begin(12);
+        while d.can_issue() {
+            assert_eq!(d.issue(&mut sink), IssueOutcome::ShortCircuit);
+        }
+        assert!(d.done());
+        assert!(sink.queue.is_empty(), "no pool tasks for a terminal root");
+        assert_eq!(d.tree().len(), 1);
+        d.assert_quiescent();
+    }
+}

@@ -9,31 +9,67 @@
 //! workers are occupied, waits on whichever pool is full (Algorithm 1's
 //! control flow), and drains at the end of the budget, guaranteeing
 //! `ΣO = 0` at quiescence (a tested invariant).
+//!
+//! The master's select → queue → absorb machine itself lives in
+//! [`driver`] as the resumable [`driver::SearchDriver`]; this module binds
+//! it to a dedicated pair of pools with the paper's blocking control flow.
+//! The service layer ([`crate::service`]) binds the same machine to pools
+//! shared by many concurrent sessions.
 
 pub mod buffer;
+pub mod driver;
 pub mod workers;
 
 use std::time::Instant;
 
 use crate::env::Env;
 use crate::eval::{HeuristicPolicy, PolicyFactory};
-use crate::mcts::common::{init_node, traverse, Search, SearchResult, SearchSpec, StopReason};
-use crate::tree::{NodeId, ScoreMode, Tree};
-use crate::util::rng::Pcg32;
-use crate::util::timer::{Breakdown, Phase};
+use crate::mcts::common::{Search, SearchResult, SearchSpec};
+use crate::util::timer::Breakdown;
 
-use buffer::{TaskKind, TaskTable};
-use workers::{Pool, Task, TaskResult};
+use self::driver::{SearchDriver, TaskSink};
+
+use self::workers::{Pool, Task, TaskResult};
 
 /// The WU-UCT parallel search.
 pub struct WuUct {
     spec: SearchSpec,
-    rng: Pcg32,
     expansion: Pool,
     simulation: Pool,
     /// Breakdown snapshot taken at the previous search's end, so each
     /// search reports only its own worker time.
     workers_baseline: Breakdown,
+    /// Completed searches; perturbs the per-search driver seed so repeat
+    /// searches explore fresh randomness (the old persistent-rng behavior).
+    searches: u64,
+}
+
+/// [`TaskSink`] over a dedicated pool pair: allocates local task ids and
+/// tracks in-flight counts for the blocking master loop.
+struct PoolSink<'a> {
+    expansion: &'a Pool,
+    simulation: &'a Pool,
+    next_id: u64,
+    pending_exp: usize,
+    pending_sim: usize,
+}
+
+impl TaskSink for PoolSink<'_> {
+    fn submit_expand(&mut self, env: Box<dyn Env>, action: usize, max_width: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.expansion.submit(Task::Expand { task_id: id, env, action, max_width });
+        self.pending_exp += 1;
+        id
+    }
+
+    fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.simulation.submit(Task::Simulate { task_id: id, env, gamma, limit });
+        self.pending_sim += 1;
+        id
+    }
 }
 
 impl WuUct {
@@ -52,11 +88,11 @@ impl WuUct {
         let expansion = Pool::new(n_exp, policy_factory.clone(), spec.seed ^ 0xe);
         let simulation = Pool::new(n_sim, policy_factory, spec.seed ^ 0x5);
         WuUct {
-            rng: Pcg32::new(spec.seed ^ 0x10_0c7),
             spec,
             expansion,
             simulation,
             workers_baseline: Breakdown::new(),
+            searches: 0,
         }
     }
 
@@ -67,219 +103,73 @@ impl WuUct {
     pub fn n_simulation_workers(&self) -> usize {
         self.simulation.capacity()
     }
-
-    /// Eq. 5: `O_s += 1` along the path to the root.
-    fn incomplete_update(tree: &mut Tree, node: NodeId) {
-        tree.for_path_to_root(node, |n| n.o += 1);
-    }
-
-    /// Eq. 6 + Eq. 3: `O -= 1; N += 1; V ← mean` along the path, folding
-    /// edge rewards into the return exactly like sequential backprop.
-    fn complete_update(tree: &mut Tree, node: NodeId, sim_return: f64, gamma: f64) {
-        let mut ret = sim_return;
-        let mut cur = node;
-        {
-            let n = tree.node_mut(cur);
-            debug_assert!(n.o > 0, "complete update without matching incomplete");
-            n.o -= 1;
-            n.observe(ret);
-        }
-        while let Some(parent) = tree.node(cur).parent {
-            ret = tree.node(cur).reward + gamma * ret;
-            let p = tree.node_mut(parent);
-            debug_assert!(p.o > 0, "complete update without matching incomplete");
-            p.o -= 1;
-            p.observe(ret);
-            cur = parent;
-        }
-    }
-
-    /// Restore a fresh emulator clone to `node`'s snapshot.
-    fn env_at(template: &dyn Env, tree: &Tree, node: NodeId) -> Box<dyn Env> {
-        let state = tree
-            .node(node)
-            .state
-            .as_ref()
-            .expect("node without stored game-state");
-        let mut env = template.clone_boxed();
-        env.restore(state);
-        env
-    }
-
-    /// Queue a simulation for `node` and apply the incomplete update.
-    /// Terminal nodes short-circuit with a zero-return complete update
-    /// (Algorithm 1's "if episode terminated" branch).
-    fn queue_simulation(
-        &mut self,
-        tree: &mut Tree,
-        tasks: &mut TaskTable,
-        template: &dyn Env,
-        node: NodeId,
-        pending_sim: &mut usize,
-        t_complete: &mut u32,
-        master: &mut Breakdown,
-    ) {
-        Self::incomplete_update(tree, node);
-        if tree.node(node).terminal {
-            Self::complete_update(tree, node, 0.0, self.spec.gamma);
-            *t_complete += 1;
-            return;
-        }
-        let id = tasks.register(node, TaskKind::Simulate);
-        let comm = Instant::now();
-        let env = Self::env_at(template, tree, node);
-        self.simulation.submit(Task::Simulate {
-            task_id: id,
-            env,
-            gamma: self.spec.gamma,
-            limit: self.spec.rollout_limit,
-        });
-        master.add(Phase::Communication, comm.elapsed());
-        *pending_sim += 1;
-    }
-
-    /// Install an expansion result as a new child and return its id.
-    fn install_child(
-        tree: &mut Tree,
-        parent: NodeId,
-        action: usize,
-        res: workers::ExpandResult,
-    ) -> NodeId {
-        let child = tree.add_child(parent, action);
-        let node = tree.node_mut(child);
-        node.reward = res.reward;
-        node.terminal = res.terminal;
-        node.untried = res.untried;
-        node.state = Some(res.state);
-        child
-    }
 }
 
 impl Search for WuUct {
     fn search(&mut self, root_env: &dyn Env) -> SearchResult {
         let start = Instant::now();
-        let mut master = Breakdown::new();
-        let mut tree = Tree::new();
-        init_node(&mut tree, Tree::ROOT, root_env, &self.spec);
+        let mut spec = self.spec.clone();
+        spec.seed = self.spec.seed ^ self.searches.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.searches += 1;
+        let mut driver = SearchDriver::new(spec, root_env);
+        driver.begin(self.spec.max_simulations);
+        let mut sink = PoolSink {
+            expansion: &self.expansion,
+            simulation: &self.simulation,
+            next_id: 0,
+            pending_exp: 0,
+            pending_sim: 0,
+        };
 
-        let mut tasks = TaskTable::new();
-        let mut pending_exp = 0usize;
-        let mut pending_sim = 0usize;
-        let mut issued = 0u32; // rollouts started (each ends in 1 complete update)
-        let mut t_complete = 0u32;
-        let t_max = self.spec.max_simulations;
-
-        while t_complete < t_max {
+        while !driver.done() {
             // Issue new rollouts while budget remains and pools have room.
-            if issued < t_max && pending_exp < self.expansion.capacity() && pending_sim < self.simulation.capacity()
+            if driver.can_issue()
+                && sink.pending_exp < self.expansion.capacity()
+                && sink.pending_sim < self.simulation.capacity()
             {
-                let sel = Instant::now();
-                let (node, reason) =
-                    traverse(&tree, ScoreMode::WuUct, &self.spec, &mut self.rng);
-                master.add(Phase::Selection, sel.elapsed());
-                issued += 1;
-                match reason {
-                    StopReason::Expand => {
-                        // Pop the prior-policy action (heuristic-best with
-                        // mild randomization, as in SequentialUct).
-                        let untried = &mut tree.node_mut(node).untried;
-                        let pick = if untried.len() > 1 && self.rng.chance(0.25) {
-                            self.rng.below_usize(untried.len())
-                        } else {
-                            0
-                        };
-                        let action = untried.remove(pick);
-                        let id = tasks.register(node, TaskKind::Expand { action });
-                        let comm = Instant::now();
-                        let env = Self::env_at(root_env, &tree, node);
-                        self.expansion.submit(Task::Expand {
-                            task_id: id,
-                            env,
-                            action,
-                            max_width: self.spec.max_width,
-                        });
-                        master.add(Phase::Communication, comm.elapsed());
-                        pending_exp += 1;
-                    }
-                    StopReason::Terminal | StopReason::DepthCap | StopReason::DeadEnd => {
-                        self.queue_simulation(
-                            &mut tree,
-                            &mut tasks,
-                            root_env,
-                            node,
-                            &mut pending_sim,
-                            &mut t_complete,
-                            &mut master,
-                        );
-                    }
-                }
+                driver.issue(&mut sink);
                 continue;
             }
 
             // Pools saturated or budget issued: wait for results.
             // Prefer draining expansions first (they feed simulations).
-            if pending_exp > 0
-                && (pending_exp >= self.expansion.capacity() || issued >= t_max)
+            if sink.pending_exp > 0
+                && (sink.pending_exp >= self.expansion.capacity() || !driver.can_issue())
             {
                 let idle = Instant::now();
                 let result = self.expansion.recv();
-                master.add(Phase::Idle, idle.elapsed());
-                match result {
-                    TaskResult::Expanded(res) => {
-                        pending_exp -= 1;
-                        let bp = Instant::now();
-                        let (parent, kind) = tasks.resolve(res.task_id);
-                        let TaskKind::Expand { action } = kind else {
-                            panic!("expansion pool returned a non-expansion task");
-                        };
-                        let child = Self::install_child(&mut tree, parent, action, res);
-                        master.add(Phase::Backpropagation, bp.elapsed());
-                        self.queue_simulation(
-                            &mut tree,
-                            &mut tasks,
-                            root_env,
-                            child,
-                            &mut pending_sim,
-                            &mut t_complete,
-                            &mut master,
-                        );
-                    }
+                driver.note_idle(idle.elapsed());
+                match &result {
+                    TaskResult::Expanded(_) => sink.pending_exp -= 1,
                     TaskResult::Simulated(_) => {
                         panic!("simulation result on the expansion channel")
                     }
                 }
+                driver.absorb(result, &mut sink);
                 continue;
             }
 
-            if pending_sim > 0 {
+            if sink.pending_sim > 0 {
                 let idle = Instant::now();
                 let result = self.simulation.recv();
-                master.add(Phase::Idle, idle.elapsed());
-                match result {
-                    TaskResult::Simulated(res) => {
-                        pending_sim -= 1;
-                        let bp = Instant::now();
-                        let (node, kind) = tasks.resolve(res.task_id);
-                        debug_assert_eq!(kind, TaskKind::Simulate);
-                        Self::complete_update(&mut tree, node, res.ret, self.spec.gamma);
-                        master.add(Phase::Backpropagation, bp.elapsed());
-                        t_complete += 1;
-                    }
+                driver.note_idle(idle.elapsed());
+                match &result {
+                    TaskResult::Simulated(_) => sink.pending_sim -= 1,
                     TaskResult::Expanded(_) => {
                         panic!("expansion result on the simulation channel")
                     }
                 }
+                driver.absorb(result, &mut sink);
                 continue;
             }
 
-            // Nothing pending and budget issued but t_complete < t_max can
-            // only happen via terminal short-circuits, handled inline.
-            debug_assert!(issued >= t_max);
+            // Nothing pending and budget issued but incomplete can only
+            // happen via terminal short-circuits, handled inline.
+            debug_assert!(!driver.can_issue());
             break;
         }
 
-        debug_assert_eq!(tree.total_unobserved(), 0, "O must drain to zero");
-        debug_assert!(tasks.is_empty(), "all tasks resolved");
+        driver.assert_quiescent();
 
         let workers_now = {
             let mut b = self.expansion.breakdown();
@@ -291,12 +181,12 @@ impl Search for WuUct {
         self.workers_baseline = workers_now;
 
         SearchResult {
-            best_action: tree.best_root_action().unwrap_or(0),
-            simulations: t_complete,
+            best_action: driver.best_action(),
+            simulations: driver.completed(),
             elapsed: start.elapsed(),
-            tree_size: tree.len(),
-            root_value: tree.node(Tree::ROOT).v,
-            master,
+            tree_size: driver.tree().len(),
+            root_value: driver.root_value(),
+            master: driver.master().clone(),
             workers,
         }
     }
@@ -315,7 +205,9 @@ mod tests {
     use super::*;
     use crate::env::garnet::Garnet;
     use crate::env::tapgame::{Level, TapGame};
+    use crate::env::Env;
     use crate::mcts::sequential::SequentialUct;
+    use crate::util::timer::Phase;
 
     fn spec(sims: u32, seed: u64) -> SearchSpec {
         SearchSpec {

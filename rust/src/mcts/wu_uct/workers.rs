@@ -109,7 +109,9 @@ pub fn run_expand(env: &mut dyn Env, action: usize, max_width: usize) -> (f64, b
 /// A pool of worker threads.
 pub struct Pool {
     queue: Arc<TaskQueue>,
-    results: Receiver<TaskResult>,
+    /// `None` once [`Pool::take_receiver`] moved it to an external router
+    /// (the service scheduler funnels both pools into one inbox).
+    results: Option<Receiver<TaskResult>>,
     result_tx: Sender<TaskResult>,
     handles: Vec<JoinHandle<()>>,
     breakdowns: Vec<Arc<Mutex<Breakdown>>>,
@@ -182,7 +184,7 @@ impl Pool {
                 }
             }));
         }
-        Pool { queue, results, result_tx, handles, breakdowns, capacity: n }
+        Pool { queue, results: Some(results), result_tx, handles, breakdowns, capacity: n }
     }
 
     /// Number of worker threads.
@@ -196,12 +198,23 @@ impl Pool {
 
     /// Block until the next result arrives.
     pub fn recv(&self) -> TaskResult {
-        self.results.recv().expect("worker pool hung up")
+        self.results
+            .as_ref()
+            .expect("result receiver was taken; route through the external inbox")
+            .recv()
+            .expect("worker pool hung up")
     }
 
     /// Non-blocking poll.
     pub fn try_recv(&self) -> Option<TaskResult> {
-        self.results.try_recv().ok()
+        self.results.as_ref()?.try_recv().ok()
+    }
+
+    /// Move the result receiver out, so an external router (the service
+    /// scheduler's forwarder thread) can multiplex several pools into one
+    /// inbox. After this, [`Pool::recv`] on the pool itself panics.
+    pub fn take_receiver(&mut self) -> Receiver<TaskResult> {
+        self.results.take().expect("result receiver already taken")
     }
 
     /// Sum of all workers' breakdowns so far.

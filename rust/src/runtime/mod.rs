@@ -4,13 +4,29 @@
 //! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
 //! (`artifacts/*.hlo.txt`) → `client.compile` → `execute`. Python never
 //! runs here — the weights were constant-folded at `make artifacts` time.
+//!
+//! The PJRT half needs the `xla` bindings crate, which is not in the
+//! offline registry snapshot; it is gated behind the `pjrt` cargo feature
+//! (see DESIGN.md §4). Without the feature, [`stub`] provides API-identical
+//! types whose constructors report the missing feature, so everything that
+//! checks for artifacts at runtime still compiles and degrades gracefully.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod meta;
+#[cfg(feature = "pjrt")]
 pub mod policy;
+#[cfg(feature = "pjrt")]
 pub mod server;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, PolicyOutput};
 pub use meta::{artifacts_dir, ArtifactMeta};
+#[cfg(feature = "pjrt")]
 pub use policy::NetworkPolicy;
+#[cfg(feature = "pjrt")]
 pub use server::{EvalHandle, EvalServer, ServerStats};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, EvalHandle, EvalServer, NetworkPolicy, PolicyOutput, ServerStats};

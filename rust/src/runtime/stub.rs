@@ -1,0 +1,131 @@
+//! API-compatible stand-ins for the PJRT runtime, compiled when the
+//! `pjrt` cargo feature is off (the `xla` bindings crate is not in the
+//! offline registry snapshot — see DESIGN.md §4).
+//!
+//! Every constructor fails with a clear error instead of executing, so the
+//! callers that gate on `artifacts/meta.txt` at runtime keep compiling and
+//! keep skipping cleanly when artifacts are absent. If artifacts *are*
+//! present but the feature is off, loading reports the misconfiguration
+//! instead of silently returning garbage.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::eval::PolicyFactory;
+use crate::runtime::meta::ArtifactMeta;
+
+const MISSING: &str =
+    "built without the `pjrt` feature: rebuild with `--features pjrt` (requires the xla crate)";
+
+/// One (logits, value) pair per request row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyOutput {
+    pub logits: Vec<f32>,
+    pub value: f32,
+}
+
+/// Stub engine: construction always fails.
+pub struct Engine {
+    meta: ArtifactMeta,
+    pub batches_run: u64,
+    pub rows_run: u64,
+}
+
+impl Engine {
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        bail!(MISSING);
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Engine cannot be constructed")
+    }
+
+    pub fn infer(&mut self, _rows: &[Vec<f32>]) -> Result<Vec<PolicyOutput>> {
+        bail!(MISSING);
+    }
+}
+
+/// Server statistics (kept for API parity with the real server).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub requests: u64,
+    pub batches: u64,
+}
+
+impl ServerStats {
+    pub fn avg_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Stub client handle; unobtainable because the server never starts.
+#[derive(Clone)]
+pub struct EvalHandle;
+
+impl EvalHandle {
+    pub fn eval(&self, _features: Vec<f32>) -> PolicyOutput {
+        unreachable!("stub EvalServer cannot be started")
+    }
+}
+
+/// Stub inference server: start always fails.
+pub struct EvalServer;
+
+impl EvalServer {
+    pub fn start(_dir: &Path, _gather_window: Duration) -> Result<EvalServer> {
+        bail!(MISSING);
+    }
+
+    pub fn handle(&self) -> EvalHandle {
+        EvalHandle
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats::default()
+    }
+}
+
+/// Stub network policy: the factory panics if a worker ever invokes it.
+pub struct NetworkPolicy;
+
+impl NetworkPolicy {
+    pub fn factory(handle: EvalHandle) -> PolicyFactory {
+        let _ = handle;
+        std::sync::Arc::new(|_seed| unreachable!("stub NetworkPolicy cannot roll out"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    #[test]
+    fn engine_load_reports_missing_feature() {
+        let err = Engine::load(&artifacts_dir()).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn server_start_reports_missing_feature() {
+        let err = EvalServer::start(&artifacts_dir(), Duration::from_micros(1)).unwrap_err();
+        assert!(err.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn stats_default_is_empty() {
+        let s = ServerStats::default();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.avg_batch(), 0.0);
+    }
+}

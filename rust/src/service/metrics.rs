@@ -1,0 +1,144 @@
+//! Service observability: latency accumulators and the metrics snapshot
+//! reported by the `metrics` op / `wu-uct serve`.
+
+use std::time::Duration;
+
+/// Running latency record (milliseconds). Unbounded in principle; the
+/// scheduler halves it by subsampling past [`LatencyStats::CAP`] so a
+/// long-lived service cannot grow without bound.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+    pub count: u64,
+}
+
+impl LatencyStats {
+    /// Soft cap on retained samples; beyond it every other sample is
+    /// dropped (keeps percentiles representative at bounded memory).
+    pub const CAP: usize = 65_536;
+
+    pub fn record(&mut self, d: Duration) {
+        self.count += 1;
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+        if self.samples_ms.len() > Self::CAP {
+            let mut keep_odd = false;
+            self.samples_ms.retain(|_| {
+                keep_odd = !keep_odd;
+                keep_odd
+            });
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ms)
+    }
+
+    /// Nearest-rank percentile over retained samples; 0.0 when empty.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        percentile(&self.samples_ms, p)
+    }
+
+    /// (mean, p50, p90, p99) with a single sort — what the scheduler's
+    /// metrics snapshot wants without three separate sort passes on its
+    /// dispatch thread.
+    pub fn summary_ms(&self) -> (f64, f64, f64, f64) {
+        if self.samples_ms.is_empty() {
+            return (0.0, 0.0, 0.0, 0.0);
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let rank = |p: f64| {
+            let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+            v[idx.min(v.len() - 1)]
+        };
+        (crate::util::stats::mean(&v), rank(50.0), rank(90.0), rank(99.0))
+    }
+}
+
+/// Nearest-rank percentile (`p` in [0, 100]) of `xs`; 0.0 when empty.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Point-in-time service snapshot (the `metrics` op payload).
+#[derive(Debug, Clone, Default)]
+pub struct ServiceMetrics {
+    pub uptime: Duration,
+    pub sessions_open: usize,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    /// Completed thinks across all sessions.
+    pub thinks: u64,
+    /// Completed simulations across all sessions.
+    pub sims: u64,
+    /// Episodes retired per second (closed sessions / uptime).
+    pub sessions_per_sec: f64,
+    pub thinks_per_sec: f64,
+    pub sims_per_sec: f64,
+    pub think_ms_mean: f64,
+    pub think_ms_p50: f64,
+    pub think_ms_p90: f64,
+    pub think_ms_p99: f64,
+    /// Busy fraction of the shared pools (paper Fig. 2's occupancy).
+    pub exp_occupancy: f64,
+    pub sim_occupancy: f64,
+    pub expansion_workers: usize,
+    pub simulation_workers: usize,
+    pub pending_expansions: usize,
+    pub pending_simulations: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn latency_stats_record_and_summarize() {
+        let mut l = LatencyStats::default();
+        for ms in [10u64, 20, 30, 40] {
+            l.record(Duration::from_millis(ms));
+        }
+        assert_eq!(l.count, 4);
+        assert!((l.mean_ms() - 25.0).abs() < 1.0);
+        assert!(l.percentile_ms(99.0) >= l.percentile_ms(50.0));
+    }
+
+    #[test]
+    fn summary_matches_individual_percentiles() {
+        let mut l = LatencyStats::default();
+        for ms in [5u64, 1, 9, 3, 7] {
+            l.record(Duration::from_millis(ms));
+        }
+        let (mean, p50, p90, p99) = l.summary_ms();
+        assert!((mean - l.mean_ms()).abs() < 1e-9);
+        assert_eq!(p50, l.percentile_ms(50.0));
+        assert_eq!(p90, l.percentile_ms(90.0));
+        assert_eq!(p99, l.percentile_ms(99.0));
+        assert_eq!(LatencyStats::default().summary_ms(), (0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn latency_stats_cap_subsamples() {
+        let mut l = LatencyStats::default();
+        for i in 0..(LatencyStats::CAP + 10) {
+            l.record(Duration::from_micros(i as u64));
+        }
+        assert!(l.samples_ms.len() <= LatencyStats::CAP);
+        assert_eq!(l.count as usize, LatencyStats::CAP + 10);
+    }
+}

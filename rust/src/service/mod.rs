@@ -1,0 +1,39 @@
+//! Search-as-a-service: many concurrent WU-UCT sessions multiplexed over
+//! one shared expansion pool and one shared simulation pool.
+//!
+//! The paper's core trick — tracking unobserved samples `O` so the master
+//! never waits on in-flight work (Eqs. 4–6) — means the master loop is
+//! non-blocking by construction. This layer exploits that: the loop is
+//! extracted into the tick-driven [`SearchDriver`] (one per session, one
+//! private tree each), and a single scheduler thread interleaves every
+//! live session's select/queue/absorb ticks, routing pool results back by
+//! a global task id. Unlike tree-parallel serving designs, no lock ever
+//! guards a tree — the contention pitfalls catalogued by Liu et al.
+//! (2020) are sidestepped rather than mitigated.
+//!
+//! Layers, bottom up:
+//!
+//! * [`driver`] — the resumable WU-UCT master state machine (it lives
+//!   beside the algorithm in [`crate::mcts::wu_uct::driver`] so the
+//!   dependency points service → mcts, never back; re-exported here);
+//! * [`scheduler`] — sessions, shared pools, virtual-deadline fair
+//!   scheduling, lifecycle ops (`open`/`think`/`advance`/`best`/`close`)
+//!   with tree reuse across moves ([`crate::tree::Tree::advance_root`]);
+//! * [`metrics`] — think-latency percentiles, throughput, occupancy;
+//! * [`json`] / [`proto`] — the line-delimited JSON wire protocol;
+//! * [`server`] — the TCP front-end behind `wu-uct serve`.
+
+pub mod json;
+pub mod metrics;
+pub mod proto;
+pub mod scheduler;
+pub mod server;
+
+pub use crate::mcts::wu_uct::driver;
+pub use crate::mcts::wu_uct::driver::{AdvanceOutcome, IssueOutcome, SearchDriver, TaskSink};
+pub use metrics::ServiceMetrics;
+pub use scheduler::{
+    AdvanceReply, CloseReply, SearchService, ServiceConfig, ServiceHandle, SessionOptions,
+    ThinkReply,
+};
+pub use server::TcpServer;

@@ -1,0 +1,347 @@
+//! Line-delimited JSON protocol over the search service.
+//!
+//! One request per line, one response per line; every response carries
+//! `"ok"`. The dispatcher is transport-agnostic (the TCP server and the
+//! in-process tests share it).
+//!
+//! ```text
+//! → {"op":"open","env":"Breakout","seed":7,"sims":64}
+//! ← {"ok":true,"session":1}
+//! → {"op":"think","session":1}
+//! ← {"ok":true,"action":2,"value":0.41,"sims":64,"tree":91,"ms":5.2,"quiescent":true}
+//! → {"op":"advance","session":1,"action":2}
+//! ← {"ok":true,"reward":1.0,"done":false,"reused":true,"retained":17,"steps":1}
+//! → {"op":"close","session":1}
+//! ← {"ok":true,"thinks":1,"sims":64,"steps":1,"unobserved":0}
+//! ```
+//!
+//! Also: `best` (read the recommendation without searching), `metrics`
+//! (service snapshot) and `ping`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::env::tapgame::{Level, TapGame};
+use crate::env::{atari, garnet::Garnet, Env};
+use crate::mcts::common::SearchSpec;
+use crate::service::json::{obj, Json};
+use crate::service::metrics::ServiceMetrics;
+use crate::service::scheduler::{ServiceHandle, SessionOptions};
+
+/// Side effect of a dispatched line, for connection-scoped session
+/// tracking (the TCP server closes a connection's leftover sessions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineEffect {
+    None,
+    Opened(u64),
+    Closed(u64),
+}
+
+/// Build an environment by protocol name: the 15 Atari-like suite games,
+/// `level-35` / `level-58` (tap game), or `garnet` (the cheap random MDP,
+/// handy for load tests).
+pub fn make_env(name: &str, seed: u64) -> Result<Box<dyn Env>> {
+    match name {
+        "level-35" => Ok(Box::new(TapGame::new(Level::level35(), seed))),
+        "level-58" => Ok(Box::new(TapGame::new(Level::level58(), seed))),
+        "garnet" => Ok(Box::new(Garnet::new(15, 3, 30, 0.0, seed))),
+        other if atari::GAMES.contains(&other) => Ok(atari::make(other, seed)),
+        other => bail!(
+            "unknown env {other:?}; expected one of the Atari suite, level-35, level-58, garnet"
+        ),
+    }
+}
+
+/// Spec defaults by environment family, with per-field overrides from the
+/// request object.
+fn spec_from(req: &Json, env_name: &str) -> Result<SearchSpec> {
+    let mut spec = if env_name.starts_with("level-") {
+        SearchSpec::tap_game()
+    } else {
+        SearchSpec::default()
+    };
+    spec.seed = field_u64(req, "seed")?.unwrap_or(0);
+    if let Some(v) = field_u32(req, "sims")? {
+        spec.max_simulations = v;
+    }
+    if let Some(v) = field_u32(req, "rollout")? {
+        spec.rollout_limit = v;
+    }
+    if let Some(v) = field_u32(req, "depth")? {
+        spec.max_depth = v;
+    }
+    if let Some(v) = field_u32(req, "width")? {
+        spec.max_width = v as usize;
+    }
+    if let Some(v) = field_f64(req, "gamma")? {
+        spec.gamma = v;
+    }
+    Ok(spec)
+}
+
+fn field_u64(req: &Json, key: &str) -> Result<Option<u64>> {
+    match req.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_u64()
+                .ok_or_else(|| anyhow!("field {key:?} must be a non-negative integer"))?,
+        )),
+    }
+}
+
+/// Like [`field_u64`] but rejects values past `u32::MAX` instead of
+/// letting a cast silently wrap a client's typo into a tiny budget.
+fn field_u32(req: &Json, key: &str) -> Result<Option<u32>> {
+    match field_u64(req, key)? {
+        None => Ok(None),
+        Some(v) => Ok(Some(u32::try_from(v).map_err(|_| {
+            anyhow!("field {key:?} out of range (max {})", u32::MAX)
+        })?)),
+    }
+}
+
+fn field_f64(req: &Json, key: &str) -> Result<Option<f64>> {
+    match req.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(
+            v.as_f64().ok_or_else(|| anyhow!("field {key:?} must be a number"))?,
+        )),
+    }
+}
+
+fn required_u64(req: &Json, key: &str) -> Result<u64> {
+    field_u64(req, key)?.ok_or_else(|| anyhow!("missing field {key:?}"))
+}
+
+fn error_line(msg: &str) -> String {
+    obj([("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))]).render()
+}
+
+/// Dispatch one request line; always returns a single response line
+/// (without the trailing newline).
+pub fn handle_line(handle: &ServiceHandle, line: &str) -> (String, LineEffect) {
+    match dispatch(handle, line) {
+        Ok((json, effect)) => (json.render(), effect),
+        Err(e) => (error_line(&format!("{e:#}")), LineEffect::None),
+    }
+}
+
+fn dispatch(handle: &ServiceHandle, line: &str) -> Result<(Json, LineEffect)> {
+    let req = Json::parse(line)?;
+    let op = req
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("missing field \"op\""))?;
+    match op {
+        "ping" => Ok((obj([("ok", Json::Bool(true))]), LineEffect::None)),
+        "open" => {
+            let env_name = req.get("env").and_then(|v| v.as_str()).unwrap_or("Breakout");
+            let seed = field_u64(&req, "seed")?.unwrap_or(0);
+            let env = make_env(env_name, seed)?;
+            let spec = spec_from(&req, env_name)?;
+            let opts = SessionOptions {
+                think_sims: 0,
+                weight: field_f64(&req, "weight")?.unwrap_or(1.0),
+                total_sim_budget: field_u64(&req, "budget")?,
+            };
+            let sid = handle.open(env, spec, opts)?;
+            Ok((
+                obj([("ok", Json::Bool(true)), ("session", Json::Num(sid as f64))]),
+                LineEffect::Opened(sid),
+            ))
+        }
+        "think" => {
+            let sid = required_u64(&req, "session")?;
+            let sims = field_u32(&req, "sims")?.unwrap_or(0);
+            let t = handle.think(sid, sims)?;
+            let mut fields = vec![
+                ("ok".to_string(), Json::Bool(true)),
+                ("action".to_string(), Json::Num(t.action as f64)),
+                ("value".to_string(), Json::Num(t.value)),
+                ("sims".to_string(), Json::Num(t.sims as f64)),
+                ("tree".to_string(), Json::Num(t.tree_size as f64)),
+                ("ms".to_string(), Json::Num(t.elapsed_ms)),
+                ("quiescent".to_string(), Json::Bool(t.quiescent)),
+            ];
+            if let Some(rem) = t.remaining {
+                fields.push(("remaining".to_string(), Json::Num(rem as f64)));
+            }
+            Ok((Json::Obj(fields), LineEffect::None))
+        }
+        "advance" => {
+            let sid = required_u64(&req, "session")?;
+            let action = required_u64(&req, "action")? as usize;
+            let a = handle.advance(sid, action)?;
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("reward", Json::Num(a.reward)),
+                    ("done", Json::Bool(a.done)),
+                    ("reused", Json::Bool(a.reused)),
+                    ("retained", Json::Num(a.retained as f64)),
+                    ("steps", Json::Num(a.steps as f64)),
+                ]),
+                LineEffect::None,
+            ))
+        }
+        "best" => {
+            let sid = required_u64(&req, "session")?;
+            let action = handle.best_action(sid)?;
+            Ok((
+                obj([("ok", Json::Bool(true)), ("action", Json::Num(action as f64))]),
+                LineEffect::None,
+            ))
+        }
+        "close" => {
+            let sid = required_u64(&req, "session")?;
+            let c = handle.close(sid)?;
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("thinks", Json::Num(c.thinks as f64)),
+                    ("sims", Json::Num(c.sims as f64)),
+                    ("steps", Json::Num(c.steps as f64)),
+                    ("unobserved", Json::Num(c.unobserved as f64)),
+                ]),
+                LineEffect::Closed(sid),
+            ))
+        }
+        "metrics" => {
+            let m = handle.metrics()?;
+            Ok((metrics_json(&m), LineEffect::None))
+        }
+        other => bail!("unknown op {other:?}"),
+    }
+}
+
+/// Render a metrics snapshot as the `metrics` response object.
+pub fn metrics_json(m: &ServiceMetrics) -> Json {
+    obj([
+        ("ok", Json::Bool(true)),
+        ("uptime_s", Json::Num(m.uptime.as_secs_f64())),
+        ("sessions_open", Json::Num(m.sessions_open as f64)),
+        ("sessions_opened", Json::Num(m.sessions_opened as f64)),
+        ("sessions_closed", Json::Num(m.sessions_closed as f64)),
+        ("thinks", Json::Num(m.thinks as f64)),
+        ("sims", Json::Num(m.sims as f64)),
+        ("sessions_per_sec", Json::Num(m.sessions_per_sec)),
+        ("thinks_per_sec", Json::Num(m.thinks_per_sec)),
+        ("sims_per_sec", Json::Num(m.sims_per_sec)),
+        ("think_ms_mean", Json::Num(m.think_ms_mean)),
+        ("think_ms_p50", Json::Num(m.think_ms_p50)),
+        ("think_ms_p90", Json::Num(m.think_ms_p90)),
+        ("think_ms_p99", Json::Num(m.think_ms_p99)),
+        ("exp_occupancy", Json::Num(m.exp_occupancy)),
+        ("sim_occupancy", Json::Num(m.sim_occupancy)),
+        ("expansion_workers", Json::Num(m.expansion_workers as f64)),
+        ("simulation_workers", Json::Num(m.simulation_workers as f64)),
+        ("pending_expansions", Json::Num(m.pending_expansions as f64)),
+        ("pending_simulations", Json::Num(m.pending_simulations as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::scheduler::{SearchService, ServiceConfig};
+
+    fn service() -> SearchService {
+        SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        })
+    }
+
+    fn ok_field(line: &str) -> Json {
+        let v = Json::parse(line).expect("response is valid json");
+        assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(true), "line: {line}");
+        v
+    }
+
+    #[test]
+    fn full_episode_over_the_protocol() {
+        let svc = service();
+        let h = svc.handle();
+        let (line, effect) =
+            handle_line(&h, r#"{"op":"open","env":"garnet","seed":3,"sims":12,"rollout":8}"#);
+        let v = ok_field(&line);
+        let sid = v.get("session").unwrap().as_u64().unwrap();
+        assert_eq!(effect, LineEffect::Opened(sid));
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"think","session":{sid}}}"#));
+        let t = ok_field(&line);
+        assert_eq!(t.get("sims").unwrap().as_u64(), Some(12));
+        assert_eq!(t.get("quiescent").unwrap().as_bool(), Some(true));
+        let action = t.get("action").unwrap().as_u64().unwrap();
+
+        let (line, _) = handle_line(
+            &h,
+            &format!(r#"{{"op":"advance","session":{sid},"action":{action}}}"#),
+        );
+        let a = ok_field(&line);
+        assert_eq!(a.get("steps").unwrap().as_u64(), Some(1));
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"best","session":{sid}}}"#));
+        ok_field(&line);
+
+        let (line, effect) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        let c = ok_field(&line);
+        assert_eq!(c.get("unobserved").unwrap().as_u64(), Some(0));
+        assert_eq!(effect, LineEffect::Closed(sid));
+    }
+
+    #[test]
+    fn metrics_and_ping() {
+        let svc = service();
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"ping"}"#);
+        ok_field(&line);
+        let (line, _) = handle_line(&h, r#"{"op":"metrics"}"#);
+        let m = ok_field(&line);
+        assert_eq!(m.get("sessions_open").unwrap().as_u64(), Some(0));
+        assert_eq!(m.get("simulation_workers").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn errors_are_reported_not_fatal() {
+        let svc = service();
+        let h = svc.handle();
+        for bad in [
+            "not json at all",
+            r#"{"no_op":1}"#,
+            r#"{"op":"launch"}"#,
+            r#"{"op":"think"}"#,
+            r#"{"op":"think","session":999}"#,
+            r#"{"op":"open","env":"DoesNotExist"}"#,
+            r#"{"op":"advance","session":1,"action":-2}"#,
+            r#"{"op":"open","env":"garnet","sims":4294967296}"#,
+        ] {
+            let (line, effect) = handle_line(&h, bad);
+            let v = Json::parse(&line).expect("error responses are json");
+            assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false), "input: {bad}");
+            assert!(v.get("error").is_some());
+            assert_eq!(effect, LineEffect::None);
+        }
+        // The service must still be alive afterwards.
+        let (line, _) = handle_line(&h, r#"{"op":"ping"}"#);
+        ok_field(&line);
+    }
+
+    #[test]
+    fn make_env_names() {
+        assert!(make_env("Breakout", 1).is_ok());
+        assert!(make_env("level-35", 1).is_ok());
+        assert!(make_env("garnet", 1).is_ok());
+        assert!(make_env("Pong", 1).is_err(), "not in the synthetic suite");
+    }
+
+    #[test]
+    fn tap_levels_get_tap_spec_defaults() {
+        let req = Json::parse(r#"{"op":"open","env":"level-35"}"#).unwrap();
+        let spec = spec_from(&req, "level-35").unwrap();
+        assert_eq!(spec.max_depth, 10);
+        assert_eq!(spec.max_width, 5);
+        let spec = spec_from(&req, "Breakout").unwrap();
+        assert_eq!(spec.max_width, 20);
+    }
+}

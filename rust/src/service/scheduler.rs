@@ -1,0 +1,753 @@
+//! The multi-session scheduler: many live WU-UCT searches, one shared
+//! expansion pool, one shared simulation pool.
+//!
+//! One scheduler thread owns every session's [`SearchDriver`] plus the two
+//! pools. Because the driver never blocks — it only `issue`s tasks and
+//! `absorb`s results — the thread interleaves sessions freely: whenever a
+//! worker slot frees up, the thinking session with the **earliest virtual
+//! deadline** issues the next rollout, and each issued rollout pushes that
+//! session's deadline back by its stride (1 / weight). That is classic
+//! virtual-time fair scheduling: equal-weight sessions converge to equal
+//! worker shares regardless of arrival order or budget size, and avoids
+//! the tree-contention pitfalls of sharing one tree across threads (Liu et
+//! al. 2020) — every session keeps a private tree; only *workers* are
+//! shared.
+//!
+//! Task results are routed back by a global task-id → session map, so the
+//! paper's per-tree invariant (`ΣO = 0` at quiescence, Eqs. 5–6) holds
+//! per session no matter how thinks interleave — a property-tested
+//! guarantee (`rust/tests/properties.rs`).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::env::Env;
+use crate::eval::{HeuristicPolicy, PolicyFactory};
+use crate::mcts::common::SearchSpec;
+use crate::mcts::wu_uct::driver::{SearchDriver, TaskSink};
+use crate::mcts::wu_uct::workers::{Pool, Task, TaskResult};
+use crate::service::metrics::{LatencyStats, ServiceMetrics};
+
+/// Shared-pool sizing and defaults for a service instance. Worker counts
+/// are clamped to ≥ 1 at start (a zero-capacity pool could never serve).
+#[derive(Clone)]
+pub struct ServiceConfig {
+    pub expansion_workers: usize,
+    pub simulation_workers: usize,
+    /// Rollout policy every simulation worker uses.
+    pub policy: PolicyFactory,
+    /// Seed for the worker pools' policy streams.
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            expansion_workers: 2,
+            simulation_workers: 8,
+            policy: HeuristicPolicy::factory(),
+            seed: 0,
+        }
+    }
+}
+
+/// Per-session knobs supplied at `open`.
+#[derive(Debug, Clone)]
+pub struct SessionOptions {
+    /// Default simulations per think (0 ⇒ the spec's `max_simulations`).
+    pub think_sims: u32,
+    /// Fair-share weight; a weight-2 session gets twice the worker share
+    /// of a weight-1 session under contention.
+    pub weight: f64,
+    /// Lifetime simulation budget; thinks clip to what remains and error
+    /// once it is exhausted. `None` ⇒ unlimited.
+    pub total_sim_budget: Option<u64>,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions { think_sims: 0, weight: 1.0, total_sim_budget: None }
+    }
+}
+
+/// Reply to a completed think.
+#[derive(Debug, Clone)]
+pub struct ThinkReply {
+    pub action: usize,
+    pub value: f64,
+    pub sims: u32,
+    pub tree_size: usize,
+    pub elapsed_ms: f64,
+    /// `ΣO = 0` after the think (the paper's quiescence invariant).
+    pub quiescent: bool,
+    /// Lifetime simulations left, when a budget was set.
+    pub remaining: Option<u64>,
+}
+
+/// Reply to an `advance`.
+#[derive(Debug, Clone)]
+pub struct AdvanceReply {
+    pub reward: f64,
+    /// Episode finished with this step.
+    pub done: bool,
+    /// On-path subtree (with statistics) carried over as the new root.
+    pub reused: bool,
+    /// Nodes retained by the carry-over.
+    pub retained: usize,
+    /// Environment steps taken so far in this session.
+    pub steps: u64,
+}
+
+/// Reply to a `close`.
+#[derive(Debug, Clone)]
+pub struct CloseReply {
+    pub thinks: u64,
+    pub sims: u64,
+    pub steps: u64,
+    /// Final `ΣO` of the session's tree (must be 0; tested).
+    pub unobserved: u64,
+}
+
+enum Request {
+    Open {
+        env: Box<dyn Env>,
+        spec: SearchSpec,
+        opts: SessionOptions,
+        reply: Sender<u64>,
+    },
+    Think { session: u64, sims: u32, reply: Sender<Result<ThinkReply>> },
+    Advance { session: u64, action: usize, reply: Sender<Result<AdvanceReply>> },
+    Best { session: u64, reply: Sender<Result<usize>> },
+    Close { session: u64, reply: Sender<Result<CloseReply>> },
+    Metrics { reply: Sender<ServiceMetrics> },
+    Shutdown,
+}
+
+enum SchedMsg {
+    Request(Request),
+    Done(TaskResult),
+}
+
+struct ThinkJob {
+    reply: Sender<Result<ThinkReply>>,
+    started: Instant,
+}
+
+struct Session {
+    driver: SearchDriver,
+    thinking: Option<ThinkJob>,
+    /// Virtual deadline for fair scheduling; earliest issues next.
+    deadline: f64,
+    /// Deadline increment per issued rollout (1 / weight).
+    stride: f64,
+    default_sims: u32,
+    remaining: Option<u64>,
+    thinks: u64,
+    sims: u64,
+    steps: u64,
+}
+
+/// Cloneable client handle; every op is a blocking round-trip to the
+/// scheduler thread.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<SchedMsg>,
+}
+
+impl ServiceHandle {
+    fn roundtrip<T>(&self, req: Request, rx: Receiver<T>) -> Result<T> {
+        self.tx
+            .send(SchedMsg::Request(req))
+            .map_err(|_| anyhow!("search service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("search service stopped"))
+    }
+
+    /// Open a session rooted at `env`'s current state.
+    pub fn open(&self, env: Box<dyn Env>, spec: SearchSpec, opts: SessionOptions) -> Result<u64> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Open { env, spec, opts, reply: tx }, rx)
+    }
+
+    /// Run one think (`sims` = 0 ⇒ the session's default budget) and
+    /// block until the search completes.
+    pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Think { session, sims, reply: tx }, rx)?
+    }
+
+    /// Execute `action` in the session's environment, reusing the on-path
+    /// subtree as the new search root.
+    pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Advance { session, action, reply: tx }, rx)?
+    }
+
+    /// Current recommended root action without searching further.
+    pub fn best_action(&self, session: u64) -> Result<usize> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Best { session, reply: tx }, rx)?
+    }
+
+    pub fn close(&self, session: u64) -> Result<CloseReply> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Close { session, reply: tx }, rx)?
+    }
+
+    pub fn metrics(&self) -> Result<ServiceMetrics> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Metrics { reply: tx }, rx)
+    }
+}
+
+/// The service: owns the scheduler thread; dropping shuts it down.
+pub struct SearchService {
+    handle: ServiceHandle,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl SearchService {
+    pub fn start(cfg: ServiceConfig) -> SearchService {
+        let (tx, rx) = channel::<SchedMsg>();
+        // A zero-capacity pool would gate dispatch() shut forever and hang
+        // every think() caller; clamp rather than hand out a dead service.
+        let n_exp = cfg.expansion_workers.max(1);
+        let n_sim = cfg.simulation_workers.max(1);
+        let mut expansion = Pool::new(n_exp, cfg.policy.clone(), cfg.seed ^ 0xe);
+        let mut simulation = Pool::new(n_sim, cfg.policy.clone(), cfg.seed ^ 0x5);
+        // Funnel both pools into the scheduler inbox so the thread blocks
+        // on exactly one channel (std mpsc has no select).
+        for pool in [&mut expansion, &mut simulation] {
+            let results = pool.take_receiver();
+            let inbox = tx.clone();
+            std::thread::spawn(move || {
+                while let Ok(r) = results.recv() {
+                    if inbox.send(SchedMsg::Done(r)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        let thread = std::thread::spawn(move || {
+            Scheduler {
+                expansion,
+                simulation,
+                inbox: rx,
+                sessions: HashMap::new(),
+                routes: HashMap::new(),
+                next_session: 1,
+                next_task: 1,
+                pending_exp: 0,
+                pending_sim: 0,
+                virtual_time: 0.0,
+                opened: 0,
+                closed: 0,
+                thinks: 0,
+                sims: 0,
+                think_latency: LatencyStats::default(),
+                started: Instant::now(),
+            }
+            .run()
+        });
+        SearchService { handle: ServiceHandle { tx }, thread: Some(thread) }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for SearchService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(SchedMsg::Request(Request::Shutdown));
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Scheduler state, owned by its thread.
+struct Scheduler {
+    expansion: Pool,
+    simulation: Pool,
+    inbox: Receiver<SchedMsg>,
+    sessions: HashMap<u64, Session>,
+    /// Global task id → session id.
+    routes: HashMap<u64, u64>,
+    next_session: u64,
+    next_task: u64,
+    pending_exp: usize,
+    pending_sim: usize,
+    virtual_time: f64,
+    opened: u64,
+    closed: u64,
+    thinks: u64,
+    sims: u64,
+    think_latency: LatencyStats,
+    started: Instant,
+}
+
+/// [`TaskSink`] over the shared pools for one session: allocates global
+/// ids, records the route and tracks global in-flight counts.
+struct SharedSink<'a> {
+    expansion: &'a Pool,
+    simulation: &'a Pool,
+    routes: &'a mut HashMap<u64, u64>,
+    next_task: &'a mut u64,
+    pending_exp: &'a mut usize,
+    pending_sim: &'a mut usize,
+    session: u64,
+}
+
+impl SharedSink<'_> {
+    fn next_id(&mut self) -> u64 {
+        let id = *self.next_task;
+        *self.next_task += 1;
+        self.routes.insert(id, self.session);
+        id
+    }
+}
+
+impl TaskSink for SharedSink<'_> {
+    fn submit_expand(&mut self, env: Box<dyn Env>, action: usize, max_width: usize) -> u64 {
+        let id = self.next_id();
+        self.expansion.submit(Task::Expand { task_id: id, env, action, max_width });
+        *self.pending_exp += 1;
+        id
+    }
+
+    fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64 {
+        let id = self.next_id();
+        self.simulation.submit(Task::Simulate { task_id: id, env, gamma, limit });
+        *self.pending_sim += 1;
+        id
+    }
+}
+
+impl Scheduler {
+    fn run(mut self) {
+        loop {
+            let msg = match self.inbox.recv() {
+                Ok(m) => m,
+                Err(_) => return, // every handle dropped
+            };
+            if !self.handle_msg(msg) {
+                return;
+            }
+            // Drain whatever else queued up before refilling the pools.
+            while let Ok(m) = self.inbox.try_recv() {
+                if !self.handle_msg(m) {
+                    return;
+                }
+            }
+            self.dispatch();
+        }
+    }
+
+    /// Returns false on shutdown.
+    fn handle_msg(&mut self, msg: SchedMsg) -> bool {
+        match msg {
+            SchedMsg::Request(req) => self.handle_request(req),
+            SchedMsg::Done(result) => {
+                self.handle_result(result);
+                true
+            }
+        }
+    }
+
+    fn handle_request(&mut self, req: Request) -> bool {
+        match req {
+            Request::Open { env, spec, opts, reply } => {
+                let id = self.next_session;
+                self.next_session += 1;
+                let default_sims = if opts.think_sims > 0 {
+                    opts.think_sims
+                } else {
+                    spec.max_simulations
+                };
+                let session = Session {
+                    driver: SearchDriver::new(spec, env.as_ref()),
+                    thinking: None,
+                    deadline: self.virtual_time,
+                    stride: 1.0 / opts.weight.max(1e-6),
+                    default_sims,
+                    remaining: opts.total_sim_budget,
+                    thinks: 0,
+                    sims: 0,
+                    steps: 0,
+                };
+                self.sessions.insert(id, session);
+                self.opened += 1;
+                let _ = reply.send(id);
+            }
+            Request::Think { session, sims, reply } => {
+                match self.begin_think(session, sims, &reply) {
+                    Ok(()) => {}
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            Request::Advance { session, action, reply } => {
+                let _ = reply.send(self.do_advance(session, action));
+            }
+            Request::Best { session, reply } => {
+                let _ = reply.send(
+                    self.idle_session(session).map(|s| s.driver.best_action()),
+                );
+            }
+            Request::Close { session, reply } => {
+                let _ = reply.send(self.do_close(session));
+            }
+            Request::Metrics { reply } => {
+                let _ = reply.send(self.snapshot());
+            }
+            Request::Shutdown => return false,
+        }
+        true
+    }
+
+    /// Start a think; the reply is deferred until the budget drains.
+    fn begin_think(
+        &mut self,
+        sid: u64,
+        sims: u32,
+        reply: &Sender<Result<ThinkReply>>,
+    ) -> Result<()> {
+        let virtual_time = self.virtual_time;
+        let sess = self
+            .sessions
+            .get_mut(&sid)
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        if sess.thinking.is_some() {
+            bail!("session {sid} already has a think in flight");
+        }
+        let mut budget = if sims > 0 { sims } else { sess.default_sims };
+        if let Some(rem) = sess.remaining {
+            if rem == 0 {
+                bail!("session {sid} has exhausted its simulation budget");
+            }
+            budget = budget.min(rem.min(u32::MAX as u64) as u32);
+        }
+        sess.driver.begin(budget);
+        // A session that was idle re-enters the race at the current
+        // virtual time (it must not hoard credit accrued while idle).
+        sess.deadline = sess.deadline.max(virtual_time);
+        sess.thinking = Some(ThinkJob { reply: reply.clone(), started: Instant::now() });
+        if sess.driver.done() {
+            self.finish_think(sid);
+        }
+        Ok(())
+    }
+
+    fn do_advance(&mut self, sid: u64, action: usize) -> Result<AdvanceReply> {
+        let sess = self.idle_session(sid)?;
+        let out = sess.driver.advance(action)?;
+        sess.steps += 1;
+        Ok(AdvanceReply {
+            reward: out.step.reward,
+            done: out.step.done || sess.driver.env().is_terminal(),
+            reused: out.reused,
+            retained: out.retained,
+            steps: sess.steps,
+        })
+    }
+
+    fn do_close(&mut self, sid: u64) -> Result<CloseReply> {
+        self.idle_session(sid)?; // reject while a think is in flight
+        let sess = self.sessions.remove(&sid).expect("checked above");
+        self.closed += 1;
+        Ok(CloseReply {
+            thinks: sess.thinks,
+            sims: sess.sims,
+            steps: sess.steps,
+            unobserved: sess.driver.tree().total_unobserved(),
+        })
+    }
+
+    /// The session, provided it exists and has no think in flight.
+    fn idle_session(&mut self, sid: u64) -> Result<&mut Session> {
+        let sess = self
+            .sessions
+            .get_mut(&sid)
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        if sess.thinking.is_some() {
+            bail!("session {sid} has a think in flight");
+        }
+        Ok(sess)
+    }
+
+    /// Route a pool result to its session and absorb it.
+    fn handle_result(&mut self, result: TaskResult) {
+        let task_id = match &result {
+            TaskResult::Expanded(r) => r.task_id,
+            TaskResult::Simulated(r) => r.task_id,
+        };
+        match &result {
+            TaskResult::Expanded(_) => self.pending_exp -= 1,
+            TaskResult::Simulated(_) => self.pending_sim -= 1,
+        }
+        let Some(sid) = self.routes.remove(&task_id) else {
+            // Session vanished mid-flight (cannot happen: close requires
+            // quiescence) — drop defensively rather than poison the loop.
+            return;
+        };
+        let Some(sess) = self.sessions.get_mut(&sid) else { return };
+        let mut sink = SharedSink {
+            expansion: &self.expansion,
+            simulation: &self.simulation,
+            routes: &mut self.routes,
+            next_task: &mut self.next_task,
+            pending_exp: &mut self.pending_exp,
+            pending_sim: &mut self.pending_sim,
+            session: sid,
+        };
+        sess.driver.absorb(result, &mut sink);
+        if sess.thinking.is_some() && sess.driver.done() {
+            self.finish_think(sid);
+        }
+    }
+
+    /// Fill free worker slots: repeatedly let the thinking session with
+    /// the earliest virtual deadline issue one rollout.
+    fn dispatch(&mut self) {
+        loop {
+            // A rollout's kind is unknown until selection runs, so the
+            // gate cannot be exact per pool. Requiring headroom in BOTH
+            // pools (the dedicated master's gate) would let a saturated
+            // 2-worker expansion pool stall simulation-bound rollouts for
+            // every session and idle the whole simulation fleet. Instead:
+            // always require a free simulation slot (every rollout ends
+            // in a simulation), and let the expansion backlog run ahead
+            // of its pool by at most the free simulation capacity —
+            // bounded in-flight work without cross-pool head-of-line
+            // blocking.
+            let free_sim = self.simulation.capacity().saturating_sub(self.pending_sim);
+            if free_sim == 0 || self.pending_exp >= self.expansion.capacity() + free_sim {
+                return;
+            }
+            let Some(sid) = self
+                .sessions
+                .iter()
+                .filter(|(_, s)| s.thinking.is_some() && s.driver.can_issue())
+                .min_by(|a, b| {
+                    a.1.deadline
+                        .partial_cmp(&b.1.deadline)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .map(|(&id, _)| id)
+            else {
+                return;
+            };
+            let sess = self.sessions.get_mut(&sid).expect("picked above");
+            self.virtual_time = sess.deadline;
+            sess.deadline += sess.stride;
+            let mut sink = SharedSink {
+                expansion: &self.expansion,
+                simulation: &self.simulation,
+                routes: &mut self.routes,
+                next_task: &mut self.next_task,
+                pending_exp: &mut self.pending_exp,
+                pending_sim: &mut self.pending_sim,
+                session: sid,
+            };
+            sess.driver.issue(&mut sink);
+            // Terminal short-circuits can complete a think synchronously.
+            if sess.driver.done() {
+                self.finish_think(sid);
+            }
+        }
+    }
+
+    /// Complete a think: record metrics and send the deferred reply.
+    fn finish_think(&mut self, sid: u64) {
+        let Some(sess) = self.sessions.get_mut(&sid) else { return };
+        let Some(job) = sess.thinking.take() else { return };
+        sess.driver.assert_quiescent();
+        let sims = sess.driver.completed();
+        sess.thinks += 1;
+        sess.sims += sims as u64;
+        if let Some(rem) = sess.remaining.as_mut() {
+            *rem = rem.saturating_sub(sims as u64);
+        }
+        self.thinks += 1;
+        self.sims += sims as u64;
+        let elapsed = job.started.elapsed();
+        self.think_latency.record(elapsed);
+        let reply = ThinkReply {
+            action: sess.driver.best_action(),
+            value: sess.driver.root_value(),
+            sims,
+            tree_size: sess.driver.tree().len(),
+            elapsed_ms: elapsed.as_secs_f64() * 1e3,
+            quiescent: sess.driver.tree().total_unobserved() == 0,
+            remaining: sess.remaining,
+        };
+        let _ = job.reply.send(Ok(reply));
+    }
+
+    fn snapshot(&self) -> ServiceMetrics {
+        let uptime = self.started.elapsed();
+        let secs = uptime.as_secs_f64().max(1e-9);
+        let (think_ms_mean, think_ms_p50, think_ms_p90, think_ms_p99) =
+            self.think_latency.summary_ms();
+        ServiceMetrics {
+            uptime,
+            sessions_open: self.sessions.len(),
+            sessions_opened: self.opened,
+            sessions_closed: self.closed,
+            thinks: self.thinks,
+            sims: self.sims,
+            sessions_per_sec: self.closed as f64 / secs,
+            thinks_per_sec: self.thinks as f64 / secs,
+            sims_per_sec: self.sims as f64 / secs,
+            think_ms_mean,
+            think_ms_p50,
+            think_ms_p90,
+            think_ms_p99,
+            exp_occupancy: self.expansion.breakdown().occupancy(),
+            sim_occupancy: self.simulation.breakdown().occupancy(),
+            expansion_workers: self.expansion.capacity(),
+            simulation_workers: self.simulation.capacity(),
+            pending_expansions: self.pending_exp,
+            pending_simulations: self.pending_sim,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+
+    fn quick_spec(seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: 16,
+            rollout_limit: 8,
+            max_depth: 10,
+            seed,
+            ..SearchSpec::default()
+        }
+    }
+
+    fn garnet(seed: u64) -> Box<dyn Env> {
+        Box::new(Garnet::new(15, 3, 20, 0.0, seed))
+    }
+
+    #[test]
+    fn open_think_advance_close_lifecycle() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        });
+        let h = service.handle();
+        let sid = h.open(garnet(1), quick_spec(1), SessionOptions::default()).unwrap();
+        let think = h.think(sid, 0).unwrap();
+        assert_eq!(think.sims, 16);
+        assert!(think.quiescent);
+        assert!(think.tree_size > 1);
+        let adv = h.advance(sid, think.action).unwrap();
+        assert!(adv.reward.is_finite());
+        assert_eq!(adv.steps, 1);
+        let best = h.best_action(sid).unwrap();
+        let _ = best; // may be the fallback on a freshly advanced tree
+        let close = h.close(sid).unwrap();
+        assert_eq!(close.thinks, 1);
+        assert_eq!(close.sims, 16);
+        assert_eq!(close.unobserved, 0);
+    }
+
+    #[test]
+    fn unknown_session_errors() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 1,
+            ..Default::default()
+        });
+        let h = service.handle();
+        assert!(h.think(99, 4).is_err());
+        assert!(h.advance(99, 0).is_err());
+        assert!(h.close(99).is_err());
+    }
+
+    #[test]
+    fn lifetime_budget_clips_and_exhausts() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        });
+        let h = service.handle();
+        let opts = SessionOptions { total_sim_budget: Some(20), ..Default::default() };
+        let sid = h.open(garnet(2), quick_spec(2), opts).unwrap();
+        let t1 = h.think(sid, 16).unwrap();
+        assert_eq!(t1.sims, 16);
+        assert_eq!(t1.remaining, Some(4));
+        let t2 = h.think(sid, 16).unwrap();
+        assert_eq!(t2.sims, 4, "clipped to the remaining budget");
+        assert_eq!(t2.remaining, Some(0));
+        assert!(h.think(sid, 1).is_err(), "budget exhausted");
+        h.close(sid).unwrap();
+    }
+
+    #[test]
+    fn concurrent_sessions_share_the_pools() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 2,
+            simulation_workers: 4,
+            ..Default::default()
+        });
+        let n = 8;
+        let mut joins = Vec::new();
+        for i in 0..n {
+            let h = service.handle();
+            joins.push(std::thread::spawn(move || {
+                let sid = h
+                    .open(garnet(i as u64), quick_spec(i as u64), SessionOptions::default())
+                    .unwrap();
+                let mut total = 0.0;
+                for _ in 0..5 {
+                    let t = h.think(sid, 12).unwrap();
+                    assert!(t.quiescent, "per-session ΣO must drain between thinks");
+                    let adv = h.advance(sid, t.action).unwrap();
+                    total += adv.reward;
+                    if adv.done {
+                        break;
+                    }
+                }
+                let close = h.close(sid).unwrap();
+                assert_eq!(close.unobserved, 0);
+                total
+            }));
+        }
+        for j in joins {
+            assert!(j.join().unwrap().is_finite());
+        }
+        let m = service.handle().metrics().unwrap();
+        assert_eq!(m.sessions_opened, n);
+        assert_eq!(m.sessions_closed, n);
+        assert_eq!(m.sessions_open, 0);
+        assert!(m.thinks >= n);
+        assert!(m.sims > 0);
+        assert!(m.think_ms_p99 >= m.think_ms_p50);
+    }
+
+    #[test]
+    fn metrics_snapshot_is_sane_when_idle() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 1,
+            ..Default::default()
+        });
+        let m = service.handle().metrics().unwrap();
+        assert_eq!(m.sessions_open, 0);
+        assert_eq!(m.pending_expansions, 0);
+        assert_eq!(m.pending_simulations, 0);
+        assert_eq!(m.expansion_workers, 1);
+        assert_eq!(m.simulation_workers, 1);
+    }
+}

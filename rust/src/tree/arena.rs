@@ -2,7 +2,7 @@
 //!
 //! Nodes live in a flat `Vec` and refer to each other by [`NodeId`]; this
 //! keeps the selection hot loop allocation-free and cache-friendly (see
-//! EXPERIMENTS.md §Perf) and sidesteps ownership cycles entirely.
+//! DESIGN.md §Perf) and sidesteps ownership cycles entirely.
 
 use crate::tree::node::{Node, NodeId};
 
@@ -129,6 +129,51 @@ impl Tree {
         self.nodes.iter().map(|n| n.o as u64).sum()
     }
 
+    /// Re-root the tree at the root's child reached by `action`, discarding
+    /// every off-path subtree and preserving the retained nodes' full
+    /// statistics ({N, V, O}, rewards, untried lists, stored snapshots).
+    /// Depths are rebased so the new root sits at depth 0 (the depth cap
+    /// keeps meaning "plies below the current root" across moves).
+    ///
+    /// Returns the retained node count, or `None` when `action` was never
+    /// expanded — the caller then starts a fresh tree. Must only be called
+    /// at quiescence (no in-flight rollouts, i.e. `ΣO` on discarded paths
+    /// would otherwise leak).
+    pub fn advance_root(&mut self, action: usize) -> Option<usize> {
+        let new_root = self.nodes[Self::ROOT].child_for(action)?;
+        // BFS over the retained subtree, building old-id → new-id.
+        const UNMAPPED: usize = usize::MAX;
+        let mut map = vec![UNMAPPED; self.nodes.len()];
+        let mut order = vec![new_root];
+        map[new_root] = 0;
+        let mut i = 0;
+        while i < order.len() {
+            let old = order[i];
+            i += 1;
+            for &(_, c) in &self.nodes[old].children {
+                map[c] = order.len();
+                order.push(c);
+            }
+        }
+        let depth_base = self.nodes[new_root].depth;
+        let mut kept = Vec::with_capacity(order.len());
+        for &old in &order {
+            // Move nodes out (snapshots can be large; no clones).
+            let mut n = std::mem::replace(&mut self.nodes[old], Node::new(None, 0, 0));
+            n.parent = n.parent.map(|p| map[p]);
+            for (_, c) in n.children.iter_mut() {
+                *c = map[*c];
+            }
+            n.depth -= depth_base;
+            kept.push(n);
+        }
+        kept[0].parent = None;
+        kept[0].action = 0;
+        kept[0].reward = 0.0;
+        self.nodes = kept;
+        Some(self.nodes.len())
+    }
+
     /// Iterate over all nodes with ids.
     pub fn iter(&self) -> impl Iterator<Item = (NodeId, &Node)> {
         self.nodes.iter().enumerate()
@@ -235,6 +280,59 @@ mod tests {
         let mut t = Tree::new();
         let a = t.add_child(Tree::ROOT, 0);
         t.node_mut(a).n = 5; // parent root still has N=0
+        t.check_invariants();
+    }
+
+    #[test]
+    fn advance_root_keeps_subtree_stats_and_rebases_depth() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(Tree::ROOT, 1);
+        let c = t.add_child(a, 2);
+        t.node_mut(a).n = 7;
+        t.node_mut(a).v = 1.25;
+        t.node_mut(a).untried = vec![5, 6];
+        t.node_mut(b).n = 3;
+        t.node_mut(c).n = 4;
+        t.node_mut(c).v = -0.5;
+        t.node_mut(c).reward = 2.0;
+        let kept = t.advance_root(0);
+        assert_eq!(kept, Some(2), "a and c survive, b is discarded");
+        assert_eq!(t.len(), 2);
+        let root = t.node(Tree::ROOT);
+        assert_eq!(root.parent, None);
+        assert_eq!(root.n, 7);
+        assert_eq!(root.v, 1.25);
+        assert_eq!(root.untried, vec![5, 6]);
+        assert_eq!(root.depth, 0);
+        let c_new = root.child_for(2).expect("kept child");
+        assert_eq!(t.node(c_new).n, 4);
+        assert_eq!(t.node(c_new).v, -0.5);
+        assert_eq!(t.node(c_new).reward, 2.0);
+        assert_eq!(t.node(c_new).depth, 1);
+        assert_eq!(t.node(c_new).parent, Some(Tree::ROOT));
+        t.check_invariants();
+    }
+
+    #[test]
+    fn advance_root_unexpanded_action_returns_none() {
+        let mut t = Tree::new();
+        t.add_child(Tree::ROOT, 0);
+        assert_eq!(t.advance_root(3), None);
+        assert_eq!(t.len(), 2, "tree untouched on miss");
+    }
+
+    #[test]
+    fn advance_root_twice_walks_a_path() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 1);
+        let b = t.add_child(a, 4);
+        t.add_child(b, 2);
+        t.node_mut(b).n = 9;
+        assert_eq!(t.advance_root(1), Some(3));
+        assert_eq!(t.advance_root(4), Some(2));
+        assert_eq!(t.node(Tree::ROOT).n, 9);
+        assert_eq!(t.max_depth(), 1);
         t.check_invariants();
     }
 

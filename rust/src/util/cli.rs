@@ -99,6 +99,12 @@ impl Args {
             .with_context(|| format!("--{name} must be a u64"))
     }
 
+    pub fn u32(&self, name: &str) -> Result<u32> {
+        self.str(name)?
+            .parse()
+            .with_context(|| format!("--{name} must be a u32"))
+    }
+
     pub fn f64(&self, name: &str) -> Result<f64> {
         self.str(name)?
             .parse()
@@ -160,6 +166,7 @@ mod tests {
         let a = Args::parse(["--workers", "4", "--seed=9"], &specs()).unwrap();
         assert_eq!(a.usize("workers").unwrap(), 4);
         assert_eq!(a.u64("seed").unwrap(), 9);
+        assert_eq!(a.u32("workers").unwrap(), 4);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::time::Duration;
 use wu_uct::env::tapgame::{Level, TapGame};
 use wu_uct::env::{atari, Env, SlowEnv};
 use wu_uct::gameplay::{mean_reward, play_episodes};
-use wu_uct::mcts::{by_name, LeafP, Search, SearchSpec, SequentialUct, TreeP, WuUct};
+use wu_uct::mcts::{by_name, LeafP, Search, SearchSpec, SequentialUct, TreeP, WuUct, ALGORITHMS};
 use wu_uct::util::timer::Phase;
 
 fn mini_spec(seed: u64) -> SearchSpec {
@@ -23,8 +23,8 @@ fn all_algorithms_play_all_games_sane() {
     // Smoke matrix: every algorithm completes an episode prefix on every
     // game without panicking and returns finite reward.
     for game in ["Alien", "Breakout", "Freeway", "Boxing", "RoadRunner"] {
-        for algo in ["WU-UCT", "UCT", "LeafP", "TreeP", "RootP"] {
-            let mut s = by_name(algo, mini_spec(1), 2);
+        for algo in ALGORITHMS {
+            let mut s = by_name(algo, mini_spec(1), 2).expect("known algorithm");
             let mut env = atari::make(game, 1);
             let rs = play_episodes(s.as_mut(), env.as_mut(), 3, 1, 8);
             assert!(
@@ -161,7 +161,7 @@ fn network_policy_search_end_to_end() {
 
 #[test]
 fn tap_game_full_episode_with_every_algorithm() {
-    for algo in ["WU-UCT", "UCT", "LeafP", "TreeP", "RootP"] {
+    for algo in ALGORITHMS {
         let mut s = by_name(
             algo,
             SearchSpec {
@@ -171,7 +171,8 @@ fn tap_game_full_episode_with_every_algorithm() {
                 ..SearchSpec::tap_game()
             },
             2,
-        );
+        )
+        .expect("known algorithm");
         let mut game = TapGame::new(Level::level35(), 8);
         while !game.is_terminal() {
             let r = s.search(&game);

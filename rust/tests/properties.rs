@@ -5,6 +5,7 @@ use wu_uct::env::garnet::Garnet;
 use wu_uct::env::{atari, Env};
 use wu_uct::mcts::common::{backprop, SearchSpec};
 use wu_uct::mcts::{Search, SearchSpec as Spec, SequentialUct, WuUct};
+use wu_uct::service::{SearchService, ServiceConfig, SessionOptions};
 use wu_uct::tree::{select_child, ScoreMode, Tree};
 use wu_uct::util::proptest::{check, Gen};
 use wu_uct::util::stats::{paired_t_test, t_two_sided_p};
@@ -204,6 +205,112 @@ fn prop_t_distribution_p_monotone_in_t() {
         let t1 = g.f64(0.0, 5.0);
         let t2 = t1 + g.f64(0.01, 5.0);
         t_two_sided_p(t2, df) <= t_two_sided_p(t1, df) + 1e-12
+    });
+}
+
+#[test]
+fn prop_advance_root_preserves_subtree_statistics() {
+    // Re-rooting at a child keeps the retained subtree's {N, V, O},
+    // rewards and shape bit-for-bit, rebased to depth 0.
+    check("advance_root preserves stats", 60, |g| {
+        let mut tree = random_tree(g);
+        // Give the tree coherent statistics via real backprops, plus some
+        // in-flight O marks that advance_root must carry over verbatim.
+        let ids: Vec<usize> = tree.iter().map(|(id, _)| id).collect();
+        for _ in 0..g.usize(1, 25) {
+            let node = *g.pick(&ids);
+            backprop(&mut tree, node, g.f64(-2.0, 2.0), g.f64(0.5, 1.0));
+        }
+        for &id in &ids {
+            tree.node_mut(id).reward = g.f64(-1.0, 1.0);
+            tree.node_mut(id).o = g.u32(0, 2);
+        }
+        let root_children = tree.node(Tree::ROOT).children.clone();
+        if root_children.is_empty() {
+            return true; // nothing to advance into
+        }
+        let &(action, child) = g.pick(&root_children);
+        // Expected: the child subtree, collected before the move.
+        let mut expect_n = 0u64;
+        let mut expect_o = 0u64;
+        let mut count = 0usize;
+        let mut stack = vec![child];
+        while let Some(id) = stack.pop() {
+            let n = tree.node(id);
+            expect_n += n.n as u64;
+            expect_o += n.o as u64;
+            count += 1;
+            stack.extend(n.children.iter().map(|&(_, c)| c));
+        }
+        let (child_n, child_v, child_o) =
+            (tree.node(child).n, tree.node(child).v, tree.node(child).o);
+        let retained = tree.advance_root(action);
+        if retained != Some(count) {
+            return false;
+        }
+        let root = tree.node(Tree::ROOT);
+        if root.parent.is_some() || root.depth != 0 {
+            return false;
+        }
+        if root.n != child_n || root.v != child_v || root.o != child_o {
+            return false;
+        }
+        let total_n: u64 = tree.iter().map(|(_, n)| n.n as u64).sum();
+        let total_o: u64 = tree.iter().map(|(_, n)| n.o as u64).sum();
+        if total_n != expect_n || total_o != expect_o || tree.len() != count {
+            return false;
+        }
+        tree.check_invariants();
+        true
+    });
+}
+
+#[test]
+fn prop_interleaved_sessions_quiesce_over_shared_pools() {
+    // The paper's ΣO = 0 invariant, per session, when several sessions'
+    // rollouts interleave arbitrarily over one shared worker fleet.
+    check("per-session O drains over shared pools", 5, |g| {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: g.usize(1, 2),
+            simulation_workers: g.usize(2, 4),
+            ..ServiceConfig::default()
+        });
+        let n_sessions = g.usize(2, 5);
+        let seeds: Vec<u64> = (0..n_sessions).map(|_| g.u64()).collect();
+        let budgets: Vec<u32> = (0..n_sessions).map(|_| g.u32(4, 40)).collect();
+        let ok = std::thread::scope(|scope| {
+            let joins: Vec<_> = seeds
+                .iter()
+                .zip(&budgets)
+                .map(|(&seed, &budget)| {
+                    let h = service.handle();
+                    scope.spawn(move || {
+                        let env = Box::new(Garnet::new(12, 3, 20, 0.0, seed));
+                        let spec = Spec {
+                            max_simulations: budget,
+                            rollout_limit: 6,
+                            max_depth: 8,
+                            seed,
+                            ..Spec::default()
+                        };
+                        let sid = h.open(env, spec, SessionOptions::default()).unwrap();
+                        let mut quiescent = true;
+                        for _ in 0..3 {
+                            let t = h.think(sid, budget).unwrap();
+                            quiescent &= t.quiescent && t.sims == budget;
+                            let adv = h.advance(sid, t.action).unwrap();
+                            if adv.done {
+                                break;
+                            }
+                        }
+                        let close = h.close(sid).unwrap();
+                        quiescent && close.unobserved == 0
+                    })
+                })
+                .collect();
+            joins.into_iter().all(|j| j.join().expect("session thread panicked"))
+        });
+        ok
     });
 }
 

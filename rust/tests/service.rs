@@ -1,0 +1,219 @@
+//! Integration tests for the multi-session search service — including the
+//! headline acceptance criterion: ≥ 32 concurrent sessions over shared
+//! pools, each episode's return within noise of a dedicated-pool WU-UCT
+//! baseline on the same seeds, with per-session quiescence (`ΣO = 0`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use wu_uct::env::garnet::Garnet;
+use wu_uct::env::Env;
+use wu_uct::mcts::{Search, SearchSpec, WuUct};
+use wu_uct::service::json::Json;
+use wu_uct::service::{
+    SearchService, ServiceConfig, SessionOptions, TcpServer,
+};
+use wu_uct::util::stats::{mean, std_dev};
+
+const SIMS: u32 = 24;
+const MAX_STEPS: usize = 30;
+
+fn episode_spec(seed: u64) -> SearchSpec {
+    SearchSpec {
+        max_simulations: SIMS,
+        rollout_limit: 8,
+        max_depth: 12,
+        seed,
+        ..SearchSpec::default()
+    }
+}
+
+fn garnet(seed: u64) -> Garnet {
+    // Must match the protocol's "garnet" construction (service::proto).
+    Garnet::new(15, 3, 30, 0.0, seed)
+}
+
+/// Classic one-user-per-pool-set episode: the quality baseline.
+fn dedicated_episode(seed: u64) -> f64 {
+    let mut env = garnet(seed);
+    let mut search = WuUct::new(episode_spec(seed), 1, 2);
+    let mut total = 0.0;
+    for _ in 0..MAX_STEPS {
+        if env.is_terminal() {
+            break;
+        }
+        let r = search.search(&env);
+        let legal = env.legal_actions();
+        let a = if legal.contains(&r.best_action) { r.best_action } else { legal[0] };
+        let step = env.step(a);
+        total += step.reward;
+        if step.done {
+            break;
+        }
+    }
+    total
+}
+
+fn request(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, line: &str) -> Json {
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let v = Json::parse(reply.trim()).expect("valid json reply");
+    assert_eq!(
+        v.get("ok").and_then(|o| o.as_bool()),
+        Some(true),
+        "server error on {line}: {reply}"
+    );
+    v
+}
+
+/// One full episode through the TCP protocol; returns the episode reward.
+/// Asserts the per-session quiescence invariant after every think and at
+/// close.
+fn served_episode(addr: &str, seed: u64) -> f64 {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let v = request(
+        &mut reader,
+        &mut writer,
+        &format!(
+            r#"{{"op":"open","env":"garnet","seed":{seed},"sims":{SIMS},"rollout":8,"depth":12}}"#
+        ),
+    );
+    let sid = v.get("session").unwrap().as_u64().unwrap();
+    let mut total = 0.0;
+    for _ in 0..MAX_STEPS {
+        let t = request(&mut reader, &mut writer, &format!(r#"{{"op":"think","session":{sid}}}"#));
+        assert_eq!(
+            t.get("quiescent").unwrap().as_bool(),
+            Some(true),
+            "ΣO != 0 after a think on session {sid}"
+        );
+        let action = t.get("action").unwrap().as_u64().unwrap();
+        let a = request(
+            &mut reader,
+            &mut writer,
+            &format!(r#"{{"op":"advance","session":{sid},"action":{action}}}"#),
+        );
+        total += a.get("reward").unwrap().as_f64().unwrap();
+        if a.get("done").unwrap().as_bool() == Some(true) {
+            break;
+        }
+    }
+    let c = request(&mut reader, &mut writer, &format!(r#"{{"op":"close","session":{sid}}}"#));
+    assert_eq!(c.get("unobserved").unwrap().as_u64(), Some(0), "ΣO != 0 at close");
+    total
+}
+
+#[test]
+fn serve_32_concurrent_sessions_matches_dedicated_baseline() {
+    const SESSIONS: usize = 32;
+    let seeds: Vec<u64> = (0..SESSIONS as u64).map(|i| 1000 + i * 7919).collect();
+
+    // Baseline: each seed planned with its own dedicated pools.
+    let dedicated: Vec<f64> = seeds.iter().map(|&s| dedicated_episode(s)).collect();
+
+    // Service: the same seeds, all sharing 2 + 8 workers.
+    let service = SearchService::start(ServiceConfig {
+        expansion_workers: 2,
+        simulation_workers: 8,
+        ..ServiceConfig::default()
+    });
+    let server = TcpServer::bind(service.handle(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let served: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = seeds
+            .iter()
+            .map(|&s| {
+                let addr = addr.clone();
+                scope.spawn(move || served_episode(&addr, s))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+    });
+
+    let m = service.handle().metrics().unwrap();
+    assert_eq!(m.sessions_opened, SESSIONS as u64);
+    assert_eq!(m.sessions_closed, SESSIONS as u64, "every session closed cleanly");
+    assert!(m.thinks >= SESSIONS as u64);
+
+    // Quality parity: same seeds, same budgets — the shared-pool mean must
+    // sit within search noise of the dedicated-pool mean. Both planners
+    // are stochastic, so "noise" is measured from the baseline's own
+    // spread across seeds.
+    let md = mean(&dedicated);
+    let ms = mean(&served);
+    let sd = std_dev(&dedicated).max(std_dev(&served));
+    let tolerance = 0.75 * sd + 0.10 * md.abs() + 0.5;
+    assert!(
+        (md - ms).abs() <= tolerance,
+        "shared-pool mean {ms:.3} vs dedicated mean {md:.3} (tolerance {tolerance:.3})"
+    );
+}
+
+#[test]
+fn tree_reuse_carries_statistics_across_moves() {
+    // In-process: think hard, advance along the chosen action, and verify
+    // the next root starts warm (subtree was reused, not rebuilt).
+    let service = SearchService::start(ServiceConfig {
+        expansion_workers: 1,
+        simulation_workers: 4,
+        ..ServiceConfig::default()
+    });
+    let h = service.handle();
+    let env = Box::new(garnet(7));
+    let sid = h.open(env, episode_spec(7), SessionOptions::default()).unwrap();
+    let t = h.think(sid, 64).unwrap();
+    assert!(t.tree_size > 2);
+    let adv = h.advance(sid, t.action).unwrap();
+    assert!(adv.reused, "the searched best action must have an expanded subtree");
+    assert!(adv.retained > 0);
+    // A follow-up think still works and stays quiescent on the reused tree.
+    let t2 = h.think(sid, 16).unwrap();
+    assert!(t2.quiescent);
+    let c = h.close(sid).unwrap();
+    assert_eq!(c.unobserved, 0);
+    assert_eq!(c.thinks, 2);
+}
+
+#[test]
+fn fair_scheduling_serves_unequal_budgets_concurrently() {
+    // A big-budget session must not starve small-budget sessions: open one
+    // heavy and several light sessions simultaneously; all must finish.
+    let service = SearchService::start(ServiceConfig {
+        expansion_workers: 1,
+        simulation_workers: 2,
+        ..ServiceConfig::default()
+    });
+    std::thread::scope(|scope| {
+        let heavy = service.handle();
+        scope.spawn(move || {
+            let sid = heavy
+                .open(Box::new(garnet(50)), episode_spec(50), SessionOptions::default())
+                .unwrap();
+            let t = heavy.think(sid, 400).unwrap();
+            assert_eq!(t.sims, 400);
+            heavy.close(sid).unwrap();
+        });
+        for i in 0..4 {
+            let light = service.handle();
+            scope.spawn(move || {
+                let seed = 60 + i;
+                let sid = light
+                    .open(Box::new(garnet(seed)), episode_spec(seed), SessionOptions::default())
+                    .unwrap();
+                for _ in 0..3 {
+                    let t = light.think(sid, 8).unwrap();
+                    assert!(t.quiescent);
+                }
+                light.close(sid).unwrap();
+            });
+        }
+    });
+    let m = service.handle().metrics().unwrap();
+    assert_eq!(m.sessions_closed, 5);
+    assert_eq!(m.sims, 400 + 4 * 3 * 8);
+}
