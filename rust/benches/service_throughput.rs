@@ -1,11 +1,17 @@
 //! Service throughput bench: episodes/sec and think latency as the number
-//! of concurrent sessions grows over a fixed shared worker fleet.
+//! of concurrent sessions and scheduler shards grow over a fixed-size
+//! per-shard worker fleet.
 //!
-//! Emits one machine-readable JSON perf record per concurrency level (the
-//! BENCH trajectory format), plus a human summary line:
+//! Sweeps shards × sessions. The acceptance bar for the sharded service
+//! is that on a multi-core host, `--shards 4` beats `--shards 1` by
+//! ≥ 1.5× session throughput at high concurrency (the scheduler thread —
+//! not the pools — is the single-shard bottleneck the shards remove).
+//!
+//! Emits one machine-readable JSON perf record per cell (the BENCH
+//! trajectory format), plus a human summary line:
 //!
 //! ```text
-//! {"bench":"service_throughput","sessions":8,"sessions_per_sec":...,...}
+//! {"bench":"service_throughput","shards":4,"sessions":32,"sessions_per_sec":...,...}
 //! ```
 
 use std::time::Instant;
@@ -14,9 +20,10 @@ use wu_uct::bench::paper_scale;
 use wu_uct::env::garnet::Garnet;
 use wu_uct::mcts::SearchSpec;
 use wu_uct::service::json::{obj, Json};
-use wu_uct::service::{SearchService, ServiceConfig, SessionOptions};
+use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, SessionOptions};
 
 struct Cell {
+    shards: usize,
     sessions: usize,
     episodes_per_sec: f64,
     thinks_per_sec: f64,
@@ -24,13 +31,25 @@ struct Cell {
     mean_think_ms: f64,
     p99_think_ms: f64,
     sim_occupancy: f64,
+    sims_stolen: u64,
 }
 
-fn run_cell(sessions: usize, thinks_per_episode: u32, sims_per_think: u32) -> Cell {
-    let service = SearchService::start(ServiceConfig {
-        expansion_workers: 2,
-        simulation_workers: 8,
-        ..ServiceConfig::default()
+fn run_cell(
+    shards: usize,
+    exp_per_shard: usize,
+    sim_per_shard: usize,
+    sessions: usize,
+    thinks_per_episode: u32,
+    sims_per_think: u32,
+) -> Cell {
+    let service = ShardedService::start(ShardedConfig {
+        shards,
+        shard: ServiceConfig {
+            expansion_workers: exp_per_shard,
+            simulation_workers: sim_per_shard,
+            ..ServiceConfig::default()
+        },
+        ..ShardedConfig::default()
     });
     let spec = SearchSpec {
         max_simulations: sims_per_think,
@@ -60,6 +79,7 @@ fn run_cell(sessions: usize, thinks_per_episode: u32, sims_per_think: u32) -> Ce
     let elapsed = start.elapsed().as_secs_f64();
     let m = service.handle().metrics().expect("metrics");
     Cell {
+        shards,
         sessions,
         episodes_per_sec: sessions as f64 / elapsed,
         thinks_per_sec: m.thinks as f64 / elapsed,
@@ -67,36 +87,83 @@ fn run_cell(sessions: usize, thinks_per_episode: u32, sims_per_think: u32) -> Ce
         mean_think_ms: m.think_ms_mean,
         p99_think_ms: m.think_ms_p99,
         sim_occupancy: m.sim_occupancy,
+        sims_stolen: m.sims_stolen,
     }
+}
+
+fn emit(cell: &Cell, fleet: &str) {
+    let record = obj([
+        ("bench", Json::Str("service_throughput".into())),
+        ("fleet", Json::Str(fleet.into())),
+        ("shards", Json::Num(cell.shards as f64)),
+        ("sessions", Json::Num(cell.sessions as f64)),
+        ("sessions_per_sec", Json::Num(cell.episodes_per_sec)),
+        ("thinks_per_sec", Json::Num(cell.thinks_per_sec)),
+        ("sims_per_sec", Json::Num(cell.sims_per_sec)),
+        ("mean_think_ms", Json::Num(cell.mean_think_ms)),
+        ("p99_think_ms", Json::Num(cell.p99_think_ms)),
+        ("sim_occupancy", Json::Num(cell.sim_occupancy)),
+        ("sims_stolen", Json::Num(cell.sims_stolen as f64)),
+    ]);
+    println!("{}", record.render());
+    println!(
+        "  [{fleet}] {} shard(s) x {} sessions: {:.2} episodes/s, {:.1} thinks/s, \
+         think mean {:.2} ms (p99 {:.2} ms), occupancy {:.0}%, stolen {}",
+        cell.shards,
+        cell.sessions,
+        cell.episodes_per_sec,
+        cell.thinks_per_sec,
+        cell.mean_think_ms,
+        cell.p99_think_ms,
+        100.0 * cell.sim_occupancy,
+        cell.sims_stolen,
+    );
 }
 
 fn main() {
     let (thinks, sims) = if paper_scale() { (25, 128) } else { (10, 32) };
     println!(
-        "service_throughput: 2 expansion + 8 simulation workers shared; \
-         {thinks} thinks/episode x {sims} sims/think"
+        "service_throughput: {thinks} thinks/episode x {sims} sims/think; \
+         per-shard fleet = 2 expansion + 8 simulation workers"
     );
-    for sessions in [1usize, 8, 32] {
-        let cell = run_cell(sessions, thinks, sims);
-        let record = obj([
-            ("bench", Json::Str("service_throughput".into())),
-            ("sessions", Json::Num(cell.sessions as f64)),
-            ("sessions_per_sec", Json::Num(cell.episodes_per_sec)),
-            ("thinks_per_sec", Json::Num(cell.thinks_per_sec)),
-            ("sims_per_sec", Json::Num(cell.sims_per_sec)),
-            ("mean_think_ms", Json::Num(cell.mean_think_ms)),
-            ("p99_think_ms", Json::Num(cell.p99_think_ms)),
-            ("sim_occupancy", Json::Num(cell.sim_occupancy)),
-        ]);
-        println!("{}", record.render());
-        println!(
-            "  {} sessions: {:.2} episodes/s, {:.1} thinks/s, think mean {:.2} ms (p99 {:.2} ms), occupancy {:.0}%",
-            cell.sessions,
-            cell.episodes_per_sec,
-            cell.thinks_per_sec,
-            cell.mean_think_ms,
-            cell.p99_think_ms,
-            100.0 * cell.sim_occupancy,
-        );
+    // Deployment sweep: the fleet scales with the shard count (one shard
+    // ≈ one core's scheduler plus its workers) — the acceptance bar.
+    let mut speedup_base: Option<f64> = None;
+    for shards in [1usize, 2, 4] {
+        for sessions in [1usize, 8, 32] {
+            let cell = run_cell(shards, 2, 8, sessions, thinks, sims);
+            emit(&cell, "per_shard");
+            if sessions == 32 {
+                match (shards, speedup_base) {
+                    (1, _) => speedup_base = Some(cell.episodes_per_sec),
+                    (4, Some(base)) if base > 0.0 => {
+                        println!(
+                            "  speedup @32 sessions: 4 shards / 1 shard = {:.2}x",
+                            cell.episodes_per_sec / base
+                        );
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    // Control sweep: hold the TOTAL fleet at 2 expansion + 8 simulation
+    // workers and split it across shards. Any speedup here is pure
+    // scheduler-bottleneck removal — the worker count cannot explain it.
+    let mut fixed_base: Option<f64> = None;
+    for shards in [1usize, 4] {
+        let cell = run_cell(shards, (2 / shards).max(1), 8 / shards, 32, thinks, sims);
+        emit(&cell, "fixed_total");
+        match (shards, fixed_base) {
+            (1, _) => fixed_base = Some(cell.episodes_per_sec),
+            (4, Some(base)) if base > 0.0 => {
+                println!(
+                    "  scheduler-only speedup @32 sessions (10 workers total): \
+                     4 shards / 1 shard = {:.2}x",
+                    cell.episodes_per_sec / base
+                );
+            }
+            _ => {}
+        }
     }
 }

@@ -29,5 +29,6 @@ pub mod mcts;
 pub mod passrate;
 pub mod runtime;
 pub mod service;
+pub mod testkit;
 pub mod tree;
 pub mod util;

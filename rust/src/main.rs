@@ -20,7 +20,7 @@ use wu_uct::experiments::{self, Scale};
 use wu_uct::gameplay::play_episode;
 use wu_uct::mcts::{by_name, SearchSpec};
 use wu_uct::passrate::SystemConfig;
-use wu_uct::service::{SearchService, ServiceConfig, TcpServer};
+use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, TcpServer};
 use wu_uct::util::cli::{usage, Args, OptSpec};
 
 fn specs() -> Vec<OptSpec> {
@@ -39,6 +39,13 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "relative", help: "also print Fig 10 relative bars", default: None },
         OptSpec { name: "grid", help: "full Table 3 grid (else Fig 4 curves)", default: None },
         OptSpec { name: "addr", help: "serve: TCP listen address", default: Some("127.0.0.1:3771") },
+        OptSpec { name: "shards", help: "serve: scheduler shards", default: Some("1") },
+        OptSpec {
+            name: "max-sessions",
+            help: "serve: open-session cap per shard (0 = unlimited)",
+            default: Some("0"),
+        },
+        OptSpec { name: "no-steal", help: "serve: disable cross-shard work stealing", default: None },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
 }
@@ -146,17 +153,28 @@ fn main() -> Result<()> {
         "serve" => {
             let exp_workers = args.usize("exp-workers")?.max(1);
             let sim_workers = args.usize("workers")?.max(1);
-            let service = SearchService::start(ServiceConfig {
-                expansion_workers: exp_workers,
-                simulation_workers: sim_workers,
-                seed: scale.seed,
-                ..ServiceConfig::default()
+            let shards = args.usize_at_least("shards", 1)?;
+            let max_sessions = args.usize("max-sessions")?;
+            let service = ShardedService::start(ShardedConfig {
+                shards,
+                shard: ServiceConfig {
+                    expansion_workers: exp_workers,
+                    simulation_workers: sim_workers,
+                    seed: scale.seed,
+                    ..ServiceConfig::default()
+                },
+                max_sessions_per_shard: (max_sessions > 0).then_some(max_sessions),
+                steal: !args.flag("no-steal"),
+                ..ShardedConfig::default()
             });
             let server = TcpServer::bind(service.handle(), args.str("addr")?)?;
             println!(
-                "wu-uct serve: listening on {} ({exp_workers} expansion / {sim_workers} simulation workers)",
+                "wu-uct serve: listening on {} ({shards} shard(s), each {exp_workers} expansion / {sim_workers} simulation workers)",
                 server.local_addr(),
             );
+            if max_sessions > 0 {
+                println!("admission control: {max_sessions} sessions/shard, busy replies beyond");
+            }
             println!("protocol: one JSON object per line; ops: open, think, advance, best, close, metrics, ping");
             server.join(); // foreground until killed
         }

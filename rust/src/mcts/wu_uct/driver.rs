@@ -128,6 +128,17 @@ impl SearchDriver {
         self.completed
     }
 
+    /// Rollouts issued this think (`issued - completed` are in flight or
+    /// short-circuiting).
+    pub fn issued(&self) -> u32 {
+        self.issued
+    }
+
+    /// The current think's budget (`T_max`).
+    pub fn budget(&self) -> u32 {
+        self.budget
+    }
+
     pub fn tree(&self) -> &Tree {
         &self.tree
     }

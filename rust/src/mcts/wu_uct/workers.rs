@@ -63,6 +63,16 @@ pub enum TaskResult {
     Simulated(SimResult),
 }
 
+impl TaskResult {
+    /// The id the originating master assigned to this task.
+    pub fn task_id(&self) -> u64 {
+        match self {
+            TaskResult::Expanded(r) => r.task_id,
+            TaskResult::Simulated(r) => r.task_id,
+        }
+    }
+}
+
 /// Blocking MPMC task queue (std has no MPMC channel; a mutexed deque +
 /// condvar is plenty at our task granularity — see §Perf).
 struct TaskQueue {

@@ -1,0 +1,212 @@
+//! Virtual-deadline fair scheduling, extracted as a pure component.
+//!
+//! This is classic stride scheduling: every session ("lane") carries a
+//! virtual deadline; the lane with the earliest deadline issues the next
+//! rollout, and each issued rollout pushes that lane's deadline back by
+//! its stride (`1 / weight`). Equal-weight lanes therefore converge to
+//! equal worker shares regardless of arrival order or budget size.
+//!
+//! The component is deliberately free of threads, pools and sessions so
+//! that the *same* policy code runs in two places:
+//!
+//! * the live scheduler ([`crate::service::scheduler`]), one instance per
+//!   shard thread;
+//! * the deterministic testkit ([`crate::testkit::harness`]), where the
+//!   fairness bound is property-tested tick by tick under scripted
+//!   latencies (`rust/tests/properties.rs`).
+//!
+//! Ties on the deadline are broken by the *lowest lane id*, never by map
+//! iteration order — that is what makes scheduler traces replayable from
+//! a seed (the golden-trace requirement of the testkit).
+
+use std::collections::HashMap;
+
+/// Per-lane stride state.
+#[derive(Debug, Clone, Copy)]
+struct Lane {
+    /// Virtual deadline; earliest issues next.
+    deadline: f64,
+    /// Deadline increment per issued rollout (`1 / weight`).
+    stride: f64,
+}
+
+/// The fair queue: a set of lanes racing on virtual time.
+#[derive(Debug, Clone, Default)]
+pub struct FairQueue {
+    virtual_time: f64,
+    lanes: HashMap<u64, Lane>,
+}
+
+impl FairQueue {
+    pub fn new() -> FairQueue {
+        FairQueue::default()
+    }
+
+    /// Register a lane. Its first deadline is the current virtual time, so
+    /// a newcomer competes fairly with incumbents immediately. Weights are
+    /// clamped to a tiny positive floor (a zero weight would never run).
+    pub fn admit(&mut self, id: u64, weight: f64) {
+        let stride = 1.0 / weight.max(1e-6);
+        self.lanes.insert(id, Lane { deadline: self.virtual_time, stride });
+    }
+
+    pub fn remove(&mut self, id: u64) {
+        self.lanes.remove(&id);
+    }
+
+    /// Re-enter the race after idling: a lane must not hoard credit
+    /// accrued while it had nothing to issue, so its deadline snaps
+    /// forward to at least the current virtual time.
+    pub fn rejoin(&mut self, id: u64) {
+        let now = self.virtual_time;
+        if let Some(lane) = self.lanes.get_mut(&id) {
+            lane.deadline = lane.deadline.max(now);
+        }
+    }
+
+    /// The eligible lane with the earliest deadline; deadline ties break
+    /// toward the lowest id (deterministic regardless of iteration order
+    /// of `eligible`). Unknown ids are ignored.
+    pub fn earliest(&self, eligible: impl Iterator<Item = u64>) -> Option<u64> {
+        let mut best: Option<(f64, u64)> = None;
+        for id in eligible {
+            let Some(lane) = self.lanes.get(&id) else { continue };
+            let better = match best {
+                None => true,
+                Some((bd, bid)) => {
+                    lane.deadline < bd || (lane.deadline == bd && id < bid)
+                }
+            };
+            if better {
+                best = Some((lane.deadline, id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Account one issued rollout to `id`: virtual time advances to the
+    /// lane's deadline, which then recedes by its stride.
+    pub fn charge(&mut self, id: u64) {
+        if let Some(lane) = self.lanes.get_mut(&id) {
+            self.virtual_time = lane.deadline;
+            lane.deadline += lane.stride;
+        }
+    }
+
+    pub fn virtual_time(&self) -> f64 {
+        self.virtual_time
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Issue `n` rollouts among `ids` (all always eligible), returning the
+    /// per-lane issue counts.
+    fn run(q: &mut FairQueue, ids: &[u64], n: usize) -> HashMap<u64, usize> {
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for _ in 0..n {
+            let id = q.earliest(ids.iter().copied()).expect("some lane");
+            q.charge(id);
+            *counts.entry(id).or_default() += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn equal_weights_share_equally() {
+        let mut q = FairQueue::new();
+        for id in [1, 2, 3] {
+            q.admit(id, 1.0);
+        }
+        let counts = run(&mut q, &[1, 2, 3], 30);
+        for id in [1, 2, 3] {
+            assert_eq!(counts[&id], 10, "lane {id}");
+        }
+    }
+
+    #[test]
+    fn double_weight_gets_double_share() {
+        let mut q = FairQueue::new();
+        q.admit(1, 2.0);
+        q.admit(2, 1.0);
+        let counts = run(&mut q, &[1, 2], 30);
+        assert_eq!(counts[&1], 20);
+        assert_eq!(counts[&2], 10);
+    }
+
+    #[test]
+    fn ties_break_to_lowest_id_deterministically() {
+        // Admission order must not matter: both orders give byte-identical
+        // schedules (the golden-trace precondition).
+        let schedule = |order: &[u64]| {
+            let mut q = FairQueue::new();
+            for &id in order {
+                q.admit(id, 1.0);
+            }
+            let mut seq = Vec::new();
+            for _ in 0..12 {
+                let id = q.earliest([1, 2, 3].into_iter()).unwrap();
+                q.charge(id);
+                seq.push(id);
+            }
+            seq
+        };
+        assert_eq!(schedule(&[1, 2, 3]), schedule(&[3, 1, 2]));
+        assert_eq!(schedule(&[1, 2, 3])[0], 1, "first tie goes to lowest id");
+    }
+
+    #[test]
+    fn latecomer_starts_at_current_virtual_time() {
+        let mut q = FairQueue::new();
+        q.admit(1, 1.0);
+        for _ in 0..50 {
+            let id = q.earliest([1].into_iter()).unwrap();
+            q.charge(id);
+        }
+        // Lane 2 arrives late: it must not get 50 issues of back-credit.
+        q.admit(2, 1.0);
+        let counts = run(&mut q, &[1, 2], 20);
+        assert!(counts[&2] <= 11, "latecomer got {} of 20", counts[&2]);
+        assert!(counts[&1] >= 9);
+    }
+
+    #[test]
+    fn rejoin_forfeits_idle_credit() {
+        let mut q = FairQueue::new();
+        q.admit(1, 1.0);
+        q.admit(2, 1.0);
+        // Lane 2 idles while lane 1 issues alone.
+        for _ in 0..40 {
+            let id = q.earliest([1].into_iter()).unwrap();
+            q.charge(id);
+        }
+        q.rejoin(2);
+        let counts = run(&mut q, &[1, 2], 20);
+        assert!(
+            counts[&2] <= 11,
+            "rejoined lane must not binge on idle credit: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn remove_and_unknown_ids_are_ignored() {
+        let mut q = FairQueue::new();
+        q.admit(1, 1.0);
+        q.remove(1);
+        assert!(q.earliest([1, 99].into_iter()).is_none());
+        q.charge(42); // no-op
+        assert_eq!(q.virtual_time(), 0.0);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+}

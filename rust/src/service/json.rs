@@ -4,10 +4,42 @@
 //! arrays, strings with escapes, f64 numbers, booleans, null — with a
 //! recursive-descent parser and a compact serializer. Object fields keep
 //! insertion order so responses render deterministically.
+//!
+//! Malformed input can never panic: every failure is a typed
+//! [`ParseError`] carrying the byte offset, including invalid UTF-8 via
+//! [`Json::parse_bytes`] (the TCP server feeds raw lines through it so a
+//! garbage client cannot kill its connection handler).
 
 use std::fmt::Write as _;
 
-use anyhow::{bail, Result};
+/// Typed parse failure; `at` is a byte offset into the input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseError {
+    /// Input is not valid UTF-8; `at` is the first invalid byte.
+    InvalidUtf8 { at: usize },
+    /// Structurally malformed document (`what` names the expectation).
+    Syntax { at: usize, what: &'static str },
+    /// Document ended before the value did.
+    Truncated { what: &'static str },
+    /// A valid document followed by trailing bytes.
+    Trailing { at: usize },
+    /// Unparseable number literal.
+    BadNumber { at: usize },
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::InvalidUtf8 { at } => write!(f, "invalid utf-8 at byte {at}"),
+            ParseError::Syntax { at, what } => write!(f, "expected {what} at byte {at}"),
+            ParseError::Truncated { what } => write!(f, "truncated input ({what})"),
+            ParseError::Trailing { at } => write!(f, "trailing characters at byte {at}"),
+            ParseError::BadNumber { at } => write!(f, "bad number at byte {at}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -26,6 +58,14 @@ impl Json {
         match self {
             Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
             _ => None,
+        }
+    }
+
+    /// Object field names, in document order (empty for non-objects).
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            Json::Obj(fields) => fields.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => Vec::new(),
         }
     }
 
@@ -113,16 +153,24 @@ impl Json {
     }
 
     /// Parse one JSON document (trailing garbage is an error).
-    pub fn parse(text: &str) -> Result<Json> {
+    pub fn parse(text: &str) -> Result<Json, ParseError> {
         let bytes = text.as_bytes();
         let mut p = Parser { bytes, pos: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
         if p.pos != bytes.len() {
-            bail!("trailing characters at byte {}", p.pos);
+            return Err(ParseError::Trailing { at: p.pos });
         }
         Ok(v)
+    }
+
+    /// Parse raw bytes: invalid UTF-8 is a typed error, never a panic —
+    /// the entry point for untrusted wire input.
+    pub fn parse_bytes(bytes: &[u8]) -> Result<Json, ParseError> {
+        let text = std::str::from_utf8(bytes)
+            .map_err(|e| ParseError::InvalidUtf8 { at: e.valid_up_to() })?;
+        Json::parse(text)
     }
 }
 
@@ -169,25 +217,25 @@ impl Parser<'_> {
         self.bytes.get(self.pos).copied()
     }
 
-    fn eat(&mut self, b: u8) -> Result<()> {
+    fn eat(&mut self, b: u8, what: &'static str) -> Result<(), ParseError> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
         } else {
-            bail!("expected {:?} at byte {}", b as char, self.pos);
+            Err(ParseError::Syntax { at: self.pos, what })
         }
     }
 
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, ParseError> {
         if self.bytes[self.pos..].starts_with(word.as_bytes()) {
             self.pos += word.len();
             Ok(v)
         } else {
-            bail!("bad literal at byte {}", self.pos);
+            Err(ParseError::Syntax { at: self.pos, what: "literal" })
         }
     }
 
-    fn value(&mut self) -> Result<Json> {
+    fn value(&mut self) -> Result<Json, ParseError> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -196,13 +244,13 @@ impl Parser<'_> {
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
             Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
-            Some(b) => bail!("unexpected {:?} at byte {}", b as char, self.pos),
-            None => bail!("unexpected end of input"),
+            Some(_) => Err(ParseError::Syntax { at: self.pos, what: "a JSON value" }),
+            None => Err(ParseError::Truncated { what: "a JSON value" }),
         }
     }
 
-    fn object(&mut self) -> Result<Json> {
-        self.eat(b'{')?;
+    fn object(&mut self) -> Result<Json, ParseError> {
+        self.eat(b'{', "'{'")?;
         let mut fields = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -213,7 +261,7 @@ impl Parser<'_> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.eat(b':')?;
+            self.eat(b':', "':'")?;
             self.skip_ws();
             let v = self.value()?;
             fields.push((key, v));
@@ -224,13 +272,14 @@ impl Parser<'_> {
                     self.pos += 1;
                     return Ok(Json::Obj(fields));
                 }
-                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+                Some(_) => return Err(ParseError::Syntax { at: self.pos, what: "',' or '}'" }),
+                None => return Err(ParseError::Truncated { what: "object" }),
             }
         }
     }
 
-    fn array(&mut self) -> Result<Json> {
-        self.eat(b'[')?;
+    fn array(&mut self) -> Result<Json, ParseError> {
+        self.eat(b'[', "'['")?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -247,21 +296,26 @@ impl Parser<'_> {
                     self.pos += 1;
                     return Ok(Json::Arr(items));
                 }
-                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+                Some(_) => return Err(ParseError::Syntax { at: self.pos, what: "',' or ']'" }),
+                None => return Err(ParseError::Truncated { what: "array" }),
             }
         }
     }
 
-    fn string(&mut self) -> Result<String> {
-        self.eat(b'"')?;
+    fn string(&mut self) -> Result<String, ParseError> {
+        self.eat(b'"', "'\"'")?;
         let mut out = String::new();
         loop {
-            let Some(b) = self.peek() else { bail!("unterminated string") };
+            let Some(b) = self.peek() else {
+                return Err(ParseError::Truncated { what: "string" });
+            };
             self.pos += 1;
             match b {
                 b'"' => return Ok(out),
                 b'\\' => {
-                    let Some(esc) = self.peek() else { bail!("unterminated escape") };
+                    let Some(esc) = self.peek() else {
+                        return Err(ParseError::Truncated { what: "escape" });
+                    };
                     self.pos += 1;
                     match esc {
                         b'"' => out.push('"'),
@@ -274,22 +328,34 @@ impl Parser<'_> {
                         b'f' => out.push('\u{000c}'),
                         b'u' => {
                             if self.pos + 4 > self.bytes.len() {
-                                bail!("truncated \\u escape");
+                                return Err(ParseError::Truncated { what: "\\u escape" });
                             }
-                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
-                            let code = u32::from_str_radix(hex, 16)?;
+                            let hex = &self.bytes[self.pos..self.pos + 4];
+                            let hex = std::str::from_utf8(hex).map_err(|_| {
+                                ParseError::Syntax { at: self.pos, what: "4 hex digits" }
+                            })?;
+                            let code = u32::from_str_radix(hex, 16).map_err(|_| {
+                                ParseError::Syntax { at: self.pos, what: "4 hex digits" }
+                            })?;
                             self.pos += 4;
                             // Surrogates are replaced (the protocol never
                             // emits them).
                             out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                         }
-                        _ => bail!("bad escape \\{} at byte {}", esc as char, self.pos),
+                        _ => {
+                            return Err(ParseError::Syntax {
+                                at: self.pos,
+                                what: "a valid escape",
+                            })
+                        }
                     }
                 }
                 _ => {
-                    // Multibyte UTF-8: copy the whole char.
+                    // Multibyte UTF-8: copy the whole char. The input is a
+                    // &str, so boundaries are guaranteed valid.
                     let start = self.pos - 1;
-                    let s = std::str::from_utf8(&self.bytes[start..])?;
+                    let s = std::str::from_utf8(&self.bytes[start..])
+                        .expect("parse input is valid UTF-8");
                     let c = s.chars().next().expect("non-empty");
                     out.push(c);
                     self.pos = start + c.len_utf8();
@@ -298,7 +364,7 @@ impl Parser<'_> {
         }
     }
 
-    fn number(&mut self) -> Result<Json> {
+    fn number(&mut self) -> Result<Json, ParseError> {
         let start = self.pos;
         while let Some(b) = self.peek() {
             if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
@@ -307,8 +373,11 @@ impl Parser<'_> {
                 break;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
-        let n: f64 = text.parse()?;
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .expect("ascii number bytes");
+        let n: f64 = text
+            .parse()
+            .map_err(|_| ParseError::BadNumber { at: start })?;
         Ok(Json::Num(n))
     }
 }
@@ -354,6 +423,8 @@ mod tests {
         assert_eq!(v.get("s").unwrap().as_str(), Some("hi"));
         assert_eq!(v.get("t").unwrap().as_bool(), Some(true));
         assert!(v.get("missing").is_none());
+        assert_eq!(v.keys(), vec!["n", "neg", "f", "s", "t"]);
+        assert!(Json::Null.keys().is_empty());
     }
 
     #[test]
@@ -361,6 +432,62 @@ mod tests {
         for bad in ["", "{", "{\"a\":}", "[1,]", "tru", "\"open", "{} extra", "{'a':1}"] {
             assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn truncated_inputs_give_typed_truncation_or_syntax_errors() {
+        // Every prefix of a valid document parses to an error, never a
+        // panic, and EOF-shaped failures are Truncated.
+        let full = r#"{"op":"think","session":12,"flags":[true,null],"x":1.5}"#;
+        for cut in 0..full.len() {
+            let prefix = &full[..cut];
+            assert!(Json::parse(prefix).is_err(), "accepted prefix {prefix:?}");
+        }
+        assert_eq!(
+            Json::parse("{\"a\":\"unterminated"),
+            Err(ParseError::Truncated { what: "string" })
+        );
+        assert_eq!(
+            Json::parse("[1, 2"),
+            Err(ParseError::Truncated { what: "array" })
+        );
+        assert_eq!(Json::parse(""), Err(ParseError::Truncated { what: "a JSON value" }));
+    }
+
+    #[test]
+    fn parse_bytes_reports_invalid_utf8_without_panicking() {
+        // 0xFF can never appear in UTF-8.
+        let bad = [b'{', b'"', b'a', 0xFF, b'"', b':', b'1', b'}'];
+        match Json::parse_bytes(&bad) {
+            Err(ParseError::InvalidUtf8 { at }) => assert_eq!(at, 3),
+            other => panic!("expected InvalidUtf8, got {other:?}"),
+        }
+        // Truncated multibyte sequence at the very end.
+        let truncated = "{\"g\":\"é".as_bytes();
+        let cut = &truncated[..truncated.len() - 1];
+        assert!(matches!(
+            Json::parse_bytes(cut),
+            Err(ParseError::InvalidUtf8 { .. }) | Err(ParseError::Truncated { .. })
+        ));
+        // Valid bytes still parse.
+        assert!(Json::parse_bytes(br#"{"a":1}"#).is_ok());
+    }
+
+    #[test]
+    fn trailing_and_bad_escape_positions_are_reported() {
+        assert_eq!(Json::parse("{} extra"), Err(ParseError::Trailing { at: 3 }));
+        assert!(matches!(
+            Json::parse(r#""bad \q escape""#),
+            Err(ParseError::Syntax { .. })
+        ));
+        assert!(matches!(
+            Json::parse(r#""\u00"#),
+            Err(ParseError::Truncated { .. })
+        ));
+        assert!(matches!(
+            Json::parse(r#""\uZZZZ""#),
+            Err(ParseError::Syntax { .. })
+        ));
     }
 
     #[test]

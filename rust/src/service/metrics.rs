@@ -66,17 +66,28 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[idx.min(v.len() - 1)]
 }
 
-/// Point-in-time service snapshot (the `metrics` op payload).
+/// Point-in-time service snapshot (the `metrics` op payload). One per
+/// scheduler shard; [`ServiceMetrics::aggregate`] folds a sharded
+/// service's snapshots into one fleet-wide report.
 #[derive(Debug, Clone, Default)]
 pub struct ServiceMetrics {
     pub uptime: Duration,
+    /// Scheduler shards contributing to this snapshot (1 per shard; the
+    /// shard count after aggregation).
+    pub shards: usize,
     pub sessions_open: usize,
     pub sessions_opened: u64,
     pub sessions_closed: u64,
+    /// Opens rejected by per-shard admission control (`Busy`).
+    pub sessions_rejected: u64,
     /// Completed thinks across all sessions.
     pub thinks: u64,
     /// Completed simulations across all sessions.
     pub sims: u64,
+    /// Simulation tasks executed on behalf of peer shards (work stealing).
+    pub sims_stolen: u64,
+    /// Own simulation tasks shed to the cross-shard steal queue.
+    pub sims_shed: u64,
     /// Episodes retired per second (closed sessions / uptime).
     pub sessions_per_sec: f64,
     pub thinks_per_sec: f64,
@@ -92,6 +103,61 @@ pub struct ServiceMetrics {
     pub simulation_workers: usize,
     pub pending_expansions: usize,
     pub pending_simulations: usize,
+}
+
+impl ServiceMetrics {
+    /// Fold per-shard snapshots into one fleet report: counters and
+    /// worker/queue gauges sum; rates are recomputed from the summed
+    /// counters over the longest shard uptime; the latency mean is
+    /// think-weighted and each percentile takes the worst shard (a
+    /// conservative upper bound — exact cross-shard percentiles would
+    /// need the raw samples).
+    pub fn aggregate(shards: &[ServiceMetrics]) -> ServiceMetrics {
+        let mut total = ServiceMetrics::default();
+        if shards.is_empty() {
+            return total;
+        }
+        let mut weighted_mean = 0.0;
+        for m in shards {
+            total.uptime = total.uptime.max(m.uptime);
+            total.shards += m.shards.max(1);
+            total.sessions_open += m.sessions_open;
+            total.sessions_opened += m.sessions_opened;
+            total.sessions_closed += m.sessions_closed;
+            total.sessions_rejected += m.sessions_rejected;
+            total.thinks += m.thinks;
+            total.sims += m.sims;
+            total.sims_stolen += m.sims_stolen;
+            total.sims_shed += m.sims_shed;
+            weighted_mean += m.think_ms_mean * m.thinks as f64;
+            total.think_ms_p50 = total.think_ms_p50.max(m.think_ms_p50);
+            total.think_ms_p90 = total.think_ms_p90.max(m.think_ms_p90);
+            total.think_ms_p99 = total.think_ms_p99.max(m.think_ms_p99);
+            // Occupancies average weighted by pool size.
+            total.exp_occupancy += m.exp_occupancy * m.expansion_workers as f64;
+            total.sim_occupancy += m.sim_occupancy * m.simulation_workers as f64;
+            total.expansion_workers += m.expansion_workers;
+            total.simulation_workers += m.simulation_workers;
+            total.pending_expansions += m.pending_expansions;
+            total.pending_simulations += m.pending_simulations;
+        }
+        let secs = total.uptime.as_secs_f64().max(1e-9);
+        total.sessions_per_sec = total.sessions_closed as f64 / secs;
+        total.thinks_per_sec = total.thinks as f64 / secs;
+        total.sims_per_sec = total.sims as f64 / secs;
+        total.think_ms_mean = if total.thinks > 0 {
+            weighted_mean / total.thinks as f64
+        } else {
+            0.0
+        };
+        if total.expansion_workers > 0 {
+            total.exp_occupancy /= total.expansion_workers as f64;
+        }
+        if total.simulation_workers > 0 {
+            total.sim_occupancy /= total.simulation_workers as f64;
+        }
+        total
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +196,70 @@ mod tests {
         assert_eq!(p90, l.percentile_ms(90.0));
         assert_eq!(p99, l.percentile_ms(99.0));
         assert_eq!(LatencyStats::default().summary_ms(), (0.0, 0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_takes_worst_percentiles() {
+        let a = ServiceMetrics {
+            uptime: Duration::from_secs(10),
+            shards: 1,
+            sessions_open: 2,
+            sessions_opened: 5,
+            sessions_closed: 3,
+            sessions_rejected: 1,
+            thinks: 30,
+            sims: 300,
+            sims_stolen: 4,
+            sims_shed: 7,
+            think_ms_mean: 10.0,
+            think_ms_p99: 50.0,
+            exp_occupancy: 0.5,
+            sim_occupancy: 0.8,
+            expansion_workers: 2,
+            simulation_workers: 8,
+            pending_expansions: 1,
+            pending_simulations: 2,
+            ..Default::default()
+        };
+        let b = ServiceMetrics {
+            uptime: Duration::from_secs(20),
+            shards: 1,
+            thinks: 10,
+            think_ms_mean: 30.0,
+            think_ms_p99: 20.0,
+            exp_occupancy: 0.1,
+            sim_occupancy: 0.2,
+            expansion_workers: 2,
+            simulation_workers: 8,
+            ..Default::default()
+        };
+        let t = ServiceMetrics::aggregate(&[a, b]);
+        assert_eq!(t.shards, 2);
+        assert_eq!(t.sessions_open, 2);
+        assert_eq!(t.sessions_opened, 5);
+        assert_eq!(t.sessions_rejected, 1);
+        assert_eq!(t.thinks, 40);
+        assert_eq!(t.sims, 300);
+        assert_eq!(t.sims_stolen, 4);
+        assert_eq!(t.sims_shed, 7);
+        assert_eq!(t.uptime, Duration::from_secs(20));
+        assert_eq!(t.expansion_workers, 4);
+        assert_eq!(t.simulation_workers, 16);
+        assert_eq!(t.think_ms_p99, 50.0, "worst shard's percentile");
+        // think-weighted mean: (10*30 + 30*10) / 40 = 15
+        assert!((t.think_ms_mean - 15.0).abs() < 1e-9);
+        // worker-weighted occupancy: (0.5*2 + 0.1*2) / 4 = 0.3
+        assert!((t.exp_occupancy - 0.3).abs() < 1e-9);
+        // rates recomputed over the max uptime
+        assert!((t.thinks_per_sec - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_of_nothing_is_zeroed() {
+        let t = ServiceMetrics::aggregate(&[]);
+        assert_eq!(t.shards, 0);
+        assert_eq!(t.thinks, 0);
+        assert_eq!(t.think_ms_mean, 0.0);
     }
 
     #[test]

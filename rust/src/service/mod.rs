@@ -1,14 +1,15 @@
 //! Search-as-a-service: many concurrent WU-UCT sessions multiplexed over
-//! one shared expansion pool and one shared simulation pool.
+//! shared expansion/simulation pools, sharded across scheduler threads.
 //!
 //! The paper's core trick — tracking unobserved samples `O` so the master
 //! never waits on in-flight work (Eqs. 4–6) — means the master loop is
 //! non-blocking by construction. This layer exploits that: the loop is
 //! extracted into the tick-driven [`SearchDriver`] (one per session, one
-//! private tree each), and a single scheduler thread interleaves every
-//! live session's select/queue/absorb ticks, routing pool results back by
-//! a global task id. Unlike tree-parallel serving designs, no lock ever
-//! guards a tree — the contention pitfalls catalogued by Liu et al.
+//! private tree each), a scheduler thread interleaves every live
+//! session's select/queue/absorb ticks, and N such shards run side by
+//! side behind a consistent-hash router with cross-shard work stealing
+//! and `Busy` backpressure. Unlike tree-parallel serving designs, no lock
+//! ever guards a tree — the contention pitfalls catalogued by Liu et al.
 //! (2020) are sidestepped rather than mitigated.
 //!
 //! Layers, bottom up:
@@ -16,24 +17,86 @@
 //! * [`driver`] — the resumable WU-UCT master state machine (it lives
 //!   beside the algorithm in [`crate::mcts::wu_uct::driver`] so the
 //!   dependency points service → mcts, never back; re-exported here);
-//! * [`scheduler`] — sessions, shared pools, virtual-deadline fair
-//!   scheduling, lifecycle ops (`open`/`think`/`advance`/`best`/`close`)
-//!   with tree reuse across moves ([`crate::tree::Tree::advance_root`]);
-//! * [`metrics`] — think-latency percentiles, throughput, occupancy;
+//! * [`fair`] — virtual-deadline fair scheduling, extracted pure so the
+//!   deterministic testkit ([`crate::testkit`]) replays the exact policy
+//!   the live scheduler runs;
+//! * [`scheduler`] — one shard: sessions, shared pools, fair scheduling,
+//!   lifecycle ops (`open`/`think`/`advance`/`best`/`close`) with tree
+//!   reuse across moves ([`crate::tree::Tree::advance_root`]), admission
+//!   control and steal-queue participation;
+//! * [`placement`] / [`shard`] — the consistent-hash ring and the
+//!   [`ShardedService`] router (`wu-uct serve --shards N`);
+//! * [`metrics`] — think-latency percentiles, throughput, occupancy,
+//!   steal/shed counters, per-shard and aggregated;
 //! * [`json`] / [`proto`] — the line-delimited JSON wire protocol;
 //! * [`server`] — the TCP front-end behind `wu-uct serve`.
 
+pub mod fair;
 pub mod json;
 pub mod metrics;
+pub mod placement;
 pub mod proto;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
+
+use anyhow::Result;
+
+use crate::env::Env;
+use crate::mcts::common::SearchSpec;
 
 pub use crate::mcts::wu_uct::driver;
 pub use crate::mcts::wu_uct::driver::{AdvanceOutcome, IssueOutcome, SearchDriver, TaskSink};
+pub use fair::FairQueue;
 pub use metrics::ServiceMetrics;
+pub use placement::HashRing;
 pub use scheduler::{
-    AdvanceReply, CloseReply, SearchService, ServiceConfig, ServiceHandle, SessionOptions,
+    AdvanceReply, Busy, CloseReply, SearchService, ServiceConfig, ServiceHandle, SessionOptions,
     ThinkReply,
 };
 pub use server::TcpServer;
+pub use shard::{ShardedConfig, ShardedHandle, ShardedService};
+
+/// The session-lifecycle surface shared by the single-shard
+/// [`ServiceHandle`] and the sharded [`ShardedHandle`] router. The wire
+/// dispatcher ([`proto::handle_line`]) and the TCP server are generic
+/// over it, so every transport serves either deployment unchanged.
+pub trait SessionApi: Clone + Send + 'static {
+    fn open(&self, env: Box<dyn Env>, spec: SearchSpec, opts: SessionOptions) -> Result<u64>;
+    fn think(&self, session: u64, sims: u32) -> Result<ThinkReply>;
+    fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply>;
+    fn best_action(&self, session: u64) -> Result<usize>;
+    fn close(&self, session: u64) -> Result<CloseReply>;
+    fn metrics(&self) -> Result<ServiceMetrics>;
+
+    /// Per-shard snapshots; a single snapshot for an unsharded service.
+    fn shard_metrics(&self) -> Result<Vec<ServiceMetrics>> {
+        self.metrics().map(|m| vec![m])
+    }
+}
+
+impl SessionApi for ServiceHandle {
+    fn open(&self, env: Box<dyn Env>, spec: SearchSpec, opts: SessionOptions) -> Result<u64> {
+        ServiceHandle::open(self, env, spec, opts)
+    }
+
+    fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
+        ServiceHandle::think(self, session, sims)
+    }
+
+    fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
+        ServiceHandle::advance(self, session, action)
+    }
+
+    fn best_action(&self, session: u64) -> Result<usize> {
+        ServiceHandle::best_action(self, session)
+    }
+
+    fn close(&self, session: u64) -> Result<CloseReply> {
+        ServiceHandle::close(self, session)
+    }
+
+    fn metrics(&self) -> Result<ServiceMetrics> {
+        ServiceHandle::metrics(self)
+    }
+}

@@ -1,0 +1,126 @@
+//! Consistent-hash session placement.
+//!
+//! The sharded service routes every session op statelessly: the shard
+//! owning session `s` is a pure function of `s`, so no routing table has
+//! to be kept coherent across handles. The classic hash-ring construction
+//! (Karger et al., 1997) is used so that changing the shard count moves
+//! only the sessions that land on the new/removed shard's arc — every
+//! other session's placement is untouched (property-tested below).
+//!
+//! Each shard owns `replicas` pseudo-random points on a `u64` ring; a key
+//! hashes to a point and is owned by the first shard point at or after it
+//! (wrapping). Placement is fully deterministic: two rings built with the
+//! same parameters place every key identically, which the shard golden
+//! traces rely on.
+
+use crate::util::rng::SplitMix64;
+
+/// One SplitMix64 step: a well-mixed 64-bit hash of `x`.
+fn mix(x: u64) -> u64 {
+    SplitMix64::new(x).next_u64()
+}
+
+/// A consistent-hash ring over `shards` shards.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// (ring position, shard index), sorted by position.
+    points: Vec<(u64, usize)>,
+    shards: usize,
+}
+
+impl HashRing {
+    /// Default virtual points per shard: enough to keep the largest arc
+    /// within a few percent of ideal at small shard counts.
+    pub const DEFAULT_REPLICAS: usize = 64;
+
+    pub fn new(shards: usize, replicas: usize) -> HashRing {
+        assert!(shards >= 1, "a ring needs at least one shard");
+        assert!(replicas >= 1, "a shard needs at least one ring point");
+        let mut points = Vec::with_capacity(shards * replicas);
+        for shard in 0..shards {
+            for replica in 0..replicas {
+                // Distinct, deterministic point per (shard, replica).
+                let h = mix(((shard as u64) << 32) ^ replica as u64 ^ 0x5ea7_11e5);
+                points.push((h, shard));
+            }
+        }
+        points.sort_unstable();
+        // 64-bit collisions are astronomically unlikely; keep the first
+        // deterministically if one ever occurs.
+        points.dedup_by_key(|&mut (h, _)| h);
+        HashRing { points, shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard owning `key` (any u64 — session ids here).
+    pub fn place(&self, key: u64) -> usize {
+        let h = mix(key);
+        // First point at or after h, wrapping to the ring start.
+        let idx = self.points.partition_point(|&(p, _)| p < h);
+        let (_, shard) = self.points[idx % self.points.len()];
+        shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_deterministic() {
+        let a = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
+        let b = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
+        for key in 0..1000u64 {
+            assert_eq!(a.place(key), b.place(key));
+        }
+        assert_eq!(a.shards(), 4);
+    }
+
+    #[test]
+    fn every_shard_gets_a_fair_arc() {
+        let ring = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
+        let mut counts = [0usize; 4];
+        let n = 20_000u64;
+        for key in 0..n {
+            counts[ring.place(key)] += 1;
+        }
+        let ideal = n as usize / 4;
+        for (shard, &c) in counts.iter().enumerate() {
+            assert!(
+                c > ideal / 3 && c < ideal * 5 / 2,
+                "shard {shard} got {c} of {n} keys (ideal {ideal})"
+            );
+        }
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        let ring = HashRing::new(1, 8);
+        for key in 0..100u64 {
+            assert_eq!(ring.place(key), 0);
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_only_moves_keys_to_the_new_shard() {
+        // The consistent-hashing contract: adding shard 4 to a 4-shard
+        // ring either leaves a key where it was or moves it to shard 4.
+        let before = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
+        let after = HashRing::new(5, HashRing::DEFAULT_REPLICAS);
+        let mut moved = 0usize;
+        let n = 10_000u64;
+        for key in 0..n {
+            let (b, a) = (before.place(key), after.place(key));
+            if b != a {
+                assert_eq!(a, 4, "key {key} moved {b}->{a}, not to the new shard");
+                moved += 1;
+            }
+        }
+        // Roughly 1/5 of keys should move; certainly not none or all.
+        assert!(moved > 0, "growing the ring moved nothing");
+        assert!(moved < n as usize / 2, "growing the ring moved {moved} of {n}");
+    }
+}

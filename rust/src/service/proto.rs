@@ -1,8 +1,10 @@
 //! Line-delimited JSON protocol over the search service.
 //!
 //! One request per line, one response per line; every response carries
-//! `"ok"`. The dispatcher is transport-agnostic (the TCP server and the
-//! in-process tests share it).
+//! `"ok"`. The dispatcher is transport-agnostic and generic over
+//! [`SessionApi`], so the same code path serves a single-shard
+//! [`crate::service::SearchService`] and a sharded
+//! [`crate::service::ShardedService`].
 //!
 //! ```text
 //! → {"op":"open","env":"Breakout","seed":7,"sims":64}
@@ -16,7 +18,13 @@
 //! ```
 //!
 //! Also: `best` (read the recommendation without searching), `metrics`
-//! (service snapshot) and `ping`.
+//! (aggregated snapshot plus a `shards` array when sharded) and `ping`.
+//!
+//! Error discipline: malformed JSON, unknown ops and **unknown fields**
+//! are rejected with `{"ok":false,"error":...}` — never a panic, never a
+//! dropped connection. Admission-control rejections additionally carry
+//! `"busy":true` (the typed [`Busy`] error), telling clients to back off
+//! and retry rather than treat the failure as fatal.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -25,7 +33,8 @@ use crate::env::{atari, garnet::Garnet, Env};
 use crate::mcts::common::SearchSpec;
 use crate::service::json::{obj, Json};
 use crate::service::metrics::ServiceMetrics;
-use crate::service::scheduler::{ServiceHandle, SessionOptions};
+use crate::service::scheduler::{Busy, SessionOptions};
+use crate::service::SessionApi;
 
 /// Side effect of a dispatched line, for connection-scoped session
 /// tracking (the TCP server closes a connection's leftover sessions).
@@ -112,28 +121,60 @@ fn required_u64(req: &Json, key: &str) -> Result<u64> {
     field_u64(req, key)?.ok_or_else(|| anyhow!("missing field {key:?}"))
 }
 
-fn error_line(msg: &str) -> String {
-    obj([("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))]).render()
+/// Reject request fields no handler reads: a typo like `"sim"` for
+/// `"sims"` must come back as an error, not silently search with the
+/// default budget.
+fn reject_unknown_fields(req: &Json, op: &str, allowed: &[&str]) -> Result<()> {
+    for key in req.keys() {
+        if key != "op" && !allowed.contains(&key) {
+            bail!("unknown field {key:?} for op {op:?} (allowed: {allowed:?})");
+        }
+    }
+    Ok(())
+}
+
+fn error_line(err: &anyhow::Error) -> String {
+    let mut fields = vec![("ok".to_string(), Json::Bool(false))];
+    if err.downcast_ref::<Busy>().is_some() {
+        // Explicit backpressure marker: retry later, don't give up.
+        fields.push(("busy".to_string(), Json::Bool(true)));
+    }
+    fields.push(("error".to_string(), Json::Str(format!("{err:#}"))));
+    Json::Obj(fields).render()
 }
 
 /// Dispatch one request line; always returns a single response line
 /// (without the trailing newline).
-pub fn handle_line(handle: &ServiceHandle, line: &str) -> (String, LineEffect) {
+pub fn handle_line<H: SessionApi>(handle: &H, line: &str) -> (String, LineEffect) {
+    handle_bytes(handle, line.as_bytes())
+}
+
+/// Like [`handle_line`] but for raw bytes: invalid UTF-8 earns an error
+/// reply instead of killing the connection.
+pub fn handle_bytes<H: SessionApi>(handle: &H, line: &[u8]) -> (String, LineEffect) {
     match dispatch(handle, line) {
         Ok((json, effect)) => (json.render(), effect),
-        Err(e) => (error_line(&format!("{e:#}")), LineEffect::None),
+        Err(e) => (error_line(&e), LineEffect::None),
     }
 }
 
-fn dispatch(handle: &ServiceHandle, line: &str) -> Result<(Json, LineEffect)> {
-    let req = Json::parse(line)?;
+fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)> {
+    let req = Json::parse_bytes(line)?;
     let op = req
         .get("op")
         .and_then(|v| v.as_str())
         .ok_or_else(|| anyhow!("missing field \"op\""))?;
     match op {
-        "ping" => Ok((obj([("ok", Json::Bool(true))]), LineEffect::None)),
+        "ping" => {
+            reject_unknown_fields(&req, op, &[])?;
+            Ok((obj([("ok", Json::Bool(true))]), LineEffect::None))
+        }
         "open" => {
+            reject_unknown_fields(
+                &req,
+                op,
+                &["env", "seed", "sims", "rollout", "depth", "width", "gamma", "weight", "budget"],
+            )?;
             let env_name = req.get("env").and_then(|v| v.as_str()).unwrap_or("Breakout");
             let seed = field_u64(&req, "seed")?.unwrap_or(0);
             let env = make_env(env_name, seed)?;
@@ -150,6 +191,7 @@ fn dispatch(handle: &ServiceHandle, line: &str) -> Result<(Json, LineEffect)> {
             ))
         }
         "think" => {
+            reject_unknown_fields(&req, op, &["session", "sims"])?;
             let sid = required_u64(&req, "session")?;
             let sims = field_u32(&req, "sims")?.unwrap_or(0);
             let t = handle.think(sid, sims)?;
@@ -168,6 +210,7 @@ fn dispatch(handle: &ServiceHandle, line: &str) -> Result<(Json, LineEffect)> {
             Ok((Json::Obj(fields), LineEffect::None))
         }
         "advance" => {
+            reject_unknown_fields(&req, op, &["session", "action"])?;
             let sid = required_u64(&req, "session")?;
             let action = required_u64(&req, "action")? as usize;
             let a = handle.advance(sid, action)?;
@@ -184,6 +227,7 @@ fn dispatch(handle: &ServiceHandle, line: &str) -> Result<(Json, LineEffect)> {
             ))
         }
         "best" => {
+            reject_unknown_fields(&req, op, &["session"])?;
             let sid = required_u64(&req, "session")?;
             let action = handle.best_action(sid)?;
             Ok((
@@ -192,6 +236,7 @@ fn dispatch(handle: &ServiceHandle, line: &str) -> Result<(Json, LineEffect)> {
             ))
         }
         "close" => {
+            reject_unknown_fields(&req, op, &["session"])?;
             let sid = required_u64(&req, "session")?;
             let c = handle.close(sid)?;
             Ok((
@@ -206,8 +251,19 @@ fn dispatch(handle: &ServiceHandle, line: &str) -> Result<(Json, LineEffect)> {
             ))
         }
         "metrics" => {
-            let m = handle.metrics()?;
-            Ok((metrics_json(&m), LineEffect::None))
+            reject_unknown_fields(&req, op, &[])?;
+            let per_shard = handle.shard_metrics()?;
+            let aggregate = ServiceMetrics::aggregate(&per_shard);
+            let mut doc = metrics_json(&aggregate);
+            if per_shard.len() > 1 {
+                if let Json::Obj(fields) = &mut doc {
+                    fields.push((
+                        "per_shard".to_string(),
+                        Json::Arr(per_shard.iter().map(shard_metrics_json).collect()),
+                    ));
+                }
+            }
+            Ok((doc, LineEffect::None))
         }
         other => bail!("unknown op {other:?}"),
     }
@@ -218,11 +274,15 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
     obj([
         ("ok", Json::Bool(true)),
         ("uptime_s", Json::Num(m.uptime.as_secs_f64())),
+        ("shards", Json::Num(m.shards as f64)),
         ("sessions_open", Json::Num(m.sessions_open as f64)),
         ("sessions_opened", Json::Num(m.sessions_opened as f64)),
         ("sessions_closed", Json::Num(m.sessions_closed as f64)),
+        ("sessions_rejected", Json::Num(m.sessions_rejected as f64)),
         ("thinks", Json::Num(m.thinks as f64)),
         ("sims", Json::Num(m.sims as f64)),
+        ("sims_stolen", Json::Num(m.sims_stolen as f64)),
+        ("sims_shed", Json::Num(m.sims_shed as f64)),
         ("sessions_per_sec", Json::Num(m.sessions_per_sec)),
         ("thinks_per_sec", Json::Num(m.thinks_per_sec)),
         ("sims_per_sec", Json::Num(m.sims_per_sec)),
@@ -239,10 +299,27 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
     ])
 }
 
+/// Compact per-shard entry for the `per_shard` array.
+fn shard_metrics_json(m: &ServiceMetrics) -> Json {
+    obj([
+        ("sessions_open", Json::Num(m.sessions_open as f64)),
+        ("sessions_opened", Json::Num(m.sessions_opened as f64)),
+        ("sessions_rejected", Json::Num(m.sessions_rejected as f64)),
+        ("thinks", Json::Num(m.thinks as f64)),
+        ("sims", Json::Num(m.sims as f64)),
+        ("sims_stolen", Json::Num(m.sims_stolen as f64)),
+        ("sims_shed", Json::Num(m.sims_shed as f64)),
+        ("sim_occupancy", Json::Num(m.sim_occupancy)),
+        ("pending_expansions", Json::Num(m.pending_expansions as f64)),
+        ("pending_simulations", Json::Num(m.pending_simulations as f64)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::service::scheduler::{SearchService, ServiceConfig};
+    use crate::service::shard::{ShardedConfig, ShardedService};
 
     fn service() -> SearchService {
         SearchService::start(ServiceConfig {
@@ -255,6 +332,13 @@ mod tests {
     fn ok_field(line: &str) -> Json {
         let v = Json::parse(line).expect("response is valid json");
         assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(true), "line: {line}");
+        v
+    }
+
+    fn err_field(line: &str) -> Json {
+        let v = Json::parse(line).expect("error responses are json");
+        assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false), "line: {line}");
+        assert!(v.get("error").and_then(|e| e.as_str()).is_some());
         v
     }
 
@@ -290,6 +374,68 @@ mod tests {
         assert_eq!(effect, LineEffect::Closed(sid));
     }
 
+    /// Round-trip coverage of every request/response variant: each op's
+    /// happy-path reply must carry its full documented field set with
+    /// parseable values.
+    #[test]
+    fn every_response_variant_roundtrips_with_expected_fields() {
+        let svc = service();
+        let h = svc.handle();
+
+        let (line, _) = handle_line(&h, r#"{"op":"ping"}"#);
+        assert_eq!(ok_field(&line).keys(), vec!["ok"]);
+
+        let open_req =
+            r#"{"op":"open","env":"garnet","seed":1,"sims":8,"rollout":6,"depth":8,"width":3,"gamma":0.95,"weight":2.0,"budget":100}"#;
+        let (line, _) = handle_line(&h, open_req);
+        let v = ok_field(&line);
+        let sid = v.get("session").unwrap().as_u64().unwrap();
+        assert_eq!(v.keys(), vec!["ok", "session"]);
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"think","session":{sid}}}"#));
+        let t = ok_field(&line);
+        for key in ["action", "value", "sims", "tree", "ms", "quiescent", "remaining"] {
+            assert!(t.get(key).is_some(), "think reply missing {key:?}: {line}");
+        }
+        assert_eq!(t.get("remaining").unwrap().as_u64(), Some(92));
+        let action = t.get("action").unwrap().as_u64().unwrap();
+
+        let (line, _) = handle_line(
+            &h,
+            &format!(r#"{{"op":"advance","session":{sid},"action":{action}}}"#),
+        );
+        let a = ok_field(&line);
+        for key in ["reward", "done", "reused", "retained", "steps"] {
+            assert!(a.get(key).is_some(), "advance reply missing {key:?}: {line}");
+        }
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"best","session":{sid}}}"#));
+        assert!(ok_field(&line).get("action").is_some());
+
+        let (line, _) = handle_line(&h, r#"{"op":"metrics"}"#);
+        let m = ok_field(&line);
+        for key in [
+            "uptime_s",
+            "shards",
+            "sessions_open",
+            "sessions_rejected",
+            "thinks",
+            "sims",
+            "sims_stolen",
+            "sims_shed",
+            "think_ms_p99",
+            "sim_occupancy",
+        ] {
+            assert!(m.get(key).is_some(), "metrics reply missing {key:?}");
+        }
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        let c = ok_field(&line);
+        for key in ["thinks", "sims", "steps", "unobserved"] {
+            assert!(c.get(key).is_some(), "close reply missing {key:?}: {line}");
+        }
+    }
+
     #[test]
     fn metrics_and_ping() {
         let svc = service();
@@ -300,6 +446,33 @@ mod tests {
         let m = ok_field(&line);
         assert_eq!(m.get("sessions_open").unwrap().as_u64(), Some(0));
         assert_eq!(m.get("simulation_workers").unwrap().as_u64(), Some(2));
+        assert!(m.get("per_shard").is_none(), "single shard: no per_shard array");
+    }
+
+    #[test]
+    fn sharded_metrics_report_per_shard_breakdown() {
+        let svc = ShardedService::start(ShardedConfig {
+            shards: 3,
+            shard: ServiceConfig {
+                expansion_workers: 1,
+                simulation_workers: 2,
+                ..ServiceConfig::default()
+            },
+            ..ShardedConfig::default()
+        });
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"metrics"}"#);
+        let m = ok_field(&line);
+        assert_eq!(m.get("shards").unwrap().as_u64(), Some(3));
+        assert_eq!(m.get("simulation_workers").unwrap().as_u64(), Some(6));
+        let Some(Json::Arr(per_shard)) = m.get("per_shard") else {
+            panic!("sharded metrics must include per_shard: {line}");
+        };
+        assert_eq!(per_shard.len(), 3);
+        for entry in per_shard {
+            assert!(entry.get("sims").is_some());
+            assert!(entry.get("sims_stolen").is_some());
+        }
     }
 
     #[test]
@@ -317,14 +490,77 @@ mod tests {
             r#"{"op":"open","env":"garnet","sims":4294967296}"#,
         ] {
             let (line, effect) = handle_line(&h, bad);
-            let v = Json::parse(&line).expect("error responses are json");
-            assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false), "input: {bad}");
-            assert!(v.get("error").is_some());
-            assert_eq!(effect, LineEffect::None);
+            err_field(&line);
+            assert_eq!(effect, LineEffect::None, "input: {bad}");
         }
         // The service must still be alive afterwards.
         let (line, _) = handle_line(&h, r#"{"op":"ping"}"#);
         ok_field(&line);
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_per_op() {
+        let svc = service();
+        let h = svc.handle();
+        for (bad, misfield) in [
+            (r#"{"op":"ping","extra":1}"#, "extra"),
+            (r#"{"op":"open","env":"garnet","sim":8}"#, "sim"),
+            (r#"{"op":"think","session":1,"budget":5}"#, "budget"),
+            (r#"{"op":"advance","session":1,"action":0,"reward":1}"#, "reward"),
+            (r#"{"op":"best","session":1,"sims":4}"#, "sims"),
+            (r#"{"op":"close","session":1,"force":true}"#, "force"),
+            (r#"{"op":"metrics","shard":0}"#, "shard"),
+        ] {
+            let (line, _) = handle_line(&h, bad);
+            let v = err_field(&line);
+            let msg = v.get("error").unwrap().as_str().unwrap();
+            assert!(
+                msg.contains("unknown field") && msg.contains(misfield),
+                "input {bad}: error {msg:?} should name the unknown field"
+            );
+        }
+        let (line, _) = handle_line(&h, r#"{"op":"ping"}"#);
+        ok_field(&line);
+    }
+
+    #[test]
+    fn malformed_bytes_get_error_replies_never_panics() {
+        let svc = service();
+        let h = svc.handle();
+        let cases: Vec<Vec<u8>> = vec![
+            br#"{"op":"think","session"#.to_vec(),      // truncated line
+            vec![0xFF, 0xFE, b'{', b'}'],               // invalid UTF-8
+            vec![],                                     // empty
+            br#"{"op":"ping"} {"op":"ping"}"#.to_vec(), // two docs on one line
+        ];
+        for bytes in cases {
+            let (line, effect) = handle_bytes(&h, &bytes);
+            err_field(&line);
+            assert_eq!(effect, LineEffect::None);
+        }
+        let (line, _) = handle_bytes(&h, br#"{"op":"ping"}"#);
+        ok_field(&line);
+    }
+
+    #[test]
+    fn busy_rejections_carry_the_backpressure_marker() {
+        let svc = ShardedService::start(ShardedConfig {
+            shards: 1,
+            shard: ServiceConfig {
+                expansion_workers: 1,
+                simulation_workers: 1,
+                ..ServiceConfig::default()
+            },
+            max_sessions_per_shard: Some(1),
+            ..ShardedConfig::default()
+        });
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet"}"#);
+        ok_field(&line);
+        let (line, effect) = handle_line(&h, r#"{"op":"open","env":"garnet"}"#);
+        let v = err_field(&line);
+        assert_eq!(v.get("busy").and_then(|b| b.as_bool()), Some(true), "line: {line}");
+        assert_eq!(effect, LineEffect::None);
     }
 
     #[test]

@@ -1,25 +1,33 @@
 //! The multi-session scheduler: many live WU-UCT searches, one shared
-//! expansion pool, one shared simulation pool.
+//! expansion pool, one shared simulation pool — one instance per *shard*.
 //!
 //! One scheduler thread owns every session's [`SearchDriver`] plus the two
 //! pools. Because the driver never blocks — it only `issue`s tasks and
 //! `absorb`s results — the thread interleaves sessions freely: whenever a
 //! worker slot frees up, the thinking session with the **earliest virtual
-//! deadline** issues the next rollout, and each issued rollout pushes that
-//! session's deadline back by its stride (1 / weight). That is classic
-//! virtual-time fair scheduling: equal-weight sessions converge to equal
-//! worker shares regardless of arrival order or budget size, and avoids
-//! the tree-contention pitfalls of sharing one tree across threads (Liu et
-//! al. 2020) — every session keeps a private tree; only *workers* are
-//! shared.
+//! deadline** issues the next rollout ([`FairQueue`], the extracted
+//! stride-scheduling component shared with the deterministic testkit).
+//! Every session keeps a private tree; only *workers* are shared — the
+//! tree-contention pitfalls catalogued by Liu et al. (2020) are sidestepped
+//! rather than mitigated.
 //!
-//! Task results are routed back by a global task-id → session map, so the
-//! paper's per-tree invariant (`ΣO = 0` at quiescence, Eqs. 5–6) holds
-//! per session no matter how thinks interleave — a property-tested
-//! guarantee (`rust/tests/properties.rs`).
+//! Sharding ([`crate::service::shard`]) runs N of these threads side by
+//! side. Each scheduler then carries a [`ShardWiring`]: its shard index,
+//! senders to every peer inbox, an optional shared [`StealQueue`] for
+//! cross-shard work stealing of overflowed simulation tasks, and an
+//! optional per-shard session cap enforced at `open` with a typed
+//! [`Busy`] error (the protocol's backpressure reply).
+//!
+//! Task results are routed back by a global task-id → session map; task
+//! ids are tagged with the owning shard in their top 16 bits so a stolen
+//! task's result can always find its way home. The paper's per-tree
+//! invariant (`ΣO = 0` at quiescence, Eqs. 5–6) holds per session no
+//! matter how thinks interleave or which shard ran the simulation — a
+//! property-tested guarantee (`rust/tests/properties.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -30,10 +38,12 @@ use crate::eval::{HeuristicPolicy, PolicyFactory};
 use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::{SearchDriver, TaskSink};
 use crate::mcts::wu_uct::workers::{Pool, Task, TaskResult};
+use crate::service::fair::FairQueue;
 use crate::service::metrics::{LatencyStats, ServiceMetrics};
 
-/// Shared-pool sizing and defaults for a service instance. Worker counts
-/// are clamped to ≥ 1 at start (a zero-capacity pool could never serve).
+/// Shared-pool sizing and defaults for one scheduler (one shard). Worker
+/// counts are clamped to ≥ 1 at start (a zero-capacity pool could never
+/// serve).
 #[derive(Clone)]
 pub struct ServiceConfig {
     pub expansion_workers: usize,
@@ -74,6 +84,30 @@ impl Default for SessionOptions {
     }
 }
 
+/// Typed admission-control rejection: the shard's session table is full.
+/// Clients receive it as the wire protocol's explicit `busy` reply and
+/// should retry (a re-open hashes to a fresh session id, which may land
+/// on a different shard).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy {
+    /// Sessions currently open on the shard that rejected the open.
+    pub open: usize,
+    /// The shard's configured session cap.
+    pub limit: usize,
+}
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "busy: shard at capacity ({}/{} sessions open); retry later",
+            self.open, self.limit
+        )
+    }
+}
+
+impl std::error::Error for Busy {}
+
 /// Reply to a completed think.
 #[derive(Debug, Clone)]
 pub struct ThinkReply {
@@ -112,12 +146,15 @@ pub struct CloseReply {
     pub unobserved: u64,
 }
 
-enum Request {
+pub(crate) enum Request {
     Open {
         env: Box<dyn Env>,
         spec: SearchSpec,
         opts: SessionOptions,
-        reply: Sender<u64>,
+        /// Caller-assigned session id (the sharded router) or `None` for
+        /// a scheduler-allocated one.
+        id: Option<u64>,
+        reply: Sender<Result<u64>>,
     },
     Think { session: u64, sims: u32, reply: Sender<Result<ThinkReply>> },
     Advance { session: u64, action: usize, reply: Sender<Result<AdvanceReply>> },
@@ -127,9 +164,47 @@ enum Request {
     Shutdown,
 }
 
-enum SchedMsg {
+pub(crate) enum SchedMsg {
     Request(Request),
     Done(TaskResult),
+    /// A peer shard parked stealable work on the shared queue; wake up
+    /// and run a dispatch pass.
+    Poke,
+}
+
+/// Cross-shard overflow queue of simulation tasks, tagged with the owning
+/// shard so results can be routed home. Shared by every shard of one
+/// [`crate::service::shard::ShardedService`].
+#[derive(Default)]
+pub(crate) struct StealQueue {
+    queue: Mutex<VecDeque<(usize, Task)>>,
+}
+
+impl StealQueue {
+    pub(crate) fn new() -> StealQueue {
+        StealQueue::default()
+    }
+
+    pub(crate) fn push(&self, owner: usize, task: Task) {
+        self.queue.lock().unwrap().push_back((owner, task));
+    }
+
+    pub(crate) fn pop(&self) -> Option<(usize, Task)> {
+        self.queue.lock().unwrap().pop_front()
+    }
+}
+
+/// How one scheduler participates in a sharded deployment. The default
+/// wiring (an unsharded [`SearchService`]) is shard 0 of 1, no stealing,
+/// no session cap.
+pub(crate) struct ShardWiring {
+    pub index: usize,
+    /// Inboxes of every shard (including this one), indexed by shard.
+    pub peers: Vec<Sender<SchedMsg>>,
+    /// Shared overflow queue; `None` disables stealing.
+    pub steal: Option<std::sync::Arc<StealQueue>>,
+    /// Admission control: max concurrently-open sessions on this shard.
+    pub max_sessions: Option<usize>,
 }
 
 struct ThinkJob {
@@ -140,10 +215,6 @@ struct ThinkJob {
 struct Session {
     driver: SearchDriver,
     thinking: Option<ThinkJob>,
-    /// Virtual deadline for fair scheduling; earliest issues next.
-    deadline: f64,
-    /// Deadline increment per issued rollout (1 / weight).
-    stride: f64,
     default_sims: u32,
     remaining: Option<u64>,
     thinks: u64,
@@ -169,7 +240,20 @@ impl ServiceHandle {
     /// Open a session rooted at `env`'s current state.
     pub fn open(&self, env: Box<dyn Env>, spec: SearchSpec, opts: SessionOptions) -> Result<u64> {
         let (tx, rx) = channel();
-        self.roundtrip(Request::Open { env, spec, opts, reply: tx }, rx)
+        self.roundtrip(Request::Open { env, spec, opts, id: None, reply: tx }, rx)?
+    }
+
+    /// Open with a caller-assigned session id (the sharded router, which
+    /// places ids by consistent hash before the shard ever sees them).
+    pub(crate) fn open_with_id(
+        &self,
+        id: u64,
+        env: Box<dyn Env>,
+        spec: SearchSpec,
+        opts: SessionOptions,
+    ) -> Result<u64> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Open { env, spec, opts, id: Some(id), reply: tx }, rx)?
     }
 
     /// Run one think (`sims` = 0 ⇒ the session's default budget) and
@@ -203,7 +287,9 @@ impl ServiceHandle {
     }
 }
 
-/// The service: owns the scheduler thread; dropping shuts it down.
+/// The service: owns one scheduler thread (one shard); dropping shuts it
+/// down. [`crate::service::shard::ShardedService`] runs several of these
+/// against a shared steal queue.
 pub struct SearchService {
     handle: ServiceHandle,
     thread: Option<JoinHandle<()>>,
@@ -212,6 +298,23 @@ pub struct SearchService {
 impl SearchService {
     pub fn start(cfg: ServiceConfig) -> SearchService {
         let (tx, rx) = channel::<SchedMsg>();
+        let wiring = ShardWiring {
+            index: 0,
+            peers: vec![tx.clone()],
+            steal: None,
+            max_sessions: None,
+        };
+        SearchService::start_shard(cfg, wiring, tx, rx)
+    }
+
+    /// Start one shard on pre-wired channels (the sharded service creates
+    /// every inbox first so peers can be cross-connected).
+    pub(crate) fn start_shard(
+        cfg: ServiceConfig,
+        wiring: ShardWiring,
+        tx: Sender<SchedMsg>,
+        rx: Receiver<SchedMsg>,
+    ) -> SearchService {
         // A zero-capacity pool would gate dispatch() shut forever and hang
         // every think() caller; clamp rather than hand out a dead service.
         let n_exp = cfg.expansion_workers.max(1);
@@ -236,17 +339,24 @@ impl SearchService {
                 expansion,
                 simulation,
                 inbox: rx,
+                shard: wiring,
                 sessions: HashMap::new(),
                 routes: HashMap::new(),
+                stolen: HashMap::new(),
+                overflow_ids: HashSet::new(),
+                overflow_flag: false,
+                fair: FairQueue::new(),
                 next_session: 1,
                 next_task: 1,
                 pending_exp: 0,
                 pending_sim: 0,
-                virtual_time: 0.0,
                 opened: 0,
                 closed: 0,
+                rejected: 0,
                 thinks: 0,
                 sims: 0,
+                sims_stolen: 0,
+                sims_shed: 0,
                 think_latency: LatencyStats::default(),
                 started: Instant::now(),
             }
@@ -269,29 +379,46 @@ impl Drop for SearchService {
     }
 }
 
-/// Scheduler state, owned by its thread.
+/// Scheduler state, owned by its shard thread.
 struct Scheduler {
     expansion: Pool,
     simulation: Pool,
     inbox: Receiver<SchedMsg>,
+    shard: ShardWiring,
     sessions: HashMap<u64, Session>,
-    /// Global task id → session id.
+    /// Global task id → session id (this shard's sessions only).
     routes: HashMap<u64, u64>,
+    /// Tasks this shard is executing on behalf of peers: task id → owner
+    /// shard, so the result can be forwarded home.
+    stolen: HashMap<u64, usize>,
+    /// Own tasks currently parked on the steal queue or running on a peer
+    /// (they hold no local worker slot).
+    overflow_ids: HashSet<u64>,
+    /// Set when this dispatch round parked work on the steal queue; peers
+    /// get poked afterwards.
+    overflow_flag: bool,
+    fair: FairQueue,
     next_session: u64,
     next_task: u64,
     pending_exp: usize,
     pending_sim: usize,
-    virtual_time: f64,
     opened: u64,
     closed: u64,
+    /// Opens rejected by admission control ([`Busy`]).
+    rejected: u64,
     thinks: u64,
     sims: u64,
+    /// Simulation tasks executed here on behalf of peer shards.
+    sims_stolen: u64,
+    /// Own simulation tasks handed to the steal queue.
+    sims_shed: u64,
     think_latency: LatencyStats,
     started: Instant,
 }
 
-/// [`TaskSink`] over the shared pools for one session: allocates global
-/// ids, records the route and tracks global in-flight counts.
+/// [`TaskSink`] over the shared pools for one session: allocates
+/// shard-tagged global ids, records the route, tracks in-flight counts and
+/// sheds overflow simulations to the cross-shard steal queue.
 struct SharedSink<'a> {
     expansion: &'a Pool,
     simulation: &'a Pool,
@@ -300,14 +427,29 @@ struct SharedSink<'a> {
     pending_exp: &'a mut usize,
     pending_sim: &'a mut usize,
     session: u64,
+    /// `(shard index + 1) << 48`, OR-ed into every allocated task id.
+    shard_tag: u64,
+    shard_index: usize,
+    sim_capacity: usize,
+    /// Stolen-task slots currently busy on this shard's simulation pool.
+    busy_stolen: usize,
+    steal: Option<&'a StealQueue>,
+    overflow_ids: &'a mut HashSet<u64>,
+    overflow_flag: &'a mut bool,
+    sims_shed: &'a mut u64,
 }
 
 impl SharedSink<'_> {
     fn next_id(&mut self) -> u64 {
-        let id = *self.next_task;
+        let id = self.shard_tag | *self.next_task;
         *self.next_task += 1;
         self.routes.insert(id, self.session);
         id
+    }
+
+    /// Simulation slots actually busy on the local pool right now.
+    fn running_sims(&self) -> usize {
+        self.pending_sim.saturating_sub(self.overflow_ids.len()) + self.busy_stolen
     }
 }
 
@@ -321,8 +463,22 @@ impl TaskSink for SharedSink<'_> {
 
     fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64 {
         let id = self.next_id();
-        self.simulation.submit(Task::Simulate { task_id: id, env, gamma, limit });
+        let task = Task::Simulate { task_id: id, env, gamma, limit };
+        let saturated = self.running_sims() >= self.sim_capacity;
         *self.pending_sim += 1;
+        match self.steal {
+            // The local pool is saturated (this happens when expansion
+            // results materialize their follow-up simulations): park the
+            // task on the shared queue so an idle peer — or this shard,
+            // once a slot frees — can pick it up.
+            Some(queue) if saturated => {
+                self.overflow_ids.insert(id);
+                queue.push(self.shard_index, task);
+                *self.overflow_flag = true;
+                *self.sims_shed += 1;
+            }
+            _ => self.simulation.submit(task),
+        }
         id
     }
 }
@@ -355,33 +511,14 @@ impl Scheduler {
                 self.handle_result(result);
                 true
             }
+            SchedMsg::Poke => true, // dispatch() after the drain pops steals
         }
     }
 
     fn handle_request(&mut self, req: Request) -> bool {
         match req {
-            Request::Open { env, spec, opts, reply } => {
-                let id = self.next_session;
-                self.next_session += 1;
-                let default_sims = if opts.think_sims > 0 {
-                    opts.think_sims
-                } else {
-                    spec.max_simulations
-                };
-                let session = Session {
-                    driver: SearchDriver::new(spec, env.as_ref()),
-                    thinking: None,
-                    deadline: self.virtual_time,
-                    stride: 1.0 / opts.weight.max(1e-6),
-                    default_sims,
-                    remaining: opts.total_sim_budget,
-                    thinks: 0,
-                    sims: 0,
-                    steps: 0,
-                };
-                self.sessions.insert(id, session);
-                self.opened += 1;
-                let _ = reply.send(id);
+            Request::Open { env, spec, opts, id, reply } => {
+                let _ = reply.send(self.do_open(env, spec, opts, id));
             }
             Request::Think { session, sims, reply } => {
                 match self.begin_think(session, sims, &reply) {
@@ -410,6 +547,52 @@ impl Scheduler {
         true
     }
 
+    fn do_open(
+        &mut self,
+        env: Box<dyn Env>,
+        spec: SearchSpec,
+        opts: SessionOptions,
+        id: Option<u64>,
+    ) -> Result<u64> {
+        if let Some(limit) = self.shard.max_sessions {
+            if self.sessions.len() >= limit {
+                self.rejected += 1;
+                return Err(anyhow::Error::new(Busy { open: self.sessions.len(), limit }));
+            }
+        }
+        let id = match id {
+            Some(id) => {
+                if self.sessions.contains_key(&id) {
+                    bail!("session id {id} already open on this shard");
+                }
+                id
+            }
+            None => {
+                let id = self.next_session;
+                self.next_session += 1;
+                id
+            }
+        };
+        let default_sims = if opts.think_sims > 0 {
+            opts.think_sims
+        } else {
+            spec.max_simulations
+        };
+        let session = Session {
+            driver: SearchDriver::new(spec, env.as_ref()),
+            thinking: None,
+            default_sims,
+            remaining: opts.total_sim_budget,
+            thinks: 0,
+            sims: 0,
+            steps: 0,
+        };
+        self.fair.admit(id, opts.weight);
+        self.sessions.insert(id, session);
+        self.opened += 1;
+        Ok(id)
+    }
+
     /// Start a think; the reply is deferred until the budget drains.
     fn begin_think(
         &mut self,
@@ -417,7 +600,6 @@ impl Scheduler {
         sims: u32,
         reply: &Sender<Result<ThinkReply>>,
     ) -> Result<()> {
-        let virtual_time = self.virtual_time;
         let sess = self
             .sessions
             .get_mut(&sid)
@@ -433,11 +615,12 @@ impl Scheduler {
             budget = budget.min(rem.min(u32::MAX as u64) as u32);
         }
         sess.driver.begin(budget);
+        sess.thinking = Some(ThinkJob { reply: reply.clone(), started: Instant::now() });
+        let done = sess.driver.done();
         // A session that was idle re-enters the race at the current
         // virtual time (it must not hoard credit accrued while idle).
-        sess.deadline = sess.deadline.max(virtual_time);
-        sess.thinking = Some(ThinkJob { reply: reply.clone(), started: Instant::now() });
-        if sess.driver.done() {
+        self.fair.rejoin(sid);
+        if done {
             self.finish_think(sid);
         }
         Ok(())
@@ -459,6 +642,7 @@ impl Scheduler {
     fn do_close(&mut self, sid: u64) -> Result<CloseReply> {
         self.idle_session(sid)?; // reject while a think is in flight
         let sess = self.sessions.remove(&sid).expect("checked above");
+        self.fair.remove(sid);
         self.closed += 1;
         Ok(CloseReply {
             thinks: sess.thinks,
@@ -480,22 +664,15 @@ impl Scheduler {
         Ok(sess)
     }
 
-    /// Route a pool result to its session and absorb it.
-    fn handle_result(&mut self, result: TaskResult) {
-        let task_id = match &result {
-            TaskResult::Expanded(r) => r.task_id,
-            TaskResult::Simulated(r) => r.task_id,
-        };
-        match &result {
-            TaskResult::Expanded(_) => self.pending_exp -= 1,
-            TaskResult::Simulated(_) => self.pending_sim -= 1,
-        }
-        let Some(sid) = self.routes.remove(&task_id) else {
-            // Session vanished mid-flight (cannot happen: close requires
-            // quiescence) — drop defensively rather than poison the loop.
-            return;
-        };
-        let Some(sess) = self.sessions.get_mut(&sid) else { return };
+    /// Run `f` with the session's driver and a sink wired to this shard's
+    /// pools; `None` if the session vanished.
+    fn drive<R>(
+        &mut self,
+        sid: u64,
+        f: impl FnOnce(&mut Session, &mut SharedSink) -> R,
+    ) -> Option<R> {
+        let busy_stolen = self.stolen.len();
+        let sess = self.sessions.get_mut(&sid)?;
         let mut sink = SharedSink {
             expansion: &self.expansion,
             simulation: &self.simulation,
@@ -504,16 +681,86 @@ impl Scheduler {
             pending_exp: &mut self.pending_exp,
             pending_sim: &mut self.pending_sim,
             session: sid,
+            shard_tag: (self.shard.index as u64 + 1) << 48,
+            shard_index: self.shard.index,
+            sim_capacity: self.simulation.capacity(),
+            busy_stolen,
+            steal: self.shard.steal.as_deref(),
+            overflow_ids: &mut self.overflow_ids,
+            overflow_flag: &mut self.overflow_flag,
+            sims_shed: &mut self.sims_shed,
         };
-        sess.driver.absorb(result, &mut sink);
-        if sess.thinking.is_some() && sess.driver.done() {
+        Some(f(sess, &mut sink))
+    }
+
+    /// Route a pool result to its session and absorb it. Results of tasks
+    /// stolen from a peer are forwarded to the owner's inbox instead.
+    fn handle_result(&mut self, result: TaskResult) {
+        let task_id = result.task_id();
+        if let Some(owner) = self.stolen.remove(&task_id) {
+            // Executed on behalf of a peer: hand the result home. A dead
+            // peer (mid-shutdown) just drops it.
+            if let Some(peer) = self.shard.peers.get(owner) {
+                let _ = peer.send(SchedMsg::Done(result));
+            }
+            return;
+        }
+        match &result {
+            TaskResult::Expanded(_) => self.pending_exp = self.pending_exp.saturating_sub(1),
+            TaskResult::Simulated(_) => self.pending_sim = self.pending_sim.saturating_sub(1),
+        }
+        self.overflow_ids.remove(&task_id);
+        let Some(sid) = self.routes.remove(&task_id) else {
+            // Session vanished mid-flight (cannot happen: close requires
+            // quiescence) — drop defensively rather than poison the loop.
+            return;
+        };
+        let done = self.drive(sid, |sess, sink| {
+            sess.driver.absorb(result, sink);
+            sess.thinking.is_some() && sess.driver.done()
+        });
+        if done == Some(true) {
             self.finish_think(sid);
+        }
+    }
+
+    /// Simulation slots free on the local pool: capacity minus own tasks
+    /// actually running here minus stolen tasks running here. Own tasks
+    /// parked on the steal queue (or running on a peer) hold no slot.
+    fn free_sim_slots(&self) -> usize {
+        let running_own = self.pending_sim.saturating_sub(self.overflow_ids.len());
+        self.simulation
+            .capacity()
+            .saturating_sub(running_own + self.stolen.len())
+    }
+
+    /// Pull parked simulation tasks — our own overflow or a peer's — onto
+    /// free local slots.
+    fn pop_steals(&mut self) {
+        let Some(queue) = self.shard.steal.clone() else { return };
+        while self.free_sim_slots() > 0 {
+            let Some((owner, task)) = queue.pop() else { break };
+            let task_id = match &task {
+                Task::Simulate { task_id, .. } => *task_id,
+                Task::Expand { task_id, .. } => *task_id,
+                Task::Shutdown => continue, // never parked; skip defensively
+            };
+            if owner == self.shard.index {
+                // Reclaimed our own overflow: it occupies a local slot
+                // again and routes normally.
+                self.overflow_ids.remove(&task_id);
+            } else {
+                self.stolen.insert(task_id, owner);
+                self.sims_stolen += 1;
+            }
+            self.simulation.submit(task);
         }
     }
 
     /// Fill free worker slots: repeatedly let the thinking session with
     /// the earliest virtual deadline issue one rollout.
     fn dispatch(&mut self) {
+        self.pop_steals();
         loop {
             // A rollout's kind is unknown until selection runs, so the
             // gate cannot be exact per pool. Requiring headroom in BOTH
@@ -525,39 +772,35 @@ impl Scheduler {
             // of its pool by at most the free simulation capacity —
             // bounded in-flight work without cross-pool head-of-line
             // blocking.
-            let free_sim = self.simulation.capacity().saturating_sub(self.pending_sim);
+            let free_sim = self.free_sim_slots();
             if free_sim == 0 || self.pending_exp >= self.expansion.capacity() + free_sim {
-                return;
+                break;
             }
-            let Some(sid) = self
-                .sessions
-                .iter()
-                .filter(|(_, s)| s.thinking.is_some() && s.driver.can_issue())
-                .min_by(|a, b| {
-                    a.1.deadline
-                        .partial_cmp(&b.1.deadline)
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                })
-                .map(|(&id, _)| id)
-            else {
-                return;
+            let Some(sid) = self.fair.earliest(
+                self.sessions
+                    .iter()
+                    .filter(|(_, s)| s.thinking.is_some() && s.driver.can_issue())
+                    .map(|(&id, _)| id),
+            ) else {
+                break;
             };
-            let sess = self.sessions.get_mut(&sid).expect("picked above");
-            self.virtual_time = sess.deadline;
-            sess.deadline += sess.stride;
-            let mut sink = SharedSink {
-                expansion: &self.expansion,
-                simulation: &self.simulation,
-                routes: &mut self.routes,
-                next_task: &mut self.next_task,
-                pending_exp: &mut self.pending_exp,
-                pending_sim: &mut self.pending_sim,
-                session: sid,
-            };
-            sess.driver.issue(&mut sink);
-            // Terminal short-circuits can complete a think synchronously.
-            if sess.driver.done() {
+            self.fair.charge(sid);
+            let done = self.drive(sid, |sess, sink| {
+                sess.driver.issue(sink);
+                // Terminal short-circuits can complete a think
+                // synchronously.
+                sess.driver.done()
+            });
+            if done == Some(true) {
                 self.finish_think(sid);
+            }
+        }
+        if std::mem::take(&mut self.overflow_flag) {
+            // Parked work this round: wake idle peers so it gets stolen.
+            for (i, peer) in self.shard.peers.iter().enumerate() {
+                if i != self.shard.index {
+                    let _ = peer.send(SchedMsg::Poke);
+                }
             }
         }
     }
@@ -596,11 +839,15 @@ impl Scheduler {
             self.think_latency.summary_ms();
         ServiceMetrics {
             uptime,
+            shards: 1,
             sessions_open: self.sessions.len(),
             sessions_opened: self.opened,
             sessions_closed: self.closed,
+            sessions_rejected: self.rejected,
             thinks: self.thinks,
             sims: self.sims,
+            sims_stolen: self.sims_stolen,
+            sims_shed: self.sims_shed,
             sessions_per_sec: self.closed as f64 / secs,
             thinks_per_sec: self.thinks as f64 / secs,
             sims_per_sec: self.sims as f64 / secs,
@@ -749,5 +996,62 @@ mod tests {
         assert_eq!(m.pending_simulations, 0);
         assert_eq!(m.expansion_workers, 1);
         assert_eq!(m.simulation_workers, 1);
+        assert_eq!(m.sims_stolen, 0);
+        assert_eq!(m.sims_shed, 0);
+        assert_eq!(m.sessions_rejected, 0);
+    }
+
+    #[test]
+    fn session_cap_rejects_with_typed_busy() {
+        let (tx, rx) = channel::<SchedMsg>();
+        let wiring = ShardWiring {
+            index: 0,
+            peers: vec![tx.clone()],
+            steal: None,
+            max_sessions: Some(2),
+        };
+        let cfg = ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 1,
+            ..Default::default()
+        };
+        let service = SearchService::start_shard(cfg, wiring, tx, rx);
+        let h = service.handle();
+        let a = h.open(garnet(1), quick_spec(1), SessionOptions::default()).unwrap();
+        let _b = h.open(garnet(2), quick_spec(2), SessionOptions::default()).unwrap();
+        let err = h
+            .open(garnet(3), quick_spec(3), SessionOptions::default())
+            .expect_err("third open must be rejected");
+        let busy = err.downcast_ref::<Busy>().expect("typed Busy error");
+        assert_eq!(busy.limit, 2);
+        assert_eq!(busy.open, 2);
+        // Freeing a slot re-admits.
+        h.close(a).unwrap();
+        let c = h.open(garnet(4), quick_spec(4), SessionOptions::default()).unwrap();
+        h.close(c).unwrap();
+        let m = h.metrics().unwrap();
+        assert_eq!(m.sessions_rejected, 1);
+    }
+
+    #[test]
+    fn explicit_session_ids_roundtrip_and_reject_duplicates() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 1,
+            ..Default::default()
+        });
+        let h = service.handle();
+        let sid = h
+            .open_with_id(777, garnet(5), quick_spec(5), SessionOptions::default())
+            .unwrap();
+        assert_eq!(sid, 777);
+        assert!(
+            h.open_with_id(777, garnet(6), quick_spec(6), SessionOptions::default())
+                .is_err(),
+            "duplicate explicit id must be rejected"
+        );
+        let t = h.think(777, 4).unwrap();
+        assert!(t.quiescent);
+        h.close(777).unwrap();
     }
 }

@@ -1,9 +1,14 @@
 //! TCP front-end: line-delimited JSON over a socket, one thread per
-//! connection, all connections multiplexed onto one [`ServiceHandle`].
+//! connection, all connections multiplexed onto one [`SessionApi`] handle
+//! — a single-shard [`crate::service::ServiceHandle`] or the sharded
+//! router ([`crate::service::ShardedHandle`]) interchangeably.
 //!
 //! Connection hygiene: sessions opened over a connection and not closed
 //! by the client are closed automatically when the connection drops, so
-//! a crashed load generator cannot leak sessions into the scheduler.
+//! a crashed load generator cannot leak sessions into the schedulers.
+//! Lines are read as raw bytes and dispatched through
+//! [`handle_bytes`], so even invalid UTF-8 earns an error reply instead
+//! of a dropped connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -13,8 +18,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::service::proto::{handle_line, LineEffect};
-use crate::service::scheduler::ServiceHandle;
+use crate::service::proto::{handle_bytes, LineEffect};
+use crate::service::SessionApi;
 
 /// A running TCP front-end; dropping stops the accept loop.
 pub struct TcpServer {
@@ -25,7 +30,7 @@ pub struct TcpServer {
 
 impl TcpServer {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve `handle`.
-    pub fn bind(handle: ServiceHandle, addr: &str) -> Result<TcpServer> {
+    pub fn bind<H: SessionApi>(handle: H, addr: &str) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr().context("reading bound address")?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -66,21 +71,29 @@ impl Drop for TcpServer {
     }
 }
 
-/// One connection: read a line, dispatch, write the reply line. On EOF or
-/// I/O error, close every session the connection still owns.
-fn serve_connection(stream: TcpStream, handle: ServiceHandle) {
+/// One connection: read a raw line, dispatch, write the reply line. On
+/// EOF or I/O error, close every session the connection still owns.
+fn serve_connection<H: SessionApi>(stream: TcpStream, handle: H) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream);
     let mut owned: Vec<u64> = Vec::new();
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        line.clear();
+        match reader.read_until(b'\n', &mut line) {
+            Ok(0) | Err(_) => break, // EOF or connection error
+            Ok(_) => {}
+        }
+        while line.last().is_some_and(|&b| b == b'\n' || b == b'\r') {
+            line.pop();
+        }
+        if line.iter().all(|b| b.is_ascii_whitespace()) {
             continue;
         }
-        let (reply, effect) = handle_line(&handle, &line);
+        let (reply, effect) = handle_bytes(&handle, &line);
         match effect {
             LineEffect::Opened(sid) => owned.push(sid),
             LineEffect::Closed(sid) => owned.retain(|&s| s != sid),
@@ -103,6 +116,7 @@ mod tests {
     use super::*;
     use crate::service::json::Json;
     use crate::service::scheduler::{SearchService, ServiceConfig};
+    use crate::service::shard::{ShardedConfig, ShardedService};
     use std::io::{BufRead, BufReader, Write};
     use std::time::Duration;
 
@@ -159,6 +173,35 @@ mod tests {
     }
 
     #[test]
+    fn episode_over_tcp_against_sharded_service() {
+        let svc = ShardedService::start(ShardedConfig {
+            shards: 2,
+            shard: ServiceConfig {
+                expansion_workers: 1,
+                simulation_workers: 2,
+                ..ServiceConfig::default()
+            },
+            ..ShardedConfig::default()
+        });
+        let server = TcpServer::bind(svc.handle(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let v = request(
+            &mut reader,
+            &mut writer,
+            r#"{"op":"open","env":"garnet","seed":2,"sims":8,"rollout":6}"#,
+        );
+        let sid = v.get("session").unwrap().as_u64().unwrap();
+        let v = request(&mut reader, &mut writer, &format!(r#"{{"op":"think","session":{sid}}}"#));
+        assert_eq!(v.get("quiescent").unwrap().as_bool(), Some(true));
+        let v = request(&mut reader, &mut writer, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        let v = request(&mut reader, &mut writer, r#"{"op":"metrics"}"#);
+        assert_eq!(v.get("shards").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
     fn dropped_connection_closes_orphan_sessions() {
         let (svc, server) = start();
         {
@@ -191,6 +234,25 @@ mod tests {
         let mut reader = BufReader::new(stream);
         let v = request(&mut reader, &mut writer, "garbage");
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        let v = request(&mut reader, &mut writer, r#"{"op":"ping"}"#);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn invalid_utf8_lines_get_error_replies_not_disconnects() {
+        let (_svc, server) = start();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        // Raw invalid UTF-8 followed by newline.
+        writer.write_all(&[0xFF, 0xC0, b'{', b'\n']).unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let v = Json::parse(reply.trim()).expect("error reply is valid json");
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("utf-8"));
+        // Connection still serves.
         let v = request(&mut reader, &mut writer, r#"{"op":"ping"}"#);
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
     }

@@ -1,0 +1,363 @@
+//! Deterministic drivers on top of the virtual executor.
+//!
+//! * [`scripted_search`] — one [`SearchDriver`] under the dedicated-pool
+//!   WU-UCT control flow (the blocking loop of
+//!   [`crate::mcts::wu_uct::WuUct`]), in virtual time;
+//! * [`ScriptedService`] — many sessions under the *same*
+//!   [`FairQueue`](crate::service::fair::FairQueue) policy and dispatch
+//!   gate the live scheduler shard runs, in virtual time. Every issue and
+//!   completion lands in one golden [`Trace`], and a per-completion hook
+//!   exposes the per-session completed counts so fairness bounds can be
+//!   asserted *at every tick*, not just at the end.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::env::Env;
+use crate::mcts::common::SearchSpec;
+use crate::mcts::wu_uct::driver::{SearchDriver, TaskSink};
+use crate::service::fair::FairQueue;
+use crate::testkit::executor::{Trace, VirtualExecutor};
+use crate::testkit::latency::LatencyScript;
+
+/// Outcome of a [`scripted_search`].
+pub struct SearchOutcome {
+    pub best_action: usize,
+    /// Completed simulations (must equal the budget).
+    pub completed: u32,
+    /// Final virtual time.
+    pub ticks: u64,
+    pub tree_size: usize,
+    pub trace: Trace,
+}
+
+/// Run one full WU-UCT search against virtual pools of the given
+/// capacities, mirroring the dedicated master's control flow: fill both
+/// pools, then block on the earliest completion. Fully deterministic in
+/// `(spec, env, capacities, script)`.
+pub fn scripted_search(
+    spec: SearchSpec,
+    env: &dyn Env,
+    exp_capacity: usize,
+    sim_capacity: usize,
+    script: LatencyScript,
+) -> SearchOutcome {
+    let budget = spec.max_simulations;
+    let mut driver = SearchDriver::new(spec, env);
+    driver.begin(budget);
+    let mut exec = VirtualExecutor::new(exp_capacity, sim_capacity, script);
+    while !driver.done() {
+        if driver.can_issue()
+            && exec.pending_exp() < exp_capacity
+            && exec.pending_sim() < sim_capacity
+        {
+            driver.issue(&mut exec);
+            continue;
+        }
+        match exec.next_result() {
+            Some(result) => driver.absorb(result, &mut exec),
+            None => {
+                // Pools idle with budget unfinished: the remaining
+                // rollouts have not been issued yet (pure short-circuit
+                // phases hit this); issue unconditionally.
+                debug_assert!(driver.can_issue(), "stalled: nothing in flight, not done");
+                if !driver.can_issue() {
+                    break;
+                }
+                driver.issue(&mut exec);
+            }
+        }
+    }
+    driver.assert_quiescent();
+    SearchOutcome {
+        best_action: driver.best_action(),
+        completed: driver.completed(),
+        ticks: exec.now(),
+        tree_size: driver.tree().len(),
+        trace: exec.take_trace(),
+    }
+}
+
+struct ScriptedSession {
+    driver: SearchDriver,
+    thinking: bool,
+}
+
+/// [`TaskSink`] wrapper recording task → session routes, exactly like the
+/// live scheduler's shared sink.
+struct RoutedSink<'a> {
+    exec: &'a mut VirtualExecutor,
+    routes: &'a mut HashMap<u64, u64>,
+    session: u64,
+}
+
+impl TaskSink for RoutedSink<'_> {
+    fn submit_expand(&mut self, env: Box<dyn Env>, action: usize, max_width: usize) -> u64 {
+        let id = self.exec.submit_expand(env, action, max_width);
+        self.routes.insert(id, self.session);
+        id
+    }
+
+    fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64 {
+        let id = self.exec.submit_simulate(env, gamma, limit);
+        self.routes.insert(id, self.session);
+        id
+    }
+}
+
+/// A deterministic replica of one scheduler shard: sessions with private
+/// [`SearchDriver`]s, the extracted [`FairQueue`] policy, and the live
+/// dispatch gate (free simulation slot required; expansion backlog may
+/// run ahead by the free simulation capacity) — all in virtual time.
+pub struct ScriptedService {
+    exec: VirtualExecutor,
+    fair: FairQueue,
+    /// BTreeMap so iteration (and therefore eligibility enumeration) is
+    /// deterministic; the fair queue's id tie-break makes the pick
+    /// deterministic regardless.
+    sessions: BTreeMap<u64, ScriptedSession>,
+    routes: HashMap<u64, u64>,
+    exp_capacity: usize,
+    sim_capacity: usize,
+}
+
+impl ScriptedService {
+    pub fn new(exp_capacity: usize, sim_capacity: usize, script: LatencyScript) -> Self {
+        ScriptedService {
+            exec: VirtualExecutor::new(exp_capacity, sim_capacity, script),
+            fair: FairQueue::new(),
+            sessions: BTreeMap::new(),
+            routes: HashMap::new(),
+            exp_capacity,
+            sim_capacity,
+        }
+    }
+
+    /// Open a session rooted at `env`'s current state.
+    pub fn open(&mut self, id: u64, env: &dyn Env, spec: SearchSpec, weight: f64) {
+        assert!(
+            !self.sessions.contains_key(&id),
+            "session {id} already open"
+        );
+        self.fair.admit(id, weight);
+        self.sessions
+            .insert(id, ScriptedSession { driver: SearchDriver::new(spec, env), thinking: false });
+        self.exec.note(&format!("open sid={id} weight={weight}"));
+    }
+
+    /// Begin a think with an explicit budget; runs when [`Self::run`] is
+    /// called (all pending thinks progress concurrently, like sessions
+    /// thinking at once on a live shard).
+    pub fn begin_think(&mut self, id: u64, budget: u32) {
+        let sess = self.sessions.get_mut(&id).expect("unknown session");
+        assert!(!sess.thinking, "session {id} already thinking");
+        sess.driver.begin(budget);
+        sess.thinking = budget > 0;
+        self.fair.rejoin(id);
+        self.exec.note(&format!("think sid={id} budget={budget}"));
+    }
+
+    /// Per-session completed-simulation counts for the current thinks.
+    pub fn completed(&self) -> BTreeMap<u64, u32> {
+        self.sessions
+            .iter()
+            .map(|(&id, s)| (id, s.driver.completed()))
+            .collect()
+    }
+
+    pub fn best_action(&self, id: u64) -> usize {
+        self.sessions[&id].driver.best_action()
+    }
+
+    /// No in-flight tasks and `ΣO = 0` (the paper's invariant).
+    pub fn quiescent(&self, id: u64) -> bool {
+        let s = &self.sessions[&id];
+        s.driver.outstanding() == 0 && s.driver.tree().total_unobserved() == 0
+    }
+
+    pub fn thinking(&self, id: u64) -> bool {
+        self.sessions[&id].thinking
+    }
+
+    pub fn now(&self) -> u64 {
+        self.exec.now()
+    }
+
+    pub fn trace(&self) -> &Trace {
+        self.exec.trace()
+    }
+
+    pub fn take_trace(&mut self) -> Trace {
+        self.exec.take_trace()
+    }
+
+    /// The live shard's dispatch pass: while the gate is open, the
+    /// eligible session with the earliest virtual deadline issues one
+    /// rollout.
+    fn dispatch(&mut self) {
+        loop {
+            let free_sim = self.sim_capacity.saturating_sub(self.exec.pending_sim());
+            if free_sim == 0 || self.exec.pending_exp() >= self.exp_capacity + free_sim {
+                return;
+            }
+            let Some(sid) = self.fair.earliest(
+                self.sessions
+                    .iter()
+                    .filter(|(_, s)| s.thinking && s.driver.can_issue())
+                    .map(|(&id, _)| id),
+            ) else {
+                return;
+            };
+            self.fair.charge(sid);
+            let sess = self.sessions.get_mut(&sid).expect("picked above");
+            let mut sink =
+                RoutedSink { exec: &mut self.exec, routes: &mut self.routes, session: sid };
+            sess.driver.issue(&mut sink);
+            if sess.thinking && sess.driver.done() {
+                sess.thinking = false;
+                self.exec.note(&format!("think-done sid={sid}"));
+            }
+        }
+    }
+
+    /// Run every pending think to completion. `on_tick` fires after each
+    /// absorbed completion with `(virtual time, per-session completed
+    /// counts)` — the hook fairness properties assert on.
+    pub fn run(&mut self, mut on_tick: impl FnMut(u64, &BTreeMap<u64, u32>)) {
+        loop {
+            self.dispatch();
+            let Some(result) = self.exec.next_result() else { break };
+            let task_id = result.task_id();
+            let Some(sid) = self.routes.remove(&task_id) else { continue };
+            let sess = self.sessions.get_mut(&sid).expect("routed session exists");
+            let mut sink =
+                RoutedSink { exec: &mut self.exec, routes: &mut self.routes, session: sid };
+            sess.driver.absorb(result, &mut sink);
+            if sess.thinking && sess.driver.done() {
+                sess.thinking = false;
+                self.exec.note(&format!("think-done sid={sid}"));
+            }
+            let counts = self.completed();
+            on_tick(self.exec.now(), &counts);
+        }
+        for (&id, sess) in &self.sessions {
+            assert!(
+                !sess.thinking,
+                "session {id} stalled mid-think; trace:\n{}",
+                self.exec.trace().render()
+            );
+        }
+    }
+
+    /// [`Self::run`] without a tick hook.
+    pub fn run_to_completion(&mut self) {
+        self.run(|_, _| {});
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+
+    fn spec(sims: u32, seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: sims,
+            rollout_limit: 8,
+            max_depth: 12,
+            seed,
+            ..SearchSpec::default()
+        }
+    }
+
+    fn env(seed: u64) -> Garnet {
+        Garnet::new(15, 3, 30, 0.0, seed)
+    }
+
+    #[test]
+    fn scripted_search_completes_budget_deterministically() {
+        let e = env(1);
+        let script = LatencyScript::uniform(7, (1, 3), (2, 9));
+        let run = || scripted_search(spec(32, 1), &e, 2, 4, script);
+        let a = run();
+        let b = run();
+        assert_eq!(a.completed, 32);
+        assert!(a.tree_size > 1);
+        assert!(e.legal_actions().contains(&a.best_action));
+        assert_eq!(a.best_action, b.best_action);
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.trace, b.trace, "same seed ⇒ identical golden trace");
+    }
+
+    #[test]
+    fn different_worker_counts_change_the_schedule() {
+        let e = env(2);
+        let narrow = scripted_search(spec(24, 2), &e, 1, 1, LatencyScript::fixed(2, 5));
+        let wide = scripted_search(spec(24, 2), &e, 2, 8, LatencyScript::fixed(2, 5));
+        assert_eq!(narrow.completed, 24);
+        assert_eq!(wide.completed, 24);
+        assert!(
+            wide.ticks < narrow.ticks,
+            "8 virtual workers ({}) must beat 1 ({}) on equal-latency tasks",
+            wide.ticks,
+            narrow.ticks
+        );
+        assert_ne!(narrow.trace, wide.trace, "schedules must actually differ");
+    }
+
+    #[test]
+    fn scripted_service_runs_sessions_to_quiescence() {
+        let mut svc = ScriptedService::new(2, 4, LatencyScript::uniform(11, (1, 3), (1, 7)));
+        for id in 1..=3u64 {
+            svc.open(id, &env(id), spec(20, id), 1.0);
+            svc.begin_think(id, 20);
+        }
+        svc.run_to_completion();
+        for id in 1..=3u64 {
+            assert!(svc.quiescent(id), "ΣO must drain for session {id}");
+            assert_eq!(svc.completed()[&id], 20);
+            assert!(!svc.thinking(id));
+        }
+    }
+
+    #[test]
+    fn scripted_service_replays_identically_from_a_seed() {
+        let run = |seed: u64| {
+            let mut svc = ScriptedService::new(1, 2, LatencyScript::uniform(seed, (1, 4), (2, 9)));
+            for id in 1..=4u64 {
+                svc.open(id, &env(10 + id), spec(12, id), 1.0);
+                svc.begin_think(id, 12);
+            }
+            svc.run_to_completion();
+            svc.take_trace()
+        };
+        assert_eq!(run(5), run(5), "same seed ⇒ identical golden trace");
+        assert_ne!(run(5), run(6), "different seeds script different schedules");
+    }
+
+    #[test]
+    fn weighted_sessions_get_proportional_issue_shares() {
+        // One weight-3 and one weight-1 session racing on one simulation
+        // slot: the heavy session should finish its (equal) budget well
+        // before the light one.
+        let mut svc = ScriptedService::new(1, 1, LatencyScript::fixed(1, 4));
+        svc.open(1, &env(21), spec(30, 1), 3.0);
+        svc.open(2, &env(22), spec(30, 2), 1.0);
+        svc.begin_think(1, 30);
+        svc.begin_think(2, 30);
+        let mut heavy_done_at = 0u64;
+        let mut light_done_at = 0u64;
+        svc.run(|now, counts| {
+            if counts[&1] >= 30 && heavy_done_at == 0 {
+                heavy_done_at = now;
+            }
+            if counts[&2] >= 30 && light_done_at == 0 {
+                light_done_at = now;
+            }
+        });
+        assert!(heavy_done_at > 0 && light_done_at > 0);
+        assert!(
+            heavy_done_at < light_done_at,
+            "weight-3 session finished at t={heavy_done_at}, weight-1 at t={light_done_at}"
+        );
+    }
+}

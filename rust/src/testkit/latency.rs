@@ -1,0 +1,111 @@
+//! Scripted task latencies: a pure function of `(seed, kind, task id)`.
+//!
+//! Latencies are *not* drawn from a stateful rng on purpose: a stateful
+//! stream would make a task's latency depend on how many tasks were
+//! scripted before it, so two schedules that issue the same task at
+//! different points would diverge for the wrong reason. Hashing the task
+//! id instead means a given task costs the same in every schedule that
+//! contains it — which is exactly what makes worker-count sweeps
+//! comparable.
+
+use crate::util::rng::SplitMix64;
+
+/// Latency ranges (virtual ticks, inclusive) per task kind, plus the seed
+/// that scripts the draws and the simulation policies.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyScript {
+    seed: u64,
+    expand: (u64, u64),
+    simulate: (u64, u64),
+}
+
+impl LatencyScript {
+    /// Constant latencies (the simplest reproducible schedule).
+    pub fn fixed(expand: u64, simulate: u64) -> LatencyScript {
+        LatencyScript { seed: 0, expand: (expand, expand), simulate: (simulate, simulate) }
+    }
+
+    /// Uniform latencies in the given inclusive ranges, scripted by `seed`.
+    pub fn uniform(seed: u64, expand: (u64, u64), simulate: (u64, u64)) -> LatencyScript {
+        assert!(expand.0 <= expand.1, "expand range reversed");
+        assert!(simulate.0 <= simulate.1, "simulate range reversed");
+        LatencyScript { seed, expand, simulate }
+    }
+
+    fn draw(&self, kind_tag: u64, task_id: u64, (lo, hi): (u64, u64)) -> u64 {
+        if lo == hi {
+            return lo;
+        }
+        let h = SplitMix64::new(
+            self.seed
+                ^ kind_tag.wrapping_mul(0xA076_1D64_78BD_642F)
+                ^ task_id.wrapping_mul(0xE703_7ED1_A0B4_28DB),
+        )
+        .next_u64();
+        lo + h % (hi - lo + 1)
+    }
+
+    pub fn expand_latency(&self, task_id: u64) -> u64 {
+        self.draw(0xE, task_id, self.expand)
+    }
+
+    pub fn simulate_latency(&self, task_id: u64) -> u64 {
+        self.draw(0x5, task_id, self.simulate)
+    }
+
+    /// Seed for the rollout policy executing simulation `task_id` (mirrors
+    /// the per-worker policy streams of the real pools, but tied to the
+    /// task so execution order cannot change a task's outcome).
+    pub fn policy_seed(&self, task_id: u64) -> u64 {
+        SplitMix64::new(self.seed ^ task_id.wrapping_mul(0x2545_F491_4F6C_DD1D)).next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_constant() {
+        let s = LatencyScript::fixed(3, 7);
+        for id in 0..50 {
+            assert_eq!(s.expand_latency(id), 3);
+            assert_eq!(s.simulate_latency(id), 7);
+        }
+    }
+
+    #[test]
+    fn uniform_stays_in_range_and_varies() {
+        let s = LatencyScript::uniform(42, (2, 5), (10, 20));
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..200 {
+            let e = s.expand_latency(id);
+            let m = s.simulate_latency(id);
+            assert!((2..=5).contains(&e));
+            assert!((10..=20).contains(&m));
+            seen.insert(m);
+        }
+        assert!(seen.len() > 3, "latencies should actually vary");
+    }
+
+    #[test]
+    fn latency_is_a_pure_function_of_task_id() {
+        let a = LatencyScript::uniform(7, (1, 9), (1, 9));
+        let b = LatencyScript::uniform(7, (1, 9), (1, 9));
+        for id in [0, 1, 17, 1000, u64::MAX / 2] {
+            assert_eq!(a.simulate_latency(id), b.simulate_latency(id));
+            assert_eq!(a.expand_latency(id), b.expand_latency(id));
+            assert_eq!(a.policy_seed(id), b.policy_seed(id));
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_scripts() {
+        let a = LatencyScript::uniform(1, (1, 1000), (1, 1000));
+        let b = LatencyScript::uniform(2, (1, 1000), (1, 1000));
+        let same = (0..100)
+            .filter(|&id| a.simulate_latency(id) == b.simulate_latency(id))
+            .count();
+        assert!(same < 20, "seeds 1 and 2 agreed on {same}/100 draws");
+    }
+}

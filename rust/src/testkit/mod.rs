@@ -1,0 +1,40 @@
+//! Deterministic concurrency testkit: virtual time, scripted latencies,
+//! golden traces.
+//!
+//! The service layer's claims are concurrency claims — fairness of the
+//! virtual-deadline scheduler, budget exactness under arbitrary
+//! interleavings, worker-count invariance of WU-UCT's chosen action,
+//! shard placement. Real thread schedules make those claims flaky to
+//! test and impossible to replay. This module removes the threads:
+//!
+//! * [`latency::LatencyScript`] — per-task latencies as a pure function
+//!   of `(seed, task kind, task id)`, so a scenario is fully described by
+//!   a seed;
+//! * [`executor::VirtualExecutor`] — a single-threaded [`TaskSink`] that
+//!   models the expansion/simulation pools in virtual time: a task
+//!   occupies a worker slot from its scripted start to finish, and
+//!   results return in deterministic `(finish, id)` order while tasks
+//!   execute with the *same* worker-side routines (`run_expand`,
+//!   `simulation_return`) the real pools run;
+//! * [`executor::Trace`] — the golden trace: every issue/completion as a
+//!   rendered line. Same seed ⇒ byte-identical trace, so any scheduler
+//!   decision can be asserted and any failure replayed;
+//! * [`harness`] — drivers on top: [`harness::scripted_search`] replays
+//!   the dedicated-pool WU-UCT control flow, and
+//!   [`harness::ScriptedService`] replays the multi-session scheduler
+//!   using the very same [`FairQueue`](crate::service::fair::FairQueue)
+//!   component and dispatch gate as the live shard threads.
+//!
+//! Used by `rust/tests/conformance.rs` (optimal-action conformance,
+//! worker-count invariance) and the fairness property in
+//! `rust/tests/properties.rs`.
+//!
+//! [`TaskSink`]: crate::mcts::wu_uct::driver::TaskSink
+
+pub mod executor;
+pub mod harness;
+pub mod latency;
+
+pub use executor::{Trace, VirtualExecutor};
+pub use harness::{scripted_search, ScriptedService, SearchOutcome};
+pub use latency::LatencyScript;

@@ -105,6 +105,16 @@ impl Args {
             .with_context(|| format!("--{name} must be a u32"))
     }
 
+    /// Like [`Args::usize`] but enforces a lower bound with a clear error
+    /// (for options where 0 would mean a dead service, e.g. `--shards`).
+    pub fn usize_at_least(&self, name: &str, min: usize) -> Result<usize> {
+        let v = self.usize(name)?;
+        if v < min {
+            bail!("--{name} must be at least {min} (got {v})");
+        }
+        Ok(v)
+    }
+
     pub fn f64(&self, name: &str) -> Result<f64> {
         self.str(name)?
             .parse()
@@ -195,6 +205,14 @@ mod tests {
     fn bad_int_rejected() {
         let a = Args::parse(["--workers", "ten"], &specs()).unwrap();
         assert!(a.usize("workers").is_err());
+    }
+
+    #[test]
+    fn usize_at_least_enforces_floor() {
+        let a = Args::parse(["--workers", "0"], &specs()).unwrap();
+        assert!(a.usize_at_least("workers", 1).is_err());
+        let a = Args::parse(["--workers", "4"], &specs()).unwrap();
+        assert_eq!(a.usize_at_least("workers", 1).unwrap(), 4);
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Cross-algorithm conformance: every entry in `mcts::ALGORITHMS` must
+//! identify the optimal root action of a seeded Garnet MDP within a fixed
+//! simulation budget, and WU-UCT's chosen action must be invariant to
+//! worker count under testkit-scripted latencies.
+//!
+//! ## Why the test MDP is *constructed*, not just seeded
+//!
+//! This repo's tree policy scores a child by its value `V` (the mean
+//! return observed **from the child's state onward**) — edge rewards are
+//! folded into the parent during backpropagation, matching Eqs. 2–4 of
+//! the paper. A random MDP whose optimal arm is optimal only because of
+//! its immediate edge reward is therefore not identifiable by *any* of
+//! the implemented algorithms, sequential UCT included. The scan below
+//! searches seeds for a 2-step Garnet in which
+//!
+//! 1. every return sample any algorithm can ever back up through arm `a`
+//!    lies in a computable interval `I_a` (rollouts contribute
+//!    `0.5·r(s_a,b) + 0.5·h(s_a)` for some action `b`; grandchild
+//!    short-circuits contribute `r(s_a,b)`), and
+//! 2. one arm's interval sits ≥ 0.2 above every other arm's, and
+//! 3. that same arm is the `Q*`-optimal root action (checked against the
+//!    Garnet's exact value iteration).
+//!
+//! Interval separation makes the test deterministic *by construction*:
+//! whatever rollout mixture a scheduler produces, the optimal arm's
+//! empirical value exceeds every competitor's, so UCB visit counts must
+//! concentrate on it within the budget — for every algorithm and every
+//! worker count.
+
+use wu_uct::env::garnet::Garnet;
+use wu_uct::env::Env;
+use wu_uct::mcts::{by_name, SearchSpec, ALGORITHMS};
+use wu_uct::testkit::{scripted_search, LatencyScript};
+
+const ARMS: usize = 3;
+const HORIZON: u32 = 2;
+/// Minimum gap between the optimal arm's value interval and the others'.
+const MARGIN: f64 = 0.2;
+
+/// Value-interval bounds for one root arm (see module docs).
+fn arm_interval(env: &Garnet, arm: usize) -> (f64, f64) {
+    let mut e = env.clone();
+    e.step(arm);
+    let h = e.heuristic_value();
+    let rewards: Vec<f64> = (0..ARMS).map(|b| e.action_heuristic(b)).collect();
+    let r_min = rewards.iter().cloned().fold(f64::MAX, f64::min);
+    let r_max = rewards.iter().cloned().fold(f64::MIN, f64::max);
+    let lo = f64::min(r_min, 0.5 * r_min + 0.5 * h);
+    let hi = f64::max(r_max, 0.5 * r_max + 0.5 * h);
+    (lo, hi)
+}
+
+/// Scan seeds for a Garnet whose optimal arm is identifiable by interval
+/// separation AND optimal under exact `Q*`. Deterministic: the scan order
+/// is fixed, so every run tests the same MDP. Memoized across tests.
+fn find_separated_garnet() -> (Garnet, usize) {
+    static FOUND: std::sync::OnceLock<(u64, usize)> = std::sync::OnceLock::new();
+    let &(seed, arm) = FOUND.get_or_init(scan);
+    (Garnet::new(40, ARMS, HORIZON, 0.0, seed), arm)
+}
+
+/// The scan body: returns `(garnet seed, optimal arm)`.
+fn scan() -> (u64, usize) {
+    for seed in 0..500_000u64 {
+        let env = Garnet::new(40, ARMS, HORIZON, 0.0, seed);
+        if env.is_terminal() {
+            continue;
+        }
+        let intervals: Vec<(f64, f64)> = (0..ARMS).map(|a| arm_interval(&env, a)).collect();
+        let Some(best) = (0..ARMS).find(|&a| {
+            (0..ARMS).all(|b| b == a || intervals[a].0 >= intervals[b].1 + MARGIN)
+        }) else {
+            continue;
+        };
+        // RootP ranks arms by `r(s0,a) + γ·V̂(s_a)` rather than by visit
+        // counts, so the separated arm must also win that criterion for
+        // every realizable subtree value — fold the edge rewards in.
+        let r0: Vec<f64> = (0..ARMS).map(|a| env.action_heuristic(a)).collect();
+        let gamma = SearchSpec::default().gamma;
+        let rootp_aligned = (0..ARMS).all(|b| {
+            b == best
+                || r0[best] + gamma * intervals[best].0 >= r0[b] + gamma * intervals[b].1 + 0.05
+        });
+        if !rootp_aligned {
+            continue;
+        }
+        // Ground truth: the separated arm must also be Q*-optimal with a
+        // clear gap, so "identifies the optimal root action" is a claim
+        // about the MDP, not about this repo's value convention.
+        let q: Vec<f64> = (0..ARMS).map(|a| env.q_star(a, HORIZON)).collect();
+        let q_best = q[best];
+        let runner_up = (0..ARMS)
+            .filter(|&a| a != best)
+            .map(|a| q[a])
+            .fold(f64::MIN, f64::max);
+        if q_best >= runner_up + 0.05 {
+            return (seed, best);
+        }
+    }
+    panic!("no interval-separated Garnet found in the scan range");
+}
+
+fn conformance_spec(sims: u32, seed: u64) -> SearchSpec {
+    SearchSpec {
+        max_simulations: sims,
+        rollout_limit: 4,
+        max_depth: 8,
+        // A soft exploration coefficient keeps UCB's forced exploration
+        // of the separated suboptimal arms to ~2·ln(T)·β²/gap² ≈ 20
+        // visits each, so the optimal arm dominates the visit count well
+        // within the budget.
+        beta: 0.25,
+        seed,
+        ..SearchSpec::default()
+    }
+}
+
+#[test]
+fn every_algorithm_identifies_the_optimal_root_action() {
+    let (env, optimal) = find_separated_garnet();
+    for name in ALGORITHMS {
+        let mut search = by_name(name, conformance_spec(600, 17), 2).unwrap();
+        let r = search.search(&env);
+        assert!(r.simulations >= 600, "{name} under-spent its budget");
+        assert_eq!(
+            r.best_action, optimal,
+            "{name} missed the optimal root action (chose {}, Q* favors {optimal})",
+            r.best_action
+        );
+    }
+}
+
+#[test]
+fn wu_uct_chosen_action_is_invariant_to_worker_count() {
+    // The paper's claim, made replayable: under scripted latencies, the
+    // WU-UCT driver must pick the same (optimal) root action no matter
+    // how many virtual workers execute its rollouts — even though the
+    // schedules themselves differ materially across worker counts.
+    let (env, optimal) = find_separated_garnet();
+    let script = LatencyScript::uniform(99, (1, 3), (2, 11));
+    let mut traces = Vec::new();
+    for (exp, sim) in [(1, 1), (1, 2), (2, 4), (4, 8), (4, 16)] {
+        let out = scripted_search(conformance_spec(400, 23), &env, exp, sim, script);
+        assert_eq!(out.completed, 400, "(exp={exp}, sim={sim}) under-spent");
+        assert_eq!(
+            out.best_action, optimal,
+            "worker count (exp={exp}, sim={sim}) changed the chosen action"
+        );
+        traces.push(out.trace);
+    }
+    // The invariance claim is only meaningful if the schedules differed.
+    assert!(
+        traces.windows(2).any(|w| w[0] != w[1]),
+        "every worker count produced an identical schedule — the sweep tests nothing"
+    );
+}
+
+#[test]
+fn scripted_conformance_searches_replay_identically() {
+    // Acceptance criterion: same seed ⇒ identical golden trace.
+    let (env, _) = find_separated_garnet();
+    let script = LatencyScript::uniform(7, (1, 4), (1, 9));
+    let a = scripted_search(conformance_spec(200, 3), &env, 2, 4, script);
+    let b = scripted_search(conformance_spec(200, 3), &env, 2, 4, script);
+    assert_eq!(a.best_action, b.best_action);
+    assert_eq!(a.ticks, b.ticks);
+    assert_eq!(a.trace, b.trace);
+}

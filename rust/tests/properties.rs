@@ -5,7 +5,10 @@ use wu_uct::env::garnet::Garnet;
 use wu_uct::env::{atari, Env};
 use wu_uct::mcts::common::{backprop, SearchSpec};
 use wu_uct::mcts::{Search, SearchSpec as Spec, SequentialUct, WuUct};
-use wu_uct::service::{SearchService, ServiceConfig, SessionOptions};
+use wu_uct::service::{
+    SearchService, ServiceConfig, SessionOptions, ShardedConfig, ShardedService,
+};
+use wu_uct::testkit::{LatencyScript, ScriptedService};
 use wu_uct::tree::{select_child, ScoreMode, Tree};
 use wu_uct::util::proptest::{check, Gen};
 use wu_uct::util::stats::{paired_t_test, t_two_sided_p};
@@ -311,6 +314,108 @@ fn prop_interleaved_sessions_quiesce_over_shared_pools() {
             joins.into_iter().all(|j| j.join().expect("session thread panicked"))
         });
         ok
+    });
+}
+
+#[test]
+fn prop_virtual_deadline_fairness_bounds_lag_at_every_tick() {
+    // With K equal-weight sessions over one shard, no session's
+    // completed-simulation count may lag the per-session mean by more
+    // than the shard's total in-flight capacity (+ one stride of
+    // scheduling slack) at any tick. Why that bound: stride scheduling
+    // keeps *issued* counts of always-eligible equal-weight lanes within
+    // 1 of each other, and the dispatch gate bounds total in-flight
+    // rollouts by exp_cap + sim_cap, so
+    //   mean(completed) − completed_i ≤ 1 + inflight_i ≤ 1 + exp + sim.
+    // The testkit replays the live FairQueue + gate deterministically, so
+    // a violation would reproduce from the printed seed.
+    check("fairness lag bound", 12, |g| {
+        let k = g.usize(2, 6);
+        let exp_cap = g.usize(1, 2);
+        let sim_cap = g.usize(1, 4);
+        let budget = g.u32(20, 50);
+        let script = LatencyScript::uniform(g.u64(), (1, 4), (1, 9));
+        let mut svc = ScriptedService::new(exp_cap, sim_cap, script);
+        for i in 1..=k as u64 {
+            let env = Garnet::new(12, 3, 40, 0.0, g.u64());
+            let spec = Spec {
+                max_simulations: budget,
+                rollout_limit: 6,
+                max_depth: 10,
+                seed: g.u64(),
+                ..Spec::default()
+            };
+            svc.open(i, &env, spec, 1.0);
+            svc.begin_think(i, budget);
+        }
+        let bound = (exp_cap + sim_cap + 2) as f64;
+        let mut fair = true;
+        svc.run(|_, counts| {
+            let total: u64 = counts.values().map(|&c| c as u64).sum();
+            let mean = total as f64 / counts.len() as f64;
+            for &c in counts.values() {
+                if mean - c as f64 > bound {
+                    fair = false;
+                }
+            }
+        });
+        fair && (1..=k as u64).all(|i| {
+            svc.quiescent(i) && svc.completed()[&i] == budget
+        })
+    });
+}
+
+#[test]
+fn prop_sharded_sessions_quiesce_with_stealing() {
+    // The per-session ΣO = 0 invariant must survive sharding: sessions
+    // hash to different schedulers, and overflowed simulations may be
+    // executed by a *different* shard's pool than the tree's owner.
+    check("sharded ΣO drains", 3, |g| {
+        let svc = ShardedService::start(ShardedConfig {
+            shards: g.usize(2, 3),
+            shard: ServiceConfig {
+                expansion_workers: g.usize(1, 2),
+                simulation_workers: g.usize(1, 2),
+                ..ServiceConfig::default()
+            },
+            ..ShardedConfig::default()
+        });
+        let n_sessions = g.usize(2, 5);
+        let seeds: Vec<u64> = (0..n_sessions).map(|_| g.u64()).collect();
+        let budgets: Vec<u32> = (0..n_sessions).map(|_| g.u32(8, 48)).collect();
+        let handle = svc.handle();
+        std::thread::scope(|scope| {
+            let joins: Vec<_> = seeds
+                .iter()
+                .zip(&budgets)
+                .map(|(&seed, &budget)| {
+                    let h = handle.clone();
+                    scope.spawn(move || {
+                        let env = Box::new(Garnet::new(12, 3, 20, 0.0, seed));
+                        let spec = Spec {
+                            max_simulations: budget,
+                            rollout_limit: 6,
+                            max_depth: 8,
+                            seed,
+                            ..Spec::default()
+                        };
+                        let sid = h.open(env, spec, SessionOptions::default()).unwrap();
+                        let mut ok = true;
+                        for _ in 0..2 {
+                            let t = h.think(sid, budget).unwrap();
+                            ok &= t.quiescent && t.sims == budget;
+                            let adv = h.advance(sid, t.action).unwrap();
+                            if adv.done {
+                                break;
+                            }
+                        }
+                        let close = h.close(sid).unwrap();
+                        ok && close.unobserved == 0
+                    })
+                })
+                .collect();
+            joins.into_iter().all(|j| j.join().expect("session thread panicked"))
+        })
     });
 }
 
