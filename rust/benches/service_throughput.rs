@@ -13,6 +13,12 @@
 //! ```text
 //! {"bench":"service_throughput","shards":4,"sessions":32,"sessions_per_sec":...,...}
 //! ```
+//!
+//! It is also the repo's **perf baseline recorder**: the run writes
+//! `BENCH_service_throughput.json` at the repository root — the headline
+//! cell (`{bench, config, sessions_per_sec, p50_ms, p99_ms}`) plus every
+//! swept cell and a store-codec snapshot/restore round-trip timing row,
+//! so the durability layer's serialization cost is tracked from day one.
 
 use std::time::Instant;
 
@@ -20,7 +26,10 @@ use wu_uct::bench::paper_scale;
 use wu_uct::env::garnet::Garnet;
 use wu_uct::mcts::SearchSpec;
 use wu_uct::service::json::{obj, Json};
+use wu_uct::service::metrics::percentile;
 use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, SessionOptions};
+use wu_uct::store::codec::{SessionImage, SessionMeta};
+use wu_uct::testkit::{scripted_driver, LatencyScript};
 
 struct Cell {
     shards: usize,
@@ -29,6 +38,7 @@ struct Cell {
     thinks_per_sec: f64,
     sims_per_sec: f64,
     mean_think_ms: f64,
+    p50_think_ms: f64,
     p99_think_ms: f64,
     sim_occupancy: f64,
     sims_stolen: u64,
@@ -85,27 +95,71 @@ fn run_cell(
         thinks_per_sec: m.thinks as f64 / elapsed,
         sims_per_sec: m.sims as f64 / elapsed,
         mean_think_ms: m.think_ms_mean,
+        p50_think_ms: m.think_ms_p50,
         p99_think_ms: m.think_ms_p99,
         sim_occupancy: m.sim_occupancy,
         sims_stolen: m.sims_stolen,
     }
 }
 
-fn emit(cell: &Cell, fleet: &str) {
-    let record = obj([
+fn cell_json(cell: &Cell, fleet: &str) -> Json {
+    obj([
         ("bench", Json::Str("service_throughput".into())),
         ("fleet", Json::Str(fleet.into())),
+        ("config", Json::Str(format!("{}x{}", cell.shards, cell.sessions))),
         ("shards", Json::Num(cell.shards as f64)),
         ("sessions", Json::Num(cell.sessions as f64)),
         ("sessions_per_sec", Json::Num(cell.episodes_per_sec)),
         ("thinks_per_sec", Json::Num(cell.thinks_per_sec)),
         ("sims_per_sec", Json::Num(cell.sims_per_sec)),
         ("mean_think_ms", Json::Num(cell.mean_think_ms)),
-        ("p99_think_ms", Json::Num(cell.p99_think_ms)),
+        ("p50_ms", Json::Num(cell.p50_think_ms)),
+        ("p99_ms", Json::Num(cell.p99_think_ms)),
         ("sim_occupancy", Json::Num(cell.sim_occupancy)),
         ("sims_stolen", Json::Num(cell.sims_stolen as f64)),
-    ]);
-    println!("{}", record.render());
+    ])
+}
+
+/// Time the store codec: capture → encode → decode → revive round trips
+/// of a realistically-searched session (the durability layer's unit of
+/// work), so codec regressions show up in the baseline file.
+fn codec_row() -> Json {
+    let env = Garnet::new(15, 3, 60, 0.0, 42);
+    let spec = SearchSpec {
+        max_simulations: 128,
+        rollout_limit: 10,
+        max_depth: 12,
+        seed: 42,
+        ..SearchSpec::default()
+    };
+    let driver = scripted_driver(spec, &env, 2, 8, LatencyScript::uniform(42, (1, 3), (2, 9)));
+    let meta = SessionMeta { env_seed: 42, ..SessionMeta::default() };
+    let bytes = SessionImage::capture(1, &driver, meta)
+        .expect("idle driver is quiescent")
+        .encode()
+        .expect("encode");
+    let rounds = 200;
+    let mut samples_ms = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let t = Instant::now();
+        let image = SessionImage::capture(1, &driver, meta).expect("capture");
+        let encoded = image.encode().expect("encode");
+        let decoded = SessionImage::decode(&encoded).expect("decode");
+        assert_eq!(decoded.tree.len(), driver.tree().len());
+        samples_ms.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    obj([
+        ("bench", Json::Str("snapshot_restore_roundtrip".into())),
+        ("config", Json::Str(format!("garnet tree {} nodes", driver.tree().len()))),
+        ("image_bytes", Json::Num(bytes.len() as f64)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("p50_ms", Json::Num(percentile(&samples_ms, 50.0))),
+        ("p99_ms", Json::Num(percentile(&samples_ms, 99.0))),
+    ])
+}
+
+fn emit(cell: &Cell, fleet: &str) {
+    println!("{}", cell_json(cell, fleet).render());
     println!(
         "  [{fleet}] {} shard(s) x {} sessions: {:.2} episodes/s, {:.1} thinks/s, \
          think mean {:.2} ms (p99 {:.2} ms), occupancy {:.0}%, stolen {}",
@@ -126,6 +180,8 @@ fn main() {
         "service_throughput: {thinks} thinks/episode x {sims} sims/think; \
          per-shard fleet = 2 expansion + 8 simulation workers"
     );
+    let mut records: Vec<Json> = Vec::new();
+    let mut headline: Option<Json> = None;
     // Deployment sweep: the fleet scales with the shard count (one shard
     // ≈ one core's scheduler plus its workers) — the acceptance bar.
     let mut speedup_base: Option<f64> = None;
@@ -133,6 +189,7 @@ fn main() {
         for sessions in [1usize, 8, 32] {
             let cell = run_cell(shards, 2, 8, sessions, thinks, sims);
             emit(&cell, "per_shard");
+            records.push(cell_json(&cell, "per_shard"));
             if sessions == 32 {
                 match (shards, speedup_base) {
                     (1, _) => speedup_base = Some(cell.episodes_per_sec),
@@ -145,25 +202,61 @@ fn main() {
                     _ => {}
                 }
             }
+            if shards == 4 && sessions == 32 {
+                headline = Some(cell_json(&cell, "per_shard"));
+            }
         }
     }
-    // Control sweep: hold the TOTAL fleet at 2 expansion + 8 simulation
-    // workers and split it across shards. Any speedup here is pure
+    // Control sweep: hold the TOTAL fleet at 4 expansion + 8 simulation
+    // workers and split it evenly across shards (both counts divide by
+    // 4, so the fleets really are identical). Any speedup here is pure
     // scheduler-bottleneck removal — the worker count cannot explain it.
     let mut fixed_base: Option<f64> = None;
     for shards in [1usize, 4] {
-        let cell = run_cell(shards, (2 / shards).max(1), 8 / shards, 32, thinks, sims);
+        let cell = run_cell(shards, 4 / shards, 8 / shards, 32, thinks, sims);
         emit(&cell, "fixed_total");
+        records.push(cell_json(&cell, "fixed_total"));
         match (shards, fixed_base) {
             (1, _) => fixed_base = Some(cell.episodes_per_sec),
             (4, Some(base)) if base > 0.0 => {
                 println!(
-                    "  scheduler-only speedup @32 sessions (10 workers total): \
+                    "  scheduler-only speedup @32 sessions (12 workers total): \
                      4 shards / 1 shard = {:.2}x",
                     cell.episodes_per_sec / base
                 );
             }
             _ => {}
         }
+    }
+    let codec = codec_row();
+    println!("{}", codec.render());
+
+    // Baseline file at the repo root: the headline cell's schema keys at
+    // the top level, plus every cell and the codec timing row.
+    let headline = headline.expect("4x32 cell always runs");
+    let baseline = vec![
+        ("bench".to_string(), Json::Str("service_throughput".into())),
+        (
+            "config".to_string(),
+            headline.get("config").cloned().unwrap_or(Json::Null),
+        ),
+        (
+            "sessions_per_sec".to_string(),
+            headline.get("sessions_per_sec").cloned().unwrap_or(Json::Null),
+        ),
+        ("p50_ms".to_string(), headline.get("p50_ms").cloned().unwrap_or(Json::Null)),
+        ("p99_ms".to_string(), headline.get("p99_ms").cloned().unwrap_or(Json::Null)),
+        (
+            "scale".to_string(),
+            Json::Str(if paper_scale() { "paper".into() } else { "quick".into() }),
+        ),
+        ("cells".to_string(), Json::Arr(records)),
+        ("snapshot_restore".to_string(), codec),
+    ];
+    let doc = Json::Obj(baseline);
+    let path = "BENCH_service_throughput.json";
+    match std::fs::write(path, doc.render() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

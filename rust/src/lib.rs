@@ -29,6 +29,7 @@ pub mod mcts;
 pub mod passrate;
 pub mod runtime;
 pub mod service;
+pub mod store;
 pub mod testkit;
 pub mod tree;
 pub mod util;

@@ -46,6 +46,21 @@ fn specs() -> Vec<OptSpec> {
             default: Some("0"),
         },
         OptSpec { name: "no-steal", help: "serve: disable cross-shard work stealing", default: None },
+        OptSpec {
+            name: "data-dir",
+            help: "serve: durable session store directory (empty = memory-only)",
+            default: Some(""),
+        },
+        OptSpec {
+            name: "snapshot-every",
+            help: "serve: WAL tree-snapshot cadence in thinks per session",
+            default: Some("1"),
+        },
+        OptSpec {
+            name: "rebalance",
+            help: "serve: auto-migrate sessions when shard occupancy skew exceeds this factor (0 = off)",
+            default: Some("0"),
+        },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
 }
@@ -155,7 +170,10 @@ fn main() -> Result<()> {
             let sim_workers = args.usize("workers")?.max(1);
             let shards = args.usize_at_least("shards", 1)?;
             let max_sessions = args.usize("max-sessions")?;
-            let service = ShardedService::start(ShardedConfig {
+            let data_dir = args.str("data-dir")?.to_string();
+            let snapshot_every = args.u32("snapshot-every")?.max(1);
+            let rebalance_skew = args.f64("rebalance")?;
+            let service = ShardedService::start_durable(ShardedConfig {
                 shards,
                 shard: ServiceConfig {
                     expansion_workers: exp_workers,
@@ -165,8 +183,14 @@ fn main() -> Result<()> {
                 },
                 max_sessions_per_shard: (max_sessions > 0).then_some(max_sessions),
                 steal: !args.flag("no-steal"),
+                data_dir: (!data_dir.is_empty()).then(|| data_dir.clone().into()),
+                snapshot_every,
+                rebalance: (rebalance_skew > 0.0).then(|| wu_uct::service::RebalanceConfig {
+                    max_skew: rebalance_skew.max(1.0),
+                    ..wu_uct::service::RebalanceConfig::default()
+                }),
                 ..ShardedConfig::default()
-            });
+            })?;
             let server = TcpServer::bind(service.handle(), args.str("addr")?)?;
             println!(
                 "wu-uct serve: listening on {} ({shards} shard(s), each {exp_workers} expansion / {sim_workers} simulation workers)",
@@ -175,7 +199,17 @@ fn main() -> Result<()> {
             if max_sessions > 0 {
                 println!("admission control: {max_sessions} sessions/shard, busy replies beyond");
             }
-            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, metrics, ping");
+            if !data_dir.is_empty() {
+                let recovered = service.handle().metrics()?.sessions_recovered;
+                println!(
+                    "durable sessions: wal under {data_dir}/shard-*/, snapshot every \
+                     {snapshot_every} think(s), {recovered} session(s) recovered"
+                );
+            }
+            if rebalance_skew > 0.0 {
+                println!("auto-rebalance: moving sessions above {rebalance_skew}x mean occupancy");
+            }
+            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, metrics, ping");
             server.join(); // foreground until killed
         }
         "atari-table1" => {

@@ -57,6 +57,19 @@ impl TaskTable {
         self.pending.get(&id).copied()
     }
 
+    /// Remove and return every outstanding task, sorted by id so callers
+    /// (the driver's fold-to-quiescence path) process them in a
+    /// deterministic order regardless of map iteration.
+    pub fn drain(&mut self) -> Vec<(u64, NodeId, TaskKind)> {
+        let mut out: Vec<(u64, NodeId, TaskKind)> = self
+            .pending
+            .drain()
+            .map(|(id, (node, kind))| (id, node, kind))
+            .collect();
+        out.sort_unstable_by_key(|&(id, _, _)| id);
+        out
+    }
+
     pub fn outstanding(&self) -> usize {
         self.pending.len()
     }
@@ -102,6 +115,24 @@ mod tests {
         let mut t = TaskTable::new();
         t.insert(7, 1, TaskKind::Simulate);
         t.insert(7, 2, TaskKind::Simulate);
+    }
+
+    #[test]
+    fn drain_empties_in_ascending_id_order() {
+        let mut t = TaskTable::new();
+        t.insert(9, 1, TaskKind::Simulate);
+        t.insert(2, 5, TaskKind::Expand { action: 3 });
+        t.insert(5, 7, TaskKind::Simulate);
+        let drained = t.drain();
+        assert_eq!(
+            drained,
+            vec![
+                (2, 5, TaskKind::Expand { action: 3 }),
+                (5, 7, TaskKind::Simulate),
+                (9, 1, TaskKind::Simulate),
+            ]
+        );
+        assert!(t.is_empty());
     }
 
     #[test]

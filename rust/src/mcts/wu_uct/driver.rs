@@ -147,6 +147,78 @@ impl SearchDriver {
         self.template.as_ref()
     }
 
+    pub fn spec(&self) -> &SearchSpec {
+        &self.spec
+    }
+
+    /// The session rng's `(state, inc)` pair, for persistence
+    /// ([`crate::store::codec`]): a recovered driver continues the exact
+    /// stream it left off.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state_and_inc()
+    }
+
+    /// Rebuild a driver from persisted parts — the inverse of what the
+    /// store codec captures. `template` must already be restored to the
+    /// tree root's state and `tree` must be quiescent (`ΣO = 0`); the
+    /// codec enforces both before an image ever reaches disk.
+    pub fn from_parts(
+        spec: SearchSpec,
+        rng_state: (u64, u64),
+        tree: Tree,
+        template: Box<dyn Env>,
+    ) -> SearchDriver {
+        debug_assert_eq!(
+            tree.total_unobserved(),
+            0,
+            "restored trees must be quiescent"
+        );
+        SearchDriver {
+            rng: Pcg32::from_state_and_inc(rng_state.0, rng_state.1),
+            spec,
+            tree,
+            template,
+            tasks: TaskTable::new(),
+            issued: 0,
+            completed: 0,
+            budget: 0,
+            master: Breakdown::new(),
+            began: Instant::now(),
+        }
+    }
+
+    /// Fold every in-flight task back to its incomplete-visit origin —
+    /// the store's drain-to-quiescence entry point (ISSUE: serialize at
+    /// `O = 0` *or after folding in-flight tasks back*). Simulation
+    /// tasks undo their Eq. 5 incomplete update (`O -= 1` along the
+    /// path); expansion tasks return their action to the parent's
+    /// untried list. Each folded rollout is un-issued, so a live think
+    /// simply re-issues it later — the budget still completes exactly.
+    ///
+    /// Returns the cancelled task ids (ascending): the caller owns the
+    /// sink and must discard any late results carrying these ids.
+    pub fn fold_in_flight(&mut self) -> Vec<u64> {
+        let drained = self.tasks.drain();
+        let mut ids = Vec::with_capacity(drained.len());
+        for (id, node, kind) in drained {
+            match kind {
+                TaskKind::Simulate => {
+                    self.tree.for_path_to_root(node, |n| {
+                        debug_assert!(n.o > 0, "fold without matching incomplete update");
+                        n.o -= 1;
+                    });
+                }
+                TaskKind::Expand { action } => {
+                    self.tree.node_mut(node).untried.push(action);
+                }
+            }
+            self.issued -= 1;
+            ids.push(id);
+        }
+        debug_assert_eq!(self.tree.total_unobserved(), 0, "fold must drain every O");
+        ids
+    }
+
     pub fn master(&self) -> &Breakdown {
         &self.master
     }
@@ -485,6 +557,61 @@ mod tests {
         if d.outstanding() > 0 {
             assert!(d.advance(0).is_err(), "advance must require quiescence");
         }
+    }
+
+    #[test]
+    fn fold_in_flight_restores_quiescence_and_the_think_still_completes() {
+        let env = Garnet::new(15, 3, 30, 0.0, 6);
+        let mut d = SearchDriver::new(spec(24, 6), &env);
+        let mut sink = InlineSink::default();
+        d.begin(24);
+        // Run half the budget so the tree has real statistics...
+        while d.completed() < 12 {
+            while d.can_issue() && d.outstanding() < 3 {
+                d.issue(&mut sink);
+            }
+            if let Some(task) = sink.queue.pop_front() {
+                d.absorb(execute(task), &mut sink);
+            }
+        }
+        // ...then leave several tasks in flight and fold them back.
+        while d.can_issue() && d.outstanding() < 4 {
+            d.issue(&mut sink);
+        }
+        let before_n = d.tree().node(Tree::ROOT).n;
+        let inflight = d.outstanding();
+        let folded = d.fold_in_flight();
+        assert_eq!(folded.len(), inflight);
+        assert_eq!(d.outstanding(), 0);
+        assert_eq!(d.tree().total_unobserved(), 0, "fold must cancel every Eq. 5 update");
+        assert_eq!(d.tree().node(Tree::ROOT).n, before_n, "observed stats untouched");
+        assert_eq!(d.issued(), d.completed(), "folded rollouts are un-issued");
+        d.tree().check_invariants();
+        // The cancelled tasks' queued work must be discarded; the think
+        // then re-issues and completes its exact budget.
+        sink.queue.clear();
+        run_to_completion(&mut d, &mut sink);
+        assert_eq!(d.completed(), 24);
+    }
+
+    #[test]
+    fn from_parts_resumes_the_exact_search_state() {
+        let env = Garnet::new(15, 3, 30, 0.0, 7);
+        let mut d = SearchDriver::new(spec(20, 7), &env);
+        let mut sink = InlineSink::default();
+        d.begin(20);
+        run_to_completion(&mut d, &mut sink);
+        let rebuilt = SearchDriver::from_parts(
+            d.spec().clone(),
+            d.rng_state(),
+            d.tree().clone(),
+            d.env().clone_boxed(),
+        );
+        assert_eq!(rebuilt.best_action(), d.best_action());
+        assert_eq!(rebuilt.rng_state(), d.rng_state());
+        assert_eq!(rebuilt.tree().len(), d.tree().len());
+        assert_eq!(rebuilt.outstanding(), 0);
+        assert!(rebuilt.done(), "fresh budget of 0 is trivially complete");
     }
 
     #[test]

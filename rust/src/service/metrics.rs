@@ -88,6 +88,16 @@ pub struct ServiceMetrics {
     pub sims_stolen: u64,
     /// Own simulation tasks shed to the cross-shard steal queue.
     pub sims_shed: u64,
+    /// Sessions rebuilt from the WAL at boot (durable deployments).
+    pub sessions_recovered: u64,
+    /// Sessions imported from peer shards by live migration.
+    pub migrations_in: u64,
+    /// Sessions exported to peer shards by live migration.
+    pub migrations_out: u64,
+    /// Full session images written to the WAL (periodic + checkpoint).
+    pub snapshots: u64,
+    /// WAL records appended since boot (0 when memory-only).
+    pub wal_records: u64,
     /// Episodes retired per second (closed sessions / uptime).
     pub sessions_per_sec: f64,
     pub thinks_per_sec: f64,
@@ -129,6 +139,11 @@ impl ServiceMetrics {
             total.sims += m.sims;
             total.sims_stolen += m.sims_stolen;
             total.sims_shed += m.sims_shed;
+            total.sessions_recovered += m.sessions_recovered;
+            total.migrations_in += m.migrations_in;
+            total.migrations_out += m.migrations_out;
+            total.snapshots += m.snapshots;
+            total.wal_records += m.wal_records;
             weighted_mean += m.think_ms_mean * m.thinks as f64;
             total.think_ms_p50 = total.think_ms_p50.max(m.think_ms_p50);
             total.think_ms_p90 = total.think_ms_p90.max(m.think_ms_p90);
@@ -235,6 +250,8 @@ mod tests {
         };
         let t = ServiceMetrics::aggregate(&[a, b]);
         assert_eq!(t.shards, 2);
+        assert_eq!(t.migrations_in, 0);
+        assert_eq!(t.sessions_recovered, 0);
         assert_eq!(t.sessions_open, 2);
         assert_eq!(t.sessions_opened, 5);
         assert_eq!(t.sessions_rejected, 1);

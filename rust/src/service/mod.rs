@@ -29,7 +29,11 @@
 //! * [`metrics`] — think-latency percentiles, throughput, occupancy,
 //!   steal/shed counters, per-shard and aggregated;
 //! * [`json`] / [`proto`] — the line-delimited JSON wire protocol;
-//! * [`server`] — the TCP front-end behind `wu-uct serve`.
+//! * [`server`] — the TCP front-end behind `wu-uct serve`;
+//! * [`crate::store`] — durability and migration underneath it all:
+//!   per-shard write-ahead session logs with crash recovery (`wu-uct
+//!   serve --data-dir`), checksummed session images, live migration and
+//!   the automatic occupancy rebalancer.
 
 pub mod fair;
 pub mod json;
@@ -55,7 +59,9 @@ pub use scheduler::{
     ThinkReply,
 };
 pub use server::TcpServer;
-pub use shard::{ShardedConfig, ShardedHandle, ShardedService};
+pub use shard::{
+    MigrateOutcome, RebalanceConfig, ShardedConfig, ShardedHandle, ShardedService,
+};
 
 /// The session-lifecycle surface shared by the single-shard
 /// [`ServiceHandle`] and the sharded [`ShardedHandle`] router. The wire
@@ -72,6 +78,12 @@ pub trait SessionApi: Clone + Send + 'static {
     /// Per-shard snapshots; a single snapshot for an unsharded service.
     fn shard_metrics(&self) -> Result<Vec<ServiceMetrics>> {
         self.metrics().map(|m| vec![m])
+    }
+
+    /// Live-migrate a session to another shard. Only meaningful for the
+    /// sharded router; everything else reports the obvious error.
+    fn migrate(&self, _session: u64, _to_shard: usize) -> Result<MigrateOutcome> {
+        anyhow::bail!("migration requires a sharded deployment (serve with --shards > 1)")
     }
 }
 

@@ -1,4 +1,4 @@
-//! Consistent-hash session placement.
+//! Consistent-hash session placement, with a migration override table.
 //!
 //! The sharded service routes every session op statelessly: the shard
 //! owning session `s` is a pure function of `s`, so no routing table has
@@ -12,8 +12,44 @@
 //! (wrapping). Placement is fully deterministic: two rings built with the
 //! same parameters place every key identically, which the shard golden
 //! traces rely on.
+//!
+//! **Overrides** are the one deliberate exception to pure-function
+//! routing: live migration ([`crate::store::migrate`]) moves a session
+//! off its ring-assigned home, and the override table records the new
+//! owner. [`HashRing::place`] consults it first; [`HashRing::home`]
+//! ignores it (recovery uses `home` to detect which replayed sessions
+//! need their overrides re-established). Construction is fallible with a
+//! typed [`RingError`] — a zero-shard ring used to be an implicit
+//! assert, which a config path could turn into a panic.
+
+use std::collections::HashMap;
 
 use crate::util::rng::SplitMix64;
+
+/// Typed construction/override failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RingError {
+    /// A ring needs at least one shard.
+    NoShards,
+    /// A shard needs at least one ring point.
+    NoReplicas,
+    /// Override target beyond the shard count.
+    ShardOutOfRange { shard: usize, shards: usize },
+}
+
+impl std::fmt::Display for RingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RingError::NoShards => write!(f, "a hash ring needs at least one shard"),
+            RingError::NoReplicas => write!(f, "a shard needs at least one ring point"),
+            RingError::ShardOutOfRange { shard, shards } => {
+                write!(f, "shard {shard} out of range (ring has {shards})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RingError {}
 
 /// One SplitMix64 step: a well-mixed 64-bit hash of `x`.
 fn mix(x: u64) -> u64 {
@@ -26,6 +62,8 @@ pub struct HashRing {
     /// (ring position, shard index), sorted by position.
     points: Vec<(u64, usize)>,
     shards: usize,
+    /// Migrated sessions: key → shard, consulted before the ring.
+    overrides: HashMap<u64, usize>,
 }
 
 impl HashRing {
@@ -33,9 +71,13 @@ impl HashRing {
     /// within a few percent of ideal at small shard counts.
     pub const DEFAULT_REPLICAS: usize = 64;
 
-    pub fn new(shards: usize, replicas: usize) -> HashRing {
-        assert!(shards >= 1, "a ring needs at least one shard");
-        assert!(replicas >= 1, "a shard needs at least one ring point");
+    pub fn new(shards: usize, replicas: usize) -> Result<HashRing, RingError> {
+        if shards == 0 {
+            return Err(RingError::NoShards);
+        }
+        if replicas == 0 {
+            return Err(RingError::NoReplicas);
+        }
         let mut points = Vec::with_capacity(shards * replicas);
         for shard in 0..shards {
             for replica in 0..replicas {
@@ -48,20 +90,56 @@ impl HashRing {
         // 64-bit collisions are astronomically unlikely; keep the first
         // deterministically if one ever occurs.
         points.dedup_by_key(|&mut (h, _)| h);
-        HashRing { points, shards }
+        Ok(HashRing { points, shards, overrides: HashMap::new() })
     }
 
     pub fn shards(&self) -> usize {
         self.shards
     }
 
-    /// The shard owning `key` (any u64 — session ids here).
+    /// The shard owning `key`: the override table first (migrated
+    /// sessions), then the pure ring function.
     pub fn place(&self, key: u64) -> usize {
+        if let Some(&shard) = self.overrides.get(&key) {
+            return shard;
+        }
+        self.home(key)
+    }
+
+    /// The ring-assigned home of `key`, ignoring overrides. Recovery
+    /// compares this against where a session actually replayed to
+    /// re-establish the override table after a restart.
+    pub fn home(&self, key: u64) -> usize {
         let h = mix(key);
         // First point at or after h, wrapping to the ring start.
         let idx = self.points.partition_point(|&(p, _)| p < h);
         let (_, shard) = self.points[idx % self.points.len()];
         shard
+    }
+
+    /// Record that `key` now lives on `shard` (a completed migration).
+    pub fn set_override(&mut self, key: u64, shard: usize) -> Result<(), RingError> {
+        if shard >= self.shards {
+            return Err(RingError::ShardOutOfRange { shard, shards: self.shards });
+        }
+        if shard == self.home(key) {
+            // Moving home again: the ring already says so.
+            self.overrides.remove(&key);
+        } else {
+            self.overrides.insert(key, shard);
+        }
+        Ok(())
+    }
+
+    /// Drop `key`'s override (session closed); returns whether one existed.
+    pub fn clear_override(&mut self, key: u64) -> bool {
+        self.overrides.remove(&key).is_some()
+    }
+
+    /// Live override count (bounded by open migrated sessions; cleared
+    /// at close so the table cannot grow without bound).
+    pub fn override_count(&self) -> usize {
+        self.overrides.len()
     }
 }
 
@@ -71,8 +149,8 @@ mod tests {
 
     #[test]
     fn placement_is_deterministic() {
-        let a = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
-        let b = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
+        let a = HashRing::new(4, HashRing::DEFAULT_REPLICAS).unwrap();
+        let b = HashRing::new(4, HashRing::DEFAULT_REPLICAS).unwrap();
         for key in 0..1000u64 {
             assert_eq!(a.place(key), b.place(key));
         }
@@ -80,8 +158,15 @@ mod tests {
     }
 
     #[test]
+    fn zero_shards_and_zero_replicas_are_typed_errors() {
+        assert_eq!(HashRing::new(0, 8).unwrap_err(), RingError::NoShards);
+        assert_eq!(HashRing::new(3, 0).unwrap_err(), RingError::NoReplicas);
+        assert!(RingError::NoShards.to_string().contains("at least one shard"));
+    }
+
+    #[test]
     fn every_shard_gets_a_fair_arc() {
-        let ring = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
+        let ring = HashRing::new(4, HashRing::DEFAULT_REPLICAS).unwrap();
         let mut counts = [0usize; 4];
         let n = 20_000u64;
         for key in 0..n {
@@ -98,7 +183,7 @@ mod tests {
 
     #[test]
     fn single_shard_takes_everything() {
-        let ring = HashRing::new(1, 8);
+        let ring = HashRing::new(1, 8).unwrap();
         for key in 0..100u64 {
             assert_eq!(ring.place(key), 0);
         }
@@ -108,8 +193,8 @@ mod tests {
     fn growing_the_ring_only_moves_keys_to_the_new_shard() {
         // The consistent-hashing contract: adding shard 4 to a 4-shard
         // ring either leaves a key where it was or moves it to shard 4.
-        let before = HashRing::new(4, HashRing::DEFAULT_REPLICAS);
-        let after = HashRing::new(5, HashRing::DEFAULT_REPLICAS);
+        let before = HashRing::new(4, HashRing::DEFAULT_REPLICAS).unwrap();
+        let after = HashRing::new(5, HashRing::DEFAULT_REPLICAS).unwrap();
         let mut moved = 0usize;
         let n = 10_000u64;
         for key in 0..n {
@@ -122,5 +207,43 @@ mod tests {
         // Roughly 1/5 of keys should move; certainly not none or all.
         assert!(moved > 0, "growing the ring moved nothing");
         assert!(moved < n as usize / 2, "growing the ring moved {moved} of {n}");
+    }
+
+    #[test]
+    fn overrides_beat_the_ring_until_cleared() {
+        let mut ring = HashRing::new(4, HashRing::DEFAULT_REPLICAS).unwrap();
+        let key = 12345;
+        let home = ring.home(key);
+        let target = (home + 1) % 4;
+        ring.set_override(key, target).unwrap();
+        assert_eq!(ring.place(key), target);
+        assert_eq!(ring.home(key), home, "home ignores overrides");
+        assert_eq!(ring.override_count(), 1);
+        assert!(ring.clear_override(key));
+        assert_eq!(ring.place(key), home);
+        assert!(!ring.clear_override(key), "second clear is a no-op");
+    }
+
+    #[test]
+    fn override_back_home_clears_itself() {
+        let mut ring = HashRing::new(3, 16).unwrap();
+        let key = 777;
+        let home = ring.home(key);
+        ring.set_override(key, (home + 1) % 3).unwrap();
+        assert_eq!(ring.override_count(), 1);
+        // Migrating back to the ring-assigned home needs no table entry.
+        ring.set_override(key, home).unwrap();
+        assert_eq!(ring.override_count(), 0);
+        assert_eq!(ring.place(key), home);
+    }
+
+    #[test]
+    fn override_to_unknown_shard_is_rejected() {
+        let mut ring = HashRing::new(2, 8).unwrap();
+        assert_eq!(
+            ring.set_override(1, 5).unwrap_err(),
+            RingError::ShardOutOfRange { shard: 5, shards: 2 }
+        );
+        assert_eq!(ring.override_count(), 0);
     }
 }

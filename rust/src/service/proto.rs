@@ -17,14 +17,18 @@
 //! ← {"ok":true,"thinks":1,"sims":64,"steps":1,"unobserved":0}
 //! ```
 //!
-//! Also: `best` (read the recommendation without searching), `metrics`
-//! (aggregated snapshot plus a `shards` array when sharded) and `ping`.
+//! Also: `best` (read the recommendation without searching), `migrate`
+//! (live-move a session to another shard: `{"op":"migrate","session":1,
+//! "shard":2}` → `{"ok":true,...,"moved":true}`), `metrics` (aggregated
+//! snapshot plus a `shards` array when sharded) and `ping`.
 //!
 //! Error discipline: malformed JSON, unknown ops and **unknown fields**
 //! are rejected with `{"ok":false,"error":...}` — never a panic, never a
 //! dropped connection. Admission-control rejections additionally carry
 //! `"busy":true` (the typed [`Busy`] error), telling clients to back off
-//! and retry rather than treat the failure as fatal.
+//! and retry rather than treat the failure as fatal; ops racing a live
+//! migration carry `"recovering":true` (the typed [`Recovering`] error)
+//! — the session is seconds from its new shard, retry.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -35,6 +39,7 @@ use crate::service::json::{obj, Json};
 use crate::service::metrics::ServiceMetrics;
 use crate::service::scheduler::{Busy, SessionOptions};
 use crate::service::SessionApi;
+use crate::store::migrate::Recovering;
 
 /// Side effect of a dispatched line, for connection-scoped session
 /// tracking (the TCP server closes a connection's leftover sessions).
@@ -139,6 +144,10 @@ fn error_line(err: &anyhow::Error) -> String {
         // Explicit backpressure marker: retry later, don't give up.
         fields.push(("busy".to_string(), Json::Bool(true)));
     }
+    if err.downcast_ref::<Recovering>().is_some() {
+        // The session is mid-migration/recovery: transient, retry soon.
+        fields.push(("recovering".to_string(), Json::Bool(true)));
+    }
     fields.push(("error".to_string(), Json::Str(format!("{err:#}"))));
     Json::Obj(fields).render()
 }
@@ -183,6 +192,9 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 think_sims: 0,
                 weight: field_f64(&req, "weight")?.unwrap_or(1.0),
                 total_sim_budget: field_u64(&req, "budget")?,
+                // Durable recovery / migration rebuilds the env as
+                // make_env(name, seed), so record the construction seed.
+                env_seed: seed,
             };
             let sid = handle.open(env, spec, opts)?;
             Ok((
@@ -250,6 +262,22 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 LineEffect::Closed(sid),
             ))
         }
+        "migrate" => {
+            reject_unknown_fields(&req, op, &["session", "shard"])?;
+            let sid = required_u64(&req, "session")?;
+            let shard = required_u64(&req, "shard")? as usize;
+            let m = handle.migrate(sid, shard)?;
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("session", Json::Num(m.session as f64)),
+                    ("from", Json::Num(m.from as f64)),
+                    ("to", Json::Num(m.to as f64)),
+                    ("moved", Json::Bool(m.moved)),
+                ]),
+                LineEffect::None,
+            ))
+        }
         "metrics" => {
             reject_unknown_fields(&req, op, &[])?;
             let per_shard = handle.shard_metrics()?;
@@ -283,6 +311,11 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("sims", Json::Num(m.sims as f64)),
         ("sims_stolen", Json::Num(m.sims_stolen as f64)),
         ("sims_shed", Json::Num(m.sims_shed as f64)),
+        ("sessions_recovered", Json::Num(m.sessions_recovered as f64)),
+        ("migrations_in", Json::Num(m.migrations_in as f64)),
+        ("migrations_out", Json::Num(m.migrations_out as f64)),
+        ("snapshots", Json::Num(m.snapshots as f64)),
+        ("wal_records", Json::Num(m.wal_records as f64)),
         ("sessions_per_sec", Json::Num(m.sessions_per_sec)),
         ("thinks_per_sec", Json::Num(m.thinks_per_sec)),
         ("sims_per_sec", Json::Num(m.sims_per_sec)),
@@ -309,6 +342,9 @@ fn shard_metrics_json(m: &ServiceMetrics) -> Json {
         ("sims", Json::Num(m.sims as f64)),
         ("sims_stolen", Json::Num(m.sims_stolen as f64)),
         ("sims_shed", Json::Num(m.sims_shed as f64)),
+        ("sessions_recovered", Json::Num(m.sessions_recovered as f64)),
+        ("migrations_in", Json::Num(m.migrations_in as f64)),
+        ("migrations_out", Json::Num(m.migrations_out as f64)),
         ("sim_occupancy", Json::Num(m.sim_occupancy)),
         ("pending_expansions", Json::Num(m.pending_expansions as f64)),
         ("pending_simulations", Json::Num(m.pending_simulations as f64)),
@@ -509,6 +545,7 @@ mod tests {
             (r#"{"op":"advance","session":1,"action":0,"reward":1}"#, "reward"),
             (r#"{"op":"best","session":1,"sims":4}"#, "sims"),
             (r#"{"op":"close","session":1,"force":true}"#, "force"),
+            (r#"{"op":"migrate","session":1,"target":0}"#, "target"),
             (r#"{"op":"metrics","shard":0}"#, "shard"),
         ] {
             let (line, _) = handle_line(&h, bad);
@@ -561,6 +598,81 @@ mod tests {
         let v = err_field(&line);
         assert_eq!(v.get("busy").and_then(|b| b.as_bool()), Some(true), "line: {line}");
         assert_eq!(effect, LineEffect::None);
+    }
+
+    #[test]
+    fn migrate_op_roundtrips_over_the_protocol() {
+        let svc = ShardedService::start(ShardedConfig {
+            shards: 2,
+            shard: ServiceConfig {
+                expansion_workers: 1,
+                simulation_workers: 2,
+                ..ServiceConfig::default()
+            },
+            ..ShardedConfig::default()
+        });
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet","seed":4,"sims":8}"#);
+        let sid = ok_field(&line).get("session").unwrap().as_u64().unwrap();
+        let from = h.shard_of(sid);
+        let to = 1 - from;
+        let (line, _) =
+            handle_line(&h, &format!(r#"{{"op":"migrate","session":{sid},"shard":{to}}}"#));
+        let m = ok_field(&line);
+        assert_eq!(m.keys(), vec!["ok", "session", "from", "to", "moved"]);
+        assert_eq!(m.get("from").unwrap().as_u64(), Some(from as u64));
+        assert_eq!(m.get("to").unwrap().as_u64(), Some(to as u64));
+        assert_eq!(m.get("moved").unwrap().as_bool(), Some(true));
+        // Re-migrating to the same shard is an explicit no-op.
+        let (line, _) =
+            handle_line(&h, &format!(r#"{{"op":"migrate","session":{sid},"shard":{to}}}"#));
+        assert_eq!(ok_field(&line).get("moved").unwrap().as_bool(), Some(false));
+        // The migrated session still serves over the protocol.
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"think","session":{sid}}}"#));
+        assert_eq!(ok_field(&line).get("quiescent").unwrap().as_bool(), Some(true));
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        ok_field(&line);
+        // Out-of-range target is an error reply, not a panic.
+        let (line, _) = handle_line(&h, r#"{"op":"migrate","session":1,"shard":99}"#);
+        err_field(&line);
+    }
+
+    #[test]
+    fn migrate_on_an_unsharded_service_reports_a_clear_error() {
+        let svc = service();
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"migrate","session":1,"shard":0}"#);
+        let v = err_field(&line);
+        let msg = v.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("sharded"), "error should say why: {msg}");
+    }
+
+    /// Round-trips of the typed error markers: a `Busy` reply carries
+    /// `busy:true`, a `Recovering` reply carries `recovering:true`, and
+    /// both parse back from their rendered lines with the marker intact.
+    #[test]
+    fn busy_and_recovering_replies_roundtrip() {
+        let busy = error_line(&anyhow::Error::new(Busy { open: 3, limit: 3 }));
+        let v = Json::parse(&busy).expect("busy reply is valid json");
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("busy").unwrap().as_bool(), Some(true));
+        assert!(v.get("recovering").is_none());
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("3/3"));
+        assert_eq!(Json::parse(&busy).unwrap().render(), busy, "stable round-trip");
+
+        let recovering = error_line(&anyhow::Error::new(Recovering { session: 42 }));
+        let v = Json::parse(&recovering).expect("recovering reply is valid json");
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("recovering").unwrap().as_bool(), Some(true));
+        assert!(v.get("busy").is_none());
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("42"));
+        assert_eq!(Json::parse(&recovering).unwrap().render(), recovering);
+
+        // A plain error carries neither marker.
+        let plain = error_line(&anyhow::anyhow!("boring failure"));
+        let v = Json::parse(&plain).unwrap();
+        assert!(v.get("busy").is_none());
+        assert!(v.get("recovering").is_none());
     }
 
     #[test]

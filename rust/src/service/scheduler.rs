@@ -31,7 +31,7 @@ use std::sync::Mutex;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::env::Env;
 use crate::eval::{HeuristicPolicy, PolicyFactory};
@@ -40,6 +40,9 @@ use crate::mcts::wu_uct::driver::{SearchDriver, TaskSink};
 use crate::mcts::wu_uct::workers::{Pool, Task, TaskResult};
 use crate::service::fair::FairQueue;
 use crate::service::metrics::{LatencyStats, ServiceMetrics};
+use crate::store::codec::{SessionImage, SessionMeta};
+use crate::store::migrate::Recovering;
+use crate::store::wal::{Record, StoreConfig, Wal};
 
 /// Shared-pool sizing and defaults for one scheduler (one shard). Worker
 /// counts are clamped to ≥ 1 at start (a zero-capacity pool could never
@@ -76,11 +79,17 @@ pub struct SessionOptions {
     /// Lifetime simulation budget; thinks clip to what remains and error
     /// once it is exhausted. `None` ⇒ unlimited.
     pub total_sim_budget: Option<u64>,
+    /// Seed the environment was constructed with. Durable deployments
+    /// (`--data-dir`) and live migration rebuild environments as
+    /// `make_env(name, env_seed)` + snapshot restore, so envs may derive
+    /// immutable structure from this seed (Garnet draws its whole MDP).
+    /// The wire protocol sets it from the open request's `seed`.
+    pub env_seed: u64,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        SessionOptions { think_sims: 0, weight: 1.0, total_sim_budget: None }
+        SessionOptions { think_sims: 0, weight: 1.0, total_sim_budget: None, env_seed: 0 }
     }
 }
 
@@ -160,6 +169,23 @@ pub(crate) enum Request {
     Advance { session: u64, action: usize, reply: Sender<Result<AdvanceReply>> },
     Best { session: u64, reply: Sender<Result<usize>> },
     Close { session: u64, reply: Sender<Result<CloseReply>> },
+    /// Migration: serialize an idle session to its checksummed image.
+    /// Read-only — the session keeps serving until [`Request::Forget`],
+    /// so a crash mid-migration can duplicate but never lose it.
+    Export { session: u64, reply: Sender<Result<Vec<u8>>> },
+    /// Migration: install a session from an exported image (admission
+    /// control applies; the WAL gets an `Open`).
+    Import { bytes: Vec<u8>, reply: Sender<Result<u64>> },
+    /// Migration/dedup: drop an idle session from this shard (the WAL
+    /// gets a `Close`) — issued only after its image is durable
+    /// elsewhere.
+    Forget { session: u64, reply: Sender<Result<()>> },
+    /// Migration abort: lift an [`Request::Export`] seal so the source
+    /// copy serves again.
+    Unseal { session: u64, reply: Sender<Result<()>> },
+    /// Open sessions with their progress counters, ascending by id
+    /// (recovery dedup and the rebalancer).
+    ListSessions { reply: Sender<Vec<SessionStat>> },
     Metrics { reply: Sender<ServiceMetrics> },
     Shutdown,
 }
@@ -205,6 +231,9 @@ pub(crate) struct ShardWiring {
     pub steal: Option<std::sync::Arc<StealQueue>>,
     /// Admission control: max concurrently-open sessions on this shard.
     pub max_sessions: Option<usize>,
+    /// Durability: this shard's write-ahead session log. `None` keeps
+    /// the shard memory-only (the pre-store behavior, bit for bit).
+    pub store: Option<StoreConfig>,
 }
 
 struct ThinkJob {
@@ -220,6 +249,33 @@ struct Session {
     thinks: u64,
     sims: u64,
     steps: u64,
+    /// Fair-share weight (kept here so exports/snapshots can record it).
+    weight: f64,
+    /// Env construction seed (see [`SessionOptions::env_seed`]).
+    env_seed: u64,
+    /// Exported for migration and awaiting the forget/unseal decision:
+    /// every mutating op is refused with the typed [`Recovering`] error,
+    /// so nothing can change the session after its image left the shard
+    /// (a racing write here would be silently lost on the target copy).
+    sealed: bool,
+}
+
+/// A session rebuilt from the WAL, ready to install at scheduler start.
+struct RecoveredParts {
+    id: u64,
+    driver: SearchDriver,
+    meta: SessionMeta,
+}
+
+/// One open session's identity + progress, as listed by
+/// [`Request::ListSessions`]. The progress counters let recovery pick
+/// the most-advanced copy when a crash mid-migration left a session on
+/// two shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct SessionStat {
+    pub id: u64,
+    pub thinks: u64,
+    pub steps: u64,
 }
 
 /// Cloneable client handle; every op is a blocking round-trip to the
@@ -285,6 +341,39 @@ impl ServiceHandle {
         let (tx, rx) = channel();
         self.roundtrip(Request::Metrics { reply: tx }, rx)
     }
+
+    /// Migration: serialize an idle session's image (read-only; pair
+    /// with [`ServiceHandle::forget_session`] once the image is durable
+    /// on its new shard). Fails while a think is in flight.
+    pub(crate) fn export_session(&self, session: u64) -> Result<Vec<u8>> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Export { session, reply: tx }, rx)?
+    }
+
+    /// Migration: install a session from an exported image.
+    pub(crate) fn import_session(&self, bytes: Vec<u8>) -> Result<u64> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Import { bytes, reply: tx }, rx)?
+    }
+
+    /// Migration/dedup: drop an idle session (durably, via a WAL
+    /// `Close`) after its image landed elsewhere.
+    pub(crate) fn forget_session(&self, session: u64) -> Result<()> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Forget { session, reply: tx }, rx)?
+    }
+
+    /// Migration abort: lift the export seal (the target refused).
+    pub(crate) fn unseal_session(&self, session: u64) -> Result<()> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Unseal { session, reply: tx }, rx)?
+    }
+
+    /// Open sessions (id + progress) on this shard, ascending by id.
+    pub(crate) fn list_sessions(&self) -> Result<Vec<SessionStat>> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::ListSessions { reply: tx }, rx)
+    }
 }
 
 /// The service: owns one scheduler thread (one shard); dropping shuts it
@@ -303,18 +392,50 @@ impl SearchService {
             peers: vec![tx.clone()],
             steal: None,
             max_sessions: None,
+            store: None,
         };
         SearchService::start_shard(cfg, wiring, tx, rx)
+            .expect("memory-only shard start is infallible")
     }
 
     /// Start one shard on pre-wired channels (the sharded service creates
-    /// every inbox first so peers can be cross-connected).
+    /// every inbox first so peers can be cross-connected). With a store
+    /// configured, the WAL is replayed here — in the caller's thread, so
+    /// corruption surfaces as a typed error before the service exists —
+    /// and the recovered sessions are installed before the scheduler
+    /// accepts its first request.
     pub(crate) fn start_shard(
         cfg: ServiceConfig,
         wiring: ShardWiring,
         tx: Sender<SchedMsg>,
         rx: Receiver<SchedMsg>,
-    ) -> SearchService {
+    ) -> Result<SearchService> {
+        let (wal, recovered) = match &wiring.store {
+            Some(store_cfg) => {
+                let (wal, recovery) = Wal::open(store_cfg)
+                    .with_context(|| format!("opening wal at {}", store_cfg.dir.display()))?;
+                let mut sessions = Vec::with_capacity(recovery.sessions.len());
+                for rs in recovery.sessions {
+                    let id = rs.image.session;
+                    let mut meta = rs.image.meta;
+                    meta.steps += rs.advances.len() as u64;
+                    let mut driver = rs
+                        .image
+                        .into_driver(crate::service::proto::make_env)
+                        .with_context(|| format!("reviving session {id}"))?;
+                    for action in rs.advances {
+                        driver
+                            .advance(action)
+                            .with_context(|| format!("replaying advance on session {id}"))?;
+                    }
+                    sessions.push(RecoveredParts { id, driver, meta });
+                }
+                (Some(wal), sessions)
+            }
+            None => (None, Vec::new()),
+        };
+        let snapshot_every =
+            wiring.store.as_ref().map(|s| s.snapshot_every.max(1)).unwrap_or(1);
         // A zero-capacity pool would gate dispatch() shut forever and hang
         // every think() caller; clamp rather than hand out a dead service.
         let n_exp = cfg.expansion_workers.max(1);
@@ -335,7 +456,7 @@ impl SearchService {
             });
         }
         let thread = std::thread::spawn(move || {
-            Scheduler {
+            let mut sched = Scheduler {
                 expansion,
                 simulation,
                 inbox: rx,
@@ -357,12 +478,21 @@ impl SearchService {
                 sims: 0,
                 sims_stolen: 0,
                 sims_shed: 0,
+                recovered: recovered.len() as u64,
+                migrations_in: 0,
+                migrations_out: 0,
+                snapshots: 0,
+                wal,
+                snapshot_every,
                 think_latency: LatencyStats::default(),
                 started: Instant::now(),
+            };
+            for parts in recovered {
+                sched.install(parts.id, parts.driver, parts.meta);
             }
-            .run()
+            sched.run()
         });
-        SearchService { handle: ServiceHandle { tx }, thread: Some(thread) }
+        Ok(SearchService { handle: ServiceHandle { tx }, thread: Some(thread) })
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -412,6 +542,17 @@ struct Scheduler {
     sims_stolen: u64,
     /// Own simulation tasks handed to the steal queue.
     sims_shed: u64,
+    /// Sessions rebuilt from the WAL at boot.
+    recovered: u64,
+    /// Sessions imported from / exported to peer shards (migration).
+    migrations_in: u64,
+    migrations_out: u64,
+    /// Full session images appended to the WAL.
+    snapshots: u64,
+    /// This shard's write-ahead session log, when durable.
+    wal: Option<Wal>,
+    /// Snapshot cadence in completed thinks per session.
+    snapshot_every: u32,
     think_latency: LatencyStats,
     started: Instant,
 }
@@ -500,6 +641,7 @@ impl Scheduler {
                 }
             }
             self.dispatch();
+            self.maybe_checkpoint();
         }
     }
 
@@ -538,6 +680,27 @@ impl Scheduler {
             }
             Request::Close { session, reply } => {
                 let _ = reply.send(self.do_close(session));
+            }
+            Request::Export { session, reply } => {
+                let _ = reply.send(self.do_export(session));
+            }
+            Request::Import { bytes, reply } => {
+                let _ = reply.send(self.do_import(bytes));
+            }
+            Request::Forget { session, reply } => {
+                let _ = reply.send(self.do_forget(session));
+            }
+            Request::Unseal { session, reply } => {
+                let _ = reply.send(self.do_unseal(session));
+            }
+            Request::ListSessions { reply } => {
+                let mut stats: Vec<SessionStat> = self
+                    .sessions
+                    .iter()
+                    .map(|(&id, s)| SessionStat { id, thinks: s.thinks, steps: s.steps })
+                    .collect();
+                stats.sort_unstable_by_key(|s| s.id);
+                let _ = reply.send(stats);
             }
             Request::Metrics { reply } => {
                 let _ = reply.send(self.snapshot());
@@ -586,10 +749,214 @@ impl Scheduler {
             thinks: 0,
             sims: 0,
             steps: 0,
+            weight: opts.weight,
+            env_seed: opts.env_seed,
+            sealed: false,
         };
         self.fair.admit(id, opts.weight);
         self.sessions.insert(id, session);
         self.opened += 1;
+        if self.wal.is_some() {
+            match self.image_of(id) {
+                Ok(image) => self.wal_append(&Record::Open { session: id, image }),
+                Err(e) => eprintln!("shard {}: open image failed: {e:#}", self.shard.index),
+            }
+        }
+        Ok(id)
+    }
+
+    /// Install a recovered or imported session under `id`.
+    fn install(&mut self, id: u64, driver: SearchDriver, meta: SessionMeta) {
+        self.fair.admit(id, meta.weight);
+        self.next_session = self.next_session.max(id + 1);
+        self.sessions.insert(
+            id,
+            Session {
+                driver,
+                thinking: None,
+                default_sims: meta.default_sims,
+                remaining: meta.remaining,
+                thinks: meta.thinks,
+                sims: meta.sims,
+                steps: meta.steps,
+                weight: meta.weight,
+                env_seed: meta.env_seed,
+                sealed: false,
+            },
+        );
+    }
+
+    /// Encode the session's current image (requires quiescence, which an
+    /// idle session always has).
+    fn image_of(&self, sid: u64) -> Result<Vec<u8>> {
+        let sess = self
+            .sessions
+            .get(&sid)
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        let meta = SessionMeta {
+            env_seed: sess.env_seed,
+            default_sims: sess.default_sims,
+            weight: sess.weight,
+            remaining: sess.remaining,
+            thinks: sess.thinks,
+            sims: sess.sims,
+            steps: sess.steps,
+        };
+        Ok(SessionImage::capture(sid, &sess.driver, meta)?.encode()?)
+    }
+
+    /// Append to the WAL, if durable. An append failure **poisons** the
+    /// log: continuing to write after a lost record would leave a log
+    /// whose replay hard-fails (an `Advance` with no `Open`, garbage
+    /// mid-segment), permanently bricking the data dir. Instead the
+    /// shard drops to memory-only serving and says so loudly — sessions
+    /// stay alive, durability degrades, and the on-disk log remains
+    /// replayable up to the failure point.
+    fn wal_append(&mut self, rec: &Record) {
+        if let Some(wal) = self.wal.as_mut() {
+            if let Err(e) = wal.append(rec) {
+                eprintln!(
+                    "shard {}: wal append failed ({e}); durability DISABLED for this \
+                     shard — serving memory-only from here on",
+                    self.shard.index
+                );
+                self.wal = None;
+            }
+        }
+    }
+
+    /// Compact the log once the live segment outgrows its budget. Idle
+    /// sessions snapshot fresh; mid-think sessions cannot be imaged, so
+    /// the WAL carries their latest durable state forward from the old
+    /// segments — no global idle instant is required, and a perpetually
+    /// busy shard still compacts.
+    fn maybe_checkpoint(&mut self) {
+        if !self.wal.as_ref().is_some_and(|w| w.needs_checkpoint()) {
+            return;
+        }
+        let mut ids: Vec<u64> = self.sessions.keys().copied().collect();
+        ids.sort_unstable();
+        let mut fresh = Vec::new();
+        let mut carry = Vec::new();
+        for id in ids {
+            if self.sessions[&id].thinking.is_some() {
+                carry.push(id);
+                continue;
+            }
+            match self.image_of(id) {
+                Ok(image) => fresh.push((id, image)),
+                Err(e) => {
+                    eprintln!("shard {}: checkpoint image failed: {e:#}", self.shard.index);
+                    return;
+                }
+            }
+        }
+        let count = fresh.len() as u64;
+        if let Some(wal) = self.wal.as_mut() {
+            match wal.checkpoint(fresh, &carry) {
+                Ok(_) => self.snapshots += count,
+                Err(e) => {
+                    // Same poisoning rationale as wal_append: a half-done
+                    // compaction must not keep accepting records.
+                    eprintln!(
+                        "shard {}: checkpoint failed ({e}); durability DISABLED for \
+                         this shard — serving memory-only from here on",
+                        self.shard.index
+                    );
+                    self.wal = None;
+                }
+            }
+        }
+    }
+
+    /// Migration source half, phase 1: serialize an idle session and
+    /// **seal** it. The session stays installed (and in this shard's
+    /// WAL) until [`Scheduler::do_forget`] confirms the image is durable
+    /// on its new shard — so a crash anywhere in between can duplicate
+    /// the session but never lose it (recovery dedups, keeping the
+    /// most-advanced copy) — while the seal refuses every op in the
+    /// window, so no write can land on the source copy after its image
+    /// left (it would be silently lost on the target otherwise).
+    fn do_export(&mut self, sid: u64) -> Result<Vec<u8>> {
+        self.idle_session(sid)?.sealed = true;
+        let bytes = self.image_of(sid);
+        if bytes.is_err() {
+            if let Some(sess) = self.sessions.get_mut(&sid) {
+                sess.sealed = false;
+            }
+        }
+        bytes
+    }
+
+    /// Abort a migration: lift the seal so the source copy serves again
+    /// (the target refused the import; nothing moved).
+    fn do_unseal(&mut self, sid: u64) -> Result<()> {
+        let sess = self
+            .sessions
+            .get_mut(&sid)
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        sess.sealed = false;
+        Ok(())
+    }
+
+    /// Migration source half, phase 2 (also recovery dedup): drop the
+    /// session now that its image landed elsewhere. Sealed sessions are
+    /// the expected case and cannot be mid-think (the seal blocks new
+    /// thinks and was only granted at idleness).
+    fn do_forget(&mut self, sid: u64) -> Result<()> {
+        let sess = self
+            .sessions
+            .get_mut(&sid)
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        if sess.thinking.is_some() {
+            bail!("session {sid} has a think in flight");
+        }
+        self.sessions.remove(&sid);
+        self.fair.remove(sid);
+        self.migrations_out += 1;
+        self.wal_append(&Record::Close { session: sid });
+        Ok(())
+    }
+
+    /// Migration target half: decode, admit and install.
+    fn do_import(&mut self, bytes: Vec<u8>) -> Result<u64> {
+        if let Some(limit) = self.shard.max_sessions {
+            if self.sessions.len() >= limit {
+                self.rejected += 1;
+                return Err(anyhow::Error::new(Busy { open: self.sessions.len(), limit }));
+            }
+        }
+        let image = SessionImage::decode(&bytes)?;
+        let id = image.session;
+        if self.sessions.contains_key(&id) {
+            bail!("session id {id} already open on this shard");
+        }
+        let meta = image.meta;
+        let driver = image.into_driver(crate::service::proto::make_env)?;
+        // On a durable shard the Open must be on disk *before* the
+        // import is acknowledged: the source forgets (durably) as soon
+        // as we reply Ok, so a swallowed append failure here would let
+        // a crash lose the session outright — the one thing the
+        // export→import→forget ordering exists to prevent. A refused
+        // import is safe: the source unseals and keeps serving.
+        if self.shard.store.is_some() {
+            let Some(mut wal) = self.wal.take() else {
+                bail!("import refused: this shard's durability is disabled (wal poisoned)");
+            };
+            if let Err(e) = wal.append(&Record::Open { session: id, image: bytes }) {
+                // Poisoning rationale as in wal_append; the wal stays
+                // taken (None), so the shard is memory-only from here.
+                eprintln!(
+                    "shard {}: wal append failed ({e}); durability DISABLED for this \
+                     shard — serving memory-only from here on",
+                    self.shard.index
+                );
+                bail!("import refused: target could not log the session durably");
+            }
+            self.wal = Some(wal);
+        }
+        self.install(id, driver, meta);
+        self.migrations_in += 1;
         Ok(id)
     }
 
@@ -604,6 +971,9 @@ impl Scheduler {
             .sessions
             .get_mut(&sid)
             .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        if sess.sealed {
+            return Err(anyhow::Error::new(Recovering { session: sid }));
+        }
         if sess.thinking.is_some() {
             bail!("session {sid} already has a think in flight");
         }
@@ -630,13 +1000,15 @@ impl Scheduler {
         let sess = self.idle_session(sid)?;
         let out = sess.driver.advance(action)?;
         sess.steps += 1;
-        Ok(AdvanceReply {
+        let reply = AdvanceReply {
             reward: out.step.reward,
             done: out.step.done || sess.driver.env().is_terminal(),
             reused: out.reused,
             retained: out.retained,
             steps: sess.steps,
-        })
+        };
+        self.wal_append(&Record::Advance { session: sid, action });
+        Ok(reply)
     }
 
     fn do_close(&mut self, sid: u64) -> Result<CloseReply> {
@@ -644,6 +1016,7 @@ impl Scheduler {
         let sess = self.sessions.remove(&sid).expect("checked above");
         self.fair.remove(sid);
         self.closed += 1;
+        self.wal_append(&Record::Close { session: sid });
         Ok(CloseReply {
             thinks: sess.thinks,
             sims: sess.sims,
@@ -652,12 +1025,18 @@ impl Scheduler {
         })
     }
 
-    /// The session, provided it exists and has no think in flight.
+    /// The session, provided it exists, has no think in flight, and is
+    /// not sealed for migration (sealed ops report the typed
+    /// [`Recovering`] error — transient, retry on the session's new
+    /// shard once routing repoints).
     fn idle_session(&mut self, sid: u64) -> Result<&mut Session> {
         let sess = self
             .sessions
             .get_mut(&sid)
             .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        if sess.sealed {
+            return Err(anyhow::Error::new(Recovering { session: sid }));
+        }
         if sess.thinking.is_some() {
             bail!("session {sid} has a think in flight");
         }
@@ -829,6 +1208,25 @@ impl Scheduler {
             quiescent: sess.driver.tree().total_unobserved() == 0,
             remaining: sess.remaining,
         };
+        // Durability: the think's search progress lives only in the
+        // tree, so snapshot it on the configured cadence (the crash-loss
+        // window is at most `snapshot_every - 1` thinks of progress).
+        // The snapshot lands *before* the reply leaves the scheduler —
+        // once the client has seen this think's recommendation, a crash
+        // must not roll the tree back behind it.
+        let snapshot_due =
+            self.wal.is_some() && sess.thinks % self.snapshot_every as u64 == 0;
+        if snapshot_due {
+            match self.image_of(sid) {
+                Ok(image) => {
+                    self.wal_append(&Record::Snapshot { session: sid, image });
+                    self.snapshots += 1;
+                }
+                Err(e) => {
+                    eprintln!("shard {}: think snapshot failed: {e:#}", self.shard.index)
+                }
+            }
+        }
         let _ = job.reply.send(Ok(reply));
     }
 
@@ -848,6 +1246,11 @@ impl Scheduler {
             sims: self.sims,
             sims_stolen: self.sims_stolen,
             sims_shed: self.sims_shed,
+            sessions_recovered: self.recovered,
+            migrations_in: self.migrations_in,
+            migrations_out: self.migrations_out,
+            snapshots: self.snapshots,
+            wal_records: self.wal.as_ref().map(|w| w.records_appended()).unwrap_or(0),
             sessions_per_sec: self.closed as f64 / secs,
             thinks_per_sec: self.thinks as f64 / secs,
             sims_per_sec: self.sims as f64 / secs,
@@ -1009,13 +1412,14 @@ mod tests {
             peers: vec![tx.clone()],
             steal: None,
             max_sessions: Some(2),
+            store: None,
         };
         let cfg = ServiceConfig {
             expansion_workers: 1,
             simulation_workers: 1,
             ..Default::default()
         };
-        let service = SearchService::start_shard(cfg, wiring, tx, rx);
+        let service = SearchService::start_shard(cfg, wiring, tx, rx).unwrap();
         let h = service.handle();
         let a = h.open(garnet(1), quick_spec(1), SessionOptions::default()).unwrap();
         let _b = h.open(garnet(2), quick_spec(2), SessionOptions::default()).unwrap();

@@ -6,9 +6,12 @@
 //! Connection hygiene: sessions opened over a connection and not closed
 //! by the client are closed automatically when the connection drops, so
 //! a crashed load generator cannot leak sessions into the schedulers.
-//! Lines are read as raw bytes and dispatched through
-//! [`handle_bytes`], so even invalid UTF-8 earns an error reply instead
-//! of a dropped connection.
+//! (On a durable deployment that close is logged to the WAL like any
+//! other, so reaped sessions stay gone across restarts.) Lines are read
+//! as raw bytes and dispatched through [`handle_bytes`], so even invalid
+//! UTF-8 earns an error reply instead of a dropped connection. The op
+//! set — open/think/advance/best/close/migrate/metrics/ping — is
+//! documented in [`crate::service::proto`].
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};

@@ -1,5 +1,6 @@
 //! Sharding: N scheduler threads, each with its own session table and
-//! worker pools, behind one stateless router.
+//! worker pools, behind one stateless router — now durable and
+//! rebalancable.
 //!
 //! PR 1's single scheduler thread multiplexed every session — cheap per
 //! the paper's non-blocking-master argument, but still one thread of
@@ -7,7 +8,11 @@
 //!
 //! * **Placement** — sessions land on shards by consistent hash of the
 //!   session id ([`crate::service::placement::HashRing`]), so every
-//!   handle routes every op statelessly and identically.
+//!   handle routes every op statelessly and identically. Migrated
+//!   sessions are the one exception: the ring's override table records
+//!   their new home ([`HashRing::set_override`]), rebuilt automatically
+//!   after a restart by comparing each shard's recovered sessions
+//!   against their ring-assigned homes.
 //! * **Work stealing** — a shard whose simulation pool saturates parks
 //!   overflow simulation tasks on a shared [`StealQueue`]; idle peers
 //!   (poked through their inboxes) execute them on their own pools and
@@ -16,19 +21,32 @@
 //! * **Backpressure** — each shard caps its open-session count; an `open`
 //!   beyond the cap fails fast with the typed
 //!   [`Busy`](crate::service::scheduler::Busy) error, which the wire
-//!   protocol reports as an explicit `busy` reply. The router retries a
-//!   rejected open with a fresh id (which hashes to a fresh shard) at
-//!   most once per shard before surfacing `Busy` to the caller.
+//!   protocol reports as an explicit `busy` reply.
+//! * **Durability** — with [`ShardedConfig::data_dir`] set (`wu-uct
+//!   serve --data-dir PATH`), every shard keeps a write-ahead session
+//!   log under `<dir>/shard-<k>/` ([`crate::store::wal`]); a killed
+//!   server replays them on the next start and resumes every session.
+//! * **Migration** — [`ShardedHandle::migrate`] moves one session
+//!   between shards (export → import → ring-override repoint; see
+//!   [`crate::store::migrate`] for the protocol), and the automatic
+//!   rebalancer ([`ShardedConfig::rebalance`]) runs
+//!   [`plan_step`](crate::store::migrate::plan_step) on a timer to shed
+//!   sessions from shards whose occupancy exceeds the skew threshold.
+//!   While a session is mid-flight, ops on it fail fast with the typed
+//!   [`Recovering`] error (the wire's `"recovering":true` reply).
 //!
-//! `wu-uct serve --shards N` runs this; `--shards 1` degenerates to the
-//! PR 1 single-scheduler behavior exactly (no steal queue, no cap unless
-//! requested).
+//! `wu-uct serve --shards 1` without a data dir degenerates to the PR 1
+//! single-scheduler behavior exactly.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::env::Env;
 use crate::mcts::common::SearchSpec;
@@ -39,6 +57,24 @@ use crate::service::scheduler::{
     SessionOptions, ShardWiring, StealQueue, ThinkReply,
 };
 use crate::service::SessionApi;
+use crate::store::migrate::{plan_step, Recovering};
+use crate::store::wal::StoreConfig;
+
+/// Automatic rebalancer knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RebalanceConfig {
+    /// Move sessions while the busiest shard holds more than `max_skew ×`
+    /// the mean occupancy (and moving one actually helps). ≥ 1.0.
+    pub max_skew: f64,
+    /// How often the background pass runs.
+    pub interval: Duration,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { max_skew: 1.5, interval: Duration::from_millis(500) }
+    }
+}
 
 /// Configuration of a sharded deployment.
 #[derive(Clone)]
@@ -54,6 +90,16 @@ pub struct ShardedConfig {
     pub steal: bool,
     /// Virtual ring points per shard for consistent hashing.
     pub replicas: usize,
+    /// Durability: per-shard WALs under `<data_dir>/shard-<k>/`.
+    /// `None` keeps the fleet memory-only.
+    pub data_dir: Option<PathBuf>,
+    /// WAL snapshot cadence in completed thinks per session (≥ 1).
+    pub snapshot_every: u32,
+    /// WAL segment size before rotate + checkpoint.
+    pub max_segment_bytes: u64,
+    /// Automatic occupancy rebalancer; `None` disables it (explicit
+    /// `migrate` ops still work).
+    pub rebalance: Option<RebalanceConfig>,
 }
 
 impl Default for ShardedConfig {
@@ -64,19 +110,38 @@ impl Default for ShardedConfig {
             max_sessions_per_shard: None,
             steal: true,
             replicas: HashRing::DEFAULT_REPLICAS,
+            data_dir: None,
+            snapshot_every: 1,
+            max_segment_bytes: 8 << 20,
+            rebalance: None,
         }
     }
 }
 
+/// Result of one migration request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrateOutcome {
+    pub session: u64,
+    pub from: usize,
+    pub to: usize,
+    /// False when the session already lived on the target shard.
+    pub moved: bool,
+}
+
 struct Inner {
     shards: Vec<ServiceHandle>,
-    ring: HashRing,
-    /// Global session-id allocator (ids start at 1).
+    /// Ring + override table; writes are rare (migrations), reads are
+    /// every routed op.
+    ring: RwLock<HashRing>,
+    /// Sessions currently mid-migration: ops on them fail fast with the
+    /// typed [`Recovering`] error instead of racing the hand-off.
+    migrating: Mutex<HashSet<u64>>,
+    /// Global session-id allocator (ids start past any recovered id).
     next_id: AtomicU64,
 }
 
 /// Cloneable, stateless router over the shard handles: the shard owning a
-/// session is a pure function of its id.
+/// session is a pure function of its id (plus the migration overrides).
 #[derive(Clone)]
 pub struct ShardedHandle {
     inner: Arc<Inner>,
@@ -87,14 +152,24 @@ impl ShardedHandle {
         self.inner.shards.len()
     }
 
-    /// The shard index serving `session` (pure consistent-hash placement;
-    /// exposed so tests can assert golden placement traces).
+    /// The shard index serving `session` (consistent-hash placement plus
+    /// the migration override table; exposed so tests can assert golden
+    /// placement traces).
     pub fn shard_of(&self, session: u64) -> usize {
-        self.inner.ring.place(session)
+        self.inner.ring.read().unwrap().place(session)
     }
 
     fn handle_of(&self, session: u64) -> &ServiceHandle {
         &self.inner.shards[self.shard_of(session)]
+    }
+
+    /// Route an op on an existing session, failing fast with
+    /// [`Recovering`] while the session is mid-migration.
+    fn route(&self, session: u64) -> Result<&ServiceHandle> {
+        if self.inner.migrating.lock().unwrap().contains(&session) {
+            return Err(anyhow::Error::new(Recovering { session }));
+        }
+        Ok(self.handle_of(session))
     }
 
     /// Open a session. On a `Busy` shard the router keeps drawing fresh
@@ -140,19 +215,108 @@ impl ShardedHandle {
     }
 
     pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
-        self.handle_of(session).think(session, sims)
+        self.route(session)?.think(session, sims)
     }
 
     pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
-        self.handle_of(session).advance(session, action)
+        self.route(session)?.advance(session, action)
     }
 
     pub fn best_action(&self, session: u64) -> Result<usize> {
-        self.handle_of(session).best_action(session)
+        self.route(session)?.best_action(session)
     }
 
     pub fn close(&self, session: u64) -> Result<CloseReply> {
-        self.handle_of(session).close(session)
+        let reply = self.route(session)?.close(session)?;
+        // A migrated session's override dies with it, so the table stays
+        // bounded by the open migrated-session count.
+        self.inner.ring.write().unwrap().clear_override(session);
+        Ok(reply)
+    }
+
+    /// Live-migrate `session` to shard `to`: drain (idle required),
+    /// serialize, transfer, repoint the ring override — the protocol of
+    /// [`crate::store::migrate`]. Ops racing the move observe the typed
+    /// [`Recovering`] error and should retry.
+    pub fn migrate(&self, session: u64, to: usize) -> Result<MigrateOutcome> {
+        let shards = self.shard_count();
+        ensure!(to < shards, "target shard {to} out of range (fleet has {shards})");
+        let from = self.shard_of(session);
+        if from == to {
+            return Ok(MigrateOutcome { session, from, to, moved: false });
+        }
+        {
+            let mut migrating = self.inner.migrating.lock().unwrap();
+            ensure!(migrating.insert(session), "session {session} is already migrating");
+        }
+        let result = self.transfer(session, from, to);
+        self.inner.migrating.lock().unwrap().remove(&session);
+        result
+    }
+
+    /// The crash-safe hand-off order: export seals the source copy
+    /// (every op on it now reports `Recovering`, so no write can land
+    /// after the image is taken), the target's WAL `Open` lands, and
+    /// only then does the source forget (WAL `Close`). A crash between
+    /// import and forget duplicates the session on disk — never loses
+    /// it — and recovery dedups by keeping the most-advanced copy. A
+    /// refused import (e.g. `Busy` target) unseals the source, which
+    /// resumes serving untouched.
+    fn transfer(&self, session: u64, from: usize, to: usize) -> Result<MigrateOutcome> {
+        let bytes = self.inner.shards[from].export_session(session)?;
+        if let Err(import_err) = self.inner.shards[to].import_session(bytes) {
+            let _ = self.inner.shards[from].unseal_session(session);
+            return Err(import_err);
+        }
+        if let Err(e) = self.inner.shards[from].forget_session(session) {
+            // Unreachable in practice (the seal guarantees idleness);
+            // the target copy is authoritative either way, and a crash
+            // later resolves the leftover via recovery dedup.
+            eprintln!("migrate: source forget of session {session} failed: {e:#}");
+        }
+        self.inner
+            .ring
+            .write()
+            .unwrap()
+            .set_override(session, to)
+            .expect("target shard index was range-checked");
+        Ok(MigrateOutcome { session, from, to, moved: true })
+    }
+
+    /// One rebalance pass: migrate sessions off over-occupied shards
+    /// until [`plan_step`] finds nothing above `max_skew`. Returns the
+    /// moves made. Sessions busy thinking are skipped this pass (the
+    /// export requires idleness); the next pass retries.
+    pub fn rebalance(&self, max_skew: f64) -> Result<Vec<MigrateOutcome>> {
+        ensure!(max_skew >= 1.0, "max_skew below 1.0 can never converge");
+        let mut moves = Vec::new();
+        let cap = 1 + self
+            .shard_sessions()?
+            .iter()
+            .map(|s| s.len())
+            .sum::<usize>();
+        while moves.len() < cap {
+            let occupancy = self.shard_sessions()?;
+            let Some(step) = plan_step(&occupancy, max_skew) else { break };
+            match self.migrate(step.session, step.to) {
+                Ok(outcome) => moves.push(outcome),
+                // A mid-think session cannot be exported right now; stop
+                // this pass rather than busy-loop on it.
+                Err(_) => break,
+            }
+        }
+        Ok(moves)
+    }
+
+    /// Per-shard open-session ids, in shard order.
+    pub fn shard_sessions(&self) -> Result<Vec<Vec<u64>>> {
+        self.inner
+            .shards
+            .iter()
+            .map(|h| -> Result<Vec<u64>> {
+                Ok(h.list_sessions()?.into_iter().map(|s| s.id).collect())
+            })
+            .collect()
     }
 
     /// Fleet-wide aggregate of every shard's snapshot.
@@ -194,6 +358,10 @@ impl SessionApi for ShardedHandle {
     fn shard_metrics(&self) -> Result<Vec<ServiceMetrics>> {
         ShardedHandle::shard_metrics(self)
     }
+
+    fn migrate(&self, session: u64, to_shard: usize) -> Result<MigrateOutcome> {
+        ShardedHandle::migrate(self, session, to_shard)
+    }
 }
 
 /// The sharded service: owns every shard; dropping shuts them all down.
@@ -201,10 +369,27 @@ pub struct ShardedService {
     /// Kept for their Drop impls (each joins its scheduler thread).
     _shards: Vec<SearchService>,
     handle: ShardedHandle,
+    /// Background occupancy rebalancer, when configured.
+    rebalancer: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 impl ShardedService {
+    /// Start a memory-only fleet (infallible). Durable deployments go
+    /// through [`ShardedService::start_durable`].
     pub fn start(cfg: ShardedConfig) -> ShardedService {
+        assert!(
+            cfg.data_dir.is_none(),
+            "start() is memory-only; use start_durable() with a data dir"
+        );
+        ShardedService::start_durable(cfg).expect("memory-only start is infallible")
+    }
+
+    /// Start the fleet, replaying per-shard WALs when `data_dir` is set.
+    /// After recovery the router re-learns two things the logs cannot
+    /// carry: the id allocator resumes past the largest recovered id,
+    /// and every session sitting on a non-home shard (it was migrated
+    /// before the crash) gets its ring override re-established.
+    pub fn start_durable(cfg: ShardedConfig) -> Result<ShardedService> {
         let n = cfg.shards.max(1);
         let steal = if cfg.steal && n > 1 {
             Some(Arc::new(StealQueue::new()))
@@ -221,25 +406,81 @@ impl ShardedService {
             let mut shard_cfg = cfg.shard.clone();
             shard_cfg.seed =
                 cfg.shard.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let store = cfg.data_dir.as_ref().map(|dir| StoreConfig {
+                dir: dir.join(format!("shard-{index}")),
+                snapshot_every: cfg.snapshot_every.max(1),
+                max_segment_bytes: cfg.max_segment_bytes.max(1),
+            });
             let wiring = ShardWiring {
                 index,
                 peers: peers.clone(),
                 steal: steal.clone(),
                 max_sessions: cfg.max_sessions_per_shard,
+                store,
             };
-            let service = SearchService::start_shard(shard_cfg, wiring, tx, rx);
+            let service = SearchService::start_shard(shard_cfg, wiring, tx, rx)?;
             handles.push(service.handle());
             shards.push(service);
         }
+        let mut ring = HashRing::new(n, cfg.replicas.max(1)).expect("n and replicas >= 1");
+        let mut max_id = 0u64;
+        // Recovery bookkeeping the per-shard logs cannot carry on their
+        // own: a crash between a migration's target `Open` and source
+        // `Close` legally leaves one session on two shards. Keep the
+        // most-advanced copy (ties to the lowest shard), durably forget
+        // the rest, then rebuild the override table from the survivors.
+        let mut copies: std::collections::BTreeMap<u64, Vec<(usize, u64, u64)>> =
+            Default::default();
+        for (index, handle) in handles.iter().enumerate() {
+            for stat in handle.list_sessions()? {
+                copies.entry(stat.id).or_default().push((index, stat.thinks, stat.steps));
+            }
+        }
+        for (sid, owners) in copies {
+            max_id = max_id.max(sid);
+            let &(keep, _, _) = owners
+                .iter()
+                .max_by_key(|&&(shard, thinks, steps)| (thinks, steps, usize::MAX - shard))
+                .expect("at least one owner");
+            for &(shard, _, _) in &owners {
+                if shard != keep {
+                    handles[shard].forget_session(sid)?;
+                }
+            }
+            if ring.home(sid) != keep {
+                ring.set_override(sid, keep).expect("index < n by construction");
+            }
+        }
         let inner = Inner {
             shards: handles,
-            ring: HashRing::new(n, cfg.replicas.max(1)),
-            next_id: AtomicU64::new(0),
+            ring: RwLock::new(ring),
+            migrating: Mutex::new(HashSet::new()),
+            next_id: AtomicU64::new(max_id),
         };
-        ShardedService {
-            _shards: shards,
-            handle: ShardedHandle { inner: Arc::new(inner) },
-        }
+        let handle = ShardedHandle { inner: Arc::new(inner) };
+        let rebalancer = cfg.rebalance.map(|rb| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = Arc::clone(&stop);
+            let h = handle.clone();
+            let thread = std::thread::spawn(move || {
+                let tick = Duration::from_millis(10);
+                let mut since_pass = Duration::ZERO;
+                loop {
+                    std::thread::sleep(tick);
+                    if flag.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    since_pass += tick;
+                    if since_pass >= rb.interval {
+                        since_pass = Duration::ZERO;
+                        // Skew simply persists to the next pass on error.
+                        let _ = h.rebalance(rb.max_skew);
+                    }
+                }
+            });
+            (stop, thread)
+        });
+        Ok(ShardedService { _shards: shards, handle, rebalancer })
     }
 
     pub fn handle(&self) -> ShardedHandle {
@@ -248,6 +489,15 @@ impl ShardedService {
 
     pub fn shards(&self) -> usize {
         self.handle.shard_count()
+    }
+}
+
+impl Drop for ShardedService {
+    fn drop(&mut self) {
+        if let Some((stop, thread)) = self.rebalancer.take() {
+            stop.store(true, Ordering::SeqCst);
+            let _ = thread.join();
+        }
     }
 }
 
@@ -270,6 +520,10 @@ mod tests {
         Box::new(Garnet::new(15, 3, 20, 0.0, seed))
     }
 
+    fn opts(seed: u64) -> SessionOptions {
+        SessionOptions { env_seed: seed, ..SessionOptions::default() }
+    }
+
     fn sharded(shards: usize, exp: usize, sim: usize) -> ShardedService {
         ShardedService::start(ShardedConfig {
             shards,
@@ -288,7 +542,7 @@ mod tests {
         let h = svc.handle();
         let mut sids = Vec::new();
         for i in 0..12u64 {
-            let sid = h.open(garnet(i), spec(i), SessionOptions::default()).unwrap();
+            let sid = h.open(garnet(i), spec(i), opts(i)).unwrap();
             sids.push(sid);
         }
         // Placement is the pure ring function of the id.
@@ -346,7 +600,7 @@ mod tests {
         let mut opened = Vec::new();
         let mut busy = None;
         for i in 0..8u64 {
-            match h.open(garnet(i), spec(i), SessionOptions::default()) {
+            match h.open(garnet(i), spec(i), opts(i)) {
                 Ok(sid) => opened.push(sid),
                 Err(e) => {
                     assert!(
@@ -379,9 +633,7 @@ mod tests {
         for i in 0..6u64 {
             let h = h.clone();
             joins.push(std::thread::spawn(move || {
-                let sid = h
-                    .open(garnet(i), spec(i), SessionOptions::default())
-                    .unwrap();
+                let sid = h.open(garnet(i), spec(i), opts(i)).unwrap();
                 for _ in 0..3 {
                     let t = h.think(sid, 40).unwrap();
                     assert_eq!(t.sims, 40);
@@ -410,7 +662,7 @@ mod tests {
     fn single_shard_degenerates_cleanly() {
         let svc = sharded(1, 1, 2);
         let h = svc.handle();
-        let sid = h.open(garnet(9), spec(9), SessionOptions::default()).unwrap();
+        let sid = h.open(garnet(9), spec(9), opts(9)).unwrap();
         assert_eq!(h.shard_of(sid), 0);
         let t = h.think(sid, 8).unwrap();
         assert!(t.quiescent);
@@ -418,5 +670,112 @@ mod tests {
         let m = h.metrics().unwrap();
         assert_eq!(m.shards, 1);
         assert_eq!(m.sims_shed, 0, "no steal queue with one shard");
+        assert_eq!(m.migrations_in, 0);
+        assert_eq!(m.wal_records, 0, "memory-only fleet writes no wal");
+    }
+
+    #[test]
+    fn migrate_moves_a_session_and_repoints_routing() {
+        let svc = sharded(2, 1, 2);
+        let h = svc.handle();
+        let sid = h.open(garnet(3), spec(3), opts(3)).unwrap();
+        let t = h.think(sid, 12).unwrap();
+        let best_before = h.best_action(sid).unwrap();
+        let from = h.shard_of(sid);
+        let to = 1 - from;
+        let outcome = h.migrate(sid, to).unwrap();
+        assert_eq!(outcome, MigrateOutcome { session: sid, from, to, moved: true });
+        assert_eq!(h.shard_of(sid), to, "override must repoint routing");
+        // The tree moved bit-for-bit: the recommendation is unchanged,
+        // and the session keeps serving on its new shard.
+        assert_eq!(h.best_action(sid).unwrap(), best_before);
+        let t2 = h.think(sid, 12).unwrap();
+        assert!(t2.quiescent, "ΣO = 0 must hold on the target shard");
+        assert!(t2.tree_size >= t.tree_size, "migrated tree kept growing");
+        let per_shard = h.shard_metrics().unwrap();
+        assert_eq!(per_shard[from].migrations_out, 1);
+        assert_eq!(per_shard[to].migrations_in, 1);
+        let c = h.close(sid).unwrap();
+        assert_eq!(c.unobserved, 0);
+        assert_eq!(c.thinks, 2, "lifecycle counters travel with the session");
+    }
+
+    #[test]
+    fn migrate_to_current_shard_is_a_noop() {
+        let svc = sharded(2, 1, 1);
+        let h = svc.handle();
+        let sid = h.open(garnet(5), spec(5), opts(5)).unwrap();
+        let here = h.shard_of(sid);
+        let outcome = h.migrate(sid, here).unwrap();
+        assert!(!outcome.moved);
+        assert!(h.migrate(sid, 99).is_err(), "out-of-range target rejected");
+        assert!(h.migrate(777_777, 1 - here).is_err(), "unknown session rejected");
+        h.close(sid).unwrap();
+    }
+
+    #[test]
+    fn refused_migration_unseals_the_source() {
+        // Both shards at their 1-session cap: a migration target must
+        // refuse with Busy, and the sealed source copy must resume
+        // serving as if nothing happened.
+        let svc = ShardedService::start(ShardedConfig {
+            shards: 2,
+            shard: ServiceConfig {
+                expansion_workers: 1,
+                simulation_workers: 1,
+                ..ServiceConfig::default()
+            },
+            max_sessions_per_shard: Some(1),
+            ..ShardedConfig::default()
+        });
+        let h = svc.handle();
+        // The router retries Busy opens with fresh ids, so two opens
+        // necessarily land on the two distinct shards.
+        let a = h.open(garnet(1), spec(1), opts(1)).unwrap();
+        let b = h.open(garnet(2), spec(2), opts(2)).unwrap();
+        let to = 1 - h.shard_of(a);
+        let err = h.migrate(a, to).expect_err("target at cap must refuse the import");
+        assert!(err.downcast_ref::<Busy>().is_some(), "expected Busy, got: {err:#}");
+        let t = h.think(a, 6).unwrap();
+        assert!(t.quiescent, "refused migration must leave the source serving");
+        h.close(a).unwrap();
+        h.close(b).unwrap();
+    }
+
+    #[test]
+    fn rebalance_drains_an_overloaded_shard() {
+        let svc = sharded(2, 1, 1);
+        let h = svc.handle();
+        // Open a batch, then close everything on one shard to force skew.
+        let mut sids = Vec::new();
+        for i in 0..10u64 {
+            sids.push(h.open(garnet(i), spec(i), opts(i)).unwrap());
+        }
+        let drain_shard = 0usize;
+        for &sid in &sids {
+            if h.shard_of(sid) == drain_shard {
+                h.close(sid).unwrap();
+            }
+        }
+        let before = h.shard_sessions().unwrap();
+        let (empty, loaded) = (before[drain_shard].len(), before[1 - drain_shard].len());
+        if loaded >= empty + 2 {
+            let moves = h.rebalance(1.2).unwrap();
+            assert!(!moves.is_empty(), "skew {loaded} vs {empty} must trigger moves");
+            let after = h.shard_sessions().unwrap();
+            let diff = after[0].len().abs_diff(after[1].len());
+            assert!(diff <= 1, "rebalance left skew {after:?}");
+            // Moved sessions still serve.
+            for m in &moves {
+                assert_eq!(h.shard_of(m.session), m.to);
+                let t = h.think(m.session, 8).unwrap();
+                assert!(t.quiescent);
+            }
+        }
+        // Close whatever is still open (already-closed ids just error).
+        for &sid in &sids {
+            let _ = h.close(sid);
+        }
+        assert_eq!(h.metrics().unwrap().sessions_open, 0);
     }
 }

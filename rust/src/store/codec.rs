@@ -1,0 +1,515 @@
+//! The session image codec: one session as a versioned, checksummed
+//! binary blob.
+//!
+//! An image captures everything needed to resurrect a session on any
+//! shard of any process: the arena tree with its `{V, N}` statistics,
+//! width-capped child maps and per-node environment snapshots (the
+//! bit-exact `snapshot`/`restore` contract of [`crate::env::Env`]), the
+//! live root environment, the session's rng stream, its [`SearchSpec`]
+//! and its lifecycle counters. Unobserved counts `O` are deliberately
+//! **not** stored: they are transient in-flight state (Eqs. 5–6 of the
+//! paper), so encoding demands quiescence (`ΣO = 0`) and decoding
+//! materializes every node with `O = 0` — the invariant the service's
+//! property tests already police.
+//!
+//! Layout: `magic (4) | version (2) | payload length (4) | payload |
+//! FNV-1a-64 checksum of the payload (8)`, everything little-endian.
+//! Decoding rejects bad magic, future versions, truncation, checksum
+//! mismatches and structurally invalid trees with typed
+//! [`Error`](crate::store::Error)s — never a panic, however mangled the
+//! input (fuzz-tested in `rust/tests/store.rs`).
+
+use crate::env::codec::Writer;
+use crate::env::{Env, EnvState};
+use crate::mcts::common::SearchSpec;
+use crate::mcts::wu_uct::driver::SearchDriver;
+use crate::store::{checksum, Error};
+use crate::tree::{Node, Tree};
+
+/// How a decoded image rebuilds its environment: `(name, seed)` → a
+/// fresh emulator, which the image then `restore`s to the saved state.
+/// The wire protocol's [`crate::service::proto::make_env`] has exactly
+/// this shape.
+pub type EnvFactory = fn(&str, u64) -> anyhow::Result<Box<dyn Env>>;
+
+/// Session lifecycle metadata carried alongside the tree.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionMeta {
+    /// Seed the environment was *constructed* with. Environments may
+    /// derive immutable structure from their seed (Garnet draws its
+    /// whole MDP), so reviving must reconstruct with this seed before
+    /// restoring the snapshot.
+    pub env_seed: u64,
+    /// Default simulations per think (0 ⇒ the spec's budget).
+    pub default_sims: u32,
+    /// Fair-share weight.
+    pub weight: f64,
+    /// Remaining lifetime simulation budget, if one was set.
+    pub remaining: Option<u64>,
+    pub thinks: u64,
+    pub sims: u64,
+    pub steps: u64,
+}
+
+impl Default for SessionMeta {
+    fn default() -> Self {
+        SessionMeta {
+            env_seed: 0,
+            default_sims: 0,
+            weight: 1.0,
+            remaining: None,
+            thinks: 0,
+            sims: 0,
+            steps: 0,
+        }
+    }
+}
+
+/// A decoded (or about-to-be-encoded) session.
+#[derive(Debug, Clone)]
+pub struct SessionImage {
+    pub session: u64,
+    pub env_name: String,
+    /// Snapshot of the live root environment.
+    pub env_state: EnvState,
+    pub spec: SearchSpec,
+    /// The session rng's `(state, inc)` pair, so recovered searches
+    /// continue the exact stream they left off.
+    pub rng_state: (u64, u64),
+    pub meta: SessionMeta,
+    pub tree: Tree,
+}
+
+impl SessionImage {
+    pub const MAGIC: [u8; 4] = *b"WUS1";
+    pub const VERSION: u16 = 1;
+
+    /// Capture a quiescent driver. Fails with
+    /// [`Error::NotQuiescent`] while rollouts are in flight — fold them
+    /// back first ([`SearchDriver::fold_in_flight`]) or wait for the
+    /// think to drain.
+    pub fn capture(
+        session: u64,
+        driver: &SearchDriver,
+        meta: SessionMeta,
+    ) -> Result<SessionImage, Error> {
+        let unobserved = driver.tree().total_unobserved();
+        if unobserved != 0 || driver.outstanding() > 0 {
+            return Err(Error::NotQuiescent {
+                unobserved: unobserved.max(driver.outstanding() as u64),
+            });
+        }
+        Ok(SessionImage {
+            session,
+            env_name: driver.env().name().to_string(),
+            env_state: driver.env().snapshot(),
+            spec: driver.spec().clone(),
+            rng_state: driver.rng_state(),
+            meta,
+            tree: driver.tree().clone(),
+        })
+    }
+
+    /// Rebuild the driver: construct the environment from `(name,
+    /// env_seed)`, restore its snapshot, and hand the tree + rng stream
+    /// back to a fresh [`SearchDriver`].
+    pub fn into_driver(self, factory: EnvFactory) -> Result<SearchDriver, Error> {
+        let mut env = factory(&self.env_name, self.meta.env_seed)
+            .map_err(|_| Error::UnknownEnv { name: self.env_name.clone() })?;
+        env.restore(&self.env_state);
+        Ok(SearchDriver::from_parts(self.spec, self.rng_state, self.tree, env))
+    }
+
+    /// Encode to the framed, checksummed wire form.
+    pub fn encode(&self) -> Result<Vec<u8>, Error> {
+        let unobserved = self.tree.total_unobserved();
+        if unobserved != 0 {
+            return Err(Error::NotQuiescent { unobserved });
+        }
+        let mut w = Writer::new();
+        w.u64(self.session);
+        w.bytes(self.env_name.as_bytes());
+        w.bytes(&self.env_state.0);
+        write_spec(&mut w, &self.spec);
+        w.u64(self.rng_state.0);
+        w.u64(self.rng_state.1);
+        write_meta(&mut w, &self.meta);
+        write_tree(&mut w, &self.tree);
+        let payload = w.finish();
+        let mut out = Vec::with_capacity(payload.len() + 18);
+        out.extend_from_slice(&Self::MAGIC);
+        out.extend_from_slice(&Self::VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&checksum(&payload).to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode and fully validate an image.
+    pub fn decode(bytes: &[u8]) -> Result<SessionImage, Error> {
+        let payload = unframe(bytes, &Self::MAGIC, Self::VERSION, "session image")?;
+        let mut r = Reader::new(payload);
+        let session = r.u64("session id")?;
+        let env_name = r.string("env name")?;
+        let env_state = EnvState(r.bytes("env snapshot")?.to_vec());
+        let spec = read_spec(&mut r)?;
+        let rng_state = (r.u64("rng state")?, r.u64("rng inc")?);
+        let meta = read_meta(&mut r)?;
+        let tree = read_tree(&mut r)?;
+        if r.remaining() != 0 {
+            return Err(Error::Corrupt { what: "trailing bytes after image payload" });
+        }
+        Ok(SessionImage { session, env_name, env_state, spec, rng_state, meta, tree })
+    }
+}
+
+/// Strip `magic | version | len | payload | checksum` framing, verifying
+/// each layer; returns the payload slice.
+pub(crate) fn unframe<'a>(
+    bytes: &'a [u8],
+    magic: &[u8],
+    version: u16,
+    what: &'static str,
+) -> Result<&'a [u8], Error> {
+    let header = magic.len() + 2 + 4;
+    if bytes.len() < header {
+        return Err(Error::Truncated { what });
+    }
+    if &bytes[..magic.len()] != magic {
+        return Err(Error::BadMagic);
+    }
+    let found = u16::from_le_bytes([bytes[magic.len()], bytes[magic.len() + 1]]);
+    if found > version {
+        return Err(Error::UnsupportedVersion { found, supported: version });
+    }
+    let len_at = magic.len() + 2;
+    let len =
+        u32::from_le_bytes(bytes[len_at..len_at + 4].try_into().expect("4 bytes")) as usize;
+    let payload_at = header;
+    if bytes.len() < payload_at + len + 8 {
+        return Err(Error::Truncated { what });
+    }
+    let payload = &bytes[payload_at..payload_at + len];
+    let stored = u64::from_le_bytes(
+        bytes[payload_at + len..payload_at + len + 8].try_into().expect("8 bytes"),
+    );
+    let computed = checksum(payload);
+    if stored != computed {
+        return Err(Error::ChecksumMismatch { expected: stored, found: computed });
+    }
+    if bytes.len() > payload_at + len + 8 {
+        return Err(Error::Corrupt { what: "trailing bytes after frame" });
+    }
+    Ok(payload)
+}
+
+fn write_spec(w: &mut Writer, s: &SearchSpec) {
+    w.u32(s.max_simulations);
+    w.u32(s.max_depth);
+    w.u64(s.max_width as u64);
+    w.f64(s.beta);
+    w.f64(s.gamma);
+    w.u32(s.rollout_limit);
+    w.f64(s.expand_prob);
+    w.u64(s.seed);
+}
+
+fn read_spec(r: &mut Reader) -> Result<SearchSpec, Error> {
+    Ok(SearchSpec {
+        max_simulations: r.u32("spec max_simulations")?,
+        max_depth: r.u32("spec max_depth")?,
+        max_width: r.u64("spec max_width")? as usize,
+        beta: r.f64("spec beta")?,
+        gamma: r.f64("spec gamma")?,
+        rollout_limit: r.u32("spec rollout_limit")?,
+        expand_prob: r.f64("spec expand_prob")?,
+        seed: r.u64("spec seed")?,
+    })
+}
+
+fn write_meta(w: &mut Writer, m: &SessionMeta) {
+    w.u64(m.env_seed);
+    w.u32(m.default_sims);
+    w.f64(m.weight);
+    match m.remaining {
+        Some(v) => {
+            w.u8(1);
+            w.u64(v);
+        }
+        None => w.u8(0),
+    }
+    w.u64(m.thinks);
+    w.u64(m.sims);
+    w.u64(m.steps);
+}
+
+fn read_meta(r: &mut Reader) -> Result<SessionMeta, Error> {
+    let env_seed = r.u64("meta env_seed")?;
+    let default_sims = r.u32("meta default_sims")?;
+    let weight = r.f64("meta weight")?;
+    let remaining = match r.u8("meta remaining flag")? {
+        0 => None,
+        1 => Some(r.u64("meta remaining")?),
+        _ => return Err(Error::Corrupt { what: "meta remaining flag" }),
+    };
+    Ok(SessionMeta {
+        env_seed,
+        default_sims,
+        weight,
+        remaining,
+        thinks: r.u64("meta thinks")?,
+        sims: r.u64("meta sims")?,
+        steps: r.u64("meta steps")?,
+    })
+}
+
+const NO_PARENT: u64 = u64::MAX;
+
+fn write_tree(w: &mut Writer, tree: &Tree) {
+    w.u32(tree.len() as u32);
+    for (_, node) in tree.iter() {
+        w.u64(node.parent.map(|p| p as u64).unwrap_or(NO_PARENT));
+        w.u64(node.action as u64);
+        w.u32(node.n);
+        w.f64(node.v);
+        w.f64(node.reward);
+        w.u8(node.terminal as u8);
+        w.u32(node.depth);
+        w.u32(node.untried.len() as u32);
+        for &a in &node.untried {
+            w.u64(a as u64);
+        }
+        match &node.state {
+            Some(s) => {
+                w.u8(1);
+                w.bytes(&s.0);
+            }
+            None => w.u8(0),
+        }
+        w.f64(node.vloss);
+        w.u32(node.vcount);
+        w.u32(node.children.len() as u32);
+        for &(action, child) in &node.children {
+            w.u64(action as u64);
+            w.u64(child as u64);
+        }
+    }
+}
+
+fn read_tree(r: &mut Reader) -> Result<Tree, Error> {
+    let count = r.u32("tree node count")? as usize;
+    // Every node costs at least ~60 payload bytes; an absurd count on a
+    // (checksum-valid) buffer is corruption, caught before allocating.
+    if count > r.remaining() / 32 + 1 {
+        return Err(Error::Corrupt { what: "tree node count exceeds payload" });
+    }
+    let mut nodes = Vec::with_capacity(count);
+    for _ in 0..count {
+        let parent = match r.u64("node parent")? {
+            NO_PARENT => None,
+            p => Some(p as usize),
+        };
+        let action = r.u64("node action")? as usize;
+        let mut node = Node::new(parent, action, 0);
+        node.n = r.u32("node N")?;
+        node.v = r.f64("node V")?;
+        node.reward = r.f64("node reward")?;
+        node.terminal = match r.u8("node terminal")? {
+            0 => false,
+            1 => true,
+            _ => return Err(Error::Corrupt { what: "node terminal flag" }),
+        };
+        node.depth = r.u32("node depth")?;
+        let n_untried = r.u32("untried count")? as usize;
+        if n_untried > r.remaining() / 8 {
+            return Err(Error::Corrupt { what: "untried count exceeds payload" });
+        }
+        for _ in 0..n_untried {
+            node.untried.push(r.u64("untried action")? as usize);
+        }
+        node.state = match r.u8("node state flag")? {
+            0 => None,
+            1 => Some(EnvState(r.bytes("node state")?.to_vec())),
+            _ => return Err(Error::Corrupt { what: "node state flag" }),
+        };
+        node.vloss = r.f64("node vloss")?;
+        node.vcount = r.u32("node vcount")?;
+        let n_children = r.u32("children count")? as usize;
+        if n_children > r.remaining() / 16 {
+            return Err(Error::Corrupt { what: "children count exceeds payload" });
+        }
+        for _ in 0..n_children {
+            let a = r.u64("child action")? as usize;
+            let c = r.u64("child id")? as usize;
+            node.children.push((a, c));
+        }
+        nodes.push(node);
+    }
+    Tree::from_nodes(nodes).map_err(|what| Error::Corrupt { what })
+}
+
+/// Bounds-checked little-endian reader over untrusted bytes: every
+/// method returns a typed error instead of panicking on underrun (unlike
+/// [`crate::env::codec::Reader`], whose inputs are trusted snapshots).
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], Error> {
+        if self.remaining() < n {
+            return Err(Error::Truncated { what });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &'static str) -> Result<u8, Error> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &'static str) -> Result<u32, Error> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+
+    pub fn u64(&mut self, what: &'static str) -> Result<u64, Error> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn f64(&mut self, what: &'static str) -> Result<f64, Error> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+
+    /// Length-prefixed byte string.
+    pub fn bytes(&mut self, what: &'static str) -> Result<&'a [u8], Error> {
+        let n = self.u32(what)? as usize;
+        self.take(n, what)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn string(&mut self, what: &'static str) -> Result<String, Error> {
+        let raw = self.bytes(what)?;
+        std::str::from_utf8(raw)
+            .map(|s| s.to_string())
+            .map_err(|_| Error::Corrupt { what })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::tree::Tree;
+
+    fn image_with_tree(tree: Tree) -> SessionImage {
+        let env = Garnet::new(8, 2, 10, 0.0, 3);
+        SessionImage {
+            session: 42,
+            env_name: "garnet".into(),
+            env_state: env.snapshot(),
+            spec: SearchSpec::default(),
+            rng_state: (11, 13),
+            meta: SessionMeta { env_seed: 3, ..SessionMeta::default() },
+            tree,
+        }
+    }
+
+    fn small_tree() -> Tree {
+        let mut t = Tree::new();
+        let env = Garnet::new(8, 2, 10, 0.0, 3);
+        t.node_mut(Tree::ROOT).state = Some(env.snapshot());
+        t.node_mut(Tree::ROOT).untried = vec![1];
+        let a = t.add_child(Tree::ROOT, 0);
+        t.node_mut(a).n = 3;
+        t.node_mut(a).v = 0.5;
+        t.node_mut(a).reward = 1.0;
+        t.node_mut(a).state = Some(env.snapshot());
+        t.node_mut(Tree::ROOT).n = 3;
+        t
+    }
+
+    #[test]
+    fn image_roundtrips_bit_exactly() {
+        let img = image_with_tree(small_tree());
+        let bytes = img.encode().unwrap();
+        let back = SessionImage::decode(&bytes).unwrap();
+        assert_eq!(back.session, 42);
+        assert_eq!(back.env_name, "garnet");
+        assert_eq!(back.rng_state, (11, 13));
+        assert_eq!(back.meta.env_seed, 3);
+        assert_eq!(back.tree.len(), 2);
+        assert_eq!(back.tree.node(1).n, 3);
+        // Re-encoding the decoded image reproduces the original bytes.
+        assert_eq!(back.encode().unwrap(), bytes);
+    }
+
+    #[test]
+    fn encode_rejects_unobserved_samples() {
+        let mut tree = small_tree();
+        tree.node_mut(Tree::ROOT).o = 2;
+        let img = image_with_tree(tree);
+        match img.encode() {
+            Err(Error::NotQuiescent { unobserved }) => assert_eq!(unobserved, 2),
+            other => panic!("expected NotQuiescent, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_rejects_framing_damage() {
+        let bytes = image_with_tree(small_tree()).encode().unwrap();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(SessionImage::decode(&bad), Err(Error::BadMagic)));
+        // Future version.
+        let mut bad = bytes.clone();
+        bad[4] = 0xFF;
+        assert!(matches!(
+            SessionImage::decode(&bad),
+            Err(Error::UnsupportedVersion { .. })
+        ));
+        // Flipped payload byte → checksum mismatch.
+        let mut bad = bytes.clone();
+        bad[20] ^= 0x40;
+        assert!(matches!(
+            SessionImage::decode(&bad),
+            Err(Error::ChecksumMismatch { .. })
+        ));
+        // Truncation at every prefix length is an error, never a panic.
+        for cut in 0..bytes.len() {
+            assert!(SessionImage::decode(&bytes[..cut]).is_err(), "prefix {cut} accepted");
+        }
+        // Trailing garbage.
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(matches!(SessionImage::decode(&bad), Err(Error::Corrupt { .. })));
+    }
+
+    #[test]
+    fn decode_rejects_structurally_invalid_trees() {
+        // A child that points at a parent which does not list it.
+        let mut nodes = vec![Node::new(None, 0, 0), Node::new(Some(0), 1, 1)];
+        nodes[0].children.push((1, 1));
+        nodes[1].parent = Some(1); // self-parent mismatch
+        assert!(Tree::from_nodes(nodes).is_err());
+    }
+
+    #[test]
+    fn reader_is_bounds_checked() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert_eq!(r.u8("a").unwrap(), 1);
+        assert!(matches!(r.u32("b"), Err(Error::Truncated { what: "b" })));
+        // The failed read consumed nothing.
+        assert_eq!(r.remaining(), 2);
+    }
+}

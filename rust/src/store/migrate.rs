@@ -1,0 +1,142 @@
+//! Live migration: the drain → serialize → transfer → repoint protocol,
+//! plus the pure rebalance planner.
+//!
+//! A session moves between shards in four steps, orchestrated by the
+//! sharded router ([`crate::service::ShardedHandle::migrate`]):
+//!
+//! 1. **drain** — the source shard requires the session idle; an idle
+//!    session is quiescent by construction (`ΣO = 0`, nothing in
+//!    flight), the only state a snapshot may capture (a mid-think
+//!    session would need
+//!    [`fold_in_flight`](crate::mcts::wu_uct::driver::SearchDriver::fold_in_flight)
+//!    first, which the scheduler never does — it just reports the
+//!    session busy and the router retries);
+//! 2. **serialize** — the source exports a checksummed
+//!    [`SessionImage`](crate::store::SessionImage) and **seals** the
+//!    session: it stays installed (and in the source WAL) so no crash
+//!    window can lose it, while the seal refuses every op with
+//!    [`Recovering`] so no write can land on the source copy after its
+//!    image was taken (it would be silently lost on the target);
+//! 3. **transfer** — the target imports the image (admission control
+//!    applies: a full target rejects with `Busy` and the source is left
+//!    untouched) and logs `Open` to *its* WAL; only once that is
+//!    durable does the source *forget* the session (WAL `Close`). A
+//!    crash between the two leaves the session on both shards' logs —
+//!    duplicated, never lost — and recovery dedups, keeping the
+//!    most-advanced copy;
+//! 4. **repoint** — the router writes the session into the
+//!    [`HashRing`](crate::service::HashRing) override table, atomically
+//!    switching where every subsequent op routes. While steps 2–4 run,
+//!    ops on the moving session fail fast with the typed [`Recovering`]
+//!    error (`{"ok":false,"recovering":true}` on the wire) — retry, the
+//!    session is seconds from its new shard.
+//!
+//! The automatic rebalancer calls [`plan_step`] — a pure function from
+//! per-shard occupancy to at most one move — in a loop until the skew
+//! threshold is satisfied, so its decisions are unit-testable without
+//! threads.
+
+/// Typed routing failure: the session is mid-migration (or mid-recovery)
+/// and momentarily owned by no shard. Clients should retry shortly; the
+/// wire protocol marks these replies with `"recovering":true`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Recovering {
+    pub session: u64,
+}
+
+impl std::fmt::Display for Recovering {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "session {} is migrating between shards; retry shortly",
+            self.session
+        )
+    }
+}
+
+impl std::error::Error for Recovering {}
+
+/// One move the rebalancer wants to make.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedMove {
+    pub session: u64,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Pick the next rebalancing move, if the occupancy skew warrants one.
+///
+/// `sessions_per_shard[k]` lists shard `k`'s open sessions. A move is
+/// planned when the busiest shard holds more than `max_skew ×` the mean
+/// occupancy **and** moving one session actually helps (busiest exceeds
+/// idlest by ≥ 2 — otherwise a move just swaps which shard is busiest).
+/// Deterministic: ties break to the lowest shard index, and the lowest
+/// session id on the busiest shard moves first.
+pub fn plan_step(sessions_per_shard: &[Vec<u64>], max_skew: f64) -> Option<PlannedMove> {
+    if sessions_per_shard.len() < 2 {
+        return None;
+    }
+    let counts: Vec<usize> = sessions_per_shard.iter().map(|s| s.len()).collect();
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let mean = total as f64 / counts.len() as f64;
+    let busiest = (0..counts.len()).max_by_key(|&i| (counts[i], usize::MAX - i))?;
+    let idlest = (0..counts.len()).min_by_key(|&i| (counts[i], i))?;
+    if counts[busiest] as f64 <= max_skew * mean || counts[busiest] - counts[idlest] < 2 {
+        return None;
+    }
+    let session = *sessions_per_shard[busiest].iter().min()?;
+    Some(PlannedMove { session, from: busiest, to: idlest })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_shards_plan_nothing() {
+        let occ = vec![vec![1, 2], vec![3, 4], vec![5, 6]];
+        assert_eq!(plan_step(&occ, 1.5), None);
+    }
+
+    #[test]
+    fn skewed_shard_sheds_its_lowest_session_to_the_idlest() {
+        let occ = vec![vec![10, 11, 12, 13], vec![20], vec![]];
+        let step = plan_step(&occ, 1.5).expect("4 vs mean 5/3 exceeds 1.5x");
+        assert_eq!(step, PlannedMove { session: 10, from: 0, to: 2 });
+    }
+
+    #[test]
+    fn threshold_gates_the_move() {
+        // 3 vs mean 2: skew 1.5x exactly — not *more than* the threshold.
+        let occ = vec![vec![1, 2, 3], vec![4]];
+        assert_eq!(plan_step(&occ, 1.5), None);
+        // A lower threshold releases the move.
+        let step = plan_step(&occ, 1.2).unwrap();
+        assert_eq!(step.from, 0);
+        assert_eq!(step.to, 1);
+    }
+
+    #[test]
+    fn one_session_difference_is_never_worth_moving() {
+        let occ = vec![vec![1, 2], vec![3]];
+        assert_eq!(plan_step(&occ, 1.0), None, "2 vs 1 would just oscillate");
+    }
+
+    #[test]
+    fn degenerate_inputs_plan_nothing() {
+        assert_eq!(plan_step(&[], 1.5), None);
+        assert_eq!(plan_step(&[vec![1, 2, 3]], 1.5), None);
+        assert_eq!(plan_step(&[vec![], vec![]], 1.5), None);
+    }
+
+    #[test]
+    fn recovering_error_is_typed_and_displayable() {
+        let e = anyhow::Error::new(Recovering { session: 99 });
+        let r = e.downcast_ref::<Recovering>().unwrap();
+        assert_eq!(r.session, 99);
+        assert!(e.to_string().contains("99"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Durability and migration: tree snapshots, a write-ahead session log,
+//! crash recovery and live shard migration.
+//!
+//! The service multiplexes thousands of WU-UCT sessions (DESIGN.md §7),
+//! but a session's value lives entirely in its tree statistics `{V, N, O}`
+//! — state that Algorithm 1 spends its whole rollout budget accumulating
+//! and that a process crash would destroy. This layer makes sessions
+//! durable and movable:
+//!
+//! * [`codec`] — a versioned, checksummed binary image of one session:
+//!   the arena tree (stats, width-capped child maps, per-node env
+//!   snapshots via the bit-exact `snapshot`/`restore` contract), the
+//!   session rng stream, spec and lifecycle counters. The cardinal rule:
+//!   **a session serializes only at quiescence** — `O = 0` everywhere —
+//!   because unobserved counts are transient in-flight state (Eqs. 5–6);
+//!   an image with `ΣO ≠ 0` would resurrect phantom in-flight rollouts
+//!   that no worker will ever complete. Callers either wait for
+//!   quiescence (idle sessions are always quiescent) or fold in-flight
+//!   tasks back to their incomplete-visit origins first
+//!   ([`crate::mcts::wu_uct::driver::SearchDriver::fold_in_flight`]).
+//! * [`wal`] — a per-shard write-ahead session log: `open`/`advance`/
+//!   `close` records plus periodic full snapshots, segment rotation with
+//!   checkpoint compaction, replay-on-boot. `wu-uct serve --data-dir`
+//!   wires it in; a killed server recovers every session and resumes.
+//! * [`migrate`] — the live-migration protocol (drain → serialize →
+//!   transfer → repoint the router's override table) and the pure
+//!   rebalance planner that moves sessions off overloaded shards.
+//!
+//! Every decode path returns a typed [`Error`] — corrupt, truncated or
+//! future-version input can never panic (fuzz-tested in
+//! `rust/tests/store.rs`).
+
+pub mod codec;
+pub mod migrate;
+pub mod wal;
+
+pub use codec::{SessionImage, SessionMeta};
+pub use migrate::{plan_step, PlannedMove, Recovering};
+pub use wal::{read_segment, Record, RecoveredSession, Recovery, SegmentRead, StoreConfig, Wal};
+
+/// Typed failure of any store operation. Decoding untrusted bytes (disk
+/// corruption, torn writes, version skew) surfaces here — never as a
+/// panic.
+#[derive(Debug)]
+pub enum Error {
+    /// The buffer does not start with the expected magic bytes.
+    BadMagic,
+    /// Written by a newer build; refuse rather than misread.
+    UnsupportedVersion { found: u16, supported: u16 },
+    /// Payload checksum disagrees with the stored one.
+    ChecksumMismatch { expected: u64, found: u64 },
+    /// Input ended before the value did (`what` names the expectation).
+    Truncated { what: &'static str },
+    /// Structurally invalid despite passing the checksum.
+    Corrupt { what: &'static str },
+    /// Serialization requested while unobserved samples are in flight.
+    NotQuiescent { unobserved: u64 },
+    /// The image names an environment the factory cannot rebuild.
+    UnknownEnv { name: String },
+    /// Underlying filesystem failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::BadMagic => write!(f, "bad magic: not a wu-uct store file"),
+            Error::UnsupportedVersion { found, supported } => {
+                write!(f, "unsupported store version {found} (this build reads <= {supported})")
+            }
+            Error::ChecksumMismatch { expected, found } => {
+                write!(f, "checksum mismatch: stored {expected:#018x}, computed {found:#018x}")
+            }
+            Error::Truncated { what } => write!(f, "truncated store data ({what})"),
+            Error::Corrupt { what } => write!(f, "corrupt store data ({what})"),
+            Error::NotQuiescent { unobserved } => {
+                write!(f, "cannot serialize a non-quiescent session (ΣO = {unobserved})")
+            }
+            Error::UnknownEnv { name } => write!(f, "cannot rebuild environment {name:?}"),
+            Error::Io(e) => write!(f, "store i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+/// FNV-1a 64 over `bytes` — the store's checksum (fast, in-repo, and
+/// plenty against torn writes and bit rot; this is corruption detection,
+/// not cryptography).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_deterministic_and_sensitive() {
+        let a = checksum(b"hello");
+        assert_eq!(a, checksum(b"hello"));
+        assert_ne!(a, checksum(b"hellp"));
+        assert_ne!(checksum(b""), checksum(b"\0"));
+    }
+
+    #[test]
+    fn error_display_mentions_the_cause() {
+        let cases: Vec<(Error, &str)> = vec![
+            (Error::BadMagic, "magic"),
+            (Error::UnsupportedVersion { found: 9, supported: 1 }, "version 9"),
+            (Error::ChecksumMismatch { expected: 1, found: 2 }, "checksum"),
+            (Error::Truncated { what: "node" }, "node"),
+            (Error::Corrupt { what: "tree" }, "tree"),
+            (Error::NotQuiescent { unobserved: 3 }, "ΣO = 3"),
+            (Error::UnknownEnv { name: "nope".into() }, "nope"),
+        ];
+        for (e, needle) in cases {
+            assert!(e.to_string().contains(needle), "{e}");
+        }
+    }
+}

@@ -1,0 +1,524 @@
+//! Per-shard write-ahead session log: append `open`/`advance`/`close`
+//! records plus periodic full snapshots, rotate segments, replay on boot.
+//!
+//! Each shard owns one log directory of numbered segment files
+//! (`wal-00000001.log`, …). Every record is framed `length (4) |
+//! FNV-1a-64 checksum (8) | bytes`, written and fsynced before the
+//! operation's reply leaves the scheduler, so a `SIGKILL` at any point
+//! loses at most the record being written. Recovery semantics:
+//!
+//! * a session's durable state is its **latest image** (the `Open`
+//!   record's fresh image, or the most recent periodic `Snapshot`) plus
+//!   every `Advance` replayed on top — cheap records keep the
+//!   environment position exact between snapshots, while search progress
+//!   since the last snapshot is the (bounded) crash-loss window;
+//! * every boot starts a **fresh segment** — nothing is ever appended
+//!   after a possibly-torn tail; segment creation and deletion fsync the
+//!   directory, and an append failure is surfaced so the owner can stop
+//!   writing (the scheduler poisons the log and drops to memory-only);
+//! * a torn trailing record in the final segment — cut short, *or* a
+//!   full-length frame whose checksum fails at exactly end-of-file — is
+//!   the expected signature of a crash: tolerated (reported via
+//!   [`Recovery::torn_tail`]) and repaired by truncation (headerless
+//!   stumps are deleted). Torn data in any *earlier* segment, checksum
+//!   mismatches with records after them, and future-version segments are
+//!   hard typed errors — silently skipping them would resurrect stale
+//!   sessions;
+//! * [`Wal::checkpoint`] compacts: rotate to a new segment, snapshot
+//!   every idle session fresh, carry mid-think sessions' latest durable
+//!   image + advances forward from the old segments, then delete those
+//!   segments (only once everything new is synced; one data fsync for
+//!   the whole pass).
+
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::env::codec::Writer;
+use crate::store::codec::{Reader, SessionImage};
+use crate::store::{checksum, Error};
+
+/// Persistence knobs for one shard's log.
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// Segment directory (created if absent).
+    pub dir: PathBuf,
+    /// Write a full session snapshot every N completed thinks (≥ 1).
+    pub snapshot_every: u32,
+    /// Rotate + checkpoint once the live segment exceeds this size.
+    pub max_segment_bytes: u64,
+}
+
+impl StoreConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> StoreConfig {
+        StoreConfig { dir: dir.into(), snapshot_every: 1, max_segment_bytes: 8 << 20 }
+    }
+}
+
+/// One durable event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// Session admitted; `image` is the encoded fresh [`SessionImage`].
+    Open { session: u64, image: Vec<u8> },
+    /// One real environment step.
+    Advance { session: u64, action: usize },
+    /// Periodic full image replacing everything before it.
+    Snapshot { session: u64, image: Vec<u8> },
+    /// Session left this shard (closed or migrated away).
+    Close { session: u64 },
+}
+
+impl Record {
+    pub fn session(&self) -> u64 {
+        match self {
+            Record::Open { session, .. }
+            | Record::Advance { session, .. }
+            | Record::Snapshot { session, .. }
+            | Record::Close { session } => *session,
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            Record::Open { session, image } => {
+                w.u8(1);
+                w.u64(*session);
+                w.bytes(image);
+            }
+            Record::Advance { session, action } => {
+                w.u8(2);
+                w.u64(*session);
+                w.u64(*action as u64);
+            }
+            Record::Snapshot { session, image } => {
+                w.u8(3);
+                w.u64(*session);
+                w.bytes(image);
+            }
+            Record::Close { session } => {
+                w.u8(4);
+                w.u64(*session);
+            }
+        }
+        w.finish()
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Record, Error> {
+        let mut r = Reader::new(bytes);
+        let tag = r.u8("wal record tag")?;
+        let session = r.u64("wal record session")?;
+        let rec = match tag {
+            1 => Record::Open { session, image: r.bytes("wal open image")?.to_vec() },
+            2 => Record::Advance { session, action: r.u64("wal advance action")? as usize },
+            3 => Record::Snapshot { session, image: r.bytes("wal snapshot image")?.to_vec() },
+            4 => Record::Close { session },
+            _ => return Err(Error::Corrupt { what: "unknown wal record tag" }),
+        };
+        if r.remaining() != 0 {
+            return Err(Error::Corrupt { what: "trailing bytes in wal record" });
+        }
+        Ok(rec)
+    }
+}
+
+/// One session materialized by replay: its latest durable image plus the
+/// advances logged after it.
+#[derive(Debug, Clone)]
+pub struct RecoveredSession {
+    pub image: SessionImage,
+    pub advances: Vec<usize>,
+}
+
+/// Everything replay learned from the log.
+#[derive(Debug, Clone, Default)]
+pub struct Recovery {
+    /// Live sessions, ordered by session id (deterministic).
+    pub sessions: Vec<RecoveredSession>,
+    /// The final segment ended mid-record — the normal signature of a
+    /// crash mid-write; the partial record was discarded.
+    pub torn_tail: bool,
+    /// Complete records replayed.
+    pub records: u64,
+}
+
+const SEGMENT_MAGIC: [u8; 8] = *b"WUCTWAL1";
+const SEGMENT_VERSION: u16 = 1;
+const SEGMENT_HEADER: usize = SEGMENT_MAGIC.len() + 2;
+const FRAME_HEADER: usize = 4 + 8;
+
+/// The append handle over a shard's log directory.
+pub struct Wal {
+    dir: PathBuf,
+    file: File,
+    seg_index: u64,
+    seg_bytes: u64,
+    max_segment_bytes: u64,
+    records: u64,
+}
+
+impl Wal {
+    /// Open (creating the directory if needed), replay every segment,
+    /// and start a fresh segment for this process's appends. A torn tail
+    /// in the final segment (crash mid-write) is truncated away so it
+    /// cannot masquerade as mid-file corruption on a later boot.
+    pub fn open(cfg: &StoreConfig) -> Result<(Wal, Recovery), Error> {
+        fs::create_dir_all(&cfg.dir)?;
+        let segments = list_segments(&cfg.dir)?;
+        let mut recovery = Recovery::default();
+        let mut live = LiveFold::default();
+        let last = segments.len().saturating_sub(1);
+        for (i, (_, path)) in segments.iter().enumerate() {
+            let read = read_segment(path, i == last)?;
+            if let Some(valid_len) = read.torn_at {
+                recovery.torn_tail = true;
+                // Repair: drop the partial record for good, and make the
+                // repair itself durable (set_len is file metadata;
+                // without a sync a power loss could resurrect the torn
+                // bytes in a segment that is no longer the final one,
+                // where they read as hard corruption). A file cut off
+                // inside its own header is removed outright — a
+                // zero-length stump would hit the same fate.
+                if valid_len < SEGMENT_HEADER as u64 {
+                    fs::remove_file(path)?;
+                } else {
+                    let file = fs::OpenOptions::new().write(true).open(path)?;
+                    file.set_len(valid_len)?;
+                    file.sync_all()?;
+                }
+            }
+            for rec in read.records {
+                recovery.records += 1;
+                live.fold(rec)?;
+            }
+        }
+        for (session, (image, advances)) in live.0 {
+            let image = SessionImage::decode(&image)?;
+            if image.session != session {
+                return Err(Error::Corrupt { what: "wal record / image session mismatch" });
+            }
+            recovery.sessions.push(RecoveredSession { image, advances });
+        }
+        let seg_index = segments.last().map(|&(i, _)| i + 1).unwrap_or(1);
+        let file = start_segment(&cfg.dir, seg_index)?;
+        let wal = Wal {
+            dir: cfg.dir.clone(),
+            file,
+            seg_index,
+            seg_bytes: SEGMENT_HEADER as u64,
+            max_segment_bytes: cfg.max_segment_bytes.max(1),
+            records: 0,
+        };
+        Ok((wal, recovery))
+    }
+
+    /// Append one record, fsynced before returning.
+    pub fn append(&mut self, rec: &Record) -> Result<(), Error> {
+        self.append_inner(rec, true)
+    }
+
+    fn append_inner(&mut self, rec: &Record, sync: bool) -> Result<(), Error> {
+        let bytes = rec.encode();
+        let mut frame = Vec::with_capacity(FRAME_HEADER + bytes.len());
+        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&checksum(&bytes).to_le_bytes());
+        frame.extend_from_slice(&bytes);
+        self.file.write_all(&frame)?;
+        if sync {
+            self.file.sync_data()?;
+        }
+        self.seg_bytes += frame.len() as u64;
+        self.records += 1;
+        Ok(())
+    }
+
+    /// The live segment has outgrown its budget; the owner should
+    /// [`Wal::checkpoint`] at its next quiescent opportunity.
+    pub fn needs_checkpoint(&self) -> bool {
+        self.seg_bytes >= self.max_segment_bytes
+    }
+
+    /// Compact: rotate to a fresh segment, write `fresh` (one encoded
+    /// snapshot per idle session), carry forward the latest durable
+    /// state of the `carry` sessions (mid-think right now, so they
+    /// cannot be imaged — their last on-disk image + advances are copied
+    /// from the old segments instead; no global idle instant required),
+    /// sync, then delete every older segment. Returns how many old
+    /// segments were purged.
+    pub fn checkpoint(
+        &mut self,
+        fresh: Vec<(u64, Vec<u8>)>,
+        carry: &[u64],
+    ) -> Result<usize, Error> {
+        let old = list_segments(&self.dir)?;
+        let carried = if carry.is_empty() {
+            Vec::new()
+        } else {
+            // Same fold as boot recovery ([`LiveFold`]) so compaction can
+            // never carry forward something replay would reject. Images
+            // stay as raw bytes (validated when appended); the final
+            // segment is our own live file and ends cleanly, but
+            // tolerate defensively.
+            let mut live = LiveFold::default();
+            let last = old.len().saturating_sub(1);
+            for (i, (_, path)) in old.iter().enumerate() {
+                for rec in read_segment(path, i == last)?.records {
+                    live.fold(rec)?;
+                }
+            }
+            let mut carried = Vec::with_capacity(carry.len());
+            for &session in carry {
+                let Some((image, advances)) = live.0.remove(&session) else {
+                    // Every live session has at least one durable image
+                    // (logged at open/import); refuse to purge history
+                    // we cannot carry.
+                    return Err(Error::Corrupt { what: "carry session missing from wal" });
+                };
+                carried.push((session, image, advances));
+            }
+            carried
+        };
+        let old: Vec<PathBuf> = old.into_iter().map(|(_, p)| p).collect();
+        self.seg_index += 1;
+        self.file = start_segment(&self.dir, self.seg_index)?;
+        self.seg_bytes = SEGMENT_HEADER as u64;
+        // One data sync for the whole checkpoint (not one per record —
+        // this runs on the scheduler thread): durability only requires
+        // everything be on disk *before the old segments go away*.
+        for (session, image) in fresh {
+            self.append_inner(&Record::Snapshot { session, image }, false)?;
+        }
+        for (session, image, advances) in carried {
+            self.append_inner(&Record::Snapshot { session, image }, false)?;
+            for action in advances {
+                self.append_inner(&Record::Advance { session, action }, false)?;
+            }
+        }
+        self.file.sync_data()?;
+        let mut purged = 0;
+        for path in old {
+            fs::remove_file(&path)?;
+            purged += 1;
+        }
+        // Make the unlinks (and the new segment's directory entry, again)
+        // durable before reporting the checkpoint complete.
+        sync_dir(&self.dir)?;
+        Ok(purged)
+    }
+
+    /// Records appended through this handle (not counting replay).
+    pub fn records_appended(&self) -> u64 {
+        self.records
+    }
+
+    pub fn segment_index(&self) -> u64 {
+        self.seg_index
+    }
+}
+
+/// The one definition of how a record stream folds into per-session
+/// state (latest raw image + advances since), shared by boot recovery
+/// and checkpoint compaction so the two can never diverge. Images are
+/// kept as raw bytes; callers decode where needed.
+#[derive(Default)]
+struct LiveFold(std::collections::BTreeMap<u64, (Vec<u8>, Vec<usize>)>);
+
+impl LiveFold {
+    fn fold(&mut self, rec: Record) -> Result<(), Error> {
+        match rec {
+            Record::Open { session, image } => {
+                if self.0.contains_key(&session) {
+                    return Err(Error::Corrupt { what: "wal open for an already-live session" });
+                }
+                self.0.insert(session, (image, Vec::new()));
+            }
+            Record::Snapshot { session, image } => {
+                // Upsert: after a checkpoint purge, a snapshot is the
+                // session's first record in the surviving segments.
+                self.0.insert(session, (image, Vec::new()));
+            }
+            Record::Advance { session, action } => {
+                self.0
+                    .get_mut(&session)
+                    .ok_or(Error::Corrupt { what: "wal advance for unknown session" })?
+                    .1
+                    .push(action);
+            }
+            Record::Close { session } => {
+                self.0
+                    .remove(&session)
+                    .ok_or(Error::Corrupt { what: "wal close for unknown session" })?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn segment_path(dir: &Path, index: u64) -> PathBuf {
+    dir.join(format!("wal-{index:08}.log"))
+}
+
+/// Existing segments, sorted by index.
+fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>, Error> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(stem) = name.strip_prefix("wal-").and_then(|s| s.strip_suffix(".log")) else {
+            continue;
+        };
+        if let Ok(index) = stem.parse::<u64>() {
+            out.push((index, entry.path()));
+        }
+    }
+    out.sort_unstable_by_key(|&(i, _)| i);
+    Ok(out)
+}
+
+fn start_segment(dir: &Path, index: u64) -> Result<File, Error> {
+    let mut file = File::create(segment_path(dir, index))?;
+    file.write_all(&SEGMENT_MAGIC)?;
+    file.write_all(&SEGMENT_VERSION.to_le_bytes())?;
+    file.sync_data()?;
+    // The file's *directory entry* must be durable too, or a machine
+    // crash can surface an old directory state with the segment missing
+    // entirely (sync_data covers only the file's own contents).
+    sync_dir(dir)?;
+    Ok(file)
+}
+
+/// fsync a directory so entry creations/deletions within it are durably
+/// ordered against the data they refer to. No-op off Unix (opening a
+/// directory as a file is a Unix-ism; the growth targets are Linux).
+fn sync_dir(dir: &Path) -> Result<(), Error> {
+    #[cfg(unix)]
+    File::open(dir)?.sync_all()?;
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+/// Contents of one segment: its complete records, and where a torn tail
+/// begins when the segment ends mid-record.
+pub struct SegmentRead {
+    pub records: Vec<Record>,
+    /// Byte offset of the first incomplete record, when the segment was
+    /// cut off mid-write (crash). `None` for a cleanly-ended segment.
+    pub torn_at: Option<u64>,
+}
+
+/// Read one segment's records. With `tolerate_tail` (the final segment
+/// of a crashed process), a record cut off mid-write is discarded and
+/// its offset reported; otherwise truncation is a hard typed error.
+/// Checksum mismatches and future versions are always hard errors.
+pub fn read_segment(path: &Path, tolerate_tail: bool) -> Result<SegmentRead, Error> {
+    let data = fs::read(path)?;
+    if data.len() < SEGMENT_HEADER {
+        if tolerate_tail {
+            return Ok(SegmentRead { records: Vec::new(), torn_at: Some(0) });
+        }
+        return Err(Error::Truncated { what: "wal segment header" });
+    }
+    if data[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+        return Err(Error::BadMagic);
+    }
+    let version = u16::from_le_bytes([data[8], data[9]]);
+    if version > SEGMENT_VERSION {
+        return Err(Error::UnsupportedVersion { found: version, supported: SEGMENT_VERSION });
+    }
+    let mut records = Vec::new();
+    let mut pos = SEGMENT_HEADER;
+    while pos < data.len() {
+        if data.len() - pos < FRAME_HEADER {
+            if tolerate_tail {
+                return Ok(SegmentRead { records, torn_at: Some(pos as u64) });
+            }
+            return Err(Error::Truncated { what: "wal frame header" });
+        }
+        let len =
+            u32::from_le_bytes(data[pos..pos + 4].try_into().expect("4 bytes")) as usize;
+        let stored =
+            u64::from_le_bytes(data[pos + 4..pos + 12].try_into().expect("8 bytes"));
+        let body_at = pos + FRAME_HEADER;
+        if data.len() - body_at < len {
+            if tolerate_tail {
+                return Ok(SegmentRead { records, torn_at: Some(pos as u64) });
+            }
+            return Err(Error::Truncated { what: "wal frame body" });
+        }
+        let body = &data[body_at..body_at + len];
+        let computed = checksum(body);
+        if stored != computed {
+            // A crash can persist the frame header and extend the file
+            // without the body's sectors landing: the final record of a
+            // tolerated segment failing its checksum is the same torn
+            // tail as a short read. Mid-segment mismatches (complete
+            // records follow) are real corruption either way.
+            if tolerate_tail && body_at + len == data.len() {
+                return Ok(SegmentRead { records, torn_at: Some(pos as u64) });
+            }
+            return Err(Error::ChecksumMismatch { expected: stored, found: computed });
+        }
+        records.push(Record::decode(body)?);
+        pos = body_at + len;
+    }
+    Ok(SegmentRead { records, torn_at: None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("wuuct-wal-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn record_encoding_roundtrips() {
+        for rec in [
+            Record::Open { session: 7, image: vec![1, 2, 3] },
+            Record::Advance { session: 7, action: 4 },
+            Record::Snapshot { session: 9, image: vec![] },
+            Record::Close { session: 9 },
+        ] {
+            assert_eq!(Record::decode(&rec.encode()).unwrap(), rec);
+            assert!(rec.session() > 0);
+        }
+        assert!(matches!(
+            Record::decode(&[9, 0, 0, 0, 0, 0, 0, 0, 0]),
+            Err(Error::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn fresh_dir_opens_empty_and_counts_appends() {
+        let dir = temp_dir("fresh");
+        let cfg = StoreConfig::new(&dir);
+        let (mut wal, recovery) = Wal::open(&cfg).unwrap();
+        assert!(recovery.sessions.is_empty());
+        assert!(!recovery.torn_tail);
+        assert_eq!(recovery.records, 0);
+        wal.append(&Record::Close { session: 1 }).unwrap();
+        assert_eq!(wal.records_appended(), 1);
+        assert_eq!(wal.segment_index(), 1);
+        // The record is on disk in the live segment.
+        let read = read_segment(&segment_path(&dir, 1), true).unwrap();
+        assert_eq!(read.records, vec![Record::Close { session: 1 }]);
+        assert!(read.torn_at.is_none());
+    }
+
+    #[test]
+    fn segment_files_are_sorted_by_index() {
+        let dir = temp_dir("sorted");
+        fs::create_dir_all(&dir).unwrap();
+        for i in [3u64, 1, 2] {
+            start_segment(&dir, i).unwrap();
+        }
+        let segs = list_segments(&dir).unwrap();
+        let indices: Vec<u64> = segs.iter().map(|&(i, _)| i).collect();
+        assert_eq!(indices, vec![1, 2, 3]);
+    }
+}

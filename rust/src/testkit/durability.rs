@@ -1,0 +1,287 @@
+//! Durable virtual-time scripts: crash/recovery and migrate-under-load,
+//! deterministic down to the golden trace.
+//!
+//! [`DurableScriptedService`] wraps a [`ScriptedService`] and mirrors
+//! its lifecycle into a real [`Wal`] exactly like a live shard does —
+//! `Open` images at open, `Advance` records per step, `Snapshot` images
+//! on the think cadence. "Crash" is just dropping the service (every
+//! record was already fsynced); [`DurableScriptedService::recover`]
+//! replays the log into a fresh service. Because the underlying schedule
+//! is virtual-time deterministic, a crash can be scripted **at any think
+//! boundary** and the recovered tree compared against an independently
+//! re-run control — the acceptance proof in `rust/tests/store.rs`.
+//!
+//! [`migrate_under_load`] is the companion script: two shards under
+//! scripted load, one session exported/imported between them mid-run,
+//! with the paper's `ΣO = 0` invariant checked on both sides and the
+//! migrated session's `best` action compared to an unmigrated control.
+
+use anyhow::Result;
+
+use crate::env::garnet::Garnet;
+use crate::env::Env;
+use crate::mcts::common::SearchSpec;
+use crate::mcts::wu_uct::driver::AdvanceOutcome;
+use crate::store::codec::{SessionImage, SessionMeta};
+use crate::store::wal::{Record, StoreConfig, Wal};
+use crate::testkit::executor::Trace;
+use crate::testkit::harness::ScriptedService;
+use crate::testkit::latency::LatencyScript;
+use crate::tree::Tree;
+
+/// A [`ScriptedService`] whose lifecycle is mirrored into a write-ahead
+/// log, for deterministic crash/recovery scripts.
+pub struct DurableScriptedService {
+    svc: ScriptedService,
+    wal: Wal,
+    snapshot_every: u64,
+    /// Completed thinks per session (drives the snapshot cadence).
+    thinks: std::collections::BTreeMap<u64, u64>,
+    /// Sessions whose current think has not finished yet.
+    pending_thinks: Vec<u64>,
+}
+
+impl DurableScriptedService {
+    /// Start on an empty data dir.
+    pub fn create(
+        exp_capacity: usize,
+        sim_capacity: usize,
+        script: LatencyScript,
+        store: &StoreConfig,
+    ) -> Result<DurableScriptedService> {
+        let (wal, recovery) = Wal::open(store)?;
+        anyhow::ensure!(
+            recovery.sessions.is_empty(),
+            "create() found existing sessions; use recover()"
+        );
+        Ok(DurableScriptedService {
+            svc: ScriptedService::new(exp_capacity, sim_capacity, script),
+            wal,
+            snapshot_every: store.snapshot_every.max(1) as u64,
+            thinks: Default::default(),
+            pending_thinks: Vec::new(),
+        })
+    }
+
+    /// Rebuild every session from the log after a crash; returns the
+    /// service and how many sessions were recovered.
+    pub fn recover(
+        exp_capacity: usize,
+        sim_capacity: usize,
+        script: LatencyScript,
+        store: &StoreConfig,
+    ) -> Result<(DurableScriptedService, usize)> {
+        let (wal, recovery) = Wal::open(store)?;
+        let mut svc = ScriptedService::new(exp_capacity, sim_capacity, script);
+        let mut thinks = std::collections::BTreeMap::new();
+        let recovered = recovery.sessions.len();
+        for rs in recovery.sessions {
+            let id = rs.image.session;
+            let weight = rs.image.meta.weight;
+            let mut driver = rs.image.into_driver(crate::service::proto::make_env)?;
+            for action in rs.advances {
+                driver.advance(action)?;
+            }
+            svc.install(id, driver, weight);
+            thinks.insert(id, 0);
+        }
+        Ok((
+            DurableScriptedService {
+                svc,
+                wal,
+                snapshot_every: store.snapshot_every.max(1) as u64,
+                thinks,
+                pending_thinks: Vec::new(),
+            },
+            recovered,
+        ))
+    }
+
+    /// Open a session; env must be constructed with `spec.seed` (the
+    /// durable convention — recovery rebuilds it as `make_env(name,
+    /// spec.seed)`).
+    pub fn open(&mut self, id: u64, env: &dyn Env, spec: SearchSpec, weight: f64) -> Result<()> {
+        self.svc.open(id, env, spec, weight);
+        let meta = SessionMeta {
+            env_seed: self.svc.driver(id).spec().seed,
+            weight,
+            ..SessionMeta::default()
+        };
+        let image = SessionImage::capture(id, self.svc.driver(id), meta)?.encode()?;
+        self.wal.append(&Record::Open { session: id, image })?;
+        self.thinks.insert(id, 0);
+        Ok(())
+    }
+
+    pub fn begin_think(&mut self, id: u64, budget: u32) {
+        self.svc.begin_think(id, budget);
+        self.pending_thinks.push(id);
+    }
+
+    /// Run every pending think to completion, then snapshot each
+    /// finished session on its cadence — the live scheduler's behavior
+    /// in virtual time.
+    pub fn run(&mut self) -> Result<()> {
+        self.svc.run_to_completion();
+        for id in std::mem::take(&mut self.pending_thinks) {
+            let done = {
+                let d = self.thinks.entry(id).or_insert(0);
+                *d += 1;
+                *d
+            };
+            if done % self.snapshot_every == 0 {
+                let meta = SessionMeta {
+                    env_seed: self.svc.driver(id).spec().seed,
+                    thinks: done,
+                    // Scripts run equal-weight sessions; the live
+                    // scheduler records real weights (image_of).
+                    weight: 1.0,
+                    ..SessionMeta::default()
+                };
+                let image = SessionImage::capture(id, self.svc.driver(id), meta)?.encode()?;
+                self.wal.append(&Record::Snapshot { session: id, image })?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn advance(&mut self, id: u64, action: usize) -> Result<AdvanceOutcome> {
+        let out = self.svc.advance(id, action)?;
+        self.wal.append(&Record::Advance { session: id, action })?;
+        Ok(out)
+    }
+
+    pub fn close(&mut self, id: u64) -> Result<()> {
+        self.svc.close(id)?;
+        self.wal.append(&Record::Close { session: id })?;
+        self.thinks.remove(&id);
+        Ok(())
+    }
+
+    pub fn best_action(&self, id: u64) -> usize {
+        self.svc.best_action(id)
+    }
+
+    pub fn tree(&self, id: u64) -> &Tree {
+        self.svc.driver(id).tree()
+    }
+
+    pub fn quiescent(&self, id: u64) -> bool {
+        self.svc.quiescent(id)
+    }
+
+    /// Crash the process model: drop everything without closing. Every
+    /// appended record is already on disk, so this is exactly `kill -9`.
+    pub fn crash(self) {
+        drop(self);
+    }
+}
+
+/// Outcome of the [`migrate_under_load`] script.
+pub struct MigrationRun {
+    /// The migrated session's id.
+    pub session: u64,
+    /// `best` on the control run (never migrated).
+    pub control_best: usize,
+    /// `best` on the target shard after migration + further load.
+    pub migrated_best: usize,
+    /// `ΣO = 0` held for every session on both shards at the end.
+    pub all_quiescent: bool,
+    pub source_trace: Trace,
+    pub target_trace: Trace,
+}
+
+/// Migrate-under-load in virtual time: a source shard running three
+/// sessions and a target shard running two, session 1 exported from the
+/// source after its first think wave and imported into the busy target,
+/// then both shards run another wave around it. Deterministic in `seed`
+/// (golden traces), and directly comparable to an unmigrated control run
+/// of the same source schedule.
+pub fn migrate_under_load(seed: u64) -> Result<MigrationRun> {
+    let spec = |sid: u64| SearchSpec {
+        max_simulations: 24,
+        rollout_limit: 8,
+        max_depth: 12,
+        seed: seed.wrapping_mul(31).wrapping_add(sid),
+        ..SearchSpec::default()
+    };
+    // The durable convention: env constructed with the spec's seed, with
+    // proto::make_env's garnet parameters.
+    let env = |sid: u64| Garnet::new(15, 3, 30, 0.0, spec(sid).seed);
+    let script = LatencyScript::uniform(seed, (1, 3), (2, 9));
+    let wave = |svc: &mut ScriptedService, ids: &[u64]| {
+        for &id in ids {
+            svc.begin_think(id, 24);
+        }
+        svc.run_to_completion();
+    };
+
+    // Control: the source schedule with no migration.
+    let mut control = ScriptedService::new(2, 4, script);
+    for id in [1, 2, 3] {
+        control.open(id, &env(id), spec(id), 1.0);
+    }
+    wave(&mut control, &[1, 2, 3]);
+    let control_best = control.best_action(1);
+
+    // Migrated run: identical source, plus a target shard under its own
+    // load before, during and after the hand-off.
+    let mut source = ScriptedService::new(2, 4, script);
+    for id in [1, 2, 3] {
+        source.open(id, &env(id), spec(id), 1.0);
+    }
+    wave(&mut source, &[1, 2, 3]);
+    let target_script = LatencyScript::uniform(seed ^ 0x7a11, (1, 3), (2, 9));
+    let mut target = ScriptedService::new(2, 4, target_script);
+    for id in [11, 12] {
+        target.open(id, &env(id), spec(id), 1.0);
+    }
+    wave(&mut target, &[11, 12]);
+
+    let bytes = source.export(1)?;
+    let session = target.import(&bytes)?;
+
+    // Load keeps flowing on both shards around the migrated session.
+    wave(&mut source, &[2, 3]);
+    wave(&mut target, &[11, 12]);
+
+    let migrated_best = target.best_action(session);
+    let all_quiescent = [2u64, 3].iter().all(|&id| source.quiescent(id))
+        && [session, 11, 12].iter().all(|&id| target.quiescent(id));
+    Ok(MigrationRun {
+        session,
+        control_best,
+        migrated_best,
+        all_quiescent,
+        source_trace: source.take_trace(),
+        target_trace: target.take_trace(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn migrate_under_load_matches_the_control_and_stays_quiescent() {
+        let run = migrate_under_load(17).unwrap();
+        assert_eq!(run.session, 1);
+        assert_eq!(
+            run.migrated_best, run.control_best,
+            "migration must not change the recommendation"
+        );
+        assert!(run.all_quiescent, "ΣO = 0 must hold on both shards");
+        assert!(!run.source_trace.is_empty());
+        assert!(!run.target_trace.is_empty());
+    }
+
+    #[test]
+    fn migrate_under_load_replays_identically_from_a_seed() {
+        let a = migrate_under_load(23).unwrap();
+        let b = migrate_under_load(23).unwrap();
+        assert_eq!(a.source_trace, b.source_trace, "golden source trace");
+        assert_eq!(a.target_trace, b.target_trace, "golden target trace");
+        let c = migrate_under_load(24).unwrap();
+        assert_ne!(a.source_trace, c.source_trace, "seeds script different runs");
+    }
+}

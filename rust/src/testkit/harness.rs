@@ -14,8 +14,9 @@ use std::collections::{BTreeMap, HashMap};
 
 use crate::env::Env;
 use crate::mcts::common::SearchSpec;
-use crate::mcts::wu_uct::driver::{SearchDriver, TaskSink};
+use crate::mcts::wu_uct::driver::{AdvanceOutcome, SearchDriver, TaskSink};
 use crate::service::fair::FairQueue;
+use crate::store::codec::{SessionImage, SessionMeta};
 use crate::testkit::executor::{Trace, VirtualExecutor};
 use crate::testkit::latency::LatencyScript;
 
@@ -41,6 +42,35 @@ pub fn scripted_search(
     sim_capacity: usize,
     script: LatencyScript,
 ) -> SearchOutcome {
+    let (driver, mut exec) = scripted_run(spec, env, exp_capacity, sim_capacity, script);
+    SearchOutcome {
+        best_action: driver.best_action(),
+        completed: driver.completed(),
+        ticks: exec.now(),
+        tree_size: driver.tree().len(),
+        trace: exec.take_trace(),
+    }
+}
+
+/// Like [`scripted_search`] but hands back the driver itself — the store
+/// codec tests and the snapshot-timing bench capture images from it.
+pub fn scripted_driver(
+    spec: SearchSpec,
+    env: &dyn Env,
+    exp_capacity: usize,
+    sim_capacity: usize,
+    script: LatencyScript,
+) -> SearchDriver {
+    scripted_run(spec, env, exp_capacity, sim_capacity, script).0
+}
+
+fn scripted_run(
+    spec: SearchSpec,
+    env: &dyn Env,
+    exp_capacity: usize,
+    sim_capacity: usize,
+    script: LatencyScript,
+) -> (SearchDriver, VirtualExecutor) {
     let budget = spec.max_simulations;
     let mut driver = SearchDriver::new(spec, env);
     driver.begin(budget);
@@ -68,18 +98,14 @@ pub fn scripted_search(
         }
     }
     driver.assert_quiescent();
-    SearchOutcome {
-        best_action: driver.best_action(),
-        completed: driver.completed(),
-        ticks: exec.now(),
-        tree_size: driver.tree().len(),
-        trace: exec.take_trace(),
-    }
+    (driver, exec)
 }
 
 struct ScriptedSession {
     driver: SearchDriver,
     thinking: bool,
+    /// Fair-share weight, recorded for durable exports.
+    weight: f64,
 }
 
 /// [`TaskSink`] wrapper recording task → session routes, exactly like the
@@ -133,15 +159,89 @@ impl ScriptedService {
     }
 
     /// Open a session rooted at `env`'s current state.
+    ///
+    /// Durable scripts ([`crate::testkit::durability`]) serialize
+    /// sessions with `env_seed = spec.seed`, so construct `env` with the
+    /// spec's seed when the script will export or log this session.
     pub fn open(&mut self, id: u64, env: &dyn Env, spec: SearchSpec, weight: f64) {
+        assert!(
+            !self.sessions.contains_key(&id),
+            "session {id} already open"
+        );
+        self.install(id, SearchDriver::new(spec, env), weight);
+        self.exec.note(&format!("open sid={id} weight={weight}"));
+    }
+
+    /// Install an existing driver under `id` (recovery / migration
+    /// import paths).
+    pub fn install(&mut self, id: u64, driver: SearchDriver, weight: f64) {
         assert!(
             !self.sessions.contains_key(&id),
             "session {id} already open"
         );
         self.fair.admit(id, weight);
         self.sessions
-            .insert(id, ScriptedSession { driver: SearchDriver::new(spec, env), thinking: false });
-        self.exec.note(&format!("open sid={id} weight={weight}"));
+            .insert(id, ScriptedSession { driver, thinking: false, weight });
+    }
+
+    /// Close an idle, quiescent session.
+    pub fn close(&mut self, id: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(self.sessions.contains_key(&id), "unknown session {id}");
+        anyhow::ensure!(!self.thinking(id), "session {id} has a think in flight");
+        anyhow::ensure!(self.quiescent(id), "session {id} is not quiescent");
+        self.sessions.remove(&id);
+        self.fair.remove(id);
+        self.exec.note(&format!("close sid={id}"));
+        Ok(())
+    }
+
+    /// Execute a real environment step with subtree reuse, exactly like
+    /// the live scheduler's `advance` op.
+    pub fn advance(&mut self, id: u64, action: usize) -> anyhow::Result<AdvanceOutcome> {
+        let sess = self
+            .sessions
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {id}"))?;
+        anyhow::ensure!(!sess.thinking, "session {id} has a think in flight");
+        let out = sess.driver.advance(action)?;
+        self.exec.note(&format!("advance sid={id} a={action}"));
+        Ok(out)
+    }
+
+    /// The session's driver (tree stats for golden assertions).
+    pub fn driver(&self, id: u64) -> &SearchDriver {
+        &self.sessions[&id].driver
+    }
+
+    /// Migration source half in virtual time: serialize the (idle,
+    /// quiescent) session to its checksummed image and remove it.
+    pub fn export(&mut self, id: u64) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(self.sessions.contains_key(&id), "unknown session {id}");
+        anyhow::ensure!(!self.thinking(id), "session {id} has a think in flight");
+        anyhow::ensure!(self.quiescent(id), "export requires quiescence (ΣO = 0)");
+        let sess = &self.sessions[&id];
+        let meta = SessionMeta {
+            env_seed: sess.driver.spec().seed,
+            weight: sess.weight,
+            ..SessionMeta::default()
+        };
+        let bytes = SessionImage::capture(id, &sess.driver, meta)?.encode()?;
+        self.sessions.remove(&id);
+        self.fair.remove(id);
+        self.exec.note(&format!("export sid={id} bytes={}", bytes.len()));
+        Ok(bytes)
+    }
+
+    /// Migration target half: decode, revive and install.
+    pub fn import(&mut self, bytes: &[u8]) -> anyhow::Result<u64> {
+        let image = SessionImage::decode(bytes)?;
+        let id = image.session;
+        anyhow::ensure!(!self.sessions.contains_key(&id), "session {id} already open");
+        let weight = image.meta.weight;
+        let driver = image.into_driver(crate::service::proto::make_env)?;
+        self.install(id, driver, weight);
+        self.exec.note(&format!("import sid={id}"));
+        Ok(id)
     }
 
     /// Begin a think with an explicit budget; runs when [`Self::run`] is
@@ -332,6 +432,45 @@ mod tests {
         };
         assert_eq!(run(5), run(5), "same seed ⇒ identical golden trace");
         assert_ne!(run(5), run(6), "different seeds script different schedules");
+    }
+
+    #[test]
+    fn export_import_preserves_the_tree_bit_for_bit() {
+        // env seed == spec seed, matching the durable-export convention
+        // (and proto's make_env("garnet", seed) construction).
+        let mut source = ScriptedService::new(1, 2, LatencyScript::fixed(1, 4));
+        source.open(7, &env(7), spec(16, 7), 2.0);
+        source.begin_think(7, 16);
+        source.run_to_completion();
+        let best = source.best_action(7);
+        let n_root = source.driver(7).tree().node(crate::tree::Tree::ROOT).n;
+        let bytes = source.export(7).unwrap();
+        assert!(source.export(7).is_err(), "exported session is gone");
+
+        let mut target = ScriptedService::new(2, 2, LatencyScript::fixed(2, 6));
+        let id = target.import(&bytes).unwrap();
+        assert_eq!(id, 7);
+        assert!(target.quiescent(7), "ΣO = 0 after import");
+        assert_eq!(target.best_action(7), best);
+        assert_eq!(target.driver(7).tree().node(crate::tree::Tree::ROOT).n, n_root);
+        // The migrated session keeps searching on its new shard.
+        target.begin_think(7, 8);
+        target.run_to_completion();
+        assert!(target.quiescent(7));
+        target.close(7).unwrap();
+    }
+
+    #[test]
+    fn advance_steps_the_session_env_with_reuse() {
+        let mut svc = ScriptedService::new(1, 2, LatencyScript::fixed(1, 3));
+        svc.open(1, &env(9), spec(20, 9), 1.0);
+        svc.begin_think(1, 20);
+        svc.run_to_completion();
+        let best = svc.best_action(1);
+        let out = svc.advance(1, best).unwrap();
+        assert!(out.reused, "searched action has an expanded child");
+        assert!(svc.quiescent(1));
+        svc.close(1).unwrap();
     }
 
     #[test]

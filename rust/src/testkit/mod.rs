@@ -25,16 +25,26 @@
 //!   using the very same [`FairQueue`](crate::service::fair::FairQueue)
 //!   component and dispatch gate as the live shard threads.
 //!
+//! * [`durability`] — the store's scripts on top of all that:
+//!   [`durability::DurableScriptedService`] mirrors a scripted shard
+//!   into a real write-ahead log so crashes can be scripted at any
+//!   think boundary and recovery compared against a re-run control, and
+//!   [`durability::migrate_under_load`] moves a session between two
+//!   loaded scripted shards with `ΣO = 0` checked on both sides.
+//!
 //! Used by `rust/tests/conformance.rs` (optimal-action conformance,
-//! worker-count invariance) and the fairness property in
-//! `rust/tests/properties.rs`.
+//! worker-count invariance), the fairness property in
+//! `rust/tests/properties.rs`, and the crash/recovery + migration golden
+//! tests in `rust/tests/store.rs`.
 //!
 //! [`TaskSink`]: crate::mcts::wu_uct::driver::TaskSink
 
+pub mod durability;
 pub mod executor;
 pub mod harness;
 pub mod latency;
 
+pub use durability::{migrate_under_load, DurableScriptedService, MigrationRun};
 pub use executor::{Trace, VirtualExecutor};
-pub use harness::{scripted_search, ScriptedService, SearchOutcome};
+pub use harness::{scripted_driver, scripted_search, ScriptedService, SearchOutcome};
 pub use latency::LatencyScript;

@@ -178,6 +178,63 @@ impl Tree {
     pub fn iter(&self) -> impl Iterator<Item = (NodeId, &Node)> {
         self.nodes.iter().enumerate()
     }
+
+    /// Rebuild a tree from raw nodes — the store codec's decode path.
+    ///
+    /// Unlike the rest of this type, the input is **untrusted** (bytes
+    /// off a disk), so every structural invariant is checked and
+    /// violations come back as `Err(reason)` instead of a panic: node 0
+    /// must be a parentless depth-0 root, every other node must be
+    /// listed exactly once in its parent's child map with a matching
+    /// edge action and `depth = parent + 1` (which also rules out
+    /// cycles), child actions must be unique per node, and `N` must
+    /// dominate the children's sum (invariant 2 of
+    /// [`Tree::check_invariants`]).
+    pub fn from_nodes(nodes: Vec<Node>) -> Result<Tree, &'static str> {
+        if nodes.is_empty() {
+            return Err("empty node list");
+        }
+        if nodes[0].parent.is_some() {
+            return Err("root has a parent");
+        }
+        if nodes[0].depth != 0 {
+            return Err("root depth is not zero");
+        }
+        let mut linked = vec![0usize; nodes.len()];
+        for (id, node) in nodes.iter().enumerate() {
+            let mut actions: Vec<usize> =
+                node.children.iter().map(|&(a, _)| a).collect();
+            actions.sort_unstable();
+            if actions.windows(2).any(|w| w[0] == w[1]) {
+                return Err("duplicate child action");
+            }
+            let mut child_n: u64 = 0;
+            for &(action, child) in &node.children {
+                if child == 0 || child >= nodes.len() {
+                    return Err("child id out of range");
+                }
+                linked[child] += 1;
+                let c = &nodes[child];
+                if c.parent != Some(id) {
+                    return Err("child's parent link mismatch");
+                }
+                if c.action != action {
+                    return Err("child's edge action mismatch");
+                }
+                if c.depth != node.depth + 1 {
+                    return Err("child depth mismatch");
+                }
+                child_n += c.n as u64;
+            }
+            if (node.n as u64) < child_n {
+                return Err("parent N below children's sum");
+            }
+        }
+        if linked.iter().skip(1).any(|&seen| seen != 1) {
+            return Err("node not linked exactly once");
+        }
+        Ok(Tree { nodes })
+    }
 }
 
 impl Default for Tree {
@@ -334,6 +391,54 @@ mod tests {
         assert_eq!(t.node(Tree::ROOT).n, 9);
         assert_eq!(t.max_depth(), 1);
         t.check_invariants();
+    }
+
+    #[test]
+    fn from_nodes_accepts_a_valid_tree_and_preserves_it() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(a, 2);
+        t.node_mut(b).n = 3;
+        t.node_mut(a).n = 5;
+        t.node_mut(Tree::ROOT).n = 5;
+        let nodes: Vec<Node> = t.iter().map(|(_, n)| n.clone()).collect();
+        let rebuilt = Tree::from_nodes(nodes).expect("valid tree");
+        assert_eq!(rebuilt.len(), 3);
+        assert_eq!(rebuilt.node(b).n, 3);
+        rebuilt.check_invariants();
+    }
+
+    #[test]
+    fn from_nodes_rejects_structural_damage() {
+        // Root with a parent.
+        assert!(Tree::from_nodes(vec![Node::new(Some(0), 0, 0)]).is_err());
+        // Empty list.
+        assert!(Tree::from_nodes(Vec::new()).is_err());
+        // Child out of range.
+        let mut root = Node::new(None, 0, 0);
+        root.children.push((0, 5));
+        assert!(Tree::from_nodes(vec![root]).is_err());
+        // Orphan node (never linked).
+        let orphan = vec![Node::new(None, 0, 0), Node::new(Some(0), 1, 1)];
+        assert!(Tree::from_nodes(orphan).is_err());
+        // Depth mismatch.
+        let mut root = Node::new(None, 0, 0);
+        root.children.push((1, 1));
+        let child = Node::new(Some(0), 1, 7);
+        assert!(Tree::from_nodes(vec![root, child]).is_err());
+        // Parent undercounts its children.
+        let mut root = Node::new(None, 0, 0);
+        root.children.push((1, 1));
+        let mut child = Node::new(Some(0), 1, 1);
+        child.n = 9;
+        assert!(Tree::from_nodes(vec![root, child]).is_err());
+        // Duplicate action under one parent.
+        let mut root = Node::new(None, 0, 0);
+        root.children.push((1, 1));
+        root.children.push((1, 2));
+        let c1 = Node::new(Some(0), 1, 1);
+        let c2 = Node::new(Some(0), 1, 1);
+        assert!(Tree::from_nodes(vec![root, c1, c2]).is_err());
     }
 
     #[test]

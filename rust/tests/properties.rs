@@ -434,3 +434,53 @@ fn prop_wu_uct_budget_always_exact() {
         s.search(&env).simulations == t_max
     });
 }
+
+#[test]
+fn prop_ring_placement_skew_stays_under_twice_the_mean() {
+    // Consistent-hash placement quality (the store's rebalancer treats
+    // the ring as "good enough that only live load needs moving"): over
+    // 10k random keys, no shard's share may reach 2x the mean.
+    check("ring skew < 2x mean", 10, |g| {
+        let shards = g.usize(2, 8);
+        let ring = wu_uct::service::HashRing::new(shards, 64).unwrap();
+        let mut counts = vec![0usize; shards];
+        for _ in 0..10_000 {
+            counts[ring.place(g.u64())] += 1;
+        }
+        let mean = 10_000.0 / shards as f64;
+        counts.iter().all(|&c| (c as f64) < 2.0 * mean)
+    });
+}
+
+#[test]
+fn prop_session_images_roundtrip_for_random_searched_trees() {
+    // The store codec is lossless on any tree WU-UCT can actually
+    // produce: random Garnet searches under random scripted latencies
+    // encode, decode and re-encode bit-identically, and the revived
+    // driver reproduces the recommendation.
+    use wu_uct::store::codec::{SessionImage, SessionMeta};
+    use wu_uct::testkit::{scripted_driver, LatencyScript};
+    check("session image roundtrip", 12, |g| {
+        let seed = g.u64() % 100_000;
+        let env = Garnet::new(15, 3, 30, 0.0, seed);
+        let spec = SearchSpec {
+            max_simulations: g.u32(4, 48),
+            rollout_limit: 6,
+            max_depth: 10,
+            seed,
+            ..SearchSpec::default()
+        };
+        let script = LatencyScript::uniform(g.u64(), (1, 3), (1, 8));
+        let driver = scripted_driver(spec, &env, g.usize(1, 2), g.usize(1, 4), script);
+        let meta = SessionMeta { env_seed: seed, ..SessionMeta::default() };
+        let image = SessionImage::capture(7, &driver, meta).unwrap();
+        let bytes = image.encode().unwrap();
+        let back = SessionImage::decode(&bytes).unwrap();
+        let stable = back.encode().unwrap() == bytes;
+        let revived = back.into_driver(wu_uct::service::proto::make_env).unwrap();
+        stable
+            && revived.tree().len() == driver.tree().len()
+            && revived.best_action() == driver.best_action()
+            && revived.tree().total_unobserved() == 0
+    });
+}
