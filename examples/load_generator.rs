@@ -3,7 +3,12 @@
 //!
 //! By default it spins the service up in-process on an ephemeral port (so
 //! the example is self-contained); point `--addr` at a running
-//! `wu-uct serve` to drive an external server instead.
+//! `wu-uct serve` to drive an external server instead — including a
+//! router tier (`serve --hosts ...`) under migration churn: transient
+//! `{"busy":true}` (admission control) and `{"recovering":true}`
+//! (mid-migration / mid-recovery) replies are retried with capped
+//! exponential backoff rather than treated as failures, and the summary
+//! reports how many retries the run absorbed.
 //!
 //! ```bash
 //! cargo run --release --example load_generator -- --clients 32 --sims 32
@@ -12,12 +17,20 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 use wu_uct::service::json::Json;
 use wu_uct::service::{SearchService, ServiceConfig, TcpServer};
 use wu_uct::util::cli::{usage, Args, OptSpec};
+
+/// Retry budget for one logical request: enough to ride out a live
+/// migration (the hand-off is a handful of round trips) without hiding a
+/// genuinely wedged server.
+const MAX_RETRIES: u32 = 16;
+/// First backoff sleep; doubles per retry up to [`BACKOFF_CAP`].
+const BACKOFF_START: Duration = Duration::from_millis(2);
+const BACKOFF_CAP: Duration = Duration::from_millis(100);
 
 fn specs() -> Vec<OptSpec> {
     vec![
@@ -33,19 +46,59 @@ fn specs() -> Vec<OptSpec> {
     ]
 }
 
-/// One line-delimited JSON round trip.
-fn request(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, line: &str) -> Result<Json> {
+/// One raw line-delimited JSON round trip (no retry policy).
+fn round_trip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    line: &str,
+) -> Result<Json> {
     writer.write_all(line.as_bytes())?;
     writer.write_all(b"\n")?;
     writer.flush()?;
     let mut reply = String::new();
     reader.read_line(&mut reply)?;
-    let v = Json::parse(reply.trim()).context("parsing server reply")?;
-    if v.get("ok").and_then(|o| o.as_bool()) != Some(true) {
-        let msg = v.get("error").and_then(|e| e.as_str()).unwrap_or("unknown error");
-        return Err(anyhow!("server error: {msg}"));
+    Json::parse(reply.trim()).context("parsing server reply")
+}
+
+/// Whether an error reply is transient by contract: `busy` is admission
+/// control saying "later", `recovering` is a session mid-migration or
+/// mid-recovery, seconds from serving again.
+fn is_transient(v: &Json) -> bool {
+    v.get("busy").and_then(|b| b.as_bool()) == Some(true)
+        || v.get("recovering").and_then(|r| r.as_bool()) == Some(true)
+}
+
+/// One logical request: retries transient (`busy` / `recovering`)
+/// replies with capped exponential backoff, counting each retry into
+/// `retries`. Non-transient errors fail immediately.
+fn request(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    line: &str,
+    retries: &mut u64,
+) -> Result<Json> {
+    let mut backoff = BACKOFF_START;
+    for attempt in 0..=MAX_RETRIES {
+        let v = round_trip(reader, writer, line)?;
+        if v.get("ok").and_then(|o| o.as_bool()) == Some(true) {
+            return Ok(v);
+        }
+        let msg = v
+            .get("error")
+            .and_then(|e| e.as_str())
+            .unwrap_or("unknown error")
+            .to_string();
+        if !is_transient(&v) {
+            return Err(anyhow!("server error: {msg}"));
+        }
+        if attempt == MAX_RETRIES {
+            return Err(anyhow!("still transient after {MAX_RETRIES} retries: {msg}"));
+        }
+        *retries += 1;
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(BACKOFF_CAP);
     }
-    Ok(v)
+    unreachable!("loop returns on success, fatal error, or retry exhaustion")
 }
 
 struct EpisodeStats {
@@ -53,6 +106,8 @@ struct EpisodeStats {
     steps: u64,
     thinks: u64,
     reused: u64,
+    /// Transient (`busy` / `recovering`) replies absorbed by backoff.
+    retries: u64,
 }
 
 /// Drive one full episode over its own connection.
@@ -60,20 +115,25 @@ fn run_episode(addr: &str, env: &str, seed: u64, sims: u64, max_steps: u64) -> R
     let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    let mut stats = EpisodeStats { reward: 0.0, steps: 0, thinks: 0, reused: 0, retries: 0 };
     let open = request(
         &mut reader,
         &mut writer,
         &format!(r#"{{"op":"open","env":"{env}","seed":{seed},"sims":{sims}}}"#),
+        &mut stats.retries,
     )?;
     let sid = open
         .get("session")
         .and_then(|s| s.as_u64())
         .ok_or_else(|| anyhow!("open reply missing session id"))?;
 
-    let mut stats = EpisodeStats { reward: 0.0, steps: 0, thinks: 0, reused: 0 };
     for _ in 0..max_steps {
-        let think =
-            request(&mut reader, &mut writer, &format!(r#"{{"op":"think","session":{sid}}}"#))?;
+        let think = request(
+            &mut reader,
+            &mut writer,
+            &format!(r#"{{"op":"think","session":{sid}}}"#),
+            &mut stats.retries,
+        )?;
         stats.thinks += 1;
         let action = think
             .get("action")
@@ -83,6 +143,7 @@ fn run_episode(addr: &str, env: &str, seed: u64, sims: u64, max_steps: u64) -> R
             &mut reader,
             &mut writer,
             &format!(r#"{{"op":"advance","session":{sid},"action":{action}}}"#),
+            &mut stats.retries,
         )?;
         stats.steps += 1;
         stats.reward += adv.get("reward").and_then(|r| r.as_f64()).unwrap_or(0.0);
@@ -93,7 +154,12 @@ fn run_episode(addr: &str, env: &str, seed: u64, sims: u64, max_steps: u64) -> R
             break;
         }
     }
-    request(&mut reader, &mut writer, &format!(r#"{{"op":"close","session":{sid}}}"#))?;
+    request(
+        &mut reader,
+        &mut writer,
+        &format!(r#"{{"op":"close","session":{sid}}}"#),
+        &mut stats.retries,
+    )?;
     Ok(stats)
 }
 
@@ -145,7 +211,8 @@ fn main() -> Result<()> {
     let elapsed = start.elapsed();
 
     let mut ok = 0usize;
-    let (mut reward, mut steps_total, mut thinks, mut reused) = (0.0, 0u64, 0u64, 0u64);
+    let (mut reward, mut steps_total, mut thinks, mut reused, mut retries) =
+        (0.0, 0u64, 0u64, 0u64, 0u64);
     for r in &results {
         match r {
             Ok(s) => {
@@ -154,6 +221,7 @@ fn main() -> Result<()> {
                 steps_total += s.steps;
                 thinks += s.thinks;
                 reused += s.reused;
+                retries += s.retries;
             }
             Err(e) => eprintln!("episode failed: {e:#}"),
         }
@@ -165,12 +233,18 @@ fn main() -> Result<()> {
         if ok > 0 { reward / ok as f64 } else { 0.0 },
         if steps_total > 0 { 100.0 * reused as f64 / steps_total as f64 } else { 0.0 },
     );
+    println!(
+        "transient-retry absorption: {retries} busy/recovering replies retried with backoff \
+         ({:.2} per episode)",
+        if ok > 0 { retries as f64 / ok as f64 } else { 0.0 },
+    );
 
     // Server-side view of the same run.
     let stream = TcpStream::connect(&addr)?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let m = request(&mut reader, &mut writer, r#"{"op":"metrics"}"#)?;
+    let mut meta_retries = 0u64;
+    let m = request(&mut reader, &mut writer, r#"{"op":"metrics"}"#, &mut meta_retries)?;
     println!(
         "server: {} thinks, {} sims, think p50 {:.1} ms / p99 {:.1} ms, sim-pool occupancy {:.0}%",
         m.get("thinks").and_then(|v| v.as_u64()).unwrap_or(0),

@@ -4,7 +4,10 @@
 //! ```text
 //! wu-uct search        one search on a named environment
 //! wu-uct play          full episode with search-per-step
-//! wu-uct serve         multi-session search service over TCP (JSON lines)
+//! wu-uct serve         multi-session search service over TCP (JSON lines);
+//!                      with --hosts a:p,b:p it becomes a stateless router
+//!                      over remote shard hosts
+//! wu-uct shard-host    one session-hosting process for a router tier
 //! wu-uct atari-table1  Table 1 (+ Fig. 10 with --relative)
 //! wu-uct atari-fig5    Fig. 5 worker sweep
 //! wu-uct treep-ablation  Table 5 TreeP-variant comparison
@@ -60,6 +63,11 @@ fn specs() -> Vec<OptSpec> {
             name: "rebalance",
             help: "serve: auto-migrate sessions when shard occupancy skew exceeds this factor (0 = off)",
             default: Some("0"),
+        },
+        OptSpec {
+            name: "hosts",
+            help: "serve: comma list of shard-host addresses; makes serve a stateless router over them",
+            default: Some(""),
         },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
@@ -118,8 +126,8 @@ fn main() -> Result<()> {
             "{}",
             usage("wu-uct", "WU-UCT parallel MCTS (ICLR 2020) reproduction", &specs())
         );
-        println!("commands: search, play, serve, atari-table1, atari-fig5, treep-ablation,");
-        println!("          sweep-speedup, breakdown, passrate, policy-eval");
+        println!("commands: search, play, serve, shard-host, atari-table1, atari-fig5,");
+        println!("          treep-ablation, sweep-speedup, breakdown, passrate, policy-eval");
         return Ok(());
     }
     let scale = scale_from(&args)?;
@@ -165,7 +173,7 @@ fn main() -> Result<()> {
                 r.time_per_step
             );
         }
-        "serve" => {
+        "serve" | "shard-host" => {
             let exp_workers = args.usize("exp-workers")?.max(1);
             let sim_workers = args.usize("workers")?.max(1);
             let shards = args.usize_at_least("shards", 1)?;
@@ -173,6 +181,41 @@ fn main() -> Result<()> {
             let data_dir = args.str("data-dir")?.to_string();
             let snapshot_every = args.u32("snapshot-every")?.max(1);
             let rebalance_skew = args.f64("rebalance")?;
+            let hosts_arg = args.str("hosts")?.to_string();
+            if command == "serve" && !hosts_arg.is_empty() {
+                // Router tier: no local shards, no local sessions — just
+                // placement + proxying over the shard-host fleet.
+                let hosts: Vec<String> = hosts_arg
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                let router = wu_uct::service::Router::start(wu_uct::service::RouterConfig {
+                    rebalance: (rebalance_skew > 0.0).then(|| wu_uct::service::RebalanceConfig {
+                        max_skew: rebalance_skew.max(1.0),
+                        ..wu_uct::service::RebalanceConfig::default()
+                    }),
+                    ..wu_uct::service::RouterConfig::new(hosts.clone())
+                })?;
+                let server = TcpServer::bind(router.handle(), args.str("addr")?)?;
+                println!(
+                    "wu-uct serve (router): listening on {}, routing over {} shard host(s): {}",
+                    server.local_addr(),
+                    router.hosts(),
+                    hosts.join(", "),
+                );
+                if rebalance_skew > 0.0 {
+                    println!(
+                        "auto-rebalance: moving sessions across hosts above {rebalance_skew}x mean occupancy"
+                    );
+                }
+                println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, ping");
+                server.join(); // foreground until killed
+                return Ok(());
+            }
+            if command == "shard-host" && !hosts_arg.is_empty() {
+                bail!("--hosts belongs to the router (`serve`); a shard-host hosts sessions itself");
+            }
             let service = ShardedService::start_durable(ShardedConfig {
                 shards,
                 shard: ServiceConfig {
@@ -193,9 +236,15 @@ fn main() -> Result<()> {
             })?;
             let server = TcpServer::bind(service.handle(), args.str("addr")?)?;
             println!(
-                "wu-uct serve: listening on {} ({shards} shard(s), each {exp_workers} expansion / {sim_workers} simulation workers)",
+                "wu-uct {command}: listening on {} ({shards} shard(s), each {exp_workers} expansion / {sim_workers} simulation workers)",
                 server.local_addr(),
             );
+            if command == "shard-host" {
+                println!(
+                    "shard host: speaks the cross-process ops (export, import, install, health) \
+                     for a `wu-uct serve --hosts ...` router tier"
+                );
+            }
             if max_sessions > 0 {
                 println!("admission control: {max_sessions} sessions/shard, busy replies beyond");
             }
@@ -209,7 +258,7 @@ fn main() -> Result<()> {
             if rebalance_skew > 0.0 {
                 println!("auto-rebalance: moving sessions above {rebalance_skew}x mean occupancy");
             }
-            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, metrics, ping");
+            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, ping");
             server.join(); // foreground until killed
         }
         "atari-table1" => {

@@ -1,0 +1,494 @@
+//! Pooled line-protocol clients to remote shard hosts.
+//!
+//! The router tier ([`crate::service::router`]) proxies every session op
+//! to the owning host over TCP. One [`HostClient`] per host keeps a pool
+//! of idle connections: a call checks one out (or dials), does one
+//! request/reply line round trip, and returns the connection to the
+//! pool. A connection that fails mid-call is dropped and the call
+//! retried once on a fresh dial; if the dial fails too, the typed
+//! [`HostUnreachable`] error surfaces — the router counts these in its
+//! `host_unreachable` metric and the caller decides whether the failure
+//! aborts a migration handshake or just this op.
+//!
+//! Error mapping: remote error replies are rebuilt into the same typed
+//! errors the in-process path raises — `"busy":true` becomes
+//! [`Busy`](crate::service::scheduler::Busy), `"recovering":true`
+//! becomes [`Recovering`](crate::store::migrate::Recovering) — with the
+//! remote message attached as context, so retry logic upstream (clients,
+//! the load generator, the rebalancer) cannot tell a remote shard from a
+//! local one.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context as _, Result};
+
+use crate::mcts::common::SearchSpec;
+use crate::service::json::Json;
+use crate::service::metrics::ServiceMetrics;
+use crate::service::proto::{image_from_hex, image_to_hex, metrics_from_json};
+use crate::service::scheduler::{
+    AdvanceReply, Busy, CloseReply, SessionOptions, SessionStat, ThinkReply,
+};
+use crate::store::migrate::Recovering;
+
+/// Typed connectivity failure: the host did not answer (dial refused,
+/// connection reset, or EOF mid-reply). Distinct from a remote *error
+/// reply*, which means the host is alive and said no.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostUnreachable {
+    pub host: String,
+}
+
+impl std::fmt::Display for HostUnreachable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "host {} is unreachable", self.host)
+    }
+}
+
+impl std::error::Error for HostUnreachable {}
+
+/// One remote host's `health` reply, parsed.
+#[derive(Debug, Clone)]
+pub struct RemoteHealth {
+    pub role: String,
+    pub shards: usize,
+    pub sessions_open: usize,
+    /// Open sessions with progress counters, ascending by id.
+    pub sessions: Vec<SessionStat>,
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Outcome of one round-trip attempt on one connection.
+enum Attempt {
+    Reply(String),
+    /// The request never left this process; always safe to retry.
+    WriteFailed,
+    /// The request may have been delivered and executed; only
+    /// idempotent requests may retry.
+    ReadFailed,
+}
+
+/// A pooled line-protocol client to one shard host.
+pub struct HostClient {
+    addr: String,
+    pool: Mutex<Vec<Conn>>,
+    /// Dial timeout: a blackholed host (packets dropped, no RST) must
+    /// not wedge a router thread for the OS SYN-retry window.
+    connect_timeout: Duration,
+    /// Per-read timeout so a silent peer cannot hang a router thread.
+    /// Generous by default — a think with a big budget legitimately
+    /// takes a while — and tunable via [`HostClient::with_read_timeout`].
+    read_timeout: Duration,
+}
+
+impl HostClient {
+    pub fn new(addr: impl Into<String>) -> HostClient {
+        HostClient {
+            addr: addr.into(),
+            pool: Mutex::new(Vec::new()),
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(120),
+        }
+    }
+
+    /// Raise (or lower) the reply timeout — deployments whose thinks run
+    /// longer than the default 120 s should size this to their worst
+    /// expected search, or a healthy host mid-think reads as unreachable.
+    pub fn with_read_timeout(mut self, read_timeout: Duration) -> HostClient {
+        self.read_timeout = read_timeout;
+        self
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn dial(&self) -> std::io::Result<Conn> {
+        use std::net::ToSocketAddrs;
+        let addr = self
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| std::io::Error::other(format!("{} resolves to nothing", self.addr)))?;
+        let stream = TcpStream::connect_timeout(&addr, self.connect_timeout)?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        let writer = stream.try_clone()?;
+        Ok(Conn { reader: BufReader::new(stream), writer })
+    }
+
+    /// One request/reply line round trip on a connection, distinguishing
+    /// *where* it failed — a failed write means the request never left
+    /// this process (always safe to retry); a failed read means it may
+    /// have been delivered and executed (only idempotent ops may retry).
+    fn try_call(conn: &mut Conn, line: &str) -> Attempt {
+        if conn.writer.write_all(line.as_bytes()).is_err()
+            || conn.writer.write_all(b"\n").is_err()
+            || conn.writer.flush().is_err()
+        {
+            return Attempt::WriteFailed;
+        }
+        let mut reply = String::new();
+        match conn.reader.read_line(&mut reply) {
+            Ok(0) | Err(_) => Attempt::ReadFailed, // EOF or timeout/reset
+            Ok(_) => Attempt::Reply(reply),
+        }
+    }
+
+    /// Send one raw request line and parse the reply document — for
+    /// **idempotent** requests (ping, metrics, health, best): a lost
+    /// reply is retried once on a fresh dial. A host that cannot be
+    /// reached is the typed [`HostUnreachable`].
+    pub fn call(&self, line: &str) -> Result<Json> {
+        self.call_policy(line, true)
+    }
+
+    /// Like [`HostClient::call`] but for requests with **side effects**
+    /// (open, think, advance, close, export, import, install): a stale
+    /// pooled connection whose *write* fails is retried on a fresh dial
+    /// (the request provably never left), but a lost *reply* is not —
+    /// the op may have executed, and re-sending it would double-step an
+    /// env, re-run a search, or collide an import. Callers see
+    /// [`HostUnreachable`] and decide (the migration handshake aborts
+    /// and unseals; clients surface the error).
+    pub fn call_once(&self, line: &str) -> Result<Json> {
+        self.call_policy(line, false)
+    }
+
+    fn call_policy(&self, line: &str, idempotent: bool) -> Result<Json> {
+        for attempt in 0..2 {
+            let conn = if attempt == 0 { self.pool.lock().unwrap().pop() } else { None };
+            let mut conn = match conn {
+                Some(c) => c,
+                None => match self.dial() {
+                    Ok(c) => c,
+                    Err(_) => continue, // nothing sent; next attempt re-dials
+                },
+            };
+            let reply = match Self::try_call(&mut conn, line) {
+                Attempt::Reply(reply) => reply,
+                Attempt::WriteFailed => continue,
+                Attempt::ReadFailed if idempotent => continue,
+                Attempt::ReadFailed => break, // may have landed: do not re-execute
+            };
+            let v = Json::parse(reply.trim()).with_context(|| {
+                format!("host {} sent an unparseable reply", self.addr)
+            })?;
+            self.pool.lock().unwrap().push(conn);
+            return Ok(v);
+        }
+        Err(anyhow::Error::new(HostUnreachable { host: self.addr.clone() }))
+    }
+
+    /// Split an `ok:false` reply back into the typed error the host
+    /// raised; `session` contextualizes a rebuilt `Recovering`.
+    fn expect_ok(&self, v: Json, session: u64) -> Result<Json> {
+        if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+            return Ok(v);
+        }
+        let msg = v
+            .get("error")
+            .and_then(|e| e.as_str())
+            .unwrap_or("unknown remote error")
+            .to_string();
+        if v.get("busy").and_then(|b| b.as_bool()) == Some(true) {
+            return Err(anyhow::Error::new(Busy { open: 0, limit: 0 })
+                .context(format!("host {}: {msg}", self.addr)));
+        }
+        if v.get("recovering").and_then(|b| b.as_bool()) == Some(true) {
+            return Err(anyhow::Error::new(Recovering { session })
+                .context(format!("host {}: {msg}", self.addr)));
+        }
+        Err(anyhow!("host {}: {msg}", self.addr))
+    }
+
+    fn ok_call(&self, line: &str, session: u64) -> Result<Json> {
+        let v = self.call(line)?;
+        self.expect_ok(v, session)
+    }
+
+    fn ok_call_once(&self, line: &str, session: u64) -> Result<Json> {
+        let v = self.call_once(line)?;
+        self.expect_ok(v, session)
+    }
+
+    pub fn ping(&self) -> Result<()> {
+        self.ok_call(r#"{"op":"ping"}"#, 0).map(|_| ())
+    }
+
+    /// Open under a router-assigned id. The env is reconstructed host-
+    /// side as `make_env(env_name, opts.env_seed)` — the same durable
+    /// convention recovery and migration already rely on — so only
+    /// wire-expressible spec fields travel (`beta`/`expand_prob` stay at
+    /// their family defaults, which the wire cannot change either).
+    pub fn open_with_id(
+        &self,
+        id: u64,
+        env_name: &str,
+        spec: &SearchSpec,
+        opts: &SessionOptions,
+    ) -> Result<u64> {
+        let mut fields = vec![
+            ("op".to_string(), Json::Str("open".to_string())),
+            ("env".to_string(), Json::Str(env_name.to_string())),
+            ("id".to_string(), Json::Num(id as f64)),
+            ("seed".to_string(), Json::Num(opts.env_seed as f64)),
+            ("sims".to_string(), Json::Num(spec.max_simulations as f64)),
+            ("rollout".to_string(), Json::Num(spec.rollout_limit as f64)),
+            ("depth".to_string(), Json::Num(spec.max_depth as f64)),
+            ("width".to_string(), Json::Num(spec.max_width as f64)),
+            ("gamma".to_string(), Json::Num(spec.gamma)),
+            ("weight".to_string(), Json::Num(opts.weight)),
+        ];
+        if let Some(budget) = opts.total_sim_budget {
+            fields.push(("budget".to_string(), Json::Num(budget as f64)));
+        }
+        let v = self.ok_call_once(&Json::Obj(fields).render(), id)?;
+        v.get("session")
+            .and_then(|s| s.as_u64())
+            .ok_or_else(|| anyhow!("host {}: open reply missing session id", self.addr))
+    }
+
+    pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
+        let line = format!(r#"{{"op":"think","session":{session},"sims":{sims}}}"#);
+        let v = self.ok_call_once(&line, session)?;
+        let field = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| anyhow!("host {}: think reply missing {key:?}", self.addr))
+        };
+        Ok(ThinkReply {
+            action: field("action")? as usize,
+            value: field("value")?,
+            sims: field("sims")? as u32,
+            tree_size: field("tree")? as usize,
+            elapsed_ms: field("ms")?,
+            quiescent: v.get("quiescent").and_then(|q| q.as_bool()).unwrap_or(false),
+            remaining: v.get("remaining").and_then(|r| r.as_u64()),
+        })
+    }
+
+    pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
+        let line = format!(r#"{{"op":"advance","session":{session},"action":{action}}}"#);
+        let v = self.ok_call_once(&line, session)?;
+        let flag = |key: &str| v.get(key).and_then(|x| x.as_bool()).unwrap_or(false);
+        Ok(AdvanceReply {
+            reward: v.get("reward").and_then(|r| r.as_f64()).unwrap_or(0.0),
+            done: flag("done"),
+            reused: flag("reused"),
+            retained: v.get("retained").and_then(|r| r.as_u64()).unwrap_or(0) as usize,
+            steps: v.get("steps").and_then(|s| s.as_u64()).unwrap_or(0),
+        })
+    }
+
+    pub fn best_action(&self, session: u64) -> Result<usize> {
+        let v = self.ok_call(&format!(r#"{{"op":"best","session":{session}}}"#), session)?;
+        v.get("action")
+            .and_then(|a| a.as_usize())
+            .ok_or_else(|| anyhow!("host {}: best reply missing action", self.addr))
+    }
+
+    pub fn close(&self, session: u64) -> Result<CloseReply> {
+        let v = self.ok_call_once(&format!(r#"{{"op":"close","session":{session}}}"#), session)?;
+        let int = |key: &str| v.get(key).and_then(|x| x.as_u64()).unwrap_or(0);
+        Ok(CloseReply {
+            thinks: int("thinks"),
+            sims: int("sims"),
+            steps: int("steps"),
+            unobserved: int("unobserved"),
+        })
+    }
+
+    /// Migration source half: serialize + seal on the host, and carry
+    /// the binary image back out of its hex frame.
+    pub fn export(&self, session: u64) -> Result<Vec<u8>> {
+        let v = self.ok_call_once(&format!(r#"{{"op":"export","session":{session}}}"#), session)?;
+        let frame = v
+            .get("image")
+            .and_then(|i| i.as_str())
+            .ok_or_else(|| anyhow!("host {}: export reply missing image", self.addr))?;
+        image_from_hex(frame)
+            .with_context(|| format!("host {} sent a malformed image frame", self.addr))
+    }
+
+    /// Migration target half: install an image (durable `Open` lands
+    /// before the host acks).
+    pub fn import(&self, image: &[u8]) -> Result<u64> {
+        let line = Json::Obj(vec![
+            ("op".to_string(), Json::Str("import".to_string())),
+            ("image".to_string(), Json::Str(image_to_hex(image))),
+        ])
+        .render();
+        let v = self.ok_call_once(&line, 0)?;
+        v.get("session")
+            .and_then(|s| s.as_u64())
+            .ok_or_else(|| anyhow!("host {}: import reply missing session id", self.addr))
+    }
+
+    /// Resolve a seal: `landed = true` forgets the host's copy,
+    /// `landed = false` unseals it.
+    pub fn install(&self, session: u64, landed: bool) -> Result<()> {
+        let line = format!(r#"{{"op":"install","session":{session},"landed":{landed}}}"#);
+        self.ok_call_once(&line, session).map(|_| ())
+    }
+
+    pub fn metrics(&self) -> Result<ServiceMetrics> {
+        let v = self.ok_call(r#"{"op":"metrics"}"#, 0)?;
+        Ok(metrics_from_json(&v))
+    }
+
+    pub fn health(&self) -> Result<RemoteHealth> {
+        let v = self.ok_call(r#"{"op":"health"}"#, 0)?;
+        let mut sessions = Vec::new();
+        if let Some(Json::Arr(items)) = v.get("sessions") {
+            for item in items {
+                let int = |key: &str| item.get(key).and_then(|x| x.as_u64());
+                let Some(id) = int("id") else { continue };
+                sessions.push(SessionStat {
+                    id,
+                    thinks: int("thinks").unwrap_or(0),
+                    steps: int("steps").unwrap_or(0),
+                    sealed: item.get("sealed").and_then(|s| s.as_bool()).unwrap_or(false),
+                });
+            }
+        }
+        Ok(RemoteHealth {
+            role: v
+                .get("role")
+                .and_then(|r| r.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+            shards: v.get("shards").and_then(|s| s.as_usize()).unwrap_or(0),
+            sessions_open: v.get("sessions_open").and_then(|s| s.as_usize()).unwrap_or(0),
+            sessions,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::scheduler::{SearchService, ServiceConfig};
+    use crate::service::server::TcpServer;
+
+    fn spec(seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: 12,
+            rollout_limit: 8,
+            max_depth: 10,
+            seed,
+            ..SearchSpec::default()
+        }
+    }
+
+    fn start_host() -> (SearchService, TcpServer, HostClient) {
+        let svc = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        });
+        let server = TcpServer::bind(svc.handle(), "127.0.0.1:0").unwrap();
+        let client = HostClient::new(server.local_addr().to_string());
+        (svc, server, client)
+    }
+
+    #[test]
+    fn full_lifecycle_through_the_client() {
+        let (_svc, _server, client) = start_host();
+        client.ping().unwrap();
+        let opts = SessionOptions { env_seed: 5, ..SessionOptions::default() };
+        let sid = client.open_with_id(41, "garnet", &spec(5), &opts).unwrap();
+        assert_eq!(sid, 41);
+        let t = client.think(sid, 0).unwrap();
+        assert_eq!(t.sims, 12);
+        assert!(t.quiescent);
+        let a = client.advance(sid, t.action).unwrap();
+        assert_eq!(a.steps, 1);
+        let best = client.best_action(sid).unwrap();
+        assert!(best < 3, "garnet's wire construction has 3 actions");
+        let h = client.health().unwrap();
+        assert_eq!(h.role, "service");
+        assert_eq!(h.sessions.len(), 1);
+        assert_eq!(h.sessions[0].id, 41);
+        let c = client.close(sid).unwrap();
+        assert_eq!(c.unobserved, 0);
+        let m = client.metrics().unwrap();
+        assert_eq!(m.sessions_closed, 1);
+    }
+
+    #[test]
+    fn export_import_moves_a_session_between_processes_in_miniature() {
+        let (_sa, _serva, a) = start_host();
+        let (_sb, _servb, b) = start_host();
+        let opts = SessionOptions { env_seed: 9, ..SessionOptions::default() };
+        let sid = a.open_with_id(7, "garnet", &spec(9), &opts).unwrap();
+        a.think(sid, 8).unwrap();
+        let best = a.best_action(sid).unwrap();
+        let image = a.export(sid).unwrap();
+        // Sealed: the source copy refuses ops with the recovering marker.
+        let err = a.think(sid, 4).unwrap_err();
+        assert!(err.downcast_ref::<Recovering>().is_some(), "got: {err:#}");
+        let moved = b.import(&image).unwrap();
+        assert_eq!(moved, sid);
+        assert_eq!(b.best_action(sid).unwrap(), best, "tree moved bit-for-bit");
+        a.install(sid, true).unwrap();
+        assert!(a.best_action(sid).is_err(), "source forgot the session");
+        let t = b.think(sid, 8).unwrap();
+        assert!(t.quiescent);
+        b.close(sid).unwrap();
+    }
+
+    #[test]
+    fn refused_resolution_unseals_the_source() {
+        let (_svc, _server, client) = start_host();
+        let opts = SessionOptions { env_seed: 3, ..SessionOptions::default() };
+        let sid = client.open_with_id(3, "garnet", &spec(3), &opts).unwrap();
+        let _ = client.export(sid).unwrap();
+        client.install(sid, false).unwrap();
+        let t = client.think(sid, 6).unwrap();
+        assert!(t.quiescent, "unsealed session must serve again");
+        // Unsealing an unsealed session is a no-op, not an error.
+        client.install(sid, false).unwrap();
+        client.close(sid).unwrap();
+    }
+
+    #[test]
+    fn dead_host_is_a_typed_unreachable_error() {
+        let (svc, server, client) = start_host();
+        client.ping().unwrap();
+        drop(server);
+        drop(svc);
+        let err = client.ping().unwrap_err();
+        assert!(
+            err.downcast_ref::<HostUnreachable>().is_some(),
+            "expected HostUnreachable, got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn remote_busy_maps_back_to_the_typed_error() {
+        use crate::service::shard::{ShardedConfig, ShardedService};
+        let svc = ShardedService::start(ShardedConfig {
+            shards: 1,
+            shard: ServiceConfig {
+                expansion_workers: 1,
+                simulation_workers: 1,
+                ..ServiceConfig::default()
+            },
+            max_sessions_per_shard: Some(1),
+            ..ShardedConfig::default()
+        });
+        let server = TcpServer::bind(svc.handle(), "127.0.0.1:0").unwrap();
+        let client = HostClient::new(server.local_addr().to_string());
+        let opts = SessionOptions::default();
+        client.open_with_id(1, "garnet", &spec(1), &opts).unwrap();
+        let err = client.open_with_id(2, "garnet", &spec(2), &opts).unwrap_err();
+        assert!(err.downcast_ref::<Busy>().is_some(), "expected Busy, got: {err:#}");
+    }
+}

@@ -98,6 +98,12 @@ pub struct ServiceMetrics {
     pub snapshots: u64,
     /// WAL records appended since boot (0 when memory-only).
     pub wal_records: u64,
+    /// Remote shard hosts behind this process (router tier only; 0 for a
+    /// host or an unsharded service).
+    pub hosts: usize,
+    /// Remote-host calls that failed with the typed `HostUnreachable`
+    /// error (router tier only).
+    pub host_unreachable: u64,
     /// Episodes retired per second (closed sessions / uptime).
     pub sessions_per_sec: f64,
     pub thinks_per_sec: f64,
@@ -144,6 +150,8 @@ impl ServiceMetrics {
             total.migrations_out += m.migrations_out;
             total.snapshots += m.snapshots;
             total.wal_records += m.wal_records;
+            total.hosts += m.hosts;
+            total.host_unreachable += m.host_unreachable;
             weighted_mean += m.think_ms_mean * m.thinks as f64;
             total.think_ms_p50 = total.think_ms_p50.max(m.think_ms_p50);
             total.think_ms_p90 = total.think_ms_p90.max(m.think_ms_p90);

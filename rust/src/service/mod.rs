@@ -28,18 +28,28 @@
 //!   [`ShardedService`] router (`wu-uct serve --shards N`);
 //! * [`metrics`] — think-latency percentiles, throughput, occupancy,
 //!   steal/shed counters, per-shard and aggregated;
-//! * [`json`] / [`proto`] — the line-delimited JSON wire protocol;
-//! * [`server`] — the TCP front-end behind `wu-uct serve`;
+//! * [`json`] / [`proto`] — the line-delimited JSON wire protocol,
+//!   including the cross-process host ops (`export` / `import` /
+//!   `install` / `health`) carrying hex-framed session images;
+//! * [`server`] — the TCP front-end behind `wu-uct serve` and
+//!   `wu-uct shard-host`;
+//! * [`client`] / [`router`] — the cross-process tier: pooled line
+//!   clients to remote shard hosts and the stateless router
+//!   (`wu-uct serve --hosts a:p,b:p`) that places sessions on hosts by
+//!   consistent hash and re-runs the live-migration handshake over the
+//!   wire;
 //! * [`crate::store`] — durability and migration underneath it all:
 //!   per-shard write-ahead session logs with crash recovery (`wu-uct
 //!   serve --data-dir`), checksummed session images, live migration and
 //!   the automatic occupancy rebalancer.
 
+pub mod client;
 pub mod fair;
 pub mod json;
 pub mod metrics;
 pub mod placement;
 pub mod proto;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
@@ -51,22 +61,83 @@ use crate::mcts::common::SearchSpec;
 
 pub use crate::mcts::wu_uct::driver;
 pub use crate::mcts::wu_uct::driver::{AdvanceOutcome, IssueOutcome, SearchDriver, TaskSink};
+pub use client::{HostClient, HostUnreachable};
 pub use fair::FairQueue;
 pub use metrics::ServiceMetrics;
 pub use placement::HashRing;
+pub use router::{Router, RouterConfig, RouterHandle};
 pub use scheduler::{
     AdvanceReply, Busy, CloseReply, SearchService, ServiceConfig, ServiceHandle, SessionOptions,
-    ThinkReply,
+    SessionStat, ThinkReply,
 };
 pub use server::TcpServer;
 pub use shard::{
     MigrateOutcome, RebalanceConfig, ShardedConfig, ShardedHandle, ShardedService,
 };
 
+/// Reply to the wire `health` op: who this process is and what it holds.
+#[derive(Debug, Clone)]
+pub struct HealthReply {
+    /// `"service"` (unsharded), `"host"` (shard host) or `"router"`.
+    pub role: &'static str,
+    /// Scheduler shards in this process (0 for a router).
+    pub shards: usize,
+    /// Remote shard hosts behind this process (0 unless routing).
+    pub hosts: usize,
+    pub sessions_open: usize,
+    pub uptime_s: f64,
+    /// Open sessions with progress counters, ascending by id. The router
+    /// tier reads these at start to re-learn its id floor, rebuild
+    /// placement overrides and dedup sessions a crash mid-migration left
+    /// on two hosts. Empty for a router (its hosts own the sessions).
+    pub sessions: Vec<SessionStat>,
+    /// Per-host reachability, probed live (router only).
+    pub host_status: Vec<HostStatus>,
+}
+
+/// One remote host's probe result inside a router's [`HealthReply`].
+#[derive(Debug, Clone)]
+pub struct HostStatus {
+    pub addr: String,
+    pub reachable: bool,
+    pub sessions_open: usize,
+}
+
+/// One remote host's metrics rollup, as listed by
+/// [`SessionApi::host_metrics`] and rendered into the `metrics` reply's
+/// `per_host` array.
+#[derive(Debug, Clone)]
+pub struct HostReport {
+    pub addr: String,
+    pub reachable: bool,
+    /// Aggregated over the host's shards; default-zero when unreachable.
+    pub metrics: ServiceMetrics,
+}
+
+impl HostReport {
+    /// Fold per-host reports (one fleet sweep) into the router-level
+    /// aggregate: reachable hosts' metrics sum, `hosts` counts the whole
+    /// fleet, and the router's cumulative unreachable counter rides
+    /// along. The single aggregation path shared by
+    /// [`RouterHandle::metrics`] and the wire `metrics` op.
+    pub fn aggregate(reports: &[HostReport], host_unreachable: u64) -> ServiceMetrics {
+        let reachable: Vec<ServiceMetrics> = reports
+            .iter()
+            .filter(|r| r.reachable)
+            .map(|r| r.metrics.clone())
+            .collect();
+        let mut total = ServiceMetrics::aggregate(&reachable);
+        total.hosts = reports.len();
+        total.host_unreachable = host_unreachable;
+        total
+    }
+}
+
 /// The session-lifecycle surface shared by the single-shard
-/// [`ServiceHandle`] and the sharded [`ShardedHandle`] router. The wire
-/// dispatcher ([`proto::handle_line`]) and the TCP server are generic
-/// over it, so every transport serves either deployment unchanged.
+/// [`ServiceHandle`], the sharded [`ShardedHandle`] (a shard host) and
+/// the cross-process [`RouterHandle`]. The wire dispatcher
+/// ([`proto::handle_line`]) and the TCP server are generic over it, so
+/// every transport serves any deployment unchanged.
 pub trait SessionApi: Clone + Send + 'static {
     fn open(&self, env: Box<dyn Env>, spec: SearchSpec, opts: SessionOptions) -> Result<u64>;
     fn think(&self, session: u64, sims: u32) -> Result<ThinkReply>;
@@ -80,10 +151,74 @@ pub trait SessionApi: Clone + Send + 'static {
         self.metrics().map(|m| vec![m])
     }
 
-    /// Live-migrate a session to another shard. Only meaningful for the
-    /// sharded router; everything else reports the obvious error.
+    /// Per-remote-host rollups; empty unless this handle is a router.
+    fn host_metrics(&self) -> Result<Vec<HostReport>> {
+        Ok(Vec::new())
+    }
+
+    /// Cumulative remote calls lost to [`client::HostUnreachable`] — a
+    /// cheap local gauge (no fleet probe); nonzero only on a router.
+    fn host_unreachable_total(&self) -> u64 {
+        0
+    }
+
+    /// Live-migrate a session to another shard (or, on a router, another
+    /// host). Only meaningful for sharded/routed deployments; everything
+    /// else reports the obvious error.
     fn migrate(&self, _session: u64, _to_shard: usize) -> Result<MigrateOutcome> {
         anyhow::bail!("migration requires a sharded deployment (serve with --shards > 1)")
+    }
+
+    /// Open under a caller-assigned session id (the router tier assigns
+    /// ids before the owning host ever sees the open).
+    fn open_with_id(
+        &self,
+        _id: u64,
+        _env: Box<dyn Env>,
+        _spec: SearchSpec,
+        _opts: SessionOptions,
+    ) -> Result<u64> {
+        anyhow::bail!("explicit session ids require a session-hosting deployment")
+    }
+
+    /// Cross-process migration, source half: serialize the idle session
+    /// to its checksummed image and **seal** it (every op on the local
+    /// copy now reports the typed `Recovering` error) until
+    /// [`SessionApi::resolve_seal`] declares where the image landed.
+    fn export_image(&self, _session: u64) -> Result<Vec<u8>> {
+        anyhow::bail!("session export requires a session-hosting deployment")
+    }
+
+    /// Cross-process migration, target half: decode, admit and install
+    /// an exported image. On a durable deployment the WAL `Open` lands
+    /// before this returns, so the source may safely forget its copy.
+    fn import_image(&self, _bytes: Vec<u8>) -> Result<u64> {
+        anyhow::bail!("session import requires a session-hosting deployment")
+    }
+
+    /// Resolve a seal left by [`SessionApi::export_image`]:
+    /// `landed = true` means the image is durably installed elsewhere
+    /// (forget the local copy, WAL `Close`); `landed = false` means the
+    /// transfer was refused or failed (unseal; the local copy serves
+    /// again). Unsealing an unsealed session is a no-op, so a router that
+    /// cannot know whether its export request ever arrived can always
+    /// abort safely.
+    fn resolve_seal(&self, _session: u64, _landed: bool) -> Result<()> {
+        anyhow::bail!("seal resolution requires a session-hosting deployment")
+    }
+
+    /// Liveness + identity probe (the wire `health` op).
+    fn health(&self) -> Result<HealthReply> {
+        let m = self.metrics()?;
+        Ok(HealthReply {
+            role: "service",
+            shards: m.shards,
+            hosts: 0,
+            sessions_open: m.sessions_open,
+            uptime_s: m.uptime.as_secs_f64(),
+            sessions: Vec::new(),
+            host_status: Vec::new(),
+        })
     }
 }
 
@@ -110,5 +245,45 @@ impl SessionApi for ServiceHandle {
 
     fn metrics(&self) -> Result<ServiceMetrics> {
         ServiceHandle::metrics(self)
+    }
+
+    fn open_with_id(
+        &self,
+        id: u64,
+        env: Box<dyn Env>,
+        spec: SearchSpec,
+        opts: SessionOptions,
+    ) -> Result<u64> {
+        ServiceHandle::open_with_id(self, id, env, spec, opts)
+    }
+
+    fn export_image(&self, session: u64) -> Result<Vec<u8>> {
+        self.export_session(session)
+    }
+
+    fn import_image(&self, bytes: Vec<u8>) -> Result<u64> {
+        self.import_session(bytes)
+    }
+
+    fn resolve_seal(&self, session: u64, landed: bool) -> Result<()> {
+        if landed {
+            self.forget_session(session)
+        } else {
+            self.unseal_session(session)
+        }
+    }
+
+    fn health(&self) -> Result<HealthReply> {
+        let m = ServiceHandle::metrics(self)?;
+        let sessions = self.list_sessions()?;
+        Ok(HealthReply {
+            role: "service",
+            shards: 1,
+            hosts: 0,
+            sessions_open: sessions.len(),
+            uptime_s: m.uptime.as_secs_f64(),
+            sessions,
+            host_status: Vec::new(),
+        })
     }
 }

@@ -2,7 +2,10 @@
 //!
 //! The sharded service routes every session op statelessly: the shard
 //! owning session `s` is a pure function of `s`, so no routing table has
-//! to be kept coherent across handles. The classic hash-ring construction
+//! to be kept coherent across handles. The cross-process router tier
+//! ([`crate::service::router`]) reuses the same ring verbatim with
+//! "shard" meaning "remote host" — one placement component, two radii.
+//! The classic hash-ring construction
 //! (Karger et al., 1997) is used so that changing the shard count moves
 //! only the sessions that land on the new/removed shard's arc — every
 //! other session's placement is untouched (property-tested below).
@@ -134,6 +137,14 @@ impl HashRing {
     /// Drop `key`'s override (session closed); returns whether one existed.
     pub fn clear_override(&mut self, key: u64) -> bool {
         self.overrides.remove(&key).is_some()
+    }
+
+    /// Keep only the overrides whose key satisfies `keep` — liveness GC
+    /// for routing tiers where a close's success reply can be lost (the
+    /// override of an already-closed session would otherwise survive
+    /// forever). Callers pass "is this session still open anywhere".
+    pub fn retain_overrides(&mut self, mut keep: impl FnMut(u64) -> bool) {
+        self.overrides.retain(|&key, _| keep(key));
     }
 
     /// Live override count (bounded by open migrated sessions; cleared

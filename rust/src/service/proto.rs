@@ -18,9 +18,39 @@
 //! ```
 //!
 //! Also: `best` (read the recommendation without searching), `migrate`
-//! (live-move a session to another shard: `{"op":"migrate","session":1,
-//! "shard":2}` → `{"ok":true,...,"moved":true}`), `metrics` (aggregated
-//! snapshot plus a `shards` array when sharded) and `ping`.
+//! (live-move a session to another shard — or, on a router, another
+//! host: `{"op":"migrate","session":1,"shard":2}` →
+//! `{"ok":true,...,"moved":true}`), `metrics` (aggregated snapshot plus
+//! `per_shard` / `per_host` arrays when sharded / routed) and `ping`.
+//!
+//! ## Cross-process host ops
+//!
+//! Shard hosts (`wu-uct shard-host`) speak four additional ops so a
+//! router tier can move live sessions between processes with the same
+//! crash-safety guarantees as in-process migration (duplicate-but-
+//! never-lose; see [`crate::store::migrate`]):
+//!
+//! * `export` — `{"op":"export","session":7}` →
+//!   `{"ok":true,"session":7,"image":"<hex>"}`: serialize the idle
+//!   session to its checksummed [`crate::store::codec`] image,
+//!   hex-framed, and **seal** the local copy (ops on it now reply
+//!   `"recovering":true`) until an `install` resolves the seal;
+//! * `import` — `{"op":"import","image":"<hex>"}` →
+//!   `{"ok":true,"session":7}`: decode, admit (a full host replies
+//!   `busy`) and install; on a durable host the WAL `Open` is on disk
+//!   before the reply leaves;
+//! * `install` — `{"op":"install","session":7,"landed":true}`: declare
+//!   where the sealed session finally installed. `landed:true` ⇒ the
+//!   image is durable elsewhere, forget the local copy (WAL `Close`);
+//!   `landed:false` ⇒ the transfer was refused, unseal and serve again
+//!   (idempotent, so an aborting router may always send it);
+//! * `health` — role, shard/host counts and the open-session list with
+//!   progress counters (routers read it at start to re-learn id floors,
+//!   rebuild overrides and dedup crash-duplicated sessions).
+//!
+//! Image frames are bounded ([`MAX_IMAGE_BYTES`]); oversized, odd-length
+//! or non-hex frames earn typed error replies, never a dropped
+//! connection or a panic.
 //!
 //! Error discipline: malformed JSON, unknown ops and **unknown fields**
 //! are rejected with `{"ok":false,"error":...}` — never a panic, never a
@@ -30,6 +60,8 @@
 //! migration carry `"recovering":true` (the typed [`Recovering`] error)
 //! — the session is seconds from its new shard, retry.
 
+use std::time::Duration;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::env::tapgame::{Level, TapGame};
@@ -38,8 +70,59 @@ use crate::mcts::common::SearchSpec;
 use crate::service::json::{obj, Json};
 use crate::service::metrics::ServiceMetrics;
 use crate::service::scheduler::{Busy, SessionOptions};
-use crate::service::SessionApi;
+use crate::service::{HostReport, SessionApi};
 use crate::store::migrate::Recovering;
+
+/// Upper bound on a decoded session-image frame. Oversized frames are
+/// typed errors (a malicious or confused peer must not make a host
+/// allocate without bound), and exports past the cap are refused rather
+/// than emitting a frame every peer would reject.
+pub const MAX_IMAGE_BYTES: usize = 32 << 20;
+
+/// Hex-frame a binary session image for the JSON wire (two lowercase hex
+/// chars per byte; the store image is already checksummed, so the frame
+/// needs no checksum of its own).
+pub fn image_to_hex(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        out.push(char::from_digit((b >> 4) as u32, 16).expect("nibble < 16"));
+        out.push(char::from_digit((b & 0xf) as u32, 16).expect("nibble < 16"));
+    }
+    out
+}
+
+/// Decode a hex-framed session image with an explicit size cap. Every
+/// failure is a typed error naming the cause — odd length (truncated
+/// mid-byte), oversize, or a non-hex byte with its offset.
+pub fn image_from_hex_capped(s: &str, max_bytes: usize) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        bail!("truncated image frame: odd hex length {}", s.len());
+    }
+    if s.len() / 2 > max_bytes {
+        bail!(
+            "oversized image frame: {} bytes exceeds the {} byte cap",
+            s.len() / 2,
+            max_bytes
+        );
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for i in (0..bytes.len()).step_by(2) {
+        let hi = (bytes[i] as char)
+            .to_digit(16)
+            .ok_or_else(|| anyhow!("invalid image frame: non-hex byte at offset {i}"))?;
+        let lo = (bytes[i + 1] as char)
+            .to_digit(16)
+            .ok_or_else(|| anyhow!("invalid image frame: non-hex byte at offset {}", i + 1))?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Ok(out)
+}
+
+/// [`image_from_hex_capped`] at the protocol's [`MAX_IMAGE_BYTES`] cap.
+pub fn image_from_hex(s: &str) -> Result<Vec<u8>> {
+    image_from_hex_capped(s, MAX_IMAGE_BYTES)
+}
 
 /// Side effect of a dispatched line, for connection-scoped session
 /// tracking (the TCP server closes a connection's leftover sessions).
@@ -182,7 +265,10 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
             reject_unknown_fields(
                 &req,
                 op,
-                &["env", "seed", "sims", "rollout", "depth", "width", "gamma", "weight", "budget"],
+                &[
+                    "env", "seed", "sims", "rollout", "depth", "width", "gamma", "weight",
+                    "budget", "id",
+                ],
             )?;
             let env_name = req.get("env").and_then(|v| v.as_str()).unwrap_or("Breakout");
             let seed = field_u64(&req, "seed")?.unwrap_or(0);
@@ -196,10 +282,23 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 // make_env(name, seed), so record the construction seed.
                 env_seed: seed,
             };
-            let sid = handle.open(env, spec, opts)?;
+            // `id` is the router tier's explicit assignment: placement is
+            // a pure function of the id, so the router must draw it
+            // before the owning host sees the open. Such sessions belong
+            // to the routing tier, NOT to this TCP connection — the
+            // router's pooled connections come and go (redials, router
+            // restarts) and must never reap the sessions they carried —
+            // so only id-less (direct-client) opens are connection-owned.
+            let (sid, effect) = match field_u64(&req, "id")? {
+                Some(id) => (handle.open_with_id(id, env, spec, opts)?, LineEffect::None),
+                None => {
+                    let sid = handle.open(env, spec, opts)?;
+                    (sid, LineEffect::Opened(sid))
+                }
+            };
             Ok((
                 obj([("ok", Json::Bool(true)), ("session", Json::Num(sid as f64))]),
-                LineEffect::Opened(sid),
+                effect,
             ))
         }
         "think" => {
@@ -278,19 +377,138 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 LineEffect::None,
             ))
         }
+        "export" => {
+            reject_unknown_fields(&req, op, &["session"])?;
+            let sid = required_u64(&req, "session")?;
+            let bytes = handle.export_image(sid)?;
+            if bytes.len() > MAX_IMAGE_BYTES {
+                // Undo the seal: a frame no peer will accept must not
+                // leave the session stuck recovering.
+                let _ = handle.resolve_seal(sid, false);
+                bail!(
+                    "session {sid} image is {} bytes, past the {MAX_IMAGE_BYTES} byte frame cap",
+                    bytes.len()
+                );
+            }
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("session", Json::Num(sid as f64)),
+                    ("image", Json::Str(image_to_hex(&bytes))),
+                ]),
+                LineEffect::None,
+            ))
+        }
+        "import" => {
+            reject_unknown_fields(&req, op, &["image"])?;
+            let frame = req
+                .get("image")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("missing field \"image\""))?;
+            let bytes = image_from_hex(frame)?;
+            let sid = handle.import_image(bytes)?;
+            Ok((
+                obj([("ok", Json::Bool(true)), ("session", Json::Num(sid as f64))]),
+                // Imported sessions belong to the migration machinery,
+                // not this connection: the reaper must not close them.
+                LineEffect::None,
+            ))
+        }
+        "install" => {
+            reject_unknown_fields(&req, op, &["session", "landed"])?;
+            let sid = required_u64(&req, "session")?;
+            let landed = req
+                .get("landed")
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| anyhow!("missing or non-boolean field \"landed\""))?;
+            handle.resolve_seal(sid, landed)?;
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("session", Json::Num(sid as f64)),
+                    ("landed", Json::Bool(landed)),
+                ]),
+                LineEffect::None,
+            ))
+        }
+        "health" => {
+            reject_unknown_fields(&req, op, &[])?;
+            let h = handle.health()?;
+            let mut fields = vec![
+                ("ok".to_string(), Json::Bool(true)),
+                ("role".to_string(), Json::Str(h.role.to_string())),
+                ("shards".to_string(), Json::Num(h.shards as f64)),
+                ("hosts".to_string(), Json::Num(h.hosts as f64)),
+                ("sessions_open".to_string(), Json::Num(h.sessions_open as f64)),
+                ("uptime_s".to_string(), Json::Num(h.uptime_s)),
+                (
+                    "sessions".to_string(),
+                    Json::Arr(
+                        h.sessions
+                            .iter()
+                            .map(|s| {
+                                obj([
+                                    ("id", Json::Num(s.id as f64)),
+                                    ("thinks", Json::Num(s.thinks as f64)),
+                                    ("steps", Json::Num(s.steps as f64)),
+                                    ("sealed", Json::Bool(s.sealed)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ];
+            if !h.host_status.is_empty() {
+                fields.push((
+                    "host_status".to_string(),
+                    Json::Arr(
+                        h.host_status
+                            .iter()
+                            .map(|s| {
+                                obj([
+                                    ("addr", Json::Str(s.addr.clone())),
+                                    ("reachable", Json::Bool(s.reachable)),
+                                    ("sessions_open", Json::Num(s.sessions_open as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            Ok((Json::Obj(fields), LineEffect::None))
+        }
         "metrics" => {
             reject_unknown_fields(&req, op, &[])?;
-            let per_shard = handle.shard_metrics()?;
-            let aggregate = ServiceMetrics::aggregate(&per_shard);
-            let mut doc = metrics_json(&aggregate);
-            if per_shard.len() > 1 {
+            // One probe pass: a router sweeps its fleet exactly once here
+            // (host_metrics) and the whole reply — aggregate + per_host —
+            // derives from that single consistent snapshot; everything
+            // else reports empty host_metrics and takes the per-shard
+            // path unchanged.
+            let per_host = handle.host_metrics()?;
+            let doc = if per_host.is_empty() {
+                let per_shard = handle.shard_metrics()?;
+                let mut doc = metrics_json(&ServiceMetrics::aggregate(&per_shard));
+                if per_shard.len() > 1 {
+                    if let Json::Obj(fields) = &mut doc {
+                        fields.push((
+                            "per_shard".to_string(),
+                            Json::Arr(per_shard.iter().map(shard_metrics_json).collect()),
+                        ));
+                    }
+                }
+                doc
+            } else {
+                let aggregate =
+                    HostReport::aggregate(&per_host, handle.host_unreachable_total());
+                let mut doc = metrics_json(&aggregate);
                 if let Json::Obj(fields) = &mut doc {
                     fields.push((
-                        "per_shard".to_string(),
-                        Json::Arr(per_shard.iter().map(shard_metrics_json).collect()),
+                        "per_host".to_string(),
+                        Json::Arr(per_host.iter().map(host_report_json).collect()),
                     ));
                 }
-            }
+                doc
+            };
             Ok((doc, LineEffect::None))
         }
         other => bail!("unknown op {other:?}"),
@@ -316,6 +534,8 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("migrations_out", Json::Num(m.migrations_out as f64)),
         ("snapshots", Json::Num(m.snapshots as f64)),
         ("wal_records", Json::Num(m.wal_records as f64)),
+        ("hosts", Json::Num(m.hosts as f64)),
+        ("host_unreachable", Json::Num(m.host_unreachable as f64)),
         ("sessions_per_sec", Json::Num(m.sessions_per_sec)),
         ("thinks_per_sec", Json::Num(m.thinks_per_sec)),
         ("sims_per_sec", Json::Num(m.sims_per_sec)),
@@ -329,6 +549,63 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("simulation_workers", Json::Num(m.simulation_workers as f64)),
         ("pending_expansions", Json::Num(m.pending_expansions as f64)),
         ("pending_simulations", Json::Num(m.pending_simulations as f64)),
+    ])
+}
+
+/// Parse a `metrics` reply back into a [`ServiceMetrics`] snapshot — the
+/// inverse of [`metrics_json`], used by the router's pooled host clients.
+/// Lenient: absent fields read as zero, so older hosts still parse.
+pub fn metrics_from_json(v: &Json) -> ServiceMetrics {
+    let num = |key: &str| v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let int = |key: &str| v.get(key).and_then(|x| x.as_u64()).unwrap_or(0);
+    ServiceMetrics {
+        uptime: Duration::from_secs_f64(num("uptime_s").max(0.0)),
+        shards: int("shards") as usize,
+        sessions_open: int("sessions_open") as usize,
+        sessions_opened: int("sessions_opened"),
+        sessions_closed: int("sessions_closed"),
+        sessions_rejected: int("sessions_rejected"),
+        thinks: int("thinks"),
+        sims: int("sims"),
+        sims_stolen: int("sims_stolen"),
+        sims_shed: int("sims_shed"),
+        sessions_recovered: int("sessions_recovered"),
+        migrations_in: int("migrations_in"),
+        migrations_out: int("migrations_out"),
+        snapshots: int("snapshots"),
+        wal_records: int("wal_records"),
+        hosts: int("hosts") as usize,
+        host_unreachable: int("host_unreachable"),
+        sessions_per_sec: num("sessions_per_sec"),
+        thinks_per_sec: num("thinks_per_sec"),
+        sims_per_sec: num("sims_per_sec"),
+        think_ms_mean: num("think_ms_mean"),
+        think_ms_p50: num("think_ms_p50"),
+        think_ms_p90: num("think_ms_p90"),
+        think_ms_p99: num("think_ms_p99"),
+        exp_occupancy: num("exp_occupancy"),
+        sim_occupancy: num("sim_occupancy"),
+        expansion_workers: int("expansion_workers") as usize,
+        simulation_workers: int("simulation_workers") as usize,
+        pending_expansions: int("pending_expansions") as usize,
+        pending_simulations: int("pending_simulations") as usize,
+    }
+}
+
+/// Compact per-host entry for the router's `per_host` array.
+fn host_report_json(r: &HostReport) -> Json {
+    let m = &r.metrics;
+    obj([
+        ("addr", Json::Str(r.addr.clone())),
+        ("reachable", Json::Bool(r.reachable)),
+        ("shards", Json::Num(m.shards as f64)),
+        ("sessions_open", Json::Num(m.sessions_open as f64)),
+        ("thinks", Json::Num(m.thinks as f64)),
+        ("sims", Json::Num(m.sims as f64)),
+        ("sessions_recovered", Json::Num(m.sessions_recovered as f64)),
+        ("migrations_in", Json::Num(m.migrations_in as f64)),
+        ("migrations_out", Json::Num(m.migrations_out as f64)),
+        ("think_ms_p99", Json::Num(m.think_ms_p99)),
     ])
 }
 
@@ -547,6 +824,10 @@ mod tests {
             (r#"{"op":"close","session":1,"force":true}"#, "force"),
             (r#"{"op":"migrate","session":1,"target":0}"#, "target"),
             (r#"{"op":"metrics","shard":0}"#, "shard"),
+            (r#"{"op":"export","session":1,"shard":2}"#, "shard"),
+            (r#"{"op":"import","image":"00","session":1}"#, "session"),
+            (r#"{"op":"install","session":1,"landed":true,"force":1}"#, "force"),
+            (r#"{"op":"health","probe":true}"#, "probe"),
         ] {
             let (line, _) = handle_line(&h, bad);
             let v = err_field(&line);
@@ -673,6 +954,82 @@ mod tests {
         let v = Json::parse(&plain).unwrap();
         assert!(v.get("busy").is_none());
         assert!(v.get("recovering").is_none());
+    }
+
+    #[test]
+    fn image_hex_frames_roundtrip_and_reject_garbage() {
+        let payload: Vec<u8> = (0u8..=255).collect();
+        let hex = image_to_hex(&payload);
+        assert_eq!(hex.len(), 512);
+        assert!(hex.bytes().all(|b| b.is_ascii_hexdigit()));
+        assert_eq!(image_from_hex(&hex).unwrap(), payload);
+        assert_eq!(image_from_hex("").unwrap(), Vec::<u8>::new());
+
+        let odd = image_from_hex("abc").unwrap_err();
+        assert!(odd.to_string().contains("odd hex length"), "{odd:#}");
+        let bad = image_from_hex("zz").unwrap_err();
+        assert!(bad.to_string().contains("non-hex byte at offset 0"), "{bad:#}");
+        let big = image_from_hex_capped(&"00".repeat(9), 8).unwrap_err();
+        assert!(big.to_string().contains("oversized image frame"), "{big:#}");
+        assert_eq!(image_from_hex_capped(&"ff".repeat(8), 8).unwrap(), vec![0xff; 8]);
+    }
+
+    #[test]
+    fn health_op_reports_role_and_sessions() {
+        let svc = service();
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet","seed":2,"sims":8}"#);
+        let sid = ok_field(&line).get("session").unwrap().as_u64().unwrap();
+        let (line, _) = handle_line(&h, r#"{"op":"health"}"#);
+        let v = ok_field(&line);
+        assert_eq!(v.get("role").unwrap().as_str(), Some("service"));
+        assert_eq!(v.get("shards").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("hosts").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("sessions_open").unwrap().as_u64(), Some(1));
+        let Some(Json::Arr(sessions)) = v.get("sessions") else {
+            panic!("health must list sessions: {line}");
+        };
+        assert_eq!(sessions.len(), 1);
+        assert_eq!(sessions[0].get("id").unwrap().as_u64(), Some(sid));
+        assert!(sessions[0].get("thinks").is_some());
+        assert!(sessions[0].get("steps").is_some());
+        assert_eq!(sessions[0].get("sealed").unwrap().as_bool(), Some(false));
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        ok_field(&line);
+    }
+
+    #[test]
+    fn metrics_from_json_inverts_metrics_json() {
+        let m = ServiceMetrics {
+            uptime: Duration::from_secs_f64(12.5),
+            shards: 3,
+            sessions_open: 4,
+            sessions_opened: 9,
+            thinks: 30,
+            sims: 300,
+            hosts: 2,
+            host_unreachable: 5,
+            think_ms_p99: 7.25,
+            sim_occupancy: 0.5,
+            simulation_workers: 8,
+            ..Default::default()
+        };
+        let back = metrics_from_json(&metrics_json(&m));
+        assert_eq!(back.shards, 3);
+        assert_eq!(back.sessions_open, 4);
+        assert_eq!(back.sessions_opened, 9);
+        assert_eq!(back.thinks, 30);
+        assert_eq!(back.sims, 300);
+        assert_eq!(back.hosts, 2);
+        assert_eq!(back.host_unreachable, 5);
+        assert_eq!(back.think_ms_p99, 7.25);
+        assert_eq!(back.sim_occupancy, 0.5);
+        assert_eq!(back.simulation_workers, 8);
+        assert!((back.uptime.as_secs_f64() - 12.5).abs() < 1e-9);
+        // Lenient on absent fields: an empty object parses to zeros.
+        let zero = metrics_from_json(&Json::Obj(vec![]));
+        assert_eq!(zero.thinks, 0);
+        assert_eq!(zero.hosts, 0);
     }
 
     #[test]

@@ -1,0 +1,631 @@
+//! The cross-process router tier: `wu-uct serve --hosts a:p,b:p`.
+//!
+//! A router owns no sessions and no trees — it is the stateless layer
+//! that makes N separate shard-host *processes* (each a
+//! [`ShardedService`](crate::service::shard::ShardedService) behind
+//! `wu-uct shard-host`) look like one deployment:
+//!
+//! * **Placement** — the same consistent-hash ring that places sessions
+//!   on in-process shards ([`crate::service::placement::HashRing`])
+//!   here maps session ids to remote hosts; migrated sessions live in
+//!   the override table exactly as before. Ids are drawn by the router
+//!   *before* the owning host sees the open (the `open` op's `id`
+//!   field), so every handle — and every restarted router — routes every
+//!   op identically.
+//! * **Proxying** — each session op becomes one line round trip on a
+//!   pooled [`HostClient`](crate::service::client::HostClient); remote
+//!   `busy` / `recovering` replies are rebuilt into the same typed
+//!   errors the in-process path raises, so clients cannot tell the
+//!   difference. Hosts that do not answer surface as the typed
+//!   [`HostUnreachable`] error and are counted in the router's
+//!   `host_unreachable` metric.
+//! * **Cross-host migration** — [`RouterHandle::migrate`] re-runs the
+//!   in-process seal → durable-`Open` → `Close` handshake over the wire
+//!   via [`migrate_over`](crate::store::migrate::migrate_over) (the
+//!   *same* control flow the deterministic
+//!   [`FakeHostNet`](crate::testkit::fakenet::FakeHostNet) tests drive),
+//!   with the duplicate-but-never-lose guarantee intact across
+//!   processes. Undeliverable seal resolutions are queued as
+//!   [`PendingResolve`]s and retried by [`RouterHandle::repair`] (the
+//!   background rebalancer calls it every pass).
+//! * **Recovery** — a router is stateless, so a restarted one re-learns
+//!   everything from its hosts' `health` replies: the id floor resumes
+//!   past the largest live id, sessions sitting off their ring home get
+//!   overrides re-established, and a session a crash mid-migration left
+//!   on *two hosts* is deduped by progress counters exactly like the
+//!   in-process recovery path (the most-advanced copy wins; the rest
+//!   are durably forgotten).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::env::Env;
+use crate::mcts::common::SearchSpec;
+use crate::service::client::{HostClient, HostUnreachable};
+use crate::service::metrics::ServiceMetrics;
+use crate::service::placement::HashRing;
+use crate::service::scheduler::{
+    AdvanceReply, Busy, CloseReply, SessionOptions, ThinkReply,
+};
+use crate::service::shard::{open_with_fresh_ids, MigrateOutcome, RebalanceConfig};
+use crate::service::{HealthReply, HostReport, HostStatus, SessionApi};
+use crate::store::migrate::{
+    migrate_over, plan_step, HandshakeOutcome, MigrationLink, PendingResolve, Recovering,
+};
+
+/// Configuration of a router deployment.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Shard-host addresses, in ring order (the order defines host
+    /// indices for `migrate` and metrics).
+    pub hosts: Vec<String>,
+    /// Virtual ring points per host.
+    pub replicas: usize,
+    /// Cross-host occupancy rebalancer; `None` disables it (explicit
+    /// `migrate` ops still work).
+    pub rebalance: Option<RebalanceConfig>,
+}
+
+impl RouterConfig {
+    pub fn new(hosts: Vec<String>) -> RouterConfig {
+        RouterConfig { hosts, replicas: HashRing::DEFAULT_REPLICAS, rebalance: None }
+    }
+}
+
+struct RouterInner {
+    hosts: Vec<HostClient>,
+    ring: RwLock<HashRing>,
+    /// Sessions mid-handshake: ops fail fast with [`Recovering`].
+    migrating: Mutex<HashSet<u64>>,
+    /// Undelivered seal resolutions, retried by [`RouterHandle::repair`].
+    pending: Mutex<Vec<PendingResolve>>,
+    /// Opens whose reply was lost: the session may exist on `(host, id)`
+    /// with no client holding the id. [`RouterHandle::repair`] sends
+    /// best-effort closes until the host answers definitively.
+    orphans: Mutex<Vec<(usize, u64)>>,
+    next_id: AtomicU64,
+    unreachable: AtomicU64,
+    started: Instant,
+}
+
+/// Cloneable, stateless router handle (the [`SessionApi`] the TCP
+/// front-end serves for `serve --hosts`).
+#[derive(Clone)]
+pub struct RouterHandle {
+    inner: Arc<RouterInner>,
+}
+
+/// [`MigrationLink`] over the router's pooled host clients, counting
+/// unreachable hosts as it goes.
+struct WireLink<'a> {
+    inner: &'a RouterInner,
+}
+
+impl MigrationLink for WireLink<'_> {
+    fn export_seal(&mut self, host: usize, session: u64) -> Result<Vec<u8>> {
+        track(self.inner, self.inner.hosts[host].export(session))
+    }
+
+    fn install_image(&mut self, host: usize, image: Vec<u8>) -> Result<u64> {
+        track(self.inner, self.inner.hosts[host].import(&image))
+    }
+
+    fn resolve_seal(&mut self, host: usize, session: u64, landed: bool) -> Result<()> {
+        track(self.inner, self.inner.hosts[host].install(session, landed))
+    }
+}
+
+/// Count [`HostUnreachable`] failures into the router's metric.
+fn track<T>(inner: &RouterInner, res: Result<T>) -> Result<T> {
+    if let Err(e) = &res {
+        if e.downcast_ref::<HostUnreachable>().is_some() {
+            inner.unreachable.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    res
+}
+
+impl RouterHandle {
+    pub fn host_count(&self) -> usize {
+        self.inner.hosts.len()
+    }
+
+    /// The host index serving `session` (ring placement plus migration
+    /// overrides).
+    pub fn host_of(&self, session: u64) -> usize {
+        self.inner.ring.read().unwrap().place(session)
+    }
+
+    /// Remote-host calls that failed with [`HostUnreachable`] so far.
+    pub fn host_unreachable(&self) -> u64 {
+        self.inner.unreachable.load(Ordering::Relaxed)
+    }
+
+    /// Route an op on an existing session, failing fast with
+    /// [`Recovering`] while it is mid-handshake.
+    fn route(&self, session: u64) -> Result<&HostClient> {
+        if self.inner.migrating.lock().unwrap().contains(&session) {
+            return Err(anyhow::Error::new(Recovering { session }));
+        }
+        Ok(&self.inner.hosts[self.host_of(session)])
+    }
+
+    /// Open a session: draw an id, forward to the ring-assigned host.
+    /// `Busy` hosts are skipped by drawing fresh ids until every host
+    /// has had a chance; only then does the typed `Busy` surface (the
+    /// same [`open_with_fresh_ids`] loop the in-process sharded router
+    /// runs). [`HostUnreachable`] is deliberately NOT transient here: a
+    /// lost *reply* means the open may have executed, and silently
+    /// re-opening under a fresh id elsewhere would strand that first
+    /// session in an admission slot forever. The error surfaces instead;
+    /// a client retry is a new id — and a fresh roll of the placement
+    /// dice — without hiding the maybe-created session.
+    pub fn open(
+        &self,
+        env: Box<dyn Env>,
+        spec: SearchSpec,
+        opts: SessionOptions,
+    ) -> Result<u64> {
+        open_with_fresh_ids(
+            self.host_count(),
+            &self.inner.next_id,
+            |sid| self.host_of(sid),
+            |host, sid| {
+                let res = track(
+                    &self.inner,
+                    self.inner.hosts[host].open_with_id(sid, env.name(), &spec, &opts),
+                );
+                if let Err(e) = &res {
+                    if e.downcast_ref::<HostUnreachable>().is_some() {
+                        // The open may have executed with its reply lost;
+                        // queue a best-effort close so a maybe-created
+                        // session cannot squat an admission slot forever.
+                        self.inner.orphans.lock().unwrap().push((host, sid));
+                    }
+                }
+                res
+            },
+            |e| e.downcast_ref::<Busy>().is_some(),
+        )
+    }
+
+    pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
+        let host = self.route(session)?;
+        track(&self.inner, host.think(session, sims))
+    }
+
+    pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
+        let host = self.route(session)?;
+        track(&self.inner, host.advance(session, action))
+    }
+
+    pub fn best_action(&self, session: u64) -> Result<usize> {
+        let host = self.route(session)?;
+        track(&self.inner, host.best_action(session))
+    }
+
+    pub fn close(&self, session: u64) -> Result<CloseReply> {
+        let host = self.route(session)?;
+        let reply = track(&self.inner, host.close(session))?;
+        self.inner.ring.write().unwrap().clear_override(session);
+        Ok(reply)
+    }
+
+    /// Live-migrate a session between host processes: the wire re-run of
+    /// the in-process seal → durable-`Open` → `Close` handshake
+    /// ([`migrate_over`]). Ops racing the move observe [`Recovering`];
+    /// a failed transfer leaves the source serving (or queued for
+    /// unsealing if even the abort could not be delivered — see
+    /// [`RouterHandle::repair`]).
+    pub fn migrate(&self, session: u64, to: usize) -> Result<MigrateOutcome> {
+        let hosts = self.host_count();
+        ensure!(to < hosts, "target host {to} out of range (fleet has {hosts})");
+        let from = self.host_of(session);
+        if from == to {
+            return Ok(MigrateOutcome { session, from, to, moved: false });
+        }
+        {
+            let mut migrating = self.inner.migrating.lock().unwrap();
+            ensure!(migrating.insert(session), "session {session} is already migrating");
+        }
+        let mut link = WireLink { inner: self.inner.as_ref() };
+        let outcome = migrate_over(&mut link, session, from, to);
+        let result = match outcome {
+            HandshakeOutcome::Moved => {
+                self.inner
+                    .ring
+                    .write()
+                    .unwrap()
+                    .set_override(session, to)
+                    .expect("target host index was range-checked");
+                Ok(MigrateOutcome { session, from, to, moved: true })
+            }
+            HandshakeOutcome::MovedSealed(pending) => {
+                // The target copy is authoritative; route there and keep
+                // retrying the source's forget.
+                self.inner
+                    .ring
+                    .write()
+                    .unwrap()
+                    .set_override(session, to)
+                    .expect("target host index was range-checked");
+                self.inner.pending.lock().unwrap().push(pending);
+                Ok(MigrateOutcome { session, from, to, moved: true })
+            }
+            HandshakeOutcome::Aborted(err) => Err(err),
+            HandshakeOutcome::AbortedSealed(err, pending) => {
+                self.inner.pending.lock().unwrap().push(pending);
+                Err(err)
+            }
+        };
+        self.inner.migrating.lock().unwrap().remove(&session);
+        result
+    }
+
+    /// Retry undelivered seal resolutions and orphaned-open closes. A
+    /// definitive remote answer — success *or* a remote refusal (e.g.
+    /// the session is already gone) — retires an entry; only
+    /// [`HostUnreachable`] keeps it queued. Returns how many entries
+    /// remain queued.
+    pub fn repair(&self) -> usize {
+        let drained: Vec<PendingResolve> =
+            std::mem::take(&mut *self.inner.pending.lock().unwrap());
+        let mut still_pending = Vec::new();
+        for p in drained {
+            let res = track(
+                &self.inner,
+                self.inner.hosts[p.host].install(p.session, p.landed),
+            );
+            if let Err(e) = res {
+                if e.downcast_ref::<HostUnreachable>().is_some() {
+                    still_pending.push(p);
+                }
+                // Any other error is the host answering definitively:
+                // nothing left to resolve (the session closed, was
+                // already forgotten, ...).
+            }
+        }
+        let mut remaining = still_pending.len();
+        self.inner.pending.lock().unwrap().extend(still_pending);
+
+        let orphans: Vec<(usize, u64)> =
+            std::mem::take(&mut *self.inner.orphans.lock().unwrap());
+        let mut still_orphaned = Vec::new();
+        for (host, sid) in orphans {
+            let res = track(&self.inner, self.inner.hosts[host].close(sid));
+            if let Err(e) = res {
+                if e.downcast_ref::<HostUnreachable>().is_some() {
+                    still_orphaned.push((host, sid));
+                }
+                // "unknown session" etc. means the open never landed (or
+                // someone adopted and closed it): nothing to clean.
+            }
+        }
+        remaining += still_orphaned.len();
+        self.inner.orphans.lock().unwrap().extend(still_orphaned);
+        remaining
+    }
+
+    /// One cross-host rebalance pass: retry pending resolutions, then
+    /// migrate sessions off over-occupied hosts until [`plan_step`]
+    /// finds nothing above `max_skew`. A pass with any unreachable host
+    /// moves nothing (occupancy would be misread as zero, turning a dead
+    /// host into a migration sink).
+    pub fn rebalance(&self, max_skew: f64) -> Result<Vec<MigrateOutcome>> {
+        ensure!(max_skew >= 1.0, "max_skew below 1.0 can never converge");
+        self.repair();
+        let mut moves = Vec::new();
+        let Some(initial) = self.host_sessions() else { return Ok(moves) };
+        // Override GC: a close whose success reply was lost leaves an
+        // override for a session no host holds; with the whole fleet
+        // reachable (initial is Some), drop overrides for dead ids so
+        // the table stays bounded. In-flight handshakes are safe — the
+        // seal keeps their session installed (and listed) throughout.
+        let live: HashSet<u64> = initial.iter().flatten().copied().collect();
+        self.inner.ring.write().unwrap().retain_overrides(|sid| live.contains(&sid));
+        let cap = 1 + initial.iter().map(|s| s.len()).sum::<usize>();
+        while moves.len() < cap {
+            let Some(occupancy) = self.host_sessions() else { break };
+            let Some(step) = plan_step(&occupancy, max_skew) else { break };
+            match self.migrate(step.session, step.to) {
+                Ok(outcome) => moves.push(outcome),
+                // A busy/sealed session cannot move right now; stop this
+                // pass rather than spin on it.
+                Err(_) => break,
+            }
+        }
+        Ok(moves)
+    }
+
+    /// Per-host open-session ids, in host order; `None` if any host is
+    /// unreachable.
+    fn host_sessions(&self) -> Option<Vec<Vec<u64>>> {
+        let mut out = Vec::with_capacity(self.host_count());
+        for host in &self.inner.hosts {
+            let health = track(&self.inner, host.health()).ok()?;
+            out.push(health.sessions.iter().map(|s| s.id).collect());
+        }
+        Some(out)
+    }
+
+    /// Fleet-wide aggregate of every reachable host, plus the router's
+    /// own gauges ([`HostReport::aggregate`], shared with the wire
+    /// `metrics` op; only the router-local uptime clamp is extra, since
+    /// the wire path has no access to the router's start time).
+    pub fn metrics(&self) -> Result<ServiceMetrics> {
+        let mut total = HostReport::aggregate(&self.host_reports(), self.host_unreachable());
+        total.uptime = total.uptime.max(self.inner.started.elapsed());
+        Ok(total)
+    }
+
+    fn host_reports(&self) -> Vec<HostReport> {
+        self.inner
+            .hosts
+            .iter()
+            .map(|host| match track(&self.inner, host.metrics()) {
+                Ok(metrics) => {
+                    HostReport { addr: host.addr().to_string(), reachable: true, metrics }
+                }
+                Err(_) => HostReport {
+                    addr: host.addr().to_string(),
+                    reachable: false,
+                    metrics: ServiceMetrics::default(),
+                },
+            })
+            .collect()
+    }
+}
+
+impl SessionApi for RouterHandle {
+    fn open(&self, env: Box<dyn Env>, spec: SearchSpec, opts: SessionOptions) -> Result<u64> {
+        RouterHandle::open(self, env, spec, opts)
+    }
+
+    fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
+        RouterHandle::think(self, session, sims)
+    }
+
+    fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
+        RouterHandle::advance(self, session, action)
+    }
+
+    fn best_action(&self, session: u64) -> Result<usize> {
+        RouterHandle::best_action(self, session)
+    }
+
+    fn close(&self, session: u64) -> Result<CloseReply> {
+        RouterHandle::close(self, session)
+    }
+
+    fn metrics(&self) -> Result<ServiceMetrics> {
+        RouterHandle::metrics(self)
+    }
+
+    fn shard_metrics(&self) -> Result<Vec<ServiceMetrics>> {
+        Ok(self.host_reports().into_iter().map(|r| r.metrics).collect())
+    }
+
+    fn host_metrics(&self) -> Result<Vec<HostReport>> {
+        Ok(self.host_reports())
+    }
+
+    fn host_unreachable_total(&self) -> u64 {
+        self.host_unreachable()
+    }
+
+    fn migrate(&self, session: u64, to_shard: usize) -> Result<MigrateOutcome> {
+        RouterHandle::migrate(self, session, to_shard)
+    }
+
+    /// Admin passthrough: export from whichever host owns the session.
+    fn export_image(&self, session: u64) -> Result<Vec<u8>> {
+        let host = self.route(session)?;
+        track(&self.inner, host.export(session))
+    }
+
+    /// Admin passthrough: install on the image's ring-assigned host.
+    fn import_image(&self, bytes: Vec<u8>) -> Result<u64> {
+        let id = crate::store::codec::SessionImage::peek_session(&bytes)?;
+        self.inner.next_id.fetch_max(id, Ordering::Relaxed);
+        let host = self.host_of(id);
+        track(&self.inner, self.inner.hosts[host].import(&bytes))
+    }
+
+    /// A router only delivers resolutions it *owes* (queued
+    /// [`PendingResolve`]s from its own handshakes). A blind passthrough
+    /// would route by `host_of`, which after a migration override points
+    /// at the live *target* — and `landed:true` would durably forget the
+    /// authoritative copy instead of the sealed source. Operators who
+    /// really mean a specific host talk to that host directly.
+    fn resolve_seal(&self, session: u64, landed: bool) -> Result<()> {
+        let entry = {
+            let mut pending = self.inner.pending.lock().unwrap();
+            let pos = pending.iter().position(|p| p.session == session);
+            match pos {
+                Some(pos) if pending[pos].landed == landed => pending.remove(pos),
+                Some(pos) => anyhow::bail!(
+                    "session {session} has a pending resolution with landed={} — \
+                     refusing the contradictory landed={landed}",
+                    pending[pos].landed
+                ),
+                None => anyhow::bail!(
+                    "no pending seal resolution for session {session} on this router \
+                     (send `install` to the sealed host directly for manual repair)"
+                ),
+            }
+        };
+        let res = track(
+            &self.inner,
+            self.inner.hosts[entry.host].install(entry.session, entry.landed),
+        );
+        if let Err(e) = res {
+            if e.downcast_ref::<HostUnreachable>().is_some() {
+                self.inner.pending.lock().unwrap().push(entry);
+            }
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn health(&self) -> Result<HealthReply> {
+        let mut sessions_open = 0;
+        let host_status: Vec<HostStatus> = self
+            .inner
+            .hosts
+            .iter()
+            .map(|host| match track(&self.inner, host.health()) {
+                Ok(h) => {
+                    sessions_open += h.sessions_open;
+                    HostStatus {
+                        addr: host.addr().to_string(),
+                        reachable: true,
+                        sessions_open: h.sessions_open,
+                    }
+                }
+                Err(_) => HostStatus {
+                    addr: host.addr().to_string(),
+                    reachable: false,
+                    sessions_open: 0,
+                },
+            })
+            .collect();
+        Ok(HealthReply {
+            role: "router",
+            shards: 0,
+            hosts: self.host_count(),
+            sessions_open,
+            uptime_s: self.inner.started.elapsed().as_secs_f64(),
+            sessions: Vec::new(),
+            host_status,
+        })
+    }
+}
+
+/// The router service: owns the background rebalancer, if configured.
+/// Dropping stops it; the stateless handle keeps working either way.
+pub struct Router {
+    handle: RouterHandle,
+    rebalancer: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
+}
+
+impl Router {
+    /// Connect to the host fleet. Reachable hosts are probed for live
+    /// sessions so the router resumes where a predecessor (or a crash)
+    /// left off: the id allocator starts past the largest live id,
+    /// off-home sessions get ring overrides, and sessions duplicated by
+    /// a crash mid-migration are deduped (most-advanced copy wins —
+    /// progress ties break to the lowest host index — and the losers
+    /// are durably forgotten). Unreachable hosts are skipped — their
+    /// sessions are adopted by a later restart or request-time routing.
+    pub fn start(cfg: RouterConfig) -> Result<Router> {
+        ensure!(!cfg.hosts.is_empty(), "a router needs at least one --hosts address");
+        let hosts: Vec<HostClient> = cfg.hosts.iter().map(HostClient::new).collect();
+        let mut ring = HashRing::new(hosts.len(), cfg.replicas.max(1))
+            .expect("hosts and replicas are >= 1 here");
+        let inner = RouterInner {
+            hosts,
+            ring: HashRing::new(1, 1).map(RwLock::new).expect("placeholder ring"),
+            migrating: Mutex::new(HashSet::new()),
+            pending: Mutex::new(Vec::new()),
+            orphans: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+            unreachable: AtomicU64::new(0),
+            started: Instant::now(),
+        };
+        // Adopt what the fleet already holds: (host, unsealed?, thinks,
+        // steps) per copy of each session id.
+        let mut copies: std::collections::BTreeMap<u64, Vec<(usize, bool, u64, u64)>> =
+            Default::default();
+        for (index, host) in inner.hosts.iter().enumerate() {
+            match track(&inner, host.health()) {
+                Ok(h) => {
+                    for s in h.sessions {
+                        copies
+                            .entry(s.id)
+                            .or_default()
+                            .push((index, !s.sealed, s.thinks, s.steps));
+                    }
+                }
+                Err(_) => continue,
+            }
+        }
+        let mut max_id = 0u64;
+        for (sid, owners) in copies {
+            max_id = max_id.max(sid);
+            // An unsealed copy always beats a sealed one: a seal means
+            // "my image left during a hand-off", so the unsealed peer is
+            // the authoritative side of that hand-off regardless of
+            // (equal) progress counters. Then most-advanced, ties to the
+            // lowest host.
+            let &(keep, keep_unsealed, _, _) = owners
+                .iter()
+                .max_by_key(|&&(host, unsealed, thinks, steps)| {
+                    (unsealed, thinks, steps, usize::MAX - host)
+                })
+                .expect("at least one owner");
+            for &(host, _, _, _) in &owners {
+                if host != keep {
+                    // Best-effort durable forget of the stale duplicate;
+                    // a failure here just leaves it for the next restart.
+                    let _ = track(&inner, inner.hosts[host].install(sid, true));
+                }
+            }
+            if !keep_unsealed {
+                // A lone (or best) copy stuck sealed: the resolution died
+                // with the previous router, so release it (idempotent).
+                let _ = track(&inner, inner.hosts[keep].install(sid, false));
+            }
+            if ring.home(sid) != keep {
+                ring.set_override(sid, keep).expect("host index < fleet size");
+            }
+        }
+        inner.next_id.store(max_id, Ordering::Relaxed);
+        *inner.ring.write().unwrap() = ring;
+        let handle = RouterHandle { inner: Arc::new(inner) };
+        let rebalancer = cfg.rebalance.map(|rb| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = Arc::clone(&stop);
+            let h = handle.clone();
+            let thread = std::thread::spawn(move || {
+                let tick = Duration::from_millis(10);
+                let mut since_pass = Duration::ZERO;
+                loop {
+                    std::thread::sleep(tick);
+                    if flag.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    since_pass += tick;
+                    if since_pass >= rb.interval {
+                        since_pass = Duration::ZERO;
+                        // Skew simply persists to the next pass on error.
+                        let _ = h.rebalance(rb.max_skew);
+                    }
+                }
+            });
+            (stop, thread)
+        });
+        Ok(Router { handle, rebalancer })
+    }
+
+    pub fn handle(&self) -> RouterHandle {
+        self.handle.clone()
+    }
+
+    pub fn hosts(&self) -> usize {
+        self.handle.host_count()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        if let Some((stop, thread)) = self.rebalancer.take() {
+            stop.store(true, Ordering::SeqCst);
+            let _ = thread.join();
+        }
+    }
+}

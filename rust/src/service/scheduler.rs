@@ -268,14 +268,20 @@ struct RecoveredParts {
 }
 
 /// One open session's identity + progress, as listed by
-/// [`Request::ListSessions`]. The progress counters let recovery pick
-/// the most-advanced copy when a crash mid-migration left a session on
-/// two shards.
+/// [`Request::ListSessions`] and the wire `health` op. The progress
+/// counters let recovery pick the most-advanced copy when a crash
+/// mid-migration left a session on two shards — or, cross-process, when
+/// a router boots against hosts that both hold a copy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub(crate) struct SessionStat {
+pub struct SessionStat {
     pub id: u64,
     pub thinks: u64,
     pub steps: u64,
+    /// Export-sealed awaiting seal resolution. A restarted router uses
+    /// this to prefer the *unsealed* copy of a duplicated session (the
+    /// sealed one was mid-hand-off) and to release a lone sealed copy
+    /// whose resolution died with the previous router.
+    pub sealed: bool,
 }
 
 /// Cloneable client handle; every op is a blocking round-trip to the
@@ -697,7 +703,12 @@ impl Scheduler {
                 let mut stats: Vec<SessionStat> = self
                     .sessions
                     .iter()
-                    .map(|(&id, s)| SessionStat { id, thinks: s.thinks, steps: s.steps })
+                    .map(|(&id, s)| SessionStat {
+                        id,
+                        thinks: s.thinks,
+                        steps: s.steps,
+                        sealed: s.sealed,
+                    })
                     .collect();
                 stats.sort_unstable_by_key(|s| s.id);
                 let _ = reply.send(stats);
@@ -1251,6 +1262,8 @@ impl Scheduler {
             migrations_out: self.migrations_out,
             snapshots: self.snapshots,
             wal_records: self.wal.as_ref().map(|w| w.records_appended()).unwrap_or(0),
+            hosts: 0,
+            host_unreachable: 0,
             sessions_per_sec: self.closed as f64 / secs,
             thinks_per_sec: self.thinks as f64 / secs,
             sims_per_sec: self.sims as f64 / secs,

@@ -1,11 +1,21 @@
 //! TCP front-end: line-delimited JSON over a socket, one thread per
 //! connection, all connections multiplexed onto one [`SessionApi`] handle
-//! — a single-shard [`crate::service::ServiceHandle`] or the sharded
-//! router ([`crate::service::ShardedHandle`]) interchangeably.
+//! — a single-shard [`crate::service::ServiceHandle`], the sharded
+//! [`crate::service::ShardedHandle`] (`wu-uct serve` / `wu-uct
+//! shard-host`) or the cross-process router
+//! ([`crate::service::RouterHandle`], `wu-uct serve --hosts ...`)
+//! interchangeably — the router's proxied ops travel over pooled
+//! [`crate::service::client::HostClient`] connections to its hosts.
 //!
 //! Connection hygiene: sessions opened over a connection and not closed
 //! by the client are closed automatically when the connection drops, so
 //! a crashed load generator cannot leak sessions into the schedulers.
+//! Router-assigned opens (the `open` op's explicit `id` field) are the
+//! deliberate exception: they belong to the routing tier, whose pooled
+//! connections come and go without implying anything about session
+//! lifetime. A crashed *end client* still reaps through the router: the
+//! router's own front-end tracks that client's sessions and closes them
+//! remotely.
 //! (On a durable deployment that close is logged to the WAL like any
 //! other, so reaped sessions stay gone across restarts.) Lines are read
 //! as raw bytes and dispatched through [`handle_bytes`], so even invalid

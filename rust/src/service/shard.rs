@@ -118,6 +118,44 @@ impl Default for ShardedConfig {
     }
 }
 
+/// The id-drawing open-retry loop shared by every routing tier (the
+/// in-process sharded router and the cross-process host router): draw a
+/// fresh session id, try the backend the id places on, and on a
+/// *transient* refusal (`Busy`, an unreachable host) burn ids that
+/// place on refusing backends until every backend has had its chance —
+/// only then does the last refusal surface. Non-transient errors
+/// propagate immediately. Draws are bounded so a pathologically
+/// unbalanced ring cannot spin forever.
+pub(crate) fn open_with_fresh_ids(
+    backends: usize,
+    next_id: &AtomicU64,
+    place: impl Fn(u64) -> usize,
+    mut attempt: impl FnMut(usize, u64) -> Result<u64>,
+    transient: impl Fn(&anyhow::Error) -> bool,
+) -> Result<u64> {
+    let mut rejected = vec![false; backends];
+    let mut last_err: Option<anyhow::Error> = None;
+    for _ in 0..64 * backends {
+        let id = next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let backend = place(id);
+        if rejected[backend] {
+            continue; // this backend already refused; burn the id
+        }
+        match attempt(backend, id) {
+            Ok(id) => return Ok(id),
+            Err(e) if transient(&e) => {
+                rejected[backend] = true;
+                if rejected.iter().all(|&r| r) {
+                    return Err(e);
+                }
+                last_err = Some(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| anyhow::Error::new(Busy { open: 0, limit: 0 })))
+}
+
 /// Result of one migration request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MigrateOutcome {
@@ -175,43 +213,27 @@ impl ShardedHandle {
     /// Open a session. On a `Busy` shard the router keeps drawing fresh
     /// ids — skipping ids that hash to shards that already rejected —
     /// until every shard has had a chance to admit; only then does the
-    /// typed `Busy` surface to the client. Draws are bounded so a
-    /// pathologically unbalanced ring cannot spin forever.
+    /// typed `Busy` surface to the client ([`open_with_fresh_ids`]).
     pub fn open(
         &self,
         env: Box<dyn Env>,
         spec: SearchSpec,
         opts: SessionOptions,
     ) -> Result<u64> {
-        let shards = self.shard_count();
-        let mut rejected = vec![false; shards];
-        let mut last_busy = None;
-        for _ in 0..64 * shards {
-            let sid = self.inner.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-            let shard = self.shard_of(sid);
-            if rejected[shard] {
-                continue; // this shard already said Busy; burn the id
-            }
-            match self.handle_of(sid).open_with_id(
-                sid,
-                env.clone_boxed(),
-                spec.clone(),
-                opts.clone(),
-            ) {
-                Ok(id) => return Ok(id),
-                Err(e) if e.downcast_ref::<Busy>().is_some() => {
-                    rejected[shard] = true;
-                    if rejected.iter().all(|&r| r) {
-                        return Err(e);
-                    }
-                    last_busy = Some(e);
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        Err(last_busy.unwrap_or_else(|| {
-            anyhow::Error::new(Busy { open: 0, limit: 0 })
-        }))
+        open_with_fresh_ids(
+            self.shard_count(),
+            &self.inner.next_id,
+            |sid| self.shard_of(sid),
+            |shard, sid| {
+                self.inner.shards[shard].open_with_id(
+                    sid,
+                    env.clone_boxed(),
+                    spec.clone(),
+                    opts.clone(),
+                )
+            },
+            |e| e.downcast_ref::<Busy>().is_some(),
+        )
     }
 
     pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
@@ -308,6 +330,55 @@ impl ShardedHandle {
         Ok(moves)
     }
 
+    /// Open a session under a caller-assigned id (the cross-process
+    /// router tier draws ids before the owning host sees the open). The
+    /// session lands on the id's ring-assigned local shard; the local
+    /// id allocator's floor advances past it so interleaved local draws
+    /// can never collide.
+    pub fn open_with_id(
+        &self,
+        id: u64,
+        env: Box<dyn Env>,
+        spec: SearchSpec,
+        opts: SessionOptions,
+    ) -> Result<u64> {
+        self.inner.next_id.fetch_max(id, Ordering::Relaxed);
+        self.inner.shards[self.shard_of(id)].open_with_id(id, env, spec, opts)
+    }
+
+    /// Cross-process migration, source half: serialize the idle session
+    /// and seal the local copy (see [`crate::store::migrate`]); pair
+    /// with [`ShardedHandle::resolve_seal`].
+    pub fn export_image(&self, session: u64) -> Result<Vec<u8>> {
+        self.inner.shards[self.shard_of(session)].export_session(session)
+    }
+
+    /// Cross-process migration, target half: decode, admit and install
+    /// an exported image on the id's local home shard. On a durable
+    /// deployment the shard logs the WAL `Open` before acking, so the
+    /// remote source may forget its copy once this returns.
+    pub fn import_image(&self, bytes: Vec<u8>) -> Result<u64> {
+        let id = crate::store::codec::SessionImage::peek_session(&bytes)?;
+        self.inner.next_id.fetch_max(id, Ordering::Relaxed);
+        self.inner.shards[self.shard_of(id)].import_session(bytes)
+    }
+
+    /// Resolve a seal left by [`ShardedHandle::export_image`]:
+    /// `landed = true` forgets the local copy (WAL `Close`),
+    /// `landed = false` unseals it so it serves again. Unsealing is
+    /// idempotent, so an aborting router can always send it — even when
+    /// it cannot know whether its export ever arrived.
+    pub fn resolve_seal(&self, session: u64, landed: bool) -> Result<()> {
+        let shard = self.shard_of(session);
+        if landed {
+            self.inner.shards[shard].forget_session(session)?;
+            self.inner.ring.write().unwrap().clear_override(session);
+            Ok(())
+        } else {
+            self.inner.shards[shard].unseal_session(session)
+        }
+    }
+
     /// Per-shard open-session ids, in shard order.
     pub fn shard_sessions(&self) -> Result<Vec<Vec<u64>>> {
         self.inner
@@ -361,6 +432,46 @@ impl SessionApi for ShardedHandle {
 
     fn migrate(&self, session: u64, to_shard: usize) -> Result<MigrateOutcome> {
         ShardedHandle::migrate(self, session, to_shard)
+    }
+
+    fn open_with_id(
+        &self,
+        id: u64,
+        env: Box<dyn Env>,
+        spec: SearchSpec,
+        opts: SessionOptions,
+    ) -> Result<u64> {
+        ShardedHandle::open_with_id(self, id, env, spec, opts)
+    }
+
+    fn export_image(&self, session: u64) -> Result<Vec<u8>> {
+        ShardedHandle::export_image(self, session)
+    }
+
+    fn import_image(&self, bytes: Vec<u8>) -> Result<u64> {
+        ShardedHandle::import_image(self, bytes)
+    }
+
+    fn resolve_seal(&self, session: u64, landed: bool) -> Result<()> {
+        ShardedHandle::resolve_seal(self, session, landed)
+    }
+
+    fn health(&self) -> Result<crate::service::HealthReply> {
+        let mut sessions = Vec::new();
+        for handle in &self.inner.shards {
+            sessions.extend(handle.list_sessions()?);
+        }
+        sessions.sort_unstable_by_key(|s| s.id);
+        let m = ShardedHandle::metrics(self)?;
+        Ok(crate::service::HealthReply {
+            role: "host",
+            shards: self.shard_count(),
+            hosts: 0,
+            sessions_open: sessions.len(),
+            uptime_s: m.uptime.as_secs_f64(),
+            sessions,
+            host_status: Vec::new(),
+        })
     }
 }
 

@@ -145,6 +145,17 @@ impl SessionImage {
         Ok(out)
     }
 
+    /// Read just the session id from an encoded image. Placement
+    /// decisions (which shard or host installs the image) only need the
+    /// id, and should not pay the full tree + env-snapshot decode — the
+    /// installer re-decodes and fully validates anyway. The frame
+    /// (magic, version, length, checksum) is still verified here, so a
+    /// corrupt image is rejected rather than mis-placed.
+    pub fn peek_session(bytes: &[u8]) -> Result<u64, Error> {
+        let payload = unframe(bytes, &Self::MAGIC, Self::VERSION, "session image")?;
+        Reader::new(payload).u64("session id")
+    }
+
     /// Decode and fully validate an image.
     pub fn decode(bytes: &[u8]) -> Result<SessionImage, Error> {
         let payload = unframe(bytes, &Self::MAGIC, Self::VERSION, "session image")?;

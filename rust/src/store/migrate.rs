@@ -35,6 +35,35 @@
 //! per-shard occupancy to at most one move — in a loop until the skew
 //! threshold is satisfied, so its decisions are unit-testable without
 //! threads.
+//!
+//! ## The cross-process handshake
+//!
+//! When shards live in separate OS processes (shard hosts behind a
+//! router), the same seal → durable-`Open` → `Close` protocol runs over
+//! the wire, where any message can be lost. [`migrate_over`] is that
+//! handshake as a pure control flow over an abstract [`MigrationLink`]:
+//! the live router drives it through pooled TCP clients
+//! ([`crate::service::client::HostClient`]), and the deterministic
+//! testkit drives the *identical code path* through an in-process
+//! [`FakeHostNet`](crate::testkit::fakenet::FakeHostNet) whose links can
+//! be severed at any scripted step — so every partition window is
+//! exercised without spawning processes. The invariant, per failure
+//! point:
+//!
+//! * export lost → nothing moved; a best-effort unseal (a no-op if the
+//!   seal never landed) puts the source back in service;
+//! * install lost or refused → the source is unsealed and serves again.
+//!   If the install actually landed and only its *reply* was lost, the
+//!   session is briefly duplicated — never lost — and the target's
+//!   orphan copy loses the routing argument (the router's override was
+//!   never written);
+//! * resolution lost → the move already happened; the source copy stays
+//!   sealed (refusing ops with `Recovering`) until a retried
+//!   `resolve(landed = true)` lands — [`HandshakeOutcome::MovedSealed`]
+//!   hands the caller exactly that retry obligation as a
+//!   [`PendingResolve`].
+
+use anyhow::Result;
 
 /// Typed routing failure: the session is mid-migration (or mid-recovery)
 /// and momentarily owned by no shard. Clients should retry shortly; the
@@ -91,9 +120,192 @@ pub fn plan_step(sessions_per_shard: &[Vec<u64>], max_skew: f64) -> Option<Plann
     Some(PlannedMove { session, from: busiest, to: idlest })
 }
 
+/// The three remote primitives the cross-process handshake needs, keyed
+/// by host index. Implementations: the live router (over pooled TCP
+/// clients) and the testkit's `FakeHostNet` (scripted, deterministic).
+/// Every method may fail for *transport* reasons (link severed, reply
+/// lost) as well as remote refusals — [`migrate_over`] treats both as
+/// "the effect may or may not have landed" and acts so the session can
+/// be duplicated but never lost.
+pub trait MigrationLink {
+    /// Serialize `session` on `host` and seal the copy there.
+    fn export_seal(&mut self, host: usize, session: u64) -> Result<Vec<u8>>;
+    /// Install an exported image on `host` (durable `Open` before ack).
+    fn install_image(&mut self, host: usize, image: Vec<u8>) -> Result<u64>;
+    /// Declare where the sealed session landed: `true` ⇒ forget the copy
+    /// on `host`, `false` ⇒ unseal it (idempotent on an unsealed copy).
+    fn resolve_seal(&mut self, host: usize, session: u64, landed: bool) -> Result<()>;
+}
+
+/// A seal resolution that could not be delivered; retry until the host
+/// answers definitively.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PendingResolve {
+    pub host: usize,
+    pub session: u64,
+    pub landed: bool,
+}
+
+/// How one cross-process handshake ended.
+#[derive(Debug)]
+pub enum HandshakeOutcome {
+    /// Installed on the target, forgotten on the source. Repoint routing.
+    Moved,
+    /// Installed on the target, but the source could not be told to
+    /// forget: repoint routing to the target (it is authoritative) and
+    /// keep retrying `resolve_seal(from, session, true)` — the sealed
+    /// source copy refuses ops until then, and recovery-style dedup
+    /// cleans it up if a crash gets there first.
+    MovedSealed(PendingResolve),
+    /// The transfer failed and the source was unsealed; it serves again,
+    /// untouched. Carries the install failure.
+    Aborted(anyhow::Error),
+    /// The transfer failed *and* the abort could not be delivered: the
+    /// source may still be sealed. Keep retrying
+    /// `resolve_seal(from, session, false)`. Carries the original
+    /// failure.
+    AbortedSealed(anyhow::Error, PendingResolve),
+}
+
+/// The crash-safe cross-process hand-off: seal + export on the source,
+/// durable install on the target, then resolve the seal. See the module
+/// docs for the per-failure-point guarantees; the ordering ensures a
+/// session can be duplicated by a lost message but never lost.
+pub fn migrate_over(
+    link: &mut impl MigrationLink,
+    session: u64,
+    from: usize,
+    to: usize,
+) -> HandshakeOutcome {
+    let image = match link.export_seal(from, session) {
+        Ok(image) => image,
+        // The request or only its reply may have been lost — the seal
+        // state is unknown. Unsealing is idempotent, so abort
+        // unconditionally.
+        Err(e) => return abort(link, from, session, e),
+    };
+    if let Err(e) = link.install_image(to, image) {
+        return abort(link, from, session, e);
+    }
+    // The image is durable on the target; the source may forget.
+    match link.resolve_seal(from, session, true) {
+        Ok(()) => HandshakeOutcome::Moved,
+        Err(_) => HandshakeOutcome::MovedSealed(PendingResolve {
+            host: from,
+            session,
+            landed: true,
+        }),
+    }
+}
+
+/// Abort half of [`migrate_over`]: put the source back in service, or
+/// report the undeliverable unseal as a retry obligation.
+fn abort(
+    link: &mut impl MigrationLink,
+    from: usize,
+    session: u64,
+    err: anyhow::Error,
+) -> HandshakeOutcome {
+    match link.resolve_seal(from, session, false) {
+        Ok(()) => HandshakeOutcome::Aborted(err),
+        Err(_) => HandshakeOutcome::AbortedSealed(
+            err,
+            PendingResolve { host: from, session, landed: false },
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Scripted in-memory link: each step either succeeds or fails, and
+    /// side effects are recorded so the outcome classification can be
+    /// checked against what "actually happened".
+    #[derive(Default)]
+    struct ScriptLink {
+        fail_export: bool,
+        fail_install: bool,
+        fail_resolve: bool,
+        calls: Vec<String>,
+    }
+
+    impl MigrationLink for ScriptLink {
+        fn export_seal(&mut self, host: usize, session: u64) -> Result<Vec<u8>> {
+            self.calls.push(format!("export h={host} s={session}"));
+            if self.fail_export {
+                anyhow::bail!("export link down");
+            }
+            Ok(vec![1, 2, 3])
+        }
+
+        fn install_image(&mut self, host: usize, image: Vec<u8>) -> Result<u64> {
+            self.calls.push(format!("install h={host} bytes={}", image.len()));
+            if self.fail_install {
+                anyhow::bail!("install link down");
+            }
+            Ok(7)
+        }
+
+        fn resolve_seal(&mut self, host: usize, session: u64, landed: bool) -> Result<()> {
+            self.calls.push(format!("resolve h={host} s={session} landed={landed}"));
+            if self.fail_resolve {
+                anyhow::bail!("resolve link down");
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn clean_handshake_moves() {
+        let mut link = ScriptLink::default();
+        let out = migrate_over(&mut link, 7, 0, 1);
+        assert!(matches!(out, HandshakeOutcome::Moved), "{out:?}");
+        assert_eq!(
+            link.calls,
+            vec!["export h=0 s=7", "install h=1 bytes=3", "resolve h=0 s=7 landed=true"]
+        );
+    }
+
+    #[test]
+    fn failed_export_aborts_with_a_defensive_unseal() {
+        let mut link = ScriptLink { fail_export: true, ..Default::default() };
+        let out = migrate_over(&mut link, 7, 0, 1);
+        assert!(matches!(out, HandshakeOutcome::Aborted(_)), "{out:?}");
+        assert_eq!(link.calls, vec!["export h=0 s=7", "resolve h=0 s=7 landed=false"]);
+    }
+
+    #[test]
+    fn failed_install_unseals_the_source() {
+        let mut link = ScriptLink { fail_install: true, ..Default::default() };
+        let out = migrate_over(&mut link, 9, 2, 0);
+        assert!(matches!(out, HandshakeOutcome::Aborted(_)), "{out:?}");
+        assert_eq!(
+            link.calls,
+            vec!["export h=2 s=9", "install h=0 bytes=3", "resolve h=2 s=9 landed=false"]
+        );
+    }
+
+    #[test]
+    fn undeliverable_abort_reports_the_pending_unseal() {
+        let mut link =
+            ScriptLink { fail_install: true, fail_resolve: true, ..Default::default() };
+        let out = migrate_over(&mut link, 9, 1, 0);
+        let HandshakeOutcome::AbortedSealed(_, pending) = out else {
+            panic!("expected AbortedSealed, got {out:?}");
+        };
+        assert_eq!(pending, PendingResolve { host: 1, session: 9, landed: false });
+    }
+
+    #[test]
+    fn undeliverable_forget_still_counts_as_moved() {
+        let mut link = ScriptLink { fail_resolve: true, ..Default::default() };
+        let out = migrate_over(&mut link, 4, 0, 1);
+        let HandshakeOutcome::MovedSealed(pending) = out else {
+            panic!("expected MovedSealed, got {out:?}");
+        };
+        assert_eq!(pending, PendingResolve { host: 0, session: 4, landed: true });
+    }
 
     #[test]
     fn balanced_shards_plan_nothing() {

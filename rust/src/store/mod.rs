@@ -35,7 +35,10 @@ pub mod migrate;
 pub mod wal;
 
 pub use codec::{SessionImage, SessionMeta};
-pub use migrate::{plan_step, PlannedMove, Recovering};
+pub use migrate::{
+    migrate_over, plan_step, HandshakeOutcome, MigrationLink, PendingResolve, PlannedMove,
+    Recovering,
+};
 pub use wal::{read_segment, Record, RecoveredSession, Recovery, SegmentRead, StoreConfig, Wal};
 
 /// Typed failure of any store operation. Decoding untrusted bytes (disk

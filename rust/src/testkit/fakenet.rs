@@ -1,0 +1,454 @@
+//! FakeHostNet: cross-process shard hosts in virtual time, behind a
+//! scriptable message layer.
+//!
+//! The cross-host story ("a session moved between OS processes keeps
+//! ΣO = 0 and the same best action as an unmigrated control") is a
+//! concurrency-and-partitions claim, so like everything else in the
+//! testkit it is proven without threads or sockets:
+//!
+//! * a [`FakeHost`] is one shard-host process in miniature — a
+//!   [`ScriptedService`] plus the *host-level* seal semantics the wire
+//!   ops add (`export` seals, sealed sessions refuse ops with the typed
+//!   [`Recovering`] error, `install`-resolution forgets or unseals) and
+//!   optional admission control (a full host refuses imports with the
+//!   typed [`Busy`] error);
+//! * a [`FakeHostNet`] strings hosts behind a message layer that can
+//!   **sever**, **heal**, **delay**, or **drop the reply of** any link
+//!   at scripted step boundaries (a step = one rpc). Lost messages
+//!   surface as the same typed
+//!   [`HostUnreachable`](crate::service::client::HostUnreachable) error
+//!   the live router's pooled clients raise;
+//! * the net implements [`MigrationLink`], so
+//!   [`migrate_over`](crate::store::migrate::migrate_over) — the
+//!   *identical* handshake code path the live router runs over TCP —
+//!   can be driven through every partition window deterministically.
+//!
+//! Every rpc, fault and outcome lands in one event log; same hosts +
+//! same script ⇒ byte-identical log (the golden-trace requirement),
+//! tested in `rust/tests/distributed.rs`.
+
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+
+use anyhow::Result;
+
+use crate::env::Env;
+use crate::mcts::common::SearchSpec;
+use crate::service::client::HostUnreachable;
+use crate::service::scheduler::Busy;
+use crate::store::migrate::{MigrationLink, Recovering};
+use crate::testkit::harness::ScriptedService;
+use crate::testkit::latency::LatencyScript;
+
+/// One shard-host process in miniature: a scripted service plus the
+/// host-level seal/admission semantics of the wire ops.
+pub struct FakeHost {
+    svc: ScriptedService,
+    sealed: HashSet<u64>,
+    max_sessions: Option<usize>,
+}
+
+impl FakeHost {
+    pub fn new(exp_capacity: usize, sim_capacity: usize, script: LatencyScript) -> FakeHost {
+        FakeHost {
+            svc: ScriptedService::new(exp_capacity, sim_capacity, script),
+            sealed: HashSet::new(),
+            max_sessions: None,
+        }
+    }
+
+    /// Admission control: refuse imports (and opens) past `cap` open
+    /// sessions, with the typed [`Busy`] error.
+    pub fn with_cap(mut self, cap: usize) -> FakeHost {
+        self.max_sessions = Some(cap);
+        self
+    }
+
+    fn check_unsealed(&self, id: u64) -> Result<()> {
+        if self.sealed.contains(&id) {
+            return Err(anyhow::Error::new(Recovering { session: id }));
+        }
+        Ok(())
+    }
+
+    pub fn open(&mut self, id: u64, env: &dyn Env, spec: SearchSpec, weight: f64) -> Result<()> {
+        if let Some(limit) = self.max_sessions {
+            let open = self.svc.session_ids().len();
+            if open >= limit {
+                return Err(anyhow::Error::new(Busy { open, limit }));
+            }
+        }
+        self.svc.open(id, env, spec, weight);
+        Ok(())
+    }
+
+    pub fn begin_think(&mut self, id: u64, budget: u32) -> Result<()> {
+        anyhow::ensure!(self.svc.contains(id), "unknown session {id}");
+        self.check_unsealed(id)?;
+        self.svc.begin_think(id, budget);
+        Ok(())
+    }
+
+    /// Run every pending think to completion (virtual time).
+    pub fn run_to_completion(&mut self) {
+        self.svc.run_to_completion();
+    }
+
+    pub fn advance(&mut self, id: u64, action: usize) -> Result<()> {
+        anyhow::ensure!(self.svc.contains(id), "unknown session {id}");
+        self.check_unsealed(id)?;
+        self.svc.advance(id, action)?;
+        Ok(())
+    }
+
+    pub fn best_action(&self, id: u64) -> Result<usize> {
+        anyhow::ensure!(self.svc.contains(id), "unknown session {id}");
+        self.check_unsealed(id)?;
+        Ok(self.svc.best_action(id))
+    }
+
+    pub fn close(&mut self, id: u64) -> Result<()> {
+        self.check_unsealed(id)?;
+        self.svc.close(id)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.svc.contains(id)
+    }
+
+    pub fn is_sealed(&self, id: u64) -> bool {
+        self.sealed.contains(&id)
+    }
+
+    pub fn quiescent(&self, id: u64) -> bool {
+        self.svc.quiescent(id)
+    }
+
+    pub fn session_ids(&self) -> Vec<u64> {
+        self.svc.session_ids()
+    }
+
+    /// The underlying scripted service (golden-trace access).
+    pub fn svc(&mut self) -> &mut ScriptedService {
+        &mut self.svc
+    }
+
+    /// Wire `export`: serialize the idle session and seal the copy.
+    fn do_export(&mut self, id: u64) -> Result<Vec<u8>> {
+        anyhow::ensure!(self.svc.contains(id), "unknown session {id}");
+        self.check_unsealed(id)?; // double-export is a refusal, like live
+        let bytes = self.svc.export_image(id)?;
+        self.sealed.insert(id);
+        Ok(bytes)
+    }
+
+    /// Wire `import`: admission control, then install.
+    fn do_install(&mut self, bytes: &[u8]) -> Result<u64> {
+        if let Some(limit) = self.max_sessions {
+            let open = self.svc.session_ids().len();
+            if open >= limit {
+                return Err(anyhow::Error::new(Busy { open, limit }));
+            }
+        }
+        self.svc.import(bytes)
+    }
+
+    /// Wire `install` (seal resolution): `landed = true` forgets the
+    /// copy; `landed = false` unseals it (idempotent).
+    fn do_resolve(&mut self, id: u64, landed: bool) -> Result<()> {
+        if landed {
+            self.sealed.remove(&id);
+            self.svc.close(id)
+        } else {
+            self.sealed.remove(&id);
+            Ok(())
+        }
+    }
+}
+
+/// A scripted fault applied at a step boundary (a step = one rpc).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScriptEvent {
+    /// Cut the router↔host link; every rpc to it is dropped until healed.
+    Sever(usize),
+    /// Restore the link.
+    Heal(usize),
+}
+
+/// The in-process fake network: hosts behind a scriptable message layer.
+pub struct FakeHostNet {
+    hosts: Vec<FakeHost>,
+    link_up: Vec<bool>,
+    /// Faults applied at the boundary *before* rpc `step` (1-based).
+    events: BTreeMap<u64, Vec<ScriptEvent>>,
+    /// Rpcs whose request lands but whose *reply* is lost — the effect
+    /// happened, the caller cannot know.
+    drop_reply: BTreeSet<u64>,
+    /// Extra virtual latency injected before an rpc.
+    delays: BTreeMap<u64, u64>,
+    step: u64,
+    clock: u64,
+    log: Vec<String>,
+}
+
+impl FakeHostNet {
+    pub fn new(hosts: Vec<FakeHost>) -> FakeHostNet {
+        let n = hosts.len();
+        FakeHostNet {
+            hosts,
+            link_up: vec![true; n],
+            events: BTreeMap::new(),
+            drop_reply: BTreeSet::new(),
+            delays: BTreeMap::new(),
+            step: 0,
+            clock: 0,
+            log: Vec::new(),
+        }
+    }
+
+    /// Script a fault at the boundary before rpc `step` (1-based).
+    pub fn script_at(&mut self, step: u64, event: ScriptEvent) {
+        self.events.entry(step).or_default().push(event);
+    }
+
+    /// Lose the reply of rpc `step`: the request executes, the caller
+    /// sees `HostUnreachable`.
+    pub fn drop_reply_at(&mut self, step: u64) {
+        self.drop_reply.insert(step);
+    }
+
+    /// Inject `ticks` of virtual latency before rpc `step`.
+    pub fn delay_at(&mut self, step: u64, ticks: u64) {
+        self.delays.insert(step, ticks);
+    }
+
+    /// Cut / restore a link immediately (between scripted phases).
+    pub fn sever_now(&mut self, host: usize) {
+        self.link_up[host] = false;
+        self.log.push(format!("t={} sever host={host}", self.clock));
+    }
+
+    pub fn heal_now(&mut self, host: usize) {
+        self.link_up[host] = true;
+        self.log.push(format!("t={} heal host={host}", self.clock));
+    }
+
+    pub fn host(&self, index: usize) -> &FakeHost {
+        &self.hosts[index]
+    }
+
+    pub fn host_mut(&mut self, index: usize) -> &mut FakeHost {
+        &mut self.hosts[index]
+    }
+
+    /// The golden event log: every rpc, fault and outcome in order.
+    pub fn log(&self) -> &[String] {
+        &self.log
+    }
+
+    pub fn take_log(&mut self) -> Vec<String> {
+        std::mem::take(&mut self.log)
+    }
+
+    fn unreachable(&self, host: usize) -> anyhow::Error {
+        anyhow::Error::new(HostUnreachable { host: format!("fake-host-{host}") })
+    }
+
+    /// Start rpc number `step + 1`: apply scripted boundary faults, then
+    /// either deliver (Ok) or drop (Err) the request.
+    fn begin_rpc(&mut self, host: usize, what: &str) -> Result<()> {
+        self.step += 1;
+        self.clock += 1;
+        if let Some(events) = self.events.remove(&self.step) {
+            for event in events {
+                let line = match event {
+                    ScriptEvent::Sever(h) => {
+                        self.link_up[h] = false;
+                        format!("t={} step={} sever host={h}", self.clock, self.step)
+                    }
+                    ScriptEvent::Heal(h) => {
+                        self.link_up[h] = true;
+                        format!("t={} step={} heal host={h}", self.clock, self.step)
+                    }
+                };
+                self.log.push(line);
+            }
+        }
+        if let Some(ticks) = self.delays.remove(&self.step) {
+            self.clock += ticks;
+            self.log
+                .push(format!("t={} step={} delay ticks={ticks}", self.clock, self.step));
+        }
+        if !self.link_up[host] {
+            self.log.push(format!(
+                "t={} step={} {what} -> host={host} LOST(severed)",
+                self.clock, self.step
+            ));
+            return Err(self.unreachable(host));
+        }
+        self.log
+            .push(format!("t={} step={} {what} -> host={host}", self.clock, self.step));
+        Ok(())
+    }
+
+    /// Finish the current rpc: log the outcome, then lose the reply if
+    /// scripted (the effect stands; the caller sees unreachable).
+    fn finish_rpc<T>(&mut self, host: usize, res: Result<T>, summary: String) -> Result<T> {
+        let reply_lost = self.drop_reply.remove(&self.step);
+        match res {
+            Ok(v) => {
+                if reply_lost {
+                    self.log.push(format!(
+                        "t={} step={} reply {summary} REPLY-LOST",
+                        self.clock, self.step
+                    ));
+                    Err(self.unreachable(host))
+                } else {
+                    self.log
+                        .push(format!("t={} step={} reply {summary}", self.clock, self.step));
+                    Ok(v)
+                }
+            }
+            Err(e) => {
+                if reply_lost {
+                    self.log.push(format!(
+                        "t={} step={} reply err={e:#} REPLY-LOST",
+                        self.clock, self.step
+                    ));
+                    Err(self.unreachable(host))
+                } else {
+                    self.log
+                        .push(format!("t={} step={} reply err={e:#}", self.clock, self.step));
+                    Err(e)
+                }
+            }
+        }
+    }
+}
+
+impl MigrationLink for FakeHostNet {
+    fn export_seal(&mut self, host: usize, session: u64) -> Result<Vec<u8>> {
+        self.begin_rpc(host, &format!("export sid={session}"))?;
+        let res = self.hosts[host].do_export(session);
+        let summary = match &res {
+            Ok(bytes) => format!("export sid={session} ok bytes={}", bytes.len()),
+            Err(_) => format!("export sid={session}"),
+        };
+        self.finish_rpc(host, res, summary)
+    }
+
+    fn install_image(&mut self, host: usize, image: Vec<u8>) -> Result<u64> {
+        self.begin_rpc(host, &format!("install bytes={}", image.len()))?;
+        let res = self.hosts[host].do_install(&image);
+        let summary = match &res {
+            Ok(sid) => format!("install ok sid={sid}"),
+            Err(_) => "install".to_string(),
+        };
+        self.finish_rpc(host, res, summary)
+    }
+
+    fn resolve_seal(&mut self, host: usize, session: u64, landed: bool) -> Result<()> {
+        self.begin_rpc(host, &format!("resolve sid={session} landed={landed}"))?;
+        let res = self.hosts[host].do_resolve(session, landed);
+        let summary = format!("resolve sid={session} landed={landed} ok");
+        self.finish_rpc(host, res, summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::store::migrate::{migrate_over, HandshakeOutcome};
+
+    fn spec(seed: u64) -> SearchSpec {
+        SearchSpec {
+            max_simulations: 16,
+            rollout_limit: 8,
+            max_depth: 12,
+            seed,
+            ..SearchSpec::default()
+        }
+    }
+
+    /// Durable convention: env constructed with the spec's seed, with
+    /// proto::make_env's garnet parameters.
+    fn env(seed: u64) -> Garnet {
+        Garnet::new(15, 3, 30, 0.0, seed)
+    }
+
+    fn two_hosts() -> FakeHostNet {
+        let mut a = FakeHost::new(2, 4, LatencyScript::uniform(3, (1, 3), (2, 9)));
+        a.open(1, &env(1), spec(1), 1.0).unwrap();
+        a.begin_think(1, 16).unwrap();
+        a.run_to_completion();
+        let b = FakeHost::new(2, 4, LatencyScript::uniform(4, (1, 3), (2, 9)));
+        FakeHostNet::new(vec![a, b])
+    }
+
+    #[test]
+    fn clean_handshake_moves_the_session() {
+        let mut net = two_hosts();
+        let best = net.host(0).best_action(1).unwrap();
+        let out = migrate_over(&mut net, 1, 0, 1);
+        assert!(matches!(out, HandshakeOutcome::Moved), "{out:?}");
+        assert!(!net.host(0).contains(1), "source forgot the copy");
+        assert!(net.host(1).contains(1));
+        assert!(net.host(1).quiescent(1), "ΣO = 0 after the wire hop");
+        assert_eq!(net.host(1).best_action(1).unwrap(), best, "tree moved bit-for-bit");
+        assert_eq!(net.log().len(), 6, "3 rpcs, each a send + a reply line");
+    }
+
+    #[test]
+    fn sealed_sessions_refuse_ops_with_recovering() {
+        let mut net = two_hosts();
+        net.drop_reply_at(2); // install lands, reply lost
+        let out = migrate_over(&mut net, 1, 0, 1);
+        assert!(matches!(out, HandshakeOutcome::Aborted(_)), "{out:?}");
+        // Aborted ⇒ the source unsealed and serves again...
+        assert!(!net.host(0).is_sealed(1));
+        net.host_mut(0).begin_think(1, 8).unwrap();
+        net.host_mut(0).run_to_completion();
+        // ...while the lost reply duplicated (never lost) the session.
+        assert!(net.host(1).contains(1), "reply-lost install still landed");
+    }
+
+    #[test]
+    fn a_sealed_host_copy_is_gated_until_resolution() {
+        let mut net = two_hosts();
+        net.script_at(3, ScriptEvent::Sever(0)); // resolve(forget) is lost
+        let out = migrate_over(&mut net, 1, 0, 1);
+        let HandshakeOutcome::MovedSealed(pending) = out else {
+            panic!("expected MovedSealed, got {out:?}");
+        };
+        assert!(net.host(0).is_sealed(1));
+        let err = net.host_mut(0).begin_think(1, 4).unwrap_err();
+        assert!(err.downcast_ref::<Recovering>().is_some(), "got: {err:#}");
+        // Heal and deliver the pending resolution: the copy is released.
+        net.heal_now(0);
+        net.resolve_seal(pending.host, pending.session, pending.landed).unwrap();
+        assert!(!net.host(0).contains(1));
+        assert!(net.host(1).contains(1));
+    }
+
+    #[test]
+    fn full_hosts_refuse_installs_with_busy() {
+        let mut a = FakeHost::new(1, 2, LatencyScript::fixed(1, 4));
+        a.open(1, &env(1), spec(1), 1.0).unwrap();
+        a.begin_think(1, 8).unwrap();
+        a.run_to_completion();
+        let mut b = FakeHost::new(1, 2, LatencyScript::fixed(2, 5)).with_cap(1);
+        b.open(90, &env(90), spec(90), 1.0).unwrap();
+        let mut net = FakeHostNet::new(vec![a, b]);
+        let out = migrate_over(&mut net, 1, 0, 1);
+        let HandshakeOutcome::Aborted(err) = out else {
+            panic!("expected Aborted, got {out:?}");
+        };
+        assert!(err.downcast_ref::<Busy>().is_some(), "got: {err:#}");
+        // The regression guarantee: a refused import unseals the source,
+        // which serves again untouched.
+        assert!(!net.host(0).is_sealed(1));
+        net.host_mut(0).begin_think(1, 8).unwrap();
+        net.host_mut(0).run_to_completion();
+        assert!(net.host(0).quiescent(1));
+    }
+}

@@ -216,6 +216,18 @@ impl ScriptedService {
     /// Migration source half in virtual time: serialize the (idle,
     /// quiescent) session to its checksummed image and remove it.
     pub fn export(&mut self, id: u64) -> anyhow::Result<Vec<u8>> {
+        let bytes = self.export_image(id)?;
+        self.sessions.remove(&id);
+        self.fair.remove(id);
+        self.exec.note(&format!("export sid={id} bytes={}", bytes.len()));
+        Ok(bytes)
+    }
+
+    /// Serialize the (idle, quiescent) session *without* removing it —
+    /// the cross-process seal semantics, where the source copy stays
+    /// installed until the seal is resolved
+    /// ([`crate::testkit::fakenet::FakeHost`] gates ops on it meanwhile).
+    pub fn export_image(&self, id: u64) -> anyhow::Result<Vec<u8>> {
         anyhow::ensure!(self.sessions.contains_key(&id), "unknown session {id}");
         anyhow::ensure!(!self.thinking(id), "session {id} has a think in flight");
         anyhow::ensure!(self.quiescent(id), "export requires quiescence (ΣO = 0)");
@@ -225,11 +237,17 @@ impl ScriptedService {
             weight: sess.weight,
             ..SessionMeta::default()
         };
-        let bytes = SessionImage::capture(id, &sess.driver, meta)?.encode()?;
-        self.sessions.remove(&id);
-        self.fair.remove(id);
-        self.exec.note(&format!("export sid={id} bytes={}", bytes.len()));
-        Ok(bytes)
+        Ok(SessionImage::capture(id, &sess.driver, meta)?.encode()?)
+    }
+
+    /// Whether `id` is currently installed.
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    /// Installed session ids, ascending.
+    pub fn session_ids(&self) -> Vec<u64> {
+        self.sessions.keys().copied().collect()
     }
 
     /// Migration target half: decode, revive and install.

@@ -32,6 +32,16 @@
 //!   [`durability::migrate_under_load`] moves a session between two
 //!   loaded scripted shards with `ΣO = 0` checked on both sides.
 //!
+//! * [`fakenet`] — cross-*process* shard hosts in miniature:
+//!   [`fakenet::FakeHostNet`] puts scripted hosts (with the wire ops'
+//!   seal/admission semantics) behind a message layer that can sever,
+//!   heal, delay or drop-the-reply-of any link at scripted step
+//!   boundaries, and drives the *same* migration handshake
+//!   ([`crate::store::migrate::migrate_over`]) the live router runs
+//!   over TCP — so every partition window, including mid-migration, is
+//!   exercised deterministically without spawning processes
+//!   (`rust/tests/distributed.rs`).
+//!
 //! Used by `rust/tests/conformance.rs` (optimal-action conformance,
 //! worker-count invariance), the fairness property in
 //! `rust/tests/properties.rs`, and the crash/recovery + migration golden
@@ -41,10 +51,12 @@
 
 pub mod durability;
 pub mod executor;
+pub mod fakenet;
 pub mod harness;
 pub mod latency;
 
 pub use durability::{migrate_under_load, DurableScriptedService, MigrationRun};
 pub use executor::{Trace, VirtualExecutor};
+pub use fakenet::{FakeHost, FakeHostNet, ScriptEvent};
 pub use harness::{scripted_driver, scripted_search, ScriptedService, SearchOutcome};
 pub use latency::LatencyScript;

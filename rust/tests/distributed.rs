@@ -1,0 +1,573 @@
+//! Cross-process shard hosts: the distributed invariants.
+//!
+//! Three layers of proof, mirroring DESIGN.md §9's failure matrix:
+//!
+//! 1. **Deterministic** (`FakeHostNet`): a session opened on host A,
+//!    thought on, live-migrated to host B over the *same*
+//!    `migrate_over` handshake the live router runs, and thought on
+//!    again produces the same best-action sequence as the in-process
+//!    (single-process) control — with `ΣO = 0` on both hosts — and a
+//!    link severed at every handshake step either completes or cleanly
+//!    aborts with the source unsealed, never losing the session. Same
+//!    seed ⇒ identical event log (golden).
+//! 2. **Wire layer**: the four host ops round-trip over the real
+//!    dispatcher, reject unknown fields, and malformed / oversized /
+//!    truncated image frames are typed error replies.
+//! 3. **Live TCP**: a router over two in-process shard-host services
+//!    proxies the full lifecycle, migrates across hosts, survives a
+//!    killed host (typed `HostUnreachable`, counted in metrics), and a
+//!    restarted router re-learns placement from health probes.
+
+use wu_uct::env::garnet::Garnet;
+use wu_uct::mcts::SearchSpec;
+use wu_uct::service::json::Json;
+use wu_uct::service::proto::{handle_line, image_from_hex};
+use wu_uct::service::scheduler::{ServiceConfig, SessionOptions};
+use wu_uct::service::shard::{ShardedConfig, ShardedService};
+use wu_uct::service::{
+    Busy, HostUnreachable, Router, RouterConfig, SessionApi, TcpServer,
+};
+use wu_uct::store::migrate::{migrate_over, HandshakeOutcome, MigrationLink, Recovering};
+use wu_uct::testkit::{FakeHost, FakeHostNet, LatencyScript, ScriptEvent, ScriptedService};
+
+fn spec(sims: u32, seed: u64) -> SearchSpec {
+    SearchSpec {
+        max_simulations: sims,
+        rollout_limit: 8,
+        max_depth: 12,
+        seed,
+        ..SearchSpec::default()
+    }
+}
+
+/// The durable convention: envs are rebuilt as `make_env("garnet",
+/// seed)`, so construct them with the spec's seed and garnet's wire
+/// parameters.
+fn env(seed: u64) -> Garnet {
+    Garnet::new(15, 3, 30, 0.0, seed)
+}
+
+fn opts(seed: u64) -> SessionOptions {
+    SessionOptions { env_seed: seed, ..SessionOptions::default() }
+}
+
+// ---------------------------------------------------------------------
+// 1. Deterministic cross-host invariants (FakeHostNet)
+// ---------------------------------------------------------------------
+
+fn source_script() -> LatencyScript {
+    LatencyScript::uniform(11, (1, 3), (2, 9))
+}
+
+fn target_script() -> LatencyScript {
+    LatencyScript::uniform(12, (1, 3), (2, 9))
+}
+
+/// The acceptance claim: open on host A, think via the router, migrate
+/// to host B over the wire handshake, think again — the best-action
+/// sequence must equal a single-process control that moved the session
+/// with the in-process export/import path, and `ΣO = 0` must hold for
+/// every session on both hosts.
+#[test]
+fn migrated_session_matches_the_single_process_control() {
+    let sid = 1u64;
+    // Control: one process, the in-process migration path.
+    let mut ctl_a = ScriptedService::new(2, 4, source_script());
+    let mut ctl_b = ScriptedService::new(2, 4, target_script());
+    ctl_a.open(sid, &env(101), spec(24, 101), 1.0);
+    ctl_a.open(2, &env(102), spec(24, 102), 1.0);
+    ctl_b.open(11, &env(111), spec(24, 111), 1.0);
+    ctl_a.begin_think(sid, 24);
+    ctl_a.begin_think(2, 24);
+    ctl_a.run_to_completion();
+    ctl_b.begin_think(11, 24);
+    ctl_b.run_to_completion();
+    let control_best1 = ctl_a.best_action(sid);
+    let image = ctl_a.export(sid).unwrap();
+    ctl_b.import(&image).unwrap();
+    ctl_b.begin_think(sid, 24);
+    ctl_b.begin_think(11, 24);
+    ctl_b.run_to_completion();
+    let control_best2 = ctl_b.best_action(sid);
+
+    // Distributed: identical hosts and schedules, hand-off over the
+    // fake wire via the router's handshake code path.
+    let mut host_a = FakeHost::new(2, 4, source_script());
+    let mut host_b = FakeHost::new(2, 4, target_script());
+    host_a.open(sid, &env(101), spec(24, 101), 1.0).unwrap();
+    host_a.open(2, &env(102), spec(24, 102), 1.0).unwrap();
+    host_b.open(11, &env(111), spec(24, 111), 1.0).unwrap();
+    host_a.begin_think(sid, 24).unwrap();
+    host_a.begin_think(2, 24).unwrap();
+    host_a.run_to_completion();
+    host_b.begin_think(11, 24).unwrap();
+    host_b.run_to_completion();
+    let mut net = FakeHostNet::new(vec![host_a, host_b]);
+    assert_eq!(
+        net.host(0).best_action(sid).unwrap(),
+        control_best1,
+        "pre-migration recommendation must match the control"
+    );
+    let out = migrate_over(&mut net, sid, 0, 1);
+    assert!(matches!(out, HandshakeOutcome::Moved), "{out:?}");
+    {
+        let b = net.host_mut(1);
+        b.begin_think(sid, 24).unwrap();
+        b.begin_think(11, 24).unwrap();
+        b.run_to_completion();
+    }
+    assert_eq!(
+        net.host(1).best_action(sid).unwrap(),
+        control_best2,
+        "post-migration think must match the unmigrated-control sequence"
+    );
+    // The paper's invariant on both sides of the wire.
+    assert!(net.host(0).quiescent(2), "ΣO = 0 on the source host");
+    assert!(net.host(1).quiescent(sid), "ΣO = 0 for the migrated session");
+    assert!(net.host(1).quiescent(11), "ΣO = 0 for the target's own load");
+    assert!(!net.host(0).contains(sid), "the source forgot its copy");
+}
+
+fn handshake_net() -> FakeHostNet {
+    let mut a = FakeHost::new(2, 4, LatencyScript::uniform(21, (1, 3), (2, 9)));
+    a.open(1, &env(201), spec(16, 201), 1.0).unwrap();
+    a.begin_think(1, 16).unwrap();
+    a.run_to_completion();
+    let b = FakeHost::new(2, 4, LatencyScript::uniform(22, (1, 3), (2, 9)));
+    FakeHostNet::new(vec![a, b])
+}
+
+fn serves(host: &mut FakeHost, sid: u64) {
+    host.begin_think(sid, 8).unwrap();
+    host.run_to_completion();
+    assert!(host.quiescent(sid), "ΣO must drain for session {sid}");
+}
+
+/// The fault matrix: a link severed (or a reply lost) at each of the
+/// three handshake steps either completes the move or cleanly aborts
+/// with the source unsealed — the session is never lost, at worst
+/// briefly duplicated or sealed-awaiting-repair.
+#[test]
+fn a_link_severed_at_every_handshake_step_never_loses_the_session() {
+    // (handshake rpc number, host whose link faults, reply-lost?)
+    let cases = [
+        (1u64, 0usize, false), // export request never arrives
+        (1, 0, true),          // export lands (seals!), reply lost
+        (2, 1, false),         // install request never arrives
+        (2, 1, true),          // install lands (duplicate!), reply lost
+        (3, 0, false),         // forget request never arrives
+        (3, 0, true),          // forget lands, reply lost
+    ];
+    for &(step, fault_host, reply_lost) in &cases {
+        let label = format!("step={step} host={fault_host} reply_lost={reply_lost}");
+        let mut net = handshake_net();
+        if reply_lost {
+            net.drop_reply_at(step);
+        } else {
+            net.script_at(step, ScriptEvent::Sever(fault_host));
+        }
+        let out = migrate_over(&mut net, 1, 0, 1);
+        match out {
+            HandshakeOutcome::Moved => panic!("{label}: fault was never exercised"),
+            HandshakeOutcome::Aborted(_) => {
+                // Steps 1 (reply lost) and 2: the source unsealed and
+                // serves again as if nothing happened.
+                assert!(!net.host(0).is_sealed(1), "{label}");
+                serves(net.host_mut(0), 1);
+                if step == 2 && reply_lost {
+                    // The install landed: duplicated, never lost. The
+                    // source stays authoritative (no override written).
+                    assert!(net.host(1).contains(1), "{label}");
+                    assert!(net.host(1).quiescent(1), "{label}");
+                } else {
+                    assert!(!net.host(1).contains(1), "{label}");
+                }
+            }
+            HandshakeOutcome::AbortedSealed(_, pending) => {
+                // Step 1 severed: the abort could not be delivered
+                // either. Heal and repair; the source serves again.
+                assert_eq!((step, reply_lost), (1, false), "{label}");
+                assert!(!pending.landed, "{label}");
+                net.heal_now(0);
+                net.resolve_seal(pending.host, pending.session, pending.landed).unwrap();
+                assert!(!net.host(0).is_sealed(1), "{label}");
+                serves(net.host_mut(0), 1);
+            }
+            HandshakeOutcome::MovedSealed(pending) => {
+                // Step 3: the move happened; the target is authoritative
+                // and the sealed source copy is released by the retried
+                // resolution once the link heals.
+                assert_eq!(step, 3, "{label}");
+                assert!(pending.landed, "{label}");
+                assert!(net.host(1).contains(1), "{label}");
+                if !reply_lost {
+                    // The forget never arrived: the source copy is
+                    // sealed, refusing ops with the typed marker.
+                    let err = net.host_mut(0).begin_think(1, 4).unwrap_err();
+                    assert!(
+                        err.downcast_ref::<Recovering>().is_some(),
+                        "{label}: got {err:#}"
+                    );
+                    net.heal_now(0);
+                }
+                // Retry the pending resolution; a definitive "unknown
+                // session" (the forget had landed, reply lost) retires
+                // it just the same.
+                let _ = net.resolve_seal(pending.host, pending.session, pending.landed);
+                assert!(!net.host(0).contains(1), "{label}");
+                serves(net.host_mut(1), 1);
+            }
+        }
+    }
+}
+
+/// Golden-trace determinism of the fault layer itself: same hosts, same
+/// script ⇒ byte-identical event log.
+#[test]
+fn fake_host_net_event_log_is_golden() {
+    let run = |seed: u64| {
+        let mut a = FakeHost::new(1, 2, LatencyScript::uniform(seed, (1, 3), (2, 7)));
+        a.open(1, &env(seed), spec(12, seed), 1.0).unwrap();
+        a.begin_think(1, 12).unwrap();
+        a.run_to_completion();
+        let b = FakeHost::new(1, 2, LatencyScript::uniform(seed ^ 9, (1, 3), (2, 7)));
+        let mut net = FakeHostNet::new(vec![a, b]);
+        net.delay_at(2, 5);
+        net.drop_reply_at(3);
+        let _ = migrate_over(&mut net, 1, 0, 1);
+        net.sever_now(1);
+        net.heal_now(1);
+        let mut log = net.take_log();
+        // Fold in the hosts' own golden traces so the claim covers the
+        // scripted services, not just the message layer.
+        log.push(format!("host0-trace-lines={}", net.host_mut(0).svc().trace().len()));
+        log.push(format!("host1-trace-lines={}", net.host_mut(1).svc().trace().len()));
+        log
+    };
+    let first = run(31);
+    assert_eq!(first, run(31), "same seed ⇒ identical event log");
+    assert!(
+        first.iter().any(|l| l.contains("delay")) && first.iter().any(|l| l.contains("REPLY-LOST")),
+        "script must actually exercise delay and reply loss: {first:#?}"
+    );
+    assert_ne!(first, run(32), "different seeds script different runs");
+}
+
+// ---------------------------------------------------------------------
+// 2. Wire layer: the four host ops over the real dispatcher
+// ---------------------------------------------------------------------
+
+fn sharded(cap: Option<usize>) -> ShardedService {
+    ShardedService::start(ShardedConfig {
+        shards: 2,
+        shard: ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..ServiceConfig::default()
+        },
+        max_sessions_per_shard: cap,
+        ..ShardedConfig::default()
+    })
+}
+
+fn ok(line: &str) -> Json {
+    let v = Json::parse(line).expect("reply is valid json");
+    assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(true), "line: {line}");
+    assert_eq!(Json::parse(line).unwrap().render(), line, "stable round-trip: {line}");
+    v
+}
+
+fn err(line: &str) -> Json {
+    let v = Json::parse(line).expect("error replies are json");
+    assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false), "line: {line}");
+    assert!(v.get("error").and_then(|e| e.as_str()).is_some(), "line: {line}");
+    v
+}
+
+#[test]
+fn wire_export_import_install_roundtrip_between_services() {
+    let a = sharded(None);
+    let b = sharded(None);
+    let ha = a.handle();
+    let hb = b.handle();
+    let (line, _) =
+        handle_line(&ha, r#"{"op":"open","env":"garnet","seed":5,"sims":12,"rollout":8}"#);
+    let sid = ok(&line).get("session").unwrap().as_u64().unwrap();
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"think","session":{sid}}}"#));
+    assert_eq!(ok(&line).get("quiescent").unwrap().as_bool(), Some(true));
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"best","session":{sid}}}"#));
+    let best = ok(&line).get("action").unwrap().as_u64().unwrap();
+
+    // export: hex frame + seal
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"export","session":{sid}}}"#));
+    let v = ok(&line);
+    assert_eq!(v.get("session").unwrap().as_u64(), Some(sid));
+    let frame = v.get("image").unwrap().as_str().unwrap().to_string();
+    assert!(!frame.is_empty() && frame.len() % 2 == 0);
+    assert!(image_from_hex(&frame).is_ok(), "frame must decode");
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"think","session":{sid}}}"#));
+    let v = err(&line);
+    assert_eq!(v.get("recovering").and_then(|r| r.as_bool()), Some(true), "sealed: {line}");
+
+    // double export of a sealed session is a refusal, not a second seal
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"export","session":{sid}}}"#));
+    assert_eq!(err(&line).get("recovering").and_then(|r| r.as_bool()), Some(true));
+
+    // import on the second service: same id, same recommendation
+    let (line, _) = handle_line(&hb, &format!(r#"{{"op":"import","image":"{frame}"}}"#));
+    assert_eq!(ok(&line).get("session").unwrap().as_u64(), Some(sid));
+    let (line, _) = handle_line(&hb, &format!(r#"{{"op":"best","session":{sid}}}"#));
+    assert_eq!(ok(&line).get("action").unwrap().as_u64(), Some(best), "tree moved bit-for-bit");
+
+    // a duplicate import on the target is refused
+    let (line, _) = handle_line(&hb, &format!(r#"{{"op":"import","image":"{frame}"}}"#));
+    err(&line);
+
+    // resolve the seal: the source forgets, the target serves on
+    let (line, _) =
+        handle_line(&ha, &format!(r#"{{"op":"install","session":{sid},"landed":true}}"#));
+    let v = ok(&line);
+    assert_eq!(v.get("landed").unwrap().as_bool(), Some(true));
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"best","session":{sid}}}"#));
+    err(&line);
+    let (line, _) = handle_line(&hb, &format!(r#"{{"op":"think","session":{sid}}}"#));
+    assert_eq!(ok(&line).get("quiescent").unwrap().as_bool(), Some(true));
+    let (line, _) = handle_line(&hb, &format!(r#"{{"op":"close","session":{sid}}}"#));
+    assert_eq!(ok(&line).get("unobserved").unwrap().as_u64(), Some(0));
+}
+
+#[test]
+fn wire_unseal_after_refused_transfer_restores_service() {
+    let a = sharded(None);
+    let ha = a.handle();
+    let (line, _) = handle_line(&ha, r#"{"op":"open","env":"garnet","seed":9,"sims":8}"#);
+    let sid = ok(&line).get("session").unwrap().as_u64().unwrap();
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"export","session":{sid}}}"#));
+    ok(&line);
+    let (line, _) =
+        handle_line(&ha, &format!(r#"{{"op":"install","session":{sid},"landed":false}}"#));
+    assert_eq!(ok(&line).get("landed").unwrap().as_bool(), Some(false));
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"think","session":{sid}}}"#));
+    assert_eq!(ok(&line).get("quiescent").unwrap().as_bool(), Some(true), "unsealed: {line}");
+    // Unsealing an unsealed session stays a no-op.
+    let (line, _) =
+        handle_line(&ha, &format!(r#"{{"op":"install","session":{sid},"landed":false}}"#));
+    ok(&line);
+    let (line, _) = handle_line(&ha, &format!(r#"{{"op":"close","session":{sid}}}"#));
+    ok(&line);
+}
+
+#[test]
+fn wire_image_frame_failures_are_typed_and_nonfatal() {
+    let svc = sharded(None);
+    let h = svc.handle();
+    for (frame, needle) in [
+        ("abc", "odd hex length"),      // truncated mid-byte
+        ("zz", "non-hex byte"),         // not hex at all
+        ("00ff00", "magic"),            // valid hex, not a session image
+    ] {
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"import","image":"{frame}"}}"#));
+        let v = err(&line);
+        let msg = v.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains(needle), "frame {frame:?}: error {msg:?} should contain {needle:?}");
+    }
+    // A truncated *valid-hex* image is a typed store error, not a panic:
+    // export a real session and cut the frame.
+    let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet","seed":2,"sims":8}"#);
+    let sid = ok(&line).get("session").unwrap().as_u64().unwrap();
+    let (line, _) = handle_line(&h, &format!(r#"{{"op":"export","session":{sid}}}"#));
+    let frame = ok(&line).get("image").unwrap().as_str().unwrap().to_string();
+    let cut = &frame[..(frame.len() / 2) & !1usize];
+    let (line, _) = handle_line(&h, &format!(r#"{{"op":"import","image":"{cut}"}}"#));
+    err(&line);
+    // The dispatcher survives all of it.
+    let (line, _) = handle_line(&h, r#"{"op":"ping"}"#);
+    ok(&line);
+}
+
+#[test]
+fn wire_health_on_a_shard_host_reports_the_host_role() {
+    let svc = sharded(None);
+    let h = svc.handle();
+    let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet","seed":3,"sims":8}"#);
+    let sid = ok(&line).get("session").unwrap().as_u64().unwrap();
+    let (line, _) = handle_line(&h, r#"{"op":"health"}"#);
+    let v = ok(&line);
+    assert_eq!(v.get("role").unwrap().as_str(), Some("host"));
+    assert_eq!(v.get("shards").unwrap().as_u64(), Some(2));
+    assert_eq!(v.get("sessions_open").unwrap().as_u64(), Some(1));
+    let Some(Json::Arr(sessions)) = v.get("sessions") else {
+        panic!("host health must list sessions: {line}");
+    };
+    assert_eq!(sessions[0].get("id").unwrap().as_u64(), Some(sid));
+    assert_eq!(sessions[0].get("sealed").unwrap().as_bool(), Some(false));
+    // An export flips the health entry's sealed flag — the signal a
+    // restarted router uses to release copies stuck mid-hand-off.
+    let (line, _) = handle_line(&h, &format!(r#"{{"op":"export","session":{sid}}}"#));
+    ok(&line);
+    let (line, _) = handle_line(&h, r#"{"op":"health"}"#);
+    let v = ok(&line);
+    let Some(Json::Arr(sessions)) = v.get("sessions") else {
+        panic!("host health must list sessions: {line}");
+    };
+    assert_eq!(sessions[0].get("sealed").unwrap().as_bool(), Some(true));
+    let (line, _) =
+        handle_line(&h, &format!(r#"{{"op":"install","session":{sid},"landed":false}}"#));
+    ok(&line);
+    let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+    ok(&line);
+}
+
+// ---------------------------------------------------------------------
+// 3. Live TCP: router over two in-process shard-host services
+// ---------------------------------------------------------------------
+
+fn host_service(cap: Option<usize>) -> (ShardedService, TcpServer, String) {
+    let svc = ShardedService::start(ShardedConfig {
+        shards: 1,
+        shard: ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..ServiceConfig::default()
+        },
+        max_sessions_per_shard: cap,
+        ..ShardedConfig::default()
+    });
+    let server = TcpServer::bind(svc.handle(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    (svc, server, addr)
+}
+
+#[test]
+fn router_proxies_migrates_and_survives_a_killed_host() {
+    let (svc_a, srv_a, addr_a) = host_service(None);
+    let (svc_b, srv_b, addr_b) = host_service(None);
+    let router = Router::start(RouterConfig::new(vec![addr_a, addr_b])).unwrap();
+    let rh = router.handle();
+
+    // Open until host 0 holds two sessions (one to migrate away, one to
+    // observe the outage with) and host 1 holds one — placement is the
+    // pure ring function of the router-drawn id.
+    let mut sids = Vec::new();
+    for i in 0..64u64 {
+        let seed = 300 + i;
+        sids.push(rh.open(Box::new(env(seed)), spec(12, seed), opts(seed)).unwrap());
+        let on_host0 = sids.iter().filter(|&&s| rh.host_of(s) == 0).count();
+        let on_host1 = sids.iter().filter(|&&s| rh.host_of(s) == 1).count();
+        if on_host0 >= 2 && on_host1 >= 1 {
+            break;
+        }
+    }
+    let on0 = *sids.iter().find(|&&s| rh.host_of(s) == 0).expect("a session on host 0");
+    let on1 = *sids.iter().find(|&&s| rh.host_of(s) == 1).expect("a session on host 1");
+
+    let t = rh.think(on0, 12).unwrap();
+    assert!(t.quiescent, "ΣO = 0 over the proxied wire path");
+    rh.think(on1, 12).unwrap();
+    let best_before = rh.best_action(on0).unwrap();
+
+    // Cross-host live migration via the wire handshake.
+    let m = rh.migrate(on0, 1).unwrap();
+    assert!(m.moved);
+    assert_eq!((m.from, m.to), (0, 1));
+    assert_eq!(rh.host_of(on0), 1, "override must repoint routing");
+    assert_eq!(rh.best_action(on0).unwrap(), best_before, "tree crossed processes bit-for-bit");
+    let t2 = rh.think(on0, 12).unwrap();
+    assert!(t2.quiescent, "the migrated session keeps searching on host B");
+
+    // Metrics see both tiers.
+    let reports = rh.host_metrics().unwrap();
+    assert_eq!(reports.len(), 2);
+    assert!(reports.iter().all(|r| r.reachable));
+    assert_eq!(reports[1].metrics.migrations_in, 1);
+    assert_eq!(reports[0].metrics.migrations_out, 1);
+    let fleet = rh.metrics().unwrap();
+    assert_eq!(fleet.hosts, 2);
+    assert_eq!(fleet.host_unreachable, 0);
+
+    // Router health over the wire dispatcher.
+    let (line, _) = handle_line(&rh, r#"{"op":"health"}"#);
+    let v = ok(&line);
+    assert_eq!(v.get("role").unwrap().as_str(), Some("router"));
+    assert_eq!(v.get("hosts").unwrap().as_u64(), Some(2));
+
+    // Kill host A; its sessions go unreachable, host B keeps serving.
+    drop(srv_a);
+    drop(svc_a);
+    let mut dead = None;
+    for &s in &sids {
+        if s != on0 && rh.host_of(s) == 0 {
+            dead = Some(s);
+            break;
+        }
+    }
+    let dead = dead.expect("another session lived on host 0");
+    let e = rh.think(dead, 8).unwrap_err();
+    assert!(e.downcast_ref::<HostUnreachable>().is_some(), "got: {e:#}");
+    assert!(rh.host_unreachable() >= 1);
+    let t3 = rh.think(on0, 8).unwrap();
+    assert!(t3.quiescent, "the surviving host's sessions still serve");
+    let h = rh.health().unwrap();
+    assert!(!h.host_status[0].reachable);
+    assert!(h.host_status[1].reachable);
+    let fleet = rh.metrics().unwrap();
+    assert!(fleet.host_unreachable >= 1, "metrics must report the unreachable host");
+
+    rh.close(on0).unwrap();
+    rh.close(on1).unwrap();
+    drop(srv_b);
+    drop(svc_b);
+}
+
+/// Satellite regression: a `Busy` (or any refused) reply to an in-flight
+/// *remote* import must not leak the sealed source copy — the router
+/// aborts, the source unseals, and the session serves again.
+#[test]
+fn refused_remote_import_unseals_the_source() {
+    let (svc_a, _srv_a, addr_a) = host_service(None);
+    let (svc_b, _srv_b, addr_b) = host_service(Some(1));
+    // Fill host B to its cap directly.
+    let hb = svc_b.handle();
+    let filler = hb.open(Box::new(env(401)), spec(8, 401), opts(401)).unwrap();
+    let router = Router::start(RouterConfig::new(vec![addr_a, addr_b])).unwrap();
+    let rh = router.handle();
+    // Host B is full, so the router's open lands on host A.
+    let sid = rh.open(Box::new(env(402)), spec(12, 402), opts(402)).unwrap();
+    assert_eq!(rh.host_of(sid), 0);
+    rh.think(sid, 8).unwrap();
+    let e = rh.migrate(sid, 1).expect_err("full target must refuse the import");
+    assert!(e.downcast_ref::<Busy>().is_some(), "expected Busy, got: {e:#}");
+    let t = rh.think(sid, 8).unwrap();
+    assert!(t.quiescent, "refused remote import must leave the source serving");
+    assert_eq!(rh.host_of(sid), 0, "routing still points at the source");
+    rh.close(sid).unwrap();
+    hb.close(filler).unwrap();
+    drop(svc_a);
+}
+
+#[test]
+fn a_restarted_router_relearns_placement_and_id_floor() {
+    let (svc_a, _srv_a, addr_a) = host_service(None);
+    let (svc_b, _srv_b, addr_b) = host_service(None);
+    let first = Router::start(RouterConfig::new(vec![addr_a.clone(), addr_b.clone()])).unwrap();
+    let h1 = first.handle();
+    let sid = h1.open(Box::new(env(501)), spec(12, 501), opts(501)).unwrap();
+    h1.think(sid, 12).unwrap();
+    let to = 1 - h1.host_of(sid);
+    h1.migrate(sid, to).unwrap();
+    let best = h1.best_action(sid).unwrap();
+    drop(first); // the router dies; the hosts keep the sessions
+
+    let second = Router::start(RouterConfig::new(vec![addr_a, addr_b])).unwrap();
+    let h2 = second.handle();
+    assert_eq!(h2.host_of(sid), to, "override re-learned from health probes");
+    assert_eq!(h2.best_action(sid).unwrap(), best);
+    let fresh = h2.open(Box::new(env(502)), spec(8, 502), opts(502)).unwrap();
+    assert!(fresh > sid, "id floor resumes past live ids");
+    let t = h2.think(sid, 8).unwrap();
+    assert!(t.quiescent);
+    h2.close(fresh).unwrap();
+    h2.close(sid).unwrap();
+    drop(svc_a);
+    drop(svc_b);
+}
