@@ -10,8 +10,15 @@
 //! exponential backoff rather than treated as failures, and the summary
 //! reports how many retries the run absorbed.
 //!
+//! With `--data-dir PATH` (in-process mode), the run happens twice —
+//! memory-only, then durable on a WAL-backed service — and the summary
+//! reports both throughputs side by side, plus the server's write
+//! amplification counters (records per commit batch, full vs delta
+//! snapshot bytes).
+//!
 //! ```bash
 //! cargo run --release --example load_generator -- --clients 32 --sims 32
+//! cargo run --release --example load_generator -- --clients 32 --data-dir /tmp/lg-wal
 //! cargo run --release --example load_generator -- --addr 127.0.0.1:3771
 //! ```
 
@@ -21,7 +28,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 use wu_uct::service::json::Json;
-use wu_uct::service::{SearchService, ServiceConfig, TcpServer};
+use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, TcpServer};
 use wu_uct::util::cli::{usage, Args, OptSpec};
 
 /// Retry budget for one logical request: enough to ride out a live
@@ -41,6 +48,12 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "steps", help: "max env steps per episode", default: Some("30") },
         OptSpec { name: "exp-workers", help: "in-process: expansion workers", default: Some("2") },
         OptSpec { name: "workers", help: "in-process: simulation workers", default: Some("8") },
+        OptSpec {
+            name: "data-dir",
+            help: "in-process: run a second, durable pass (WAL under this dir, wiped first) \
+                   and report durable vs in-memory throughput side by side",
+            default: Some(""),
+        },
         OptSpec { name: "seed", help: "base seed", default: Some("0") },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
@@ -163,6 +176,151 @@ fn run_episode(addr: &str, env: &str, seed: u64, sims: u64, max_steps: u64) -> R
     Ok(stats)
 }
 
+/// Totals of one load pass.
+struct RunSummary {
+    label: &'static str,
+    ok: usize,
+    clients: usize,
+    elapsed: Duration,
+    reward: f64,
+    steps: u64,
+    thinks: u64,
+    reused: u64,
+    retries: u64,
+}
+
+impl RunSummary {
+    fn episodes_per_sec(&self) -> f64 {
+        self.ok as f64 / self.elapsed.as_secs_f64()
+    }
+
+    fn print(&self) {
+        let s = self;
+        println!(
+            "[{}] {}/{} episodes in {:.2?}: {:.1} episodes/s, {:.0} thinks/s, mean reward {:.2}, subtree reuse {:.0}%",
+            s.label,
+            s.ok,
+            s.clients,
+            s.elapsed,
+            s.episodes_per_sec(),
+            s.thinks as f64 / s.elapsed.as_secs_f64(),
+            if s.ok > 0 { s.reward / s.ok as f64 } else { 0.0 },
+            if s.steps > 0 { 100.0 * s.reused as f64 / s.steps as f64 } else { 0.0 },
+        );
+        println!(
+            "[{}] transient-retry absorption: {} busy/recovering replies retried with backoff \
+             ({:.2} per episode)",
+            s.label,
+            s.retries,
+            if s.ok > 0 { s.retries as f64 / s.ok as f64 } else { 0.0 },
+        );
+    }
+}
+
+/// Drive one full pass of concurrent episodes against `addr`.
+fn drive(
+    label: &'static str,
+    addr: &str,
+    clients: usize,
+    env: &str,
+    seed: u64,
+    sims: u64,
+    steps: u64,
+) -> RunSummary {
+    let start = Instant::now();
+    let results: Vec<Result<EpisodeStats>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let addr = addr.to_string();
+                let env = env.to_string();
+                scope.spawn(move || {
+                    run_episode(&addr, &env, seed.wrapping_add(c as u64 * 7919), sims, steps)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+    let elapsed = start.elapsed();
+    let mut sum = RunSummary {
+        label,
+        ok: 0,
+        clients,
+        elapsed,
+        reward: 0.0,
+        steps: 0,
+        thinks: 0,
+        reused: 0,
+        retries: 0,
+    };
+    for r in &results {
+        match r {
+            Ok(s) => {
+                sum.ok += 1;
+                sum.reward += s.reward;
+                sum.steps += s.steps;
+                sum.thinks += s.thinks;
+                sum.reused += s.reused;
+                sum.retries += s.retries;
+            }
+            Err(e) => eprintln!("[{label}] episode failed: {e:#}"),
+        }
+    }
+    sum
+}
+
+/// Print the server's own view of a pass (and, durable, its write
+/// amplification counters).
+fn print_server_metrics(label: &str, addr: &str) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut meta_retries = 0u64;
+    let m = request(&mut reader, &mut writer, r#"{"op":"metrics"}"#, &mut meta_retries)?;
+    println!(
+        "[{label}] server: {} thinks, {} sims, think p50 {:.1} ms / p99 {:.1} ms, sim-pool occupancy {:.0}%",
+        m.get("thinks").and_then(|v| v.as_u64()).unwrap_or(0),
+        m.get("sims").and_then(|v| v.as_u64()).unwrap_or(0),
+        m.get("think_ms_p50").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        m.get("think_ms_p99").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        100.0 * m.get("sim_occupancy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    );
+    let records = m.get("wal_records").and_then(|v| v.as_u64()).unwrap_or(0);
+    if records > 0 {
+        let batches = m.get("wal_batches").and_then(|v| v.as_u64()).unwrap_or(0);
+        println!(
+            "[{label}] durability: {records} wal records in {batches} commit batches \
+             ({:.1} records/fsync), {} B full images + {} B deltas",
+            if batches > 0 { records as f64 / batches as f64 } else { 0.0 },
+            m.get("snapshot_bytes_full").and_then(|v| v.as_u64()).unwrap_or(0),
+            m.get("snapshot_bytes_delta").and_then(|v| v.as_u64()).unwrap_or(0),
+        );
+    }
+    Ok(())
+}
+
+/// Start an in-process single-shard service (durable when `data_dir` is
+/// set) with its TCP front-end on an ephemeral port.
+fn start_in_process(
+    args: &Args,
+    seed: u64,
+    data_dir: Option<&str>,
+) -> Result<(ShardedService, TcpServer, String)> {
+    let service = ShardedService::start_durable(ShardedConfig {
+        shards: 1,
+        shard: ServiceConfig {
+            expansion_workers: args.usize("exp-workers")?.max(1),
+            simulation_workers: args.usize("workers")?.max(1),
+            seed,
+            ..ServiceConfig::default()
+        },
+        data_dir: data_dir.map(Into::into),
+        ..ShardedConfig::default()
+    })?;
+    let server = TcpServer::bind(service.handle(), "127.0.0.1:0")?;
+    let addr = server.local_addr().to_string();
+    Ok((service, server, addr))
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(argv.iter().map(|s| s.as_str()), &specs())?;
@@ -175,84 +333,45 @@ fn main() -> Result<()> {
     let sims = args.u64("sims")?.max(1);
     let steps = args.u64("steps")?.max(1);
     let seed = args.u64("seed")?;
+    let data_dir = args.str("data-dir")?.to_string();
 
-    // In-process service unless an external address was given. Keep the
-    // guards alive for the whole run.
-    let mut in_process: Option<(SearchService, TcpServer)> = None;
-    let addr = if args.str("addr")?.is_empty() {
-        let service = SearchService::start(ServiceConfig {
-            expansion_workers: args.usize("exp-workers")?.max(1),
-            simulation_workers: args.usize("workers")?.max(1),
-            seed,
-            ..ServiceConfig::default()
-        });
-        let server = TcpServer::bind(service.handle(), "127.0.0.1:0")?;
-        let addr = server.local_addr().to_string();
-        in_process = Some((service, server));
-        addr
-    } else {
-        args.str("addr")?.to_string()
-    };
+    // External server: one pass against it, whatever it is.
+    if !args.str("addr")?.is_empty() {
+        let addr = args.str("addr")?.to_string();
+        println!("driving {clients} concurrent episodes of {env} against {addr} ...");
+        let sum = drive("external", &addr, clients, &env, seed, sims, steps);
+        sum.print();
+        return print_server_metrics("external", &addr);
+    }
 
-    println!("driving {clients} concurrent episodes of {env} against {addr} ...");
-    let start = Instant::now();
-    let results: Vec<Result<EpisodeStats>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..clients)
-            .map(|c| {
-                let addr = addr.clone();
-                let env = env.clone();
-                scope.spawn(move || {
-                    run_episode(&addr, &env, seed.wrapping_add(c as u64 * 7919), sims, steps)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
-    });
-    let elapsed = start.elapsed();
+    // In-process: a memory-only pass, plus — with --data-dir — a durable
+    // pass on an identical service, reported side by side.
+    println!("driving {clients} concurrent episodes of {env} in-process ...");
+    let (mem_service, mem_server, mem_addr) = start_in_process(&args, seed, None)?;
+    let memory = drive("memory", &mem_addr, clients, &env, seed, sims, steps);
+    memory.print();
+    print_server_metrics("memory", &mem_addr)?;
+    drop((mem_service, mem_server));
 
-    let mut ok = 0usize;
-    let (mut reward, mut steps_total, mut thinks, mut reused, mut retries) =
-        (0.0, 0u64, 0u64, 0u64, 0u64);
-    for r in &results {
-        match r {
-            Ok(s) => {
-                ok += 1;
-                reward += s.reward;
-                steps_total += s.steps;
-                thinks += s.thinks;
-                reused += s.reused;
-                retries += s.retries;
-            }
-            Err(e) => eprintln!("episode failed: {e:#}"),
+    if !data_dir.is_empty() {
+        // A fair comparison starts empty: stale segments from a previous
+        // run would replay extra sessions into the measured service (and
+        // grow the dir without bound across runs).
+        let _ = std::fs::remove_dir_all(&data_dir);
+        let (service, server, addr) = start_in_process(&args, seed, Some(&data_dir))?;
+        let durable = drive("durable", &addr, clients, &env, seed, sims, steps);
+        durable.print();
+        print_server_metrics("durable", &addr)?;
+        drop((service, server));
+        if durable.episodes_per_sec() > 0.0 {
+            println!(
+                "side by side: memory {:.1} episodes/s vs durable {:.1} episodes/s \
+                 ({:.2}x durability overhead)",
+                memory.episodes_per_sec(),
+                durable.episodes_per_sec(),
+                memory.episodes_per_sec() / durable.episodes_per_sec(),
+            );
         }
     }
-    println!(
-        "{ok}/{clients} episodes in {elapsed:.2?}: {:.1} episodes/s, {:.0} thinks/s, mean reward {:.2}, subtree reuse {:.0}%",
-        ok as f64 / elapsed.as_secs_f64(),
-        thinks as f64 / elapsed.as_secs_f64(),
-        if ok > 0 { reward / ok as f64 } else { 0.0 },
-        if steps_total > 0 { 100.0 * reused as f64 / steps_total as f64 } else { 0.0 },
-    );
-    println!(
-        "transient-retry absorption: {retries} busy/recovering replies retried with backoff \
-         ({:.2} per episode)",
-        if ok > 0 { retries as f64 / ok as f64 } else { 0.0 },
-    );
-
-    // Server-side view of the same run.
-    let stream = TcpStream::connect(&addr)?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut meta_retries = 0u64;
-    let m = request(&mut reader, &mut writer, r#"{"op":"metrics"}"#, &mut meta_retries)?;
-    println!(
-        "server: {} thinks, {} sims, think p50 {:.1} ms / p99 {:.1} ms, sim-pool occupancy {:.0}%",
-        m.get("thinks").and_then(|v| v.as_u64()).unwrap_or(0),
-        m.get("sims").and_then(|v| v.as_u64()).unwrap_or(0),
-        m.get("think_ms_p50").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        m.get("think_ms_p99").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        100.0 * m.get("sim_occupancy").and_then(|v| v.as_f64()).unwrap_or(0.0),
-    );
-    drop(in_process);
     Ok(())
 }

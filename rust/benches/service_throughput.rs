@@ -17,8 +17,12 @@
 //! It is also the repo's **perf baseline recorder**: the run writes
 //! `BENCH_service_throughput.json` at the repository root — the headline
 //! cell (`{bench, config, sessions_per_sec, p50_ms, p99_ms}`) plus every
-//! swept cell and a store-codec snapshot/restore round-trip timing row,
-//! so the durability layer's serialization cost is tracked from day one.
+//! swept cell, a `durable` pair comparing full-image vs delta-snapshot
+//! write amplification (`bytes_per_think`, `fsyncs_per_think`, durable
+//! sessions/sec — the storage-engine acceptance bar is delta ≥ 3×
+//! smaller on the big-tree config) and a store-codec snapshot/restore
+//! round-trip timing row, so the durability layer's serialization cost
+//! is tracked from day one.
 
 use std::time::Instant;
 
@@ -117,6 +121,84 @@ fn cell_json(cell: &Cell, fleet: &str) -> Json {
         ("p99_ms", Json::Num(cell.p99_think_ms)),
         ("sim_occupancy", Json::Num(cell.sim_occupancy)),
         ("sims_stolen", Json::Num(cell.sims_stolen as f64)),
+    ])
+}
+
+/// One durable-mode cell: N concurrent sessions thinking repeatedly
+/// (no advances — the big-tree configuration, where the tree keeps
+/// growing while each think touches a shrinking fraction of it) against
+/// a real on-disk WAL with per-think snapshots. `full_every = 1` is
+/// full-image mode (the pre-delta behavior); a large `full_every` is
+/// delta mode. Records the durable write amplification the refactor
+/// exists to cut: `bytes_per_think`, `fsyncs_per_think`, and durable
+/// sessions/sec.
+fn run_durable_cell(
+    mode: &'static str,
+    full_every: u32,
+    sessions: usize,
+    thinks_per_session: u32,
+    sims_per_think: u32,
+) -> Json {
+    let dir = std::env::temp_dir().join(format!(
+        "wuuct-bench-durable-{}-{mode}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let service = ShardedService::start_durable(ShardedConfig {
+        shards: 1,
+        shard: ServiceConfig {
+            expansion_workers: 2,
+            simulation_workers: 8,
+            ..ServiceConfig::default()
+        },
+        data_dir: Some(dir.clone()),
+        snapshot_every: 1,
+        full_every,
+        ..ShardedConfig::default()
+    })
+    .expect("durable service start");
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..sessions {
+            let h = service.handle();
+            scope.spawn(move || {
+                let env = Box::new(Garnet::new(15, 3, 60, 0.0, s as u64));
+                let spec = SearchSpec {
+                    max_simulations: sims_per_think,
+                    rollout_limit: 10,
+                    max_depth: 12,
+                    seed: s as u64,
+                    ..SearchSpec::default()
+                };
+                let opts = SessionOptions { env_seed: s as u64, ..SessionOptions::default() };
+                let sid = h.open(env, spec, opts).expect("open");
+                for _ in 0..thinks_per_session {
+                    h.think(sid, 0).expect("think");
+                }
+                h.close(sid).expect("close");
+            });
+        }
+    });
+    let elapsed = start.elapsed().as_secs_f64();
+    let m = service.handle().metrics().expect("metrics");
+    drop(service);
+    let _ = std::fs::remove_dir_all(&dir);
+    let thinks = m.thinks.max(1) as f64;
+    let snapshot_bytes = m.snapshot_bytes_full + m.snapshot_bytes_delta;
+    obj([
+        ("bench", Json::Str("service_throughput_durable".into())),
+        ("mode", Json::Str(mode.into())),
+        ("config", Json::Str(format!("{sessions}x{thinks_per_session} full_every={full_every}"))),
+        ("sessions", Json::Num(sessions as f64)),
+        ("sessions_per_sec", Json::Num(sessions as f64 / elapsed)),
+        ("thinks_per_sec", Json::Num(m.thinks as f64 / elapsed)),
+        ("bytes_per_think", Json::Num(snapshot_bytes as f64 / thinks)),
+        ("fsyncs_per_think", Json::Num(m.wal_fsyncs as f64 / thinks)),
+        ("wal_records", Json::Num(m.wal_records as f64)),
+        ("wal_batches", Json::Num(m.wal_batches as f64)),
+        ("wal_fsyncs", Json::Num(m.wal_fsyncs as f64)),
+        ("snapshot_bytes_full", Json::Num(m.snapshot_bytes_full as f64)),
+        ("snapshot_bytes_delta", Json::Num(m.snapshot_bytes_delta as f64)),
     ])
 }
 
@@ -228,6 +310,30 @@ fn main() {
             _ => {}
         }
     }
+    // Durable mode: full-image snapshots (pre-refactor behavior) vs
+    // delta snapshots under group commit, on the big-tree configuration
+    // (8 sessions thinking repeatedly without advancing). The acceptance
+    // bar is delta-mode bytes_per_think ≥ 3× smaller than full mode.
+    let durable_thinks = if paper_scale() { 25 } else { 15 };
+    let durable_full = run_durable_cell("full", 1, 8, durable_thinks, sims);
+    println!("{}", durable_full.render());
+    let durable_delta = run_durable_cell("delta", 16, 8, durable_thinks, sims);
+    println!("{}", durable_delta.render());
+    let bpt = |row: &Json| {
+        row.get("bytes_per_think")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    if bpt(&durable_delta) > 0.0 {
+        println!(
+            "  durable write amplification: full {:.0} B/think vs delta {:.0} B/think \
+             ({:.1}x smaller)",
+            bpt(&durable_full),
+            bpt(&durable_delta),
+            bpt(&durable_full) / bpt(&durable_delta),
+        );
+    }
+
     let codec = codec_row();
     println!("{}", codec.render());
 
@@ -251,6 +357,7 @@ fn main() {
             Json::Str(if paper_scale() { "paper".into() } else { "quick".into() }),
         ),
         ("cells".to_string(), Json::Arr(records)),
+        ("durable".to_string(), Json::Arr(vec![durable_full, durable_delta])),
         ("snapshot_restore".to_string(), codec),
     ];
     let doc = Json::Obj(baseline);

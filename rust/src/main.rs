@@ -60,6 +60,11 @@ fn specs() -> Vec<OptSpec> {
             default: Some("1"),
         },
         OptSpec {
+            name: "full-every",
+            help: "serve: every Nth WAL snapshot is a full image, the rest are deltas (1 = all full)",
+            default: Some("8"),
+        },
+        OptSpec {
             name: "rebalance",
             help: "serve: auto-migrate sessions when shard occupancy skew exceeds this factor (0 = off)",
             default: Some("0"),
@@ -180,6 +185,7 @@ fn main() -> Result<()> {
             let max_sessions = args.usize("max-sessions")?;
             let data_dir = args.str("data-dir")?.to_string();
             let snapshot_every = args.u32("snapshot-every")?.max(1);
+            let full_every = args.u32("full-every")?.max(1);
             let rebalance_skew = args.f64("rebalance")?;
             let hosts_arg = args.str("hosts")?.to_string();
             if command == "serve" && !hosts_arg.is_empty() {
@@ -228,6 +234,7 @@ fn main() -> Result<()> {
                 steal: !args.flag("no-steal"),
                 data_dir: (!data_dir.is_empty()).then(|| data_dir.clone().into()),
                 snapshot_every,
+                full_every,
                 rebalance: (rebalance_skew > 0.0).then(|| wu_uct::service::RebalanceConfig {
                     max_skew: rebalance_skew.max(1.0),
                     ..wu_uct::service::RebalanceConfig::default()
@@ -252,7 +259,9 @@ fn main() -> Result<()> {
                 let recovered = service.handle().metrics()?.sessions_recovered;
                 println!(
                     "durable sessions: wal under {data_dir}/shard-*/, snapshot every \
-                     {snapshot_every} think(s), {recovered} session(s) recovered"
+                     {snapshot_every} think(s) (full image every {full_every} snapshot(s), \
+                     deltas between; group-commit fsync batching), {recovered} session(s) \
+                     recovered"
                 );
             }
             if rebalance_skew > 0.0 {

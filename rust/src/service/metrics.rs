@@ -94,10 +94,23 @@ pub struct ServiceMetrics {
     pub migrations_in: u64,
     /// Sessions exported to peer shards by live migration.
     pub migrations_out: u64,
-    /// Full session images written to the WAL (periodic + checkpoint).
+    /// Session images written to the WAL, full and delta together
+    /// (periodic + checkpoint).
     pub snapshots: u64,
     /// WAL records appended since boot (0 when memory-only).
     pub wal_records: u64,
+    /// Group-commit batches resolved (one fsync each); `wal_records ÷
+    /// wal_batches` is the mean batch size, the group-commit win.
+    pub wal_batches: u64,
+    /// Total fsync syscalls issued by the store (commit batches plus
+    /// segment starts, checkpoints and directory syncs).
+    pub wal_fsyncs: u64,
+    /// Bytes of full session images written to the WAL.
+    pub snapshot_bytes_full: u64,
+    /// Bytes of delta-encoded session images written to the WAL; the
+    /// write-amplification win is this staying far below what the same
+    /// snapshots would have cost as full images.
+    pub snapshot_bytes_delta: u64,
     /// Remote shard hosts behind this process (router tier only; 0 for a
     /// host or an unsharded service).
     pub hosts: usize,
@@ -150,6 +163,10 @@ impl ServiceMetrics {
             total.migrations_out += m.migrations_out;
             total.snapshots += m.snapshots;
             total.wal_records += m.wal_records;
+            total.wal_batches += m.wal_batches;
+            total.wal_fsyncs += m.wal_fsyncs;
+            total.snapshot_bytes_full += m.snapshot_bytes_full;
+            total.snapshot_bytes_delta += m.snapshot_bytes_delta;
             total.hosts += m.hosts;
             total.host_unreachable += m.host_unreachable;
             weighted_mean += m.think_ms_mean * m.thinks as f64;
@@ -234,6 +251,11 @@ mod tests {
             sims: 300,
             sims_stolen: 4,
             sims_shed: 7,
+            wal_records: 20,
+            wal_batches: 4,
+            wal_fsyncs: 6,
+            snapshot_bytes_full: 1000,
+            snapshot_bytes_delta: 150,
             think_ms_mean: 10.0,
             think_ms_p99: 50.0,
             exp_occupancy: 0.5,
@@ -248,6 +270,10 @@ mod tests {
             uptime: Duration::from_secs(20),
             shards: 1,
             thinks: 10,
+            wal_records: 5,
+            wal_batches: 1,
+            wal_fsyncs: 2,
+            snapshot_bytes_delta: 50,
             think_ms_mean: 30.0,
             think_ms_p99: 20.0,
             exp_occupancy: 0.1,
@@ -267,6 +293,11 @@ mod tests {
         assert_eq!(t.sims, 300);
         assert_eq!(t.sims_stolen, 4);
         assert_eq!(t.sims_shed, 7);
+        assert_eq!(t.wal_records, 25);
+        assert_eq!(t.wal_batches, 5);
+        assert_eq!(t.wal_fsyncs, 8);
+        assert_eq!(t.snapshot_bytes_full, 1000);
+        assert_eq!(t.snapshot_bytes_delta, 200);
         assert_eq!(t.uptime, Duration::from_secs(20));
         assert_eq!(t.expansion_workers, 4);
         assert_eq!(t.simulation_workers, 16);

@@ -38,10 +38,13 @@
 //!   (`wu-uct serve --hosts a:p,b:p`) that places sessions on hosts by
 //!   consistent hash and re-runs the live-migration handshake over the
 //!   wire;
-//! * [`crate::store`] — durability and migration underneath it all:
-//!   per-shard write-ahead session logs with crash recovery (`wu-uct
-//!   serve --data-dir`), checksummed session images, live migration and
-//!   the automatic occupancy rebalancer.
+//! * [`crate::store`] — the storage engine underneath it all, behind
+//!   the single [`crate::store::SessionStore`] interface the scheduler
+//!   speaks: per-shard group-commit write-ahead logs (replies held on
+//!   commit tickets, one fsync per batch) with crash recovery (`wu-uct
+//!   serve --data-dir`), checksummed session images with delta
+//!   snapshots (`--snapshot-every` / `--full-every`), live migration
+//!   and the automatic occupancy rebalancer.
 
 pub mod client;
 pub mod fair;

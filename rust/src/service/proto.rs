@@ -534,6 +534,10 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("migrations_out", Json::Num(m.migrations_out as f64)),
         ("snapshots", Json::Num(m.snapshots as f64)),
         ("wal_records", Json::Num(m.wal_records as f64)),
+        ("wal_batches", Json::Num(m.wal_batches as f64)),
+        ("wal_fsyncs", Json::Num(m.wal_fsyncs as f64)),
+        ("snapshot_bytes_full", Json::Num(m.snapshot_bytes_full as f64)),
+        ("snapshot_bytes_delta", Json::Num(m.snapshot_bytes_delta as f64)),
         ("hosts", Json::Num(m.hosts as f64)),
         ("host_unreachable", Json::Num(m.host_unreachable as f64)),
         ("sessions_per_sec", Json::Num(m.sessions_per_sec)),
@@ -574,6 +578,10 @@ pub fn metrics_from_json(v: &Json) -> ServiceMetrics {
         migrations_out: int("migrations_out"),
         snapshots: int("snapshots"),
         wal_records: int("wal_records"),
+        wal_batches: int("wal_batches"),
+        wal_fsyncs: int("wal_fsyncs"),
+        snapshot_bytes_full: int("snapshot_bytes_full"),
+        snapshot_bytes_delta: int("snapshot_bytes_delta"),
         hosts: int("hosts") as usize,
         host_unreachable: int("host_unreachable"),
         sessions_per_sec: num("sessions_per_sec"),
@@ -605,6 +613,10 @@ fn host_report_json(r: &HostReport) -> Json {
         ("sessions_recovered", Json::Num(m.sessions_recovered as f64)),
         ("migrations_in", Json::Num(m.migrations_in as f64)),
         ("migrations_out", Json::Num(m.migrations_out as f64)),
+        ("wal_batches", Json::Num(m.wal_batches as f64)),
+        ("wal_fsyncs", Json::Num(m.wal_fsyncs as f64)),
+        ("snapshot_bytes_full", Json::Num(m.snapshot_bytes_full as f64)),
+        ("snapshot_bytes_delta", Json::Num(m.snapshot_bytes_delta as f64)),
         ("think_ms_p99", Json::Num(m.think_ms_p99)),
     ])
 }
@@ -622,6 +634,10 @@ fn shard_metrics_json(m: &ServiceMetrics) -> Json {
         ("sessions_recovered", Json::Num(m.sessions_recovered as f64)),
         ("migrations_in", Json::Num(m.migrations_in as f64)),
         ("migrations_out", Json::Num(m.migrations_out as f64)),
+        ("wal_batches", Json::Num(m.wal_batches as f64)),
+        ("wal_fsyncs", Json::Num(m.wal_fsyncs as f64)),
+        ("snapshot_bytes_full", Json::Num(m.snapshot_bytes_full as f64)),
+        ("snapshot_bytes_delta", Json::Num(m.snapshot_bytes_delta as f64)),
         ("sim_occupancy", Json::Num(m.sim_occupancy)),
         ("pending_expansions", Json::Num(m.pending_expansions as f64)),
         ("pending_simulations", Json::Num(m.pending_simulations as f64)),
@@ -1009,6 +1025,11 @@ mod tests {
             sims: 300,
             hosts: 2,
             host_unreachable: 5,
+            wal_records: 40,
+            wal_batches: 6,
+            wal_fsyncs: 9,
+            snapshot_bytes_full: 2048,
+            snapshot_bytes_delta: 512,
             think_ms_p99: 7.25,
             sim_occupancy: 0.5,
             simulation_workers: 8,
@@ -1022,6 +1043,11 @@ mod tests {
         assert_eq!(back.sims, 300);
         assert_eq!(back.hosts, 2);
         assert_eq!(back.host_unreachable, 5);
+        assert_eq!(back.wal_records, 40);
+        assert_eq!(back.wal_batches, 6);
+        assert_eq!(back.wal_fsyncs, 9);
+        assert_eq!(back.snapshot_bytes_full, 2048);
+        assert_eq!(back.snapshot_bytes_delta, 512);
         assert_eq!(back.think_ms_p99, 7.25);
         assert_eq!(back.sim_occupancy, 0.5);
         assert_eq!(back.simulation_workers, 8);

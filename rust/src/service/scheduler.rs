@@ -41,8 +41,10 @@ use crate::mcts::wu_uct::workers::{Pool, Task, TaskResult};
 use crate::service::fair::FairQueue;
 use crate::service::metrics::{LatencyStats, ServiceMetrics};
 use crate::store::codec::{SessionImage, SessionMeta};
+use crate::store::engine::{SessionStore, StoreCounters};
 use crate::store::migrate::Recovering;
-use crate::store::wal::{Record, StoreConfig, Wal};
+use crate::store::wal::Recovery;
+use crate::store::Error as StoreError;
 
 /// Shared-pool sizing and defaults for one scheduler (one shard). Worker
 /// counts are clamped to ≥ 1 at start (a zero-capacity pool could never
@@ -196,6 +198,9 @@ pub(crate) enum SchedMsg {
     /// A peer shard parked stealable work on the shared queue; wake up
     /// and run a dispatch pass.
     Poke,
+    /// The store's committer made records durable through this sequence
+    /// (or failed — the scheduler checks): release held replies.
+    Durable(u64),
 }
 
 /// Cross-shard overflow queue of simulation tasks, tagged with the owning
@@ -220,6 +225,14 @@ impl StealQueue {
     }
 }
 
+/// Opens a shard's [`SessionStore`] and replays its recovery — built by
+/// the sharded service (the live [`crate::store::SessionEngine`] over a
+/// data dir) or by tests (the testkit's scripted store). The scheduler
+/// itself never touches `Wal` or the codec's WAL records: everything
+/// durable goes through the returned trait object.
+pub(crate) type StoreOpener =
+    Box<dyn FnOnce() -> Result<(Box<dyn SessionStore>, Recovery), StoreError> + Send>;
+
 /// How one scheduler participates in a sharded deployment. The default
 /// wiring (an unsharded [`SearchService`]) is shard 0 of 1, no stealing,
 /// no session cap.
@@ -231,9 +244,12 @@ pub(crate) struct ShardWiring {
     pub steal: Option<std::sync::Arc<StealQueue>>,
     /// Admission control: max concurrently-open sessions on this shard.
     pub max_sessions: Option<usize>,
-    /// Durability: this shard's write-ahead session log. `None` keeps
-    /// the shard memory-only (the pre-store behavior, bit for bit).
-    pub store: Option<StoreConfig>,
+    /// Durability: this shard's session store. `None` keeps the shard
+    /// memory-only (the pre-store behavior, bit for bit).
+    pub store: Option<StoreOpener>,
+    /// Tree-snapshot cadence in completed thinks per session (≥ 1; only
+    /// meaningful with a store).
+    pub snapshot_every: u32,
 }
 
 struct ThinkJob {
@@ -399,9 +415,34 @@ impl SearchService {
             steal: None,
             max_sessions: None,
             store: None,
+            snapshot_every: 1,
         };
         SearchService::start_shard(cfg, wiring, tx, rx)
             .expect("memory-only shard start is infallible")
+    }
+
+    /// Start an unsharded service on a caller-supplied [`SessionStore`]
+    /// — the injection seam the scripted store uses to prove group
+    /// commit against the *live* scheduler (replies held on tickets,
+    /// batches resolved at scripted sync points), and the embedding
+    /// point for custom storage backends.
+    pub fn start_with_store(
+        cfg: ServiceConfig,
+        snapshot_every: u32,
+        opener: impl FnOnce() -> Result<(Box<dyn SessionStore>, Recovery), StoreError>
+            + Send
+            + 'static,
+    ) -> Result<SearchService> {
+        let (tx, rx) = channel::<SchedMsg>();
+        let wiring = ShardWiring {
+            index: 0,
+            peers: vec![tx.clone()],
+            steal: None,
+            max_sessions: None,
+            store: Some(Box::new(opener)),
+            snapshot_every,
+        };
+        SearchService::start_shard(cfg, wiring, tx, rx)
     }
 
     /// Start one shard on pre-wired channels (the sharded service creates
@@ -412,14 +453,15 @@ impl SearchService {
     /// accepts its first request.
     pub(crate) fn start_shard(
         cfg: ServiceConfig,
-        wiring: ShardWiring,
+        mut wiring: ShardWiring,
         tx: Sender<SchedMsg>,
         rx: Receiver<SchedMsg>,
     ) -> Result<SearchService> {
-        let (wal, recovered) = match &wiring.store {
-            Some(store_cfg) => {
-                let (wal, recovery) = Wal::open(store_cfg)
-                    .with_context(|| format!("opening wal at {}", store_cfg.dir.display()))?;
+        let durable_configured = wiring.store.is_some();
+        let (store, recovered) = match wiring.store.take() {
+            Some(opener) => {
+                let (mut store, recovery) =
+                    opener().context("opening this shard's session store")?;
                 let mut sessions = Vec::with_capacity(recovery.sessions.len());
                 for rs in recovery.sessions {
                     let id = rs.image.session;
@@ -436,12 +478,18 @@ impl SearchService {
                     }
                     sessions.push(RecoveredParts { id, driver, meta });
                 }
-                (Some(wal), sessions)
+                // Held replies release when the committer reports a batch
+                // durable — through the scheduler's own inbox, so all
+                // reply logic stays on the scheduler thread.
+                let inbox = tx.clone();
+                store.set_commit_notifier(Box::new(move |seq| {
+                    let _ = inbox.send(SchedMsg::Durable(seq));
+                }));
+                (Some(store), sessions)
             }
             None => (None, Vec::new()),
         };
-        let snapshot_every =
-            wiring.store.as_ref().map(|s| s.snapshot_every.max(1)).unwrap_or(1);
+        let snapshot_every = wiring.snapshot_every.max(1);
         // A zero-capacity pool would gate dispatch() shut forever and hang
         // every think() caller; clamp rather than hand out a dead service.
         let n_exp = cfg.expansion_workers.max(1);
@@ -487,8 +535,10 @@ impl SearchService {
                 recovered: recovered.len() as u64,
                 migrations_in: 0,
                 migrations_out: 0,
-                snapshots: 0,
-                wal,
+                store,
+                durable_configured,
+                held: VecDeque::new(),
+                counters_cache: StoreCounters::default(),
                 snapshot_every,
                 think_latency: LatencyStats::default(),
                 started: Instant::now(),
@@ -553,14 +603,60 @@ struct Scheduler {
     /// Sessions imported from / exported to peer shards (migration).
     migrations_in: u64,
     migrations_out: u64,
-    /// Full session images appended to the WAL.
-    snapshots: u64,
-    /// This shard's write-ahead session log, when durable.
-    wal: Option<Wal>,
+    /// This shard's session store, when durable. The scheduler never
+    /// touches the WAL or codec directly — only this interface.
+    store: Option<Box<dyn SessionStore>>,
+    /// Whether a store was configured at start (`store` may have been
+    /// poisoned to `None` since; imports must still refuse rather than
+    /// silently admit memory-only sessions on a durable shard).
+    durable_configured: bool,
+    /// Replies parked on their record's commit ticket, ascending by
+    /// sequence; released when the committer reports the batch durable.
+    held: VecDeque<(u64, HeldReply)>,
+    /// Last-known store counters (survives poisoning, so metrics keep
+    /// reporting what was written before durability degraded).
+    counters_cache: StoreCounters,
     /// Snapshot cadence in completed thinks per session.
     snapshot_every: u32,
     think_latency: LatencyStats,
     started: Instant,
+}
+
+/// A reply whose op already executed in memory, parked until the record
+/// that makes it durable commits. Group commit means many of these
+/// resolve per fsync.
+enum HeldReply {
+    Open(Sender<Result<u64>>, u64),
+    Think(Sender<Result<ThinkReply>>, ThinkReply),
+    Advance(Sender<Result<AdvanceReply>>, AdvanceReply),
+    Close(Sender<Result<CloseReply>>, CloseReply),
+    Import(Sender<Result<u64>>, u64),
+    Forget(Sender<Result<()>>),
+}
+
+impl HeldReply {
+    fn deliver(self) {
+        match self {
+            HeldReply::Open(tx, v) => {
+                let _ = tx.send(Ok(v));
+            }
+            HeldReply::Think(tx, v) => {
+                let _ = tx.send(Ok(v));
+            }
+            HeldReply::Advance(tx, v) => {
+                let _ = tx.send(Ok(v));
+            }
+            HeldReply::Close(tx, v) => {
+                let _ = tx.send(Ok(v));
+            }
+            HeldReply::Import(tx, v) => {
+                let _ = tx.send(Ok(v));
+            }
+            HeldReply::Forget(tx) => {
+                let _ = tx.send(Ok(()));
+            }
+        }
+    }
 }
 
 /// [`TaskSink`] over the shared pools for one session: allocates
@@ -647,6 +743,7 @@ impl Scheduler {
                 }
             }
             self.dispatch();
+            self.flush_held();
             self.maybe_checkpoint();
         }
     }
@@ -660,13 +757,22 @@ impl Scheduler {
                 true
             }
             SchedMsg::Poke => true, // dispatch() after the drain pops steals
+            SchedMsg::Durable(_) => {
+                self.flush_held();
+                true
+            }
         }
     }
 
     fn handle_request(&mut self, req: Request) -> bool {
         match req {
             Request::Open { env, spec, opts, id, reply } => {
-                let _ = reply.send(self.do_open(env, spec, opts, id));
+                match self.do_open(env, spec, opts, id) {
+                    Ok((sid, seq)) => self.reply_or_hold(seq, HeldReply::Open(reply, sid)),
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
             }
             Request::Think { session, sims, reply } => {
                 match self.begin_think(session, sims, &reply) {
@@ -677,25 +783,39 @@ impl Scheduler {
                 }
             }
             Request::Advance { session, action, reply } => {
-                let _ = reply.send(self.do_advance(session, action));
+                match self.do_advance(session, action) {
+                    Ok((out, seq)) => self.reply_or_hold(seq, HeldReply::Advance(reply, out)),
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
             }
             Request::Best { session, reply } => {
                 let _ = reply.send(
                     self.idle_session(session).map(|s| s.driver.best_action()),
                 );
             }
-            Request::Close { session, reply } => {
-                let _ = reply.send(self.do_close(session));
-            }
+            Request::Close { session, reply } => match self.do_close(session) {
+                Ok((out, seq)) => self.reply_or_hold(seq, HeldReply::Close(reply, out)),
+                Err(e) => {
+                    let _ = reply.send(Err(e));
+                }
+            },
             Request::Export { session, reply } => {
                 let _ = reply.send(self.do_export(session));
             }
-            Request::Import { bytes, reply } => {
-                let _ = reply.send(self.do_import(bytes));
-            }
-            Request::Forget { session, reply } => {
-                let _ = reply.send(self.do_forget(session));
-            }
+            Request::Import { bytes, reply } => match self.do_import(bytes) {
+                Ok((sid, seq)) => self.reply_or_hold(seq, HeldReply::Import(reply, sid)),
+                Err(e) => {
+                    let _ = reply.send(Err(e));
+                }
+            },
+            Request::Forget { session, reply } => match self.do_forget(session) {
+                Ok(seq) => self.reply_or_hold(seq, HeldReply::Forget(reply)),
+                Err(e) => {
+                    let _ = reply.send(Err(e));
+                }
+            },
             Request::Unseal { session, reply } => {
                 let _ = reply.send(self.do_unseal(session));
             }
@@ -721,13 +841,15 @@ impl Scheduler {
         true
     }
 
+    /// Open a session; returns the id and, on a durable shard, the
+    /// commit sequence the caller's reply must wait for.
     fn do_open(
         &mut self,
         env: Box<dyn Env>,
         spec: SearchSpec,
         opts: SessionOptions,
         id: Option<u64>,
-    ) -> Result<u64> {
+    ) -> Result<(u64, Option<u64>)> {
         if let Some(limit) = self.shard.max_sessions {
             if self.sessions.len() >= limit {
                 self.rejected += 1;
@@ -767,13 +889,14 @@ impl Scheduler {
         self.fair.admit(id, opts.weight);
         self.sessions.insert(id, session);
         self.opened += 1;
-        if self.wal.is_some() {
+        let mut seq = None;
+        if self.store.is_some() {
             match self.image_of(id) {
-                Ok(image) => self.wal_append(&Record::Open { session: id, image }),
+                Ok(image) => seq = self.log(|s| s.log_open(id, &image)),
                 Err(e) => eprintln!("shard {}: open image failed: {e:#}", self.shard.index),
             }
         }
-        Ok(id)
+        Ok((id, seq))
     }
 
     /// Install a recovered or imported session under `id`.
@@ -797,9 +920,9 @@ impl Scheduler {
         );
     }
 
-    /// Encode the session's current image (requires quiescence, which an
-    /// idle session always has).
-    fn image_of(&self, sid: u64) -> Result<Vec<u8>> {
+    /// Capture the session's current image (requires quiescence, which
+    /// an idle session always has).
+    fn image_of(&self, sid: u64) -> Result<SessionImage> {
         let sess = self
             .sessions
             .get(&sid)
@@ -813,36 +936,110 @@ impl Scheduler {
             sims: sess.sims,
             steps: sess.steps,
         };
-        Ok(SessionImage::capture(sid, &sess.driver, meta)?.encode()?)
+        Ok(SessionImage::capture(sid, &sess.driver, meta)?)
     }
 
-    /// Append to the WAL, if durable. An append failure **poisons** the
-    /// log: continuing to write after a lost record would leave a log
-    /// whose replay hard-fails (an `Advance` with no `Open`, garbage
-    /// mid-segment), permanently bricking the data dir. Instead the
-    /// shard drops to memory-only serving and says so loudly — sessions
-    /// stay alive, durability degrades, and the on-disk log remains
-    /// replayable up to the failure point.
-    fn wal_append(&mut self, rec: &Record) {
-        if let Some(wal) = self.wal.as_mut() {
-            if let Err(e) = wal.append(rec) {
-                eprintln!(
-                    "shard {}: wal append failed ({e}); durability DISABLED for this \
-                     shard — serving memory-only from here on",
-                    self.shard.index
-                );
-                self.wal = None;
+    /// Run one logging verb against the store, if durable; returns the
+    /// commit sequence to hold the op's reply on. A logging failure
+    /// **poisons** the store: continuing to write after a lost record
+    /// would leave a log whose replay hard-fails (an `Advance` with no
+    /// `Open`, garbage mid-segment), permanently bricking the data dir.
+    /// Instead the shard drops to memory-only serving and says so loudly
+    /// — sessions stay alive, durability degrades, and the on-disk log
+    /// remains replayable up to the failure point.
+    fn log(
+        &mut self,
+        f: impl FnOnce(&mut dyn SessionStore) -> Result<crate::store::CommitTicket, StoreError>,
+    ) -> Option<u64> {
+        let store = self.store.as_deref_mut()?;
+        match f(store) {
+            Ok(ticket) => Some(ticket.seq()),
+            Err(e) => {
+                self.poison_store(&format!("store append failed ({e})"));
+                None
             }
         }
     }
 
+    /// Drop to memory-only serving and release everything parked on
+    /// commit tickets. Most ops already executed in memory and only
+    /// their durability is gone — exactly what degraded serving means —
+    /// so their replies deliver Ok. Held **imports** are the exception:
+    /// acking one tells the remote source to durably forget its copy,
+    /// and without our Open on disk a later crash here would lose the
+    /// session outright. Those are rolled back (uninstall) and refused,
+    /// so the source unseals and keeps serving — the pre-group-commit
+    /// refusal semantics, preserved.
+    fn poison_store(&mut self, why: &str) {
+        if let Some(store) = &self.store {
+            self.counters_cache = store.counters();
+        }
+        if self.store.take().is_some() {
+            eprintln!(
+                "shard {}: {why}; durability DISABLED for this shard — serving \
+                 memory-only from here on",
+                self.shard.index
+            );
+        }
+        for (_, held) in std::mem::take(&mut self.held) {
+            match held {
+                HeldReply::Import(tx, sid) => {
+                    // The reply never left, so the router cannot have
+                    // repointed anything at this copy yet; uninstalling
+                    // is unobservable except as the refusal.
+                    self.sessions.remove(&sid);
+                    self.fair.remove(sid);
+                    self.migrations_in = self.migrations_in.saturating_sub(1);
+                    let _ = tx.send(Err(anyhow!(
+                        "import refused: target could not log the session durably"
+                    )));
+                }
+                other => other.deliver(),
+            }
+        }
+    }
+
+    /// Park a reply until its record's batch is durable — or deliver
+    /// immediately when the op logged nothing (memory-only shard,
+    /// poisoned store, or a think that skipped its snapshot cadence).
+    fn reply_or_hold(&mut self, seq: Option<u64>, held: HeldReply) {
+        let durable = self.store.as_ref().map(|s| s.durable_seq()).unwrap_or(u64::MAX);
+        match seq {
+            Some(seq) if seq > durable => self.held.push_back((seq, held)),
+            _ => held.deliver(),
+        }
+    }
+
+    /// Release held replies the committer has made durable; observe a
+    /// commit failure and poison (which releases everything).
+    fn flush_held(&mut self) {
+        let Some(store) = &self.store else {
+            // Poisoned or memory-only: nothing can be (or stay) held.
+            for (_, held) in std::mem::take(&mut self.held) {
+                held.deliver();
+            }
+            return;
+        };
+        if let Some(e) = store.commit_error() {
+            self.poison_store(&format!("store commit failed ({e})"));
+            return;
+        }
+        let durable = store.durable_seq();
+        while self.held.front().is_some_and(|&(seq, _)| seq <= durable) {
+            let (_, held) = self.held.pop_front().expect("checked front");
+            held.deliver();
+        }
+    }
+
     /// Compact the log once the live segment outgrows its budget. Idle
-    /// sessions snapshot fresh; mid-think sessions cannot be imaged, so
-    /// the WAL carries their latest durable state forward from the old
-    /// segments — no global idle instant is required, and a perpetually
-    /// busy shard still compacts.
+    /// sessions with records since their last full image re-image fresh;
+    /// clean idle sessions (durable state already current) and mid-think
+    /// sessions (cannot be imaged) are carried forward by the store from
+    /// the old segments — no global idle instant is required, a
+    /// perpetually busy shard still compacts, and a quiet fleet rewrites
+    /// zero bytes.
     fn maybe_checkpoint(&mut self) {
-        if !self.wal.as_ref().is_some_and(|w| w.needs_checkpoint()) {
+        if !self.store.as_ref().is_some_and(|s| s.needs_checkpoint()) {
             return;
         }
         let mut ids: Vec<u64> = self.sessions.keys().copied().collect();
@@ -850,32 +1047,28 @@ impl Scheduler {
         let mut fresh = Vec::new();
         let mut carry = Vec::new();
         for id in ids {
-            if self.sessions[&id].thinking.is_some() {
-                carry.push(id);
-                continue;
-            }
-            match self.image_of(id) {
-                Ok(image) => fresh.push((id, image)),
-                Err(e) => {
-                    eprintln!("shard {}: checkpoint image failed: {e:#}", self.shard.index);
-                    return;
+            let idle = self.sessions[&id].thinking.is_none();
+            let dirty = self.store.as_ref().is_some_and(|s| s.dirty(id));
+            if idle && dirty {
+                match self.image_of(id) {
+                    Ok(image) => fresh.push((id, image)),
+                    Err(e) => {
+                        eprintln!(
+                            "shard {}: checkpoint image failed: {e:#}",
+                            self.shard.index
+                        );
+                        return;
+                    }
                 }
+            } else {
+                carry.push(id);
             }
         }
-        let count = fresh.len() as u64;
-        if let Some(wal) = self.wal.as_mut() {
-            match wal.checkpoint(fresh, &carry) {
-                Ok(_) => self.snapshots += count,
-                Err(e) => {
-                    // Same poisoning rationale as wal_append: a half-done
-                    // compaction must not keep accepting records.
-                    eprintln!(
-                        "shard {}: checkpoint failed ({e}); durability DISABLED for \
-                         this shard — serving memory-only from here on",
-                        self.shard.index
-                    );
-                    self.wal = None;
-                }
+        if let Some(store) = self.store.as_deref_mut() {
+            if let Err(e) = store.checkpoint(fresh, &carry) {
+                // Same poisoning rationale as log(): a half-done
+                // compaction must not keep accepting records.
+                self.poison_store(&format!("checkpoint failed ({e})"));
             }
         }
     }
@@ -890,7 +1083,12 @@ impl Scheduler {
     /// left (it would be silently lost on the target otherwise).
     fn do_export(&mut self, sid: u64) -> Result<Vec<u8>> {
         self.idle_session(sid)?.sealed = true;
-        let bytes = self.image_of(sid);
+        // Exports always materialize a *full* image regardless of the
+        // WAL's delta chains, so the wire format and the seal handshake
+        // are untouched by delta encoding.
+        let bytes = self
+            .image_of(sid)
+            .and_then(|img| img.encode().map_err(anyhow::Error::from));
         if bytes.is_err() {
             if let Some(sess) = self.sessions.get_mut(&sid) {
                 sess.sealed = false;
@@ -914,7 +1112,7 @@ impl Scheduler {
     /// session now that its image landed elsewhere. Sealed sessions are
     /// the expected case and cannot be mid-think (the seal blocks new
     /// thinks and was only granted at idleness).
-    fn do_forget(&mut self, sid: u64) -> Result<()> {
+    fn do_forget(&mut self, sid: u64) -> Result<Option<u64>> {
         let sess = self
             .sessions
             .get_mut(&sid)
@@ -925,12 +1123,11 @@ impl Scheduler {
         self.sessions.remove(&sid);
         self.fair.remove(sid);
         self.migrations_out += 1;
-        self.wal_append(&Record::Close { session: sid });
-        Ok(())
+        Ok(self.log(|s| s.log_close(sid)))
     }
 
     /// Migration target half: decode, admit and install.
-    fn do_import(&mut self, bytes: Vec<u8>) -> Result<u64> {
+    fn do_import(&mut self, bytes: Vec<u8>) -> Result<(u64, Option<u64>)> {
         if let Some(limit) = self.shard.max_sessions {
             if self.sessions.len() >= limit {
                 self.rejected += 1;
@@ -945,30 +1142,28 @@ impl Scheduler {
         let meta = image.meta;
         let driver = image.into_driver(crate::service::proto::make_env)?;
         // On a durable shard the Open must be on disk *before* the
-        // import is acknowledged: the source forgets (durably) as soon
-        // as we reply Ok, so a swallowed append failure here would let
-        // a crash lose the session outright — the one thing the
+        // import is acknowledged — which holding the reply on the commit
+        // ticket guarantees: the source forgets (durably) only after it
+        // sees our Ok, so a swallowed append failure here would let a
+        // crash lose the session outright — the one thing the
         // export→import→forget ordering exists to prevent. A refused
         // import is safe: the source unseals and keeps serving.
-        if self.shard.store.is_some() {
-            let Some(mut wal) = self.wal.take() else {
-                bail!("import refused: this shard's durability is disabled (wal poisoned)");
+        let mut seq = None;
+        if self.durable_configured {
+            let Some(store) = self.store.as_deref_mut() else {
+                bail!("import refused: this shard's durability is disabled (store poisoned)");
             };
-            if let Err(e) = wal.append(&Record::Open { session: id, image: bytes }) {
-                // Poisoning rationale as in wal_append; the wal stays
-                // taken (None), so the shard is memory-only from here.
-                eprintln!(
-                    "shard {}: wal append failed ({e}); durability DISABLED for this \
-                     shard — serving memory-only from here on",
-                    self.shard.index
-                );
-                bail!("import refused: target could not log the session durably");
+            match store.log_open_encoded(id, bytes, driver.tree()) {
+                Ok(ticket) => seq = Some(ticket.seq()),
+                Err(e) => {
+                    self.poison_store(&format!("store append failed ({e})"));
+                    bail!("import refused: target could not log the session durably");
+                }
             }
-            self.wal = Some(wal);
         }
         self.install(id, driver, meta);
         self.migrations_in += 1;
-        Ok(id)
+        Ok((id, seq))
     }
 
     /// Start a think; the reply is deferred until the budget drains.
@@ -1007,7 +1202,7 @@ impl Scheduler {
         Ok(())
     }
 
-    fn do_advance(&mut self, sid: u64, action: usize) -> Result<AdvanceReply> {
+    fn do_advance(&mut self, sid: u64, action: usize) -> Result<(AdvanceReply, Option<u64>)> {
         let sess = self.idle_session(sid)?;
         let out = sess.driver.advance(action)?;
         sess.steps += 1;
@@ -1018,22 +1213,25 @@ impl Scheduler {
             retained: out.retained,
             steps: sess.steps,
         };
-        self.wal_append(&Record::Advance { session: sid, action });
-        Ok(reply)
+        let seq = self.log(|s| s.log_advance(sid, action));
+        Ok((reply, seq))
     }
 
-    fn do_close(&mut self, sid: u64) -> Result<CloseReply> {
+    fn do_close(&mut self, sid: u64) -> Result<(CloseReply, Option<u64>)> {
         self.idle_session(sid)?; // reject while a think is in flight
         let sess = self.sessions.remove(&sid).expect("checked above");
         self.fair.remove(sid);
         self.closed += 1;
-        self.wal_append(&Record::Close { session: sid });
-        Ok(CloseReply {
-            thinks: sess.thinks,
-            sims: sess.sims,
-            steps: sess.steps,
-            unobserved: sess.driver.tree().total_unobserved(),
-        })
+        let seq = self.log(|s| s.log_close(sid));
+        Ok((
+            CloseReply {
+                thinks: sess.thinks,
+                sims: sess.sims,
+                steps: sess.steps,
+                unobserved: sess.driver.tree().total_unobserved(),
+            },
+            seq,
+        ))
     }
 
     /// The session, provided it exists, has no think in flight, and is
@@ -1221,27 +1419,32 @@ impl Scheduler {
         };
         // Durability: the think's search progress lives only in the
         // tree, so snapshot it on the configured cadence (the crash-loss
-        // window is at most `snapshot_every - 1` thinks of progress).
-        // The snapshot lands *before* the reply leaves the scheduler —
+        // window is at most `snapshot_every - 1` thinks of progress) —
+        // delta-encoded against the previous snapshot while the chain is
+        // short, full every `--full-every`-th time. The reply is held on
+        // the snapshot's commit ticket instead of a per-record fsync —
         // once the client has seen this think's recommendation, a crash
-        // must not roll the tree back behind it.
+        // must not roll the tree back behind it, but many sessions'
+        // snapshots now share one fsync.
         let snapshot_due =
-            self.wal.is_some() && sess.thinks % self.snapshot_every as u64 == 0;
+            self.store.is_some() && sess.thinks % self.snapshot_every as u64 == 0;
+        let mut seq = None;
         if snapshot_due {
             match self.image_of(sid) {
-                Ok(image) => {
-                    self.wal_append(&Record::Snapshot { session: sid, image });
-                    self.snapshots += 1;
-                }
+                Ok(image) => seq = self.log(|s| s.log_snapshot(sid, &image)),
                 Err(e) => {
                     eprintln!("shard {}: think snapshot failed: {e:#}", self.shard.index)
                 }
             }
         }
-        let _ = job.reply.send(Ok(reply));
+        self.reply_or_hold(seq, HeldReply::Think(job.reply, reply));
     }
 
-    fn snapshot(&self) -> ServiceMetrics {
+    fn snapshot(&mut self) -> ServiceMetrics {
+        if let Some(store) = &self.store {
+            self.counters_cache = store.counters();
+        }
+        let sc = self.counters_cache;
         let uptime = self.started.elapsed();
         let secs = uptime.as_secs_f64().max(1e-9);
         let (think_ms_mean, think_ms_p50, think_ms_p90, think_ms_p99) =
@@ -1260,8 +1463,12 @@ impl Scheduler {
             sessions_recovered: self.recovered,
             migrations_in: self.migrations_in,
             migrations_out: self.migrations_out,
-            snapshots: self.snapshots,
-            wal_records: self.wal.as_ref().map(|w| w.records_appended()).unwrap_or(0),
+            snapshots: sc.snapshots,
+            wal_records: sc.records,
+            wal_batches: sc.batches,
+            wal_fsyncs: sc.fsyncs,
+            snapshot_bytes_full: sc.snapshot_bytes_full,
+            snapshot_bytes_delta: sc.snapshot_bytes_delta,
             hosts: 0,
             host_unreachable: 0,
             sessions_per_sec: self.closed as f64 / secs,
@@ -1426,6 +1633,7 @@ mod tests {
             steal: None,
             max_sessions: Some(2),
             store: None,
+            snapshot_every: 1,
         };
         let cfg = ServiceConfig {
             expansion_workers: 1,

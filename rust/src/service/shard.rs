@@ -54,9 +54,10 @@ use crate::service::metrics::ServiceMetrics;
 use crate::service::placement::HashRing;
 use crate::service::scheduler::{
     AdvanceReply, Busy, CloseReply, SchedMsg, SearchService, ServiceConfig, ServiceHandle,
-    SessionOptions, ShardWiring, StealQueue, ThinkReply,
+    SessionOptions, ShardWiring, StealQueue, StoreOpener, ThinkReply,
 };
 use crate::service::SessionApi;
+use crate::store::engine::{SessionEngine, SessionStore};
 use crate::store::migrate::{plan_step, Recovering};
 use crate::store::wal::StoreConfig;
 
@@ -95,6 +96,9 @@ pub struct ShardedConfig {
     pub data_dir: Option<PathBuf>,
     /// WAL snapshot cadence in completed thinks per session (≥ 1).
     pub snapshot_every: u32,
+    /// Every Nth WAL snapshot is a full image; the ones between are
+    /// delta-encoded against their predecessor (`1` = all full).
+    pub full_every: u32,
     /// WAL segment size before rotate + checkpoint.
     pub max_segment_bytes: u64,
     /// Automatic occupancy rebalancer; `None` disables it (explicit
@@ -112,6 +116,7 @@ impl Default for ShardedConfig {
             replicas: HashRing::DEFAULT_REPLICAS,
             data_dir: None,
             snapshot_every: 1,
+            full_every: 8,
             max_segment_bytes: 8 << 20,
             rebalance: None,
         }
@@ -517,10 +522,19 @@ impl ShardedService {
             let mut shard_cfg = cfg.shard.clone();
             shard_cfg.seed =
                 cfg.shard.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            let store = cfg.data_dir.as_ref().map(|dir| StoreConfig {
-                dir: dir.join(format!("shard-{index}")),
-                snapshot_every: cfg.snapshot_every.max(1),
-                max_segment_bytes: cfg.max_segment_bytes.max(1),
+            let store: Option<StoreOpener> = cfg.data_dir.as_ref().map(|dir| {
+                let store_cfg = StoreConfig {
+                    dir: dir.join(format!("shard-{index}")),
+                    snapshot_every: cfg.snapshot_every.max(1),
+                    full_every: cfg.full_every.max(1),
+                    max_segment_bytes: cfg.max_segment_bytes.max(1),
+                };
+                Box::new(move || {
+                    SessionEngine::open(&store_cfg)
+                        .map(|(engine, recovery)| {
+                            (Box::new(engine) as Box<dyn SessionStore>, recovery)
+                        })
+                }) as StoreOpener
             });
             let wiring = ShardWiring {
                 index,
@@ -528,6 +542,7 @@ impl ShardedService {
                 steal: steal.clone(),
                 max_sessions: cfg.max_sessions_per_shard,
                 store,
+                snapshot_every: cfg.snapshot_every.max(1),
             };
             let service = SearchService::start_shard(shard_cfg, wiring, tx, rx)?;
             handles.push(service.handle());

@@ -276,34 +276,84 @@ fn read_meta(r: &mut Reader) -> Result<SessionMeta, Error> {
 
 const NO_PARENT: u64 = u64::MAX;
 
+/// Serialize one node (every field except `O`, which is transient
+/// in-flight state — decode materializes `O = 0`). Shared by the full
+/// tree image and [`DeltaImage`]'s changed/fresh node lists so the two
+/// formats can never drift.
+fn write_node(w: &mut Writer, node: &Node) {
+    w.u64(node.parent.map(|p| p as u64).unwrap_or(NO_PARENT));
+    w.u64(node.action as u64);
+    w.u32(node.n);
+    w.f64(node.v);
+    w.f64(node.reward);
+    w.u8(node.terminal as u8);
+    w.u32(node.depth);
+    w.u32(node.untried.len() as u32);
+    for &a in &node.untried {
+        w.u64(a as u64);
+    }
+    match &node.state {
+        Some(s) => {
+            w.u8(1);
+            w.bytes(&s.0);
+        }
+        None => w.u8(0),
+    }
+    w.f64(node.vloss);
+    w.u32(node.vcount);
+    w.u32(node.children.len() as u32);
+    for &(action, child) in &node.children {
+        w.u64(action as u64);
+        w.u64(child as u64);
+    }
+}
+
+fn read_node(r: &mut Reader) -> Result<Node, Error> {
+    let parent = match r.u64("node parent")? {
+        NO_PARENT => None,
+        p => Some(p as usize),
+    };
+    let action = r.u64("node action")? as usize;
+    let mut node = Node::new(parent, action, 0);
+    node.n = r.u32("node N")?;
+    node.v = r.f64("node V")?;
+    node.reward = r.f64("node reward")?;
+    node.terminal = match r.u8("node terminal")? {
+        0 => false,
+        1 => true,
+        _ => return Err(Error::Corrupt { what: "node terminal flag" }),
+    };
+    node.depth = r.u32("node depth")?;
+    let n_untried = r.u32("untried count")? as usize;
+    if n_untried > r.remaining() / 8 {
+        return Err(Error::Corrupt { what: "untried count exceeds payload" });
+    }
+    for _ in 0..n_untried {
+        node.untried.push(r.u64("untried action")? as usize);
+    }
+    node.state = match r.u8("node state flag")? {
+        0 => None,
+        1 => Some(EnvState(r.bytes("node state")?.to_vec())),
+        _ => return Err(Error::Corrupt { what: "node state flag" }),
+    };
+    node.vloss = r.f64("node vloss")?;
+    node.vcount = r.u32("node vcount")?;
+    let n_children = r.u32("children count")? as usize;
+    if n_children > r.remaining() / 16 {
+        return Err(Error::Corrupt { what: "children count exceeds payload" });
+    }
+    for _ in 0..n_children {
+        let a = r.u64("child action")? as usize;
+        let c = r.u64("child id")? as usize;
+        node.children.push((a, c));
+    }
+    Ok(node)
+}
+
 fn write_tree(w: &mut Writer, tree: &Tree) {
     w.u32(tree.len() as u32);
     for (_, node) in tree.iter() {
-        w.u64(node.parent.map(|p| p as u64).unwrap_or(NO_PARENT));
-        w.u64(node.action as u64);
-        w.u32(node.n);
-        w.f64(node.v);
-        w.f64(node.reward);
-        w.u8(node.terminal as u8);
-        w.u32(node.depth);
-        w.u32(node.untried.len() as u32);
-        for &a in &node.untried {
-            w.u64(a as u64);
-        }
-        match &node.state {
-            Some(s) => {
-                w.u8(1);
-                w.bytes(&s.0);
-            }
-            None => w.u8(0),
-        }
-        w.f64(node.vloss);
-        w.u32(node.vcount);
-        w.u32(node.children.len() as u32);
-        for &(action, child) in &node.children {
-            w.u64(action as u64);
-            w.u64(child as u64);
-        }
+        write_node(w, node);
     }
 }
 
@@ -316,47 +366,217 @@ fn read_tree(r: &mut Reader) -> Result<Tree, Error> {
     }
     let mut nodes = Vec::with_capacity(count);
     for _ in 0..count {
-        let parent = match r.u64("node parent")? {
-            NO_PARENT => None,
-            p => Some(p as usize),
-        };
-        let action = r.u64("node action")? as usize;
-        let mut node = Node::new(parent, action, 0);
-        node.n = r.u32("node N")?;
-        node.v = r.f64("node V")?;
-        node.reward = r.f64("node reward")?;
-        node.terminal = match r.u8("node terminal")? {
-            0 => false,
-            1 => true,
-            _ => return Err(Error::Corrupt { what: "node terminal flag" }),
-        };
-        node.depth = r.u32("node depth")?;
-        let n_untried = r.u32("untried count")? as usize;
-        if n_untried > r.remaining() / 8 {
-            return Err(Error::Corrupt { what: "untried count exceeds payload" });
-        }
-        for _ in 0..n_untried {
-            node.untried.push(r.u64("untried action")? as usize);
-        }
-        node.state = match r.u8("node state flag")? {
-            0 => None,
-            1 => Some(EnvState(r.bytes("node state")?.to_vec())),
-            _ => return Err(Error::Corrupt { what: "node state flag" }),
-        };
-        node.vloss = r.f64("node vloss")?;
-        node.vcount = r.u32("node vcount")?;
-        let n_children = r.u32("children count")? as usize;
-        if n_children > r.remaining() / 16 {
-            return Err(Error::Corrupt { what: "children count exceeds payload" });
-        }
-        for _ in 0..n_children {
-            let a = r.u64("child action")? as usize;
-            let c = r.u64("child id")? as usize;
-            node.children.push((a, c));
-        }
-        nodes.push(node);
+        nodes.push(read_node(r)?);
     }
     Tree::from_nodes(nodes).map_err(|what| Error::Corrupt { what })
+}
+
+/// The canonical evolution of a session's *durable* tree across an
+/// `Advance` record. Recovery cannot replay the live driver's advance
+/// exactly without an environment (the driver re-snapshots the root from
+/// its env), so both sides of the delta protocol — the engine computing
+/// the next delta's base, and WAL replay materializing a chain — evolve
+/// the base through this one pure function instead. Any divergence
+/// between the canonical base and the live tree (e.g. the root's env
+/// snapshot) simply lands in the next delta's changed-node list, so the
+/// two sides only ever need to agree *with each other*, which sharing
+/// this function guarantees.
+pub fn advance_base_tree(tree: &mut Tree, action: usize) {
+    if tree.advance_root(action).is_none() {
+        // The live driver starts a fresh tree on an unexpanded action;
+        // the canonical base does the same (its root details are swept
+        // into the next delta).
+        *tree = Tree::new();
+    }
+}
+
+/// A session encoded *against its previous snapshot*: the small fields in
+/// full (env position, rng stream, spec, lifecycle counters — they are
+/// bytes, the tree is kilobytes), plus only the tree nodes that changed
+/// since the base and the nodes appended after it. Applying a delta to
+/// its base reproduces the full [`SessionImage`] bit-for-bit; chains
+/// replay base → delta → delta … with the same typed [`Error`] discipline
+/// and `Tree::from_nodes` re-validation as full images (fuzz-tested).
+///
+/// Correspondence contract: between two snapshots a tree only mutates
+/// nodes in place and appends new ones — node ids are stable — because
+/// every `Advance` (which re-roots and remaps ids) is logged as its own
+/// WAL record and folded into the base via [`advance_base_tree`] on both
+/// the writing and the replaying side.
+#[derive(Debug, Clone)]
+pub struct DeltaImage {
+    pub session: u64,
+    pub env_name: String,
+    /// Snapshot of the live root environment (small; always full).
+    pub env_state: EnvState,
+    pub spec: SearchSpec,
+    pub rng_state: (u64, u64),
+    pub meta: SessionMeta,
+    /// Node count of the base tree this delta was computed against.
+    pub base_len: u32,
+    /// Node count after applying (`>= base_len`).
+    pub total_len: u32,
+    /// Nodes `< base_len` whose content changed, ascending by id.
+    pub changed: Vec<(u32, Node)>,
+    /// Nodes appended after the base, ids `base_len..total_len` in order.
+    pub fresh: Vec<Node>,
+}
+
+impl DeltaImage {
+    pub const MAGIC: [u8; 4] = *b"WUD1";
+    pub const VERSION: u16 = 1;
+
+    /// Diff `cur` against the canonical base tree. Requires quiescence
+    /// (`ΣO = 0`, like every serialization) and id correspondence
+    /// (`cur.tree.len() >= base.len()`); the engine guarantees the
+    /// latter and falls back to a full image otherwise.
+    pub fn compute(base: &Tree, cur: &SessionImage) -> Result<DeltaImage, Error> {
+        let unobserved = cur.tree.total_unobserved();
+        if unobserved != 0 {
+            return Err(Error::NotQuiescent { unobserved });
+        }
+        if cur.tree.len() < base.len() {
+            return Err(Error::Corrupt { what: "delta base longer than current tree" });
+        }
+        let mut changed = Vec::new();
+        for id in 0..base.len() {
+            if base.node(id) != cur.tree.node(id) {
+                changed.push((id as u32, cur.tree.node(id).clone()));
+            }
+        }
+        let fresh = (base.len()..cur.tree.len())
+            .map(|id| cur.tree.node(id).clone())
+            .collect();
+        Ok(DeltaImage {
+            session: cur.session,
+            env_name: cur.env_name.clone(),
+            env_state: cur.env_state.clone(),
+            spec: cur.spec.clone(),
+            rng_state: cur.rng_state,
+            meta: cur.meta,
+            base_len: base.len() as u32,
+            total_len: cur.tree.len() as u32,
+            changed,
+            fresh,
+        })
+    }
+
+    /// Materialize the full session this delta describes by replaying it
+    /// onto the base tree. The result is re-validated structurally
+    /// (`Tree::from_nodes`), so a delta that passed its checksum but
+    /// describes an impossible tree is still a typed error, never a
+    /// panic.
+    pub fn apply(&self, base: &Tree) -> Result<SessionImage, Error> {
+        if base.len() != self.base_len as usize {
+            return Err(Error::Corrupt { what: "delta base length mismatch" });
+        }
+        let mut nodes: Vec<Node> = base.iter().map(|(_, n)| n.clone()).collect();
+        for (id, node) in &self.changed {
+            nodes[*id as usize] = node.clone();
+        }
+        nodes.extend(self.fresh.iter().cloned());
+        let tree = Tree::from_nodes(nodes).map_err(|what| Error::Corrupt { what })?;
+        Ok(SessionImage {
+            session: self.session,
+            env_name: self.env_name.clone(),
+            env_state: self.env_state.clone(),
+            spec: self.spec.clone(),
+            rng_state: self.rng_state,
+            meta: self.meta,
+            tree,
+        })
+    }
+
+    /// Encode to the framed, checksummed wire form (same envelope
+    /// discipline as [`SessionImage::encode`], distinct magic).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u64(self.session);
+        w.bytes(self.env_name.as_bytes());
+        w.bytes(&self.env_state.0);
+        write_spec(&mut w, &self.spec);
+        w.u64(self.rng_state.0);
+        w.u64(self.rng_state.1);
+        write_meta(&mut w, &self.meta);
+        w.u32(self.base_len);
+        w.u32(self.total_len);
+        w.u32(self.changed.len() as u32);
+        for (id, node) in &self.changed {
+            w.u32(*id);
+            write_node(&mut w, node);
+        }
+        for node in &self.fresh {
+            write_node(&mut w, node);
+        }
+        let payload = w.finish();
+        let mut out = Vec::with_capacity(payload.len() + 18);
+        out.extend_from_slice(&Self::MAGIC);
+        out.extend_from_slice(&Self::VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&checksum(&payload).to_le_bytes());
+        out
+    }
+
+    /// Decode and validate a delta. Structural impossibilities that a
+    /// checksum cannot catch (changed ids out of range or out of order,
+    /// counts past the payload, shrinking totals) are typed `Corrupt`
+    /// errors; the tree itself is re-validated at [`DeltaImage::apply`].
+    pub fn decode(bytes: &[u8]) -> Result<DeltaImage, Error> {
+        let payload = unframe(bytes, &Self::MAGIC, Self::VERSION, "delta image")?;
+        let mut r = Reader::new(payload);
+        let session = r.u64("delta session id")?;
+        let env_name = r.string("delta env name")?;
+        let env_state = EnvState(r.bytes("delta env snapshot")?.to_vec());
+        let spec = read_spec(&mut r)?;
+        let rng_state = (r.u64("delta rng state")?, r.u64("delta rng inc")?);
+        let meta = read_meta(&mut r)?;
+        let base_len = r.u32("delta base len")?;
+        let total_len = r.u32("delta total len")?;
+        if total_len < base_len {
+            return Err(Error::Corrupt { what: "delta shrinks the tree" });
+        }
+        let n_changed = r.u32("delta changed count")? as usize;
+        if n_changed > (base_len as usize).min(r.remaining() / 32 + 1) {
+            return Err(Error::Corrupt { what: "delta changed count exceeds base" });
+        }
+        let mut changed = Vec::with_capacity(n_changed);
+        let mut last_id: Option<u32> = None;
+        for _ in 0..n_changed {
+            let id = r.u32("delta changed id")?;
+            if id >= base_len {
+                return Err(Error::Corrupt { what: "delta changed id out of range" });
+            }
+            if last_id.is_some_and(|prev| id <= prev) {
+                return Err(Error::Corrupt { what: "delta changed ids out of order" });
+            }
+            last_id = Some(id);
+            changed.push((id, read_node(&mut r)?));
+        }
+        let n_fresh = (total_len - base_len) as usize;
+        if n_fresh > r.remaining() / 32 + 1 {
+            return Err(Error::Corrupt { what: "delta fresh count exceeds payload" });
+        }
+        let mut fresh = Vec::with_capacity(n_fresh);
+        for _ in 0..n_fresh {
+            fresh.push(read_node(&mut r)?);
+        }
+        if r.remaining() != 0 {
+            return Err(Error::Corrupt { what: "trailing bytes after delta payload" });
+        }
+        Ok(DeltaImage {
+            session,
+            env_name,
+            env_state,
+            spec,
+            rng_state,
+            meta,
+            base_len,
+            total_len,
+            changed,
+            fresh,
+        })
+    }
 }
 
 /// Bounds-checked little-endian reader over untrusted bytes: every
@@ -513,6 +733,83 @@ mod tests {
         nodes[0].children.push((1, 1));
         nodes[1].parent = Some(1); // self-parent mismatch
         assert!(Tree::from_nodes(nodes).is_err());
+    }
+
+    #[test]
+    fn delta_roundtrips_and_applies_to_its_base() {
+        let base_img = image_with_tree(small_tree());
+        // Evolve: mutate an existing node, append a fresh child.
+        let mut cur = base_img.clone();
+        cur.tree.node_mut(1).n += 2;
+        cur.tree.node_mut(1).v = 0.75;
+        cur.tree.node_mut(Tree::ROOT).n += 2;
+        let fresh = cur.tree.add_child(1, 9);
+        cur.tree.node_mut(fresh).n = 1;
+        cur.rng_state = (99, 101);
+        cur.meta.thinks = 5;
+
+        let delta = DeltaImage::compute(&base_img.tree, &cur).unwrap();
+        assert_eq!(delta.base_len, 2);
+        assert_eq!(delta.total_len, 3);
+        assert_eq!(delta.fresh.len(), 1);
+        // Root and node 1 both changed (n bumped / child list grew).
+        assert_eq!(delta.changed.len(), 2);
+
+        let bytes = delta.encode();
+        let back = DeltaImage::decode(&bytes).unwrap();
+        assert_eq!(back.encode(), bytes, "decode∘encode is the identity");
+
+        let applied = back.apply(&base_img.tree).unwrap();
+        assert_eq!(applied.encode().unwrap(), cur.encode().unwrap());
+        assert_eq!(applied.meta.thinks, 5);
+        assert_eq!(applied.rng_state, (99, 101));
+
+        // Applying against the wrong base is a typed error.
+        assert!(matches!(
+            back.apply(&applied.tree),
+            Err(Error::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn delta_of_unchanged_session_is_small() {
+        let img = image_with_tree(small_tree());
+        let delta = DeltaImage::compute(&img.tree, &img).unwrap();
+        assert!(delta.changed.is_empty());
+        assert!(delta.fresh.is_empty());
+        assert!(
+            delta.encode().len() < img.encode().unwrap().len(),
+            "an empty delta must undercut the full image"
+        );
+    }
+
+    #[test]
+    fn delta_compute_rejects_unobserved_and_shrunk_trees() {
+        let base = small_tree();
+        let mut cur = image_with_tree(base.clone());
+        cur.tree.node_mut(Tree::ROOT).o = 1;
+        assert!(matches!(
+            DeltaImage::compute(&base, &cur),
+            Err(Error::NotQuiescent { .. })
+        ));
+        let shrunk = image_with_tree(Tree::new());
+        assert!(matches!(
+            DeltaImage::compute(&base, &shrunk),
+            Err(Error::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn advance_base_tree_matches_advance_root_and_resets_on_miss() {
+        let mut live = small_tree();
+        let mut base = live.clone();
+        live.advance_root(0).expect("expanded action");
+        advance_base_tree(&mut base, 0);
+        assert_eq!(base.len(), live.len());
+        assert_eq!(base.node(Tree::ROOT).n, live.node(Tree::ROOT).n);
+        // Unexpanded action: fresh tree, never a panic.
+        advance_base_tree(&mut base, 42);
+        assert_eq!(base.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! The storage engine: one interface ([`SessionStore`]) between the
+//! scheduler and everything durable.
+//!
+//! PR 3 had the scheduler drive the [`Wal`] and the codec by hand —
+//! encode a full image here, fsync a record there. That coupling made
+//! two optimizations impossible to land cleanly: **delta snapshots**
+//! (someone must remember each session's previous snapshot to diff
+//! against) and **group commit** (someone must hold replies on commit
+//! tickets instead of blocking on per-record fsyncs). This module owns
+//! both behind one trait:
+//!
+//! * [`SessionStore`] — the verbs a shard needs: log an open / advance /
+//!   snapshot / close, ask whether a checkpoint is due, run one, and
+//!   observe durability (`durable_seq`, commit errors, counters). Every
+//!   logging verb returns a [`CommitTicket`]; the caller decides whether
+//!   to `wait()` (synchronous durability) or to park the op's reply
+//!   until the ticket's batch commits (the scheduler's path).
+//! * [`SessionEngine`] — the live implementation over a [`Wal`]: it
+//!   tracks each session's **canonical base tree** (the previous
+//!   snapshot with interleaved advances folded in via
+//!   [`advance_base_tree`]) and encodes each cadence snapshot as a
+//!   [`DeltaImage`] against it, writing a full image every
+//!   [`StoreConfig::full_every`]-th snapshot so chains stay short. It
+//!   also tracks which sessions are *dirty* (records since their last
+//!   full image) so checkpoints skip re-imaging sessions whose durable
+//!   state is already current.
+//! * The deterministic counterpart lives in
+//!   [`crate::testkit::durability::ScriptedStore`]: same trait, same
+//!   [`DeltaTracker`], but batches become durable only at scripted sync
+//!   points and a scripted crash loses exactly the unsynced suffix —
+//!   how the group-commit and delta claims are proven without timing.
+
+use std::collections::HashMap;
+
+use crate::store::codec::{advance_base_tree, DeltaImage, SessionImage};
+use crate::store::wal::{
+    CheckpointOutcome, CommitTicket, Record, Recovery, StoreConfig, Wal,
+};
+use crate::store::Error;
+use crate::tree::Tree;
+
+/// Cumulative storage counters, surfaced as `ServiceMetrics`'
+/// `wal_records` / `wal_batches` / `wal_fsyncs` /
+/// `snapshot_bytes_full` / `snapshot_bytes_delta` so write amplification
+/// and batch sizes are observable in production.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StoreCounters {
+    /// Records appended (open/advance/snapshot/delta/close + checkpoint
+    /// rewrites).
+    pub records: u64,
+    /// Group-commit batches resolved (one fsync each; records ÷ batches
+    /// is the mean batch size).
+    pub batches: u64,
+    /// Total fsync syscalls (batches plus segment/checkpoint/directory
+    /// syncs).
+    pub fsyncs: u64,
+    /// Session images appended, full and delta together.
+    pub snapshots: u64,
+    /// Bytes of full session images written.
+    pub snapshot_bytes_full: u64,
+    /// Bytes of delta images written (the write-amplification win is
+    /// `snapshot_bytes_delta` ≪ what those snapshots would have cost as
+    /// full images).
+    pub snapshot_bytes_delta: u64,
+}
+
+/// The storage verbs one scheduler shard speaks. Implementations:
+/// [`SessionEngine`] (live, disk-backed) and the testkit's
+/// `ScriptedStore` (in-memory, script-controlled batch boundaries).
+pub trait SessionStore: Send {
+    /// Durably admit a session: a full image, freshly captured.
+    fn log_open(&mut self, session: u64, image: &SessionImage) -> Result<CommitTicket, Error>;
+
+    /// Durably admit an imported session whose encoded image is already
+    /// in hand (`tree` seeds the delta base without a re-decode).
+    fn log_open_encoded(
+        &mut self,
+        session: u64,
+        bytes: Vec<u8>,
+        tree: &Tree,
+    ) -> Result<CommitTicket, Error>;
+
+    /// One real environment step.
+    fn log_advance(&mut self, session: u64, action: usize) -> Result<CommitTicket, Error>;
+
+    /// One cadence snapshot; the store picks delta vs full.
+    fn log_snapshot(&mut self, session: u64, image: &SessionImage) -> Result<CommitTicket, Error>;
+
+    /// The session left this shard (closed or migrated away).
+    fn log_close(&mut self, session: u64) -> Result<CommitTicket, Error>;
+
+    /// Whether the log has outgrown its budget and wants compaction.
+    fn needs_checkpoint(&self) -> bool {
+        false
+    }
+
+    /// Whether the session has records since its last full image — if
+    /// not, a checkpoint can carry its durable state forward instead of
+    /// re-imaging it.
+    fn dirty(&self, session: u64) -> bool;
+
+    /// Compact: `fresh` sessions are re-imaged from the supplied
+    /// captures; `carry` sessions (mid-think, or clean) have their
+    /// durable state materialized forward from the existing log.
+    fn checkpoint(
+        &mut self,
+        fresh: Vec<(u64, SessionImage)>,
+        carry: &[u64],
+    ) -> Result<CheckpointOutcome, Error>;
+
+    /// Highest record sequence known durable.
+    fn durable_seq(&self) -> u64;
+
+    /// A commit (fsync) failure, if one happened — the owner must poison
+    /// the store and release anything held on its tickets.
+    fn commit_error(&self) -> Option<String>;
+
+    /// Install the callback fired after every durable batch (the
+    /// scheduler wires it to its inbox to release held replies).
+    fn set_commit_notifier(&mut self, notifier: Box<dyn Fn(u64) + Send>);
+
+    fn counters(&self) -> StoreCounters;
+}
+
+/// Per-session delta bookkeeping **and record construction**, shared by
+/// the live engine and the scripted store so the two can never drift:
+/// the canonical base tree each delta diffs against, the chain length
+/// since the last full image, the dirty flag, and the snapshot/byte
+/// counters the metrics read. Each logging verb returns the [`Record`]
+/// to append — the backends differ only in where the record goes.
+pub struct DeltaTracker {
+    full_every: u32,
+    sessions: HashMap<u64, Track>,
+    /// Session images produced (open + cadence + checkpoint re-images).
+    snapshots: u64,
+    /// Bytes of full images produced. Checkpoint *carry*
+    /// materializations are the WAL's own rewrites, not logged images —
+    /// they are deliberately excluded so write-amplification ratios
+    /// read from what the scheduler actually logged.
+    snapshot_bytes_full: u64,
+    /// Bytes of delta images produced.
+    snapshot_bytes_delta: u64,
+}
+
+struct Track {
+    /// The previous snapshot's tree with interleaved advances folded in
+    /// ([`advance_base_tree`]) — exactly what replay will reconstruct as
+    /// this session's state when the next delta record is reached.
+    base: Tree,
+    /// Delta records since the last full image.
+    chain_len: u32,
+    /// Records since the last full image (advances or deltas); clean
+    /// sessions can be carried through a checkpoint without re-imaging.
+    dirty: bool,
+}
+
+impl DeltaTracker {
+    pub fn new(full_every: u32) -> DeltaTracker {
+        DeltaTracker {
+            full_every: full_every.max(1),
+            sessions: HashMap::new(),
+            snapshots: 0,
+            snapshot_bytes_full: 0,
+            snapshot_bytes_delta: 0,
+        }
+    }
+
+    /// Seed from a boot recovery: bases resume from each session's
+    /// materialized image + replayed advances, and the chain is treated
+    /// as saturated so the *next* snapshot is a full image (old-segment
+    /// chains must not keep growing across restarts).
+    pub fn seed_from_recovery(&mut self, recovery: &Recovery) {
+        for rs in &recovery.sessions {
+            let mut base = rs.image.tree.clone();
+            for &action in &rs.advances {
+                advance_base_tree(&mut base, action);
+            }
+            self.sessions.insert(
+                rs.image.session,
+                Track { base, chain_len: self.full_every, dirty: true },
+            );
+        }
+    }
+
+    /// Durably admit a session: encode the full image, count it, seed
+    /// the base.
+    pub fn open_record(
+        &mut self,
+        session: u64,
+        image: &SessionImage,
+    ) -> Result<Record, Error> {
+        let bytes = image.encode()?;
+        self.note_open_bytes(session, bytes.len() as u64, &image.tree);
+        Ok(Record::Open { session, image: bytes })
+    }
+
+    /// Admit an already-encoded image (imports), seeding the base from
+    /// the caller's decoded tree.
+    pub fn open_record_encoded(&mut self, session: u64, bytes: Vec<u8>, tree: &Tree) -> Record {
+        self.note_open_bytes(session, bytes.len() as u64, tree);
+        Record::Open { session, image: bytes }
+    }
+
+    fn note_open_bytes(&mut self, session: u64, bytes: u64, tree: &Tree) {
+        self.snapshots += 1;
+        self.snapshot_bytes_full += bytes;
+        self.sessions
+            .insert(session, Track { base: tree.clone(), chain_len: 0, dirty: false });
+    }
+
+    /// One environment step: fold it into the canonical base exactly as
+    /// replay will.
+    pub fn advance_record(&mut self, session: u64, action: usize) -> Record {
+        if let Some(track) = self.sessions.get_mut(&session) {
+            advance_base_tree(&mut track.base, action);
+            track.dirty = true;
+        }
+        Record::Advance { session, action }
+    }
+
+    pub fn close_record(&mut self, session: u64) -> Record {
+        self.sessions.remove(&session);
+        Record::Close { session }
+    }
+
+    /// A checkpoint completed: fresh re-images restart their chains
+    /// clean (and are counted as produced full images); carried sessions
+    /// keep their advance-folded base — the materialized snapshot the
+    /// WAL wrote for them equals it by construction — and restart their
+    /// chain too.
+    pub fn note_checkpoint(
+        &mut self,
+        fresh: &[(u64, SessionImage)],
+        fresh_bytes: u64,
+        carry: &[u64],
+    ) {
+        self.snapshots += fresh.len() as u64;
+        self.snapshot_bytes_full += fresh_bytes;
+        for (session, image) in fresh {
+            if let Some(track) = self.sessions.get_mut(session) {
+                track.chain_len = 0;
+                track.base = image.tree.clone();
+                track.dirty = false;
+            }
+        }
+        for session in carry {
+            if let Some(track) = self.sessions.get_mut(session) {
+                track.chain_len = 0;
+            }
+        }
+    }
+
+    pub fn dirty(&self, session: u64) -> bool {
+        self.sessions.get(&session).is_none_or(|t| t.dirty)
+    }
+
+    /// Merge this tracker's production counters into a counter snapshot.
+    pub fn fill_counters(&self, c: &mut StoreCounters) {
+        c.snapshots = self.snapshots;
+        c.snapshot_bytes_full = self.snapshot_bytes_full;
+        c.snapshot_bytes_delta = self.snapshot_bytes_delta;
+    }
+
+    /// Encode the cadence snapshot: a [`DeltaImage`] against the
+    /// canonical base while the chain is short (and the id
+    /// correspondence holds), a full image otherwise. Updates the base
+    /// and the byte counters either way.
+    pub fn snapshot_record(
+        &mut self,
+        session: u64,
+        image: &SessionImage,
+    ) -> Result<Record, Error> {
+        // Upsert: a session the tracker has never seen (its open image
+        // failed, or replay skipped it) snapshots as a full image — the
+        // WAL's snapshot records have always had upsert semantics.
+        let full_every = self.full_every;
+        let track = self.sessions.entry(session).or_insert_with(|| Track {
+            base: Tree::new(),
+            chain_len: full_every,
+            dirty: true,
+        });
+        let want_delta = self.full_every > 1
+            && track.chain_len + 1 < self.full_every
+            && image.tree.len() >= track.base.len();
+        self.snapshots += 1;
+        let record = if want_delta {
+            let delta = DeltaImage::compute(&track.base, image)?.encode();
+            track.chain_len += 1;
+            track.dirty = true;
+            self.snapshot_bytes_delta += delta.len() as u64;
+            Record::Delta { session, delta }
+        } else {
+            let full = image.encode()?;
+            track.chain_len = 0;
+            track.dirty = false;
+            self.snapshot_bytes_full += full.len() as u64;
+            Record::Snapshot { session, image: full }
+        };
+        track.base = image.tree.clone();
+        Ok(record)
+    }
+}
+
+/// The live storage engine: [`DeltaTracker`] + [`Wal`] group commit.
+pub struct SessionEngine {
+    wal: Wal,
+    tracker: DeltaTracker,
+}
+
+impl SessionEngine {
+    /// Open the shard's log, replay it, and seed the delta tracker from
+    /// what recovery materialized.
+    pub fn open(cfg: &StoreConfig) -> Result<(SessionEngine, Recovery), Error> {
+        let (wal, recovery) = Wal::open(cfg)?;
+        let mut tracker = DeltaTracker::new(cfg.full_every);
+        tracker.seed_from_recovery(&recovery);
+        Ok((SessionEngine { wal, tracker }, recovery))
+    }
+}
+
+impl SessionStore for SessionEngine {
+    fn log_open(
+        &mut self,
+        session: u64,
+        image: &SessionImage,
+    ) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.open_record(session, image)?;
+        self.wal.append(&rec)
+    }
+
+    fn log_open_encoded(
+        &mut self,
+        session: u64,
+        bytes: Vec<u8>,
+        tree: &Tree,
+    ) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.open_record_encoded(session, bytes, tree);
+        self.wal.append(&rec)
+    }
+
+    fn log_advance(&mut self, session: u64, action: usize) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.advance_record(session, action);
+        self.wal.append(&rec)
+    }
+
+    fn log_snapshot(
+        &mut self,
+        session: u64,
+        image: &SessionImage,
+    ) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.snapshot_record(session, image)?;
+        self.wal.append(&rec)
+    }
+
+    fn log_close(&mut self, session: u64) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.close_record(session);
+        self.wal.append(&rec)
+    }
+
+    fn needs_checkpoint(&self) -> bool {
+        self.wal.needs_checkpoint()
+    }
+
+    fn dirty(&self, session: u64) -> bool {
+        self.tracker.dirty(session)
+    }
+
+    fn checkpoint(
+        &mut self,
+        fresh: Vec<(u64, SessionImage)>,
+        carry: &[u64],
+    ) -> Result<CheckpointOutcome, Error> {
+        let mut encoded = Vec::with_capacity(fresh.len());
+        let mut fresh_bytes = 0u64;
+        for (session, image) in &fresh {
+            let bytes = image.encode()?;
+            fresh_bytes += bytes.len() as u64;
+            encoded.push((*session, bytes));
+        }
+        let outcome = self.wal.checkpoint(encoded, carry)?;
+        if !outcome.skipped {
+            self.tracker.note_checkpoint(&fresh, fresh_bytes, carry);
+        }
+        Ok(outcome)
+    }
+
+    fn durable_seq(&self) -> u64 {
+        self.wal.durable_seq()
+    }
+
+    fn commit_error(&self) -> Option<String> {
+        self.wal.commit_error()
+    }
+
+    fn set_commit_notifier(&mut self, notifier: Box<dyn Fn(u64) + Send>) {
+        self.wal.set_commit_notifier(notifier);
+    }
+
+    fn counters(&self) -> StoreCounters {
+        let (batches, fsyncs) = self.wal.commit_counters();
+        let mut c = StoreCounters {
+            records: self.wal.records_appended(),
+            batches,
+            fsyncs,
+            ..StoreCounters::default()
+        };
+        self.tracker.fill_counters(&mut c);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::env::Env as _;
+    use crate::mcts::common::SearchSpec;
+    use crate::store::codec::SessionMeta;
+    use crate::store::wal::read_segment;
+    use std::path::PathBuf;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("wuuct-engine-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn image(session: u64, n_root: u32) -> SessionImage {
+        let env = Garnet::new(8, 2, 10, 0.0, 3);
+        let mut tree = Tree::new();
+        tree.node_mut(Tree::ROOT).state = Some(env.snapshot());
+        tree.node_mut(Tree::ROOT).n = n_root;
+        SessionImage {
+            session,
+            env_name: "garnet".into(),
+            env_state: env.snapshot(),
+            spec: SearchSpec::default(),
+            rng_state: (1, 2),
+            meta: SessionMeta { env_seed: 3, ..SessionMeta::default() },
+            tree,
+        }
+    }
+
+    #[test]
+    fn full_every_caps_the_delta_chain() {
+        let dir = temp_dir("cadence");
+        let cfg = StoreConfig { full_every: 3, ..StoreConfig::new(&dir) };
+        let seg = dir.join("wal-00000001.log");
+        {
+            let (mut engine, _) = SessionEngine::open(&cfg).unwrap();
+            engine.log_open(1, &image(1, 0)).unwrap();
+            for i in 1..=5u32 {
+                engine.log_snapshot(1, &image(1, i)).unwrap();
+            }
+            let c = engine.counters();
+            assert_eq!(c.snapshots, 6);
+            assert!(c.snapshot_bytes_delta > 0);
+            assert!(c.snapshot_bytes_full > 0);
+        }
+        // Pattern: Open, Delta, Delta, Snapshot(full), Delta, Delta.
+        let tags: Vec<&str> = read_segment(&seg, true)
+            .unwrap()
+            .records
+            .iter()
+            .map(|r| match r {
+                Record::Open { .. } => "open",
+                Record::Delta { .. } => "delta",
+                Record::Snapshot { .. } => "full",
+                _ => "other",
+            })
+            .collect();
+        assert_eq!(tags, vec!["open", "delta", "delta", "full", "delta", "delta"]);
+        // And recovery replays the chain to the latest state.
+        let (engine, recovery) = SessionEngine::open(&cfg).unwrap();
+        assert_eq!(recovery.sessions.len(), 1);
+        assert_eq!(recovery.sessions[0].image.tree.node(Tree::ROOT).n, 5);
+        assert!(engine.dirty(1), "recovered chains count as dirty");
+    }
+
+    #[test]
+    fn full_every_one_never_writes_deltas() {
+        let dir = temp_dir("no-delta");
+        let cfg = StoreConfig::new(&dir); // full_every = 1
+        let (mut engine, _) = SessionEngine::open(&cfg).unwrap();
+        engine.log_open(1, &image(1, 0)).unwrap();
+        for i in 1..=3u32 {
+            engine.log_snapshot(1, &image(1, i)).unwrap();
+        }
+        let c = engine.counters();
+        assert_eq!(c.snapshot_bytes_delta, 0);
+        assert!(engine.dirty(99), "unknown sessions read as dirty");
+        assert!(!engine.dirty(1), "a fresh full image leaves the session clean");
+    }
+
+    #[test]
+    fn advance_between_snapshots_folds_into_the_base() {
+        // An advance remaps node ids; the next delta must still apply at
+        // replay because both sides fold the advance the same way.
+        let dir = temp_dir("advance-fold");
+        let cfg = StoreConfig { full_every: 8, ..StoreConfig::new(&dir) };
+        let env = Garnet::new(15, 3, 30, 0.0, 7);
+        let spec = SearchSpec { seed: 7, ..SearchSpec::default() };
+        let driver = crate::testkit::scripted_driver(
+            SearchSpec { max_simulations: 24, rollout_limit: 8, max_depth: 10, ..spec },
+            &env,
+            1,
+            2,
+            crate::testkit::LatencyScript::fixed(1, 3),
+        );
+        let meta = SessionMeta { env_seed: 7, ..SessionMeta::default() };
+        let img0 = SessionImage::capture(1, &driver, meta).unwrap();
+        {
+            let (mut engine, _) = SessionEngine::open(&cfg).unwrap();
+            engine.log_open(1, &img0).unwrap();
+            // Step the session, then snapshot the post-advance state as
+            // a delta.
+            let mut driver = img0
+                .clone()
+                .into_driver(crate::service::proto::make_env)
+                .unwrap();
+            let best = driver.best_action();
+            driver.advance(best).unwrap();
+            engine.log_advance(1, best).unwrap();
+            let mut meta2 = meta;
+            meta2.steps = 1;
+            let img1 = SessionImage::capture(1, &driver, meta2).unwrap();
+            engine.log_snapshot(1, &img1).unwrap();
+        }
+        let (_, recovery) = SessionEngine::open(&cfg).unwrap();
+        assert_eq!(recovery.sessions.len(), 1);
+        let rs = &recovery.sessions[0];
+        assert!(rs.advances.is_empty(), "the delta superseded the advance");
+        assert_eq!(rs.image.meta.steps, 1);
+        assert_eq!(rs.image.tree.total_unobserved(), 0);
+    }
+}

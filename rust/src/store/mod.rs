@@ -10,36 +10,55 @@
 //! * [`codec`] — a versioned, checksummed binary image of one session:
 //!   the arena tree (stats, width-capped child maps, per-node env
 //!   snapshots via the bit-exact `snapshot`/`restore` contract), the
-//!   session rng stream, spec and lifecycle counters. The cardinal rule:
-//!   **a session serializes only at quiescence** — `O = 0` everywhere —
-//!   because unobserved counts are transient in-flight state (Eqs. 5–6);
-//!   an image with `ΣO ≠ 0` would resurrect phantom in-flight rollouts
-//!   that no worker will ever complete. Callers either wait for
-//!   quiescence (idle sessions are always quiescent) or fold in-flight
-//!   tasks back to their incomplete-visit origins first
+//!   session rng stream, spec and lifecycle counters — plus the
+//!   [`codec::DeltaImage`] incremental form, which encodes only the
+//!   nodes changed or appended since the previous snapshot. The
+//!   cardinal rule: **a session serializes only at quiescence** —
+//!   `O = 0` everywhere — because unobserved counts are transient
+//!   in-flight state (Eqs. 5–6); an image with `ΣO ≠ 0` would resurrect
+//!   phantom in-flight rollouts that no worker will ever complete.
+//!   Callers either wait for quiescence (idle sessions are always
+//!   quiescent) or fold in-flight tasks back to their incomplete-visit
+//!   origins first
 //!   ([`crate::mcts::wu_uct::driver::SearchDriver::fold_in_flight`]).
-//! * [`wal`] — a per-shard write-ahead session log: `open`/`advance`/
-//!   `close` records plus periodic full snapshots, segment rotation with
-//!   checkpoint compaction, replay-on-boot. `wu-uct serve --data-dir`
-//!   wires it in; a killed server recovers every session and resumes.
+//! * [`wal`] — a per-shard write-ahead session log with **group
+//!   commit**: `open`/`advance`/`close` records plus periodic snapshots
+//!   (full or delta), appended to a commit queue whose per-shard
+//!   committer coalesces concurrent records into one fsync; segment
+//!   rotation with checkpoint compaction, replay-on-boot. `wu-uct serve
+//!   --data-dir` wires it in; a killed server recovers every session
+//!   and resumes.
+//! * [`engine`] — the [`engine::SessionStore`] interface the scheduler
+//!   speaks (the only caller-facing surface of the two modules above):
+//!   the live [`engine::SessionEngine`] picks delta vs full per
+//!   snapshot and tracks canonical bases; the testkit substitutes a
+//!   scripted store that counts fsyncs and loses unsynced batches at
+//!   scripted crash points.
 //! * [`migrate`] — the live-migration protocol (drain → serialize →
 //!   transfer → repoint the router's override table) and the pure
 //!   rebalance planner that moves sessions off overloaded shards.
+//!   Exports always materialize a *full* image, so the wire format and
+//!   the seal handshake are untouched by delta encoding.
 //!
 //! Every decode path returns a typed [`Error`] — corrupt, truncated or
 //! future-version input can never panic (fuzz-tested in
 //! `rust/tests/store.rs`).
 
 pub mod codec;
+pub mod engine;
 pub mod migrate;
 pub mod wal;
 
-pub use codec::{SessionImage, SessionMeta};
+pub use codec::{DeltaImage, SessionImage, SessionMeta};
+pub use engine::{SessionEngine, SessionStore, StoreCounters};
 pub use migrate::{
     migrate_over, plan_step, HandshakeOutcome, MigrationLink, PendingResolve, PlannedMove,
     Recovering,
 };
-pub use wal::{read_segment, Record, RecoveredSession, Recovery, SegmentRead, StoreConfig, Wal};
+pub use wal::{
+    read_segment, replay_records, CheckpointOutcome, CommitTicket, Record, RecoveredSession,
+    Recovery, SegmentRead, StoreConfig, Wal,
+};
 
 /// Typed failure of any store operation. Decoding untrusted bytes (disk
 /// corruption, torn writes, version skew) surfaces here — never as a

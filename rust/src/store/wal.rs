@@ -1,21 +1,31 @@
 //! Per-shard write-ahead session log: append `open`/`advance`/`close`
-//! records plus periodic full snapshots, rotate segments, replay on boot.
+//! records plus periodic snapshots (full or [`DeltaImage`]-encoded),
+//! rotate segments, replay on boot — with **group commit**.
 //!
 //! Each shard owns one log directory of numbered segment files
 //! (`wal-00000001.log`, …). Every record is framed `length (4) |
-//! FNV-1a-64 checksum (8) | bytes`, written and fsynced before the
-//! operation's reply leaves the scheduler, so a `SIGKILL` at any point
-//! loses at most the record being written. Recovery semantics:
+//! FNV-1a-64 checksum (8) | bytes`. [`Wal::append`] *enqueues*: the
+//! record is written to the live segment immediately (page cache) and a
+//! [`CommitTicket`] is returned; a per-shard **committer thread**
+//! coalesces every record that arrived while the previous `sync_data`
+//! was in flight into one fsync, and tickets resolve when their batch is
+//! durable. Callers that need synchronous durability `wait()` the
+//! ticket; the scheduler instead *holds the op's reply* on the ticket,
+//! so durable throughput is bounded by batch fsyncs, not per-record
+//! fsyncs. Recovery semantics:
 //!
-//! * a session's durable state is its **latest image** (the `Open`
-//!   record's fresh image, or the most recent periodic `Snapshot`) plus
-//!   every `Advance` replayed on top — cheap records keep the
-//!   environment position exact between snapshots, while search progress
-//!   since the last snapshot is the (bounded) crash-loss window;
+//! * a session's durable state is its **latest image** — the `Open`
+//!   record's fresh image, the most recent full `Snapshot`, or a
+//!   `Snapshot` base plus its [`Record::Delta`] chain — with every
+//!   `Advance` after it replayed on top. Delta chains fold through the
+//!   canonical base evolution ([`advance_base_tree`]) shared with the
+//!   engine that wrote them, so the two sides can never disagree about
+//!   what a delta's base looked like;
 //! * every boot starts a **fresh segment** — nothing is ever appended
 //!   after a possibly-torn tail; segment creation and deletion fsync the
-//!   directory, and an append failure is surfaced so the owner can stop
-//!   writing (the scheduler poisons the log and drops to memory-only);
+//!   directory, and an append or commit failure is surfaced so the owner
+//!   can stop writing (the scheduler poisons the log and drops to
+//!   memory-only);
 //! * a torn trailing record in the final segment — cut short, *or* a
 //!   full-length frame whose checksum fails at exactly end-of-file — is
 //!   the expected signature of a crash: tolerated (reported via
@@ -24,34 +34,50 @@
 //!   mismatches with records after them, and future-version segments are
 //!   hard typed errors — silently skipping them would resurrect stale
 //!   sessions;
-//! * [`Wal::checkpoint`] compacts: rotate to a new segment, snapshot
-//!   every idle session fresh, carry mid-think sessions' latest durable
-//!   image + advances forward from the old segments, then delete those
-//!   segments (only once everything new is synced; one data fsync for
-//!   the whole pass).
+//! * [`Wal::checkpoint`] compacts: rotate to a new segment, write the
+//!   fresh full snapshots the caller supplies, materialize every carried
+//!   session's base + delta chain + advances into a fresh full snapshot
+//!   (delta chains never survive a checkpoint), then delete the old
+//!   segments — all under the original single-data-fsync rule. A
+//!   checkpoint with nothing new to compact (no records since the last
+//!   one, no older segments) is skipped outright, so a quiet fleet
+//!   rewrites zero bytes.
 
 use std::fs::{self, File};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use crate::env::codec::Writer;
-use crate::store::codec::{Reader, SessionImage};
+use crate::store::codec::{advance_base_tree, DeltaImage, Reader, SessionImage};
 use crate::store::{checksum, Error};
+use crate::tree::Tree;
 
 /// Persistence knobs for one shard's log.
 #[derive(Debug, Clone)]
 pub struct StoreConfig {
     /// Segment directory (created if absent).
     pub dir: PathBuf,
-    /// Write a full session snapshot every N completed thinks (≥ 1).
+    /// Write a session snapshot every N completed thinks (≥ 1).
     pub snapshot_every: u32,
+    /// Every Nth snapshot is a full image; the ones between are deltas
+    /// against their predecessor. `1` disables deltas entirely (every
+    /// snapshot full — the pre-delta behavior); the cap bounds both
+    /// recovery replay cost and the blast radius of a damaged base.
+    pub full_every: u32,
     /// Rotate + checkpoint once the live segment exceeds this size.
     pub max_segment_bytes: u64,
 }
 
 impl StoreConfig {
     pub fn new(dir: impl Into<PathBuf>) -> StoreConfig {
-        StoreConfig { dir: dir.into(), snapshot_every: 1, max_segment_bytes: 8 << 20 }
+        StoreConfig {
+            dir: dir.into(),
+            snapshot_every: 1,
+            full_every: 1,
+            max_segment_bytes: 8 << 20,
+        }
     }
 }
 
@@ -64,6 +90,10 @@ pub enum Record {
     Advance { session: u64, action: usize },
     /// Periodic full image replacing everything before it.
     Snapshot { session: u64, image: Vec<u8> },
+    /// Periodic incremental image: an encoded [`DeltaImage`] against the
+    /// session's previous snapshot (full or delta) with any interleaved
+    /// advances folded into the base canonically.
+    Delta { session: u64, delta: Vec<u8> },
     /// Session left this shard (closed or migrated away).
     Close { session: u64 },
 }
@@ -74,6 +104,7 @@ impl Record {
             Record::Open { session, .. }
             | Record::Advance { session, .. }
             | Record::Snapshot { session, .. }
+            | Record::Delta { session, .. }
             | Record::Close { session } => *session,
         }
     }
@@ -100,6 +131,11 @@ impl Record {
                 w.u8(4);
                 w.u64(*session);
             }
+            Record::Delta { session, delta } => {
+                w.u8(5);
+                w.u64(*session);
+                w.bytes(delta);
+            }
         }
         w.finish()
     }
@@ -113,6 +149,7 @@ impl Record {
             2 => Record::Advance { session, action: r.u64("wal advance action")? as usize },
             3 => Record::Snapshot { session, image: r.bytes("wal snapshot image")?.to_vec() },
             4 => Record::Close { session },
+            5 => Record::Delta { session, delta: r.bytes("wal delta image")?.to_vec() },
             _ => return Err(Error::Corrupt { what: "unknown wal record tag" }),
         };
         if r.remaining() != 0 {
@@ -122,8 +159,8 @@ impl Record {
     }
 }
 
-/// One session materialized by replay: its latest durable image plus the
-/// advances logged after it.
+/// One session materialized by replay: its latest durable image (base +
+/// delta chain already folded) plus the advances logged after it.
 #[derive(Debug, Clone)]
 pub struct RecoveredSession {
     pub image: SessionImage,
@@ -147,21 +184,265 @@ const SEGMENT_VERSION: u16 = 1;
 const SEGMENT_HEADER: usize = SEGMENT_MAGIC.len() + 2;
 const FRAME_HEADER: usize = 4 + 8;
 
+/// Sequence/durability state shared between an appender, its committer,
+/// and every outstanding [`CommitTicket`]. The scripted store reuses it
+/// without a committer thread (it marks durability at scripted sync
+/// points), so tickets behave identically under test.
+pub struct CommitShared {
+    state: Mutex<CommitState>,
+    cv: Condvar,
+    /// The file the committer fsyncs; swapped at checkpoint rotation.
+    /// `None` for scripted stores (nothing to sync).
+    file: Mutex<Option<Arc<File>>>,
+}
+
+struct CommitState {
+    /// Sequence of the last record written (enqueued).
+    written: u64,
+    /// Sequence through which records are durable.
+    durable: u64,
+    /// Group-commit batches completed (one fsync each).
+    batches: u64,
+    /// fsync syscalls issued by the committer.
+    fsyncs: u64,
+    /// A commit failed; every outstanding and future ticket fails.
+    error: Option<String>,
+    shutdown: bool,
+    /// Called with the new durable sequence after every batch (and once
+    /// on failure, so the owner wakes and observes the poison).
+    notifier: Option<Box<dyn Fn(u64) + Send>>,
+}
+
+impl CommitShared {
+    /// Fresh shared state with no backing file — the scripted-store
+    /// configuration, where durability is declared by the script.
+    pub fn detached() -> Arc<CommitShared> {
+        Arc::new(CommitShared {
+            state: Mutex::new(CommitState {
+                written: 0,
+                durable: 0,
+                batches: 0,
+                fsyncs: 0,
+                error: None,
+                shutdown: false,
+                notifier: None,
+            }),
+            cv: Condvar::new(),
+            file: Mutex::new(None),
+        })
+    }
+
+    /// Register one enqueued record; returns its sequence number.
+    pub fn register_write(self: &Arc<Self>) -> CommitTicket {
+        let mut st = self.state.lock().unwrap();
+        st.written += 1;
+        let seq = st.written;
+        self.cv.notify_all();
+        CommitTicket { seq, shared: Arc::clone(self) }
+    }
+
+    /// Declare everything written so far durable (checkpoint completion
+    /// and single-owner scripted syncs), counting one batch + fsync when
+    /// any record actually became durable.
+    pub fn mark_written_durable(&self) {
+        let written = self.state.lock().unwrap().written;
+        self.mark_durable_through(written);
+    }
+
+    /// Declare records durable *through `seq` only* — the scripted
+    /// store's sync point, which must not resolve records that were
+    /// appended (by a concurrent owner) after the batch was snapshotted
+    /// but are still pending on the scripted disk.
+    pub fn mark_durable_through(&self, seq: u64) {
+        let mut st = self.state.lock().unwrap();
+        let target = seq.min(st.written);
+        if target > st.durable {
+            st.durable = target;
+            st.batches += 1;
+            st.fsyncs += 1;
+        }
+        let durable = st.durable;
+        if let Some(n) = &st.notifier {
+            n(durable);
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn durable_seq(&self) -> u64 {
+        self.state.lock().unwrap().durable
+    }
+
+    pub fn written_seq(&self) -> u64 {
+        self.state.lock().unwrap().written
+    }
+
+    /// `(batches, fsyncs)` completed so far.
+    pub fn batch_counters(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.batches, st.fsyncs)
+    }
+
+    pub fn set_notifier(&self, notifier: Box<dyn Fn(u64) + Send>) {
+        self.state.lock().unwrap().notifier = Some(notifier);
+    }
+
+    /// The commit failure, if one happened.
+    pub fn error(&self) -> Option<String> {
+        self.state.lock().unwrap().error.clone()
+    }
+
+    fn fail(&self, msg: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.error.is_none() {
+            st.error = Some(msg);
+        }
+        let durable = st.durable;
+        if let Some(n) = &st.notifier {
+            n(durable);
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block until everything written is durable (or a commit failed).
+    fn flush(&self) -> Result<(), Error> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(e) = &st.error {
+                return Err(commit_error(e));
+            }
+            if st.durable >= st.written {
+                return Ok(());
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn commit_error(msg: &str) -> Error {
+    Error::Io(std::io::Error::other(format!("wal commit failed: {msg}")))
+}
+
+/// A claim on one appended record: resolves when the group-commit batch
+/// containing it is durable on disk.
+pub struct CommitTicket {
+    seq: u64,
+    shared: Arc<CommitShared>,
+}
+
+impl CommitTicket {
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn is_durable(&self) -> bool {
+        self.shared.durable_seq() >= self.seq
+    }
+
+    /// Block until this record's batch is durable; a failed commit is a
+    /// typed error (the record may or may not be on disk — the owner
+    /// should poison the log either way).
+    pub fn wait(&self) -> Result<(), Error> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.durable >= self.seq {
+                return Ok(());
+            }
+            if let Some(e) = &st.error {
+                return Err(commit_error(e));
+            }
+            st = self.shared.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// The committer loop: whenever records are written past the durable
+/// watermark, snapshot the watermark, fsync once, and resolve everything
+/// up to it — records that arrive *during* the fsync ride the next batch.
+fn run_committer(shared: Arc<CommitShared>) {
+    loop {
+        let target = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.error.is_some() {
+                    // Poisoned: park until shutdown (tickets already fail).
+                    if st.shutdown {
+                        return;
+                    }
+                } else if st.written > st.durable {
+                    break;
+                } else if st.shutdown {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+            st.written
+        };
+        let file = shared.file.lock().unwrap().clone();
+        let result = match &file {
+            Some(f) => f.sync_data(),
+            None => Ok(()),
+        };
+        match result {
+            Ok(()) => {
+                let mut st = shared.state.lock().unwrap();
+                if target > st.durable {
+                    st.durable = target;
+                    st.batches += 1;
+                    st.fsyncs += 1;
+                }
+                let durable = st.durable;
+                if let Some(n) = &st.notifier {
+                    n(durable);
+                }
+                shared.cv.notify_all();
+            }
+            Err(e) => {
+                shared.fail(e.to_string());
+            }
+        }
+    }
+}
+
 /// The append handle over a shard's log directory.
 pub struct Wal {
     dir: PathBuf,
-    file: File,
+    file: Arc<File>,
     seg_index: u64,
     seg_bytes: u64,
     max_segment_bytes: u64,
     records: u64,
+    /// Records in the live segment appended since the last checkpoint
+    /// (or boot) — the quiet-fleet checkpoint skip looks at this.
+    records_since_checkpoint: u64,
+    /// Segments older than the live one exist (boot-time recovery
+    /// segments, or appends predating the last checkpoint's rotation);
+    /// cleared once a checkpoint purges them.
+    older_segments: bool,
+    /// fsyncs issued outside the committer (segment starts, checkpoints,
+    /// torn-tail repairs, directory syncs).
+    own_fsyncs: u64,
+    shared: Arc<CommitShared>,
+    committer: Option<JoinHandle<()>>,
+}
+
+/// What one [`Wal::checkpoint`] pass did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CheckpointOutcome {
+    /// Old segments deleted.
+    pub purged: usize,
+    /// Bytes written into the fresh segment (0 when skipped).
+    pub bytes_rewritten: u64,
+    /// Nothing to compact — no records since the last checkpoint and no
+    /// older segments; the pass wrote nothing and deleted nothing.
+    pub skipped: bool,
 }
 
 impl Wal {
     /// Open (creating the directory if needed), replay every segment,
-    /// and start a fresh segment for this process's appends. A torn tail
-    /// in the final segment (crash mid-write) is truncated away so it
-    /// cannot masquerade as mid-file corruption on a later boot.
+    /// and start a fresh segment (plus the committer thread) for this
+    /// process's appends. A torn tail in the final segment (crash
+    /// mid-write) is truncated away so it cannot masquerade as mid-file
+    /// corruption on a later boot.
     pub fn open(cfg: &StoreConfig) -> Result<(Wal, Recovery), Error> {
         fs::create_dir_all(&cfg.dir)?;
         let segments = list_segments(&cfg.dir)?;
@@ -192,15 +473,15 @@ impl Wal {
                 live.fold(rec)?;
             }
         }
-        for (session, (image, advances)) in live.0 {
-            let image = SessionImage::decode(&image)?;
-            if image.session != session {
-                return Err(Error::Corrupt { what: "wal record / image session mismatch" });
-            }
-            recovery.sessions.push(RecoveredSession { image, advances });
-        }
+        recovery.sessions = live.finish()?;
         let seg_index = segments.last().map(|&(i, _)| i + 1).unwrap_or(1);
-        let file = start_segment(&cfg.dir, seg_index)?;
+        let file = Arc::new(start_segment(&cfg.dir, seg_index)?);
+        let shared = CommitShared::detached();
+        *shared.file.lock().unwrap() = Some(Arc::clone(&file));
+        let committer = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || run_committer(shared))
+        };
         let wal = Wal {
             dir: cfg.dir.clone(),
             file,
@@ -208,57 +489,115 @@ impl Wal {
             seg_bytes: SEGMENT_HEADER as u64,
             max_segment_bytes: cfg.max_segment_bytes.max(1),
             records: 0,
+            records_since_checkpoint: 0,
+            older_segments: !segments.is_empty(),
+            own_fsyncs: 2, // segment header sync + directory sync
+            shared,
+            committer: Some(committer),
         };
         Ok((wal, recovery))
     }
 
-    /// Append one record, fsynced before returning.
-    pub fn append(&mut self, rec: &Record) -> Result<(), Error> {
-        self.append_inner(rec, true)
+    /// Enqueue one record on the commit queue: the frame is written to
+    /// the live segment immediately and the returned ticket resolves
+    /// when the committer's batch containing it is durable. A *write*
+    /// failure (the record may be torn on disk) is an immediate typed
+    /// error — the owner must poison the log.
+    pub fn append(&mut self, rec: &Record) -> Result<CommitTicket, Error> {
+        self.write_frame(rec, true)?;
+        Ok(self.shared.register_write())
     }
 
-    fn append_inner(&mut self, rec: &Record, sync: bool) -> Result<(), Error> {
+    /// Write one record's frame to the live segment without touching the
+    /// commit queue (checkpoint records are synced as one batch by the
+    /// checkpoint itself). Returns the frame length.
+    fn write_frame(&mut self, rec: &Record, count_since_checkpoint: bool) -> Result<u64, Error> {
         let bytes = rec.encode();
         let mut frame = Vec::with_capacity(FRAME_HEADER + bytes.len());
         frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
         frame.extend_from_slice(&checksum(&bytes).to_le_bytes());
         frame.extend_from_slice(&bytes);
-        self.file.write_all(&frame)?;
-        if sync {
-            self.file.sync_data()?;
-        }
+        // `impl Write for &File`: the owner writes through the shared
+        // handle while the committer fsyncs it.
+        let mut file: &File = &self.file;
+        file.write_all(&frame)?;
         self.seg_bytes += frame.len() as u64;
         self.records += 1;
-        Ok(())
+        if count_since_checkpoint {
+            self.records_since_checkpoint += 1;
+        }
+        Ok(frame.len() as u64)
     }
 
-    /// The live segment has outgrown its budget; the owner should
-    /// [`Wal::checkpoint`] at its next quiescent opportunity.
+    /// Block until every appended record is durable (or a commit failed).
+    pub fn flush(&self) -> Result<(), Error> {
+        self.shared.flush()
+    }
+
+    /// Highest record sequence known durable.
+    pub fn durable_seq(&self) -> u64 {
+        self.shared.durable_seq()
+    }
+
+    /// The committer's failure, if one happened (the owner should poison
+    /// the log: stop appending and fall back to memory-only serving).
+    pub fn commit_error(&self) -> Option<String> {
+        self.shared.error()
+    }
+
+    /// Install the callback the committer fires after every durable
+    /// batch (the scheduler wires it to its own inbox so held replies
+    /// release without polling).
+    pub fn set_commit_notifier(&self, notifier: Box<dyn Fn(u64) + Send>) {
+        self.shared.set_notifier(notifier);
+    }
+
+    /// `(batches, fsyncs)`: group-commit batches resolved by the
+    /// committer, and total fsync syscalls (committer batches plus
+    /// segment starts, checkpoints and directory syncs).
+    pub fn commit_counters(&self) -> (u64, u64) {
+        let (batches, fsyncs) = self.shared.batch_counters();
+        (batches, fsyncs + self.own_fsyncs)
+    }
+
+    /// The live segment has outgrown its budget *and* a checkpoint would
+    /// actually do something (records since the last pass, or boot-time
+    /// segments not yet compacted) — otherwise a large-but-quiet live
+    /// segment would re-trigger a no-op pass on every scheduler tick.
     pub fn needs_checkpoint(&self) -> bool {
         self.seg_bytes >= self.max_segment_bytes
+            && (self.records_since_checkpoint > 0 || self.older_segments)
     }
 
     /// Compact: rotate to a fresh segment, write `fresh` (one encoded
-    /// snapshot per idle session), carry forward the latest durable
-    /// state of the `carry` sessions (mid-think right now, so they
-    /// cannot be imaged — their last on-disk image + advances are copied
-    /// from the old segments instead; no global idle instant required),
-    /// sync, then delete every older segment. Returns how many old
-    /// segments were purged.
+    /// full snapshot per re-imaged session), materialize the latest
+    /// durable state of the `carry` sessions from the old segments
+    /// (base + delta chain folded into a fresh full snapshot, advances
+    /// re-appended — so delta chains never survive a checkpoint), sync
+    /// once, then delete every older segment. When nothing was appended
+    /// since the last checkpoint and no older segments exist, the pass
+    /// is skipped — zero bytes rewritten.
     pub fn checkpoint(
         &mut self,
         fresh: Vec<(u64, Vec<u8>)>,
         carry: &[u64],
-    ) -> Result<usize, Error> {
+    ) -> Result<CheckpointOutcome, Error> {
+        if self.records_since_checkpoint == 0 && !self.older_segments {
+            return Ok(CheckpointOutcome { purged: 0, bytes_rewritten: 0, skipped: true });
+        }
         let old = list_segments(&self.dir)?;
+        // Everything pending must be on disk before the old segments —
+        // still the only durable home of the carried state — are read
+        // and purged; this also resolves every outstanding ticket.
+        self.flush()?;
         let carried = if carry.is_empty() {
             Vec::new()
         } else {
             // Same fold as boot recovery ([`LiveFold`]) so compaction can
-            // never carry forward something replay would reject. Images
-            // stay as raw bytes (validated when appended); the final
-            // segment is our own live file and ends cleanly, but
-            // tolerate defensively.
+            // never carry forward something replay would reject — and so
+            // delta chains materialize here exactly as they would at
+            // recovery. Sessions whose latest image never had a delta
+            // land on it carry their raw bytes through untouched.
             let mut live = LiveFold::default();
             let last = old.len().saturating_sub(1);
             for (i, (_, path)) in old.iter().enumerate() {
@@ -268,33 +607,38 @@ impl Wal {
             }
             let mut carried = Vec::with_capacity(carry.len());
             for &session in carry {
-                let Some((image, advances)) = live.0.remove(&session) else {
+                let Some((bytes, advances)) = live.take_encoded(session)? else {
                     // Every live session has at least one durable image
                     // (logged at open/import); refuse to purge history
                     // we cannot carry.
                     return Err(Error::Corrupt { what: "carry session missing from wal" });
                 };
-                carried.push((session, image, advances));
+                carried.push((session, bytes, advances));
             }
             carried
         };
         let old: Vec<PathBuf> = old.into_iter().map(|(_, p)| p).collect();
         self.seg_index += 1;
-        self.file = start_segment(&self.dir, self.seg_index)?;
+        self.file = Arc::new(start_segment(&self.dir, self.seg_index)?);
+        self.own_fsyncs += 2; // header + directory
+        *self.shared.file.lock().unwrap() = Some(Arc::clone(&self.file));
         self.seg_bytes = SEGMENT_HEADER as u64;
         // One data sync for the whole checkpoint (not one per record —
         // this runs on the scheduler thread): durability only requires
         // everything be on disk *before the old segments go away*.
+        let mut bytes_rewritten = 0u64;
         for (session, image) in fresh {
-            self.append_inner(&Record::Snapshot { session, image }, false)?;
+            bytes_rewritten += self.write_frame(&Record::Snapshot { session, image }, false)?;
         }
         for (session, image, advances) in carried {
-            self.append_inner(&Record::Snapshot { session, image }, false)?;
+            bytes_rewritten += self.write_frame(&Record::Snapshot { session, image }, false)?;
             for action in advances {
-                self.append_inner(&Record::Advance { session, action }, false)?;
+                bytes_rewritten +=
+                    self.write_frame(&Record::Advance { session, action }, false)?;
             }
         }
         self.file.sync_data()?;
+        self.own_fsyncs += 1;
         let mut purged = 0;
         for path in old {
             fs::remove_file(&path)?;
@@ -303,7 +647,10 @@ impl Wal {
         // Make the unlinks (and the new segment's directory entry, again)
         // durable before reporting the checkpoint complete.
         sync_dir(&self.dir)?;
-        Ok(purged)
+        self.own_fsyncs += 1;
+        self.records_since_checkpoint = 0;
+        self.older_segments = false;
+        Ok(CheckpointOutcome { purged, bytes_rewritten, skipped: false })
     }
 
     /// Records appended through this handle (not counting replay).
@@ -316,12 +663,48 @@ impl Wal {
     }
 }
 
+impl Drop for Wal {
+    fn drop(&mut self) {
+        // Orderly close: the committer drains everything written before
+        // exiting, so an in-process drop (tests, graceful shutdown)
+        // leaves a fully durable log. A real crash skips all of this —
+        // which is exactly what the torn-tail machinery exists for.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.cv.notify_all();
+        }
+        if let Some(t) = self.committer.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One session's latest durable image as the fold tracks it: the raw
+/// encoded bytes exactly as they sit in the log — untouched (and
+/// reusable verbatim by checkpoint carry, which is a byte copy, not a
+/// decode/re-encode round trip) — until a [`Record::Delta`] forces
+/// materialization.
+enum FoldImage {
+    Raw(Vec<u8>),
+    Decoded(SessionImage),
+}
+
+struct FoldState {
+    image: FoldImage,
+    advances: Vec<usize>,
+}
+
 /// The one definition of how a record stream folds into per-session
-/// state (latest raw image + advances since), shared by boot recovery
-/// and checkpoint compaction so the two can never diverge. Images are
-/// kept as raw bytes; callers decode where needed.
+/// state, shared by boot recovery, checkpoint compaction and the
+/// scripted store so the three can never diverge. A session's fold
+/// state is its latest image (base with any delta chain applied) plus
+/// the advances logged after it; images decode lazily — only when a
+/// delta must apply to them, or when [`LiveFold::finish`] materializes
+/// recovery. Delta bases evolve through [`advance_base_tree`],
+/// mirroring the engine that wrote the deltas.
 #[derive(Default)]
-struct LiveFold(std::collections::BTreeMap<u64, (Vec<u8>, Vec<usize>)>);
+struct LiveFold(std::collections::BTreeMap<u64, FoldState>);
 
 impl LiveFold {
     fn fold(&mut self, rec: Record) -> Result<(), Error> {
@@ -330,18 +713,47 @@ impl LiveFold {
                 if self.0.contains_key(&session) {
                     return Err(Error::Corrupt { what: "wal open for an already-live session" });
                 }
-                self.0.insert(session, (image, Vec::new()));
+                self.0.insert(
+                    session,
+                    FoldState { image: FoldImage::Raw(image), advances: Vec::new() },
+                );
             }
             Record::Snapshot { session, image } => {
                 // Upsert: after a checkpoint purge, a snapshot is the
                 // session's first record in the surviving segments.
-                self.0.insert(session, (image, Vec::new()));
+                self.0.insert(
+                    session,
+                    FoldState { image: FoldImage::Raw(image), advances: Vec::new() },
+                );
+            }
+            Record::Delta { session, delta } => {
+                let Some(state) = self.0.get_mut(&session) else {
+                    return Err(Error::Corrupt { what: "wal delta for unknown session" });
+                };
+                let delta = DeltaImage::decode(&delta)?;
+                if delta.session != session {
+                    return Err(Error::Corrupt { what: "wal record / delta session mismatch" });
+                }
+                // The delta was computed against the canonical base: the
+                // previous image's tree with the interleaved advances
+                // folded in. Replay them the same way before applying.
+                let prev =
+                    match std::mem::replace(&mut state.image, FoldImage::Raw(Vec::new())) {
+                        FoldImage::Raw(bytes) => decode_session_image(session, &bytes)?,
+                        FoldImage::Decoded(image) => image,
+                    };
+                let mut base = prev.tree;
+                for &action in &state.advances {
+                    advance_base_tree(&mut base, action);
+                }
+                state.image = FoldImage::Decoded(delta.apply(&base)?);
+                state.advances.clear();
             }
             Record::Advance { session, action } => {
                 self.0
                     .get_mut(&session)
                     .ok_or(Error::Corrupt { what: "wal advance for unknown session" })?
-                    .1
+                    .advances
                     .push(action);
             }
             Record::Close { session } => {
@@ -352,6 +764,55 @@ impl LiveFold {
         }
         Ok(())
     }
+
+    /// Materialize every live session (decoding whatever stayed raw).
+    fn finish(self) -> Result<Vec<RecoveredSession>, Error> {
+        self.0
+            .into_iter()
+            .map(|(session, state)| {
+                let image = match state.image {
+                    FoldImage::Raw(bytes) => decode_session_image(session, &bytes)?,
+                    FoldImage::Decoded(image) => image,
+                };
+                Ok(RecoveredSession { image, advances: state.advances })
+            })
+            .collect()
+    }
+
+    /// Remove one session as `(encoded image, advances)` for a
+    /// checkpoint carry: a raw image (no delta landed on it) is copied
+    /// through byte-for-byte — it was validated when appended — while a
+    /// delta-materialized one re-encodes, which is exactly the chain
+    /// compaction the checkpoint wants.
+    fn take_encoded(&mut self, session: u64) -> Result<Option<(Vec<u8>, Vec<usize>)>, Error> {
+        let Some(state) = self.0.remove(&session) else { return Ok(None) };
+        let bytes = match state.image {
+            FoldImage::Raw(bytes) => bytes,
+            FoldImage::Decoded(image) => image.encode()?,
+        };
+        Ok(Some((bytes, state.advances)))
+    }
+}
+
+fn decode_session_image(session: u64, bytes: &[u8]) -> Result<SessionImage, Error> {
+    let image = SessionImage::decode(bytes)?;
+    if image.session != session {
+        return Err(Error::Corrupt { what: "wal record / image session mismatch" });
+    }
+    Ok(image)
+}
+
+/// Fold an ordered record stream into recovered sessions — the exact
+/// replay semantics of [`Wal::open`], exposed so the testkit's scripted
+/// store recovers through the same code path as a real boot.
+pub fn replay_records<I: IntoIterator<Item = Record>>(
+    records: I,
+) -> Result<Vec<RecoveredSession>, Error> {
+    let mut live = LiveFold::default();
+    for rec in records {
+        live.fold(rec)?;
+    }
+    live.finish()
 }
 
 fn segment_path(dir: &Path, index: u64) -> PathBuf {
@@ -482,6 +943,7 @@ mod tests {
             Record::Open { session: 7, image: vec![1, 2, 3] },
             Record::Advance { session: 7, action: 4 },
             Record::Snapshot { session: 9, image: vec![] },
+            Record::Delta { session: 9, delta: vec![5, 6] },
             Record::Close { session: 9 },
         ] {
             assert_eq!(Record::decode(&rec.encode()).unwrap(), rec);
@@ -501,12 +963,51 @@ mod tests {
         assert!(recovery.sessions.is_empty());
         assert!(!recovery.torn_tail);
         assert_eq!(recovery.records, 0);
-        wal.append(&Record::Close { session: 1 }).unwrap();
+        let ticket = wal.append(&Record::Close { session: 1 }).unwrap();
+        ticket.wait().unwrap();
+        assert!(ticket.is_durable());
         assert_eq!(wal.records_appended(), 1);
         assert_eq!(wal.segment_index(), 1);
+        assert_eq!(wal.durable_seq(), 1);
         // The record is on disk in the live segment.
         let read = read_segment(&segment_path(&dir, 1), true).unwrap();
         assert_eq!(read.records, vec![Record::Close { session: 1 }]);
+        assert!(read.torn_at.is_none());
+    }
+
+    #[test]
+    fn tickets_resolve_in_batches_not_per_record() {
+        let dir = temp_dir("batching");
+        let cfg = StoreConfig::new(&dir);
+        let (mut wal, _) = Wal::open(&cfg).unwrap();
+        let n = 64u64;
+        let mut tickets = Vec::new();
+        for i in 0..n {
+            tickets.push(wal.append(&Record::Close { session: i + 1 }).unwrap());
+        }
+        // Waiting the last ticket implies every earlier one is durable.
+        tickets.last().unwrap().wait().unwrap();
+        assert!(tickets.iter().all(|t| t.is_durable()));
+        let (batches, _) = wal.commit_counters();
+        assert!(batches >= 1);
+        assert!(batches <= n, "at most one batch per record");
+        wal.flush().unwrap();
+        assert_eq!(wal.durable_seq(), n);
+    }
+
+    #[test]
+    fn drop_drains_pending_commits() {
+        let dir = temp_dir("drop-drains");
+        let cfg = StoreConfig::new(&dir);
+        {
+            let (mut wal, _) = Wal::open(&cfg).unwrap();
+            for i in 0..10u64 {
+                let _ = wal.append(&Record::Close { session: i + 1 }).unwrap();
+            }
+            // No explicit wait: Drop must drain.
+        }
+        let read = read_segment(&segment_path(&dir, 1), true).unwrap();
+        assert_eq!(read.records.len(), 10);
         assert!(read.torn_at.is_none());
     }
 
@@ -520,5 +1021,21 @@ mod tests {
         let segs = list_segments(&dir).unwrap();
         let indices: Vec<u64> = segs.iter().map(|&(i, _)| i).collect();
         assert_eq!(indices, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn detached_commit_shared_scripts_durability() {
+        let shared = CommitShared::detached();
+        let t1 = shared.register_write();
+        let t2 = shared.register_write();
+        assert!(!t1.is_durable() && !t2.is_durable());
+        shared.mark_written_durable();
+        assert!(t1.is_durable() && t2.is_durable());
+        t1.wait().unwrap();
+        let (batches, fsyncs) = shared.batch_counters();
+        assert_eq!((batches, fsyncs), (1, 1), "two records, one batch");
+        // A second mark with nothing new written counts nothing.
+        shared.mark_written_durable();
+        assert_eq!(shared.batch_counters(), (1, 1));
     }
 }

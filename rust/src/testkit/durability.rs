@@ -1,20 +1,26 @@
 //! Durable virtual-time scripts: crash/recovery and migrate-under-load,
-//! deterministic down to the golden trace.
+//! deterministic down to the golden trace — plus the **scripted store**,
+//! the [`SessionStore`] implementation whose batch boundaries the test
+//! controls.
 //!
 //! [`DurableScriptedService`] wraps a [`ScriptedService`] and mirrors
-//! its lifecycle into a real [`Wal`] exactly like a live shard does —
-//! `Open` images at open, `Advance` records per step, `Snapshot` images
-//! on the think cadence. "Crash" is just dropping the service (every
-//! record was already fsynced); [`DurableScriptedService::recover`]
-//! replays the log into a fresh service. Because the underlying schedule
-//! is virtual-time deterministic, a crash can be scripted **at any think
-//! boundary** and the recovered tree compared against an independently
-//! re-run control — the acceptance proof in `rust/tests/store.rs`.
+//! its lifecycle into a [`SessionStore`] exactly like a live shard does
+//! — `Open` images at open, `Advance` records per step, cadence
+//! snapshots (full or delta, the store decides) after each think wave.
+//! Backed by the real disk engine, "crash" is dropping the service
+//! (drop drains the commit queue, so recovery sees every logged
+//! record); backed by a [`ScriptedStore`], records become durable only
+//! at explicit [`ScriptedDisk::sync`] points and a crash loses exactly
+//! the unsynced suffix — so *mid-batch* and *post-fsync-pre-ticket*
+//! crash windows are scripted deterministically, and the store's fsync
+//! counter proves group commit batches (`rust/tests/store.rs`).
 //!
 //! [`migrate_under_load`] is the companion script: two shards under
 //! scripted load, one session exported/imported between them mid-run,
 //! with the paper's `ΣO = 0` invariant checked on both sides and the
 //! migrated session's `best` action compared to an unmigrated control.
+
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -23,17 +29,272 @@ use crate::env::Env;
 use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::AdvanceOutcome;
 use crate::store::codec::{SessionImage, SessionMeta};
-use crate::store::wal::{Record, StoreConfig, Wal};
+use crate::store::engine::{DeltaTracker, SessionEngine, SessionStore, StoreCounters};
+use crate::store::wal::{
+    replay_records, CheckpointOutcome, CommitShared, CommitTicket, Record, Recovery,
+    StoreConfig,
+};
+use crate::store::Error;
 use crate::testkit::executor::Trace;
 use crate::testkit::harness::ScriptedService;
 use crate::testkit::latency::LatencyScript;
 use crate::tree::Tree;
 
-/// A [`ScriptedService`] whose lifecycle is mirrored into a write-ahead
-/// log, for deterministic crash/recovery scripts.
+/// The durable state a [`ScriptedStore`] writes to — shared with the
+/// test, so it survives the store being dropped ("crashed") and scripts
+/// the batch boundaries: records accumulate as *pending* until
+/// [`ScriptedDisk::sync`] moves them to *durable* (one batch, one
+/// counted fsync). A crash + [`ScriptedStore::reopen`] discards exactly
+/// the pending suffix — the deterministic model of losing the records
+/// an fsync never covered.
+#[derive(Clone, Default)]
+pub struct ScriptedDisk {
+    inner: Arc<Mutex<DiskState>>,
+}
+
+#[derive(Default)]
+struct DiskState {
+    durable: Vec<Record>,
+    pending: Vec<Record>,
+    /// Records appended across every store generation (the counter the
+    /// tests read).
+    records: u64,
+    /// Commit sequence of the last record appended by the *current*
+    /// store generation — kept in lockstep with the live
+    /// [`CommitShared`]'s `written` under this lock (reset when a store
+    /// re-attaches), so a sync can bound ticket resolution to exactly
+    /// the records it moved.
+    seq: u64,
+    /// The live store's commit state (tickets + notifier), when one is
+    /// open against this disk.
+    commit: Option<Arc<CommitShared>>,
+}
+
+impl ScriptedDisk {
+    pub fn new() -> ScriptedDisk {
+        ScriptedDisk::default()
+    }
+
+    /// One scripted fsync: everything pending *at this instant* becomes
+    /// durable, tickets through exactly that batch resolve, the store's
+    /// notifier fires. The durable sequence is captured under the disk
+    /// lock (appends update pending + the commit sequence under the same
+    /// lock), so a record appended concurrently with the sync stays
+    /// pending — and a crash still loses exactly the unsynced suffix.
+    pub fn sync(&self) {
+        let (commit, through) = {
+            let mut st = self.inner.lock().unwrap();
+            if st.pending.is_empty() {
+                return;
+            }
+            let batch = std::mem::take(&mut st.pending);
+            st.durable.extend(batch);
+            (st.commit.clone(), st.seq)
+        };
+        if let Some(commit) = commit {
+            // Counts one batch + one fsync and runs the notifier.
+            commit.mark_durable_through(through);
+        }
+    }
+
+    /// Records written but not yet covered by a sync.
+    pub fn pending_records(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    pub fn durable_records(&self) -> usize {
+        self.inner.lock().unwrap().durable.len()
+    }
+
+    /// `(records, batches, fsyncs)` so far — the group-commit proof
+    /// reads `fsyncs ≪ records` straight off this.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        let st = self.inner.lock().unwrap();
+        let (batches, fsyncs) = st
+            .commit
+            .as_ref()
+            .map(|c| c.batch_counters())
+            .unwrap_or_default();
+        (st.records, batches, fsyncs)
+    }
+}
+
+/// In-memory [`SessionStore`] with script-controlled durability; the
+/// same [`DeltaTracker`] as the live engine, so delta chains and the
+/// full-image cadence behave identically.
+pub struct ScriptedStore {
+    disk: ScriptedDisk,
+    commit: Arc<CommitShared>,
+    tracker: DeltaTracker,
+}
+
+impl ScriptedStore {
+    /// Fresh store on a fresh disk.
+    pub fn create(full_every: u32) -> (ScriptedStore, ScriptedDisk) {
+        let disk = ScriptedDisk::new();
+        let store = ScriptedStore::attach(&disk, full_every);
+        (store, disk)
+    }
+
+    /// Reopen after a crash: pending (never-synced) records are lost;
+    /// the durable prefix replays through the same fold as a real boot.
+    pub fn reopen(
+        disk: &ScriptedDisk,
+        full_every: u32,
+    ) -> Result<(ScriptedStore, Recovery), Error> {
+        let records: Vec<Record> = {
+            let mut st = disk.inner.lock().unwrap();
+            st.pending.clear();
+            st.durable.clone()
+        };
+        let count = records.len() as u64;
+        let sessions = replay_records(records)?;
+        let recovery = Recovery { sessions, torn_tail: false, records: count };
+        let mut store = ScriptedStore::attach(disk, full_every);
+        store.tracker.seed_from_recovery(&recovery);
+        Ok((store, recovery))
+    }
+
+    fn attach(disk: &ScriptedDisk, full_every: u32) -> ScriptedStore {
+        let commit = CommitShared::detached();
+        {
+            let mut st = disk.inner.lock().unwrap();
+            st.commit = Some(Arc::clone(&commit));
+            st.seq = 0; // fresh store generation, fresh commit sequence
+        }
+        ScriptedStore {
+            disk: disk.clone(),
+            commit,
+            tracker: DeltaTracker::new(full_every),
+        }
+    }
+
+    /// Appends hold the disk lock across the commit-sequence update, so
+    /// `DiskState::seq` and the pending list move together — the
+    /// invariant [`ScriptedDisk::sync`]'s bounded durability mark needs.
+    fn append(&mut self, rec: Record) -> Result<CommitTicket, Error> {
+        let mut st = self.disk.inner.lock().unwrap();
+        st.pending.push(rec);
+        st.records += 1;
+        let ticket = self.commit.register_write();
+        st.seq = ticket.seq();
+        Ok(ticket)
+    }
+}
+
+impl SessionStore for ScriptedStore {
+    fn log_open(&mut self, session: u64, image: &SessionImage) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.open_record(session, image)?;
+        self.append(rec)
+    }
+
+    fn log_open_encoded(
+        &mut self,
+        session: u64,
+        bytes: Vec<u8>,
+        tree: &Tree,
+    ) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.open_record_encoded(session, bytes, tree);
+        self.append(rec)
+    }
+
+    fn log_advance(&mut self, session: u64, action: usize) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.advance_record(session, action);
+        self.append(rec)
+    }
+
+    fn log_snapshot(
+        &mut self,
+        session: u64,
+        image: &SessionImage,
+    ) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.snapshot_record(session, image)?;
+        self.append(rec)
+    }
+
+    fn log_close(&mut self, session: u64) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.close_record(session);
+        self.append(rec)
+    }
+
+    fn dirty(&self, session: u64) -> bool {
+        self.tracker.dirty(session)
+    }
+
+    fn checkpoint(
+        &mut self,
+        fresh: Vec<(u64, SessionImage)>,
+        carry: &[u64],
+    ) -> Result<CheckpointOutcome, Error> {
+        // Compact the whole written history (the scripted analogue syncs
+        // everything first, like the live checkpoint's flush) into fresh
+        // snapshots + carried materializations.
+        let all: Vec<Record> = {
+            let mut st = self.disk.inner.lock().unwrap();
+            let pending = std::mem::take(&mut st.pending);
+            st.durable.extend(pending);
+            st.durable.clone()
+        };
+        let by_id: std::collections::BTreeMap<u64, _> = replay_records(all)?
+            .into_iter()
+            .map(|rs| (rs.image.session, rs))
+            .collect();
+        let mut compacted = Vec::new();
+        let mut bytes_rewritten = 0u64;
+        let mut fresh_bytes = 0u64;
+        for (session, image) in &fresh {
+            let encoded = image.encode()?;
+            fresh_bytes += encoded.len() as u64;
+            bytes_rewritten += encoded.len() as u64;
+            compacted.push(Record::Snapshot { session: *session, image: encoded });
+        }
+        for &session in carry {
+            let Some(rs) = by_id.get(&session) else {
+                return Err(Error::Corrupt { what: "carry session missing from wal" });
+            };
+            let encoded = rs.image.encode()?;
+            bytes_rewritten += encoded.len() as u64;
+            compacted.push(Record::Snapshot { session, image: encoded });
+            for &action in &rs.advances {
+                compacted.push(Record::Advance { session, action });
+            }
+        }
+        self.tracker.note_checkpoint(&fresh, fresh_bytes, carry);
+        {
+            let mut st = self.disk.inner.lock().unwrap();
+            st.durable = compacted;
+        }
+        self.commit.mark_written_durable();
+        Ok(CheckpointOutcome { purged: 1, bytes_rewritten, skipped: false })
+    }
+
+    fn durable_seq(&self) -> u64 {
+        self.commit.durable_seq()
+    }
+
+    fn commit_error(&self) -> Option<String> {
+        self.commit.error()
+    }
+
+    fn set_commit_notifier(&mut self, notifier: Box<dyn Fn(u64) + Send>) {
+        self.commit.set_notifier(notifier);
+    }
+
+    fn counters(&self) -> StoreCounters {
+        let records = self.disk.inner.lock().unwrap().records;
+        let (batches, fsyncs) = self.commit.batch_counters();
+        let mut c =
+            StoreCounters { records, batches, fsyncs, ..StoreCounters::default() };
+        self.tracker.fill_counters(&mut c);
+        c
+    }
+}
+
+/// A [`ScriptedService`] whose lifecycle is mirrored into a
+/// [`SessionStore`], for deterministic crash/recovery scripts.
 pub struct DurableScriptedService {
     svc: ScriptedService,
-    wal: Wal,
+    store: Box<dyn SessionStore>,
     snapshot_every: u64,
     /// Completed thinks per session (drives the snapshot cadence).
     thinks: std::collections::BTreeMap<u64, u64>,
@@ -42,39 +303,103 @@ pub struct DurableScriptedService {
 }
 
 impl DurableScriptedService {
-    /// Start on an empty data dir.
+    /// Start on an empty data dir, backed by the real disk engine.
     pub fn create(
         exp_capacity: usize,
         sim_capacity: usize,
         script: LatencyScript,
         store: &StoreConfig,
     ) -> Result<DurableScriptedService> {
-        let (wal, recovery) = Wal::open(store)?;
+        let (engine, recovery) = SessionEngine::open(store)?;
         anyhow::ensure!(
             recovery.sessions.is_empty(),
             "create() found existing sessions; use recover()"
         );
-        Ok(DurableScriptedService {
-            svc: ScriptedService::new(exp_capacity, sim_capacity, script),
-            wal,
-            snapshot_every: store.snapshot_every.max(1) as u64,
-            thinks: Default::default(),
-            pending_thinks: Vec::new(),
-        })
+        Ok(DurableScriptedService::assemble(
+            ScriptedService::new(exp_capacity, sim_capacity, script),
+            Box::new(engine),
+            store.snapshot_every,
+        ))
     }
 
-    /// Rebuild every session from the log after a crash; returns the
-    /// service and how many sessions were recovered.
+    /// Start on a scripted store whose sync points the test controls.
+    pub fn create_scripted(
+        exp_capacity: usize,
+        sim_capacity: usize,
+        script: LatencyScript,
+        snapshot_every: u32,
+        full_every: u32,
+    ) -> (DurableScriptedService, ScriptedDisk) {
+        let (store, disk) = ScriptedStore::create(full_every);
+        (
+            DurableScriptedService::assemble(
+                ScriptedService::new(exp_capacity, sim_capacity, script),
+                Box::new(store),
+                snapshot_every,
+            ),
+            disk,
+        )
+    }
+
+    fn assemble(
+        svc: ScriptedService,
+        store: Box<dyn SessionStore>,
+        snapshot_every: u32,
+    ) -> DurableScriptedService {
+        DurableScriptedService {
+            svc,
+            store,
+            snapshot_every: snapshot_every.max(1) as u64,
+            thinks: Default::default(),
+            pending_thinks: Vec::new(),
+        }
+    }
+
+    /// Rebuild every session from the disk engine's log after a crash;
+    /// returns the service and how many sessions were recovered.
     pub fn recover(
         exp_capacity: usize,
         sim_capacity: usize,
         script: LatencyScript,
         store: &StoreConfig,
     ) -> Result<(DurableScriptedService, usize)> {
-        let (wal, recovery) = Wal::open(store)?;
-        let mut svc = ScriptedService::new(exp_capacity, sim_capacity, script);
-        let mut thinks = std::collections::BTreeMap::new();
+        let (engine, recovery) = SessionEngine::open(store)?;
+        Self::recover_into(
+            ScriptedService::new(exp_capacity, sim_capacity, script),
+            Box::new(engine),
+            store.snapshot_every,
+            recovery,
+        )
+    }
+
+    /// Rebuild from a scripted disk: records never covered by a
+    /// [`ScriptedDisk::sync`] are lost, exactly like a real crash losing
+    /// its unsynced batch.
+    pub fn recover_scripted(
+        exp_capacity: usize,
+        sim_capacity: usize,
+        script: LatencyScript,
+        disk: &ScriptedDisk,
+        snapshot_every: u32,
+        full_every: u32,
+    ) -> Result<(DurableScriptedService, usize)> {
+        let (store, recovery) = ScriptedStore::reopen(disk, full_every)?;
+        Self::recover_into(
+            ScriptedService::new(exp_capacity, sim_capacity, script),
+            Box::new(store),
+            snapshot_every,
+            recovery,
+        )
+    }
+
+    fn recover_into(
+        mut svc: ScriptedService,
+        store: Box<dyn SessionStore>,
+        snapshot_every: u32,
+        recovery: Recovery,
+    ) -> Result<(DurableScriptedService, usize)> {
         let recovered = recovery.sessions.len();
+        let mut thinks = std::collections::BTreeMap::new();
         for rs in recovery.sessions {
             let id = rs.image.session;
             let weight = rs.image.meta.weight;
@@ -85,16 +410,9 @@ impl DurableScriptedService {
             svc.install(id, driver, weight);
             thinks.insert(id, 0);
         }
-        Ok((
-            DurableScriptedService {
-                svc,
-                wal,
-                snapshot_every: store.snapshot_every.max(1) as u64,
-                thinks,
-                pending_thinks: Vec::new(),
-            },
-            recovered,
-        ))
+        let mut out = DurableScriptedService::assemble(svc, store, snapshot_every);
+        out.thinks = thinks;
+        Ok((out, recovered))
     }
 
     /// Open a session; env must be constructed with `spec.seed` (the
@@ -107,8 +425,8 @@ impl DurableScriptedService {
             weight,
             ..SessionMeta::default()
         };
-        let image = SessionImage::capture(id, self.svc.driver(id), meta)?.encode()?;
-        self.wal.append(&Record::Open { session: id, image })?;
+        let image = SessionImage::capture(id, self.svc.driver(id), meta)?;
+        self.store.log_open(id, &image)?;
         self.thinks.insert(id, 0);
         Ok(())
     }
@@ -120,7 +438,7 @@ impl DurableScriptedService {
 
     /// Run every pending think to completion, then snapshot each
     /// finished session on its cadence — the live scheduler's behavior
-    /// in virtual time.
+    /// in virtual time. The store picks delta vs full per snapshot.
     pub fn run(&mut self) -> Result<()> {
         self.svc.run_to_completion();
         for id in std::mem::take(&mut self.pending_thinks) {
@@ -138,8 +456,8 @@ impl DurableScriptedService {
                     weight: 1.0,
                     ..SessionMeta::default()
                 };
-                let image = SessionImage::capture(id, self.svc.driver(id), meta)?.encode()?;
-                self.wal.append(&Record::Snapshot { session: id, image })?;
+                let image = SessionImage::capture(id, self.svc.driver(id), meta)?;
+                self.store.log_snapshot(id, &image)?;
             }
         }
         Ok(())
@@ -147,13 +465,13 @@ impl DurableScriptedService {
 
     pub fn advance(&mut self, id: u64, action: usize) -> Result<AdvanceOutcome> {
         let out = self.svc.advance(id, action)?;
-        self.wal.append(&Record::Advance { session: id, action })?;
+        self.store.log_advance(id, action)?;
         Ok(out)
     }
 
     pub fn close(&mut self, id: u64) -> Result<()> {
         self.svc.close(id)?;
-        self.wal.append(&Record::Close { session: id })?;
+        self.store.log_close(id)?;
         self.thinks.remove(&id);
         Ok(())
     }
@@ -170,8 +488,11 @@ impl DurableScriptedService {
         self.svc.quiescent(id)
     }
 
-    /// Crash the process model: drop everything without closing. Every
-    /// appended record is already on disk, so this is exactly `kill -9`.
+    /// Crash the process model: drop everything without closing. Backed
+    /// by the disk engine, drop drains the commit queue (the records on
+    /// disk are exactly those logged); backed by a scripted store, the
+    /// unsynced pending suffix is lost at `recover_scripted` — the
+    /// mid-batch crash window, scripted.
     pub fn crash(self) {
         drop(self);
     }
@@ -283,5 +604,32 @@ mod tests {
         assert_eq!(a.target_trace, b.target_trace, "golden target trace");
         let c = migrate_under_load(24).unwrap();
         assert_ne!(a.source_trace, c.source_trace, "seeds script different runs");
+    }
+
+    #[test]
+    fn scripted_disk_scripts_batch_boundaries() {
+        let (mut store, disk) = ScriptedStore::create(1);
+        let env = Garnet::new(8, 2, 10, 0.0, 5);
+        let driver = crate::mcts::wu_uct::driver::SearchDriver::new(
+            SearchSpec { seed: 5, ..SearchSpec::default() },
+            &env,
+        );
+        let meta = SessionMeta { env_seed: 5, ..SessionMeta::default() };
+        let image = SessionImage::capture(1, &driver, meta).unwrap();
+        let t1 = store.log_open(1, &image).unwrap();
+        let t2 = store.log_advance(1, 0).unwrap();
+        assert!(!t1.is_durable() && !t2.is_durable());
+        assert_eq!(disk.pending_records(), 2);
+        disk.sync();
+        assert!(t1.is_durable() && t2.is_durable());
+        let (records, batches, fsyncs) = disk.counters();
+        assert_eq!((records, batches, fsyncs), (2, 1, 1), "one batch covered both");
+        // Crash with a pending record: reopen loses it.
+        let _ = store.log_advance(1, 1).unwrap();
+        drop(store);
+        let (_, recovery) = ScriptedStore::reopen(&disk, 1).unwrap();
+        assert_eq!(recovery.records, 2, "the unsynced advance is gone");
+        assert_eq!(recovery.sessions.len(), 1);
+        assert_eq!(recovery.sessions[0].advances, vec![0]);
     }
 }

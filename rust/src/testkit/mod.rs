@@ -27,8 +27,12 @@
 //!
 //! * [`durability`] — the store's scripts on top of all that:
 //!   [`durability::DurableScriptedService`] mirrors a scripted shard
-//!   into a real write-ahead log so crashes can be scripted at any
-//!   think boundary and recovery compared against a re-run control, and
+//!   into a `SessionStore` (the real disk engine, or the scripted
+//!   in-memory store whose batch boundaries the test controls) so
+//!   crashes can be scripted at any think boundary — or *inside* a
+//!   commit batch — and recovery compared against a re-run control;
+//!   [`durability::ScriptedStore`] also plugs into the live scheduler
+//!   to prove group-commit batching by fsync counter; and
 //!   [`durability::migrate_under_load`] moves a session between two
 //!   loaded scripted shards with `ΣO = 0` checked on both sides.
 //!
@@ -55,7 +59,9 @@ pub mod fakenet;
 pub mod harness;
 pub mod latency;
 
-pub use durability::{migrate_under_load, DurableScriptedService, MigrationRun};
+pub use durability::{
+    migrate_under_load, DurableScriptedService, MigrationRun, ScriptedDisk, ScriptedStore,
+};
 pub use executor::{Trace, VirtualExecutor};
 pub use fakenet::{FakeHost, FakeHostNet, ScriptEvent};
 pub use harness::{scripted_driver, scripted_search, ScriptedService, SearchOutcome};

@@ -13,7 +13,11 @@ use crate::env::EnvState;
 pub type NodeId = usize;
 
 /// One search-tree node.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every field bit-for-bit (f64 by `==`) — the store's
+/// delta encoder uses it to detect nodes changed since the previous
+/// snapshot, so "equal" must mean "nothing to re-serialize".
+#[derive(Debug, Clone, PartialEq)]
 pub struct Node {
     /// Parent node; `None` for the root.
     pub parent: Option<NodeId>,

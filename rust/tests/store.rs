@@ -1,10 +1,13 @@
 //! Store subsystem integration tests: codec robustness (fuzzed, typed
-//! errors, never a panic), WAL replay/rotation/torn-tail semantics, live
-//! crash-recovery through the sharded service, live migration +
-//! rebalancing, and the deterministic testkit acceptance proofs —
-//! scripted crash at every think boundary recovering the control run's
-//! exact tree, and migrate-under-load preserving `ΣO = 0` plus the
-//! control run's `best` action.
+//! errors, never a panic — full images and `DeltaImage`s alike), WAL
+//! replay/rotation/torn-tail semantics, live crash-recovery through the
+//! sharded service (including through live delta chains), live
+//! migration + rebalancing, and the deterministic testkit acceptance
+//! proofs — scripted crash at every think boundary *and batch position*
+//! recovering the control run's exact tree, group commit provably
+//! batching N sessions onto few fsyncs against the live scheduler, the
+//! quiet-fleet zero-byte checkpoint regression, and migrate-under-load
+//! preserving `ΣO = 0` plus the control run's `best` action.
 
 use std::fs;
 use std::io::Write as _;
@@ -15,13 +18,15 @@ use wu_uct::env::Env;
 use wu_uct::mcts::SearchSpec;
 use wu_uct::service::proto::make_env;
 use wu_uct::service::{
-    RebalanceConfig, ServiceConfig, SessionOptions, ShardedConfig, ShardedService,
+    RebalanceConfig, SearchService, ServiceConfig, SessionOptions, ShardedConfig,
+    ShardedService,
 };
-use wu_uct::store::codec::{SessionImage, SessionMeta};
+use wu_uct::store::codec::{DeltaImage, SessionImage, SessionMeta};
 use wu_uct::store::wal::{read_segment, Record, StoreConfig, Wal};
-use wu_uct::store::Error;
+use wu_uct::store::{Error, SessionStore};
 use wu_uct::testkit::{
-    migrate_under_load, scripted_driver, DurableScriptedService, LatencyScript, ScriptedService,
+    migrate_under_load, scripted_driver, DurableScriptedService, LatencyScript, ScriptedDisk,
+    ScriptedService, ScriptedStore,
 };
 use wu_uct::tree::Tree;
 use wu_uct::util::rng::Pcg32;
@@ -199,8 +204,10 @@ fn wal_checkpoint_rotates_and_purges_old_segments() {
         wal.append(&Record::Open { session: 1, image: image_bytes(1, 3) }).unwrap();
         wal.append(&Record::Advance { session: 1, action: 0 }).unwrap();
         assert!(wal.needs_checkpoint(), "1-byte budget is always exceeded");
-        let purged = wal.checkpoint(vec![(1, image_bytes(1, 4))], &[]).unwrap();
-        assert_eq!(purged, 1, "the pre-checkpoint segment is deleted");
+        let out = wal.checkpoint(vec![(1, image_bytes(1, 4))], &[]).unwrap();
+        assert_eq!(out.purged, 1, "the pre-checkpoint segment is deleted");
+        assert!(!out.skipped);
+        assert!(out.bytes_rewritten > 0);
         assert_eq!(wal.segment_index(), 2);
     }
     let segments: Vec<_> = fs::read_dir(&dir)
@@ -316,10 +323,10 @@ fn checkpoint_carries_unimageable_sessions_forward() {
         wal.append(&Record::Advance { session: 1, action: 2 }).unwrap();
         wal.append(&Record::Open { session: 2, image: image_bytes(2, 31) }).unwrap();
         // Session 1 is "mid-think": carried; session 2 snapshots fresh.
-        let purged = wal
+        let out = wal
             .checkpoint(vec![(2, image_bytes(2, 32))], &[1])
             .unwrap();
-        assert_eq!(purged, 1);
+        assert_eq!(out.purged, 1);
     }
     let (_, recovery) = Wal::open(&cfg).unwrap();
     assert_eq!(recovery.sessions.len(), 2);
@@ -661,4 +668,362 @@ fn exported_sessions_recover_on_their_new_shard() {
         DurableScriptedService::recover(1, 2, LatencyScript::fixed(1, 4), &cfg).unwrap();
     assert_eq!(count, 1);
     assert_eq!(recovered.best_action(4), best);
+}
+
+// ---------------------------------------------------------------------
+// Delta snapshots + group commit (the storage-engine refactor)
+// ---------------------------------------------------------------------
+
+/// Fuzz: random mutations of an encoded `DeltaImage` must decode as `Ok`
+/// or a typed `Err` — and whatever decodes must `apply` without a panic
+/// (typed errors fine) — never a crash, however mangled the bytes.
+#[test]
+fn fuzzed_delta_mutations_never_panic() {
+    let base = searched_image(3, 7);
+    let mut cur = base.clone();
+    cur.tree.node_mut(Tree::ROOT).n += 1;
+    cur.meta.thinks = 2;
+    let delta_bytes = DeltaImage::compute(&base.tree, &cur).unwrap().encode();
+    let mut rng = Pcg32::new(0xDE17A);
+    let mut accepted = 0u32;
+    for _ in 0..400 {
+        let mut mutated = delta_bytes.clone();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below_usize(mutated.len());
+                mutated[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                mutated.truncate(rng.below_usize(mutated.len()));
+            }
+            _ => {
+                let i = rng.below_usize(mutated.len());
+                let n = (rng.below_usize(16) + 1).min(mutated.len() - i);
+                for b in &mut mutated[i..i + n] {
+                    *b = (rng.below(256)) as u8;
+                }
+            }
+        }
+        if let Ok(delta) = DeltaImage::decode(&mutated) {
+            accepted += 1;
+            // Applying a decoded-but-mutated delta must stay typed too.
+            let _ = delta.apply(&base.tree);
+        }
+    }
+    assert!(
+        accepted <= 8,
+        "checksummed frames should reject nearly all mutations, accepted {accepted}/400"
+    );
+}
+
+/// The quiet-fleet regression (satellite): a checkpoint pass with no new
+/// records since the previous one rewrites zero bytes and purges nothing
+/// — idle sessions whose durable state is current are not re-imaged
+/// into a fresh segment over and over.
+#[test]
+fn quiet_fleet_checkpoints_to_zero_bytes_rewritten() {
+    let dir = temp_dir("quiet-checkpoint");
+    let cfg = StoreConfig { max_segment_bytes: 1, ..StoreConfig::new(&dir) };
+    let (mut wal, _) = Wal::open(&cfg).unwrap();
+    wal.append(&Record::Open { session: 1, image: image_bytes(1, 3) }).unwrap();
+    let out = wal.checkpoint(vec![(1, image_bytes(1, 4))], &[]).unwrap();
+    assert!(!out.skipped);
+    assert!(out.bytes_rewritten > 0);
+    assert_eq!(out.purged, 1);
+    // Fleet goes quiet: nothing appended since the compaction — the next
+    // pass must write nothing at all.
+    let out2 = wal.checkpoint(vec![(1, image_bytes(1, 4))], &[]).unwrap();
+    assert!(out2.skipped, "quiet fleet must skip the checkpoint");
+    assert_eq!(out2.bytes_rewritten, 0);
+    assert_eq!(out2.purged, 0);
+    // And the durable state is intact across the skip.
+    drop(wal);
+    let (_, recovery) = Wal::open(&cfg).unwrap();
+    assert_eq!(recovery.sessions.len(), 1);
+    assert_eq!(recovery.sessions[0].image.session, 1);
+}
+
+/// Crash scripted at every think boundary, in BOTH batch positions:
+/// mid-batch (the boundary's snapshot was written but never synced —
+/// lost, recovery lands on the previous durable boundary) and
+/// post-fsync-pre-ticket (the batch synced but no reply was released —
+/// recovery includes the boundary; the store running ahead of acks is
+/// the safe direction). `full_every = 3` keeps a live delta chain under
+/// most crash points, so mid-delta-chain recovery is exercised
+/// throughout. Recovery must reproduce the control run's tree
+/// node-for-node every time.
+#[test]
+fn scripted_crash_at_batch_boundaries_recovers_the_control_tree() {
+    const ROUNDS: usize = 4;
+    let seed = 13u64;
+    let script = LatencyScript::uniform(seed, (1, 3), (2, 7));
+    let sp = spec(16, seed);
+    let env = garnet(sp.seed); // durable convention: env seed == spec seed
+
+    // Control run: fingerprint at every post-think boundary.
+    let mut control = ScriptedService::new(1, 2, script);
+    control.open(1, &env, sp.clone(), 1.0);
+    let mut fps = Vec::new();
+    for _ in 0..ROUNDS {
+        control.begin_think(1, 16);
+        control.run_to_completion();
+        fps.push(fingerprint(control.driver(1).tree()));
+    }
+    let open_fp = {
+        let mut fresh = ScriptedService::new(1, 2, script);
+        fresh.open(1, &env, sp.clone(), 1.0);
+        fingerprint(fresh.driver(1).tree())
+    };
+
+    for k in 0..ROUNDS {
+        // Mid-batch: sync after every round except the last.
+        let (mut svc, disk) = DurableScriptedService::create_scripted(1, 2, script, 1, 3);
+        svc.open(1, &env, sp.clone(), 1.0).unwrap();
+        disk.sync(); // the open must commit or the session never existed
+        for round in 0..=k {
+            svc.begin_think(1, 16);
+            svc.run().unwrap();
+            if round < k {
+                disk.sync();
+            }
+        }
+        svc.crash();
+        let (recovered, count) =
+            DurableScriptedService::recover_scripted(1, 2, script, &disk, 1, 3).unwrap();
+        assert_eq!(count, 1, "mid-batch crash at round {k} lost the session");
+        assert!(recovered.quiescent(1), "ΣO = 0 after recovery (round {k})");
+        let expect = if k == 0 { &open_fp } else { &fps[k - 1] };
+        assert_eq!(
+            fingerprint(recovered.tree(1)),
+            *expect,
+            "mid-batch crash at round {k}: recovery must land on the last durable boundary"
+        );
+
+        // Post-fsync-pre-ticket: everything synced, then crash.
+        let (mut svc, disk) = DurableScriptedService::create_scripted(1, 2, script, 1, 3);
+        svc.open(1, &env, sp.clone(), 1.0).unwrap();
+        for _ in 0..=k {
+            svc.begin_think(1, 16);
+            svc.run().unwrap();
+        }
+        disk.sync();
+        svc.crash();
+        let (recovered, count) =
+            DurableScriptedService::recover_scripted(1, 2, script, &disk, 1, 3).unwrap();
+        assert_eq!(count, 1);
+        assert_eq!(
+            fingerprint(recovered.tree(1)),
+            fps[k],
+            "post-fsync crash at round {k}: recovery must include the synced boundary"
+        );
+    }
+}
+
+/// A torn (partially-written) delta record at the tail of the final
+/// segment is the expected crash signature: tolerated, truncated away,
+/// and recovery lands node-for-node on the last complete boundary.
+#[test]
+fn torn_delta_tail_is_tolerated_and_recovers_the_boundary() {
+    let seed = 29u64;
+    let script = LatencyScript::uniform(seed, (1, 3), (2, 7));
+    let sp = spec(16, seed);
+    let env = garnet(sp.seed);
+
+    let mut control = ScriptedService::new(1, 2, script);
+    control.open(1, &env, sp.clone(), 1.0);
+    let mut fps = Vec::new();
+    for _ in 0..2 {
+        control.begin_think(1, 16);
+        control.run_to_completion();
+        fps.push(fingerprint(control.driver(1).tree()));
+    }
+
+    let dir = temp_dir("torn-delta");
+    let cfg = StoreConfig { full_every: 4, ..StoreConfig::new(&dir) };
+    {
+        let mut svc = DurableScriptedService::create(1, 2, script, &cfg).unwrap();
+        svc.open(1, &env, sp.clone(), 1.0).unwrap();
+        for _ in 0..2 {
+            svc.begin_think(1, 16);
+            svc.run().unwrap(); // cadence 1 → two delta snapshots on disk
+        }
+        svc.crash(); // drop drains the commit queue
+    }
+    // Simulate a crash mid-append of a third (delta) record.
+    let seg = dir.join("wal-00000001.log");
+    {
+        let mut f = fs::OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&[42, 1, 0, 0, 9, 9]).unwrap();
+    }
+    let (recovered, count) =
+        DurableScriptedService::recover(1, 2, script, &cfg).unwrap();
+    assert_eq!(count, 1);
+    assert!(recovered.quiescent(1));
+    assert_eq!(
+        fingerprint(recovered.tree(1)),
+        fps[1],
+        "torn delta tail must truncate away, leaving the last complete boundary"
+    );
+}
+
+/// A corrupt base image underneath an intact delta chain must refuse
+/// recovery with a typed error — applying the chain to a damaged base
+/// would resurrect a wrong tree — and never panic.
+#[test]
+fn corrupt_base_under_an_intact_delta_chain_is_a_typed_error() {
+    let base = searched_image(1, 40);
+    let mut cur = base.clone();
+    cur.tree.node_mut(Tree::ROOT).n += 1;
+    cur.meta.thinks = 1;
+    let delta = DeltaImage::compute(&base.tree, &cur).unwrap().encode();
+    let mut base_bytes = base.encode().unwrap();
+    let mid = base_bytes.len() / 2;
+    base_bytes[mid] ^= 0x20; // payload damage → the image checksum fails
+    let dir = temp_dir("corrupt-base");
+    let cfg = StoreConfig::new(&dir);
+    {
+        let (mut wal, _) = Wal::open(&cfg).unwrap();
+        wal.append(&Record::Open { session: 1, image: base_bytes }).unwrap();
+        wal.append(&Record::Delta { session: 1, delta }).unwrap();
+    }
+    match Wal::open(&cfg) {
+        Err(
+            Error::ChecksumMismatch { .. }
+            | Error::Corrupt { .. }
+            | Error::Truncated { .. }
+            | Error::BadMagic,
+        ) => {}
+        Err(other) => panic!("expected a decode-class error, got {other}"),
+        Ok(_) => panic!("corrupt base must refuse recovery"),
+    }
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..2500 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// The group-commit acceptance proof, against the LIVE scheduler: N = 8
+/// concurrent sessions on a shard whose scripted store only commits at
+/// explicit sync points. Every reply is released only after its ticket's
+/// batch is durable (no open completes before the first sync), and one
+/// fsync covers all eight records — total fsyncs ≪ total durable
+/// records, by counter.
+#[test]
+fn group_commit_batches_many_sessions_onto_few_fsyncs() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let disk = ScriptedDisk::new();
+    let opener_disk = disk.clone();
+    let service = SearchService::start_with_store(
+        ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..ServiceConfig::default()
+        },
+        1, // snapshot every think
+        move || {
+            ScriptedStore::reopen(&opener_disk, 4)
+                .map(|(s, r)| (Box::new(s) as Box<dyn SessionStore>, r))
+        },
+    )
+    .unwrap();
+
+    const N: u64 = 8;
+    let opened = Arc::new(AtomicUsize::new(0));
+    let mut joins = Vec::new();
+    for i in 0..N {
+        let h = service.handle();
+        let opened = Arc::clone(&opened);
+        joins.push(std::thread::spawn(move || {
+            let sid = h.open(Box::new(garnet(i)), spec(8, i), opts(i)).unwrap();
+            opened.fetch_add(1, Ordering::SeqCst);
+            let t = h.think(sid, 0).unwrap();
+            assert!(t.quiescent);
+        }));
+    }
+    // All eight Open records are enqueued, none durable: every reply is
+    // held on its ticket.
+    wait_until("8 pending open records", || disk.pending_records() == N as usize);
+    assert_eq!(
+        opened.load(Ordering::SeqCst),
+        0,
+        "an open reply left before its batch was durable"
+    );
+    let (_, batches_before, fsyncs_before) = disk.counters();
+    assert_eq!((batches_before, fsyncs_before), (0, 0));
+    disk.sync(); // ONE fsync admits all eight sessions
+    wait_until("all opens acknowledged", || opened.load(Ordering::SeqCst) == N as usize);
+    let (records, batches, fsyncs) = disk.counters();
+    // (Fast clients may already have enqueued think snapshots — records
+    // only grows — but nothing else has synced.)
+    assert!(records >= N, "one open record per session");
+    assert_eq!((batches, fsyncs), (1, 1), "one batch, one fsync, eight open records");
+
+    // The thinks each log a snapshot; pump sync points until every
+    // client got its (held) reply.
+    wait_until("think waves drain", || {
+        disk.sync();
+        joins.iter().all(|j| j.is_finished())
+    });
+    for j in joins {
+        j.join().expect("session thread panicked");
+    }
+    let (records, _, fsyncs) = disk.counters();
+    assert_eq!(records, 2 * N, "8 opens + 8 snapshots");
+    assert!(
+        fsyncs < records,
+        "group commit must beat one-fsync-per-record ({fsyncs} fsyncs / {records} records)"
+    );
+    let m = service.handle().metrics().unwrap();
+    assert_eq!(m.wal_records, 2 * N);
+    assert_eq!(m.wal_fsyncs, fsyncs);
+    assert!(m.wal_batches >= 1);
+    assert!(m.snapshot_bytes_delta > 0, "per-think snapshots delta-encode");
+}
+
+/// Kill -9 (process-model: drop without close) during an ACTIVE delta
+/// chain: the restarted fleet recovers the session exactly — same
+/// recommendation, counters intact — and the metrics show deltas were
+/// actually what hit the disk.
+#[test]
+fn killed_service_recovers_through_a_live_delta_chain() {
+    let dir = temp_dir("delta-live-recover");
+    let mut cfg = durable_cfg(1, &dir);
+    cfg.snapshot_every = 1;
+    cfg.full_every = 8;
+    let (sid, best_before, bytes_delta) = {
+        let svc = ShardedService::start_durable(cfg.clone()).unwrap();
+        let h = svc.handle();
+        let sid = h.open(Box::new(garnet(6)), spec(24, 6), opts(6)).unwrap();
+        for _ in 0..3 {
+            let t = h.think(sid, 0).unwrap();
+            assert!(t.quiescent);
+        }
+        let m = h.metrics().unwrap();
+        assert!(m.snapshot_bytes_delta > 0, "chain must be live at kill time");
+        assert!(m.wal_batches >= 1);
+        (sid, h.best_action(sid).unwrap(), m.snapshot_bytes_delta)
+        // svc dropped without close: the WAL's view of a SIGKILL.
+    };
+    assert!(bytes_delta > 0);
+    let svc = ShardedService::start_durable(cfg).unwrap();
+    let h = svc.handle();
+    let m = h.metrics().unwrap();
+    assert_eq!(m.sessions_recovered, 1);
+    assert_eq!(
+        h.best_action(sid).unwrap(),
+        best_before,
+        "recovery through base + delta chain must reproduce the recommendation"
+    );
+    let t = h.think(sid, 0).unwrap();
+    assert!(t.quiescent);
+    let c = h.close(sid).unwrap();
+    assert_eq!(c.thinks, 4, "think counter survived the delta-chain recovery");
 }
