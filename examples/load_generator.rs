@@ -16,14 +16,21 @@
 //! amplification counters (records per commit batch, full vs delta
 //! snapshot bytes).
 //!
+//! With `--scrape-every N`, a sidecar thread polls the `metrics` op
+//! every N seconds during each pass and prints *interval deltas*
+//! (thinks/sims/fsyncs since the last scrape, plus the held-reply
+//! gauge and its high-water mark) — a live view of a long run.
+//!
 //! ```bash
 //! cargo run --release --example load_generator -- --clients 32 --sims 32
 //! cargo run --release --example load_generator -- --clients 32 --data-dir /tmp/lg-wal
-//! cargo run --release --example load_generator -- --addr 127.0.0.1:3771
+//! cargo run --release --example load_generator -- --addr 127.0.0.1:3771 --scrape-every 2
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -55,6 +62,12 @@ fn specs() -> Vec<OptSpec> {
             default: Some(""),
         },
         OptSpec { name: "seed", help: "base seed", default: Some("0") },
+        OptSpec {
+            name: "scrape-every",
+            help: "poll the metrics op every N seconds during a pass and print \
+                   interval deltas (thinks/sims/fsyncs) + held-reply gauge (0 = off)",
+            default: Some("0"),
+        },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
 }
@@ -217,7 +230,54 @@ impl RunSummary {
     }
 }
 
-/// Drive one full pass of concurrent episodes against `addr`.
+/// Periodic metrics scraper (`--scrape-every N`): its own connection,
+/// polling the `metrics` op every `every` seconds until `stop` flips,
+/// printing *interval deltas* — what the fleet did since the previous
+/// scrape, not cumulative totals — plus the held-reply gauge/HWM, so a
+/// long pass shows throughput and commit-hold pressure live.
+fn spawn_scraper(addr: &str, every: u64, stop: Arc<AtomicBool>) -> std::thread::JoinHandle<()> {
+    let addr = addr.to_string();
+    std::thread::spawn(move || {
+        let period = Duration::from_secs(every);
+        let (mut prev_thinks, mut prev_sims, mut prev_fsyncs) = (0u64, 0u64, 0u64);
+        let mut tick = 0u64;
+        loop {
+            // Sleep in slices so a finished pass tears down promptly.
+            let deadline = Instant::now() + period;
+            while Instant::now() < deadline {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            tick += every;
+            let scrape = (|| -> Result<(u64, u64, u64, u64, u64)> {
+                let stream = TcpStream::connect(&addr)?;
+                let mut writer = stream.try_clone()?;
+                let mut reader = BufReader::new(stream);
+                let mut retries = 0u64;
+                let m = request(&mut reader, &mut writer, r#"{"op":"metrics"}"#, &mut retries)?;
+                let u = |k: &str| m.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+                Ok((u("thinks"), u("sims"), u("wal_fsyncs"), u("held_replies"), u("held_replies_hwm")))
+            })();
+            match scrape {
+                Ok((thinks, sims, fsyncs, held, hwm)) => {
+                    println!(
+                        "[scrape +{tick}s] Δthinks {} Δsims {} Δfsyncs {} | held replies {held} (hwm {hwm})",
+                        thinks.saturating_sub(prev_thinks),
+                        sims.saturating_sub(prev_sims),
+                        fsyncs.saturating_sub(prev_fsyncs),
+                    );
+                    (prev_thinks, prev_sims, prev_fsyncs) = (thinks, sims, fsyncs);
+                }
+                Err(e) => eprintln!("[scrape +{tick}s] scrape failed: {e:#}"),
+            }
+        }
+    })
+}
+
+/// Drive one full pass of concurrent episodes against `addr`, with an
+/// optional periodic metrics scraper running alongside.
 fn drive(
     label: &'static str,
     addr: &str,
@@ -226,7 +286,11 @@ fn drive(
     seed: u64,
     sims: u64,
     steps: u64,
+    scrape_every: u64,
 ) -> RunSummary {
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper =
+        (scrape_every > 0).then(|| spawn_scraper(addr, scrape_every, Arc::clone(&stop)));
     let start = Instant::now();
     let results: Vec<Result<EpisodeStats>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
@@ -241,6 +305,10 @@ fn drive(
         handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
     });
     let elapsed = start.elapsed();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = scraper {
+        let _ = h.join();
+    }
     let mut sum = RunSummary {
         label,
         ok: 0,
@@ -334,12 +402,13 @@ fn main() -> Result<()> {
     let steps = args.u64("steps")?.max(1);
     let seed = args.u64("seed")?;
     let data_dir = args.str("data-dir")?.to_string();
+    let scrape_every = args.u64("scrape-every")?;
 
     // External server: one pass against it, whatever it is.
     if !args.str("addr")?.is_empty() {
         let addr = args.str("addr")?.to_string();
         println!("driving {clients} concurrent episodes of {env} against {addr} ...");
-        let sum = drive("external", &addr, clients, &env, seed, sims, steps);
+        let sum = drive("external", &addr, clients, &env, seed, sims, steps, scrape_every);
         sum.print();
         return print_server_metrics("external", &addr);
     }
@@ -348,7 +417,7 @@ fn main() -> Result<()> {
     // pass on an identical service, reported side by side.
     println!("driving {clients} concurrent episodes of {env} in-process ...");
     let (mem_service, mem_server, mem_addr) = start_in_process(&args, seed, None)?;
-    let memory = drive("memory", &mem_addr, clients, &env, seed, sims, steps);
+    let memory = drive("memory", &mem_addr, clients, &env, seed, sims, steps, scrape_every);
     memory.print();
     print_server_metrics("memory", &mem_addr)?;
     drop((mem_service, mem_server));
@@ -359,7 +428,7 @@ fn main() -> Result<()> {
         // grow the dir without bound across runs).
         let _ = std::fs::remove_dir_all(&data_dir);
         let (service, server, addr) = start_in_process(&args, seed, Some(&data_dir))?;
-        let durable = drive("durable", &addr, clients, &env, seed, sims, steps);
+        let durable = drive("durable", &addr, clients, &env, seed, sims, steps, scrape_every);
         durable.print();
         print_server_metrics("durable", &addr)?;
         drop((service, server));

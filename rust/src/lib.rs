@@ -26,6 +26,7 @@ pub mod eval;
 pub mod experiments;
 pub mod gameplay;
 pub mod mcts;
+pub mod obs;
 pub mod passrate;
 pub mod runtime;
 pub mod service;

@@ -23,7 +23,7 @@ use wu_uct::experiments::{self, Scale};
 use wu_uct::gameplay::play_episode;
 use wu_uct::mcts::{by_name, SearchSpec};
 use wu_uct::passrate::SystemConfig;
-use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, TcpServer};
+use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, StatsServer, TcpServer};
 use wu_uct::util::cli::{usage, Args, OptSpec};
 
 fn specs() -> Vec<OptSpec> {
@@ -72,6 +72,11 @@ fn specs() -> Vec<OptSpec> {
         OptSpec {
             name: "hosts",
             help: "serve: comma list of shard-host addresses; makes serve a stateless router over them",
+            default: Some(""),
+        },
+        OptSpec {
+            name: "stats-addr",
+            help: "serve: Prometheus text scrape address (empty = off)",
             default: Some(""),
         },
         OptSpec { name: "help", help: "show usage", default: None },
@@ -210,12 +215,20 @@ fn main() -> Result<()> {
                     router.hosts(),
                     hosts.join(", "),
                 );
+                let stats_addr = args.str("stats-addr")?.to_string();
+                let _stats = if stats_addr.is_empty() {
+                    None
+                } else {
+                    let stats = StatsServer::bind(router.handle(), &stats_addr)?;
+                    println!("stats: Prometheus text scrape on http://{}/metrics", stats.local_addr());
+                    Some(stats)
+                };
                 if rebalance_skew > 0.0 {
                     println!(
                         "auto-rebalance: moving sessions across hosts above {rebalance_skew}x mean occupancy"
                     );
                 }
-                println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, ping");
+                println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, ping");
                 server.join(); // foreground until killed
                 return Ok(());
             }
@@ -246,6 +259,14 @@ fn main() -> Result<()> {
                 "wu-uct {command}: listening on {} ({shards} shard(s), each {exp_workers} expansion / {sim_workers} simulation workers)",
                 server.local_addr(),
             );
+            let stats_addr = args.str("stats-addr")?.to_string();
+            let _stats = if stats_addr.is_empty() {
+                None
+            } else {
+                let stats = StatsServer::bind(service.handle(), &stats_addr)?;
+                println!("stats: Prometheus text scrape on http://{}/metrics", stats.local_addr());
+                Some(stats)
+            };
             if command == "shard-host" {
                 println!(
                     "shard host: speaks the cross-process ops (export, import, install, health) \
@@ -267,7 +288,7 @@ fn main() -> Result<()> {
             if rebalance_skew > 0.0 {
                 println!("auto-rebalance: moving sessions above {rebalance_skew}x mean occupancy");
             }
-            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, ping");
+            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, ping");
             server.join(); // foreground until killed
         }
         "atari-table1" => {

@@ -1,0 +1,313 @@
+//! Fixed log-scale-bucket latency histogram.
+//!
+//! Bucket `i` (for `i < NUM_BUCKETS - 1`) covers values in
+//! `(upper(i-1), upper(i)]` milliseconds with `upper(i) = 0.01 ·
+//! 10^(i/5)`; bucket 0 additionally absorbs everything `≤ 0.01 ms`
+//! (including zero and garbage negatives), and the last bucket is the
+//! overflow for anything above `upper(NUM_BUCKETS - 2)` = 100 s. Five
+//! buckets per decade bound the relative quantile error at
+//! `10^(1/5) ≈ 1.585`, and seven decades (0.01 ms .. 100 s) cover
+//! everything from a sub-microsecond in-process reply to a wedged
+//! fsync.
+//!
+//! The layout is a protocol constant: two histograms merge by plain
+//! bucket addition ([`Histogram::merge`]), which is what lets
+//! `ServiceMetrics::aggregate` combine shard and host distributions
+//! *exactly* instead of taking the worst shard's percentile. Keep
+//! `NUM_BUCKETS`/`BUCKET_RATIO` stable or version the wire format.
+
+/// Buckets per decade; the relative resolution is `10^(1/PER_DECADE)`.
+pub const PER_DECADE: usize = 5;
+
+/// Decades covered above the first bucket (0.01 ms .. 100 s).
+const DECADES: usize = 7;
+
+/// Total buckets: bucket 0 (`≤ 0.01 ms`), `PER_DECADE · DECADES`
+/// log-spaced buckets, and one overflow bucket.
+pub const NUM_BUCKETS: usize = PER_DECADE * DECADES + 2;
+
+/// Upper bound of bucket 0 in milliseconds.
+const FIRST_UPPER_MS: f64 = 0.01;
+
+/// Ratio between adjacent bucket upper bounds (`10^(1/5)`).
+pub const BUCKET_RATIO: f64 = 1.584_893_192_461_113_5;
+
+/// Upper bound (inclusive) of bucket `i` in milliseconds; the overflow
+/// bucket reports `f64::INFINITY`.
+pub fn bucket_upper_ms(i: usize) -> f64 {
+    if i >= NUM_BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        FIRST_UPPER_MS * 10f64.powf(i as f64 / PER_DECADE as f64)
+    }
+}
+
+fn bucket_index(ms: f64) -> usize {
+    if !(ms > FIRST_UPPER_MS) {
+        // NaN, negatives, zero, and genuinely tiny values all land in
+        // bucket 0; `!(..)` keeps NaN out of the log path.
+        return 0;
+    }
+    let pos = (ms / FIRST_UPPER_MS).log10() * PER_DECADE as f64;
+    let i = (pos.ceil().max(0.0) as usize).min(NUM_BUCKETS - 1);
+    // Float guard: if rounding put us one bucket low, bump.
+    if i < NUM_BUCKETS - 1 && bucket_upper_ms(i) < ms {
+        i + 1
+    } else {
+        i
+    }
+}
+
+/// A mergeable latency distribution. `record` is O(1) and allocates
+/// nothing; `merge` is exact (bucket addition); `percentile_ms` walks
+/// the fixed bucket array — O(buckets), independent of sample count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: [u64; NUM_BUCKETS],
+    count: u64,
+    sum_ms: f64,
+    min_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: [0; NUM_BUCKETS],
+            count: 0,
+            sum_ms: 0.0,
+            min_ms: f64::INFINITY,
+            max_ms: 0.0,
+        }
+    }
+
+    /// Record one sample in milliseconds.
+    pub fn record(&mut self, ms: f64) {
+        let ms = if ms.is_finite() && ms >= 0.0 { ms } else { 0.0 };
+        self.counts[bucket_index(ms)] += 1;
+        self.count += 1;
+        self.sum_ms += ms;
+        self.min_ms = self.min_ms.min(ms);
+        self.max_ms = self.max_ms.max(ms);
+    }
+
+    /// Fold `other` into `self`. Exact: the result is identical to a
+    /// histogram that recorded both sample streams directly.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+        self.min_ms = self.min_ms.min(other.min_ms);
+        self.max_ms = self.max_ms.max(other.max_ms);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ms
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_ms
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    /// Nearest-rank percentile (same rank convention as the raw-sample
+    /// [`crate::service::metrics::percentile`] helper), reported as the
+    /// upper bound of the bucket holding that rank, clamped to the
+    /// observed maximum. The true sample at that rank lies within one
+    /// bucket ratio below the returned value.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return if i == NUM_BUCKETS - 1 {
+                    self.max_ms
+                } else {
+                    bucket_upper_ms(i).min(self.max_ms)
+                };
+            }
+        }
+        self.max_ms
+    }
+
+    /// Raw bucket counts (index aligned with [`bucket_upper_ms`]).
+    pub fn bucket_counts(&self) -> &[u64; NUM_BUCKETS] {
+        &self.counts
+    }
+
+    /// Sparse `(bucket index, count)` pairs for the wire — most
+    /// histograms occupy a handful of the 37 buckets.
+    pub fn sparse(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Rebuild from wire fields (inverse of the sparse encoding).
+    /// Out-of-range bucket indices are dropped rather than panicking —
+    /// the wire is untrusted.
+    pub fn from_wire(
+        count: u64,
+        sum_ms: f64,
+        min_ms: f64,
+        max_ms: f64,
+        sparse: &[(usize, u64)],
+    ) -> Histogram {
+        let mut h = Histogram::new();
+        for &(i, c) in sparse {
+            if i < NUM_BUCKETS {
+                h.counts[i] += c;
+            }
+        }
+        h.count = count;
+        h.sum_ms = sum_ms;
+        h.min_ms = if count == 0 { f64::INFINITY } else { min_ms };
+        h.max_ms = max_ms;
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.min_ms(), 0.0);
+        assert_eq!(h.max_ms(), 0.0);
+        assert_eq!(h.percentile_ms(99.0), 0.0);
+        assert!(h.sparse().is_empty());
+    }
+
+    #[test]
+    fn bucket_bounds_are_monotone_and_cover_samples() {
+        for i in 1..NUM_BUCKETS - 1 {
+            assert!(bucket_upper_ms(i) > bucket_upper_ms(i - 1));
+        }
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..2000 {
+            let ms = (rng.next_u64() % 10_000_000) as f64 / 100.0; // 0 .. 100 s
+            let b = bucket_index(ms);
+            assert!(ms <= bucket_upper_ms(b), "sample {ms} above bucket {b} upper");
+            if b > 0 {
+                assert!(ms > bucket_upper_ms(b - 1), "sample {ms} below bucket {b} lower");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_samples_land_in_bucket_zero() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-5.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.bucket_counts()[0], 4);
+    }
+
+    #[test]
+    fn overflow_bucket_catches_huge_samples() {
+        let mut h = Histogram::new();
+        h.record(1.0e9);
+        assert_eq!(h.bucket_counts()[NUM_BUCKETS - 1], 1);
+        assert_eq!(h.percentile_ms(50.0), 1.0e9); // overflow reports observed max
+    }
+
+    #[test]
+    fn merge_equals_pooled_recording() {
+        let mut rng = SplitMix64::new(42);
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut pooled = Histogram::new();
+        for i in 0..5000 {
+            let ms = 0.05 + (rng.next_u64() % 1_000_000) as f64 / 200.0;
+            pooled.record(ms);
+            if i % 3 == 0 { a.record(ms) } else { b.record(ms) }
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, pooled, "merge must be exact, not approximate");
+    }
+
+    #[test]
+    fn percentile_within_one_bucket_of_true_value() {
+        let mut rng = SplitMix64::new(3);
+        let mut h = Histogram::new();
+        let mut raw: Vec<f64> = Vec::new();
+        for _ in 0..4000 {
+            let ms = 0.05 + (rng.next_u64() % 500_000) as f64 / 100.0;
+            h.record(ms);
+            raw.push(ms);
+        }
+        raw.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let rank = ((p / 100.0) * (raw.len() - 1) as f64).round() as usize;
+            let truth = raw[rank];
+            let est = h.percentile_ms(p);
+            assert!(truth <= est * (1.0 + 1e-12), "p{p}: true {truth} > estimate {est}");
+            assert!(
+                est <= truth * BUCKET_RATIO * (1.0 + 1e-12),
+                "p{p}: estimate {est} more than one bucket above true {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_sparse_roundtrip_is_lossless() {
+        let mut h = Histogram::new();
+        for ms in [0.02, 0.5, 0.5, 17.0, 200.0, 90_000.0, 1.0e7] {
+            h.record(ms);
+        }
+        let back = Histogram::from_wire(h.count(), h.sum_ms(), h.min_ms(), h.max_ms(), &h.sparse());
+        assert_eq!(back, h);
+        let empty = Histogram::from_wire(0, 0.0, 0.0, 0.0, &[]);
+        assert_eq!(empty, Histogram::new());
+        // Hostile bucket index is dropped, not a panic.
+        let hostile = Histogram::from_wire(1, 1.0, 1.0, 1.0, &[(usize::MAX, 9)]);
+        assert_eq!(hostile.bucket_counts().iter().sum::<u64>(), 0);
+    }
+}

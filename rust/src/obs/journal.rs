@@ -1,0 +1,269 @@
+//! Bounded ring journal of typed scheduler events.
+//!
+//! Single-writer by construction: a `Journal` is owned by its scheduler
+//! thread (or the testkit's virtual-time executor) and every record
+//! happens there, so there is no lock and no atomics on the hot path —
+//! "lock-light" means the synchronization cost is zero because the
+//! design puts all writes on one thread, and reads travel the same
+//! request inbox every other scheduler query uses.
+//!
+//! Events are keyed three ways so a timeline reconstructs by filtering:
+//! the session id, the shard-tagged global task id (for pool tasks),
+//! and an optional caller-supplied trace id which the router propagates
+//! across hosts. When the ring wraps, the oldest events drop and
+//! `dropped()` counts them — a trace of a recent think is complete as
+//! long as the ring (default 4096 events/shard) outlives the think.
+
+use std::collections::VecDeque;
+
+/// What happened. Names (`EventKind::name`) are the wire/scrape
+/// vocabulary; keep them stable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A think request was admitted for a session (`arg` = sim budget).
+    Admit,
+    /// The fair queue selected the session for one driver tick.
+    Select,
+    /// An expansion task was handed to the pool (`task` = global id).
+    ExpandIssued,
+    /// An expansion result was absorbed (`arg` = task latency in µs).
+    ExpandDone,
+    /// A simulation task was handed to the pool (`task` = global id).
+    SimIssued,
+    /// A simulation result was absorbed (`arg` = task latency in µs).
+    SimDone,
+    /// A simulation was shed to the shared steal queue (`arg` = owner shard).
+    StealShed,
+    /// A stolen simulation's result arrived from shard `arg`.
+    StealClaim,
+    /// Incomplete-visit backprop applied for an absorbed result.
+    Backprop,
+    /// The think finished its budget; quiescent (`arg` = sims done).
+    ThinkDone,
+    /// The reply was parked awaiting WAL durability (`arg` = commit seq).
+    ReplyHeld,
+    /// A WAL record was appended for the session (`arg` = commit seq).
+    WalAppend,
+    /// The group committer fsynced a batch (`arg` = durable seq).
+    WalFsync,
+    /// A parked reply's commit seq became durable (`arg` = commit seq).
+    Durable,
+    /// The reply left the scheduler (`arg` = µs held on the ticket, 0 if
+    /// it was never parked).
+    ReplySent,
+    /// Migration: session exported (`arg` = image bytes).
+    MigrateExport,
+    /// Migration: session imported (`arg` = image bytes).
+    MigrateImport,
+    /// Migration: source forgot the session after handoff.
+    MigrateForget,
+    /// A snapshot was written (`arg` = snapshot bytes).
+    Snapshot,
+    /// A session opened (`arg` = shard index).
+    SessionOpen,
+    /// A session closed.
+    SessionClose,
+}
+
+impl EventKind {
+    /// Stable wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::Select => "select",
+            EventKind::ExpandIssued => "expand_issued",
+            EventKind::ExpandDone => "expand_done",
+            EventKind::SimIssued => "sim_issued",
+            EventKind::SimDone => "sim_done",
+            EventKind::StealShed => "steal_shed",
+            EventKind::StealClaim => "steal_claim",
+            EventKind::Backprop => "backprop",
+            EventKind::ThinkDone => "think_done",
+            EventKind::ReplyHeld => "reply_held",
+            EventKind::WalAppend => "wal_append",
+            EventKind::WalFsync => "wal_fsync",
+            EventKind::Durable => "durable",
+            EventKind::ReplySent => "reply_sent",
+            EventKind::MigrateExport => "migrate_export",
+            EventKind::MigrateImport => "migrate_import",
+            EventKind::MigrateForget => "migrate_forget",
+            EventKind::Snapshot => "snapshot",
+            EventKind::SessionOpen => "session_open",
+            EventKind::SessionClose => "session_close",
+        }
+    }
+
+    /// Inverse of [`EventKind::name`] (for decoding `trace` replies).
+    pub fn from_name(name: &str) -> Option<EventKind> {
+        Some(match name {
+            "admit" => EventKind::Admit,
+            "select" => EventKind::Select,
+            "expand_issued" => EventKind::ExpandIssued,
+            "expand_done" => EventKind::ExpandDone,
+            "sim_issued" => EventKind::SimIssued,
+            "sim_done" => EventKind::SimDone,
+            "steal_shed" => EventKind::StealShed,
+            "steal_claim" => EventKind::StealClaim,
+            "backprop" => EventKind::Backprop,
+            "think_done" => EventKind::ThinkDone,
+            "reply_held" => EventKind::ReplyHeld,
+            "wal_append" => EventKind::WalAppend,
+            "wal_fsync" => EventKind::WalFsync,
+            "durable" => EventKind::Durable,
+            "reply_sent" => EventKind::ReplySent,
+            "migrate_export" => EventKind::MigrateExport,
+            "migrate_import" => EventKind::MigrateImport,
+            "migrate_forget" => EventKind::MigrateForget,
+            "snapshot" => EventKind::Snapshot,
+            "session_open" => EventKind::SessionOpen,
+            "session_close" => EventKind::SessionClose,
+            _ => return None,
+        })
+    }
+
+    /// Every kind, for exhaustive wire tests.
+    pub fn all() -> &'static [EventKind] {
+        &[
+            EventKind::Admit,
+            EventKind::Select,
+            EventKind::ExpandIssued,
+            EventKind::ExpandDone,
+            EventKind::SimIssued,
+            EventKind::SimDone,
+            EventKind::StealShed,
+            EventKind::StealClaim,
+            EventKind::Backprop,
+            EventKind::ThinkDone,
+            EventKind::ReplyHeld,
+            EventKind::WalAppend,
+            EventKind::WalFsync,
+            EventKind::Durable,
+            EventKind::ReplySent,
+            EventKind::MigrateExport,
+            EventKind::MigrateImport,
+            EventKind::MigrateForget,
+            EventKind::Snapshot,
+            EventKind::SessionOpen,
+            EventKind::SessionClose,
+        ]
+    }
+}
+
+/// One journal entry. `at_us` is microseconds since the owning
+/// scheduler's start (virtual ticks in the testkit); `task` is the
+/// shard-tagged global task id or 0 for session-scoped events; `trace`
+/// is the caller-supplied trace id or 0.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub at_us: u64,
+    pub session: u64,
+    pub task: u64,
+    pub trace: u64,
+    pub kind: EventKind,
+    pub arg: u64,
+}
+
+/// Bounded ring of [`Event`]s; oldest entries drop when full.
+#[derive(Debug)]
+pub struct Journal {
+    events: VecDeque<Event>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// Default ring capacity per shard.
+pub const DEFAULT_JOURNAL_CAP: usize = 4096;
+
+impl Default for Journal {
+    fn default() -> Journal {
+        Journal::new(DEFAULT_JOURNAL_CAP)
+    }
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Journal {
+        let cap = cap.max(1);
+        Journal { events: VecDeque::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    /// Append one event; drops the oldest entry past capacity.
+    pub fn record(&mut self, event: Event) {
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(event);
+    }
+
+    /// Events recorded then evicted by the ring bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The newest `limit` events (oldest-first), optionally filtered to
+    /// one session. Trace-tagged events always match their session
+    /// filter via the session field, so a cross-shard think filtered by
+    /// session id still shows its stolen-task events — those carry the
+    /// home session id, not the thief's.
+    pub fn query(&self, session: Option<u64>, limit: usize) -> Vec<Event> {
+        let mut out: Vec<Event> = match session {
+            Some(s) => self.events.iter().filter(|e| e.session == s).cloned().collect(),
+            None => self.events.iter().cloned().collect(),
+        };
+        if out.len() > limit {
+            out.drain(..out.len() - limit);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(at_us: u64, session: u64, kind: EventKind) -> Event {
+        Event { at_us, session, task: 0, trace: 0, kind, arg: 0 }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut j = Journal::new(3);
+        for i in 0..5 {
+            j.record(ev(i, 1, EventKind::Select));
+        }
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.dropped(), 2);
+        let got = j.query(None, 10);
+        assert_eq!(got.iter().map(|e| e.at_us).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn query_filters_by_session_and_limits_to_newest() {
+        let mut j = Journal::new(16);
+        for i in 0..8 {
+            j.record(ev(i, i % 2, EventKind::Admit));
+        }
+        let s1 = j.query(Some(1), 10);
+        assert_eq!(s1.iter().map(|e| e.at_us).collect::<Vec<_>>(), vec![1, 3, 5, 7]);
+        let newest = j.query(Some(1), 2);
+        assert_eq!(newest.iter().map(|e| e.at_us).collect::<Vec<_>>(), vec![5, 7]);
+    }
+
+    #[test]
+    fn kind_names_roundtrip_and_are_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for &k in EventKind::all() {
+            assert!(seen.insert(k.name()), "duplicate wire name {}", k.name());
+            assert_eq!(EventKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(EventKind::from_name("definitely_not_a_kind"), None);
+    }
+}

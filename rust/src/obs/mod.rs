@@ -1,0 +1,34 @@
+//! Structured observability: mergeable latency histograms and a typed
+//! per-shard event journal.
+//!
+//! Two primitives, both chosen for the same property — **aggregation
+//! without loss on the hot path**:
+//!
+//! - [`Histogram`]: fixed log-scale buckets (5 per decade from 0.01 ms).
+//!   Recording is O(1) with zero allocation; merging two histograms is
+//!   exact bucket addition, so fleet-wide percentiles computed from the
+//!   merged histogram equal the percentiles of the pooled samples to
+//!   within one bucket's relative resolution (a factor of 10^(1/5) ≈
+//!   1.58). This replaces the old `LatencyStats` sample vector, whose
+//!   per-scrape clone+sort ran on the scheduler dispatch thread and
+//!   whose cross-shard aggregate could only take the *worst* shard's
+//!   percentile.
+//! - [`Journal`]: a bounded ring of typed [`Event`]s recorded by the
+//!   scheduler thread (single-writer, so no locking). Events carry the
+//!   shard-tagged global task id, the session id, and an optional
+//!   caller-supplied trace id, so one think's causal timeline — admit →
+//!   select → expand/sim issue+done → backprop → reply-held → durable →
+//!   reply-sent, plus WAL batch/fsync and steal/migration steps —
+//!   reconstructs by filtering and sorting on `at_us`. The `trace` wire
+//!   op exposes the journal; the router stitches per-host journals into
+//!   one cross-host timeline by the propagated trace id.
+//!
+//! Timestamps are microseconds since an arbitrary per-process origin
+//! (the scheduler's start instant in production, the virtual clock in
+//! the testkit), which keeps deterministic tests byte-stable.
+
+pub mod hist;
+pub mod journal;
+
+pub use hist::{bucket_upper_ms, Histogram, BUCKET_RATIO, NUM_BUCKETS};
+pub use journal::{Event, EventKind, Journal};

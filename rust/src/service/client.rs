@@ -26,9 +26,10 @@ use std::time::Duration;
 use anyhow::{anyhow, Context as _, Result};
 
 use crate::mcts::common::SearchSpec;
+use crate::obs::Event;
 use crate::service::json::Json;
 use crate::service::metrics::ServiceMetrics;
-use crate::service::proto::{image_from_hex, image_to_hex, metrics_from_json};
+use crate::service::proto::{event_from_json, image_from_hex, image_to_hex, metrics_from_json};
 use crate::service::scheduler::{
     AdvanceReply, Busy, CloseReply, SessionOptions, SessionStat, ThinkReply,
 };
@@ -256,7 +257,18 @@ impl HostClient {
     }
 
     pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
-        let line = format!(r#"{{"op":"think","session":{session},"sims":{sims}}}"#);
+        self.think_traced(session, sims, 0)
+    }
+
+    /// [`HostClient::think`] carrying a trace id the remote host stamps
+    /// on every journal event of the think (0 = untraced, omitted from
+    /// the wire so older hosts still parse the request).
+    pub fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
+        let line = if trace == 0 {
+            format!(r#"{{"op":"think","session":{session},"sims":{sims}}}"#)
+        } else {
+            format!(r#"{{"op":"think","session":{session},"sims":{sims},"trace":{trace}}}"#)
+        };
         let v = self.ok_call_once(&line, session)?;
         let field = |key: &str| {
             v.get(key)
@@ -341,6 +353,23 @@ impl HostClient {
     pub fn metrics(&self) -> Result<ServiceMetrics> {
         let v = self.ok_call(r#"{"op":"metrics"}"#, 0)?;
         Ok(metrics_from_json(&v))
+    }
+
+    /// Read the remote event journal (idempotent, so a lost reply
+    /// retries). `session = None` tails the whole host.
+    pub fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<Event>> {
+        let line = match session {
+            Some(sid) => format!(r#"{{"op":"trace","session":{sid},"limit":{limit}}}"#),
+            None => format!(r#"{{"op":"trace","limit":{limit}}}"#),
+        };
+        let v = self.ok_call(&line, session.unwrap_or(0))?;
+        let Some(Json::Arr(raw)) = v.get("events") else {
+            anyhow::bail!("host {}: trace reply missing events", self.addr);
+        };
+        raw.iter()
+            .map(event_from_json)
+            .collect::<Result<Vec<Event>>>()
+            .with_context(|| format!("host {} sent a malformed trace event", self.addr))
     }
 
     pub fn health(&self) -> Result<RemoteHealth> {
@@ -455,6 +484,22 @@ mod tests {
         assert!(t.quiescent, "unsealed session must serve again");
         // Unsealing an unsealed session is a no-op, not an error.
         client.install(sid, false).unwrap();
+        client.close(sid).unwrap();
+    }
+
+    #[test]
+    fn traced_think_timeline_survives_the_wire() {
+        use crate::obs::EventKind;
+        let (_svc, _server, client) = start_host();
+        let opts = SessionOptions { env_seed: 2, ..SessionOptions::default() };
+        let sid = client.open_with_id(11, "garnet", &spec(2), &opts).unwrap();
+        client.think_traced(sid, 8, 0xFEED).unwrap();
+        let events = client.trace(Some(sid), 512).unwrap();
+        assert!(!events.is_empty());
+        assert!(events.iter().all(|e| e.session == sid));
+        let admit = events.iter().find(|e| e.kind == EventKind::Admit).unwrap();
+        assert_eq!(admit.trace, 0xFEED);
+        assert!(events.iter().any(|e| e.kind == EventKind::ReplySent));
         client.close(sid).unwrap();
     }
 

@@ -1,61 +1,24 @@
-//! Service observability: latency accumulators and the metrics snapshot
-//! reported by the `metrics` op / `wu-uct serve`.
+//! Service observability: the metrics snapshot reported by the
+//! `metrics` op / `wu-uct serve`, built on the mergeable log-bucket
+//! histograms of [`crate::obs`].
+//!
+//! History note: latencies used to be kept as a 65k-sample vector
+//! (`LatencyStats`) that was cloned and sorted on the scheduler
+//! dispatch thread on every scrape, and whose cross-shard aggregate
+//! could only take the *worst* shard's percentile. Both problems are
+//! gone: recording is O(1) into fixed buckets, a scrape reads the
+//! buckets without touching samples, and [`ServiceMetrics::aggregate`]
+//! merges distributions exactly by bucket addition before deriving
+//! fleet percentiles.
 
+use std::fmt::Write as _;
 use std::time::Duration;
 
-/// Running latency record (milliseconds). Unbounded in principle; the
-/// scheduler halves it by subsampling past [`LatencyStats::CAP`] so a
-/// long-lived service cannot grow without bound.
-#[derive(Debug, Clone, Default)]
-pub struct LatencyStats {
-    samples_ms: Vec<f64>,
-    pub count: u64,
-}
-
-impl LatencyStats {
-    /// Soft cap on retained samples; beyond it every other sample is
-    /// dropped (keeps percentiles representative at bounded memory).
-    pub const CAP: usize = 65_536;
-
-    pub fn record(&mut self, d: Duration) {
-        self.count += 1;
-        self.samples_ms.push(d.as_secs_f64() * 1e3);
-        if self.samples_ms.len() > Self::CAP {
-            let mut keep_odd = false;
-            self.samples_ms.retain(|_| {
-                keep_odd = !keep_odd;
-                keep_odd
-            });
-        }
-    }
-
-    pub fn mean_ms(&self) -> f64 {
-        crate::util::stats::mean(&self.samples_ms)
-    }
-
-    /// Nearest-rank percentile over retained samples; 0.0 when empty.
-    pub fn percentile_ms(&self, p: f64) -> f64 {
-        percentile(&self.samples_ms, p)
-    }
-
-    /// (mean, p50, p90, p99) with a single sort — what the scheduler's
-    /// metrics snapshot wants without three separate sort passes on its
-    /// dispatch thread.
-    pub fn summary_ms(&self) -> (f64, f64, f64, f64) {
-        if self.samples_ms.is_empty() {
-            return (0.0, 0.0, 0.0, 0.0);
-        }
-        let mut v = self.samples_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        let rank = |p: f64| {
-            let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-            v[idx.min(v.len() - 1)]
-        };
-        (crate::util::stats::mean(&v), rank(50.0), rank(90.0), rank(99.0))
-    }
-}
+use crate::obs::{bucket_upper_ms, Histogram, NUM_BUCKETS};
 
 /// Nearest-rank percentile (`p` in [0, 100]) of `xs`; 0.0 when empty.
+/// (Raw-sample helper for benches and tests; the service itself keeps
+/// histograms, not samples.)
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -111,6 +74,12 @@ pub struct ServiceMetrics {
     /// write-amplification win is this staying far below what the same
     /// snapshots would have cost as full images.
     pub snapshot_bytes_delta: u64,
+    /// Replies currently parked on WAL commit tickets (gauge).
+    pub held_replies: usize,
+    /// Most replies ever parked at once on this shard (per-shard
+    /// high-water mark; the fleet aggregate takes the worst shard since
+    /// the cap being tuned from this number is per-shard).
+    pub held_replies_hwm: usize,
     /// Remote shard hosts behind this process (router tier only; 0 for a
     /// host or an unsharded service).
     pub hosts: usize,
@@ -121,10 +90,25 @@ pub struct ServiceMetrics {
     pub sessions_per_sec: f64,
     pub thinks_per_sec: f64,
     pub sims_per_sec: f64,
+    /// Think-latency summary scalars, derived from `think_hist` (kept
+    /// alongside the buckets for cheap display and older consumers).
     pub think_ms_mean: f64,
     pub think_ms_p50: f64,
     pub think_ms_p90: f64,
     pub think_ms_p99: f64,
+    /// Full think-latency distribution (wall time of a `think` op inside
+    /// the scheduler, admit → quiescent).
+    pub think_hist: Histogram,
+    /// Expansion-task latency (issue → absorbed result).
+    pub expand_hist: Histogram,
+    /// Simulation-task latency (issue → absorbed result, stolen tasks
+    /// included — the round trip through a peer shard is real latency).
+    pub sim_hist: Histogram,
+    /// Time replies spent parked on commit tickets awaiting fsync
+    /// durability. Thinks that never waited record nothing here, so
+    /// `commit_hold_hist.count()` ≤ `thinks` and the gap is the fraction
+    /// of replies the group commit already covered when they finished.
+    pub commit_hold_hist: Histogram,
     /// Busy fraction of the shared pools (paper Fig. 2's occupancy).
     pub exp_occupancy: f64,
     pub sim_occupancy: f64,
@@ -135,18 +119,29 @@ pub struct ServiceMetrics {
 }
 
 impl ServiceMetrics {
+    /// Refresh the scalar latency summary from `think_hist` (call after
+    /// mutating the histograms).
+    pub fn derive_latency_scalars(&mut self) {
+        self.think_ms_mean = self.think_hist.mean_ms();
+        self.think_ms_p50 = self.think_hist.percentile_ms(50.0);
+        self.think_ms_p90 = self.think_hist.percentile_ms(90.0);
+        self.think_ms_p99 = self.think_hist.percentile_ms(99.0);
+    }
+
     /// Fold per-shard snapshots into one fleet report: counters and
     /// worker/queue gauges sum; rates are recomputed from the summed
-    /// counters over the longest shard uptime; the latency mean is
-    /// think-weighted and each percentile takes the worst shard (a
-    /// conservative upper bound — exact cross-shard percentiles would
-    /// need the raw samples).
+    /// counters over the longest shard uptime; latency distributions
+    /// merge *exactly* by bucket addition and the fleet percentiles are
+    /// read off the merged histogram — not the worst shard's value.
+    /// (Legacy payloads with no buckets fall back to a think-weighted
+    /// mean and worst-shard percentiles, the best that scalars allow.)
     pub fn aggregate(shards: &[ServiceMetrics]) -> ServiceMetrics {
         let mut total = ServiceMetrics::default();
         if shards.is_empty() {
             return total;
         }
         let mut weighted_mean = 0.0;
+        let mut worst = (0.0f64, 0.0f64, 0.0f64);
         for m in shards {
             total.uptime = total.uptime.max(m.uptime);
             total.shards += m.shards.max(1);
@@ -167,12 +162,18 @@ impl ServiceMetrics {
             total.wal_fsyncs += m.wal_fsyncs;
             total.snapshot_bytes_full += m.snapshot_bytes_full;
             total.snapshot_bytes_delta += m.snapshot_bytes_delta;
+            total.held_replies += m.held_replies;
+            total.held_replies_hwm = total.held_replies_hwm.max(m.held_replies_hwm);
             total.hosts += m.hosts;
             total.host_unreachable += m.host_unreachable;
+            total.think_hist.merge(&m.think_hist);
+            total.expand_hist.merge(&m.expand_hist);
+            total.sim_hist.merge(&m.sim_hist);
+            total.commit_hold_hist.merge(&m.commit_hold_hist);
             weighted_mean += m.think_ms_mean * m.thinks as f64;
-            total.think_ms_p50 = total.think_ms_p50.max(m.think_ms_p50);
-            total.think_ms_p90 = total.think_ms_p90.max(m.think_ms_p90);
-            total.think_ms_p99 = total.think_ms_p99.max(m.think_ms_p99);
+            worst.0 = worst.0.max(m.think_ms_p50);
+            worst.1 = worst.1.max(m.think_ms_p90);
+            worst.2 = worst.2.max(m.think_ms_p99);
             // Occupancies average weighted by pool size.
             total.exp_occupancy += m.exp_occupancy * m.expansion_workers as f64;
             total.sim_occupancy += m.sim_occupancy * m.simulation_workers as f64;
@@ -185,11 +186,20 @@ impl ServiceMetrics {
         total.sessions_per_sec = total.sessions_closed as f64 / secs;
         total.thinks_per_sec = total.thinks as f64 / secs;
         total.sims_per_sec = total.sims as f64 / secs;
-        total.think_ms_mean = if total.thinks > 0 {
-            weighted_mean / total.thinks as f64
+        if total.think_hist.is_empty() {
+            // Legacy scalars-only inputs: think-weighted mean, worst-shard
+            // percentiles (conservative upper bound).
+            total.think_ms_mean = if total.thinks > 0 {
+                weighted_mean / total.thinks as f64
+            } else {
+                0.0
+            };
+            total.think_ms_p50 = worst.0;
+            total.think_ms_p90 = worst.1;
+            total.think_ms_p99 = worst.2;
         } else {
-            0.0
-        };
+            total.derive_latency_scalars();
+        }
         if total.expansion_workers > 0 {
             total.exp_occupancy /= total.expansion_workers as f64;
         }
@@ -198,11 +208,90 @@ impl ServiceMetrics {
         }
         total
     }
+
+    /// Prometheus text exposition (`text/plain; version=0.0.4`): every
+    /// counter/gauge plus the four latency distributions as classic
+    /// cumulative-bucket histograms. Served by `wu-uct serve
+    /// --stats-addr` and consumed by the CI smoke jobs.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut gauge = |name: &str, help: &str, value: f64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {value}");
+        };
+        gauge("wuuct_uptime_seconds", "seconds since scheduler start", self.uptime.as_secs_f64());
+        gauge("wuuct_shards", "scheduler shards in this report", self.shards as f64);
+        gauge("wuuct_sessions_open", "sessions currently open", self.sessions_open as f64);
+        gauge("wuuct_sessions_opened_total", "sessions ever opened", self.sessions_opened as f64);
+        gauge("wuuct_sessions_closed_total", "sessions ever closed", self.sessions_closed as f64);
+        gauge(
+            "wuuct_sessions_rejected_total",
+            "opens rejected by admission control",
+            self.sessions_rejected as f64,
+        );
+        gauge("wuuct_thinks_total", "completed thinks", self.thinks as f64);
+        gauge("wuuct_sims_total", "completed simulations", self.sims as f64);
+        gauge("wuuct_sims_stolen_total", "simulations run for peer shards", self.sims_stolen as f64);
+        gauge("wuuct_sims_shed_total", "simulations shed to the steal queue", self.sims_shed as f64);
+        gauge("wuuct_sessions_recovered_total", "sessions rebuilt from the WAL", self.sessions_recovered as f64);
+        gauge("wuuct_migrations_in_total", "sessions imported by migration", self.migrations_in as f64);
+        gauge("wuuct_migrations_out_total", "sessions exported by migration", self.migrations_out as f64);
+        gauge("wuuct_snapshots_total", "session images written to the WAL", self.snapshots as f64);
+        gauge("wuuct_wal_records_total", "WAL records appended", self.wal_records as f64);
+        gauge("wuuct_wal_batches_total", "group-commit batches resolved", self.wal_batches as f64);
+        gauge("wuuct_wal_fsyncs_total", "fsync syscalls issued by the store", self.wal_fsyncs as f64);
+        gauge("wuuct_snapshot_bytes_full_total", "bytes of full images", self.snapshot_bytes_full as f64);
+        gauge("wuuct_snapshot_bytes_delta_total", "bytes of delta images", self.snapshot_bytes_delta as f64);
+        gauge("wuuct_held_replies", "replies parked on commit tickets", self.held_replies as f64);
+        gauge("wuuct_held_replies_hwm", "most replies ever parked at once", self.held_replies_hwm as f64);
+        gauge("wuuct_hosts", "remote shard hosts", self.hosts as f64);
+        gauge("wuuct_host_unreachable_total", "calls failed host-unreachable", self.host_unreachable as f64);
+        gauge("wuuct_sessions_per_sec", "episodes retired per second", self.sessions_per_sec);
+        gauge("wuuct_thinks_per_sec", "thinks per second", self.thinks_per_sec);
+        gauge("wuuct_sims_per_sec", "simulations per second", self.sims_per_sec);
+        gauge("wuuct_exp_occupancy", "expansion pool busy fraction", self.exp_occupancy);
+        gauge("wuuct_sim_occupancy", "simulation pool busy fraction", self.sim_occupancy);
+        gauge("wuuct_expansion_workers", "expansion workers", self.expansion_workers as f64);
+        gauge("wuuct_simulation_workers", "simulation workers", self.simulation_workers as f64);
+        gauge("wuuct_pending_expansions", "expansion tasks in flight", self.pending_expansions as f64);
+        gauge("wuuct_pending_simulations", "simulation tasks in flight", self.pending_simulations as f64);
+        render_histogram(&mut out, "wuuct_think_latency_ms", "think latency", &self.think_hist);
+        render_histogram(&mut out, "wuuct_expand_latency_ms", "expansion task latency", &self.expand_hist);
+        render_histogram(&mut out, "wuuct_sim_latency_ms", "simulation task latency", &self.sim_hist);
+        render_histogram(
+            &mut out,
+            "wuuct_commit_hold_ms",
+            "time replies spent parked on commit tickets",
+            &self.commit_hold_hist,
+        );
+        out
+    }
+}
+
+fn render_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help} (milliseconds)");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, c) in h.bucket_counts().iter().enumerate() {
+        cum += c;
+        let upper = bucket_upper_ms(i);
+        if i == NUM_BUCKETS - 1 {
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{le=\"{upper:.4}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_sum {}", h.sum_ms());
+    let _ = writeln!(out, "{name}_count {}", h.count());
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::BUCKET_RATIO;
+    use crate::util::proptest::check;
+    use crate::util::rng::SplitMix64;
 
     #[test]
     fn percentile_basics() {
@@ -213,33 +302,17 @@ mod tests {
         assert_eq!(percentile(&[], 50.0), 0.0);
     }
 
-    #[test]
-    fn latency_stats_record_and_summarize() {
-        let mut l = LatencyStats::default();
-        for ms in [10u64, 20, 30, 40] {
-            l.record(Duration::from_millis(ms));
+    fn shard_with(hist_ms: &[f64], thinks: u64) -> ServiceMetrics {
+        let mut m = ServiceMetrics { shards: 1, thinks, ..Default::default() };
+        for &ms in hist_ms {
+            m.think_hist.record(ms);
         }
-        assert_eq!(l.count, 4);
-        assert!((l.mean_ms() - 25.0).abs() < 1.0);
-        assert!(l.percentile_ms(99.0) >= l.percentile_ms(50.0));
+        m.derive_latency_scalars();
+        m
     }
 
     #[test]
-    fn summary_matches_individual_percentiles() {
-        let mut l = LatencyStats::default();
-        for ms in [5u64, 1, 9, 3, 7] {
-            l.record(Duration::from_millis(ms));
-        }
-        let (mean, p50, p90, p99) = l.summary_ms();
-        assert!((mean - l.mean_ms()).abs() < 1e-9);
-        assert_eq!(p50, l.percentile_ms(50.0));
-        assert_eq!(p90, l.percentile_ms(90.0));
-        assert_eq!(p99, l.percentile_ms(99.0));
-        assert_eq!(LatencyStats::default().summary_ms(), (0.0, 0.0, 0.0, 0.0));
-    }
-
-    #[test]
-    fn aggregate_sums_counters_and_takes_worst_percentiles() {
+    fn aggregate_sums_counters() {
         let a = ServiceMetrics {
             uptime: Duration::from_secs(10),
             shards: 1,
@@ -256,8 +329,8 @@ mod tests {
             wal_fsyncs: 6,
             snapshot_bytes_full: 1000,
             snapshot_bytes_delta: 150,
-            think_ms_mean: 10.0,
-            think_ms_p99: 50.0,
+            held_replies: 2,
+            held_replies_hwm: 9,
             exp_occupancy: 0.5,
             sim_occupancy: 0.8,
             expansion_workers: 2,
@@ -274,8 +347,8 @@ mod tests {
             wal_batches: 1,
             wal_fsyncs: 2,
             snapshot_bytes_delta: 50,
-            think_ms_mean: 30.0,
-            think_ms_p99: 20.0,
+            held_replies: 1,
+            held_replies_hwm: 4,
             exp_occupancy: 0.1,
             sim_occupancy: 0.2,
             expansion_workers: 2,
@@ -298,16 +371,94 @@ mod tests {
         assert_eq!(t.wal_fsyncs, 8);
         assert_eq!(t.snapshot_bytes_full, 1000);
         assert_eq!(t.snapshot_bytes_delta, 200);
+        assert_eq!(t.held_replies, 3, "held-reply gauge sums");
+        assert_eq!(t.held_replies_hwm, 9, "held-reply HWM takes the worst shard");
         assert_eq!(t.uptime, Duration::from_secs(20));
         assert_eq!(t.expansion_workers, 4);
         assert_eq!(t.simulation_workers, 16);
-        assert_eq!(t.think_ms_p99, 50.0, "worst shard's percentile");
-        // think-weighted mean: (10*30 + 30*10) / 40 = 15
-        assert!((t.think_ms_mean - 15.0).abs() < 1e-9);
         // worker-weighted occupancy: (0.5*2 + 0.1*2) / 4 = 0.3
         assert!((t.exp_occupancy - 0.3).abs() < 1e-9);
         // rates recomputed over the max uptime
         assert!((t.thinks_per_sec - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_merges_histograms_not_worst_shard() {
+        // Shard a: 9 fast thinks. Shard b: 1 slow think. The old
+        // worst-shard aggregate would report p50 = b's p50 = 400 ms; the
+        // merged histogram knows the pooled median is ~1 ms.
+        let a = shard_with(&[1.0; 9], 9);
+        let b = shard_with(&[400.0], 1);
+        assert_eq!(b.think_ms_p50, b.think_hist.percentile_ms(50.0));
+        let t = ServiceMetrics::aggregate(&[a, b]);
+        assert_eq!(t.think_hist.count(), 10);
+        assert!(
+            t.think_ms_p50 < 2.0,
+            "pooled median must be ~1ms, got {} (worst-shard would be ~400)",
+            t.think_ms_p50
+        );
+        assert!(t.think_ms_p99 >= 400.0 / BUCKET_RATIO, "tail still visible in the merge");
+        // Mean derives from the merged histogram's exact sum/count.
+        assert!((t.think_ms_mean - (9.0 + 400.0) / 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_percentiles_match_pooled_samples_within_one_bucket() {
+        // Property: for any random samples split across any number of
+        // shards, percentiles read from the aggregated histogram equal
+        // the pooled raw-sample percentiles within one bucket's relative
+        // error (factor 10^(1/5)).
+        check("merged hist percentiles ≈ pooled", 40, |g| {
+            let n = g.usize(1, 400);
+            let shards = g.usize(1, 8);
+            let mut pools: Vec<Vec<f64>> = vec![Vec::new(); shards];
+            let mut all: Vec<f64> = Vec::new();
+            let mut rng = SplitMix64::new(g.u64());
+            for _ in 0..n {
+                // 0.02 ms .. ~5 s, log-ish spread across buckets.
+                let ms = 0.02 * (1.0 + (rng.next_u64() % 1_000_000) as f64 / 4.0);
+                pools[rng.next_u64() as usize % shards].push(ms);
+                all.push(ms);
+            }
+            let per_shard: Vec<ServiceMetrics> =
+                pools.iter().map(|p| shard_with(p, p.len() as u64)).collect();
+            let t = ServiceMetrics::aggregate(&per_shard);
+            for p in [50.0, 90.0, 99.0] {
+                let truth = percentile(&all, p);
+                let est = t.think_hist.percentile_ms(p);
+                if truth > est * (1.0 + 1e-12) || est > truth * BUCKET_RATIO * (1.0 + 1e-12) {
+                    return false;
+                }
+            }
+            // The scalar fields are the same numbers.
+            t.think_ms_p50 == t.think_hist.percentile_ms(50.0)
+                && t.think_ms_p90 == t.think_hist.percentile_ms(90.0)
+                && t.think_ms_p99 == t.think_hist.percentile_ms(99.0)
+        });
+    }
+
+    #[test]
+    fn aggregate_falls_back_to_scalars_for_legacy_inputs() {
+        // Buckets absent (e.g. a pre-histogram wire payload): the
+        // aggregate still reports something sane — weighted mean, worst
+        // percentile.
+        let a = ServiceMetrics {
+            shards: 1,
+            thinks: 30,
+            think_ms_mean: 10.0,
+            think_ms_p99: 50.0,
+            ..Default::default()
+        };
+        let b = ServiceMetrics {
+            shards: 1,
+            thinks: 10,
+            think_ms_mean: 30.0,
+            think_ms_p99: 20.0,
+            ..Default::default()
+        };
+        let t = ServiceMetrics::aggregate(&[a, b]);
+        assert!((t.think_ms_mean - 15.0).abs() < 1e-9);
+        assert_eq!(t.think_ms_p99, 50.0);
     }
 
     #[test]
@@ -316,15 +467,29 @@ mod tests {
         assert_eq!(t.shards, 0);
         assert_eq!(t.thinks, 0);
         assert_eq!(t.think_ms_mean, 0.0);
+        assert_eq!(t.think_hist.count(), 0);
     }
 
     #[test]
-    fn latency_stats_cap_subsamples() {
-        let mut l = LatencyStats::default();
-        for i in 0..(LatencyStats::CAP + 10) {
-            l.record(Duration::from_micros(i as u64));
+    fn prometheus_text_renders_counters_and_cumulative_buckets() {
+        let mut m = shard_with(&[0.5, 5.0, 5.0, 50.0], 4);
+        m.held_replies_hwm = 3;
+        m.commit_hold_hist.record(2.0);
+        let text = m.prometheus_text();
+        assert!(text.contains("wuuct_thinks_total 4"));
+        assert!(text.contains("wuuct_held_replies_hwm 3"));
+        assert!(text.contains("# TYPE wuuct_think_latency_ms histogram"));
+        assert!(text.contains("wuuct_think_latency_ms_count 4"));
+        assert!(text.contains("wuuct_commit_hold_ms_count 1"));
+        // The +Inf bucket is cumulative: equals the total count.
+        assert!(text.contains("wuuct_think_latency_ms_bucket{le=\"+Inf\"} 4"));
+        // Bucket lines are cumulative and monotone.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("wuuct_think_latency_ms_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone cumulative bucket: {line}");
+            last = v;
         }
-        assert!(l.samples_ms.len() <= LatencyStats::CAP);
-        assert_eq!(l.count as usize, LatencyStats::CAP + 10);
+        assert_eq!(last, 4);
     }
 }

@@ -26,8 +26,14 @@
 //!   control and steal-queue participation;
 //! * [`placement`] / [`shard`] — the consistent-hash ring and the
 //!   [`ShardedService`] router (`wu-uct serve --shards N`);
-//! * [`metrics`] — think-latency percentiles, throughput, occupancy,
-//!   steal/shed counters, per-shard and aggregated;
+//! * [`metrics`] — mergeable log-bucket latency histograms
+//!   ([`crate::obs::Histogram`]), throughput, occupancy, steal/shed and
+//!   held-reply counters, per-shard and aggregated exactly by bucket
+//!   addition (plus a Prometheus text rendering);
+//! * [`crate::obs`] — the per-shard event journal behind the wire
+//!   `trace` op: every think's admit → select → expand/sim → backprop →
+//!   reply-held → durable → reply-sent timeline, stitched across shards
+//!   and hosts by shard-tagged task ids and propagated trace ids;
 //! * [`json`] / [`proto`] — the line-delimited JSON wire protocol,
 //!   including the cross-process host ops (`export` / `import` /
 //!   `install` / `health`) carrying hex-framed session images;
@@ -73,7 +79,7 @@ pub use scheduler::{
     AdvanceReply, Busy, CloseReply, SearchService, ServiceConfig, ServiceHandle, SessionOptions,
     SessionStat, ThinkReply,
 };
-pub use server::TcpServer;
+pub use server::{StatsServer, TcpServer};
 pub use shard::{
     MigrateOutcome, RebalanceConfig, ShardedConfig, ShardedHandle, ShardedService,
 };
@@ -148,6 +154,25 @@ pub trait SessionApi: Clone + Send + 'static {
     fn best_action(&self, session: u64) -> Result<usize>;
     fn close(&self, session: u64) -> Result<CloseReply>;
     fn metrics(&self) -> Result<ServiceMetrics>;
+
+    /// [`SessionApi::think`] carrying a caller-supplied trace id (0 =
+    /// untraced). Session-hosting deployments stamp the id on every
+    /// journal event the think produces; the router propagates it over
+    /// the wire so a cross-host think stitches into one timeline. The
+    /// default ignores the id — tracing degrades, thinks still serve.
+    fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
+        let _ = trace;
+        self.think(session, sims)
+    }
+
+    /// Read the event journal (the wire `trace` op): the newest `limit`
+    /// events, oldest first, optionally filtered to one session's
+    /// timeline. Sharded handles merge their shards' journals by
+    /// timestamp; routers merge their hosts'. Default: no journal.
+    fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
+        let _ = (session, limit);
+        Ok(Vec::new())
+    }
 
     /// Per-shard snapshots; a single snapshot for an unsharded service.
     fn shard_metrics(&self) -> Result<Vec<ServiceMetrics>> {
@@ -232,6 +257,14 @@ impl SessionApi for ServiceHandle {
 
     fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
         ServiceHandle::think(self, session, sims)
+    }
+
+    fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
+        ServiceHandle::think_traced(self, session, sims, trace)
+    }
+
+    fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
+        ServiceHandle::trace(self, session, limit)
     }
 
     fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {

@@ -20,8 +20,16 @@
 //! Also: `best` (read the recommendation without searching), `migrate`
 //! (live-move a session to another shard — or, on a router, another
 //! host: `{"op":"migrate","session":1,"shard":2}` →
-//! `{"ok":true,...,"moved":true}`), `metrics` (aggregated snapshot plus
-//! `per_shard` / `per_host` arrays when sharded / routed) and `ping`.
+//! `{"ok":true,...,"moved":true}`), `metrics` (aggregated snapshot —
+//! counters, sparse-bucket latency histograms ([`hist_json`]) and the
+//! held-reply gauge/high-water mark — plus `per_shard` / `per_host`
+//! arrays when sharded / routed), `trace` (the event journal:
+//! `{"op":"trace","session":7,"limit":256}` →
+//! `{"ok":true,"events":[{"at_us":..,"kind":"admit",..},..]}`; omit
+//! `session` for the fleet-wide tail) and `ping`. A `think` may carry
+//! `"trace":<id>` — the owning shard stamps the id on every journal
+//! event of that think, and routers forward it across processes, so one
+//! cross-host think reconstructs as one timeline.
 //!
 //! ## Cross-process host ops
 //!
@@ -67,6 +75,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::env::tapgame::{Level, TapGame};
 use crate::env::{atari, garnet::Garnet, Env};
 use crate::mcts::common::SearchSpec;
+use crate::obs::{Event, EventKind, Histogram};
 use crate::service::json::{obj, Json};
 use crate::service::metrics::ServiceMetrics;
 use crate::service::scheduler::{Busy, SessionOptions};
@@ -302,10 +311,13 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
             ))
         }
         "think" => {
-            reject_unknown_fields(&req, op, &["session", "sims"])?;
+            reject_unknown_fields(&req, op, &["session", "sims", "trace"])?;
             let sid = required_u64(&req, "session")?;
             let sims = field_u32(&req, "sims")?.unwrap_or(0);
-            let t = handle.think(sid, sims)?;
+            // Optional caller-supplied trace id (0 = untraced): stamped on
+            // every journal event of this think, forwarded by routers.
+            let trace = field_u64(&req, "trace")?.unwrap_or(0);
+            let t = handle.think_traced(sid, sims, trace)?;
             let mut fields = vec![
                 ("ok".to_string(), Json::Bool(true)),
                 ("action".to_string(), Json::Num(t.action as f64)),
@@ -511,8 +523,68 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
             };
             Ok((doc, LineEffect::None))
         }
+        "trace" => {
+            reject_unknown_fields(&req, op, &["session", "limit"])?;
+            let session = field_u64(&req, "session")?;
+            let limit = field_u64(&req, "limit")?.unwrap_or(DEFAULT_TRACE_LIMIT as u64);
+            let limit = (limit as usize).min(MAX_TRACE_EVENTS);
+            let events = handle.trace(session, limit)?;
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("events", Json::Arr(events.iter().map(event_json).collect())),
+                ]),
+                LineEffect::None,
+            ))
+        }
         other => bail!("unknown op {other:?}"),
     }
+}
+
+/// Events a `trace` op returns when the request names no `limit`.
+pub const DEFAULT_TRACE_LIMIT: usize = 256;
+
+/// Hard cap on events per `trace` reply — the reply is one wire line, so
+/// a confused `limit` must not make a host render without bound.
+pub const MAX_TRACE_EVENTS: usize = 65_536;
+
+/// Render one journal event for the `trace` reply. All ids travel as
+/// JSON numbers, exact below 2^53 — task ids (shard tag in the top 16
+/// bits plus a counter) stay far under that; caller-chosen trace ids
+/// should too.
+pub fn event_json(e: &Event) -> Json {
+    obj([
+        ("at_us", Json::Num(e.at_us as f64)),
+        ("session", Json::Num(e.session as f64)),
+        ("task", Json::Num(e.task as f64)),
+        ("trace", Json::Num(e.trace as f64)),
+        ("kind", Json::Str(e.kind.name().to_string())),
+        ("arg", Json::Num(e.arg as f64)),
+    ])
+}
+
+/// Parse one `trace`-reply event — the inverse of [`event_json`], used
+/// by the router's pooled host clients to re-merge remote timelines.
+pub fn event_from_json(v: &Json) -> Result<Event> {
+    let int = |key: &str| -> Result<u64> {
+        v.get(key)
+            .and_then(|x| x.as_u64())
+            .ok_or_else(|| anyhow!("trace event missing integer field {key:?}"))
+    };
+    let kind = v
+        .get("kind")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("trace event missing field \"kind\""))?;
+    let kind = EventKind::from_name(kind)
+        .ok_or_else(|| anyhow!("unknown trace event kind {kind:?}"))?;
+    Ok(Event {
+        at_us: int("at_us")?,
+        session: int("session")?,
+        task: int("task")?,
+        trace: int("trace")?,
+        kind,
+        arg: int("arg")?,
+    })
 }
 
 /// Render a metrics snapshot as the `metrics` response object.
@@ -553,7 +625,58 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("simulation_workers", Json::Num(m.simulation_workers as f64)),
         ("pending_expansions", Json::Num(m.pending_expansions as f64)),
         ("pending_simulations", Json::Num(m.pending_simulations as f64)),
+        ("held_replies", Json::Num(m.held_replies as f64)),
+        ("held_replies_hwm", Json::Num(m.held_replies_hwm as f64)),
+        ("think_hist", hist_json(&m.think_hist)),
+        ("expand_hist", hist_json(&m.expand_hist)),
+        ("sim_hist", hist_json(&m.sim_hist)),
+        ("commit_hold_hist", hist_json(&m.commit_hold_hist)),
     ])
+}
+
+/// Render a latency histogram as its wire object: scalar moments plus
+/// sparse `[bucket, count]` pairs (most histograms occupy a handful of
+/// the fixed log-scale buckets, so sparse beats a 37-wide array).
+pub fn hist_json(h: &Histogram) -> Json {
+    obj([
+        ("count", Json::Num(h.count() as f64)),
+        ("sum_ms", Json::Num(h.sum_ms())),
+        ("min_ms", Json::Num(h.min_ms())),
+        ("max_ms", Json::Num(h.max_ms())),
+        (
+            "buckets",
+            Json::Arr(
+                h.sparse()
+                    .into_iter()
+                    .map(|(i, c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse a histogram wire object — the inverse of [`hist_json`].
+/// Lenient like the rest of the metrics decoder: an absent or malformed
+/// object reads as empty, malformed bucket pairs are skipped, and
+/// out-of-range bucket indices drop inside [`Histogram::from_wire`].
+pub fn hist_from_json(v: Option<&Json>) -> Histogram {
+    let Some(v) = v else { return Histogram::new() };
+    let num = |key: &str| v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let count = v.get("count").and_then(|x| x.as_u64()).unwrap_or(0);
+    let mut sparse = Vec::new();
+    if let Some(Json::Arr(pairs)) = v.get("buckets") {
+        for pair in pairs {
+            if let Json::Arr(p) = pair {
+                if let (Some(i), Some(c)) = (
+                    p.first().and_then(|x| x.as_usize()),
+                    p.get(1).and_then(|x| x.as_u64()),
+                ) {
+                    sparse.push((i, c));
+                }
+            }
+        }
+    }
+    Histogram::from_wire(count, num("sum_ms"), num("min_ms"), num("max_ms"), &sparse)
 }
 
 /// Parse a `metrics` reply back into a [`ServiceMetrics`] snapshot — the
@@ -597,6 +720,12 @@ pub fn metrics_from_json(v: &Json) -> ServiceMetrics {
         simulation_workers: int("simulation_workers") as usize,
         pending_expansions: int("pending_expansions") as usize,
         pending_simulations: int("pending_simulations") as usize,
+        held_replies: int("held_replies") as usize,
+        held_replies_hwm: int("held_replies_hwm") as usize,
+        think_hist: hist_from_json(v.get("think_hist")),
+        expand_hist: hist_from_json(v.get("expand_hist")),
+        sim_hist: hist_from_json(v.get("sim_hist")),
+        commit_hold_hist: hist_from_json(v.get("commit_hold_hist")),
     }
 }
 
@@ -641,6 +770,8 @@ fn shard_metrics_json(m: &ServiceMetrics) -> Json {
         ("sim_occupancy", Json::Num(m.sim_occupancy)),
         ("pending_expansions", Json::Num(m.pending_expansions as f64)),
         ("pending_simulations", Json::Num(m.pending_simulations as f64)),
+        ("held_replies", Json::Num(m.held_replies as f64)),
+        ("held_replies_hwm", Json::Num(m.held_replies_hwm as f64)),
     ])
 }
 
@@ -844,6 +975,8 @@ mod tests {
             (r#"{"op":"import","image":"00","session":1}"#, "session"),
             (r#"{"op":"install","session":1,"landed":true,"force":1}"#, "force"),
             (r#"{"op":"health","probe":true}"#, "probe"),
+            (r#"{"op":"trace","session":1,"kind":"admit"}"#, "kind"),
+            (r#"{"op":"think","session":1,"trace_id":7}"#, "trace_id"),
         ] {
             let (line, _) = handle_line(&h, bad);
             let v = err_field(&line);
@@ -1056,6 +1189,103 @@ mod tests {
         let zero = metrics_from_json(&Json::Obj(vec![]));
         assert_eq!(zero.thinks, 0);
         assert_eq!(zero.hosts, 0);
+    }
+
+    #[test]
+    fn trace_op_roundtrips_a_stamped_timeline() {
+        let svc = service();
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet","seed":5,"sims":8}"#);
+        let sid = ok_field(&line).get("session").unwrap().as_u64().unwrap();
+        let (line, _) =
+            handle_line(&h, &format!(r#"{{"op":"think","session":{sid},"trace":424242}}"#));
+        ok_field(&line);
+        let (line, _) =
+            handle_line(&h, &format!(r#"{{"op":"trace","session":{sid},"limit":512}}"#));
+        let v = ok_field(&line);
+        let Some(Json::Arr(raw)) = v.get("events") else {
+            panic!("trace reply must carry events: {line}");
+        };
+        let events: Vec<Event> = raw
+            .iter()
+            .map(|e| event_from_json(e).expect("wire events parse back"))
+            .collect();
+        assert!(!events.is_empty());
+        assert!(events.iter().all(|e| e.session == sid));
+        assert!(events.windows(2).all(|w| w[0].at_us <= w[1].at_us), "oldest first");
+        for kind in [EventKind::Admit, EventKind::ThinkDone, EventKind::ReplySent] {
+            let e = events.iter().find(|e| e.kind == kind);
+            assert!(e.is_some(), "timeline missing {:?}", kind.name());
+        }
+        let admit = events.iter().find(|e| e.kind == EventKind::Admit).unwrap();
+        assert_eq!(admit.trace, 424242, "trace id travels the wire into the journal");
+        // Unfiltered trace works too and respects the limit.
+        let (line, _) = handle_line(&h, r#"{"op":"trace","limit":2}"#);
+        let v = ok_field(&line);
+        let Some(Json::Arr(raw)) = v.get("events") else { panic!("events: {line}") };
+        assert!(raw.len() <= 2);
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        ok_field(&line);
+    }
+
+    #[test]
+    fn event_json_roundtrips_every_kind() {
+        for (i, &kind) in EventKind::all().iter().enumerate() {
+            let e = Event {
+                at_us: 1000 + i as u64,
+                session: 7,
+                task: (3u64 << 48) | 99,
+                trace: 0xDEAD,
+                kind,
+                arg: i as u64,
+            };
+            let rendered = event_json(&e).render();
+            let back = event_from_json(&Json::parse(&rendered).unwrap()).unwrap();
+            assert_eq!(back, e, "kind {:?} must survive the wire", kind.name());
+        }
+        // Unknown kinds and missing fields are errors, not panics.
+        let bad = Json::parse(r#"{"at_us":1,"session":1,"task":0,"trace":0,"kind":"nope","arg":0}"#)
+            .unwrap();
+        assert!(event_from_json(&bad).is_err());
+        let missing = Json::parse(r#"{"kind":"admit"}"#).unwrap();
+        assert!(event_from_json(&missing).is_err());
+    }
+
+    #[test]
+    fn metrics_histograms_roundtrip_the_wire() {
+        let mut m = ServiceMetrics {
+            held_replies: 3,
+            held_replies_hwm: 11,
+            ..Default::default()
+        };
+        for ms in [0.4, 2.0, 2.5, 40.0, 900.0] {
+            m.think_hist.record(ms);
+        }
+        m.sim_hist.record(1.25);
+        m.commit_hold_hist.record(7.5);
+        let back = metrics_from_json(&metrics_json(&m));
+        assert_eq!(back.held_replies, 3);
+        assert_eq!(back.held_replies_hwm, 11);
+        assert_eq!(back.think_hist, m.think_hist, "sparse buckets must be lossless");
+        assert_eq!(back.sim_hist, m.sim_hist);
+        assert_eq!(back.commit_hold_hist, m.commit_hold_hist);
+        assert!(back.expand_hist.is_empty());
+        // Merging two decoded snapshots equals merging the originals —
+        // the property `ServiceMetrics::aggregate` relies on over the wire.
+        let mut a = back.think_hist.clone();
+        a.merge(&back.sim_hist);
+        let mut b = m.think_hist.clone();
+        b.merge(&m.sim_hist);
+        assert_eq!(a, b);
+        // Lenient decode: hostile bucket entries drop, nothing panics.
+        let hostile = Json::parse(
+            r#"{"count":2,"sum_ms":3.0,"min_ms":1.0,"max_ms":2.0,"buckets":[[9999,5],[1],"x",[4,1]]}"#,
+        )
+        .unwrap();
+        let h = hist_from_json(Some(&hostile));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.bucket_counts()[4], 1);
+        assert_eq!(hist_from_json(None), Histogram::new());
     }
 
     #[test]

@@ -195,8 +195,35 @@ impl RouterHandle {
     }
 
     pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
+        self.think_traced(session, sims, 0)
+    }
+
+    /// [`RouterHandle::think`] forwarding a caller-supplied trace id to
+    /// the owning host, which stamps it on the think's journal events —
+    /// one id stitches the timeline across the process boundary.
+    pub fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
         let host = self.route(session)?;
-        track(&self.inner, host.think(session, sims))
+        track(&self.inner, host.think_traced(session, sims, trace))
+    }
+
+    /// Merge every reachable host's event journal into one timeline
+    /// (newest `limit` events, oldest first; stable sort on each host's
+    /// local-µs clock, so cross-host order is approximate but per-host
+    /// order is exact). Unreachable hosts are skipped after counting —
+    /// a partial trace beats none when a host is down.
+    pub fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
+        let mut events = Vec::new();
+        for host in &self.inner.hosts {
+            match track(&self.inner, host.trace(session, limit)) {
+                Ok(mut batch) => events.append(&mut batch),
+                Err(_) => continue,
+            }
+        }
+        events.sort_by_key(|e| e.at_us);
+        if events.len() > limit {
+            events.drain(..events.len() - limit);
+        }
+        Ok(events)
     }
 
     pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
@@ -388,6 +415,14 @@ impl SessionApi for RouterHandle {
 
     fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
         RouterHandle::think(self, session, sims)
+    }
+
+    fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
+        RouterHandle::think_traced(self, session, sims, trace)
+    }
+
+    fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
+        RouterHandle::trace(self, session, limit)
     }
 
     fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {

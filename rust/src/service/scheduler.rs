@@ -38,8 +38,9 @@ use crate::eval::{HeuristicPolicy, PolicyFactory};
 use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::{SearchDriver, TaskSink};
 use crate::mcts::wu_uct::workers::{Pool, Task, TaskResult};
+use crate::obs::{Event, EventKind, Histogram, Journal};
 use crate::service::fair::FairQueue;
-use crate::service::metrics::{LatencyStats, ServiceMetrics};
+use crate::service::metrics::ServiceMetrics;
 use crate::store::codec::{SessionImage, SessionMeta};
 use crate::store::engine::{SessionStore, StoreCounters};
 use crate::store::migrate::Recovering;
@@ -167,7 +168,7 @@ pub(crate) enum Request {
         id: Option<u64>,
         reply: Sender<Result<u64>>,
     },
-    Think { session: u64, sims: u32, reply: Sender<Result<ThinkReply>> },
+    Think { session: u64, sims: u32, trace: u64, reply: Sender<Result<ThinkReply>> },
     Advance { session: u64, action: usize, reply: Sender<Result<AdvanceReply>> },
     Best { session: u64, reply: Sender<Result<usize>> },
     Close { session: u64, reply: Sender<Result<CloseReply>> },
@@ -189,6 +190,9 @@ pub(crate) enum Request {
     /// (recovery dedup and the rebalancer).
     ListSessions { reply: Sender<Vec<SessionStat>> },
     Metrics { reply: Sender<ServiceMetrics> },
+    /// Read the shard's event journal: the newest `limit` events,
+    /// optionally filtered to one session's timeline.
+    Trace { session: Option<u64>, limit: usize, reply: Sender<Vec<Event>> },
     Shutdown,
 }
 
@@ -255,6 +259,9 @@ pub(crate) struct ShardWiring {
 struct ThinkJob {
     reply: Sender<Result<ThinkReply>>,
     started: Instant,
+    /// Caller-supplied trace id (0 = untraced); stamped on every journal
+    /// event this think produces so a cross-host timeline stitches.
+    trace: u64,
 }
 
 struct Session {
@@ -337,8 +344,21 @@ impl ServiceHandle {
     /// Run one think (`sims` = 0 ⇒ the session's default budget) and
     /// block until the search completes.
     pub fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
+        self.think_traced(session, sims, 0)
+    }
+
+    /// [`ServiceHandle::think`] with a caller-supplied trace id (0 =
+    /// untraced) stamped on every journal event the think produces.
+    pub fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
         let (tx, rx) = channel();
-        self.roundtrip(Request::Think { session, sims, reply: tx }, rx)?
+        self.roundtrip(Request::Think { session, sims, trace, reply: tx }, rx)?
+    }
+
+    /// Read this shard's event journal (newest `limit` events, oldest
+    /// first), optionally filtered to one session's timeline.
+    pub fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<Event>> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Trace { session, limit, reply: tx }, rx)
     }
 
     /// Execute `action` in the session's environment, reusing the on-path
@@ -538,9 +558,15 @@ impl SearchService {
                 store,
                 durable_configured,
                 held: VecDeque::new(),
+                held_hwm: 0,
                 counters_cache: StoreCounters::default(),
                 snapshot_every,
-                think_latency: LatencyStats::default(),
+                think_hist: Histogram::new(),
+                expand_hist: Histogram::new(),
+                sim_hist: Histogram::new(),
+                commit_hold_hist: Histogram::new(),
+                journal: Journal::default(),
+                issued_at: HashMap::new(),
                 started: Instant::now(),
             };
             for parts in recovered {
@@ -612,14 +638,39 @@ struct Scheduler {
     durable_configured: bool,
     /// Replies parked on their record's commit ticket, ascending by
     /// sequence; released when the committer reports the batch durable.
-    held: VecDeque<(u64, HeldReply)>,
+    held: VecDeque<Held>,
+    /// Most replies ever parked at once (tunes the planned admission cap).
+    held_hwm: usize,
     /// Last-known store counters (survives poisoning, so metrics keep
     /// reporting what was written before durability degraded).
     counters_cache: StoreCounters,
     /// Snapshot cadence in completed thinks per session.
     snapshot_every: u32,
-    think_latency: LatencyStats,
+    /// Mergeable latency distributions (O(1) record, O(buckets) scrape).
+    think_hist: Histogram,
+    expand_hist: Histogram,
+    sim_hist: Histogram,
+    commit_hold_hist: Histogram,
+    /// Ring journal of typed events; single-writer (this thread).
+    journal: Journal,
+    /// Task id → journal timestamp at issue, for task-latency histograms
+    /// (entries are removed when the result is absorbed).
+    issued_at: HashMap<u64, u64>,
     started: Instant,
+}
+
+/// A parked reply with the bookkeeping the journal and the
+/// `commit_hold_ms` histogram need when it releases.
+struct Held {
+    /// Commit sequence the reply waits on.
+    seq: u64,
+    /// Session the op belonged to (0 for session-less ops).
+    session: u64,
+    /// Trace id propagated from the request (0 = untraced).
+    trace: u64,
+    /// Journal timestamp when the reply was parked.
+    parked_at_us: u64,
+    reply: HeldReply,
 }
 
 /// A reply whose op already executed in memory, parked until the record
@@ -680,6 +731,12 @@ struct SharedSink<'a> {
     overflow_ids: &'a mut HashSet<u64>,
     overflow_flag: &'a mut bool,
     sims_shed: &'a mut u64,
+    journal: &'a mut Journal,
+    issued_at: &'a mut HashMap<u64, u64>,
+    /// Journal timestamp for this drive pass.
+    now_us: u64,
+    /// Trace id of the session's in-flight think (0 = untraced).
+    trace: u64,
 }
 
 impl SharedSink<'_> {
@@ -696,9 +753,24 @@ impl SharedSink<'_> {
     }
 }
 
+impl SharedSink<'_> {
+    fn journal_event(&mut self, task: u64, kind: EventKind, arg: u64) {
+        self.journal.record(Event {
+            at_us: self.now_us,
+            session: self.session,
+            task,
+            trace: self.trace,
+            kind,
+            arg,
+        });
+    }
+}
+
 impl TaskSink for SharedSink<'_> {
     fn submit_expand(&mut self, env: Box<dyn Env>, action: usize, max_width: usize) -> u64 {
         let id = self.next_id();
+        self.issued_at.insert(id, self.now_us);
+        self.journal_event(id, EventKind::ExpandIssued, 0);
         self.expansion.submit(Task::Expand { task_id: id, env, action, max_width });
         *self.pending_exp += 1;
         id
@@ -706,6 +778,8 @@ impl TaskSink for SharedSink<'_> {
 
     fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64 {
         let id = self.next_id();
+        self.issued_at.insert(id, self.now_us);
+        self.journal_event(id, EventKind::SimIssued, 0);
         let task = Task::Simulate { task_id: id, env, gamma, limit };
         let saturated = self.running_sims() >= self.sim_capacity;
         *self.pending_sim += 1;
@@ -719,6 +793,7 @@ impl TaskSink for SharedSink<'_> {
                 queue.push(self.shard_index, task);
                 *self.overflow_flag = true;
                 *self.sims_shed += 1;
+                self.journal_event(id, EventKind::StealShed, self.shard_index as u64);
             }
             _ => self.simulation.submit(task),
         }
@@ -727,6 +802,27 @@ impl TaskSink for SharedSink<'_> {
 }
 
 impl Scheduler {
+    /// Journal timestamp: microseconds since this scheduler started.
+    fn now_us(&self) -> u64 {
+        self.started.elapsed().as_micros() as u64
+    }
+
+    /// Record one journal event at the current time (scheduler thread
+    /// only — the journal is single-writer).
+    fn journal_event(&mut self, session: u64, task: u64, trace: u64, kind: EventKind, arg: u64) {
+        let at_us = self.now_us();
+        self.journal.record(Event { at_us, session, task, trace, kind, arg });
+    }
+
+    /// Trace id of the session's in-flight think (0 when untraced/idle).
+    fn trace_of(&self, sid: u64) -> u64 {
+        self.sessions
+            .get(&sid)
+            .and_then(|s| s.thinking.as_ref())
+            .map(|j| j.trace)
+            .unwrap_or(0)
+    }
+
     fn run(mut self) {
         loop {
             let msg = match self.inbox.recv() {
@@ -757,7 +853,11 @@ impl Scheduler {
                 true
             }
             SchedMsg::Poke => true, // dispatch() after the drain pops steals
-            SchedMsg::Durable(_) => {
+            SchedMsg::Durable(seq) => {
+                // The committer resolved a batch through `seq`; this is
+                // the scheduler-thread echo of the fsync, which keeps the
+                // journal single-writer.
+                self.journal_event(0, 0, 0, EventKind::WalFsync, seq);
                 self.flush_held();
                 true
             }
@@ -768,14 +868,14 @@ impl Scheduler {
         match req {
             Request::Open { env, spec, opts, id, reply } => {
                 match self.do_open(env, spec, opts, id) {
-                    Ok((sid, seq)) => self.reply_or_hold(seq, HeldReply::Open(reply, sid)),
+                    Ok((sid, seq)) => self.reply_or_hold(seq, sid, 0, HeldReply::Open(reply, sid)),
                     Err(e) => {
                         let _ = reply.send(Err(e));
                     }
                 }
             }
-            Request::Think { session, sims, reply } => {
-                match self.begin_think(session, sims, &reply) {
+            Request::Think { session, sims, trace, reply } => {
+                match self.begin_think(session, sims, trace, &reply) {
                     Ok(()) => {}
                     Err(e) => {
                         let _ = reply.send(Err(e));
@@ -784,7 +884,9 @@ impl Scheduler {
             }
             Request::Advance { session, action, reply } => {
                 match self.do_advance(session, action) {
-                    Ok((out, seq)) => self.reply_or_hold(seq, HeldReply::Advance(reply, out)),
+                    Ok((out, seq)) => {
+                        self.reply_or_hold(seq, session, 0, HeldReply::Advance(reply, out))
+                    }
                     Err(e) => {
                         let _ = reply.send(Err(e));
                     }
@@ -796,7 +898,7 @@ impl Scheduler {
                 );
             }
             Request::Close { session, reply } => match self.do_close(session) {
-                Ok((out, seq)) => self.reply_or_hold(seq, HeldReply::Close(reply, out)),
+                Ok((out, seq)) => self.reply_or_hold(seq, session, 0, HeldReply::Close(reply, out)),
                 Err(e) => {
                     let _ = reply.send(Err(e));
                 }
@@ -805,13 +907,13 @@ impl Scheduler {
                 let _ = reply.send(self.do_export(session));
             }
             Request::Import { bytes, reply } => match self.do_import(bytes) {
-                Ok((sid, seq)) => self.reply_or_hold(seq, HeldReply::Import(reply, sid)),
+                Ok((sid, seq)) => self.reply_or_hold(seq, sid, 0, HeldReply::Import(reply, sid)),
                 Err(e) => {
                     let _ = reply.send(Err(e));
                 }
             },
             Request::Forget { session, reply } => match self.do_forget(session) {
-                Ok(seq) => self.reply_or_hold(seq, HeldReply::Forget(reply)),
+                Ok(seq) => self.reply_or_hold(seq, session, 0, HeldReply::Forget(reply)),
                 Err(e) => {
                     let _ = reply.send(Err(e));
                 }
@@ -835,6 +937,9 @@ impl Scheduler {
             }
             Request::Metrics { reply } => {
                 let _ = reply.send(self.snapshot());
+            }
+            Request::Trace { session, limit, reply } => {
+                let _ = reply.send(self.journal.query(session, limit));
             }
             Request::Shutdown => return false,
         }
@@ -889,11 +994,15 @@ impl Scheduler {
         self.fair.admit(id, opts.weight);
         self.sessions.insert(id, session);
         self.opened += 1;
+        self.journal_event(id, 0, 0, EventKind::SessionOpen, self.shard.index as u64);
         let mut seq = None;
         if self.store.is_some() {
             match self.image_of(id) {
                 Ok(image) => seq = self.log(|s| s.log_open(id, &image)),
                 Err(e) => eprintln!("shard {}: open image failed: {e:#}", self.shard.index),
+            }
+            if let Some(seq) = seq {
+                self.journal_event(id, 0, 0, EventKind::WalAppend, seq);
             }
         }
         Ok((id, seq))
@@ -981,8 +1090,9 @@ impl Scheduler {
                 self.shard.index
             );
         }
-        for (_, held) in std::mem::take(&mut self.held) {
-            match held {
+        for held in std::mem::take(&mut self.held) {
+            self.journal_event(held.session, 0, held.trace, EventKind::ReplySent, 0);
+            match held.reply {
                 HeldReply::Import(tx, sid) => {
                     // The reply never left, so the router cannot have
                     // repointed anything at this copy yet; uninstalling
@@ -1002,32 +1112,46 @@ impl Scheduler {
     /// Park a reply until its record's batch is durable — or deliver
     /// immediately when the op logged nothing (memory-only shard,
     /// poisoned store, or a think that skipped its snapshot cadence).
-    fn reply_or_hold(&mut self, seq: Option<u64>, held: HeldReply) {
+    fn reply_or_hold(&mut self, seq: Option<u64>, session: u64, trace: u64, reply: HeldReply) {
         let durable = self.store.as_ref().map(|s| s.durable_seq()).unwrap_or(u64::MAX);
         match seq {
-            Some(seq) if seq > durable => self.held.push_back((seq, held)),
-            _ => held.deliver(),
+            Some(seq) if seq > durable => {
+                let parked_at_us = self.now_us();
+                self.journal_event(session, 0, trace, EventKind::ReplyHeld, seq);
+                self.held.push_back(Held { seq, session, trace, parked_at_us, reply });
+                self.held_hwm = self.held_hwm.max(self.held.len());
+            }
+            _ => {
+                self.journal_event(session, 0, trace, EventKind::ReplySent, 0);
+                reply.deliver();
+            }
         }
     }
 
     /// Release held replies the committer has made durable; observe a
     /// commit failure and poison (which releases everything).
     fn flush_held(&mut self) {
-        let Some(store) = &self.store else {
+        if self.store.is_none() {
             // Poisoned or memory-only: nothing can be (or stay) held.
-            for (_, held) in std::mem::take(&mut self.held) {
-                held.deliver();
+            for held in std::mem::take(&mut self.held) {
+                self.journal_event(held.session, 0, held.trace, EventKind::ReplySent, 0);
+                held.reply.deliver();
             }
             return;
-        };
-        if let Some(e) = store.commit_error() {
+        }
+        if let Some(e) = self.store.as_ref().and_then(|s| s.commit_error()) {
             self.poison_store(&format!("store commit failed ({e})"));
             return;
         }
-        let durable = store.durable_seq();
-        while self.held.front().is_some_and(|&(seq, _)| seq <= durable) {
-            let (_, held) = self.held.pop_front().expect("checked front");
-            held.deliver();
+        let durable = self.store.as_ref().map(|s| s.durable_seq()).unwrap_or(u64::MAX);
+        while self.held.front().is_some_and(|h| h.seq <= durable) {
+            let held = self.held.pop_front().expect("checked front");
+            let now = self.now_us();
+            let held_us = now.saturating_sub(held.parked_at_us);
+            self.commit_hold_hist.record(held_us as f64 / 1e3);
+            self.journal_event(held.session, 0, held.trace, EventKind::Durable, held.seq);
+            self.journal_event(held.session, 0, held.trace, EventKind::ReplySent, held_us);
+            held.reply.deliver();
         }
     }
 
@@ -1089,9 +1213,15 @@ impl Scheduler {
         let bytes = self
             .image_of(sid)
             .and_then(|img| img.encode().map_err(anyhow::Error::from));
-        if bytes.is_err() {
-            if let Some(sess) = self.sessions.get_mut(&sid) {
-                sess.sealed = false;
+        match &bytes {
+            Ok(b) => {
+                let len = b.len() as u64;
+                self.journal_event(sid, 0, 0, EventKind::MigrateExport, len);
+            }
+            Err(_) => {
+                if let Some(sess) = self.sessions.get_mut(&sid) {
+                    sess.sealed = false;
+                }
             }
         }
         bytes
@@ -1123,7 +1253,12 @@ impl Scheduler {
         self.sessions.remove(&sid);
         self.fair.remove(sid);
         self.migrations_out += 1;
-        Ok(self.log(|s| s.log_close(sid)))
+        let seq = self.log(|s| s.log_close(sid));
+        self.journal_event(sid, 0, 0, EventKind::MigrateForget, seq.unwrap_or(0));
+        if let Some(seq) = seq {
+            self.journal_event(sid, 0, 0, EventKind::WalAppend, seq);
+        }
+        Ok(seq)
     }
 
     /// Migration target half: decode, admit and install.
@@ -1135,6 +1270,7 @@ impl Scheduler {
             }
         }
         let image = SessionImage::decode(&bytes)?;
+        let image_len = bytes.len() as u64;
         let id = image.session;
         if self.sessions.contains_key(&id) {
             bail!("session id {id} already open on this shard");
@@ -1163,6 +1299,10 @@ impl Scheduler {
         }
         self.install(id, driver, meta);
         self.migrations_in += 1;
+        self.journal_event(id, 0, 0, EventKind::MigrateImport, image_len);
+        if let Some(seq) = seq {
+            self.journal_event(id, 0, 0, EventKind::WalAppend, seq);
+        }
         Ok((id, seq))
     }
 
@@ -1171,6 +1311,7 @@ impl Scheduler {
         &mut self,
         sid: u64,
         sims: u32,
+        trace: u64,
         reply: &Sender<Result<ThinkReply>>,
     ) -> Result<()> {
         let sess = self
@@ -1191,8 +1332,9 @@ impl Scheduler {
             budget = budget.min(rem.min(u32::MAX as u64) as u32);
         }
         sess.driver.begin(budget);
-        sess.thinking = Some(ThinkJob { reply: reply.clone(), started: Instant::now() });
+        sess.thinking = Some(ThinkJob { reply: reply.clone(), started: Instant::now(), trace });
         let done = sess.driver.done();
+        self.journal_event(sid, 0, trace, EventKind::Admit, budget as u64);
         // A session that was idle re-enters the race at the current
         // virtual time (it must not hoard credit accrued while idle).
         self.fair.rejoin(sid);
@@ -1214,6 +1356,9 @@ impl Scheduler {
             steps: sess.steps,
         };
         let seq = self.log(|s| s.log_advance(sid, action));
+        if let Some(seq) = seq {
+            self.journal_event(sid, 0, 0, EventKind::WalAppend, seq);
+        }
         Ok((reply, seq))
     }
 
@@ -1223,6 +1368,10 @@ impl Scheduler {
         self.fair.remove(sid);
         self.closed += 1;
         let seq = self.log(|s| s.log_close(sid));
+        self.journal_event(sid, 0, 0, EventKind::SessionClose, 0);
+        if let Some(seq) = seq {
+            self.journal_event(sid, 0, 0, EventKind::WalAppend, seq);
+        }
         Ok((
             CloseReply {
                 thinks: sess.thinks,
@@ -1260,7 +1409,9 @@ impl Scheduler {
         f: impl FnOnce(&mut Session, &mut SharedSink) -> R,
     ) -> Option<R> {
         let busy_stolen = self.stolen.len();
+        let now_us = self.started.elapsed().as_micros() as u64;
         let sess = self.sessions.get_mut(&sid)?;
+        let trace = sess.thinking.as_ref().map(|j| j.trace).unwrap_or(0);
         let mut sink = SharedSink {
             expansion: &self.expansion,
             simulation: &self.simulation,
@@ -1277,6 +1428,10 @@ impl Scheduler {
             overflow_ids: &mut self.overflow_ids,
             overflow_flag: &mut self.overflow_flag,
             sims_shed: &mut self.sims_shed,
+            journal: &mut self.journal,
+            issued_at: &mut self.issued_at,
+            now_us,
+            trace,
         };
         Some(f(sess, &mut sink))
     }
@@ -1293,20 +1448,44 @@ impl Scheduler {
             }
             return;
         }
-        match &result {
-            TaskResult::Expanded(_) => self.pending_exp = self.pending_exp.saturating_sub(1),
-            TaskResult::Simulated(_) => self.pending_sim = self.pending_sim.saturating_sub(1),
-        }
-        self.overflow_ids.remove(&task_id);
+        let is_expand = match &result {
+            TaskResult::Expanded(_) => {
+                self.pending_exp = self.pending_exp.saturating_sub(1);
+                true
+            }
+            TaskResult::Simulated(_) => {
+                self.pending_sim = self.pending_sim.saturating_sub(1);
+                false
+            }
+        };
+        let was_overflow = self.overflow_ids.remove(&task_id);
+        let issued_at = self.issued_at.remove(&task_id);
         let Some(sid) = self.routes.remove(&task_id) else {
             // Session vanished mid-flight (cannot happen: close requires
             // quiescence) — drop defensively rather than poison the loop.
             return;
         };
+        // Task latency (issue → absorbed result): stolen tasks included,
+        // the peer round trip is real latency the session experienced.
+        let trace = self.trace_of(sid);
+        let task_us = issued_at.map(|t0| self.now_us().saturating_sub(t0)).unwrap_or(0);
+        if is_expand {
+            self.expand_hist.record(task_us as f64 / 1e3);
+            self.journal_event(sid, task_id, trace, EventKind::ExpandDone, task_us);
+        } else {
+            self.sim_hist.record(task_us as f64 / 1e3);
+            if was_overflow {
+                // The task came back from the steal queue (a peer ran it,
+                // or this shard reclaimed it on a freed slot).
+                self.journal_event(sid, task_id, trace, EventKind::StealClaim, task_us);
+            }
+            self.journal_event(sid, task_id, trace, EventKind::SimDone, task_us);
+        }
         let done = self.drive(sid, |sess, sink| {
             sess.driver.absorb(result, sink);
             sess.thinking.is_some() && sess.driver.done()
         });
+        self.journal_event(sid, task_id, trace, EventKind::Backprop, 0);
         if done == Some(true) {
             self.finish_think(sid);
         }
@@ -1373,6 +1552,8 @@ impl Scheduler {
                 break;
             };
             self.fair.charge(sid);
+            let trace = self.trace_of(sid);
+            self.journal_event(sid, 0, trace, EventKind::Select, 0);
             let done = self.drive(sid, |sess, sink| {
                 sess.driver.issue(sink);
                 // Terminal short-circuits can complete a think
@@ -1407,7 +1588,7 @@ impl Scheduler {
         self.thinks += 1;
         self.sims += sims as u64;
         let elapsed = job.started.elapsed();
-        self.think_latency.record(elapsed);
+        self.think_hist.record(elapsed.as_secs_f64() * 1e3);
         let reply = ThinkReply {
             action: sess.driver.best_action(),
             value: sess.driver.root_value(),
@@ -1428,6 +1609,7 @@ impl Scheduler {
         // snapshots now share one fsync.
         let snapshot_due =
             self.store.is_some() && sess.thinks % self.snapshot_every as u64 == 0;
+        self.journal_event(sid, 0, job.trace, EventKind::ThinkDone, sims as u64);
         let mut seq = None;
         if snapshot_due {
             match self.image_of(sid) {
@@ -1436,8 +1618,12 @@ impl Scheduler {
                     eprintln!("shard {}: think snapshot failed: {e:#}", self.shard.index)
                 }
             }
+            if let Some(seq) = seq {
+                self.journal_event(sid, 0, job.trace, EventKind::Snapshot, seq);
+                self.journal_event(sid, 0, job.trace, EventKind::WalAppend, seq);
+            }
         }
-        self.reply_or_hold(seq, HeldReply::Think(job.reply, reply));
+        self.reply_or_hold(seq, sid, job.trace, HeldReply::Think(job.reply, reply));
     }
 
     fn snapshot(&mut self) -> ServiceMetrics {
@@ -1447,9 +1633,7 @@ impl Scheduler {
         let sc = self.counters_cache;
         let uptime = self.started.elapsed();
         let secs = uptime.as_secs_f64().max(1e-9);
-        let (think_ms_mean, think_ms_p50, think_ms_p90, think_ms_p99) =
-            self.think_latency.summary_ms();
-        ServiceMetrics {
+        let mut m = ServiceMetrics {
             uptime,
             shards: 1,
             sessions_open: self.sessions.len(),
@@ -1469,22 +1653,27 @@ impl Scheduler {
             wal_fsyncs: sc.fsyncs,
             snapshot_bytes_full: sc.snapshot_bytes_full,
             snapshot_bytes_delta: sc.snapshot_bytes_delta,
+            held_replies: self.held.len(),
+            held_replies_hwm: self.held_hwm,
             hosts: 0,
             host_unreachable: 0,
             sessions_per_sec: self.closed as f64 / secs,
             thinks_per_sec: self.thinks as f64 / secs,
             sims_per_sec: self.sims as f64 / secs,
-            think_ms_mean,
-            think_ms_p50,
-            think_ms_p90,
-            think_ms_p99,
+            think_hist: self.think_hist.clone(),
+            expand_hist: self.expand_hist.clone(),
+            sim_hist: self.sim_hist.clone(),
+            commit_hold_hist: self.commit_hold_hist.clone(),
             exp_occupancy: self.expansion.breakdown().occupancy(),
             sim_occupancy: self.simulation.breakdown().occupancy(),
             expansion_workers: self.expansion.capacity(),
             simulation_workers: self.simulation.capacity(),
             pending_expansions: self.pending_exp,
             pending_simulations: self.pending_sim,
-        }
+            ..Default::default()
+        };
+        m.derive_latency_scalars();
+        m
     }
 }
 
@@ -1678,5 +1867,54 @@ mod tests {
         let t = h.think(777, 4).unwrap();
         assert!(t.quiescent);
         h.close(777).unwrap();
+    }
+
+    #[test]
+    fn trace_reconstructs_a_think_timeline() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        });
+        let h = service.handle();
+        let sid = h.open(garnet(9), quick_spec(9), SessionOptions::default()).unwrap();
+        let t = h.think_traced(sid, 8, 0xABCD).unwrap();
+        assert!(t.quiescent);
+        let events = h.trace(Some(sid), 10_000).unwrap();
+        let kinds: Vec<EventKind> = events.iter().map(|e| e.kind).collect();
+        for want in [
+            EventKind::SessionOpen,
+            EventKind::Admit,
+            EventKind::Select,
+            EventKind::ExpandIssued,
+            EventKind::ExpandDone,
+            EventKind::SimIssued,
+            EventKind::SimDone,
+            EventKind::Backprop,
+            EventKind::ThinkDone,
+            EventKind::ReplySent,
+        ] {
+            assert!(kinds.contains(&want), "timeline missing {}", want.name());
+        }
+        // Single-writer journal: timestamps are monotone in record order.
+        for w in events.windows(2) {
+            assert!(w[0].at_us <= w[1].at_us, "journal went backwards in time");
+        }
+        // The caller's trace id rode from admit through the reply.
+        let admit = events.iter().find(|e| e.kind == EventKind::Admit).unwrap();
+        assert_eq!(admit.trace, 0xABCD);
+        assert_eq!(admit.arg, 8, "admit records the sim budget");
+        let sent = events.iter().rfind(|e| e.kind == EventKind::ReplySent).unwrap();
+        assert_eq!(sent.trace, 0xABCD);
+        // The histograms counted the same think.
+        let m = h.metrics().unwrap();
+        assert_eq!(m.think_hist.count(), 1);
+        assert!(m.sim_hist.count() >= 8);
+        assert!(m.expand_hist.count() >= 1);
+        // A session filter excludes other sessions' events.
+        let other = h.open(garnet(10), quick_spec(10), SessionOptions::default()).unwrap();
+        assert!(h.trace(Some(sid), 10_000).unwrap().iter().all(|e| e.session == sid));
+        h.close(other).unwrap();
+        h.close(sid).unwrap();
     }
 }

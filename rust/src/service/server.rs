@@ -84,6 +84,86 @@ impl Drop for TcpServer {
     }
 }
 
+/// A minimal Prometheus text-exposition endpoint (`wu-uct serve
+/// --stats-addr`): every HTTP request — path and method ignored, which
+/// is all a scraper needs — gets a `200 text/plain; version=0.0.4` body
+/// of [`ServiceMetrics::prometheus_text`] rendered from a fresh
+/// aggregate snapshot. One thread per request, no keep-alive: scrape
+/// cadence is seconds, not microseconds, and the snapshot itself is
+/// O(buckets), so the simplest correct server wins.
+pub struct StatsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl StatsServer {
+    /// Bind `addr` (port 0 for ephemeral) and serve scrapes of `handle`.
+    pub fn bind<H: SessionApi>(handle: H, addr: &str) -> Result<StatsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding stats addr {addr}"))?;
+        let local = listener.local_addr().context("reading bound stats address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_accept = Arc::clone(&stop);
+        let accept_thread = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop_accept.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let handle = handle.clone();
+                std::thread::spawn(move || serve_scrape(stream, handle));
+            }
+        });
+        Ok(StatsServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for StatsServer {
+    fn drop(&mut self) {
+        let Some(t) = self.accept_thread.take() else { return };
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        let _ = t.join();
+    }
+}
+
+/// One scrape: drain the request head (through the blank line), render,
+/// reply, close. Errors just drop the connection — the scraper retries.
+fn serve_scrape<H: SessionApi>(stream: TcpStream, handle: H) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => return, // peer closed before the blank line
+            Ok(_) if line.trim().is_empty() => break,
+            Ok(_) => {}
+        }
+    }
+    let (status, body) = match handle.metrics() {
+        Ok(m) => ("200 OK", m.prometheus_text()),
+        Err(e) => ("500 Internal Server Error", format!("metrics snapshot failed: {e:#}\n")),
+    };
+    let head = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = writer.write_all(head.as_bytes());
+    let _ = writer.write_all(body.as_bytes());
+    let _ = writer.flush();
+}
+
 /// One connection: read a raw line, dispatch, write the reply line. On
 /// EOF or I/O error, close every session the connection still owns.
 fn serve_connection<H: SessionApi>(stream: TcpStream, handle: H) {
@@ -268,6 +348,43 @@ mod tests {
         // Connection still serves.
         let v = request(&mut reader, &mut writer, r#"{"op":"ping"}"#);
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn stats_server_answers_http_scrapes_with_prometheus_text() {
+        let (svc, _server) = start();
+        let h = svc.handle();
+        let sid = {
+            use crate::env::garnet::Garnet;
+            use crate::mcts::common::SearchSpec;
+            use crate::service::scheduler::SessionOptions;
+            let spec = SearchSpec {
+                max_simulations: 8,
+                rollout_limit: 6,
+                max_depth: 8,
+                ..SearchSpec::default()
+            };
+            h.open(
+                Box::new(Garnet::new(15, 3, 20, 0.0, 4)),
+                spec,
+                SessionOptions::default(),
+            )
+            .unwrap()
+        };
+        h.think(sid, 8).unwrap();
+        let stats = StatsServer::bind(h.clone(), "127.0.0.1:0").unwrap();
+        let mut s = TcpStream::connect(stats.local_addr()).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut body = String::new();
+        std::io::Read::read_to_string(&mut BufReader::new(s), &mut body).unwrap();
+        assert!(body.starts_with("HTTP/1.0 200 OK\r\n"), "got: {body}");
+        assert!(body.contains("text/plain; version=0.0.4"));
+        assert!(body.contains("wuuct_thinks_total 1"));
+        assert!(body.contains("wuuct_think_latency_ms_bucket"));
+        assert!(body.contains("wuuct_held_replies_hwm"));
+        assert!(body.contains(r#"le="+Inf""#));
+        h.close(sid).unwrap();
+        drop(stats); // must not hang
     }
 
     #[test]

@@ -245,6 +245,31 @@ impl ShardedHandle {
         self.route(session)?.think(session, sims)
     }
 
+    /// [`ShardedHandle::think`] carrying a caller-supplied trace id that
+    /// the owning shard stamps on every journal event of the think.
+    pub fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
+        self.route(session)?.think_traced(session, sims, trace)
+    }
+
+    /// Merge every shard's event journal into one timeline (newest
+    /// `limit` events, oldest first). Shard clocks all start when the
+    /// fleet does, so sorting on `at_us` orders events across shards to
+    /// within thread-spawn skew; within one shard order is exact. The
+    /// session filter runs shard-side, so a filtered query only pays for
+    /// that session's events. The merge sort is stable, preserving each
+    /// shard's exact order among equal timestamps.
+    pub fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
+        let mut events = Vec::new();
+        for shard in &self.inner.shards {
+            events.extend(shard.trace(session, limit)?);
+        }
+        events.sort_by_key(|e| e.at_us);
+        if events.len() > limit {
+            events.drain(..events.len() - limit);
+        }
+        Ok(events)
+    }
+
     pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
         self.route(session)?.advance(session, action)
     }
@@ -413,6 +438,14 @@ impl SessionApi for ShardedHandle {
 
     fn think(&self, session: u64, sims: u32) -> Result<ThinkReply> {
         ShardedHandle::think(self, session, sims)
+    }
+
+    fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
+        ShardedHandle::think_traced(self, session, sims, trace)
+    }
+
+    fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
+        ShardedHandle::trace(self, session, limit)
     }
 
     fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {

@@ -28,6 +28,7 @@ use crate::env::garnet::Garnet;
 use crate::env::Env;
 use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::AdvanceOutcome;
+use crate::obs::EventKind;
 use crate::store::codec::{SessionImage, SessionMeta};
 use crate::store::engine::{DeltaTracker, SessionEngine, SessionStore, StoreCounters};
 use crate::store::wal::{
@@ -426,7 +427,9 @@ impl DurableScriptedService {
             ..SessionMeta::default()
         };
         let image = SessionImage::capture(id, self.svc.driver(id), meta)?;
-        self.store.log_open(id, &image)?;
+        let ticket = self.store.log_open(id, &image)?;
+        self.svc
+            .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
         self.thinks.insert(id, 0);
         Ok(())
     }
@@ -457,7 +460,11 @@ impl DurableScriptedService {
                     ..SessionMeta::default()
                 };
                 let image = SessionImage::capture(id, self.svc.driver(id), meta)?;
-                self.store.log_snapshot(id, &image)?;
+                let ticket = self.store.log_snapshot(id, &image)?;
+                self.svc
+                    .journal_event(id, 0, 0, EventKind::Snapshot, ticket.seq());
+                self.svc
+                    .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
             }
         }
         Ok(())
@@ -465,7 +472,9 @@ impl DurableScriptedService {
 
     pub fn advance(&mut self, id: u64, action: usize) -> Result<AdvanceOutcome> {
         let out = self.svc.advance(id, action)?;
-        self.store.log_advance(id, action)?;
+        let ticket = self.store.log_advance(id, action)?;
+        self.svc
+            .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
         Ok(out)
     }
 

@@ -110,6 +110,13 @@ impl VirtualExecutor {
         self.now
     }
 
+    /// Fast-forward virtual time; never moves it backwards. The fakenet
+    /// aligns host clocks with this at message delivery (Lamport style),
+    /// so merged cross-host timelines order causally.
+    pub fn advance_to(&mut self, t: u64) {
+        self.now = self.now.max(t);
+    }
+
     pub fn pending(&self) -> usize {
         self.in_flight.len()
     }

@@ -28,16 +28,42 @@
 //! tested in `rust/tests/distributed.rs`.
 
 use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::env::Env;
 use crate::mcts::common::SearchSpec;
+use crate::obs::{Event, EventKind};
 use crate::service::client::HostUnreachable;
 use crate::service::scheduler::Busy;
+use crate::service::{
+    AdvanceReply, CloseReply, ServiceMetrics, SessionApi, SessionOptions, ThinkReply,
+};
+use crate::store::codec::{SessionImage, SessionMeta};
+use crate::store::engine::SessionStore;
 use crate::store::migrate::{MigrationLink, Recovering};
+use crate::testkit::durability::{ScriptedDisk, ScriptedStore};
 use crate::testkit::harness::ScriptedService;
 use crate::testkit::latency::LatencyScript;
+
+/// A reply parked on its commit ticket until the host's disk syncs.
+#[derive(Clone, Copy)]
+struct HeldReply {
+    session: u64,
+    trace: u64,
+    seq: u64,
+    held_since: u64,
+}
+
+/// The durable mirror of a [`FakeHost`]: a scripted store plus the
+/// replies parked on its commit tickets — the live shard's
+/// reply-held-on-commit-ticket path, with the fsync boundary under
+/// script control ([`ScriptedDisk::sync`]).
+struct HostStore {
+    store: ScriptedStore,
+    held: Vec<HeldReply>,
+}
 
 /// One shard-host process in miniature: a scripted service plus the
 /// host-level seal/admission semantics of the wire ops.
@@ -45,6 +71,9 @@ pub struct FakeHost {
     svc: ScriptedService,
     sealed: HashSet<u64>,
     max_sessions: Option<usize>,
+    store: Option<HostStore>,
+    /// Thinks begun since the last run: `(session, trace id)`.
+    pending: Vec<(u64, u64)>,
 }
 
 impl FakeHost {
@@ -53,7 +82,25 @@ impl FakeHost {
             svc: ScriptedService::new(exp_capacity, sim_capacity, script),
             sealed: HashSet::new(),
             max_sessions: None,
+            store: None,
+            pending: Vec::new(),
         }
+    }
+
+    /// A durable host: lifecycle mirrored into a [`ScriptedStore`], and
+    /// think replies parked until the returned [`ScriptedDisk`] syncs
+    /// and [`Self::release_durable`] runs — the live durable shard's
+    /// commit-ticket hold, in virtual time.
+    pub fn new_durable(
+        exp_capacity: usize,
+        sim_capacity: usize,
+        script: LatencyScript,
+        full_every: u32,
+    ) -> (FakeHost, ScriptedDisk) {
+        let (store, disk) = ScriptedStore::create(full_every);
+        let mut host = FakeHost::new(exp_capacity, sim_capacity, script);
+        host.store = Some(HostStore { store, held: Vec::new() });
+        (host, disk)
     }
 
     /// Admission control: refuse imports (and opens) past `cap` open
@@ -78,19 +125,103 @@ impl FakeHost {
             }
         }
         self.svc.open(id, env, spec, weight);
+        if let Some(hs) = &mut self.store {
+            let meta = SessionMeta {
+                env_seed: self.svc.driver(id).spec().seed,
+                weight,
+                ..SessionMeta::default()
+            };
+            let image = SessionImage::capture(id, self.svc.driver(id), meta)?;
+            let ticket = hs.store.log_open(id, &image)?;
+            self.svc
+                .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
+        }
         Ok(())
     }
 
     pub fn begin_think(&mut self, id: u64, budget: u32) -> Result<()> {
+        self.begin_think_traced(id, budget, 0)
+    }
+
+    /// [`Self::begin_think`] carrying a trace id (0 = untraced), stamped
+    /// on the think's journal events and its reply-path events.
+    pub fn begin_think_traced(&mut self, id: u64, budget: u32, trace: u64) -> Result<()> {
         anyhow::ensure!(self.svc.contains(id), "unknown session {id}");
         self.check_unsealed(id)?;
-        self.svc.begin_think(id, budget);
+        self.svc.begin_think_traced(id, budget, trace);
+        self.pending.push((id, trace));
         Ok(())
     }
 
-    /// Run every pending think to completion (virtual time).
+    /// Run every pending think to completion (virtual time), then drive
+    /// each finished think's reply path: a durable host snapshots,
+    /// appends and parks the reply on its commit ticket (released by
+    /// [`Self::release_durable`] after a [`ScriptedDisk::sync`]); an
+    /// in-memory host replies immediately.
     pub fn run_to_completion(&mut self) {
         self.svc.run_to_completion();
+        for (sid, trace) in std::mem::take(&mut self.pending) {
+            match &mut self.store {
+                Some(hs) => {
+                    let meta = SessionMeta {
+                        env_seed: self.svc.driver(sid).spec().seed,
+                        weight: 1.0,
+                        ..SessionMeta::default()
+                    };
+                    let image = SessionImage::capture(sid, self.svc.driver(sid), meta)
+                        .expect("scripted snapshot capture");
+                    let ticket = hs.store.log_snapshot(sid, &image).expect("scripted append");
+                    let seq = ticket.seq();
+                    let now = self.svc.now();
+                    hs.held.push(HeldReply { session: sid, trace, seq, held_since: now });
+                    self.svc.journal_event(sid, 0, trace, EventKind::Snapshot, seq);
+                    self.svc.journal_event(sid, 0, trace, EventKind::WalAppend, seq);
+                    self.svc.journal_event(sid, 0, trace, EventKind::ReplyHeld, seq);
+                }
+                None => {
+                    self.svc.journal_event(sid, 0, trace, EventKind::ReplySent, 0);
+                }
+            }
+        }
+    }
+
+    /// Release replies whose commit seq the store has made durable (call
+    /// after a [`ScriptedDisk::sync`]): one batch `wal_fsync` event, then
+    /// `durable` + `reply_sent` per released reply with the virtual time
+    /// it spent parked — the live group committer's release path.
+    pub fn release_durable(&mut self) {
+        let Some(hs) = &mut self.store else { return };
+        let durable = hs.store.durable_seq();
+        let mut released = Vec::new();
+        hs.held.retain(|h| {
+            if h.seq <= durable {
+                released.push(*h);
+                false
+            } else {
+                true
+            }
+        });
+        if released.is_empty() {
+            return;
+        }
+        self.svc.journal_event(0, 0, 0, EventKind::WalFsync, durable);
+        let now = self.svc.now();
+        for h in released {
+            self.svc
+                .journal_event(h.session, 0, h.trace, EventKind::Durable, h.seq);
+            self.svc.journal_event(
+                h.session,
+                0,
+                h.trace,
+                EventKind::ReplySent,
+                now - h.held_since,
+            );
+        }
+    }
+
+    /// Replies currently parked on commit tickets.
+    pub fn held_replies(&self) -> usize {
+        self.store.as_ref().map(|hs| hs.held.len()).unwrap_or(0)
     }
 
     pub fn advance(&mut self, id: u64, action: usize) -> Result<()> {
@@ -132,16 +263,34 @@ impl FakeHost {
         &mut self.svc
     }
 
+    /// The host's journal slice: newest `limit` events, oldest first —
+    /// this host's shard-local answer to the wire `trace` op.
+    pub fn trace(&self, session: Option<u64>, limit: usize) -> Vec<Event> {
+        self.svc.trace_events(session, limit)
+    }
+
+    /// The host's virtual clock.
+    pub fn now(&self) -> u64 {
+        self.svc.now()
+    }
+
+    fn advance_clock_to(&mut self, t: u64) {
+        self.svc.advance_clock_to(t);
+    }
+
     /// Wire `export`: serialize the idle session and seal the copy.
     fn do_export(&mut self, id: u64) -> Result<Vec<u8>> {
         anyhow::ensure!(self.svc.contains(id), "unknown session {id}");
         self.check_unsealed(id)?; // double-export is a refusal, like live
         let bytes = self.svc.export_image(id)?;
         self.sealed.insert(id);
+        self.svc
+            .journal_event(id, 0, 0, EventKind::MigrateExport, bytes.len() as u64);
         Ok(bytes)
     }
 
-    /// Wire `import`: admission control, then install.
+    /// Wire `import`: admission control, then install (durably logged —
+    /// the WAL `Open` lands before the source may forget its copy).
     fn do_install(&mut self, bytes: &[u8]) -> Result<u64> {
         if let Some(limit) = self.max_sessions {
             let open = self.svc.session_ids().len();
@@ -149,19 +298,32 @@ impl FakeHost {
                 return Err(anyhow::Error::new(Busy { open, limit }));
             }
         }
-        self.svc.import(bytes)
+        let id = self.svc.import(bytes)?;
+        if let Some(hs) = &mut self.store {
+            let ticket = hs
+                .store
+                .log_open_encoded(id, bytes.to_vec(), self.svc.driver(id).tree())?;
+            self.svc
+                .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
+        }
+        Ok(id)
     }
 
     /// Wire `install` (seal resolution): `landed = true` forgets the
     /// copy; `landed = false` unseals it (idempotent).
     fn do_resolve(&mut self, id: u64, landed: bool) -> Result<()> {
+        self.sealed.remove(&id);
         if landed {
-            self.sealed.remove(&id);
-            self.svc.close(id)
-        } else {
-            self.sealed.remove(&id);
-            Ok(())
+            self.svc
+                .journal_event(id, 0, 0, EventKind::MigrateForget, 0);
+            self.svc.close(id)?;
+            if let Some(hs) = &mut self.store {
+                let ticket = hs.store.log_close(id)?;
+                self.svc
+                    .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
+            }
         }
+        Ok(())
     }
 }
 
@@ -187,6 +349,11 @@ pub struct FakeHostNet {
     delays: BTreeMap<u64, u64>,
     step: u64,
     clock: u64,
+    /// Highest host virtual time observed at any rpc boundary. Delivered
+    /// messages fast-forward the receiving host to at least this, so the
+    /// hosts' independent virtual clocks order causally (Lamport style)
+    /// and a merged cross-host timeline sorts correctly by timestamp.
+    lamport: u64,
     log: Vec<String>,
 }
 
@@ -201,6 +368,7 @@ impl FakeHostNet {
             delays: BTreeMap::new(),
             step: 0,
             clock: 0,
+            lamport: 0,
             log: Vec::new(),
         }
     }
@@ -249,6 +417,23 @@ impl FakeHostNet {
         std::mem::take(&mut self.log)
     }
 
+    /// The merged cross-host timeline: every host's journal slice,
+    /// stably sorted by virtual timestamp. Host clocks align at message
+    /// delivery (see `lamport`), so a migrated session's events order
+    /// causally across its hosts; ties keep host order, exactly like the
+    /// live router's merge keeps host-reply order.
+    pub fn trace(&self, session: Option<u64>, limit: usize) -> Vec<Event> {
+        let mut events = Vec::new();
+        for host in &self.hosts {
+            events.extend(host.trace(session, limit));
+        }
+        events.sort_by_key(|e| e.at_us);
+        if events.len() > limit {
+            events.drain(..events.len() - limit);
+        }
+        events
+    }
+
     fn unreachable(&self, host: usize) -> anyhow::Error {
         anyhow::Error::new(HostUnreachable { host: format!("fake-host-{host}") })
     }
@@ -285,6 +470,11 @@ impl FakeHostNet {
             ));
             return Err(self.unreachable(host));
         }
+        // Delivery carries the highest clock seen so far: the receiving
+        // host fast-forwards, so its journal events timestamp after the
+        // sender-side events that caused them.
+        self.lamport += 1;
+        self.hosts[host].advance_clock_to(self.lamport);
         self.log
             .push(format!("t={} step={} {what} -> host={host}", self.clock, self.step));
         Ok(())
@@ -293,6 +483,7 @@ impl FakeHostNet {
     /// Finish the current rpc: log the outcome, then lose the reply if
     /// scripted (the effect stands; the caller sees unreachable).
     fn finish_rpc<T>(&mut self, host: usize, res: Result<T>, summary: String) -> Result<T> {
+        self.lamport = self.lamport.max(self.hosts[host].now());
         let reply_lost = self.drop_reply.remove(&self.step);
         match res {
             Ok(v) => {
@@ -351,6 +542,63 @@ impl MigrationLink for FakeHostNet {
         let res = self.hosts[host].do_resolve(session, landed);
         let summary = format!("resolve sid={session} landed={landed} ok");
         self.finish_rpc(host, res, summary)
+    }
+}
+
+/// The net behind the real [`SessionApi`] seam, so the actual wire ops
+/// — `trace` foremost — serve over scripted hosts in tests
+/// (`proto::handle_line` against this is the same code path a TCP
+/// client exercises). Sessions are *driven* through the script, not the
+/// api, so the mutating ops report errors.
+#[derive(Clone)]
+pub struct FakeNetApi {
+    net: Arc<Mutex<FakeHostNet>>,
+}
+
+impl FakeNetApi {
+    pub fn new(net: FakeHostNet) -> FakeNetApi {
+        FakeNetApi { net: Arc::new(Mutex::new(net)) }
+    }
+
+    /// Direct access to the wrapped net.
+    pub fn lock(&self) -> std::sync::MutexGuard<'_, FakeHostNet> {
+        self.net.lock().unwrap()
+    }
+}
+
+impl SessionApi for FakeNetApi {
+    fn open(&self, _env: Box<dyn Env>, _spec: SearchSpec, _opts: SessionOptions) -> Result<u64> {
+        anyhow::bail!("scripted hosts are driven through the script, not the api")
+    }
+
+    fn think(&self, _session: u64, _sims: u32) -> Result<ThinkReply> {
+        anyhow::bail!("scripted hosts are driven through the script, not the api")
+    }
+
+    fn advance(&self, _session: u64, _action: usize) -> Result<AdvanceReply> {
+        anyhow::bail!("scripted hosts are driven through the script, not the api")
+    }
+
+    fn best_action(&self, session: u64) -> Result<usize> {
+        let net = self.lock();
+        for host in &net.hosts {
+            if host.contains(session) {
+                return host.best_action(session);
+            }
+        }
+        anyhow::bail!("unknown session {session}")
+    }
+
+    fn close(&self, _session: u64) -> Result<CloseReply> {
+        anyhow::bail!("scripted hosts are driven through the script, not the api")
+    }
+
+    fn metrics(&self) -> Result<ServiceMetrics> {
+        Ok(ServiceMetrics::default())
+    }
+
+    fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<Event>> {
+        Ok(self.lock().trace(session, limit))
     }
 }
 
@@ -428,6 +676,148 @@ mod tests {
         net.resolve_seal(pending.host, pending.session, pending.landed).unwrap();
         assert!(!net.host(0).contains(1));
         assert!(net.host(1).contains(1));
+    }
+
+    /// Assert `expect` appears within `kinds` in order (gaps allowed).
+    fn assert_subsequence(kinds: &[EventKind], expect: &[EventKind]) {
+        let mut it = kinds.iter();
+        for want in expect {
+            assert!(
+                it.any(|k| k == want),
+                "missing {want:?} (in order) from timeline: {kinds:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_op_reconstructs_a_cross_host_durable_think_timeline() {
+        use crate::service::json::Json;
+        use crate::service::proto::{event_from_json, handle_line};
+        let run = || {
+            let (mut a, disk_a) =
+                FakeHost::new_durable(2, 4, LatencyScript::uniform(3, (1, 3), (2, 9)), 4);
+            a.open(7, &env(7), spec(7), 1.0).unwrap();
+            let (b, disk_b) =
+                FakeHost::new_durable(2, 4, LatencyScript::uniform(4, (1, 3), (2, 9)), 4);
+            let mut net = FakeHostNet::new(vec![a, b]);
+
+            // One traced think on host 0; the reply parks on its commit
+            // ticket until the scripted fsync lands.
+            net.host_mut(0).begin_think_traced(7, 16, 99).unwrap();
+            net.host_mut(0).run_to_completion();
+            assert_eq!(net.host(0).held_replies(), 1, "reply parks on its ticket");
+            disk_a.sync();
+            net.host_mut(0).release_durable();
+            assert_eq!(net.host(0).held_replies(), 0);
+
+            // The session hops hosts over the real migration handshake...
+            let out = migrate_over(&mut net, 7, 0, 1);
+            assert!(matches!(out, HandshakeOutcome::Moved), "{out:?}");
+
+            // ...and keeps thinking under the same trace id on host 1.
+            net.host_mut(1).begin_think_traced(7, 16, 99).unwrap();
+            net.host_mut(1).run_to_completion();
+            disk_b.sync();
+            net.host_mut(1).release_durable();
+
+            // Reconstruct the timeline through the real wire op.
+            let api = FakeNetApi::new(net);
+            let (reply, _) = handle_line(&api, r#"{"op":"trace","session":7,"limit":4096}"#);
+            let v = Json::parse(&reply).unwrap();
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+            let Some(Json::Arr(items)) = v.get("events") else {
+                panic!("no events array in {reply}");
+            };
+            items
+                .iter()
+                .map(|e| event_from_json(e).unwrap())
+                .collect::<Vec<Event>>()
+        };
+
+        let timeline = run();
+        assert_eq!(timeline, run(), "same seed ⇒ identical cross-host timeline");
+
+        // Virtual-time ordering holds across the host boundary: clocks
+        // align at message delivery, so timestamps never run backwards.
+        assert!(timeline.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        // The session filter is exact and every traced event carries the
+        // caller's trace id.
+        assert!(timeline.iter().all(|e| e.session == 7));
+        assert!(timeline.iter().filter(|e| e.trace != 0).all(|e| e.trace == 99));
+        let admits: Vec<_> =
+            timeline.iter().filter(|e| e.kind == EventKind::Admit).collect();
+        assert_eq!(admits.len(), 2, "one admit per host's think");
+        assert!(admits.iter().all(|e| e.trace == 99));
+
+        // The complete story in causal order: admitted and searched on
+        // host 0, the reply parked until its WAL record is fsync-durable,
+        // the session exported/imported across the wire, and the second
+        // think's full span replayed on host 1 through its own durable
+        // reply.
+        let kinds: Vec<EventKind> = timeline.iter().map(|e| e.kind).collect();
+        assert_subsequence(
+            &kinds,
+            &[
+                EventKind::SessionOpen,
+                EventKind::WalAppend,
+                EventKind::Admit,
+                EventKind::Select,
+                EventKind::ExpandIssued,
+                EventKind::ExpandDone,
+                EventKind::Backprop,
+                EventKind::ThinkDone,
+                EventKind::Snapshot,
+                EventKind::WalAppend,
+                EventKind::ReplyHeld,
+                EventKind::Durable,
+                EventKind::ReplySent,
+                EventKind::MigrateExport,
+                EventKind::MigrateImport,
+                EventKind::WalAppend,
+                EventKind::Admit,
+                EventKind::Select,
+                EventKind::SimIssued,
+                EventKind::SimDone,
+                EventKind::ThinkDone,
+                EventKind::ReplyHeld,
+                EventKind::Durable,
+                EventKind::ReplySent,
+            ],
+        );
+        // Spans nest: every pool task issued by the traced thinks has a
+        // completion for the same task id, never before its issue.
+        for issued in timeline
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::ExpandIssued | EventKind::SimIssued))
+        {
+            let done = timeline
+                .iter()
+                .find(|e| {
+                    e.task == issued.task
+                        && matches!(e.kind, EventKind::ExpandDone | EventKind::SimDone)
+                })
+                .unwrap_or_else(|| panic!("task {} never completed", issued.task));
+            assert!(done.at_us >= issued.at_us, "completion before issue");
+        }
+        assert_eq!(*kinds.last().unwrap(), EventKind::ReplySent, "the reply ends the story");
+    }
+
+    #[test]
+    fn unfiltered_trace_carries_batch_fsync_events() {
+        let (mut a, disk) = FakeHost::new_durable(1, 2, LatencyScript::fixed(1, 4), 4);
+        a.open(1, &env(1), spec(1), 1.0).unwrap();
+        a.begin_think_traced(1, 8, 5).unwrap();
+        a.run_to_completion();
+        assert_eq!(a.held_replies(), 1);
+        disk.sync();
+        a.release_durable();
+        let all = a.trace(None, 4096);
+        assert!(all.iter().any(|e| e.kind == EventKind::WalFsync));
+        // The batch event is shard-scoped, so a session filter skips it...
+        assert!(a.trace(Some(1), 4096).iter().all(|e| e.kind != EventKind::WalFsync));
+        // ...and the released reply still carries its trace id.
+        let sent = all.iter().rfind(|e| e.kind == EventKind::ReplySent).unwrap();
+        assert_eq!(sent.trace, 5);
     }
 
     #[test]

@@ -15,6 +15,8 @@ use std::collections::{BTreeMap, HashMap};
 use crate::env::Env;
 use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::{AdvanceOutcome, SearchDriver, TaskSink};
+use crate::mcts::wu_uct::workers::TaskResult;
+use crate::obs::{Event, EventKind, Journal};
 use crate::service::fair::FairQueue;
 use crate::store::codec::{SessionImage, SessionMeta};
 use crate::testkit::executor::{Trace, VirtualExecutor};
@@ -106,26 +108,54 @@ struct ScriptedSession {
     thinking: bool,
     /// Fair-share weight, recorded for durable exports.
     weight: f64,
+    /// Trace id of the active (or last) think; 0 = untraced.
+    trace: u64,
+}
+
+/// Where an in-flight task came from, for absorbing its completion.
+struct Route {
+    session: u64,
+    trace: u64,
+    issued_at: u64,
 }
 
 /// [`TaskSink`] wrapper recording task → session routes, exactly like the
-/// live scheduler's shared sink.
+/// live scheduler's shared sink — and journaling each issue with the
+/// session's trace id, like the live shard's sink does.
 struct RoutedSink<'a> {
     exec: &'a mut VirtualExecutor,
-    routes: &'a mut HashMap<u64, u64>,
+    journal: &'a mut Journal,
+    routes: &'a mut HashMap<u64, Route>,
     session: u64,
+    trace: u64,
+}
+
+impl RoutedSink<'_> {
+    fn record(&mut self, id: u64, kind: EventKind) {
+        let at_us = self.exec.now();
+        self.journal.record(Event {
+            at_us,
+            session: self.session,
+            task: id,
+            trace: self.trace,
+            kind,
+            arg: 0,
+        });
+        self.routes
+            .insert(id, Route { session: self.session, trace: self.trace, issued_at: at_us });
+    }
 }
 
 impl TaskSink for RoutedSink<'_> {
     fn submit_expand(&mut self, env: Box<dyn Env>, action: usize, max_width: usize) -> u64 {
         let id = self.exec.submit_expand(env, action, max_width);
-        self.routes.insert(id, self.session);
+        self.record(id, EventKind::ExpandIssued);
         id
     }
 
     fn submit_simulate(&mut self, env: Box<dyn Env>, gamma: f64, limit: u32) -> u64 {
         let id = self.exec.submit_simulate(env, gamma, limit);
-        self.routes.insert(id, self.session);
+        self.record(id, EventKind::SimIssued);
         id
     }
 }
@@ -141,7 +171,8 @@ pub struct ScriptedService {
     /// deterministic; the fair queue's id tie-break makes the pick
     /// deterministic regardless.
     sessions: BTreeMap<u64, ScriptedSession>,
-    routes: HashMap<u64, u64>,
+    routes: HashMap<u64, Route>,
+    journal: Journal,
     exp_capacity: usize,
     sim_capacity: usize,
 }
@@ -153,9 +184,36 @@ impl ScriptedService {
             fair: FairQueue::new(),
             sessions: BTreeMap::new(),
             routes: HashMap::new(),
+            journal: Journal::default(),
             exp_capacity,
             sim_capacity,
         }
+    }
+
+    /// Record a journal event at the current virtual time. Public so the
+    /// serving tiers above ([`crate::testkit::fakenet`],
+    /// [`crate::testkit::durability`]) land their reply-path and WAL
+    /// events in the same per-shard timeline the live scheduler keeps.
+    pub fn journal_event(&mut self, session: u64, task: u64, trace: u64, kind: EventKind, arg: u64) {
+        let at_us = self.exec.now();
+        self.journal.record(Event { at_us, session, task, trace, kind, arg });
+    }
+
+    /// The shard's event journal (virtual-time span records).
+    pub fn journal(&self) -> &Journal {
+        &self.journal
+    }
+
+    /// The newest `limit` journal events, oldest first — the `trace`
+    /// op's per-shard answer.
+    pub fn trace_events(&self, session: Option<u64>, limit: usize) -> Vec<Event> {
+        self.journal.query(session, limit)
+    }
+
+    /// Fast-forward the shard's virtual clock (never backwards); the
+    /// fakenet aligns host clocks with this at message delivery.
+    pub fn advance_clock_to(&mut self, t: u64) {
+        self.exec.advance_to(t);
     }
 
     /// Open a session rooted at `env`'s current state.
@@ -170,6 +228,7 @@ impl ScriptedService {
         );
         self.install(id, SearchDriver::new(spec, env), weight);
         self.exec.note(&format!("open sid={id} weight={weight}"));
+        self.journal_event(id, 0, 0, EventKind::SessionOpen, 0);
     }
 
     /// Install an existing driver under `id` (recovery / migration
@@ -181,7 +240,7 @@ impl ScriptedService {
         );
         self.fair.admit(id, weight);
         self.sessions
-            .insert(id, ScriptedSession { driver, thinking: false, weight });
+            .insert(id, ScriptedSession { driver, thinking: false, weight, trace: 0 });
     }
 
     /// Close an idle, quiescent session.
@@ -192,6 +251,7 @@ impl ScriptedService {
         self.sessions.remove(&id);
         self.fair.remove(id);
         self.exec.note(&format!("close sid={id}"));
+        self.journal_event(id, 0, 0, EventKind::SessionClose, 0);
         Ok(())
     }
 
@@ -220,6 +280,7 @@ impl ScriptedService {
         self.sessions.remove(&id);
         self.fair.remove(id);
         self.exec.note(&format!("export sid={id} bytes={}", bytes.len()));
+        self.journal_event(id, 0, 0, EventKind::MigrateExport, bytes.len() as u64);
         Ok(bytes)
     }
 
@@ -259,6 +320,7 @@ impl ScriptedService {
         let driver = image.into_driver(crate::service::proto::make_env)?;
         self.install(id, driver, weight);
         self.exec.note(&format!("import sid={id}"));
+        self.journal_event(id, 0, 0, EventKind::MigrateImport, bytes.len() as u64);
         Ok(id)
     }
 
@@ -266,12 +328,21 @@ impl ScriptedService {
     /// called (all pending thinks progress concurrently, like sessions
     /// thinking at once on a live shard).
     pub fn begin_think(&mut self, id: u64, budget: u32) {
+        self.begin_think_traced(id, budget, 0);
+    }
+
+    /// [`Self::begin_think`] carrying a caller-supplied trace id (0 =
+    /// untraced), stamped on every journal event this think produces —
+    /// the virtual-time analogue of the wire `think` op's `trace` field.
+    pub fn begin_think_traced(&mut self, id: u64, budget: u32, trace: u64) {
         let sess = self.sessions.get_mut(&id).expect("unknown session");
         assert!(!sess.thinking, "session {id} already thinking");
         sess.driver.begin(budget);
         sess.thinking = budget > 0;
+        sess.trace = trace;
         self.fair.rejoin(id);
         self.exec.note(&format!("think sid={id} budget={budget}"));
+        self.journal_event(id, 0, trace, EventKind::Admit, budget as u64);
     }
 
     /// Per-session completed-simulation counts for the current thinks.
@@ -326,13 +397,28 @@ impl ScriptedService {
                 return;
             };
             self.fair.charge(sid);
+            let trace = self.sessions[&sid].trace;
+            self.journal_event(sid, 0, trace, EventKind::Select, 0);
             let sess = self.sessions.get_mut(&sid).expect("picked above");
-            let mut sink =
-                RoutedSink { exec: &mut self.exec, routes: &mut self.routes, session: sid };
+            let mut sink = RoutedSink {
+                exec: &mut self.exec,
+                journal: &mut self.journal,
+                routes: &mut self.routes,
+                session: sid,
+                trace,
+            };
             sess.driver.issue(&mut sink);
             if sess.thinking && sess.driver.done() {
                 sess.thinking = false;
                 self.exec.note(&format!("think-done sid={sid}"));
+                self.journal.record(Event {
+                    at_us: self.exec.now(),
+                    session: sid,
+                    task: 0,
+                    trace,
+                    kind: EventKind::ThinkDone,
+                    arg: sess.driver.completed() as u64,
+                });
             }
         }
     }
@@ -345,14 +431,38 @@ impl ScriptedService {
             self.dispatch();
             let Some(result) = self.exec.next_result() else { break };
             let task_id = result.task_id();
-            let Some(sid) = self.routes.remove(&task_id) else { continue };
+            let done_kind = match result {
+                TaskResult::Expanded(_) => EventKind::ExpandDone,
+                _ => EventKind::SimDone,
+            };
+            let Some(route) = self.routes.remove(&task_id) else { continue };
+            let sid = route.session;
+            let task_us = self.exec.now().saturating_sub(route.issued_at);
+            self.journal_event(sid, task_id, route.trace, done_kind, task_us);
+            {
+                let sess = self.sessions.get_mut(&sid).expect("routed session exists");
+                let mut sink = RoutedSink {
+                    exec: &mut self.exec,
+                    journal: &mut self.journal,
+                    routes: &mut self.routes,
+                    session: sid,
+                    trace: route.trace,
+                };
+                sess.driver.absorb(result, &mut sink);
+            }
+            self.journal_event(sid, task_id, route.trace, EventKind::Backprop, 0);
             let sess = self.sessions.get_mut(&sid).expect("routed session exists");
-            let mut sink =
-                RoutedSink { exec: &mut self.exec, routes: &mut self.routes, session: sid };
-            sess.driver.absorb(result, &mut sink);
             if sess.thinking && sess.driver.done() {
                 sess.thinking = false;
                 self.exec.note(&format!("think-done sid={sid}"));
+                self.journal.record(Event {
+                    at_us: self.exec.now(),
+                    session: sid,
+                    task: 0,
+                    trace: route.trace,
+                    kind: EventKind::ThinkDone,
+                    arg: sess.driver.completed() as u64,
+                });
             }
             let counts = self.completed();
             on_tick(self.exec.now(), &counts);
@@ -489,6 +599,40 @@ mod tests {
         assert!(out.reused, "searched action has an expanded child");
         assert!(svc.quiescent(1));
         svc.close(1).unwrap();
+    }
+
+    #[test]
+    fn journal_records_think_spans_in_virtual_time() {
+        let mut svc = ScriptedService::new(1, 2, LatencyScript::fixed(1, 3));
+        svc.open(1, &env(9), spec(8, 9), 1.0);
+        svc.begin_think_traced(1, 8, 42);
+        svc.run_to_completion();
+        let events = svc.trace_events(Some(1), 1024);
+        let kinds: Vec<crate::obs::EventKind> = events.iter().map(|e| e.kind).collect();
+        use crate::obs::EventKind;
+        assert_eq!(kinds[0], EventKind::SessionOpen);
+        assert_eq!(kinds[1], EventKind::Admit);
+        assert!(kinds.contains(&EventKind::Select));
+        assert!(kinds.contains(&EventKind::ExpandIssued));
+        assert!(kinds.contains(&EventKind::SimDone));
+        assert!(kinds.contains(&EventKind::Backprop));
+        assert_eq!(*kinds.last().unwrap(), EventKind::ThinkDone);
+        // Every event of the think carries the caller's trace id, and
+        // virtual timestamps never run backwards.
+        assert!(events
+            .iter()
+            .filter(|e| e.kind != EventKind::SessionOpen)
+            .all(|e| e.trace == 42));
+        assert!(events.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        // Replays are identical: the journal is part of the golden state.
+        let rerun = || {
+            let mut svc = ScriptedService::new(1, 2, LatencyScript::fixed(1, 3));
+            svc.open(1, &env(9), spec(8, 9), 1.0);
+            svc.begin_think_traced(1, 8, 42);
+            svc.run_to_completion();
+            svc.trace_events(None, 1024)
+        };
+        assert_eq!(rerun(), rerun(), "same seed ⇒ identical journal");
     }
 
     #[test]

@@ -44,7 +44,19 @@
 //!   ([`crate::store::migrate::migrate_over`]) the live router runs
 //!   over TCP — so every partition window, including mid-migration, is
 //!   exercised deterministically without spawning processes
-//!   (`rust/tests/distributed.rs`).
+//!   (`rust/tests/distributed.rs`). Hosts can be durable
+//!   ([`fakenet::FakeHost::new_durable`]), parking think replies on
+//!   commit tickets until a scripted fsync, and
+//!   [`fakenet::FakeNetApi`] puts the net behind the real
+//!   [`SessionApi`](crate::service::SessionApi) seam so the wire
+//!   `trace` op reconstructs a cross-host think's timeline.
+//!
+//! Every tier records the same typed [`crate::obs`] journal events the
+//! live scheduler does — admit/select/issue/done/backprop through
+//! WAL-append/fsync-durable/reply — stamped with virtual time, so span
+//! timelines are golden too: host clocks align at fakenet message
+//! delivery (Lamport style) and the same seed reconstructs the same
+//! cross-host timeline, byte for byte.
 //!
 //! Used by `rust/tests/conformance.rs` (optimal-action conformance,
 //! worker-count invariance), the fairness property in
@@ -63,6 +75,6 @@ pub use durability::{
     migrate_under_load, DurableScriptedService, MigrationRun, ScriptedDisk, ScriptedStore,
 };
 pub use executor::{Trace, VirtualExecutor};
-pub use fakenet::{FakeHost, FakeHostNet, ScriptEvent};
+pub use fakenet::{FakeHost, FakeHostNet, FakeNetApi, ScriptEvent};
 pub use harness::{scripted_driver, scripted_search, ScriptedService, SearchOutcome};
 pub use latency::LatencyScript;

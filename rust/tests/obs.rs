@@ -1,0 +1,126 @@
+//! Observability regression tests that need a counting global
+//! allocator: the metrics scrape path must cost O(buckets), never
+//! O(samples).
+//!
+//! The original `LatencyStats` kept a 65,536-sample reservoir and every
+//! `metrics` op cloned **and sorted** it to answer percentiles — a
+//! ~0.5 MB allocation plus an O(n log n) sort per scrape, per shard.
+//! The log-bucket [`Histogram`] answers the same queries from 37 fixed
+//! counters, so a scrape's allocation footprint must stay bounded by
+//! the exposition text itself no matter how many samples were recorded.
+//! This test records 200k samples and then meters the allocator across
+//! a scrape to pin that down.
+//!
+//! Kept in its own integration-test binary because a `#[global_allocator]`
+//! is process-wide: sharing a binary with unrelated tests would make the
+//! byte deltas racy (harness threads allocate concurrently).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use wu_uct::obs::{Histogram, NUM_BUCKETS};
+use wu_uct::service::ServiceMetrics;
+
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocated_bytes() -> u64 {
+    BYTES.load(Ordering::Relaxed)
+}
+
+#[test]
+fn scrape_allocates_o_buckets_not_o_samples() {
+    const SAMPLES: u64 = 200_000;
+    let mut m = ServiceMetrics::default();
+    for i in 0..SAMPLES {
+        // Spread across several decades so most buckets are populated.
+        let ms = 0.05 * ((i % 997) + 1) as f64;
+        m.think_hist.record(ms);
+        m.expand_hist.record(ms * 0.1);
+        m.sim_hist.record(ms * 0.5);
+        if i % 16 == 0 {
+            m.commit_hold_hist.record(ms * 0.25);
+        }
+    }
+    m.thinks = SAMPLES;
+    m.derive_latency_scalars();
+    assert_eq!(m.think_hist.count(), SAMPLES);
+
+    // Warm-up scrape so one-time buffers (format machinery, string
+    // growth) don't count against the steady-state measurement.
+    let warm = m.prometheus_text();
+    assert!(warm.contains("wuuct_think_latency_ms_bucket"));
+
+    let before = allocated_bytes();
+    let text = m.prometheus_text();
+    let p99 = m.think_hist.percentile_ms(99.0);
+    let spent = allocated_bytes() - before;
+    assert!(p99 > 0.0);
+    assert!(text.contains("wuuct_think_latency_ms_count"));
+
+    // The old reservoir path cloned + sorted 200k f64s: ≥ 1.6 MB and a
+    // sort per scrape. The histogram path's footprint is the rendered
+    // text plus O(NUM_BUCKETS) bookkeeping — comfortably under 256 KiB
+    // even with string reallocation slack.
+    let ceiling = 256 * 1024;
+    assert!(
+        spent < ceiling,
+        "scrape allocated {spent} bytes for {SAMPLES} samples — \
+         O(samples) cost is back (ceiling {ceiling}, buckets {NUM_BUCKETS})"
+    );
+    // And it really is sample-count independent: the same scrape off a
+    // 100× smaller recording allocates the same order of magnitude.
+    let mut small = ServiceMetrics::default();
+    for i in 0..SAMPLES / 100 {
+        small.think_hist.record(0.05 * ((i % 997) + 1) as f64);
+    }
+    small.derive_latency_scalars();
+    let _ = small.prometheus_text();
+    let before_small = allocated_bytes();
+    let _ = small.prometheus_text();
+    let spent_small = allocated_bytes() - before_small;
+    assert!(
+        spent < spent_small.saturating_mul(8).max(ceiling),
+        "scrape cost should not scale with samples: {spent} vs {spent_small}"
+    );
+
+    // Percentile/mean queries are pure bucket walks — zero allocations.
+    // (Same test function as the scrape meter on purpose: the counters
+    // are process-global, so a second #[test] running on a sibling
+    // harness thread would race the deltas.)
+    let mut h = Histogram::new();
+    for i in 0..100_000u64 {
+        h.record(0.01 * ((i % 3571) + 1) as f64);
+    }
+    let _ = h.percentile_ms(50.0);
+    let before_calls = CALLS.load(Ordering::Relaxed);
+    let p50 = h.percentile_ms(50.0);
+    let p99_h = h.percentile_ms(99.0);
+    let mean = h.mean_ms();
+    let calls = CALLS.load(Ordering::Relaxed) - before_calls;
+    assert!(p50 > 0.0 && p99_h >= p50 && mean > 0.0);
+    assert_eq!(calls, 0, "percentile/mean must be allocation-free bucket walks");
+}
