@@ -79,6 +79,41 @@ fn specs() -> Vec<OptSpec> {
             help: "serve: Prometheus text scrape address (empty = off)",
             default: Some(""),
         },
+        OptSpec {
+            name: "replicate",
+            help: "serve: stream every shard WAL to this standby host (host:port; requires --data-dir)",
+            default: Some(""),
+        },
+        OptSpec {
+            name: "repl-ack",
+            help: "serve: hold each reply until the standby acked the records behind it",
+            default: None,
+        },
+        OptSpec {
+            name: "max-held",
+            help: "serve: cap on replies parked per shard awaiting fsync/standby ack (0 = uncapped)",
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "join",
+            help: "shard-host: register with this router and heartbeat it (host:port)",
+            default: Some(""),
+        },
+        OptSpec {
+            name: "advertise",
+            help: "shard-host: address to advertise at join (empty = --addr)",
+            default: Some(""),
+        },
+        OptSpec {
+            name: "suspect-after-ms",
+            help: "router: a joined host silent this long turns suspect (standby promoted if advertised)",
+            default: Some("3000"),
+        },
+        OptSpec {
+            name: "lease-ttl-ms",
+            help: "router: session-lease TTL; a router stalled past it can be fenced by a peer",
+            default: Some("5000"),
+        },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
 }
@@ -193,6 +228,9 @@ fn main() -> Result<()> {
             let full_every = args.u32("full-every")?.max(1);
             let rebalance_skew = args.f64("rebalance")?;
             let hosts_arg = args.str("hosts")?.to_string();
+            let replicate = args.str("replicate")?.to_string();
+            let max_held = args.usize("max-held")?;
+            let join_router = args.str("join")?.to_string();
             if command == "serve" && !hosts_arg.is_empty() {
                 // Router tier: no local shards, no local sessions — just
                 // placement + proxying over the shard-host fleet.
@@ -206,6 +244,8 @@ fn main() -> Result<()> {
                         max_skew: rebalance_skew.max(1.0),
                         ..wu_uct::service::RebalanceConfig::default()
                     }),
+                    suspect_after_ms: args.u64("suspect-after-ms")?.max(1),
+                    lease_ttl_ms: args.u64("lease-ttl-ms")?.max(1),
                     ..wu_uct::service::RouterConfig::new(hosts.clone())
                 })?;
                 let server = TcpServer::bind(router.handle(), args.str("addr")?)?;
@@ -228,7 +268,7 @@ fn main() -> Result<()> {
                         "auto-rebalance: moving sessions across hosts above {rebalance_skew}x mean occupancy"
                     );
                 }
-                println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, ping");
+                println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, join, heartbeat, drain, ping");
                 server.join(); // foreground until killed
                 return Ok(());
             }
@@ -241,6 +281,7 @@ fn main() -> Result<()> {
                     expansion_workers: exp_workers,
                     simulation_workers: sim_workers,
                     seed: scale.seed,
+                    max_held: (max_held > 0).then_some(max_held),
                     ..ServiceConfig::default()
                 },
                 max_sessions_per_shard: (max_sessions > 0).then_some(max_sessions),
@@ -252,6 +293,8 @@ fn main() -> Result<()> {
                     max_skew: rebalance_skew.max(1.0),
                     ..wu_uct::service::RebalanceConfig::default()
                 }),
+                replicate: (!replicate.is_empty()).then(|| replicate.clone()),
+                repl_ack: args.flag("repl-ack"),
                 ..ShardedConfig::default()
             })?;
             let server = TcpServer::bind(service.handle(), args.str("addr")?)?;
@@ -273,6 +316,49 @@ fn main() -> Result<()> {
                      for a `wu-uct serve --hosts ...` router tier"
                 );
             }
+            if !replicate.is_empty() {
+                println!(
+                    "standby replication: streaming shard WALs to {replicate}{}",
+                    if args.flag("repl-ack") {
+                        " (repl-ack: replies held until the standby acks)"
+                    } else {
+                        " (async, bounded lag)"
+                    }
+                );
+            }
+            if max_held > 0 {
+                println!("held-reply cap: {max_held} parked replies/shard, then forced flush");
+            }
+            // Dynamic membership: register with the router and keep
+            // heartbeating; `known:false` (router restarted) re-joins.
+            let _membership = if !join_router.is_empty() {
+                let advertise = {
+                    let a = args.str("advertise")?.to_string();
+                    if a.is_empty() { server.local_addr().to_string() } else { a }
+                };
+                let standby = (!replicate.is_empty()).then(|| replicate.clone());
+                let router = wu_uct::service::HostClient::new(join_router.clone());
+                match router.join(&advertise, standby.as_deref()) {
+                    Ok(epoch) => println!(
+                        "membership: joined router {join_router} as {advertise} (epoch {epoch})"
+                    ),
+                    Err(e) => println!(
+                        "membership: router {join_router} not reachable yet ({e:#}); retrying"
+                    ),
+                }
+                Some(std::thread::spawn(move || loop {
+                    match router.heartbeat(&advertise) {
+                        Ok(true) => {}
+                        // Unknown (router restart) or unreachable: re-join.
+                        Ok(false) | Err(_) => {
+                            let _ = router.join(&advertise, standby.as_deref());
+                        }
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1000));
+                }))
+            } else {
+                None
+            };
             if max_sessions > 0 {
                 println!("admission control: {max_sessions} sessions/shard, busy replies beyond");
             }
@@ -288,7 +374,7 @@ fn main() -> Result<()> {
             if rebalance_skew > 0.0 {
                 println!("auto-rebalance: moving sessions above {rebalance_skew}x mean occupancy");
             }
-            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, ping");
+            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, replicate, repl_status, promote, ping");
             server.join(); // foreground until killed
         }
         "atari-table1" => {

@@ -30,9 +30,11 @@ use crate::obs::Event;
 use crate::service::json::Json;
 use crate::service::metrics::ServiceMetrics;
 use crate::service::proto::{event_from_json, image_from_hex, image_to_hex, metrics_from_json};
+use crate::service::lease::LeaseLost;
 use crate::service::scheduler::{
     AdvanceReply, Busy, CloseReply, SessionOptions, SessionStat, ThinkReply,
 };
+use crate::service::{PromoteReply, ReplShardStatus};
 use crate::store::migrate::Recovering;
 
 /// Typed connectivity failure: the host did not answer (dial refused,
@@ -206,6 +208,10 @@ impl HostClient {
             return Err(anyhow::Error::new(Recovering { session })
                 .context(format!("host {}: {msg}", self.addr)));
         }
+        if v.get("lease_lost").and_then(|b| b.as_bool()) == Some(true) {
+            return Err(anyhow::Error::new(LeaseLost { session })
+                .context(format!("host {}: {msg}", self.addr)));
+        }
         Err(anyhow!("host {}: {msg}", self.addr))
     }
 
@@ -370,6 +376,102 @@ impl HostClient {
             .map(event_from_json)
             .collect::<Result<Vec<Event>>>()
             .with_context(|| format!("host {} sent a malformed trace event", self.addr))
+    }
+
+    /// Announce a shard host to a router (idempotent; safe to retry).
+    /// Returns the membership epoch the router granted.
+    pub fn join(&self, addr: &str, standby: Option<&str>) -> Result<u64> {
+        let mut fields = vec![
+            ("op".to_string(), Json::Str("join".to_string())),
+            ("addr".to_string(), Json::Str(addr.to_string())),
+        ];
+        if let Some(s) = standby {
+            fields.push(("standby".to_string(), Json::Str(s.to_string())));
+        }
+        let v = self.ok_call(&Json::Obj(fields).render(), 0)?;
+        v.get("epoch")
+            .and_then(|e| e.as_u64())
+            .ok_or_else(|| anyhow!("host {}: join reply missing epoch", self.addr))
+    }
+
+    /// Heartbeat a shard host's liveness to a router. `Ok(false)` means
+    /// the router does not know the host — it should re-[`HostClient::join`].
+    pub fn heartbeat(&self, addr: &str) -> Result<bool> {
+        let line = Json::Obj(vec![
+            ("op".to_string(), Json::Str("heartbeat".to_string())),
+            ("addr".to_string(), Json::Str(addr.to_string())),
+        ])
+        .render();
+        let v = self.ok_call(&line, 0)?;
+        Ok(v.get("known").and_then(|k| k.as_bool()).unwrap_or(false))
+    }
+
+    /// Ask a router to drain a host: migrate its sessions out, then
+    /// forget it. Returns how many sessions moved. Not retried on a lost
+    /// reply — the drain may have completed, and re-draining a forgotten
+    /// host is an error, not a no-op.
+    pub fn drain(&self, addr: &str) -> Result<usize> {
+        let line = Json::Obj(vec![
+            ("op".to_string(), Json::Str("drain".to_string())),
+            ("addr".to_string(), Json::Str(addr.to_string())),
+        ])
+        .render();
+        let v = self.ok_call_once(&line, 0)?;
+        v.get("moved")
+            .and_then(|m| m.as_usize())
+            .ok_or_else(|| anyhow!("host {}: drain reply missing moved", self.addr))
+    }
+
+    /// Ship one replication frame to a standby host. Idempotent by
+    /// construction — the standby skips already-applied sequences — so a
+    /// lost reply retries safely. Returns the standby's contiguous ack.
+    pub fn replicate(&self, shard: usize, frame: &[u8]) -> Result<u64> {
+        let line = Json::Obj(vec![
+            ("op".to_string(), Json::Str("replicate".to_string())),
+            ("shard".to_string(), Json::Num(shard as f64)),
+            ("frame".to_string(), Json::Str(image_to_hex(frame))),
+        ])
+        .render();
+        let v = self.ok_call(&line, 0)?;
+        v.get("acked")
+            .and_then(|a| a.as_u64())
+            .ok_or_else(|| anyhow!("host {}: replicate reply missing acked", self.addr))
+    }
+
+    /// Read a standby host's per-shard replication progress (idempotent)
+    /// — the resume handshake for a reconnecting primary.
+    pub fn repl_status(&self) -> Result<Vec<ReplShardStatus>> {
+        let v = self.ok_call(r#"{"op":"repl_status"}"#, 0)?;
+        let Some(Json::Arr(raw)) = v.get("shards") else {
+            anyhow::bail!("host {}: repl_status reply missing shards", self.addr);
+        };
+        let mut out = Vec::with_capacity(raw.len());
+        for item in raw {
+            let int = |key: &str| {
+                item.get(key)
+                    .and_then(|x| x.as_u64())
+                    .ok_or_else(|| anyhow!("host {}: repl_status entry missing {key:?}", self.addr))
+            };
+            out.push(ReplShardStatus {
+                shard: int("shard")? as usize,
+                start: int("start")?,
+                acked: int("acked")?,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Tell a standby host its primary is gone: fold the replicated
+    /// streams into live sessions. Idempotent (a second promote replays
+    /// nothing new), so a lost reply retries.
+    pub fn promote(&self) -> Result<PromoteReply> {
+        let v = self.ok_call(r#"{"op":"promote"}"#, 0)?;
+        let int = |key: &str| {
+            v.get(key)
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow!("host {}: promote reply missing {key:?}", self.addr))
+        };
+        Ok(PromoteReply { sessions: int("sessions")? as usize, steps: int("steps")? })
     }
 
     pub fn health(&self) -> Result<RemoteHealth> {

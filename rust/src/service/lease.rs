@@ -1,0 +1,244 @@
+//! Session leases with epoch fencing — what lets N stateless routers
+//! serve hot-hot.
+//!
+//! Every *side-effecting placement decision* (open, migrate, seal
+//! resolution) must hold the session's lease. Two routers racing the
+//! same session — the PR 4 handshake hazard — now resolve at the lease
+//! table: one acquires, the other observes the typed [`LeaseLost`]
+//! error and backs off. Leases carry **epochs**: a lease taken over
+//! (after the holder's TTL lapsed — a partitioned or crashed router)
+//! gets a strictly higher epoch, and every later step of the holder's
+//! in-flight operation re-validates `(owner, epoch)` before its side
+//! effect. A fenced router cannot complete a handshake it started
+//! before losing the lease, no matter how delayed its messages are.
+//!
+//! The table itself is an in-process shared structure (`Arc<Mutex>`):
+//! the live deployment's routers share one via the process that owns it,
+//! and the chaos scheduler shares one between its scripted routers. A
+//! multi-process deployment would back the same five operations
+//! (acquire / validate / extend / release / TTL takeover) with an
+//! external linearizable store; the fencing rules proven here transfer
+//! unchanged (see DESIGN.md §11).
+//!
+//! Time is caller-supplied milliseconds — no internal clock — so lease
+//! expiry is deterministic under the chaos scheduler's virtual time.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Typed fencing error: the caller does not (or no longer does) hold
+/// the session's lease. Carried over the wire as the `lease_lost:true`
+/// marker so a remote router rebuilds it typed, like [`super::scheduler::Busy`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LeaseLost {
+    pub session: u64,
+}
+
+impl std::fmt::Display for LeaseLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "lease lost: session {} is leased to another router; back off and retry",
+            self.session
+        )
+    }
+}
+
+impl std::error::Error for LeaseLost {}
+
+/// A granted lease: present this at every subsequent fenced step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lease {
+    pub session: u64,
+    pub owner: u64,
+    pub epoch: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    owner: u64,
+    epoch: u64,
+    expires_ms: u64,
+}
+
+struct State {
+    leases: HashMap<u64, Entry>,
+    /// Epoch source: bumped on every grant/takeover, never reused.
+    next_epoch: u64,
+    /// Takeovers of expired leases (fencing events; observable in tests).
+    takeovers: u64,
+}
+
+/// The shared lease table. Cheap to clone (`Arc` inside); all methods
+/// take `&self`.
+#[derive(Clone)]
+pub struct LeaseTable {
+    inner: Arc<Mutex<State>>,
+    ttl_ms: u64,
+}
+
+impl LeaseTable {
+    /// `ttl_ms`: how long a lease lives without [`LeaseTable::extend`].
+    /// A holder that goes quiet for longer (partitioned, crashed) can be
+    /// taken over by another router.
+    pub fn new(ttl_ms: u64) -> LeaseTable {
+        LeaseTable {
+            inner: Arc::new(Mutex::new(State {
+                leases: HashMap::new(),
+                next_epoch: 0,
+                takeovers: 0,
+            })),
+            ttl_ms: ttl_ms.max(1),
+        }
+    }
+
+    /// Acquire the session's lease for `owner`. Grants when the session
+    /// is unleased, already leased by `owner` (re-acquire extends, same
+    /// epoch), or the holder's lease expired (takeover: **new epoch**,
+    /// fencing the old holder). A live lease held by another owner ⇒
+    /// [`LeaseLost`].
+    pub fn acquire(&self, session: u64, owner: u64, now_ms: u64) -> Result<Lease, LeaseLost> {
+        let mut st = self.inner.lock().unwrap();
+        let expires_ms = now_ms.saturating_add(self.ttl_ms);
+        match st.leases.get_mut(&session) {
+            Some(e) if e.owner == owner => {
+                e.expires_ms = expires_ms;
+                let epoch = e.epoch;
+                Ok(Lease { session, owner, epoch })
+            }
+            Some(e) if e.expires_ms <= now_ms => {
+                st.next_epoch += 1;
+                st.takeovers += 1;
+                let epoch = st.next_epoch;
+                st.leases.insert(session, Entry { owner, epoch, expires_ms });
+                Ok(Lease { session, owner, epoch })
+            }
+            Some(_) => Err(LeaseLost { session }),
+            None => {
+                st.next_epoch += 1;
+                let epoch = st.next_epoch;
+                st.leases.insert(session, Entry { owner, epoch, expires_ms });
+                Ok(Lease { session, owner, epoch })
+            }
+        }
+    }
+
+    /// Fencing check before a side effect: the lease must still be held
+    /// by this `(owner, epoch)`. A takeover in between (higher epoch,
+    /// different owner — or even the same owner re-acquiring after
+    /// expiry) fails the check.
+    pub fn validate(&self, lease: Lease) -> Result<(), LeaseLost> {
+        let st = self.inner.lock().unwrap();
+        match st.leases.get(&lease.session) {
+            Some(e) if e.owner == lease.owner && e.epoch == lease.epoch => Ok(()),
+            _ => Err(LeaseLost { session: lease.session }),
+        }
+    }
+
+    /// Refresh the TTL of a held lease (the long-operation keepalive).
+    /// Fails like [`LeaseTable::validate`] if the lease was taken over.
+    pub fn extend(&self, lease: Lease, now_ms: u64) -> Result<(), LeaseLost> {
+        let mut st = self.inner.lock().unwrap();
+        match st.leases.get_mut(&lease.session) {
+            Some(e) if e.owner == lease.owner && e.epoch == lease.epoch => {
+                e.expires_ms = now_ms.saturating_add(self.ttl_ms);
+                Ok(())
+            }
+            _ => Err(LeaseLost { session: lease.session }),
+        }
+    }
+
+    /// Release a held lease. A stale `(owner, epoch)` release is a
+    /// no-op — it must not evict a newer holder's lease.
+    pub fn release(&self, lease: Lease) {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(e) = st.leases.get(&lease.session) {
+            if e.owner == lease.owner && e.epoch == lease.epoch {
+                st.leases.remove(&lease.session);
+            }
+        }
+    }
+
+    /// Leases currently recorded (live or expired-but-untaken).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().leases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expired-lease takeovers so far (each one fenced an old holder).
+    pub fn takeovers(&self) -> u64 {
+        self.inner.lock().unwrap().takeovers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_router_is_fenced_while_lease_is_live() {
+        let t = LeaseTable::new(100);
+        let a = t.acquire(7, 1, 0).unwrap();
+        assert_eq!(t.acquire(7, 2, 10), Err(LeaseLost { session: 7 }));
+        assert!(t.validate(a).is_ok());
+        t.release(a);
+        assert!(t.acquire(7, 2, 20).is_ok());
+    }
+
+    #[test]
+    fn reacquire_by_owner_extends_without_new_epoch() {
+        let t = LeaseTable::new(100);
+        let a = t.acquire(7, 1, 0).unwrap();
+        let b = t.acquire(7, 1, 90).unwrap();
+        assert_eq!(a.epoch, b.epoch, "same holder, same epoch");
+        // The extension moved the deadline: still fenced at t=150.
+        assert_eq!(t.acquire(7, 2, 150), Err(LeaseLost { session: 7 }));
+    }
+
+    #[test]
+    fn expired_lease_is_taken_over_and_old_holder_is_fenced() {
+        let t = LeaseTable::new(100);
+        let old = t.acquire(7, 1, 0).unwrap();
+        // Router 1 goes quiet; router 2 takes over after the TTL.
+        let new = t.acquire(7, 2, 101).unwrap();
+        assert!(new.epoch > old.epoch);
+        assert_eq!(t.takeovers(), 1);
+        // Router 1's delayed continuation hits the fence.
+        assert_eq!(t.validate(old), Err(LeaseLost { session: 7 }));
+        assert_eq!(t.extend(old, 102), Err(LeaseLost { session: 7 }));
+        // Its stale release must not evict router 2's lease.
+        t.release(old);
+        assert!(t.validate(new).is_ok());
+    }
+
+    #[test]
+    fn distinct_sessions_lease_independently() {
+        let t = LeaseTable::new(100);
+        let a = t.acquire(1, 1, 0).unwrap();
+        let b = t.acquire(2, 2, 0).unwrap();
+        assert!(t.validate(a).is_ok());
+        assert!(t.validate(b).is_ok());
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn takeover_by_same_owner_after_expiry_bumps_epoch() {
+        // A router that lost its own lease to time (GC pause) must also
+        // be fenced against its *earlier* self: re-acquiring yields a
+        // fresh epoch and the old guard fails validation.
+        let t = LeaseTable::new(100);
+        let old = t.acquire(7, 1, 0).unwrap();
+        let new = t.acquire(7, 1, 500).unwrap();
+        // Re-acquire by the same owner keeps the epoch (ownership never
+        // lapsed to anyone else) — the owner's old guard stays valid.
+        assert_eq!(old.epoch, new.epoch);
+        // But once *another* owner took over and released, a re-acquire
+        // is a fresh grant at a higher epoch.
+        let stolen = t.acquire(7, 2, 700).unwrap();
+        assert!(stolen.epoch > new.epoch);
+        assert_eq!(t.validate(old), Err(LeaseLost { session: 7 }));
+    }
+}

@@ -1,0 +1,367 @@
+//! Live host membership for the router tier.
+//!
+//! Replaces the static `--hosts` list: shard hosts **join** the router,
+//! **heartbeat** to stay placed, and **drain** to leave gracefully. The
+//! table is a pure state machine — no clocks, no sockets — so the exact
+//! same transitions run under the live router's wall clock and the chaos
+//! scheduler's virtual clock ([`crate::testkit::chaos`]).
+//!
+//! States and transitions:
+//!
+//! ```text
+//!   join ──▶ Active ──(missed heartbeats)──▶ Suspect ──(failover)──▶ gone
+//!              │  ▲                             │
+//!              │  └────────(heartbeat)──────────┘   (a late beat revives)
+//!              └──(drain)──▶ Draining ──(migrated out)──▶ gone
+//! ```
+//!
+//! * **Active** — placed by the ring; serves traffic.
+//! * **Suspect** — missed heartbeats for `suspect_after_ms`. No longer
+//!   placed; the router tries standby promotion ([`HostTable::promote`]).
+//!   A late heartbeat revives it (the host was slow, not dead).
+//! * **Draining** — asked to leave. No new placements; existing sessions
+//!   are migrated out, then the entry is forgotten.
+//!
+//! Hosts seeded from a static `--hosts` list are marked
+//! [`HostInfo::static_member`] and never expire — pre-control-plane
+//! deployments (no heartbeat loop on the host) keep working bit for bit.
+//!
+//! Every membership change bumps the table **epoch**; the per-host epoch
+//! records when its entry last changed. Epochs order promotions: a
+//! promoted standby carries a higher epoch than the primary it replaced,
+//! so stale state about the old primary can always be fenced off.
+
+use std::collections::BTreeMap;
+
+/// Lifecycle state of one registered host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostState {
+    Active,
+    Suspect,
+    Draining,
+}
+
+/// One registered host, keyed by its advertised `host:port` address.
+#[derive(Debug, Clone)]
+pub struct HostInfo {
+    pub state: HostState,
+    /// Table epoch at this entry's last state change.
+    pub epoch: u64,
+    /// Clock reading (caller-supplied, ms) of the last join/heartbeat.
+    pub last_beat_ms: u64,
+    /// Standby host replicating this host's WAL, advertised at join —
+    /// the failover target [`HostTable::promote`] hands back.
+    pub standby: Option<String>,
+    /// Seeded from a static `--hosts` list: never expires, never needs
+    /// to heartbeat (back-compat with pre-control-plane deployments).
+    pub static_member: bool,
+}
+
+/// What a [`HostTable::join`] did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinOutcome {
+    /// First time this address registered.
+    Added,
+    /// Known host re-registered (restart, or revived from suspect).
+    Rejoined,
+}
+
+/// The router tier's live host table. Pure state: the caller supplies
+/// every clock reading, so the table is deterministic under test.
+#[derive(Debug)]
+pub struct HostTable {
+    hosts: BTreeMap<String, HostInfo>,
+    /// Heartbeat silence after which a non-static host turns suspect.
+    suspect_after_ms: u64,
+    /// Bumped on every membership change; copied into the changed entry.
+    epoch: u64,
+}
+
+impl HostTable {
+    pub fn new(suspect_after_ms: u64) -> HostTable {
+        HostTable { hosts: BTreeMap::new(), suspect_after_ms: suspect_after_ms.max(1), epoch: 0 }
+    }
+
+    /// Seed a host from a static `--hosts` list entry: Active forever,
+    /// exempt from heartbeat expiry.
+    pub fn seed_static(&mut self, addr: &str, now_ms: u64) {
+        self.epoch += 1;
+        self.hosts.insert(
+            addr.to_string(),
+            HostInfo {
+                state: HostState::Active,
+                epoch: self.epoch,
+                last_beat_ms: now_ms,
+                standby: None,
+                static_member: true,
+            },
+        );
+    }
+
+    /// Register (or re-register) a host. A suspect or restarted host
+    /// rejoins Active; a draining host stays draining (the operator's
+    /// drain decision outlives a restart). Returns the entry's epoch.
+    pub fn join(
+        &mut self,
+        addr: &str,
+        standby: Option<String>,
+        now_ms: u64,
+    ) -> (JoinOutcome, u64) {
+        self.epoch += 1;
+        match self.hosts.get_mut(addr) {
+            Some(info) => {
+                if info.state == HostState::Suspect {
+                    info.state = HostState::Active;
+                }
+                info.epoch = self.epoch;
+                info.last_beat_ms = now_ms;
+                info.standby = standby;
+                (JoinOutcome::Rejoined, self.epoch)
+            }
+            None => {
+                self.hosts.insert(
+                    addr.to_string(),
+                    HostInfo {
+                        state: HostState::Active,
+                        epoch: self.epoch,
+                        last_beat_ms: now_ms,
+                        standby,
+                        static_member: false,
+                    },
+                );
+                (JoinOutcome::Added, self.epoch)
+            }
+        }
+    }
+
+    /// Refresh a host's liveness. Returns `false` for an unknown address
+    /// — the wire reply tells the host to re-join (the router restarted
+    /// and lost the table; joins are idempotent). A suspect host revives.
+    pub fn heartbeat(&mut self, addr: &str, now_ms: u64) -> bool {
+        let Some(info) = self.hosts.get_mut(addr) else { return false };
+        info.last_beat_ms = now_ms;
+        if info.state == HostState::Suspect {
+            self.epoch += 1;
+            info.state = HostState::Active;
+            info.epoch = self.epoch;
+        }
+        true
+    }
+
+    /// Stop placing on `addr` (sessions there will be migrated out, then
+    /// [`HostTable::forget`] removes the entry). Returns `false` if
+    /// unknown.
+    pub fn begin_drain(&mut self, addr: &str) -> bool {
+        let Some(info) = self.hosts.get_mut(addr) else { return false };
+        if info.state != HostState::Draining {
+            self.epoch += 1;
+            info.state = HostState::Draining;
+            info.epoch = self.epoch;
+        }
+        true
+    }
+
+    /// Remove an entry outright (drain complete, or failover gave up).
+    pub fn forget(&mut self, addr: &str) -> bool {
+        let removed = self.hosts.remove(addr).is_some();
+        if removed {
+            self.epoch += 1;
+        }
+        removed
+    }
+
+    /// Age heartbeats: every non-static Active host silent for longer
+    /// than `suspect_after_ms` turns Suspect. Returns the newly suspect
+    /// addresses (the router's failover queue), in address order.
+    pub fn tick(&mut self, now_ms: u64) -> Vec<String> {
+        let mut newly = Vec::new();
+        for (addr, info) in self.hosts.iter_mut() {
+            if info.static_member || info.state != HostState::Active {
+                continue;
+            }
+            if now_ms.saturating_sub(info.last_beat_ms) > self.suspect_after_ms {
+                self.epoch += 1;
+                info.state = HostState::Suspect;
+                info.epoch = self.epoch;
+                newly.push(addr.clone());
+            }
+        }
+        newly
+    }
+
+    /// Failover: replace a (suspect) primary with its advertised standby.
+    /// The standby joins Active at a fresh epoch — strictly greater than
+    /// any epoch the dead primary ever held, which is what fences stale
+    /// writes. Returns the standby's `(addr, epoch)`, or `None` if the
+    /// host is unknown or advertised no standby.
+    pub fn promote(&mut self, primary: &str, now_ms: u64) -> Option<(String, u64)> {
+        let standby = self.hosts.get(primary)?.standby.clone()?;
+        self.hosts.remove(primary);
+        self.epoch += 1;
+        let epoch = self.epoch;
+        self.hosts.insert(
+            standby.clone(),
+            HostInfo {
+                state: HostState::Active,
+                epoch,
+                last_beat_ms: now_ms,
+                standby: None,
+                static_member: false,
+            },
+        );
+        Some((standby, epoch))
+    }
+
+    /// Active hosts (the placement set), in address order.
+    pub fn active(&self) -> Vec<&str> {
+        self.hosts
+            .iter()
+            .filter(|(_, i)| i.state == HostState::Active)
+            .map(|(a, _)| a.as_str())
+            .collect()
+    }
+
+    pub fn get(&self, addr: &str) -> Option<&HostInfo> {
+        self.hosts.get(addr)
+    }
+
+    /// Current table epoch (monotone; bumped on every change).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn len(&self) -> usize {
+        self.hosts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hosts.is_empty()
+    }
+
+    /// All entries, in address order (the wire `health`/debug view).
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &HostInfo)> {
+        self.hosts.iter().map(|(a, i)| (a.as_str(), i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_heartbeat_suspect_revive() {
+        let mut t = HostTable::new(100);
+        let (outcome, e1) = t.join("a:1", None, 0);
+        assert_eq!(outcome, JoinOutcome::Added);
+        assert_eq!(t.active(), vec!["a:1"]);
+        // Quiet past the deadline: suspect, and no longer placed.
+        assert_eq!(t.tick(101), vec!["a:1".to_string()]);
+        assert!(t.active().is_empty());
+        assert_eq!(t.get("a:1").unwrap().state, HostState::Suspect);
+        // Only *newly* suspect hosts are reported.
+        assert!(t.tick(202).is_empty());
+        // A late heartbeat revives it at a higher epoch.
+        assert!(t.heartbeat("a:1", 250));
+        assert_eq!(t.get("a:1").unwrap().state, HostState::Active);
+        assert!(t.get("a:1").unwrap().epoch > e1);
+        // Fresh beats keep it alive.
+        assert!(t.tick(300).is_empty());
+    }
+
+    #[test]
+    fn heartbeat_unknown_host_asks_for_rejoin() {
+        let mut t = HostTable::new(100);
+        assert!(!t.heartbeat("ghost:1", 0));
+        let (outcome, _) = t.join("ghost:1", None, 0);
+        assert_eq!(outcome, JoinOutcome::Added);
+        assert!(t.heartbeat("ghost:1", 1));
+    }
+
+    #[test]
+    fn rejoin_refreshes_standby_and_bumps_epoch() {
+        let mut t = HostTable::new(100);
+        let (_, e1) = t.join("a:1", None, 0);
+        let (outcome, e2) = t.join("a:1", Some("s:1".into()), 10);
+        assert_eq!(outcome, JoinOutcome::Rejoined);
+        assert!(e2 > e1);
+        assert_eq!(t.get("a:1").unwrap().standby.as_deref(), Some("s:1"));
+    }
+
+    #[test]
+    fn drain_stops_placement_then_forget_removes() {
+        let mut t = HostTable::new(100);
+        t.join("a:1", None, 0);
+        t.join("b:1", None, 0);
+        assert!(t.begin_drain("a:1"));
+        assert_eq!(t.active(), vec!["b:1"]);
+        assert_eq!(t.get("a:1").unwrap().state, HostState::Draining);
+        // Draining hosts do not expire into suspect — the drain owns them.
+        assert!(t.tick(10_000).iter().all(|a| a != "a:1"));
+        assert!(t.forget("a:1"));
+        assert!(t.get("a:1").is_none());
+        assert!(!t.forget("a:1"));
+    }
+
+    #[test]
+    fn drain_survives_rejoin() {
+        let mut t = HostTable::new(100);
+        t.join("a:1", None, 0);
+        t.begin_drain("a:1");
+        t.join("a:1", None, 5);
+        assert_eq!(t.get("a:1").unwrap().state, HostState::Draining);
+    }
+
+    #[test]
+    fn static_members_never_expire() {
+        let mut t = HostTable::new(100);
+        t.seed_static("a:1", 0);
+        t.join("b:1", None, 0);
+        assert!(t.tick(1_000_000) == vec!["b:1".to_string()]);
+        assert_eq!(t.active(), vec!["a:1"]);
+    }
+
+    #[test]
+    fn promote_swaps_in_standby_at_higher_epoch() {
+        let mut t = HostTable::new(100);
+        t.join("a:1", Some("s:1".into()), 0);
+        let primary_epoch = t.get("a:1").unwrap().epoch;
+        t.tick(200);
+        let (addr, epoch) = t.promote("a:1", 200).expect("standby advertised");
+        assert_eq!(addr, "s:1");
+        assert!(epoch > primary_epoch, "promotion must fence the old primary");
+        assert!(t.get("a:1").is_none());
+        assert_eq!(t.active(), vec!["s:1"]);
+        // No standby advertised ⇒ nothing to promote to.
+        t.join("c:1", None, 200);
+        assert!(t.promote("c:1", 200).is_none());
+    }
+
+    #[test]
+    fn epoch_is_monotone_across_all_transitions() {
+        let mut t = HostTable::new(50);
+        let mut last = t.epoch();
+        t.join("a:1", None, 0);
+        for step in [
+            t.epoch(),
+            {
+                t.tick(100);
+                t.epoch()
+            },
+            {
+                t.heartbeat("a:1", 120);
+                t.epoch()
+            },
+            {
+                t.begin_drain("a:1");
+                t.epoch()
+            },
+            {
+                t.forget("a:1");
+                t.epoch()
+            },
+        ] {
+            assert!(step >= last);
+            last = step;
+        }
+    }
+}

@@ -80,6 +80,9 @@ pub struct ServiceMetrics {
     /// high-water mark; the fleet aggregate takes the worst shard since
     /// the cap being tuned from this number is per-shard).
     pub held_replies_hwm: usize,
+    /// Replies that hit the held-reply cap and shed to a synchronous
+    /// store flush (backpressure events; 0 when uncapped or never full).
+    pub held_replies_shed: u64,
     /// Remote shard hosts behind this process (router tier only; 0 for a
     /// host or an unsharded service).
     pub hosts: usize,
@@ -164,6 +167,7 @@ impl ServiceMetrics {
             total.snapshot_bytes_delta += m.snapshot_bytes_delta;
             total.held_replies += m.held_replies;
             total.held_replies_hwm = total.held_replies_hwm.max(m.held_replies_hwm);
+            total.held_replies_shed += m.held_replies_shed;
             total.hosts += m.hosts;
             total.host_unreachable += m.host_unreachable;
             total.think_hist.merge(&m.think_hist);
@@ -245,6 +249,7 @@ impl ServiceMetrics {
         gauge("wuuct_snapshot_bytes_delta_total", "bytes of delta images", self.snapshot_bytes_delta as f64);
         gauge("wuuct_held_replies", "replies parked on commit tickets", self.held_replies as f64);
         gauge("wuuct_held_replies_hwm", "most replies ever parked at once", self.held_replies_hwm as f64);
+        gauge("wuuct_held_replies_shed_total", "replies shed to synchronous flushes at the cap", self.held_replies_shed as f64);
         gauge("wuuct_hosts", "remote shard hosts", self.hosts as f64);
         gauge("wuuct_host_unreachable_total", "calls failed host-unreachable", self.host_unreachable as f64);
         gauge("wuuct_sessions_per_sec", "episodes retired per second", self.sessions_per_sec);

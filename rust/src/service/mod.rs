@@ -44,6 +44,13 @@
 //!   (`wu-uct serve --hosts a:p,b:p`) that places sessions on hosts by
 //!   consistent hash and re-runs the live-migration handshake over the
 //!   wire;
+//! * [`membership`] / [`lease`] — the control plane: a live host table
+//!   (hosts `join`, heartbeat, `drain`; missed beats ⇒ suspect ⇒
+//!   standby failover) replacing any static `--hosts` list, and the
+//!   epoch-fenced session lease table that lets N stateless routers run
+//!   hot-hot — every side-effecting placement decision is guarded, and
+//!   the loser of a race observes a typed [`LeaseLost`] instead of a
+//!   split brain;
 //! * [`crate::store`] — the storage engine underneath it all, behind
 //!   the single [`crate::store::SessionStore`] interface the scheduler
 //!   speaks: per-shard group-commit write-ahead logs (replies held on
@@ -55,6 +62,8 @@
 pub mod client;
 pub mod fair;
 pub mod json;
+pub mod lease;
+pub mod membership;
 pub mod metrics;
 pub mod placement;
 pub mod proto;
@@ -72,6 +81,8 @@ pub use crate::mcts::wu_uct::driver;
 pub use crate::mcts::wu_uct::driver::{AdvanceOutcome, IssueOutcome, SearchDriver, TaskSink};
 pub use client::{HostClient, HostUnreachable};
 pub use fair::FairQueue;
+pub use lease::{Lease, LeaseLost, LeaseTable};
+pub use membership::{HostInfo, HostState, HostTable, JoinOutcome};
 pub use metrics::ServiceMetrics;
 pub use placement::HashRing;
 pub use router::{Router, RouterConfig, RouterHandle};
@@ -140,6 +151,39 @@ impl HostReport {
         total.host_unreachable = host_unreachable;
         total
     }
+}
+
+/// Reply to the wire `join` op: the router's verdict on a host
+/// announcing itself (or re-announcing after a restart / network blip).
+#[derive(Debug, Clone, Copy)]
+pub struct JoinReply {
+    pub outcome: JoinOutcome,
+    /// The host's membership epoch after the join — monotone across
+    /// every transition, so a stale pre-partition host can always be
+    /// told apart from its own successor.
+    pub epoch: u64,
+}
+
+/// One shard's standby-replication progress, as reported by the wire
+/// `repl_status` op. The primary's resume handshake reads this to ship
+/// only the suffix the standby is missing.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplShardStatus {
+    pub shard: usize,
+    /// Stream incarnation the standby is following (0 = none yet).
+    pub start: u64,
+    /// Highest contiguous replication sequence applied.
+    pub acked: u64,
+}
+
+/// Reply to the wire `promote` op: what a standby recovered when it was
+/// told its primary is gone.
+#[derive(Debug, Clone, Copy)]
+pub struct PromoteReply {
+    /// Sessions rebuilt from the replicated streams.
+    pub sessions: usize,
+    /// Logged `advance` steps replayed while rebuilding them.
+    pub steps: u64,
 }
 
 /// The session-lifecycle surface shared by the single-shard
@@ -233,6 +277,50 @@ pub trait SessionApi: Clone + Send + 'static {
     /// abort safely.
     fn resolve_seal(&self, _session: u64, _landed: bool) -> Result<()> {
         anyhow::bail!("seal resolution requires a session-hosting deployment")
+    }
+
+    /// Membership, router side: a shard host announces itself (the wire
+    /// `join` op), optionally declaring the standby replicating it. The
+    /// router adds it to the live host table and starts placing sessions
+    /// on it. Idempotent — a restarted host re-joins and is revived.
+    fn join(&self, _addr: String, _standby: Option<String>) -> Result<JoinReply> {
+        anyhow::bail!("membership requires the router tier (serve with --hosts or --join)")
+    }
+
+    /// Membership, router side: a host's periodic liveness beat.
+    /// `Ok(false)` means the router does not know this host (it
+    /// restarted, or the host was forgotten after a drain) — the host
+    /// should re-`join`.
+    fn heartbeat(&self, _addr: String) -> Result<bool> {
+        anyhow::bail!("membership requires the router tier (serve with --hosts or --join)")
+    }
+
+    /// Membership, router side: stop placing sessions on `addr`, migrate
+    /// its sessions to the remaining hosts, then forget it. Returns how
+    /// many sessions moved.
+    fn drain(&self, _addr: String) -> Result<usize> {
+        anyhow::bail!("membership requires the router tier (serve with --hosts or --join)")
+    }
+
+    /// Standby replication, target side: apply one framed record batch
+    /// (the wire `replicate` op) to this host's standby state for
+    /// `shard`, returning the new contiguous ack. Torn, oversized or
+    /// corrupt frames surface as typed [`crate::store::Error`]s.
+    fn replicate_apply(&self, _shard: usize, _frame: Vec<u8>) -> Result<u64> {
+        anyhow::bail!("replication requires a shard host (wu-uct shard-host)")
+    }
+
+    /// Standby replication, target side: per-shard stream progress, read
+    /// by a reconnecting primary to resume from the suffix.
+    fn replicate_status(&self) -> Result<Vec<ReplShardStatus>> {
+        anyhow::bail!("replication requires a shard host (wu-uct shard-host)")
+    }
+
+    /// Standby replication, target side: the primary is gone — fold the
+    /// replicated streams into live, durable sessions and start serving
+    /// them. Idempotent: promoting twice replays nothing new.
+    fn promote(&self) -> Result<PromoteReply> {
+        anyhow::bail!("promotion requires a shard host (wu-uct shard-host)")
     }
 
     /// Liveness + identity probe (the wire `health` op).

@@ -60,13 +60,42 @@
 //! or non-hex frames earn typed error replies, never a dropped
 //! connection or a panic.
 //!
+//! ## Control-plane ops
+//!
+//! The membership / replication control plane (DESIGN.md §11) adds six
+//! ops. Three are served by the router tier:
+//!
+//! * `join` — `{"op":"join","addr":"h:p","standby":"s:p"}` →
+//!   `{"ok":true,"outcome":"added","epoch":3}`: a shard host announces
+//!   itself (idempotently) and optionally the standby replicating it;
+//! * `heartbeat` — `{"op":"heartbeat","addr":"h:p"}` →
+//!   `{"ok":true,"known":true}`; `known:false` tells the host the
+//!   router does not know it (router restart) — re-join;
+//! * `drain` — `{"op":"drain","addr":"h:p"}` →
+//!   `{"ok":true,"moved":4}`: stop placing, migrate the host's sessions
+//!   out, forget it.
+//!
+//! Three are served by shard hosts:
+//!
+//! * `replicate` — `{"op":"replicate","shard":0,"frame":"<hex>"}` →
+//!   `{"ok":true,"acked":17}`: apply one framed WAL-record batch to the
+//!   standby state ([`crate::store::replicate`]); torn, oversized or
+//!   corrupt frames earn typed errors;
+//! * `repl_status` — per-shard `{shard,start,acked}` stream progress,
+//!   read by a reconnecting primary to resume from the suffix;
+//! * `promote` — fold the replicated streams into live sessions
+//!   (`{"ok":true,"sessions":3,"steps":12}`); idempotent.
+//!
 //! Error discipline: malformed JSON, unknown ops and **unknown fields**
 //! are rejected with `{"ok":false,"error":...}` — never a panic, never a
 //! dropped connection. Admission-control rejections additionally carry
 //! `"busy":true` (the typed [`Busy`] error), telling clients to back off
 //! and retry rather than treat the failure as fatal; ops racing a live
 //! migration carry `"recovering":true` (the typed [`Recovering`] error)
-//! — the session is seconds from its new shard, retry.
+//! — the session is seconds from its new shard, retry; placement ops
+//! that lost a router-vs-router race carry `"lease_lost":true` (the
+//! typed [`LeaseLost`] error) — another router owns the session, back
+//! off and re-resolve.
 
 use std::time::Duration;
 
@@ -77,9 +106,10 @@ use crate::env::{atari, garnet::Garnet, Env};
 use crate::mcts::common::SearchSpec;
 use crate::obs::{Event, EventKind, Histogram};
 use crate::service::json::{obj, Json};
+use crate::service::lease::LeaseLost;
 use crate::service::metrics::ServiceMetrics;
 use crate::service::scheduler::{Busy, SessionOptions};
-use crate::service::{HostReport, SessionApi};
+use crate::service::{HostReport, JoinOutcome, SessionApi};
 use crate::store::migrate::Recovering;
 
 /// Upper bound on a decoded session-image frame. Oversized frames are
@@ -218,6 +248,13 @@ fn required_u64(req: &Json, key: &str) -> Result<u64> {
     field_u64(req, key)?.ok_or_else(|| anyhow!("missing field {key:?}"))
 }
 
+fn required_str(req: &Json, key: &str) -> Result<String> {
+    req.get(key)
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("missing or non-string field {key:?}"))
+}
+
 /// Reject request fields no handler reads: a typo like `"sim"` for
 /// `"sims"` must come back as an error, not silently search with the
 /// default budget.
@@ -239,6 +276,11 @@ fn error_line(err: &anyhow::Error) -> String {
     if err.downcast_ref::<Recovering>().is_some() {
         // The session is mid-migration/recovery: transient, retry soon.
         fields.push(("recovering".to_string(), Json::Bool(true)));
+    }
+    if err.downcast_ref::<LeaseLost>().is_some() {
+        // Another router holds this session's placement lease: the race
+        // had a winner and it was not this caller — back off, re-resolve.
+        fields.push(("lease_lost".to_string(), Json::Bool(true)));
     }
     fields.push(("error".to_string(), Json::Str(format!("{err:#}"))));
     Json::Obj(fields).render()
@@ -443,6 +485,101 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 LineEffect::None,
             ))
         }
+        "join" => {
+            reject_unknown_fields(&req, op, &["addr", "standby"])?;
+            let addr = required_str(&req, "addr")?;
+            let standby = match req.get("standby") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("field \"standby\" must be a string"))?
+                        .to_string(),
+                ),
+            };
+            let j = handle.join(addr, standby)?;
+            let outcome = match j.outcome {
+                JoinOutcome::Added => "added",
+                JoinOutcome::Rejoined => "rejoined",
+            };
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("outcome", Json::Str(outcome.to_string())),
+                    ("epoch", Json::Num(j.epoch as f64)),
+                ]),
+                LineEffect::None,
+            ))
+        }
+        "heartbeat" => {
+            reject_unknown_fields(&req, op, &["addr"])?;
+            let known = handle.heartbeat(required_str(&req, "addr")?)?;
+            Ok((
+                obj([("ok", Json::Bool(true)), ("known", Json::Bool(known))]),
+                LineEffect::None,
+            ))
+        }
+        "drain" => {
+            reject_unknown_fields(&req, op, &["addr"])?;
+            let moved = handle.drain(required_str(&req, "addr")?)?;
+            Ok((
+                obj([("ok", Json::Bool(true)), ("moved", Json::Num(moved as f64))]),
+                LineEffect::None,
+            ))
+        }
+        "replicate" => {
+            reject_unknown_fields(&req, op, &["shard", "frame"])?;
+            let shard = required_u64(&req, "shard")? as usize;
+            let frame = req
+                .get("frame")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("missing field \"frame\""))?;
+            // Cap mirrors the replication frame bound (payload plus the
+            // trailing checksum); decode_frame re-checks the payload.
+            let bytes =
+                image_from_hex_capped(frame, crate::store::MAX_FRAME_BYTES + 8)?;
+            let acked = handle.replicate_apply(shard, bytes)?;
+            Ok((
+                obj([("ok", Json::Bool(true)), ("acked", Json::Num(acked as f64))]),
+                LineEffect::None,
+            ))
+        }
+        "repl_status" => {
+            reject_unknown_fields(&req, op, &[])?;
+            let shards = handle.replicate_status()?;
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    (
+                        "shards",
+                        Json::Arr(
+                            shards
+                                .iter()
+                                .map(|s| {
+                                    obj([
+                                        ("shard", Json::Num(s.shard as f64)),
+                                        ("start", Json::Num(s.start as f64)),
+                                        ("acked", Json::Num(s.acked as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+                LineEffect::None,
+            ))
+        }
+        "promote" => {
+            reject_unknown_fields(&req, op, &[])?;
+            let p = handle.promote()?;
+            Ok((
+                obj([
+                    ("ok", Json::Bool(true)),
+                    ("sessions", Json::Num(p.sessions as f64)),
+                    ("steps", Json::Num(p.steps as f64)),
+                ]),
+                LineEffect::None,
+            ))
+        }
         "health" => {
             reject_unknown_fields(&req, op, &[])?;
             let h = handle.health()?;
@@ -627,6 +764,7 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("pending_simulations", Json::Num(m.pending_simulations as f64)),
         ("held_replies", Json::Num(m.held_replies as f64)),
         ("held_replies_hwm", Json::Num(m.held_replies_hwm as f64)),
+        ("held_replies_shed", Json::Num(m.held_replies_shed as f64)),
         ("think_hist", hist_json(&m.think_hist)),
         ("expand_hist", hist_json(&m.expand_hist)),
         ("sim_hist", hist_json(&m.sim_hist)),
@@ -722,6 +860,7 @@ pub fn metrics_from_json(v: &Json) -> ServiceMetrics {
         pending_simulations: int("pending_simulations") as usize,
         held_replies: int("held_replies") as usize,
         held_replies_hwm: int("held_replies_hwm") as usize,
+        held_replies_shed: int("held_replies_shed"),
         think_hist: hist_from_json(v.get("think_hist")),
         expand_hist: hist_from_json(v.get("expand_hist")),
         sim_hist: hist_from_json(v.get("sim_hist")),
@@ -772,6 +911,7 @@ fn shard_metrics_json(m: &ServiceMetrics) -> Json {
         ("pending_simulations", Json::Num(m.pending_simulations as f64)),
         ("held_replies", Json::Num(m.held_replies as f64)),
         ("held_replies_hwm", Json::Num(m.held_replies_hwm as f64)),
+        ("held_replies_shed", Json::Num(m.held_replies_shed as f64)),
     ])
 }
 
@@ -977,6 +1117,12 @@ mod tests {
             (r#"{"op":"health","probe":true}"#, "probe"),
             (r#"{"op":"trace","session":1,"kind":"admit"}"#, "kind"),
             (r#"{"op":"think","session":1,"trace_id":7}"#, "trace_id"),
+            (r#"{"op":"join","addr":"h:1","epoch":2}"#, "epoch"),
+            (r#"{"op":"heartbeat","addr":"h:1","standby":"s:1"}"#, "standby"),
+            (r#"{"op":"drain","addr":"h:1","force":true}"#, "force"),
+            (r#"{"op":"replicate","shard":0,"frame":"00","ack":1}"#, "ack"),
+            (r#"{"op":"repl_status","shard":0}"#, "shard"),
+            (r#"{"op":"promote","shard":0}"#, "shard"),
         ] {
             let (line, _) = handle_line(&h, bad);
             let v = err_field(&line);
@@ -1103,6 +1249,63 @@ mod tests {
         let v = Json::parse(&plain).unwrap();
         assert!(v.get("busy").is_none());
         assert!(v.get("recovering").is_none());
+        assert!(v.get("lease_lost").is_none());
+    }
+
+    /// The third typed marker: a router that lost a placement race to a
+    /// peer replies `lease_lost:true`, distinguishable from busy (retry
+    /// here later) and recovering (retry this session soon).
+    #[test]
+    fn lease_lost_replies_carry_the_fencing_marker() {
+        let lost = error_line(&anyhow::Error::new(LeaseLost { session: 9 }));
+        let v = Json::parse(&lost).expect("lease_lost reply is valid json");
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("lease_lost").unwrap().as_bool(), Some(true));
+        assert!(v.get("busy").is_none());
+        assert!(v.get("recovering").is_none());
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("9"));
+        assert_eq!(Json::parse(&lost).unwrap().render(), lost, "stable round-trip");
+    }
+
+    /// Control-plane ops against a deployment that does not serve them:
+    /// clear error replies naming the required deployment, never panics,
+    /// and the connection stays usable.
+    #[test]
+    fn control_plane_ops_error_clearly_where_unsupported() {
+        let svc = service();
+        let h = svc.handle();
+        for (req, needle) in [
+            (r#"{"op":"join","addr":"h:1"}"#, "router"),
+            (r#"{"op":"join","addr":"h:1","standby":"s:1"}"#, "router"),
+            (r#"{"op":"heartbeat","addr":"h:1"}"#, "router"),
+            (r#"{"op":"drain","addr":"h:1"}"#, "router"),
+            (r#"{"op":"replicate","shard":0,"frame":"00"}"#, "shard host"),
+            (r#"{"op":"repl_status"}"#, "shard host"),
+            (r#"{"op":"promote"}"#, "shard host"),
+        ] {
+            let (line, effect) = handle_line(&h, req);
+            let v = err_field(&line);
+            let msg = v.get("error").unwrap().as_str().unwrap();
+            assert!(msg.contains(needle), "input {req}: error {msg:?}");
+            assert_eq!(effect, LineEffect::None);
+        }
+        // Missing required fields are named.
+        for (req, needle) in [
+            (r#"{"op":"join"}"#, "addr"),
+            (r#"{"op":"heartbeat"}"#, "addr"),
+            (r#"{"op":"drain","addr":7}"#, "addr"),
+            (r#"{"op":"replicate","shard":0}"#, "frame"),
+            (r#"{"op":"replicate","frame":"00"}"#, "shard"),
+            (r#"{"op":"replicate","shard":0,"frame":"0"}"#, "odd hex length"),
+            (r#"{"op":"join","addr":"h:1","standby":3}"#, "standby"),
+        ] {
+            let (line, _) = handle_line(&h, req);
+            let v = err_field(&line);
+            let msg = v.get("error").unwrap().as_str().unwrap();
+            assert!(msg.contains(needle), "input {req}: error {msg:?}");
+        }
+        let (line, _) = handle_line(&h, r#"{"op":"ping"}"#);
+        ok_field(&line);
     }
 
     #[test]

@@ -12,11 +12,31 @@
 //!   *before* the owning host sees the open (the `open` op's `id`
 //!   field), so every handle — and every restarted router — routes every
 //!   op identically.
+//! * **Membership** — hosts are *seats*: a seat index is what the ring,
+//!   the override table and every pending resolution reference, and it
+//!   never changes while the router lives. The live
+//!   [`HostTable`](crate::service::membership::HostTable) tracks who
+//!   occupies each seat: static `--hosts` entries are seeded as
+//!   permanent members, dynamic hosts register over the `join` op and
+//!   stay Active by heartbeating. A non-static host that goes silent
+//!   past the suspicion window turns Suspect (no new placements); if it
+//!   advertised a standby, the failover monitor promotes the standby
+//!   *into the same seat*, so the ring, overrides and in-flight repairs
+//!   all keep working unchanged. `drain` stops placement, migrates every
+//!   session out, then forgets the member (its seat stays as a
+//!   tombstone: never placed on, never polled).
+//! * **Leases** — every side-effecting placement decision (open,
+//!   migrate, seal resolution) is guarded by the session's lease in a
+//!   [`LeaseTable`]: N routers sharing one table serve hot-hot, and the
+//!   loser of any race observes the typed [`LeaseLost`] error instead
+//!   of corrupting placement. Epoch fencing means a router that lost
+//!   its lease mid-handshake cannot complete the handshake late (see
+//!   `lease.rs`).
 //! * **Proxying** — each session op becomes one line round trip on a
 //!   pooled [`HostClient`](crate::service::client::HostClient); remote
-//!   `busy` / `recovering` replies are rebuilt into the same typed
-//!   errors the in-process path raises, so clients cannot tell the
-//!   difference. Hosts that do not answer surface as the typed
+//!   `busy` / `recovering` / `lease_lost` replies are rebuilt into the
+//!   same typed errors the in-process path raises, so clients cannot
+//!   tell the difference. Hosts that do not answer surface as the typed
 //!   [`HostUnreachable`] error and are counted in the router's
 //!   `host_unreachable` metric.
 //! * **Cross-host migration** — [`RouterHandle::migrate`] re-runs the
@@ -29,68 +49,127 @@
 //!   [`PendingResolve`]s and retried by [`RouterHandle::repair`] (the
 //!   background rebalancer calls it every pass).
 //! * **Recovery** — a router is stateless, so a restarted one re-learns
-//!   everything from its hosts' `health` replies: the id floor resumes
-//!   past the largest live id, sessions sitting off their ring home get
-//!   overrides re-established, and a session a crash mid-migration left
-//!   on *two hosts* is deduped by progress counters exactly like the
-//!   in-process recovery path (the most-advanced copy wins; the rest
-//!   are durably forgotten).
+//!   everything from its hosts' `health` replies ([`RouterHandle::relearn`]):
+//!   the id floor resumes past the largest live id, sessions sitting off
+//!   their ring home get overrides re-established, and a session a crash
+//!   mid-migration left on *two hosts* is deduped by progress counters
+//!   exactly like the in-process recovery path (the most-advanced copy
+//!   wins; the rest are durably forgotten).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::env::Env;
 use crate::mcts::common::SearchSpec;
 use crate::service::client::{HostClient, HostUnreachable};
+use crate::service::lease::{Lease, LeaseLost, LeaseTable};
+use crate::service::membership::{HostState, HostTable};
 use crate::service::metrics::ServiceMetrics;
 use crate::service::placement::HashRing;
 use crate::service::scheduler::{
     AdvanceReply, Busy, CloseReply, SessionOptions, ThinkReply,
 };
 use crate::service::shard::{open_with_fresh_ids, MigrateOutcome, RebalanceConfig};
-use crate::service::{HealthReply, HostReport, HostStatus, SessionApi};
+use crate::service::{HealthReply, HostReport, HostStatus, JoinReply, SessionApi};
 use crate::store::migrate::{
     migrate_over, plan_step, HandshakeOutcome, MigrationLink, PendingResolve, Recovering,
 };
 
 /// Configuration of a router deployment.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct RouterConfig {
-    /// Shard-host addresses, in ring order (the order defines host
-    /// indices for `migrate` and metrics).
+    /// Static shard-host addresses, seeded as permanent members in seat
+    /// order. May be empty for a fully dynamic fleet (hosts register
+    /// over the `join` op).
     pub hosts: Vec<String>,
-    /// Virtual ring points per host.
+    /// Virtual ring points per host seat.
     pub replicas: usize,
     /// Cross-host occupancy rebalancer; `None` disables it (explicit
     /// `migrate` ops still work).
     pub rebalance: Option<RebalanceConfig>,
+    /// A dynamic (joined) host silent for longer than this turns
+    /// Suspect: no new placements, and its advertised standby — if any —
+    /// is promoted into its seat.
+    pub suspect_after_ms: u64,
+    /// Session-lease TTL: a router that goes quiet mid-operation for
+    /// longer than this can be fenced by a peer.
+    pub lease_ttl_ms: u64,
+    /// Share one lease table between hot-hot routers; `None` gives this
+    /// router a private table (single-router deployments).
+    pub leases: Option<LeaseTable>,
 }
 
 impl RouterConfig {
     pub fn new(hosts: Vec<String>) -> RouterConfig {
-        RouterConfig { hosts, replicas: HashRing::DEFAULT_REPLICAS, rebalance: None }
+        RouterConfig {
+            hosts,
+            replicas: HashRing::DEFAULT_REPLICAS,
+            rebalance: None,
+            suspect_after_ms: 3000,
+            lease_ttl_ms: 5000,
+            leases: None,
+        }
+    }
+}
+
+/// The live host fleet behind one lock: who occupies each seat, who is
+/// placeable, and where sessions map. Seat indices are stable for the
+/// router's lifetime — failover swaps the *client* in a seat, never the
+/// index — which is what keeps the ring, the override table and queued
+/// repairs valid across membership changes.
+struct Fleet {
+    /// Seat index → the client currently occupying it. Append-only;
+    /// a drained member leaves a tombstone seat behind.
+    slots: Vec<Arc<HostClient>>,
+    ring: HashRing,
+    /// Live membership, keyed by address.
+    table: HostTable,
+    /// Address → seat, for ops that arrive keyed by address.
+    seats: HashMap<String, usize>,
+}
+
+impl Fleet {
+    /// The seat belongs to a current member (any state).
+    fn member(&self, slot: usize) -> bool {
+        self.slots
+            .get(slot)
+            .is_some_and(|c| self.table.get(c.addr()).is_some())
+    }
+
+    /// The seat may receive *new* placements (Active member).
+    fn placeable(&self, slot: usize) -> bool {
+        self.slots.get(slot).is_some_and(|c| {
+            self.table
+                .get(c.addr())
+                .is_some_and(|info| info.state == HostState::Active)
+        })
     }
 }
 
 struct RouterInner {
-    hosts: Vec<HostClient>,
-    ring: RwLock<HashRing>,
-    /// Sessions mid-handshake: ops fail fast with [`Recovering`].
+    fleet: RwLock<Fleet>,
+    /// Sessions mid-handshake *on this router*: ops fail fast with
+    /// [`Recovering`]. Cross-router exclusion is the lease table's job.
     migrating: Mutex<HashSet<u64>>,
     /// Undelivered seal resolutions, retried by [`RouterHandle::repair`].
     pending: Mutex<Vec<PendingResolve>>,
-    /// Opens whose reply was lost: the session may exist on `(host, id)`
+    /// Opens whose reply was lost: the session may exist on `(seat, id)`
     /// with no client holding the id. [`RouterHandle::repair`] sends
     /// best-effort closes until the host answers definitively.
     orphans: Mutex<Vec<(usize, u64)>>,
+    /// Placement-decision leases, shared across hot-hot routers.
+    leases: LeaseTable,
+    /// This router's lease identity.
+    owner: u64,
     next_id: AtomicU64,
     unreachable: AtomicU64,
     started: Instant,
+    replicas: usize,
 }
 
 /// Cloneable, stateless router handle (the [`SessionApi`] the TCP
@@ -103,20 +182,23 @@ pub struct RouterHandle {
 /// [`MigrationLink`] over the router's pooled host clients, counting
 /// unreachable hosts as it goes.
 struct WireLink<'a> {
-    inner: &'a RouterInner,
+    handle: &'a RouterHandle,
 }
 
 impl MigrationLink for WireLink<'_> {
     fn export_seal(&mut self, host: usize, session: u64) -> Result<Vec<u8>> {
-        track(self.inner, self.inner.hosts[host].export(session))
+        let client = self.handle.client(host)?;
+        track(&self.handle.inner, client.export(session))
     }
 
     fn install_image(&mut self, host: usize, image: Vec<u8>) -> Result<u64> {
-        track(self.inner, self.inner.hosts[host].import(&image))
+        let client = self.handle.client(host)?;
+        track(&self.handle.inner, client.import(&image))
     }
 
     fn resolve_seal(&mut self, host: usize, session: u64, landed: bool) -> Result<()> {
-        track(self.inner, self.inner.hosts[host].install(session, landed))
+        let client = self.handle.client(host)?;
+        track(&self.handle.inner, client.install(session, landed))
     }
 }
 
@@ -131,14 +213,16 @@ fn track<T>(inner: &RouterInner, res: Result<T>) -> Result<T> {
 }
 
 impl RouterHandle {
+    /// Seats ever occupied (members plus tombstones); seat indices for
+    /// `migrate` and per-host metrics range over this.
     pub fn host_count(&self) -> usize {
-        self.inner.hosts.len()
+        self.inner.fleet.read().unwrap().slots.len()
     }
 
-    /// The host index serving `session` (ring placement plus migration
+    /// The seat serving `session` (ring placement plus migration
     /// overrides).
     pub fn host_of(&self, session: u64) -> usize {
-        self.inner.ring.read().unwrap().place(session)
+        self.inner.fleet.read().unwrap().ring.place(session)
     }
 
     /// Remote-host calls that failed with [`HostUnreachable`] so far.
@@ -146,39 +230,89 @@ impl RouterHandle {
         self.inner.unreachable.load(Ordering::Relaxed)
     }
 
+    /// Milliseconds since this router started — the clock heartbeats,
+    /// suspicion and leases are stamped with.
+    fn now_ms(&self) -> u64 {
+        self.inner.started.elapsed().as_millis() as u64
+    }
+
+    /// The client occupying `slot` (cloned out so no fleet lock is held
+    /// across the network call).
+    fn client(&self, slot: usize) -> Result<Arc<HostClient>> {
+        let fleet = self.inner.fleet.read().unwrap();
+        match fleet.slots.get(slot) {
+            Some(client) => Ok(Arc::clone(client)),
+            None => bail!("host seat {slot} out of range (fleet has {})", fleet.slots.len()),
+        }
+    }
+
+    fn placeable(&self, slot: usize) -> bool {
+        self.inner.fleet.read().unwrap().placeable(slot)
+    }
+
+    /// Member seats with their clients, in seat order (tombstones
+    /// skipped) — the iteration set for metrics, traces and health.
+    fn member_clients(&self) -> Vec<(usize, Arc<HostClient>)> {
+        let fleet = self.inner.fleet.read().unwrap();
+        (0..fleet.slots.len())
+            .filter(|&s| fleet.member(s))
+            .map(|s| (s, Arc::clone(&fleet.slots[s])))
+            .collect()
+    }
+
+    fn acquire_lease(&self, session: u64) -> Result<Lease> {
+        self.inner
+            .leases
+            .acquire(session, self.inner.owner, self.now_ms())
+            .map_err(anyhow::Error::new)
+    }
+
     /// Route an op on an existing session, failing fast with
     /// [`Recovering`] while it is mid-handshake.
-    fn route(&self, session: u64) -> Result<&HostClient> {
+    fn route(&self, session: u64) -> Result<Arc<HostClient>> {
         if self.inner.migrating.lock().unwrap().contains(&session) {
             return Err(anyhow::Error::new(Recovering { session }));
         }
-        Ok(&self.inner.hosts[self.host_of(session)])
+        self.client(self.host_of(session))
     }
 
-    /// Open a session: draw an id, forward to the ring-assigned host.
-    /// `Busy` hosts are skipped by drawing fresh ids until every host
-    /// has had a chance; only then does the typed `Busy` surface (the
-    /// same [`open_with_fresh_ids`] loop the in-process sharded router
-    /// runs). [`HostUnreachable`] is deliberately NOT transient here: a
-    /// lost *reply* means the open may have executed, and silently
-    /// re-opening under a fresh id elsewhere would strand that first
-    /// session in an admission slot forever. The error surfaces instead;
-    /// a client retry is a new id — and a fresh roll of the placement
-    /// dice — without hiding the maybe-created session.
+    /// Open a session: draw an id, lease it, forward to the ring-assigned
+    /// seat. `Busy` hosts — and seats that are not placeable members —
+    /// are skipped by drawing fresh ids until every seat has had a
+    /// chance; only then does the typed `Busy` surface (the same
+    /// [`open_with_fresh_ids`] loop the in-process sharded router runs).
+    /// An id already leased by a peer router is likewise skipped; with
+    /// nowhere left to place, the typed [`LeaseLost`] surfaces so the
+    /// losing client backs off and retries. [`HostUnreachable`] is
+    /// deliberately NOT transient here: a lost *reply* means the open may
+    /// have executed, and silently re-opening under a fresh id elsewhere
+    /// would strand that first session in an admission slot forever. The
+    /// error surfaces instead; a client retry is a new id — and a fresh
+    /// roll of the placement dice — without hiding the maybe-created
+    /// session.
     pub fn open(
         &self,
         env: Box<dyn Env>,
         spec: SearchSpec,
         opts: SessionOptions,
     ) -> Result<u64> {
+        let seats = self.host_count();
+        ensure!(seats > 0, "no hosts in the fleet yet (waiting for joins)");
         open_with_fresh_ids(
-            self.host_count(),
+            seats,
             &self.inner.next_id,
             |sid| self.host_of(sid),
             |host, sid| {
+                if !self.placeable(host) {
+                    // Tombstone, draining or suspect seat: treat like an
+                    // admission refusal so the draw loop moves on.
+                    return Err(anyhow::Error::new(Busy { open: 0, limit: 0 }));
+                }
+                let lease = self.acquire_lease(sid)?;
+                let client = self.client(host)?;
                 let res = track(
                     &self.inner,
-                    self.inner.hosts[host].open_with_id(sid, env.name(), &spec, &opts),
+                    client.open_with_id(sid, env.name(), &spec, &opts),
                 );
                 if let Err(e) = &res {
                     if e.downcast_ref::<HostUnreachable>().is_some() {
@@ -188,9 +322,12 @@ impl RouterHandle {
                         self.inner.orphans.lock().unwrap().push((host, sid));
                     }
                 }
+                self.inner.leases.release(lease);
                 res
             },
-            |e| e.downcast_ref::<Busy>().is_some(),
+            |e| {
+                e.downcast_ref::<Busy>().is_some() || e.downcast_ref::<LeaseLost>().is_some()
+            },
         )
     }
 
@@ -206,14 +343,14 @@ impl RouterHandle {
         track(&self.inner, host.think_traced(session, sims, trace))
     }
 
-    /// Merge every reachable host's event journal into one timeline
+    /// Merge every reachable member's event journal into one timeline
     /// (newest `limit` events, oldest first; stable sort on each host's
     /// local-µs clock, so cross-host order is approximate but per-host
     /// order is exact). Unreachable hosts are skipped after counting —
     /// a partial trace beats none when a host is down.
     pub fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
         let mut events = Vec::new();
-        for host in &self.inner.hosts {
+        for (_, host) in self.member_clients() {
             match track(&self.inner, host.trace(session, limit)) {
                 Ok(mut batch) => events.append(&mut batch),
                 Err(_) => continue,
@@ -239,50 +376,71 @@ impl RouterHandle {
     pub fn close(&self, session: u64) -> Result<CloseReply> {
         let host = self.route(session)?;
         let reply = track(&self.inner, host.close(session))?;
-        self.inner.ring.write().unwrap().clear_override(session);
+        self.inner.fleet.write().unwrap().ring.clear_override(session);
         Ok(reply)
     }
 
-    /// Live-migrate a session between host processes: the wire re-run of
-    /// the in-process seal → durable-`Open` → `Close` handshake
-    /// ([`migrate_over`]). Ops racing the move observe [`Recovering`];
-    /// a failed transfer leaves the source serving (or queued for
-    /// unsealing if even the abort could not be delivered — see
-    /// [`RouterHandle::repair`]).
+    /// Live-migrate a session between host processes under its lease:
+    /// the wire re-run of the in-process seal → durable-`Open` → `Close`
+    /// handshake ([`migrate_over`]). A peer router mid-operation on the
+    /// same session surfaces as the typed [`LeaseLost`]; ops racing the
+    /// move observe [`Recovering`]; a failed transfer leaves the source
+    /// serving (or queued for unsealing if even the abort could not be
+    /// delivered — see [`RouterHandle::repair`]). The ring repoint — the
+    /// placement side effect — is fenced: if the lease was taken over
+    /// mid-handshake, the repoint is skipped and [`LeaseLost`] surfaces
+    /// (the moved copy is found again by [`RouterHandle::relearn`] /
+    /// the rebalancer's override GC).
     pub fn migrate(&self, session: u64, to: usize) -> Result<MigrateOutcome> {
-        let hosts = self.host_count();
-        ensure!(to < hosts, "target host {to} out of range (fleet has {hosts})");
+        let seats = self.host_count();
+        ensure!(to < seats, "target host {to} out of range (fleet has {seats})");
+        ensure!(self.placeable(to), "target host {to} is not an active member");
         let from = self.host_of(session);
         if from == to {
             return Ok(MigrateOutcome { session, from, to, moved: false });
         }
+        let lease = self.acquire_lease(session)?;
         {
             let mut migrating = self.inner.migrating.lock().unwrap();
-            ensure!(migrating.insert(session), "session {session} is already migrating");
+            if !migrating.insert(session) {
+                self.inner.leases.release(lease);
+                bail!("session {session} is already migrating");
+            }
         }
-        let mut link = WireLink { inner: self.inner.as_ref() };
+        let mut link = WireLink { handle: self };
         let outcome = migrate_over(&mut link, session, from, to);
+        let fenced = self.inner.leases.validate(lease).is_err();
         let result = match outcome {
             HandshakeOutcome::Moved => {
-                self.inner
-                    .ring
-                    .write()
-                    .unwrap()
-                    .set_override(session, to)
-                    .expect("target host index was range-checked");
-                Ok(MigrateOutcome { session, from, to, moved: true })
+                if fenced {
+                    Err(anyhow::Error::new(LeaseLost { session }))
+                } else {
+                    self.inner
+                        .fleet
+                        .write()
+                        .unwrap()
+                        .ring
+                        .set_override(session, to)
+                        .expect("target seat index was range-checked");
+                    Ok(MigrateOutcome { session, from, to, moved: true })
+                }
             }
             HandshakeOutcome::MovedSealed(pending) => {
-                // The target copy is authoritative; route there and keep
-                // retrying the source's forget.
-                self.inner
-                    .ring
-                    .write()
-                    .unwrap()
-                    .set_override(session, to)
-                    .expect("target host index was range-checked");
+                // The target copy is authoritative; keep retrying the
+                // source's forget either way. The repoint is fenced.
                 self.inner.pending.lock().unwrap().push(pending);
-                Ok(MigrateOutcome { session, from, to, moved: true })
+                if fenced {
+                    Err(anyhow::Error::new(LeaseLost { session }))
+                } else {
+                    self.inner
+                        .fleet
+                        .write()
+                        .unwrap()
+                        .ring
+                        .set_override(session, to)
+                        .expect("target seat index was range-checked");
+                    Ok(MigrateOutcome { session, from, to, moved: true })
+                }
             }
             HandshakeOutcome::Aborted(err) => Err(err),
             HandshakeOutcome::AbortedSealed(err, pending) => {
@@ -291,23 +449,24 @@ impl RouterHandle {
             }
         };
         self.inner.migrating.lock().unwrap().remove(&session);
+        self.inner.leases.release(lease);
         result
     }
 
     /// Retry undelivered seal resolutions and orphaned-open closes. A
     /// definitive remote answer — success *or* a remote refusal (e.g.
     /// the session is already gone) — retires an entry; only
-    /// [`HostUnreachable`] keeps it queued. Returns how many entries
-    /// remain queued.
+    /// [`HostUnreachable`] keeps it queued. Entries were decided under
+    /// their original lease, so retries deliver without re-leasing.
+    /// Returns how many entries remain queued.
     pub fn repair(&self) -> usize {
         let drained: Vec<PendingResolve> =
             std::mem::take(&mut *self.inner.pending.lock().unwrap());
         let mut still_pending = Vec::new();
         for p in drained {
-            let res = track(
-                &self.inner,
-                self.inner.hosts[p.host].install(p.session, p.landed),
-            );
+            let res = self
+                .client(p.host)
+                .and_then(|c| track(&self.inner, c.install(p.session, p.landed)));
             if let Err(e) = res {
                 if e.downcast_ref::<HostUnreachable>().is_some() {
                     still_pending.push(p);
@@ -324,7 +483,9 @@ impl RouterHandle {
             std::mem::take(&mut *self.inner.orphans.lock().unwrap());
         let mut still_orphaned = Vec::new();
         for (host, sid) in orphans {
-            let res = track(&self.inner, self.inner.hosts[host].close(sid));
+            let res = self
+                .client(host)
+                .and_then(|c| track(&self.inner, c.close(sid)));
             if let Err(e) = res {
                 if e.downcast_ref::<HostUnreachable>().is_some() {
                     still_orphaned.push((host, sid));
@@ -340,9 +501,10 @@ impl RouterHandle {
 
     /// One cross-host rebalance pass: retry pending resolutions, then
     /// migrate sessions off over-occupied hosts until [`plan_step`]
-    /// finds nothing above `max_skew`. A pass with any unreachable host
-    /// moves nothing (occupancy would be misread as zero, turning a dead
-    /// host into a migration sink).
+    /// finds nothing above `max_skew` (or proposes a seat that cannot
+    /// take placements). A pass with any member unreachable moves
+    /// nothing (occupancy would be misread as zero, turning a dead host
+    /// into a migration sink).
     pub fn rebalance(&self, max_skew: f64) -> Result<Vec<MigrateOutcome>> {
         ensure!(max_skew >= 1.0, "max_skew below 1.0 can never converge");
         self.repair();
@@ -354,33 +516,54 @@ impl RouterHandle {
         // the table stays bounded. In-flight handshakes are safe — the
         // seal keeps their session installed (and listed) throughout.
         let live: HashSet<u64> = initial.iter().flatten().copied().collect();
-        self.inner.ring.write().unwrap().retain_overrides(|sid| live.contains(&sid));
+        self.inner
+            .fleet
+            .write()
+            .unwrap()
+            .ring
+            .retain_overrides(|sid| live.contains(&sid));
         let cap = 1 + initial.iter().map(|s| s.len()).sum::<usize>();
         while moves.len() < cap {
             let Some(occupancy) = self.host_sessions() else { break };
             let Some(step) = plan_step(&occupancy, max_skew) else { break };
+            if !self.placeable(step.to) {
+                // Tombstone seats list zero sessions and would look like
+                // the ideal sink; they can never be targets.
+                break;
+            }
             match self.migrate(step.session, step.to) {
                 Ok(outcome) => moves.push(outcome),
-                // A busy/sealed session cannot move right now; stop this
-                // pass rather than spin on it.
+                // A busy/sealed/leased session cannot move right now;
+                // stop this pass rather than spin on it.
                 Err(_) => break,
             }
         }
         Ok(moves)
     }
 
-    /// Per-host open-session ids, in host order; `None` if any host is
-    /// unreachable.
+    /// Per-seat open-session ids, in seat order (tombstones are empty);
+    /// `None` if any member is unreachable.
     fn host_sessions(&self) -> Option<Vec<Vec<u64>>> {
-        let mut out = Vec::with_capacity(self.host_count());
-        for host in &self.inner.hosts {
-            let health = track(&self.inner, host.health()).ok()?;
-            out.push(health.sessions.iter().map(|s| s.id).collect());
+        let snapshot: Vec<Option<Arc<HostClient>>> = {
+            let fleet = self.inner.fleet.read().unwrap();
+            (0..fleet.slots.len())
+                .map(|s| fleet.member(s).then(|| Arc::clone(&fleet.slots[s])))
+                .collect()
+        };
+        let mut out = Vec::with_capacity(snapshot.len());
+        for client in snapshot {
+            match client {
+                None => out.push(Vec::new()),
+                Some(client) => {
+                    let health = track(&self.inner, client.health()).ok()?;
+                    out.push(health.sessions.iter().map(|s| s.id).collect());
+                }
+            }
         }
         Some(out)
     }
 
-    /// Fleet-wide aggregate of every reachable host, plus the router's
+    /// Fleet-wide aggregate of every reachable member, plus the router's
     /// own gauges ([`HostReport::aggregate`], shared with the wire
     /// `metrics` op; only the router-local uptime clamp is extra, since
     /// the wire path has no access to the router's start time).
@@ -391,10 +574,9 @@ impl RouterHandle {
     }
 
     fn host_reports(&self) -> Vec<HostReport> {
-        self.inner
-            .hosts
-            .iter()
-            .map(|host| match track(&self.inner, host.metrics()) {
+        self.member_clients()
+            .into_iter()
+            .map(|(_, host)| match track(&self.inner, host.metrics()) {
                 Ok(metrics) => {
                     HostReport { addr: host.addr().to_string(), reachable: true, metrics }
                 }
@@ -405,6 +587,215 @@ impl RouterHandle {
                 },
             })
             .collect()
+    }
+
+    /// Register (or re-register) a host. A new address gets a fresh
+    /// seat and a placement share — the ring is rebuilt one seat larger
+    /// and [`RouterHandle::relearn`] re-derives overrides from live
+    /// listings, so existing sessions keep routing to wherever they
+    /// actually live. A known address just revives/refreshes its entry
+    /// (a restarted host re-registering, or a suspect one proving it is
+    /// alive). Routing is briefly approximate between the rebuild and
+    /// the relearn; ops landing in that window fail with "unknown
+    /// session" and succeed on retry.
+    pub fn join(&self, addr: String, standby: Option<String>) -> Result<JoinReply> {
+        ensure!(!addr.is_empty(), "join requires a non-empty addr");
+        let now = self.now_ms();
+        let grew = {
+            let mut fleet = self.inner.fleet.write().unwrap();
+            let known = fleet.seats.contains_key(&addr);
+            if !known {
+                let seat = fleet.slots.len();
+                fleet.slots.push(Arc::new(HostClient::new(addr.clone())));
+                fleet.seats.insert(addr.clone(), seat);
+                fleet.ring = HashRing::new(fleet.slots.len(), self.inner.replicas)
+                    .expect("seat count and replicas are >= 1");
+            }
+            let (outcome, epoch) = fleet.table.join(&addr, standby, now);
+            (outcome, epoch, !known)
+        };
+        let (outcome, epoch, rebuilt) = grew;
+        if rebuilt {
+            self.relearn();
+        }
+        Ok(JoinReply { outcome, epoch })
+    }
+
+    /// Refresh a host's liveness. `false` means the address is unknown
+    /// (this router restarted and lost the table) — the host should
+    /// re-join; joins are idempotent.
+    pub fn heartbeat(&self, addr: &str) -> bool {
+        let now = self.now_ms();
+        self.inner.fleet.write().unwrap().table.heartbeat(addr, now)
+    }
+
+    /// Drain a member: stop placing on it, migrate every session it
+    /// holds onto the least-loaded active members, then forget it (its
+    /// seat remains as a tombstone). Returns how many sessions moved.
+    /// A session that cannot move right now (mid-think) aborts the
+    /// drain with the member left Draining — re-issuing `drain`
+    /// resumes where it stopped.
+    pub fn drain(&self, addr: &str) -> Result<usize> {
+        let seat = {
+            let mut fleet = self.inner.fleet.write().unwrap();
+            let Some(&seat) = fleet.seats.get(addr) else {
+                bail!("unknown host {addr:?} (never joined, or already forgotten)")
+            };
+            ensure!(fleet.table.begin_drain(addr), "host {addr:?} is not a member");
+            seat
+        };
+        let mut moved = 0usize;
+        loop {
+            let Some(occupancy) = self.host_sessions() else {
+                bail!(
+                    "drain of {addr:?} paused: a member is unreachable, so targets \
+                     cannot be chosen safely (host left draining; retry)"
+                )
+            };
+            let Some(&sid) = occupancy[seat].first() else { break };
+            let target = occupancy
+                .iter()
+                .enumerate()
+                .filter(|&(slot, _)| slot != seat && self.placeable(slot))
+                .min_by_key(|(_, sessions)| sessions.len())
+                .map(|(slot, _)| slot);
+            let Some(target) = target else {
+                bail!("drain of {addr:?} paused: no active member can take its sessions")
+            };
+            self.migrate(sid, target).map_err(|e| {
+                e.context(format!(
+                    "drain of {addr:?} paused after {moved} sessions (host left \
+                     draining; retry to resume)"
+                ))
+            })?;
+            moved += 1;
+        }
+        self.inner.fleet.write().unwrap().table.forget(addr);
+        Ok(moved)
+    }
+
+    /// Re-learn fleet state from the hosts' own `health` listings: the
+    /// id floor resumes past the largest live id, off-home sessions get
+    /// ring overrides, and a session duplicated by a crash mid-migration
+    /// is deduped (an unsealed copy beats a sealed one — a seal means
+    /// "my image left during a hand-off" — then most-advanced, ties to
+    /// the lowest seat; losers are durably forgotten, a lone sealed
+    /// survivor is released). Unreachable members are skipped — their
+    /// sessions are adopted by a later pass or request-time routing.
+    pub fn relearn(&self) {
+        let seats = self.member_clients();
+        let by_seat: HashMap<usize, Arc<HostClient>> = seats.iter().cloned().collect();
+        // (seat, unsealed?, thinks, steps) per copy of each session id.
+        let mut copies: std::collections::BTreeMap<u64, Vec<(usize, bool, u64, u64)>> =
+            Default::default();
+        for (seat, client) in &seats {
+            match track(&self.inner, client.health()) {
+                Ok(h) => {
+                    for s in h.sessions {
+                        copies
+                            .entry(s.id)
+                            .or_default()
+                            .push((*seat, !s.sealed, s.thinks, s.steps));
+                    }
+                }
+                Err(_) => continue,
+            }
+        }
+        let mut max_id = 0u64;
+        let mut overrides = Vec::new();
+        for (sid, owners) in copies {
+            max_id = max_id.max(sid);
+            let &(keep, keep_unsealed, _, _) = owners
+                .iter()
+                .max_by_key(|&&(seat, unsealed, thinks, steps)| {
+                    (unsealed, thinks, steps, usize::MAX - seat)
+                })
+                .expect("at least one owner");
+            for &(seat, _, _, _) in &owners {
+                if seat != keep {
+                    // Best-effort durable forget of the stale duplicate;
+                    // a failure here just leaves it for the next pass.
+                    let _ = track(&self.inner, by_seat[&seat].install(sid, true));
+                }
+            }
+            if !keep_unsealed {
+                // A lone (or best) copy stuck sealed: the resolution died
+                // with a previous router, so release it (idempotent).
+                let _ = track(&self.inner, by_seat[&keep].install(sid, false));
+            }
+            overrides.push((sid, keep));
+        }
+        self.inner.next_id.fetch_max(max_id, Ordering::Relaxed);
+        let mut fleet = self.inner.fleet.write().unwrap();
+        for (sid, keep) in overrides {
+            if fleet.ring.home(sid) != keep {
+                let _ = fleet.ring.set_override(sid, keep);
+            }
+        }
+    }
+
+    /// One failover pass (the monitor thread's body, public so tests can
+    /// drive it synchronously): age heartbeats into suspicions, then for
+    /// every suspect member that advertised a standby, promote the
+    /// standby — fold its replicated streams into live sessions via the
+    /// `promote` op — and swap it into the suspect's seat. Returns how
+    /// many promotions completed.
+    pub fn failover_pass(&self) -> usize {
+        let now = self.now_ms();
+        let newly = self.inner.fleet.write().unwrap().table.tick(now);
+        for addr in &newly {
+            eprintln!("membership: host {addr} missed heartbeats; marking suspect");
+        }
+        let candidates: Vec<(String, String, usize)> = {
+            let fleet = self.inner.fleet.read().unwrap();
+            fleet
+                .table
+                .entries()
+                .filter(|(_, info)| info.state == HostState::Suspect)
+                .filter_map(|(addr, info)| {
+                    let standby = info.standby.clone()?;
+                    let seat = *fleet.seats.get(addr)?;
+                    Some((addr.to_string(), standby, seat))
+                })
+                .collect()
+        };
+        let mut promoted = 0usize;
+        for (primary, standby_addr, seat) in candidates {
+            let standby = HostClient::new(standby_addr.clone());
+            match standby.promote() {
+                Ok(reply) => {
+                    let mut fleet = self.inner.fleet.write().unwrap();
+                    // The primary may have revived while we promoted;
+                    // its heartbeat wins — leave the seat alone.
+                    let still_suspect = fleet
+                        .table
+                        .get(&primary)
+                        .is_some_and(|info| info.state == HostState::Suspect);
+                    if !still_suspect {
+                        continue;
+                    }
+                    if let Some((addr, epoch)) = fleet.table.promote(&primary, self.now_ms())
+                    {
+                        fleet.seats.remove(&primary);
+                        fleet.seats.insert(addr.clone(), seat);
+                        fleet.slots[seat] = Arc::new(HostClient::new(addr.clone()));
+                        promoted += 1;
+                        eprintln!(
+                            "membership: promoted standby {addr} into {primary}'s seat \
+                             (epoch {epoch}; {} sessions, {} steps replayed)",
+                            reply.sessions, reply.steps
+                        );
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "membership: standby {standby_addr} not promotable yet for \
+                         suspect {primary}: {e:#}"
+                    );
+                }
+            }
+        }
+        promoted
     }
 }
 
@@ -467,37 +858,47 @@ impl SessionApi for RouterHandle {
     fn import_image(&self, bytes: Vec<u8>) -> Result<u64> {
         let id = crate::store::codec::SessionImage::peek_session(&bytes)?;
         self.inner.next_id.fetch_max(id, Ordering::Relaxed);
-        let host = self.host_of(id);
-        track(&self.inner, self.inner.hosts[host].import(&bytes))
+        let client = self.client(self.host_of(id))?;
+        track(&self.inner, client.import(&bytes))
     }
 
     /// A router only delivers resolutions it *owes* (queued
-    /// [`PendingResolve`]s from its own handshakes). A blind passthrough
-    /// would route by `host_of`, which after a migration override points
-    /// at the live *target* — and `landed:true` would durably forget the
-    /// authoritative copy instead of the sealed source. Operators who
-    /// really mean a specific host talk to that host directly.
+    /// [`PendingResolve`]s from its own handshakes), and only under the
+    /// session's lease. A blind passthrough would route by `host_of`,
+    /// which after a migration override points at the live *target* —
+    /// and `landed:true` would durably forget the authoritative copy
+    /// instead of the sealed source. Operators who really mean a
+    /// specific host talk to that host directly.
     fn resolve_seal(&self, session: u64, landed: bool) -> Result<()> {
+        let lease = self.acquire_lease(session)?;
         let entry = {
             let mut pending = self.inner.pending.lock().unwrap();
             let pos = pending.iter().position(|p| p.session == session);
             match pos {
                 Some(pos) if pending[pos].landed == landed => pending.remove(pos),
-                Some(pos) => anyhow::bail!(
-                    "session {session} has a pending resolution with landed={} — \
-                     refusing the contradictory landed={landed}",
-                    pending[pos].landed
-                ),
-                None => anyhow::bail!(
-                    "no pending seal resolution for session {session} on this router \
-                     (send `install` to the sealed host directly for manual repair)"
-                ),
+                Some(pos) => {
+                    let held = pending[pos].landed;
+                    drop(pending);
+                    self.inner.leases.release(lease);
+                    anyhow::bail!(
+                        "session {session} has a pending resolution with landed={held} — \
+                         refusing the contradictory landed={landed}"
+                    )
+                }
+                None => {
+                    drop(pending);
+                    self.inner.leases.release(lease);
+                    anyhow::bail!(
+                        "no pending seal resolution for session {session} on this router \
+                         (send `install` to the sealed host directly for manual repair)"
+                    )
+                }
             }
         };
-        let res = track(
-            &self.inner,
-            self.inner.hosts[entry.host].install(entry.session, entry.landed),
-        );
+        let res = self
+            .client(entry.host)
+            .and_then(|c| track(&self.inner, c.install(entry.session, entry.landed)));
+        self.inner.leases.release(lease);
         if let Err(e) = res {
             if e.downcast_ref::<HostUnreachable>().is_some() {
                 self.inner.pending.lock().unwrap().push(entry);
@@ -507,13 +908,24 @@ impl SessionApi for RouterHandle {
         Ok(())
     }
 
+    fn join(&self, addr: String, standby: Option<String>) -> Result<JoinReply> {
+        RouterHandle::join(self, addr, standby)
+    }
+
+    fn heartbeat(&self, addr: String) -> Result<bool> {
+        Ok(RouterHandle::heartbeat(self, &addr))
+    }
+
+    fn drain(&self, addr: String) -> Result<usize> {
+        RouterHandle::drain(self, &addr)
+    }
+
     fn health(&self) -> Result<HealthReply> {
+        let members = self.member_clients();
         let mut sessions_open = 0;
-        let host_status: Vec<HostStatus> = self
-            .inner
-            .hosts
+        let host_status: Vec<HostStatus> = members
             .iter()
-            .map(|host| match track(&self.inner, host.health()) {
+            .map(|(_, host)| match track(&self.inner, host.health()) {
                 Ok(h) => {
                     sessions_open += h.sessions_open;
                     HostStatus {
@@ -532,7 +944,7 @@ impl SessionApi for RouterHandle {
         Ok(HealthReply {
             role: "router",
             shards: 0,
-            hosts: self.host_count(),
+            hosts: members.len(),
             sessions_open,
             uptime_s: self.inner.started.elapsed().as_secs_f64(),
             sessions: Vec::new(),
@@ -541,87 +953,60 @@ impl SessionApi for RouterHandle {
     }
 }
 
-/// The router service: owns the background rebalancer, if configured.
-/// Dropping stops it; the stateless handle keeps working either way.
+/// The router service: owns the background rebalancer and the
+/// membership/failover monitor. Dropping stops both; the stateless
+/// handle keeps working either way.
 pub struct Router {
     handle: RouterHandle,
     rebalancer: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
+    monitor: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
+/// Distinguishes lease owners between routers in one process (tests run
+/// several); combined with the pid for cross-process uniqueness.
+static ROUTER_SEQ: AtomicU64 = AtomicU64::new(1);
+
 impl Router {
-    /// Connect to the host fleet. Reachable hosts are probed for live
-    /// sessions so the router resumes where a predecessor (or a crash)
-    /// left off: the id allocator starts past the largest live id,
-    /// off-home sessions get ring overrides, and sessions duplicated by
-    /// a crash mid-migration are deduped (most-advanced copy wins —
-    /// progress ties break to the lowest host index — and the losers
-    /// are durably forgotten). Unreachable hosts are skipped — their
-    /// sessions are adopted by a later restart or request-time routing.
+    /// Connect to the host fleet. Static `--hosts` members are seeded
+    /// into the live table (never suspected — they have no heartbeat
+    /// obligation); reachable members are probed for live sessions so
+    /// the router resumes where a predecessor (or a crash) left off
+    /// ([`RouterHandle::relearn`]). Unreachable hosts are skipped —
+    /// their sessions are adopted by a later restart or request-time
+    /// routing. An empty `hosts` list starts a fully dynamic fleet that
+    /// waits for `join` registrations.
     pub fn start(cfg: RouterConfig) -> Result<Router> {
-        ensure!(!cfg.hosts.is_empty(), "a router needs at least one --hosts address");
-        let hosts: Vec<HostClient> = cfg.hosts.iter().map(HostClient::new).collect();
-        let mut ring = HashRing::new(hosts.len(), cfg.replicas.max(1))
-            .expect("hosts and replicas are >= 1 here");
+        let replicas = cfg.replicas.max(1);
+        let slots: Vec<Arc<HostClient>> =
+            cfg.hosts.iter().map(|a| Arc::new(HostClient::new(a))).collect();
+        let seats: HashMap<String, usize> =
+            cfg.hosts.iter().enumerate().map(|(i, a)| (a.clone(), i)).collect();
+        ensure!(
+            seats.len() == slots.len(),
+            "duplicate address in --hosts: every host needs its own seat"
+        );
+        let mut table = HostTable::new(cfg.suspect_after_ms);
+        for addr in &cfg.hosts {
+            table.seed_static(addr, 0);
+        }
+        let ring = HashRing::new(slots.len().max(1), replicas)
+            .expect("seat count and replicas are >= 1 here");
+        let owner =
+            ((std::process::id() as u64) << 32) | ROUTER_SEQ.fetch_add(1, Ordering::Relaxed);
         let inner = RouterInner {
-            hosts,
-            ring: HashRing::new(1, 1).map(RwLock::new).expect("placeholder ring"),
+            fleet: RwLock::new(Fleet { slots, ring, table, seats }),
             migrating: Mutex::new(HashSet::new()),
             pending: Mutex::new(Vec::new()),
             orphans: Mutex::new(Vec::new()),
+            leases: cfg.leases.unwrap_or_else(|| LeaseTable::new(cfg.lease_ttl_ms)),
+            owner,
             next_id: AtomicU64::new(0),
             unreachable: AtomicU64::new(0),
             started: Instant::now(),
+            replicas,
         };
-        // Adopt what the fleet already holds: (host, unsealed?, thinks,
-        // steps) per copy of each session id.
-        let mut copies: std::collections::BTreeMap<u64, Vec<(usize, bool, u64, u64)>> =
-            Default::default();
-        for (index, host) in inner.hosts.iter().enumerate() {
-            match track(&inner, host.health()) {
-                Ok(h) => {
-                    for s in h.sessions {
-                        copies
-                            .entry(s.id)
-                            .or_default()
-                            .push((index, !s.sealed, s.thinks, s.steps));
-                    }
-                }
-                Err(_) => continue,
-            }
-        }
-        let mut max_id = 0u64;
-        for (sid, owners) in copies {
-            max_id = max_id.max(sid);
-            // An unsealed copy always beats a sealed one: a seal means
-            // "my image left during a hand-off", so the unsealed peer is
-            // the authoritative side of that hand-off regardless of
-            // (equal) progress counters. Then most-advanced, ties to the
-            // lowest host.
-            let &(keep, keep_unsealed, _, _) = owners
-                .iter()
-                .max_by_key(|&&(host, unsealed, thinks, steps)| {
-                    (unsealed, thinks, steps, usize::MAX - host)
-                })
-                .expect("at least one owner");
-            for &(host, _, _, _) in &owners {
-                if host != keep {
-                    // Best-effort durable forget of the stale duplicate;
-                    // a failure here just leaves it for the next restart.
-                    let _ = track(&inner, inner.hosts[host].install(sid, true));
-                }
-            }
-            if !keep_unsealed {
-                // A lone (or best) copy stuck sealed: the resolution died
-                // with the previous router, so release it (idempotent).
-                let _ = track(&inner, inner.hosts[keep].install(sid, false));
-            }
-            if ring.home(sid) != keep {
-                ring.set_override(sid, keep).expect("host index < fleet size");
-            }
-        }
-        inner.next_id.store(max_id, Ordering::Relaxed);
-        *inner.ring.write().unwrap() = ring;
         let handle = RouterHandle { inner: Arc::new(inner) };
+        handle.relearn();
         let rebalancer = cfg.rebalance.map(|rb| {
             let stop = Arc::new(AtomicBool::new(false));
             let flag = Arc::clone(&stop);
@@ -644,7 +1029,20 @@ impl Router {
             });
             (stop, thread)
         });
-        Ok(Router { handle, rebalancer })
+        let monitor = {
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = Arc::clone(&stop);
+            let h = handle.clone();
+            let thread = std::thread::spawn(move || loop {
+                std::thread::sleep(Duration::from_millis(50));
+                if flag.load(Ordering::SeqCst) {
+                    return;
+                }
+                h.failover_pass();
+            });
+            Some((stop, thread))
+        };
+        Ok(Router { handle, rebalancer, monitor })
     }
 
     pub fn handle(&self) -> RouterHandle {
@@ -658,7 +1056,10 @@ impl Router {
 
 impl Drop for Router {
     fn drop(&mut self) {
-        if let Some((stop, thread)) = self.rebalancer.take() {
+        for (stop, thread) in [self.rebalancer.take(), self.monitor.take()]
+            .into_iter()
+            .flatten()
+        {
             stop.store(true, Ordering::SeqCst);
             let _ = thread.join();
         }

@@ -58,6 +58,13 @@ pub struct ServiceConfig {
     pub policy: PolicyFactory,
     /// Seed for the worker pools' policy streams.
     pub seed: u64,
+    /// Cap on replies parked on commit tickets per shard (`None` =
+    /// uncapped, the pre-cap behavior). At the cap the shard **sheds to
+    /// a synchronous wait**: it forces the store durable
+    /// ([`SessionStore::sync`]) and delivers instead of parking —
+    /// bounded memory under a pathologically slow disk, degrading to
+    /// backpressure instead of unbounded queueing.
+    pub max_held: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -67,6 +74,7 @@ impl Default for ServiceConfig {
             simulation_workers: 8,
             policy: HeuristicPolicy::factory(),
             seed: 0,
+            max_held: None,
         }
     }
 }
@@ -514,6 +522,8 @@ impl SearchService {
         // every think() caller; clamp rather than hand out a dead service.
         let n_exp = cfg.expansion_workers.max(1);
         let n_sim = cfg.simulation_workers.max(1);
+        // A zero cap would shed every reply; clamp to at least one slot.
+        let max_held = cfg.max_held.map(|c| c.max(1));
         let mut expansion = Pool::new(n_exp, cfg.policy.clone(), cfg.seed ^ 0xe);
         let mut simulation = Pool::new(n_sim, cfg.policy.clone(), cfg.seed ^ 0x5);
         // Funnel both pools into the scheduler inbox so the thread blocks
@@ -559,6 +569,8 @@ impl SearchService {
                 durable_configured,
                 held: VecDeque::new(),
                 held_hwm: 0,
+                max_held,
+                held_shed: 0,
                 counters_cache: StoreCounters::default(),
                 snapshot_every,
                 think_hist: Histogram::new(),
@@ -639,8 +651,12 @@ struct Scheduler {
     /// Replies parked on their record's commit ticket, ascending by
     /// sequence; released when the committer reports the batch durable.
     held: VecDeque<Held>,
-    /// Most replies ever parked at once (tunes the planned admission cap).
+    /// Most replies ever parked at once (observability for the cap).
     held_hwm: usize,
+    /// Cap on `held` ([`ServiceConfig::max_held`]); `None` = uncapped.
+    max_held: Option<usize>,
+    /// Replies that hit the cap and shed to a synchronous store flush.
+    held_shed: u64,
     /// Last-known store counters (survives poisoning, so metrics keep
     /// reporting what was written before durability degraded).
     counters_cache: StoreCounters,
@@ -1112,8 +1128,29 @@ impl Scheduler {
     /// Park a reply until its record's batch is durable — or deliver
     /// immediately when the op logged nothing (memory-only shard,
     /// poisoned store, or a think that skipped its snapshot cadence).
+    ///
+    /// With a [`ServiceConfig::max_held`] cap, a park that would exceed
+    /// it **sheds to a synchronous wait** instead: force the store
+    /// durable ([`SessionStore::sync`] — one flush admits the whole
+    /// backlog), release everything, and deliver this reply directly.
+    /// Held memory is bounded by the cap; a slow disk degrades to
+    /// backpressure (callers block on fsync latency), never to
+    /// unbounded queueing. The one exception is ack-gated replication:
+    /// a local flush cannot conjure a standby ack, so a reply whose
+    /// record the standby hasn't covered parks anyway — the cap bounds
+    /// the *disk* backlog, and the journal still shows the shed.
     fn reply_or_hold(&mut self, seq: Option<u64>, session: u64, trace: u64, reply: HeldReply) {
-        let durable = self.store.as_ref().map(|s| s.durable_seq()).unwrap_or(u64::MAX);
+        let mut durable = self.store.as_ref().map(|s| s.durable_seq()).unwrap_or(u64::MAX);
+        if let (Some(seq), Some(cap)) = (seq, self.max_held) {
+            if seq > durable && self.held.len() >= cap {
+                self.held_shed += 1;
+                if let Some(store) = self.store.as_deref_mut() {
+                    store.sync();
+                }
+                self.flush_held(); // observes a sync failure and poisons
+                durable = self.store.as_ref().map(|s| s.durable_seq()).unwrap_or(u64::MAX);
+            }
+        }
         match seq {
             Some(seq) if seq > durable => {
                 let parked_at_us = self.now_us();
@@ -1655,6 +1692,7 @@ impl Scheduler {
             snapshot_bytes_delta: sc.snapshot_bytes_delta,
             held_replies: self.held.len(),
             held_replies_hwm: self.held_hwm,
+            held_replies_shed: self.held_shed,
             hosts: 0,
             host_unreachable: 0,
             sessions_per_sec: self.closed as f64 / secs,
@@ -1867,6 +1905,116 @@ mod tests {
         let t = h.think(777, 4).unwrap();
         assert!(t.quiescent);
         h.close(777).unwrap();
+    }
+
+    /// Deterministic park/shed driver for the held-reply cap tests: the
+    /// scripted disk never syncs on its own, so replies park until the
+    /// cap forces a shed. Threads hand off via the disk's pending-record
+    /// count, which only the scheduler thread advances — each thread
+    /// waits until the previous thread's record is appended (and its
+    /// reply parked, since the scheduler handles requests one at a time)
+    /// before issuing its own op.
+    fn wait_pending(disk: &crate::testkit::durability::ScriptedDisk, at_least: usize) {
+        while disk.pending_records() < at_least {
+            std::thread::yield_now();
+        }
+    }
+
+    fn capped_service(
+        max_held: usize,
+    ) -> (SearchService, crate::testkit::durability::ScriptedDisk) {
+        let (store, disk) = crate::testkit::durability::ScriptedStore::create(1);
+        let service = SearchService::start_with_store(
+            ServiceConfig {
+                expansion_workers: 1,
+                simulation_workers: 2,
+                max_held: Some(max_held),
+                ..Default::default()
+            },
+            1,
+            move || Ok((Box::new(store) as Box<dyn SessionStore>, Recovery::default())),
+        )
+        .unwrap();
+        (service, disk)
+    }
+
+    #[test]
+    fn held_reply_cap_is_never_exceeded() {
+        // Cap = 1, two sessions ping-ponging: every A-op parks (held =
+        // 1, the cap), every B-op sheds — the store is forced durable
+        // synchronously and *both* replies deliver. The disk is never
+        // synced by the test: with an uncapped queue nothing would ever
+        // deliver and both threads would hang forever.
+        let (service, disk) = capped_service(1);
+        let rounds = 4u64;
+        let ha = service.handle();
+        let hb = service.handle();
+        let db = disk.clone();
+        let a = std::thread::spawn(move || {
+            let sid = ha.open(garnet(1), quick_spec(1), SessionOptions::default()).unwrap();
+            for _ in 0..rounds {
+                assert!(ha.think(sid, 4).unwrap().quiescent);
+            }
+            ha.close(sid).unwrap();
+        });
+        let b = std::thread::spawn(move || {
+            wait_pending(&db, 1);
+            let sid = hb.open(garnet(2), quick_spec(2), SessionOptions::default()).unwrap();
+            for _ in 0..rounds {
+                wait_pending(&db, 1);
+                assert!(hb.think(sid, 4).unwrap().quiescent);
+            }
+            wait_pending(&db, 1);
+            hb.close(sid).unwrap();
+        });
+        a.join().unwrap();
+        b.join().unwrap();
+        let m = service.handle().metrics().unwrap();
+        assert_eq!(m.held_replies, 0, "everything released");
+        assert_eq!(m.held_replies_hwm, 1, "the cap was reached but never exceeded");
+        // Every B-op shed: open + `rounds` thinks + close.
+        assert_eq!(m.held_replies_shed, rounds + 2);
+        assert_eq!(disk.pending_records(), 0, "sheds forced everything durable");
+    }
+
+    #[test]
+    fn slow_disk_burst_degrades_to_backpressure_not_queueing() {
+        // A scripted slow-disk burst: three sessions hammer a disk whose
+        // committer never runs. With cap = 2 the queue grows to exactly
+        // the cap, then every further reply degrades to a synchronous
+        // flush (backpressure) — it never queues past the cap, and the
+        // flush batches the whole backlog into one scripted fsync.
+        let (service, disk) = capped_service(2);
+        let rounds = 3u64;
+        let mut joins = Vec::new();
+        for lane in 0..3u64 {
+            let h = service.handle();
+            let d = disk.clone();
+            joins.push(std::thread::spawn(move || {
+                // Lane 0 parks, lane 1 parks behind it, lane 2 sheds.
+                wait_pending(&d, lane as usize);
+                let sid =
+                    h.open(garnet(lane), quick_spec(lane), SessionOptions::default()).unwrap();
+                for _ in 0..rounds {
+                    wait_pending(&d, lane as usize);
+                    assert!(h.think(sid, 4).unwrap().quiescent);
+                }
+                wait_pending(&d, lane as usize);
+                h.close(sid).unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = service.handle().metrics().unwrap();
+        assert_eq!(m.held_replies, 0);
+        assert_eq!(m.held_replies_hwm, 2, "the burst backlog is bounded by the cap");
+        // One shed per round (open round + think rounds + close round),
+        // each batching cap + 1 records into one scripted fsync.
+        assert_eq!(m.held_replies_shed, rounds + 2);
+        let (records, batches, _) = disk.counters();
+        assert_eq!(records, 3 * (rounds + 2), "opens + snapshots + closes all logged");
+        assert_eq!(batches, rounds + 2, "group commit held up under backpressure");
     }
 
     #[test]

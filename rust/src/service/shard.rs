@@ -38,10 +38,10 @@
 //! `wu-uct serve --shards 1` without a data dir degenerates to the PR 1
 //! single-scheduler behavior exactly.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -50,16 +50,20 @@ use anyhow::{ensure, Result};
 
 use crate::env::Env;
 use crate::mcts::common::SearchSpec;
+use crate::service::client::HostClient;
 use crate::service::metrics::ServiceMetrics;
 use crate::service::placement::HashRing;
 use crate::service::scheduler::{
     AdvanceReply, Busy, CloseReply, SchedMsg, SearchService, ServiceConfig, ServiceHandle,
     SessionOptions, ShardWiring, StealQueue, StoreOpener, ThinkReply,
 };
-use crate::service::SessionApi;
+use crate::service::{PromoteReply, ReplShardStatus, SessionApi};
 use crate::store::engine::{SessionEngine, SessionStore};
 use crate::store::migrate::{plan_step, Recovering};
-use crate::store::wal::StoreConfig;
+use crate::store::replicate::{
+    AckGate, ReplSender, ReplSink, ReplicatedStore, Resume, StandbyShard,
+};
+use crate::store::wal::{Record, StoreConfig};
 
 /// Automatic rebalancer knobs.
 #[derive(Debug, Clone, Copy)]
@@ -104,6 +108,15 @@ pub struct ShardedConfig {
     /// Automatic occupancy rebalancer; `None` disables it (explicit
     /// `migrate` ops still work).
     pub rebalance: Option<RebalanceConfig>,
+    /// Standby replication: stream every shard's WAL records to this
+    /// host (`wu-uct serve --replicate host:port`). Requires `data_dir`
+    /// — the stream mirrors the WAL, so there must be one.
+    pub replicate: Option<String>,
+    /// With `replicate`: hold each reply until the standby has acked the
+    /// records behind it (`--repl-ack`), so an acked op survives even
+    /// the loss of the primary's disk. Without it replication is
+    /// asynchronous: bounded-lag, local-durability acks.
+    pub repl_ack: bool,
 }
 
 impl Default for ShardedConfig {
@@ -119,6 +132,8 @@ impl Default for ShardedConfig {
             full_every: 8,
             max_segment_bytes: 8 << 20,
             rebalance: None,
+            replicate: None,
+            repl_ack: false,
         }
     }
 }
@@ -181,6 +196,10 @@ struct Inner {
     migrating: Mutex<HashSet<u64>>,
     /// Global session-id allocator (ids start past any recovered id).
     next_id: AtomicU64,
+    /// Standby role: replication streams this host is *receiving*, one
+    /// per primary shard. Empty unless some primary points `--replicate`
+    /// at us; folded into live sessions by [`ShardedHandle::promote`].
+    standby: Mutex<HashMap<usize, StandbyShard>>,
 }
 
 /// Cloneable, stateless router over the shard handles: the shard owning a
@@ -429,6 +448,73 @@ impl ShardedHandle {
     pub fn shard_metrics(&self) -> Result<Vec<ServiceMetrics>> {
         self.inner.shards.iter().map(|h| h.metrics()).collect()
     }
+
+    /// Standby half of replication: apply one frame of a primary's
+    /// shard-`shard` stream, returning the acked-through sequence. A
+    /// frame opening a new incarnation resets the stream; a re-sent
+    /// prefix is skipped idempotently; a gap is a typed error (the
+    /// primary re-resolves where to resume via
+    /// [`ShardedHandle::replicate_status`]).
+    pub fn replicate_apply(&self, shard: usize, frame: Vec<u8>) -> Result<u64> {
+        let mut standby = self.inner.standby.lock().unwrap();
+        let stream = standby.entry(shard).or_insert_with(StandbyShard::new);
+        Ok(stream.apply(&frame)?)
+    }
+
+    /// Where every received stream stands — the reconnect handshake a
+    /// primary uses to ship only the suffix the standby is missing.
+    pub fn replicate_status(&self) -> Result<Vec<ReplShardStatus>> {
+        let standby = self.inner.standby.lock().unwrap();
+        let mut out: Vec<ReplShardStatus> = standby
+            .iter()
+            .map(|(&shard, s)| ReplShardStatus { shard, start: s.start(), acked: s.acked() })
+            .collect();
+        out.sort_unstable_by_key(|s| s.shard);
+        Ok(out)
+    }
+
+    /// Fold every received stream into live sessions: the standby
+    /// becomes the primary. Each replicated session is rebuilt from its
+    /// mirrored `Open` image plus replayed advances — node for node what
+    /// the primary's own WAL recovery would produce — and lands on this
+    /// host's own ring placement. Sessions already open locally are
+    /// skipped, so a re-sent promotion (the router retries on a lost
+    /// reply) is idempotent. The folded streams stay in place: a second
+    /// promote after new frames would re-fold only the new sessions.
+    pub fn promote(&self) -> Result<PromoteReply> {
+        let recovered: Vec<Vec<crate::store::wal::RecoveredSession>> = {
+            let standby = self.inner.standby.lock().unwrap();
+            let mut streams: Vec<(usize, &StandbyShard)> =
+                standby.iter().map(|(&shard, s)| (shard, s)).collect();
+            streams.sort_unstable_by_key(|&(shard, _)| shard);
+            streams
+                .into_iter()
+                .map(|(_, s)| Ok(s.promote()?))
+                .collect::<Result<_>>()?
+        };
+        let mut existing = HashSet::new();
+        for shard in &self.inner.shards {
+            for stat in shard.list_sessions()? {
+                existing.insert(stat.id);
+            }
+        }
+        let mut sessions = 0usize;
+        let mut steps = 0u64;
+        for rs in recovered.into_iter().flatten() {
+            let sid = rs.image.session;
+            if !existing.insert(sid) {
+                continue; // already promoted (or already ours)
+            }
+            let bytes = rs.image.encode()?;
+            self.import_image(bytes)?;
+            for action in rs.advances {
+                self.advance(sid, action)?;
+                steps += 1;
+            }
+            sessions += 1;
+        }
+        Ok(PromoteReply { sessions, steps })
+    }
 }
 
 impl SessionApi for ShardedHandle {
@@ -494,6 +580,18 @@ impl SessionApi for ShardedHandle {
         ShardedHandle::resolve_seal(self, session, landed)
     }
 
+    fn replicate_apply(&self, shard: usize, frame: Vec<u8>) -> Result<u64> {
+        ShardedHandle::replicate_apply(self, shard, frame)
+    }
+
+    fn replicate_status(&self) -> Result<Vec<ReplShardStatus>> {
+        ShardedHandle::replicate_status(self)
+    }
+
+    fn promote(&self) -> Result<PromoteReply> {
+        ShardedHandle::promote(self)
+    }
+
     fn health(&self) -> Result<crate::service::HealthReply> {
         let mut sessions = Vec::new();
         for handle in &self.inner.shards {
@@ -520,6 +618,9 @@ pub struct ShardedService {
     handle: ShardedHandle,
     /// Background occupancy rebalancer, when configured.
     rebalancer: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
+    /// Per-shard replication streamer threads, when configured. They
+    /// exit when their shard's store (holding the stream sender) drops.
+    streamers: Vec<JoinHandle<()>>,
 }
 
 impl ShardedService {
@@ -540,6 +641,18 @@ impl ShardedService {
     /// before the crash) gets its ring override re-established.
     pub fn start_durable(cfg: ShardedConfig) -> Result<ShardedService> {
         let n = cfg.shards.max(1);
+        ensure!(
+            cfg.replicate.is_none() || cfg.data_dir.is_some(),
+            "--replicate streams the WAL, so it requires --data-dir"
+        );
+        // One incarnation token for the whole boot: a standby receiving
+        // a frame with a fresh `start` knows the primary restarted and
+        // resets that shard's stream to the re-seeded images.
+        let incarnation = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1)
+            .max(1);
         let steal = if cfg.steal && n > 1 {
             Some(Arc::new(StealQueue::new()))
         } else {
@@ -551,6 +664,7 @@ impl ShardedService {
         let peers: Vec<_> = channels.iter().map(|(tx, _)| tx.clone()).collect();
         let mut shards = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
+        let mut streamers = Vec::new();
         for (index, (tx, rx)) in channels.into_iter().enumerate() {
             let mut shard_cfg = cfg.shard.clone();
             shard_cfg.seed =
@@ -562,11 +676,41 @@ impl ShardedService {
                     full_every: cfg.full_every.max(1),
                     max_segment_bytes: cfg.max_segment_bytes.max(1),
                 };
+                // Replication wraps the engine so every WAL append is
+                // mirrored into a per-shard stream; a streamer thread
+                // ships it to the standby off the scheduler's path.
+                let repl = cfg.replicate.as_ref().map(|standby_addr| {
+                    let (repl_tx, repl_rx) = channel::<(u64, Record)>();
+                    let gate = cfg.repl_ack.then(AckGate::new);
+                    let thread_gate = gate.clone();
+                    let addr = standby_addr.clone();
+                    streamers.push(std::thread::spawn(move || {
+                        run_streamer(index, repl_rx, addr, incarnation, thread_gate)
+                    }));
+                    (repl_tx, gate)
+                });
+                let full_every = cfg.full_every.max(1);
                 Box::new(move || {
-                    SessionEngine::open(&store_cfg)
-                        .map(|(engine, recovery)| {
-                            (Box::new(engine) as Box<dyn SessionStore>, recovery)
-                        })
+                    let (engine, recovery) = SessionEngine::open(&store_cfg)?;
+                    let store: Box<dyn SessionStore> = match repl {
+                        Some((repl_tx, gate)) => {
+                            let sink: ReplSink = Box::new(move |_repl_seq, wal_seq, rec| {
+                                // The streamer owning the receiver may be
+                                // gone (standby stream torn down at
+                                // shutdown); appends must still succeed.
+                                let _ = repl_tx.send((wal_seq, rec));
+                            });
+                            Box::new(ReplicatedStore::new(
+                                Box::new(engine),
+                                full_every,
+                                &recovery,
+                                sink,
+                                gate,
+                            )?)
+                        }
+                        None => Box::new(engine),
+                    };
+                    Ok((store, recovery))
                 }) as StoreOpener
             });
             let wiring = ShardWiring {
@@ -615,6 +759,7 @@ impl ShardedService {
             ring: RwLock::new(ring),
             migrating: Mutex::new(HashSet::new()),
             next_id: AtomicU64::new(max_id),
+            standby: Mutex::new(HashMap::new()),
         };
         let handle = ShardedHandle { inner: Arc::new(inner) };
         let rebalancer = cfg.rebalance.map(|rb| {
@@ -639,7 +784,7 @@ impl ShardedService {
             });
             (stop, thread)
         });
-        Ok(ShardedService { _shards: shards, handle, rebalancer })
+        Ok(ShardedService { _shards: shards, handle, rebalancer, streamers })
     }
 
     pub fn handle(&self) -> ShardedHandle {
@@ -657,7 +802,140 @@ impl Drop for ShardedService {
             stop.store(true, Ordering::SeqCst);
             let _ = thread.join();
         }
+        // Join order matters: a streamer only exits once its shard's
+        // store (holding the stream sender) is dropped, and stores die
+        // with their scheduler threads — so shut the shards down first.
+        // (`Drop::drop` runs before the automatic field drops.)
+        self._shards.clear();
+        for thread in self.streamers.drain(..) {
+            let _ = thread.join();
+        }
     }
+}
+
+/// One shard's replication streamer: drain mirrored records off the
+/// store's sink channel into a [`ReplSender`], ship the retained suffix
+/// to the standby, and feed its acks back into the ack gate. Runs until
+/// the channel closes (the shard's store dropped), flushing the tail on
+/// the way out so a graceful shutdown leaves the standby current.
+fn run_streamer(
+    shard: usize,
+    rx: Receiver<(u64, Record)>,
+    addr: String,
+    incarnation: u64,
+    gate: Option<Arc<AckGate>>,
+) {
+    use std::sync::mpsc::RecvTimeoutError;
+    let client = HostClient::new(addr);
+    let mut sender = ReplSender::new(incarnation);
+    let mut next_send = 1u64;
+    let mut lost = false;
+    loop {
+        // Block only while nothing is retained; with a backlog, poll so
+        // an unreachable standby gets retried without fresh traffic.
+        let msg = if sender.pending() == 0 {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return,
+            }
+        } else {
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    ship_pending(&client, shard, &mut sender, &mut next_send, &gate, &mut lost);
+                    return;
+                }
+            }
+        };
+        if let Some((wal_seq, rec)) = msg {
+            sender.push(wal_seq, rec);
+            while let Ok((wal_seq, rec)) = rx.try_recv() {
+                sender.push(wal_seq, rec);
+            }
+        }
+        if lost {
+            // Degraded: drop instead of retaining without bound.
+            let last = sender.last_seq();
+            sender.ack(last);
+            continue;
+        }
+        if !ship_pending(&client, shard, &mut sender, &mut next_send, &gate, &mut lost) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+/// One shipping pass: frame and send everything retained past
+/// `next_send`, following the resume handshake on errors. Returns
+/// `false` when the standby is unreachable (the caller backs off and
+/// retries); flips `lost` when the standby has lost the stream beyond
+/// resync, degrading loudly to local-only durability.
+fn ship_pending(
+    client: &HostClient,
+    shard: usize,
+    sender: &mut ReplSender,
+    next_send: &mut u64,
+    gate: &Option<Arc<AckGate>>,
+    lost: &mut bool,
+) -> bool {
+    while !*lost {
+        let Some((frame, last)) = sender.frame_from(*next_send) else {
+            return true; // nothing left to ship
+        };
+        match client.replicate(shard, &frame) {
+            Ok(acked) => {
+                if let Some(wal_seq) = sender.ack(acked) {
+                    if let Some(gate) = gate {
+                        gate.note_standby(wal_seq);
+                    }
+                }
+                // Applying is contiguous, so a successful frame acks at
+                // least through `last` (more if a re-sent prefix ran
+                // ahead of what we thought was outstanding).
+                *next_send = acked.max(last) + 1;
+            }
+            Err(err) => {
+                // A torn connection, a standby restart (gap error), or
+                // an incarnation mismatch: ask the standby where it
+                // stands and resume from there.
+                let status = match client.repl_status() {
+                    Ok(status) => status,
+                    Err(_) => return false, // unreachable: back off
+                };
+                let (start, acked) = status
+                    .iter()
+                    .find(|s| s.shard == shard)
+                    .map(|s| (s.start, s.acked))
+                    .unwrap_or((0, 0));
+                match sender.resume_point(start, acked) {
+                    Resume::From(seq) if seq == *next_send => {
+                        // The standby is exactly where we thought and
+                        // still refused the frame — not a sequencing
+                        // problem; back off instead of hot-looping it.
+                        return false;
+                    }
+                    Resume::From(seq) => *next_send = seq,
+                    Resume::Lost => {
+                        eprintln!(
+                            "replicate: standby {} lost shard {shard}'s stream beyond \
+                             resync; degrading to local-only durability: {err:#}",
+                            client.addr()
+                        );
+                        *lost = true;
+                        if let Some(gate) = gate {
+                            // Un-gate held replies permanently: acks now
+                            // mean local durability only.
+                            gate.note_standby(u64::MAX);
+                        }
+                        let last = sender.last_seq();
+                        sender.ack(last);
+                    }
+                }
+            }
+        }
+    }
+    true
 }
 
 #[cfg(test)]
@@ -937,4 +1215,59 @@ mod tests {
         }
         assert_eq!(h.metrics().unwrap().sessions_open, 0);
     }
-}
+
+    #[test]
+    fn replicate_requires_a_data_dir() {
+        let err = ShardedService::start_durable(ShardedConfig {
+            replicate: Some("127.0.0.1:1".into()),
+            ..ShardedConfig::default()
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("--data-dir"), "got: {err:#}");
+    }
+
+    #[test]
+    fn standby_folds_replicated_streams_into_live_sessions() {
+        use crate::store::replicate::encode_frame;
+        use crate::store::wal::Record;
+
+        // Primary: run a session far enough to have a real tree, and
+        // capture its image exactly as replication would mirror it.
+        let primary = sharded(1, 1, 2);
+        let hp = primary.handle();
+        let sid = hp.open(garnet(3), spec(3), opts(3)).unwrap();
+        let t = hp.think(sid, 8).unwrap();
+        assert!(t.quiescent);
+        let image = hp.export_image(sid).unwrap();
+        hp.resolve_seal(sid, false).unwrap(); // primary keeps serving
+
+        // Standby: receive the stream (an Open image plus one advance
+        // logged after it) and fold it into live sessions.
+        let standby = sharded(2, 1, 2);
+        let hs = standby.handle();
+        let records = vec![
+            Record::Open { session: sid, image },
+            Record::Advance { session: sid, action: t.action },
+        ];
+        let frame = encode_frame(7, 1, &records);
+        let acked = hs.replicate_apply(0, frame).unwrap();
+        assert_eq!(acked, 2, "both records applied and acked");
+        let status = hs.replicate_status().unwrap();
+        assert_eq!(status.len(), 1);
+        assert_eq!((status[0].shard, status[0].start, status[0].acked), (0, 7, 2));
+
+        let reply = hs.promote().unwrap();
+        assert_eq!((reply.sessions, reply.steps), (1, 1));
+        // The promoted copy serves normally: think, advance, close clean.
+        let t2 = hs.think(sid, 8).unwrap();
+        assert!(t2.quiescent);
+        hs.advance(sid, t2.action).unwrap();
+        assert_eq!(hs.close(sid).unwrap().unobserved, 0);
+
+        // Once the stream records the close, a re-sent promotion folds
+        // nothing — closed sessions stay closed.
+        let close_frame = encode_frame(7, 3, &[Record::Close { session: sid }]);
+        assert_eq!(hs.replicate_apply(0, close_frame).unwrap(), 3);
+        let again = hs.promote().unwrap();
+        assert_eq!((again.sessions, again.steps), (0, 0));
+    }

@@ -108,6 +108,14 @@ pub trait SessionStore: Send {
         carry: &[u64],
     ) -> Result<CheckpointOutcome, Error>;
 
+    /// Force everything appended so far durable before returning — the
+    /// backpressure path of the held-reply cap: when a shard has parked
+    /// its limit of replies, it degrades to a synchronous wait (one
+    /// flush admits the whole backlog) instead of queueing without
+    /// bound. A failure surfaces through [`SessionStore::commit_error`]
+    /// on the next check, exactly like an asynchronous commit failure.
+    fn sync(&mut self) {}
+
     /// Highest record sequence known durable.
     fn durable_seq(&self) -> u64;
 
@@ -382,6 +390,12 @@ impl SessionStore for SessionEngine {
             self.tracker.note_checkpoint(&fresh, fresh_bytes, carry);
         }
         Ok(outcome)
+    }
+
+    fn sync(&mut self) {
+        // Block until the committer resolves everything written; an
+        // fsync failure is observed via `commit_error` by the caller.
+        let _ = self.wal.flush();
     }
 
     fn durable_seq(&self) -> u64 {

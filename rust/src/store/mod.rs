@@ -34,6 +34,13 @@
 //!   snapshot and tracks canonical bases; the testkit substitutes a
 //!   scripted store that counts fsyncs and loses unsynced batches at
 //!   scripted crash points.
+//! * [`replicate`] — standby replication: the WAL's record stream
+//!   (delta chain included) framed, checksummed and shipped to a second
+//!   host with a chain-resume handshake, plus the ack-gated
+//!   [`replicate::ReplicatedStore`] wrapper that intersects durability
+//!   with standby acks. Promotion folds the stream through the same
+//!   replay as crash recovery — machine loss, not just process
+//!   restart, keeps every tree.
 //! * [`migrate`] — the live-migration protocol (drain → serialize →
 //!   transfer → repoint the router's override table) and the pure
 //!   rebalance planner that moves sessions off overloaded shards.
@@ -47,6 +54,7 @@
 pub mod codec;
 pub mod engine;
 pub mod migrate;
+pub mod replicate;
 pub mod wal;
 
 pub use codec::{DeltaImage, SessionImage, SessionMeta};
@@ -54,6 +62,10 @@ pub use engine::{SessionEngine, SessionStore, StoreCounters};
 pub use migrate::{
     migrate_over, plan_step, HandshakeOutcome, MigrationLink, PendingResolve, PlannedMove,
     Recovering,
+};
+pub use replicate::{
+    decode_frame, encode_frame, AckGate, ReplFrame, ReplSender, ReplicatedStore, Resume,
+    StandbyShard, MAX_FRAME_BYTES,
 };
 pub use wal::{
     read_segment, replay_records, CheckpointOutcome, CommitTicket, Record, RecoveredSession,

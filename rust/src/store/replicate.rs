@@ -1,0 +1,652 @@
+//! Standby replication: stream the WAL's record stream — delta chain
+//! included — to a second host, so sessions survive *machine* loss, not
+//! just process restart.
+//!
+//! Three transport-agnostic pieces (the service layer supplies sockets;
+//! the chaos scheduler supplies scripted message passing):
+//!
+//! * **Frames** ([`encode_frame`] / [`decode_frame`]) — a checksummed,
+//!   size-capped batch of `(repl_seq, Record)` pairs in exactly the
+//!   WAL's record encoding. Replication sequence numbers are the
+//!   *stream's own* contiguous numbering, deliberately independent of
+//!   WAL ticket sequences: checkpoints rewrite WAL records that are
+//!   never re-streamed, so WAL seqs have gaps the stream must not
+//!   inherit. Every frame also carries the stream's **start token** —
+//!   a fresh token per primary incarnation, so a standby can tell "same
+//!   stream, next records" from "the primary restarted, reset and
+//!   re-seed".
+//! * **[`ReplSender`]** — the primary's outbound state: assigns repl
+//!   seqs, retains unacked records for resend, frames pending suffixes,
+//!   and answers the **chain-resume** question after a reconnect: given
+//!   the standby's `(start, acked)` status, resume from `acked + 1`, or
+//!   report [`Resume::Lost`] when the standby's state is gone and the
+//!   retained buffer can no longer rebuild it (replication degrades
+//!   loudly; the primary keeps serving).
+//! * **[`StandbyShard`]** — the standby's inbound state for one shard:
+//!   applies frames idempotently (a resent prefix is skipped, a gap is
+//!   a typed error so the primary falls back to the resume handshake)
+//!   and folds the accumulated records through the WAL's own
+//!   [`replay_records`] at **promotion**, yielding the same
+//!   [`RecoveredSession`]s a local crash recovery would — trees intact,
+//!   node for node.
+//!
+//! [`ReplicatedStore`] wires the sender into the storage stack: a
+//! [`SessionStore`] wrapper that mirrors every logged record into the
+//! stream. It keeps its *own* [`DeltaTracker`], so the stream's delta
+//! chain is self-consistent (each delta diffs against the base the
+//! standby reconstructs from the stream itself) regardless of how the
+//! inner engine's chains, checkpoints or recovery history differ. With
+//! ack-gating (`--repl-ack`) the wrapper also intersects durability:
+//! `durable_seq` becomes `min(local fsync, standby ack)`, so the
+//! scheduler's held replies — unchanged — release only once the think
+//! is durable on *both* machines.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::env::codec::Writer;
+use crate::store::codec::{Reader, SessionImage};
+use crate::store::engine::{DeltaTracker, SessionStore, StoreCounters};
+use crate::store::wal::{
+    replay_records, CheckpointOutcome, CommitTicket, Record, RecoveredSession, Recovery,
+};
+use crate::store::{checksum, Error};
+use crate::tree::Tree;
+
+/// Hard cap on one replication frame's encoded size — same bound as the
+/// wire image cap, and checked on both encode (frames are split) and
+/// decode (oversized input is a typed error, not an allocation).
+pub const MAX_FRAME_BYTES: usize = 32 << 20;
+
+const FRAME_VERSION: u16 = 1;
+
+/// Encode records `from, from+1, …` into one frame. The caller
+/// guarantees the records are the stream's contiguous suffix starting
+/// at `from`.
+pub fn encode_frame(start: u64, from: u64, records: &[Record]) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u16(FRAME_VERSION);
+    w.u64(start);
+    w.u64(from);
+    w.u32(records.len() as u32);
+    for rec in records {
+        w.bytes(&rec.encode());
+    }
+    let mut out = w.finish();
+    let sum = checksum(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// One decoded frame: `records[i]` has repl seq `from + i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplFrame {
+    pub start: u64,
+    pub from: u64,
+    pub records: Vec<Record>,
+}
+
+/// Decode and verify a frame. Torn, oversized, checksum-failing or
+/// future-version input is a typed [`Error`] — never a panic, never a
+/// silent partial apply.
+pub fn decode_frame(bytes: &[u8]) -> Result<ReplFrame, Error> {
+    if bytes.len() > MAX_FRAME_BYTES + 8 {
+        return Err(Error::Corrupt { what: "replication frame exceeds size cap" });
+    }
+    if bytes.len() < 8 {
+        return Err(Error::Truncated { what: "replication frame checksum" });
+    }
+    let (payload, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().expect("split at 8"));
+    let computed = checksum(payload);
+    if stored != computed {
+        return Err(Error::ChecksumMismatch { expected: stored, found: computed });
+    }
+    let mut r = Reader::new(payload);
+    let version = r.u16("replication frame version")?;
+    if version > FRAME_VERSION {
+        return Err(Error::UnsupportedVersion { found: version, supported: FRAME_VERSION });
+    }
+    let start = r.u64("replication frame start token")?;
+    let from = r.u64("replication frame base seq")?;
+    let count = r.u32("replication frame record count")?;
+    // A record frame is at least 4 length-prefix bytes; a count beyond
+    // that is corrupt regardless of what follows.
+    if count as usize > payload.len() / 4 {
+        return Err(Error::Corrupt { what: "replication frame record count" });
+    }
+    let mut records = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        records.push(Record::decode(r.bytes("replication frame record")?)?);
+    }
+    if r.remaining() != 0 {
+        return Err(Error::Corrupt { what: "trailing bytes in replication frame" });
+    }
+    Ok(ReplFrame { start, from, records })
+}
+
+/// Outcome of the chain-resume handshake ([`ReplSender::resume_point`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resume {
+    /// Resend the retained suffix starting at this repl seq.
+    From(u64),
+    /// The standby's state is gone (or from another incarnation) and the
+    /// acked prefix has been dropped from retention — this stream cannot
+    /// rebuild it. Replication must degrade loudly.
+    Lost,
+}
+
+/// The primary's outbound replication state for one shard: contiguous
+/// seq assignment + unacked-record retention + resume arithmetic. Pure
+/// state — the transport around it decides when to frame and send.
+pub struct ReplSender {
+    start: u64,
+    /// Unacked `(repl_seq, wal_seq, record)`, ascending and contiguous.
+    buf: VecDeque<(u64, u64, Record)>,
+    /// Next repl seq to assign.
+    next: u64,
+    /// Everything below this seq was acked and dropped from retention.
+    floor: u64,
+}
+
+impl ReplSender {
+    /// `start` is the incarnation token stamped on every frame; any
+    /// nonzero value unique per primary boot works (the live path uses
+    /// boot time, the chaos scheduler a seed-derived constant).
+    pub fn new(start: u64) -> ReplSender {
+        ReplSender { start: start.max(1), buf: VecDeque::new(), next: 1, floor: 1 }
+    }
+
+    pub fn start(&self) -> u64 {
+        self.start
+    }
+
+    /// Append a record to the stream; returns its repl seq. `wal_seq` is
+    /// the local commit sequence the record's durability rides on (0 for
+    /// records that are already durable, e.g. boot re-seeds).
+    pub fn push(&mut self, wal_seq: u64, rec: Record) -> u64 {
+        let seq = self.next;
+        self.next += 1;
+        self.buf.push_back((seq, wal_seq, rec));
+        seq
+    }
+
+    /// Frame the retained suffix starting at `from`, splitting at the
+    /// size cap. `None` when nothing at or after `from` is retained.
+    /// Returns the frame and the repl seq of its last record.
+    pub fn frame_from(&self, from: u64) -> Option<(Vec<u8>, u64)> {
+        let mut records = Vec::new();
+        let mut bytes = 0usize;
+        let mut last = 0u64;
+        for (seq, _, rec) in &self.buf {
+            if *seq < from {
+                continue;
+            }
+            let len = rec.encode().len() + 4;
+            if !records.is_empty() && bytes + len > MAX_FRAME_BYTES {
+                break;
+            }
+            bytes += len;
+            records.push(rec.clone());
+            last = *seq;
+        }
+        if records.is_empty() {
+            return None;
+        }
+        let first = last + 1 - records.len() as u64;
+        Some((encode_frame(self.start, first, &records), last))
+    }
+
+    /// The standby acked through `through`: drop the retained prefix and
+    /// return the highest WAL seq among the dropped records (what the
+    /// ack-gate's `standby_acked` advances to), if any was pending.
+    pub fn ack(&mut self, through: u64) -> Option<u64> {
+        let mut max_wal = None;
+        while self.buf.front().is_some_and(|(seq, _, _)| *seq <= through) {
+            let (seq, wal_seq, _) = self.buf.pop_front().expect("checked front");
+            self.floor = seq + 1;
+            if wal_seq > 0 {
+                max_wal = Some(max_wal.map_or(wal_seq, |m: u64| m.max(wal_seq)));
+            }
+        }
+        max_wal
+    }
+
+    /// Chain-resume: given the standby's reported `(start, acked)`,
+    /// where does the stream resume? A standby on this incarnation
+    /// resumes at `acked + 1` if retention still covers it. A standby
+    /// from another incarnation (fresh, or it lost its disk) must be
+    /// rebuilt from seq 1 — possible only while nothing has been
+    /// dropped.
+    pub fn resume_point(&self, standby_start: u64, standby_acked: u64) -> Resume {
+        let from = if standby_start == self.start { standby_acked + 1 } else { 1 };
+        if from >= self.floor {
+            Resume::From(from)
+        } else {
+            Resume::Lost
+        }
+    }
+
+    /// Records retained (pushed, not yet acked).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Highest repl seq assigned so far.
+    pub fn last_seq(&self) -> u64 {
+        self.next - 1
+    }
+}
+
+/// The standby's state for one replicated shard: the record stream so
+/// far, applied idempotently and promoted on demand.
+#[derive(Default)]
+pub struct StandbyShard {
+    /// Incarnation token of the stream these records belong to (0 until
+    /// the first frame arrives).
+    start: u64,
+    /// Next repl seq expected.
+    next: u64,
+    records: Vec<Record>,
+}
+
+impl StandbyShard {
+    pub fn new() -> StandbyShard {
+        StandbyShard { start: 0, next: 1, records: Vec::new() }
+    }
+
+    /// Repl seq acked through (0 before anything applied).
+    pub fn acked(&self) -> u64 {
+        self.next - 1
+    }
+
+    pub fn start(&self) -> u64 {
+        self.start
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records.len() as u64
+    }
+
+    /// Apply one frame. A frame from a new incarnation resets the shard
+    /// (the primary restarted and re-seeds from scratch); a resent
+    /// prefix is skipped record by record (idempotent); a gap — the
+    /// frame starts after what we hold — is a typed error, which the
+    /// primary answers with the resume handshake. Returns the new acked
+    /// seq.
+    pub fn apply(&mut self, bytes: &[u8]) -> Result<u64, Error> {
+        let frame = decode_frame(bytes)?;
+        if frame.start != self.start {
+            self.start = frame.start;
+            self.next = 1;
+            self.records.clear();
+        }
+        if frame.from > self.next {
+            return Err(Error::Corrupt { what: "replication frame leaves a gap" });
+        }
+        for (i, rec) in frame.records.into_iter().enumerate() {
+            let seq = frame.from + i as u64;
+            if seq < self.next {
+                continue; // resent prefix
+            }
+            self.records.push(rec);
+            self.next = seq + 1;
+        }
+        Ok(self.acked())
+    }
+
+    /// Promote: fold the stream through WAL replay, yielding every live
+    /// session's materialized image + trailing advances — exactly what a
+    /// local crash recovery of the primary would have produced.
+    pub fn promote(&self) -> Result<Vec<RecoveredSession>, Error> {
+        replay_records(self.records.iter().cloned())
+    }
+}
+
+/// Shared ack-gate state between a [`ReplicatedStore`] (scheduler
+/// thread) and the transport that receives standby acks (streamer
+/// thread). Durability becomes the *intersection*: a WAL seq counts as
+/// durable only once the local fsync **and** a standby ack cover it.
+pub struct AckGate {
+    local: AtomicU64,
+    standby: AtomicU64,
+    notifier: Mutex<Option<Box<dyn Fn(u64) + Send>>>,
+}
+
+impl AckGate {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<AckGate> {
+        Arc::new(AckGate {
+            local: AtomicU64::new(0),
+            standby: AtomicU64::new(0),
+            notifier: Mutex::new(None),
+        })
+    }
+
+    pub fn effective(&self) -> u64 {
+        self.local.load(Ordering::Acquire).min(self.standby.load(Ordering::Acquire))
+    }
+
+    fn notify(&self) {
+        let seq = self.effective();
+        if seq == 0 {
+            return;
+        }
+        if let Some(n) = self.notifier.lock().unwrap().as_ref() {
+            n(seq);
+        }
+    }
+
+    /// Local committer made records durable through `seq`.
+    pub fn note_local(&self, seq: u64) {
+        self.local.fetch_max(seq, Ordering::AcqRel);
+        self.notify();
+    }
+
+    /// Standby acks now cover WAL records through `seq`.
+    pub fn note_standby(&self, seq: u64) {
+        self.standby.fetch_max(seq, Ordering::AcqRel);
+        self.notify();
+    }
+
+    fn set_notifier(&self, n: Box<dyn Fn(u64) + Send>) {
+        *self.notifier.lock().unwrap() = Some(n);
+    }
+}
+
+/// Where [`ReplicatedStore`] hands stream records: the service layer's
+/// streamer thread (live) or a scripted queue (tests).
+pub type ReplSink = Box<dyn FnMut(u64, u64, Record) + Send>;
+
+/// [`SessionStore`] wrapper that mirrors every logged record into a
+/// replication stream. See the module docs for why it keeps its own
+/// [`DeltaTracker`] and its own sequence numbering.
+pub struct ReplicatedStore {
+    inner: Box<dyn SessionStore>,
+    tracker: DeltaTracker,
+    next_repl: u64,
+    sink: ReplSink,
+    /// `Some` under `--repl-ack`: durability is intersected with
+    /// standby acks.
+    gate: Option<Arc<AckGate>>,
+}
+
+impl ReplicatedStore {
+    /// Wrap `inner`, re-seeding the stream from `recovery` (the standby
+    /// learns every session that survived the primary's own restart as
+    /// full `Open` images + replayed advances, at WAL seq 0 — already
+    /// locally durable). `sink` receives `(repl_seq, wal_seq, record)`.
+    pub fn new(
+        inner: Box<dyn SessionStore>,
+        full_every: u32,
+        recovery: &Recovery,
+        mut sink: ReplSink,
+        gate: Option<Arc<AckGate>>,
+    ) -> Result<ReplicatedStore, Error> {
+        let mut tracker = DeltaTracker::new(full_every);
+        let mut next_repl = 1u64;
+        for rs in &recovery.sessions {
+            let rec = tracker.open_record(rs.image.session, &rs.image)?;
+            sink(next_repl, 0, rec);
+            next_repl += 1;
+            for &action in &rs.advances {
+                let rec = tracker.advance_record(rs.image.session, action);
+                sink(next_repl, 0, rec);
+                next_repl += 1;
+            }
+        }
+        Ok(ReplicatedStore { inner, tracker, next_repl, sink, gate })
+    }
+
+    /// Mirror `rec` into the stream, riding on the inner append's ticket.
+    fn tee(&mut self, rec: Record, ticket: &CommitTicket) {
+        let seq = self.next_repl;
+        self.next_repl += 1;
+        (self.sink)(seq, ticket.seq(), rec);
+    }
+}
+
+impl SessionStore for ReplicatedStore {
+    fn log_open(&mut self, session: u64, image: &SessionImage) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.open_record(session, image)?;
+        let ticket = self.inner.log_open(session, image)?;
+        self.tee(rec, &ticket);
+        Ok(ticket)
+    }
+
+    fn log_open_encoded(
+        &mut self,
+        session: u64,
+        bytes: Vec<u8>,
+        tree: &Tree,
+    ) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.open_record_encoded(session, bytes.clone(), tree);
+        let ticket = self.inner.log_open_encoded(session, bytes, tree)?;
+        self.tee(rec, &ticket);
+        Ok(ticket)
+    }
+
+    fn log_advance(&mut self, session: u64, action: usize) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.advance_record(session, action);
+        let ticket = self.inner.log_advance(session, action)?;
+        self.tee(rec, &ticket);
+        Ok(ticket)
+    }
+
+    fn log_snapshot(&mut self, session: u64, image: &SessionImage) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.snapshot_record(session, image)?;
+        let ticket = self.inner.log_snapshot(session, image)?;
+        self.tee(rec, &ticket);
+        Ok(ticket)
+    }
+
+    fn log_close(&mut self, session: u64) -> Result<CommitTicket, Error> {
+        let rec = self.tracker.close_record(session);
+        let ticket = self.inner.log_close(session)?;
+        self.tee(rec, &ticket);
+        Ok(ticket)
+    }
+
+    fn needs_checkpoint(&self) -> bool {
+        self.inner.needs_checkpoint()
+    }
+
+    fn dirty(&self, session: u64) -> bool {
+        self.inner.dirty(session)
+    }
+
+    fn checkpoint(
+        &mut self,
+        fresh: Vec<(u64, SessionImage)>,
+        carry: &[u64],
+    ) -> Result<CheckpointOutcome, Error> {
+        // Checkpoints rewrite *local* segments only; the stream is
+        // deliberately untouched (its records were already shipped, and
+        // re-streaming the rewrites would double-apply on the standby).
+        self.inner.checkpoint(fresh, carry)
+    }
+
+    fn sync(&mut self) {
+        self.inner.sync();
+    }
+
+    fn durable_seq(&self) -> u64 {
+        match &self.gate {
+            Some(gate) => self.inner.durable_seq().min(gate.standby.load(Ordering::Acquire)),
+            None => self.inner.durable_seq(),
+        }
+    }
+
+    fn commit_error(&self) -> Option<String> {
+        self.inner.commit_error()
+    }
+
+    fn set_commit_notifier(&mut self, notifier: Box<dyn Fn(u64) + Send>) {
+        match &self.gate {
+            Some(gate) => {
+                // The caller's notifier fires at min(local, standby):
+                // both the local committer and the ack receiver route
+                // through the gate.
+                gate.set_notifier(notifier);
+                let inner_gate = Arc::clone(gate);
+                self.inner
+                    .set_commit_notifier(Box::new(move |seq| inner_gate.note_local(seq)));
+            }
+            None => self.inner.set_commit_notifier(notifier),
+        }
+    }
+
+    fn counters(&self) -> StoreCounters {
+        self.inner.counters()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::garnet::Garnet;
+    use crate::env::Env as _;
+    use crate::mcts::common::SearchSpec;
+    use crate::store::codec::SessionMeta;
+
+    fn image(session: u64, n_root: u32) -> SessionImage {
+        let env = Garnet::new(8, 2, 10, 0.0, 3);
+        let mut tree = Tree::new();
+        tree.node_mut(Tree::ROOT).state = Some(env.snapshot());
+        tree.node_mut(Tree::ROOT).n = n_root;
+        SessionImage {
+            session,
+            env_name: "garnet".into(),
+            env_state: env.snapshot(),
+            spec: SearchSpec::default(),
+            rng_state: (1, 2),
+            meta: SessionMeta { env_seed: 3, ..SessionMeta::default() },
+            tree,
+        }
+    }
+
+    fn open_rec(session: u64, n: u32) -> Record {
+        Record::Open { session, image: image(session, n).encode().unwrap() }
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let records =
+            vec![open_rec(1, 0), Record::Advance { session: 1, action: 2 }, Record::Close {
+                session: 1,
+            }];
+        let bytes = encode_frame(7, 5, &records);
+        let frame = decode_frame(&bytes).unwrap();
+        assert_eq!(frame.start, 7);
+        assert_eq!(frame.from, 5);
+        assert_eq!(frame.records, records);
+    }
+
+    #[test]
+    fn torn_and_corrupt_frames_are_typed_errors() {
+        let bytes = encode_frame(1, 1, &[open_rec(1, 0)]);
+        // Truncated anywhere: typed error, never a panic.
+        for cut in [0, 1, 7, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_frame(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // A flipped byte fails the checksum.
+        let mut flipped = bytes.clone();
+        flipped[10] ^= 0xFF;
+        assert!(matches!(decode_frame(&flipped), Err(Error::ChecksumMismatch { .. })));
+        // Oversized input is refused before any allocation.
+        let huge = vec![0u8; MAX_FRAME_BYTES + 9];
+        assert!(matches!(
+            decode_frame(&huge),
+            Err(Error::Corrupt { what: "replication frame exceeds size cap" })
+        ));
+        // A future version is refused.
+        let mut w = Writer::new();
+        w.u16(99);
+        w.u64(1);
+        w.u64(1);
+        w.u32(0);
+        let mut future = w.finish();
+        let sum = checksum(&future);
+        future.extend_from_slice(&sum.to_le_bytes());
+        assert!(matches!(decode_frame(&future), Err(Error::UnsupportedVersion { .. })));
+    }
+
+    #[test]
+    fn standby_applies_idempotently_and_rejects_gaps() {
+        let mut sb = StandbyShard::new();
+        let r1 = open_rec(1, 0);
+        let r2 = Record::Advance { session: 1, action: 0 };
+        let r3 = Record::Advance { session: 1, action: 1 };
+        assert_eq!(sb.apply(&encode_frame(9, 1, &[r1.clone(), r2.clone()])).unwrap(), 2);
+        // Resending an overlapping window re-applies nothing.
+        assert_eq!(
+            sb.apply(&encode_frame(9, 1, &[r1.clone(), r2.clone(), r3.clone()])).unwrap(),
+            3
+        );
+        assert_eq!(sb.records(), 3);
+        // A gap is refused (seq 5 when 4 is next).
+        assert!(sb.apply(&encode_frame(9, 5, &[r3.clone()])).is_err());
+        assert_eq!(sb.acked(), 3);
+        // A new incarnation resets the shard.
+        assert_eq!(sb.apply(&encode_frame(10, 1, &[r1])).unwrap(), 1);
+        assert_eq!(sb.records(), 1);
+    }
+
+    #[test]
+    fn sender_retention_resume_and_loss() {
+        let mut tx = ReplSender::new(42);
+        for i in 0..5 {
+            tx.push(i + 10, Record::Advance { session: 1, action: i as usize });
+        }
+        // Fresh standby: rebuild from 1 while nothing was dropped.
+        assert_eq!(tx.resume_point(0, 0), Resume::From(1));
+        // Same incarnation, partially acked: resume at the suffix.
+        assert_eq!(tx.resume_point(42, 3), Resume::From(4));
+        // Acks drop retention and surface the covered WAL seq.
+        assert_eq!(tx.ack(3), Some(12));
+        assert_eq!(tx.pending(), 2);
+        assert_eq!(tx.resume_point(42, 3), Resume::From(4));
+        // But a standby needing the dropped prefix is unrecoverable.
+        assert_eq!(tx.resume_point(0, 0), Resume::Lost);
+        assert_eq!(tx.resume_point(42, 1), Resume::Lost);
+        // Framing the suffix and applying it lands on the standby.
+        let (frame, last) = tx.frame_from(4).expect("suffix retained");
+        assert_eq!(last, 5);
+        let mut sb = StandbyShard::new();
+        // The standby missed 1..=3 forever in this contrived setup; a
+        // real resume only reaches here with acked=3 already applied, so
+        // emulate that state via a reset frame from seq 1.
+        assert!(sb.apply(&frame).is_err(), "gap must be refused");
+    }
+
+    #[test]
+    fn standby_promotes_to_replayed_sessions() {
+        let mut sb = StandbyShard::new();
+        let adv = Record::Advance { session: 1, action: 0 };
+        sb.apply(&encode_frame(1, 1, &[open_rec(1, 4), adv])).unwrap();
+        let sessions = sb.promote().unwrap();
+        assert_eq!(sessions.len(), 1);
+        assert_eq!(sessions[0].image.session, 1);
+        assert_eq!(sessions[0].image.tree.node(Tree::ROOT).n, 4);
+        assert_eq!(sessions[0].advances, vec![0]);
+    }
+
+    #[test]
+    fn ack_gate_intersects_local_and_standby() {
+        let gate = AckGate::new();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        gate.set_notifier(Box::new(move |seq| sink.lock().unwrap().push(seq)));
+        gate.note_local(5);
+        assert_eq!(gate.effective(), 0, "no standby ack yet");
+        gate.note_standby(3);
+        assert_eq!(gate.effective(), 3);
+        gate.note_standby(9);
+        assert_eq!(gate.effective(), 5, "clamped by the local fsync");
+        gate.note_local(9);
+        assert_eq!(gate.effective(), 9);
+        let fired = seen.lock().unwrap().clone();
+        assert_eq!(fired, vec![3, 5, 9], "notifier fires at every effective advance");
+    }
+}

@@ -109,7 +109,9 @@ impl Record {
         }
     }
 
-    fn encode(&self) -> Vec<u8> {
+    /// `pub(crate)`: replication frames ([`crate::store::replicate`])
+    /// carry records in exactly the WAL's encoding.
+    pub(crate) fn encode(&self) -> Vec<u8> {
         let mut w = Writer::new();
         match self {
             Record::Open { session, image } => {
@@ -140,7 +142,7 @@ impl Record {
         w.finish()
     }
 
-    fn decode(bytes: &[u8]) -> Result<Record, Error> {
+    pub(crate) fn decode(bytes: &[u8]) -> Result<Record, Error> {
         let mut r = Reader::new(bytes);
         let tag = r.u8("wal record tag")?;
         let session = r.u64("wal record session")?;

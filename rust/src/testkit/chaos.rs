@@ -1,0 +1,1068 @@
+//! The seeded chaos scheduler: whole control-plane deployments under
+//! deterministic fault schedules.
+//!
+//! One chaos run stands up the full control-plane story in miniature —
+//! two durable [`FakeHost`]s behind a [`FakeHostNet`], a standby
+//! replication stream ([`ReplSender`] → severable lane →
+//! [`StandbyShard`]), and two routers sharing one lease table
+//! ([`LeaseTable`]) — then drives it with a schedule of faults and work
+//! that is a **pure function of a seed**: think waves, scripted fsyncs,
+//! replication shipments, lease-guarded migrations, link sever/heal,
+//! reply drops, host crashes (reopen from disk), standby promotion, and
+//! the epoch-fencing scenario where a router stalls mid-migration past
+//! its lease TTL.
+//!
+//! After every op the harness checks the global invariants against an
+//! independent oracle (a model of every copy of every session plus a
+//! mirror of each host's WAL):
+//!
+//! * **no session lost** — every session has a copy on some host;
+//! * **at most one unsealed copy** — duplication is allowed (lost
+//!   replies duplicate, crashes revive), but only ever sealed;
+//! * **`ΣO = 0`** — the paper's quiescence invariant on every live copy;
+//! * **model agreement** — the hosts' actual copy/seal state matches the
+//!   oracle (drift means a protocol step leaked);
+//!
+//! and at the end, the headline check: every surviving session's `best`
+//! equals an **unfaulted control** replaying its effective history from
+//! scratch. Same seed ⇒ byte-identical event log ([`ChaosReport::log`]).
+//!
+//! [`Guards`] switches protocol defenses off so the scheduler can prove
+//! it *catches* the bugs those defenses exist for — lease fencing and
+//! post-crash repair — and [`shrink_chaos`] greedily reduces a failing
+//! schedule to a minimal script for the regression corpus in
+//! `rust/tests/distributed.rs`.
+//!
+//! Model notes: every host runs the same fixed latency script and one
+//! session thinks per wave, so a think's outcome depends only on the
+//! session's own state — never on which host runs it (what makes the
+//! unfaulted control well-defined). `--repl-ack` is modeled as an
+//! admission rule: the routers refuse to place a session onto the
+//! replicated primary while the standby lane is down, and a completed
+//! placement ships its `Open` before the op ends — so promotion can
+//! never lose a session the routers acknowledged.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::env::garnet::Garnet;
+use crate::mcts::common::SearchSpec;
+use crate::service::lease::LeaseTable;
+use crate::store::migrate::{migrate_over, HandshakeOutcome, MigrationLink, PendingResolve};
+use crate::store::replicate::{ReplSender, Resume, StandbyShard};
+use crate::testkit::durability::ScriptedDisk;
+use crate::testkit::fakenet::{FakeHost, FakeHostNet};
+use crate::testkit::harness::ScriptedService;
+use crate::testkit::latency::LatencyScript;
+
+const HOSTS: usize = 2;
+const SESSIONS: [u64; 3] = [1, 2, 3];
+const BUDGET: u32 = 8;
+const FULL_EVERY: u32 = 4;
+const EXP_CAP: usize = 2;
+const SIM_CAP: usize = 4;
+const LEASE_TTL_MS: u64 = 500;
+const TICK_MS: u64 = 10;
+/// The two routers' lease owner tokens.
+const OWNERS: [u64; 2] = [101, 202];
+
+/// One step of a chaos schedule. `Copy` so schedules shrink cheaply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosOp {
+    /// One think wave for `session` on its current home host.
+    Think { session: u64 },
+    /// Scripted fsync on `host`'s disk (releases held replies).
+    Sync { host: usize },
+    /// Ship the primary's durable suffix over the standby lane.
+    ReplShip,
+    /// Router `router` migrates `session` to the other host, under a
+    /// session lease, over the real [`migrate_over`] handshake.
+    Migrate { session: u64, router: usize },
+    /// Cut / restore the router↔host link.
+    Sever { host: usize },
+    Heal { host: usize },
+    /// Cut / restore the primary→standby replication lane.
+    SeverStandby,
+    HealStandby,
+    /// Lose the reply of the next rpc (whatever it turns out to be).
+    DropNextReply,
+    /// Crash `host` and reopen it from its disk: the unsynced suffix,
+    /// all seals and all held replies are gone.
+    Crash { host: usize },
+    /// Crash the primary for good and promote the standby into seat 0.
+    Promote,
+    /// Router `router` seals + exports, then stalls past its lease TTL;
+    /// the rival router takes the lease over (epoch bump) and repairs.
+    /// With fencing on, the stalled router observes `LeaseLost` and
+    /// drops its stale placement.
+    LeaseClash { session: u64, router: usize },
+}
+
+/// Protocol defenses the scheduler can switch off to prove it catches
+/// the bugs they exist for.
+#[derive(Debug, Clone, Copy)]
+pub struct Guards {
+    /// Validate the lease (epoch fence) before applying a placement
+    /// decided under it.
+    pub lease_fencing: bool,
+    /// Run the relearn-style dedup pass after a crash or promotion
+    /// revives stale copies.
+    pub repair_after_crash: bool,
+}
+
+impl Default for Guards {
+    fn default() -> Guards {
+        Guards { lease_fencing: true, repair_after_crash: true }
+    }
+}
+
+/// Outcome of one chaos run.
+pub struct ChaosReport {
+    /// The schedule that was executed.
+    pub schedule: Vec<ChaosOp>,
+    /// Invariant violations, empty on a healthy run. Each line names the
+    /// op it was detected after.
+    pub violations: Vec<String>,
+    /// The merged deterministic event log (harness lines + every net
+    /// rpc/fault line). Same seed + schedule + guards ⇒ byte-identical.
+    pub log: Vec<String>,
+}
+
+/// splitmix64: the schedule's only entropy source.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+struct Mix(u64);
+
+impl Mix {
+    fn new(seed: u64) -> Mix {
+        Mix(splitmix64(seed ^ 0xDEAD_BEEF_CAFE_F00D))
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        splitmix64(self.0)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+fn spec(seed: u64, sid: u64) -> SearchSpec {
+    SearchSpec {
+        max_simulations: 8,
+        rollout_limit: 6,
+        max_depth: 10,
+        seed: splitmix64(seed.wrapping_mul(31).wrapping_add(sid)),
+        ..SearchSpec::default()
+    }
+}
+
+/// Durable convention: the env is rebuilt on recovery as
+/// `make_env(name, spec.seed)` with these garnet parameters.
+fn env(seed: u64, sid: u64) -> Garnet {
+    Garnet::new(15, 3, 30, 0.0, spec(seed, sid).seed)
+}
+
+fn incarnation(seed: u64, generation: u64) -> u64 {
+    splitmix64(seed ^ generation.wrapping_mul(0x9E37_79B9)) | 1
+}
+
+/// The schedule for a seed: a pure function, so any run can be
+/// regenerated, replayed and shrunk.
+pub fn chaos_schedule(seed: u64, len: usize) -> Vec<ChaosOp> {
+    let mut rng = Mix::new(seed);
+    let mut ops = Vec::with_capacity(len);
+    for _ in 0..len {
+        let session = SESSIONS[rng.below(SESSIONS.len())];
+        let host = rng.below(HOSTS);
+        let router = rng.below(2);
+        ops.push(match rng.below(100) {
+            0..=29 => ChaosOp::Think { session },
+            30..=44 => ChaosOp::Sync { host },
+            45..=54 => ChaosOp::ReplShip,
+            55..=66 => ChaosOp::Migrate { session, router },
+            67..=72 => ChaosOp::Sever { host },
+            73..=78 => ChaosOp::Heal { host },
+            79..=82 => ChaosOp::DropNextReply,
+            83..=88 => ChaosOp::Crash { host },
+            89..=92 => ChaosOp::LeaseClash { session, router },
+            93..=94 => ChaosOp::SeverStandby,
+            95..=96 => ChaosOp::HealStandby,
+            _ => ChaosOp::Promote,
+        });
+    }
+    ops
+}
+
+/// Generate the seed's schedule and run it with all guards on.
+pub fn run_chaos(seed: u64, len: usize) -> Result<ChaosReport> {
+    replay_chaos(seed, &chaos_schedule(seed, len), Guards::default())
+}
+
+/// Run an explicit schedule (a shrunk regression script, or a hand-built
+/// scenario). `seed` still parameterizes the sessions' search seeds and
+/// the replication incarnation token.
+pub fn replay_chaos(seed: u64, script: &[ChaosOp], guards: Guards) -> Result<ChaosReport> {
+    let mut world = Chaos::new(seed, guards)?;
+    for (i, &op) in script.iter().enumerate() {
+        world.apply(i, op)?;
+    }
+    world.finish();
+    Ok(ChaosReport {
+        schedule: script.to_vec(),
+        violations: world.violations,
+        log: world.log,
+    })
+}
+
+/// Greedily shrink a failing schedule to a minimal script that still
+/// fails: repeatedly drop any op whose removal preserves the failure.
+pub fn shrink_chaos(seed: u64, script: &[ChaosOp], guards: Guards) -> Result<Vec<ChaosOp>> {
+    let fails = |s: &[ChaosOp]| -> Result<bool> {
+        Ok(!replay_chaos(seed, s, guards)?.violations.is_empty())
+    };
+    anyhow::ensure!(fails(script)?, "shrink_chaos needs a failing script");
+    let mut cur = script.to_vec();
+    loop {
+        let mut shrunk = false;
+        let mut i = 0;
+        while i < cur.len() {
+            let mut cand = cur.clone();
+            cand.remove(i);
+            if fails(&cand)? {
+                cur = cand;
+                shrunk = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !shrunk {
+            return Ok(cur);
+        }
+    }
+}
+
+/// The oracle's mirror of one WAL record (think counts instead of
+/// images: all that matters for "what would recovery rebuild").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RecordModel {
+    Open { session: u64, thinks: u64 },
+    Snapshot { session: u64, thinks: u64 },
+    Close { session: u64 },
+}
+
+/// What a WAL replay of `recs` would rebuild: session → think count.
+fn replay_model(recs: &[RecordModel]) -> BTreeMap<u64, u64> {
+    let mut live = BTreeMap::new();
+    for rec in recs {
+        match *rec {
+            RecordModel::Open { session, thinks } => {
+                live.insert(session, thinks);
+            }
+            RecordModel::Snapshot { session, thinks } => {
+                live.insert(session, thinks);
+            }
+            RecordModel::Close { session } => {
+                live.remove(&session);
+            }
+        }
+    }
+    live
+}
+
+/// The oracle's mirror of one seat's WAL: the record list in append
+/// order plus how much of it is fsync-durable. Index-aligned with the
+/// seat's [`ScriptedDisk`], so crash truncation and the standby's
+/// shipped prefix are both just slices of it.
+#[derive(Default)]
+struct SeatLog {
+    recs: Vec<RecordModel>,
+    durable: usize,
+}
+
+/// One copy of a session as the oracle sees it.
+#[derive(Debug, Clone, Copy)]
+struct CopyModel {
+    sealed: bool,
+    /// Completed thinks reflected in this copy's in-memory state.
+    thinks: u64,
+}
+
+/// The chaos world: system under test + oracle, advanced op by op.
+struct Chaos {
+    seed: u64,
+    guards: Guards,
+    net: FakeHostNet,
+    disks: [ScriptedDisk; 2],
+    seats: [SeatLog; 2],
+    copies: [BTreeMap<u64, CopyModel>; 2],
+    /// Each session's authoritative seat (the routers' shared view).
+    home: BTreeMap<u64, usize>,
+    /// Undeliverable seal resolutions, retried before every op.
+    pending: Vec<PendingResolve>,
+    leases: LeaseTable,
+    now_ms: u64,
+    standby: StandbyShard,
+    sender: ReplSender,
+    next_send: u64,
+    /// Disk-0 durable records already pushed into the sender.
+    pushed: usize,
+    generation: u64,
+    promoted: bool,
+    log: Vec<String>,
+    violations: Vec<String>,
+}
+
+impl Chaos {
+    fn new(seed: u64, guards: Guards) -> Result<Chaos> {
+        let (mut h0, d0) =
+            FakeHost::new_durable(EXP_CAP, SIM_CAP, LatencyScript::fixed(1, 4), FULL_EVERY);
+        let (mut h1, d1) =
+            FakeHost::new_durable(EXP_CAP, SIM_CAP, LatencyScript::fixed(1, 4), FULL_EVERY);
+        let mut seats = [SeatLog::default(), SeatLog::default()];
+        let mut copies = [BTreeMap::new(), BTreeMap::new()];
+        let mut home = BTreeMap::new();
+        for sid in SESSIONS {
+            let h = if sid % 2 == 1 { 0 } else { 1 };
+            let sp = spec(seed, sid);
+            let e = env(seed, sid);
+            let host = if h == 0 { &mut h0 } else { &mut h1 };
+            host.open(sid, &e, sp, 1.0)?;
+            seats[h].recs.push(RecordModel::Open { session: sid, thinks: 0 });
+            copies[h].insert(sid, CopyModel { sealed: false, thinks: 0 });
+            home.insert(sid, h);
+        }
+        let mut world = Chaos {
+            seed,
+            guards,
+            net: FakeHostNet::new(vec![h0, h1]),
+            disks: [d0, d1],
+            seats,
+            copies,
+            home,
+            pending: Vec::new(),
+            leases: LeaseTable::new(LEASE_TTL_MS),
+            now_ms: 0,
+            standby: StandbyShard::new(),
+            sender: ReplSender::new(incarnation(seed, 0)),
+            next_send: 1,
+            pushed: 0,
+            generation: 0,
+            promoted: false,
+            log: Vec::new(),
+            violations: Vec::new(),
+        };
+        // Durable + replicated baseline: every session's `Open` is
+        // covered before chaos begins (the deployment's `--repl-ack`
+        // guarantee for acknowledged opens).
+        world.logln("== setup".into());
+        world.do_sync(0);
+        world.do_sync(1);
+        world.do_repl_ship();
+        let lines = world.net.take_log();
+        world.log.extend(lines);
+        Ok(world)
+    }
+
+    fn logln(&mut self, line: String) {
+        self.log.push(line);
+    }
+
+    fn apply(&mut self, i: usize, op: ChaosOp) -> Result<()> {
+        self.logln(format!("== op {i}: {op:?}"));
+        self.retry_pending();
+        match op {
+            ChaosOp::Think { session } => self.do_think(session),
+            ChaosOp::Sync { host } => self.do_sync(host),
+            ChaosOp::ReplShip => self.do_repl_ship(),
+            ChaosOp::Migrate { session, router } => self.do_migrate(session, router),
+            ChaosOp::Sever { host } => self.net.sever_now(host),
+            ChaosOp::Heal { host } => self.net.heal_now(host),
+            ChaosOp::SeverStandby => self.net.sever_standby(),
+            ChaosOp::HealStandby => self.net.heal_standby(),
+            ChaosOp::DropNextReply => {
+                let step = self.net.next_step();
+                self.net.drop_reply_at(step);
+                self.logln(format!("armed reply drop for rpc step {step}"));
+            }
+            ChaosOp::Crash { host } => self.do_crash(host)?,
+            ChaosOp::Promote => self.do_promote()?,
+            ChaosOp::LeaseClash { session, router } => self.do_lease_clash(session, router),
+        }
+        let lines = self.net.take_log();
+        self.log.extend(lines);
+        self.check(&format!("op {i}"));
+        Ok(())
+    }
+
+    // ---- ops ------------------------------------------------------
+
+    fn do_think(&mut self, sid: u64) {
+        let h = self.home[&sid];
+        let Some(&c) = self.copies[h].get(&sid) else {
+            self.logln(format!("think sid={sid} skipped (no live home copy)"));
+            return;
+        };
+        if c.sealed {
+            self.logln(format!("think sid={sid} skipped (sealed)"));
+            return;
+        }
+        if !self.net.link_is_up(h) {
+            self.logln(format!("think sid={sid} skipped (host {h} unreachable)"));
+            return;
+        }
+        if let Err(e) = self.net.host_mut(h).begin_think(sid, BUDGET) {
+            self.violations
+                .push(format!("think sid={sid} refused against the model: {e:#}"));
+            return;
+        }
+        self.net.host_mut(h).run_to_completion();
+        let thinks = c.thinks + 1;
+        self.copies[h].get_mut(&sid).expect("checked above").thinks = thinks;
+        self.seats[h].recs.push(RecordModel::Snapshot { session: sid, thinks });
+        self.logln(format!("think sid={sid} host={h} thinks={thinks}"));
+    }
+
+    fn do_sync(&mut self, h: usize) {
+        self.disks[h].sync();
+        self.net.host_mut(h).release_durable();
+        self.seats[h].durable = self.seats[h].recs.len();
+        self.logln(format!("sync host={h} durable={}", self.seats[h].durable));
+    }
+
+    /// Ship the primary's durable suffix: push new records into the
+    /// sender, then frame-and-send until caught up or the lane fails.
+    /// A dropped ack is recovered by the resume handshake (the frame
+    /// landed); a severed lane makes no progress and retries later.
+    fn do_repl_ship(&mut self) {
+        if self.promoted {
+            self.logln("repl-ship skipped (standby consumed by promotion)".into());
+            return;
+        }
+        let suffix = self.disks[0].durable_suffix(self.pushed);
+        for rec in suffix {
+            self.pushed += 1;
+            // wal_seq 0: these records are already locally durable.
+            self.sender.push(0, rec);
+        }
+        loop {
+            let Some((frame, last)) = self.sender.frame_from(self.next_send) else {
+                break;
+            };
+            match self.net.ship_standby(&mut self.standby, &frame) {
+                Ok(acked) => {
+                    self.sender.ack(acked);
+                    self.next_send = acked.max(last) + 1;
+                }
+                Err(_) => {
+                    match self.sender.resume_point(self.standby.start(), self.standby.acked()) {
+                        Resume::From(seq) if seq == self.next_send => break,
+                        Resume::From(seq) => {
+                            let acked = self.standby.acked();
+                            self.sender.ack(acked);
+                            self.next_send = seq;
+                        }
+                        Resume::Lost => {
+                            self.violations
+                                .push("replication stream declared itself lost".into());
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mirror a landed install: the target's `Open` is durable before
+    /// the install acks (the wire protocol's guarantee), which also
+    /// fsyncs everything pending on that disk.
+    fn mirror_install(&mut self, to: usize, sid: u64, thinks: u64) {
+        self.seats[to].recs.push(RecordModel::Open { session: sid, thinks });
+        self.seats[to].durable = self.seats[to].recs.len();
+        self.copies[to].insert(sid, CopyModel { sealed: false, thinks });
+    }
+
+    /// A copy that landed but lost the routing argument: forget it.
+    fn orphan_cleanup(&mut self, to: usize, sid: u64) {
+        match MigrationLink::resolve_seal(&mut self.net, to, sid, true) {
+            Ok(()) => {
+                if self.copies[to].remove(&sid).is_some() {
+                    self.seats[to].recs.push(RecordModel::Close { session: sid });
+                }
+                self.logln(format!("orphan copy of sid={sid} on host={to} forgotten"));
+            }
+            Err(_) => {
+                self.pending
+                    .push(PendingResolve { host: to, session: sid, landed: true });
+            }
+        }
+    }
+
+    fn do_migrate(&mut self, sid: u64, router: usize) {
+        let from = self.home[&sid];
+        let to = 1 - from;
+        let Some(&c) = self.copies[from].get(&sid) else {
+            self.logln(format!("migrate sid={sid} skipped (no live home copy)"));
+            return;
+        };
+        if c.sealed {
+            self.logln(format!("migrate sid={sid} skipped (sealed)"));
+            return;
+        }
+        if self.copies[to].contains_key(&sid) {
+            self.logln(format!("migrate sid={sid} skipped (stale copy on target)"));
+            return;
+        }
+        // The repl-ack admission rule: no placements onto the replicated
+        // primary while the standby lane is down.
+        if to == 0 && !self.promoted && !self.net.standby_is_up() {
+            self.logln(format!(
+                "migrate sid={sid} -> host=0 refused (repl-ack: standby lane down)"
+            ));
+            return;
+        }
+        self.now_ms += TICK_MS;
+        let lease = match self.leases.acquire(sid, OWNERS[router], self.now_ms) {
+            Ok(l) => l,
+            Err(_) => {
+                self.logln(format!("router={router} lease busy for sid={sid}"));
+                return;
+            }
+        };
+        let out = migrate_over(&mut self.net, sid, from, to);
+        match out {
+            HandshakeOutcome::Moved => {
+                self.copies[from].remove(&sid);
+                self.seats[from].recs.push(RecordModel::Close { session: sid });
+                self.mirror_install(to, sid, c.thinks);
+                self.home.insert(sid, to);
+                self.logln(format!("router={router} migrated sid={sid} {from}->{to}"));
+                if to == 0 && !self.promoted {
+                    // repl-ack: the placement ships before the op ends.
+                    self.do_sync(0);
+                    self.do_repl_ship();
+                }
+            }
+            HandshakeOutcome::MovedSealed(p) => {
+                self.mirror_install(to, sid, c.thinks);
+                self.copies[from].get_mut(&sid).expect("checked above").sealed = true;
+                self.home.insert(sid, to);
+                self.pending.push(p);
+                self.logln(format!(
+                    "router={router} migrated sid={sid} {from}->{to} (source still sealed)"
+                ));
+                if to == 0 && !self.promoted {
+                    self.do_sync(0);
+                    self.do_repl_ship();
+                }
+            }
+            HandshakeOutcome::Aborted(e) => {
+                // The source was unsealed; ground truth for the install —
+                // a lost *reply* still landed the copy.
+                if let Some(m) = self.copies[from].get_mut(&sid) {
+                    m.sealed = false;
+                }
+                if self.net.host(to).contains(sid) {
+                    self.mirror_install(to, sid, c.thinks);
+                    self.orphan_cleanup(to, sid);
+                }
+                self.logln(format!("router={router} migrate sid={sid} aborted: {e:#}"));
+            }
+            HandshakeOutcome::AbortedSealed(e, p) => {
+                // The unseal was undeliverable: mirror the actual seal.
+                let sealed = self.net.host(from).is_sealed(sid);
+                if let Some(m) = self.copies[from].get_mut(&sid) {
+                    m.sealed = sealed;
+                }
+                if self.net.host(to).contains(sid) {
+                    self.mirror_install(to, sid, c.thinks);
+                    self.orphan_cleanup(to, sid);
+                }
+                self.pending.push(p);
+                self.logln(format!(
+                    "router={router} migrate sid={sid} aborted sealed: {e:#}"
+                ));
+            }
+        }
+        self.leases.release(lease);
+    }
+
+    fn do_crash(&mut self, h: usize) -> Result<()> {
+        // The disk keeps its durable prefix; pending dies with the
+        // process — exactly what `ScriptedStore::reopen` models.
+        self.seats[h].recs.truncate(self.seats[h].durable);
+        let (host, recovered) = FakeHost::reopen_durable(
+            EXP_CAP,
+            SIM_CAP,
+            LatencyScript::fixed(1, 4),
+            &self.disks[h],
+            FULL_EVERY,
+        )?;
+        self.net.replace_host(h, host, "chaos crash");
+        self.logln(format!("crash host={h}: reopened with {recovered} sessions"));
+        let derived = replay_model(&self.seats[h].recs);
+        self.copies[h] = derived
+            .iter()
+            .map(|(&sid, &thinks)| (sid, CopyModel { sealed: false, thinks }))
+            .collect();
+        if h == 0 && !self.promoted {
+            // The live streamer dies with the process and re-seeds from
+            // recovery under a fresh incarnation token.
+            self.generation += 1;
+            self.sender = ReplSender::new(incarnation(self.seed, self.generation));
+            self.next_send = 1;
+            self.pushed = 0;
+            self.logln("replication stream restarts under a new incarnation".into());
+        }
+        self.after_revival(h);
+        Ok(())
+    }
+
+    fn do_promote(&mut self) -> Result<()> {
+        if self.promoted {
+            self.logln("promote skipped (already promoted)".into());
+            return Ok(());
+        }
+        self.promoted = true;
+        // The oracle's view of the standby: the shipped prefix of seat
+        // 0's record log (stream indices are disk indices).
+        let k = (self.standby.records() as usize).min(self.seats[0].recs.len());
+        let expect = replay_model(&self.seats[0].recs[..k]);
+        let survivors = self.standby.promote()?;
+        let got: Vec<u64> = {
+            let mut v: Vec<u64> = survivors.iter().map(|rs| rs.image.session).collect();
+            v.sort_unstable();
+            v
+        };
+        let want: Vec<u64> = expect.keys().copied().collect();
+        if got != want {
+            self.violations.push(format!(
+                "promotion mismatch: standby yielded {got:?}, shipped prefix implies {want:?}"
+            ));
+        }
+        let (host, disk, count) = FakeHost::from_recovered(
+            EXP_CAP,
+            SIM_CAP,
+            LatencyScript::fixed(1, 4),
+            survivors,
+            FULL_EVERY,
+        )?;
+        self.net.replace_host(0, host, "standby promoted");
+        self.disks[0] = disk;
+        self.seats[0] = SeatLog {
+            recs: expect
+                .iter()
+                .map(|(&sid, &thinks)| RecordModel::Open { session: sid, thinks })
+                .collect(),
+            durable: expect.len(),
+        };
+        self.copies[0] = expect
+            .iter()
+            .map(|(&sid, &thinks)| (sid, CopyModel { sealed: false, thinks }))
+            .collect();
+        self.logln(format!("standby promoted into seat 0 with {count} sessions"));
+        self.after_revival(0);
+        Ok(())
+    }
+
+    /// After seat `h` was rebuilt (crash reopen or promotion): re-home
+    /// sessions whose home copy vanished, then — guard permitting — run
+    /// the relearn-style repair that forgets revived stale copies.
+    fn after_revival(&mut self, h: usize) {
+        for sid in SESSIONS {
+            if self.home[&sid] != h || self.copies[h].contains_key(&sid) {
+                continue;
+            }
+            let other = 1 - h;
+            if self.copies[other].contains_key(&sid) {
+                self.home.insert(sid, other);
+                if self.copies[other][&sid].sealed {
+                    match MigrationLink::resolve_seal(&mut self.net, other, sid, false) {
+                        Ok(()) => {
+                            self.copies[other].get_mut(&sid).expect("checked").sealed = false;
+                        }
+                        Err(_) => self.pending.push(PendingResolve {
+                            host: other,
+                            session: sid,
+                            landed: false,
+                        }),
+                    }
+                }
+                self.logln(format!("sid={sid} failed over to host={other}"));
+            } else {
+                self.violations.push(format!("sid={sid} lost when host {h} was rebuilt"));
+            }
+        }
+        if self.guards.repair_after_crash {
+            self.repair(h);
+        }
+    }
+
+    /// The relearn-style dedup: a revived copy of a session homed
+    /// elsewhere loses the routing argument and is forgotten.
+    fn repair(&mut self, h: usize) {
+        for sid in SESSIONS {
+            if self.home[&sid] != h && self.copies[h].contains_key(&sid) {
+                match MigrationLink::resolve_seal(&mut self.net, h, sid, true) {
+                    Ok(()) => {
+                        self.copies[h].remove(&sid);
+                        self.seats[h].recs.push(RecordModel::Close { session: sid });
+                        self.logln(format!("repair: revived copy of sid={sid} on host={h} forgotten"));
+                    }
+                    Err(_) => self.pending.push(PendingResolve {
+                        host: h,
+                        session: sid,
+                        landed: true,
+                    }),
+                }
+            }
+        }
+    }
+
+    fn do_lease_clash(&mut self, sid: u64, router: usize) {
+        let rival = 1 - router;
+        let from = self.home[&sid];
+        let to = 1 - from;
+        let Some(&c) = self.copies[from].get(&sid) else {
+            self.logln(format!("lease-clash sid={sid} skipped (no live home copy)"));
+            return;
+        };
+        if c.sealed || self.copies[to].contains_key(&sid) {
+            self.logln(format!("lease-clash sid={sid} skipped (sealed or stale target)"));
+            return;
+        }
+        if to == 0 && !self.promoted && !self.net.standby_is_up() {
+            self.logln(format!("lease-clash sid={sid} skipped (repl-ack)"));
+            return;
+        }
+        self.now_ms += TICK_MS;
+        let stale = match self.leases.acquire(sid, OWNERS[router], self.now_ms) {
+            Ok(l) => l,
+            Err(_) => {
+                self.logln(format!("router={router} lease busy for sid={sid}"));
+                return;
+            }
+        };
+        // Step 1: the router seals + exports...
+        let image = match MigrationLink::export_seal(&mut self.net, from, sid) {
+            Ok(image) => image,
+            Err(_) => {
+                match MigrationLink::resolve_seal(&mut self.net, from, sid, false) {
+                    Ok(()) => {}
+                    Err(_) => self.pending.push(PendingResolve {
+                        host: from,
+                        session: sid,
+                        landed: false,
+                    }),
+                }
+                if let Some(m) = self.copies[from].get_mut(&sid) {
+                    m.sealed = self.net.host(from).is_sealed(sid);
+                }
+                self.leases.release(stale);
+                self.logln(format!("lease-clash sid={sid}: export failed, aborted"));
+                return;
+            }
+        };
+        self.copies[from].get_mut(&sid).expect("checked above").sealed = true;
+        // ...then stalls mid-handshake past its lease TTL.
+        self.now_ms += LEASE_TTL_MS + TICK_MS;
+        self.logln(format!(
+            "router={router} stalls mid-migration of sid={sid} (lease expires)"
+        ));
+        // The rival takes the lease over (epoch bump) and repairs the
+        // stalled hand-off by unsealing the source.
+        match self.leases.acquire(sid, OWNERS[rival], self.now_ms) {
+            Ok(rescue) => {
+                match MigrationLink::resolve_seal(&mut self.net, from, sid, false) {
+                    Ok(()) => {
+                        self.copies[from].get_mut(&sid).expect("checked").sealed = false;
+                        self.logln(format!(
+                            "router={rival} took over sid={sid} at epoch {} and unsealed the source",
+                            rescue.epoch
+                        ));
+                    }
+                    Err(_) => self.pending.push(PendingResolve {
+                        host: from,
+                        session: sid,
+                        landed: false,
+                    }),
+                }
+                self.leases.release(rescue);
+            }
+            Err(_) => self
+                .violations
+                .push(format!("expired lease on sid={sid} refused takeover")),
+        }
+        // The stalled router wakes holding a stale lease and the
+        // exported image.
+        if self.guards.lease_fencing {
+            match self.leases.validate(stale) {
+                Err(_) => self.logln(format!(
+                    "router={router} observed LeaseLost for sid={sid}; stale image dropped"
+                )),
+                Ok(()) => self.violations.push(format!(
+                    "stale lease for sid={sid} validated after a takeover"
+                )),
+            }
+        } else {
+            // Guard off: the stale owner applies its placement anyway —
+            // the bug epoch fencing exists to prevent.
+            match MigrationLink::install_image(&mut self.net, to, image) {
+                Ok(_) => {
+                    self.mirror_install(to, sid, c.thinks);
+                    self.logln(format!(
+                        "router={router} applied a STALE placement of sid={sid} onto host={to}"
+                    ));
+                }
+                Err(_) => {
+                    if self.net.host(to).contains(sid) {
+                        self.mirror_install(to, sid, c.thinks);
+                        self.orphan_cleanup(to, sid);
+                    }
+                    self.logln(format!("router={router} stale install failed"));
+                }
+            }
+        }
+        self.leases.release(stale);
+    }
+
+    // ---- bookkeeping ---------------------------------------------
+
+    /// Retry undeliverable seal resolutions, settling each by ground
+    /// truth (a lost reply still resolved; a lost request did nothing).
+    fn retry_pending(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let pendings = std::mem::take(&mut self.pending);
+        for p in pendings {
+            let _ = MigrationLink::resolve_seal(&mut self.net, p.host, p.session, p.landed);
+            let present = self.net.host(p.host).contains(p.session);
+            let sealed = present && self.net.host(p.host).is_sealed(p.session);
+            let done = if p.landed { !present } else { !sealed };
+            if done {
+                if p.landed {
+                    if self.copies[p.host].remove(&p.session).is_some() {
+                        self.seats[p.host]
+                            .recs
+                            .push(RecordModel::Close { session: p.session });
+                    }
+                } else if let Some(c) = self.copies[p.host].get_mut(&p.session) {
+                    c.sealed = false;
+                }
+                self.logln(format!(
+                    "pending resolve settled host={} sid={} landed={}",
+                    p.host, p.session, p.landed
+                ));
+            } else {
+                self.pending.push(p);
+            }
+        }
+    }
+
+    /// The per-op invariant sweep: model agreement, at most one unsealed
+    /// copy, no session lost, `ΣO = 0` on every live copy.
+    fn check(&mut self, label: &str) {
+        let mut found = Vec::new();
+        for sid in SESSIONS {
+            let mut unsealed = 0usize;
+            let mut present = 0usize;
+            for h in 0..HOSTS {
+                let model = self.copies[h].get(&sid).copied();
+                let truth = self.net.host(h).contains(sid);
+                if model.is_some() != truth {
+                    found.push(format!(
+                        "{label}: model drift sid={sid} host={h} (model {} vs host {})",
+                        if model.is_some() { "copy" } else { "none" },
+                        if truth { "copy" } else { "none" }
+                    ));
+                }
+                if !truth {
+                    continue;
+                }
+                present += 1;
+                let sealed = self.net.host(h).is_sealed(sid);
+                if let Some(m) = model {
+                    if m.sealed != sealed {
+                        found.push(format!("{label}: seal drift sid={sid} host={h}"));
+                    }
+                }
+                if !sealed {
+                    unsealed += 1;
+                }
+                if !self.net.host(h).quiescent(sid) {
+                    found.push(format!("{label}: ΣO != 0 for sid={sid} on host={h}"));
+                }
+            }
+            if unsealed > 1 {
+                found.push(format!("{label}: sid={sid} has {unsealed} unsealed copies"));
+            }
+            if present == 0 {
+                found.push(format!("{label}: sid={sid} lost (no copy on any host)"));
+            }
+        }
+        self.violations.extend(found);
+    }
+
+    /// Heal everything, settle outstanding resolutions, run the final
+    /// sweep and the unfaulted-control comparison.
+    fn finish(&mut self) {
+        self.logln("== settle".into());
+        for h in 0..HOSTS {
+            if !self.net.link_is_up(h) {
+                self.net.heal_now(h);
+            }
+        }
+        if !self.net.standby_is_up() {
+            self.net.heal_standby();
+        }
+        let mut rounds = 0;
+        while !self.pending.is_empty() && rounds < 8 {
+            self.retry_pending();
+            rounds += 1;
+        }
+        if !self.pending.is_empty() {
+            self.violations
+                .push(format!("{} seal resolutions never settled", self.pending.len()));
+        }
+        let lines = self.net.take_log();
+        self.log.extend(lines);
+        self.check("final");
+        let mut found = Vec::new();
+        for sid in SESSIONS {
+            let h = self.home[&sid];
+            let Some(&c) = self.copies[h].get(&sid) else {
+                found.push(format!("final: sid={sid} has no home copy"));
+                continue;
+            };
+            if c.sealed {
+                found.push(format!("final: sid={sid} home copy still sealed after settle"));
+                continue;
+            }
+            let best = match self.net.host(h).best_action(sid) {
+                Ok(b) => b,
+                Err(e) => {
+                    found.push(format!("final: best({sid}) refused: {e:#}"));
+                    continue;
+                }
+            };
+            let control = control_best(self.seed, sid, c.thinks);
+            if best != control {
+                found.push(format!(
+                    "final: sid={sid} best {best} != unfaulted control {control} after {} thinks",
+                    c.thinks
+                ));
+            }
+        }
+        self.violations.extend(found);
+        self.logln(format!("== done: {} violations", self.violations.len()));
+    }
+}
+
+/// The unfaulted control: a fresh scripted service replaying the
+/// session's effective history (its surviving think count) from
+/// scratch. Well-defined because every host runs the same fixed
+/// latency script and thinks are one-session waves.
+fn control_best(seed: u64, sid: u64, thinks: u64) -> usize {
+    let mut svc = ScriptedService::new(EXP_CAP, SIM_CAP, LatencyScript::fixed(1, 4));
+    let sp = spec(seed, sid);
+    let e = env(seed, sid);
+    svc.open(sid, &e, sp, 1.0);
+    for _ in 0..thinks {
+        svc.begin_think(sid, BUDGET);
+        svc.run_to_completion();
+    }
+    svc.best_action(sid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_a_byte_identical_event_log() {
+        let a = run_chaos(11, 12).unwrap();
+        let b = run_chaos(11, 12).unwrap();
+        assert_eq!(a.log, b.log, "same seed must replay byte-identically");
+        assert_eq!(a.violations, b.violations);
+        let c = run_chaos(12, 12).unwrap();
+        assert_ne!(a.log, c.log, "seeds script different runs");
+    }
+
+    #[test]
+    fn guarded_runs_hold_every_invariant() {
+        for seed in 0..8 {
+            let r = run_chaos(seed, 12).unwrap();
+            assert!(
+                r.violations.is_empty(),
+                "seed {seed}: {:?}\nlog tail: {:#?}",
+                r.violations,
+                &r.log[r.log.len().saturating_sub(12)..]
+            );
+        }
+    }
+
+    #[test]
+    fn lease_fencing_off_is_caught_and_shrinks_to_the_clash() {
+        let script = [
+            ChaosOp::Think { session: 1 },
+            ChaosOp::Sync { host: 0 },
+            ChaosOp::LeaseClash { session: 1, router: 0 },
+            ChaosOp::Think { session: 2 },
+        ];
+        let unguarded = Guards { lease_fencing: false, ..Guards::default() };
+        let r = replay_chaos(5, &script, unguarded).unwrap();
+        assert!(
+            r.violations.iter().any(|v| v.contains("unsealed copies")),
+            "{:?}",
+            r.violations
+        );
+        let fenced = replay_chaos(5, &script, Guards::default()).unwrap();
+        assert!(fenced.violations.is_empty(), "{:?}", fenced.violations);
+        let min = shrink_chaos(5, &script, unguarded).unwrap();
+        assert_eq!(min, vec![ChaosOp::LeaseClash { session: 1, router: 0 }]);
+    }
+
+    #[test]
+    fn crash_repair_off_revives_a_forgotten_copy() {
+        // Migrate 1 off host 0, then crash host 0 before its WAL `Close`
+        // is synced: the copy revives unsealed. Repair forgets it;
+        // without repair the session has two unsealed copies.
+        let script = [
+            ChaosOp::Migrate { session: 1, router: 0 },
+            ChaosOp::Crash { host: 0 },
+        ];
+        let unguarded = Guards { repair_after_crash: false, ..Guards::default() };
+        let r = replay_chaos(3, &script, unguarded).unwrap();
+        assert!(
+            r.violations.iter().any(|v| v.contains("unsealed copies")),
+            "{:?}",
+            r.violations
+        );
+        let guarded = replay_chaos(3, &script, Guards::default()).unwrap();
+        assert!(guarded.violations.is_empty(), "{:?}", guarded.violations);
+    }
+
+    #[test]
+    fn standby_promotion_preserves_replicated_sessions() {
+        let script = [
+            ChaosOp::Think { session: 1 },
+            ChaosOp::Sync { host: 0 },
+            ChaosOp::ReplShip,
+            ChaosOp::Think { session: 1 },
+            ChaosOp::Promote,
+            ChaosOp::Think { session: 1 },
+            ChaosOp::Think { session: 3 },
+        ];
+        let r = replay_chaos(9, &script, Guards::default()).unwrap();
+        assert!(r.violations.is_empty(), "{:?}\nlog: {:#?}", r.violations, r.log);
+        assert!(r.log.iter().any(|l| l.contains("standby promoted")));
+    }
+}

@@ -107,6 +107,14 @@ impl ScriptedDisk {
         self.inner.lock().unwrap().durable.len()
     }
 
+    /// Clone of the durable records from index `from` on — the scripted
+    /// replication feed (a chaos standby stream reads exactly the durable
+    /// suffix it has not yet shipped).
+    pub fn durable_suffix(&self, from: usize) -> Vec<Record> {
+        let st = self.inner.lock().unwrap();
+        st.durable.iter().skip(from).cloned().collect()
+    }
+
     /// `(records, batches, fsyncs)` so far — the group-commit proof
     /// reads `fsyncs ≪ records` straight off this.
     pub fn counters(&self) -> (u64, u64, u64) {
@@ -216,6 +224,13 @@ impl SessionStore for ScriptedStore {
     fn log_close(&mut self, session: u64) -> Result<CommitTicket, Error> {
         let rec = self.tracker.close_record(session);
         self.append(rec)
+    }
+
+    fn sync(&mut self) {
+        // The store can force its own scripted fsync (the held-reply
+        // cap's shed-to-synchronous path) — it holds a disk handle, so
+        // this is one ordinary batch, counted like any scripted sync.
+        self.disk.sync();
     }
 
     fn dirty(&self, session: u64) -> bool {

@@ -23,6 +23,16 @@
 //!   *identical* handshake code path the live router runs over TCP —
 //!   can be driven through every partition window deterministically.
 //!
+//! The control-plane chapter adds three capabilities: a host can be
+//! **crash-replaced** (rebuilt from its [`ScriptedDisk`] via
+//! [`FakeHost::reopen_durable`], losing exactly the unsynced suffix,
+//! its seals and its held replies), a **standby lane** carries
+//! replication frames to a [`StandbyShard`] with the same severable /
+//! reply-droppable semantics as any link, and a standby stream can be
+//! **promoted** into a live host ([`FakeHost::from_recovered`]). The
+//! seeded chaos scheduler ([`crate::testkit::chaos`]) composes these
+//! into whole fault schedules.
+//!
 //! Every rpc, fault and outcome lands in one event log; same hosts +
 //! same script ⇒ byte-identical log (the golden-trace requirement),
 //! tested in `rust/tests/distributed.rs`.
@@ -43,6 +53,8 @@ use crate::service::{
 use crate::store::codec::{SessionImage, SessionMeta};
 use crate::store::engine::SessionStore;
 use crate::store::migrate::{MigrationLink, Recovering};
+use crate::store::replicate::StandbyShard;
+use crate::store::wal::RecoveredSession;
 use crate::testkit::durability::{ScriptedDisk, ScriptedStore};
 use crate::testkit::harness::ScriptedService;
 use crate::testkit::latency::LatencyScript;
@@ -101,6 +113,76 @@ impl FakeHost {
         let mut host = FakeHost::new(exp_capacity, sim_capacity, script);
         host.store = Some(HostStore { store, held: Vec::new() });
         (host, disk)
+    }
+
+    /// Crash-rebuild: a fresh host process over the old host's disk. The
+    /// unsynced suffix is gone ([`ScriptedStore::reopen`]), recovered
+    /// sessions are reinstalled **unsealed** (seals are process state
+    /// and die with the process), and held replies vanish with their
+    /// tickets — the deterministic model of `kill -9` + restart.
+    /// Returns the host and how many sessions were recovered.
+    pub fn reopen_durable(
+        exp_capacity: usize,
+        sim_capacity: usize,
+        script: LatencyScript,
+        disk: &ScriptedDisk,
+        full_every: u32,
+    ) -> Result<(FakeHost, usize)> {
+        let (store, recovery) = ScriptedStore::reopen(disk, full_every)?;
+        let mut host = FakeHost::new(exp_capacity, sim_capacity, script);
+        host.store = Some(HostStore { store, held: Vec::new() });
+        let recovered = recovery.sessions.len();
+        for rs in recovery.sessions {
+            host.install_recovered(rs)?;
+        }
+        Ok((host, recovered))
+    }
+
+    /// Promote a standby stream into a live host: every recovered
+    /// session is installed and re-logged as a fresh durable `Open` on
+    /// the standby machine's own disk (synced before the host serves),
+    /// so the promoted host is crash-safe from its first op. Returns the
+    /// host, its disk, and the promoted session count.
+    pub fn from_recovered(
+        exp_capacity: usize,
+        sim_capacity: usize,
+        script: LatencyScript,
+        sessions: Vec<RecoveredSession>,
+        full_every: u32,
+    ) -> Result<(FakeHost, ScriptedDisk, usize)> {
+        let (store, disk) = ScriptedStore::create(full_every);
+        let mut host = FakeHost::new(exp_capacity, sim_capacity, script);
+        host.store = Some(HostStore { store, held: Vec::new() });
+        let count = sessions.len();
+        for rs in sessions {
+            let weight = rs.image.meta.weight;
+            let id = host.install_recovered(rs)?;
+            let meta = SessionMeta {
+                env_seed: host.svc.driver(id).spec().seed,
+                weight,
+                ..SessionMeta::default()
+            };
+            let image = SessionImage::capture(id, host.svc.driver(id), meta)?;
+            let hs = host.store.as_mut().expect("durable host");
+            let ticket = hs.store.log_open(id, &image)?;
+            host.svc
+                .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
+        }
+        disk.sync();
+        Ok((host, disk, count))
+    }
+
+    /// Install one recovered session the way a live boot does: image →
+    /// driver, replay the trailing advances, install unsealed.
+    fn install_recovered(&mut self, rs: RecoveredSession) -> Result<u64> {
+        let id = rs.image.session;
+        let weight = rs.image.meta.weight;
+        let mut driver = rs.image.into_driver(crate::service::proto::make_env)?;
+        for action in rs.advances {
+            driver.advance(action)?;
+        }
+        self.svc.install(id, driver, weight);
+        Ok(id)
     }
 
     /// Admission control: refuse imports (and opens) past `cap` open
@@ -303,6 +385,10 @@ impl FakeHost {
             let ticket = hs
                 .store
                 .log_open_encoded(id, bytes.to_vec(), self.svc.driver(id).tree())?;
+            // The live install acks only once its `Open` is durable —
+            // the source forgets its copy on this ack, so an undurable
+            // ack could lose the session to a target crash.
+            hs.store.sync();
             self.svc
                 .journal_event(id, 0, 0, EventKind::WalAppend, ticket.seq());
         }
@@ -340,6 +426,9 @@ pub enum ScriptEvent {
 pub struct FakeHostNet {
     hosts: Vec<FakeHost>,
     link_up: Vec<bool>,
+    /// The primary→standby replication lane (severable independently of
+    /// the router↔host links).
+    standby_up: bool,
     /// Faults applied at the boundary *before* rpc `step` (1-based).
     events: BTreeMap<u64, Vec<ScriptEvent>>,
     /// Rpcs whose request lands but whose *reply* is lost — the effect
@@ -363,6 +452,7 @@ impl FakeHostNet {
         FakeHostNet {
             hosts,
             link_up: vec![true; n],
+            standby_up: true,
             events: BTreeMap::new(),
             drop_reply: BTreeSet::new(),
             delays: BTreeMap::new(),
@@ -398,6 +488,101 @@ impl FakeHostNet {
     pub fn heal_now(&mut self, host: usize) {
         self.link_up[host] = true;
         self.log.push(format!("t={} heal host={host}", self.clock));
+    }
+
+    /// Cut / restore the primary→standby replication lane.
+    pub fn sever_standby(&mut self) {
+        self.standby_up = false;
+        self.log.push(format!("t={} sever standby-lane", self.clock));
+    }
+
+    pub fn heal_standby(&mut self) {
+        self.standby_up = true;
+        self.log.push(format!("t={} heal standby-lane", self.clock));
+    }
+
+    pub fn standby_is_up(&self) -> bool {
+        self.standby_up
+    }
+
+    pub fn link_is_up(&self, host: usize) -> bool {
+        self.link_up[host]
+    }
+
+    pub fn host_count(&self) -> usize {
+        self.hosts.len()
+    }
+
+    /// The 1-based number the next rpc will get (for step-relative
+    /// fault scripts).
+    pub fn next_step(&self) -> u64 {
+        self.step + 1
+    }
+
+    /// Crash-replace: the host at `index` is dropped — losing every bit
+    /// of process state (seals, held replies, unsynced records) — and
+    /// the given rebuilt host takes its seat. The newcomer's clock
+    /// fast-forwards to the net's causal frontier so the merged
+    /// timeline stays ordered.
+    pub fn replace_host(&mut self, index: usize, mut host: FakeHost, why: &str) {
+        host.advance_clock_to(self.lamport);
+        self.log
+            .push(format!("t={} crash-replace host={index} ({why})", self.clock));
+        self.hosts[index] = host;
+    }
+
+    /// Ship one replication frame over the primary→standby lane: a
+    /// step-counted rpc like any other (scripted boundary faults and
+    /// reply drops apply), applied to the standby's stream state. A
+    /// severed lane loses the request; a dropped reply loses only the
+    /// ack — the frame landed and the sender must resume-handshake.
+    pub fn ship_standby(&mut self, standby: &mut StandbyShard, frame: &[u8]) -> Result<u64> {
+        self.boundary();
+        if !self.standby_up {
+            self.log.push(format!(
+                "t={} step={} repl bytes={} -> standby LOST(severed)",
+                self.clock,
+                self.step,
+                frame.len()
+            ));
+            return Err(anyhow::Error::new(HostUnreachable {
+                host: "standby".to_string(),
+            }));
+        }
+        self.log.push(format!(
+            "t={} step={} repl bytes={} -> standby",
+            self.clock,
+            self.step,
+            frame.len()
+        ));
+        let res = standby.apply(frame).map_err(anyhow::Error::from);
+        let reply_lost = self.drop_reply.remove(&self.step);
+        match res {
+            Ok(acked) => {
+                if reply_lost {
+                    self.log.push(format!(
+                        "t={} step={} reply repl acked={acked} REPLY-LOST",
+                        self.clock, self.step
+                    ));
+                    Err(anyhow::Error::new(HostUnreachable {
+                        host: "standby".to_string(),
+                    }))
+                } else {
+                    self.log.push(format!(
+                        "t={} step={} reply repl acked={acked}",
+                        self.clock, self.step
+                    ));
+                    Ok(acked)
+                }
+            }
+            Err(e) => {
+                self.log.push(format!(
+                    "t={} step={} reply repl err={e:#}",
+                    self.clock, self.step
+                ));
+                Err(e)
+            }
+        }
     }
 
     pub fn host(&self, index: usize) -> &FakeHost {
@@ -438,9 +623,9 @@ impl FakeHostNet {
         anyhow::Error::new(HostUnreachable { host: format!("fake-host-{host}") })
     }
 
-    /// Start rpc number `step + 1`: apply scripted boundary faults, then
-    /// either deliver (Ok) or drop (Err) the request.
-    fn begin_rpc(&mut self, host: usize, what: &str) -> Result<()> {
+    /// Advance to the next rpc boundary: step + clock tick, then apply
+    /// scripted faults and delays registered for this step.
+    fn boundary(&mut self) {
         self.step += 1;
         self.clock += 1;
         if let Some(events) = self.events.remove(&self.step) {
@@ -463,6 +648,12 @@ impl FakeHostNet {
             self.log
                 .push(format!("t={} step={} delay ticks={ticks}", self.clock, self.step));
         }
+    }
+
+    /// Start rpc number `step + 1`: apply scripted boundary faults, then
+    /// either deliver (Ok) or drop (Err) the request.
+    fn begin_rpc(&mut self, host: usize, what: &str) -> Result<()> {
+        self.boundary();
         if !self.link_up[host] {
             self.log.push(format!(
                 "t={} step={} {what} -> host={host} LOST(severed)",

@@ -51,6 +51,15 @@
 //!   [`SessionApi`](crate::service::SessionApi) seam so the wire
 //!   `trace` op reconstructs a cross-host think's timeline.
 //!
+//! * [`chaos`] — the seeded chaos scheduler on top of the fakenet: a
+//!   whole control-plane deployment (two durable hosts, a standby
+//!   stream, two lease-fenced routers) driven by a fault schedule that
+//!   is a pure function of a seed — sever/heal/delay/drop-reply/crash/
+//!   promote/lease-clash — with global invariants (no session lost, at
+//!   most one unsealed copy, `ΣO = 0`, survivor `best` equals an
+//!   unfaulted control) checked after every op, and automatic greedy
+//!   shrinking of a failing schedule to a minimal script.
+//!
 //! Every tier records the same typed [`crate::obs`] journal events the
 //! live scheduler does — admit/select/issue/done/backprop through
 //! WAL-append/fsync-durable/reply — stamped with virtual time, so span
@@ -65,12 +74,14 @@
 //!
 //! [`TaskSink`]: crate::mcts::wu_uct::driver::TaskSink
 
+pub mod chaos;
 pub mod durability;
 pub mod executor;
 pub mod fakenet;
 pub mod harness;
 pub mod latency;
 
+pub use chaos::{chaos_schedule, replay_chaos, run_chaos, shrink_chaos, ChaosOp, ChaosReport, Guards};
 pub use durability::{
     migrate_under_load, DurableScriptedService, MigrationRun, ScriptedDisk, ScriptedStore,
 };

@@ -17,6 +17,16 @@
 //!    proxies the full lifecycle, migrates across hosts, survives a
 //!    killed host (typed `HostUnreachable`, counted in metrics), and a
 //!    restarted router re-learns placement from health probes.
+//! 4. **Chaos** (`testkit::chaos`): the seeded scheduler sweeps whole
+//!    control-plane deployments — 200+ seeds, every op followed by the
+//!    global invariant check — plus a regression corpus of shrunk
+//!    schedules replayed against deliberately reverted guards, and a
+//!    crash-at-every-step matrix around lease handover and standby
+//!    promotion.
+//! 5. **Control plane over TCP**: two hot-hot routers sharing one lease
+//!    table (the loser of a placement race sees the typed `LeaseLost`),
+//!    and a replicated primary whose abrupt death promotes the standby
+//!    with every session intact, node for node.
 
 use wu_uct::env::garnet::Garnet;
 use wu_uct::mcts::SearchSpec;
@@ -25,10 +35,13 @@ use wu_uct::service::proto::{handle_line, image_from_hex};
 use wu_uct::service::scheduler::{ServiceConfig, SessionOptions};
 use wu_uct::service::shard::{ShardedConfig, ShardedService};
 use wu_uct::service::{
-    Busy, HostUnreachable, Router, RouterConfig, SessionApi, TcpServer,
+    Busy, HostUnreachable, LeaseLost, LeaseTable, Router, RouterConfig, SessionApi, TcpServer,
 };
 use wu_uct::store::migrate::{migrate_over, HandshakeOutcome, MigrationLink, Recovering};
-use wu_uct::testkit::{FakeHost, FakeHostNet, LatencyScript, ScriptEvent, ScriptedService};
+use wu_uct::testkit::{
+    chaos_schedule, replay_chaos, run_chaos, shrink_chaos, ChaosOp, FakeHost, FakeHostNet, Guards,
+    LatencyScript, ScriptEvent, ScriptedService,
+};
 
 fn spec(sims: u32, seed: u64) -> SearchSpec {
     SearchSpec {
@@ -570,4 +583,304 @@ fn a_restarted_router_relearns_placement_and_id_floor() {
     h2.close(sid).unwrap();
     drop(svc_a);
     drop(svc_b);
+}
+
+// ---------------------------------------------------------------------
+// 4. Chaos: seeded fault schedules over whole deployments
+// ---------------------------------------------------------------------
+
+/// The headline sweep: 200 seeds, each a full deployment (two durable
+/// hosts, standby stream, two lease-fenced routers) under a schedule of
+/// faults that is a pure function of the seed, with the global
+/// invariants — no session lost, at most one unsealed copy, `ΣO = 0`,
+/// survivor `best` equal to an unfaulted control — checked after every
+/// op. Zero violations, every seed.
+#[test]
+fn chaos_sweep_holds_every_invariant_across_two_hundred_seeds() {
+    for seed in 0..200u64 {
+        let r = run_chaos(seed, 10).unwrap();
+        assert!(
+            r.violations.is_empty(),
+            "seed {seed}: {:?}\nschedule: {:?}\nlog tail: {:#?}",
+            r.violations,
+            r.schedule,
+            &r.log[r.log.len().saturating_sub(16)..]
+        );
+    }
+}
+
+/// Schedules are derived from the seed alone — regenerating one later
+/// (to replay or shrink a failure) yields the same script.
+#[test]
+fn chaos_schedules_are_pure_functions_of_the_seed() {
+    for seed in [0u64, 7, 41, 1999] {
+        assert_eq!(chaos_schedule(seed, 40), chaos_schedule(seed, 40));
+    }
+    assert_ne!(chaos_schedule(1, 40), chaos_schedule(2, 40));
+    // A longer schedule extends the shorter one's prefix: lengths don't
+    // reshuffle history, so a failure can be re-cut at any length.
+    let long = chaos_schedule(3, 40);
+    assert_eq!(long[..12], chaos_schedule(3, 12)[..]);
+}
+
+/// The regression corpus: minimal failing schedules (found by the
+/// scheduler and shrunk with [`shrink_chaos`]) replayed against builds
+/// with the corresponding guard deliberately reverted. Each entry must
+/// reproduce the original failure shape with the guard off and pass
+/// clean with defenses on — proving the chaos harness actually detects
+/// the bug class each guard exists for.
+#[test]
+fn chaos_regression_corpus_replays_failure_shapes_against_reverted_guards() {
+    struct Entry {
+        name: &'static str,
+        seed: u64,
+        script: Vec<ChaosOp>,
+        reverted: Guards,
+        shape: &'static str,
+    }
+    let corpus = [
+        // A router stalls past its lease TTL mid-migration; without
+        // epoch fencing it applies the stale placement and the session
+        // ends up with two unsealed copies.
+        Entry {
+            name: "stale-lease-placement",
+            seed: 5,
+            script: vec![ChaosOp::LeaseClash { session: 1, router: 0 }],
+            reverted: Guards { lease_fencing: false, ..Guards::default() },
+            shape: "unsealed copies",
+        },
+        // A crash after a migrated-away session's WAL `Close` was lost
+        // with the unsynced suffix revives the forgotten copy; without
+        // the post-crash repair pass it stays live alongside the real
+        // one.
+        Entry {
+            name: "revived-copy-after-crash",
+            seed: 3,
+            script: vec![
+                ChaosOp::Migrate { session: 1, router: 0 },
+                ChaosOp::Crash { host: 0 },
+            ],
+            reverted: Guards { repair_after_crash: false, ..Guards::default() },
+            shape: "unsealed copies",
+        },
+    ];
+    for e in &corpus {
+        let broken = replay_chaos(e.seed, &e.script, e.reverted).unwrap();
+        assert!(
+            broken.violations.iter().any(|v| v.contains(e.shape)),
+            "{}: reverted guard must reproduce {:?}, got {:?}",
+            e.name,
+            e.shape,
+            broken.violations
+        );
+        let guarded = replay_chaos(e.seed, &e.script, Guards::default()).unwrap();
+        assert!(
+            guarded.violations.is_empty(),
+            "{}: guards on must pass clean, got {:?}",
+            e.name,
+            guarded.violations
+        );
+        // The corpus stores minimal scripts: shrinking is a fixpoint.
+        let min = shrink_chaos(e.seed, &e.script, e.reverted).unwrap();
+        assert_eq!(min, e.script, "{}: corpus entry should already be minimal", e.name);
+    }
+}
+
+/// The crash-at-every-step matrix: around the two delicate multi-step
+/// protocols — lease handover (seal, stall, takeover, unseal) and
+/// standby promotion (sync, ship, fold) — inject every fault kind at
+/// every schedule position. With all guards on, every combination must
+/// hold every invariant.
+#[test]
+fn chaos_crash_at_every_step_matrix_for_handover_and_promotion() {
+    let bases: [(&str, Vec<ChaosOp>); 2] = [
+        (
+            "lease-handover",
+            vec![
+                ChaosOp::Think { session: 1 },
+                ChaosOp::Sync { host: 0 },
+                ChaosOp::LeaseClash { session: 1, router: 0 },
+                ChaosOp::Think { session: 1 },
+            ],
+        ),
+        (
+            "standby-promotion",
+            vec![
+                ChaosOp::Think { session: 1 },
+                ChaosOp::Sync { host: 0 },
+                ChaosOp::ReplShip,
+                ChaosOp::Promote,
+                ChaosOp::Think { session: 1 },
+            ],
+        ),
+    ];
+    // Request lost (severed link), reply lost, host crash — on both
+    // hosts — plus the replication lane's own partition.
+    let faults = [
+        ChaosOp::Sever { host: 0 },
+        ChaosOp::Sever { host: 1 },
+        ChaosOp::DropNextReply,
+        ChaosOp::Crash { host: 0 },
+        ChaosOp::Crash { host: 1 },
+        ChaosOp::SeverStandby,
+    ];
+    for (name, base) in &bases {
+        for pos in 0..=base.len() {
+            for &fault in &faults {
+                let mut script = base.clone();
+                script.insert(pos, fault);
+                let r = replay_chaos(17, &script, Guards::default()).unwrap();
+                assert!(
+                    r.violations.is_empty(),
+                    "{name} pos={pos} fault={fault:?}: {:?}\nlog tail: {:#?}",
+                    r.violations,
+                    &r.log[r.log.len().saturating_sub(16)..]
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 5. Control plane over live TCP
+// ---------------------------------------------------------------------
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("wuuct-dist-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Count live (unsealed) copies of a session across the host fleet —
+/// the duplication/loss check for the hot-hot router test.
+fn live_copies(hosts: &[&ShardedService], sid: u64) -> usize {
+    hosts
+        .iter()
+        .flat_map(|svc| svc.handle().health().unwrap().sessions)
+        .filter(|s| s.id == sid && !s.sealed)
+        .count()
+}
+
+/// Two hot-hot routers over one host fleet, sharing one lease table:
+/// while a peer holds a session's lease, a racing router's migrate
+/// fails with the typed [`LeaseLost`] — and the session is neither
+/// duplicated nor lost. Once the lease frees, the move goes through.
+#[test]
+fn hot_hot_routers_share_leases_and_the_loser_sees_lease_lost() {
+    let (svc_a, _srv_a, addr_a) = host_service(None);
+    let (svc_b, _srv_b, addr_b) = host_service(None);
+    let leases = LeaseTable::new(60_000);
+    let cfg = |table: LeaseTable| RouterConfig {
+        leases: Some(table),
+        ..RouterConfig::new(vec![addr_a.clone(), addr_b.clone()])
+    };
+    let r1 = Router::start(cfg(leases.clone())).unwrap();
+    let r2 = Router::start(cfg(leases.clone())).unwrap();
+    let h1 = r1.handle();
+    let h2 = r2.handle();
+
+    // Both routers serve the same session hot-hot.
+    let sid = h1.open(Box::new(env(601)), spec(12, 601), opts(601)).unwrap();
+    assert!(h1.think(sid, 12).unwrap().quiescent);
+    assert!(h2.think(sid, 12).unwrap().quiescent, "peer router serves the same session");
+    let to = 1 - h1.host_of(sid);
+
+    // A stalled peer holds the session's lease (owner token no router
+    // uses, acquired far enough into the shared clock that it cannot
+    // have expired): the racing migrate must lose with the typed error,
+    // not block, not duplicate.
+    let stale = leases.acquire(sid, 0xDEAD_BEEF, 30_000).expect("free lease");
+    let e = h1.migrate(sid, to).expect_err("leased elsewhere");
+    assert!(e.downcast_ref::<LeaseLost>().is_some(), "expected LeaseLost, got: {e:#}");
+    assert_eq!(live_copies(&[&svc_a, &svc_b], sid), 1, "no duplicate, no loss");
+    assert!(h2.think(sid, 8).unwrap().quiescent, "the session kept serving throughout");
+
+    // Lease freed: the same move now completes under the peer router.
+    leases.release(stale);
+    let m = h2.migrate(sid, to).unwrap();
+    assert!(m.moved);
+    assert_eq!(live_copies(&[&svc_a, &svc_b], sid), 1, "exactly one copy after the move");
+    assert!(h2.think(sid, 8).unwrap().quiescent);
+    h2.close(sid).unwrap();
+    drop(svc_a);
+    drop(svc_b);
+}
+
+/// The standby-promotion acceptance: a durable primary streaming its
+/// WALs to a standby over real TCP (`--replicate` + `--repl-ack`) dies
+/// abruptly; promoting the standby folds the replicated streams into
+/// live sessions that match the primary's pre-death recommendations
+/// node for node, then serve on.
+#[test]
+fn killed_replicated_primary_promotes_standby_node_for_node() {
+    let dir = temp_dir("repl-promote");
+    // Standby: an ordinary sharded service behind real TCP — the
+    // primary's streamer threads speak the `replicate` wire op at it.
+    let standby = ShardedService::start(ShardedConfig {
+        shards: 2,
+        shard: ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..ServiceConfig::default()
+        },
+        ..ShardedConfig::default()
+    });
+    let standby_srv = TcpServer::bind(standby.handle(), "127.0.0.1:0").unwrap();
+    let standby_addr = standby_srv.local_addr().to_string();
+
+    let primary = ShardedService::start_durable(ShardedConfig {
+        shards: 2,
+        shard: ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..ServiceConfig::default()
+        },
+        data_dir: Some(dir.clone()),
+        snapshot_every: 1,
+        full_every: 4,
+        replicate: Some(standby_addr),
+        repl_ack: true,
+        ..ShardedConfig::default()
+    })
+    .unwrap();
+    let hp = primary.handle();
+    let mut control = Vec::new();
+    for i in 0..3u64 {
+        let seed = 700 + i;
+        let sid = hp.open(Box::new(env(seed)), spec(12, seed), opts(seed)).unwrap();
+        let t = hp.think(sid, 12).unwrap();
+        assert!(t.quiescent);
+        control.push((sid, hp.best_action(sid).unwrap()));
+    }
+    // `--repl-ack` is the determinism here: every reply above was held
+    // until the standby acked the records behind it, so the streams are
+    // caught up by construction — no polling, no sleeps.
+    let hs = standby.handle();
+    let status = hs.replicate_status().unwrap();
+    assert!(
+        status.iter().any(|s| s.acked > 0),
+        "standby must have acked replicated records: {status:?}"
+    );
+
+    // The primary dies with no orderly drain of its sessions — every
+    // record that matters is already on the standby (that is what the
+    // acks meant).
+    drop(primary);
+
+    let reply = hs.promote().unwrap();
+    assert_eq!(reply.sessions, 3, "every replicated session promoted");
+    for &(sid, best) in &control {
+        assert_eq!(
+            hs.best_action(sid).unwrap(),
+            best,
+            "session {sid}: the promoted tree must recommend exactly what the primary did"
+        );
+        let t = hs.think(sid, 8).unwrap();
+        assert!(t.quiescent, "session {sid} serves on after promotion");
+        assert_eq!(hs.close(sid).unwrap().unobserved, 0);
+    }
+    drop(standby_srv);
+    drop(standby);
+    let _ = std::fs::remove_dir_all(&dir);
 }

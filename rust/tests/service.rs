@@ -2,6 +2,12 @@
 //! headline acceptance criterion: ≥ 32 concurrent sessions over shared
 //! pools, each episode's return within noise of a dedicated-pool WU-UCT
 //! baseline on the same seeds, with per-session quiescence (`ΣO = 0`).
+//!
+//! Also the control plane's wire layer: `join` / `heartbeat` / `drain`
+//! round-trip against a live dynamic-fleet router over real TCP, and
+//! `replicate` / `repl_status` / `promote` stream a WAL frame onto a
+//! standby host — with torn, corrupt, and oversized frames rejected as
+//! typed error replies, never a dropped connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -10,9 +16,12 @@ use wu_uct::env::garnet::Garnet;
 use wu_uct::env::Env;
 use wu_uct::mcts::{Search, SearchSpec, WuUct};
 use wu_uct::service::json::Json;
+use wu_uct::service::proto::handle_line;
 use wu_uct::service::{
-    SearchService, ServiceConfig, SessionOptions, ShardedConfig, ShardedService, TcpServer,
+    HostClient, Router, RouterConfig, SearchService, ServiceConfig, SessionOptions, ShardedConfig,
+    ShardedService, TcpServer,
 };
+use wu_uct::store::{encode_frame, Record, MAX_FRAME_BYTES};
 use wu_uct::util::stats::{mean, std_dev};
 
 const SIMS: u32 = 24;
@@ -266,4 +275,223 @@ fn fair_scheduling_serves_unequal_budgets_concurrently() {
     let m = service.handle().metrics().unwrap();
     assert_eq!(m.sessions_closed, 5);
     assert_eq!(m.sims, 400 + 4 * 3 * 8);
+}
+
+// ---------------------------------------------------------------------
+// Control-plane wire layer
+// ---------------------------------------------------------------------
+
+/// Like [`request`], but expects an error reply and returns its message.
+fn request_err(reader: &mut BufReader<TcpStream>, writer: &mut TcpStream, line: &str) -> String {
+    writer.write_all(line.as_bytes()).unwrap();
+    writer.write_all(b"\n").unwrap();
+    writer.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let v = Json::parse(reply.trim()).expect("valid json reply");
+    assert_eq!(
+        v.get("ok").and_then(|o| o.as_bool()),
+        Some(false),
+        "expected an error reply on {line}: {reply}"
+    );
+    v.get("error").and_then(|e| e.as_str()).expect("error message").to_string()
+}
+
+fn shard_host() -> (ShardedService, TcpServer, String) {
+    let svc = ShardedService::start(ShardedConfig {
+        shards: 1,
+        shard: ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..ServiceConfig::default()
+        },
+        ..ShardedConfig::default()
+    });
+    let server = TcpServer::bind(svc.handle(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    (svc, server, addr)
+}
+
+/// The membership ops over real TCP against a dynamic-fleet router:
+/// `join` registers (then idempotently re-registers) a host with a
+/// monotone epoch, `heartbeat` distinguishes known from unknown members,
+/// and `drain` migrates the member's sessions away before forgetting it
+/// — all as line-protocol round-trips.
+#[test]
+fn membership_wire_ops_join_heartbeat_drain_round_trip() {
+    let (_svc_a, _srv_a, addr_a) = shard_host();
+    let (_svc_b, _srv_b, addr_b) = shard_host();
+    // Empty --hosts: the fleet is built entirely from join registrations.
+    // Members here do not run heartbeat loops, so keep the failover
+    // monitor from suspecting them mid-test.
+    let router = Router::start(RouterConfig {
+        suspect_after_ms: 600_000,
+        ..RouterConfig::new(Vec::new())
+    })
+    .unwrap();
+    let rsrv = TcpServer::bind(router.handle(), "127.0.0.1:0").unwrap();
+    let stream = TcpStream::connect(rsrv.local_addr().to_string()).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    let j = request(&mut reader, &mut writer, &format!(r#"{{"op":"join","addr":"{addr_a}"}}"#));
+    assert_eq!(j.get("outcome").and_then(|o| o.as_str()), Some("added"));
+    let epoch1 = j.get("epoch").unwrap().as_u64().unwrap();
+    assert!(epoch1 >= 1);
+
+    // Idempotent re-registration (a restarted host re-joins): same
+    // member, fresh epoch.
+    let j2 = request(&mut reader, &mut writer, &format!(r#"{{"op":"join","addr":"{addr_a}"}}"#));
+    assert_eq!(j2.get("outcome").and_then(|o| o.as_str()), Some("rejoined"));
+    assert!(j2.get("epoch").unwrap().as_u64().unwrap() > epoch1);
+
+    let hb = request(&mut reader, &mut writer, &format!(r#"{{"op":"heartbeat","addr":"{addr_a}"}}"#));
+    assert_eq!(hb.get("known").and_then(|k| k.as_bool()), Some(true));
+    let hb = request(
+        &mut reader,
+        &mut writer,
+        r#"{"op":"heartbeat","addr":"203.0.113.9:1"}"#,
+    );
+    assert_eq!(
+        hb.get("known").and_then(|k| k.as_bool()),
+        Some(false),
+        "an address that never joined must be told to register"
+    );
+
+    // A session served through the router lands on the only member…
+    let v = request(
+        &mut reader,
+        &mut writer,
+        r#"{"op":"open","env":"garnet","seed":4242,"sims":16,"rollout":8,"depth":12}"#,
+    );
+    let sid = v.get("session").unwrap().as_u64().unwrap();
+    let t = request(&mut reader, &mut writer, &format!(r#"{{"op":"think","session":{sid}}}"#));
+    assert_eq!(t.get("quiescent").unwrap().as_bool(), Some(true));
+
+    // …and drain evacuates it onto the newly joined second member, then
+    // forgets the drained host entirely.
+    request(&mut reader, &mut writer, &format!(r#"{{"op":"join","addr":"{addr_b}"}}"#));
+    let d = request(&mut reader, &mut writer, &format!(r#"{{"op":"drain","addr":"{addr_a}"}}"#));
+    assert_eq!(d.get("moved").unwrap().as_u64(), Some(1), "the session moved off the drained host");
+    let hb = request(&mut reader, &mut writer, &format!(r#"{{"op":"heartbeat","addr":"{addr_a}"}}"#));
+    assert_eq!(hb.get("known").and_then(|k| k.as_bool()), Some(false), "drained hosts are forgotten");
+
+    // The session survived the drain and keeps serving through the router.
+    let t = request(&mut reader, &mut writer, &format!(r#"{{"op":"think","session":{sid}}}"#));
+    assert_eq!(t.get("quiescent").unwrap().as_bool(), Some(true));
+    let c = request(&mut reader, &mut writer, &format!(r#"{{"op":"close","session":{sid}}}"#));
+    assert_eq!(c.get("unobserved").unwrap().as_u64(), Some(0));
+
+    // Malformed control requests are typed error replies.
+    let e = request_err(
+        &mut reader,
+        &mut writer,
+        &format!(r#"{{"op":"join","addr":"{addr_b}","bogus":1}}"#),
+    );
+    assert!(e.contains("unknown field"), "got: {e}");
+    let e = request_err(&mut reader, &mut writer, r#"{"op":"drain","addr":"203.0.113.9:1"}"#);
+    assert!(e.contains("never joined"), "got: {e}");
+}
+
+/// The replication ops over real TCP: a WAL frame carrying a real
+/// exported session image is shipped to a standby with `replicate`,
+/// acknowledged and visible in `repl_status`, and `promote` folds it
+/// into a live serving session.
+#[test]
+fn replicate_wire_ops_ship_a_frame_and_promote_the_standby() {
+    // Source: a session with real search state to export.
+    let seed = 905u64;
+    let source = ShardedService::start(ShardedConfig {
+        shards: 1,
+        shard: ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..ServiceConfig::default()
+        },
+        ..ShardedConfig::default()
+    });
+    let hs = source.handle();
+    let sid = hs
+        .open(
+            Box::new(garnet(seed)),
+            episode_spec(seed),
+            SessionOptions { env_seed: seed, ..SessionOptions::default() },
+        )
+        .unwrap();
+    let t = hs.think(sid, 16).unwrap();
+    assert!(t.quiescent);
+    let best = hs.best_action(sid).unwrap();
+    let image = hs.export_image(sid).unwrap();
+
+    // Standby: an ordinary shard host behind TCP; the `replicate` op is
+    // exactly what a primary's streamer threads send it.
+    let (standby, _ssrv, standby_addr) = shard_host();
+    let client = HostClient::new(standby_addr);
+    let frame = encode_frame(9, 1, &[Record::Open { session: sid, image }]);
+    assert_eq!(client.replicate(0, &frame).unwrap(), 1, "one record applied and acked");
+
+    let status = client.repl_status().unwrap();
+    assert_eq!(status.len(), 1);
+    assert_eq!((status[0].shard, status[0].start, status[0].acked), (0, 9, 1));
+
+    // A torn frame (checksum trailer cut) and a corrupted frame (payload
+    // byte flipped) are typed error replies — and do not disturb the
+    // already-acked stream.
+    let torn = &frame[..frame.len() - 3];
+    let e = client.replicate(0, torn).expect_err("torn frame must be rejected");
+    assert!(format!("{e:#}").contains("checksum"), "got: {e:#}");
+    let mut flipped = frame.clone();
+    flipped[10] ^= 0xFF;
+    let e = client.replicate(0, &flipped).expect_err("corrupt frame must be rejected");
+    assert!(format!("{e:#}").contains("checksum"), "got: {e:#}");
+    assert_eq!(client.repl_status().unwrap()[0].acked, 1, "bad frames acked nothing");
+
+    // Promotion folds the replicated stream into live sessions that
+    // agree with the source, node for node.
+    let p = client.promote().unwrap();
+    assert_eq!(p.sessions, 1);
+    let hp = standby.handle();
+    assert_eq!(hp.best_action(sid).unwrap(), best, "promoted tree matches the source's");
+    let t = hp.think(sid, 8).unwrap();
+    assert!(t.quiescent, "the promoted session serves on");
+    assert_eq!(hp.close(sid).unwrap().unobserved, 0);
+}
+
+/// Frame hygiene at the dispatcher itself: odd-length, non-hex, and
+/// oversized `replicate` payloads never reach the decoder — each is a
+/// typed error reply naming the defect.
+#[test]
+fn replicate_wire_rejects_malformed_and_oversized_frames() {
+    let svc = ShardedService::start(ShardedConfig {
+        shards: 1,
+        shard: ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 1,
+            ..ServiceConfig::default()
+        },
+        ..ShardedConfig::default()
+    });
+    let h = svc.handle();
+    let reply = |line: &str| {
+        let (out, _) = handle_line(&h, line);
+        let v = Json::parse(&out).unwrap();
+        assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false), "{line} must fail: {out}");
+        v.get("error").and_then(|e| e.as_str()).unwrap().to_string()
+    };
+
+    let e = reply(r#"{"op":"replicate","shard":0,"frame":"abc"}"#);
+    assert!(e.contains("odd hex length"), "got: {e}");
+    let e = reply(r#"{"op":"replicate","shard":0,"frame":"zz"}"#);
+    assert!(e.contains("non-hex byte"), "got: {e}");
+
+    // One hex byte past the frame cap (payload + 8-byte checksum): the
+    // dispatcher rejects it before decoding or allocating record state.
+    let oversized = "ab".repeat(MAX_FRAME_BYTES + 8 + 1);
+    let e = reply(&format!(r#"{{"op":"replicate","shard":0,"frame":"{oversized}"}}"#));
+    assert!(e.contains("oversized image frame"), "got: {e}");
+
+    // An empty frame is well-formed hex but torn below the checksum
+    // trailer: the decoder's typed truncation error surfaces.
+    let e = reply(r#"{"op":"replicate","shard":0,"frame":""}"#);
+    assert!(e.contains("truncated"), "got: {e}");
 }
