@@ -21,10 +21,18 @@
 //! (thinks/sims/fsyncs since the last scrape, plus the held-reply
 //! gauge and its high-water mark) — a live view of a long run.
 //!
+//! With `--inspect-every N`, the first client also samples its own
+//! session's `inspect` summary every N thinks and prints the one-line
+//! search-health view (tree size, ΣO, best action + flip count, root
+//! entropy) — the same summary `wu-uct top --session` renders, here
+//! interleaved with the load so you can watch one search evolve under
+//! fleet pressure.
+//!
 //! ```bash
 //! cargo run --release --example load_generator -- --clients 32 --sims 32
 //! cargo run --release --example load_generator -- --clients 32 --data-dir /tmp/lg-wal
 //! cargo run --release --example load_generator -- --addr 127.0.0.1:3771 --scrape-every 2
+//! cargo run --release --example load_generator -- --clients 8 --inspect-every 4
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
@@ -66,6 +74,12 @@ fn specs() -> Vec<OptSpec> {
             name: "scrape-every",
             help: "poll the metrics op every N seconds during a pass and print \
                    interval deltas (thinks/sims/fsyncs) + held-reply gauge (0 = off)",
+            default: Some("0"),
+        },
+        OptSpec {
+            name: "inspect-every",
+            help: "client 0 samples its session's inspect summary every N thinks \
+                   and prints the search-health line (0 = off)",
             default: Some("0"),
         },
         OptSpec { name: "help", help: "show usage", default: None },
@@ -136,8 +150,42 @@ struct EpisodeStats {
     retries: u64,
 }
 
-/// Drive one full episode over its own connection.
-fn run_episode(addr: &str, env: &str, seed: u64, sims: u64, max_steps: u64) -> Result<EpisodeStats> {
+/// Sample and print one session's `inspect` summary (best effort — a
+/// session racing toward close must not fail the episode).
+fn sample_inspect(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    sid: u64,
+    retries: &mut u64,
+) {
+    let line = format!(r#"{{"op":"inspect","session":{sid},"topk":3}}"#);
+    match request(reader, writer, &line, retries) {
+        Ok(s) => {
+            let u = |k: &str| s.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+            println!(
+                "[inspect] session {sid}: tree {} depth {} ΣO {} best a{} (flips {}) entropy {:.2}",
+                u("tree"),
+                u("depth"),
+                u("unobserved"),
+                u("best"),
+                u("flips"),
+                s.get("entropy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+        }
+        Err(e) => eprintln!("[inspect] session {sid}: {e:#}"),
+    }
+}
+
+/// Drive one full episode over its own connection. With `inspect_every
+/// > 0`, sample the session's search-health summary every N thinks.
+fn run_episode(
+    addr: &str,
+    env: &str,
+    seed: u64,
+    sims: u64,
+    max_steps: u64,
+    inspect_every: u64,
+) -> Result<EpisodeStats> {
     let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -161,6 +209,9 @@ fn run_episode(addr: &str, env: &str, seed: u64, sims: u64, max_steps: u64) -> R
             &mut stats.retries,
         )?;
         stats.thinks += 1;
+        if inspect_every > 0 && stats.thinks % inspect_every == 0 {
+            sample_inspect(&mut reader, &mut writer, sid, &mut stats.retries);
+        }
         let action = think
             .get("action")
             .and_then(|a| a.as_u64())
@@ -287,6 +338,7 @@ fn drive(
     sims: u64,
     steps: u64,
     scrape_every: u64,
+    inspect_every: u64,
 ) -> RunSummary {
     let stop = Arc::new(AtomicBool::new(false));
     let scraper =
@@ -297,8 +349,18 @@ fn drive(
             .map(|c| {
                 let addr = addr.to_string();
                 let env = env.to_string();
+                // One sampled session is plenty: client 0 carries the
+                // --inspect-every cadence, the rest are pure load.
+                let inspect = if c == 0 { inspect_every } else { 0 };
                 scope.spawn(move || {
-                    run_episode(&addr, &env, seed.wrapping_add(c as u64 * 7919), sims, steps)
+                    run_episode(
+                        &addr,
+                        &env,
+                        seed.wrapping_add(c as u64 * 7919),
+                        sims,
+                        steps,
+                        inspect,
+                    )
                 })
             })
             .collect();
@@ -403,12 +465,14 @@ fn main() -> Result<()> {
     let seed = args.u64("seed")?;
     let data_dir = args.str("data-dir")?.to_string();
     let scrape_every = args.u64("scrape-every")?;
+    let inspect_every = args.u64("inspect-every")?;
 
     // External server: one pass against it, whatever it is.
     if !args.str("addr")?.is_empty() {
         let addr = args.str("addr")?.to_string();
         println!("driving {clients} concurrent episodes of {env} against {addr} ...");
-        let sum = drive("external", &addr, clients, &env, seed, sims, steps, scrape_every);
+        let sum =
+            drive("external", &addr, clients, &env, seed, sims, steps, scrape_every, inspect_every);
         sum.print();
         return print_server_metrics("external", &addr);
     }
@@ -417,7 +481,17 @@ fn main() -> Result<()> {
     // pass on an identical service, reported side by side.
     println!("driving {clients} concurrent episodes of {env} in-process ...");
     let (mem_service, mem_server, mem_addr) = start_in_process(&args, seed, None)?;
-    let memory = drive("memory", &mem_addr, clients, &env, seed, sims, steps, scrape_every);
+    let memory = drive(
+        "memory",
+        &mem_addr,
+        clients,
+        &env,
+        seed,
+        sims,
+        steps,
+        scrape_every,
+        inspect_every,
+    );
     memory.print();
     print_server_metrics("memory", &mem_addr)?;
     drop((mem_service, mem_server));
@@ -428,7 +502,17 @@ fn main() -> Result<()> {
         // grow the dir without bound across runs).
         let _ = std::fs::remove_dir_all(&data_dir);
         let (service, server, addr) = start_in_process(&args, seed, Some(&data_dir))?;
-        let durable = drive("durable", &addr, clients, &env, seed, sims, steps, scrape_every);
+        let durable = drive(
+            "durable",
+            &addr,
+            clients,
+            &env,
+            seed,
+            sims,
+            steps,
+            scrape_every,
+            inspect_every,
+        );
         durable.print();
         print_server_metrics("durable", &addr)?;
         drop((service, server));

@@ -8,6 +8,10 @@
 //!                      with --hosts a:p,b:p it becomes a stateless router
 //!                      over remote shard hosts
 //! wu-uct shard-host    one session-hosting process for a router tier
+//! wu-uct flight        reconstruct a post-mortem timeline from a dead
+//!                      process's --flight-dir segments
+//! wu-uct top           live terminal dashboard polling a serve/router
+//!                      address (metrics + optional per-session inspect)
 //! wu-uct atari-table1  Table 1 (+ Fig. 10 with --relative)
 //! wu-uct atari-fig5    Fig. 5 worker sweep
 //! wu-uct treep-ablation  Table 5 TreeP-variant comparison
@@ -95,6 +99,28 @@ fn specs() -> Vec<OptSpec> {
             default: Some("0"),
         },
         OptSpec {
+            name: "journal-cap",
+            help: "serve: per-shard event-journal ring capacity (oldest evicted beyond)",
+            default: Some("4096"),
+        },
+        OptSpec {
+            name: "flight-dir",
+            help: "serve: spill journal events to checksummed segments under this dir; flight: the dir to replay",
+            default: Some(""),
+        },
+        OptSpec {
+            name: "session",
+            help: "flight/top: session id to focus on (0 = all / none)",
+            default: Some("0"),
+        },
+        OptSpec { name: "topk", help: "top: root actions shown per inspect", default: Some("5") },
+        OptSpec {
+            name: "ticks",
+            help: "top: refresh this many times then exit (0 = until killed)",
+            default: Some("0"),
+        },
+        OptSpec { name: "interval-ms", help: "top: refresh interval", default: Some("1000") },
+        OptSpec {
             name: "join",
             help: "shard-host: register with this router and heartbeat it (host:port)",
             default: Some(""),
@@ -162,6 +188,239 @@ fn emit(table: &wu_uct::util::table::Table, out: &str) -> Result<()> {
     Ok(())
 }
 
+/// `wu-uct flight`: reconstruct post-mortem timelines from the segment
+/// files a (possibly SIGKILLed) serve process spilled under
+/// `--flight-dir`. Events merge across the per-shard subdirectories
+/// into one `at_us`-ordered stream, then print grouped by session so an
+/// investigation reads each think's admit → durable → reply_sent arc
+/// top to bottom.
+fn run_flight(dir: &str, session_filter: u64) -> Result<()> {
+    let replay = wu_uct::obs::replay_flight_tree(std::path::Path::new(dir))?;
+    println!(
+        "flight replay: {} event(s) from {} segment(s) under {dir}{}",
+        replay.events.len(),
+        replay.segments,
+        if replay.torn_tail { " (torn final frame dropped — process died mid-write)" } else { "" }
+    );
+    let mut sessions: Vec<u64> = Vec::new();
+    for ev in &replay.events {
+        if !sessions.contains(&ev.session) {
+            sessions.push(ev.session);
+        }
+    }
+    if session_filter != 0 {
+        sessions.retain(|&s| s == session_filter);
+        if sessions.is_empty() {
+            bail!("flight: no events for session {session_filter} under {dir}");
+        }
+    }
+    for sid in sessions {
+        let events: Vec<_> = replay.events.iter().filter(|e| e.session == sid).collect();
+        let t0 = events.first().map(|e| e.at_us).unwrap_or(0);
+        println!("session {sid}: {} event(s)", events.len());
+        for ev in events {
+            println!(
+                "  +{:>10}us  task {:>4}  trace {:>4}  {:<15} arg={}",
+                ev.at_us.saturating_sub(t0),
+                ev.task,
+                ev.trace,
+                ev.kind.name(),
+                ev.arg
+            );
+        }
+    }
+    Ok(())
+}
+
+/// One line-protocol connection for `wu-uct top` (no retry machinery —
+/// the dashboard just reconnects on the next tick).
+struct TopClient {
+    writer: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl TopClient {
+    fn connect(addr: &str) -> Result<TopClient> {
+        let stream = std::net::TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(TopClient { writer, reader: std::io::BufReader::new(stream) })
+    }
+
+    /// One request/reply round trip. The reply may still be `ok: false`
+    /// (e.g. inspecting a session that just closed) — callers decide.
+    fn call(&mut self, line: &str) -> Result<wu_uct::service::json::Json> {
+        use std::io::{BufRead as _, Write as _};
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            bail!("connection closed");
+        }
+        Ok(wu_uct::service::json::Json::parse(reply.trim())?)
+    }
+}
+
+/// Build one dashboard frame: fleet aggregate, per-shard rows when the
+/// `metrics` reply carries them, and one session's `inspect` summary
+/// when `--session` names one.
+fn top_frame(
+    client: &mut TopClient,
+    addr: &str,
+    tick: usize,
+    session: u64,
+    topk: usize,
+) -> Result<Vec<String>> {
+    use wu_uct::service::json::Json;
+    use wu_uct::service::proto::{metrics_from_json, summary_from_json};
+    let v = client.call(r#"{"op":"metrics"}"#)?;
+    if v.get("ok").and_then(|b| b.as_bool()) == Some(false) {
+        bail!("metrics op failed: {}", v.get("error").and_then(|e| e.as_str()).unwrap_or("?"));
+    }
+    let m = metrics_from_json(&v);
+    let mut lines = vec![
+        format!("wu-uct top — {addr} — tick {tick}"),
+        format!(
+            "uptime {:.1}s | shards {} | hosts {} | sessions {} open ({} opened, {} closed, {} rejected)",
+            m.uptime.as_secs_f64(),
+            m.shards,
+            m.hosts,
+            m.sessions_open,
+            m.sessions_opened,
+            m.sessions_closed,
+            m.sessions_rejected,
+        ),
+        format!(
+            "thinks {} ({:.1}/s) | sims {} ({:.0}/s) | ΣO {} | best flips {} | journal dropped {}",
+            m.thinks, m.thinks_per_sec, m.sims, m.sims_per_sec, m.unobserved, m.best_flips, m.journal_dropped,
+        ),
+        format!(
+            "held {} (hwm {}, shed {}) | think ms p50 {:.1} p90 {:.1} p99 {:.1} | occ exp {:.0}% sim {:.0}%",
+            m.held_replies,
+            m.held_replies_hwm,
+            m.held_replies_shed,
+            m.think_ms_p50,
+            m.think_ms_p90,
+            m.think_ms_p99,
+            m.exp_occupancy * 100.0,
+            m.sim_occupancy * 100.0,
+        ),
+    ];
+    if let Some(Json::Arr(shards)) = v.get("per_shard") {
+        lines.push(format!(
+            "{:>5} {:>5} {:>8} {:>9} {:>5}",
+            "shard", "open", "sim-occ", "pend-sim", "held"
+        ));
+        for (i, s) in shards.iter().enumerate() {
+            let num = |k: &str| s.get(k).and_then(|x| x.as_u64()).unwrap_or(0);
+            let occ = s.get("sim_occupancy").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            lines.push(format!(
+                "{:>5} {:>5} {:>7.0}% {:>9} {:>5}",
+                i,
+                num("sessions_open"),
+                occ * 100.0,
+                num("pending_simulations"),
+                num("held_replies"),
+            ));
+        }
+    }
+    if session != 0 {
+        let v = client.call(&format!(r#"{{"op":"inspect","session":{session},"topk":{topk}}}"#))?;
+        if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+            let s = summary_from_json(&v)?;
+            lines.push(format!(
+                "session {}: tree {} depth {} ΣO {} best a{} flips {} entropy {:.2}{}",
+                s.session,
+                s.tree_size,
+                s.max_depth,
+                s.unobserved,
+                s.best_action,
+                s.best_flips,
+                s.root_entropy,
+                if s.thinking { " (thinking)" } else { "" },
+            ));
+            for a in &s.top {
+                let score = if a.score.is_finite() {
+                    format!("{:.3}", a.score)
+                } else {
+                    "+inf".to_string() // unvisited: null on the wire
+                };
+                lines.push(format!(
+                    "  a{:<4} N {:>6} O {:>4} Q {:>8.3} score {score}",
+                    a.action, a.n, a.o, a.q,
+                ));
+            }
+        } else {
+            let err = v.get("error").and_then(|e| e.as_str()).unwrap_or("?");
+            lines.push(format!("session {session}: {err}"));
+        }
+    }
+    Ok(lines)
+}
+
+/// Redraw only the lines that changed since the previous frame: move
+/// the cursor back to the frame top, rewrite dirty lines in place, step
+/// over clean ones. Keeps a 1 Hz dashboard flicker-free without any
+/// terminfo machinery.
+fn draw_frame(prev: &mut Vec<String>, next: Vec<String>) {
+    use std::io::Write as _;
+    let out = std::io::stdout();
+    let mut w = out.lock();
+    if !prev.is_empty() {
+        let _ = write!(w, "\x1b[{}A", prev.len());
+    }
+    for (i, line) in next.iter().enumerate() {
+        if prev.get(i) == Some(line) {
+            let _ = write!(w, "\x1b[1B"); // unchanged: step over it
+        } else {
+            let _ = writeln!(w, "\r\x1b[2K{line}");
+        }
+    }
+    // A shrinking frame leaves stale lines below: blank them, then park
+    // the cursor right after the new frame's last line.
+    if prev.len() > next.len() {
+        for _ in next.len()..prev.len() {
+            let _ = writeln!(w, "\r\x1b[2K");
+        }
+        let _ = write!(w, "\x1b[{}A", prev.len() - next.len());
+    }
+    let _ = w.flush();
+    *prev = next;
+}
+
+/// `wu-uct top`: poll a serve/router address and diff-render the frame
+/// until killed (or for `--ticks` refreshes when bounded, e.g. in CI).
+fn run_top(addr: &str, ticks: usize, interval_ms: u64, session: u64, topk: usize) -> Result<()> {
+    let mut prev: Vec<String> = Vec::new();
+    let mut client: Option<TopClient> = None;
+    let mut tick = 0usize;
+    loop {
+        tick += 1;
+        let frame = (|| -> Result<Vec<String>> {
+            if client.is_none() {
+                client = Some(TopClient::connect(addr)?);
+            }
+            top_frame(client.as_mut().unwrap(), addr, tick, session, topk)
+        })();
+        let frame = match frame {
+            Ok(lines) => lines,
+            Err(e) => {
+                client = None; // reconnect on the next tick
+                vec![
+                    format!("wu-uct top — {addr} — tick {tick}"),
+                    format!("unreachable: {e:#} (reconnecting)"),
+                ]
+            }
+        };
+        draw_frame(&mut prev, frame);
+        if ticks > 0 && tick >= ticks {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval_ms));
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(argv.iter().map(|s| s.as_str()), &specs())?;
@@ -171,8 +430,9 @@ fn main() -> Result<()> {
             "{}",
             usage("wu-uct", "WU-UCT parallel MCTS (ICLR 2020) reproduction", &specs())
         );
-        println!("commands: search, play, serve, shard-host, atari-table1, atari-fig5,");
-        println!("          treep-ablation, sweep-speedup, breakdown, passrate, policy-eval");
+        println!("commands: search, play, serve, shard-host, flight, top, atari-table1,");
+        println!("          atari-fig5, treep-ablation, sweep-speedup, breakdown, passrate,");
+        println!("          policy-eval");
         return Ok(());
     }
     let scale = scale_from(&args)?;
@@ -230,6 +490,8 @@ fn main() -> Result<()> {
             let hosts_arg = args.str("hosts")?.to_string();
             let replicate = args.str("replicate")?.to_string();
             let max_held = args.usize("max-held")?;
+            let journal_cap = args.usize("journal-cap")?.max(1);
+            let flight_dir = args.str("flight-dir")?.to_string();
             let join_router = args.str("join")?.to_string();
             if command == "serve" && !hosts_arg.is_empty() {
                 // Router tier: no local shards, no local sessions — just
@@ -268,7 +530,7 @@ fn main() -> Result<()> {
                         "auto-rebalance: moving sessions across hosts above {rebalance_skew}x mean occupancy"
                     );
                 }
-                println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, join, heartbeat, drain, ping");
+                println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, inspect, join, heartbeat, drain, ping");
                 server.join(); // foreground until killed
                 return Ok(());
             }
@@ -282,6 +544,7 @@ fn main() -> Result<()> {
                     simulation_workers: sim_workers,
                     seed: scale.seed,
                     max_held: (max_held > 0).then_some(max_held),
+                    journal_cap,
                     ..ServiceConfig::default()
                 },
                 max_sessions_per_shard: (max_sessions > 0).then_some(max_sessions),
@@ -295,6 +558,7 @@ fn main() -> Result<()> {
                 }),
                 replicate: (!replicate.is_empty()).then(|| replicate.clone()),
                 repl_ack: args.flag("repl-ack"),
+                flight_dir: (!flight_dir.is_empty()).then(|| flight_dir.clone().into()),
                 ..ShardedConfig::default()
             })?;
             let server = TcpServer::bind(service.handle(), args.str("addr")?)?;
@@ -328,6 +592,12 @@ fn main() -> Result<()> {
             }
             if max_held > 0 {
                 println!("held-reply cap: {max_held} parked replies/shard, then forced flush");
+            }
+            if !flight_dir.is_empty() {
+                println!(
+                    "flight recorder: journal spills to {flight_dir}/shard-*/ (replay \
+                     post-mortem with `wu-uct flight --flight-dir {flight_dir}`)"
+                );
             }
             // Dynamic membership: register with the router and keep
             // heartbeating; `known:false` (router restarted) re-joins.
@@ -374,8 +644,24 @@ fn main() -> Result<()> {
             if rebalance_skew > 0.0 {
                 println!("auto-rebalance: moving sessions above {rebalance_skew}x mean occupancy");
             }
-            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, replicate, repl_status, promote, ping");
+            println!("protocol: one JSON object per line; ops: open, think, advance, best, close, migrate, export, import, install, health, metrics, trace, inspect, replicate, repl_status, promote, ping");
             server.join(); // foreground until killed
+        }
+        "flight" => {
+            let dir = args.str("flight-dir")?.to_string();
+            if dir.is_empty() {
+                bail!("flight: --flight-dir is required (the dead process's spill directory)");
+            }
+            run_flight(&dir, args.u64("session")?)?;
+        }
+        "top" => {
+            run_top(
+                args.str("addr")?,
+                args.usize("ticks")?,
+                args.u64("interval-ms")?.max(50),
+                args.u64("session")?,
+                args.usize("topk")?.max(1),
+            )?;
         }
         "atari-table1" => {
             let games = games_from(&args, &atari::GAMES);

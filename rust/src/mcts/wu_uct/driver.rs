@@ -73,6 +73,11 @@ pub struct SearchDriver {
     completed: u32,
     /// T_max for the current think.
     budget: u32,
+    /// Running `ΣO` over the whole tree, maintained incrementally by the
+    /// Eq. 5/Eq. 6 path walks so introspection reads it in O(1) instead
+    /// of scanning every node ([`Tree::total_unobserved`] stays the
+    /// ground truth the property suite checks this against).
+    unobserved: u64,
     master: Breakdown,
     began: Instant,
 }
@@ -91,6 +96,7 @@ impl SearchDriver {
             issued: 0,
             completed: 0,
             budget: 0,
+            unobserved: 0,
             master: Breakdown::new(),
             began: Instant::now(),
         }
@@ -122,6 +128,14 @@ impl SearchDriver {
     /// In-flight task count.
     pub fn outstanding(&self) -> usize {
         self.tasks.outstanding()
+    }
+
+    /// Running `ΣO` over the whole tree — the unobserved-sample mass
+    /// currently in flight (Eq. 5 increments it along the selected path,
+    /// Eq. 6 and [`SearchDriver::fold_in_flight`] drain it). O(1); the
+    /// property suite pins it to [`Tree::total_unobserved`].
+    pub fn unobserved(&self) -> u64 {
+        self.unobserved
     }
 
     pub fn completed(&self) -> u32 {
@@ -182,6 +196,7 @@ impl SearchDriver {
             issued: 0,
             completed: 0,
             budget: 0,
+            unobserved: 0,
             master: Breakdown::new(),
             began: Instant::now(),
         }
@@ -203,10 +218,13 @@ impl SearchDriver {
         for (id, node, kind) in drained {
             match kind {
                 TaskKind::Simulate => {
+                    let mut undone = 0u64;
                     self.tree.for_path_to_root(node, |n| {
                         debug_assert!(n.o > 0, "fold without matching incomplete update");
                         n.o -= 1;
+                        undone += 1;
                     });
+                    self.unobserved -= undone;
                 }
                 TaskKind::Expand { action } => {
                     self.tree.node_mut(node).untried.push(action);
@@ -302,7 +320,8 @@ impl SearchDriver {
                 let bp = Instant::now();
                 let (node, kind) = self.tasks.resolve(res.task_id);
                 debug_assert_eq!(kind, TaskKind::Simulate);
-                Self::complete_update(&mut self.tree, node, res.ret, self.spec.gamma);
+                let drained = Self::complete_update(&mut self.tree, node, res.ret, self.spec.gamma);
+                self.unobserved -= drained;
                 self.master.add(Phase::Backpropagation, bp.elapsed());
                 self.completed += 1;
             }
@@ -314,6 +333,7 @@ impl SearchDriver {
     pub fn assert_quiescent(&self) {
         debug_assert!(self.tasks.is_empty(), "tasks outstanding at quiescence");
         debug_assert_eq!(self.tree.total_unobserved(), 0, "O must drain to zero");
+        debug_assert_eq!(self.unobserved, 0, "running ΣO counter must drain with the tree");
     }
 
     /// Execute `action` on the live environment and carry the on-path
@@ -343,16 +363,24 @@ impl SearchDriver {
         Ok(AdvanceOutcome { step, reused, retained })
     }
 
-    /// Eq. 5: `O_s += 1` along the path to the root.
-    fn incomplete_update(tree: &mut Tree, node: NodeId) {
-        tree.for_path_to_root(node, |n| n.o += 1);
+    /// Eq. 5: `O_s += 1` along the path to the root. Returns the number
+    /// of nodes touched so the caller can maintain the running `ΣO`.
+    fn incomplete_update(tree: &mut Tree, node: NodeId) -> u64 {
+        let mut touched = 0u64;
+        tree.for_path_to_root(node, |n| {
+            n.o += 1;
+            touched += 1;
+        });
+        touched
     }
 
     /// Eq. 6 + Eq. 3: `O -= 1; N += 1; V ← mean` along the path, folding
     /// edge rewards into the return exactly like sequential backprop.
-    fn complete_update(tree: &mut Tree, node: NodeId, sim_return: f64, gamma: f64) {
+    /// Returns the number of nodes touched (the `ΣO` drained).
+    fn complete_update(tree: &mut Tree, node: NodeId, sim_return: f64, gamma: f64) -> u64 {
         let mut ret = sim_return;
         let mut cur = node;
+        let mut touched = 1u64;
         {
             let n = tree.node_mut(cur);
             debug_assert!(n.o > 0, "complete update without matching incomplete");
@@ -366,7 +394,9 @@ impl SearchDriver {
             p.o -= 1;
             p.observe(ret);
             cur = parent;
+            touched += 1;
         }
+        touched
     }
 
     /// Restore a fresh emulator clone to `node`'s snapshot.
@@ -385,9 +415,10 @@ impl SearchDriver {
     /// Terminal nodes short-circuit with a zero-return complete update;
     /// returns whether a pool task was actually queued.
     fn queue_simulation(&mut self, node: NodeId, sink: &mut dyn TaskSink) -> bool {
-        Self::incomplete_update(&mut self.tree, node);
+        self.unobserved += Self::incomplete_update(&mut self.tree, node);
         if self.tree.node(node).terminal {
-            Self::complete_update(&mut self.tree, node, 0.0, self.spec.gamma);
+            let drained = Self::complete_update(&mut self.tree, node, 0.0, self.spec.gamma);
+            self.unobserved -= drained;
             self.completed += 1;
             return false;
         }

@@ -1,0 +1,490 @@
+//! Crash-surviving flight recorder: the journal ring, spilled to disk.
+//!
+//! The in-memory [`Journal`](crate::obs::Journal) evaporates with the
+//! process — exactly when a timeline is most needed. A
+//! [`FlightRecorder`] tees every journal event into checksummed,
+//! rotated segment files (`flight-00000001.log`, …) under a per-shard
+//! directory, using the WAL's framing and torn-tail discipline
+//! (`store/wal.rs`): 10-byte `magic | version` header, then frames of
+//! `length (4 LE) | FNV-1a-64 checksum (8 LE) | body`. Three deliberate
+//! differences from the WAL:
+//!
+//! * **no fsync on the hot path** — events hit the page cache only. A
+//!   SIGKILL (the case post-mortems care about) loses nothing because
+//!   the kernel owns the cache; only a machine crash loses the unsynced
+//!   tail, and a flight recorder is diagnostics, not durability;
+//! * **bounded retention** — segments rotate at a byte budget and the
+//!   oldest are deleted past a segment cap, so the recorder can run
+//!   forever without eating the disk;
+//! * **failure never poisons serving** — a write error marks the
+//!   recorder dead (with one stderr line) and every later
+//!   [`FlightRecorder::record`] is a no-op. Losing diagnostics must not
+//!   take down search.
+//!
+//! Every boot starts a fresh segment (nothing appends after a possibly
+//! torn tail). Readers tolerate a torn final frame in the *last*
+//! segment only; torn data anywhere else is a hard typed
+//! [`Error`](crate::store::Error) — the same ladder as the WAL
+//! (BadMagic / UnsupportedVersion / ChecksumMismatch / Truncated).
+//! [`replay_flight`] reconstructs one directory's event stream;
+//! [`replay_flight_tree`] merges a whole `--flight-dir` of per-shard
+//! subdirectories into a single `at_us`-ordered timeline — the
+//! `wu-uct flight` subcommand's engine.
+
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::obs::journal::{Event, EventKind};
+use crate::store::{checksum, Error};
+
+const FLIGHT_MAGIC: [u8; 8] = *b"WUCTFLT1";
+const FLIGHT_VERSION: u16 = 1;
+const SEGMENT_HEADER: usize = FLIGHT_MAGIC.len() + 2;
+const FRAME_HEADER: usize = 4 + 8;
+/// Encoded event body: kind tag (1) + five u64 fields.
+const EVENT_BYTES: usize = 1 + 5 * 8;
+
+/// Retention knobs for one shard's flight log.
+#[derive(Debug, Clone)]
+pub struct FlightConfig {
+    /// Segment directory (created if absent).
+    pub dir: PathBuf,
+    /// Rotate to a new segment once the live one exceeds this size.
+    pub max_segment_bytes: u64,
+    /// Keep at most this many segments; the oldest are deleted at
+    /// rotation (≥ 2 so rotation never deletes the live segment).
+    pub max_segments: usize,
+}
+
+impl FlightConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> FlightConfig {
+        FlightConfig { dir: dir.into(), max_segment_bytes: 4 << 20, max_segments: 8 }
+    }
+}
+
+/// Append handle over one shard's flight-log directory.
+pub struct FlightRecorder {
+    cfg: FlightConfig,
+    file: File,
+    seg_index: u64,
+    seg_bytes: u64,
+    events: u64,
+    dead: bool,
+}
+
+impl FlightRecorder {
+    /// Open (creating the directory if needed) and start a fresh
+    /// segment after any existing ones — the recorder never appends to
+    /// a previous boot's possibly-torn tail.
+    pub fn open(cfg: FlightConfig) -> Result<FlightRecorder, Error> {
+        fs::create_dir_all(&cfg.dir)?;
+        let seg_index = list_flight_segments(&cfg.dir)?
+            .last()
+            .map(|&(i, _)| i + 1)
+            .unwrap_or(1);
+        let file = start_flight_segment(&cfg.dir, seg_index)?;
+        Ok(FlightRecorder {
+            cfg,
+            file,
+            seg_index,
+            seg_bytes: SEGMENT_HEADER as u64,
+            events: 0,
+            dead: false,
+        })
+    }
+
+    /// Append one event. Never fails the caller: a write error prints
+    /// one diagnostic and permanently disables the recorder.
+    pub fn record(&mut self, event: &Event) {
+        if self.dead {
+            return;
+        }
+        if let Err(e) = self.write_event(event) {
+            eprintln!("flight recorder disabled ({}): {e}", self.cfg.dir.display());
+            self.dead = true;
+        }
+    }
+
+    fn write_event(&mut self, event: &Event) -> Result<(), Error> {
+        let body = encode_event(event);
+        let mut frame = [0u8; FRAME_HEADER + EVENT_BYTES];
+        frame[..4].copy_from_slice(&(EVENT_BYTES as u32).to_le_bytes());
+        frame[4..12].copy_from_slice(&checksum(&body).to_le_bytes());
+        frame[12..].copy_from_slice(&body);
+        self.file.write_all(&frame)?;
+        self.seg_bytes += frame.len() as u64;
+        self.events += 1;
+        if self.seg_bytes >= self.cfg.max_segment_bytes.max(1) {
+            self.rotate()?;
+        }
+        Ok(())
+    }
+
+    fn rotate(&mut self) -> Result<(), Error> {
+        self.seg_index += 1;
+        self.file = start_flight_segment(&self.cfg.dir, self.seg_index)?;
+        self.seg_bytes = SEGMENT_HEADER as u64;
+        // Retention: delete the oldest segments beyond the cap.
+        let segments = list_flight_segments(&self.cfg.dir)?;
+        let keep = self.cfg.max_segments.max(2);
+        if segments.len() > keep {
+            for (_, path) in &segments[..segments.len() - keep] {
+                fs::remove_file(path)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Events written since open (this boot only).
+    pub fn events_recorded(&self) -> u64 {
+        self.events
+    }
+
+    /// A write failed and the recorder went inert.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    pub fn segment_index(&self) -> u64 {
+        self.seg_index
+    }
+}
+
+fn encode_event(e: &Event) -> [u8; EVENT_BYTES] {
+    let kind = EventKind::all()
+        .iter()
+        .position(|&k| k == e.kind)
+        .expect("every EventKind is in all()") as u8;
+    let mut body = [0u8; EVENT_BYTES];
+    body[0] = kind;
+    body[1..9].copy_from_slice(&e.at_us.to_le_bytes());
+    body[9..17].copy_from_slice(&e.session.to_le_bytes());
+    body[17..25].copy_from_slice(&e.task.to_le_bytes());
+    body[25..33].copy_from_slice(&e.trace.to_le_bytes());
+    body[33..41].copy_from_slice(&e.arg.to_le_bytes());
+    body
+}
+
+fn decode_event(body: &[u8]) -> Result<Event, Error> {
+    if body.len() != EVENT_BYTES {
+        return Err(Error::Corrupt { what: "flight event length" });
+    }
+    let kind = *EventKind::all()
+        .get(body[0] as usize)
+        .ok_or(Error::Corrupt { what: "unknown flight event kind" })?;
+    let u64_at = |at: usize| u64::from_le_bytes(body[at..at + 8].try_into().expect("8 bytes"));
+    Ok(Event {
+        kind,
+        at_us: u64_at(1),
+        session: u64_at(9),
+        task: u64_at(17),
+        trace: u64_at(25),
+        arg: u64_at(33),
+    })
+}
+
+fn flight_segment_path(dir: &Path, index: u64) -> PathBuf {
+    dir.join(format!("flight-{index:08}.log"))
+}
+
+/// Existing flight segments, sorted by index.
+pub fn list_flight_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>, Error> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(stem) = name.strip_prefix("flight-").and_then(|s| s.strip_suffix(".log"))
+        else {
+            continue;
+        };
+        if let Ok(index) = stem.parse::<u64>() {
+            out.push((index, entry.path()));
+        }
+    }
+    out.sort_unstable_by_key(|&(i, _)| i);
+    Ok(out)
+}
+
+fn start_flight_segment(dir: &Path, index: u64) -> Result<File, Error> {
+    let mut file = File::create(flight_segment_path(dir, index))?;
+    file.write_all(&FLIGHT_MAGIC)?;
+    file.write_all(&FLIGHT_VERSION.to_le_bytes())?;
+    Ok(file)
+}
+
+/// Contents of one flight segment.
+pub struct FlightSegmentRead {
+    pub events: Vec<Event>,
+    /// Byte offset of the first incomplete frame, when the segment was
+    /// cut off mid-write. `None` for a cleanly-ended segment.
+    pub torn_at: Option<u64>,
+}
+
+/// Read one segment. With `tolerate_tail` (the final segment of a
+/// killed process), a frame cut off mid-write — or a final frame whose
+/// checksum fails at exactly end-of-file — is discarded and its offset
+/// reported; otherwise truncation is a hard typed error. Checksum
+/// mismatches with frames after them and future versions are always
+/// hard errors (same ladder as the WAL).
+pub fn read_flight_segment(path: &Path, tolerate_tail: bool) -> Result<FlightSegmentRead, Error> {
+    let data = fs::read(path)?;
+    if data.len() < SEGMENT_HEADER {
+        if tolerate_tail {
+            return Ok(FlightSegmentRead { events: Vec::new(), torn_at: Some(0) });
+        }
+        return Err(Error::Truncated { what: "flight segment header" });
+    }
+    if data[..FLIGHT_MAGIC.len()] != FLIGHT_MAGIC {
+        return Err(Error::BadMagic);
+    }
+    let version = u16::from_le_bytes([data[8], data[9]]);
+    if version > FLIGHT_VERSION {
+        return Err(Error::UnsupportedVersion { found: version, supported: FLIGHT_VERSION });
+    }
+    let mut events = Vec::new();
+    let mut pos = SEGMENT_HEADER;
+    while pos < data.len() {
+        if data.len() - pos < FRAME_HEADER {
+            if tolerate_tail {
+                return Ok(FlightSegmentRead { events, torn_at: Some(pos as u64) });
+            }
+            return Err(Error::Truncated { what: "flight frame header" });
+        }
+        let len =
+            u32::from_le_bytes(data[pos..pos + 4].try_into().expect("4 bytes")) as usize;
+        let stored =
+            u64::from_le_bytes(data[pos + 4..pos + 12].try_into().expect("8 bytes"));
+        let body_at = pos + FRAME_HEADER;
+        if data.len() - body_at < len {
+            if tolerate_tail {
+                return Ok(FlightSegmentRead { events, torn_at: Some(pos as u64) });
+            }
+            return Err(Error::Truncated { what: "flight frame body" });
+        }
+        let body = &data[body_at..body_at + len];
+        let computed = checksum(body);
+        if stored != computed {
+            if tolerate_tail && body_at + len == data.len() {
+                return Ok(FlightSegmentRead { events, torn_at: Some(pos as u64) });
+            }
+            return Err(Error::ChecksumMismatch { expected: stored, found: computed });
+        }
+        events.push(decode_event(body)?);
+        pos = body_at + len;
+    }
+    Ok(FlightSegmentRead { events, torn_at: None })
+}
+
+/// Everything replay learned from one flight-log directory.
+#[derive(Debug, Default)]
+pub struct FlightReplay {
+    /// Every recovered event in write order (within a directory) or
+    /// merged `at_us` order (across directories).
+    pub events: Vec<Event>,
+    /// Some segment ended mid-frame — the normal signature of a kill.
+    pub torn_tail: bool,
+    /// Segment files read.
+    pub segments: usize,
+}
+
+/// Replay one directory of flight segments in index order. A torn tail
+/// is tolerated only in the final segment; earlier damage is typed.
+pub fn replay_flight(dir: &Path) -> Result<FlightReplay, Error> {
+    let segments = list_flight_segments(dir)?;
+    let mut out = FlightReplay::default();
+    let last = segments.len().saturating_sub(1);
+    for (i, (_, path)) in segments.iter().enumerate() {
+        let read = read_flight_segment(path, i == last)?;
+        if read.torn_at.is_some() {
+            out.torn_tail = true;
+        }
+        out.events.extend(read.events);
+        out.segments += 1;
+    }
+    Ok(out)
+}
+
+/// Replay a whole `--flight-dir`: if the directory holds segments
+/// directly it reads them; otherwise every subdirectory containing
+/// flight segments (the per-shard `shard-N/` layout the service
+/// creates) is replayed and the streams are merged by `at_us` (stable,
+/// so same-timestamp events keep their per-shard write order).
+pub fn replay_flight_tree(dir: &Path) -> Result<FlightReplay, Error> {
+    if !list_flight_segments(dir)?.is_empty() {
+        return replay_flight(dir);
+    }
+    let mut subdirs: Vec<PathBuf> = fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_dir())
+        .collect();
+    subdirs.sort_unstable();
+    let mut out = FlightReplay::default();
+    for sub in subdirs {
+        let sub_replay = replay_flight(&sub)?;
+        out.torn_tail |= sub_replay.torn_tail;
+        out.segments += sub_replay.segments;
+        out.events.extend(sub_replay.events);
+    }
+    out.events.sort_by_key(|e| e.at_us);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("wuuct-flight-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn ev(at_us: u64, session: u64, kind: EventKind, arg: u64) -> Event {
+        Event { at_us, session, task: 3, trace: 9, kind, arg }
+    }
+
+    #[test]
+    fn event_encoding_roundtrips_every_kind() {
+        for (i, &kind) in EventKind::all().iter().enumerate() {
+            let e = ev(i as u64 * 17, 42, kind, i as u64);
+            assert_eq!(decode_event(&encode_event(&e)).unwrap(), e);
+        }
+        assert!(matches!(
+            decode_event(&[0u8; EVENT_BYTES - 1]),
+            Err(Error::Corrupt { .. })
+        ));
+        let mut bad = encode_event(&ev(1, 1, EventKind::Admit, 0));
+        bad[0] = 200; // no such kind
+        assert!(matches!(decode_event(&bad), Err(Error::Corrupt { .. })));
+    }
+
+    #[test]
+    fn record_and_replay_roundtrip() {
+        let dir = temp_dir("roundtrip");
+        let mut rec = FlightRecorder::open(FlightConfig::new(&dir)).unwrap();
+        let events: Vec<Event> = (0..10)
+            .map(|i| ev(i * 100, 7, EventKind::all()[i as usize % 5], i))
+            .collect();
+        for e in &events {
+            rec.record(e);
+        }
+        assert_eq!(rec.events_recorded(), 10);
+        assert!(!rec.is_dead());
+        drop(rec);
+        let replay = replay_flight(&dir).unwrap();
+        assert_eq!(replay.events, events);
+        assert!(!replay.torn_tail);
+        assert_eq!(replay.segments, 1);
+    }
+
+    #[test]
+    fn each_boot_starts_a_fresh_segment() {
+        let dir = temp_dir("fresh-boot");
+        for boot in 0..3u64 {
+            let mut rec = FlightRecorder::open(FlightConfig::new(&dir)).unwrap();
+            assert_eq!(rec.segment_index(), boot + 1);
+            rec.record(&ev(boot, 1, EventKind::Admit, 0));
+        }
+        let replay = replay_flight(&dir).unwrap();
+        assert_eq!(replay.segments, 3);
+        assert_eq!(replay.events.len(), 3);
+    }
+
+    #[test]
+    fn rotation_bounds_segment_count() {
+        let dir = temp_dir("rotation");
+        let mut cfg = FlightConfig::new(&dir);
+        cfg.max_segment_bytes = 64; // ~1 event per segment
+        cfg.max_segments = 3;
+        let mut rec = FlightRecorder::open(cfg).unwrap();
+        for i in 0..20 {
+            rec.record(&ev(i, 1, EventKind::Select, i));
+        }
+        let segments = list_flight_segments(&dir).unwrap();
+        assert!(segments.len() <= 3, "retention cap holds: {}", segments.len());
+        // The newest events survive; replay still parses cleanly.
+        let replay = replay_flight(&dir).unwrap();
+        assert!(!replay.events.is_empty());
+        assert_eq!(replay.events.last().unwrap().at_us, 19);
+    }
+
+    #[test]
+    fn torn_tail_in_final_segment_is_tolerated_and_reported() {
+        let dir = temp_dir("torn");
+        let mut rec = FlightRecorder::open(FlightConfig::new(&dir)).unwrap();
+        for i in 0..4 {
+            rec.record(&ev(i, 2, EventKind::SimDone, i));
+        }
+        drop(rec);
+        let path = flight_segment_path(&dir, 1);
+        let len = fs::metadata(&path).unwrap().len();
+        fs::OpenOptions::new()
+            .write(true)
+            .open(&path)
+            .unwrap()
+            .set_len(len - 5)
+            .unwrap();
+        let replay = replay_flight(&dir).unwrap();
+        assert!(replay.torn_tail);
+        assert_eq!(replay.events.len(), 3, "intact prefix survives");
+        // The same damage in a non-final segment is a hard error.
+        assert!(read_flight_segment(&path, false).is_err());
+    }
+
+    #[test]
+    fn mid_segment_corruption_is_a_typed_error() {
+        let dir = temp_dir("corrupt");
+        let mut rec = FlightRecorder::open(FlightConfig::new(&dir)).unwrap();
+        for i in 0..4 {
+            rec.record(&ev(i, 2, EventKind::Backprop, i));
+        }
+        drop(rec);
+        let path = flight_segment_path(&dir, 1);
+        let mut data = fs::read(&path).unwrap();
+        // Flip a byte in the first frame's body: a later complete frame
+        // follows, so this can never be mistaken for a torn tail.
+        data[SEGMENT_HEADER + FRAME_HEADER + 2] ^= 0xFF;
+        fs::write(&path, &data).unwrap();
+        assert!(matches!(
+            read_flight_segment(&path, true),
+            Err(Error::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn bad_magic_and_future_version_are_refused() {
+        let dir = temp_dir("magic");
+        fs::create_dir_all(&dir).unwrap();
+        let path = flight_segment_path(&dir, 1);
+        fs::write(&path, b"NOTFLT99......").unwrap();
+        assert!(matches!(read_flight_segment(&path, true), Err(Error::BadMagic)));
+        let mut future = Vec::new();
+        future.extend_from_slice(&FLIGHT_MAGIC);
+        future.extend_from_slice(&99u16.to_le_bytes());
+        fs::write(&path, &future).unwrap();
+        assert!(matches!(
+            read_flight_segment(&path, false),
+            Err(Error::UnsupportedVersion { found: 99, .. })
+        ));
+    }
+
+    #[test]
+    fn tree_replay_merges_per_shard_subdirs_by_timestamp() {
+        let root = temp_dir("tree");
+        for (shard, base) in [(0u32, 0u64), (1, 50)] {
+            let sub = root.join(format!("shard-{shard}"));
+            let mut rec = FlightRecorder::open(FlightConfig::new(&sub)).unwrap();
+            for i in 0..3 {
+                rec.record(&ev(base + i * 100, shard as u64, EventKind::Admit, i));
+            }
+        }
+        let replay = replay_flight_tree(&root).unwrap();
+        assert_eq!(replay.segments, 2);
+        let times: Vec<u64> = replay.events.iter().map(|e| e.at_us).collect();
+        assert_eq!(times, vec![0, 50, 100, 150, 200, 250], "merged by at_us");
+    }
+}

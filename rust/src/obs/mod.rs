@@ -26,9 +26,27 @@
 //! Timestamps are microseconds since an arbitrary per-process origin
 //! (the scheduler's start instant in production, the virtual clock in
 //! the testkit), which keeps deterministic tests byte-stable.
+//!
+//! Two further layers build on those primitives:
+//!
+//! - [`flight`]: a crash-surviving spill of the journal ring to
+//!   checksummed, rotated segment files (the WAL's framing without its
+//!   fsyncs) — `wu-uct flight` reconstructs post-mortem timelines from
+//!   them after a SIGKILL.
+//! - [`search`]: the `inspect` op's per-session [`SearchSummary`] —
+//!   WU-UCT's own health statistics (ΣO in flight, root visit entropy,
+//!   top-k modified-UCT score terms, best-action flips) computed in
+//!   O(top-k + depth) from maintained counters, never an image export.
 
+pub mod flight;
 pub mod hist;
 pub mod journal;
+pub mod search;
 
+pub use flight::{
+    list_flight_segments, read_flight_segment, replay_flight, replay_flight_tree,
+    FlightConfig, FlightRecorder, FlightReplay, FlightSegmentRead,
+};
 pub use hist::{bucket_upper_ms, Histogram, BUCKET_RATIO, NUM_BUCKETS};
 pub use journal::{Event, EventKind, Journal};
+pub use search::{ActionStat, SearchSummary};

@@ -1,0 +1,217 @@
+//! Per-session search-health summaries — the `inspect` op's payload.
+//!
+//! WU-UCT's contribution is a set of tree statistics (the unobserved
+//! counts `O_s` of Eqs. 4–6); this module surfaces them without paying
+//! for an image export. A [`SearchSummary`] is computed on the owning
+//! scheduler thread from the live tree: tree size and `max_depth` are
+//! O(1) reads (the arena maintains both), `ΣO` comes from the driver's
+//! running counter (maintained by the Eq. 5/6 path walks, pinned to
+//! [`Tree::total_unobserved`] by the property suite), and the top-k
+//! root actions plus the visit-count entropy cost O(root children).
+//! Nothing here walks the whole tree or touches an env snapshot.
+
+use crate::tree::{policy, Tree};
+
+/// One root action's WU-UCT statistics: the observed visits `N`, the
+/// in-flight unobserved count `O`, the mean value `Q`, and the modified
+/// UCT decomposition (Eq. 4) — `score = q + explore` where the
+/// exploration bonus uses the `N + O` totals. Unvisited actions
+/// (`n + o == 0`) score `+inf`; the wire codec carries that as `null`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ActionStat {
+    pub action: usize,
+    pub n: u32,
+    pub o: u32,
+    pub q: f64,
+    /// Exploration bonus `β √(2 ln(N_root+O_root) / (N+O))`.
+    pub explore: f64,
+    /// Full modified-UCT score `q + explore`.
+    pub score: f64,
+}
+
+/// Compact health summary of one session's search, computed at think
+/// boundaries (and safely mid-think: the scheduler thread owns the
+/// tree, so a summary is a consistent snapshot between ticks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSummary {
+    pub session: u64,
+    /// Total nodes in the arena.
+    pub tree_size: u64,
+    /// Depth of the deepest node below the current root.
+    pub max_depth: u32,
+    /// `ΣO` over the whole tree — unobserved samples in flight right
+    /// now. Exactly 0 at every think boundary (the paper's invariant).
+    pub unobserved: u64,
+    /// Whether a think is currently in flight.
+    pub thinking: bool,
+    /// Root totals `N + O`.
+    pub root_visits: u64,
+    /// Mean value at the root.
+    pub root_value: f64,
+    /// Shannon entropy (nats) of the root children's `(N+O)` visit
+    /// distribution: 0 = all mass on one action, `ln(children)` =
+    /// uniform. A healthy search starts high and concentrates.
+    pub root_entropy: f64,
+    /// The action the search currently recommends.
+    pub best_action: usize,
+    /// How many times the recommendation flipped across completed
+    /// thinks — a cheap convergence signal (a flapping best action means
+    /// the budget is too small for the position).
+    pub best_flips: u64,
+    /// Top-k root actions by `N + O`, descending (ties by action id).
+    pub top: Vec<ActionStat>,
+}
+
+impl SearchSummary {
+    /// Build a summary from the live tree. `unobserved` is the driver's
+    /// running `ΣO` counter; `beta` is the session spec's exploration
+    /// constant (the score terms must match what selection computes).
+    ///
+    /// Cost: O(root children + top-k), never a tree walk or an export.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compute(
+        session: u64,
+        tree: &Tree,
+        beta: f64,
+        unobserved: u64,
+        thinking: bool,
+        best_flips: u64,
+        topk: usize,
+    ) -> SearchSummary {
+        let root = tree.node(Tree::ROOT);
+        let root_total = root.total_visits();
+        let rows = tree.root_child_full_stats();
+        // Visit-count entropy over the children's N+O mass.
+        let mass: u64 = rows.iter().map(|&(_, n, o, _)| (n + o) as u64).sum();
+        let root_entropy = if mass == 0 {
+            0.0
+        } else {
+            rows.iter()
+                .filter(|&&(_, n, o, _)| n + o > 0)
+                .map(|&(_, n, o, _)| {
+                    let p = (n + o) as f64 / mass as f64;
+                    -p * p.ln()
+                })
+                .sum()
+        };
+        let mut top: Vec<ActionStat> = rows
+            .iter()
+            .map(|&(action, n, o, q)| {
+                let score = policy::ucb_score(q, root_total, n + o, beta);
+                ActionStat { action, n, o, q, explore: score - q, score }
+            })
+            .collect();
+        top.sort_unstable_by(|a, b| {
+            let ta = a.n as u64 + a.o as u64;
+            let tb = b.n as u64 + b.o as u64;
+            tb.cmp(&ta).then(a.action.cmp(&b.action))
+        });
+        top.truncate(topk);
+        SearchSummary {
+            session,
+            tree_size: tree.len() as u64,
+            max_depth: tree.max_depth(),
+            unobserved,
+            thinking,
+            root_visits: root_total as u64,
+            root_value: root.v,
+            root_entropy,
+            best_action: tree.best_root_action().unwrap_or(0),
+            best_flips,
+            top,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn searched_tree() -> Tree {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        let b = t.add_child(Tree::ROOT, 1);
+        let c = t.add_child(Tree::ROOT, 2);
+        let d = t.add_child(a, 4);
+        t.node_mut(a).n = 6;
+        t.node_mut(a).v = 0.5;
+        t.node_mut(b).n = 3;
+        t.node_mut(b).v = 0.2;
+        t.node_mut(c).o = 2; // in flight
+        t.node_mut(d).n = 2;
+        t.node_mut(Tree::ROOT).n = 9;
+        t.node_mut(Tree::ROOT).o = 2;
+        t.node_mut(Tree::ROOT).v = 0.4;
+        t
+    }
+
+    #[test]
+    fn summary_reads_root_statistics_without_a_tree_walk() {
+        let t = searched_tree();
+        let s = SearchSummary::compute(7, &t, 1.0, 2, true, 3, 2);
+        assert_eq!(s.session, 7);
+        assert_eq!(s.tree_size, 5);
+        assert_eq!(s.max_depth, 2);
+        assert_eq!(s.unobserved, 2);
+        assert!(s.thinking);
+        assert_eq!(s.root_visits, 11);
+        assert_eq!(s.best_flips, 3);
+        assert_eq!(s.best_action, 0, "action 0 has the most observed visits");
+        // Top-2 by N+O: action 0 (6), action 1 (3).
+        assert_eq!(s.top.len(), 2);
+        assert_eq!(s.top[0].action, 0);
+        assert_eq!((s.top[0].n, s.top[0].o), (6, 0));
+        assert_eq!(s.top[1].action, 1);
+        // Score decomposition matches the selection policy exactly.
+        let want = policy::ucb_score(0.5, 11, 6, 1.0);
+        assert!((s.top[0].score - want).abs() < 1e-12);
+        assert!((s.top[0].q + s.top[0].explore - s.top[0].score).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_is_zero_when_concentrated_and_ln_k_when_uniform() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 0);
+        t.add_child(Tree::ROOT, 1);
+        t.node_mut(a).n = 10;
+        t.node_mut(Tree::ROOT).n = 10;
+        let s = SearchSummary::compute(1, &t, 1.0, 0, false, 0, 8);
+        assert_eq!(s.root_entropy, 0.0, "all mass on one action");
+
+        let mut u = Tree::new();
+        for action in 0..4 {
+            let id = u.add_child(Tree::ROOT, action);
+            u.node_mut(id).n = 5;
+        }
+        u.node_mut(Tree::ROOT).n = 20;
+        let s = SearchSummary::compute(1, &u, 1.0, 0, false, 0, 8);
+        assert!((s.root_entropy - 4.0f64.ln()).abs() < 1e-12, "uniform over 4 arms");
+    }
+
+    #[test]
+    fn unvisited_actions_score_infinity_and_fresh_trees_summarize() {
+        let mut t = Tree::new();
+        t.add_child(Tree::ROOT, 0);
+        let s = SearchSummary::compute(1, &t, 1.0, 0, false, 0, 4);
+        assert_eq!(s.root_visits, 0);
+        assert_eq!(s.root_entropy, 0.0);
+        assert_eq!(s.top.len(), 1);
+        assert!(s.top[0].score.is_infinite());
+        let bare = SearchSummary::compute(2, &Tree::new(), 1.0, 0, false, 0, 4);
+        assert_eq!(bare.tree_size, 1);
+        assert!(bare.top.is_empty());
+    }
+
+    #[test]
+    fn topk_orders_by_total_visits_including_inflight_o() {
+        let t = searched_tree();
+        let s = SearchSummary::compute(7, &t, 1.0, 2, true, 0, 3);
+        // action 2 has N=0 but O=2 — in-flight mass still ranks it above
+        // nothing, below actions 0 (6) and 1 (3).
+        assert_eq!(
+            s.top.iter().map(|r| r.action).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert_eq!((s.top[2].n, s.top[2].o), (0, 2));
+    }
+}

@@ -29,7 +29,9 @@ use crate::mcts::common::SearchSpec;
 use crate::obs::Event;
 use crate::service::json::Json;
 use crate::service::metrics::ServiceMetrics;
-use crate::service::proto::{event_from_json, image_from_hex, image_to_hex, metrics_from_json};
+use crate::service::proto::{
+    event_from_json, image_from_hex, image_to_hex, metrics_from_json, summary_from_json,
+};
 use crate::service::lease::LeaseLost;
 use crate::service::scheduler::{
     AdvanceReply, Busy, CloseReply, SessionOptions, SessionStat, ThinkReply,
@@ -378,6 +380,16 @@ impl HostClient {
             .with_context(|| format!("host {} sent a malformed trace event", self.addr))
     }
 
+    /// Read a remote session's search-health summary (idempotent, so a
+    /// lost reply retries) — the wire `inspect` op, computed on the
+    /// owning shard without exporting the image.
+    pub fn inspect(&self, session: u64, topk: usize) -> Result<crate::obs::SearchSummary> {
+        let line = format!(r#"{{"op":"inspect","session":{session},"topk":{topk}}}"#);
+        let v = self.ok_call(&line, session)?;
+        summary_from_json(&v)
+            .with_context(|| format!("host {} sent a malformed inspect reply", self.addr))
+    }
+
     /// Announce a shard host to a router (idempotent; safe to retry).
     /// Returns the membership epoch the router granted.
     pub fn join(&self, addr: &str, standby: Option<&str>) -> Result<u64> {
@@ -602,6 +614,12 @@ mod tests {
         let admit = events.iter().find(|e| e.kind == EventKind::Admit).unwrap();
         assert_eq!(admit.trace, 0xFEED);
         assert!(events.iter().any(|e| e.kind == EventKind::ReplySent));
+        // `inspect` travels the same wire: a quiescent post-think summary.
+        let s = client.inspect(sid, 3).unwrap();
+        assert_eq!(s.session, sid);
+        assert_eq!(s.unobserved, 0, "ΣO drains before the think reply");
+        assert!(s.tree_size > 1);
+        assert!(s.top.len() <= 3);
         client.close(sid).unwrap();
     }
 

@@ -89,6 +89,17 @@ pub struct ServiceMetrics {
     /// Remote-host calls that failed with the typed `HostUnreachable`
     /// error (router tier only).
     pub host_unreachable: u64,
+    /// Journal events evicted by the ring bound (`--journal-cap`); a
+    /// nonzero delta during an investigation means the ring is too small
+    /// for the traffic and timelines may have holes.
+    pub journal_dropped: u64,
+    /// ΣO across every open session at snapshot time — unobserved
+    /// samples in flight right now (the paper's Eq. 5 counts). Exactly 0
+    /// when no thinks are running.
+    pub unobserved: u64,
+    /// Best-action flips across completed thinks, summed over sessions
+    /// (see the `inspect` op's per-session counter).
+    pub best_flips: u64,
     /// Episodes retired per second (closed sessions / uptime).
     pub sessions_per_sec: f64,
     pub thinks_per_sec: f64,
@@ -170,6 +181,9 @@ impl ServiceMetrics {
             total.held_replies_shed += m.held_replies_shed;
             total.hosts += m.hosts;
             total.host_unreachable += m.host_unreachable;
+            total.journal_dropped += m.journal_dropped;
+            total.unobserved += m.unobserved;
+            total.best_flips += m.best_flips;
             total.think_hist.merge(&m.think_hist);
             total.expand_hist.merge(&m.expand_hist);
             total.sim_hist.merge(&m.sim_hist);
@@ -252,6 +266,9 @@ impl ServiceMetrics {
         gauge("wuuct_held_replies_shed_total", "replies shed to synchronous flushes at the cap", self.held_replies_shed as f64);
         gauge("wuuct_hosts", "remote shard hosts", self.hosts as f64);
         gauge("wuuct_host_unreachable_total", "calls failed host-unreachable", self.host_unreachable as f64);
+        gauge("wuuct_journal_dropped_total", "journal events evicted by the ring bound", self.journal_dropped as f64);
+        gauge("wuuct_unobserved", "unobserved samples in flight (sum of O over all trees)", self.unobserved as f64);
+        gauge("wuuct_best_flips_total", "best-action flips across completed thinks", self.best_flips as f64);
         gauge("wuuct_sessions_per_sec", "episodes retired per second", self.sessions_per_sec);
         gauge("wuuct_thinks_per_sec", "thinks per second", self.thinks_per_sec);
         gauge("wuuct_sims_per_sec", "simulations per second", self.sims_per_sec);

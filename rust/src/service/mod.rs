@@ -218,6 +218,15 @@ pub trait SessionApi: Clone + Send + 'static {
         Ok(Vec::new())
     }
 
+    /// Per-session search-health summary (the wire `inspect` op): tree
+    /// size/depth, ΣO in flight, root visit entropy and the top-k root
+    /// actions with their modified-UCT score terms — computed on the
+    /// owning shard in O(top-k + root children), never an image export,
+    /// and safe mid-think. Default: not a session-hosting deployment.
+    fn inspect(&self, _session: u64, _topk: usize) -> Result<crate::obs::SearchSummary> {
+        anyhow::bail!("inspect requires a session-hosting deployment")
+    }
+
     /// Per-shard snapshots; a single snapshot for an unsharded service.
     fn shard_metrics(&self) -> Result<Vec<ServiceMetrics>> {
         self.metrics().map(|m| vec![m])
@@ -353,6 +362,10 @@ impl SessionApi for ServiceHandle {
 
     fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
         ServiceHandle::trace(self, session, limit)
+    }
+
+    fn inspect(&self, session: u64, topk: usize) -> Result<crate::obs::SearchSummary> {
+        ServiceHandle::inspect(self, session, topk)
     }
 
     fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {

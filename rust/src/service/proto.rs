@@ -26,7 +26,13 @@
 //! arrays when sharded / routed), `trace` (the event journal:
 //! `{"op":"trace","session":7,"limit":256}` →
 //! `{"ok":true,"events":[{"at_us":..,"kind":"admit",..},..]}`; omit
-//! `session` for the fleet-wide tail) and `ping`. A `think` may carry
+//! `session` for the fleet-wide tail), `inspect` (a compact search-health
+//! summary computed on the owning shard in O(top-k + root children),
+//! never an image export: `{"op":"inspect","session":7,"topk":5}` →
+//! `{"ok":true,"tree":412,"depth":9,"unobserved":3,"entropy":1.2,
+//! "top":[{"action":2,"n":40,"o":1,"q":0.4,"explore":0.2,"score":0.6},..]}`
+//! — unvisited actions score `+inf`, carried as JSON `null`) and
+//! `ping`. A `think` may carry
 //! `"trace":<id>` — the owning shard stamps the id on every journal
 //! event of that think, and routers forward it across processes, so one
 //! cross-host think reconstructs as one timeline.
@@ -104,7 +110,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::env::tapgame::{Level, TapGame};
 use crate::env::{atari, garnet::Garnet, Env};
 use crate::mcts::common::SearchSpec;
-use crate::obs::{Event, EventKind, Histogram};
+use crate::obs::{ActionStat, Event, EventKind, Histogram, SearchSummary};
 use crate::service::json::{obj, Json};
 use crate::service::lease::LeaseLost;
 use crate::service::metrics::ServiceMetrics;
@@ -674,6 +680,14 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 LineEffect::None,
             ))
         }
+        "inspect" => {
+            reject_unknown_fields(&req, op, &["session", "topk"])?;
+            let sid = required_u64(&req, "session")?;
+            let topk = field_u64(&req, "topk")?.unwrap_or(DEFAULT_INSPECT_TOPK as u64);
+            let topk = (topk as usize).min(MAX_INSPECT_TOPK);
+            let s = handle.inspect(sid, topk)?;
+            Ok((summary_json(&s), LineEffect::None))
+        }
         other => bail!("unknown op {other:?}"),
     }
 }
@@ -684,6 +698,100 @@ pub const DEFAULT_TRACE_LIMIT: usize = 256;
 /// Hard cap on events per `trace` reply — the reply is one wire line, so
 /// a confused `limit` must not make a host render without bound.
 pub const MAX_TRACE_EVENTS: usize = 65_536;
+
+/// Root actions an `inspect` op returns when the request names no `topk`.
+pub const DEFAULT_INSPECT_TOPK: usize = 5;
+
+/// Hard cap on `inspect` rows — the summary is meant to stay one compact
+/// wire line even against a branchy root and a confused `topk`.
+pub const MAX_INSPECT_TOPK: usize = 64;
+
+/// Render a search summary as the `inspect` response object. `score` and
+/// `explore` are `+inf` for unvisited actions; JSON has no infinity, so
+/// the renderer emits `null` and [`summary_from_json`] maps it back.
+pub fn summary_json(s: &SearchSummary) -> Json {
+    obj([
+        ("ok", Json::Bool(true)),
+        ("session", Json::Num(s.session as f64)),
+        ("tree", Json::Num(s.tree_size as f64)),
+        ("depth", Json::Num(s.max_depth as f64)),
+        ("unobserved", Json::Num(s.unobserved as f64)),
+        ("thinking", Json::Bool(s.thinking)),
+        ("root_visits", Json::Num(s.root_visits as f64)),
+        ("root_value", Json::Num(s.root_value)),
+        ("entropy", Json::Num(s.root_entropy)),
+        ("best", Json::Num(s.best_action as f64)),
+        ("flips", Json::Num(s.best_flips as f64)),
+        (
+            "top",
+            Json::Arr(
+                s.top
+                    .iter()
+                    .map(|a| {
+                        obj([
+                            ("action", Json::Num(a.action as f64)),
+                            ("n", Json::Num(a.n as f64)),
+                            ("o", Json::Num(a.o as f64)),
+                            ("q", Json::Num(a.q)),
+                            ("explore", Json::Num(a.explore)),
+                            ("score", Json::Num(a.score)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse an `inspect` reply — the inverse of [`summary_json`], used by
+/// the router's pooled host clients and `wu-uct top`. A `null` (or
+/// absent) `score`/`explore` reads back as `+inf`, matching what the
+/// renderer had to drop.
+pub fn summary_from_json(v: &Json) -> Result<SearchSummary> {
+    let int = |key: &str| -> Result<u64> {
+        v.get(key)
+            .and_then(|x| x.as_u64())
+            .ok_or_else(|| anyhow!("inspect reply missing integer field {key:?}"))
+    };
+    let num = |key: &str| v.get(key).and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let inf_num = |row: &Json, key: &str| -> f64 {
+        match row.get(key) {
+            Some(Json::Null) | None => f64::INFINITY,
+            Some(x) => x.as_f64().unwrap_or(f64::INFINITY),
+        }
+    };
+    let mut top = Vec::new();
+    if let Some(Json::Arr(rows)) = v.get("top") {
+        for row in rows {
+            let r_int = |key: &str| -> Result<u64> {
+                row.get(key)
+                    .and_then(|x| x.as_u64())
+                    .ok_or_else(|| anyhow!("inspect row missing integer field {key:?}"))
+            };
+            top.push(ActionStat {
+                action: r_int("action")? as usize,
+                n: r_int("n")? as u32,
+                o: r_int("o")? as u32,
+                q: row.get("q").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                explore: inf_num(row, "explore"),
+                score: inf_num(row, "score"),
+            });
+        }
+    }
+    Ok(SearchSummary {
+        session: int("session")?,
+        tree_size: int("tree")?,
+        max_depth: int("depth")? as u32,
+        unobserved: int("unobserved")?,
+        thinking: v.get("thinking").and_then(|x| x.as_bool()).unwrap_or(false),
+        root_visits: int("root_visits")?,
+        root_value: num("root_value"),
+        root_entropy: num("entropy"),
+        best_action: int("best")? as usize,
+        best_flips: int("flips")?,
+        top,
+    })
+}
 
 /// Render one journal event for the `trace` reply. All ids travel as
 /// JSON numbers, exact below 2^53 — task ids (shard tag in the top 16
@@ -749,6 +857,9 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("snapshot_bytes_delta", Json::Num(m.snapshot_bytes_delta as f64)),
         ("hosts", Json::Num(m.hosts as f64)),
         ("host_unreachable", Json::Num(m.host_unreachable as f64)),
+        ("journal_dropped", Json::Num(m.journal_dropped as f64)),
+        ("unobserved", Json::Num(m.unobserved as f64)),
+        ("best_flips", Json::Num(m.best_flips as f64)),
         ("sessions_per_sec", Json::Num(m.sessions_per_sec)),
         ("thinks_per_sec", Json::Num(m.thinks_per_sec)),
         ("sims_per_sec", Json::Num(m.sims_per_sec)),
@@ -845,6 +956,9 @@ pub fn metrics_from_json(v: &Json) -> ServiceMetrics {
         snapshot_bytes_delta: int("snapshot_bytes_delta"),
         hosts: int("hosts") as usize,
         host_unreachable: int("host_unreachable"),
+        journal_dropped: int("journal_dropped"),
+        unobserved: int("unobserved"),
+        best_flips: int("best_flips"),
         sessions_per_sec: num("sessions_per_sec"),
         thinks_per_sec: num("thinks_per_sec"),
         sims_per_sec: num("sims_per_sec"),
@@ -1116,6 +1230,7 @@ mod tests {
             (r#"{"op":"install","session":1,"landed":true,"force":1}"#, "force"),
             (r#"{"op":"health","probe":true}"#, "probe"),
             (r#"{"op":"trace","session":1,"kind":"admit"}"#, "kind"),
+            (r#"{"op":"inspect","session":1,"top":3}"#, "top"),
             (r#"{"op":"think","session":1,"trace_id":7}"#, "trace_id"),
             (r#"{"op":"join","addr":"h:1","epoch":2}"#, "epoch"),
             (r#"{"op":"heartbeat","addr":"h:1","standby":"s:1"}"#, "standby"),
@@ -1429,6 +1544,83 @@ mod tests {
         assert!(raw.len() <= 2);
         let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
         ok_field(&line);
+    }
+
+    #[test]
+    fn inspect_op_summarizes_a_live_search() {
+        let svc = service();
+        let h = svc.handle();
+        let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet","seed":9,"sims":16}"#);
+        let sid = ok_field(&line).get("session").unwrap().as_u64().unwrap();
+
+        // Fresh session: a one-node tree, nothing in flight.
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"inspect","session":{sid}}}"#));
+        let v = ok_field(&line);
+        assert_eq!(v.get("tree").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("unobserved").unwrap().as_u64(), Some(0));
+        assert_eq!(v.get("thinking").unwrap().as_bool(), Some(false));
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"think","session":{sid}}}"#));
+        ok_field(&line);
+        let (line, _) =
+            handle_line(&h, &format!(r#"{{"op":"inspect","session":{sid},"topk":2}}"#));
+        let v = ok_field(&line);
+        assert!(v.get("tree").unwrap().as_u64().unwrap() > 1, "think grew the tree");
+        assert_eq!(v.get("unobserved").unwrap().as_u64(), Some(0), "quiescent after think");
+        let s = summary_from_json(&v).expect("inspect replies parse back");
+        assert!(s.top.len() <= 2);
+        assert_eq!(s.session, sid);
+        // The wire reply and the parsed summary agree on the decomposition.
+        for row in &s.top {
+            if row.score.is_finite() {
+                assert!((row.q + row.explore - row.score).abs() < 1e-9);
+            }
+        }
+
+        // Unknown sessions are error replies, not panics.
+        let (line, _) = handle_line(&h, r#"{"op":"inspect","session":999}"#);
+        err_field(&line);
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        ok_field(&line);
+    }
+
+    #[test]
+    fn summary_json_carries_infinite_scores_as_null() {
+        let s = SearchSummary {
+            session: 3,
+            tree_size: 2,
+            max_depth: 1,
+            unobserved: 0,
+            thinking: false,
+            root_visits: 0,
+            root_value: 0.0,
+            root_entropy: 0.0,
+            best_action: 0,
+            best_flips: 0,
+            top: vec![ActionStat {
+                action: 0,
+                n: 0,
+                o: 0,
+                q: 0.0,
+                explore: f64::INFINITY,
+                score: f64::INFINITY,
+            }],
+        };
+        let line = summary_json(&s).render();
+        assert!(line.contains("\"score\":null"), "no Inf literal on the wire: {line}");
+        let back = summary_from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, s, "null reads back as +inf");
+
+        // Finite summaries round-trip exactly too.
+        let finite = SearchSummary {
+            root_visits: 10,
+            root_value: 0.25,
+            root_entropy: 0.5,
+            top: vec![ActionStat { action: 1, n: 7, o: 3, q: 0.25, explore: 0.5, score: 0.75 }],
+            ..s.clone()
+        };
+        let back = summary_from_json(&Json::parse(&summary_json(&finite).render()).unwrap());
+        assert_eq!(back.unwrap(), finite);
     }
 
     #[test]

@@ -363,6 +363,13 @@ impl RouterHandle {
         Ok(events)
     }
 
+    /// Per-session search-health summary (the wire `inspect` op),
+    /// computed by the owning host's shard and proxied back.
+    pub fn inspect(&self, session: u64, topk: usize) -> Result<crate::obs::SearchSummary> {
+        let host = self.route(session)?;
+        track(&self.inner, host.inspect(session, topk))
+    }
+
     pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
         let host = self.route(session)?;
         track(&self.inner, host.advance(session, action))
@@ -814,6 +821,10 @@ impl SessionApi for RouterHandle {
 
     fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {
         RouterHandle::trace(self, session, limit)
+    }
+
+    fn inspect(&self, session: u64, topk: usize) -> Result<crate::obs::SearchSummary> {
+        RouterHandle::inspect(self, session, topk)
     }
 
     fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {

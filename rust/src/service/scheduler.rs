@@ -26,6 +26,7 @@
 //! property-tested guarantee (`rust/tests/properties.rs`).
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
 use std::thread::JoinHandle;
@@ -38,7 +39,10 @@ use crate::eval::{HeuristicPolicy, PolicyFactory};
 use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::{SearchDriver, TaskSink};
 use crate::mcts::wu_uct::workers::{Pool, Task, TaskResult};
-use crate::obs::{Event, EventKind, Histogram, Journal};
+use crate::obs::journal::DEFAULT_JOURNAL_CAP;
+use crate::obs::{
+    Event, EventKind, FlightConfig, FlightRecorder, Histogram, Journal, SearchSummary,
+};
 use crate::service::fair::FairQueue;
 use crate::service::metrics::ServiceMetrics;
 use crate::store::codec::{SessionImage, SessionMeta};
@@ -65,6 +69,11 @@ pub struct ServiceConfig {
     /// bounded memory under a pathologically slow disk, degrading to
     /// backpressure instead of unbounded queueing.
     pub max_held: Option<usize>,
+    /// Event-journal ring capacity per shard (`--journal-cap`; clamped
+    /// to ≥ 1). A trace of a recent think is complete as long as the
+    /// ring outlives the think; `journal_dropped` in the metrics says
+    /// when it didn't.
+    pub journal_cap: usize,
 }
 
 impl Default for ServiceConfig {
@@ -75,6 +84,7 @@ impl Default for ServiceConfig {
             policy: HeuristicPolicy::factory(),
             seed: 0,
             max_held: None,
+            journal_cap: DEFAULT_JOURNAL_CAP,
         }
     }
 }
@@ -201,6 +211,10 @@ pub(crate) enum Request {
     /// Read the shard's event journal: the newest `limit` events,
     /// optionally filtered to one session's timeline.
     Trace { session: Option<u64>, limit: usize, reply: Sender<Vec<Event>> },
+    /// Compute one session's [`SearchSummary`] — valid mid-think (the
+    /// scheduler thread owns the tree, so the snapshot is consistent)
+    /// and O(top-k + root children), never an image export.
+    Inspect { session: u64, topk: usize, reply: Sender<Result<SearchSummary>> },
     Shutdown,
 }
 
@@ -262,6 +276,10 @@ pub(crate) struct ShardWiring {
     /// Tree-snapshot cadence in completed thinks per session (≥ 1; only
     /// meaningful with a store).
     pub snapshot_every: u32,
+    /// Flight-recorder directory for this shard (`--flight-dir`); `None`
+    /// keeps the journal memory-only. A recorder that fails to open or
+    /// write disables itself — diagnostics never poison serving.
+    pub flight: Option<PathBuf>,
 }
 
 struct ThinkJob {
@@ -289,6 +307,12 @@ struct Session {
     /// so nothing can change the session after its image left the shard
     /// (a racing write here would be silently lost on the target copy).
     sealed: bool,
+    /// Best action reported by the previous completed think, for the
+    /// flip counter below.
+    last_best: Option<usize>,
+    /// Times the recommended action changed across completed thinks — a
+    /// cheap convergence signal surfaced by the `inspect` op.
+    best_flips: u64,
 }
 
 /// A session rebuilt from the WAL, ready to install at scheduler start.
@@ -369,6 +393,14 @@ impl ServiceHandle {
         self.roundtrip(Request::Trace { session, limit, reply: tx }, rx)
     }
 
+    /// One session's search-health summary (top-`topk` root actions).
+    /// Works mid-think — that is the point: ΣO is only interesting while
+    /// samples are in flight.
+    pub fn inspect(&self, session: u64, topk: usize) -> Result<SearchSummary> {
+        let (tx, rx) = channel();
+        self.roundtrip(Request::Inspect { session, topk, reply: tx }, rx)?
+    }
+
     /// Execute `action` in the session's environment, reusing the on-path
     /// subtree as the new search root.
     pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
@@ -444,6 +476,7 @@ impl SearchService {
             max_sessions: None,
             store: None,
             snapshot_every: 1,
+            flight: None,
         };
         SearchService::start_shard(cfg, wiring, tx, rx)
             .expect("memory-only shard start is infallible")
@@ -469,6 +502,7 @@ impl SearchService {
             max_sessions: None,
             store: Some(Box::new(opener)),
             snapshot_every,
+            flight: None,
         };
         SearchService::start_shard(cfg, wiring, tx, rx)
     }
@@ -518,6 +552,22 @@ impl SearchService {
             None => (None, Vec::new()),
         };
         let snapshot_every = wiring.snapshot_every.max(1);
+        // Diagnostics must not block serving: a flight directory that
+        // cannot open logs one line and the shard runs without it.
+        let flight = wiring.flight.take().and_then(|dir| {
+            match FlightRecorder::open(FlightConfig::new(&dir)) {
+                Ok(rec) => Some(rec),
+                Err(e) => {
+                    eprintln!(
+                        "shard {}: flight recorder disabled ({}): {e}",
+                        wiring.index,
+                        dir.display()
+                    );
+                    None
+                }
+            }
+        });
+        let journal_cap = cfg.journal_cap.max(1);
         // A zero-capacity pool would gate dispatch() shut forever and hang
         // every think() caller; clamp rather than hand out a dead service.
         let n_exp = cfg.expansion_workers.max(1);
@@ -577,7 +627,8 @@ impl SearchService {
                 expand_hist: Histogram::new(),
                 sim_hist: Histogram::new(),
                 commit_hold_hist: Histogram::new(),
-                journal: Journal::default(),
+                journal: Journal::new(journal_cap),
+                flight,
                 issued_at: HashMap::new(),
                 started: Instant::now(),
             };
@@ -669,6 +720,10 @@ struct Scheduler {
     commit_hold_hist: Histogram,
     /// Ring journal of typed events; single-writer (this thread).
     journal: Journal,
+    /// Crash-surviving spill of the journal: every event recorded above
+    /// is teed here. `None` = not configured, failed to open, or went
+    /// dead on a write error — serving is never affected.
+    flight: Option<FlightRecorder>,
     /// Task id → journal timestamp at issue, for task-latency histograms
     /// (entries are removed when the result is absorbed).
     issued_at: HashMap<u64, u64>,
@@ -748,6 +803,7 @@ struct SharedSink<'a> {
     overflow_flag: &'a mut bool,
     sims_shed: &'a mut u64,
     journal: &'a mut Journal,
+    flight: &'a mut Option<FlightRecorder>,
     issued_at: &'a mut HashMap<u64, u64>,
     /// Journal timestamp for this drive pass.
     now_us: u64,
@@ -771,14 +827,18 @@ impl SharedSink<'_> {
 
 impl SharedSink<'_> {
     fn journal_event(&mut self, task: u64, kind: EventKind, arg: u64) {
-        self.journal.record(Event {
+        let event = Event {
             at_us: self.now_us,
             session: self.session,
             task,
             trace: self.trace,
             kind,
             arg,
-        });
+        };
+        if let Some(f) = self.flight.as_mut() {
+            f.record(&event);
+        }
+        self.journal.record(event);
     }
 }
 
@@ -827,7 +887,11 @@ impl Scheduler {
     /// only — the journal is single-writer).
     fn journal_event(&mut self, session: u64, task: u64, trace: u64, kind: EventKind, arg: u64) {
         let at_us = self.now_us();
-        self.journal.record(Event { at_us, session, task, trace, kind, arg });
+        let event = Event { at_us, session, task, trace, kind, arg };
+        if let Some(f) = self.flight.as_mut() {
+            f.record(&event);
+        }
+        self.journal.record(event);
     }
 
     /// Trace id of the session's in-flight think (0 when untraced/idle).
@@ -957,6 +1021,9 @@ impl Scheduler {
             Request::Trace { session, limit, reply } => {
                 let _ = reply.send(self.journal.query(session, limit));
             }
+            Request::Inspect { session, topk, reply } => {
+                let _ = reply.send(self.do_inspect(session, topk));
+            }
             Request::Shutdown => return false,
         }
         true
@@ -1006,6 +1073,8 @@ impl Scheduler {
             weight: opts.weight,
             env_seed: opts.env_seed,
             sealed: false,
+            last_best: None,
+            best_flips: 0,
         };
         self.fair.admit(id, opts.weight);
         self.sessions.insert(id, session);
@@ -1041,6 +1110,8 @@ impl Scheduler {
                 weight: meta.weight,
                 env_seed: meta.env_seed,
                 sealed: false,
+                last_best: None,
+                best_flips: 0,
             },
         );
     }
@@ -1420,6 +1491,26 @@ impl Scheduler {
         ))
     }
 
+    /// Compute a session's search summary. Deliberately *not* gated on
+    /// idleness or the migration seal: inspect is read-only, and ΣO is
+    /// only nonzero mid-think — refusing then would blind the op to the
+    /// very state it exists to observe.
+    fn do_inspect(&self, sid: u64, topk: usize) -> Result<SearchSummary> {
+        let sess = self
+            .sessions
+            .get(&sid)
+            .ok_or_else(|| anyhow!("unknown session {sid}"))?;
+        Ok(SearchSummary::compute(
+            sid,
+            sess.driver.tree(),
+            sess.driver.spec().beta,
+            sess.driver.unobserved(),
+            sess.thinking.is_some(),
+            sess.best_flips,
+            topk,
+        ))
+    }
+
     /// The session, provided it exists, has no think in flight, and is
     /// not sealed for migration (sealed ops report the typed
     /// [`Recovering`] error — transient, retry on the session's new
@@ -1466,6 +1557,7 @@ impl Scheduler {
             overflow_flag: &mut self.overflow_flag,
             sims_shed: &mut self.sims_shed,
             journal: &mut self.journal,
+            flight: &mut self.flight,
             issued_at: &mut self.issued_at,
             now_us,
             trace,
@@ -1626,8 +1718,16 @@ impl Scheduler {
         self.sims += sims as u64;
         let elapsed = job.started.elapsed();
         self.think_hist.record(elapsed.as_secs_f64() * 1e3);
+        let best = sess.driver.best_action();
+        // Flip counter: did this think change the recommendation? A
+        // flapping best action under a steady position means the sim
+        // budget is too small — `inspect` surfaces the count.
+        if sess.last_best.is_some_and(|prev| prev != best) {
+            sess.best_flips += 1;
+        }
+        sess.last_best = Some(best);
         let reply = ThinkReply {
-            action: sess.driver.best_action(),
+            action: best,
             value: sess.driver.root_value(),
             sims,
             tree_size: sess.driver.tree().len(),
@@ -1708,6 +1808,11 @@ impl Scheduler {
             simulation_workers: self.simulation.capacity(),
             pending_expansions: self.pending_exp,
             pending_simulations: self.pending_sim,
+            journal_dropped: self.journal.dropped(),
+            // ΣO across every session right now (each term is the
+            // driver's O(1) running counter, so this is O(sessions)).
+            unobserved: self.sessions.values().map(|s| s.driver.unobserved()).sum(),
+            best_flips: self.sessions.values().map(|s| s.best_flips).sum(),
             ..Default::default()
         };
         m.derive_latency_scalars();
@@ -1861,6 +1966,7 @@ mod tests {
             max_sessions: Some(2),
             store: None,
             snapshot_every: 1,
+            flight: None,
         };
         let cfg = ServiceConfig {
             expansion_workers: 1,

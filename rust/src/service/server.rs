@@ -84,11 +84,14 @@ impl Drop for TcpServer {
     }
 }
 
-/// A minimal Prometheus text-exposition endpoint (`wu-uct serve
-/// --stats-addr`): every HTTP request — path and method ignored, which
-/// is all a scraper needs — gets a `200 text/plain; version=0.0.4` body
-/// of [`ServiceMetrics::prometheus_text`] rendered from a fresh
-/// aggregate snapshot. One thread per request, no keep-alive: scrape
+/// A minimal HTTP observability endpoint (`wu-uct serve --stats-addr`)
+/// with two routes: `/metrics` answers `200 text/plain; version=0.0.4`
+/// with [`ServiceMetrics::prometheus_text`] rendered from a fresh
+/// aggregate snapshot, and `/healthz` answers a small JSON body
+/// (`{"ok":true,"role":...,"shards":...,"hosts":...,"sessions_open":...}`)
+/// for load-balancer and liveness probes. Anything else is a `404` so a
+/// misconfigured scrape path fails loudly instead of silently graphing
+/// the wrong endpoint. One thread per request, no keep-alive: scrape
 /// cadence is seconds, not microseconds, and the snapshot itself is
 /// O(buckets), so the simplest correct server wins.
 pub struct StatsServer {
@@ -133,14 +136,28 @@ impl Drop for StatsServer {
     }
 }
 
-/// One scrape: drain the request head (through the blank line), render,
-/// reply, close. Errors just drop the connection — the scraper retries.
+/// One scrape: read the request line for its path, drain the rest of the
+/// head (through the blank line), route, reply, close. Errors just drop
+/// the connection — the scraper retries.
 fn serve_scrape<H: SessionApi>(stream: TcpStream, handle: H) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
+    let mut request_line = String::new();
+    match reader.read_line(&mut request_line) {
+        Ok(0) | Err(_) => return,
+        Ok(_) => {}
+    }
+    // `GET /metrics HTTP/1.1` → `/metrics`; query strings are ignored
+    // (Prometheus appends none, probes sometimes add cache-busters).
+    let path = request_line
+        .split_whitespace()
+        .nth(1)
+        .map(|p| p.split('?').next().unwrap_or(p))
+        .unwrap_or("")
+        .to_string();
     let mut line = String::new();
     loop {
         line.clear();
@@ -150,12 +167,42 @@ fn serve_scrape<H: SessionApi>(stream: TcpStream, handle: H) {
             Ok(_) => {}
         }
     }
-    let (status, body) = match handle.metrics() {
-        Ok(m) => ("200 OK", m.prometheus_text()),
-        Err(e) => ("500 Internal Server Error", format!("metrics snapshot failed: {e:#}\n")),
+    let (status, content_type, body) = match path.as_str() {
+        "/metrics" | "" => match handle.metrics() {
+            Ok(m) => ("200 OK", "text/plain; version=0.0.4", m.prometheus_text()),
+            Err(e) => (
+                "500 Internal Server Error",
+                "text/plain; version=0.0.4",
+                format!("metrics snapshot failed: {e:#}\n"),
+            ),
+        },
+        "/healthz" => match handle.health() {
+            Ok(h) => {
+                use crate::service::json::{obj, Json};
+                let doc = obj([
+                    ("ok", Json::Bool(true)),
+                    ("role", Json::Str(h.role.to_string())),
+                    ("shards", Json::Num(h.shards as f64)),
+                    ("hosts", Json::Num(h.hosts as f64)),
+                    ("sessions_open", Json::Num(h.sessions_open as f64)),
+                    ("uptime_s", Json::Num(h.uptime_s)),
+                ]);
+                ("200 OK", "application/json", format!("{}\n", doc.render()))
+            }
+            Err(e) => (
+                "500 Internal Server Error",
+                "application/json",
+                format!("{{\"ok\":false,\"error\":{:?}}}\n", format!("{e:#}")),
+            ),
+        },
+        other => (
+            "404 Not Found",
+            "text/plain",
+            format!("no route {other}; try /metrics or /healthz\n"),
+        ),
     };
     let head = format!(
-        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
@@ -385,6 +432,43 @@ mod tests {
         assert!(body.contains(r#"le="+Inf""#));
         h.close(sid).unwrap();
         drop(stats); // must not hang
+    }
+
+    /// One-shot HTTP GET against a [`StatsServer`], returning the full
+    /// raw response (status line, headers, body).
+    fn http_get(stats: &StatsServer, path: &str) -> String {
+        let mut s = TcpStream::connect(stats.local_addr()).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.0\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+        let mut body = String::new();
+        std::io::Read::read_to_string(&mut BufReader::new(s), &mut body).unwrap();
+        body
+    }
+
+    #[test]
+    fn stats_server_healthz_reports_role_json() {
+        let (svc, _server) = start();
+        let stats = StatsServer::bind(svc.handle(), "127.0.0.1:0").unwrap();
+        let raw = http_get(&stats, "/healthz");
+        assert!(raw.starts_with("HTTP/1.0 200 OK\r\n"), "got: {raw}");
+        assert!(raw.contains("application/json"), "got: {raw}");
+        let body = raw.split("\r\n\r\n").nth(1).expect("body after blank line");
+        let v = Json::parse(body.trim()).expect("healthz body is valid json");
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("role").unwrap().as_str(), Some("service"));
+        assert_eq!(v.get("sessions_open").unwrap().as_u64(), Some(0));
+        assert!(v.get("uptime_s").is_some());
+    }
+
+    #[test]
+    fn stats_server_unknown_path_is_404() {
+        let (svc, _server) = start();
+        let stats = StatsServer::bind(svc.handle(), "127.0.0.1:0").unwrap();
+        let raw = http_get(&stats, "/nope");
+        assert!(raw.starts_with("HTTP/1.0 404 Not Found\r\n"), "got: {raw}");
+        assert!(raw.contains("/metrics"), "404 body should name known routes: {raw}");
+        // Query strings are stripped before routing.
+        let raw = http_get(&stats, "/metrics?x=1");
+        assert!(raw.starts_with("HTTP/1.0 200 OK\r\n"), "got: {raw}");
     }
 
     #[test]

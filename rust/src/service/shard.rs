@@ -98,6 +98,11 @@ pub struct ShardedConfig {
     /// Durability: per-shard WALs under `<data_dir>/shard-<k>/`.
     /// `None` keeps the fleet memory-only.
     pub data_dir: Option<PathBuf>,
+    /// Flight recorder: spill every shard's journal events to rotated,
+    /// checksummed segments under `<flight_dir>/shard-<k>/` (`wu-uct
+    /// serve --flight-dir PATH`), readable post-mortem by `wu-uct
+    /// flight`. `None` keeps the journal in-memory only.
+    pub flight_dir: Option<PathBuf>,
     /// WAL snapshot cadence in completed thinks per session (≥ 1).
     pub snapshot_every: u32,
     /// Every Nth WAL snapshot is a full image; the ones between are
@@ -128,6 +133,7 @@ impl Default for ShardedConfig {
             steal: true,
             replicas: HashRing::DEFAULT_REPLICAS,
             data_dir: None,
+            flight_dir: None,
             snapshot_every: 1,
             full_every: 8,
             max_segment_bytes: 8 << 20,
@@ -287,6 +293,13 @@ impl ShardedHandle {
             events.drain(..events.len() - limit);
         }
         Ok(events)
+    }
+
+    /// Per-session search-health summary (the wire `inspect` op),
+    /// computed on the owning shard — see
+    /// [`crate::obs::SearchSummary::compute`].
+    pub fn inspect(&self, session: u64, topk: usize) -> Result<crate::obs::SearchSummary> {
+        self.route(session)?.inspect(session, topk)
     }
 
     pub fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
@@ -534,6 +547,10 @@ impl SessionApi for ShardedHandle {
         ShardedHandle::trace(self, session, limit)
     }
 
+    fn inspect(&self, session: u64, topk: usize) -> Result<crate::obs::SearchSummary> {
+        ShardedHandle::inspect(self, session, topk)
+    }
+
     fn advance(&self, session: u64, action: usize) -> Result<AdvanceReply> {
         ShardedHandle::advance(self, session, action)
     }
@@ -720,6 +737,10 @@ impl ShardedService {
                 max_sessions: cfg.max_sessions_per_shard,
                 store,
                 snapshot_every: cfg.snapshot_every.max(1),
+                flight: cfg
+                    .flight_dir
+                    .as_ref()
+                    .map(|dir| dir.join(format!("shard-{index}"))),
             };
             let service = SearchService::start_shard(shard_cfg, wiring, tx, rx)?;
             handles.push(service.handle());
@@ -1126,6 +1147,11 @@ mod tests {
         // The tree moved bit-for-bit: the recommendation is unchanged,
         // and the session keeps serving on its new shard.
         assert_eq!(h.best_action(sid).unwrap(), best_before);
+        // `inspect` follows the session to its new home.
+        let s = h.inspect(sid, 4).unwrap();
+        assert_eq!(s.unobserved, 0, "idle session has nothing in flight");
+        assert!(s.tree_size > 1, "migrated tree still inspectable");
+        assert_eq!(s.best_action, best_before);
         let t2 = h.think(sid, 12).unwrap();
         assert!(t2.quiescent, "ΣO = 0 must hold on the target shard");
         assert!(t2.tree_size >= t.tree_size, "migrated tree kept growing");

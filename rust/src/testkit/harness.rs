@@ -16,7 +16,7 @@ use crate::env::Env;
 use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::{AdvanceOutcome, SearchDriver, TaskSink};
 use crate::mcts::wu_uct::workers::TaskResult;
-use crate::obs::{Event, EventKind, Journal};
+use crate::obs::{Event, EventKind, FlightConfig, FlightRecorder, Journal, SearchSummary};
 use crate::service::fair::FairQueue;
 use crate::store::codec::{SessionImage, SessionMeta};
 use crate::testkit::executor::{Trace, VirtualExecutor};
@@ -110,6 +110,10 @@ struct ScriptedSession {
     weight: f64,
     /// Trace id of the active (or last) think; 0 = untraced.
     trace: u64,
+    /// Recommendation after the previous completed think, for the
+    /// best-flip convergence counter (mirrors the live scheduler).
+    last_best: Option<usize>,
+    best_flips: u64,
 }
 
 /// Where an in-flight task came from, for absorbing its completion.
@@ -125,6 +129,7 @@ struct Route {
 struct RoutedSink<'a> {
     exec: &'a mut VirtualExecutor,
     journal: &'a mut Journal,
+    flight: &'a mut Option<FlightRecorder>,
     routes: &'a mut HashMap<u64, Route>,
     session: u64,
     trace: u64,
@@ -133,14 +138,18 @@ struct RoutedSink<'a> {
 impl RoutedSink<'_> {
     fn record(&mut self, id: u64, kind: EventKind) {
         let at_us = self.exec.now();
-        self.journal.record(Event {
+        let ev = Event {
             at_us,
             session: self.session,
             task: id,
             trace: self.trace,
             kind,
             arg: 0,
-        });
+        };
+        if let Some(f) = self.flight.as_mut() {
+            f.record(&ev);
+        }
+        self.journal.record(ev);
         self.routes
             .insert(id, Route { session: self.session, trace: self.trace, issued_at: at_us });
     }
@@ -173,6 +182,7 @@ pub struct ScriptedService {
     sessions: BTreeMap<u64, ScriptedSession>,
     routes: HashMap<u64, Route>,
     journal: Journal,
+    flight: Option<FlightRecorder>,
     exp_capacity: usize,
     sim_capacity: usize,
 }
@@ -185,9 +195,19 @@ impl ScriptedService {
             sessions: BTreeMap::new(),
             routes: HashMap::new(),
             journal: Journal::default(),
+            flight: None,
             exp_capacity,
             sim_capacity,
         }
+    }
+
+    /// Tee every subsequent journal event into a flight recorder under
+    /// `dir`, as `serve --flight-dir` does per shard — but stamped with
+    /// *virtual* time, so a deterministic script writes byte-identical
+    /// segment files on every rerun (pinned in `rust/tests/store.rs`).
+    pub fn attach_flight(&mut self, dir: impl Into<std::path::PathBuf>) -> anyhow::Result<()> {
+        self.flight = Some(FlightRecorder::open(FlightConfig::new(dir))?);
+        Ok(())
     }
 
     /// Record a journal event at the current virtual time. Public so the
@@ -196,7 +216,11 @@ impl ScriptedService {
     /// events in the same per-shard timeline the live scheduler keeps.
     pub fn journal_event(&mut self, session: u64, task: u64, trace: u64, kind: EventKind, arg: u64) {
         let at_us = self.exec.now();
-        self.journal.record(Event { at_us, session, task, trace, kind, arg });
+        let ev = Event { at_us, session, task, trace, kind, arg };
+        if let Some(f) = self.flight.as_mut() {
+            f.record(&ev);
+        }
+        self.journal.record(ev);
     }
 
     /// The shard's event journal (virtual-time span records).
@@ -239,8 +263,10 @@ impl ScriptedService {
             "session {id} already open"
         );
         self.fair.admit(id, weight);
-        self.sessions
-            .insert(id, ScriptedSession { driver, thinking: false, weight, trace: 0 });
+        self.sessions.insert(
+            id,
+            ScriptedSession { driver, thinking: false, weight, trace: 0, last_best: None, best_flips: 0 },
+        );
     }
 
     /// Close an idle, quiescent session.
@@ -357,6 +383,22 @@ impl ScriptedService {
         self.sessions[&id].driver.best_action()
     }
 
+    /// The `inspect` op's answer in virtual time: a [`SearchSummary`]
+    /// computed from the live driver exactly as the scheduler computes
+    /// it — same tree reads, same running `ΣO` counter, same β.
+    pub fn summary(&self, id: u64, topk: usize) -> SearchSummary {
+        let s = &self.sessions[&id];
+        SearchSummary::compute(
+            id,
+            s.driver.tree(),
+            s.driver.spec().beta,
+            s.driver.unobserved(),
+            s.thinking,
+            s.best_flips,
+            topk,
+        )
+    }
+
     /// No in-flight tasks and `ΣO = 0` (the paper's invariant).
     pub fn quiescent(&self, id: u64) -> bool {
         let s = &self.sessions[&id];
@@ -403,6 +445,7 @@ impl ScriptedService {
             let mut sink = RoutedSink {
                 exec: &mut self.exec,
                 journal: &mut self.journal,
+                flight: &mut self.flight,
                 routes: &mut self.routes,
                 session: sid,
                 trace,
@@ -410,15 +453,26 @@ impl ScriptedService {
             sess.driver.issue(&mut sink);
             if sess.thinking && sess.driver.done() {
                 sess.thinking = false;
+                let best = sess.driver.best_action();
+                if let Some(prev) = sess.last_best {
+                    if prev != best {
+                        sess.best_flips += 1;
+                    }
+                }
+                sess.last_best = Some(best);
                 self.exec.note(&format!("think-done sid={sid}"));
-                self.journal.record(Event {
+                let ev = Event {
                     at_us: self.exec.now(),
                     session: sid,
                     task: 0,
                     trace,
                     kind: EventKind::ThinkDone,
                     arg: sess.driver.completed() as u64,
-                });
+                };
+                if let Some(f) = self.flight.as_mut() {
+                    f.record(&ev);
+                }
+                self.journal.record(ev);
             }
         }
     }
@@ -427,6 +481,15 @@ impl ScriptedService {
     /// absorbed completion with `(virtual time, per-session completed
     /// counts)` — the hook fairness properties assert on.
     pub fn run(&mut self, mut on_tick: impl FnMut(u64, &BTreeMap<u64, u32>)) {
+        self.run_inspecting(|now, svc| on_tick(now, &svc.completed()));
+    }
+
+    /// [`Self::run`] handing the hook the whole service instead of just
+    /// the completed counts, so properties can [`Self::summary`] a
+    /// session *mid-think* — e.g. pinning the inspect `ΣO` to
+    /// [`Tree::total_unobserved`](crate::tree::Tree::total_unobserved)
+    /// at every tick, not only at quiescence.
+    pub fn run_inspecting(&mut self, mut on_tick: impl FnMut(u64, &ScriptedService)) {
         loop {
             self.dispatch();
             let Some(result) = self.exec.next_result() else { break };
@@ -444,6 +507,7 @@ impl ScriptedService {
                 let mut sink = RoutedSink {
                     exec: &mut self.exec,
                     journal: &mut self.journal,
+                    flight: &mut self.flight,
                     routes: &mut self.routes,
                     session: sid,
                     trace: route.trace,
@@ -454,18 +518,29 @@ impl ScriptedService {
             let sess = self.sessions.get_mut(&sid).expect("routed session exists");
             if sess.thinking && sess.driver.done() {
                 sess.thinking = false;
+                let best = sess.driver.best_action();
+                if let Some(prev) = sess.last_best {
+                    if prev != best {
+                        sess.best_flips += 1;
+                    }
+                }
+                sess.last_best = Some(best);
                 self.exec.note(&format!("think-done sid={sid}"));
-                self.journal.record(Event {
+                let ev = Event {
                     at_us: self.exec.now(),
                     session: sid,
                     task: 0,
                     trace: route.trace,
                     kind: EventKind::ThinkDone,
                     arg: sess.driver.completed() as u64,
-                });
+                };
+                if let Some(f) = self.flight.as_mut() {
+                    f.record(&ev);
+                }
+                self.journal.record(ev);
             }
-            let counts = self.completed();
-            on_tick(self.exec.now(), &counts);
+            let now = self.exec.now();
+            on_tick(now, self);
         }
         for (&id, sess) in &self.sessions {
             assert!(

@@ -65,7 +65,10 @@
 //! WAL-append/fsync-durable/reply — stamped with virtual time, so span
 //! timelines are golden too: host clocks align at fakenet message
 //! delivery (Lamport style) and the same seed reconstructs the same
-//! cross-host timeline, byte for byte.
+//! cross-host timeline, byte for byte. A scripted shard can also tee
+//! its journal into a real on-disk flight recorder
+//! ([`harness::ScriptedService::attach_flight`]) — virtual-time stamps
+//! make the spilled segment files byte-identical across reruns.
 //!
 //! Used by `rust/tests/conformance.rs` (optimal-action conformance,
 //! worker-count invariance), the fairness property in

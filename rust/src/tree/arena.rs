@@ -10,12 +10,15 @@ use crate::tree::node::{Node, NodeId};
 #[derive(Debug, Clone)]
 pub struct Tree {
     nodes: Vec<Node>,
+    /// Depth of the deepest node, maintained on insert/re-root so
+    /// [`Tree::max_depth`] is O(1) — the `inspect` op reads it per tick.
+    deepest: u32,
 }
 
 impl Tree {
     /// New tree containing only a root node.
     pub fn new() -> Tree {
-        Tree { nodes: vec![Node::new(None, 0, 0)] }
+        Tree { nodes: vec![Node::new(None, 0, 0)], deepest: 0 }
     }
 
     pub const ROOT: NodeId = 0;
@@ -47,6 +50,7 @@ impl Tree {
         let id = self.nodes.len();
         self.nodes.push(Node::new(Some(parent), action, depth));
         self.nodes[parent].children.push((action, id));
+        self.deepest = self.deepest.max(depth);
         id
     }
 
@@ -94,9 +98,22 @@ impl Tree {
             .collect()
     }
 
-    /// Depth of the deepest node.
+    /// (action, N, O, V) rows for the root's children — the full WU-UCT
+    /// root statistics the `inspect` summary is built from. O(children).
+    pub fn root_child_full_stats(&self) -> Vec<(usize, u32, u32, f64)> {
+        self.nodes[Self::ROOT]
+            .children
+            .iter()
+            .map(|&(a, id)| {
+                let n = &self.nodes[id];
+                (a, n.n, n.o, n.v)
+            })
+            .collect()
+    }
+
+    /// Depth of the deepest node. O(1): maintained on insert and re-root.
     pub fn max_depth(&self) -> u32 {
-        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0)
+        self.deepest
     }
 
     /// Structural invariants, asserted by tests and property checks:
@@ -157,6 +174,7 @@ impl Tree {
         }
         let depth_base = self.nodes[new_root].depth;
         let mut kept = Vec::with_capacity(order.len());
+        let mut deepest = 0;
         for &old in &order {
             // Move nodes out (snapshots can be large; no clones).
             let mut n = std::mem::replace(&mut self.nodes[old], Node::new(None, 0, 0));
@@ -165,12 +183,14 @@ impl Tree {
                 *c = map[*c];
             }
             n.depth -= depth_base;
+            deepest = deepest.max(n.depth);
             kept.push(n);
         }
         kept[0].parent = None;
         kept[0].action = 0;
         kept[0].reward = 0.0;
         self.nodes = kept;
+        self.deepest = deepest;
         Some(self.nodes.len())
     }
 
@@ -233,7 +253,8 @@ impl Tree {
         if linked.iter().skip(1).any(|&seen| seen != 1) {
             return Err("node not linked exactly once");
         }
-        Ok(Tree { nodes })
+        let deepest = nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+        Ok(Tree { nodes, deepest })
     }
 }
 

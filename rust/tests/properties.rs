@@ -484,3 +484,60 @@ fn prop_session_images_roundtrip_for_random_searched_trees() {
             && revived.tree().total_unobserved() == 0
     });
 }
+
+#[test]
+fn prop_inspect_summary_tracks_tree_unobserved_at_every_tick() {
+    // The introspection tentpole's consistency claim: the inspect
+    // summary's ΣO equals `Tree::total_unobserved` at EVERY scheduler
+    // tick mid-think — watching the unobserved is only useful if the
+    // watcher agrees with the tree — and drains to exactly 0 at
+    // quiescence. Scripted service, so any violation replays from the
+    // printed seed.
+    use std::cell::Cell;
+    let saw_inflight = Cell::new(false);
+    check("inspect ΣO == tree ΣO at every tick", 8, |g| {
+        let k = g.usize(1, 4);
+        let budget = g.u32(8, 32);
+        let script = LatencyScript::uniform(g.u64(), (1, 4), (1, 9));
+        let mut svc = ScriptedService::new(g.usize(1, 2), g.usize(2, 4), script);
+        for i in 1..=k as u64 {
+            let env = Garnet::new(12, 3, 25, 0.0, g.u64());
+            let spec = Spec {
+                max_simulations: budget,
+                rollout_limit: 6,
+                max_depth: 10,
+                seed: g.u64(),
+                ..Spec::default()
+            };
+            svc.open(i, &env, spec, 1.0);
+            svc.begin_think(i, budget);
+        }
+        let mut consistent = true;
+        svc.run_inspecting(|_, svc| {
+            for i in 1..=k as u64 {
+                let s = svc.summary(i, 3);
+                let tree = svc.driver(i).tree();
+                consistent &= s.unobserved == tree.total_unobserved();
+                consistent &= s.tree_size == tree.len() as u64;
+                if s.unobserved > 0 {
+                    saw_inflight.set(true);
+                }
+                // Finite scores decompose as exploitation + exploration.
+                for a in &s.top {
+                    if a.score.is_finite() {
+                        consistent &= (a.q + a.explore - a.score).abs() < 1e-9;
+                    }
+                }
+            }
+        });
+        let quiesced = (1..=k as u64).all(|i| {
+            let s = svc.summary(i, 3);
+            s.unobserved == 0 && !s.thinking && svc.driver(i).tree().total_unobserved() == 0
+        });
+        consistent && quiesced
+    });
+    assert!(
+        saw_inflight.get(),
+        "the property never observed a mid-think tick with ΣO > 0 — it proved nothing"
+    );
+}

@@ -16,6 +16,10 @@ use std::path::PathBuf;
 use wu_uct::env::garnet::Garnet;
 use wu_uct::env::Env;
 use wu_uct::mcts::SearchSpec;
+use wu_uct::obs::{
+    list_flight_segments, read_flight_segment, replay_flight, replay_flight_tree, Event,
+    EventKind,
+};
 use wu_uct::service::proto::make_env;
 use wu_uct::service::{
     RebalanceConfig, SearchService, ServiceConfig, SessionOptions, ShardedConfig,
@@ -1026,4 +1030,183 @@ fn killed_service_recovers_through_a_live_delta_chain() {
     assert!(t.quiescent);
     let c = h.close(sid).unwrap();
     assert_eq!(c.thinks, 4, "think counter survived the delta-chain recovery");
+}
+
+// ---------------------------------------------------------------------
+// Flight recorder (crash-surviving journal spill)
+// ---------------------------------------------------------------------
+
+/// Tentpole acceptance: under virtual time the flight recorder's
+/// spilled segment files are byte-identical across reruns of the same
+/// script — timestamps, ordering and framing all deterministic.
+#[test]
+fn flight_segments_are_byte_identical_across_scripted_reruns() {
+    let run = |tag: &str| -> (Vec<u8>, Vec<Event>) {
+        let dir = temp_dir(tag);
+        let mut svc = ScriptedService::new(1, 2, LatencyScript::uniform(11, (1, 3), (2, 9)));
+        svc.attach_flight(&dir).unwrap();
+        svc.open(1, &garnet(11), spec(16, 11), 1.0);
+        svc.begin_think_traced(1, 16, 0xFACE);
+        svc.run_to_completion();
+        svc.close(1).unwrap();
+        let segments = list_flight_segments(&dir).unwrap();
+        assert_eq!(segments.len(), 1, "one boot, small run → one segment");
+        let bytes = fs::read(&segments[0].1).unwrap();
+        let replay = replay_flight(&dir).unwrap();
+        assert!(!replay.torn_tail);
+        (bytes, replay.events)
+    };
+    let (a_bytes, a_events) = run("flight-rerun-a");
+    let (b_bytes, b_events) = run("flight-rerun-b");
+    assert!(!a_bytes.is_empty());
+    assert_eq!(a_bytes, b_bytes, "virtual time ⇒ byte-identical spill");
+    assert_eq!(a_events, b_events);
+}
+
+/// The spilled stream IS the journal's: replay reconstructs the exact
+/// admit → select/issue/done → backprop → think-done timeline the
+/// in-memory ring holds, event for event.
+#[test]
+fn flight_replay_reconstructs_the_scripted_journal_timeline() {
+    let dir = temp_dir("flight-replay");
+    let mut svc = ScriptedService::new(1, 2, LatencyScript::fixed(1, 4));
+    svc.attach_flight(&dir).unwrap();
+    svc.open(7, &garnet(5), spec(8, 5), 1.0);
+    svc.begin_think(7, 8);
+    svc.run_to_completion();
+    let journal = svc.trace_events(None, 10_000);
+    let replay = replay_flight(&dir).unwrap();
+    assert_eq!(replay.events, journal, "flight replay == in-memory journal");
+    let kinds: Vec<EventKind> = replay.events.iter().map(|e| e.kind).collect();
+    for want in [
+        EventKind::SessionOpen,
+        EventKind::Admit,
+        EventKind::SimIssued,
+        EventKind::Backprop,
+        EventKind::ThinkDone,
+    ] {
+        assert!(kinds.contains(&want), "timeline missing {}", want.name());
+    }
+    assert!(replay.events.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+}
+
+/// A segment chopped mid-frame (the on-disk signature of SIGKILL)
+/// replays its intact prefix with the tear reported; damage *before*
+/// the tail — frames follow it — stays a hard typed error, exactly the
+/// WAL's torn-tail ladder.
+#[test]
+fn flight_torn_tail_recovers_the_intact_prefix() {
+    let dir = temp_dir("flight-torn");
+    let mut svc = ScriptedService::new(1, 2, LatencyScript::fixed(1, 4));
+    svc.attach_flight(&dir).unwrap();
+    svc.open(1, &garnet(3), spec(8, 3), 1.0);
+    svc.begin_think(1, 8);
+    svc.run_to_completion();
+    let clean = replay_flight(&dir).unwrap();
+    assert!(!clean.torn_tail);
+    let n = clean.events.len();
+    assert!(n > 4, "need a few frames to tear meaningfully");
+    let (_, path) = list_flight_segments(&dir).unwrap().pop().unwrap();
+    let len = fs::metadata(&path).unwrap().len();
+    fs::OpenOptions::new().write(true).open(&path).unwrap().set_len(len - 7).unwrap();
+    let replay = replay_flight(&dir).unwrap();
+    assert!(replay.torn_tail, "a chopped final frame is the signature of a kill");
+    assert_eq!(replay.events.len(), n - 1, "exactly the torn frame is lost");
+    assert_eq!(replay.events[..], clean.events[..n - 1]);
+    // Mid-stream damage is never silently skipped, even by the
+    // kill-tolerant reader: flip a bit inside the first frame's body.
+    let mut data = fs::read(&path).unwrap();
+    data[10 + 12 + 2] ^= 0x40;
+    fs::write(&path, &data).unwrap();
+    match read_flight_segment(&path, true) {
+        Err(Error::ChecksumMismatch { .. }) => {}
+        other => panic!("expected ChecksumMismatch, got {:?}", other.map(|r| r.events.len())),
+    }
+}
+
+/// Fuzz the segment file like the image/delta codecs: random mutations
+/// must come back `Ok` or a typed `Err` — never a panic — and the
+/// strict (non-tail) reader rejects essentially everything (truncation
+/// landing exactly on a frame boundary, or a downgraded version byte,
+/// are the only legal parses).
+#[test]
+fn fuzzed_flight_segment_mutations_never_panic() {
+    let dir = temp_dir("flight-fuzz");
+    let mut svc = ScriptedService::new(1, 2, LatencyScript::uniform(13, (1, 3), (2, 9)));
+    svc.attach_flight(&dir).unwrap();
+    svc.open(1, &garnet(13), spec(16, 13), 1.0);
+    svc.begin_think(1, 16);
+    svc.run_to_completion();
+    let (_, path) = list_flight_segments(&dir).unwrap().pop().unwrap();
+    let bytes = fs::read(&path).unwrap();
+    let baseline = read_flight_segment(&path, false).unwrap().events.len();
+    assert!(baseline > 0);
+    let scratch = dir.join("scratch.log");
+    let mut rng = Pcg32::new(0xF119);
+    let mut accepted = 0u32;
+    for _ in 0..400 {
+        let mut mutated = bytes.clone();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below_usize(mutated.len());
+                mutated[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                mutated.truncate(rng.below_usize(mutated.len()));
+            }
+            _ => {
+                let i = rng.below_usize(mutated.len());
+                let n = (rng.below_usize(16) + 1).min(mutated.len() - i);
+                for b in &mut mutated[i..i + n] {
+                    *b = (rng.below(256)) as u8;
+                }
+            }
+        }
+        fs::write(&scratch, &mutated).unwrap();
+        if read_flight_segment(&scratch, false).is_ok() {
+            accepted += 1;
+        }
+        // The kill-tolerant reader must also never panic, and whatever
+        // survives is at most the original timeline.
+        if let Ok(read) = read_flight_segment(&scratch, true) {
+            assert!(read.events.len() <= baseline);
+        }
+    }
+    assert!(
+        accepted <= 8,
+        "checksummed frames should reject nearly all mutations, accepted {accepted}/400"
+    );
+}
+
+/// The live deployment spills one recorder per shard under the flight
+/// dir. Kill -9 (drop without close), then replay the whole tree and
+/// read the admit → durable → reply-sent arc back post-mortem — the
+/// exact reconstruction `wu-uct flight` performs in the CI smoke.
+#[test]
+fn killed_live_service_leaves_a_replayable_flight_dir() {
+    let dir = temp_dir("flight-live");
+    let flight = dir.join("flight");
+    let mut cfg = durable_cfg(2, &dir.join("data"));
+    cfg.flight_dir = Some(flight.clone());
+    let sid = {
+        let svc = ShardedService::start_durable(cfg).unwrap();
+        let h = svc.handle();
+        let sid = h.open(Box::new(garnet(8)), spec(16, 8), opts(8)).unwrap();
+        let t = h.think(sid, 0).unwrap();
+        assert!(t.quiescent);
+        sid
+        // svc dropped without close: the flight dir is all that's left.
+    };
+    let replay = replay_flight_tree(&flight).unwrap();
+    assert_eq!(replay.segments, 2, "one fresh segment per shard per boot");
+    let kinds: Vec<EventKind> =
+        replay.events.iter().filter(|e| e.session == sid).map(|e| e.kind).collect();
+    assert!(kinds.contains(&EventKind::ThinkDone));
+    let admit = kinds.iter().position(|&k| k == EventKind::Admit).expect("admit");
+    let durable = kinds.iter().rposition(|&k| k == EventKind::Durable).expect("durable");
+    let sent = kinds.iter().rposition(|&k| k == EventKind::ReplySent).expect("reply_sent");
+    assert!(
+        admit < durable && durable < sent,
+        "admit → durable → reply_sent arc must survive the kill"
+    );
 }
