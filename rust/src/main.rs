@@ -3,7 +3,9 @@
 //!
 //! ```text
 //! wu-uct search        one search on a named environment
-//! wu-uct play          full episode with search-per-step
+//! wu-uct play          interactive anytime demo: a fixed time budget of
+//!                      deadline-bounded thinking per frame, best action
+//!                      taken when the clock expires (--ticks bounds it)
 //! wu-uct serve         multi-session search service over TCP (JSON lines);
 //!                      with --hosts a:p,b:p it becomes a stateless router
 //!                      over remote shard hosts
@@ -24,10 +26,12 @@
 use anyhow::{bail, Result};
 use wu_uct::env::{atari, tapgame::Level, tapgame::TapGame, Env};
 use wu_uct::experiments::{self, Scale};
-use wu_uct::gameplay::play_episode;
 use wu_uct::mcts::{by_name, SearchSpec};
 use wu_uct::passrate::SystemConfig;
-use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, StatsServer, TcpServer};
+use wu_uct::service::{
+    QosClass, ServiceConfig, SessionOptions, ShardedConfig, ShardedService, StatsServer,
+    TcpServer,
+};
 use wu_uct::util::cli::{usage, Args, OptSpec};
 
 fn specs() -> Vec<OptSpec> {
@@ -53,6 +57,11 @@ fn specs() -> Vec<OptSpec> {
             default: Some("0"),
         },
         OptSpec { name: "no-steal", help: "serve: disable cross-shard work stealing", default: None },
+        OptSpec {
+            name: "max-conns",
+            help: "serve: cap on concurrent TCP connections; beyond it new ones get one busy line (0 = unlimited)",
+            default: Some("0"),
+        },
         OptSpec {
             name: "data-dir",
             help: "serve: durable session store directory (empty = memory-only)",
@@ -116,10 +125,14 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "topk", help: "top: root actions shown per inspect", default: Some("5") },
         OptSpec {
             name: "ticks",
-            help: "top: refresh this many times then exit (0 = until killed)",
+            help: "top/play: this many refreshes/frames then exit (0 = until killed / terminal)",
             default: Some("0"),
         },
-        OptSpec { name: "interval-ms", help: "top: refresh interval", default: Some("1000") },
+        OptSpec {
+            name: "interval-ms",
+            help: "top: refresh interval; play: per-frame thinking budget (ms)",
+            default: Some("1000"),
+        },
         OptSpec {
             name: "join",
             help: "shard-host: register with this router and heartbeat it (host:port)",
@@ -421,6 +434,91 @@ fn run_top(addr: &str, ticks: usize, interval_ms: u64, session: u64, topk: usize
     Ok(())
 }
 
+/// `wu-uct play`: the anytime-serving demo — one local WU-UCT service,
+/// one latency-class session, and a fixed per-frame time budget. Every
+/// frame issues a deadline-bounded think (`think_ms` = `--interval-ms`),
+/// advances the environment on the action the clock-cut search returned,
+/// and redraws the stats block with the same diff-render loop `wu-uct
+/// top` uses. `--ticks N` bounds the episode for headless runs (0 =
+/// play until the episode terminates).
+fn run_play(
+    env_name: &str,
+    scale: &Scale,
+    exp_workers: usize,
+    frame_ms: u64,
+    ticks: usize,
+) -> Result<()> {
+    let service = ShardedService::start(ShardedConfig {
+        shards: 1,
+        shard: ServiceConfig {
+            expansion_workers: exp_workers.max(1),
+            simulation_workers: scale.workers.max(1),
+            seed: scale.seed,
+            ..ServiceConfig::default()
+        },
+        ..ShardedConfig::default()
+    });
+    let h = service.handle();
+    let spec = SearchSpec {
+        max_simulations: scale.max_simulations,
+        rollout_limit: scale.rollout_limit,
+        seed: scale.seed,
+        ..SearchSpec::default()
+    };
+    let sims_cap = spec.max_simulations;
+    let sid = h.open(
+        make_env(env_name, scale.seed),
+        spec,
+        SessionOptions {
+            class: QosClass::Latency,
+            env_seed: scale.seed,
+            ..SessionOptions::default()
+        },
+    )?;
+    println!(
+        "wu-uct play — {env_name}: {frame_ms}ms of thinking per frame \
+         (cap {sims_cap} sims), best-so-far action at the deadline"
+    );
+    let mut prev: Vec<String> = Vec::new();
+    let mut step = 0usize;
+    let mut ret = 0.0f64;
+    loop {
+        step += 1;
+        let t = h.think_deadline(sid, 0, frame_ms, 0)?;
+        let adv = h.advance(sid, t.action)?;
+        ret += adv.reward;
+        // `cut` = the deadline expired mid-search and in-flight work was
+        // folded; `hit` = the sims cap drained before the clock ran out.
+        let cut = if t.cutoff == Some(true) { "cut" } else { "hit" };
+        let frame = vec![
+            format!(
+                "step {step:>4} | action a{} | reward {:+.1} | return {:+.1}",
+                t.action, adv.reward, ret
+            ),
+            format!(
+                "sims {:>6} ({cut}) | think {:>7.1}ms | tree {:>6} | ΣO=0 {} | reused {}",
+                t.sims,
+                t.elapsed_ms,
+                t.tree_size,
+                if t.quiescent { "yes" } else { "NO" },
+                if adv.reused { "yes" } else { "no" },
+            ),
+        ];
+        draw_frame(&mut prev, frame);
+        if adv.done {
+            println!("episode done: return {ret:+.1} over {step} step(s)");
+            break;
+        }
+        if ticks > 0 && step >= ticks {
+            println!("stopping after --ticks {ticks}: return {ret:+.1} so far");
+            break;
+        }
+    }
+    let c = h.close(sid)?;
+    anyhow::ensure!(c.unobserved == 0, "session closed with ΣO = {}", c.unobserved);
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(argv.iter().map(|s| s.as_str()), &specs())?;
@@ -460,29 +558,20 @@ fn main() -> Result<()> {
             );
         }
         "play" => {
-            let mut env = make_env(args.str("env")?, scale.seed);
-            let spec = SearchSpec {
-                max_simulations: scale.max_simulations,
-                rollout_limit: scale.rollout_limit,
-                seed: scale.seed,
-                ..SearchSpec::default()
-            };
-            let mut search = by_name(args.str("algo")?, spec, scale.workers)?;
-            let r = play_episode(search.as_mut(), env.as_mut(), scale.seed, scale.max_episode_steps);
-            println!(
-                "{} on {}: reward {:.1} in {} steps ({:?}/step)",
-                search.name(),
-                env.name(),
-                r.total_reward,
-                r.steps,
-                r.time_per_step
-            );
+            run_play(
+                args.str("env")?,
+                &scale,
+                args.usize("exp-workers")?.max(1),
+                args.u64("interval-ms")?.max(10),
+                args.usize("ticks")?,
+            )?;
         }
         "serve" | "shard-host" => {
             let exp_workers = args.usize("exp-workers")?.max(1);
             let sim_workers = args.usize("workers")?.max(1);
             let shards = args.usize_at_least("shards", 1)?;
             let max_sessions = args.usize("max-sessions")?;
+            let max_conns = args.usize("max-conns")?;
             let data_dir = args.str("data-dir")?.to_string();
             let snapshot_every = args.u32("snapshot-every")?.max(1);
             let full_every = args.u32("full-every")?.max(1);
@@ -510,7 +599,14 @@ fn main() -> Result<()> {
                     lease_ttl_ms: args.u64("lease-ttl-ms")?.max(1),
                     ..wu_uct::service::RouterConfig::new(hosts.clone())
                 })?;
-                let server = TcpServer::bind(router.handle(), args.str("addr")?)?;
+                let server = TcpServer::bind_with_limit(
+                    router.handle(),
+                    args.str("addr")?,
+                    (max_conns > 0).then_some(max_conns),
+                )?;
+                if max_conns > 0 {
+                    println!("connection cap: {max_conns} concurrent, one busy line beyond");
+                }
                 println!(
                     "wu-uct serve (router): listening on {}, routing over {} shard host(s): {}",
                     server.local_addr(),
@@ -561,11 +657,18 @@ fn main() -> Result<()> {
                 flight_dir: (!flight_dir.is_empty()).then(|| flight_dir.clone().into()),
                 ..ShardedConfig::default()
             })?;
-            let server = TcpServer::bind(service.handle(), args.str("addr")?)?;
+            let server = TcpServer::bind_with_limit(
+                service.handle(),
+                args.str("addr")?,
+                (max_conns > 0).then_some(max_conns),
+            )?;
             println!(
                 "wu-uct {command}: listening on {} ({shards} shard(s), each {exp_workers} expansion / {sim_workers} simulation workers)",
                 server.local_addr(),
             );
+            if max_conns > 0 {
+                println!("connection cap: {max_conns} concurrent, one busy line beyond");
+            }
             let stats_addr = args.str("stats-addr")?.to_string();
             let _stats = if stats_addr.is_empty() {
                 None

@@ -26,6 +26,32 @@ use crate::tree::{NodeId, ScoreMode, Tree};
 use crate::util::rng::Pcg32;
 use crate::util::timer::{Breakdown, Phase};
 
+/// Typed invariant-violation report: an unobserved-sample decrement
+/// (Eq. 6 complete update or a [`SearchDriver::fold_in_flight`] cancel)
+/// found `O = 0` where a matching Eq. 5 incomplete update should have
+/// left `O > 0`. The unchecked code wrapped the counter toward
+/// `u64::MAX` in release builds and poisoned every subsequent Eq. 4
+/// score; the checked path skips the decrement, counts the mismatch,
+/// and lets callers surface this error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreeCorruption {
+    /// Unmatched `O` decrements detected since the driver was built.
+    pub mismatches: u64,
+}
+
+impl std::fmt::Display for TreeCorruption {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tree corruption: {} unmatched unobserved-count decrement(s); \
+             the task table disagrees with the tree's Eq. 5 bookkeeping",
+            self.mismatches
+        )
+    }
+}
+
+impl std::error::Error for TreeCorruption {}
+
 /// Where the driver ships work. Implementations submit the task to a pool
 /// and return the id the eventual result will carry.
 pub trait TaskSink {
@@ -78,6 +104,9 @@ pub struct SearchDriver {
     /// of scanning every node ([`Tree::total_unobserved`] stays the
     /// ground truth the property suite checks this against).
     unobserved: u64,
+    /// Unmatched `O` decrements detected by the checked Eq. 6/fold
+    /// walks (see [`TreeCorruption`]); 0 on a healthy tree.
+    corruptions: u64,
     master: Breakdown,
     began: Instant,
 }
@@ -97,6 +126,7 @@ impl SearchDriver {
             completed: 0,
             budget: 0,
             unobserved: 0,
+            corruptions: 0,
             master: Breakdown::new(),
             began: Instant::now(),
         }
@@ -197,6 +227,7 @@ impl SearchDriver {
             completed: 0,
             budget: 0,
             unobserved: 0,
+            corruptions: 0,
             master: Breakdown::new(),
             began: Instant::now(),
         }
@@ -219,22 +250,51 @@ impl SearchDriver {
             match kind {
                 TaskKind::Simulate => {
                     let mut undone = 0u64;
+                    let mut bad = 0u64;
                     self.tree.for_path_to_root(node, |n| {
-                        debug_assert!(n.o > 0, "fold without matching incomplete update");
-                        n.o -= 1;
-                        undone += 1;
+                        // Checked: an inconsistent task table must not
+                        // wrap `o` (u32) or `ΣO` (u64) toward MAX —
+                        // count the mismatch and keep the tree sane.
+                        if n.o > 0 {
+                            n.o -= 1;
+                            undone += 1;
+                        } else {
+                            bad += 1;
+                        }
                     });
-                    self.unobserved -= undone;
+                    self.unobserved = self.unobserved.saturating_sub(undone);
+                    self.corruptions += bad;
                 }
                 TaskKind::Expand { action } => {
                     self.tree.node_mut(node).untried.push(action);
                 }
             }
-            self.issued -= 1;
+            self.issued = self.issued.saturating_sub(1);
             ids.push(id);
         }
         debug_assert_eq!(self.tree.total_unobserved(), 0, "fold must drain every O");
         ids
+    }
+
+    /// Unmatched `O` decrements detected so far (see [`TreeCorruption`]).
+    pub fn corruptions(&self) -> u64 {
+        self.corruptions
+    }
+
+    /// The typed corruption error, if any checked decrement ever found
+    /// the tree and the task table disagreeing.
+    pub fn corruption_error(&self) -> Option<TreeCorruption> {
+        (self.corruptions > 0).then_some(TreeCorruption { mismatches: self.corruptions })
+    }
+
+    /// Clamp the think budget to the rollouts already completed — the
+    /// anytime cutoff: after [`SearchDriver::fold_in_flight`] the tree is
+    /// quiescent and `issued == completed`, so this makes the think
+    /// [`SearchDriver::done`] at its truncated budget instead of
+    /// re-issuing the folded rollouts.
+    pub fn truncate_budget(&mut self) {
+        self.budget = self.completed;
+        self.issued = self.completed;
     }
 
     pub fn master(&self) -> &Breakdown {
@@ -320,8 +380,10 @@ impl SearchDriver {
                 let bp = Instant::now();
                 let (node, kind) = self.tasks.resolve(res.task_id);
                 debug_assert_eq!(kind, TaskKind::Simulate);
-                let drained = Self::complete_update(&mut self.tree, node, res.ret, self.spec.gamma);
-                self.unobserved -= drained;
+                let (drained, bad) =
+                    Self::complete_update(&mut self.tree, node, res.ret, self.spec.gamma);
+                self.unobserved = self.unobserved.saturating_sub(drained);
+                self.corruptions += bad;
                 self.master.add(Phase::Backpropagation, bp.elapsed());
                 self.completed += 1;
             }
@@ -376,27 +438,39 @@ impl SearchDriver {
 
     /// Eq. 6 + Eq. 3: `O -= 1; N += 1; V ← mean` along the path, folding
     /// edge rewards into the return exactly like sequential backprop.
-    /// Returns the number of nodes touched (the `ΣO` drained).
-    fn complete_update(tree: &mut Tree, node: NodeId, sim_return: f64, gamma: f64) -> u64 {
+    /// Returns `(drained, mismatches)`: the `ΣO` actually drained, and
+    /// how many nodes had no matching incomplete update to cancel (a
+    /// healthy tree always reports 0 — the checked decrement keeps an
+    /// inconsistent task table from wrapping the counters in release
+    /// builds; callers fold mismatches into [`SearchDriver::corruptions`]).
+    fn complete_update(tree: &mut Tree, node: NodeId, sim_return: f64, gamma: f64) -> (u64, u64) {
         let mut ret = sim_return;
         let mut cur = node;
-        let mut touched = 1u64;
+        let mut drained = 0u64;
+        let mut mismatched = 0u64;
         {
             let n = tree.node_mut(cur);
-            debug_assert!(n.o > 0, "complete update without matching incomplete");
-            n.o -= 1;
+            if n.o > 0 {
+                n.o -= 1;
+                drained += 1;
+            } else {
+                mismatched += 1;
+            }
             n.observe(ret);
         }
         while let Some(parent) = tree.node(cur).parent {
             ret = tree.node(cur).reward + gamma * ret;
             let p = tree.node_mut(parent);
-            debug_assert!(p.o > 0, "complete update without matching incomplete");
-            p.o -= 1;
+            if p.o > 0 {
+                p.o -= 1;
+                drained += 1;
+            } else {
+                mismatched += 1;
+            }
             p.observe(ret);
             cur = parent;
-            touched += 1;
         }
-        touched
+        (drained, mismatched)
     }
 
     /// Restore a fresh emulator clone to `node`'s snapshot.
@@ -417,8 +491,9 @@ impl SearchDriver {
     fn queue_simulation(&mut self, node: NodeId, sink: &mut dyn TaskSink) -> bool {
         self.unobserved += Self::incomplete_update(&mut self.tree, node);
         if self.tree.node(node).terminal {
-            let drained = Self::complete_update(&mut self.tree, node, 0.0, self.spec.gamma);
-            self.unobserved -= drained;
+            let (drained, bad) = Self::complete_update(&mut self.tree, node, 0.0, self.spec.gamma);
+            self.unobserved = self.unobserved.saturating_sub(drained);
+            self.corruptions += bad;
             self.completed += 1;
             return false;
         }
@@ -623,6 +698,64 @@ mod tests {
         sink.queue.clear();
         run_to_completion(&mut d, &mut sink);
         assert_eq!(d.completed(), 24);
+    }
+
+    #[test]
+    fn truncate_budget_finishes_an_anytime_think_at_the_cutoff() {
+        let env = Garnet::new(15, 3, 30, 0.0, 8);
+        let mut d = SearchDriver::new(spec(40, 8), &env);
+        let mut sink = InlineSink::default();
+        d.begin(40);
+        while d.completed() < 10 {
+            while d.can_issue() && d.outstanding() < 4 {
+                d.issue(&mut sink);
+            }
+            let task = sink.queue.pop_front().expect("work queued");
+            d.absorb(execute(task), &mut sink);
+        }
+        // The clock expires mid-think: fold, truncate, and the think is
+        // complete at exactly the rollouts that finished.
+        let completed_at_cutoff = d.completed();
+        d.fold_in_flight();
+        d.truncate_budget();
+        assert!(d.done(), "truncated think must be complete");
+        assert!(!d.can_issue(), "no rollouts may issue past the cutoff");
+        assert_eq!(d.budget(), completed_at_cutoff);
+        d.assert_quiescent();
+        assert_eq!(d.corruptions(), 0);
+        // A later think resumes normally on the same tree.
+        sink.queue.clear();
+        d.begin(8);
+        run_to_completion(&mut d, &mut sink);
+        assert_eq!(d.completed(), 8);
+    }
+
+    #[test]
+    fn inconsistent_task_table_is_counted_not_wrapped() {
+        // Regression for the release-mode path of fold_in_flight: the old
+        // code guarded `n.o -= 1` / `unobserved -= undone` only with
+        // debug_assert!, so a task-table entry with no matching Eq. 5
+        // update wrapped ΣO toward u64::MAX in release builds. The
+        // checked decrement (the same branch in debug and release) must
+        // leave the counters at zero and surface the typed error instead.
+        let env = Garnet::new(15, 3, 30, 0.0, 10);
+        let mut d = SearchDriver::new(spec(8, 10), &env);
+        d.begin(8);
+        // Forge the inconsistency: a Simulate entry for the root with no
+        // incomplete update applied (root has o = 0).
+        d.tasks.insert(77, Tree::ROOT, TaskKind::Simulate);
+        d.issued += 1;
+        let folded = d.fold_in_flight();
+        assert_eq!(folded, vec![77]);
+        assert_eq!(d.unobserved(), 0, "ΣO must not wrap");
+        assert_eq!(d.tree().node(Tree::ROOT).o, 0, "per-node o must not wrap");
+        assert_eq!(d.corruptions(), 1);
+        let err = d.corruption_error().expect("typed corruption error");
+        assert_eq!(err.mismatches, 1);
+        assert!(err.to_string().contains("tree corruption"));
+        // A healthy driver reports no corruption.
+        let healthy = SearchDriver::new(spec(4, 11), &env);
+        assert!(healthy.corruption_error().is_none());
     }
 
     #[test]

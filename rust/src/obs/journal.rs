@@ -63,6 +63,10 @@ pub enum EventKind {
     SessionOpen,
     /// A session closed.
     SessionClose,
+    /// A think's deadline expired mid-search: in-flight tasks were folded
+    /// back to quiescence and the think finished at its truncated budget
+    /// (`arg` = tasks folded).
+    DeadlineCut,
 }
 
 impl EventKind {
@@ -90,6 +94,7 @@ impl EventKind {
             EventKind::Snapshot => "snapshot",
             EventKind::SessionOpen => "session_open",
             EventKind::SessionClose => "session_close",
+            EventKind::DeadlineCut => "deadline_cut",
         }
     }
 
@@ -117,6 +122,7 @@ impl EventKind {
             "snapshot" => EventKind::Snapshot,
             "session_open" => EventKind::SessionOpen,
             "session_close" => EventKind::SessionClose,
+            "deadline_cut" => EventKind::DeadlineCut,
             _ => return None,
         })
     }
@@ -145,6 +151,9 @@ impl EventKind {
             EventKind::Snapshot,
             EventKind::SessionOpen,
             EventKind::SessionClose,
+            // Appended last: the flight recorder encodes kinds by their
+            // position in this slice, so order is a wire format.
+            EventKind::DeadlineCut,
         ]
     }
 }

@@ -32,9 +32,10 @@ use crate::service::metrics::ServiceMetrics;
 use crate::service::proto::{
     event_from_json, image_from_hex, image_to_hex, metrics_from_json, summary_from_json,
 };
+use crate::service::fair::QosClass;
 use crate::service::lease::LeaseLost;
 use crate::service::scheduler::{
-    AdvanceReply, Busy, CloseReply, SessionOptions, SessionStat, ThinkReply,
+    AdvanceReply, Busy, CloseReply, SessionOptions, SessionStat, ThinkReply, ZeroThink,
 };
 use crate::service::{PromoteReply, ReplShardStatus};
 use crate::store::migrate::Recovering;
@@ -214,6 +215,10 @@ impl HostClient {
             return Err(anyhow::Error::new(LeaseLost { session })
                 .context(format!("host {}: {msg}", self.addr)));
         }
+        if v.get("zero_think").and_then(|b| b.as_bool()) == Some(true) {
+            return Err(anyhow::Error::new(ZeroThink { session })
+                .context(format!("host {}: {msg}", self.addr)));
+        }
         Err(anyhow!("host {}: {msg}", self.addr))
     }
 
@@ -258,6 +263,11 @@ impl HostClient {
         if let Some(budget) = opts.total_sim_budget {
             fields.push(("budget".to_string(), Json::Num(budget as f64)));
         }
+        if opts.class != QosClass::Throughput {
+            // Throughput is the wire default; omit it so older hosts
+            // still parse the request.
+            fields.push(("class".to_string(), Json::Str(opts.class.name().to_string())));
+        }
         let v = self.ok_call_once(&Json::Obj(fields).render(), id)?;
         v.get("session")
             .and_then(|s| s.as_u64())
@@ -277,7 +287,31 @@ impl HostClient {
         } else {
             format!(r#"{{"op":"think","session":{session},"sims":{sims},"trace":{trace}}}"#)
         };
-        let v = self.ok_call_once(&line, session)?;
+        self.think_call(&line, session)
+    }
+
+    /// Deadline-bounded think: `think_ms` caps the wall clock (measured
+    /// on the owning shard), `sims` caps the budget (0 = the session
+    /// default), and the reply's `cutoff` says which bound ended the
+    /// search. Like every think, never retried on a lost reply.
+    pub fn think_deadline(
+        &self,
+        session: u64,
+        sims: u32,
+        think_ms: u64,
+        trace: u64,
+    ) -> Result<ThinkReply> {
+        let mut line =
+            format!(r#"{{"op":"think","session":{session},"sims":{sims},"think_ms":{think_ms}"#);
+        if trace != 0 {
+            line.push_str(&format!(r#","trace":{trace}"#));
+        }
+        line.push('}');
+        self.think_call(&line, session)
+    }
+
+    fn think_call(&self, line: &str, session: u64) -> Result<ThinkReply> {
+        let v = self.ok_call_once(line, session)?;
         let field = |key: &str| {
             v.get(key)
                 .and_then(|x| x.as_f64())
@@ -291,6 +325,7 @@ impl HostClient {
             elapsed_ms: field("ms")?,
             quiescent: v.get("quiescent").and_then(|q| q.as_bool()).unwrap_or(false),
             remaining: v.get("remaining").and_then(|r| r.as_u64()),
+            cutoff: v.get("cutoff").and_then(|c| c.as_bool()),
         })
     }
 
@@ -620,6 +655,41 @@ mod tests {
         assert_eq!(s.unobserved, 0, "ΣO drains before the think reply");
         assert!(s.tree_size > 1);
         assert!(s.top.len() <= 3);
+        client.close(sid).unwrap();
+    }
+
+    #[test]
+    fn deadline_think_and_qos_class_travel_the_wire() {
+        let (_svc, _server, client) = start_host();
+        let opts = SessionOptions {
+            env_seed: 6,
+            class: QosClass::Latency,
+            ..SessionOptions::default()
+        };
+        let sid = client.open_with_id(21, "garnet", &spec(6), &opts).unwrap();
+
+        // Generous deadline: the sims cap drains first.
+        let t = client.think_deadline(sid, 6, 60_000, 0).unwrap();
+        assert_eq!(t.cutoff, Some(false));
+        assert_eq!(t.sims, 6);
+
+        // Tight deadline under a huge budget: the clock cuts, and the
+        // folded tree is still quiescent at the reply.
+        let t = client.think_deadline(sid, 1_000_000, 25, 0).unwrap();
+        assert_eq!(t.cutoff, Some(true), "clock must cut a 1M-sim budget");
+        assert!(t.quiescent);
+        assert!(t.sims < 1_000_000);
+
+        // Plain thinks carry no cutoff marker.
+        let t = client.think(sid, 4).unwrap();
+        assert_eq!(t.cutoff, None);
+
+        // A 0/0 think maps back to the typed rejection, like Busy does.
+        let zero = SearchSpec { max_simulations: 0, ..spec(6) };
+        let sid2 = client.open_with_id(22, "garnet", &zero, &opts).unwrap();
+        let err = client.think(sid2, 0).unwrap_err();
+        assert!(err.downcast_ref::<ZeroThink>().is_some(), "expected ZeroThink, got: {err:#}");
+        client.close(sid2).unwrap();
         client.close(sid).unwrap();
     }
 

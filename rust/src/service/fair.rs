@@ -21,6 +21,51 @@
 
 use std::collections::HashMap;
 
+/// Per-session quality-of-service class, honored by the fair queue via
+/// class-weighted strides: a `Latency` lane's effective weight is its
+/// configured weight times [`QosClass::weight_factor`], so its stride is
+/// that much shorter and it preempts `Throughput` lanes at equal
+/// configured weight — interactive (deadline-bounded) sessions keep
+/// issuing while batch sessions absorb the slack. Carried in
+/// [`SessionOptions`](crate::service::SessionOptions) and on the wire as
+/// the `open` op's `class` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QosClass {
+    /// Interactive, deadline-sensitive traffic; preempts batch.
+    Latency,
+    /// Batch, best-effort traffic (the default).
+    #[default]
+    Throughput,
+}
+
+impl QosClass {
+    /// Multiplier applied to the session weight when its lane is
+    /// admitted ([`FairQueue::admit_class`]).
+    pub fn weight_factor(self) -> f64 {
+        match self {
+            QosClass::Latency => 4.0,
+            QosClass::Throughput => 1.0,
+        }
+    }
+
+    /// Stable wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Latency => "latency",
+            QosClass::Throughput => "throughput",
+        }
+    }
+
+    /// Inverse of [`QosClass::name`].
+    pub fn from_name(name: &str) -> Option<QosClass> {
+        match name {
+            "latency" => Some(QosClass::Latency),
+            "throughput" => Some(QosClass::Throughput),
+            _ => None,
+        }
+    }
+}
+
 /// Per-lane stride state.
 #[derive(Debug, Clone, Copy)]
 struct Lane {
@@ -48,6 +93,12 @@ impl FairQueue {
     pub fn admit(&mut self, id: u64, weight: f64) {
         let stride = 1.0 / weight.max(1e-6);
         self.lanes.insert(id, Lane { deadline: self.virtual_time, stride });
+    }
+
+    /// [`FairQueue::admit`] with the lane's QoS class folded into its
+    /// effective weight (class-weighted stride).
+    pub fn admit_class(&mut self, id: u64, weight: f64, class: QosClass) {
+        self.admit(id, weight * class.weight_factor());
     }
 
     pub fn remove(&mut self, id: u64) {
@@ -142,6 +193,30 @@ mod tests {
         let counts = run(&mut q, &[1, 2], 30);
         assert_eq!(counts[&1], 20);
         assert_eq!(counts[&2], 10);
+    }
+
+    #[test]
+    fn latency_class_preempts_equal_weight_throughput() {
+        // Same configured weight, different class: the latency lane's
+        // stride is weight_factor() times shorter, so it takes that
+        // multiple of the issue share.
+        let mut q = FairQueue::new();
+        q.admit_class(1, 1.0, QosClass::Latency);
+        q.admit_class(2, 1.0, QosClass::Throughput);
+        let counts = run(&mut q, &[1, 2], 50);
+        assert_eq!(counts[&1], 40, "latency lane gets 4x: {counts:?}");
+        assert_eq!(counts[&2], 10);
+    }
+
+    #[test]
+    fn qos_class_names_roundtrip() {
+        for class in [QosClass::Latency, QosClass::Throughput] {
+            assert_eq!(QosClass::from_name(class.name()), Some(class));
+        }
+        assert_eq!(QosClass::from_name("bulk"), None);
+        assert_eq!(QosClass::default(), QosClass::Throughput);
+        assert_eq!(QosClass::Throughput.weight_factor(), 1.0);
+        assert!(QosClass::Latency.weight_factor() > 1.0);
     }
 
     #[test]

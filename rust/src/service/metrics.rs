@@ -100,6 +100,26 @@ pub struct ServiceMetrics {
     /// Best-action flips across completed thinks, summed over sessions
     /// (see the `inspect` op's per-session counter).
     pub best_flips: u64,
+    /// Deadline thinks (`think_ms`) that finished their full simulation
+    /// budget before the clock expired.
+    pub deadline_hits: u64,
+    /// Deadline thinks cut off by the clock: in-flight tasks were folded
+    /// back to quiescence and the current best action was returned.
+    pub deadline_misses: u64,
+    /// Unmatched unobserved-count decrements detected by the checked
+    /// Eq. 6/fold walks, summed over open sessions (see
+    /// [`TreeCorruption`](crate::mcts::wu_uct::driver::TreeCorruption));
+    /// 0 on a healthy deployment.
+    pub tree_corruptions: u64,
+    /// Line-protocol connections currently being served (gauge; summed
+    /// across processes when host reports aggregate).
+    pub active_connections: usize,
+    /// Connections shed at the `--max-conns` cap with the typed `busy`
+    /// line-reply.
+    pub connections_shed: u64,
+    /// Connection/scrape handler threads that died by panic — dead
+    /// handlers must be visible, not silent.
+    pub handler_panics: u64,
     /// Episodes retired per second (closed sessions / uptime).
     pub sessions_per_sec: f64,
     pub thinks_per_sec: f64,
@@ -123,6 +143,11 @@ pub struct ServiceMetrics {
     /// `commit_hold_hist.count()` ≤ `thinks` and the gap is the fraction
     /// of replies the group commit already covered when they finished.
     pub commit_hold_hist: Histogram,
+    /// Simulations completed when a deadline think finished — a *count*
+    /// distribution riding the log-bucket histogram (the bucket unit is
+    /// sims, not ms). One sample per deadline think, hit or miss, so
+    /// `deadline_sims_hist.count() == deadline_hits + deadline_misses`.
+    pub deadline_sims_hist: Histogram,
     /// Busy fraction of the shared pools (paper Fig. 2's occupancy).
     pub exp_occupancy: f64,
     pub sim_occupancy: f64,
@@ -184,10 +209,17 @@ impl ServiceMetrics {
             total.journal_dropped += m.journal_dropped;
             total.unobserved += m.unobserved;
             total.best_flips += m.best_flips;
+            total.deadline_hits += m.deadline_hits;
+            total.deadline_misses += m.deadline_misses;
+            total.tree_corruptions += m.tree_corruptions;
+            total.active_connections += m.active_connections;
+            total.connections_shed += m.connections_shed;
+            total.handler_panics += m.handler_panics;
             total.think_hist.merge(&m.think_hist);
             total.expand_hist.merge(&m.expand_hist);
             total.sim_hist.merge(&m.sim_hist);
             total.commit_hold_hist.merge(&m.commit_hold_hist);
+            total.deadline_sims_hist.merge(&m.deadline_sims_hist);
             weighted_mean += m.think_ms_mean * m.thinks as f64;
             worst.0 = worst.0.max(m.think_ms_p50);
             worst.1 = worst.1.max(m.think_ms_p90);
@@ -269,6 +301,12 @@ impl ServiceMetrics {
         gauge("wuuct_journal_dropped_total", "journal events evicted by the ring bound", self.journal_dropped as f64);
         gauge("wuuct_unobserved", "unobserved samples in flight (sum of O over all trees)", self.unobserved as f64);
         gauge("wuuct_best_flips_total", "best-action flips across completed thinks", self.best_flips as f64);
+        gauge("wuuct_deadline_hits_total", "deadline thinks that finished their budget in time", self.deadline_hits as f64);
+        gauge("wuuct_deadline_misses_total", "deadline thinks cut off by the clock", self.deadline_misses as f64);
+        gauge("wuuct_tree_corruptions_total", "unmatched unobserved-count decrements detected", self.tree_corruptions as f64);
+        gauge("wuuct_active_connections", "line-protocol connections being served", self.active_connections as f64);
+        gauge("wuuct_connections_shed_total", "connections shed at the --max-conns cap", self.connections_shed as f64);
+        gauge("wuuct_handler_panics_total", "connection/scrape handlers that died by panic", self.handler_panics as f64);
         gauge("wuuct_sessions_per_sec", "episodes retired per second", self.sessions_per_sec);
         gauge("wuuct_thinks_per_sec", "thinks per second", self.thinks_per_sec);
         gauge("wuuct_sims_per_sec", "simulations per second", self.sims_per_sec);
@@ -286,6 +324,12 @@ impl ServiceMetrics {
             "wuuct_commit_hold_ms",
             "time replies spent parked on commit tickets",
             &self.commit_hold_hist,
+        );
+        render_histogram(
+            &mut out,
+            "wuuct_deadline_sims",
+            "simulations completed when a deadline think finished (count, not ms)",
+            &self.deadline_sims_hist,
         );
         out
     }
@@ -497,9 +541,14 @@ mod tests {
         let mut m = shard_with(&[0.5, 5.0, 5.0, 50.0], 4);
         m.held_replies_hwm = 3;
         m.commit_hold_hist.record(2.0);
+        m.deadline_misses = 2;
+        m.deadline_sims_hist.record(37.0);
         let text = m.prometheus_text();
         assert!(text.contains("wuuct_thinks_total 4"));
         assert!(text.contains("wuuct_held_replies_hwm 3"));
+        assert!(text.contains("wuuct_deadline_misses_total 2"));
+        assert!(text.contains("wuuct_deadline_sims_count 1"));
+        assert!(text.contains("wuuct_deadline_sims_bucket"));
         assert!(text.contains("# TYPE wuuct_think_latency_ms histogram"));
         assert!(text.contains("wuuct_think_latency_ms_count 4"));
         assert!(text.contains("wuuct_commit_hold_ms_count 1"));

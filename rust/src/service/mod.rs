@@ -80,15 +80,15 @@ use crate::mcts::common::SearchSpec;
 pub use crate::mcts::wu_uct::driver;
 pub use crate::mcts::wu_uct::driver::{AdvanceOutcome, IssueOutcome, SearchDriver, TaskSink};
 pub use client::{HostClient, HostUnreachable};
-pub use fair::FairQueue;
+pub use fair::{FairQueue, QosClass};
 pub use lease::{Lease, LeaseLost, LeaseTable};
 pub use membership::{HostInfo, HostState, HostTable, JoinOutcome};
 pub use metrics::ServiceMetrics;
 pub use placement::HashRing;
 pub use router::{Router, RouterConfig, RouterHandle};
 pub use scheduler::{
-    AdvanceReply, Busy, CloseReply, SearchService, ServiceConfig, ServiceHandle, SessionOptions,
-    SessionStat, ThinkReply,
+    AdvanceReply, Busy, Clock, CloseReply, SearchService, ServiceConfig, ServiceHandle,
+    SessionOptions, SessionStat, ThinkReply, ZeroThink,
 };
 pub use server::{StatsServer, TcpServer};
 pub use shard::{
@@ -207,6 +207,21 @@ pub trait SessionApi: Clone + Send + 'static {
     fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
         let _ = trace;
         self.think(session, sims)
+    }
+
+    /// Deadline-bounded anytime think (the wire `think` op's `think_ms`
+    /// field): return the current best action when the clock expires,
+    /// folding in-flight tasks back to quiescence first; `sims` still
+    /// caps the budget. Session-hosting deployments override this; the
+    /// default refuses rather than silently ignoring the deadline.
+    fn think_deadline(
+        &self,
+        _session: u64,
+        _sims: u32,
+        _think_ms: u64,
+        _trace: u64,
+    ) -> Result<ThinkReply> {
+        anyhow::bail!("deadline thinks require a deadline-aware deployment")
     }
 
     /// Read the event journal (the wire `trace` op): the newest `limit`
@@ -358,6 +373,16 @@ impl SessionApi for ServiceHandle {
 
     fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
         ServiceHandle::think_traced(self, session, sims, trace)
+    }
+
+    fn think_deadline(
+        &self,
+        session: u64,
+        sims: u32,
+        think_ms: u64,
+        trace: u64,
+    ) -> Result<ThinkReply> {
+        ServiceHandle::think_deadline(self, session, sims, think_ms, trace)
     }
 
     fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {

@@ -35,7 +35,14 @@
 //! `ping`. A `think` may carry
 //! `"trace":<id>` — the owning shard stamps the id on every journal
 //! event of that think, and routers forward it across processes, so one
-//! cross-host think reconstructs as one timeline.
+//! cross-host think reconstructs as one timeline. A `think` may also
+//! carry `"think_ms":<ms>` — a wall-clock deadline, combinable with
+//! `"sims"` as a cap. When the clock expires first the owning shard
+//! folds its in-flight tasks back to quiescence and replies with the
+//! best action so far; the reply's extra `"cutoff"` field says whether
+//! the clock (`true`) or the budget (`false`) ended the search. An
+//! `open` may carry `"class":"latency"|"throughput"` — the session's
+//! QoS class, honored by the fair queue via class-weighted strides.
 //!
 //! ## Cross-process host ops
 //!
@@ -111,10 +118,11 @@ use crate::env::tapgame::{Level, TapGame};
 use crate::env::{atari, garnet::Garnet, Env};
 use crate::mcts::common::SearchSpec;
 use crate::obs::{ActionStat, Event, EventKind, Histogram, SearchSummary};
+use crate::service::fair::QosClass;
 use crate::service::json::{obj, Json};
 use crate::service::lease::LeaseLost;
 use crate::service::metrics::ServiceMetrics;
-use crate::service::scheduler::{Busy, SessionOptions};
+use crate::service::scheduler::{Busy, SessionOptions, ZeroThink};
 use crate::service::{HostReport, JoinOutcome, SessionApi};
 use crate::store::migrate::Recovering;
 
@@ -288,6 +296,12 @@ fn error_line(err: &anyhow::Error) -> String {
         // had a winner and it was not this caller — back off, re-resolve.
         fields.push(("lease_lost".to_string(), Json::Bool(true)));
     }
+    if err.downcast_ref::<ZeroThink>().is_some() {
+        // The request named no work at all (sims 0, no deadline, and a
+        // zero per-session default): a client bug, not backpressure —
+        // fix the request rather than retrying it.
+        fields.push(("zero_think".to_string(), Json::Bool(true)));
+    }
     fields.push(("error".to_string(), Json::Str(format!("{err:#}"))));
     Json::Obj(fields).render()
 }
@@ -324,17 +338,31 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 op,
                 &[
                     "env", "seed", "sims", "rollout", "depth", "width", "gamma", "weight",
-                    "budget", "id",
+                    "budget", "class", "id",
                 ],
             )?;
             let env_name = req.get("env").and_then(|v| v.as_str()).unwrap_or("Breakout");
             let seed = field_u64(&req, "seed")?.unwrap_or(0);
             let env = make_env(env_name, seed)?;
             let spec = spec_from(&req, env_name)?;
+            let class = match req.get("class") {
+                None => QosClass::default(),
+                Some(v) => {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow!("field \"class\" must be a string"))?;
+                    QosClass::from_name(name).ok_or_else(|| {
+                        anyhow!(
+                            "unknown qos class {name:?} (expected \"latency\" or \"throughput\")"
+                        )
+                    })?
+                }
+            };
             let opts = SessionOptions {
                 think_sims: 0,
                 weight: field_f64(&req, "weight")?.unwrap_or(1.0),
                 total_sim_budget: field_u64(&req, "budget")?,
+                class,
                 // Durable recovery / migration rebuilds the env as
                 // make_env(name, seed), so record the construction seed.
                 env_seed: seed,
@@ -359,13 +387,21 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
             ))
         }
         "think" => {
-            reject_unknown_fields(&req, op, &["session", "sims", "trace"])?;
+            reject_unknown_fields(&req, op, &["session", "sims", "think_ms", "trace"])?;
             let sid = required_u64(&req, "session")?;
             let sims = field_u32(&req, "sims")?.unwrap_or(0);
+            // Optional wall-clock deadline in milliseconds (0 = none).
+            // Combinable with `sims`: whichever bound lands first ends
+            // the think, and the reply's `cutoff` says which it was.
+            let think_ms = field_u64(&req, "think_ms")?.unwrap_or(0);
             // Optional caller-supplied trace id (0 = untraced): stamped on
             // every journal event of this think, forwarded by routers.
             let trace = field_u64(&req, "trace")?.unwrap_or(0);
-            let t = handle.think_traced(sid, sims, trace)?;
+            let t = if think_ms > 0 {
+                handle.think_deadline(sid, sims, think_ms, trace)?
+            } else {
+                handle.think_traced(sid, sims, trace)?
+            };
             let mut fields = vec![
                 ("ok".to_string(), Json::Bool(true)),
                 ("action".to_string(), Json::Num(t.action as f64)),
@@ -377,6 +413,12 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
             ];
             if let Some(rem) = t.remaining {
                 fields.push(("remaining".to_string(), Json::Num(rem as f64)));
+            }
+            if let Some(cut) = t.cutoff {
+                // Deadline thinks only: true = the clock cut the search
+                // short (best-so-far action), false = the budget drained
+                // inside the deadline.
+                fields.push(("cutoff".to_string(), Json::Bool(cut)));
             }
             Ok((Json::Obj(fields), LineEffect::None))
         }
@@ -642,7 +684,9 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
             let per_host = handle.host_metrics()?;
             let doc = if per_host.is_empty() {
                 let per_shard = handle.shard_metrics()?;
-                let mut doc = metrics_json(&ServiceMetrics::aggregate(&per_shard));
+                let mut agg = ServiceMetrics::aggregate(&per_shard);
+                stamp_connection_stats(&mut agg);
+                let mut doc = metrics_json(&agg);
                 if per_shard.len() > 1 {
                     if let Json::Obj(fields) = &mut doc {
                         fields.push((
@@ -653,8 +697,9 @@ fn dispatch<H: SessionApi>(handle: &H, line: &[u8]) -> Result<(Json, LineEffect)
                 }
                 doc
             } else {
-                let aggregate =
+                let mut aggregate =
                     HostReport::aggregate(&per_host, handle.host_unreachable_total());
+                stamp_connection_stats(&mut aggregate);
                 let mut doc = metrics_json(&aggregate);
                 if let Json::Obj(fields) = &mut doc {
                     fields.push((
@@ -832,6 +877,20 @@ pub fn event_from_json(v: &Json) -> Result<Event> {
     })
 }
 
+/// Fold this process's TCP connection counters into a metrics snapshot.
+/// Shard schedulers know nothing about transports, so the gauge and the
+/// shed/panic counters live beside the accept loops
+/// ([`crate::service::server::connection_stats`]) and are stamped onto
+/// the aggregate here, where the `metrics` reply is assembled.
+fn stamp_connection_stats(m: &mut ServiceMetrics) {
+    let (active, shed, panics) = crate::service::server::connection_stats();
+    // `+=` throughout: a router's reply sums its own accept loops with
+    // whatever its hosts already reported in their metrics replies.
+    m.active_connections += active;
+    m.connections_shed += shed;
+    m.handler_panics += panics;
+}
+
 /// Render a metrics snapshot as the `metrics` response object.
 pub fn metrics_json(m: &ServiceMetrics) -> Json {
     obj([
@@ -860,6 +919,12 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("journal_dropped", Json::Num(m.journal_dropped as f64)),
         ("unobserved", Json::Num(m.unobserved as f64)),
         ("best_flips", Json::Num(m.best_flips as f64)),
+        ("deadline_hits", Json::Num(m.deadline_hits as f64)),
+        ("deadline_misses", Json::Num(m.deadline_misses as f64)),
+        ("tree_corruptions", Json::Num(m.tree_corruptions as f64)),
+        ("active_connections", Json::Num(m.active_connections as f64)),
+        ("connections_shed", Json::Num(m.connections_shed as f64)),
+        ("handler_panics", Json::Num(m.handler_panics as f64)),
         ("sessions_per_sec", Json::Num(m.sessions_per_sec)),
         ("thinks_per_sec", Json::Num(m.thinks_per_sec)),
         ("sims_per_sec", Json::Num(m.sims_per_sec)),
@@ -880,6 +945,7 @@ pub fn metrics_json(m: &ServiceMetrics) -> Json {
         ("expand_hist", hist_json(&m.expand_hist)),
         ("sim_hist", hist_json(&m.sim_hist)),
         ("commit_hold_hist", hist_json(&m.commit_hold_hist)),
+        ("deadline_sims_hist", hist_json(&m.deadline_sims_hist)),
     ])
 }
 
@@ -959,6 +1025,12 @@ pub fn metrics_from_json(v: &Json) -> ServiceMetrics {
         journal_dropped: int("journal_dropped"),
         unobserved: int("unobserved"),
         best_flips: int("best_flips"),
+        deadline_hits: int("deadline_hits"),
+        deadline_misses: int("deadline_misses"),
+        tree_corruptions: int("tree_corruptions"),
+        active_connections: int("active_connections") as usize,
+        connections_shed: int("connections_shed"),
+        handler_panics: int("handler_panics"),
         sessions_per_sec: num("sessions_per_sec"),
         thinks_per_sec: num("thinks_per_sec"),
         sims_per_sec: num("sims_per_sec"),
@@ -979,6 +1051,7 @@ pub fn metrics_from_json(v: &Json) -> ServiceMetrics {
         expand_hist: hist_from_json(v.get("expand_hist")),
         sim_hist: hist_from_json(v.get("sim_hist")),
         commit_hold_hist: hist_from_json(v.get("commit_hold_hist")),
+        deadline_sims_hist: hist_from_json(v.get("deadline_sims_hist")),
     }
 }
 
@@ -1026,6 +1099,9 @@ fn shard_metrics_json(m: &ServiceMetrics) -> Json {
         ("held_replies", Json::Num(m.held_replies as f64)),
         ("held_replies_hwm", Json::Num(m.held_replies_hwm as f64)),
         ("held_replies_shed", Json::Num(m.held_replies_shed as f64)),
+        ("deadline_hits", Json::Num(m.deadline_hits as f64)),
+        ("deadline_misses", Json::Num(m.deadline_misses as f64)),
+        ("tree_corruptions", Json::Num(m.tree_corruptions as f64)),
     ])
 }
 
@@ -1112,7 +1188,16 @@ mod tests {
             assert!(t.get(key).is_some(), "think reply missing {key:?}: {line}");
         }
         assert_eq!(t.get("remaining").unwrap().as_u64(), Some(92));
+        assert!(t.get("cutoff").is_none(), "plain thinks carry no cutoff: {line}");
         let action = t.get("action").unwrap().as_u64().unwrap();
+
+        // A deadline think adds exactly one field: `cutoff`.
+        let (line, _) = handle_line(
+            &h,
+            &format!(r#"{{"op":"think","session":{sid},"sims":4,"think_ms":60000}}"#),
+        );
+        let t = ok_field(&line);
+        assert_eq!(t.get("cutoff").unwrap().as_bool(), Some(false), "line: {line}");
 
         let (line, _) = handle_line(
             &h,
@@ -1219,7 +1304,9 @@ mod tests {
         for (bad, misfield) in [
             (r#"{"op":"ping","extra":1}"#, "extra"),
             (r#"{"op":"open","env":"garnet","sim":8}"#, "sim"),
+            (r#"{"op":"open","env":"garnet","qos":"latency"}"#, "qos"),
             (r#"{"op":"think","session":1,"budget":5}"#, "budget"),
+            (r#"{"op":"think","session":1,"deadline_ms":5}"#, "deadline_ms"),
             (r#"{"op":"advance","session":1,"action":0,"reward":1}"#, "reward"),
             (r#"{"op":"best","session":1,"sims":4}"#, "sims"),
             (r#"{"op":"close","session":1,"force":true}"#, "force"),
@@ -1289,6 +1376,66 @@ mod tests {
         let v = err_field(&line);
         assert_eq!(v.get("busy").and_then(|b| b.as_bool()), Some(true), "line: {line}");
         assert_eq!(effect, LineEffect::None);
+    }
+
+    /// The anytime-serving wire surface: `think_ms` bounds a think by the
+    /// clock (alone or beside a `sims` cap), the reply's `cutoff` says
+    /// which bound landed, a 0/0 think earns the typed `zero_think`
+    /// marker, and `open` accepts a QoS class (rejecting unknown names).
+    #[test]
+    fn deadline_thinks_and_zero_think_rejections_over_the_wire() {
+        let svc = service();
+        let h = svc.handle();
+        // sims:0 at open leaves the session with no default budget, so a
+        // bare think names no work at all.
+        let (line, _) = handle_line(
+            &h,
+            r#"{"op":"open","env":"garnet","seed":11,"sims":0,"rollout":4,"class":"latency"}"#,
+        );
+        let sid = ok_field(&line).get("session").unwrap().as_u64().unwrap();
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"think","session":{sid}}}"#));
+        let v = err_field(&line);
+        assert_eq!(v.get("zero_think").and_then(|b| b.as_bool()), Some(true), "line: {line}");
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("no simulation budget"));
+        assert!(v.get("busy").is_none(), "a client bug is not backpressure");
+
+        // A deadline alone is a valid bound: the clock cuts the search
+        // and the reply still carries a quiescent best-so-far action.
+        let (line, _) =
+            handle_line(&h, &format!(r#"{{"op":"think","session":{sid},"think_ms":30}}"#));
+        let t = ok_field(&line);
+        assert_eq!(t.get("cutoff").unwrap().as_bool(), Some(true), "line: {line}");
+        assert_eq!(t.get("quiescent").unwrap().as_bool(), Some(true), "line: {line}");
+
+        // With a generous clock the sims cap drains first.
+        let (line, _) = handle_line(
+            &h,
+            &format!(r#"{{"op":"think","session":{sid},"sims":6,"think_ms":60000}}"#),
+        );
+        let t = ok_field(&line);
+        assert_eq!(t.get("cutoff").unwrap().as_bool(), Some(false), "line: {line}");
+        assert_eq!(t.get("sims").unwrap().as_u64(), Some(6));
+
+        // Unknown QoS class names are typed errors at open.
+        let (line, _) = handle_line(&h, r#"{"op":"open","env":"garnet","class":"bulk"}"#);
+        let v = err_field(&line);
+        assert!(
+            v.get("error").unwrap().as_str().unwrap().contains("unknown qos class"),
+            "line: {line}"
+        );
+
+        // The deadline counters made it into the wire metrics.
+        let (line, _) = handle_line(&h, r#"{"op":"metrics"}"#);
+        let m = ok_field(&line);
+        assert_eq!(m.get("deadline_misses").unwrap().as_u64(), Some(1), "line: {line}");
+        assert_eq!(m.get("deadline_hits").unwrap().as_u64(), Some(1));
+        assert_eq!(m.get("tree_corruptions").unwrap().as_u64(), Some(0));
+        let back = metrics_from_json(&m);
+        assert_eq!(back.deadline_sims_hist.count(), 2, "one hit + one miss recorded");
+
+        let (line, _) = handle_line(&h, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        ok_field(&line);
     }
 
     #[test]
@@ -1484,6 +1631,12 @@ mod tests {
             think_ms_p99: 7.25,
             sim_occupancy: 0.5,
             simulation_workers: 8,
+            deadline_hits: 13,
+            deadline_misses: 4,
+            tree_corruptions: 1,
+            active_connections: 6,
+            connections_shed: 7,
+            handler_panics: 2,
             ..Default::default()
         };
         let back = metrics_from_json(&metrics_json(&m));
@@ -1502,6 +1655,12 @@ mod tests {
         assert_eq!(back.think_ms_p99, 7.25);
         assert_eq!(back.sim_occupancy, 0.5);
         assert_eq!(back.simulation_workers, 8);
+        assert_eq!(back.deadline_hits, 13);
+        assert_eq!(back.deadline_misses, 4);
+        assert_eq!(back.tree_corruptions, 1);
+        assert_eq!(back.active_connections, 6);
+        assert_eq!(back.connections_shed, 7);
+        assert_eq!(back.handler_panics, 2);
         assert!((back.uptime.as_secs_f64() - 12.5).abs() < 1e-9);
         // Lenient on absent fields: an empty object parses to zeros.
         let zero = metrics_from_json(&Json::Obj(vec![]));
@@ -1658,12 +1817,14 @@ mod tests {
         }
         m.sim_hist.record(1.25);
         m.commit_hold_hist.record(7.5);
+        m.deadline_sims_hist.record(37.0);
         let back = metrics_from_json(&metrics_json(&m));
         assert_eq!(back.held_replies, 3);
         assert_eq!(back.held_replies_hwm, 11);
         assert_eq!(back.think_hist, m.think_hist, "sparse buckets must be lossless");
         assert_eq!(back.sim_hist, m.sim_hist);
         assert_eq!(back.commit_hold_hist, m.commit_hold_hist);
+        assert_eq!(back.deadline_sims_hist, m.deadline_sims_hist);
         assert!(back.expand_hist.is_empty());
         // Merging two decoded snapshots equals merging the originals —
         // the property `ServiceMetrics::aggregate` relies on over the wire.

@@ -343,6 +343,21 @@ impl RouterHandle {
         track(&self.inner, host.think_traced(session, sims, trace))
     }
 
+    /// Deadline-bounded think, proxied to the owning host: the deadline
+    /// clock runs *there* (next to the search), so router↔host latency
+    /// eats into the margin the client allowed, never into the budget
+    /// the host enforces.
+    pub fn think_deadline(
+        &self,
+        session: u64,
+        sims: u32,
+        think_ms: u64,
+        trace: u64,
+    ) -> Result<ThinkReply> {
+        let host = self.route(session)?;
+        track(&self.inner, host.think_deadline(session, sims, think_ms, trace))
+    }
+
     /// Merge every reachable member's event journal into one timeline
     /// (newest `limit` events, oldest first; stable sort on each host's
     /// local-µs clock, so cross-host order is approximate but per-host
@@ -817,6 +832,16 @@ impl SessionApi for RouterHandle {
 
     fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
         RouterHandle::think_traced(self, session, sims, trace)
+    }
+
+    fn think_deadline(
+        &self,
+        session: u64,
+        sims: u32,
+        think_ms: u64,
+        trace: u64,
+    ) -> Result<ThinkReply> {
+        RouterHandle::think_deadline(self, session, sims, think_ms, trace)
     }
 
     fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {

@@ -27,10 +27,11 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
@@ -43,13 +44,56 @@ use crate::obs::journal::DEFAULT_JOURNAL_CAP;
 use crate::obs::{
     Event, EventKind, FlightConfig, FlightRecorder, Histogram, Journal, SearchSummary,
 };
-use crate::service::fair::FairQueue;
+use crate::service::fair::{FairQueue, QosClass};
 use crate::service::metrics::ServiceMetrics;
 use crate::store::codec::{SessionImage, SessionMeta};
 use crate::store::engine::{SessionStore, StoreCounters};
 use crate::store::migrate::Recovering;
 use crate::store::wal::Recovery;
 use crate::store::Error as StoreError;
+
+/// The scheduler's time source. Every timestamp the scheduler takes —
+/// journal events, think latencies, deadline expiry — goes through this
+/// seam instead of raw `Instant::now()`, so the deterministic testkit
+/// can script a clock (deadline expiry becomes a plain store + poke,
+/// provable with golden traces) while production pays one enum match.
+#[derive(Clone)]
+pub enum Clock {
+    /// Wall time, measured from the instant the clock was created
+    /// (scheduler start in production).
+    Wall(Instant),
+    /// Scripted microseconds: the owner of the cell advances time and
+    /// pokes the scheduler inbox; the scheduler only ever reads it.
+    Virtual(Arc<AtomicU64>),
+}
+
+impl Clock {
+    /// A production clock starting now.
+    pub fn wall() -> Clock {
+        Clock::Wall(Instant::now())
+    }
+
+    /// Microseconds since the clock's epoch.
+    pub fn now_us(&self) -> u64 {
+        match self {
+            Clock::Wall(t0) => t0.elapsed().as_micros() as u64,
+            Clock::Virtual(cell) => cell.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Whether the scheduler may block with a timeout to detect deadline
+    /// expiry (wall clocks only — a virtual clock never sleeps; its
+    /// driver advances the cell and pokes the inbox).
+    fn is_wall(&self) -> bool {
+        matches!(self, Clock::Wall(_))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::wall()
+    }
+}
 
 /// Shared-pool sizing and defaults for one scheduler (one shard). Worker
 /// counts are clamped to ≥ 1 at start (a zero-capacity pool could never
@@ -74,6 +118,9 @@ pub struct ServiceConfig {
     /// ring outlives the think; `journal_dropped` in the metrics says
     /// when it didn't.
     pub journal_cap: usize,
+    /// Time source for journal timestamps, think latencies and deadline
+    /// expiry (the [`Clock`] seam; wall time in production).
+    pub clock: Clock,
 }
 
 impl Default for ServiceConfig {
@@ -85,6 +132,7 @@ impl Default for ServiceConfig {
             seed: 0,
             max_held: None,
             journal_cap: DEFAULT_JOURNAL_CAP,
+            clock: Clock::wall(),
         }
     }
 }
@@ -106,11 +154,22 @@ pub struct SessionOptions {
     /// immutable structure from this seed (Garnet draws its whole MDP).
     /// The wire protocol sets it from the open request's `seed`.
     pub env_seed: u64,
+    /// QoS class: `Latency` sessions get a class-weighted stride in the
+    /// fair queue and preempt `Throughput` (default) sessions of equal
+    /// configured weight — interactive deadline traffic stays responsive
+    /// while batch traffic absorbs the slack.
+    pub class: QosClass,
 }
 
 impl Default for SessionOptions {
     fn default() -> Self {
-        SessionOptions { think_sims: 0, weight: 1.0, total_sim_budget: None, env_seed: 0 }
+        SessionOptions {
+            think_sims: 0,
+            weight: 1.0,
+            total_sim_budget: None,
+            env_seed: 0,
+            class: QosClass::Throughput,
+        }
     }
 }
 
@@ -138,6 +197,29 @@ impl std::fmt::Display for Busy {
 
 impl std::error::Error for Busy {}
 
+/// Typed rejection of a think with no budget at all: `sims: 0` falls
+/// back to the session's `think_sims` default, and when that is also 0
+/// (and no `think_ms` deadline is set) admitting the think would hang
+/// the caller on a search that can never issue. Rejected at admission
+/// instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ZeroThink {
+    pub session: u64,
+}
+
+impl std::fmt::Display for ZeroThink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "think rejected: session {} has no simulation budget \
+             (sims: 0 with a zero default and no deadline)",
+            self.session
+        )
+    }
+}
+
+impl std::error::Error for ZeroThink {}
+
 /// Reply to a completed think.
 #[derive(Debug, Clone)]
 pub struct ThinkReply {
@@ -150,6 +232,11 @@ pub struct ThinkReply {
     pub quiescent: bool,
     /// Lifetime simulations left, when a budget was set.
     pub remaining: Option<u64>,
+    /// Deadline thinks (`think_ms`) only: `Some(true)` when the clock
+    /// cut the search off mid-flight (in-flight tasks folded, current
+    /// best returned), `Some(false)` when the full budget finished in
+    /// time. `None` for plain thinks.
+    pub cutoff: Option<bool>,
 }
 
 /// Reply to an `advance`.
@@ -186,7 +273,16 @@ pub(crate) enum Request {
         id: Option<u64>,
         reply: Sender<Result<u64>>,
     },
-    Think { session: u64, sims: u32, trace: u64, reply: Sender<Result<ThinkReply>> },
+    Think {
+        session: u64,
+        sims: u32,
+        /// Wall-clock budget in milliseconds (0 = none): the think
+        /// returns the current best action when the clock expires, even
+        /// mid-search (`fold_in_flight` restores quiescence first).
+        deadline_ms: u64,
+        trace: u64,
+        reply: Sender<Result<ThinkReply>>,
+    },
     Advance { session: u64, action: usize, reply: Sender<Result<AdvanceReply>> },
     Best { session: u64, reply: Sender<Result<usize>> },
     Close { session: u64, reply: Sender<Result<CloseReply>> },
@@ -284,7 +380,11 @@ pub(crate) struct ShardWiring {
 
 struct ThinkJob {
     reply: Sender<Result<ThinkReply>>,
-    started: Instant,
+    /// [`Clock`] timestamp when the think was admitted.
+    started_us: u64,
+    /// Absolute [`Clock`] expiry for a `think_ms` think; `None` for
+    /// plain budget-only thinks.
+    deadline_us: Option<u64>,
     /// Caller-supplied trace id (0 = untraced); stamped on every journal
     /// event this think produces so a cross-host timeline stitches.
     trace: u64,
@@ -383,7 +483,25 @@ impl ServiceHandle {
     /// untraced) stamped on every journal event the think produces.
     pub fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
         let (tx, rx) = channel();
-        self.roundtrip(Request::Think { session, sims, trace, reply: tx }, rx)?
+        self.roundtrip(Request::Think { session, sims, deadline_ms: 0, trace, reply: tx }, rx)?
+    }
+
+    /// Deadline-bounded anytime think: returns the current best action
+    /// when `think_ms` expires, folding in-flight tasks back to
+    /// quiescence first. `sims` still caps the budget (0 ⇒ the session
+    /// default; 0/0 runs until the clock alone).
+    pub fn think_deadline(
+        &self,
+        session: u64,
+        sims: u32,
+        think_ms: u64,
+        trace: u64,
+    ) -> Result<ThinkReply> {
+        let (tx, rx) = channel();
+        self.roundtrip(
+            Request::Think { session, sims, deadline_ms: think_ms, trace, reply: tx },
+            rx,
+        )?
     }
 
     /// Read this shard's event journal (newest `limit` events, oldest
@@ -574,6 +692,7 @@ impl SearchService {
         let n_sim = cfg.simulation_workers.max(1);
         // A zero cap would shed every reply; clamp to at least one slot.
         let max_held = cfg.max_held.map(|c| c.max(1));
+        let clock = cfg.clock.clone();
         let mut expansion = Pool::new(n_exp, cfg.policy.clone(), cfg.seed ^ 0xe);
         let mut simulation = Pool::new(n_sim, cfg.policy.clone(), cfg.seed ^ 0x5);
         // Funnel both pools into the scheduler inbox so the thread blocks
@@ -627,10 +746,13 @@ impl SearchService {
                 expand_hist: Histogram::new(),
                 sim_hist: Histogram::new(),
                 commit_hold_hist: Histogram::new(),
+                deadline_sims_hist: Histogram::new(),
+                deadline_hits: 0,
+                deadline_misses: 0,
                 journal: Journal::new(journal_cap),
                 flight,
                 issued_at: HashMap::new(),
-                started: Instant::now(),
+                clock,
             };
             for parts in recovered {
                 sched.install(parts.id, parts.driver, parts.meta);
@@ -718,6 +840,13 @@ struct Scheduler {
     expand_hist: Histogram,
     sim_hist: Histogram,
     commit_hold_hist: Histogram,
+    /// Simulations completed when each deadline think finished (a count
+    /// distribution; one sample per `think_ms` think, hit or miss).
+    deadline_sims_hist: Histogram,
+    /// Deadline thinks that finished their full budget before expiry.
+    deadline_hits: u64,
+    /// Deadline thinks the clock cut off mid-search.
+    deadline_misses: u64,
     /// Ring journal of typed events; single-writer (this thread).
     journal: Journal,
     /// Crash-surviving spill of the journal: every event recorded above
@@ -727,7 +856,9 @@ struct Scheduler {
     /// Task id → journal timestamp at issue, for task-latency histograms
     /// (entries are removed when the result is absorbed).
     issued_at: HashMap<u64, u64>,
-    started: Instant,
+    /// Time source ([`Clock`] seam): wall in production, scripted in the
+    /// testkit.
+    clock: Clock,
 }
 
 /// A parked reply with the bookkeeping the journal and the
@@ -878,9 +1009,10 @@ impl TaskSink for SharedSink<'_> {
 }
 
 impl Scheduler {
-    /// Journal timestamp: microseconds since this scheduler started.
+    /// Journal timestamp: microseconds since this scheduler's clock
+    /// epoch (scheduler start in production).
     fn now_us(&self) -> u64 {
-        self.started.elapsed().as_micros() as u64
+        self.clock.now_us()
     }
 
     /// Record one journal event at the current time (scheduler thread
@@ -905,9 +1037,9 @@ impl Scheduler {
 
     fn run(mut self) {
         loop {
-            let msg = match self.inbox.recv() {
-                Ok(m) => m,
-                Err(_) => return, // every handle dropped
+            let msg = match self.recv_msg() {
+                Some(m) => m,
+                None => return, // every handle dropped
             };
             if !self.handle_msg(msg) {
                 return;
@@ -918,10 +1050,82 @@ impl Scheduler {
                     return;
                 }
             }
+            self.expire_deadlines();
             self.dispatch();
             self.flush_held();
             self.maybe_checkpoint();
         }
+    }
+
+    /// Block for the next inbox message. With a wall clock and a
+    /// deadline think pending, block at most until the nearest expiry so
+    /// a deadline fires even when no worker result ever arrives to wake
+    /// the thread; the timeout itself surfaces as a [`SchedMsg::Poke`].
+    /// A virtual clock never sleeps — its test driver advances the cell
+    /// and pokes the inbox explicitly.
+    fn recv_msg(&mut self) -> Option<SchedMsg> {
+        let wait = if self.clock.is_wall() {
+            self.nearest_deadline_us().map(|due| {
+                Duration::from_micros(due.saturating_sub(self.now_us()).max(1))
+            })
+        } else {
+            None
+        };
+        match wait {
+            Some(dur) => match self.inbox.recv_timeout(dur) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => Some(SchedMsg::Poke),
+                Err(RecvTimeoutError::Disconnected) => None,
+            },
+            None => self.inbox.recv().ok(),
+        }
+    }
+
+    /// Earliest absolute deadline across in-flight `think_ms` thinks.
+    fn nearest_deadline_us(&self) -> Option<u64> {
+        self.sessions
+            .values()
+            .filter_map(|s| s.thinking.as_ref().and_then(|j| j.deadline_us))
+            .min()
+    }
+
+    /// Cut off every think whose deadline has passed: fold its in-flight
+    /// tasks back to quiescence (the paper's Eq. 5 bookkeeping reversed
+    /// — exactly what makes an anytime cutoff safe), truncate the budget
+    /// to what completed, and finish with the current best action.
+    fn expire_deadlines(&mut self) {
+        let now = self.now_us();
+        let due: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| {
+                s.thinking
+                    .as_ref()
+                    .and_then(|j| j.deadline_us)
+                    .is_some_and(|d| d <= now)
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        for sid in due {
+            self.cutoff_think(sid);
+        }
+    }
+
+    /// The deadline half of [`Scheduler::finish_think`]: restore
+    /// quiescence at the cutoff boundary, drop the folded tasks' routes
+    /// (their results are still coming from the pools and must be
+    /// orphaned, not absorbed into a truncated tree), and finish.
+    fn cutoff_think(&mut self, sid: u64) {
+        let Some(sess) = self.sessions.get_mut(&sid) else { return };
+        let folded = sess.driver.fold_in_flight();
+        sess.driver.truncate_budget();
+        for id in &folded {
+            self.routes.remove(id);
+            self.issued_at.remove(id);
+        }
+        let trace = self.trace_of(sid);
+        self.journal_event(sid, 0, trace, EventKind::DeadlineCut, folded.len() as u64);
+        self.finish_think(sid, true);
     }
 
     /// Returns false on shutdown.
@@ -954,8 +1158,8 @@ impl Scheduler {
                     }
                 }
             }
-            Request::Think { session, sims, trace, reply } => {
-                match self.begin_think(session, sims, trace, &reply) {
+            Request::Think { session, sims, deadline_ms, trace, reply } => {
+                match self.begin_think(session, sims, deadline_ms, trace, &reply) {
                     Ok(()) => {}
                     Err(e) => {
                         let _ = reply.send(Err(e));
@@ -1076,7 +1280,7 @@ impl Scheduler {
             last_best: None,
             best_flips: 0,
         };
-        self.fair.admit(id, opts.weight);
+        self.fair.admit_class(id, opts.weight, opts.class);
         self.sessions.insert(id, session);
         self.opened += 1;
         self.journal_event(id, 0, 0, EventKind::SessionOpen, self.shard.index as u64);
@@ -1414,14 +1618,17 @@ impl Scheduler {
         Ok((id, seq))
     }
 
-    /// Start a think; the reply is deferred until the budget drains.
+    /// Start a think; the reply is deferred until the budget drains (or
+    /// the `deadline_ms` clock expires, whichever comes first).
     fn begin_think(
         &mut self,
         sid: u64,
         sims: u32,
+        deadline_ms: u64,
         trace: u64,
         reply: &Sender<Result<ThinkReply>>,
     ) -> Result<()> {
+        let now_us = self.clock.now_us();
         let sess = self
             .sessions
             .get_mut(&sid)
@@ -1433,6 +1640,16 @@ impl Scheduler {
             bail!("session {sid} already has a think in flight");
         }
         let mut budget = if sims > 0 { sims } else { sess.default_sims };
+        if budget == 0 {
+            if deadline_ms == 0 {
+                // `sims: 0` with a zero session default and no deadline:
+                // nothing bounds the think and nothing lets it issue —
+                // admitting it would hang the caller forever.
+                return Err(anyhow::Error::new(ZeroThink { session: sid }));
+            }
+            // Deadline-only think: the clock is the sole bound.
+            budget = u32::MAX;
+        }
         if let Some(rem) = sess.remaining {
             if rem == 0 {
                 bail!("session {sid} has exhausted its simulation budget");
@@ -1440,14 +1657,17 @@ impl Scheduler {
             budget = budget.min(rem.min(u32::MAX as u64) as u32);
         }
         sess.driver.begin(budget);
-        sess.thinking = Some(ThinkJob { reply: reply.clone(), started: Instant::now(), trace });
+        let deadline_us =
+            (deadline_ms > 0).then(|| now_us.saturating_add(deadline_ms.saturating_mul(1000)));
+        sess.thinking =
+            Some(ThinkJob { reply: reply.clone(), started_us: now_us, deadline_us, trace });
         let done = sess.driver.done();
         self.journal_event(sid, 0, trace, EventKind::Admit, budget as u64);
         // A session that was idle re-enters the race at the current
         // virtual time (it must not hoard credit accrued while idle).
         self.fair.rejoin(sid);
         if done {
-            self.finish_think(sid);
+            self.finish_think(sid, false);
         }
         Ok(())
     }
@@ -1537,7 +1757,7 @@ impl Scheduler {
         f: impl FnOnce(&mut Session, &mut SharedSink) -> R,
     ) -> Option<R> {
         let busy_stolen = self.stolen.len();
-        let now_us = self.started.elapsed().as_micros() as u64;
+        let now_us = self.clock.now_us();
         let sess = self.sessions.get_mut(&sid)?;
         let trace = sess.thinking.as_ref().map(|j| j.trace).unwrap_or(0);
         let mut sink = SharedSink {
@@ -1616,7 +1836,7 @@ impl Scheduler {
         });
         self.journal_event(sid, task_id, trace, EventKind::Backprop, 0);
         if done == Some(true) {
-            self.finish_think(sid);
+            self.finish_think(sid, false);
         }
     }
 
@@ -1690,7 +1910,7 @@ impl Scheduler {
                 sess.driver.done()
             });
             if done == Some(true) {
-                self.finish_think(sid);
+                self.finish_think(sid, false);
             }
         }
         if std::mem::take(&mut self.overflow_flag) {
@@ -1704,7 +1924,9 @@ impl Scheduler {
     }
 
     /// Complete a think: record metrics and send the deferred reply.
-    fn finish_think(&mut self, sid: u64) {
+    /// `cut` is true when the think was finished by its deadline expiry
+    /// ([`Scheduler::cutoff_think`]) rather than by draining its budget.
+    fn finish_think(&mut self, sid: u64, cut: bool) {
         let Some(sess) = self.sessions.get_mut(&sid) else { return };
         let Some(job) = sess.thinking.take() else { return };
         sess.driver.assert_quiescent();
@@ -1716,8 +1938,16 @@ impl Scheduler {
         }
         self.thinks += 1;
         self.sims += sims as u64;
-        let elapsed = job.started.elapsed();
-        self.think_hist.record(elapsed.as_secs_f64() * 1e3);
+        let elapsed_ms = self.clock.now_us().saturating_sub(job.started_us) as f64 / 1e3;
+        self.think_hist.record(elapsed_ms);
+        if job.deadline_us.is_some() {
+            if cut {
+                self.deadline_misses += 1;
+            } else {
+                self.deadline_hits += 1;
+            }
+            self.deadline_sims_hist.record(sims as f64);
+        }
         let best = sess.driver.best_action();
         // Flip counter: did this think change the recommendation? A
         // flapping best action under a steady position means the sim
@@ -1731,9 +1961,10 @@ impl Scheduler {
             value: sess.driver.root_value(),
             sims,
             tree_size: sess.driver.tree().len(),
-            elapsed_ms: elapsed.as_secs_f64() * 1e3,
+            elapsed_ms,
             quiescent: sess.driver.tree().total_unobserved() == 0,
             remaining: sess.remaining,
+            cutoff: job.deadline_us.map(|_| cut),
         };
         // Durability: the think's search progress lives only in the
         // tree, so snapshot it on the configured cadence (the crash-loss
@@ -1768,7 +1999,7 @@ impl Scheduler {
             self.counters_cache = store.counters();
         }
         let sc = self.counters_cache;
-        let uptime = self.started.elapsed();
+        let uptime = Duration::from_micros(self.clock.now_us());
         let secs = uptime.as_secs_f64().max(1e-9);
         let mut m = ServiceMetrics {
             uptime,
@@ -1802,6 +2033,9 @@ impl Scheduler {
             expand_hist: self.expand_hist.clone(),
             sim_hist: self.sim_hist.clone(),
             commit_hold_hist: self.commit_hold_hist.clone(),
+            deadline_sims_hist: self.deadline_sims_hist.clone(),
+            deadline_hits: self.deadline_hits,
+            deadline_misses: self.deadline_misses,
             exp_occupancy: self.expansion.breakdown().occupancy(),
             sim_occupancy: self.simulation.breakdown().occupancy(),
             expansion_workers: self.expansion.capacity(),
@@ -1813,6 +2047,7 @@ impl Scheduler {
             // driver's O(1) running counter, so this is O(sessions)).
             unobserved: self.sessions.values().map(|s| s.driver.unobserved()).sum(),
             best_flips: self.sessions.values().map(|s| s.best_flips).sum(),
+            tree_corruptions: self.sessions.values().map(|s| s.driver.corruptions()).sum(),
             ..Default::default()
         };
         m.derive_latency_scalars();
@@ -2121,6 +2356,98 @@ mod tests {
         let (records, batches, _) = disk.counters();
         assert_eq!(records, 3 * (rounds + 2), "opens + snapshots + closes all logged");
         assert_eq!(batches, rounds + 2, "group commit held up under backpressure");
+    }
+
+    #[test]
+    fn zero_budget_think_is_a_typed_rejection() {
+        // A spec with max_simulations = 0 gives the session a zero
+        // default, so `sims: 0` has no fallback — the 0/0 combination
+        // must be rejected at admission, not admitted as a think that
+        // can never finish.
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 1,
+            ..Default::default()
+        });
+        let h = service.handle();
+        let spec = SearchSpec { max_simulations: 0, ..quick_spec(1) };
+        let sid = h.open(garnet(1), spec, SessionOptions::default()).unwrap();
+        let err = h.think(sid, 0).expect_err("0/0 think must be rejected");
+        let zero = err.downcast_ref::<ZeroThink>().expect("typed ZeroThink error");
+        assert_eq!(zero.session, sid);
+        assert!(err.to_string().contains("no simulation budget"));
+        // An explicit budget still works; the session is unharmed.
+        let t = h.think(sid, 4).unwrap();
+        assert_eq!(t.sims, 4);
+        assert_eq!(t.cutoff, None, "plain thinks carry no cutoff flag");
+        h.close(sid).unwrap();
+    }
+
+    #[test]
+    fn wall_clock_deadline_cuts_and_full_budgets_hit() {
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        });
+        let h = service.handle();
+        let sid = h.open(garnet(6), quick_spec(6), SessionOptions::default()).unwrap();
+        // A budget far beyond what 40 ms allows: the clock must cut it.
+        let t = h.think_deadline(sid, 1_000_000, 40, 0).unwrap();
+        assert_eq!(t.cutoff, Some(true));
+        assert!(t.sims < 1_000_000);
+        assert!(t.quiescent, "fold_in_flight restored quiescence at the cutoff");
+        // A small budget under a generous deadline: a hit, not a cut.
+        let t2 = h.think_deadline(sid, 8, 60_000, 0).unwrap();
+        assert_eq!(t2.cutoff, Some(false));
+        assert_eq!(t2.sims, 8);
+        let m = h.metrics().unwrap();
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.deadline_hits, 1);
+        assert_eq!(m.deadline_sims_hist.count(), 2);
+        assert_eq!(m.tree_corruptions, 0);
+        h.close(sid).unwrap();
+    }
+
+    #[test]
+    fn virtual_clock_scripts_deadline_expiry_deterministically() {
+        // The Clock seam: a scripted cell stands in for wall time, so
+        // the test — not the OS scheduler — decides when the deadline
+        // fires. The pools still run for real; only *time* is virtual.
+        let cell = Arc::new(AtomicU64::new(0));
+        let service = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            clock: Clock::Virtual(cell.clone()),
+            ..Default::default()
+        });
+        let h = service.handle();
+        let sid = h.open(garnet(7), quick_spec(7), SessionOptions::default()).unwrap();
+        let thinker = {
+            let h = h.clone();
+            std::thread::spawn(move || h.think_deadline(sid, 1_000_000, 5, 0))
+        };
+        // Let real rollouts accumulate while virtual time stands still
+        // (the 5 ms deadline cannot fire at now = 0). `sim_hist` counts
+        // absorbed simulation results, so it moves mid-think.
+        while h.metrics().unwrap().sim_hist.count() == 0 {
+            std::thread::yield_now();
+        }
+        // ...then expire the clock and poke the scheduler awake.
+        cell.store(10_000_000, Ordering::Relaxed);
+        h.tx.send(SchedMsg::Poke).unwrap();
+        let t = thinker.join().unwrap().unwrap();
+        assert_eq!(t.cutoff, Some(true));
+        assert!(t.sims < 1_000_000);
+        assert!(t.quiescent);
+        let m = h.metrics().unwrap();
+        assert_eq!(m.deadline_misses, 1);
+        assert_eq!(m.unobserved, 0, "ΣO = 0 after the fold");
+        // The cutoff left a timeline: the DeadlineCut event records how
+        // many in-flight tasks were folded.
+        let events = h.trace(Some(sid), 10_000).unwrap();
+        assert!(events.iter().any(|e| e.kind == EventKind::DeadlineCut));
+        h.close(sid).unwrap();
     }
 
     #[test]

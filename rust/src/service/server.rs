@@ -22,10 +22,20 @@
 //! UTF-8 earns an error reply instead of a dropped connection. The op
 //! set — open/think/advance/best/close/migrate/metrics/ping — is
 //! documented in [`crate::service::proto`].
+//!
+//! The thread-per-connection model is bounded by
+//! [`TcpServer::bind_with_limit`] (`wu-uct serve --max-conns`): past the
+//! cap, a new connection is shed at accept with one typed
+//! `{"ok":false,"busy":true,...}` line — the same backpressure marker
+//! admission-control rejections use, so clients already know to back
+//! off and retry — and then closed. Accounting lives in process-wide
+//! counters ([`connection_stats`]): an active-connections gauge, a shed
+//! counter and a handler-panic counter (a connection thread that panics
+//! still releases its slot via RAII and is counted, never silent).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -33,6 +43,61 @@ use anyhow::{Context, Result};
 
 use crate::service::proto::{handle_bytes, LineEffect};
 use crate::service::SessionApi;
+
+/// Process-wide connection accounting, readable by every metrics path
+/// (the `metrics` op and the Prometheus scrape) regardless of which
+/// server instance owns a given socket. Enforcement of a `--max-conns`
+/// cap is per-server (each accept loop tracks its own slots); these
+/// statics are the observability roll-up.
+static ACTIVE_CONNECTIONS: AtomicUsize = AtomicUsize::new(0);
+static CONNECTIONS_SHED: AtomicU64 = AtomicU64::new(0);
+static HANDLER_PANICS: AtomicU64 = AtomicU64::new(0);
+
+/// `(active, shed, panics)` across every [`TcpServer`] in this process.
+pub fn connection_stats() -> (usize, u64, u64) {
+    (
+        ACTIVE_CONNECTIONS.load(Ordering::Relaxed),
+        CONNECTIONS_SHED.load(Ordering::Relaxed),
+        HANDLER_PANICS.load(Ordering::Relaxed),
+    )
+}
+
+/// RAII accounting for one served connection. The per-server slot is
+/// reserved on the accept thread (so a burst cannot overshoot the cap by
+/// racing thread startup); `adopt` takes ownership of that reservation
+/// and adds the process-wide gauge. `Drop` runs even when the connection
+/// thread panics — the slot is always released, and the panic counted.
+struct ConnGuard {
+    active: Arc<AtomicUsize>,
+}
+
+impl ConnGuard {
+    fn adopt(active: Arc<AtomicUsize>) -> ConnGuard {
+        ACTIVE_CONNECTIONS.fetch_add(1, Ordering::Relaxed);
+        ConnGuard { active }
+    }
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+        ACTIVE_CONNECTIONS.fetch_sub(1, Ordering::Relaxed);
+        if std::thread::panicking() {
+            HANDLER_PANICS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Refuse one connection at the cap: write the typed busy line protocol
+/// clients already understand (`busy:true` — back off, retry later) and
+/// close. Counted in [`connection_stats`].
+fn shed_connection(mut stream: TcpStream) {
+    CONNECTIONS_SHED.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.write_all(
+        b"{\"ok\":false,\"busy\":true,\"error\":\"server at connection capacity; retry later\"}\n",
+    );
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
 
 /// A running TCP front-end; dropping stops the accept loop.
 pub struct TcpServer {
@@ -42,20 +107,47 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
-    /// Bind `addr` (use port 0 for an ephemeral port) and serve `handle`.
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve `handle`
+    /// with no connection cap.
     pub fn bind<H: SessionApi>(handle: H, addr: &str) -> Result<TcpServer> {
+        TcpServer::bind_with_limit(handle, addr, None)
+    }
+
+    /// Like [`TcpServer::bind`] with an optional cap on concurrently
+    /// served connections. At the cap, a new connection is shed at
+    /// accept ([`shed_connection`]): one typed busy line, then close —
+    /// never an unbounded thread pile-up.
+    pub fn bind_with_limit<H: SessionApi>(
+        handle: H,
+        addr: &str,
+        max_conns: Option<usize>,
+    ) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr().context("reading bound address")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_accept = Arc::clone(&stop);
+        let active = Arc::new(AtomicUsize::new(0));
         let accept_thread = std::thread::spawn(move || {
             for conn in listener.incoming() {
                 if stop_accept.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
+                // Reserve the slot here, on the accept thread: admission
+                // is decided before the handler thread exists, so a
+                // connection burst cannot overshoot the cap.
+                let prev = active.fetch_add(1, Ordering::SeqCst);
+                if max_conns.is_some_and(|cap| prev >= cap) {
+                    active.fetch_sub(1, Ordering::SeqCst);
+                    shed_connection(stream);
+                    continue;
+                }
                 let handle = handle.clone();
-                std::thread::spawn(move || serve_connection(stream, handle));
+                let guard = ConnGuard::adopt(Arc::clone(&active));
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    serve_connection(stream, handle);
+                });
             }
         });
         Ok(TcpServer { addr: local, stop, accept_thread: Some(accept_thread) })
@@ -169,7 +261,16 @@ fn serve_scrape<H: SessionApi>(stream: TcpStream, handle: H) {
     }
     let (status, content_type, body) = match path.as_str() {
         "/metrics" | "" => match handle.metrics() {
-            Ok(m) => ("200 OK", "text/plain; version=0.0.4", m.prometheus_text()),
+            Ok(mut m) => {
+                // Shard schedulers know nothing about sockets: fold this
+                // process's connection counters in at the scrape edge,
+                // mirroring the `metrics` op.
+                let (active, shed, panics) = connection_stats();
+                m.active_connections += active;
+                m.connections_shed += shed;
+                m.handler_panics += panics;
+                ("200 OK", "text/plain; version=0.0.4", m.prometheus_text())
+            }
             Err(e) => (
                 "500 Internal Server Error",
                 "text/plain; version=0.0.4",
@@ -430,6 +531,11 @@ mod tests {
         assert!(body.contains("wuuct_think_latency_ms_bucket"));
         assert!(body.contains("wuuct_held_replies_hwm"));
         assert!(body.contains(r#"le="+Inf""#));
+        assert!(body.contains("wuuct_active_connections"), "scrape carries the conn gauge");
+        assert!(body.contains("wuuct_connections_shed_total"));
+        assert!(body.contains("wuuct_handler_panics_total"));
+        assert!(body.contains("wuuct_deadline_misses_total"));
+        assert!(body.contains("wuuct_deadline_sims_bucket"));
         h.close(sid).unwrap();
         drop(stats); // must not hang
     }
@@ -469,6 +575,79 @@ mod tests {
         // Query strings are stripped before routing.
         let raw = http_get(&stats, "/metrics?x=1");
         assert!(raw.starts_with("HTTP/1.0 200 OK\r\n"), "got: {raw}");
+    }
+
+    #[test]
+    fn connection_cap_sheds_with_a_typed_busy_line() {
+        let svc = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        });
+        let server = TcpServer::bind_with_limit(svc.handle(), "127.0.0.1:0", Some(1)).unwrap();
+        let (_, shed_before, _) = connection_stats();
+
+        // Occupy the only slot and prove it is being served.
+        let first = TcpStream::connect(server.local_addr()).unwrap();
+        let mut w1 = first.try_clone().unwrap();
+        let mut r1 = BufReader::new(first);
+        let v = request(&mut r1, &mut w1, r#"{"op":"ping"}"#);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+
+        // The second connection is shed unprompted: one busy line, then
+        // EOF — never a silently hung socket.
+        let second = TcpStream::connect(server.local_addr()).unwrap();
+        let mut r2 = BufReader::new(second);
+        let mut line = String::new();
+        r2.read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).expect("shed reply is valid json");
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "line: {line}");
+        assert_eq!(v.get("busy").unwrap().as_bool(), Some(true), "line: {line}");
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("capacity"));
+        line.clear();
+        assert_eq!(r2.read_line(&mut line).unwrap(), 0, "shed connection closes");
+        let (_, shed_after, _) = connection_stats();
+        assert!(shed_after > shed_before, "shed connections are counted");
+
+        // Dropping the occupant frees the slot; the release runs on the
+        // connection thread, so poll until a fresh connection serves.
+        drop(w1);
+        drop(r1);
+        let mut served = false;
+        for _ in 0..200 {
+            let s = TcpStream::connect(server.local_addr()).unwrap();
+            let mut w = s.try_clone().unwrap();
+            let mut r = BufReader::new(s);
+            let _ = w.write_all(b"{\"op\":\"ping\"}\n");
+            let _ = w.flush();
+            let mut reply = String::new();
+            if r.read_line(&mut reply).unwrap_or(0) > 0 {
+                if let Ok(v) = Json::parse(reply.trim()) {
+                    if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+                        served = true;
+                        break;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(served, "slot never freed after the occupant dropped");
+    }
+
+    #[test]
+    fn a_panicking_connection_thread_releases_its_slot_and_is_counted() {
+        // Slot already reserved, as the accept loop would have done.
+        let active = Arc::new(AtomicUsize::new(1));
+        let (_, _, panics_before) = connection_stats();
+        let slot = Arc::clone(&active);
+        let t = std::thread::spawn(move || {
+            let _guard = ConnGuard::adopt(slot);
+            panic!("handler blew up");
+        });
+        assert!(t.join().is_err(), "the panic must propagate to join");
+        assert_eq!(active.load(Ordering::SeqCst), 0, "slot released despite the panic");
+        let (_, _, panics_after) = connection_stats();
+        assert!(panics_after > panics_before, "handler panics are counted, never silent");
     }
 
     #[test]

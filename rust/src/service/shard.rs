@@ -276,6 +276,19 @@ impl ShardedHandle {
         self.route(session)?.think_traced(session, sims, trace)
     }
 
+    /// Deadline-bounded think, routed to the owning shard (see
+    /// [`ServiceHandle::think_deadline`]): the shard returns its current
+    /// best action when `think_ms` expires, folding in-flight work.
+    pub fn think_deadline(
+        &self,
+        session: u64,
+        sims: u32,
+        think_ms: u64,
+        trace: u64,
+    ) -> Result<ThinkReply> {
+        self.route(session)?.think_deadline(session, sims, think_ms, trace)
+    }
+
     /// Merge every shard's event journal into one timeline (newest
     /// `limit` events, oldest first). Shard clocks all start when the
     /// fleet does, so sorting on `at_us` orders events across shards to
@@ -541,6 +554,16 @@ impl SessionApi for ShardedHandle {
 
     fn think_traced(&self, session: u64, sims: u32, trace: u64) -> Result<ThinkReply> {
         ShardedHandle::think_traced(self, session, sims, trace)
+    }
+
+    fn think_deadline(
+        &self,
+        session: u64,
+        sims: u32,
+        think_ms: u64,
+        trace: u64,
+    ) -> Result<ThinkReply> {
+        ShardedHandle::think_deadline(self, session, sims, think_ms, trace)
     }
 
     fn trace(&self, session: Option<u64>, limit: usize) -> Result<Vec<crate::obs::Event>> {

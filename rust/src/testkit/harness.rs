@@ -8,7 +8,11 @@
 //!   gate the live scheduler shard runs, in virtual time. Every issue and
 //!   completion lands in one golden [`Trace`], and a per-completion hook
 //!   exposes the per-session completed counts so fairness bounds can be
-//!   asserted *at every tick*, not just at the end.
+//!   asserted *at every tick*, not just at the end. Thinks may carry a
+//!   virtual-time deadline ([`ScriptedService::begin_think_deadline`]):
+//!   when the clock crosses it the service folds the session's in-flight
+//!   tasks and finishes the think early, scripting the live scheduler's
+//!   `think_ms` cutoff deterministically.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -17,7 +21,7 @@ use crate::mcts::common::SearchSpec;
 use crate::mcts::wu_uct::driver::{AdvanceOutcome, SearchDriver, TaskSink};
 use crate::mcts::wu_uct::workers::TaskResult;
 use crate::obs::{Event, EventKind, FlightConfig, FlightRecorder, Journal, SearchSummary};
-use crate::service::fair::FairQueue;
+use crate::service::fair::{FairQueue, QosClass};
 use crate::store::codec::{SessionImage, SessionMeta};
 use crate::testkit::executor::{Trace, VirtualExecutor};
 use crate::testkit::latency::LatencyScript;
@@ -110,6 +114,8 @@ struct ScriptedSession {
     weight: f64,
     /// Trace id of the active (or last) think; 0 = untraced.
     trace: u64,
+    /// Virtual-time cutoff of the active think; `None` = unbounded.
+    deadline_us: Option<u64>,
     /// Recommendation after the previous completed think, for the
     /// best-flip convergence counter (mirrors the live scheduler).
     last_best: Option<usize>,
@@ -255,6 +261,39 @@ impl ScriptedService {
         self.journal_event(id, 0, 0, EventKind::SessionOpen, 0);
     }
 
+    /// [`Self::open`] with an explicit QoS class: the fair queue strides
+    /// the session at `weight × class factor`, exactly like the live
+    /// scheduler admitting a session whose `open` carried `"class"`.
+    pub fn open_class(
+        &mut self,
+        id: u64,
+        env: &dyn Env,
+        spec: SearchSpec,
+        weight: f64,
+        class: QosClass,
+    ) {
+        assert!(
+            !self.sessions.contains_key(&id),
+            "session {id} already open"
+        );
+        self.fair.admit_class(id, weight, class);
+        self.sessions.insert(
+            id,
+            ScriptedSession {
+                driver: SearchDriver::new(spec, env),
+                thinking: false,
+                weight,
+                trace: 0,
+                last_best: None,
+                best_flips: 0,
+                deadline_us: None,
+            },
+        );
+        self.exec
+            .note(&format!("open sid={id} weight={weight} class={}", class.name()));
+        self.journal_event(id, 0, 0, EventKind::SessionOpen, 0);
+    }
+
     /// Install an existing driver under `id` (recovery / migration
     /// import paths).
     pub fn install(&mut self, id: u64, driver: SearchDriver, weight: f64) {
@@ -265,7 +304,15 @@ impl ScriptedService {
         self.fair.admit(id, weight);
         self.sessions.insert(
             id,
-            ScriptedSession { driver, thinking: false, weight, trace: 0, last_best: None, best_flips: 0 },
+            ScriptedSession {
+                driver,
+                thinking: false,
+                weight,
+                trace: 0,
+                last_best: None,
+                best_flips: 0,
+                deadline_us: None,
+            },
         );
     }
 
@@ -366,9 +413,23 @@ impl ScriptedService {
         sess.driver.begin(budget);
         sess.thinking = budget > 0;
         sess.trace = trace;
+        sess.deadline_us = None;
         self.fair.rejoin(id);
         self.exec.note(&format!("think sid={id} budget={budget}"));
         self.journal_event(id, 0, trace, EventKind::Admit, budget as u64);
+    }
+
+    /// [`Self::begin_think`] with a virtual-time deadline: when the
+    /// executor clock crosses `deadline_us` mid-think, the service folds
+    /// the session's in-flight tasks
+    /// ([`SearchDriver::fold_in_flight`]), truncates the budget to the
+    /// completed count and finishes the think — the deterministic
+    /// analogue of the wire `think` op's `think_ms` cutoff.
+    pub fn begin_think_deadline(&mut self, id: u64, budget: u32, deadline_us: u64) {
+        self.begin_think_traced(id, budget, 0);
+        let sess = self.sessions.get_mut(&id).expect("opened by begin_think_traced");
+        sess.deadline_us = Some(deadline_us);
+        self.exec.note(&format!("deadline sid={id} at={deadline_us}"));
     }
 
     /// Per-session completed-simulation counts for the current thinks.
@@ -489,8 +550,48 @@ impl ScriptedService {
     /// session *mid-think* — e.g. pinning the inspect `ΣO` to
     /// [`Tree::total_unobserved`](crate::tree::Tree::total_unobserved)
     /// at every tick, not only at quiescence.
+    /// Cut every think whose deadline the virtual clock has crossed:
+    /// fold its in-flight tasks back out of the tree (ΣO returns to 0
+    /// without waiting on them), drop their routes so late results are
+    /// orphaned exactly as the live scheduler orphans them, truncate the
+    /// budget to what completed, and finish the think.
+    fn expire_deadlines(&mut self) {
+        let now = self.exec.now();
+        let due: Vec<u64> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.thinking && s.deadline_us.is_some_and(|d| now >= d))
+            .map(|(&id, _)| id)
+            .collect();
+        for sid in due {
+            let (folded, completed, trace) = {
+                let sess = self.sessions.get_mut(&sid).expect("picked above");
+                let folded = sess.driver.fold_in_flight();
+                sess.driver.truncate_budget();
+                sess.thinking = false;
+                let best = sess.driver.best_action();
+                if let Some(prev) = sess.last_best {
+                    if prev != best {
+                        sess.best_flips += 1;
+                    }
+                }
+                sess.last_best = Some(best);
+                (folded, sess.driver.completed(), sess.trace)
+            };
+            for task in &folded {
+                self.routes.remove(task);
+            }
+            self.exec.note(&format!(
+                "deadline-cut sid={sid} folded={} sims={completed}",
+                folded.len()
+            ));
+            self.journal_event(sid, 0, trace, EventKind::DeadlineCut, folded.len() as u64);
+        }
+    }
+
     pub fn run_inspecting(&mut self, mut on_tick: impl FnMut(u64, &ScriptedService)) {
         loop {
+            self.expire_deadlines();
             self.dispatch();
             let Some(result) = self.exec.next_result() else { break };
             let task_id = result.task_id();
@@ -735,5 +836,101 @@ mod tests {
             heavy_done_at < light_done_at,
             "weight-3 session finished at t={heavy_done_at}, weight-1 at t={light_done_at}"
         );
+    }
+
+    #[test]
+    fn deadline_cut_matches_the_deadline_free_control() {
+        // Run A: a big budget with a mid-run deadline. The cut must fold
+        // every in-flight task (ΣO = 0) and answer from what completed.
+        let script = LatencyScript::uniform(7, (1, 3), (2, 9));
+        let deadline = 120u64;
+        let mut a = ScriptedService::new(2, 4, script);
+        a.open(1, &env(3), spec(200, 3), 1.0);
+        a.begin_think_deadline(1, 200, deadline);
+        a.run_to_completion();
+        assert!(!a.thinking(1));
+        assert!(a.quiescent(1), "the fold must return ΣO to 0 at the cut");
+        let completed = a.completed()[&1];
+        assert!(
+            completed > 0 && completed < 200,
+            "deadline must cut mid-think (completed={completed})"
+        );
+        let cut = a
+            .trace_events(Some(1), 4096)
+            .into_iter()
+            .find(|e| e.kind == EventKind::DeadlineCut)
+            .expect("cut must be journaled");
+        assert!(cut.arg > 0, "cut must fold genuinely in-flight tasks");
+        let best_cut = a.best_action(1);
+
+        // Control: the identical schedule with no deadline, sampled at
+        // the first tick past the cut point. Up to that tick the two
+        // runs are the same event sequence, and the fold only removes
+        // unobserved counts — which best_root_action never reads — so
+        // the control's answer there must equal the cut run's answer.
+        let mut b = ScriptedService::new(2, 4, script);
+        b.open(1, &env(3), spec(200, 3), 1.0);
+        b.begin_think(1, 200);
+        let mut at_cut: Option<(u32, usize)> = None;
+        b.run_inspecting(|now, svc| {
+            if now >= deadline && at_cut.is_none() {
+                at_cut = Some((svc.completed()[&1], svc.best_action(1)));
+            }
+        });
+        let (ctrl_completed, ctrl_best) = at_cut.expect("control run crosses the deadline");
+        assert_eq!(
+            ctrl_completed, completed,
+            "cut and control must agree on the completed-sim count at the deadline"
+        );
+        assert_eq!(
+            ctrl_best, best_cut,
+            "the cutoff answer must equal the control truncated at the same sim count"
+        );
+        assert_eq!(b.completed()[&1], 200, "the control runs its full budget out");
+    }
+
+    #[test]
+    fn latency_class_sessions_preempt_equal_weight_throughput() {
+        // Equal weights, one simulation slot: the latency-class session
+        // must drain its (equal) budget first on class factor alone.
+        let mut svc = ScriptedService::new(1, 1, LatencyScript::fixed(1, 4));
+        svc.open_class(1, &env(31), spec(30, 1), 1.0, QosClass::Latency);
+        svc.open_class(2, &env(32), spec(30, 2), 1.0, QosClass::Throughput);
+        svc.begin_think(1, 30);
+        svc.begin_think(2, 30);
+        let mut latency_done_at = 0u64;
+        let mut throughput_done_at = 0u64;
+        svc.run(|now, counts| {
+            if counts[&1] >= 30 && latency_done_at == 0 {
+                latency_done_at = now;
+            }
+            if counts[&2] >= 30 && throughput_done_at == 0 {
+                throughput_done_at = now;
+            }
+        });
+        assert!(latency_done_at > 0 && throughput_done_at > 0);
+        assert!(
+            latency_done_at < throughput_done_at,
+            "latency class finished at t={latency_done_at}, \
+             throughput at t={throughput_done_at}"
+        );
+    }
+
+    #[test]
+    fn deadline_runs_replay_byte_identically() {
+        let run = || {
+            let mut svc = ScriptedService::new(2, 4, LatencyScript::uniform(9, (1, 3), (2, 9)));
+            svc.open(1, &env(5), spec(200, 5), 1.0);
+            svc.begin_think_deadline(1, 200, 100);
+            svc.run_to_completion();
+            svc.take_trace()
+        };
+        let (a, b) = (run(), run());
+        assert!(
+            a.lines().iter().any(|l| l.contains("deadline-cut")),
+            "the cut must land in the golden trace:\n{}",
+            a.render()
+        );
+        assert_eq!(a, b, "same seed ⇒ identical golden trace through a deadline cut");
     }
 }
