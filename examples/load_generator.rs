@@ -28,11 +28,17 @@
 //! interleaved with the load so you can watch one search evolve under
 //! fleet pressure.
 //!
+//! With `--binary`, the run finishes by shipping one grown session image
+//! across the wire twice — once as the line protocol's hex field and
+//! once as chunked binary blob frames — and reports bytes-on-wire side
+//! by side (the hex encoding pays 2× the image bytes; frames pay ~1×).
+//!
 //! ```bash
 //! cargo run --release --example load_generator -- --clients 32 --sims 32
 //! cargo run --release --example load_generator -- --clients 32 --data-dir /tmp/lg-wal
 //! cargo run --release --example load_generator -- --addr 127.0.0.1:3771 --scrape-every 2
 //! cargo run --release --example load_generator -- --clients 8 --inspect-every 4
+//! cargo run --release --example load_generator -- --clients 4 --binary
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
@@ -43,7 +49,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 use wu_uct::service::json::Json;
-use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, TcpServer};
+use wu_uct::service::{HostClient, ServiceConfig, ShardedConfig, ShardedService, TcpServer};
 use wu_uct::util::cli::{usage, Args, OptSpec};
 
 /// Retry budget for one logical request: enough to ride out a live
@@ -81,6 +87,13 @@ fn specs() -> Vec<OptSpec> {
             help: "client 0 samples its session's inspect summary every N thinks \
                    and prints the search-health line (0 = off)",
             default: Some("0"),
+        },
+        OptSpec {
+            name: "binary",
+            help: "after the pass, export one grown session image over both wire \
+                   encodings (JSON hex line vs binary blob frames) and report \
+                   bytes-on-wire side by side",
+            default: None,
         },
         OptSpec { name: "help", help: "show usage", default: None },
     ]
@@ -428,6 +441,74 @@ fn print_server_metrics(label: &str, addr: &str) -> Result<()> {
     Ok(())
 }
 
+/// `--binary`: ship one grown session image across the wire both ways
+/// and report the byte costs side by side. The session is opened and
+/// grown with the usual retry/backoff, exported once over the line
+/// protocol (the image rides as a hex string in the reply), unsealed
+/// with `install landed:false`, exported again as chunked binary blob
+/// frames (bytes counted by [`HostClient::frame_wire_bytes`]), and
+/// finally retired with `install landed:true`.
+fn binary_wire_report(addr: &str, env: &str, seed: u64, sims: u64) -> Result<()> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut retries = 0u64;
+    let open = request(
+        &mut reader,
+        &mut writer,
+        &format!(r#"{{"op":"open","env":"{env}","seed":{seed},"sims":{sims}}}"#),
+        &mut retries,
+    )?;
+    let sid = open
+        .get("session")
+        .and_then(|s| s.as_u64())
+        .ok_or_else(|| anyhow!("open reply missing session id"))?;
+    let think_line = format!(r#"{{"op":"think","session":{sid}}}"#);
+    request(&mut reader, &mut writer, &think_line, &mut retries)?;
+
+    // Line protocol: the reply line IS the wire cost (hex image plus the
+    // JSON envelope). Export is not idempotent, so it bypasses the retry
+    // loop — exactly as a real client would treat it.
+    let export_line = format!(r#"{{"op":"export","session":{sid}}}"#);
+    writer.write_all(export_line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    let line_wire = reply.len() as u64;
+    let parsed = Json::parse(reply.trim()).context("parsing export reply")?;
+    if parsed.get("ok").and_then(|o| o.as_bool()) != Some(true) {
+        return Err(anyhow!("line export refused: {}", reply.trim()));
+    }
+
+    // The export sealed the session; resolve the seal as "not landed" so
+    // the binary exporter sees the same live session.
+    let unseal = format!(r#"{{"op":"install","session":{sid},"landed":false}}"#);
+    request(&mut reader, &mut writer, &unseal, &mut retries)?;
+
+    // Binary frames: the same image streams back as length-prefixed blob
+    // chunks, counted by the client as it arrives.
+    let client = HostClient::new(addr);
+    let image = client.export(sid)?;
+    let (_, frame_wire) = client.frame_wire_bytes();
+    client.install(sid, true)?;
+
+    let ratio = |wire: u64| wire as f64 / image.len() as f64;
+    println!(
+        "[binary] image {} B | line-protocol export {} B on the wire ({:.2}x image) | \
+         binary frames {} B ({:.3}x image)",
+        image.len(),
+        line_wire,
+        ratio(line_wire),
+        frame_wire,
+        ratio(frame_wire),
+    );
+    if retries > 0 {
+        println!("[binary] absorbed {retries} transient replies while growing the session");
+    }
+    Ok(())
+}
+
 /// Start an in-process single-shard service (durable when `data_dir` is
 /// set) with its TCP front-end on an ephemeral port.
 fn start_in_process(
@@ -466,6 +547,7 @@ fn main() -> Result<()> {
     let data_dir = args.str("data-dir")?.to_string();
     let scrape_every = args.u64("scrape-every")?;
     let inspect_every = args.u64("inspect-every")?;
+    let binary = args.flag("binary");
 
     // External server: one pass against it, whatever it is.
     if !args.str("addr")?.is_empty() {
@@ -474,6 +556,11 @@ fn main() -> Result<()> {
         let sum =
             drive("external", &addr, clients, &env, seed, sims, steps, scrape_every, inspect_every);
         sum.print();
+        if binary {
+            if let Err(e) = binary_wire_report(&addr, &env, seed, sims) {
+                eprintln!("[binary] wire report failed: {e:#}");
+            }
+        }
         return print_server_metrics("external", &addr);
     }
 
@@ -494,6 +581,9 @@ fn main() -> Result<()> {
     );
     memory.print();
     print_server_metrics("memory", &mem_addr)?;
+    if binary {
+        binary_wire_report(&mem_addr, &env, seed, sims)?;
+    }
     drop((mem_service, mem_server));
 
     if !data_dir.is_empty() {

@@ -15,7 +15,8 @@ use wu_uct::env::Env;
 use wu_uct::eval::HeuristicPolicy;
 use wu_uct::mcts::common::{backprop, init_node, traverse, SearchSpec};
 use wu_uct::mcts::wu_uct::workers::{Pool, Task, TaskResult};
-use wu_uct::tree::{select_child, ScoreMode, Tree};
+use wu_uct::service::json::{obj, Json};
+use wu_uct::tree::{select_child, select_child_scalar, ScoreMode, Tree};
 use wu_uct::util::rng::Pcg32;
 
 fn build_tree(depth: u32, branching: usize) -> Tree {
@@ -48,7 +49,38 @@ fn build_tree(depth: u32, branching: usize) -> Tree {
 }
 
 fn main() {
-    // --- selection scoring ---
+    // --- selection scoring: scalar node walk vs the SoA lane scan ---
+    // Same argmax by construction (the properties suite proves bit
+    // identity); the pairs below measure what the layout change buys at
+    // growing child widths. Rows land in BENCH_micro_hotpath.json so CI
+    // can diff against the checked-in baseline.
+    let mut select_rows: Vec<Json> = Vec::new();
+    for width in [5usize, 16, 64] {
+        let wide = build_tree(1, width);
+        for mode in [ScoreMode::Uct, ScoreMode::WuUct, ScoreMode::VirtualLoss] {
+            let scalar = bench(
+                &format!("select scalar {mode:?} ({width}-way)"),
+                200,
+                2000,
+                || select_child_scalar(&wide, Tree::ROOT, mode, 1.0),
+            );
+            let soa = bench(&format!("select SoA    {mode:?} ({width}-way)"), 200, 2000, || {
+                select_child(&wide, Tree::ROOT, mode, 1.0)
+            });
+            let (s, f) = (scalar.mean_secs(), soa.mean_secs());
+            if f > 0.0 {
+                println!("  SoA speedup {mode:?} {width}-way: {:.2}x", s / f);
+            }
+            select_rows.push(obj([
+                ("bench", Json::Str("select_child".into())),
+                ("config", Json::Str(format!("{mode:?} {width}-way"))),
+                ("scalar_ns", Json::Num(s * 1e9)),
+                ("soa_ns", Json::Num(f * 1e9)),
+                ("speedup", Json::Num(if f > 0.0 { s / f } else { 0.0 })),
+            ]));
+        }
+    }
+
     let tree = build_tree(4, 5);
     bench("select_child Eq4 (5-way node)", 100, 2000, || {
         select_child(&tree, Tree::ROOT, ScoreMode::WuUct, 1.0)
@@ -56,9 +88,14 @@ fn main() {
 
     let spec = SearchSpec::default();
     let mut rng = Pcg32::new(7);
-    bench("traverse full tree (depth 4, b=5)", 100, 2000, || {
+    let trav = bench("traverse full tree (depth 4, b=5)", 100, 2000, || {
         traverse(&tree, ScoreMode::WuUct, &spec, &mut rng)
     });
+    select_rows.push(obj([
+        ("bench", Json::Str("traverse".into())),
+        ("config", Json::Str("depth 4, b=5".into())),
+        ("soa_ns", Json::Num(trav.mean_secs() * 1e9)),
+    ]));
 
     // --- backprop ---
     let mut bp_tree = Tree::new();
@@ -144,5 +181,25 @@ fn main() {
         );
     } else {
         println!("artifacts missing — PJRT benches skipped (run `make artifacts`)");
+    }
+
+    // Baseline file at the repo root, diffed by CI's bench-regression
+    // step: the headline number is the 64-way WU-UCT SoA scan.
+    let headline = select_rows
+        .iter()
+        .find(|r| {
+            r.get("config").and_then(|c| c.as_str()) == Some("WuUct 64-way")
+        })
+        .cloned()
+        .unwrap_or(Json::Null);
+    let doc = Json::Obj(vec![
+        ("bench".to_string(), Json::Str("micro_hotpath".into())),
+        ("headline".to_string(), headline),
+        ("select".to_string(), Json::Arr(select_rows)),
+    ]);
+    let path = "BENCH_micro_hotpath.json";
+    match std::fs::write(path, doc.render() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

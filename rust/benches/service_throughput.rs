@@ -31,7 +31,10 @@ use wu_uct::env::garnet::Garnet;
 use wu_uct::mcts::SearchSpec;
 use wu_uct::service::json::{obj, Json};
 use wu_uct::service::metrics::percentile;
-use wu_uct::service::{ServiceConfig, ShardedConfig, ShardedService, SessionOptions};
+use wu_uct::service::{
+    HostClient, SearchService, ServiceConfig, ShardedConfig, ShardedService, SessionOptions,
+    TcpServer,
+};
 use wu_uct::store::codec::{SessionImage, SessionMeta};
 use wu_uct::testkit::{scripted_driver, LatencyScript};
 
@@ -104,6 +107,61 @@ fn run_cell(
         sim_occupancy: m.sim_occupancy,
         sims_stolen: m.sims_stolen,
     }
+}
+
+/// One wire-level cell: `sessions` concurrent TCP connections, each
+/// running a full episode through the JSON line protocol. `backend`
+/// picks the thread-per-connection baseline or the event-loop reactors;
+/// the service fleet behind them is identical, so any throughput gap is
+/// pure front-end.
+fn run_tcp_cell(backend: &str, sessions: usize, thinks: u32, sims: u32) -> Json {
+    let service = SearchService::start(ServiceConfig {
+        expansion_workers: 2,
+        simulation_workers: 8,
+        ..ServiceConfig::default()
+    });
+    let server = if backend == "threaded" {
+        TcpServer::bind_threaded(service.handle(), "127.0.0.1:0").expect("bind threaded")
+    } else {
+        TcpServer::bind(service.handle(), "127.0.0.1:0").expect("bind evloop")
+    };
+    let addr = server.local_addr().to_string();
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..sessions {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let client = HostClient::new(addr);
+                let spec = SearchSpec {
+                    max_simulations: sims,
+                    rollout_limit: 10,
+                    max_depth: 12,
+                    seed: s as u64,
+                    ..SearchSpec::default()
+                };
+                let opts = SessionOptions { env_seed: s as u64, ..SessionOptions::default() };
+                let sid = client
+                    .open_with_id(1 + s as u64, "garnet", &spec, &opts)
+                    .expect("open over tcp");
+                for _ in 0..thinks {
+                    let t = client.think(sid, 0).expect("think over tcp");
+                    let adv = client.advance(sid, t.action).expect("advance over tcp");
+                    if adv.done {
+                        break;
+                    }
+                }
+                client.close(sid).expect("close over tcp");
+            });
+        }
+    });
+    let elapsed = start.elapsed().as_secs_f64();
+    drop(server);
+    obj([
+        ("bench", Json::Str("service_tcp".into())),
+        ("backend", Json::Str(backend.into())),
+        ("sessions", Json::Num(sessions as f64)),
+        ("sessions_per_sec", Json::Num(sessions as f64 / elapsed)),
+    ])
 }
 
 fn cell_json(cell: &Cell, fleet: &str) -> Json {
@@ -310,6 +368,26 @@ fn main() {
             _ => {}
         }
     }
+    // Wire-level backend comparison at 32 sessions: the same episode
+    // load over real TCP connections — thread-per-connection baseline
+    // first, then the event-loop reactors.
+    let mut tcp_rows: Vec<Json> = Vec::new();
+    let mut tcp_base: Option<f64> = None;
+    for backend in ["threaded", "evloop"] {
+        let row = run_tcp_cell(backend, 32, thinks, sims);
+        println!("{}", row.render());
+        let sps = row.get("sessions_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        match backend {
+            "threaded" => tcp_base = Some(sps),
+            _ => {
+                if let Some(base) = tcp_base.filter(|&b| b > 0.0) {
+                    println!("  tcp @32 sessions: evloop / threaded = {:.2}x", sps / base);
+                }
+            }
+        }
+        tcp_rows.push(row);
+    }
+
     // Durable mode: full-image snapshots (pre-refactor behavior) vs
     // delta snapshots under group commit, on the big-tree configuration
     // (8 sessions thinking repeatedly without advancing). The acceptance
@@ -357,6 +435,7 @@ fn main() {
             Json::Str(if paper_scale() { "paper".into() } else { "quick".into() }),
         ),
         ("cells".to_string(), Json::Arr(records)),
+        ("tcp".to_string(), Json::Arr(tcp_rows)),
         ("durable".to_string(), Json::Arr(vec![durable_full, durable_delta])),
         ("snapshot_restore".to_string(), codec),
     ];

@@ -20,6 +20,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -27,11 +28,10 @@ use anyhow::{anyhow, Context as _, Result};
 
 use crate::mcts::common::SearchSpec;
 use crate::obs::Event;
+use crate::service::frame::{BlobOrReply, FrameStream, OP_REQ};
 use crate::service::json::Json;
 use crate::service::metrics::ServiceMetrics;
-use crate::service::proto::{
-    event_from_json, image_from_hex, image_to_hex, metrics_from_json, summary_from_json,
-};
+use crate::service::proto::{event_from_json, metrics_from_json, summary_from_json};
 use crate::service::fair::QosClass;
 use crate::service::lease::LeaseLost;
 use crate::service::scheduler::{
@@ -85,6 +85,12 @@ enum Attempt {
 pub struct HostClient {
     addr: String,
     pool: Mutex<Vec<Conn>>,
+    /// Framed connections for the image-carrying ops (export, import,
+    /// replicate): raw bytes on the wire instead of a 2× hex blow-up,
+    /// streamed in chunks with no whole-line materialization cap.
+    frame_pool: Mutex<Vec<FrameStream>>,
+    frame_bytes_out: AtomicU64,
+    frame_bytes_in: AtomicU64,
     /// Dial timeout: a blackholed host (packets dropped, no RST) must
     /// not wedge a router thread for the OS SYN-retry window.
     connect_timeout: Duration,
@@ -99,6 +105,9 @@ impl HostClient {
         HostClient {
             addr: addr.into(),
             pool: Mutex::new(Vec::new()),
+            frame_pool: Mutex::new(Vec::new()),
+            frame_bytes_out: AtomicU64::new(0),
+            frame_bytes_in: AtomicU64::new(0),
             connect_timeout: Duration::from_secs(5),
             read_timeout: Duration::from_secs(120),
         }
@@ -127,6 +136,33 @@ impl HostClient {
         stream.set_read_timeout(Some(self.read_timeout))?;
         let writer = stream.try_clone()?;
         Ok(Conn { reader: BufReader::new(stream), writer })
+    }
+
+    fn dial_frame(&self) -> std::io::Result<FrameStream> {
+        use std::net::ToSocketAddrs;
+        let addr = self
+            .addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| std::io::Error::other(format!("{} resolves to nothing", self.addr)))?;
+        let stream = TcpStream::connect_timeout(&addr, self.connect_timeout)?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        Ok(FrameStream::new(stream))
+    }
+
+    /// Fold a framed connection's byte counters into the client-wide
+    /// totals; `before` is its [`FrameStream::wire_bytes`] at checkout.
+    fn settle_frame(&self, fs: &FrameStream, before: (u64, u64)) {
+        let (out, inn) = fs.wire_bytes();
+        self.frame_bytes_out.fetch_add(out - before.0, Ordering::Relaxed);
+        self.frame_bytes_in.fetch_add(inn - before.1, Ordering::Relaxed);
+    }
+
+    /// Cumulative `(sent, received)` bytes on the wire across every
+    /// binary-framed call this client has made — the measurement behind
+    /// the "image travels at ~1× its size, not 2× hex" guarantee.
+    pub fn frame_wire_bytes(&self) -> (u64, u64) {
+        (self.frame_bytes_out.load(Ordering::Relaxed), self.frame_bytes_in.load(Ordering::Relaxed))
     }
 
     /// One request/reply line round trip on a connection, distinguishing
@@ -360,30 +396,96 @@ impl HostClient {
         })
     }
 
-    /// Migration source half: serialize + seal on the host, and carry
-    /// the binary image back out of its hex frame.
+    /// Migration source half: serialize + seal on the host, and stream
+    /// the binary image back over a length-prefixed framed connection —
+    /// raw bytes in chunks, so a big tree never pays the 2× hex blow-up
+    /// or the line protocol's whole-image materialization cap. Retry
+    /// policy mirrors [`HostClient::call_once`]: a failed *write* never
+    /// left this process and re-dials; a lost *reply* may have sealed
+    /// the session and must not re-execute.
     pub fn export(&self, session: u64) -> Result<Vec<u8>> {
-        let v = self.ok_call_once(&format!(r#"{{"op":"export","session":{session}}}"#), session)?;
-        let frame = v
-            .get("image")
-            .and_then(|i| i.as_str())
-            .ok_or_else(|| anyhow!("host {}: export reply missing image", self.addr))?;
-        image_from_hex(frame)
-            .with_context(|| format!("host {} sent a malformed image frame", self.addr))
+        let line = format!(r#"{{"op":"export","session":{session}}}"#);
+        for attempt in 0..2 {
+            let fs = if attempt == 0 { self.frame_pool.lock().unwrap().pop() } else { None };
+            let mut fs = match fs {
+                Some(f) => f,
+                None => match self.dial_frame() {
+                    Ok(f) => f,
+                    Err(_) => continue,
+                },
+            };
+            let before = fs.wire_bytes();
+            if fs.send(OP_REQ, line.as_bytes()).is_err() {
+                self.settle_frame(&fs, before);
+                continue; // request never left: safe to re-dial
+            }
+            let got = fs.recv_blob();
+            self.settle_frame(&fs, before);
+            let got = match got {
+                Ok(g) => g,
+                Err(_) => break, // may have sealed remotely: do not re-execute
+            };
+            match got {
+                BlobOrReply::Blob { header, bytes } => {
+                    let v = Json::parse(header.trim()).with_context(|| {
+                        format!("host {} sent an unparseable blob header", self.addr)
+                    })?;
+                    self.frame_pool.lock().unwrap().push(fs);
+                    self.expect_ok(v, session)?;
+                    return Ok(bytes);
+                }
+                BlobOrReply::Line(reply) => {
+                    // Plain reply instead of a blob: the host refused
+                    // (unknown session, sealed, …) — surface it typed.
+                    let v = Json::parse(reply.trim()).with_context(|| {
+                        format!("host {} sent an unparseable reply", self.addr)
+                    })?;
+                    self.frame_pool.lock().unwrap().push(fs);
+                    self.expect_ok(v, session)?;
+                    anyhow::bail!("host {}: export reply carried no image", self.addr);
+                }
+            }
+        }
+        Err(anyhow::Error::new(HostUnreachable { host: self.addr.clone() }))
     }
 
     /// Migration target half: install an image (durable `Open` lands
-    /// before the host acks).
+    /// before the host acks). The image streams as raw framed chunks;
+    /// the host only executes once the complete, length-checked blob
+    /// has assembled, so a write failure mid-stream provably did not
+    /// import and re-dials, while a lost reply does not retry.
     pub fn import(&self, image: &[u8]) -> Result<u64> {
-        let line = Json::Obj(vec![
-            ("op".to_string(), Json::Str("import".to_string())),
-            ("image".to_string(), Json::Str(image_to_hex(image))),
-        ])
-        .render();
-        let v = self.ok_call_once(&line, 0)?;
-        v.get("session")
-            .and_then(|s| s.as_u64())
-            .ok_or_else(|| anyhow!("host {}: import reply missing session id", self.addr))
+        let header = format!(r#"{{"op":"import","len":{}}}"#, image.len());
+        for attempt in 0..2 {
+            let fs = if attempt == 0 { self.frame_pool.lock().unwrap().pop() } else { None };
+            let mut fs = match fs {
+                Some(f) => f,
+                None => match self.dial_frame() {
+                    Ok(f) => f,
+                    Err(_) => continue,
+                },
+            };
+            let before = fs.wire_bytes();
+            if fs.send_blob(&header, image).is_err() {
+                self.settle_frame(&fs, before);
+                continue; // partial blob never dispatches: safe to re-dial
+            }
+            let reply = fs.recv_reply();
+            self.settle_frame(&fs, before);
+            let reply = match reply {
+                Ok(r) => r,
+                Err(_) => break, // may have imported: do not re-execute
+            };
+            let v = Json::parse(reply.trim())
+                .with_context(|| format!("host {} sent an unparseable reply", self.addr))?;
+            self.frame_pool.lock().unwrap().push(fs);
+            let v = self.expect_ok(v, 0)?;
+            return v
+                .get("session")
+                .and_then(|s| s.as_u64())
+                .ok_or_else(|| anyhow!("host {}: import reply missing session id", self.addr));
+        }
+        Err(anyhow::Error::new(HostUnreachable { host: self.addr.clone() }))
     }
 
     /// Resolve a seal: `landed = true` forgets the host's copy,
@@ -469,20 +571,43 @@ impl HostClient {
             .ok_or_else(|| anyhow!("host {}: drain reply missing moved", self.addr))
     }
 
-    /// Ship one replication frame to a standby host. Idempotent by
+    /// Ship one replication frame to a standby host as a raw framed
+    /// blob (no hex doubling on the shipping path). Idempotent by
     /// construction — the standby skips already-applied sequences — so a
-    /// lost reply retries safely. Returns the standby's contiguous ack.
+    /// lost reply retries on a fresh dial, exactly like
+    /// [`HostClient::call`]. Returns the standby's contiguous ack.
     pub fn replicate(&self, shard: usize, frame: &[u8]) -> Result<u64> {
-        let line = Json::Obj(vec![
-            ("op".to_string(), Json::Str("replicate".to_string())),
-            ("shard".to_string(), Json::Num(shard as f64)),
-            ("frame".to_string(), Json::Str(image_to_hex(frame))),
-        ])
-        .render();
-        let v = self.ok_call(&line, 0)?;
-        v.get("acked")
-            .and_then(|a| a.as_u64())
-            .ok_or_else(|| anyhow!("host {}: replicate reply missing acked", self.addr))
+        let header = format!(r#"{{"op":"replicate","shard":{shard},"len":{}}}"#, frame.len());
+        for attempt in 0..2 {
+            let fs = if attempt == 0 { self.frame_pool.lock().unwrap().pop() } else { None };
+            let mut fs = match fs {
+                Some(f) => f,
+                None => match self.dial_frame() {
+                    Ok(f) => f,
+                    Err(_) => continue,
+                },
+            };
+            let before = fs.wire_bytes();
+            if fs.send_blob(&header, frame).is_err() {
+                self.settle_frame(&fs, before);
+                continue;
+            }
+            let reply = fs.recv_reply();
+            self.settle_frame(&fs, before);
+            let reply = match reply {
+                Ok(r) => r,
+                Err(_) => continue, // idempotent: a lost ack retries
+            };
+            let v = Json::parse(reply.trim())
+                .with_context(|| format!("host {} sent an unparseable reply", self.addr))?;
+            self.frame_pool.lock().unwrap().push(fs);
+            let v = self.expect_ok(v, 0)?;
+            return v
+                .get("acked")
+                .and_then(|a| a.as_u64())
+                .ok_or_else(|| anyhow!("host {}: replicate reply missing acked", self.addr));
+        }
+        Err(anyhow::Error::new(HostUnreachable { host: self.addr.clone() }))
     }
 
     /// Read a standby host's per-shard replication progress (idempotent)

@@ -1,0 +1,929 @@
+//! Readiness-based event loop for the TCP front-end: every connection is
+//! multiplexed over a small fixed pool of reactor threads (non-blocking
+//! sockets + a std-only poll(2) wrapper), replacing the
+//! thread-per-connection model whose stack-per-socket cost capped
+//! connection count.
+//!
+//! Division of labor:
+//!
+//! * **Reactors** own the sockets. Each reactor polls its share of
+//!   connections (plus a wake pipe), reassembles partial JSON lines and
+//!   binary frames ([`crate::service::frame`]), queues complete requests,
+//!   and writes queued reply bytes back out. A reactor never calls into
+//!   the scheduler — session ops block (on fair-queue admission, WAL
+//!   commit tickets, deadline clocks), and a blocked reactor would stall
+//!   every connection it owns.
+//! * **Dispatch workers** run the blocking work. An adaptive pool (grows
+//!   on demand up to a cap, shrinks when idle) pops queued requests,
+//!   dispatches through [`crate::service::proto::handle_bytes`] (or the
+//!   blob ops in binary mode), and appends reply bytes to the
+//!   connection's outbox. Only the reactor touches the socket, so
+//!   replies cannot interleave.
+//!
+//! Per-connection ordering is preserved by construction: one worker at a
+//! time drains a connection's queue FIFO (`in_flight`), and the outbox is
+//! FIFO too — a client that pipelines N requests gets N replies in order,
+//! exactly as the thread-per-connection server answered them.
+//!
+//! Backpressure: a connection with [`MAX_PENDING_JOBS`] undispatched
+//! requests or [`MAX_OUTBOX_BYTES`] unflushed reply bytes stops being
+//! polled for readability until the backlog drains — a client that won't
+//! read its replies stalls only itself, never the reactor.
+//!
+//! Panic accounting matches the old model: a handler panic is caught in
+//! the worker, counted in [`crate::service::server::connection_stats`],
+//! and the connection is closed (its slot released, its orphan sessions
+//! reaped) — never silent, never a wedged reactor.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::raw::c_int;
+use std::os::unix::net::UnixStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::service::frame::{
+    self, FrameReader, MAX_BLOB_BYTES, OP_BLOB_BEGIN, OP_BLOB_CHUNK, OP_BLOB_END, OP_REP, OP_REQ,
+};
+use crate::service::json::{obj, Json};
+use crate::service::proto::{error_line, handle_bytes, LineEffect};
+use crate::service::server::{ConnGuard, HANDLER_PANICS};
+use crate::service::SessionApi;
+
+/// Undispatched requests one connection may queue before its socket
+/// stops being polled for reads.
+const MAX_PENDING_JOBS: usize = 128;
+/// Unflushed reply bytes one connection may hold before its socket stops
+/// being polled for reads. (A streamed export may overshoot transiently —
+/// the bound gates *admission of new requests*, not reply production.)
+const MAX_OUTBOX_BYTES: usize = 8 << 20;
+/// Dispatch-pool floor: always-warm workers.
+const MIN_WORKERS: usize = 2;
+/// Dispatch-pool ceiling: blocking ops (durable thinks parked on commit
+/// tickets) hold a worker each, so the cap bounds concurrent blocked ops.
+const MAX_WORKERS: usize = 256;
+/// An idle worker above the floor exits after this long without work.
+const WORKER_IDLE_EXIT: Duration = Duration::from_millis(500);
+
+// ---------------------------------------------------------------------
+// poll(2), std-only
+// ---------------------------------------------------------------------
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+#[cfg(target_os = "linux")]
+type NfdsT = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = u32;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+}
+
+/// poll(2) with EINTR retry. Returns the ready count (0 on timeout); any
+/// other failure is reported as 0 so the loop keeps running.
+fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> usize {
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+        if rc >= 0 {
+            return rc as usize;
+        }
+        if std::io::Error::last_os_error().kind() != ErrorKind::Interrupted {
+            return 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared per-connection state (reactor <-> workers)
+// ---------------------------------------------------------------------
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One parsed request (or terminal action) awaiting a dispatch worker.
+enum Job {
+    /// A complete JSON request line (already stripped of `\r\n`).
+    Line(Vec<u8>),
+    /// An [`OP_REQ`] frame payload (a JSON request object).
+    Frame(Vec<u8>),
+    /// An assembled blob: the BEGIN header line plus the streamed bytes.
+    Blob { header: String, bytes: Vec<u8> },
+    /// A malformed frame survived by the reader; reply with a typed
+    /// error. Queued (not answered inline) so replies stay in order.
+    FrameError(String),
+    /// Terminal: the connection is gone — close its orphan sessions,
+    /// then release the slot by dropping the guard.
+    Reap { guard: ConnGuard },
+}
+
+/// State shared between the reactor (parses requests, writes replies)
+/// and dispatch workers (produce replies).
+struct ConnShared {
+    pending: VecDeque<Job>,
+    /// True while some worker owns this connection's queue.
+    in_flight: bool,
+    outbox: VecDeque<Vec<u8>>,
+    outbox_bytes: usize,
+    /// Sessions opened (id-less) over this connection, reaped at close.
+    owned: Vec<u64>,
+    /// Sniffed protocol: replies are frames when true, lines when false.
+    binary: bool,
+    /// Set by a worker after a handler panic: the reactor must close
+    /// this connection.
+    kill: bool,
+}
+
+impl ConnShared {
+    fn new() -> ConnShared {
+        ConnShared {
+            pending: VecDeque::new(),
+            in_flight: false,
+            outbox: VecDeque::new(),
+            outbox_bytes: 0,
+            owned: Vec::new(),
+            binary: false,
+            kill: false,
+        }
+    }
+
+    fn push_out(&mut self, bytes: Vec<u8>) {
+        self.outbox_bytes += bytes.len();
+        self.outbox.push_back(bytes);
+    }
+}
+
+/// Wakes a reactor out of poll(2): one byte down a nonblocking pipe
+/// (a full pipe means a wake is already pending — dropping the byte is
+/// correct).
+#[derive(Clone)]
+pub(crate) struct Wake(Arc<UnixStream>);
+
+impl Wake {
+    fn wake(&self) {
+        let _ = (&*self.0).write(&[1u8]);
+    }
+}
+
+/// One connection's queue handed to a dispatch worker.
+struct WorkItem {
+    shared: Arc<Mutex<ConnShared>>,
+    wake: Wake,
+}
+
+// ---------------------------------------------------------------------
+// Dispatch workers
+// ---------------------------------------------------------------------
+
+struct DispatchInner<H> {
+    handle: H,
+    rx: Mutex<Receiver<WorkItem>>,
+    idle: AtomicUsize,
+    workers: AtomicUsize,
+}
+
+/// The adaptive worker pool. Cloned into every reactor; when the last
+/// clone drops, the channel disconnects and workers wind down.
+struct Dispatcher<H> {
+    tx: Sender<WorkItem>,
+    inner: Arc<DispatchInner<H>>,
+}
+
+impl<H> Clone for Dispatcher<H> {
+    fn clone(&self) -> Dispatcher<H> {
+        Dispatcher { tx: self.tx.clone(), inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<H: SessionApi> Dispatcher<H> {
+    fn new(handle: H) -> Dispatcher<H> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let inner = Arc::new(DispatchInner {
+            handle,
+            rx: Mutex::new(rx),
+            idle: AtomicUsize::new(0),
+            workers: AtomicUsize::new(0),
+        });
+        let d = Dispatcher { tx, inner };
+        for _ in 0..MIN_WORKERS {
+            d.spawn_worker();
+        }
+        d
+    }
+
+    fn spawn_worker(&self) {
+        self.inner.workers.fetch_add(1, Ordering::SeqCst);
+        let inner = Arc::clone(&self.inner);
+        let _ = std::thread::Builder::new()
+            .name("wuuct-dispatch".into())
+            .spawn(move || run_worker(inner));
+    }
+
+    /// Hand one connection's queue to the pool, growing it if every
+    /// worker is busy (blocking ops hold workers; queued work must not
+    /// starve behind them).
+    fn submit(&self, item: WorkItem) {
+        if self.tx.send(item).is_err() {
+            return; // shutting down
+        }
+        if self.inner.idle.load(Ordering::SeqCst) == 0
+            && self.inner.workers.load(Ordering::SeqCst) < MAX_WORKERS
+        {
+            self.spawn_worker();
+        }
+    }
+}
+
+fn run_worker<H: SessionApi>(inner: Arc<DispatchInner<H>>) {
+    loop {
+        inner.idle.fetch_add(1, Ordering::SeqCst);
+        let got = { lock(&inner.rx).recv_timeout(WORKER_IDLE_EXIT) };
+        inner.idle.fetch_sub(1, Ordering::SeqCst);
+        match got {
+            Ok(item) => serve_item(&inner, item),
+            Err(RecvTimeoutError::Timeout) => {
+                let w = inner.workers.load(Ordering::SeqCst);
+                if w > MIN_WORKERS
+                    && inner
+                        .workers
+                        .compare_exchange(w, w - 1, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                inner.workers.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
+        }
+    }
+}
+
+/// Reply line for a survived malformed frame: typed, so a framed client
+/// can tell wire damage from an op-level error.
+fn frame_error_line(msg: &str) -> String {
+    obj([
+        ("ok", Json::Bool(false)),
+        ("frame_error", Json::Bool(true)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+    .render()
+}
+
+/// Queue one reply on the connection and wake its reactor to flush it.
+fn push_reply(item: &WorkItem, line: &str) {
+    let mut s = lock(&item.shared);
+    if s.kill {
+        return;
+    }
+    let bytes = if s.binary {
+        frame::encode_frame(OP_REP, line.as_bytes())
+    } else {
+        let mut b = Vec::with_capacity(line.len() + 1);
+        b.extend_from_slice(line.as_bytes());
+        b.push(b'\n');
+        b
+    };
+    s.push_out(bytes);
+    drop(s);
+    item.wake.wake();
+}
+
+fn apply_effect(shared: &Mutex<ConnShared>, effect: LineEffect) {
+    match effect {
+        LineEffect::Opened(sid) => lock(shared).owned.push(sid),
+        LineEffect::Closed(sid) => lock(shared).owned.retain(|&s| s != sid),
+        LineEffect::None => {}
+    }
+}
+
+/// A handler panicked: count it, poison the connection, let the reactor
+/// tear it down (the reap job then closes its sessions).
+fn panic_kill(item: &WorkItem) {
+    HANDLER_PANICS.fetch_add(1, Ordering::Relaxed);
+    lock(&item.shared).kill = true;
+    item.wake.wake();
+}
+
+/// Drain one connection's queue FIFO. Exactly one worker runs this per
+/// connection at a time (`in_flight`), so replies are ordered.
+fn serve_item<H: SessionApi>(inner: &Arc<DispatchInner<H>>, item: WorkItem) {
+    loop {
+        let (job, kill) = {
+            let mut s = lock(&item.shared);
+            match s.pending.pop_front() {
+                Some(j) => (j, s.kill),
+                None => {
+                    s.in_flight = false;
+                    return;
+                }
+            }
+        };
+        // A poisoned connection processes nothing further — except its
+        // reap, which must still release the slot and the sessions.
+        if kill && !matches!(job, Job::Reap { .. }) {
+            continue;
+        }
+        match job {
+            Job::Reap { guard } => {
+                let owned = std::mem::take(&mut lock(&item.shared).owned);
+                for sid in owned {
+                    let _ = catch_unwind(AssertUnwindSafe(|| inner.handle.close(sid)));
+                }
+                drop(guard);
+            }
+            Job::FrameError(msg) => push_reply(&item, &frame_error_line(&msg)),
+            Job::Line(bytes) => {
+                match catch_unwind(AssertUnwindSafe(|| handle_bytes(&inner.handle, &bytes))) {
+                    Ok((reply, effect)) => {
+                        apply_effect(&item.shared, effect);
+                        push_reply(&item, &reply);
+                    }
+                    Err(_) => panic_kill(&item),
+                }
+            }
+            Job::Frame(payload) => {
+                match catch_unwind(AssertUnwindSafe(|| serve_frame_req(inner, &item, &payload))) {
+                    Ok(()) => {}
+                    Err(_) => panic_kill(&item),
+                }
+            }
+            Job::Blob { header, bytes } => {
+                match catch_unwind(AssertUnwindSafe(|| serve_blob(inner, &item, &header, bytes))) {
+                    Ok(()) => {}
+                    Err(_) => panic_kill(&item),
+                }
+            }
+        }
+    }
+}
+
+/// One [`OP_REQ`] frame: same ops as the line protocol, with one binary
+/// upgrade — `export` streams the image as a blob instead of a hex field,
+/// freeing it from [`crate::service::proto::MAX_IMAGE_BYTES`].
+fn serve_frame_req<H: SessionApi>(inner: &Arc<DispatchInner<H>>, item: &WorkItem, payload: &[u8]) {
+    let is_export = matches!(
+        Json::parse_bytes(payload),
+        Ok(req) if req.get("op").and_then(|v| v.as_str()) == Some("export")
+    );
+    if !is_export {
+        let (reply, effect) = handle_bytes(&inner.handle, payload);
+        apply_effect(&item.shared, effect);
+        push_reply(item, &reply);
+        return;
+    }
+    let req = Json::parse_bytes(payload).expect("checked above");
+    match export_blob(&inner.handle, &req) {
+        Ok((header, bytes)) => {
+            let mut s = lock(&item.shared);
+            if s.kill {
+                return;
+            }
+            s.push_out(frame::encode_frame(OP_BLOB_BEGIN, header.as_bytes()));
+            for chunk in bytes.chunks(frame::BLOB_CHUNK_BYTES) {
+                s.push_out(frame::encode_frame(OP_BLOB_CHUNK, chunk));
+            }
+            s.push_out(frame::encode_frame(OP_BLOB_END, &(bytes.len() as u64).to_le_bytes()));
+            drop(s);
+            item.wake.wake();
+        }
+        Err(e) => push_reply(item, &error_line(&e)),
+    }
+}
+
+/// Binary-mode export: seal + serialize via the same [`SessionApi`] path
+/// as the JSON op, but stream the raw image (no hex, no 32 MiB cap —
+/// only the [`MAX_BLOB_BYTES`] sanity bound).
+fn export_blob<H: SessionApi>(handle: &H, req: &Json) -> anyhow::Result<(String, Vec<u8>)> {
+    let sid = req
+        .get("session")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("missing field \"session\""))?;
+    let bytes = handle.export_image(sid)?;
+    if bytes.len() as u64 > MAX_BLOB_BYTES {
+        // Undo the seal, as the JSON path does for its own cap: an
+        // unshippable image must not leave the session stuck recovering.
+        let _ = handle.resolve_seal(sid, false);
+        anyhow::bail!(
+            "session {sid} image is {} bytes, past the {MAX_BLOB_BYTES} byte blob cap",
+            bytes.len()
+        );
+    }
+    let header = obj([
+        ("ok", Json::Bool(true)),
+        ("session", Json::Num(sid as f64)),
+        ("len", Json::Num(bytes.len() as f64)),
+    ])
+    .render();
+    Ok((header, bytes))
+}
+
+/// An assembled upstream blob: `import` and `replicate` carrying raw
+/// image/frame bytes (the hexless halves of their JSON ops).
+fn serve_blob<H: SessionApi>(
+    inner: &Arc<DispatchInner<H>>,
+    item: &WorkItem,
+    header: &str,
+    bytes: Vec<u8>,
+) {
+    let reply = serve_blob_inner(&inner.handle, header, bytes);
+    match reply {
+        Ok(line) => push_reply(item, &line),
+        Err(e) => push_reply(item, &error_line(&e)),
+    }
+}
+
+fn serve_blob_inner<H: SessionApi>(
+    handle: &H,
+    header: &str,
+    bytes: Vec<u8>,
+) -> anyhow::Result<String> {
+    let req = Json::parse(header)?;
+    let op = req
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("blob header missing field \"op\""))?;
+    match op {
+        "import" => {
+            let sid = handle.import_image(bytes)?;
+            // Imported sessions belong to the migration machinery, not
+            // this connection: no ownership effect, as on the JSON path.
+            Ok(obj([("ok", Json::Bool(true)), ("session", Json::Num(sid as f64))]).render())
+        }
+        "replicate" => {
+            let shard = req
+                .get("shard")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("blob header missing field \"shard\""))?
+                as usize;
+            let acked = handle.replicate_apply(shard, bytes)?;
+            Ok(obj([("ok", Json::Bool(true)), ("acked", Json::Num(acked as f64))]).render())
+        }
+        other => anyhow::bail!("unknown blob op {other:?} (expected \"import\" or \"replicate\")"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reactors
+// ---------------------------------------------------------------------
+
+/// A connection handed from the accept thread to a reactor.
+pub(crate) struct NewConn {
+    pub(crate) stream: TcpStream,
+    pub(crate) guard: ConnGuard,
+}
+
+#[derive(PartialEq)]
+enum Proto {
+    Unknown,
+    Json,
+    Binary,
+}
+
+/// An upstream blob mid-assembly.
+struct BlobState {
+    header: String,
+    bytes: Vec<u8>,
+    failed: Option<String>,
+}
+
+/// One connection as the reactor sees it.
+struct ConnState {
+    stream: TcpStream,
+    shared: Arc<Mutex<ConnShared>>,
+    guard: Option<ConnGuard>,
+    proto: Proto,
+    /// JSON mode: bytes of a not-yet-complete line.
+    rdbuf: Vec<u8>,
+    /// Binary mode: the incremental frame decoder.
+    frames: FrameReader,
+    blob: Option<BlobState>,
+    /// The reply buffer currently being written, with its offset.
+    wr: Option<(Vec<u8>, usize)>,
+    eof: bool,
+}
+
+impl ConnState {
+    fn new(stream: TcpStream, guard: ConnGuard) -> ConnState {
+        ConnState {
+            stream,
+            shared: Arc::new(Mutex::new(ConnShared::new())),
+            guard: Some(guard),
+            proto: Proto::Unknown,
+            rdbuf: Vec::new(),
+            frames: FrameReader::new(),
+            blob: None,
+            wr: None,
+            eof: false,
+        }
+    }
+}
+
+/// The running reactor pool plus the intake lanes the accept thread
+/// feeds. Dropping (or [`EventLoop::shutdown`]) stops the reactors,
+/// closing every live connection and reaping its sessions.
+pub(crate) struct EventLoop {
+    intakes: Vec<(Arc<Mutex<Vec<NewConn>>>, Wake)>,
+    next: AtomicUsize,
+    stop: Arc<AtomicBool>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl EventLoop {
+    /// Spawn the reactor pool and the dispatch-worker floor.
+    pub(crate) fn start<H: SessionApi>(handle: H) -> std::io::Result<EventLoop> {
+        let reactors = std::thread::available_parallelism()
+            .map(|n| (n.get() / 4).clamp(1, 4))
+            .unwrap_or(2);
+        let dispatcher = Dispatcher::new(handle);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut intakes = Vec::with_capacity(reactors);
+        let mut joins = Vec::with_capacity(reactors);
+        for _ in 0..reactors {
+            let (wake_tx, wake_rx) = UnixStream::pair()?;
+            wake_tx.set_nonblocking(true)?;
+            wake_rx.set_nonblocking(true)?;
+            let wake = Wake(Arc::new(wake_tx));
+            let intake: Arc<Mutex<Vec<NewConn>>> = Arc::new(Mutex::new(Vec::new()));
+            let d = dispatcher.clone();
+            let i = Arc::clone(&intake);
+            let s = Arc::clone(&stop);
+            let w = wake.clone();
+            let join = std::thread::Builder::new()
+                .name("wuuct-reactor".into())
+                .spawn(move || run_reactor(wake_rx, w, i, d, s))?;
+            intakes.push((intake, wake));
+            joins.push(join);
+        }
+        Ok(EventLoop { intakes, next: AtomicUsize::new(0), stop, joins })
+    }
+
+    /// Assign a freshly accepted connection to a reactor (round-robin).
+    pub(crate) fn register(&self, stream: TcpStream, guard: ConnGuard) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.intakes.len();
+        let (intake, wake) = &self.intakes[i];
+        lock(intake).push(NewConn { stream, guard });
+        wake.wake();
+    }
+
+    /// Stop the reactors and join them. Live connections are closed and
+    /// their sessions reaped (asynchronously, on the dispatch pool).
+    pub(crate) fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for (_, wake) in &self.intakes {
+            wake.wake();
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for EventLoop {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run_reactor<H: SessionApi>(
+    wake_rx: UnixStream,
+    wake: Wake,
+    intake: Arc<Mutex<Vec<NewConn>>>,
+    dispatcher: Dispatcher<H>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<ConnState> = Vec::new();
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            // Adopt any connections still parked in the intake so their
+            // slots and sessions are released too.
+            for nc in lock(&intake).drain(..) {
+                conns.push(ConnState::new(nc.stream, nc.guard));
+            }
+            for mut c in conns.drain(..) {
+                finalize(&mut c, &dispatcher, &wake);
+            }
+            return;
+        }
+
+        pollfds.clear();
+        pollfds.push(PollFd { fd: wake_rx.as_raw_fd(), events: POLLIN, revents: 0 });
+        for c in &conns {
+            let (pending, outbox_bytes, outbox_empty, kill) = {
+                let s = lock(&c.shared);
+                (s.pending.len(), s.outbox_bytes, s.outbox.is_empty(), s.kill)
+            };
+            let mut events = 0i16;
+            if !c.eof && !kill && pending < MAX_PENDING_JOBS && outbox_bytes < MAX_OUTBOX_BYTES {
+                events |= POLLIN;
+            }
+            if c.wr.is_some() || !outbox_empty {
+                events |= POLLOUT;
+            }
+            pollfds.push(PollFd { fd: c.stream.as_raw_fd(), events, revents: 0 });
+        }
+        let polled = conns.len();
+        poll_fds(&mut pollfds, 250);
+
+        if pollfds[0].revents != 0 {
+            let mut drain = [0u8; 256];
+            while matches!((&wake_rx).read(&mut drain), Ok(n) if n > 0) {}
+        }
+
+        for (i, c) in conns.iter_mut().take(polled).enumerate() {
+            let revents = pollfds[i + 1].revents;
+            if revents & (POLLIN | POLLERR | POLLHUP) != 0 {
+                do_read(c, &dispatcher, &wake);
+            }
+            if revents & (POLLOUT | POLLERR | POLLHUP) != 0 {
+                do_write(c);
+            }
+        }
+
+        for nc in lock(&intake).drain(..) {
+            if nc.stream.set_nonblocking(true).is_ok() {
+                conns.push(ConnState::new(nc.stream, nc.guard));
+            }
+        }
+
+        // Tear down finished connections: killed ones immediately,
+        // EOF'd ones once their queue is drained and replies flushed.
+        let mut i = 0;
+        while i < conns.len() {
+            let done = {
+                let c = &conns[i];
+                let s = lock(&c.shared);
+                let idle = s.pending.is_empty() && !s.in_flight;
+                let flushed = s.outbox.is_empty() && c.wr.is_none();
+                s.kill || (c.eof && idle && flushed)
+            };
+            if done {
+                let mut c = conns.swap_remove(i);
+                finalize(&mut c, &dispatcher, &wake);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Close the socket and queue the terminal reap (slot release + orphan
+/// session close) onto the dispatch pool.
+fn finalize<H: SessionApi>(c: &mut ConnState, dispatcher: &Dispatcher<H>, wake: &Wake) {
+    let _ = c.stream.shutdown(std::net::Shutdown::Both);
+    let Some(guard) = c.guard.take() else { return };
+    let submit = {
+        let mut s = lock(&c.shared);
+        s.pending.push_back(Job::Reap { guard });
+        if s.in_flight {
+            false // the active worker will reach the reap
+        } else {
+            s.in_flight = true;
+            true
+        }
+    };
+    if submit {
+        dispatcher.submit(WorkItem { shared: Arc::clone(&c.shared), wake: wake.clone() });
+    }
+}
+
+fn do_read<H: SessionApi>(c: &mut ConnState, dispatcher: &Dispatcher<H>, wake: &Wake) {
+    let mut buf = [0u8; 64 << 10];
+    loop {
+        match c.stream.read(&mut buf) {
+            Ok(0) => {
+                c.eof = true;
+                break;
+            }
+            Ok(n) => {
+                ingest(c, &buf[..n], dispatcher, wake);
+                if n < buf.len() {
+                    break; // short read: be fair to the reactor's other conns
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.eof = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Feed raw bytes through the connection's protocol (sniffed from its
+/// first byte) and queue every complete request for dispatch.
+fn ingest<H: SessionApi>(c: &mut ConnState, bytes: &[u8], dispatcher: &Dispatcher<H>, wake: &Wake) {
+    if c.proto == Proto::Unknown {
+        if bytes[0] == frame::MAGIC {
+            c.proto = Proto::Binary;
+            lock(&c.shared).binary = true;
+        } else {
+            c.proto = Proto::Json;
+        }
+    }
+    let mut jobs: Vec<Job> = Vec::new();
+    match c.proto {
+        Proto::Json => {
+            c.rdbuf.extend_from_slice(bytes);
+            while let Some(pos) = c.rdbuf.iter().position(|&b| b == b'\n') {
+                let mut line: Vec<u8> = c.rdbuf.drain(..=pos).collect();
+                while line.last().is_some_and(|&b| b == b'\n' || b == b'\r') {
+                    line.pop();
+                }
+                if !line.iter().all(|b| b.is_ascii_whitespace()) {
+                    jobs.push(Job::Line(line));
+                }
+            }
+        }
+        Proto::Binary => {
+            c.frames.extend(bytes);
+            loop {
+                match c.frames.next() {
+                    Ok(Some(f)) => route_frame(c, f, &mut jobs),
+                    Ok(None) => break,
+                    Err(e) => jobs.push(Job::FrameError(e.to_string())),
+                }
+            }
+        }
+        Proto::Unknown => unreachable!("sniffed above"),
+    }
+    if jobs.is_empty() {
+        return;
+    }
+    let submit = {
+        let mut s = lock(&c.shared);
+        s.pending.extend(jobs);
+        if s.in_flight {
+            false
+        } else {
+            s.in_flight = true;
+            true
+        }
+    };
+    if submit {
+        dispatcher.submit(WorkItem { shared: Arc::clone(&c.shared), wake: wake.clone() });
+    }
+}
+
+/// Route one good frame: requests dispatch directly; blob parts build up
+/// [`BlobState`] and dispatch as one job at END. Protocol misuse is a
+/// typed error reply, never a dropped connection — and a blob damaged by
+/// a skipped chunk is caught by END's length cross-check.
+fn route_frame(c: &mut ConnState, f: frame::Frame, jobs: &mut Vec<Job>) {
+    match f.op {
+        OP_REQ => jobs.push(Job::Frame(f.payload)),
+        OP_BLOB_BEGIN => {
+            if c.blob.is_some() {
+                c.blob = None;
+                jobs.push(Job::FrameError(
+                    "blob BEGIN while another blob is still streaming".into(),
+                ));
+            }
+            match String::from_utf8(f.payload) {
+                Ok(header) => c.blob = Some(BlobState { header, bytes: Vec::new(), failed: None }),
+                Err(_) => jobs.push(Job::FrameError("blob header is not UTF-8".into())),
+            }
+        }
+        OP_BLOB_CHUNK => match &mut c.blob {
+            None => jobs.push(Job::FrameError("blob CHUNK without a BEGIN".into())),
+            Some(b) if b.failed.is_some() => {}
+            Some(b) => {
+                if b.bytes.len() as u64 + f.payload.len() as u64 > MAX_BLOB_BYTES {
+                    b.bytes = Vec::new();
+                    b.failed = Some(format!("blob exceeds the {MAX_BLOB_BYTES} byte cap"));
+                } else {
+                    b.bytes.extend_from_slice(&f.payload);
+                }
+            }
+        },
+        OP_BLOB_END => match c.blob.take() {
+            None => jobs.push(Job::FrameError("blob END without a BEGIN".into())),
+            Some(b) => {
+                if let Some(msg) = b.failed {
+                    jobs.push(Job::FrameError(msg));
+                    return;
+                }
+                let declared = match <[u8; 8]>::try_from(f.payload.as_slice()) {
+                    Ok(raw) => u64::from_le_bytes(raw),
+                    Err(_) => {
+                        jobs.push(Job::FrameError("blob END length field is malformed".into()));
+                        return;
+                    }
+                };
+                if declared != b.bytes.len() as u64 {
+                    jobs.push(Job::FrameError(format!(
+                        "blob length mismatch: END declares {declared} bytes, assembled {}",
+                        b.bytes.len()
+                    )));
+                    return;
+                }
+                jobs.push(Job::Blob { header: b.header, bytes: b.bytes });
+            }
+        },
+        other => jobs.push(Job::FrameError(format!("unknown frame op {other:#04x}"))),
+    }
+}
+
+fn do_write(c: &mut ConnState) {
+    loop {
+        if c.wr.is_none() {
+            let next = {
+                let mut s = lock(&c.shared);
+                let b = s.outbox.pop_front();
+                if let Some(b) = &b {
+                    s.outbox_bytes -= b.len();
+                }
+                b
+            };
+            match next {
+                Some(b) => c.wr = Some((b, 0)),
+                None => return,
+            }
+        }
+        let (buf, off) = c.wr.as_mut().expect("set above");
+        match c.stream.write(&buf[*off..]) {
+            Ok(0) => {
+                write_failed(c);
+                return;
+            }
+            Ok(n) => {
+                *off += n;
+                if *off == buf.len() {
+                    c.wr = None;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => {
+                write_failed(c);
+                return;
+            }
+        }
+    }
+}
+
+/// The peer will never read another byte: drop the backlog so the
+/// connection can finalize instead of waiting for a flush that cannot
+/// happen.
+fn write_failed(c: &mut ConnState) {
+    c.eof = true;
+    c.wr = None;
+    let mut s = lock(&c.shared);
+    s.outbox.clear();
+    s.outbox_bytes = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wake_pipe_makes_poll_return_immediately() {
+        let (tx, rx) = UnixStream::pair().unwrap();
+        tx.set_nonblocking(true).unwrap();
+        rx.set_nonblocking(true).unwrap();
+        let wake = Wake(Arc::new(tx));
+        wake.wake();
+        let mut fds = [PollFd { fd: rx.as_raw_fd(), events: POLLIN, revents: 0 }];
+        let start = std::time::Instant::now();
+        let ready = poll_fds(&mut fds, 5_000);
+        assert_eq!(ready, 1, "the wake byte must be visible to poll");
+        assert!(start.elapsed() < Duration::from_secs(1), "poll must not wait out the timeout");
+        let mut b = [0u8; 8];
+        assert!(matches!((&rx).read(&mut b), Ok(n) if n >= 1));
+    }
+
+    #[test]
+    fn a_full_wake_pipe_never_blocks_the_waker() {
+        let (tx, _rx) = UnixStream::pair().unwrap();
+        tx.set_nonblocking(true).unwrap();
+        let wake = Wake(Arc::new(tx));
+        // Far past any pipe buffer; must return, dropped bytes are fine.
+        for _ in 0..1_000_000 {
+            wake.wake();
+        }
+    }
+}

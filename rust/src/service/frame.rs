@@ -1,0 +1,481 @@
+//! Length-prefixed binary framing for the TCP wire — the fast lane next
+//! to the line-JSON protocol ([`crate::service::proto`]).
+//!
+//! A connection's first byte picks its protocol for life: [`MAGIC`]
+//! (0xB7) can never begin a JSON line (it is not valid UTF-8 as a leading
+//! byte), so the server sniffs one byte and routes the whole connection
+//! to either the line dispatcher or the frame dispatcher. JSON clients
+//! are untouched; framed clients get the same ops with two upgrades —
+//! requests/replies ride as raw payloads without per-line re-parsing
+//! overhead, and session images stream in bounded chunks
+//! ([`OP_BLOB_BEGIN`]/[`OP_BLOB_CHUNK`]/[`OP_BLOB_END`]) instead of
+//! materializing as a 2× hex string under the
+//! [`crate::service::proto::MAX_IMAGE_BYTES`] ceiling.
+//!
+//! Wire layout (all integers little-endian):
+//!
+//! ```text
+//! +------+---------+----+-------+-----------+---------+------------+
+//! | 0xB7 | version | op | flags | len (u32) | payload | fnv1a(u64) |
+//! +------+---------+----+-------+-----------+---------+------------+
+//!   1B      1B      1B     1B       4B         len B       8B
+//! ```
+//!
+//! The trailing checksum is FNV-1a over header **and** payload
+//! ([`crate::store::checksum`] — the same function the WAL uses), so a
+//! flipped op byte is caught, not just payload damage.
+//!
+//! Decode discipline mirrors the JSON wire's: every malformed frame is a
+//! **typed error** ([`FrameError`]) and never a dropped connection. Each
+//! error names its own resync strategy, applied by [`FrameReader`]:
+//!
+//! * torn header / torn payload — not an error at all; wait for bytes;
+//! * bad magic — skip forward to the next [`MAGIC`] byte (or the buffer
+//!   end) and report how much was skipped;
+//! * bad version / bad checksum — the length field still bounds the
+//!   frame, so skip exactly that frame and resume at the next;
+//! * oversized length — discard the advertised span *without buffering
+//!   it* (a hostile 4 GiB length must not allocate 4 GiB), then resume.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+/// First byte of every frame. 0xB7 is a UTF-8 continuation byte, so no
+/// JSON line (or any valid UTF-8 text) can ever start with it — this is
+/// what makes first-byte protocol sniffing sound.
+pub const MAGIC: u8 = 0xB7;
+/// Frame protocol version.
+pub const VERSION: u8 = 1;
+
+/// A request payload: one JSON request object, exactly the bytes a JSON
+/// client would send as a line (without the newline).
+pub const OP_REQ: u8 = 0x01;
+/// A reply payload: one JSON reply object, as the line protocol renders.
+pub const OP_REP: u8 = 0x02;
+/// Start of a streamed blob; payload is a small JSON header describing
+/// it (`{"op":"import",...}` upstream, `{"ok":true,...}` downstream).
+pub const OP_BLOB_BEGIN: u8 = 0x10;
+/// One bounded slice of blob bytes.
+pub const OP_BLOB_CHUNK: u8 = 0x11;
+/// End of a blob; payload is the total blob length as a u64 (a cheap
+/// cross-check that no chunk went missing).
+pub const OP_BLOB_END: u8 = 0x12;
+
+/// Hard cap on one frame's payload. Anything larger streams as a blob.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 20;
+/// Chunk size blobs are sliced into (¼ of the frame cap: big enough to
+/// amortize the 16-byte overhead to noise, small enough to interleave).
+pub const BLOB_CHUNK_BYTES: usize = 256 << 10;
+/// Cap on one assembled blob (a whole streamed session image): 1 GiB —
+/// 32× the old hex-line ceiling, still a bound a host can refuse early.
+pub const MAX_BLOB_BYTES: u64 = 1 << 30;
+
+/// Header bytes before the payload.
+pub const HEADER_BYTES: usize = 8;
+/// Trailer bytes after the payload (the FNV-1a checksum).
+pub const TRAILER_BYTES: usize = 8;
+/// Fixed per-frame overhead.
+pub const FRAME_OVERHEAD: usize = HEADER_BYTES + TRAILER_BYTES;
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub op: u8,
+    pub flags: u8,
+    pub payload: Vec<u8>,
+}
+
+/// A malformed frame, as a typed error naming the damage. The reader has
+/// already resynced when one of these is returned — the caller reports
+/// it (an error reply, a counter) and keeps reading.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The buffer did not start with [`MAGIC`]; `skipped` junk bytes
+    /// were discarded up to the next candidate frame start.
+    BadMagic { skipped: usize },
+    /// Unknown protocol version; the frame was skipped whole.
+    BadVersion { got: u8 },
+    /// Advertised payload length past [`MAX_FRAME_PAYLOAD`]; the span is
+    /// being discarded without buffering.
+    Oversized { len: u64 },
+    /// Checksum mismatch; the frame was skipped whole.
+    BadChecksum { want: u64, got: u64 },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic { skipped } => {
+                write!(f, "bad frame magic: skipped {skipped} junk bytes to resync")
+            }
+            FrameError::BadVersion { got } => {
+                write!(f, "unsupported frame version {got} (this peer speaks {VERSION})")
+            }
+            FrameError::Oversized { len } => write!(
+                f,
+                "oversized frame: {len} byte payload exceeds the {MAX_FRAME_PAYLOAD} byte cap"
+            ),
+            FrameError::BadChecksum { want, got } => write!(
+                f,
+                "frame checksum mismatch: computed {want:#018x}, frame carries {got:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Encode one frame: header + payload + FNV-1a trailer.
+pub fn encode_frame(op: u8, payload: &[u8]) -> Vec<u8> {
+    assert!(
+        payload.len() <= MAX_FRAME_PAYLOAD,
+        "frame payload {} exceeds MAX_FRAME_PAYLOAD; stream it as a blob",
+        payload.len()
+    );
+    let mut out = Vec::with_capacity(FRAME_OVERHEAD + payload.len());
+    out.push(MAGIC);
+    out.push(VERSION);
+    out.push(op);
+    out.push(0); // flags
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    let sum = crate::store::checksum(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Incremental frame decoder over a byte stream: feed raw reads through
+/// [`FrameReader::extend`], pull frames (or typed errors) out of
+/// [`FrameReader::next`]. Holds at most one frame cap of buffered bytes;
+/// oversized spans are discarded as they arrive, never stored.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Bytes of an oversized frame still to swallow before parsing
+    /// resumes.
+    discard: u64,
+    /// Total malformed frames survived on this stream.
+    pub frames_skipped: u64,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Feed raw bytes from the socket.
+    pub fn extend(&mut self, mut bytes: &[u8]) {
+        if self.discard > 0 {
+            let eat = (self.discard).min(bytes.len() as u64) as usize;
+            self.discard -= eat as u64;
+            bytes = &bytes[eat..];
+        }
+        if !bytes.is_empty() {
+            self.buf.extend_from_slice(bytes);
+        }
+    }
+
+    /// Bytes currently buffered (tests and backpressure accounting).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Decode the next frame. `Ok(None)` means "need more bytes"; an
+    /// `Err` is one malformed frame, already resynced past — keep
+    /// calling.
+    pub fn next(&mut self) -> std::result::Result<Option<Frame>, FrameError> {
+        if self.discard > 0 || self.buf.is_empty() {
+            return Ok(None);
+        }
+        if self.buf[0] != MAGIC {
+            // Junk at the head: scan forward to the next candidate magic
+            // byte (or swallow everything) and report the gap.
+            let skip = self.buf[1..]
+                .iter()
+                .position(|&b| b == MAGIC)
+                .map(|p| p + 1)
+                .unwrap_or(self.buf.len());
+            self.buf.drain(..skip);
+            self.frames_skipped += 1;
+            return Err(FrameError::BadMagic { skipped: skip });
+        }
+        if self.buf.len() < HEADER_BYTES {
+            return Ok(None); // torn header: wait
+        }
+        let len = u32::from_le_bytes([self.buf[4], self.buf[5], self.buf[6], self.buf[7]]) as u64;
+        if len > MAX_FRAME_PAYLOAD as u64 {
+            // Discard the advertised span without ever buffering it.
+            let total = HEADER_BYTES as u64 + len + TRAILER_BYTES as u64;
+            if (self.buf.len() as u64) >= total {
+                self.buf.drain(..total as usize);
+            } else {
+                self.discard = total - self.buf.len() as u64;
+                self.buf.clear();
+            }
+            self.frames_skipped += 1;
+            return Err(FrameError::Oversized { len });
+        }
+        let total = HEADER_BYTES + len as usize + TRAILER_BYTES;
+        if self.buf.len() < total {
+            return Ok(None); // torn payload/trailer: wait
+        }
+        let body_end = HEADER_BYTES + len as usize;
+        let version = self.buf[1];
+        if version != VERSION {
+            // The length field still bounds the frame: skip it cleanly.
+            self.buf.drain(..total);
+            self.frames_skipped += 1;
+            return Err(FrameError::BadVersion { got: version });
+        }
+        let want = crate::store::checksum(&self.buf[..body_end]);
+        let got = u64::from_le_bytes(
+            self.buf[body_end..total].try_into().expect("trailer is 8 bytes"),
+        );
+        if want != got {
+            self.buf.drain(..total);
+            self.frames_skipped += 1;
+            return Err(FrameError::BadChecksum { want, got });
+        }
+        let frame = Frame {
+            op: self.buf[2],
+            flags: self.buf[3],
+            payload: self.buf[HEADER_BYTES..body_end].to_vec(),
+        };
+        self.buf.drain(..total);
+        Ok(Some(frame))
+    }
+}
+
+/// What a blob request resolves to on the client side: the streamed
+/// bytes, or a plain reply line (typically a typed error).
+#[derive(Debug)]
+pub enum BlobOrReply {
+    /// `header` is the [`OP_BLOB_BEGIN`] payload (a JSON line).
+    Blob { header: String, bytes: Vec<u8> },
+    Line(String),
+}
+
+/// A blocking framed connection — the client half of the binary
+/// protocol, used by [`crate::service::client::HostClient`] for
+/// image-carrying ops. Counts bytes both ways so callers can prove
+/// wire-cost claims (the ≤ 1.05× image-bytes bound).
+#[derive(Debug)]
+pub struct FrameStream {
+    stream: TcpStream,
+    reader: FrameReader,
+    bytes_out: u64,
+    bytes_in: u64,
+}
+
+impl FrameStream {
+    pub fn new(stream: TcpStream) -> FrameStream {
+        FrameStream { stream, reader: FrameReader::new(), bytes_out: 0, bytes_in: 0 }
+    }
+
+    /// `(sent, received)` raw socket bytes over this stream's lifetime.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (self.bytes_out, self.bytes_in)
+    }
+
+    /// Send one frame.
+    pub fn send(&mut self, op: u8, payload: &[u8]) -> Result<()> {
+        let frame = encode_frame(op, payload);
+        self.stream.write_all(&frame).context("writing frame")?;
+        self.bytes_out += frame.len() as u64;
+        Ok(())
+    }
+
+    /// Send a blob: a BEGIN header, bounded chunks, and the length END.
+    pub fn send_blob(&mut self, header: &str, bytes: &[u8]) -> Result<()> {
+        self.send(OP_BLOB_BEGIN, header.as_bytes())?;
+        for chunk in bytes.chunks(BLOB_CHUNK_BYTES) {
+            self.send(OP_BLOB_CHUNK, chunk)?;
+        }
+        self.send(OP_BLOB_END, &(bytes.len() as u64).to_le_bytes())?;
+        self.stream.flush().context("flushing blob")
+    }
+
+    /// Receive one frame, blocking. A server never sends malformed
+    /// frames, so decode errors here are hard connection errors.
+    pub fn recv(&mut self) -> Result<Frame> {
+        loop {
+            match self.reader.next() {
+                Ok(Some(frame)) => return Ok(frame),
+                Ok(None) => {}
+                Err(e) => bail!("malformed frame from server: {e}"),
+            }
+            let mut chunk = [0u8; 64 << 10];
+            let n = self.stream.read(&mut chunk).context("reading frame bytes")?;
+            if n == 0 {
+                bail!("connection closed mid-frame");
+            }
+            self.bytes_in += n as u64;
+            self.reader.extend(&chunk[..n]);
+        }
+    }
+
+    /// Receive a reply line ([`OP_REP`]).
+    pub fn recv_reply(&mut self) -> Result<String> {
+        let frame = self.recv()?;
+        if frame.op != OP_REP {
+            bail!("expected a reply frame, got op {:#04x}", frame.op);
+        }
+        String::from_utf8(frame.payload).context("reply frame is not UTF-8")
+    }
+
+    /// Receive either a streamed blob or a plain reply line (the typed
+    /// error path of a blob op).
+    pub fn recv_blob(&mut self) -> Result<BlobOrReply> {
+        let first = self.recv()?;
+        let header = match first.op {
+            OP_REP => {
+                return Ok(BlobOrReply::Line(
+                    String::from_utf8(first.payload).context("reply frame is not UTF-8")?,
+                ))
+            }
+            OP_BLOB_BEGIN => {
+                String::from_utf8(first.payload).context("blob header is not UTF-8")?
+            }
+            other => bail!("expected a blob or reply frame, got op {other:#04x}"),
+        };
+        let mut bytes: Vec<u8> = Vec::new();
+        loop {
+            let frame = self.recv()?;
+            match frame.op {
+                OP_BLOB_CHUNK => {
+                    if bytes.len() as u64 + frame.payload.len() as u64 > MAX_BLOB_BYTES {
+                        bail!("blob exceeds the {MAX_BLOB_BYTES} byte cap");
+                    }
+                    bytes.extend_from_slice(&frame.payload);
+                }
+                OP_BLOB_END => {
+                    let want = u64::from_le_bytes(
+                        frame.payload.as_slice().try_into().context("blob END length field")?,
+                    );
+                    if want != bytes.len() as u64 {
+                        bail!(
+                            "blob length mismatch: END declares {want} bytes, received {}",
+                            bytes.len()
+                        );
+                    }
+                    return Ok(BlobOrReply::Blob { header, bytes });
+                }
+                other => bail!("unexpected op {other:#04x} inside a blob stream"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(reader: &mut FrameReader, bytes: &[u8]) -> Vec<std::result::Result<Frame, FrameError>> {
+        reader.extend(bytes);
+        let mut out = Vec::new();
+        loop {
+            match reader.next() {
+                Ok(Some(f)) => out.push(Ok(f)),
+                Ok(None) => break,
+                Err(e) => out.push(Err(e)),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn round_trips_a_frame() {
+        let mut r = FrameReader::new();
+        let got = feed(&mut r, &encode_frame(OP_REQ, b"{\"op\":\"ping\"}"));
+        assert_eq!(got.len(), 1);
+        let f = got[0].as_ref().unwrap();
+        assert_eq!((f.op, f.flags, f.payload.as_slice()), (OP_REQ, 0, &b"{\"op\":\"ping\"}"[..]));
+    }
+
+    #[test]
+    fn reassembles_frames_split_at_every_byte_boundary() {
+        let wire = encode_frame(OP_REP, b"hello");
+        for cut in 1..wire.len() {
+            let mut r = FrameReader::new();
+            assert!(feed(&mut r, &wire[..cut]).is_empty(), "cut at {cut} yielded early");
+            let got = feed(&mut r, &wire[cut..]);
+            assert_eq!(got.len(), 1, "cut at {cut}");
+            assert_eq!(got[0].as_ref().unwrap().payload, b"hello");
+        }
+    }
+
+    #[test]
+    fn junk_resyncs_to_the_next_magic_byte() {
+        let mut wire = vec![0x00, 0x7f, 0x20];
+        wire.extend_from_slice(&encode_frame(OP_REQ, b"after"));
+        let mut r = FrameReader::new();
+        let got = feed(&mut r, &wire);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], Err(FrameError::BadMagic { skipped: 3 }));
+        assert_eq!(got[1].as_ref().unwrap().payload, b"after");
+        assert_eq!(r.frames_skipped, 1);
+    }
+
+    #[test]
+    fn checksum_flip_skips_one_frame_cleanly() {
+        let mut bad = encode_frame(OP_REQ, b"corrupt me");
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        bad.extend_from_slice(&encode_frame(OP_REQ, b"survivor"));
+        let mut r = FrameReader::new();
+        let got = feed(&mut r, &bad);
+        assert_eq!(got.len(), 2);
+        assert!(matches!(got[0], Err(FrameError::BadChecksum { .. })));
+        assert_eq!(got[1].as_ref().unwrap().payload, b"survivor");
+    }
+
+    #[test]
+    fn oversized_length_is_discarded_without_buffering() {
+        let mut wire = vec![MAGIC, VERSION, OP_REQ, 0];
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r = FrameReader::new();
+        let got = feed(&mut r, &wire);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], Err(FrameError::Oversized { len: u32::MAX as u64 }));
+        // The advertised 4 GiB span streams through without being stored.
+        let junk = vec![0xAA_u8; 1 << 16];
+        for _ in 0..8 {
+            assert!(feed(&mut r, &junk).is_empty());
+            assert_eq!(r.buffered(), 0, "oversized span must not buffer");
+        }
+    }
+
+    #[test]
+    fn oversized_span_ends_and_parsing_resumes() {
+        // A small "oversized" claim (cap + 1) so the test can actually
+        // stream past it and find a healthy frame on the far side.
+        let len = (MAX_FRAME_PAYLOAD + 1) as u32;
+        let mut wire = vec![MAGIC, VERSION, OP_REQ, 0];
+        wire.extend_from_slice(&len.to_le_bytes());
+        wire.extend_from_slice(&vec![0u8; len as usize + TRAILER_BYTES]);
+        wire.extend_from_slice(&encode_frame(OP_REQ, b"back"));
+        let mut r = FrameReader::new();
+        let got = feed(&mut r, &wire);
+        assert_eq!(got.len(), 2);
+        assert!(matches!(got[0], Err(FrameError::Oversized { .. })));
+        assert_eq!(got[1].as_ref().unwrap().payload, b"back");
+    }
+
+    #[test]
+    fn version_mismatch_skips_the_frame() {
+        let mut wire = encode_frame(OP_REQ, b"future");
+        wire[1] = VERSION + 9;
+        // Recompute the checksum so only the version is at fault.
+        let body_end = HEADER_BYTES + b"future".len();
+        let sum = crate::store::checksum(&wire[..body_end]);
+        wire[body_end..].copy_from_slice(&sum.to_le_bytes());
+        wire.extend_from_slice(&encode_frame(OP_REQ, b"now"));
+        let mut r = FrameReader::new();
+        let got = feed(&mut r, &wire);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], Err(FrameError::BadVersion { got: VERSION + 9 }));
+        assert_eq!(got[1].as_ref().unwrap().payload, b"now");
+    }
+}

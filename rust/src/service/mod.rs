@@ -60,7 +60,9 @@
 //!   and the automatic occupancy rebalancer.
 
 pub mod client;
+pub mod evloop;
 pub mod fair;
+pub mod frame;
 pub mod json;
 pub mod lease;
 pub mod membership;

@@ -281,7 +281,10 @@ fn reject_unknown_fields(req: &Json, op: &str, allowed: &[&str]) -> Result<()> {
     Ok(())
 }
 
-fn error_line(err: &anyhow::Error) -> String {
+/// Render an error as the typed wire reply line. Shared with the binary
+/// frame dispatcher ([`crate::service::evloop`]), so framed clients see
+/// the same `busy`/`recovering`/`lease_lost` markers as line clients.
+pub(crate) fn error_line(err: &anyhow::Error) -> String {
     let mut fields = vec![("ok".to_string(), Json::Bool(false))];
     if err.downcast_ref::<Busy>().is_some() {
         // Explicit backpressure marker: retry later, don't give up.

@@ -1,11 +1,22 @@
-//! TCP front-end: line-delimited JSON over a socket, one thread per
-//! connection, all connections multiplexed onto one [`SessionApi`] handle
-//! — a single-shard [`crate::service::ServiceHandle`], the sharded
+//! TCP front-end: line-delimited JSON (or the binary frame protocol —
+//! [`crate::service::frame`]) over a socket, every connection multiplexed
+//! onto one [`SessionApi`] handle — a single-shard
+//! [`crate::service::ServiceHandle`], the sharded
 //! [`crate::service::ShardedHandle`] (`wu-uct serve` / `wu-uct
 //! shard-host`) or the cross-process router
 //! ([`crate::service::RouterHandle`], `wu-uct serve --hosts ...`)
 //! interchangeably — the router's proxied ops travel over pooled
 //! [`crate::service::client::HostClient`] connections to its hosts.
+//!
+//! The data plane is the readiness-based event loop in
+//! [`crate::service::evloop`]: a small fixed reactor pool owns every
+//! socket (non-blocking reads/writes, partial-line and partial-frame
+//! reassembly, write backpressure), and an adaptive dispatch pool runs
+//! the blocking session ops. A connection's first byte picks its
+//! protocol: [`crate::service::frame::MAGIC`] routes it to the binary
+//! framing, anything else to line JSON. The old thread-per-connection
+//! model survives as [`TcpServer::bind_threaded`] — the measured baseline
+//! `service_throughput` compares the event loop against.
 //!
 //! Connection hygiene: sessions opened over a connection and not closed
 //! by the client are closed automatically when the connection drops, so
@@ -23,15 +34,15 @@
 //! set — open/think/advance/best/close/migrate/metrics/ping — is
 //! documented in [`crate::service::proto`].
 //!
-//! The thread-per-connection model is bounded by
-//! [`TcpServer::bind_with_limit`] (`wu-uct serve --max-conns`): past the
-//! cap, a new connection is shed at accept with one typed
-//! `{"ok":false,"busy":true,...}` line — the same backpressure marker
-//! admission-control rejections use, so clients already know to back
-//! off and retry — and then closed. Accounting lives in process-wide
-//! counters ([`connection_stats`]): an active-connections gauge, a shed
-//! counter and a handler-panic counter (a connection thread that panics
-//! still releases its slot via RAII and is counted, never silent).
+//! Admission is bounded by [`TcpServer::bind_with_limit`] (`wu-uct serve
+//! --max-conns`): past the cap, a new connection is shed at accept with
+//! one typed `{"ok":false,"busy":true,...}` line — the same backpressure
+//! marker admission-control rejections use, so clients already know to
+//! back off and retry — and then closed. Accounting lives in
+//! process-wide counters ([`connection_stats`]): an active-connections
+//! gauge, a shed counter and a handler-panic counter (a panicking
+//! handler still releases its connection slot via RAII and is counted,
+//! never silent).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -41,6 +52,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
+use crate::service::evloop::EventLoop;
 use crate::service::proto::{handle_bytes, LineEffect};
 use crate::service::SessionApi;
 
@@ -51,7 +63,7 @@ use crate::service::SessionApi;
 /// statics are the observability roll-up.
 static ACTIVE_CONNECTIONS: AtomicUsize = AtomicUsize::new(0);
 static CONNECTIONS_SHED: AtomicU64 = AtomicU64::new(0);
-static HANDLER_PANICS: AtomicU64 = AtomicU64::new(0);
+pub(crate) static HANDLER_PANICS: AtomicU64 = AtomicU64::new(0);
 
 /// `(active, shed, panics)` across every [`TcpServer`] in this process.
 pub fn connection_stats() -> (usize, u64, u64) {
@@ -64,15 +76,17 @@ pub fn connection_stats() -> (usize, u64, u64) {
 
 /// RAII accounting for one served connection. The per-server slot is
 /// reserved on the accept thread (so a burst cannot overshoot the cap by
-/// racing thread startup); `adopt` takes ownership of that reservation
-/// and adds the process-wide gauge. `Drop` runs even when the connection
+/// racing handler startup); `adopt` takes ownership of that reservation
+/// and adds the process-wide gauge. `Drop` runs even when a connection
 /// thread panics — the slot is always released, and the panic counted.
-struct ConnGuard {
+/// (On the event loop, panics are caught in the dispatch worker and
+/// counted there; the guard rides the connection's terminal reap job.)
+pub(crate) struct ConnGuard {
     active: Arc<AtomicUsize>,
 }
 
 impl ConnGuard {
-    fn adopt(active: Arc<AtomicUsize>) -> ConnGuard {
+    pub(crate) fn adopt(active: Arc<AtomicUsize>) -> ConnGuard {
         ACTIVE_CONNECTIONS.fetch_add(1, Ordering::Relaxed);
         ConnGuard { active }
     }
@@ -99,16 +113,21 @@ fn shed_connection(mut stream: TcpStream) {
     let _ = stream.shutdown(std::net::Shutdown::Both);
 }
 
-/// A running TCP front-end; dropping stops the accept loop.
+/// A running TCP front-end; dropping stops the accept loop (and, on the
+/// event-loop backend, the reactors — live connections are closed and
+/// their sessions reaped).
 pub struct TcpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    // Held so the reactors outlive the accept loop; the accept thread
+    // holds the other reference. None on the threaded backend.
+    evloop: Option<Arc<EventLoop>>,
 }
 
 impl TcpServer {
     /// Bind `addr` (use port 0 for an ephemeral port) and serve `handle`
-    /// with no connection cap.
+    /// over the event loop with no connection cap.
     pub fn bind<H: SessionApi>(handle: H, addr: &str) -> Result<TcpServer> {
         TcpServer::bind_with_limit(handle, addr, None)
     }
@@ -116,11 +135,51 @@ impl TcpServer {
     /// Like [`TcpServer::bind`] with an optional cap on concurrently
     /// served connections. At the cap, a new connection is shed at
     /// accept ([`shed_connection`]): one typed busy line, then close —
-    /// never an unbounded thread pile-up.
+    /// never an unbounded pile-up.
     pub fn bind_with_limit<H: SessionApi>(
         handle: H,
         addr: &str,
         max_conns: Option<usize>,
+    ) -> Result<TcpServer> {
+        let evloop =
+            Arc::new(EventLoop::start(handle).context("starting the event-loop reactors")?);
+        let ev = Arc::clone(&evloop);
+        let mut server = TcpServer::accept_loop(addr, max_conns, move |stream, guard| {
+            ev.register(stream, guard);
+        })?;
+        server.evloop = Some(evloop);
+        Ok(server)
+    }
+
+    /// The legacy thread-per-connection backend, kept as the measured
+    /// baseline for `service_throughput`'s front-end comparison (and as
+    /// a fallback should a platform's poll(2) misbehave).
+    pub fn bind_threaded<H: SessionApi>(handle: H, addr: &str) -> Result<TcpServer> {
+        TcpServer::bind_threaded_with_limit(handle, addr, None)
+    }
+
+    /// [`TcpServer::bind_threaded`] with the `--max-conns` cap.
+    pub fn bind_threaded_with_limit<H: SessionApi>(
+        handle: H,
+        addr: &str,
+        max_conns: Option<usize>,
+    ) -> Result<TcpServer> {
+        TcpServer::accept_loop(addr, max_conns, move |stream, guard| {
+            let handle = handle.clone();
+            std::thread::spawn(move || {
+                let _guard = guard;
+                serve_connection(stream, handle);
+            });
+        })
+    }
+
+    /// The shared accept loop: admission control (slot reservation and
+    /// shedding happen here, before any handler exists), then hand the
+    /// connection to the backend.
+    fn accept_loop(
+        addr: &str,
+        max_conns: Option<usize>,
+        serve: impl Fn(TcpStream, ConnGuard) + Send + 'static,
     ) -> Result<TcpServer> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr().context("reading bound address")?;
@@ -134,23 +193,19 @@ impl TcpServer {
                 }
                 let Ok(stream) = conn else { continue };
                 // Reserve the slot here, on the accept thread: admission
-                // is decided before the handler thread exists, so a
-                // connection burst cannot overshoot the cap.
+                // is decided before the handler exists, so a connection
+                // burst cannot overshoot the cap.
                 let prev = active.fetch_add(1, Ordering::SeqCst);
                 if max_conns.is_some_and(|cap| prev >= cap) {
                     active.fetch_sub(1, Ordering::SeqCst);
                     shed_connection(stream);
                     continue;
                 }
-                let handle = handle.clone();
                 let guard = ConnGuard::adopt(Arc::clone(&active));
-                std::thread::spawn(move || {
-                    let _guard = guard;
-                    serve_connection(stream, handle);
-                });
+                serve(stream, guard);
             }
         });
-        Ok(TcpServer { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(TcpServer { addr: local, stop, accept_thread: Some(accept_thread), evloop: None })
     }
 
     /// The bound address (resolves port 0).
@@ -168,11 +223,15 @@ impl TcpServer {
 
 impl Drop for TcpServer {
     fn drop(&mut self) {
-        let Some(t) = self.accept_thread.take() else { return };
-        self.stop.store(true, Ordering::SeqCst);
-        // Unblock the accept() with a throwaway connection to ourselves.
-        let _ = TcpStream::connect(self.addr);
-        let _ = t.join();
+        if let Some(t) = self.accept_thread.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Unblock the accept() with a throwaway connection to ourselves.
+            let _ = TcpStream::connect(self.addr);
+            let _ = t.join();
+        }
+        // Dropping the last EventLoop reference stops and joins the
+        // reactors (the accept thread's clone is gone after the join).
+        self.evloop = None;
     }
 }
 
@@ -312,8 +371,9 @@ fn serve_scrape<H: SessionApi>(stream: TcpStream, handle: H) {
     let _ = writer.flush();
 }
 
-/// One connection: read a raw line, dispatch, write the reply line. On
-/// EOF or I/O error, close every session the connection still owns.
+/// One threaded-backend connection: read a raw line, dispatch, write the
+/// reply line. On EOF or I/O error, close every session the connection
+/// still owns.
 fn serve_connection<H: SessionApi>(stream: TcpStream, handle: H) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -443,6 +503,29 @@ mod tests {
     }
 
     #[test]
+    fn episode_over_the_threaded_baseline_backend() {
+        let svc = SearchService::start(ServiceConfig {
+            expansion_workers: 1,
+            simulation_workers: 2,
+            ..Default::default()
+        });
+        let server = TcpServer::bind_threaded(svc.handle(), "127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let v = request(&mut reader, &mut writer, r#"{"op":"ping"}"#);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        let v = request(
+            &mut reader,
+            &mut writer,
+            r#"{"op":"open","env":"garnet","seed":3,"sims":8,"rollout":6}"#,
+        );
+        let sid = v.get("session").unwrap().as_u64().unwrap();
+        let v = request(&mut reader, &mut writer, &format!(r#"{{"op":"close","session":{sid}}}"#));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
     fn dropped_connection_closes_orphan_sessions() {
         let (svc, server) = start();
         {
@@ -453,7 +536,7 @@ mod tests {
             assert!(v.get("session").is_some());
             // Connection dropped here without a close op.
         }
-        // The reaper runs on the connection thread; poll briefly.
+        // The reaper runs on the dispatch pool; poll briefly.
         let h = svc.handle();
         let mut open = usize::MAX;
         for _ in 0..100 {
@@ -496,6 +579,59 @@ mod tests {
         // Connection still serves.
         let v = request(&mut reader, &mut writer, r#"{"op":"ping"}"#);
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn pipelined_requests_get_replies_in_order() {
+        let (_svc, server) = start();
+        let stream = TcpStream::connect(server.local_addr()).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        // Burst of alternating good/bad requests written before any
+        // reply is read: replies must come back FIFO, good/bad/good/...
+        let mut burst = Vec::new();
+        for _ in 0..16 {
+            burst.extend_from_slice(b"{\"op\":\"ping\"}\nnot json\n");
+        }
+        writer.write_all(&burst).unwrap();
+        writer.flush().unwrap();
+        for i in 0..32 {
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            let v = Json::parse(reply.trim()).expect("valid json reply");
+            let want_ok = i % 2 == 0;
+            assert_eq!(
+                v.get("ok").unwrap().as_bool(),
+                Some(want_ok),
+                "reply {i} out of order: {reply}"
+            );
+        }
+    }
+
+    #[test]
+    fn event_loop_sustains_256_concurrent_connections() {
+        let (_svc, server) = start();
+        let addr = server.local_addr();
+        let mut conns = Vec::with_capacity(256);
+        for i in 0..256 {
+            let stream = TcpStream::connect(addr).unwrap_or_else(|e| {
+                panic!("connect {i} failed: {e}");
+            });
+            let writer = stream.try_clone().unwrap();
+            conns.push((BufReader::new(stream), writer));
+        }
+        // Every connection is live at once — round-trip each while all
+        // 256 stay open, then spot-check a few again.
+        for (i, (reader, writer)) in conns.iter_mut().enumerate() {
+            let v = request(reader, writer, r#"{"op":"ping"}"#);
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "conn {i}");
+        }
+        let (active, _, _) = connection_stats();
+        assert!(active >= 256, "gauge must see all held connections, got {active}");
+        for (reader, writer) in conns.iter_mut().step_by(64) {
+            let v = request(reader, writer, r#"{"op":"ping"}"#);
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        }
     }
 
     #[test]
@@ -610,7 +746,7 @@ mod tests {
         assert!(shed_after > shed_before, "shed connections are counted");
 
         // Dropping the occupant frees the slot; the release runs on the
-        // connection thread, so poll until a fresh connection serves.
+        // dispatch pool, so poll until a fresh connection serves.
         drop(w1);
         drop(r1);
         let mut served = false;

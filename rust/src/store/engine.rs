@@ -292,11 +292,25 @@ impl DeltaTracker {
             && image.tree.len() >= track.base.len();
         self.snapshots += 1;
         let record = if want_delta {
+            // Adaptive choice: encode both and ship whichever is
+            // smaller. A delta that cannot beat the full image — tiny
+            // trees, or the first cadence snapshot after open, where
+            // nearly every node is fresh against the 1-node open base —
+            // promotes to a full record and resets the chain, so
+            // `full_every` is only the *upper bound* on chain length.
             let delta = DeltaImage::compute(&track.base, image)?.encode();
-            track.chain_len += 1;
-            track.dirty = true;
-            self.snapshot_bytes_delta += delta.len() as u64;
-            Record::Delta { session, delta }
+            let full = image.encode()?;
+            if delta.len() < full.len() {
+                track.chain_len += 1;
+                track.dirty = true;
+                self.snapshot_bytes_delta += delta.len() as u64;
+                Record::Delta { session, delta }
+            } else {
+                track.chain_len = 0;
+                track.dirty = false;
+                self.snapshot_bytes_full += full.len() as u64;
+                Record::Snapshot { session, image: full }
+            }
         } else {
             let full = image.encode()?;
             track.chain_len = 0;
@@ -440,10 +454,18 @@ mod tests {
         d
     }
 
+    /// Image with a static 8-child subtree and only `n_root` varying:
+    /// successive images differ in exactly one node, so a delta against
+    /// the previous image is genuinely smaller than a full re-image (the
+    /// adaptive chooser would promote a 1-node tree to full every time).
     fn image(session: u64, n_root: u32) -> SessionImage {
         let env = Garnet::new(8, 2, 10, 0.0, 3);
         let mut tree = Tree::new();
         tree.node_mut(Tree::ROOT).state = Some(env.snapshot());
+        for a in 0..8 {
+            let c = tree.add_child(Tree::ROOT, a);
+            tree.node_mut(c).state = Some(env.snapshot());
+        }
         tree.node_mut(Tree::ROOT).n = n_root;
         SessionImage {
             session,
@@ -490,6 +512,56 @@ mod tests {
         assert_eq!(recovery.sessions.len(), 1);
         assert_eq!(recovery.sessions[0].image.tree.node(Tree::ROOT).n, 5);
         assert!(engine.dirty(1), "recovered chains count as dirty");
+    }
+
+    #[test]
+    fn unprofitable_deltas_promote_to_full_images() {
+        // A 1-node tree's delta (full env/spec/meta plus the changed
+        // node, plus header overhead) can never beat its full image, so
+        // the adaptive chooser must write fulls even though the cadence
+        // (full_every = 8) would allow a 7-long delta chain.
+        fn tiny(session: u64, n_root: u32) -> SessionImage {
+            let env = Garnet::new(8, 2, 10, 0.0, 3);
+            let mut tree = Tree::new();
+            tree.node_mut(Tree::ROOT).state = Some(env.snapshot());
+            tree.node_mut(Tree::ROOT).n = n_root;
+            SessionImage {
+                session,
+                env_name: "garnet".into(),
+                env_state: env.snapshot(),
+                spec: SearchSpec::default(),
+                rng_state: (1, 2),
+                meta: SessionMeta { env_seed: 3, ..SessionMeta::default() },
+                tree,
+            }
+        }
+        let dir = temp_dir("promote");
+        let cfg = StoreConfig { full_every: 8, ..StoreConfig::new(&dir) };
+        let seg = dir.join("wal-00000001.log");
+        {
+            let (mut engine, _) = SessionEngine::open(&cfg).unwrap();
+            engine.log_open(1, &tiny(1, 0)).unwrap();
+            for i in 1..=4u32 {
+                engine.log_snapshot(1, &tiny(1, i)).unwrap();
+            }
+            let c = engine.counters();
+            assert_eq!(c.snapshot_bytes_delta, 0, "no delta ever shipped");
+            assert!(!engine.dirty(1), "a promoted full leaves the session clean");
+        }
+        let tags: Vec<&str> = read_segment(&seg, true)
+            .unwrap()
+            .records
+            .iter()
+            .map(|r| match r {
+                Record::Open { .. } => "open",
+                Record::Delta { .. } => "delta",
+                Record::Snapshot { .. } => "full",
+                _ => "other",
+            })
+            .collect();
+        assert_eq!(tags, vec!["open", "full", "full", "full", "full"]);
+        let (_, recovery) = SessionEngine::open(&cfg).unwrap();
+        assert_eq!(recovery.sessions[0].image.tree.node(Tree::ROOT).n, 4);
     }
 
     #[test]

@@ -3,22 +3,117 @@
 //! Nodes live in a flat `Vec` and refer to each other by [`NodeId`]; this
 //! keeps the selection hot loop allocation-free and cache-friendly (see
 //! DESIGN.md §Perf) and sidesteps ownership cycles entirely.
+//!
+//! Selection additionally reads through a lazily-maintained
+//! structure-of-arrays mirror ([`ChildLanes`]): per node, its children's
+//! scoring inputs packed into contiguous lanes so the argmax scan in
+//! `tree::policy` runs over flat `f64`/`u32` slices the compiler can
+//! vectorize, instead of pointer-chasing one `Node` per child.
+
+use std::sync::{Mutex, PoisonError};
 
 use crate::tree::node::{Node, NodeId};
 
+/// One node's children, scoring inputs split into parallel lanes.
+/// `ids[k]` is the child whose statistics sit at index `k` of every other
+/// lane; lane order is the node's `children` order, so a lowest-index
+/// tie-break over lanes equals one over `children`.
+#[derive(Debug, Default)]
+pub(crate) struct ChildLanes {
+    pub(crate) ids: Vec<NodeId>,
+    pub(crate) n: Vec<u32>,
+    pub(crate) o: Vec<u32>,
+    pub(crate) v: Vec<f64>,
+    pub(crate) vloss: Vec<f64>,
+    pub(crate) vcount: Vec<u32>,
+}
+
+/// Lazy SoA mirror of the whole tree: one [`ChildLanes`] row per node,
+/// rebuilt on first read after any mutation touching that row. Rows are
+/// invalidated conservatively (a mutable borrow of a node dirties the
+/// node's row and its parent's) and never eagerly rebuilt, so trees that
+/// never select — store decode, replication standbys — pay nothing.
+#[derive(Debug, Default)]
+struct SoaMirror {
+    rows: Vec<ChildLanes>,
+    /// `ok[i]` ⇔ `rows[i]` matches the live nodes.
+    ok: Vec<bool>,
+}
+
 /// The search tree. Root is always node 0.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Tree {
     nodes: Vec<Node>,
     /// Depth of the deepest node, maintained on insert/re-root so
     /// [`Tree::max_depth`] is O(1) — the `inspect` op reads it per tick.
     deepest: u32,
+    /// Interior-mutable so refresh works through `&Tree` (selection takes
+    /// the tree immutably); a `Mutex` rather than `RefCell` keeps `Tree:
+    /// Sync`. Uncontended in practice — the search master owns the tree.
+    soa: Mutex<SoaMirror>,
+}
+
+impl Clone for Tree {
+    fn clone(&self) -> Tree {
+        // The mirror is a cache: clones start cold and rebuild on demand.
+        Tree { nodes: self.nodes.clone(), deepest: self.deepest, soa: Mutex::default() }
+    }
 }
 
 impl Tree {
     /// New tree containing only a root node.
     pub fn new() -> Tree {
-        Tree { nodes: vec![Node::new(None, 0, 0)], deepest: 0 }
+        Tree { nodes: vec![Node::new(None, 0, 0)], deepest: 0, soa: Mutex::default() }
+    }
+
+    /// Dirty one mirror row. Rows beyond the mirror's current size are
+    /// implicitly dirty (they materialize stale when the mirror grows).
+    fn soa_touch(&self, id: NodeId) {
+        let mut m = self.soa.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(ok) = m.ok.get_mut(id) {
+            *ok = false;
+        }
+    }
+
+    /// Drop the whole mirror — for structural rewrites (re-rooting).
+    fn soa_reset(&self) {
+        let mut m = self.soa.lock().unwrap_or_else(PoisonError::into_inner);
+        m.rows.clear();
+        m.ok.clear();
+    }
+
+    /// Run `f` over `parent`'s child lanes, refreshing the row first if
+    /// it is stale. `f` must not re-enter the tree's SoA accessors (the
+    /// mirror lock is held for the duration).
+    pub(crate) fn with_child_lanes<R>(&self, parent: NodeId, f: impl FnOnce(&ChildLanes) -> R) -> R {
+        let mut m = self.soa.lock().unwrap_or_else(PoisonError::into_inner);
+        if m.rows.len() != self.nodes.len() {
+            // Grow lazily; new rows start stale. Shrinks only happen via
+            // `advance_root`, which resets the mirror outright.
+            m.rows.resize_with(self.nodes.len(), ChildLanes::default);
+            m.ok.resize(self.nodes.len(), false);
+        }
+        if !m.ok[parent] {
+            let node = &self.nodes[parent];
+            let row = &mut m.rows[parent];
+            row.ids.clear();
+            row.n.clear();
+            row.o.clear();
+            row.v.clear();
+            row.vloss.clear();
+            row.vcount.clear();
+            for &(_, c) in &node.children {
+                let ch = &self.nodes[c];
+                row.ids.push(c);
+                row.n.push(ch.n);
+                row.o.push(ch.o);
+                row.v.push(ch.v);
+                row.vloss.push(ch.vloss);
+                row.vcount.push(ch.vcount);
+            }
+            m.ok[parent] = true;
+        }
+        f(&m.rows[parent])
     }
 
     pub const ROOT: NodeId = 0;
@@ -36,6 +131,12 @@ impl Tree {
     }
 
     pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        // A mutable borrow may change this node's statistics (they live in
+        // the parent's lanes) or its child list (its own lanes).
+        self.soa_touch(id);
+        if let Some(p) = self.nodes[id].parent {
+            self.soa_touch(p);
+        }
         &mut self.nodes[id]
     }
 
@@ -48,6 +149,8 @@ impl Tree {
         );
         let depth = self.nodes[parent].depth + 1;
         let id = self.nodes.len();
+        self.soa_touch(parent); // child list grows; the new node's own row
+                                // materializes stale when the mirror grows
         self.nodes.push(Node::new(Some(parent), action, depth));
         self.nodes[parent].children.push((action, id));
         self.deepest = self.deepest.max(depth);
@@ -69,6 +172,10 @@ impl Tree {
     pub fn for_path_to_root(&mut self, id: NodeId, mut f: impl FnMut(&mut Node)) {
         let mut cur = Some(id);
         while let Some(c) = cur {
+            // Dirtying every visited row covers all affected lanes: each
+            // visited node's parent is the next node visited, so the row
+            // holding a changed node's statistics is always dirtied too.
+            self.soa_touch(c);
             f(&mut self.nodes[c]);
             cur = self.nodes[c].parent;
         }
@@ -191,6 +298,7 @@ impl Tree {
         kept[0].reward = 0.0;
         self.nodes = kept;
         self.deepest = deepest;
+        self.soa_reset(); // every id was remapped; no row survives
         Some(self.nodes.len())
     }
 
@@ -254,7 +362,7 @@ impl Tree {
             return Err("node not linked exactly once");
         }
         let deepest = nodes.iter().map(|n| n.depth).max().unwrap_or(0);
-        Ok(Tree { nodes, deepest })
+        Ok(Tree { nodes, deepest, soa: Mutex::default() })
     }
 }
 
@@ -460,6 +568,39 @@ mod tests {
         let c1 = Node::new(Some(0), 1, 1);
         let c2 = Node::new(Some(0), 1, 1);
         assert!(Tree::from_nodes(vec![root, c1, c2]).is_err());
+    }
+
+    #[test]
+    fn child_lanes_track_mutations_and_survive_rerooting() {
+        let mut t = Tree::new();
+        let a = t.add_child(Tree::ROOT, 2);
+        let b = t.add_child(Tree::ROOT, 0);
+        // Cold read: lanes follow children order (insertion), not action.
+        t.with_child_lanes(Tree::ROOT, |l| {
+            assert_eq!(l.ids, vec![a, b]);
+            assert_eq!(l.n, vec![0, 0]);
+        });
+        // Every mutation route dirties the affected row.
+        t.node_mut(a).n = 7;
+        t.node_mut(a).v = 0.5;
+        t.for_path_to_root(b, |n| n.o += 3);
+        t.with_child_lanes(Tree::ROOT, |l| {
+            assert_eq!(l.n, vec![7, 0]);
+            assert_eq!(l.o, vec![0, 3], "b's in-flight count lands in lane 1");
+            assert_eq!(l.v, vec![0.5, 0.0]);
+        });
+        // Re-rooting remaps every id; the mirror rebuilds from scratch.
+        let c = t.add_child(a, 1);
+        t.node_mut(c).n = 4;
+        t.node_mut(a).n = 9;
+        t.advance_root(2);
+        t.with_child_lanes(Tree::ROOT, |l| {
+            assert_eq!(l.ids.len(), 1);
+            assert_eq!(l.n, vec![4]);
+        });
+        // Clones start cold and rebuild against their own nodes.
+        let u = t.clone();
+        u.with_child_lanes(Tree::ROOT, |l| assert_eq!(l.n, vec![4]));
     }
 
     #[test]

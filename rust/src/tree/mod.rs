@@ -7,4 +7,4 @@ pub mod policy;
 
 pub use arena::Tree;
 pub use node::{Node, NodeId};
-pub use policy::{score_child, select_child, ucb_score, ScoreMode};
+pub use policy::{score_child, select_child, select_child_scalar, ucb_score, ScoreMode};

@@ -57,7 +57,75 @@ pub fn score_child(tree: &Tree, parent: NodeId, child: NodeId, mode: ScoreMode, 
 /// L1 kernel's `argmax` semantics — this determinism is precisely what
 /// causes the *collapse of exploration* under naive parallelization
 /// (Fig. 1c), which WU-UCT's `O` statistics then counteract.
+///
+/// This is the SoA fast path: it scans the parent's [`ChildLanes`] — flat
+/// per-child `u32`/`f64` slices — with the parent's log term hoisted out
+/// of the loop, instead of scoring one `Node` at a time. The result is
+/// bit-identical to [`select_child_scalar`] (same operations in the same
+/// order per child, `s <= best` skip semantics included), which the
+/// `soa_selection_matches_scalar` property test enforces over randomized
+/// trees for all three modes.
 pub fn select_child(tree: &Tree, parent: NodeId, mode: ScoreMode, beta: f64) -> Option<NodeId> {
+    let p = tree.node(parent);
+    if p.children.is_empty() {
+        return None;
+    }
+    let parent_total = match mode {
+        ScoreMode::Uct => p.n,
+        ScoreMode::WuUct => p.total_visits(),
+        ScoreMode::VirtualLoss => p.n + p.vcount,
+    };
+    let log_term = (parent_total.max(1) as f64).ln();
+    tree.with_child_lanes(parent, |lanes| {
+        // One specialized scan per mode keeps the inner loop branch-free
+        // over flat lanes; each mirrors `ucb_score`'s arithmetic exactly.
+        let score = |k: usize| -> f64 {
+            let (value, child_total) = match mode {
+                ScoreMode::Uct => (lanes.v[k], lanes.n[k]),
+                ScoreMode::WuUct => (lanes.v[k], lanes.n[k] + lanes.o[k]),
+                ScoreMode::VirtualLoss => {
+                    let value = if lanes.vloss[k] == 0.0 && lanes.vcount[k] == 0 {
+                        lanes.v[k]
+                    } else {
+                        let denom = lanes.n[k] as f64 + lanes.vcount[k] as f64;
+                        if denom == 0.0 {
+                            -lanes.vloss[k]
+                        } else {
+                            (lanes.n[k] as f64 * lanes.v[k] - lanes.vloss[k]) / denom
+                        }
+                    };
+                    (value, lanes.n[k] + lanes.vcount[k])
+                }
+            };
+            if child_total == 0 {
+                return f64::INFINITY;
+            }
+            value + beta * (2.0 * log_term / child_total as f64).sqrt()
+        };
+        let mut best_k = 0;
+        let mut best_s = score(0);
+        for k in 1..lanes.ids.len() {
+            let s = score(k);
+            // `!(s <= best)` — not `s > best` — replicates the scalar
+            // loop's behavior bit-for-bit, NaN handling included.
+            if !(s <= best_s) {
+                best_s = s;
+                best_k = k;
+            }
+        }
+        Some(lanes.ids[best_k])
+    })
+}
+
+/// The pre-SoA argmax: score children one [`Node`] at a time through
+/// [`score_child`]. Kept as the semantic reference [`select_child`] must
+/// match and as the baseline the `micro_hotpath` bench compares against.
+pub fn select_child_scalar(
+    tree: &Tree,
+    parent: NodeId,
+    mode: ScoreMode,
+    beta: f64,
+) -> Option<NodeId> {
     let node = tree.node(parent);
     let mut best: Option<(NodeId, f64)> = None;
     for &(_, child) in &node.children {

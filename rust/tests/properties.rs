@@ -9,7 +9,7 @@ use wu_uct::service::{
     SearchService, ServiceConfig, SessionOptions, ShardedConfig, ShardedService,
 };
 use wu_uct::testkit::{LatencyScript, ScriptedService};
-use wu_uct::tree::{select_child, ScoreMode, Tree};
+use wu_uct::tree::{select_child, select_child_scalar, ScoreMode, Tree};
 use wu_uct::util::proptest::{check, Gen};
 use wu_uct::util::stats::{paired_t_test, t_two_sided_p};
 
@@ -96,6 +96,49 @@ fn prop_selection_only_returns_children() {
                 }
                 None => {
                     if !tree.node(id).children.is_empty() {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_soa_selection_matches_scalar() {
+    // The SoA lane scan behind `select_child` must return the *identical*
+    // argmax to the one-node-at-a-time scalar reference — same +inf
+    // first-visit priority, same lowest-index tie-break — for every mode,
+    // on trees mutated through every invalidation route (stat writes,
+    // backup walks, expansion) between selections.
+    check("SoA argmax == scalar argmax", 80, |g| {
+        let mut tree = random_tree(g);
+        for round in 0..3 {
+            let ids: Vec<usize> = tree.iter().map(|(id, _)| id).collect();
+            for &id in &ids {
+                let n = tree.node_mut(id);
+                n.n = g.u32(0, 50);
+                n.o = g.u32(0, 8);
+                n.v = g.f64(-2.0, 2.0);
+                n.vloss = if g.usize(0, 3) == 0 { g.f64(0.0, 4.0) } else { 0.0 };
+                n.vcount = g.u32(0, 3);
+            }
+            // Exercise the other dirtying routes between rounds too.
+            tree.for_path_to_root(*g.pick(&ids), |n| n.o += 1);
+            if round > 0 {
+                let parent = *g.pick(&ids);
+                let action = g.usize(16, 31); // disjoint from random_tree's
+                if tree.node(parent).child_for(action).is_none() {
+                    tree.add_child(parent, action);
+                }
+            }
+            let beta = g.f64(0.0, 3.0);
+            for &id in &ids {
+                for mode in [ScoreMode::Uct, ScoreMode::WuUct, ScoreMode::VirtualLoss] {
+                    let soa = select_child(&tree, id, mode, beta);
+                    let scalar = select_child_scalar(&tree, id, mode, beta);
+                    if soa != scalar {
                         return false;
                     }
                 }

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Compares the fresh ``BENCH_*.json`` records the bench binaries just
+wrote at the repository root against the checked-in floors in
+``bench/baseline/``. A metric fails the gate when its throughput drops
+more than ``TOLERANCE`` below the baseline; nanosecond-denominated
+metrics are inverted into rates first so "20% regression" means the
+same thing for both kinds.
+
+The committed baselines are deliberately conservative floors (they must
+hold on any shared CI runner). Every green run uploads its fresh
+records as the ``bench-baseline-updated`` artifact; committing that
+artifact over ``bench/baseline/`` ratchets the gate as the hot paths
+speed up. The gate prints a hint when the fresh numbers have enough
+headroom to make that worthwhile.
+
+Stdlib only; exit code 0 = gate passed, 1 = regression (or a malformed
+record, which must fail loudly rather than silently skip the gate).
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.20  # fail when fresh throughput < (1 - this) * baseline
+HEADROOM = 2.0  # suggest a baseline refresh when fresh > this * baseline
+
+# (fresh file, path into the JSON document, kind). A dict element in the
+# path selects the first array entry whose fields all match — used to
+# pick one row out of a sweep. Kinds: "rate" is higher-better as-is;
+# "nanos" is lower-better and inverted to ops/sec before comparing.
+CHECKS = [
+    ("BENCH_service_throughput.json", ["sessions_per_sec"], "rate"),
+    (
+        "BENCH_service_throughput.json",
+        ["tcp", {"backend": "evloop"}, "sessions_per_sec"],
+        "rate",
+    ),
+    ("BENCH_micro_hotpath.json", ["headline", "soa_ns"], "nanos"),
+]
+
+
+def lookup(doc, path):
+    node = doc
+    for step in path:
+        if isinstance(step, dict):
+            if not isinstance(node, list):
+                return None
+            node = next(
+                (
+                    row
+                    for row in node
+                    if isinstance(row, dict)
+                    and all(row.get(k) == v for k, v in step.items())
+                ),
+                None,
+            )
+        elif isinstance(node, dict):
+            node = node.get(step)
+        else:
+            return None
+        if node is None:
+            return None
+    return node
+
+
+def as_rate(value, kind):
+    v = float(value)
+    if v <= 0.0:
+        return None
+    return 1e9 / v if kind == "nanos" else v
+
+
+def main():
+    failures = 0
+    for name, path, kind in CHECKS:
+        label = "{}:{}".format(name, ".".join(str(p) for p in path))
+        try:
+            with open(name) as f:
+                fresh_doc = json.load(f)
+        except (OSError, ValueError) as e:
+            print("FAIL {}: fresh record unreadable ({})".format(label, e))
+            failures += 1
+            continue
+        try:
+            with open("bench/baseline/" + name) as f:
+                base_doc = json.load(f)
+        except (OSError, ValueError) as e:
+            print("FAIL {}: baseline unreadable ({})".format(label, e))
+            failures += 1
+            continue
+        fresh_raw = lookup(fresh_doc, path)
+        base_raw = lookup(base_doc, path)
+        if base_raw is None:
+            # A baseline may predate a newly added metric; the refreshed
+            # artifact will carry it, so this is a warning, not a gap in
+            # the gate for the metrics the baseline does cover.
+            print("skip {}: metric absent from baseline".format(label))
+            continue
+        if fresh_raw is None:
+            print("FAIL {}: metric missing from fresh record".format(label))
+            failures += 1
+            continue
+        fresh = as_rate(fresh_raw, kind)
+        base = as_rate(base_raw, kind)
+        if fresh is None or base is None:
+            print(
+                "FAIL {}: non-positive value (fresh={!r} base={!r})".format(
+                    label, fresh_raw, base_raw
+                )
+            )
+            failures += 1
+            continue
+        ratio = fresh / base
+        if ratio < 1.0 - TOLERANCE:
+            print(
+                "FAIL {}: throughput {:.3g} is {:.0f}% below the baseline "
+                "floor {:.3g}".format(label, fresh, 100.0 * (1.0 - ratio), base)
+            )
+            failures += 1
+        else:
+            note = (
+                "  (headroom {:.1f}x: consider committing the refreshed "
+                "baseline)".format(ratio)
+                if ratio > HEADROOM
+                else ""
+            )
+            print("ok   {}: {:.3g} vs floor {:.3g}{}".format(label, fresh, base, note))
+    if failures:
+        print("bench regression gate: {} metric(s) failed".format(failures))
+        return 1
+    print("bench regression gate: all metrics within {:.0f}%".format(100 * TOLERANCE))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
